@@ -1,0 +1,60 @@
+//! Regenerate every table and figure from the paper's evaluation (§5).
+//!
+//! ```sh
+//! # everything at the default scale:
+//! cargo run --release --offline --example paper_tables
+//! # one artifact, custom scale:
+//! cargo run --release --offline --example paper_tables -- --which table2 --scale 0.1
+//! ```
+//!
+//! Output is markdown (paste-ready for EXPERIMENTS.md). See DESIGN.md for
+//! the experiment index mapping each artifact to its modules.
+
+use rkmeans::bench_harness::paper::{self, PaperCfg};
+use rkmeans::synthetic::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |flag: &str| -> Option<String> {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+    };
+    let scale: f64 = get("--scale")
+        .and_then(|s| s.parse().ok())
+        .or_else(|| std::env::var("RKMEANS_SCALE").ok().and_then(|s| s.parse().ok()))
+        .unwrap_or(0.02);
+    let which = get("--which").unwrap_or_else(|| "all".to_string());
+    let mut cfg = PaperCfg::new(scale);
+    if args.iter().any(|a| a == "--no-approx") {
+        cfg.eval_approx = false;
+    }
+    let all = which == "all";
+
+    if all || which == "table1" {
+        println!("{}", paper::table1(&cfg)?.render());
+    }
+    if all || which == "table2" {
+        for ds in Dataset::all() {
+            println!("{}", paper::table2(ds, &cfg)?.render());
+        }
+    }
+    if all || which == "fig3" {
+        for ds in Dataset::all() {
+            println!("{}", paper::fig3(ds, &cfg)?.render());
+        }
+    }
+    if all || which == "ablation-fd" {
+        println!("{}", paper::ablation_fd(&cfg)?.render());
+    }
+    if all || which == "ablation-sparse" {
+        for ds in Dataset::all() {
+            println!("{}", paper::ablation_sparse(ds, 10, &cfg)?.render());
+        }
+    }
+    if all || which == "kappa-sweep" {
+        println!(
+            "{}",
+            paper::kappa_sweep(Dataset::Favorita, 20, &[2, 5, 10, 20], &cfg)?.render()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! End-to-end validation driver (see EXPERIMENTS.md): the full system on a
+//! real-shaped workload.
+//!
+//! ```sh
+//! RKMEANS_SCALE=0.1 cargo run --release --offline --example retailer_analysis
+//! ```
+//!
+//! Mirrors the paper's headline experiment on the Retailer workload:
+//! 1. generate a Retailer database (5 relations, Zipf fact table, FD
+//!    chains);
+//! 2. run Rk-means for several k, with both κ = k and κ < k;
+//! 3. run the materialize-then-cluster baseline ("psql + mlpack");
+//! 4. report the Table-2 style rows: compute-X time, baseline cluster
+//!    time, Rk-means time, speedup and relative approximation, plus the
+//!    memory footprints that make the baseline infeasible at scale.
+//!
+//! All layers compose here: the FAQ engine (steps 1+3), the optimal
+//! subspace solvers (step 2), the factored Lloyd (step 4), and — when
+//! `artifacts/` is present — the XLA/PJRT Step-4 path for comparison.
+
+use rkmeans::bench_harness::paper::{end_to_end, PaperCfg};
+use rkmeans::bench_harness::Table;
+use rkmeans::cluster::LloydConfig;
+use rkmeans::coreset::{build_grid, grid_dense_embed, solve_subspaces};
+use rkmeans::faq::{full_join_counts, marginals, output_size};
+use rkmeans::join::EmbedSpec;
+use rkmeans::query::Hypergraph;
+use rkmeans::runtime::PjrtRuntime;
+use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::util::{human_bytes, human_count};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("RKMEANS_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let mut cfg = PaperCfg::new(scale);
+    cfg.ks = vec![5, 10, 20];
+
+    let ds = Dataset::Retailer;
+    println!("== Retailer analysis (scale {scale}) ==");
+    let db = ds.generate(Scale::custom(scale), cfg.seed);
+    let feq = ds.feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+    let x_rows = output_size(&db, &tree)?;
+    println!(
+        "|D| = {} tuples ({}), |X| = {} rows × {} features",
+        human_count(db.total_rows()),
+        human_bytes(db.total_bytes()),
+        human_count(x_rows as u64),
+        feq.n_features()
+    );
+
+    // Table-2 style comparison.
+    let mut t = Table::new(
+        "Retailer end-to-end: Rk-means vs materialize+cluster",
+        &["k", "κ", "Compute X", "Cluster (baseline)", "Rk-means", "Speedup", "Rel.Approx", "|G|"],
+    );
+    let mut configs: Vec<(usize, usize)> = cfg.ks.iter().map(|&k| (k, k)).collect();
+    configs.push((20, 10));
+    for (k, kappa) in configs {
+        let e = end_to_end(&db, &feq, k, kappa, &cfg)?;
+        t.row(vec![
+            k.to_string(),
+            kappa.to_string(),
+            format!("{:.2}s", e.t_materialize),
+            format!("{:.2}s", e.t_baseline_cluster),
+            format!("{:.2}s", e.t_rkmeans),
+            format!("{:.2}×", e.speedup),
+            e.rel_approx.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+            human_count(e.grid_points as u64),
+        ]);
+        println!(
+            "k={k} κ={kappa}: baseline holds {} dense; Rk-means grid {}",
+            human_bytes(e.baseline_bytes),
+            human_count(e.grid_points as u64),
+        );
+    }
+    println!("{}", t.render());
+
+    // Optional: the XLA/PJRT Step-4 path on the k=10 coreset.
+    let art_dir = PjrtRuntime::default_dir();
+    if PjrtRuntime::available(&art_dir) {
+        let rt = PjrtRuntime::load(&art_dir)?;
+        let k = 10;
+        let jc = full_join_counts(&db, &tree)?;
+        let margs = marginals(&db, &feq, &tree, &jc)?;
+        let models = solve_subspaces(&feq, &margs, k)?;
+        let (grid, subspaces) = build_grid(&db, &feq, &tree, &models)?;
+        let spec = EmbedSpec::from_feq(&db, &feq)?;
+        let dense = grid_dense_embed(&grid, &models, &spec);
+        let lcfg = LloydConfig { k, seed: cfg.seed, ..LloydConfig::new(k) };
+
+        let t0 = std::time::Instant::now();
+        let native = rkmeans::cluster::sparse_lloyd(&grid, &subspaces, &lcfg);
+        let t_native = t0.elapsed();
+        match rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg) {
+            Ok(xla) => {
+                let t0 = std::time::Instant::now();
+                let _ = rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg)?; // warm
+                let t_xla = t0.elapsed();
+                println!(
+                    "step-4 engines on |G|={} D={}: factored-native {:?} (obj {:.4e}) vs \
+                     XLA-dense {:?} (obj {:.4e})",
+                    grid.n(),
+                    spec.dims,
+                    t_native,
+                    native.objective,
+                    t_xla,
+                    xla.objective
+                );
+            }
+            Err(e) => println!("XLA step-4 skipped: {e}"),
+        }
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA step-4 comparison)");
+    }
+    Ok(())
+}

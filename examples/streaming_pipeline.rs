@@ -1,0 +1,74 @@
+//! Streaming ingestion + periodic re-clustering through the coordinator.
+//!
+//! ```sh
+//! cargo run --release --offline --example streaming_pipeline
+//! ```
+//!
+//! Simulates a Favorita-style deployment: sales tuples stream into the
+//! fact table through a bounded (backpressured) channel while the
+//! coordinator re-runs Rk-means every `RECLUSTER_EVERY` tuples and
+//! publishes versioned clusterings. Because Rk-means only touches base
+//! relations, each re-cluster is Õ(|D|) — no join is ever materialized.
+
+use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
+use rkmeans::data::Value;
+use rkmeans::rkmeans::RkConfig;
+use rkmeans::synthetic::{favorita, Scale};
+use rkmeans::util::SplitMix64;
+use std::time::Duration;
+
+const RECLUSTER_EVERY: usize = 3_000;
+const BATCHES: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let db = favorita::generate(Scale::small(), 7);
+    let feq = favorita::feq();
+    let sales_schema = db.get("sales").expect("sales relation").schema.clone();
+    let n_dates = sales_schema.attr(0).domain as u64;
+    let n_stores = sales_schema.attr(1).domain as u64;
+    let n_items = sales_schema.attr(2).domain as u64;
+    println!(
+        "streaming into Favorita: {} base tuples, reclustering every {} new sales",
+        db.total_rows(),
+        RECLUSTER_EVERY
+    );
+
+    let mut cfg = CoordinatorConfig::new(RkConfig::new(8));
+    cfg.recluster_every = RECLUSTER_EVERY;
+    cfg.channel_capacity = 512; // small queue: demonstrates backpressure
+    let coord = Coordinator::start(db, feq, cfg);
+
+    // Producer: a new day of skewed sales per batch.
+    let mut rng = SplitMix64::new(99);
+    for batch in 0..BATCHES {
+        for _ in 0..RECLUSTER_EVERY {
+            let item = rng.below(n_items);
+            let units = ((2.0 + rng.normal()).exp() * 100.0).round() / 100.0;
+            coord.insert(
+                "sales",
+                vec![
+                    Value::Cat(rng.below(n_dates) as u32),
+                    Value::Cat(rng.below(n_stores) as u32),
+                    Value::Cat(item as u32),
+                    Value::Double(units),
+                    Value::Cat(u32::from(rng.coin(0.08))),
+                ],
+            )?; // blocks if the coordinator is behind (backpressure)
+        }
+        match coord.recv_update(Duration::from_secs(300)) {
+            Some(u) => println!(
+                "update v{} after {:>6} tuples: |G|={:<7} objective={:.4e}  (job {:?})",
+                u.version, u.ingested, u.result.grid_points, u.result.objective_grid, u.elapsed
+            ),
+            None => println!("batch {batch}: no update within timeout"),
+        }
+    }
+
+    println!("\n-- coordinator metrics --\n{}", coord.metrics().render());
+    let final_db = coord.shutdown()?;
+    println!(
+        "final sales table: {} rows",
+        final_db.get("sales").expect("sales relation").n_rows()
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT driver: lower the L2 model to HLO **text** per shape bucket.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``artifacts`` target). Produces:
+
+* ``lloyd_step_<N>x<D>x<K>.hlo.txt`` — one Lloyd iteration;
+* ``lloyd_sweep_<N>x<D>x<K>x<T>.hlo.txt`` — a fused ``T``-step scan for the
+  kernel bench;
+* ``manifest.json`` — the shape-bucket index the rust runtime loads.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import lloyd as kernels
+
+# Shape buckets (N points, D dims, K centroids). N is a multiple of the
+# kernel BLOCK_N; the rust runtime picks the smallest bucket that fits and
+# pads. Keep the set small — every bucket is compiled by PJRT on first use.
+BUCKETS = [
+    (1024, 8, 8),
+    (1024, 32, 16),
+    (4096, 16, 16),
+    (4096, 64, 16),
+    (16384, 32, 16),
+    (16384, 32, 64),
+    (65536, 16, 16),
+    (65536, 64, 64),
+]
+
+# Fused-sweep iteration count for the kernel bench artifact.
+SWEEP_ITERS = 5
+SWEEP_BUCKETS = [(4096, 16, 16), (16384, 32, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(n: int, d: int, k: int) -> str:
+    pts = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    wts = jax.ShapeDtypeStruct((n,), jnp.float32)
+    cts = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    return to_hlo_text(jax.jit(model.lloyd_step).lower(pts, wts, cts))
+
+
+def lower_sweep(n: int, d: int, k: int, iters: int) -> str:
+    pts = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    wts = jax.ShapeDtypeStruct((n,), jnp.float32)
+    cts = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    fn = lambda p, w, c: model.lloyd_sweep(p, w, c, iters)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(pts, wts, cts))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="only the smallest bucket (for tests)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    buckets = BUCKETS[:1] if args.quick else BUCKETS
+    sweeps = [] if args.quick else SWEEP_BUCKETS
+    manifest = {"version": 1, "block_n": kernels.BLOCK_N, "artifacts": []}
+
+    for n, d, k in buckets:
+        name = f"lloyd_step_{n}x{d}x{k}.hlo.txt"
+        path = os.path.join(args.out, name)
+        text = lower_step(n, d, k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "file": name,
+                "entry": "lloyd_step",
+                "n": n,
+                "d": d,
+                "k": k,
+                "vmem_bytes": kernels.vmem_bytes(kernels.BLOCK_N, d, k),
+            }
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for n, d, k in sweeps:
+        name = f"lloyd_sweep_{n}x{d}x{k}x{SWEEP_ITERS}.hlo.txt"
+        path = os.path.join(args.out, name)
+        text = lower_sweep(n, d, k, SWEEP_ITERS)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "file": name,
+                "entry": "lloyd_sweep",
+                "n": n,
+                "d": d,
+                "k": k,
+                "iters": SWEEP_ITERS,
+                "vmem_bytes": kernels.vmem_bytes(kernels.BLOCK_N, d, k),
+            }
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

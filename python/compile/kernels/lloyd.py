@@ -1,0 +1,92 @@
+"""Layer 1 — Pallas kernel for the weighted-Lloyd assignment step.
+
+The hot spot of Rk-means Step 4 (and of the dense baseline) is computing,
+for a block of points, the squared distance to every centroid and the
+argmin. We expand ``‖x − c‖² = ‖x‖² − 2·x·cᵀ + ‖c‖²`` so the dominant cost
+is the ``x·cᵀ`` contraction — on a real TPU this feeds the MXU systolic
+array; here the kernel runs under ``interpret=True`` because the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation and /opt/xla-example/README.md).
+
+Tiling: the grid iterates over N-blocks of ``block_n`` points. Each step
+streams one ``[block_n, D]`` point tile HBM→VMEM while the full ``[K, D]``
+centroid tile stays VMEM-resident (K and D are bucketed small; the VMEM
+budget per bucket is recorded in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile height: 128 matches the MXU/VPU lane count on TPU and is a
+# divisor of every AOT bucket size.
+BLOCK_N = 128
+
+
+def _assign_kernel(x_ref, c_ref, assign_ref, mind_ref):
+    """One grid step: distances + argmin for a block of points.
+
+    x_ref: [block_n, D] f32 — point tile.
+    c_ref: [K, D] f32 — all centroids (VMEM-resident).
+    assign_ref: [block_n] i32 — out: nearest-centroid index.
+    mind_ref: [block_n] f32 — out: squared distance to it.
+    """
+    x = x_ref[...]
+    c = c_ref[...]
+    # MXU contraction; accumulate in f32.
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)[None, :]
+    d = xn - 2.0 * xc + cn
+    assign_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    # Clamp tiny negatives from the expansion.
+    mind_ref[...] = jnp.maximum(jnp.min(d, axis=1), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def assign(points: jax.Array, centroids: jax.Array, *, block_n: int = BLOCK_N):
+    """Nearest-centroid assignment via the Pallas kernel.
+
+    points: [N, D] f32 (N must be a multiple of ``block_n``; the AOT
+    buckets guarantee this, and the rust runtime pads).
+    centroids: [K, D] f32.
+    Returns (assign [N] i32, min_sq_dist [N] f32).
+    """
+    n, d = points.shape
+    k, d2 = centroids.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: points D={d} centroids D={d2}")
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(points, centroids)
+
+
+def vmem_bytes(block_n: int, d: int, k: int) -> int:
+    """Estimated VMEM footprint of one grid step (f32 tiles + outputs).
+
+    Used by DESIGN.md §Perf to size buckets against the ~16 MiB/core VMEM
+    budget of a TPU: point tile + centroid tile + distance tile + outputs.
+    """
+    f32 = 4
+    return f32 * (block_n * d + k * d + block_n * k + 2 * block_n)

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracle for the Lloyd kernels.
+
+Everything here is deliberately naive and dependency-free: the pytest suite
+asserts the Pallas kernel and the L2 model match these references
+bit-closely, which is the core correctness signal of the compile path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_ref(points, centroids):
+    """Nearest-centroid assignment by explicit pairwise distances.
+
+    points: [N, D]; centroids: [K, D].
+    Returns (assign [N] i32, min_sq_dist [N] f32).
+    """
+    # [N, K, D] -> [N, K] squared distances; no algebraic expansion so it
+    # is a genuinely independent computation from the kernel.
+    diff = points[:, None, :] - centroids[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind = jnp.min(d2, axis=1)
+    return assign, mind.astype(points.dtype)
+
+
+def lloyd_step_ref(points, weights, centroids):
+    """One full weighted Lloyd step.
+
+    Returns (new_centroids [K, D], counts [K], objective scalar).
+    Empty clusters keep their previous centroid (the rust host reseeds).
+    """
+    k = centroids.shape[0]
+    assign, mind = assign_ref(points, centroids)
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    woh = onehot * weights[:, None]
+    sums = woh.T @ points
+    counts = woh.sum(axis=0)
+    obj = jnp.sum(weights * mind)
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1e-30)[:, None], centroids)
+    return new_c, counts, obj
+
+
+def lloyd_iterate_ref(points, weights, centroids, iters: int):
+    """Run ``iters`` reference Lloyd steps (python loop)."""
+    c = centroids
+    counts = None
+    obj = None
+    for _ in range(iters):
+        c, counts, obj = lloyd_step_ref(points, weights, c)
+    return c, counts, obj
+
+
+def objective_ref(points, weights, centroids):
+    """Weighted k-means objective of fixed centroids."""
+    _, mind = assign_ref(points, centroids)
+    return jnp.sum(weights * mind)

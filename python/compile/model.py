@@ -1,0 +1,60 @@
+"""Layer 2 — the JAX compute graph for the Step-4 hot path.
+
+``lloyd_step`` performs one weighted Lloyd iteration over a dense coreset
+embedding, calling the Layer-1 Pallas kernel for the distance/argmin part
+and doing the weighted segment-sum as a one-hot matmul (which XLA fuses
+into two GEMMs). ``lloyd_sweep`` runs a fixed number of steps under
+``lax.scan`` so the whole sweep is a single compiled artifact.
+
+These functions are lowered ONCE per shape bucket by :mod:`compile.aot`
+into ``artifacts/*.hlo.txt`` and executed from rust via PJRT — python is
+never on the clustering path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lloyd as kernels
+
+
+def lloyd_step(points, weights, centroids):
+    """One weighted Lloyd iteration.
+
+    points: [N, D] f32; weights: [N] f32; centroids: [K, D] f32.
+    Returns (new_centroids [K, D], counts [K], objective []).
+
+    Padding contract with the rust runtime: pad rows carry weight 0 (they
+    cannot move centroids or the objective) and pad centroids sit at the
+    1e15 sentinel (they never win an argmin; with count 0 they are kept
+    as-is by the `where`).
+    """
+    k = centroids.shape[0]
+    assign, mind = kernels.assign(points, centroids)
+    onehot = (assign[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(points.dtype)
+    woh = onehot * weights[:, None]
+    sums = jnp.dot(woh.T, points, preferred_element_type=jnp.float32)
+    counts = jnp.sum(woh, axis=0)
+    obj = jnp.sum(weights * mind)
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1e-30)[:, None], centroids)
+    return new_c, counts, obj
+
+
+def lloyd_sweep(points, weights, centroids, iters: int):
+    """``iters`` Lloyd steps under ``lax.scan`` (one artifact, T updates).
+
+    Returns (final_centroids, final_counts, objective_trace [iters]).
+    """
+
+    def body(c, _):
+        new_c, counts, obj = lloyd_step(points, weights, c)
+        return new_c, (counts, obj)
+
+    final_c, (counts_t, obj_t) = jax.lax.scan(body, centroids, None, length=iters)
+    return final_c, counts_t[-1], obj_t
+
+
+def assign_only(points, centroids):
+    """Assignment + distances (used to score fixed centroids from rust)."""
+    return kernels.assign(points, centroids)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest runs from the repo root
+# (`pytest python/tests/`), matching the Makefile/CI invocation.
+sys.path.insert(0, os.path.dirname(__file__))

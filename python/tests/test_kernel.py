@@ -1,0 +1,93 @@
+"""L1 Pallas kernel vs the pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes and value ranges; fixed tests cover the padding
+contract the rust runtime relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lloyd as kernels
+from compile.kernels import ref
+
+
+def rand(shape, seed, lo=-5.0, hi=5.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    d=st.integers(1, 48),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+    block_n=st.sampled_from([8, 32, 128]),
+)
+def test_assign_matches_ref(blocks, d, k, seed, block_n):
+    n = blocks * block_n
+    pts = rand((n, d), seed)
+    cents = rand((k, d), seed + 1)
+    a_k, m_k = kernels.assign(pts, cents, block_n=block_n)
+    a_r, m_r = ref.assign_ref(pts, cents)
+    # Distances must match tightly.
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r), rtol=2e-4, atol=2e-4)
+    # Assignments may differ only on (near-)ties; verify via distances.
+    d_k = np.sum((np.asarray(pts)[:, None, :] - np.asarray(cents)[None, :, :]) ** 2, axis=-1)
+    picked = d_k[np.arange(n), np.asarray(a_k)]
+    best = d_k.min(axis=1)
+    np.testing.assert_allclose(picked, best, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_separated_clusters_exact_assignment(seed):
+    # Far-apart centroids: no ties, assignments must match exactly.
+    rng = np.random.default_rng(seed)
+    k, d, n = 4, 8, 256
+    centers = rng.uniform(-100, 100, size=(k, d)).astype(np.float32)
+    labels = rng.integers(0, k, size=n)
+    pts = centers[labels] + rng.normal(0, 0.01, size=(n, d)).astype(np.float32)
+    a_k, _ = kernels.assign(jnp.asarray(pts), jnp.asarray(centers))
+    np.testing.assert_array_equal(np.asarray(a_k), labels)
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="multiple"):
+        kernels.assign(rand((100, 4), 0), rand((2, 4), 1))
+    with pytest.raises(ValueError, match="dim mismatch"):
+        kernels.assign(rand((128, 4), 0), rand((2, 5), 1))
+
+
+def test_padding_sentinel_centroids_never_win():
+    # The rust runtime pads K with centroids at 1e15.
+    pts = rand((128, 4), 7)
+    cents = jnp.concatenate([rand((3, 4), 8), jnp.full((5, 4), 1e15, jnp.float32)])
+    a, m = kernels.assign(pts, cents)
+    assert int(jnp.max(a)) < 3
+    assert bool(jnp.all(jnp.isfinite(m)))
+
+
+def test_zero_distance_for_exact_centroid_points():
+    cents = rand((4, 16), 11)
+    pts = jnp.tile(cents, (32, 1))  # 128 rows, each exactly a centroid
+    a, m = kernels.assign(pts, cents)
+    np.testing.assert_allclose(np.asarray(m), 0.0, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(a), np.tile(np.arange(4), 32))
+
+
+def test_vmem_estimate_positive_and_monotone():
+    small = kernels.vmem_bytes(128, 8, 8)
+    big = kernels.vmem_bytes(128, 64, 64)
+    assert 0 < small < big
+    # The biggest AOT bucket must fit a 16 MiB VMEM budget comfortably.
+    assert kernels.vmem_bytes(128, 64, 64) < 16 * 1024 * 1024
+
+
+def test_dtype_is_preserved():
+    a, m = kernels.assign(rand((128, 4), 3), rand((2, 4), 4))
+    assert a.dtype == jnp.int32
+    assert m.dtype == jnp.float32

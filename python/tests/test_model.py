@@ -1,0 +1,93 @@
+"""L2 model vs the oracle: full Lloyd steps, the scan sweep, and the
+padding contract end to end."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, lo=-5.0, hi=5.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    d=st.integers(1, 24),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_step_matches_ref(blocks, d, k, seed):
+    n = blocks * 128
+    pts = rand((n, d), seed)
+    wts = rand((n,), seed + 1, 0.1, 2.0)
+    cts = rand((k, d), seed + 2)
+    c_m, n_m, o_m = model.lloyd_step(pts, wts, cts)
+    c_r, n_r, o_r = ref.lloyd_step_ref(pts, wts, cts)
+    np.testing.assert_allclose(np.asarray(o_m), np.asarray(o_r), rtol=1e-3)
+    # Counts can differ on distance ties; require total mass to agree and
+    # centroid sums to be consistent with their own counts.
+    np.testing.assert_allclose(
+        float(jnp.sum(n_m)), float(jnp.sum(n_r)), rtol=1e-5
+    )
+    # With no ties (generic random floats) everything matches.
+    np.testing.assert_allclose(np.asarray(n_m), np.asarray(n_r), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(c_m), np.asarray(c_r), rtol=5e-3, atol=5e-3)
+
+
+def test_objective_decreases_over_sweep():
+    pts = rand((512, 8), 3)
+    wts = rand((512,), 4, 0.5, 1.5)
+    cts = rand((6, 8), 5)
+    _, _, obj_t = model.lloyd_sweep(pts, wts, cts, 6)
+    objs = np.asarray(obj_t)
+    assert np.all(np.diff(objs) <= 1e-3), f"objective rose: {objs}"
+
+
+def test_sweep_equals_iterated_steps():
+    pts = rand((256, 4), 6)
+    wts = jnp.ones((256,), jnp.float32)
+    cts = rand((4, 4), 7)
+    c_s, n_s, obj_t = model.lloyd_sweep(pts, wts, cts, 3)
+    c_i, n_i, o_i = ref.lloyd_iterate_ref(pts, wts, cts, 3)
+    np.testing.assert_allclose(np.asarray(c_s), np.asarray(c_i), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(n_s), np.asarray(n_i), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(float(obj_t[-1]), float(o_i), rtol=1e-4)
+
+
+def test_padding_contract():
+    """Padded rows (w=0) and sentinel centroids must be exact no-ops."""
+    n_real, n_pad = 100, 28
+    d, k_real, k_pad = 6, 3, 2
+    pts_r = rand((n_real, d), 8)
+    wts_r = rand((n_real,), 9, 0.5, 1.5)
+    cts_r = rand((k_real, d), 10)
+
+    pts = jnp.concatenate([pts_r, jnp.zeros((n_pad, d), jnp.float32)])
+    wts = jnp.concatenate([wts_r, jnp.zeros((n_pad,), jnp.float32)])
+    cts = jnp.concatenate([cts_r, jnp.full((k_pad, d), 1e15, jnp.float32)])
+
+    c_pad, n_pad_counts, o_pad = model.lloyd_step(pts, wts, cts)
+    c_ref, n_ref, o_ref = ref.lloyd_step_ref(pts_r, wts_r, cts_r)
+
+    np.testing.assert_allclose(float(o_pad), float(o_ref), rtol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(c_pad[:k_real]), np.asarray(c_ref), rtol=5e-3, atol=5e-3
+    )
+    # Pad centroids: zero mass, unchanged position.
+    np.testing.assert_allclose(np.asarray(n_pad_counts[k_real:]), 0.0)
+    np.testing.assert_allclose(np.asarray(c_pad[k_real:]), 1e15, rtol=1e-6)
+
+
+def test_empty_cluster_keeps_centroid():
+    pts = jnp.zeros((128, 2), jnp.float32)
+    wts = jnp.ones((128,), jnp.float32)
+    # Second centroid is far away: it gets no points.
+    cts = jnp.asarray([[0.0, 0.0], [50.0, 50.0]], jnp.float32)
+    new_c, counts, _ = model.lloyd_step(pts, wts, cts)
+    assert float(counts[1]) == 0.0
+    np.testing.assert_allclose(np.asarray(new_c[1]), [50.0, 50.0])

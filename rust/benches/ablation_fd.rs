@@ -1,0 +1,13 @@
+//! Bench A1 — FD-chain ablation (paper §4.2, Theorem 4.6): the number of
+//! non-zero-weight grid cells on Retailer's `zip → city → state` chain vs
+//! the naive κ^d cross-product and the Π(1 + dᵢ(κ−1)) bound.
+
+use rkmeans::bench_harness::paper::{ablation_fd, PaperCfg};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("RKMEANS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let cfg = PaperCfg::new(scale);
+    println!("{}", ablation_fd(&cfg)?.render());
+    Ok(())
+}

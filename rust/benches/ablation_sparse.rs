@@ -1,0 +1,17 @@
+//! Bench A2 — Step-4 ablation (paper §4.3): the factored sparse Lloyd
+//! (O((|G|+D)·k·m·t)) vs generic dense Lloyd over the one-hot-embedded
+//! grid (O(|G|·D·k·t)), per dataset. The gap grows with the total
+//! categorical domain size D.
+
+use rkmeans::bench_harness::paper::{ablation_sparse, PaperCfg};
+use rkmeans::synthetic::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("RKMEANS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let cfg = PaperCfg::new(scale);
+    for ds in Dataset::all() {
+        println!("{}", ablation_sparse(ds, 10, &cfg)?.render());
+    }
+    Ok(())
+}

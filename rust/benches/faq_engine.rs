@@ -1,0 +1,46 @@
+//! Bench E1 — FAQ engine throughput: the cost of Step 1 (two-pass
+//! marginals) and Step 3 (free-variable grid weights) against full join
+//! materialization on the same data. This is the substrate behind
+//! Theorem 4.7's claim that Rk-means can run faster than even *computing*
+//! the data matrix.
+
+use rkmeans::bench_harness::bench;
+use rkmeans::coreset::solve_subspaces;
+use rkmeans::faq::{full_join_counts, marginals};
+use rkmeans::join::materialize;
+use rkmeans::query::Hypergraph;
+use rkmeans::synthetic::{Dataset, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("RKMEANS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    for ds in Dataset::all() {
+        let db = ds.generate(Scale::custom(scale), 42);
+        let feq = ds.feq();
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+
+        let m1 = bench(&format!("{}: step1 marginals (2-pass FAQ)", ds.name()), 1, 3, || {
+            let jc = full_join_counts(&db, &tree).expect("counts");
+            marginals(&db, &feq, &tree, &jc).expect("marginals")
+        });
+        println!("{}", m1.line());
+
+        let jc = full_join_counts(&db, &tree)?;
+        let margs = marginals(&db, &feq, &tree, &jc)?;
+        let models = solve_subspaces(&feq, &margs, 10)?;
+        let m3 = bench(&format!("{}: step3 grid weights (free-var FAQ)", ds.name()), 1, 3, || {
+            rkmeans::coreset::build_grid(&db, &feq, &tree, &models).expect("grid")
+        });
+        println!("{}", m3.line());
+
+        let mx = bench(&format!("{}: materialize X (baseline)", ds.name()), 0, 2, || {
+            materialize(&db, &feq, &tree).expect("materialize")
+        });
+        println!("{}", mx.line());
+        println!(
+            "  -> steps 1+3 vs materialize: {:.2}× faster\n",
+            mx.min() / (m1.min() + m3.min())
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench F3 — regenerates paper Figure 3: per-step time breakdown of
+//! Rk-means vs k, with the compute-X reference bar, per dataset.
+
+use rkmeans::bench_harness::paper::{fig3, PaperCfg};
+use rkmeans::synthetic::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("RKMEANS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let mut cfg = PaperCfg::new(scale);
+    cfg.eval_approx = false; // breakdown only
+    for ds in Dataset::all() {
+        println!("{}", fig3(ds, &cfg)?.render());
+    }
+    Ok(())
+}

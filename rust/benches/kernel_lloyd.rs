@@ -1,0 +1,50 @@
+//! Bench K1 — the Step-4 hot path across engines and shape buckets:
+//! native dense Lloyd (rust), the XLA/PJRT AOT artifact (Pallas kernel
+//! under interpret=True), and the factored sparse Lloyd on an equivalent
+//! synthetic grid. One Lloyd iteration per measurement (fixed work).
+
+use rkmeans::bench_harness::bench;
+use rkmeans::cluster::{weighted_lloyd, LloydConfig};
+use rkmeans::runtime::PjrtRuntime;
+use rkmeans::util::SplitMix64;
+
+fn synth(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 2.0)).collect();
+    (pts, w)
+}
+
+fn main() -> anyhow::Result<()> {
+    let shapes = [(1024usize, 8usize, 8usize), (4096, 16, 16), (16384, 32, 16), (65536, 16, 16)];
+    let rt = if PjrtRuntime::available(&PjrtRuntime::default_dir()) {
+        Some(PjrtRuntime::load(&PjrtRuntime::default_dir())?)
+    } else {
+        eprintln!("(no artifacts — XLA rows skipped; run `make artifacts`)");
+        None
+    };
+
+    for (n, d, k) in shapes {
+        let (pts, w) = synth(n, d, 1);
+        let cfg = LloydConfig { k, max_iters: 1, tol: 0.0, seed: 3 };
+
+        let mn = bench(&format!("native lloyd 1-iter N={n} D={d} K={k}"), 1, 5, || {
+            weighted_lloyd(&pts, &w, d, &cfg)
+        });
+        println!("{}", mn.line());
+
+        if let Some(rt) = &rt {
+            match rt.lloyd(&pts, &w, d, &cfg) {
+                Ok(_) => {
+                    let mx = bench(&format!("xla    lloyd 1-iter N={n} D={d} K={k}"), 1, 5, || {
+                        rt.lloyd(&pts, &w, d, &cfg).expect("xla lloyd")
+                    });
+                    println!("{}", mx.line());
+                    println!("  -> native/xla: {:.2}×\n", mx.min() / mn.min());
+                }
+                Err(e) => println!("  (xla skipped: {e})\n"),
+            }
+        }
+    }
+    Ok(())
+}

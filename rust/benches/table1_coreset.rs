@@ -1,0 +1,19 @@
+//! Bench T1 — regenerates paper Table 1: dataset statistics and coreset
+//! size |G| as a function of κ, per dataset.
+//!
+//! `RKMEANS_BENCH_SCALE` (default 0.05) controls dataset size.
+
+use rkmeans::bench_harness::paper::{table1, PaperCfg};
+
+fn scale() -> f64 {
+    std::env::var("RKMEANS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PaperCfg::new(scale());
+    let t0 = std::time::Instant::now();
+    let t = table1(&cfg)?;
+    println!("{}", t.render());
+    println!("[table1 generated in {:?}]", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench T2 — regenerates paper Table 2: end-to-end runtime and relative
+//! approximation, Rk-means vs materialize+cluster, for k ∈ {5,10,20,50}
+//! with κ = k and the κ < k columns.
+//!
+//! `RKMEANS_BENCH_SCALE` (default 0.05) controls dataset size;
+//! `RKMEANS_BENCH_KS` (comma-separated) overrides the k grid.
+
+use rkmeans::bench_harness::paper::{table2, PaperCfg};
+use rkmeans::synthetic::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("RKMEANS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let mut cfg = PaperCfg::new(scale);
+    if let Ok(ks) = std::env::var("RKMEANS_BENCH_KS") {
+        cfg.ks = ks.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    }
+    for ds in Dataset::all() {
+        let t0 = std::time::Instant::now();
+        println!("{}", table2(ds, &cfg)?.render());
+        println!("[{} table2 generated in {:?}]", ds.name(), t0.elapsed());
+    }
+    Ok(())
+}

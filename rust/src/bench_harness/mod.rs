@@ -1,0 +1,195 @@
+//! Benchmark harness: timing utilities and the paper-table renderers used
+//! by `examples/paper_tables.rs` and the `rust/benches/*` targets. The
+//! environment is offline (no criterion), so the harness implements the
+//! warmup + repeated-measurement + min/mean/median reporting itself.
+
+pub mod paper;
+
+use crate::util::timer::secs;
+use std::time::{Duration, Instant};
+
+/// One measured benchmark: run statistics in seconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// Fastest observed run (criterion's preferred robust statistic).
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Mean of samples.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    /// Median of samples.
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        s[s.len() / 2]
+    }
+
+    /// Render one line: `name  min  mean  median  (n samples)`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} min {:>9.4}s  mean {:>9.4}s  median {:>9.4}s  (n={})",
+            self.name,
+            self.min(),
+            self.mean(),
+            self.median(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Time `f` `samples` times after `warmup` unmeasured runs.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(secs(t0.elapsed()));
+    }
+    Measurement { name: name.to_string(), samples: out }
+}
+
+/// Time a single (expensive, end-to-end) run.
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Measurement) {
+    let t0 = Instant::now();
+    let v = f();
+    let d = secs(t0.elapsed());
+    (v, Measurement { name: name.to_string(), samples: vec![d] })
+}
+
+/// A markdown-style table builder for the paper-table reports.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a duration in seconds with appropriate precision.
+pub fn fmt_secs(d: Duration) -> String {
+    let s = secs(d);
+    if s < 0.01 {
+        format!("{:.2}ms", s * 1000.0)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Format a speedup factor like the paper (`15.38×`).
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}×")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement { name: "x".into(), samples: vec![3.0, 1.0, 2.0] };
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.mean(), 2.0);
+        assert_eq!(m.median(), 2.0);
+        assert!(m.line().contains("x"));
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut calls = 0;
+        let m = bench("inc", 2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("| a "));
+        assert!(r.contains("| 1 "));
+        assert!(r.lines().any(|l| l.starts_with("|--") || l.starts_with("|---")));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("Demo", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_speedup(15.379), "15.38×");
+        assert!(fmt_secs(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_secs(Duration::from_secs(2)).ends_with('s'));
+    }
+}

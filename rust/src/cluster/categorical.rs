@@ -1,0 +1,247 @@
+//! Closed-form optimal weighted k-means in a categorical subspace
+//! (paper §4.1, Proposition 4.1 / Corollary 4.3 / Theorem 4.4).
+//!
+//! For one-hot encoded categories with marginal weights `v`, the optimal
+//! κ-clustering puts each of the κ−1 heaviest categories in its own
+//! (singleton) cluster and all remaining "light" categories together. The
+//! optimal cost is `‖v‖₁ − Σ_heavy v_e − ‖v_light‖₂²/‖v_light‖₁`.
+//!
+//! The light-cluster centroid is the weight-normalized vector over light
+//! categories (Eq. 36); crucially its support is disjoint from every heavy
+//! singleton, so the κ component vectors are *mutually orthogonal* — the
+//! fact [`sparse_lloyd`](crate::cluster::sparse_lloyd) exploits for O(1)
+//! distances.
+
+use crate::util::FxHashMap;
+
+/// Optimal categorical clustering for one subspace.
+#[derive(Clone, Debug)]
+pub struct CatClusters {
+    /// Heavy category keys, descending by weight (each its own cluster).
+    pub heavy: Vec<u64>,
+    /// Heavy category weights (parallel to `heavy`).
+    pub heavy_w: Vec<f64>,
+    /// Light categories and weights (one shared cluster); may be empty.
+    pub light: Vec<(u64, f64)>,
+    /// `‖v_light‖₁`.
+    pub light_mass: f64,
+    /// `‖v_light‖₂²`.
+    pub light_sq: f64,
+    /// Optimal weighted k-means cost in this subspace (unit one-hot scale).
+    pub cost: f64,
+    heavy_index: FxHashMap<u64, u32>,
+}
+
+impl CatClusters {
+    /// Number of clusters actually produced (≤ requested κ; smaller when
+    /// the domain has fewer categories).
+    pub fn kappa(&self) -> usize {
+        self.heavy.len() + usize::from(!self.light.is_empty())
+    }
+
+    /// True if a light (merged) cluster exists.
+    pub fn has_light(&self) -> bool {
+        !self.light.is_empty()
+    }
+
+    /// Cluster id of the light cluster (only meaningful if `has_light`).
+    pub fn light_gid(&self) -> u32 {
+        self.heavy.len() as u32
+    }
+
+    /// Cluster id for a category key: its singleton if heavy, else light.
+    /// Unseen keys (zero marginal weight) also map to the light cluster —
+    /// they are distance-√2 from every component, so the tie is harmless.
+    pub fn gid(&self, key: u64) -> u32 {
+        match self.heavy_index.get(&key) {
+            Some(&i) => i,
+            None => self.light_gid().min(self.kappa().saturating_sub(1) as u32),
+        }
+    }
+
+    /// Squared norm `‖u_a‖²` of component `a`'s centroid vector:
+    /// 1 for heavy singletons, `‖v_light‖₂²/‖v_light‖₁²` for the light
+    /// centroid.
+    pub fn component_norm_sq(&self, gid: u32) -> f64 {
+        if (gid as usize) < self.heavy.len() {
+            1.0
+        } else {
+            debug_assert!(self.has_light());
+            self.light_sq / (self.light_mass * self.light_mass)
+        }
+    }
+
+    /// The light centroid's coordinate for a category key (0 if not light).
+    pub fn light_coord(&self, key: u64) -> f64 {
+        if self.light_mass == 0.0 {
+            return 0.0;
+        }
+        self.light
+            .iter()
+            .find(|(e, _)| *e == key)
+            .map(|(_, w)| w / self.light_mass)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Compute the optimal categorical κ-clustering from a marginal weight
+/// table `(category key, weight)` (Theorem 4.4).
+pub fn categorical_kmeans(marginal: &[(u64, f64)], kappa: usize) -> CatClusters {
+    assert!(kappa >= 1, "kappa must be positive");
+    let mut sorted: Vec<(u64, f64)> =
+        marginal.iter().copied().filter(|&(_, w)| w > 0.0).collect();
+    // Descending weight; ties broken by key for determinism.
+    sorted.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .expect("finite weights")
+            .then(a.0.cmp(&b.0))
+    });
+    let total: f64 = sorted.iter().map(|&(_, w)| w).sum();
+
+    let n_heavy = if sorted.len() <= kappa {
+        sorted.len() // every category its own cluster, no light cluster
+    } else {
+        kappa - 1
+    };
+    let heavy: Vec<u64> = sorted[..n_heavy].iter().map(|&(e, _)| e).collect();
+    let heavy_w: Vec<f64> = sorted[..n_heavy].iter().map(|&(_, w)| w).collect();
+    let light: Vec<(u64, f64)> = sorted[n_heavy..].to_vec();
+    let light_mass: f64 = light.iter().map(|&(_, w)| w).sum();
+    let light_sq: f64 = light.iter().map(|&(_, w)| w * w).sum();
+
+    // OPT = ‖v‖₁ − Σ_heavy v_e − ‖v_light‖₂²/‖v_light‖₁ (Prop 4.1 + Cor 4.3).
+    let heavy_sum: f64 = heavy_w.iter().sum();
+    let cost = if light_mass > 0.0 {
+        (total - heavy_sum - light_sq / light_mass).max(0.0)
+    } else {
+        0.0
+    };
+
+    let heavy_index: FxHashMap<u64, u32> =
+        heavy.iter().enumerate().map(|(i, &e)| (e, i as u32)).collect();
+
+    CatClusters { heavy, heavy_w, light, light_mass, light_sq, cost, heavy_index }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+    use crate::util::SplitMix64;
+
+    /// Cost of an arbitrary partition of categories (for the optimality
+    /// property test): Σ_F ‖v_F‖₁ − ‖v_F‖₂²/‖v_F‖₁  (Prop 4.1).
+    fn partition_cost(weights: &FxHashMap<u64, f64>, parts: &[Vec<u64>]) -> f64 {
+        let mut cost = 0.0;
+        for part in parts {
+            let l1: f64 = part.iter().map(|e| weights[e]).sum();
+            let l2: f64 = part.iter().map(|e| weights[e] * weights[e]).sum();
+            if l1 > 0.0 {
+                cost += l1 - l2 / l1;
+            }
+        }
+        cost
+    }
+
+    #[test]
+    fn heavy_light_split() {
+        let marginal = vec![(10, 5.0), (20, 3.0), (30, 1.0), (40, 1.0)];
+        let c = categorical_kmeans(&marginal, 3);
+        assert_eq!(c.heavy, vec![10, 20]);
+        assert_eq!(c.light.len(), 2);
+        assert_close(c.light_mass, 2.0, 1e-12);
+        assert_close(c.light_sq, 2.0, 1e-12);
+        // cost = 10 - 8 - 2/2 = 1.
+        assert_close(c.cost, 1.0, 1e-12);
+        assert_eq!(c.gid(10), 0);
+        assert_eq!(c.gid(20), 1);
+        assert_eq!(c.gid(30), 2);
+        assert_eq!(c.gid(40), 2);
+        assert_eq!(c.kappa(), 3);
+    }
+
+    #[test]
+    fn small_domain_all_singletons() {
+        let marginal = vec![(1, 2.0), (2, 1.0)];
+        let c = categorical_kmeans(&marginal, 5);
+        assert_eq!(c.kappa(), 2);
+        assert!(!c.has_light());
+        assert_eq!(c.cost, 0.0);
+        assert_eq!(c.gid(1), 0);
+        // Unseen key maps to last cluster without panicking.
+        assert!(c.gid(99) < 2);
+    }
+
+    #[test]
+    fn kappa_one_merges_everything() {
+        let marginal = vec![(1, 3.0), (2, 2.0), (3, 1.0)];
+        let c = categorical_kmeans(&marginal, 1);
+        assert!(c.heavy.is_empty());
+        assert_eq!(c.light.len(), 3);
+        // cost = 6 - 14/6.
+        assert_close(c.cost, 6.0 - 14.0 / 6.0, 1e-12);
+        assert_eq!(c.gid(1), 0);
+        assert_eq!(c.kappa(), 1);
+    }
+
+    #[test]
+    fn component_norms() {
+        let marginal = vec![(1, 4.0), (2, 2.0), (3, 2.0)];
+        let c = categorical_kmeans(&marginal, 2);
+        assert_close(c.component_norm_sq(0), 1.0, 1e-12);
+        // light = {2,3}: ‖·‖² = (4+4)/16 = 0.5.
+        assert_close(c.component_norm_sq(1), 0.5, 1e-12);
+        assert_close(c.light_coord(2), 0.5, 1e-12);
+        assert_close(c.light_coord(1), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn optimal_beats_random_partitions() {
+        // Theorem 4.4: the heavy/light split is optimal. Compare against
+        // random κ-partitions of the domain.
+        for_cases(30, |rng| {
+            let l = 3 + rng.below(8) as usize;
+            let kappa = 2 + rng.below(3.min(l as u64 - 1)) as usize;
+            let weights: Vec<(u64, f64)> =
+                (0..l).map(|e| (e as u64, rng.uniform(0.1, 5.0))).collect();
+            let wmap: FxHashMap<u64, f64> = weights.iter().copied().collect();
+            let opt = categorical_kmeans(&weights, kappa);
+
+            // Random partition into exactly kappa non-empty parts.
+            let mut rng2 = SplitMix64::new(rng.next_u64());
+            let mut parts: Vec<Vec<u64>> = vec![Vec::new(); kappa];
+            let mut keys: Vec<u64> = weights.iter().map(|&(e, _)| e).collect();
+            rng2.shuffle(&mut keys);
+            for (i, &e) in keys.iter().enumerate() {
+                if i < kappa {
+                    parts[i].push(e);
+                } else {
+                    parts[rng2.below(kappa as u64) as usize].push(e);
+                }
+            }
+            let rand_cost = partition_cost(&wmap, &parts);
+            assert!(
+                opt.cost <= rand_cost + 1e-9,
+                "optimal {} beat by random partition {}",
+                opt.cost,
+                rand_cost
+            );
+        });
+    }
+
+    #[test]
+    fn cost_matches_partition_formula() {
+        let weights = vec![(0u64, 3.0), (1, 2.5), (2, 1.0), (3, 0.5)];
+        let wmap: FxHashMap<u64, f64> = weights.iter().copied().collect();
+        let c = categorical_kmeans(&weights, 3);
+        let parts = vec![vec![0], vec![1], vec![2, 3]];
+        assert_close(c.cost, partition_cost(&wmap, &parts), 1e-12);
+    }
+
+    #[test]
+    fn zero_weights_are_dropped() {
+        let c = categorical_kmeans(&[(1, 0.0), (2, 1.0)], 2);
+        assert_eq!(c.kappa(), 1);
+        assert_eq!(c.heavy, vec![2]);
+    }
+}

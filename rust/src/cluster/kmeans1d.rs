@@ -1,0 +1,333 @@
+//! Optimal weighted 1-D k-means by dynamic programming (Wang & Song [42]),
+//! with the divide-and-conquer monotone-optimizer speedup: `O(k·n·log n)`
+//! instead of the naive `O(k·n²)`.
+//!
+//! Used by Step 2 for continuous subspaces; gives the `α = 1` per-subspace
+//! approximation ratio the paper's analysis relies on (§4, Theorem 3.4).
+
+/// Result of an optimal 1-D clustering.
+#[derive(Clone, Debug)]
+pub struct Kmeans1dResult {
+    /// Cluster centers (weighted means), ascending.
+    pub centers: Vec<f64>,
+    /// Decision boundaries: midpoints between consecutive centers
+    /// (`centers.len() - 1` entries). `assign` is a binary search on these.
+    pub boundaries: Vec<f64>,
+    /// Optimal weighted k-means cost.
+    pub cost: f64,
+}
+
+impl Kmeans1dResult {
+    /// Cluster id for a value (nearest center).
+    pub fn assign(&self, v: f64) -> u32 {
+        // boundaries are sorted; partition_point = #boundaries < v.
+        self.boundaries.partition_point(|&b| b < v) as u32
+    }
+
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.centers.len()
+    }
+}
+
+/// Prefix-sum cost oracle over sorted weighted points.
+struct CostOracle {
+    w: Vec<f64>,  // prefix weights
+    wv: Vec<f64>, // prefix weight*value
+    wv2: Vec<f64>, // prefix weight*value²
+}
+
+impl CostOracle {
+    fn new(pts: &[(f64, f64)]) -> Self {
+        let n = pts.len();
+        let (mut w, mut wv, mut wv2) =
+            (Vec::with_capacity(n + 1), Vec::with_capacity(n + 1), Vec::with_capacity(n + 1));
+        w.push(0.0);
+        wv.push(0.0);
+        wv2.push(0.0);
+        for &(v, wt) in pts {
+            w.push(w.last().expect("non-empty") + wt);
+            wv.push(wv.last().expect("non-empty") + wt * v);
+            wv2.push(wv2.last().expect("non-empty") + wt * v * v);
+        }
+        CostOracle { w, wv, wv2 }
+    }
+
+    /// Weighted SSE of the segment `[a, b)` around its weighted mean.
+    #[inline]
+    fn cost(&self, a: usize, b: usize) -> f64 {
+        let wt = self.w[b] - self.w[a];
+        if wt <= 0.0 {
+            return 0.0;
+        }
+        let s = self.wv[b] - self.wv[a];
+        let q = self.wv2[b] - self.wv2[a];
+        // Clamp tiny negative values from cancellation.
+        (q - s * s / wt).max(0.0)
+    }
+
+    /// Weighted mean of `[a, b)`.
+    fn mean(&self, a: usize, b: usize) -> f64 {
+        (self.wv[b] - self.wv[a]) / (self.w[b] - self.w[a])
+    }
+}
+
+/// If the input has more distinct values than this, quantile-bucket it first
+/// (the paper applies the same precision-reduction to Favorita's
+/// `unit_sales`; the DP is quadratic-ish in distinct values otherwise).
+pub const MAX_DISTINCT: usize = 65_536;
+
+/// Optimal weighted k-means in one dimension.
+///
+/// `points` are `(value, weight)` pairs; duplicates are merged and values
+/// sorted internally. Requests for `k >= #distinct` return one cluster per
+/// distinct value (cost 0).
+pub fn kmeans1d(points: &[(f64, f64)], k: usize) -> Kmeans1dResult {
+    assert!(k >= 1, "k must be positive");
+    // Sort + merge duplicates.
+    let mut pts: Vec<(f64, f64)> = points.iter().copied().filter(|&(_, w)| w > 0.0).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite values"));
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(pts.len());
+    for (v, w) in pts {
+        match merged.last_mut() {
+            Some((lv, lw)) if *lv == v => *lw += w,
+            _ => merged.push((v, w)),
+        }
+    }
+    if merged.is_empty() {
+        return Kmeans1dResult { centers: vec![0.0], boundaries: vec![], cost: 0.0 };
+    }
+    let merged = if merged.len() > MAX_DISTINCT { bucketize(&merged, MAX_DISTINCT) } else { merged };
+    let n = merged.len();
+    if k >= n {
+        let centers: Vec<f64> = merged.iter().map(|&(v, _)| v).collect();
+        let boundaries = mid_boundaries(&centers);
+        return Kmeans1dResult { centers, boundaries, cost: 0.0 };
+    }
+
+    let oracle = CostOracle::new(&merged);
+
+    // DP layers with divide-and-conquer optimization.
+    // prev[i] = optimal cost of clustering the first i points into j-1 parts.
+    let mut prev: Vec<f64> = (0..=n).map(|i| oracle.cost(0, i)).collect(); // j = 1
+    // split[j][i] = optimal first index of the j-th (last) cluster for
+    // prefix length i; used to reconstruct boundaries.
+    let mut splits: Vec<Vec<u32>> = vec![vec![0; n + 1]]; // layer j=1: split at 0
+
+    for _j in 2..=k {
+        let mut cur = vec![f64::INFINITY; n + 1];
+        let mut opt = vec![0u32; n + 1];
+        // Solve for i in [lo, hi] knowing the optimal split lies in
+        // [optlo, opthi]; recursion depth O(log n).
+        // (Monotonicity of the argmin follows from the concave-Monge
+        // property of contiguous-segment SSE costs.)
+        struct Frame {
+            lo: usize,
+            hi: usize,
+            optlo: usize,
+            opthi: usize,
+        }
+        let mut stack = vec![Frame { lo: 1, hi: n, optlo: 0, opthi: n - 1 }];
+        while let Some(Frame { lo, hi, optlo, opthi }) = stack.pop() {
+            if lo > hi {
+                continue;
+            }
+            let mid = (lo + hi) / 2;
+            let t_hi = opthi.min(mid - 1);
+            let mut best = f64::INFINITY;
+            let mut best_t = optlo;
+            for t in optlo..=t_hi {
+                let c = prev[t] + oracle.cost(t, mid);
+                if c < best {
+                    best = c;
+                    best_t = t;
+                }
+            }
+            cur[mid] = best;
+            opt[mid] = best_t as u32;
+            if mid > lo {
+                stack.push(Frame { lo, hi: mid - 1, optlo, opthi: best_t });
+            }
+            if mid < hi {
+                stack.push(Frame { lo: mid + 1, hi, optlo: best_t, opthi });
+            }
+        }
+        prev = cur;
+        splits.push(opt);
+    }
+
+    // Reconstruct segment boundaries from the split tables.
+    let mut cuts = Vec::with_capacity(k + 1); // segment end indices, reversed
+    let mut end = n;
+    for j in (0..k).rev() {
+        cuts.push(end);
+        end = splits[j][end] as usize;
+    }
+    cuts.push(0);
+    cuts.reverse(); // 0 = c_0 < c_1 < … < c_k = n
+
+    let mut centers = Vec::with_capacity(k);
+    for s in 0..k {
+        centers.push(oracle.mean(cuts[s], cuts[s + 1]));
+    }
+    let boundaries = mid_boundaries(&centers);
+    Kmeans1dResult { centers, boundaries, cost: prev[n] }
+}
+
+fn mid_boundaries(centers: &[f64]) -> Vec<f64> {
+    centers.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect()
+}
+
+/// Merge a long sorted distinct-value list down to ~`target` weighted
+/// buckets by weight-quantile, preserving total mass and weighted mean per
+/// bucket.
+fn bucketize(pts: &[(f64, f64)], target: usize) -> Vec<(f64, f64)> {
+    let total: f64 = pts.iter().map(|&(_, w)| w).sum();
+    let per = total / target as f64;
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(target);
+    let (mut acc_w, mut acc_wv) = (0.0, 0.0);
+    for &(v, w) in pts {
+        acc_w += w;
+        acc_wv += w * v;
+        if acc_w >= per {
+            out.push((acc_wv / acc_w, acc_w));
+            acc_w = 0.0;
+            acc_wv = 0.0;
+        }
+    }
+    if acc_w > 0.0 {
+        out.push((acc_wv / acc_w, acc_w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+
+    /// Brute-force optimal 1-D k-means over all contiguous partitions.
+    fn brute(pts: &[(f64, f64)], k: usize) -> f64 {
+        let mut sorted: Vec<(f64, f64)> = pts.to_vec();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite"));
+        let mut merged: Vec<(f64, f64)> = Vec::new();
+        for (v, w) in sorted {
+            match merged.last_mut() {
+                Some((lv, lw)) if *lv == v => *lw += w,
+                _ => merged.push((v, w)),
+            }
+        }
+        let n = merged.len();
+        let oracle = CostOracle::new(&merged);
+        // DP without the D&C optimization (the oracle of correctness).
+        let mut prev: Vec<f64> = (0..=n).map(|i| oracle.cost(0, i)).collect();
+        for _ in 2..=k {
+            let mut cur = vec![f64::INFINITY; n + 1];
+            for i in 1..=n {
+                for t in 0..i {
+                    let c = prev[t] + oracle.cost(t, i);
+                    if c < cur[i] {
+                        cur[i] = c;
+                    }
+                }
+            }
+            prev = cur;
+        }
+        prev[n]
+    }
+
+    #[test]
+    fn two_obvious_clusters() {
+        let pts = vec![(0.0, 1.0), (0.1, 1.0), (10.0, 1.0), (10.1, 1.0)];
+        let r = kmeans1d(&pts, 2);
+        assert_eq!(r.centers.len(), 2);
+        assert_close(r.centers[0], 0.05, 1e-12);
+        assert_close(r.centers[1], 10.05, 1e-12);
+        assert_close(r.cost, 2.0 * 0.05_f64.powi(2) * 2.0, 1e-9);
+        assert_eq!(r.assign(-1.0), 0);
+        assert_eq!(r.assign(9.0), 1);
+    }
+
+    #[test]
+    fn weights_shift_centers() {
+        let pts = vec![(0.0, 9.0), (1.0, 1.0)];
+        let r = kmeans1d(&pts, 1);
+        assert_close(r.centers[0], 0.1, 1e-12);
+    }
+
+    #[test]
+    fn k_at_least_n_gives_zero_cost() {
+        let pts = vec![(1.0, 1.0), (2.0, 2.0), (3.0, 1.0)];
+        let r = kmeans1d(&pts, 5);
+        assert_eq!(r.centers, vec![1.0, 2.0, 3.0]);
+        assert_eq!(r.cost, 0.0);
+        assert_eq!(r.assign(2.4), 1);
+    }
+
+    #[test]
+    fn duplicates_are_merged() {
+        let pts = vec![(1.0, 1.0), (1.0, 1.0), (5.0, 1.0)];
+        let r = kmeans1d(&pts, 2);
+        assert_eq!(r.centers, vec![1.0, 5.0]);
+        assert_eq!(r.cost, 0.0);
+    }
+
+    #[test]
+    fn dc_matches_bruteforce_dp() {
+        for_cases(40, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let k = 1 + rng.below(6) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (rng.uniform(-10.0, 10.0), rng.uniform(0.1, 3.0)))
+                .collect();
+            let fast = kmeans1d(&pts, k);
+            let slow = brute(&pts, k);
+            assert_close(fast.cost, slow, 1e-9);
+        });
+    }
+
+    #[test]
+    fn assignment_consistent_with_cost() {
+        for_cases(20, |rng| {
+            let n = 3 + rng.below(30) as usize;
+            let k = 1 + rng.below(4) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| ((rng.below(20) as f64) * 0.5, rng.uniform(0.5, 2.0)))
+                .collect();
+            let r = kmeans1d(&pts, k);
+            // Recompute cost from assignments; must match r.cost.
+            let mut acc = vec![(0.0, 0.0); r.k()]; // (Σw, Σwv)
+            for &(v, w) in &pts {
+                let c = r.assign(v) as usize;
+                acc[c].0 += w;
+                acc[c].1 += w * v;
+            }
+            let mut cost = 0.0;
+            for &(v, w) in &pts {
+                let c = r.assign(v) as usize;
+                if acc[c].0 > 0.0 {
+                    let mu = acc[c].1 / acc[c].0;
+                    cost += w * (v - mu) * (v - mu);
+                }
+            }
+            // The DP centers ARE the weighted means of their segments, so
+            // recomputed cost equals reported cost.
+            assert_close(cost, r.cost, 1e-6);
+        });
+    }
+
+    #[test]
+    fn bucketize_preserves_mass() {
+        let pts: Vec<(f64, f64)> = (0..1000).map(|i| (i as f64, 1.0)).collect();
+        let b = bucketize(&pts, 10);
+        assert!(b.len() <= 11);
+        assert_close(b.iter().map(|&(_, w)| w).sum::<f64>(), 1000.0, 1e-9);
+    }
+
+    #[test]
+    fn empty_input_is_degenerate() {
+        let r = kmeans1d(&[], 3);
+        assert_eq!(r.cost, 0.0);
+        assert_eq!(r.assign(1.0), 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Weighted k-means++ seeding (Arthur & Vassilvitskii [7]), generic over
+//! the point geometry: both the dense Lloyd baseline and the factored
+//! sparse Lloyd seed through this by supplying a `dist2(point, chosen)`
+//! oracle.
+
+use crate::util::SplitMix64;
+
+/// Choose `k` seed *indices* among `n` weighted points by D² sampling.
+///
+/// `dist2(i, j)` must return the squared distance between points `i` and
+/// `j`. The first seed is drawn proportionally to `weights`; each
+/// subsequent seed proportionally to `w_i · min_c d²(i, c)`.
+pub fn kmeanspp_indices(
+    n: usize,
+    weights: &[f64],
+    k: usize,
+    rng: &mut SplitMix64,
+    mut dist2: impl FnMut(usize, usize) -> f64,
+) -> Vec<usize> {
+    assert_eq!(weights.len(), n);
+    assert!(n > 0, "cannot seed from zero points");
+    let k = k.min(n);
+
+    let total_w: f64 = weights.iter().sum();
+    let first = rng.weighted_index(weights, total_w);
+    let mut chosen = vec![first];
+
+    let mut mind2: Vec<f64> = (0..n).map(|i| dist2(i, first)).collect();
+    while chosen.len() < k {
+        let scores: Vec<f64> = mind2.iter().zip(weights).map(|(&d, &w)| d * w).collect();
+        let total: f64 = scores.iter().sum();
+        let next = if total > 0.0 {
+            rng.weighted_index(&scores, total)
+        } else {
+            // All remaining mass is on already-chosen points (duplicates):
+            // fall back to weight sampling among unchosen indices.
+            let mut cand: Vec<usize> = (0..n).filter(|i| !chosen.contains(i)).collect();
+            if cand.is_empty() {
+                break;
+            }
+            let cw: Vec<f64> = cand.iter().map(|&i| weights[i].max(1e-30)).collect();
+            let cwt: f64 = cw.iter().sum();
+            let pick = rng.weighted_index(&cw, cwt);
+            cand.remove(pick)
+        };
+        chosen.push(next);
+        for i in 0..n {
+            let d = dist2(i, next);
+            if d < mind2[i] {
+                mind2[i] = d;
+            }
+        }
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::for_cases;
+
+    fn euclid2(pts: &[(f64, f64)]) -> impl Fn(usize, usize) -> f64 + '_ {
+        move |i, j| {
+            let (dx, dy) = (pts[i].0 - pts[j].0, pts[i].1 - pts[j].1);
+            dx * dx + dy * dy
+        }
+    }
+
+    #[test]
+    fn picks_k_distinct_indices() {
+        let pts: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 0.0)).collect();
+        let w = vec![1.0; 20];
+        let mut rng = SplitMix64::new(1);
+        let seeds = kmeanspp_indices(20, &w, 5, &mut rng, euclid2(&pts));
+        assert_eq!(seeds.len(), 5);
+        let mut sorted = seeds.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5, "seeds must be distinct");
+    }
+
+    #[test]
+    fn spreads_over_separated_clusters() {
+        // 3 tight clusters; 3 seeds should land one in each almost surely.
+        let mut pts = Vec::new();
+        for c in 0..3 {
+            for i in 0..10 {
+                pts.push((c as f64 * 100.0 + (i as f64) * 0.01, 0.0));
+            }
+        }
+        let w = vec![1.0; pts.len()];
+        let mut hit_all = 0;
+        for seed in 0..20u64 {
+            let mut rng = SplitMix64::new(seed);
+            let seeds = kmeanspp_indices(pts.len(), &w, 3, &mut rng, euclid2(&pts));
+            let mut clusters: Vec<usize> = seeds.iter().map(|&i| i / 10).collect();
+            clusters.sort_unstable();
+            clusters.dedup();
+            if clusters.len() == 3 {
+                hit_all += 1;
+            }
+        }
+        assert!(hit_all >= 18, "D² sampling should separate clusters ({hit_all}/20)");
+    }
+
+    #[test]
+    fn zero_weight_points_never_first() {
+        let pts = vec![(0.0, 0.0), (1.0, 0.0)];
+        let w = vec![0.0, 1.0];
+        for seed in 0..10 {
+            let mut rng = SplitMix64::new(seed);
+            let seeds = kmeanspp_indices(2, &w, 1, &mut rng, euclid2(&pts));
+            assert_eq!(seeds[0], 1);
+        }
+    }
+
+    #[test]
+    fn duplicate_points_fall_back_gracefully() {
+        // All points identical: D² mass is zero after the first seed.
+        let pts = vec![(1.0, 1.0); 5];
+        let w = vec![1.0; 5];
+        let mut rng = SplitMix64::new(3);
+        let seeds = kmeanspp_indices(5, &w, 3, &mut rng, euclid2(&pts));
+        assert_eq!(seeds.len(), 3);
+        let mut s = seeds.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn k_capped_at_n() {
+        let pts = vec![(0.0, 0.0), (1.0, 0.0)];
+        let w = vec![1.0, 1.0];
+        let mut rng = SplitMix64::new(4);
+        let seeds = kmeanspp_indices(2, &w, 10, &mut rng, euclid2(&pts));
+        assert_eq!(seeds.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        for_cases(5, |rng| {
+            let n = 5 + rng.below(20) as usize;
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0))).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let s1 = kmeanspp_indices(n, &w, 3, &mut SplitMix64::new(99), euclid2(&pts));
+            let s2 = kmeanspp_indices(n, &w, 3, &mut SplitMix64::new(99), euclid2(&pts));
+            assert_eq!(s1, s2);
+        });
+    }
+}

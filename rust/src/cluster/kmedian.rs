@@ -1,0 +1,355 @@
+//! k-median (`W₁` / ℓ1) extensions (paper §3, closing remark: "our
+//! technique extends easily to the `W_p^p` objective for any p ≥ 1").
+//!
+//! * [`kmedian1d`] — optimal weighted 1-D k-median by dynamic programming
+//!   with the same divide-and-conquer monotone-optimizer speedup as the
+//!   k-means DP: segment cost = weighted absolute deviation around the
+//!   weighted median, computable in O(log n) per segment from prefix sums.
+//! * [`weighted_kmedian`] — dense alternating minimization (assign by ℓ1
+//!   distance, update by coordinate-wise weighted median), the `W₁`
+//!   analogue of Lloyd used to cluster coresets under the k-median
+//!   objective.
+
+use super::kmeanspp::kmeanspp_indices;
+use crate::util::SplitMix64;
+
+/// Result of an optimal 1-D k-median run.
+#[derive(Clone, Debug)]
+pub struct Kmedian1dResult {
+    /// Cluster medians, ascending.
+    pub centers: Vec<f64>,
+    /// Midpoint decision boundaries (`centers.len() - 1` entries).
+    pub boundaries: Vec<f64>,
+    /// Optimal weighted ℓ1 cost Σ w·|v − median|.
+    pub cost: f64,
+}
+
+impl Kmedian1dResult {
+    /// Cluster id for a value.
+    pub fn assign(&self, v: f64) -> u32 {
+        self.boundaries.partition_point(|&b| b < v) as u32
+    }
+}
+
+/// Prefix-sum oracle for weighted ℓ1 segment costs over sorted points.
+struct L1Oracle {
+    v: Vec<f64>,
+    w: Vec<f64>,  // prefix weights
+    wv: Vec<f64>, // prefix weight*value
+}
+
+impl L1Oracle {
+    fn new(pts: &[(f64, f64)]) -> Self {
+        let mut w = Vec::with_capacity(pts.len() + 1);
+        let mut wv = Vec::with_capacity(pts.len() + 1);
+        w.push(0.0);
+        wv.push(0.0);
+        for &(v, wt) in pts {
+            w.push(w.last().expect("non-empty") + wt);
+            wv.push(wv.last().expect("non-empty") + wt * v);
+        }
+        L1Oracle { v: pts.iter().map(|&(v, _)| v).collect(), w, wv }
+    }
+
+    /// Index of the weighted median of `[a, b)` (first index where the
+    /// cumulative weight reaches half the segment mass).
+    fn median_idx(&self, a: usize, b: usize) -> usize {
+        let half = (self.w[a] + self.w[b]) / 2.0;
+        // binary search over prefix weights
+        let (mut lo, mut hi) = (a, b - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.w[mid + 1] < half {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Weighted ℓ1 cost of `[a, b)` around its weighted median.
+    fn cost(&self, a: usize, b: usize) -> f64 {
+        if b <= a {
+            return 0.0;
+        }
+        let m = self.median_idx(a, b);
+        let med = self.v[m];
+        // left part [a, m]: med·W − ΣWV ; right part (m, b): ΣWV − med·W.
+        let left = med * (self.w[m + 1] - self.w[a]) - (self.wv[m + 1] - self.wv[a]);
+        let right = (self.wv[b] - self.wv[m + 1]) - med * (self.w[b] - self.w[m + 1]);
+        (left + right).max(0.0)
+    }
+
+    fn median(&self, a: usize, b: usize) -> f64 {
+        self.v[self.median_idx(a, b)]
+    }
+}
+
+/// Optimal weighted 1-D k-median (duplicates merged, values sorted).
+pub fn kmedian1d(points: &[(f64, f64)], k: usize) -> Kmedian1dResult {
+    assert!(k >= 1, "k must be positive");
+    let mut pts: Vec<(f64, f64)> = points.iter().copied().filter(|&(_, w)| w > 0.0).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite values"));
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(pts.len());
+    for (v, w) in pts {
+        match merged.last_mut() {
+            Some((lv, lw)) if *lv == v => *lw += w,
+            _ => merged.push((v, w)),
+        }
+    }
+    if merged.is_empty() {
+        return Kmedian1dResult { centers: vec![0.0], boundaries: vec![], cost: 0.0 };
+    }
+    let n = merged.len();
+    if k >= n {
+        let centers: Vec<f64> = merged.iter().map(|&(v, _)| v).collect();
+        let boundaries = centers.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        return Kmedian1dResult { centers, boundaries, cost: 0.0 };
+    }
+    let oracle = L1Oracle::new(&merged);
+
+    let mut prev: Vec<f64> = (0..=n).map(|i| oracle.cost(0, i)).collect();
+    let mut splits: Vec<Vec<u32>> = vec![vec![0; n + 1]];
+    for _j in 2..=k {
+        let mut cur = vec![f64::INFINITY; n + 1];
+        let mut opt = vec![0u32; n + 1];
+        struct Frame {
+            lo: usize,
+            hi: usize,
+            optlo: usize,
+            opthi: usize,
+        }
+        let mut stack = vec![Frame { lo: 1, hi: n, optlo: 0, opthi: n - 1 }];
+        while let Some(Frame { lo, hi, optlo, opthi }) = stack.pop() {
+            if lo > hi {
+                continue;
+            }
+            let mid = (lo + hi) / 2;
+            let t_hi = opthi.min(mid - 1);
+            let (mut best, mut best_t) = (f64::INFINITY, optlo);
+            for t in optlo..=t_hi {
+                let c = prev[t] + oracle.cost(t, mid);
+                if c < best {
+                    best = c;
+                    best_t = t;
+                }
+            }
+            cur[mid] = best;
+            opt[mid] = best_t as u32;
+            if mid > lo {
+                stack.push(Frame { lo, hi: mid - 1, optlo, opthi: best_t });
+            }
+            if mid < hi {
+                stack.push(Frame { lo: mid + 1, hi, optlo: best_t, opthi });
+            }
+        }
+        prev = cur;
+        splits.push(opt);
+    }
+
+    let mut cuts = Vec::with_capacity(k + 1);
+    let mut end = n;
+    for j in (0..k).rev() {
+        cuts.push(end);
+        end = splits[j][end] as usize;
+    }
+    cuts.push(0);
+    cuts.reverse();
+    let centers: Vec<f64> = (0..k).map(|s| oracle.median(cuts[s], cuts[s + 1])).collect();
+    let boundaries = centers.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+    Kmedian1dResult { centers, boundaries, cost: prev[n] }
+}
+
+/// Result of a dense weighted k-median run.
+#[derive(Clone, Debug)]
+pub struct KmedianResult {
+    /// Row-major `k × d` medians.
+    pub centroids: Vec<f64>,
+    pub assign: Vec<u32>,
+    /// Final weighted ℓ1 objective Σ w·‖x − C‖₁.
+    pub objective: f64,
+    pub iters: usize,
+}
+
+/// Dense weighted k-median: assign by ℓ1 distance, update each cluster's
+/// center as the coordinate-wise weighted median.
+pub fn weighted_kmedian(
+    points: &[f64],
+    weights: &[f64],
+    d: usize,
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+) -> KmedianResult {
+    assert!(d > 0 && points.len() % d == 0);
+    let n = points.len() / d;
+    assert_eq!(weights.len(), n);
+    let k = k.min(n);
+    let row = |i: usize| &points[i * d..(i + 1) * d];
+    let l1 = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    };
+
+    let mut rng = SplitMix64::new(seed);
+    // k-means++-style seeding with ℓ1 distances (D sampling).
+    let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| l1(row(i), row(j)));
+    let mut centroids: Vec<f64> = Vec::with_capacity(k * d);
+    for &s in &seeds {
+        centroids.extend_from_slice(row(s));
+    }
+
+    let mut assign = vec![0u32; n];
+    let mut objective = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..max_iters.max(1) {
+        iters = it + 1;
+        let mut obj = 0.0;
+        for i in 0..n {
+            let x = row(i);
+            let (mut best, mut bc) = (f64::INFINITY, 0u32);
+            for c in 0..k {
+                let dist = l1(x, &centroids[c * d..(c + 1) * d]);
+                if dist < best {
+                    best = dist;
+                    bc = c as u32;
+                }
+            }
+            assign[i] = bc;
+            obj += weights[i] * best;
+        }
+        // Coordinate-wise weighted median per cluster.
+        for c in 0..k {
+            let members: Vec<usize> = (0..n).filter(|&i| assign[i] == c as u32).collect();
+            if members.is_empty() {
+                continue; // keep previous center
+            }
+            for j in 0..d {
+                let mut vals: Vec<(f64, f64)> =
+                    members.iter().map(|&i| (points[i * d + j], weights[i])).collect();
+                vals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite"));
+                let half: f64 = vals.iter().map(|&(_, w)| w).sum::<f64>() / 2.0;
+                let mut acc = 0.0;
+                for &(v, w) in &vals {
+                    acc += w;
+                    if acc >= half {
+                        centroids[c * d + j] = v;
+                        break;
+                    }
+                }
+            }
+        }
+        if objective.is_finite() && (objective - obj).abs() < 1e-12 {
+            objective = obj;
+            break;
+        }
+        objective = obj;
+    }
+    KmedianResult { centroids, assign, objective, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+
+    /// Brute-force 1-D k-median over contiguous partitions.
+    fn brute(pts: &[(f64, f64)], k: usize) -> f64 {
+        let mut sorted: Vec<(f64, f64)> = pts.to_vec();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite"));
+        let mut merged: Vec<(f64, f64)> = Vec::new();
+        for (v, w) in sorted {
+            match merged.last_mut() {
+                Some((lv, lw)) if *lv == v => *lw += w,
+                _ => merged.push((v, w)),
+            }
+        }
+        let n = merged.len();
+        let oracle = L1Oracle::new(&merged);
+        let mut prev: Vec<f64> = (0..=n).map(|i| oracle.cost(0, i)).collect();
+        for _ in 2..=k {
+            let mut cur = vec![f64::INFINITY; n + 1];
+            for i in 1..=n {
+                for t in 0..i {
+                    let c = prev[t] + oracle.cost(t, i);
+                    if c < cur[i] {
+                        cur[i] = c;
+                    }
+                }
+            }
+            prev = cur;
+        }
+        prev[n]
+    }
+
+    #[test]
+    fn median_beats_mean_on_outliers() {
+        // ℓ1: the outlier doesn't drag the center.
+        let pts = vec![(0.0, 1.0), (1.0, 1.0), (2.0, 1.0), (100.0, 1.0)];
+        let r = kmedian1d(&pts, 1);
+        assert!(r.centers[0] <= 2.0, "median center {}", r.centers[0]);
+        // cost = |0-1| + |1-1| + |2-1| + |100-1| = 101 (median at 1).
+        assert_close(r.cost, 101.0, 1e-9);
+    }
+
+    #[test]
+    fn dc_matches_bruteforce() {
+        for_cases(30, |rng| {
+            let n = 2 + rng.below(30) as usize;
+            let k = 1 + rng.below(5) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (rng.uniform(-10.0, 10.0), rng.uniform(0.1, 3.0)))
+                .collect();
+            let fast = kmedian1d(&pts, k);
+            assert_close(fast.cost, brute(&pts, k), 1e-9);
+        });
+    }
+
+    #[test]
+    fn weighted_median_respects_mass() {
+        // Heavy point pins the median.
+        let pts = vec![(0.0, 10.0), (5.0, 1.0), (6.0, 1.0)];
+        let r = kmedian1d(&pts, 1);
+        assert_close(r.centers[0], 0.0, 1e-12);
+    }
+
+    #[test]
+    fn k_ge_n_zero_cost() {
+        let pts = vec![(1.0, 1.0), (5.0, 2.0)];
+        let r = kmedian1d(&pts, 4);
+        assert_eq!(r.cost, 0.0);
+        assert_eq!(r.assign(4.0), 1);
+    }
+
+    #[test]
+    fn dense_kmedian_clusters_and_descends() {
+        let mut pts = Vec::new();
+        for c in [0.0, 50.0] {
+            for i in 0..20 {
+                pts.push(c + (i % 5) as f64 * 0.1);
+                pts.push(c - (i % 3) as f64 * 0.1);
+            }
+        }
+        let w = vec![1.0; pts.len() / 2];
+        let r = weighted_kmedian(&pts, &w, 2, 2, 20, 7);
+        // Two far-apart blobs: objective far below one-cluster cost.
+        let one = weighted_kmedian(&pts, &w, 2, 1, 20, 7);
+        assert!(r.objective < 0.2 * one.objective, "{} vs {}", r.objective, one.objective);
+    }
+
+    #[test]
+    fn dense_kmedian_objective_monotone() {
+        for_cases(10, |rng| {
+            let n = 15 + rng.below(30) as usize;
+            let d = 1 + rng.below(3) as usize;
+            let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 2.0)).collect();
+            let mut last = f64::INFINITY;
+            for iters in 1..=4 {
+                let r = weighted_kmedian(&pts, &w, d, 3, iters, 11);
+                assert!(r.objective <= last + 1e-9);
+                last = r.objective;
+            }
+        });
+    }
+}

@@ -1,0 +1,285 @@
+//! Dense weighted Lloyd k-means over row-major points.
+//!
+//! This is (a) the materialize-then-cluster baseline — the role mlpack
+//! plays in the paper's Table 2 — and (b) the host-side twin of the
+//! XLA/PJRT hot path (`runtime::XlaLloyd`), kept in lock-step by tests so
+//! the two engines are interchangeable.
+//!
+//! Distances use the `‖x‖² − 2·x·c + ‖c‖²` expansion with centroid norms
+//! hoisted out of the inner loop; the `x·c` contraction is the part the
+//! Pallas kernel maps onto the MXU in the AOT artifact.
+
+use super::kmeanspp::kmeanspp_indices;
+use crate::util::SplitMix64;
+
+/// Configuration for Lloyd iterations.
+#[derive(Clone, Debug)]
+pub struct LloydConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Stop when the relative objective improvement drops below this.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl LloydConfig {
+    /// Defaults matching the paper's experimental setup (k-means++ init,
+    /// run to convergence with a practical iteration cap).
+    pub fn new(k: usize) -> Self {
+        LloydConfig { k, max_iters: 50, tol: 1e-6, seed: 0xC0FFEE }
+    }
+}
+
+/// Result of a Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    /// Row-major `k × d` centroids.
+    pub centroids: Vec<f64>,
+    /// Cluster id per point.
+    pub assign: Vec<u32>,
+    /// Final weighted objective Σ w·d²(x, C).
+    pub objective: f64,
+    /// Iterations executed.
+    pub iters: usize,
+}
+
+/// Weighted Lloyd on `n × d` row-major `points` with per-point `weights`.
+pub fn weighted_lloyd(points: &[f64], weights: &[f64], d: usize, cfg: &LloydConfig) -> LloydResult {
+    assert!(d > 0, "dimension must be positive");
+    assert_eq!(points.len() % d, 0, "points not a multiple of d");
+    let n = points.len() / d;
+    assert_eq!(weights.len(), n, "weights length mismatch");
+    assert!(n > 0, "no points");
+    let k = cfg.k.min(n);
+
+    let mut rng = SplitMix64::new(cfg.seed);
+    let row = |i: usize| &points[i * d..(i + 1) * d];
+    let dist2 = |a: &[f64], b: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            let t = x - y;
+            s += t * t;
+        }
+        s
+    };
+
+    // k-means++ seeding.
+    let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| dist2(row(i), row(j)));
+    let mut centroids: Vec<f64> = Vec::with_capacity(k * d);
+    for &s in &seeds {
+        centroids.extend_from_slice(row(s));
+    }
+
+    let mut assign = vec![0u32; n];
+    let mut objective = f64::INFINITY;
+    let mut iters = 0;
+    let mut mind2 = vec![0.0f64; n];
+
+    for it in 0..cfg.max_iters.max(1) {
+        iters = it + 1;
+        // --- assignment ---
+        let mut cnorm = vec![0.0f64; k];
+        for c in 0..k {
+            let cc = &centroids[c * d..(c + 1) * d];
+            cnorm[c] = cc.iter().map(|v| v * v).sum();
+        }
+        let mut obj = 0.0;
+        for i in 0..n {
+            let x = row(i);
+            let xn: f64 = x.iter().map(|v| v * v).sum();
+            let mut best = f64::INFINITY;
+            let mut best_c = 0u32;
+            for c in 0..k {
+                let cc = &centroids[c * d..(c + 1) * d];
+                let mut dot = 0.0;
+                for (a, b) in x.iter().zip(cc) {
+                    dot += a * b;
+                }
+                let dd = xn - 2.0 * dot + cnorm[c];
+                if dd < best {
+                    best = dd;
+                    best_c = c as u32;
+                }
+            }
+            let best = best.max(0.0);
+            assign[i] = best_c;
+            mind2[i] = best;
+            obj += weights[i] * best;
+        }
+
+        // --- update ---
+        let mut sums = vec![0.0f64; k * d];
+        let mut mass = vec![0.0f64; k];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            let w = weights[i];
+            mass[c] += w;
+            let x = row(i);
+            let s = &mut sums[c * d..(c + 1) * d];
+            for (sv, xv) in s.iter_mut().zip(x) {
+                *sv += w * xv;
+            }
+        }
+        for c in 0..k {
+            if mass[c] > 0.0 {
+                for j in 0..d {
+                    centroids[c * d + j] = sums[c * d + j] / mass[c];
+                }
+            } else {
+                // Empty cluster: reseed at the point with the largest
+                // weighted distance-to-centroid contribution.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        (weights[a] * mind2[a])
+                            .partial_cmp(&(weights[b] * mind2[b]))
+                            .expect("finite")
+                    })
+                    .expect("n > 0");
+                centroids[c * d..(c + 1) * d].copy_from_slice(row(far));
+                mind2[far] = 0.0;
+            }
+        }
+
+        // --- convergence ---
+        if objective.is_finite() {
+            let improve = (objective - obj) / objective.abs().max(1e-30);
+            if improve.abs() < cfg.tol {
+                objective = obj;
+                break;
+            }
+        }
+        objective = obj;
+    }
+
+    LloydResult { centroids, assign, objective, iters }
+}
+
+/// Evaluate the weighted k-means objective of fixed centroids on a dense
+/// point set (used for cross-engine comparisons and full-`X` evaluation).
+pub fn objective(points: &[f64], weights: &[f64], d: usize, centroids: &[f64]) -> f64 {
+    let n = points.len() / d;
+    let k = centroids.len() / d;
+    let mut obj = 0.0;
+    for i in 0..n {
+        let x = &points[i * d..(i + 1) * d];
+        let mut best = f64::INFINITY;
+        for c in 0..k {
+            let cc = &centroids[c * d..(c + 1) * d];
+            let mut s = 0.0;
+            for (a, b) in x.iter().zip(cc) {
+                let t = a - b;
+                s += t * t;
+            }
+            if s < best {
+                best = s;
+            }
+        }
+        obj += weights[i] * best;
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+
+    fn blobs(rng: &mut SplitMix64, centers: &[(f64, f64)], per: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut pts = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..per {
+                pts.push(cx + 0.05 * rng.normal());
+                pts.push(cy + 0.05 * rng.normal());
+            }
+        }
+        let w = vec![1.0; pts.len() / 2];
+        (pts, w)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = SplitMix64::new(11);
+        let centers = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)];
+        let (pts, w) = blobs(&mut rng, &centers, 50);
+        let res = weighted_lloyd(&pts, &w, 2, &LloydConfig::new(3));
+        // Objective ≈ n · E[d²] = 150 · 2·0.05² = 0.75.
+        assert!(res.objective < 2.0, "objective {}", res.objective);
+        // Every true center has a nearby learned centroid.
+        for &(cx, cy) in &centers {
+            let near = (0..3).any(|c| {
+                let dx = res.centroids[c * 2] - cx;
+                let dy = res.centroids[c * 2 + 1] - cy;
+                dx * dx + dy * dy < 0.5
+            });
+            assert!(near, "no centroid near ({cx},{cy})");
+        }
+    }
+
+    #[test]
+    fn objective_decreases_monotonically() {
+        // Lloyd's invariant: each iteration cannot increase the objective.
+        for_cases(15, |rng| {
+            let n = 20 + rng.below(60) as usize;
+            let d = 1 + rng.below(4) as usize;
+            let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let k = 2 + rng.below(4) as usize;
+            let mut last = f64::INFINITY;
+            for iters in 1..=6 {
+                let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: 5 };
+                let r = weighted_lloyd(&pts, &w, d, &cfg);
+                assert!(
+                    r.objective <= last + 1e-9,
+                    "objective rose from {last} to {} at iter {iters}",
+                    r.objective
+                );
+                last = r.objective;
+            }
+        });
+    }
+
+    #[test]
+    fn weights_pull_centroid() {
+        // Two points, k=1: centroid is the weighted mean.
+        let pts = vec![0.0, 0.0, 1.0, 0.0];
+        let w = vec![3.0, 1.0];
+        let r = weighted_lloyd(&pts, &w, 2, &LloydConfig::new(1));
+        assert_close(r.centroids[0], 0.25, 1e-9);
+    }
+
+    #[test]
+    fn zero_weight_points_are_free() {
+        let pts = vec![0.0, 100.0];
+        let w = vec![1.0, 0.0];
+        let r = weighted_lloyd(&pts, &w, 1, &LloydConfig::new(1));
+        assert_close(r.centroids[0], 0.0, 1e-9);
+        assert_close(r.objective, 0.0, 1e-9);
+    }
+
+    #[test]
+    fn k_ge_n_zero_objective() {
+        let pts = vec![0.0, 1.0, 2.0, 3.0];
+        let w = vec![1.0; 4];
+        let r = weighted_lloyd(&pts, &w, 1, &LloydConfig::new(10));
+        assert_close(r.objective, 0.0, 1e-12);
+    }
+
+    #[test]
+    fn objective_function_matches_result() {
+        let mut rng = SplitMix64::new(7);
+        let (pts, w) = blobs(&mut rng, &[(0.0, 0.0), (5.0, 5.0)], 30);
+        let r = weighted_lloyd(&pts, &w, 2, &LloydConfig::new(2));
+        let ev = objective(&pts, &w, 2, &r.centroids);
+        assert_close(ev, r.objective, 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = SplitMix64::new(9);
+        let (pts, w) = blobs(&mut rng, &[(0.0, 0.0), (3.0, 3.0)], 20);
+        let a = weighted_lloyd(&pts, &w, 2, &LloydConfig::new(2));
+        let b = weighted_lloyd(&pts, &w, 2, &LloydConfig::new(2));
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

@@ -1,0 +1,29 @@
+//! Clustering algorithms: the per-subspace optimal solvers of Step 2, the
+//! k-means++ seeder, dense weighted Lloyd (the mlpack-style baseline and
+//! the XLA hot-path's host-side twin), and the factored sparse Lloyd that
+//! implements Step 4's O(1)-per-(cell, centroid, subspace) distance trick.
+//!
+//! | paper piece | module |
+//! |---|---|
+//! | optimal weighted 1-D k-means (DP, [42]) | [`kmeans1d`] |
+//! | closed-form categorical k-means (Thm 4.4) | [`categorical`] |
+//! | k-means++ seeding [7] | [`kmeanspp`] |
+//! | Lloyd over dense `X` (mlpack comparator) | [`lloyd`] |
+//! | Step-4 factored Lloyd over the grid (§4.3) | [`sparse_lloyd`] |
+
+pub mod categorical;
+pub mod kmeans1d;
+pub mod kmedian;
+pub mod kmeanspp;
+pub mod lloyd;
+pub mod regularized;
+pub mod sparse_lloyd;
+
+pub use categorical::{categorical_kmeans, CatClusters};
+pub use kmeans1d::{kmeans1d, Kmeans1dResult};
+pub use kmedian::{kmedian1d, weighted_kmedian, Kmedian1dResult, KmedianResult};
+pub use kmeanspp::kmeanspp_indices;
+pub use lloyd::{weighted_lloyd, LloydConfig, LloydResult};
+pub use sparse_lloyd::{
+    sparse_lloyd, CentroidCoord, Components, SparseGrid, SparseLloydResult, Subspace,
+};

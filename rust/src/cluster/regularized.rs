@@ -1,0 +1,166 @@
+//! Regularized Rk-means (paper §3, "Regularized Rk-means", Prop. 3.5).
+//!
+//! The paper extends the coreset construction to a penalized objective
+//! `W₂²(M, P_in) + Ω(M)` where `Ω` decomposes over the subspace partition,
+//! penalizing each marginal measure's *supporting atoms*. With an
+//! atom-count penalty `Ω_j(M_j) = ρ · |supp(M_j)|` (the ℓ0 flavor of the
+//! paper's group-lasso suggestion) the regularized Step 2 has a clean
+//! closed form in both subspace types:
+//!
+//! * **continuous** — the 1-D DP already produces the optimal cost for
+//!   every κ' ≤ κ as its layer boundary values; pick
+//!   `argmin_κ' cost(κ') + ρ·κ'`;
+//! * **categorical** — Corollary 4.3 gives the optimal cost for every κ'
+//!   from one sorted pass (heavy prefix sums + light suffix norms).
+//!
+//! The payoff is *adaptive per-subspace κ_j*: low-information subspaces
+//! collapse to a couple of components, shrinking the grid coreset
+//! multiplicatively (|G| ≤ Π κ_j) at a quantization cost the penalty
+//! controls — exactly the high-dimensional regime §3 motivates.
+
+use super::categorical::{categorical_kmeans, CatClusters};
+use super::kmeans1d::{kmeans1d, Kmeans1dResult};
+
+/// Optimal 1-D k-means cost for every k' in `1..=k_max` (index k'-1).
+///
+/// One DP run at `k_max` visits every layer; this re-runs the public DP
+/// per layer for clarity — still `O(k_max · n log n)` in total because the
+/// inner DP is layer-incremental. Distinct values are merged first, so
+/// `k' ≥ #distinct` entries are exactly 0.
+pub fn kmeans1d_cost_profile(points: &[(f64, f64)], k_max: usize) -> Vec<f64> {
+    (1..=k_max).map(|k| kmeans1d(points, k).cost).collect()
+}
+
+/// Optimal categorical k-means cost for every κ' in `1..=k_max`
+/// (Corollary 4.3 evaluated over the sorted weight profile in one pass).
+pub fn categorical_cost_profile(marginal: &[(u64, f64)], k_max: usize) -> Vec<f64> {
+    let mut w: Vec<f64> = marginal.iter().map(|&(_, v)| v).filter(|&v| v > 0.0).collect();
+    w.sort_by(|a, b| b.partial_cmp(a).expect("finite weights"));
+    let l = w.len();
+    // Suffix ℓ1/ℓ2² of the light tail starting at index i.
+    let mut suf1 = vec![0.0; l + 1];
+    let mut suf2 = vec![0.0; l + 1];
+    for i in (0..l).rev() {
+        suf1[i] = suf1[i + 1] + w[i];
+        suf2[i] = suf2[i + 1] + w[i] * w[i];
+    }
+    // κ' clusters = heaviest κ'−1 singletons (cost 0) + light tail from
+    // index κ'−1 with cost ‖light‖₁ − ‖light‖₂²/‖light‖₁ (Prop 4.1 with
+    // the Cor 4.3 ordering; the ‖v‖₁ and Σ_heavy terms cancel).
+    (1..=k_max)
+        .map(|kp| {
+            let i = kp - 1; // first light index
+            if i >= l || suf1[i] <= 0.0 {
+                0.0
+            } else {
+                (suf1[i] - suf2[i] / suf1[i]).max(0.0)
+            }
+        })
+        .collect()
+}
+
+/// Pick `argmin_κ' λ·cost(κ') + ρ·κ'` from a cost profile (1-based κ').
+pub fn select_kappa(costs: &[f64], lambda: f64, rho: f64) -> usize {
+    let mut best = (f64::INFINITY, 1usize);
+    for (i, &c) in costs.iter().enumerate() {
+        let kp = i + 1;
+        let pen = lambda * c + rho * kp as f64;
+        if pen < best.0 - 1e-15 {
+            best = (pen, kp);
+        }
+    }
+    best.1
+}
+
+/// Regularized continuous Step-2 solve: adaptive κ_j.
+pub fn kmeans1d_regularized(
+    points: &[(f64, f64)],
+    k_max: usize,
+    lambda: f64,
+    rho: f64,
+) -> (Kmeans1dResult, usize) {
+    let profile = kmeans1d_cost_profile(points, k_max);
+    let kappa = select_kappa(&profile, lambda, rho);
+    (kmeans1d(points, kappa), kappa)
+}
+
+/// Regularized categorical Step-2 solve: adaptive κ_j.
+pub fn categorical_regularized(
+    marginal: &[(u64, f64)],
+    k_max: usize,
+    lambda: f64,
+    rho: f64,
+) -> (CatClusters, usize) {
+    let profile = categorical_cost_profile(marginal, k_max);
+    let kappa = select_kappa(&profile, lambda, rho);
+    (categorical_kmeans(marginal, kappa), kappa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+
+    #[test]
+    fn categorical_profile_matches_direct_solver() {
+        for_cases(30, |rng| {
+            let l = 2 + rng.below(10) as usize;
+            let marginal: Vec<(u64, f64)> =
+                (0..l).map(|e| (e as u64, rng.uniform(0.1, 5.0))).collect();
+            let k_max = 1 + rng.below(l as u64 + 2) as usize;
+            let profile = categorical_cost_profile(&marginal, k_max);
+            for (i, &c) in profile.iter().enumerate() {
+                let direct = categorical_kmeans(&marginal, i + 1).cost;
+                assert_close(c, direct, 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn continuous_profile_is_monotone() {
+        for_cases(15, |rng| {
+            let n = 3 + rng.below(20) as usize;
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.uniform(-5.0, 5.0), rng.uniform(0.1, 2.0))).collect();
+            let profile = kmeans1d_cost_profile(&pts, 6);
+            for w in profile.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9, "cost must not increase with κ: {profile:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn rho_zero_takes_max_kappa_rho_inf_takes_one() {
+        let costs = vec![10.0, 4.0, 1.0, 0.2];
+        // ρ=0: pick the smallest cost (κ'=4 here since strictly decreasing).
+        assert_eq!(select_kappa(&costs, 1.0, 0.0), 4);
+        // Huge ρ: collapse to a single component.
+        assert_eq!(select_kappa(&costs, 1.0, 1e9), 1);
+        // Moderate ρ: interior optimum. cost+2κ: 12, 8, 7, 8.2 -> κ'=3.
+        assert_eq!(select_kappa(&costs, 1.0, 2.0), 3);
+    }
+
+    #[test]
+    fn regularized_solvers_respect_tradeoff() {
+        let pts: Vec<(f64, f64)> =
+            (0..40).map(|i| ((i % 8) as f64 * 3.0, 1.0)).collect();
+        let (loose, k_loose) = kmeans1d_regularized(&pts, 8, 1.0, 0.01);
+        let (tight, k_tight) = kmeans1d_regularized(&pts, 8, 1.0, 50.0);
+        assert!(k_tight <= k_loose);
+        assert!(tight.cost >= loose.cost - 1e-9);
+        // With a tiny penalty the 8 distinct values are fully resolved.
+        assert_eq!(k_loose, 8);
+        assert_close(loose.cost, 0.0, 1e-12);
+    }
+
+    #[test]
+    fn categorical_regularized_collapses_under_pressure() {
+        let marginal: Vec<(u64, f64)> = (0..6).map(|e| (e, 1.0 + e as f64)).collect();
+        let (c, kappa) = categorical_regularized(&marginal, 6, 1.0, 100.0);
+        assert_eq!(kappa, 1);
+        assert_eq!(c.kappa(), 1);
+        let (c2, kappa2) = categorical_regularized(&marginal, 6, 1.0, 1e-6);
+        assert_eq!(kappa2, 6);
+        assert_eq!(c2.cost, 0.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! Streaming coordinator: the Layer-3 orchestrator that keeps clusters
+//! fresh while relational tuples stream in.
+//!
+//! The paper's engine is batch; a production deployment of Rk-means sits
+//! behind an ingestion pipeline. This module provides that shape:
+//!
+//! * **Bounded ingestion** — producers `insert()` tuples through a
+//!   `sync_channel`; when the coordinator falls behind, producers block
+//!   (backpressure) instead of ballooning memory.
+//! * **Delta-triggered re-clustering** — after `recluster_every` new
+//!   tuples (or an explicit [`Coordinator::flush`]) the worker re-runs the
+//!   full Rk-means pipeline. Because Rk-means touches only the base
+//!   relations (never `X`), a re-cluster costs `Õ(|D|)`, which is what
+//!   makes *streaming* re-clustering affordable at all — the baseline
+//!   would re-materialize the join every time.
+//! * **Versioned results** — each completed job is published on a results
+//!   channel as a [`ClusteringUpdate`]; consumers read the latest.
+//! * **Metrics** — counters for ingested/dropped tuples, job counts and
+//!   durations, via [`crate::metrics::Metrics`].
+
+use crate::data::{Database, Value};
+use crate::metrics::Metrics;
+use crate::query::Feq;
+use crate::rkmeans::{rkmeans, RkConfig, RkResult};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Re-cluster after this many ingested tuples.
+    pub recluster_every: usize,
+    /// Bounded queue depth; producers block beyond this (backpressure).
+    pub channel_capacity: usize,
+    /// Clustering configuration for each job.
+    pub rk: RkConfig,
+}
+
+impl CoordinatorConfig {
+    /// Sensible defaults for examples/tests.
+    pub fn new(rk: RkConfig) -> Self {
+        CoordinatorConfig { recluster_every: 10_000, channel_capacity: 1024, rk }
+    }
+}
+
+/// A published clustering result.
+#[derive(Debug)]
+pub struct ClusteringUpdate {
+    /// Monotonically increasing job id.
+    pub version: u64,
+    /// Total tuples ingested when the job started.
+    pub ingested: u64,
+    /// The clustering itself.
+    pub result: RkResult,
+    /// Wall-clock of this job.
+    pub elapsed: Duration,
+}
+
+enum Msg {
+    Insert { relation: String, values: Vec<Value>, weight: f64 },
+    Flush,
+    Shutdown,
+}
+
+/// Handle to the coordinator worker.
+pub struct Coordinator {
+    tx: SyncSender<Msg>,
+    results: Mutex<Receiver<ClusteringUpdate>>,
+    worker: Option<JoinHandle<Database>>,
+    metrics: Metrics,
+}
+
+impl Coordinator {
+    /// Start the worker thread owning `db`.
+    pub fn start(db: Database, feq: Feq, cfg: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = sync_channel::<Msg>(cfg.channel_capacity);
+        let (res_tx, res_rx) = sync_channel::<ClusteringUpdate>(16);
+        let metrics = Metrics::new();
+        let m = metrics.clone();
+
+        let worker = std::thread::spawn(move || {
+            let mut db = db;
+            let mut since_recluster = 0usize;
+            let mut ingested = 0u64;
+            let mut version = 0u64;
+            let ingest_ctr = m.counter("coordinator.ingested");
+            let err_ctr = m.counter("coordinator.insert_errors");
+            let job_ctr = m.counter("coordinator.jobs");
+            let depth = m.gauge("coordinator.since_recluster");
+
+            let run_job = |db: &Database, ingested: u64, version: &mut u64| {
+                let t0 = Instant::now();
+                match rkmeans(db, &feq, &cfg.rk) {
+                    Ok(result) => {
+                        *version += 1;
+                        job_ctr.inc();
+                        // Drop the update if consumers are slow — latest
+                        // result wins; never block ingestion on readers.
+                        let _ = res_tx.try_send(ClusteringUpdate {
+                            version: *version,
+                            ingested,
+                            result,
+                            elapsed: t0.elapsed(),
+                        });
+                    }
+                    Err(e) => eprintln!("coordinator: clustering failed: {e}"),
+                }
+            };
+
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Insert { relation, values, weight } => {
+                        match db.get_mut(&relation) {
+                            Some(rel) if values.len() == rel.n_cols() => {
+                                if weight == 1.0 {
+                                    rel.push_row(&values);
+                                } else {
+                                    rel.push_row_weighted(&values, weight);
+                                }
+                                ingested += 1;
+                                since_recluster += 1;
+                                ingest_ctr.inc();
+                                depth.set(since_recluster as i64);
+                            }
+                            _ => err_ctr.inc(),
+                        }
+                        if since_recluster >= cfg.recluster_every {
+                            since_recluster = 0;
+                            depth.set(0);
+                            run_job(&db, ingested, &mut version);
+                        }
+                    }
+                    Msg::Flush => {
+                        since_recluster = 0;
+                        depth.set(0);
+                        run_job(&db, ingested, &mut version);
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            db
+        });
+
+        Coordinator { tx, results: Mutex::new(res_rx), worker: Some(worker), metrics }
+    }
+
+    /// Ingest one tuple; blocks when the queue is full (backpressure).
+    pub fn insert(&self, relation: &str, values: Vec<Value>) -> Result<()> {
+        self.tx
+            .send(Msg::Insert { relation: relation.to_string(), values, weight: 1.0 })
+            .map_err(|_| anyhow!("coordinator is shut down"))
+    }
+
+    /// Ingest one weighted tuple.
+    pub fn insert_weighted(&self, relation: &str, values: Vec<Value>, weight: f64) -> Result<()> {
+        self.tx
+            .send(Msg::Insert { relation: relation.to_string(), values, weight })
+            .map_err(|_| anyhow!("coordinator is shut down"))
+    }
+
+    /// Force a re-cluster of the current state.
+    pub fn flush(&self) -> Result<()> {
+        self.tx.send(Msg::Flush).map_err(|_| anyhow!("coordinator is shut down"))
+    }
+
+    /// Wait for the next clustering update.
+    pub fn recv_update(&self, timeout: Duration) -> Option<ClusteringUpdate> {
+        match self.results.lock().expect("results lock").recv_timeout(timeout) {
+            Ok(u) => Some(u),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    /// Shared metrics registry.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop the worker and return the final database state.
+    pub fn shutdown(mut self) -> Result<Database> {
+        let _ = self.tx.send(Msg::Shutdown);
+        let worker = self.worker.take().expect("worker present until shutdown");
+        worker.join().map_err(|_| anyhow!("coordinator worker panicked"))
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema};
+
+    fn setup() -> (Database, Feq) {
+        let mut fact =
+            Relation::new("fact", Schema::new(vec![Attr::cat("c", 4), Attr::double("x")]));
+        for i in 0..20u32 {
+            fact.push_row(&[Value::Cat(i % 4), Value::Double(i as f64)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        (db, Feq::with_features(&["fact"], &["c", "x"]))
+    }
+
+    #[test]
+    fn ingest_then_flush_publishes_update() {
+        let (db, feq) = setup();
+        let cfg = CoordinatorConfig::new(RkConfig::new(2));
+        let coord = Coordinator::start(db, feq, cfg);
+        for i in 0..50u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64 + 100.0)]).unwrap();
+        }
+        coord.flush().unwrap();
+        let update = coord.recv_update(Duration::from_secs(10)).expect("update");
+        assert_eq!(update.version, 1);
+        assert_eq!(update.ingested, 50);
+        assert!(update.result.grid_points > 0);
+        let db = coord.shutdown().unwrap();
+        assert_eq!(db.get("fact").unwrap().n_rows(), 70);
+    }
+
+    #[test]
+    fn delta_threshold_triggers_job() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.recluster_every = 10;
+        let coord = Coordinator::start(db, feq, cfg);
+        for i in 0..10u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64)]).unwrap();
+        }
+        let update = coord.recv_update(Duration::from_secs(10)).expect("auto update");
+        assert_eq!(update.ingested, 10);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bad_inserts_are_counted_not_fatal() {
+        let (db, feq) = setup();
+        let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
+        coord.insert("missing_relation", vec![Value::Cat(0)]).unwrap();
+        coord.insert("fact", vec![Value::Cat(0)]).unwrap(); // arity mismatch
+        coord.flush().unwrap();
+        let _ = coord.recv_update(Duration::from_secs(10));
+        assert_eq!(coord.metrics().counter("coordinator.insert_errors").get(), 2);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_under_drop() {
+        let (db, feq) = setup();
+        let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
+        drop(coord); // must not hang or panic
+    }
+}

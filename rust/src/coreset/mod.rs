@@ -1,0 +1,425 @@
+//! The grid coreset `G = C_1 × … × C_m` (paper §3 Algorithm 1 + §4).
+//!
+//! * [`solve_subspaces`] — Step 2: per-feature optimal clustering of the
+//!   marginals (1-D DP for continuous features, closed-form heavy/light for
+//!   categorical ones; both are `α = 1` solvers).
+//! * [`build_grid`] — Step 3: the sparse non-zero-weight grid via the
+//!   free-variable FAQ ([`crate::faq::grid_weights`]), returned in the
+//!   factored [`SparseGrid`] form Step 4 consumes. FD-chains compress the
+//!   grid automatically (only consistent combinations occur in the data).
+//! * [`grid_dense_embed`] / [`centroids_dense`] — dense one-hot views of
+//!   the coreset and of factored centroids, shared by the XLA hot path,
+//!   the dense-Lloyd ablation, and full-`X` objective evaluation.
+//! * [`eval_full_objective`] — streams the (unmaterialized) join output to
+//!   score centroids on all of `X` with O(1) memory.
+
+use crate::cluster::sparse_lloyd::{CentroidCoord, Components, SparseGrid, Subspace};
+use crate::cluster::{categorical_kmeans, kmeans1d, CatClusters, Kmeans1dResult};
+use crate::data::{Database, Value};
+use crate::faq::{grid_weights, GidAssigner, Marginal};
+use crate::join::{stream_rows, EmbedSpec};
+use crate::join::embed::EmbKind;
+use crate::query::{Feq, JoinTree};
+use crate::util::FxHashMap;
+use anyhow::{Context, Result};
+
+/// Step-2 solver output for one subspace.
+#[derive(Clone, Debug)]
+pub enum SubspaceSolver {
+    Continuous(Kmeans1dResult),
+    Categorical(CatClusters),
+}
+
+/// One solved subspace: solver + feature weight λ + bookkeeping.
+#[derive(Clone, Debug)]
+pub struct SubspaceModel {
+    pub name: String,
+    pub lambda: f64,
+    pub solver: SubspaceSolver,
+    /// Optimal Step-2 cost in this subspace, scaled by λ. Summed over
+    /// subspaces this equals `W₂²(Q, P_in)` — the coreset quantization
+    /// error of Eq. 9.
+    pub cost: f64,
+}
+
+impl SubspaceModel {
+    /// Number of components κ_j produced.
+    pub fn n_gids(&self) -> usize {
+        match &self.solver {
+            SubspaceSolver::Continuous(r) => r.k(),
+            SubspaceSolver::Categorical(c) => c.kappa(),
+        }
+    }
+
+    /// Component geometry for the factored Step-4 solver.
+    pub fn components(&self) -> Components {
+        match &self.solver {
+            SubspaceSolver::Continuous(r) => Components::Continuous { centers: r.centers.clone() },
+            SubspaceSolver::Categorical(c) => Components::Categorical {
+                norm_sq: (0..c.kappa() as u32).map(|g| c.component_norm_sq(g)).collect(),
+            },
+        }
+    }
+
+    /// Subspace description for [`sparse_lloyd`](crate::cluster::sparse_lloyd).
+    pub fn subspace(&self) -> Subspace {
+        Subspace { name: self.name.clone(), lambda: self.lambda, comp: self.components() }
+    }
+
+    /// Centroid id for a raw value.
+    pub fn gid(&self, v: Value) -> u32 {
+        match &self.solver {
+            SubspaceSolver::Continuous(r) => r.assign(v.as_f64()),
+            SubspaceSolver::Categorical(c) => c.gid(v.key_u64()),
+        }
+    }
+}
+
+impl GidAssigner for &SubspaceModel {
+    fn gid(&self, v: Value) -> u32 {
+        SubspaceModel::gid(self, v)
+    }
+    fn n_gids(&self) -> usize {
+        SubspaceModel::n_gids(self)
+    }
+}
+
+/// Step 2: optimally cluster every subspace marginal with κ centroids.
+/// Continuous features use the exact 1-D DP; categorical features the
+/// closed form of Theorem 4.4 — so `α = 1` throughout.
+pub fn solve_subspaces(
+    feq: &Feq,
+    marginals: &FxHashMap<String, Marginal>,
+    kappa: usize,
+) -> Result<Vec<SubspaceModel>> {
+    solve_subspaces_regularized(feq, marginals, kappa, 0.0)
+}
+
+/// Regularized Step 2 (paper §3 "Regularized Rk-means"): with atom
+/// penalty ρ > 0 each subspace gets an *adaptive* κ_j ≤ κ minimizing
+/// `λ_j·cost_j(κ') + ρ·κ'` (see [`crate::cluster::regularized`]), which
+/// shrinks the grid coreset on low-information subspaces. ρ = 0 recovers
+/// the unregularized solver exactly.
+pub fn solve_subspaces_regularized(
+    feq: &Feq,
+    marginals: &FxHashMap<String, Marginal>,
+    kappa: usize,
+    rho: f64,
+) -> Result<Vec<SubspaceModel>> {
+    use crate::cluster::regularized::{categorical_regularized, kmeans1d_regularized};
+    let mut models = Vec::with_capacity(feq.features.len());
+    for f in &feq.features {
+        let marginal = marginals
+            .get(&f.attr)
+            .with_context(|| format!("no marginal for feature {:?}", f.attr))?;
+        let (solver, raw_cost) = match marginal {
+            Marginal::Continuous(pts) => {
+                let r = if rho > 0.0 {
+                    kmeans1d_regularized(pts, kappa, f.weight, rho).0
+                } else {
+                    kmeans1d(pts, kappa)
+                };
+                let c = r.cost;
+                (SubspaceSolver::Continuous(r), c)
+            }
+            Marginal::Discrete(pts) => {
+                let c = if rho > 0.0 {
+                    categorical_regularized(pts, kappa, f.weight, rho).0
+                } else {
+                    categorical_kmeans(pts, kappa)
+                };
+                let cost = c.cost;
+                (SubspaceSolver::Categorical(c), cost)
+            }
+        };
+        models.push(SubspaceModel {
+            name: f.attr.clone(),
+            lambda: f.weight,
+            cost: f.weight * raw_cost,
+            solver,
+        });
+    }
+    Ok(models)
+}
+
+/// Step 3: the sparse weighted grid, in factored form, plus the subspace
+/// geometry for Step 4. Cells are deterministic (sorted) so downstream
+/// seeding is reproducible.
+pub fn build_grid(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    models: &[SubspaceModel],
+) -> Result<(SparseGrid, Vec<Subspace>)> {
+    let mut assigners: FxHashMap<String, Box<dyn GidAssigner + '_>> = FxHashMap::default();
+    for m in models {
+        assigners.insert(m.name.clone(), Box::new(m));
+    }
+    let table = grid_weights(db, feq, tree, &assigners)?;
+    let m = models.len();
+    let mut cells = table.cells;
+    cells.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut gids = Vec::with_capacity(cells.len() * m);
+    let mut weights = Vec::with_capacity(cells.len());
+    for (g, w) in cells {
+        debug_assert_eq!(g.len(), m);
+        gids.extend_from_slice(&g);
+        weights.push(w);
+    }
+    let subspaces: Vec<Subspace> = models.iter().map(|m| m.subspace()).collect();
+    Ok((SparseGrid { m, gids, weights }, subspaces))
+}
+
+/// Dense one-hot coordinates of one component of one subspace, written
+/// into `out[offset..offset+width]` (scaled by √λ via `spec`).
+fn component_into(model: &SubspaceModel, fe: &crate::join::FeatEmb, gid: u32, out: &mut [f64]) {
+    let block = &mut out[fe.offset..fe.offset + fe.width];
+    block.fill(0.0);
+    match (&model.solver, fe.kind) {
+        (SubspaceSolver::Continuous(r), EmbKind::Numeric) => {
+            block[0] = fe.scale * r.centers[gid as usize];
+        }
+        (SubspaceSolver::Categorical(c), EmbKind::OneHot) => {
+            if (gid as usize) < c.heavy.len() {
+                block[c.heavy[gid as usize] as usize] = fe.scale;
+            } else if c.has_light() {
+                for &(e, w) in &c.light {
+                    block[e as usize] = fe.scale * w / c.light_mass;
+                }
+            }
+        }
+        // Int features embed numerically but their marginal is discrete,
+        // so they get the categorical solver — expand via key as numeric.
+        (SubspaceSolver::Categorical(_), EmbKind::Numeric) => {
+            unreachable!(
+                "Int feature {:?} needs a numeric-capable solver; declare it Cat or Double",
+                model.name
+            )
+        }
+        (SubspaceSolver::Continuous(_), EmbKind::OneHot) => {
+            unreachable!("continuous solver on one-hot embedding")
+        }
+    }
+}
+
+/// Dense embedding of every grid cell (`|G| × spec.dims`, row-major) — the
+/// input to the dense-Lloyd ablation and the XLA hot path.
+pub fn grid_dense_embed(grid: &SparseGrid, models: &[SubspaceModel], spec: &EmbedSpec) -> Vec<f64> {
+    let n = grid.n();
+    let d = spec.dims;
+    let mut out = vec![0.0; n * d];
+    for i in 0..n {
+        let row = &grid.gids[i * grid.m..(i + 1) * grid.m];
+        let dst = &mut out[i * d..(i + 1) * d];
+        for (j, model) in models.iter().enumerate() {
+            component_into(model, &spec.feats[j], row[j], dst);
+        }
+    }
+    out
+}
+
+/// Expand factored centroids to dense one-hot coordinates (`k × spec.dims`).
+pub fn centroids_dense(
+    centroids: &[Vec<CentroidCoord>],
+    models: &[SubspaceModel],
+    spec: &EmbedSpec,
+) -> Vec<f64> {
+    let d = spec.dims;
+    let mut out = vec![0.0; centroids.len() * d];
+    let mut comp_buf = vec![0.0; d];
+    for (c, coords) in centroids.iter().enumerate() {
+        let dst = &mut out[c * d..(c + 1) * d];
+        for (j, (coord, model)) in coords.iter().zip(models).enumerate() {
+            let fe = &spec.feats[j];
+            match coord {
+                CentroidCoord::Continuous(mu) => dst[fe.offset] = fe.scale * mu,
+                CentroidCoord::Categorical(beta) => {
+                    // μ_j = Σ_a β_a · u_a (expand each component, weighted).
+                    for (a, &b) in beta.iter().enumerate() {
+                        if b == 0.0 {
+                            continue;
+                        }
+                        component_into(model, fe, a as u32, &mut comp_buf);
+                        for t in fe.offset..fe.offset + fe.width {
+                            dst[t] += b * comp_buf[t];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate the weighted k-means objective of dense centroids over the
+/// *entire* (unmaterialized) join output by streaming rows. Memory is O(D).
+pub fn eval_full_objective(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    spec: &EmbedSpec,
+    centroids: &[f64],
+) -> Result<f64> {
+    let d = spec.dims;
+    let k = centroids.len() / d;
+    let mut buf = vec![0.0; d];
+    let mut obj = 0.0;
+    stream_rows(db, feq, tree, |vals, w| {
+        spec.embed_into(vals, &mut buf);
+        let mut best = f64::INFINITY;
+        for c in 0..k {
+            let cc = &centroids[c * d..(c + 1) * d];
+            let mut s = 0.0;
+            for (a, b) in buf.iter().zip(cc) {
+                let t = a - b;
+                s += t * t;
+            }
+            if s < best {
+                best = s;
+            }
+        }
+        obj += w * best;
+    })?;
+    Ok(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{sparse_lloyd, LloydConfig};
+    use crate::data::{Attr, Relation, Schema};
+    use crate::faq::{full_join_counts, marginals};
+    use crate::query::Hypergraph;
+    use crate::util::testkit::assert_close;
+
+    /// fact(item, store, units) ⋈ items(item, price): mixed-type features.
+    fn setup() -> (Database, Feq, JoinTree) {
+        let mut fact = Relation::new(
+            "fact",
+            Schema::new(vec![Attr::cat("item", 4), Attr::cat("store", 3), Attr::double("units")]),
+        );
+        for (i, s, u) in [
+            (0u32, 0u32, 1.0),
+            (0, 1, 1.5),
+            (1, 0, 10.0),
+            (1, 2, 10.5),
+            (2, 1, 20.0),
+            (3, 2, 20.5),
+        ] {
+            fact.push_row(&[Value::Cat(i), Value::Cat(s), Value::Double(u)]);
+        }
+        let mut items =
+            Relation::new("items", Schema::new(vec![Attr::cat("item", 4), Attr::double("price")]));
+        for (i, p) in [(0u32, 5.0), (1, 6.0), (2, 7.0), (3, 8.0)] {
+            items.push_row(&[Value::Cat(i), Value::Double(p)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(items);
+        let feq = Feq::with_features(&["fact", "items"], &["item", "store", "units", "price"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        (db, feq, tree)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn pipeline(
+        kappa: usize,
+    ) -> (Database, Feq, JoinTree, Vec<SubspaceModel>, SparseGrid, Vec<Subspace>) {
+        let (db, feq, tree) = setup();
+        let jc = full_join_counts(&db, &tree).unwrap();
+        let m = marginals(&db, &feq, &tree, &jc).unwrap();
+        let models = solve_subspaces(&feq, &m, kappa).unwrap();
+        let (grid, subs) = build_grid(&db, &feq, &tree, &models).unwrap();
+        (db, feq, tree, models, grid, subs)
+    }
+
+    #[test]
+    fn grid_mass_equals_output_size() {
+        let (_, _, _, models, grid, _) = pipeline(2);
+        assert_eq!(models.len(), 4);
+        assert_close(grid.weights.iter().sum::<f64>(), 6.0, 1e-9);
+        // Every gid is within its subspace's component count.
+        for i in 0..grid.n() {
+            for (j, model) in models.iter().enumerate() {
+                assert!((grid.gids[i * grid.m + j] as usize) < model.n_gids());
+            }
+        }
+    }
+
+    #[test]
+    fn step2_cost_is_quantization_error() {
+        // κ = |support| everywhere makes the coreset exact: step-2 cost 0.
+        let (_, _, _, models, grid, _) = pipeline(8);
+        let total: f64 = models.iter().map(|m| m.cost).sum();
+        assert_close(total, 0.0, 1e-12);
+        // Exact coreset: |G| = #distinct feature combinations = 6 rows.
+        assert_eq!(grid.n(), 6);
+    }
+
+    #[test]
+    fn grid_weights_match_bruteforce_assignment() {
+        // For κ=2, recompute w_grid by materializing and assigning.
+        let (db, feq, tree, models, grid, _) = pipeline(2);
+        let x = crate::join::materialize(&db, &feq, &tree).unwrap();
+        let mut expect: FxHashMap<Vec<u32>, f64> = FxHashMap::default();
+        for (row, w) in x.rows.iter().zip(&x.weights) {
+            let key: Vec<u32> = row.iter().zip(&models).map(|(v, m)| m.gid(*v)).collect();
+            *expect.entry(key).or_insert(0.0) += w;
+        }
+        assert_eq!(grid.n(), expect.len());
+        for i in 0..grid.n() {
+            let key = grid.gids[i * grid.m..(i + 1) * grid.m].to_vec();
+            assert_close(expect[&key], grid.weights[i], 1e-9);
+        }
+    }
+
+    #[test]
+    fn dense_embed_objective_matches_factored() {
+        let (db, feq, _, models, grid, subs) = pipeline(2);
+        let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+        let cfg = LloydConfig { k: 2, max_iters: 10, tol: 0.0, seed: 3 };
+        let res = sparse_lloyd(&grid, &subs, &cfg);
+
+        // Dense re-evaluation of the factored result must agree.
+        let dense_pts = grid_dense_embed(&grid, &models, &spec);
+        let dense_cents = centroids_dense(&res.centroids, &models, &spec);
+        let obj =
+            crate::cluster::lloyd::objective(&dense_pts, &grid.weights, spec.dims, &dense_cents);
+        assert_close(obj, res.objective, 1e-7);
+    }
+
+    #[test]
+    fn full_objective_via_streaming_matches_materialized() {
+        let (db, feq, tree, models, grid, subs) = pipeline(2);
+        let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+        let res = sparse_lloyd(&grid, &subs, &LloydConfig::new(2));
+        let cents = centroids_dense(&res.centroids, &models, &spec);
+
+        let streamed = eval_full_objective(&db, &feq, &tree, &spec, &cents).unwrap();
+        let x = crate::join::materialize(&db, &feq, &tree).unwrap();
+        let dense_x = spec.embed_matrix(&x);
+        let direct = crate::cluster::lloyd::objective(&dense_x, &x.weights, spec.dims, &cents);
+        assert_close(streamed, direct, 1e-9);
+    }
+
+    #[test]
+    fn lambda_flows_through_subspace() {
+        let (db, _, tree) = setup();
+        let feq = Feq::new(
+            &["fact", "items"],
+            vec![
+                crate::query::FeatureSpec::weighted("units", 9.0),
+                crate::query::FeatureSpec::new("item"),
+            ],
+        );
+        let jc = full_join_counts(&db, &tree).unwrap();
+        let m = marginals(&db, &feq, &tree, &jc).unwrap();
+        let models = solve_subspaces(&feq, &m, 2).unwrap();
+        assert_eq!(models[0].lambda, 9.0);
+        // Cost is scaled by λ.
+        let unweighted =
+            solve_subspaces(&Feq::with_features(&["fact", "items"], &["units", "item"]), &m, 2)
+                .unwrap();
+        assert_close(models[0].cost, 9.0 * unweighted[0].cost, 1e-9);
+    }
+}

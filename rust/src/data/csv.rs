@@ -1,0 +1,202 @@
+//! CSV import/export for relations.
+//!
+//! Format: header row `name:type[:domain]` per column (`type` one of
+//! `int|double|cat`), then one row per tuple. Categorical values are raw ids.
+//! A trailing `__weight:double` column round-trips tuple multiplicities.
+//! This is the on-disk interchange for the CLI (`rkmeans gen` / `cluster`).
+
+use super::relation::Relation;
+use super::schema::{Attr, AttrType, Schema};
+use super::value::Value;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write a relation to a CSV file.
+pub fn write_relation(rel: &Relation, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let mut header: Vec<String> = rel
+        .schema
+        .attrs()
+        .iter()
+        .map(|a| match a.ty {
+            AttrType::Int => format!("{}:int", a.name),
+            AttrType::Double => format!("{}:double", a.name),
+            AttrType::Cat => format!("{}:cat:{}", a.name, a.domain),
+        })
+        .collect();
+    if rel.has_weights() {
+        header.push("__weight:double".to_string());
+    }
+    writeln!(w, "{}", header.join(","))?;
+    for row in 0..rel.n_rows() {
+        let mut fields: Vec<String> = (0..rel.n_cols())
+            .map(|c| match rel.value(row, c) {
+                Value::Int(v) => v.to_string(),
+                Value::Double(v) => format!("{v}"),
+                Value::Cat(v) => v.to_string(),
+            })
+            .collect();
+        if rel.has_weights() {
+            fields.push(format!("{}", rel.weight(row)));
+        }
+        writeln!(w, "{}", fields.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a relation from a CSV file written by [`write_relation`].
+pub fn read_relation(name: &str, path: &Path) -> Result<Relation> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .context("empty csv")?
+        .context("read header")?;
+    let mut attrs = Vec::new();
+    let mut has_weight = false;
+    for spec in header.split(',') {
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            ["__weight", "double"] => has_weight = true,
+            [name, "int"] => attrs.push(Attr::int(name)),
+            [name, "double"] => attrs.push(Attr::double(name)),
+            [name, "cat", dom] => {
+                attrs.push(Attr::cat(name, dom.parse().context("bad domain")?))
+            }
+            [name, "cat"] => attrs.push(Attr::cat(name, 0)),
+            _ => bail!("bad header field {spec:?}"),
+        }
+    }
+    let schema = Schema::new(attrs);
+    let n_cols = schema.len();
+    let mut rel = Relation::new(name, schema);
+    for (lineno, line) in lines.enumerate() {
+        let line = line.context("read row")?;
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        let expected = n_cols + usize::from(has_weight);
+        if fields.len() != expected {
+            bail!("row {}: expected {} fields, got {}", lineno + 2, expected, fields.len());
+        }
+        let mut vals = Vec::with_capacity(n_cols);
+        for (c, field) in fields.iter().take(n_cols).enumerate() {
+            let v = match rel.schema.attr(c).ty {
+                AttrType::Int => Value::Int(field.parse().with_context(|| format!("row {}: bad int {field:?}", lineno + 2))?),
+                AttrType::Double => Value::Double(field.parse().with_context(|| format!("row {}: bad double {field:?}", lineno + 2))?),
+                AttrType::Cat => Value::Cat(field.parse().with_context(|| format!("row {}: bad cat id {field:?}", lineno + 2))?),
+            };
+            vals.push(v);
+        }
+        if has_weight {
+            let w: f64 = fields[n_cols].parse().context("bad weight")?;
+            rel.push_row_weighted(&vals, w);
+        } else {
+            rel.push_row(&vals);
+        }
+    }
+    Ok(rel)
+}
+
+/// Write a whole database as one CSV file per relation under `dir`.
+pub fn write_database(db: &super::Database, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for rel in db.relations() {
+        write_relation(rel, &dir.join(format!("{}.csv", rel.name)))?;
+    }
+    // FDs as a sidecar file.
+    let mut w = BufWriter::new(std::fs::File::create(dir.join("_fds.txt"))?);
+    for fd in &db.fds {
+        writeln!(w, "{} -> {}", fd.determinant, fd.dependent)?;
+    }
+    Ok(())
+}
+
+/// Read a database written by [`write_database`].
+pub fn read_database(dir: &Path) -> Result<super::Database> {
+    let mut db = super::Database::new();
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
+        let p = entry?.path();
+        if p.extension().map(|e| e == "csv").unwrap_or(false) {
+            names.push(p.file_stem().expect("csv has a stem").to_string_lossy().to_string());
+        }
+    }
+    names.sort();
+    for name in names {
+        db.add(read_relation(&name, &dir.join(format!("{name}.csv")))?);
+    }
+    let fd_path = dir.join("_fds.txt");
+    if fd_path.exists() {
+        for line in std::fs::read_to_string(fd_path)?.lines() {
+            if let Some((a, b)) = line.split_once("->") {
+                db.add_fd(a.trim(), b.trim());
+            }
+        }
+    }
+    Ok(db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Database;
+
+    fn sample() -> Relation {
+        let mut r = Relation::new(
+            "t",
+            Schema::new(vec![Attr::int("id"), Attr::double("x"), Attr::cat("c", 5)]),
+        );
+        r.push_row(&[Value::Int(1), Value::Double(0.5), Value::Cat(2)]);
+        r.push_row_weighted(&[Value::Int(-2), Value::Double(1.25), Value::Cat(4)], 3.0);
+        r
+    }
+
+    #[test]
+    fn roundtrip_relation() {
+        let dir = std::env::temp_dir().join(format!("rk_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let orig = sample();
+        write_relation(&orig, &path).unwrap();
+        let back = read_relation("t", &path).unwrap();
+        assert_eq!(back.n_rows(), 2);
+        assert_eq!(back.value(0, 0), Value::Int(1));
+        assert_eq!(back.value(1, 0), Value::Int(-2));
+        assert_eq!(back.value(1, 2), Value::Cat(4));
+        assert_eq!(back.weight(1), 3.0);
+        assert_eq!(back.schema.attr(2).domain, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_database_with_fds() {
+        let dir = std::env::temp_dir().join(format!("rk_csvdb_{}", std::process::id()));
+        let mut db = Database::new();
+        db.add(sample());
+        db.add_fd("id", "c");
+        write_database(&db, &dir).unwrap();
+        let back = read_database(&dir).unwrap();
+        assert_eq!(back.relations().len(), 1);
+        assert_eq!(back.fds.len(), 1);
+        assert_eq!(back.fds[0].determinant, "id");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_rows_error() {
+        let dir = std::env::temp_dir().join(format!("rk_csvbad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "a:int,b:double\n1\n").unwrap();
+        assert!(read_relation("bad", &path).is_err());
+        std::fs::write(&path, "a:int,b:double\nx,1.0\n").unwrap();
+        assert!(read_relation("bad", &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,223 @@
+//! A database: a set of named relations plus declared functional
+//! dependencies (FDs). FDs matter to Rk-means because FD-chains bound the
+//! number of non-zero-weight grid-coreset cells by `O(dk)` instead of
+//! `O(k^d)` (paper §4.2, Lemma 4.5 / Theorem 4.6).
+
+use super::relation::Relation;
+use std::collections::HashMap;
+
+/// A declared functional dependency `determinant -> dependent` between two
+/// attributes of the same relation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fd {
+    pub determinant: String,
+    pub dependent: String,
+}
+
+/// A collection of relations with name lookup and FD metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Database {
+    relations: Vec<Relation>,
+    by_name: HashMap<String, usize>,
+    pub fds: Vec<Fd>,
+}
+
+impl Database {
+    /// Empty database.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a relation; names must be unique.
+    pub fn add(&mut self, rel: Relation) {
+        assert!(
+            !self.by_name.contains_key(&rel.name),
+            "duplicate relation name {}",
+            rel.name
+        );
+        self.by_name.insert(rel.name.clone(), self.relations.len());
+        self.relations.push(rel);
+    }
+
+    /// Declare a functional dependency.
+    pub fn add_fd(&mut self, determinant: &str, dependent: &str) {
+        self.fds.push(Fd {
+            determinant: determinant.to_string(),
+            dependent: dependent.to_string(),
+        });
+    }
+
+    /// All relations.
+    pub fn relations(&self) -> &[Relation] {
+        &self.relations
+    }
+
+    /// Mutable access to all relations (used by the streaming coordinator).
+    pub fn relations_mut(&mut self) -> &mut [Relation] {
+        &mut self.relations
+    }
+
+    /// Relation by name.
+    pub fn get(&self, name: &str) -> Option<&Relation> {
+        self.by_name.get(name).map(|&i| &self.relations[i])
+    }
+
+    /// Mutable relation by name.
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Relation> {
+        let idx = *self.by_name.get(name)?;
+        Some(&mut self.relations[idx])
+    }
+
+    /// Index of a relation by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Total number of tuples across relations (the paper's `|D|` rows).
+    pub fn total_rows(&self) -> u64 {
+        self.relations.iter().map(|r| r.n_rows() as u64).sum()
+    }
+
+    /// Total estimated bytes across relations (the paper's "Size of D").
+    pub fn total_bytes(&self) -> u64 {
+        self.relations.iter().map(|r| r.byte_size()).sum()
+    }
+
+    /// Verify a declared FD against the data: every determinant value maps
+    /// to exactly one dependent value. Returns false if violated or if the
+    /// attributes do not co-occur in any relation.
+    pub fn verify_fd(&self, fd: &Fd) -> bool {
+        for rel in &self.relations {
+            let (Some(di), Some(pi)) = (
+                rel.schema.index_of(&fd.determinant),
+                rel.schema.index_of(&fd.dependent),
+            ) else {
+                continue;
+            };
+            let mut seen: HashMap<u64, u64> = HashMap::new();
+            for row in 0..rel.n_rows() {
+                let d = rel.col(di).key_u64(row);
+                let p = rel.col(pi).key_u64(row);
+                match seen.entry(d) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        if *e.get() != p {
+                            return false;
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(p);
+                    }
+                }
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Maximal FD-chains over the given attribute set: sequences
+    /// `a1 -> a2 -> … -> ap` following declared FDs. Attributes not in any
+    /// chain form singleton chains (Theorem 4.6's general case).
+    pub fn fd_chains(&self, attrs: &[String]) -> Vec<Vec<String>> {
+        let in_set = |a: &str| attrs.iter().any(|x| x == a);
+        // next[a] = b if a -> b declared and both in `attrs`.
+        let mut next: HashMap<&str, &str> = HashMap::new();
+        let mut has_pred: HashMap<&str, bool> = HashMap::new();
+        for fd in &self.fds {
+            if in_set(&fd.determinant) && in_set(&fd.dependent) {
+                next.insert(&fd.determinant, &fd.dependent);
+                has_pred.insert(&fd.dependent, true);
+            }
+        }
+        let mut chains = Vec::new();
+        let mut used: Vec<&str> = Vec::new();
+        for a in attrs {
+            if *has_pred.get(a.as_str()).unwrap_or(&false) {
+                continue; // not a chain head
+            }
+            let mut chain = vec![a.clone()];
+            used.push(a);
+            let mut cur = a.as_str();
+            while let Some(&nxt) = next.get(cur) {
+                if used.contains(&nxt) {
+                    break; // guard against cyclic declarations
+                }
+                chain.push(nxt.to_string());
+                used.push(nxt);
+                cur = nxt;
+            }
+            chains.push(chain);
+        }
+        // Anything unreachable (e.g. part of a declared cycle) becomes a singleton.
+        for a in attrs {
+            if !used.contains(&a.as_str()) {
+                chains.push(vec![a.clone()]);
+            }
+        }
+        chains
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::{Attr, Schema};
+    use crate::data::value::Value;
+
+    fn location_db() -> Database {
+        let mut rel = Relation::new(
+            "location",
+            Schema::new(vec![Attr::cat("store", 4), Attr::cat("zip", 3), Attr::cat("city", 2)]),
+        );
+        // store -> zip -> city holds.
+        rel.push_row(&[Value::Cat(0), Value::Cat(0), Value::Cat(0)]);
+        rel.push_row(&[Value::Cat(1), Value::Cat(0), Value::Cat(0)]);
+        rel.push_row(&[Value::Cat(2), Value::Cat(1), Value::Cat(1)]);
+        rel.push_row(&[Value::Cat(3), Value::Cat(2), Value::Cat(1)]);
+        let mut db = Database::new();
+        db.add(rel);
+        db.add_fd("store", "zip");
+        db.add_fd("zip", "city");
+        db
+    }
+
+    #[test]
+    fn lookup_and_sizes() {
+        let db = location_db();
+        assert!(db.get("location").is_some());
+        assert!(db.get("missing").is_none());
+        assert_eq!(db.total_rows(), 4);
+        assert!(db.total_bytes() > 0);
+    }
+
+    #[test]
+    fn fd_verification() {
+        let db = location_db();
+        assert!(db.verify_fd(&Fd { determinant: "store".into(), dependent: "zip".into() }));
+        assert!(db.verify_fd(&Fd { determinant: "zip".into(), dependent: "city".into() }));
+        // zip does NOT determine store.
+        assert!(!db.verify_fd(&Fd { determinant: "zip".into(), dependent: "store".into() }));
+        // Unknown attribute pair.
+        assert!(!db.verify_fd(&Fd { determinant: "a".into(), dependent: "b".into() }));
+    }
+
+    #[test]
+    fn fd_chains_follow_declarations() {
+        let db = location_db();
+        let attrs: Vec<String> =
+            ["store", "zip", "city", "other"].iter().map(|s| s.to_string()).collect();
+        let chains = db.fd_chains(&attrs);
+        assert!(chains.contains(&vec!["store".to_string(), "zip".to_string(), "city".to_string()]));
+        assert!(chains.contains(&vec!["other".to_string()]));
+        // Every attribute appears exactly once across all chains.
+        let total: usize = chains.iter().map(|c| c.len()).sum();
+        assert_eq!(total, attrs.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_relation_rejected() {
+        let mut db = location_db();
+        let rel = Relation::new("location", Schema::new(vec![Attr::int("x")]));
+        db.add(rel);
+    }
+}

@@ -1,0 +1,22 @@
+//! Columnar relational storage: values, schemas, relations, databases and a
+//! CSV import/export path.
+//!
+//! Attributes come in three types mirroring the paper's feature model:
+//! * [`AttrType::Int`] — integer-valued join keys / discrete features,
+//! * [`AttrType::Double`] — continuous features (never join keys),
+//! * [`AttrType::Cat`] — dictionary-encoded categorical features, which the
+//!   paper one-hot encodes into a *categorical subspace* (§4.1).
+//!
+//! Join keys are encoded as `u64` ([`Value::key_u64`]) so the FAQ engine can
+//! hash tuples without touching floats.
+
+pub mod csv;
+pub mod database;
+pub mod relation;
+pub mod schema;
+pub mod value;
+
+pub use database::{Database, Fd};
+pub use relation::{Column, Relation};
+pub use schema::{Attr, AttrType, Schema};
+pub use value::{CatId, Value};

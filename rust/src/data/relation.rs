@@ -1,0 +1,242 @@
+//! Columnar relations with optional tuple multiplicities.
+
+use super::schema::{AttrType, Schema};
+use super::value::{CatId, Value};
+
+/// A typed column of values.
+#[derive(Clone, Debug)]
+pub enum Column {
+    Int(Vec<i64>),
+    Double(Vec<f64>),
+    Cat(Vec<CatId>),
+}
+
+impl Column {
+    /// Empty column of the given type.
+    pub fn empty(ty: AttrType) -> Self {
+        match ty {
+            AttrType::Int => Column::Int(Vec::new()),
+            AttrType::Double => Column::Double(Vec::new()),
+            AttrType::Cat => Column::Cat(Vec::new()),
+        }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Int(v) => v.len(),
+            Column::Double(v) => v.len(),
+            Column::Cat(v) => v.len(),
+        }
+    }
+
+    /// True if the column has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Value at a row.
+    #[inline]
+    pub fn get(&self, row: usize) -> Value {
+        match self {
+            Column::Int(v) => Value::Int(v[row]),
+            Column::Double(v) => Value::Double(v[row]),
+            Column::Cat(v) => Value::Cat(v[row]),
+        }
+    }
+
+    /// Join-key encoding at a row (panics for Double columns).
+    #[inline]
+    pub fn key_u64(&self, row: usize) -> u64 {
+        match self {
+            Column::Int(v) => v[row] as u64,
+            Column::Cat(v) => v[row] as u64,
+            Column::Double(_) => panic!("continuous attribute used as a join key"),
+        }
+    }
+
+    fn push(&mut self, v: Value) {
+        match (self, v) {
+            (Column::Int(col), Value::Int(x)) => col.push(x),
+            (Column::Double(col), Value::Double(x)) => col.push(x),
+            (Column::Cat(col), Value::Cat(x)) => col.push(x),
+            (col, v) => panic!("type mismatch pushing {v:?} into {col:?}"),
+        }
+    }
+}
+
+/// A named relation: a schema plus columns of equal length, and an optional
+/// per-tuple weight vector (tuple multiplicity). Multiplicities arise from
+/// quotient/grouped relations in the coreset construction; plain base
+/// relations have weight 1 per tuple.
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub name: String,
+    pub schema: Schema,
+    cols: Vec<Column>,
+    weights: Option<Vec<f64>>,
+    len: usize,
+}
+
+impl Relation {
+    /// Create an empty relation.
+    pub fn new(name: &str, schema: Schema) -> Self {
+        let cols = schema.attrs().iter().map(|a| Column::empty(a.ty)).collect();
+        Relation { name: name.to_string(), schema, cols, weights: None, len: 0 }
+    }
+
+    /// Number of tuples.
+    pub fn n_rows(&self) -> usize {
+        self.len
+    }
+
+    /// True if the relation is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of attributes.
+    pub fn n_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Column by index.
+    pub fn col(&self, idx: usize) -> &Column {
+        &self.cols[idx]
+    }
+
+    /// Column by attribute name.
+    pub fn col_by_name(&self, name: &str) -> Option<&Column> {
+        self.schema.index_of(name).map(|i| &self.cols[i])
+    }
+
+    /// Value at (row, col).
+    #[inline]
+    pub fn value(&self, row: usize, col: usize) -> Value {
+        self.cols[col].get(row)
+    }
+
+    /// Tuple weight (1.0 unless the relation is grouped).
+    #[inline]
+    pub fn weight(&self, row: usize) -> f64 {
+        match &self.weights {
+            Some(w) => w[row],
+            None => 1.0,
+        }
+    }
+
+    /// True if the relation carries explicit tuple weights.
+    pub fn has_weights(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Append a tuple with weight 1.
+    pub fn push_row(&mut self, vals: &[Value]) {
+        assert_eq!(vals.len(), self.cols.len(), "arity mismatch");
+        for (c, v) in self.cols.iter_mut().zip(vals.iter()) {
+            c.push(*v);
+        }
+        if let Some(w) = &mut self.weights {
+            w.push(1.0);
+        }
+        self.len += 1;
+    }
+
+    /// Append a tuple with an explicit weight.
+    pub fn push_row_weighted(&mut self, vals: &[Value], weight: f64) {
+        if self.weights.is_none() {
+            self.weights = Some(vec![1.0; self.len]);
+        }
+        self.push_row(vals);
+        if weight != 1.0 {
+            let w = self.weights.as_mut().expect("weights just initialized");
+            *w.last_mut().expect("row just pushed") = weight;
+        }
+    }
+
+    /// Collect one row as values (allocates; use columns directly on hot paths).
+    pub fn row(&self, row: usize) -> Vec<Value> {
+        (0..self.cols.len()).map(|c| self.value(row, c)).collect()
+    }
+
+    /// Estimated in-memory size in bytes (for Table-1 style reporting).
+    pub fn byte_size(&self) -> u64 {
+        let per_row: u64 = self
+            .schema
+            .attrs()
+            .iter()
+            .map(|a| match a.ty {
+                AttrType::Int => 8,
+                AttrType::Double => 8,
+                AttrType::Cat => 4,
+            })
+            .sum();
+        per_row * self.len as u64 + if self.weights.is_some() { 8 * self.len as u64 } else { 0 }
+    }
+
+    /// Distinct values (by join key) in a column. Panics for Double columns.
+    pub fn distinct_keys(&self, col: usize) -> Vec<u64> {
+        let mut keys: Vec<u64> = (0..self.len).map(|r| self.cols[col].key_u64(r)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Attr;
+
+    fn sample() -> Relation {
+        let mut r = Relation::new(
+            "t",
+            Schema::new(vec![Attr::int("id"), Attr::double("x"), Attr::cat("c", 4)]),
+        );
+        r.push_row(&[Value::Int(1), Value::Double(0.5), Value::Cat(2)]);
+        r.push_row(&[Value::Int(2), Value::Double(1.5), Value::Cat(2)]);
+        r
+    }
+
+    #[test]
+    fn push_and_read_back() {
+        let r = sample();
+        assert_eq!(r.n_rows(), 2);
+        assert_eq!(r.value(0, 0), Value::Int(1));
+        assert_eq!(r.value(1, 1), Value::Double(1.5));
+        assert_eq!(r.value(1, 2), Value::Cat(2));
+        assert_eq!(r.weight(0), 1.0);
+        assert!(!r.has_weights());
+    }
+
+    #[test]
+    fn weighted_rows_backfill_ones() {
+        let mut r = sample();
+        r.push_row_weighted(&[Value::Int(3), Value::Double(2.0), Value::Cat(0)], 4.5);
+        assert!(r.has_weights());
+        assert_eq!(r.weight(0), 1.0);
+        assert_eq!(r.weight(2), 4.5);
+    }
+
+    #[test]
+    fn distinct_keys_dedup() {
+        let r = sample();
+        assert_eq!(r.distinct_keys(2), vec![2]);
+        assert_eq!(r.distinct_keys(0), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut r = sample();
+        r.push_row(&[Value::Int(1)]);
+    }
+
+    #[test]
+    fn byte_size_counts_weights() {
+        let mut r = sample();
+        let base = r.byte_size();
+        r.push_row_weighted(&[Value::Int(3), Value::Double(2.0), Value::Cat(0)], 2.0);
+        assert!(r.byte_size() > base);
+    }
+}

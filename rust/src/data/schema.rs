@@ -1,0 +1,114 @@
+//! Attribute types and relation schemas.
+
+/// The type of an attribute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttrType {
+    /// Integer (join key or discrete feature).
+    Int,
+    /// Continuous feature.
+    Double,
+    /// Dictionary-encoded categorical feature; one-hot encoded in the data
+    /// matrix (the paper's "categorical subspace", §4.1).
+    Cat,
+}
+
+/// A named, typed attribute. `domain` is the declared domain size for
+/// categorical attributes (one-hot width); 0 means "infer from data".
+#[derive(Clone, Debug)]
+pub struct Attr {
+    pub name: String,
+    pub ty: AttrType,
+    pub domain: u32,
+}
+
+impl Attr {
+    /// Integer attribute.
+    pub fn int(name: &str) -> Self {
+        Attr { name: name.to_string(), ty: AttrType::Int, domain: 0 }
+    }
+
+    /// Continuous attribute.
+    pub fn double(name: &str) -> Self {
+        Attr { name: name.to_string(), ty: AttrType::Double, domain: 0 }
+    }
+
+    /// Categorical attribute with a declared domain size.
+    pub fn cat(name: &str, domain: u32) -> Self {
+        Attr { name: name.to_string(), ty: AttrType::Cat, domain }
+    }
+}
+
+/// An ordered list of attributes with O(1) lookup by name.
+#[derive(Clone, Debug, Default)]
+pub struct Schema {
+    attrs: Vec<Attr>,
+}
+
+impl Schema {
+    /// Build from a list of attributes. Names must be unique.
+    pub fn new(attrs: Vec<Attr>) -> Self {
+        for i in 0..attrs.len() {
+            for j in (i + 1)..attrs.len() {
+                assert_ne!(attrs[i].name, attrs[j].name, "duplicate attribute name");
+            }
+        }
+        Schema { attrs }
+    }
+
+    /// Number of attributes.
+    pub fn len(&self) -> usize {
+        self.attrs.len()
+    }
+
+    /// True if the schema has no attributes.
+    pub fn is_empty(&self) -> bool {
+        self.attrs.is_empty()
+    }
+
+    /// All attributes, in column order.
+    pub fn attrs(&self) -> &[Attr] {
+        &self.attrs
+    }
+
+    /// Attribute at a column index.
+    pub fn attr(&self, idx: usize) -> &Attr {
+        &self.attrs[idx]
+    }
+
+    /// Column index of a named attribute.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.attrs.iter().position(|a| a.name == name)
+    }
+
+    /// True if the schema contains the attribute.
+    pub fn contains(&self, name: &str) -> bool {
+        self.index_of(name).is_some()
+    }
+
+    /// Names of all attributes.
+    pub fn names(&self) -> Vec<&str> {
+        self.attrs.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        let s = Schema::new(vec![Attr::int("a"), Attr::double("b"), Attr::cat("c", 10)]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.index_of("b"), Some(1));
+        assert_eq!(s.index_of("z"), None);
+        assert!(s.contains("c"));
+        assert_eq!(s.attr(2).domain, 10);
+        assert_eq!(s.names(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_names_rejected() {
+        Schema::new(vec![Attr::int("a"), Attr::double("a")]);
+    }
+}

@@ -1,0 +1,86 @@
+//! Scalar values and their join-key encoding.
+
+/// Dictionary-encoded categorical id.
+pub type CatId = u32;
+
+/// A single attribute value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    /// Integer-valued attribute (usable as a join key).
+    Int(i64),
+    /// Continuous attribute. Never used as a join key.
+    Double(f64),
+    /// Dictionary-encoded categorical attribute (usable as a join key).
+    Cat(CatId),
+}
+
+impl Value {
+    /// Encode as a `u64` join/hash key. Panics on `Double`: continuous
+    /// attributes are payload features, never join keys — attempting to
+    /// join on one is a schema bug we want to fail loudly on.
+    #[inline]
+    pub fn key_u64(&self) -> u64 {
+        match self {
+            Value::Int(v) => *v as u64,
+            Value::Cat(c) => *c as u64,
+            Value::Double(_) => panic!("continuous attribute used as a join key"),
+        }
+    }
+
+    /// Numeric view (categorical ids cast to their code; used for display
+    /// and for the dense one-hot embedding path).
+    #[inline]
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Int(v) => *v as f64,
+            Value::Double(v) => *v,
+            Value::Cat(c) => *c as f64,
+        }
+    }
+
+    /// The categorical id, if categorical.
+    #[inline]
+    pub fn as_cat(&self) -> Option<CatId> {
+        match self {
+            Value::Cat(c) => Some(*c),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Double(v) => write!(f, "{v}"),
+            Value::Cat(c) => write!(f, "#{c}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_encoding_roundtrips_ints() {
+        assert_eq!(Value::Int(-1).key_u64(), u64::MAX);
+        assert_eq!(Value::Int(5).key_u64(), 5);
+        assert_eq!(Value::Cat(7).key_u64(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "join key")]
+    fn double_key_panics() {
+        let _ = Value::Double(1.5).key_u64();
+    }
+
+    #[test]
+    fn as_f64_views() {
+        assert_eq!(Value::Int(3).as_f64(), 3.0);
+        assert_eq!(Value::Double(2.5).as_f64(), 2.5);
+        assert_eq!(Value::Cat(4).as_f64(), 4.0);
+        assert_eq!(Value::Cat(4).as_cat(), Some(4));
+        assert_eq!(Value::Int(4).as_cat(), None);
+    }
+}

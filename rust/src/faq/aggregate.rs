@@ -1,0 +1,172 @@
+//! Generic scalar FAQ aggregates over the join (paper §2.1, Eq. 1).
+//!
+//! The paper's motivating FEQ computes `max(transactions.count)` — a
+//! max-product FAQ. This module evaluates `⊕_{x ∈ X} ⊗_{F} ψ_F(x_F)` for
+//! any [`Semiring`] with one upward InsideOut pass over the join tree:
+//! sum-product recovers (weighted) counting, max-product the paper's MAX
+//! aggregate, min-plus tropical costs.
+
+use crate::data::{Database, Relation};
+use crate::query::JoinTree;
+use crate::util::FxHashMap;
+use anyhow::{Context, Result};
+
+use super::semiring::Semiring;
+
+/// Per-tuple factor value ψ_F(t): relation name + row → value. Return the
+/// semiring's `one()` for relations that are pure existence predicates.
+pub type FactorFn<'a> = &'a dyn Fn(&Relation, usize) -> f64;
+
+/// Evaluate the scalar FAQ `⊕_x ⊗_F ψ_F(x_F)` over the join output.
+/// Returns the semiring zero for an empty join.
+pub fn scalar_aggregate(
+    db: &Database,
+    tree: &JoinTree,
+    semiring: Semiring,
+    factor: FactorFn<'_>,
+) -> Result<f64> {
+    let n = tree.len();
+    let children: Vec<Vec<usize>> = (0..n).map(|u| tree.children(u)).collect();
+    let mut msgs: Vec<Option<FxHashMap<Vec<u64>, f64>>> = (0..n).map(|_| None).collect();
+
+    for &u in &tree.order {
+        let rel = db
+            .get(&tree.rel_names[u])
+            .with_context(|| format!("relation {} missing", tree.rel_names[u]))?;
+        let child_cols: Vec<(usize, Vec<usize>)> = children[u]
+            .iter()
+            .map(|&c| {
+                let cols = tree.sep[c]
+                    .iter()
+                    .map(|a| rel.schema.index_of(a).expect("sep attr in parent"))
+                    .collect();
+                (c, cols)
+            })
+            .collect();
+        let sep_cols: Vec<usize> = tree.sep[u]
+            .iter()
+            .map(|a| rel.schema.index_of(a).expect("sep attr in node"))
+            .collect();
+
+        let mut out: FxHashMap<Vec<u64>, f64> = FxHashMap::default();
+        let mut keybuf: Vec<u64> = Vec::new();
+        'rows: for row in 0..rel.n_rows() {
+            let mut val = factor(rel, row);
+            for (c, cols) in &child_cols {
+                keybuf.clear();
+                for &cc in cols {
+                    keybuf.push(rel.col(cc).key_u64(row));
+                }
+                match msgs[*c].as_ref().expect("child processed").get(keybuf.as_slice()) {
+                    Some(&m) => val = semiring.mul(val, m),
+                    None => continue 'rows, // dangling
+                }
+            }
+            keybuf.clear();
+            for &sc in &sep_cols {
+                keybuf.push(rel.col(sc).key_u64(row));
+            }
+            match out.get_mut(keybuf.as_slice()) {
+                Some(slot) => *slot = semiring.add(*slot, val),
+                None => {
+                    out.insert(keybuf.clone(), val);
+                }
+            }
+        }
+        msgs[u] = Some(out);
+    }
+
+    let root = msgs[tree.root].take().expect("root processed");
+    Ok(root.into_values().next().unwrap_or_else(|| semiring.zero()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Schema, Value};
+    use crate::query::{Feq, Hypergraph};
+
+    /// The paper's intro query: product ⋈ transactions ⋈ store with a MAX
+    /// over transactions.count.
+    fn setup() -> (Database, JoinTree) {
+        let mut product =
+            Relation::new("product", Schema::new(vec![Attr::cat("item", 4)]));
+        for i in 0..3u32 {
+            product.push_row(&[Value::Cat(i)]);
+        }
+        let mut store = Relation::new("store", Schema::new(vec![Attr::cat("store", 3)]));
+        for s in 0..2u32 {
+            store.push_row(&[Value::Cat(s)]);
+        }
+        let mut tx = Relation::new(
+            "tx",
+            Schema::new(vec![Attr::cat("item", 4), Attr::cat("store", 3), Attr::double("count")]),
+        );
+        for (i, s, c) in [(0u32, 0u32, 5.0), (0, 1, 7.0), (1, 0, 2.0), (3, 0, 99.0)] {
+            tx.push_row(&[Value::Cat(i), Value::Cat(s), Value::Double(c)]);
+        }
+        let mut db = Database::new();
+        db.add(product);
+        db.add(store);
+        db.add(tx);
+        let feq = Feq::with_features(&["tx", "product", "store"], &["item"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        (db, tree)
+    }
+
+    #[test]
+    fn max_product_reproduces_intro_query() {
+        let (db, tree) = setup();
+        // ψ_tx = count, ψ_product = ψ_store = 1 (existence predicates).
+        // Tuple (3,0) dangles (item 3 not in product): max = 7, not 99.
+        let max = scalar_aggregate(&db, &tree, Semiring::MaxProduct, &|rel, row| {
+            if rel.name == "tx" {
+                rel.value(row, 2).as_f64()
+            } else {
+                1.0
+            }
+        })
+        .unwrap();
+        assert_eq!(max, 7.0);
+    }
+
+    #[test]
+    fn sum_product_equals_output_size() {
+        let (db, tree) = setup();
+        let count = scalar_aggregate(&db, &tree, Semiring::SumProduct, &|rel, row| {
+            rel.weight(row)
+        })
+        .unwrap();
+        let direct = crate::faq::output_size(&db, &tree).unwrap();
+        assert_eq!(count, direct);
+        assert_eq!(count, 3.0);
+    }
+
+    #[test]
+    fn min_plus_finds_cheapest_join_tuple() {
+        let (db, tree) = setup();
+        // Cost = tx.count, other relations free: min over joining tuples.
+        let min = scalar_aggregate(&db, &tree, Semiring::MinPlus, &|rel, row| {
+            if rel.name == "tx" {
+                rel.value(row, 2).as_f64()
+            } else {
+                0.0
+            }
+        })
+        .unwrap();
+        assert_eq!(min, 2.0);
+    }
+
+    #[test]
+    fn empty_join_returns_zero_element() {
+        let (mut db, _) = setup();
+        *db.get_mut("tx").unwrap() = Relation::new(
+            "tx",
+            Schema::new(vec![Attr::cat("item", 4), Attr::cat("store", 3), Attr::double("count")]),
+        );
+        let feq = Feq::with_features(&["tx", "product", "store"], &["item"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        let max = scalar_aggregate(&db, &tree, Semiring::MaxProduct, &|_, _| 1.0).unwrap();
+        assert_eq!(max, f64::NEG_INFINITY);
+    }
+}

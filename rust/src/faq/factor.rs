@@ -1,0 +1,115 @@
+//! Sparse factors: the unit of FAQ message passing.
+
+use crate::util::FxHashMap;
+
+/// A sparse factor ψ over an ordered list of variables: a map from value
+/// tuples (join-key encoded `u64`s, in `vars` order) to a weight. Missing
+/// tuples are implicitly the semiring zero.
+#[derive(Clone, Debug, Default)]
+pub struct Factor {
+    pub vars: Vec<String>,
+    pub data: FxHashMap<Vec<u64>, f64>,
+}
+
+impl Factor {
+    /// Empty factor over the given variables.
+    pub fn new(vars: Vec<String>) -> Self {
+        Factor { vars, data: FxHashMap::default() }
+    }
+
+    /// Number of non-zero entries.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the factor has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Add `w` to the entry for `key` (sum-product aggregation).
+    #[inline]
+    pub fn add(&mut self, key: Vec<u64>, w: f64) {
+        *self.data.entry(key).or_insert(0.0) += w;
+    }
+
+    /// Lookup; `None` for absent tuples.
+    #[inline]
+    pub fn get(&self, key: &[u64]) -> Option<f64> {
+        self.data.get(key).copied()
+    }
+
+    /// Total mass (sum over all entries).
+    pub fn mass(&self) -> f64 {
+        self.data.values().sum()
+    }
+
+    /// Project (marginalize) onto a subset of variables, summing weights.
+    /// Panics if `onto` contains a variable not in this factor.
+    pub fn project(&self, onto: &[String]) -> Factor {
+        let idx: Vec<usize> = onto
+            .iter()
+            .map(|v| {
+                self.vars
+                    .iter()
+                    .position(|x| x == v)
+                    .unwrap_or_else(|| panic!("projection variable {v:?} missing"))
+            })
+            .collect();
+        let mut out = Factor::new(onto.to_vec());
+        for (key, &w) in &self.data {
+            let sub: Vec<u64> = idx.iter().map(|&i| key[i]).collect();
+            out.add(sub, w);
+        }
+        out
+    }
+
+    /// Position of a variable.
+    pub fn var_index(&self, name: &str) -> Option<usize> {
+        self.vars.iter().position(|v| v == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Factor {
+        let mut f = Factor::new(vec!["a".into(), "b".into()]);
+        f.add(vec![1, 10], 2.0);
+        f.add(vec![1, 11], 3.0);
+        f.add(vec![2, 10], 5.0);
+        f
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut f = sample();
+        f.add(vec![1, 10], 1.0);
+        assert_eq!(f.get(&[1, 10]), Some(3.0));
+        assert_eq!(f.get(&[9, 9]), None);
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn mass_is_total() {
+        assert_eq!(sample().mass(), 10.0);
+    }
+
+    #[test]
+    fn project_marginalizes() {
+        let f = sample();
+        let p = f.project(&["a".to_string()]);
+        assert_eq!(p.get(&[1]), Some(5.0));
+        assert_eq!(p.get(&[2]), Some(5.0));
+        // Project to nothing: a single scalar entry with the full mass.
+        let unit = f.project(&[]);
+        assert_eq!(unit.get(&[]), Some(10.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "missing")]
+    fn project_unknown_var_panics() {
+        sample().project(&["zzz".to_string()]);
+    }
+}

@@ -1,0 +1,31 @@
+//! Functional aggregate queries (FAQ) over join trees.
+//!
+//! This is the paper's §2.1 substrate: every quantity Rk-means needs from
+//! the unmaterialized join — the output size `|X|`, per-attribute marginal
+//! weights `w_j` (Eq. 3), and the grid-coreset weights `w_grid` (Eq. 4) — is
+//! a functional aggregate query, evaluated by variable elimination over the
+//! FEQ's join tree (the InsideOut algorithm; for acyclic counting queries
+//! this specializes to Yannakakis two-pass message passing).
+//!
+//! * [`factor`] — sparse factors: maps from variable tuples to semiring
+//!   values.
+//! * [`semiring`] — sum-product / max-product / min-plus aggregates, used
+//!   both for counting and for MAX-style FEQ aggregates (the paper's example
+//!   query computes `max(transactions.count)`).
+//! * [`yannakakis`] — the two-pass engine: full-join tuple counts, `|X|`,
+//!   and per-attribute marginals.
+//! * [`gridweights`] — the free-variable upward pass computing sparse
+//!   `w_grid` over centroid-id (gid) combinations without enumerating the
+//!   cross-product grid.
+
+pub mod aggregate;
+pub mod factor;
+pub mod gridweights;
+pub mod semiring;
+pub mod yannakakis;
+
+pub use aggregate::scalar_aggregate;
+pub use factor::Factor;
+pub use gridweights::{grid_weights, GidAssigner};
+pub use semiring::Semiring;
+pub use yannakakis::{full_join_counts, marginals, output_size, JoinCounts, Marginal};

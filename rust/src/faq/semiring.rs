@@ -1,0 +1,93 @@
+//! Commutative semirings for FAQ aggregation.
+//!
+//! The FEQ in the paper's introduction computes `max(transactions.count)`
+//! per output tuple — a max-product FAQ — while all of Rk-means's own
+//! queries are sum-product (counting). Parameterizing the engine over the
+//! semiring keeps both available and mirrors the FAQ framework [4].
+
+/// A commutative semiring over `f64` values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Semiring {
+    /// (+, ×): counting / weighted counting.
+    SumProduct,
+    /// (max, ×): e.g. max aggregates over join results.
+    MaxProduct,
+    /// (min, +): tropical; shortest-path style aggregates.
+    MinPlus,
+}
+
+impl Semiring {
+    /// Additive identity.
+    #[inline]
+    pub fn zero(&self) -> f64 {
+        match self {
+            Semiring::SumProduct => 0.0,
+            Semiring::MaxProduct => f64::NEG_INFINITY,
+            Semiring::MinPlus => f64::INFINITY,
+        }
+    }
+
+    /// Multiplicative identity.
+    #[inline]
+    pub fn one(&self) -> f64 {
+        match self {
+            Semiring::SumProduct | Semiring::MaxProduct => 1.0,
+            Semiring::MinPlus => 0.0,
+        }
+    }
+
+    /// Semiring addition (the aggregation operator ⊕).
+    #[inline]
+    pub fn add(&self, a: f64, b: f64) -> f64 {
+        match self {
+            Semiring::SumProduct => a + b,
+            Semiring::MaxProduct => a.max(b),
+            Semiring::MinPlus => a.min(b),
+        }
+    }
+
+    /// Semiring multiplication (the combination operator ⊗).
+    #[inline]
+    pub fn mul(&self, a: f64, b: f64) -> f64 {
+        match self {
+            Semiring::SumProduct | Semiring::MaxProduct => a * b,
+            Semiring::MinPlus => a + b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities_hold() {
+        for s in [Semiring::SumProduct, Semiring::MaxProduct, Semiring::MinPlus] {
+            for v in [0.0, 1.0, -2.5, 7.0] {
+                assert_eq!(s.add(s.zero(), v), v, "{s:?} zero");
+                assert_eq!(s.mul(s.one(), v), v, "{s:?} one");
+            }
+        }
+    }
+
+    #[test]
+    fn semantics() {
+        assert_eq!(Semiring::SumProduct.add(2.0, 3.0), 5.0);
+        assert_eq!(Semiring::SumProduct.mul(2.0, 3.0), 6.0);
+        assert_eq!(Semiring::MaxProduct.add(2.0, 3.0), 3.0);
+        assert_eq!(Semiring::MaxProduct.mul(2.0, 3.0), 6.0);
+        assert_eq!(Semiring::MinPlus.add(2.0, 3.0), 2.0);
+        assert_eq!(Semiring::MinPlus.mul(2.0, 3.0), 5.0);
+    }
+
+    #[test]
+    fn annihilation_distribution_spotcheck() {
+        // a⊗(b⊕c) == (a⊗b)⊕(a⊗c) on sample values.
+        for s in [Semiring::SumProduct, Semiring::MaxProduct, Semiring::MinPlus] {
+            let (a, b, c) = (2.0, 5.0, 3.0);
+            let lhs = s.mul(a, s.add(b, c));
+            let rhs = s.add(s.mul(a, b), s.mul(a, c));
+            assert!((lhs - rhs).abs() < 1e-12, "{s:?}");
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Two-pass Yannakakis message passing over a join tree.
+//!
+//! This is the workhorse of Steps 1 and 3 (paper §4.3): a single upward +
+//! downward pass computes, for *every tuple of every base relation*, the
+//! (weighted) number of full-join outputs it participates in — in time
+//! linear in the database, never materializing the join. Per-attribute
+//! marginals `w_j` (Eq. 3) then fall out by grouping those counts at the
+//! attribute's owning relation.
+
+use crate::data::{AttrType, Database, Relation};
+use crate::query::{Feq, JoinTree};
+use crate::util::FxHashMap;
+use anyhow::{Context, Result};
+
+use super::factor::Factor;
+
+/// Per-tuple full-join participation counts.
+#[derive(Clone, Debug)]
+pub struct JoinCounts {
+    /// `counts[node][row]` — weighted number of join outputs extending the
+    /// row (0 for dangling tuples).
+    pub counts: Vec<Vec<f64>>,
+    /// Total weighted output size `|X|`.
+    pub total: f64,
+}
+
+/// A per-attribute marginal weight function `w_j` (Eq. 3): the weight each
+/// attribute value receives from the (unmaterialized) join output.
+#[derive(Clone, Debug)]
+pub enum Marginal {
+    /// Continuous attribute: sorted `(value, weight)` pairs.
+    Continuous(Vec<(f64, f64)>),
+    /// Discrete attribute (Int/Cat): `(key, weight)` pairs sorted by key.
+    Discrete(Vec<(u64, f64)>),
+}
+
+impl Marginal {
+    /// Total weight mass (equals `|X|` for every attribute).
+    pub fn mass(&self) -> f64 {
+        match self {
+            Marginal::Continuous(v) => v.iter().map(|(_, w)| w).sum(),
+            Marginal::Discrete(v) => v.iter().map(|(_, w)| w).sum(),
+        }
+    }
+
+    /// Number of distinct values with non-zero weight.
+    pub fn support(&self) -> usize {
+        match self {
+            Marginal::Continuous(v) => v.len(),
+            Marginal::Discrete(v) => v.len(),
+        }
+    }
+}
+
+/// Column indices in `rel` for the given attribute names.
+fn col_indices(rel: &Relation, attrs: &[String]) -> Vec<usize> {
+    attrs
+        .iter()
+        .map(|a| {
+            rel.schema
+                .index_of(a)
+                .unwrap_or_else(|| panic!("attribute {a:?} missing from {}", rel.name))
+        })
+        .collect()
+}
+
+/// Extract the join key for a row into `buf`.
+#[inline]
+fn key_into(rel: &Relation, row: usize, cols: &[usize], buf: &mut Vec<u64>) {
+    buf.clear();
+    for &c in cols {
+        buf.push(rel.col(c).key_u64(row));
+    }
+}
+
+/// Upward pass: per-tuple products of child messages, and the upward
+/// message of each node. Returns (tuple_up, msg_up).
+fn upward(
+    db: &Database,
+    tree: &JoinTree,
+) -> Result<(Vec<Vec<f64>>, Vec<Factor>)> {
+    let n = tree.len();
+    let mut tuple_up: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut msg_up: Vec<Factor> = vec![Factor::default(); n];
+    let children: Vec<Vec<usize>> = (0..n).map(|u| tree.children(u)).collect();
+
+    for &u in &tree.order {
+        let rel = db
+            .get(&tree.rel_names[u])
+            .with_context(|| format!("relation {} missing", tree.rel_names[u]))?;
+        let child_cols: Vec<(usize, Vec<usize>)> = children[u]
+            .iter()
+            .map(|&c| (c, col_indices(rel, &tree.sep[c])))
+            .collect();
+        let sep_cols = col_indices(rel, &tree.sep[u]);
+
+        let mut up = vec![0.0; rel.n_rows()];
+        let mut msg = Factor::new(tree.sep[u].clone());
+        let mut buf: Vec<u64> = Vec::new();
+        'rows: for row in 0..rel.n_rows() {
+            let mut w = rel.weight(row);
+            for (c, cols) in &child_cols {
+                key_into(rel, row, cols, &mut buf);
+                match msg_up[*c].data.get(buf.as_slice()) {
+                    Some(&m) if m != 0.0 => w *= m,
+                    _ => continue 'rows, // dangling: contributes nothing
+                }
+            }
+            up[row] = w;
+            if w != 0.0 {
+                key_into(rel, row, &sep_cols, &mut buf);
+                msg.add(buf.clone(), w);
+            }
+        }
+        tuple_up[u] = up;
+        msg_up[u] = msg;
+    }
+    Ok((tuple_up, msg_up))
+}
+
+/// Weighted output size `|X|` of the FEQ (upward pass only).
+pub fn output_size(db: &Database, tree: &JoinTree) -> Result<f64> {
+    let (tuple_up, _) = upward(db, tree)?;
+    Ok(tuple_up[tree.root].iter().sum())
+}
+
+/// Full two-pass computation of per-tuple join counts.
+pub fn full_join_counts(db: &Database, tree: &JoinTree) -> Result<JoinCounts> {
+    let n = tree.len();
+    let (tuple_up, msg_up) = upward(db, tree)?;
+    let children: Vec<Vec<usize>> = (0..n).map(|u| tree.children(u)).collect();
+
+    // Downward pass, parents before children (reverse removal order).
+    let mut msg_down: Vec<Option<Factor>> = vec![None; n];
+    let mut counts: Vec<Vec<f64>> = vec![Vec::new(); n];
+    for &u in tree.order.iter().rev() {
+        let rel = db.get(&tree.rel_names[u]).expect("checked in upward");
+        let sep_cols = col_indices(rel, &tree.sep[u]);
+        let child_cols: Vec<(usize, Vec<usize>)> = children[u]
+            .iter()
+            .map(|&c| (c, col_indices(rel, &tree.sep[c])))
+            .collect();
+        let nc = child_cols.len();
+
+        let mut down_factors: Vec<Factor> = child_cols
+            .iter()
+            .map(|(c, _)| Factor::new(tree.sep[*c].clone()))
+            .collect();
+        let mut cnt = vec![0.0; rel.n_rows()];
+        let mut buf: Vec<u64> = Vec::new();
+        let mut child_m: Vec<f64> = vec![0.0; nc];
+
+        for row in 0..rel.n_rows() {
+            if tuple_up[u][row] == 0.0 {
+                continue; // dangling rows never contribute
+            }
+            // Message from above (1 at the root).
+            let from_above = match &msg_down[u] {
+                None => 1.0,
+                Some(f) => {
+                    key_into(rel, row, &sep_cols, &mut buf);
+                    match f.data.get(buf.as_slice()) {
+                        Some(&m) => m,
+                        None => 0.0,
+                    }
+                }
+            };
+            cnt[row] = tuple_up[u][row] * from_above;
+            if nc == 0 || from_above == 0.0 {
+                continue;
+            }
+            // Per-child message values for this row.
+            for (i, (c, cols)) in child_cols.iter().enumerate() {
+                key_into(rel, row, cols, &mut buf);
+                child_m[i] = msg_up[*c].data.get(buf.as_slice()).copied().unwrap_or(0.0);
+            }
+            // prefix/suffix products so each child's "everything but me"
+            // product is O(children), not O(children²).
+            let base = rel.weight(row) * from_above;
+            let mut suffix = vec![1.0; nc + 1];
+            for i in (0..nc).rev() {
+                suffix[i] = suffix[i + 1] * child_m[i];
+            }
+            let mut prefix = 1.0;
+            for i in 0..nc {
+                let without_me = base * prefix * suffix[i + 1];
+                if without_me != 0.0 {
+                    key_into(rel, row, &child_cols[i].1, &mut buf);
+                    down_factors[i].add(buf.clone(), without_me);
+                }
+                prefix *= child_m[i];
+            }
+        }
+        for ((c, _), f) in child_cols.iter().zip(down_factors) {
+            msg_down[*c] = Some(f);
+        }
+        counts[u] = cnt;
+    }
+
+    let total = counts[tree.root].iter().sum();
+    Ok(JoinCounts { counts, total })
+}
+
+/// Per-feature marginal weights `w_j` (Eq. 3), computed by grouping the
+/// full-join counts at each feature's owning relation.
+pub fn marginals(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    counts: &JoinCounts,
+) -> Result<FxHashMap<String, Marginal>> {
+    // `tree` indexes `counts` by construction; assert the correspondence.
+    debug_assert_eq!(tree.len(), counts.counts.len());
+    let _ = tree;
+    let mut out = FxHashMap::default();
+    for f in &feq.features {
+        let owner = feq
+            .owner_of(db, &f.attr)
+            .with_context(|| format!("feature {:?} has no owner", f.attr))?;
+        let rel = db.get(&feq.relations[owner]).expect("owner exists");
+        let col = rel.schema.index_of(&f.attr).expect("owner contains attr");
+        let cnt = &counts.counts[owner];
+        let marginal = match rel.schema.attr(col).ty {
+            // Numeric features (Double and Int) get continuous marginals —
+            // they embed as a single coordinate and are clustered on the
+            // number line by the 1-D DP. Only Cat features are one-hot.
+            AttrType::Double | AttrType::Int => {
+                let mut acc: FxHashMap<u64, f64> = FxHashMap::default();
+                for row in 0..rel.n_rows() {
+                    if cnt[row] != 0.0 {
+                        let v = rel.value(row, col).as_f64();
+                        *acc.entry(v.to_bits()).or_insert(0.0) += cnt[row];
+                    }
+                }
+                let mut pairs: Vec<(f64, f64)> =
+                    acc.into_iter().map(|(b, w)| (f64::from_bits(b), w)).collect();
+                pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite feature values"));
+                Marginal::Continuous(pairs)
+            }
+            AttrType::Cat => {
+                let mut acc: FxHashMap<u64, f64> = FxHashMap::default();
+                for row in 0..rel.n_rows() {
+                    if cnt[row] != 0.0 {
+                        *acc.entry(rel.col(col).key_u64(row)).or_insert(0.0) += cnt[row];
+                    }
+                }
+                let mut pairs: Vec<(u64, f64)> = acc.into_iter().collect();
+                pairs.sort_unstable_by_key(|&(k, _)| k);
+                Marginal::Discrete(pairs)
+            }
+        };
+        out.insert(f.attr.clone(), marginal);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Schema, Value};
+    use crate::query::Hypergraph;
+
+    /// The paper's running example: product ⋈ transactions ⋈ store.
+    fn retail_example() -> (Database, Feq) {
+        let mut product = Relation::new(
+            "product",
+            Schema::new(vec![Attr::cat("item", 3), Attr::double("price")]),
+        );
+        product.push_row(&[Value::Cat(0), Value::Double(1.0)]);
+        product.push_row(&[Value::Cat(1), Value::Double(2.0)]);
+        product.push_row(&[Value::Cat(2), Value::Double(2.0)]);
+
+        let mut store =
+            Relation::new("store", Schema::new(vec![Attr::cat("store", 2), Attr::cat("zip", 2)]));
+        store.push_row(&[Value::Cat(0), Value::Cat(0)]);
+        store.push_row(&[Value::Cat(1), Value::Cat(1)]);
+
+        let mut tx = Relation::new(
+            "tx",
+            Schema::new(vec![Attr::cat("item", 3), Attr::cat("store", 2), Attr::double("count")]),
+        );
+        tx.push_row(&[Value::Cat(0), Value::Cat(0), Value::Double(5.0)]);
+        tx.push_row(&[Value::Cat(0), Value::Cat(1), Value::Double(7.0)]);
+        tx.push_row(&[Value::Cat(1), Value::Cat(0), Value::Double(2.0)]);
+        // Dangling: item 9 not in product — must not count. (domain allows)
+        let mut db = Database::new();
+        db.add(product);
+        db.add(store);
+        db.add(tx);
+        let feq = Feq::with_features(
+            &["tx", "product", "store"],
+            &["item", "store", "price", "zip", "count"],
+        );
+        (db, feq)
+    }
+
+    fn tree_of(db: &Database, feq: &Feq) -> JoinTree {
+        Hypergraph::from_feq(db, feq).join_tree().unwrap()
+    }
+
+    #[test]
+    fn output_size_matches_bruteforce() {
+        let (db, feq) = retail_example();
+        let tree = tree_of(&db, &feq);
+        // All 3 tx rows join successfully: |X| = 3.
+        assert_eq!(output_size(&db, &tree).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn counts_per_tuple() {
+        let (db, feq) = retail_example();
+        let tree = tree_of(&db, &feq);
+        let jc = full_join_counts(&db, &tree).unwrap();
+        assert_eq!(jc.total, 3.0);
+        // Counts are indexed by tree node = position in feq.relations
+        // (tx=0, product=1, store=2).
+        // product: item0 appears in 2 outputs, item1 in 1, item2 dangling.
+        assert_eq!(jc.counts[1], vec![2.0, 1.0, 0.0]);
+        // store: store0 twice, store1 once.
+        assert_eq!(jc.counts[2], vec![2.0, 1.0]);
+        // tx rows each appear exactly once.
+        assert_eq!(jc.counts[0], vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn marginals_match_join_semantics() {
+        let (db, feq) = retail_example();
+        let tree = tree_of(&db, &feq);
+        let jc = full_join_counts(&db, &tree).unwrap();
+        let m = marginals(&db, &feq, &tree, &jc).unwrap();
+        // Every marginal has the same mass |X| = 3.
+        for f in &feq.features {
+            let mg = &m[&f.attr];
+            assert!((mg.mass() - 3.0).abs() < 1e-9, "attr {} mass {}", f.attr, mg.mass());
+        }
+        // price: 1.0 appears twice (item0), 2.0 once (item1).
+        match &m["price"] {
+            Marginal::Continuous(v) => assert_eq!(v, &vec![(1.0, 2.0), (2.0, 1.0)]),
+            _ => panic!("price should be continuous"),
+        }
+        // item: 0 -> 2, 1 -> 1; item 2 absent.
+        match &m["item"] {
+            Marginal::Discrete(v) => assert_eq!(v, &vec![(0, 2.0), (1, 1.0)]),
+            _ => panic!("item should be discrete"),
+        }
+    }
+
+    #[test]
+    fn weighted_tuples_scale_counts() {
+        let (mut db, feq) = retail_example();
+        // Double the multiplicity of the first tx row.
+        {
+            let tx = db.get_mut("tx").unwrap();
+            let mut rows: Vec<(Vec<Value>, f64)> =
+                (0..tx.n_rows()).map(|r| (tx.row(r), tx.weight(r))).collect();
+            rows[0].1 = 2.0;
+            let mut new_tx = Relation::new("tx", tx.schema.clone());
+            for (vals, w) in rows {
+                new_tx.push_row_weighted(&vals, w);
+            }
+            *tx = new_tx;
+        }
+        let tree = tree_of(&db, &feq);
+        let jc = full_join_counts(&db, &tree).unwrap();
+        assert_eq!(jc.total, 4.0);
+    }
+
+    #[test]
+    fn empty_relation_gives_zero() {
+        let (mut db, feq) = retail_example();
+        *db.get_mut("tx").unwrap() = Relation::new(
+            "tx",
+            Schema::new(vec![Attr::cat("item", 3), Attr::cat("store", 2), Attr::double("count")]),
+        );
+        let tree = tree_of(&db, &feq);
+        let jc = full_join_counts(&db, &tree).unwrap();
+        assert_eq!(jc.total, 0.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Cyclic-query fallback: greedy relation merging.
+//!
+//! All of the paper's workloads are α-acyclic, but the engine should not
+//! fall over on a cyclic FEQ. `ensure_acyclic` repeatedly materializes the
+//! pairwise natural join of the two relations sharing the most attributes
+//! until GYO succeeds — a crude hypertree decomposition whose intermediate
+//! size is bounded by the pairwise join sizes (fine at the scales where a
+//! cyclic exploratory query is plausible).
+
+use crate::data::{Database, Relation, Schema, Value};
+use crate::query::{Feq, Hypergraph};
+use crate::util::FxHashMap;
+use anyhow::{bail, Result};
+
+/// Natural join of two relations (hash join on all shared attributes).
+/// Shared columns appear once, from `a`'s side.
+pub fn pairwise_join(a: &Relation, b: &Relation, name: &str) -> Relation {
+    let shared: Vec<String> = a
+        .schema
+        .attrs()
+        .iter()
+        .filter(|x| b.schema.contains(&x.name))
+        .map(|x| x.name.clone())
+        .collect();
+    let a_key: Vec<usize> = shared.iter().map(|s| a.schema.index_of(s).expect("shared")).collect();
+    let b_key: Vec<usize> = shared.iter().map(|s| b.schema.index_of(s).expect("shared")).collect();
+    let b_extra: Vec<usize> = (0..b.n_cols())
+        .filter(|&c| !shared.contains(&b.schema.attr(c).name))
+        .collect();
+
+    let mut attrs = a.schema.attrs().to_vec();
+    for &c in &b_extra {
+        attrs.push(b.schema.attr(c).clone());
+    }
+    let mut out = Relation::new(name, Schema::new(attrs));
+
+    // Build side: index b by key.
+    let mut idx: FxHashMap<Vec<u64>, Vec<u32>> = FxHashMap::default();
+    for row in 0..b.n_rows() {
+        let key: Vec<u64> = b_key.iter().map(|&c| b.col(c).key_u64(row)).collect();
+        idx.entry(key).or_default().push(row as u32);
+    }
+    // Probe side.
+    let mut vals: Vec<Value> = Vec::with_capacity(out.schema.len());
+    for arow in 0..a.n_rows() {
+        let key: Vec<u64> = a_key.iter().map(|&c| a.col(c).key_u64(arow)).collect();
+        let Some(brows) = idx.get(&key) else { continue };
+        for &brow in brows {
+            vals.clear();
+            for c in 0..a.n_cols() {
+                vals.push(a.value(arow, c));
+            }
+            for &c in &b_extra {
+                vals.push(b.value(brow as usize, c));
+            }
+            let w = a.weight(arow) * b.weight(brow as usize);
+            if w == 1.0 {
+                out.push_row(&vals);
+            } else {
+                out.push_row_weighted(&vals, w);
+            }
+        }
+    }
+    out
+}
+
+/// Rewrite `(db, feq)` into an acyclic equivalent by merging relations.
+/// Returns the inputs unchanged (cheaply cloned) when already acyclic.
+pub fn ensure_acyclic(db: &Database, feq: &Feq) -> Result<(Database, Feq)> {
+    if Hypergraph::from_feq(db, feq).join_tree().is_ok() {
+        return Ok((db.clone(), feq.clone()));
+    }
+    let mut db = db.clone();
+    let mut feq = feq.clone();
+    let mut merge_id = 0usize;
+    loop {
+        if Hypergraph::from_feq(&db, &feq).join_tree().is_ok() {
+            return Ok((db, feq));
+        }
+        if feq.relations.len() < 2 {
+            bail!("cannot acyclify a single-relation query (bug)");
+        }
+        // Pick the pair of participating relations sharing the most attrs.
+        let mut best: Option<(usize, usize, usize)> = None;
+        for i in 0..feq.relations.len() {
+            for j in (i + 1)..feq.relations.len() {
+                let a = db.get(&feq.relations[i]).expect("exists");
+                let b = db.get(&feq.relations[j]).expect("exists");
+                let shared =
+                    a.schema.attrs().iter().filter(|x| b.schema.contains(&x.name)).count();
+                if best.map(|(_, _, s)| shared > s).unwrap_or(true) {
+                    best = Some((i, j, shared));
+                }
+            }
+        }
+        let (i, j, shared) = best.expect("≥2 relations");
+        if shared == 0 {
+            // Cartesian merge as a last resort — still correct.
+        }
+        let name = format!("__merged_{merge_id}");
+        merge_id += 1;
+        let joined = pairwise_join(
+            db.get(&feq.relations[i]).expect("exists"),
+            db.get(&feq.relations[j]).expect("exists"),
+            &name,
+        );
+        db.add(joined);
+        // Replace i and j with the merged relation in the FEQ.
+        let (ri, rj) = (feq.relations[i].clone(), feq.relations[j].clone());
+        feq.relations.retain(|r| r != &ri && r != &rj);
+        feq.relations.push(name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Attr;
+    use crate::join::materialize;
+
+    fn rel(name: &str, attrs: &[&str], rows: &[&[u32]]) -> Relation {
+        let mut r = Relation::new(
+            name,
+            Schema::new(attrs.iter().map(|a| Attr::cat(a, 8)).collect()),
+        );
+        for row in rows {
+            let vals: Vec<Value> = row.iter().map(|&v| Value::Cat(v)).collect();
+            r.push_row(&vals);
+        }
+        r
+    }
+
+    #[test]
+    fn pairwise_join_semantics() {
+        let a = rel("a", &["x", "y"], &[&[0, 0], &[0, 1], &[1, 0]]);
+        let b = rel("b", &["y", "z"], &[&[0, 5], &[0, 6], &[2, 7]]);
+        let j = pairwise_join(&a, &b, "ab");
+        // y=0 matches: a rows {0,2} × b rows {0,1} = 4 outputs.
+        assert_eq!(j.n_rows(), 4);
+        assert_eq!(j.schema.names(), vec!["x", "y", "z"]);
+    }
+
+    #[test]
+    fn triangle_becomes_acyclic_and_preserves_join() {
+        // R(a,b), S(b,c), T(c,a): classic triangle.
+        let r = rel("r", &["a", "b"], &[&[0, 0], &[0, 1], &[1, 1]]);
+        let s = rel("s", &["b", "c"], &[&[0, 0], &[1, 0], &[1, 1]]);
+        let t = rel("t", &["c", "a"], &[&[0, 0], &[1, 1], &[1, 0]]);
+        let mut db = Database::new();
+        db.add(r);
+        db.add(s);
+        db.add(t);
+        let feq = Feq::with_features(&["r", "s", "t"], &["a", "b", "c"]);
+        assert!(Hypergraph::from_feq(&db, &feq).join_tree().is_err());
+
+        let (db2, feq2) = ensure_acyclic(&db, &feq).unwrap();
+        let tree = Hypergraph::from_feq(&db2, &feq2).join_tree().unwrap();
+        let x = materialize(&db2, &feq2, &tree).unwrap();
+        // Brute-force triangles: (a,b,c) with R(a,b),S(b,c),T(c,a):
+        // (0,0,0): R✓ S✓ T✓ -> yes. (0,1,0): R✓ S(1,0)✓ T(0,0)✓ -> yes.
+        // (0,1,1): R✓ S✓ T(1,0)✓ -> yes. (1,1,1): R✓ S✓ T(1,1)✓ -> yes.
+        // (1,1,0): R✓ S(1,0)✓ T(0,1)? no. Total 4.
+        assert_eq!(x.len(), 4);
+    }
+
+    #[test]
+    fn acyclic_input_passes_through() {
+        let a = rel("a", &["x", "y"], &[&[0, 0]]);
+        let b = rel("b", &["y", "z"], &[&[0, 5]]);
+        let mut db = Database::new();
+        db.add(a);
+        db.add(b);
+        let feq = Feq::with_features(&["a", "b"], &["x", "z"]);
+        let (db2, feq2) = ensure_acyclic(&db, &feq).unwrap();
+        assert_eq!(db2.relations().len(), 2);
+        assert_eq!(feq2.relations, feq.relations);
+    }
+
+    #[test]
+    fn weighted_join_multiplies() {
+        let mut a = Relation::new("a", Schema::new(vec![Attr::cat("x", 4)]));
+        a.push_row_weighted(&[Value::Cat(0)], 3.0);
+        let mut b = Relation::new("b", Schema::new(vec![Attr::cat("x", 4), Attr::cat("y", 4)]));
+        b.push_row_weighted(&[Value::Cat(0), Value::Cat(1)], 2.0);
+        let j = pairwise_join(&a, &b, "ab");
+        assert_eq!(j.n_rows(), 1);
+        assert_eq!(j.weight(0), 6.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! One-hot embedding of FEQ output rows into ℝ^D.
+//!
+//! Continuous and integer features map to one coordinate; categorical
+//! features map to an indicator block of width `L` (the paper's categorical
+//! subspace, §4.1 Eq. 28). Feature weights from the FEQ scale each block by
+//! `√weight` so that squared distances are weighted per feature.
+//!
+//! The same spec is used by the materializing baseline (cluster the dense
+//! `X`), the XLA/PJRT dense hot path, and full-objective evaluation.
+
+use crate::data::{AttrType, Database, Value};
+use crate::query::Feq;
+use anyhow::{Context, Result};
+
+use super::materialize::DataMatrix;
+
+/// How one feature embeds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmbKind {
+    /// Single numeric coordinate (Double or Int features).
+    Numeric,
+    /// One-hot indicator block (Cat features).
+    OneHot,
+}
+
+/// Embedding of one feature: a block `[offset, offset+width)` of the dense
+/// vector, scaled by `scale = √feature_weight`.
+#[derive(Clone, Debug)]
+pub struct FeatEmb {
+    pub name: String,
+    pub kind: EmbKind,
+    pub offset: usize,
+    pub width: usize,
+    pub scale: f64,
+}
+
+/// Full embedding specification for an FEQ.
+#[derive(Clone, Debug)]
+pub struct EmbedSpec {
+    pub feats: Vec<FeatEmb>,
+    /// Total dense dimensionality `D` (the paper's post-one-hot dimension).
+    pub dims: usize,
+}
+
+impl EmbedSpec {
+    /// Derive the embedding from the FEQ and schema. Categorical widths use
+    /// the declared domain, falling back to `max observed id + 1`.
+    pub fn from_feq(db: &Database, feq: &Feq) -> Result<Self> {
+        let mut feats = Vec::with_capacity(feq.features.len());
+        let mut offset = 0usize;
+        for f in &feq.features {
+            let owner = feq
+                .owner_of(db, &f.attr)
+                .with_context(|| format!("feature {:?} has no owner", f.attr))?;
+            let rel = db.get(&feq.relations[owner]).expect("owner exists");
+            let col = rel.schema.index_of(&f.attr).expect("attr in owner");
+            let attr = rel.schema.attr(col);
+            let (kind, width) = match attr.ty {
+                AttrType::Double | AttrType::Int => (EmbKind::Numeric, 1),
+                AttrType::Cat => {
+                    let width = if attr.domain > 0 {
+                        attr.domain as usize
+                    } else {
+                        // Infer from data.
+                        (0..rel.n_rows())
+                            .map(|r| rel.col(col).key_u64(r) as usize + 1)
+                            .max()
+                            .unwrap_or(1)
+                    };
+                    (EmbKind::OneHot, width)
+                }
+            };
+            feats.push(FeatEmb {
+                name: f.attr.clone(),
+                kind,
+                offset,
+                width,
+                scale: f.weight.sqrt(),
+            });
+            offset += width;
+        }
+        Ok(EmbedSpec { feats, dims: offset })
+    }
+
+    /// Embed one row (values in feature order) into `out` (length `dims`).
+    pub fn embed_into(&self, vals: &[Value], out: &mut [f64]) {
+        debug_assert_eq!(vals.len(), self.feats.len());
+        debug_assert_eq!(out.len(), self.dims);
+        out.fill(0.0);
+        for (fe, v) in self.feats.iter().zip(vals.iter()) {
+            match fe.kind {
+                EmbKind::Numeric => out[fe.offset] = fe.scale * v.as_f64(),
+                EmbKind::OneHot => {
+                    let id = v.as_cat().expect("one-hot feature must be categorical") as usize;
+                    debug_assert!(id < fe.width, "cat id {id} out of domain {}", fe.width);
+                    out[fe.offset + id] = fe.scale;
+                }
+            }
+        }
+    }
+
+    /// Embed a whole materialized matrix (row-major `|X| × dims`).
+    pub fn embed_matrix(&self, x: &DataMatrix) -> Vec<f64> {
+        let mut out = vec![0.0; x.len() * self.dims];
+        for (i, row) in x.rows.iter().enumerate() {
+            self.embed_into(row, &mut out[i * self.dims..(i + 1) * self.dims]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema};
+    use crate::query::FeatureSpec;
+
+    fn setup() -> (Database, Feq) {
+        let mut r = Relation::new(
+            "t",
+            Schema::new(vec![Attr::cat("c", 3), Attr::double("x"), Attr::int("n")]),
+        );
+        r.push_row(&[Value::Cat(1), Value::Double(2.0), Value::Int(7)]);
+        let mut db = Database::new();
+        db.add(r);
+        let feq = Feq::new(
+            &["t"],
+            vec![FeatureSpec::new("c"), FeatureSpec::weighted("x", 4.0), FeatureSpec::new("n")],
+        );
+        (db, feq)
+    }
+
+    #[test]
+    fn layout_and_embedding() {
+        let (db, feq) = setup();
+        let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+        assert_eq!(spec.dims, 3 + 1 + 1);
+        assert_eq!(spec.feats[0].kind, EmbKind::OneHot);
+        assert_eq!(spec.feats[1].offset, 3);
+        let mut out = vec![0.0; spec.dims];
+        spec.embed_into(&[Value::Cat(1), Value::Double(2.0), Value::Int(7)], &mut out);
+        // one-hot block [0,1,0], then √4 * 2.0 = 4.0, then 7.
+        assert_eq!(out, vec![0.0, 1.0, 0.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn inferred_domain_when_undeclared() {
+        let mut r = Relation::new("t", Schema::new(vec![Attr::cat("c", 0)]));
+        r.push_row(&[Value::Cat(4)]);
+        let mut db = Database::new();
+        db.add(r);
+        let feq = Feq::with_features(&["t"], &["c"]);
+        let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+        assert_eq!(spec.dims, 5);
+    }
+
+    #[test]
+    fn embed_matrix_is_row_major() {
+        let (db, feq) = setup();
+        let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+        let x = DataMatrix {
+            feature_names: vec!["c".into(), "x".into(), "n".into()],
+            rows: vec![
+                vec![Value::Cat(0), Value::Double(1.0), Value::Int(1)],
+                vec![Value::Cat(2), Value::Double(0.0), Value::Int(2)],
+            ],
+            weights: vec![1.0, 1.0],
+        };
+        let m = spec.embed_matrix(&x);
+        assert_eq!(m.len(), 2 * spec.dims);
+        assert_eq!(&m[0..5], &[1.0, 0.0, 0.0, 2.0, 1.0]);
+        assert_eq!(&m[5..10], &[0.0, 0.0, 1.0, 0.0, 2.0]);
+    }
+}

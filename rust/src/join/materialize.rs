@@ -1,0 +1,379 @@
+//! Acyclic join enumeration: materialized or streamed.
+//!
+//! After a semi-join pruning pass (full-join counts > 0), enumeration over
+//! the join tree is output-linear: every partial assignment extends to at
+//! least one output row, so the DFS never dead-ends.
+
+use crate::data::{Database, Relation, Value};
+use crate::faq::full_join_counts;
+use crate::query::{Feq, JoinTree};
+use crate::util::FxHashMap;
+use anyhow::{bail, Result};
+
+/// A materialized FEQ output: the paper's data matrix `X` (pre-one-hot).
+#[derive(Clone, Debug)]
+pub struct DataMatrix {
+    pub feature_names: Vec<String>,
+    /// One entry per output tuple; values in `feature_names` order.
+    pub rows: Vec<Vec<Value>>,
+    /// Tuple multiplicities (all 1 for unweighted base relations).
+    pub weights: Vec<f64>,
+}
+
+impl DataMatrix {
+    /// Number of tuples `|X|`.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the join output is empty.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total weight mass.
+    pub fn mass(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// Estimated in-memory bytes (8 bytes per value + weight), for the
+    /// Table-1 style "Size of X" report.
+    pub fn byte_size(&self) -> u64 {
+        (self.feature_names.len() as u64 * 8 + 8) * self.rows.len() as u64
+    }
+}
+
+/// Plan shared by [`materialize`] and [`stream_rows`].
+struct EnumPlan<'a> {
+    db: &'a Database,
+    tree: &'a JoinTree,
+    /// Pre-order of tree nodes (root first; parents before children).
+    preorder: Vec<usize>,
+    /// For each node (by tree index): hash index sep-key -> surviving rows.
+    index: Vec<FxHashMap<Vec<u64>, Vec<u32>>>,
+    /// Rows of the root that survive pruning.
+    root_rows: Vec<u32>,
+    /// For each feature: (node, column) where its value lives.
+    feat_src: Vec<(usize, usize)>,
+    /// For each non-root node: column indices *in its parent* forming the key.
+    parent_key_cols: Vec<Vec<usize>>,
+    /// For each node: its position in `preorder`.
+    pre_pos: Vec<usize>,
+}
+
+fn build_plan<'a>(db: &'a Database, feq: &'a Feq, tree: &'a JoinTree) -> Result<EnumPlan<'a>> {
+    let jc = full_join_counts(db, tree)?;
+    let n = tree.len();
+
+    // Pre-order traversal.
+    let mut preorder = Vec::with_capacity(n);
+    let mut stack = vec![tree.root];
+    while let Some(u) = stack.pop() {
+        preorder.push(u);
+        for c in tree.children(u) {
+            stack.push(c);
+        }
+    }
+
+    // Hash indexes on surviving rows (count > 0) for non-root nodes.
+    let mut index: Vec<FxHashMap<Vec<u64>, Vec<u32>>> = vec![FxHashMap::default(); n];
+    let mut root_rows = Vec::new();
+    for u in 0..n {
+        let rel = rel_of(db, tree, u);
+        if u == tree.root {
+            for row in 0..rel.n_rows() {
+                if jc.counts[u][row] > 0.0 {
+                    root_rows.push(row as u32);
+                }
+            }
+            continue;
+        }
+        let sep_cols: Vec<usize> = tree.sep[u]
+            .iter()
+            .map(|a| rel.schema.index_of(a).expect("sep attr in node"))
+            .collect();
+        let idx = &mut index[u];
+        for row in 0..rel.n_rows() {
+            if jc.counts[u][row] > 0.0 {
+                let key: Vec<u64> = sep_cols.iter().map(|&c| rel.col(c).key_u64(row)).collect();
+                idx.entry(key).or_default().push(row as u32);
+            }
+        }
+    }
+
+    // Feature sources.
+    let mut feat_src = Vec::with_capacity(feq.features.len());
+    for f in &feq.features {
+        let owner = feq
+            .owner_of(db, &f.attr)
+            .ok_or_else(|| anyhow::anyhow!("feature {:?} has no owner", f.attr))?;
+        let rel = rel_of(db, tree, owner);
+        feat_src.push((owner, rel.schema.index_of(&f.attr).expect("attr in owner")));
+    }
+
+    // Parent-side key columns per node.
+    let mut parent_key_cols = vec![Vec::new(); n];
+    for u in 0..n {
+        if let Some(p) = tree.parent[u] {
+            let prel = rel_of(db, tree, p);
+            parent_key_cols[u] = tree.sep[u]
+                .iter()
+                .map(|a| prel.schema.index_of(a).expect("sep attr in parent"))
+                .collect();
+        }
+    }
+
+    let mut pre_pos = vec![0usize; n];
+    for (i, &u) in preorder.iter().enumerate() {
+        pre_pos[u] = i;
+    }
+
+    Ok(EnumPlan { db, tree, preorder, index, root_rows, feat_src, parent_key_cols, pre_pos })
+}
+
+fn rel_of<'a>(db: &'a Database, tree: &'a JoinTree, u: usize) -> &'a Relation {
+    db.get(&tree.rel_names[u]).expect("relation exists")
+}
+
+impl<'a> EnumPlan<'a> {
+    /// DFS over the pre-order, invoking `emit` for every output tuple.
+    /// Returns the number of emitted tuples or stops early when `emit`
+    /// returns `false`.
+    fn enumerate(&self, mut emit: impl FnMut(&[u32], f64) -> bool) -> u64 {
+        let n = self.tree.len();
+        if n == 0 || self.root_rows.is_empty() {
+            return 0;
+        }
+        // current[pos] = chosen row of preorder[pos]; choice index per level.
+        let mut current = vec![0u32; n];
+        let mut emitted = 0u64;
+
+        // Candidates at each level, computed from the parent's current row.
+        // Level 0 candidates are the surviving root rows.
+        let mut cand: Vec<&[u32]> = vec![&[]; n];
+        let mut cursor = vec![0usize; n];
+        cand[0] = &self.root_rows;
+        cursor[0] = 0;
+        let mut level = 0usize;
+
+        'outer: loop {
+            if cursor[level] >= cand[level].len() {
+                // Exhausted this level: backtrack.
+                if level == 0 {
+                    break;
+                }
+                level -= 1;
+                cursor[level] += 1;
+                continue;
+            }
+            current[level] = cand[level][cursor[level]];
+            if level + 1 == n {
+                // Full assignment: emit.
+                let w = self.row_weight(&current);
+                emitted += 1;
+                if !emit(&current, w) {
+                    break 'outer;
+                }
+                cursor[level] += 1;
+                continue;
+            }
+            // Descend: compute candidates of the next pre-order node from
+            // its (already assigned) parent.
+            let u = self.preorder[level + 1];
+            let p = self.tree.parent[u].expect("non-root in preorder tail");
+            let prel = rel_of(self.db, self.tree, p);
+            let prow = current[self.pre_pos[p]] as usize;
+            let key: Vec<u64> = self.parent_key_cols[u]
+                .iter()
+                .map(|&c| prel.col(c).key_u64(prow))
+                .collect();
+            match self.index[u].get(&key) {
+                Some(rows) if !rows.is_empty() => {
+                    level += 1;
+                    cand[level] = rows;
+                    cursor[level] = 0;
+                }
+                // Semi-join pruning guarantees a match; defensive skip.
+                _ => {
+                    cursor[level] += 1;
+                }
+            }
+        }
+        emitted
+    }
+
+    fn row_weight(&self, current: &[u32]) -> f64 {
+        let mut w = 1.0;
+        for (pos, &u) in self.preorder.iter().enumerate() {
+            let rel = rel_of(self.db, self.tree, u);
+            if rel.has_weights() {
+                w *= rel.weight(current[pos] as usize);
+            }
+        }
+        w
+    }
+
+    fn extract(&self, current: &[u32], out: &mut Vec<Value>) {
+        out.clear();
+        for &(node, col) in &self.feat_src {
+            let rel = rel_of(self.db, self.tree, node);
+            out.push(rel.value(current[self.pre_pos[node]] as usize, col));
+        }
+    }
+}
+
+/// Stream the FEQ output without storing it: `f(feature_values, weight)`
+/// per output tuple. Returns the number of tuples enumerated.
+pub fn stream_rows(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    mut f: impl FnMut(&[Value], f64),
+) -> Result<u64> {
+    let plan = build_plan(db, feq, tree)?;
+    let mut vals: Vec<Value> = Vec::with_capacity(feq.features.len());
+    let emitted = plan.enumerate(|current, w| {
+        plan.extract(current, &mut vals);
+        f(&vals, w);
+        true
+    });
+    Ok(emitted)
+}
+
+/// Materialize the full data matrix `X`. This is the expensive baseline
+/// step; use [`materialize_capped`] where a runaway join would OOM.
+pub fn materialize(db: &Database, feq: &Feq, tree: &JoinTree) -> Result<DataMatrix> {
+    materialize_capped(db, feq, tree, u64::MAX)
+}
+
+/// Materialize with a row cap; errors when the output exceeds it.
+pub fn materialize_capped(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    cap: u64,
+) -> Result<DataMatrix> {
+    let plan = build_plan(db, feq, tree)?;
+    let mut rows = Vec::new();
+    let mut weights = Vec::new();
+    let mut vals: Vec<Value> = Vec::with_capacity(feq.features.len());
+    let mut overflow = false;
+    plan.enumerate(|current, w| {
+        if rows.len() as u64 >= cap {
+            overflow = true;
+            return false;
+        }
+        plan.extract(current, &mut vals);
+        rows.push(vals.clone());
+        weights.push(w);
+        true
+    });
+    if overflow {
+        bail!("join output exceeds cap of {cap} rows");
+    }
+    Ok(DataMatrix {
+        feature_names: feq.features.iter().map(|f| f.attr.clone()).collect(),
+        rows,
+        weights,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Schema};
+    use crate::query::Hypergraph;
+
+    fn setup() -> (Database, Feq, JoinTree) {
+        // fact(a,b) ⋈ dim(b,c) ⋈ dim2(b,e): a 3-node tree with fanout.
+        let mut fact =
+            Relation::new("fact", Schema::new(vec![Attr::cat("a", 8), Attr::cat("b", 4)]));
+        for (a, b) in [(0, 0), (1, 0), (2, 1), (3, 3)] {
+            fact.push_row(&[Value::Cat(a), Value::Cat(b)]);
+        }
+        let mut dim = Relation::new("dim", Schema::new(vec![Attr::cat("b", 4), Attr::cat("c", 8)]));
+        for (b, c) in [(0, 0), (0, 1), (1, 2)] {
+            dim.push_row(&[Value::Cat(b), Value::Cat(c)]);
+        }
+        let mut dim2 =
+            Relation::new("dim2", Schema::new(vec![Attr::cat("b", 4), Attr::double("e")]));
+        for (b, e) in [(0, 0.5), (1, 1.5), (1, 2.5)] {
+            dim2.push_row(&[Value::Cat(b), Value::Double(e)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(dim);
+        db.add(dim2);
+        let feq = Feq::with_features(&["fact", "dim", "dim2"], &["a", "b", "c", "e"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        (db, feq, tree)
+    }
+
+    #[test]
+    fn materialize_matches_nested_loop() {
+        let (db, feq, tree) = setup();
+        let x = materialize(&db, &feq, &tree).unwrap();
+        // By hand: b=0 -> fact rows {0,1} × dim {0,1} × dim2 {0} = 4
+        //          b=1 -> fact {2} × dim {2} × dim2 {1,2} = 2
+        //          b=3 -> dangling. Total 6.
+        assert_eq!(x.len(), 6);
+        assert_eq!(x.mass(), 6.0);
+        assert_eq!(x.feature_names, vec!["a", "b", "c", "e"]);
+        // Output size must agree with the FAQ count.
+        let total = crate::faq::output_size(&db, &tree).unwrap();
+        assert_eq!(x.mass(), total);
+        // Spot-check one row: (a=2, b=1, c=2, e=1.5) must exist.
+        assert!(x.rows.iter().any(|r| r
+            == &vec![Value::Cat(2), Value::Cat(1), Value::Cat(2), Value::Double(1.5)]));
+    }
+
+    #[test]
+    fn stream_agrees_with_materialize() {
+        let (db, feq, tree) = setup();
+        let x = materialize(&db, &feq, &tree).unwrap();
+        let mut streamed = Vec::new();
+        let n = stream_rows(&db, &feq, &tree, |vals, w| {
+            streamed.push((vals.to_vec(), w));
+        })
+        .unwrap();
+        assert_eq!(n as usize, x.len());
+        // Same multiset of rows (order may differ).
+        for (vals, _) in &streamed {
+            assert!(x.rows.contains(vals));
+        }
+    }
+
+    #[test]
+    fn cap_is_enforced() {
+        let (db, feq, tree) = setup();
+        assert!(materialize_capped(&db, &feq, &tree, 3).is_err());
+        assert!(materialize_capped(&db, &feq, &tree, 6).is_ok());
+    }
+
+    #[test]
+    fn weighted_relations_multiply() {
+        let (mut db, feq, _) = setup();
+        {
+            let dim2 = db.get_mut("dim2").unwrap();
+            let mut new = Relation::new("dim2", dim2.schema.clone());
+            for r in 0..dim2.n_rows() {
+                new.push_row_weighted(&dim2.row(r), 2.0);
+            }
+            *dim2 = new;
+        }
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        let x = materialize(&db, &feq, &tree).unwrap();
+        assert_eq!(x.len(), 6);
+        assert_eq!(x.mass(), 12.0);
+    }
+
+    #[test]
+    fn empty_join_is_empty_matrix() {
+        let (mut db, feq, _) = setup();
+        *db.get_mut("dim").unwrap() =
+            Relation::new("dim", Schema::new(vec![Attr::cat("b", 4), Attr::cat("c", 8)]));
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        let x = materialize(&db, &feq, &tree).unwrap();
+        assert!(x.is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! Join materialization — the *baseline* path Rk-means avoids.
+//!
+//! The conventional workflow (paper Fig. 1a) computes the FEQ output `X`
+//! (here: [`materialize`], the stand-in for PostgreSQL in the paper's
+//! experiments), one-hot encodes it ([`embed`]) and runs k-means on the
+//! dense matrix. `X` can be polynomially larger than the database
+//! (`|X| ≤ N^ρ*`), which is exactly the cost Rk-means sidesteps.
+//!
+//! [`stream_rows`] enumerates the join output *without storing it* — used
+//! to evaluate clustering objectives over the full `X` with O(1) memory,
+//! and as the semantics oracle in integration tests.
+//!
+//! [`acyclic`] rewrites cyclic FEQs into acyclic ones by greedily merging
+//! relations (a poor man's hypertree decomposition), so the rest of the
+//! pipeline can assume a join tree exists.
+
+pub mod acyclic;
+pub mod embed;
+pub mod materialize;
+
+pub use acyclic::ensure_acyclic;
+pub use embed::{EmbedSpec, FeatEmb};
+pub use materialize::{materialize, materialize_capped, stream_rows, DataMatrix};

@@ -1,0 +1,72 @@
+//! # Rk-means: fast k-means clustering for relational data
+//!
+//! A production-oriented reproduction of *"Rk-means: Fast Clustering for
+//! Relational Data"* (Curtin, Moseley, Ngo, Nguyen, Olteanu, Schleich, 2019).
+//!
+//! Conventional k-means needs the materialized data matrix `X` — the output
+//! of a feature-extraction query (FEQ) joining several relations — which can
+//! be asymptotically larger than the database itself. Rk-means instead:
+//!
+//! 1. computes the *marginal* weight of every attribute value in the
+//!    (unmaterialized) join via FAQ / variable-elimination ([`faq`]),
+//! 2. optimally clusters each 1-attribute subspace (dynamic programming for
+//!    continuous attributes, a closed form for categorical ones) ([`cluster`]),
+//! 3. assembles the weighted *grid coreset* `G = C_1 × … × C_m`, extracting
+//!    only grid cells with non-zero weight — again without materializing the
+//!    join ([`coreset`]),
+//! 4. runs weighted k-means over the coreset with a factored distance
+//!    computation that is O(1) per (grid-point, centroid, subspace)
+//!    ([`cluster::sparse_lloyd`]).
+//!
+//! The result is a `(√α+√γ+√αγ)²`-approximation of the k-means objective on
+//! the full join output (9-approximation with exact sub-solvers), computed in
+//! time that can be *asymptotically smaller than `|X|`* (Theorem 4.7).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the relational engine and coordinator:
+//!   columnar storage ([`data`]), join hypergraphs + GYO join-tree
+//!   decomposition ([`query`]), a Yannakakis/InsideOut message-passing FAQ
+//!   engine ([`faq`]), the materializing baseline ([`join`]), the clustering
+//!   tool-box ([`cluster`]), the grid coreset ([`coreset`]), the end-to-end
+//!   pipeline ([`rkmeans`]), a streaming coordinator with backpressure and
+//!   incremental re-clustering ([`coordinator`]), synthetic workloads
+//!   mirroring the paper's Retailer / Favorita / Yelp datasets
+//!   ([`synthetic`]) and the paper-table bench harness ([`bench_harness`]).
+//! * **Layer 2 (python/compile/model.py)** — the JAX weighted-Lloyd step,
+//!   AOT-lowered to HLO text per shape bucket (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels/lloyd.py)** — the Pallas
+//!   distance+argmin kernel feeding the MXU, verified against a pure-jnp
+//!   oracle. Executed from rust through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the clustering path: the rust binary is
+//! self-contained once `artifacts/` is built.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rkmeans::synthetic::{retailer, Scale};
+//! use rkmeans::rkmeans::{rkmeans, RkConfig};
+//!
+//! let db = retailer::generate(Scale::tiny(), 42);
+//! let feq = retailer::feq();
+//! let res = rkmeans(&db, &feq, &RkConfig::new(5)).unwrap();
+//! println!("objective={} grid={} in {:?}",
+//!          res.objective_grid, res.grid_points, res.timings.total());
+//! ```
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod coordinator;
+pub mod coreset;
+pub mod data;
+pub mod faq;
+pub mod join;
+pub mod metrics;
+pub mod query;
+pub mod rkmeans;
+pub mod runtime;
+pub mod synthetic;
+pub mod util;
+
+pub use rkmeans::{rkmeans, RkConfig, RkResult};

@@ -1,0 +1,363 @@
+//! `rkmeans` — the Rk-means CLI (Layer-3 leader entrypoint).
+//!
+//! Subcommands:
+//! * `gen`       — generate a synthetic dataset to CSV;
+//! * `cluster`   — run Rk-means on a dataset (built-in or CSV directory);
+//! * `baseline`  — run the materialize-then-cluster baseline;
+//! * `tables`    — regenerate the paper's tables/figures;
+//! * `serve`     — streaming-coordinator demo (ingest + periodic recluster);
+//! * `artifacts` — inspect/verify the AOT artifact manifest.
+//!
+//! The environment is offline (no clap); flags are parsed by a small
+//! hand-rolled helper. Run `rkmeans help` for usage.
+
+use anyhow::{anyhow, bail, Result};
+use rkmeans::bench_harness::paper::{self, PaperCfg};
+use rkmeans::cluster::LloydConfig;
+use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
+use rkmeans::data::{csv, Value};
+use rkmeans::join::EmbedSpec;
+use rkmeans::rkmeans::{full_objective, materialize_and_cluster_capped, rkmeans, RkConfig};
+use rkmeans::runtime::PjrtRuntime;
+use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::util::{human_bytes, human_count, SplitMix64};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+rkmeans — fast k-means clustering for relational data (Rk-means, 2019)
+
+USAGE:
+  rkmeans gen       --dataset <retailer|favorita|yelp> [--scale F] [--seed N] --out DIR
+  rkmeans cluster   (--dataset NAME | --db DIR) --k K [--kappa κ] [--rho ρ] [--scale F]
+                    [--seed N] [--engine native|xla] [--eval-full]
+  rkmeans baseline  (--dataset NAME | --db DIR) --k K [--scale F] [--seed N] [--cap ROWS]
+  rkmeans tables    [--which table1|table2|fig3|ablation-fd|ablation-sparse|kappa-sweep|all]
+                    [--scale F] [--seed N] [--no-approx]
+  rkmeans serve     --dataset NAME [--scale F] [--rate N] [--batches N] [--k K]
+  rkmeans artifacts [--dir DIR]
+  rkmeans help
+";
+
+/// Minimal `--flag value` / `--flag` parser.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+            i += 1;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{name}: {v:?}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn load_db(args: &Args) -> Result<(rkmeans::data::Database, rkmeans::query::Feq, String)> {
+    let scale = args.num("scale", 0.02f64)?;
+    let seed = args.num("seed", 42u64)?;
+    if let Some(name) = args.get("dataset") {
+        let ds = Dataset::parse(name).ok_or_else(|| anyhow!("unknown dataset {name:?}"))?;
+        Ok((ds.generate(Scale::custom(scale), seed), ds.feq(), ds.name().to_string()))
+    } else if let Some(dir) = args.get("db") {
+        let db = csv::read_database(&PathBuf::from(dir))?;
+        // CSV databases join all relations on shared attribute names; the
+        // feature list comes from a `_features.txt` sidecar.
+        let rel_names: Vec<String> = db.relations().iter().map(|r| r.name.clone()).collect();
+        let rels: Vec<&str> = rel_names.iter().map(|s| s.as_str()).collect();
+        let feat_file = PathBuf::from(dir).join("_features.txt");
+        if !feat_file.exists() {
+            bail!("--db directories need a _features.txt listing the feature attributes");
+        }
+        let feats: Vec<String> = std::fs::read_to_string(feat_file)?
+            .lines()
+            .map(|l| l.trim().to_string())
+            .filter(|l| !l.is_empty())
+            .collect();
+        let frefs: Vec<&str> = feats.iter().map(|s| s.as_str()).collect();
+        let feq = rkmeans::query::Feq::with_features(&rels, &frefs);
+        Ok((db, feq, dir.to_string()))
+    } else {
+        bail!("need --dataset or --db")
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let (db, feq, name) = load_db(args)?;
+    let out = PathBuf::from(args.get("out").ok_or_else(|| anyhow!("need --out DIR"))?);
+    csv::write_database(&db, &out)?;
+    let feats: Vec<String> = feq.features.iter().map(|f| f.attr.clone()).collect();
+    std::fs::write(out.join("_features.txt"), feats.join("\n"))?;
+    println!(
+        "wrote {} ({} relations, {} rows, {}) to {}",
+        name,
+        db.relations().len(),
+        human_count(db.total_rows()),
+        human_bytes(db.total_bytes()),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let (db, feq, name) = load_db(args)?;
+    let k = args.num("k", 10usize)?;
+    let kappa = args.num("kappa", 0usize)?;
+    let seed = args.num("seed", 42u64)?;
+    let rho = args.num("rho", 0.0f64)?; // §3 regularizer (atom penalty)
+    let cfg = RkConfig { seed, ..RkConfig::new(k).with_kappa(kappa).with_regularization(rho) };
+
+    let engine = args.get("engine").unwrap_or("native");
+    let t0 = std::time::Instant::now();
+    let res = match engine {
+        "native" => rkmeans(&db, &feq, &cfg)?,
+        "xla" => {
+            let rt = PjrtRuntime::load(&PjrtRuntime::default_dir())?;
+            rkmeans_xla(&db, &feq, &cfg, &rt)?
+        }
+        other => bail!("unknown engine {other:?} (native|xla)"),
+    };
+    let total = t0.elapsed();
+
+    println!("dataset           : {name}");
+    println!("engine            : {engine}");
+    println!("k / κ             : {} / {}", k, cfg.effective_kappa());
+    println!("|G| grid cells    : {}", human_count(res.grid_points as u64));
+    println!("grid mass (|X|)   : {}", human_count(res.grid_mass as u64));
+    println!("step1 marginals   : {:?}", res.timings.step1_marginals);
+    println!("step2 subspaces   : {:?}", res.timings.step2_subspaces);
+    println!("step3 grid        : {:?}", res.timings.step3_grid);
+    println!("step4 cluster     : {:?} ({} iters)", res.timings.step4_cluster, res.iters);
+    println!("total             : {total:?}");
+    println!("grid objective    : {:.6e}", res.objective_grid);
+    println!("quantization cost : {:.6e}", res.quantization_cost);
+    println!("upper bound L(X,C): {:.6e}", res.objective_upper_bound());
+    if args.has("eval-full") {
+        let full = full_objective(&db, &feq, &res)?;
+        println!("full L(X,C)       : {full:.6e}");
+    }
+    Ok(())
+}
+
+/// Steps 1–3 native, Step 4 through the PJRT artifact (dense grid path).
+fn rkmeans_xla(
+    db: &rkmeans::data::Database,
+    feq: &rkmeans::query::Feq,
+    cfg: &RkConfig,
+    rt: &PjrtRuntime,
+) -> Result<rkmeans::rkmeans::RkResult> {
+    use rkmeans::coreset::{build_grid, grid_dense_embed, solve_subspaces};
+    use rkmeans::faq::{full_join_counts, marginals};
+    use rkmeans::query::Hypergraph;
+
+    let tree = Hypergraph::from_feq(db, feq).join_tree()?;
+    let mut res = rkmeans::rkmeans::rkmeans_with_tree(db, feq, &tree, cfg)?;
+
+    let jc = full_join_counts(db, &tree)?;
+    let margs = marginals(db, feq, &tree, &jc)?;
+    let models = solve_subspaces(feq, &margs, cfg.effective_kappa())?;
+    let (grid, _) = build_grid(db, feq, &tree, &models)?;
+    let spec = EmbedSpec::from_feq(db, feq)?;
+    let dense = grid_dense_embed(&grid, &models, &spec);
+    let lcfg = LloydConfig { k: cfg.k, seed: cfg.seed, ..LloydConfig::new(cfg.k) };
+    let t0 = std::time::Instant::now();
+    let xla = rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg)?;
+    println!(
+        "xla step4         : {:?} ({} iters, objective {:.6e})",
+        t0.elapsed(),
+        xla.iters,
+        xla.objective
+    );
+    res.timings.step4_cluster = t0.elapsed();
+    res.objective_grid = xla.objective;
+    Ok(res)
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let (db, feq, name) = load_db(args)?;
+    let k = args.num("k", 10usize)?;
+    let seed = args.num("seed", 42u64)?;
+    let cap = args.num("cap", 50_000_000u64)?;
+    let cfg = LloydConfig { k, seed, ..LloydConfig::new(k) };
+    let r = materialize_and_cluster_capped(&db, &feq, &cfg, cap)?;
+    println!("dataset        : {name}");
+    println!("|X| rows × D   : {} × {}", human_count(r.rows as u64), r.dims);
+    println!("dense bytes    : {}", human_bytes(r.dense_bytes));
+    println!("materialize    : {:?}", r.t_materialize);
+    println!("one-hot embed  : {:?}", r.t_embed);
+    println!("cluster        : {:?} ({} iters)", r.t_cluster, r.iters);
+    println!("total          : {:?}", r.total_time());
+    println!("objective      : {:.6e}", r.objective);
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let scale = args.num("scale", 0.02f64)?;
+    let mut cfg = PaperCfg::new(scale);
+    cfg.seed = args.num("seed", 42u64)?;
+    if args.has("no-approx") {
+        cfg.eval_approx = false;
+    }
+    let which = args.get("which").unwrap_or("all");
+    let all = which == "all";
+
+    if all || which == "table1" {
+        println!("{}", paper::table1(&cfg)?.render());
+    }
+    if all || which == "table2" {
+        for ds in Dataset::all() {
+            println!("{}", paper::table2(ds, &cfg)?.render());
+        }
+    }
+    if all || which == "fig3" {
+        for ds in Dataset::all() {
+            println!("{}", paper::fig3(ds, &cfg)?.render());
+        }
+    }
+    if all || which == "ablation-fd" {
+        println!("{}", paper::ablation_fd(&cfg)?.render());
+    }
+    if all || which == "ablation-sparse" {
+        for ds in Dataset::all() {
+            println!("{}", paper::ablation_sparse(ds, 10, &cfg)?.render());
+        }
+    }
+    if all || which == "kappa-sweep" {
+        println!(
+            "{}",
+            paper::kappa_sweep(Dataset::Favorita, 20, &[2, 5, 10, 20], &cfg)?.render()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (db, feq, name) = load_db(args)?;
+    let k = args.num("k", 5usize)?;
+    let rate = args.num("rate", 2000usize)?; // tuples per batch
+    let batches = args.num("batches", 5usize)?;
+    let seed = args.num("seed", 42u64)?;
+
+    // Stream new fact tuples into the coordinator; recluster per batch.
+    let fact = feq.relations[0].clone();
+    let fact_schema = db.get(&fact).expect("fact relation").schema.clone();
+    let domains: Vec<u32> = fact_schema.attrs().iter().map(|a| a.domain).collect();
+
+    let mut cfg = CoordinatorConfig::new(RkConfig { seed, ..RkConfig::new(k) });
+    cfg.recluster_every = rate;
+    let coord = Coordinator::start(db, feq, cfg);
+
+    println!("serving {name}: {batches} batches × {rate} tuples into {fact:?}");
+    let mut rng = SplitMix64::new(seed);
+    for b in 0..batches {
+        for _ in 0..rate {
+            let vals: Vec<Value> = fact_schema
+                .attrs()
+                .iter()
+                .zip(&domains)
+                .map(|(a, &dom)| match a.ty {
+                    rkmeans::data::AttrType::Cat => {
+                        Value::Cat(rng.below(dom.max(1) as u64) as u32)
+                    }
+                    rkmeans::data::AttrType::Int => Value::Int(rng.range(0, 100)),
+                    rkmeans::data::AttrType::Double => {
+                        Value::Double((rng.uniform(0.0, 50.0) * 100.0).round() / 100.0)
+                    }
+                })
+                .collect();
+            coord.insert(&fact, vals)?;
+        }
+        if let Some(u) = coord.recv_update(std::time::Duration::from_secs(120)) {
+            println!(
+                "batch {b}: v{} after {} tuples — |G|={} objective={:.4e} ({:?})",
+                u.version, u.ingested, u.result.grid_points, u.result.objective_grid, u.elapsed
+            );
+        }
+    }
+    println!("-- metrics --\n{}", coord.metrics().render());
+    coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get("dir").map(PathBuf::from).unwrap_or_else(PjrtRuntime::default_dir);
+    if !PjrtRuntime::available(&dir) {
+        bail!("no artifacts at {} — run `make artifacts`", dir.display());
+    }
+    let rt = PjrtRuntime::load(&dir)?;
+    println!("artifacts at {} ({} buckets):", dir.display(), rt.buckets().len());
+    for b in rt.buckets() {
+        println!(
+            "  {:<36} entry={:<11} N={:<6} D={:<3} K={:<3} vmem≈{}",
+            b.file,
+            b.entry,
+            b.n,
+            b.d,
+            b.k,
+            human_bytes(b.vmem_bytes)
+        );
+    }
+    // Smoke-execute the smallest bucket.
+    let pts: Vec<f64> = (0..64).map(|i| (i % 8) as f64).collect();
+    let w = vec![1.0; 32];
+    let r = rt.lloyd(&pts, &w, 2, &LloydConfig::new(2))?;
+    println!("smoke lloyd: objective={:.4} iters={}", r.objective, r.iters);
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = Args::parse(&rest).and_then(|args| match cmd {
+        "gen" => cmd_gen(&args),
+        "cluster" => cmd_cluster(&args),
+        "baseline" => cmd_baseline(&args),
+        "tables" => cmd_tables(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    });
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Lightweight metrics registry for the streaming coordinator and CLI:
+//! atomic counters and gauges with a printable snapshot. No external
+//! dependencies; safe to share across worker threads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add a (possibly negative) delta.
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A shared registry of named counters and gauges.
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.counters.lock().expect("metrics lock");
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.inner.gauges.lock().expect("metrics lock");
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Snapshot all metrics as sorted `(name, value)` pairs.
+    pub fn snapshot(&self) -> Vec<(String, i64)> {
+        let mut out = Vec::new();
+        for (k, c) in self.inner.counters.lock().expect("metrics lock").iter() {
+            out.push((k.clone(), c.get() as i64));
+        }
+        for (k, g) in self.inner.gauges.lock().expect("metrics lock").iter() {
+            out.push((k.clone(), g.get()));
+        }
+        out.sort();
+        out
+    }
+
+    /// Render the snapshot as `name=value` lines.
+    pub fn render(&self) -> String {
+        self.snapshot()
+            .into_iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.counter("tuples_in").add(5);
+        m.counter("tuples_in").inc();
+        m.gauge("queue_depth").set(3);
+        m.gauge("queue_depth").add(-1);
+        let snap = m.snapshot();
+        assert_eq!(snap, vec![("queue_depth".to_string(), 2), ("tuples_in".to_string(), 6)]);
+        assert!(m.render().contains("tuples_in=6"));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let m = Metrics::new();
+        let c = m.counter("hits");
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker");
+        }
+        assert_eq!(m.counter("hits").get(), 4000);
+    }
+}

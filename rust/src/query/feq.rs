@@ -1,0 +1,184 @@
+//! Feature-extraction query (FEQ) specification.
+
+use crate::data::{AttrType, Database};
+use anyhow::{bail, Result};
+
+/// A feature of the clustering instance: an attribute of the FEQ output,
+/// with an optional non-uniform weight (Huang-style mixed-type weighting,
+/// paper §2.3/§4.1 — the weight scales that subspace's contribution to the
+/// squared distance).
+#[derive(Clone, Debug)]
+pub struct FeatureSpec {
+    pub attr: String,
+    pub weight: f64,
+}
+
+impl FeatureSpec {
+    /// Unit-weight feature.
+    pub fn new(attr: &str) -> Self {
+        FeatureSpec { attr: attr.to_string(), weight: 1.0 }
+    }
+
+    /// Feature with an explicit weight.
+    pub fn weighted(attr: &str, weight: f64) -> Self {
+        FeatureSpec { attr: attr.to_string(), weight }
+    }
+}
+
+/// A feature-extraction query: the natural join of `relations`, projected
+/// onto `features`. Join variables are attributes shared by ≥2 relations.
+#[derive(Clone, Debug)]
+pub struct Feq {
+    pub relations: Vec<String>,
+    pub features: Vec<FeatureSpec>,
+}
+
+impl Feq {
+    /// Build an FEQ over the given relations and features.
+    pub fn new(relations: &[&str], features: Vec<FeatureSpec>) -> Self {
+        Feq {
+            relations: relations.iter().map(|s| s.to_string()).collect(),
+            features,
+        }
+    }
+
+    /// Convenience: unit-weight features by name.
+    pub fn with_features(relations: &[&str], features: &[&str]) -> Self {
+        Self::new(relations, features.iter().map(|f| FeatureSpec::new(f)).collect())
+    }
+
+    /// Number of features (the paper's `d`, pre-one-hot).
+    pub fn n_features(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Attributes shared by at least two participating relations — the join
+    /// variables of the natural join.
+    pub fn join_vars(&self, db: &Database) -> Vec<String> {
+        let mut counts: Vec<(String, usize)> = Vec::new();
+        for rname in &self.relations {
+            let rel = db.get(rname).expect("relation exists");
+            for a in rel.schema.attrs() {
+                match counts.iter_mut().find(|(n, _)| n == &a.name) {
+                    Some((_, c)) => *c += 1,
+                    None => counts.push((a.name.clone(), 1)),
+                }
+            }
+        }
+        counts.into_iter().filter(|(_, c)| *c >= 2).map(|(n, _)| n).collect()
+    }
+
+    /// The relation that "owns" each feature: the first participating
+    /// relation whose schema contains the attribute. Every per-attribute
+    /// computation (marginals, quotient columns) happens at the owner so a
+    /// shared join attribute is counted exactly once.
+    pub fn owner_of(&self, db: &Database, attr: &str) -> Option<usize> {
+        self.relations
+            .iter()
+            .position(|rname| db.get(rname).map(|r| r.schema.contains(attr)).unwrap_or(false))
+    }
+
+    /// Validate against a database: relations exist, features exist in some
+    /// participating relation, feature weights are positive, and no
+    /// continuous attribute is used as a join variable.
+    pub fn validate(&self, db: &Database) -> Result<()> {
+        if self.relations.is_empty() {
+            bail!("FEQ has no relations");
+        }
+        for rname in &self.relations {
+            if db.get(rname).is_none() {
+                bail!("FEQ references unknown relation {rname:?}");
+            }
+        }
+        for f in &self.features {
+            if self.owner_of(db, &f.attr).is_none() {
+                bail!("feature {:?} not found in any participating relation", f.attr);
+            }
+            if !(f.weight > 0.0) {
+                bail!("feature {:?} has non-positive weight {}", f.attr, f.weight);
+            }
+        }
+        for jv in self.join_vars(db) {
+            for rname in &self.relations {
+                let rel = db.get(rname).expect("validated above");
+                if let Some(idx) = rel.schema.index_of(&jv) {
+                    if rel.schema.attr(idx).ty == AttrType::Double {
+                        bail!("continuous attribute {jv:?} used as a join variable");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Feature weight by attribute name (1.0 if unlisted).
+    pub fn feature_weight(&self, attr: &str) -> f64 {
+        self.features
+            .iter()
+            .find(|f| f.attr == attr)
+            .map(|f| f.weight)
+            .unwrap_or(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema, Value};
+
+    fn db() -> Database {
+        let mut t = Relation::new(
+            "fact",
+            Schema::new(vec![Attr::cat("store", 2), Attr::cat("sku", 3), Attr::double("units")]),
+        );
+        t.push_row(&[Value::Cat(0), Value::Cat(1), Value::Double(2.0)]);
+        let mut s = Relation::new(
+            "stores",
+            Schema::new(vec![Attr::cat("store", 2), Attr::cat("city", 2)]),
+        );
+        s.push_row(&[Value::Cat(0), Value::Cat(1)]);
+        let mut db = Database::new();
+        db.add(t);
+        db.add(s);
+        db
+    }
+
+    #[test]
+    fn join_vars_and_owner() {
+        let db = db();
+        let feq = Feq::with_features(&["fact", "stores"], &["store", "sku", "units", "city"]);
+        assert_eq!(feq.join_vars(&db), vec!["store".to_string()]);
+        assert_eq!(feq.owner_of(&db, "city"), Some(1));
+        assert_eq!(feq.owner_of(&db, "store"), Some(0));
+        assert_eq!(feq.owner_of(&db, "nope"), None);
+        feq.validate(&db).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_queries() {
+        let db = db();
+        assert!(Feq::with_features(&["missing"], &["x"]).validate(&db).is_err());
+        assert!(Feq::with_features(&["fact"], &["city"]).validate(&db).is_err());
+        let mut feq = Feq::with_features(&["fact"], &["sku"]);
+        feq.features[0].weight = 0.0;
+        assert!(feq.validate(&db).is_err());
+    }
+
+    #[test]
+    fn rejects_continuous_join_var() {
+        let mut db = db();
+        // Add a relation sharing the continuous attribute name "units".
+        let mut bad = Relation::new("bad", Schema::new(vec![Attr::double("units")]));
+        bad.push_row(&[Value::Double(1.0)]);
+        db.add(bad);
+        let feq = Feq::with_features(&["fact", "bad"], &["sku"]);
+        assert!(feq.validate(&db).is_err());
+    }
+
+    #[test]
+    fn feature_weights_default_to_one() {
+        let feq = Feq::new(&["fact"], vec![FeatureSpec::weighted("sku", 2.0)]);
+        assert_eq!(feq.feature_weight("sku"), 2.0);
+        assert_eq!(feq.feature_weight("other"), 1.0);
+    }
+}

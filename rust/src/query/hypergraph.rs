@@ -1,0 +1,290 @@
+//! Join hypergraphs, GYO acyclicity testing and join-tree construction.
+//!
+//! The FAQ engine (paper §2.1) runs variable elimination over a join tree.
+//! For α-acyclic queries — all three paper workloads are — the GYO ear
+//! removal procedure yields a tree whose nodes are the relations and whose
+//! separators are the shared attributes; Yannakakis message passing over it
+//! computes counting FAQs in `Õ(N)`. We also report crude width statistics
+//! (`ρ*` upper bound via greedy integral edge cover) for the Theorem 4.7
+//! style `|X| ≤ N^ρ*` discussion in the bench reports.
+
+use crate::data::Database;
+use crate::query::Feq;
+use anyhow::{bail, Result};
+use std::collections::HashSet;
+
+/// A join hypergraph: vertices are attribute names, hyperedges are the
+/// attribute sets of the participating relations.
+#[derive(Clone, Debug)]
+pub struct Hypergraph {
+    pub vertices: Vec<String>,
+    /// (relation name, vertex indices)
+    pub edges: Vec<(String, Vec<usize>)>,
+}
+
+impl Hypergraph {
+    /// Build the hypergraph of an FEQ.
+    pub fn from_feq(db: &Database, feq: &Feq) -> Self {
+        let mut vertices: Vec<String> = Vec::new();
+        let vid = |name: &str, vs: &mut Vec<String>| -> usize {
+            if let Some(i) = vs.iter().position(|v| v == name) {
+                i
+            } else {
+                vs.push(name.to_string());
+                vs.len() - 1
+            }
+        };
+        let mut edges = Vec::new();
+        for rname in &feq.relations {
+            let rel = db.get(rname).expect("relation exists");
+            let mut e = Vec::new();
+            for a in rel.schema.attrs() {
+                e.push(vid(&a.name, &mut vertices));
+            }
+            edges.push((rname.clone(), e));
+        }
+        Hypergraph { vertices, edges }
+    }
+
+    /// Greedy integral edge cover of all vertices — an upper bound on the
+    /// fractional edge cover number ρ* (so `N^bound` upper-bounds `|X|`).
+    pub fn edge_cover_bound(&self) -> usize {
+        let mut uncovered: HashSet<usize> = (0..self.vertices.len()).collect();
+        let mut count = 0;
+        while !uncovered.is_empty() {
+            // Pick the edge covering the most uncovered vertices.
+            let (best, gain) = self
+                .edges
+                .iter()
+                .enumerate()
+                .map(|(i, (_, e))| (i, e.iter().filter(|v| uncovered.contains(v)).count()))
+                .max_by_key(|&(_, g)| g)
+                .expect("non-empty hypergraph");
+            if gain == 0 {
+                break; // isolated vertices (shouldn't happen: every vertex comes from an edge)
+            }
+            for v in &self.edges[best].1 {
+                uncovered.remove(v);
+            }
+            count += 1;
+        }
+        count
+    }
+
+    /// GYO ear-removal. Returns a join tree if the hypergraph is α-acyclic,
+    /// or an error naming the stuck residual edges otherwise.
+    pub fn join_tree(&self) -> Result<JoinTree> {
+        let n = self.edges.len();
+        let sets: Vec<HashSet<usize>> = self
+            .edges
+            .iter()
+            .map(|(_, e)| e.iter().copied().collect())
+            .collect();
+        let mut alive: Vec<bool> = vec![true; n];
+        let mut parent: Vec<Option<usize>> = vec![None; n];
+        let mut order: Vec<usize> = Vec::new(); // removal order: leaves first
+        let mut remaining = n;
+
+        while remaining > 1 {
+            // Find an ear: an edge e whose vertices-shared-with-others are
+            // all contained in some single other edge w (the witness).
+            let mut found = None;
+            'search: for e in 0..n {
+                if !alive[e] {
+                    continue;
+                }
+                // Vertices of e that appear in any other alive edge.
+                let shared: HashSet<usize> = sets[e]
+                    .iter()
+                    .filter(|v| {
+                        (0..n).any(|o| o != e && alive[o] && sets[o].contains(v))
+                    })
+                    .copied()
+                    .collect();
+                for w in 0..n {
+                    if w == e || !alive[w] {
+                        continue;
+                    }
+                    if shared.is_subset(&sets[w]) {
+                        found = Some((e, w));
+                        break 'search;
+                    }
+                }
+            }
+            match found {
+                Some((e, w)) => {
+                    parent[e] = Some(w);
+                    alive[e] = false;
+                    order.push(e);
+                    remaining -= 1;
+                }
+                None => {
+                    let stuck: Vec<&str> = (0..n)
+                        .filter(|&i| alive[i])
+                        .map(|i| self.edges[i].0.as_str())
+                        .collect();
+                    bail!("cyclic join hypergraph; residual edges: {stuck:?}");
+                }
+            }
+        }
+        let root = (0..n).find(|&i| alive[i]).expect("one edge remains");
+        order.push(root);
+
+        // Separators: shared vertices between each node and its parent.
+        let mut sep: Vec<Vec<String>> = vec![Vec::new(); n];
+        for e in 0..n {
+            if let Some(p) = parent[e] {
+                let mut s: Vec<String> = sets[e]
+                    .intersection(&sets[p])
+                    .map(|&v| self.vertices[v].clone())
+                    .collect();
+                s.sort();
+                sep[e] = s;
+            }
+        }
+
+        Ok(JoinTree {
+            rel_names: self.edges.iter().map(|(n, _)| n.clone()).collect(),
+            parent,
+            order,
+            sep,
+            root,
+        })
+    }
+}
+
+/// A rooted join tree over the FEQ's relations.
+///
+/// `order` lists node indices leaves-first (the last entry is the root), so
+/// an upward Yannakakis pass is a single scan of `order` and a downward pass
+/// a single reverse scan.
+#[derive(Clone, Debug)]
+pub struct JoinTree {
+    pub rel_names: Vec<String>,
+    pub parent: Vec<Option<usize>>,
+    /// Leaves-first processing order (root last).
+    pub order: Vec<usize>,
+    /// Separator attributes shared with the parent (empty for the root).
+    pub sep: Vec<Vec<String>>,
+    pub root: usize,
+}
+
+impl JoinTree {
+    /// Children of a node.
+    pub fn children(&self, node: usize) -> Vec<usize> {
+        self.parent
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| **p == Some(node))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.rel_names.len()
+    }
+
+    /// True when the tree has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.rel_names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema};
+
+    fn rel(name: &str, attrs: &[&str]) -> Relation {
+        Relation::new(
+            name,
+            Schema::new(attrs.iter().map(|a| Attr::cat(a, 10)).collect()),
+        )
+    }
+
+    fn db_of(rels: Vec<Relation>) -> Database {
+        let mut db = Database::new();
+        for r in rels {
+            db.add(r);
+        }
+        db
+    }
+
+    #[test]
+    fn star_query_is_acyclic() {
+        // fact(store, sku, date) with three dimension tables.
+        let db = db_of(vec![
+            rel("fact", &["store", "sku", "date"]),
+            rel("stores", &["store", "city"]),
+            rel("items", &["sku", "cat"]),
+            rel("dates", &["date", "holiday"]),
+        ]);
+        let feq = Feq::with_features(&["fact", "stores", "items", "dates"], &["store"]);
+        let hg = Hypergraph::from_feq(&db, &feq);
+        let tree = hg.join_tree().unwrap();
+        assert_eq!(tree.len(), 4);
+        // The dimension tables hang off the fact table (fact itself may end
+        // up as an ear of its last remaining dimension — also a valid tree).
+        let fact = 0;
+        assert_eq!(tree.parent[1], Some(fact), "stores under fact");
+        assert_eq!(tree.parent[2], Some(fact), "items under fact");
+        assert_eq!(tree.sep[1], vec!["store".to_string()]);
+        assert_eq!(tree.sep[2], vec!["sku".to_string()]);
+        // Upward order visits children before parents.
+        let pos: Vec<usize> = (0..4).map(|i| tree.order.iter().position(|&x| x == i).unwrap()).collect();
+        for i in 0..4 {
+            if let Some(p) = tree.parent[i] {
+                assert!(pos[i] < pos[p], "child {i} must precede parent {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_query_is_acyclic() {
+        let db = db_of(vec![
+            rel("a", &["x", "y"]),
+            rel("b", &["y", "z"]),
+            rel("c", &["z", "w"]),
+        ]);
+        let feq = Feq::with_features(&["a", "b", "c"], &["x"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        assert_eq!(tree.len(), 3);
+        // Exactly one root.
+        assert_eq!(tree.parent.iter().filter(|p| p.is_none()).count(), 1);
+    }
+
+    #[test]
+    fn triangle_is_cyclic() {
+        let db = db_of(vec![
+            rel("ab", &["a", "b"]),
+            rel("bc", &["b", "c"]),
+            rel("ca", &["c", "a"]),
+        ]);
+        let feq = Feq::with_features(&["ab", "bc", "ca"], &["a"]);
+        let err = Hypergraph::from_feq(&db, &feq).join_tree().unwrap_err();
+        assert!(err.to_string().contains("cyclic"));
+    }
+
+    #[test]
+    fn edge_cover_bound_sane() {
+        let db = db_of(vec![
+            rel("fact", &["store", "sku"]),
+            rel("stores", &["store", "city"]),
+        ]);
+        let feq = Feq::with_features(&["fact", "stores"], &["store"]);
+        let hg = Hypergraph::from_feq(&db, &feq);
+        // Two edges suffice; one edge can't cover city+sku.
+        assert_eq!(hg.edge_cover_bound(), 2);
+    }
+
+    #[test]
+    fn single_relation_tree() {
+        let db = db_of(vec![rel("only", &["a", "b"])]);
+        let feq = Feq::with_features(&["only"], &["a"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        assert_eq!(tree.len(), 1);
+        assert_eq!(tree.root, 0);
+        assert!(tree.sep[0].is_empty());
+    }
+}

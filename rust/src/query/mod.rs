@@ -1,0 +1,14 @@
+//! Feature-extraction queries (FEQs) and their hypergraph structure.
+//!
+//! An FEQ is the natural join of a set of relations projected onto a list of
+//! feature attributes. Its hypergraph (vertices = attributes, hyperedges =
+//! relations) determines whether the join is *acyclic* — in which case a
+//! GYO-derived join tree drives the Yannakakis/InsideOut message passing
+//! used throughout Rk-means — and bounds the size of the materialized
+//! output (`|X| ≤ N^ρ*`, fractional edge cover, paper §4.4).
+
+pub mod feq;
+pub mod hypergraph;
+
+pub use feq::{Feq, FeatureSpec};
+pub use hypergraph::{Hypergraph, JoinTree};

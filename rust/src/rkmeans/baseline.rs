@@ -1,0 +1,130 @@
+//! The conventional baseline (paper Fig. 1a / Table 2 "psql + mlpack"):
+//! materialize the FEQ output, one-hot encode it, run k-means++ + Lloyd on
+//! the dense matrix. Memory and time both scale with `|X| × D` — the cost
+//! Rk-means exists to avoid.
+
+use crate::cluster::{weighted_lloyd, LloydConfig, LloydResult};
+use crate::data::Database;
+use crate::join::{materialize_capped, EmbedSpec};
+use crate::query::{Feq, Hypergraph};
+use anyhow::Result;
+use std::time::Duration;
+
+/// Timing + quality of a baseline run.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    /// Dense `k × D` centroids.
+    pub centroids: Vec<f64>,
+    /// Final weighted objective on the full `X`.
+    pub objective: f64,
+    /// Output rows `|X|`.
+    pub rows: usize,
+    /// One-hot dimensionality `D`.
+    pub dims: usize,
+    /// Estimated bytes held for the dense matrix (the paper's OOM story).
+    pub dense_bytes: u64,
+    /// Time to materialize `X` (the "Compute X (psql)" row of Table 2).
+    pub t_materialize: Duration,
+    /// Time to one-hot encode.
+    pub t_embed: Duration,
+    /// Time for k-means++ + Lloyd (the "Clustering (mlpack)" row).
+    pub t_cluster: Duration,
+    /// Lloyd iterations.
+    pub iters: usize,
+}
+
+impl BaselineResult {
+    /// End-to-end time (materialize + embed + cluster).
+    pub fn total_time(&self) -> Duration {
+        self.t_materialize + self.t_embed + self.t_cluster
+    }
+}
+
+/// Materialize-then-cluster with no row cap.
+pub fn materialize_and_cluster(
+    db: &Database,
+    feq: &Feq,
+    cfg: &LloydConfig,
+) -> Result<BaselineResult> {
+    materialize_and_cluster_capped(db, feq, cfg, u64::MAX)
+}
+
+/// Materialize-then-cluster, erroring if `|X|` exceeds `cap` rows (keeps
+/// benches from OOMing the way mlpack did at 900 GiB in the paper).
+pub fn materialize_and_cluster_capped(
+    db: &Database,
+    feq: &Feq,
+    cfg: &LloydConfig,
+    cap: u64,
+) -> Result<BaselineResult> {
+    feq.validate(db)?;
+    let tree = Hypergraph::from_feq(db, feq).join_tree()?;
+
+    let t0 = std::time::Instant::now();
+    let x = materialize_capped(db, feq, &tree, cap)?;
+    let t_materialize = t0.elapsed();
+
+    let t0 = std::time::Instant::now();
+    let spec = EmbedSpec::from_feq(db, feq)?;
+    let dense = spec.embed_matrix(&x);
+    let t_embed = t0.elapsed();
+    let dense_bytes = (dense.len() * std::mem::size_of::<f64>()) as u64;
+
+    let t0 = std::time::Instant::now();
+    let LloydResult { centroids, objective, iters, .. } =
+        weighted_lloyd(&dense, &x.weights, spec.dims, cfg);
+    let t_cluster = t0.elapsed();
+
+    Ok(BaselineResult {
+        centroids,
+        objective,
+        rows: x.len(),
+        dims: spec.dims,
+        dense_bytes,
+        t_materialize,
+        t_embed,
+        t_cluster,
+        iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema, Value};
+    use crate::util::SplitMix64;
+
+    fn setup(n: usize) -> (Database, Feq) {
+        let mut rng = SplitMix64::new(42);
+        let mut fact =
+            Relation::new("fact", Schema::new(vec![Attr::cat("c", 4), Attr::double("x")]));
+        for _ in 0..n {
+            let c = rng.below(4) as u32;
+            fact.push_row(&[Value::Cat(c), Value::Double(c as f64 * 10.0 + rng.next_f64())]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        let feq = Feq::with_features(&["fact"], &["c", "x"]);
+        (db, feq)
+    }
+
+    #[test]
+    fn baseline_end_to_end() {
+        let (db, feq) = setup(100);
+        let r = materialize_and_cluster(&db, &feq, &LloydConfig::new(4)).unwrap();
+        assert_eq!(r.rows, 100);
+        assert_eq!(r.dims, 5);
+        assert!(r.objective.is_finite());
+        assert!(r.dense_bytes > 0);
+        // 4 well-separated numeric regimes: objective far below variance.
+        assert!(r.objective < 100.0, "objective {}", r.objective);
+    }
+
+    #[test]
+    fn cap_propagates() {
+        let (db, feq) = setup(100);
+        assert!(
+            materialize_and_cluster_capped(&db, &feq, &LloydConfig::new(2), 10).is_err()
+        );
+    }
+}

@@ -1,0 +1,334 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts`) and run the Step-4 Lloyd hot path from rust. Python
+//! is never on this path — the HLO text was produced at build time by
+//! `python/compile/aot.py` and is compiled here by the XLA CPU client.
+//!
+//! Shape buckets: the manifest lists `lloyd_step_{N}x{D}x{K}` artifacts;
+//! [`PjrtRuntime::lloyd`] picks the smallest bucket that fits, pads points
+//! with zero-weight rows (exact no-ops for weighted Lloyd), pads dims with
+//! zero columns, and pads centroids at the `1e15` sentinel (never wins an
+//! argmin; `counts == 0` keeps it in place). The padding contract is
+//! enforced by `python/tests/test_model.py::test_padding_contract` on the
+//! python side and `padding_invariance` here.
+
+use crate::cluster::{kmeanspp_indices, LloydConfig, LloydResult};
+use crate::util::json::{self, Json};
+use crate::util::SplitMix64;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Sentinel coordinate for padded centroids (squared distances ~1e30 always
+/// lose the argmin against real centroids).
+pub const PAD_CENTROID: f32 = 1e15;
+
+/// One AOT artifact from the manifest.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub file: String,
+    pub entry: String,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Estimated VMEM bytes per kernel grid step (reporting only).
+    pub vmem_bytes: u64,
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    buckets: Vec<Bucket>,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Default artifacts directory (`$RKMEANS_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RKMEANS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load the manifest and initialize the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let doc = json::parse(&text).context("parse manifest.json")?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut buckets = Vec::new();
+        for a in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            buckets.push(Bucket {
+                file: a.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                entry: a.get("entry").and_then(Json::as_str).unwrap_or_default().to_string(),
+                n: a.get("n").and_then(Json::as_usize).unwrap_or(0),
+                d: a.get("d").and_then(Json::as_usize).unwrap_or(0),
+                k: a.get("k").and_then(Json::as_usize).unwrap_or(0),
+                vmem_bytes: a.get("vmem_bytes").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            });
+        }
+        if buckets.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(PjrtRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            buckets,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// True if an artifacts directory with a manifest exists.
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// The manifest buckets.
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest `lloyd_step` bucket fitting `(n, d, k)`.
+    pub fn pick_bucket(&self, n: usize, d: usize, k: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.entry == "lloyd_step" && b.n >= n && b.d >= d && b.k >= k)
+            .min_by_key(|b| (b.n, b.d, b.k))
+    }
+
+    /// Compile (or fetch from cache) the executable for a bucket.
+    fn ensure_compiled(&self, bucket: &Bucket) -> Result<()> {
+        let mut cache = self.cache.lock().expect("runtime cache lock");
+        if cache.contains_key(&bucket.file) {
+            return Ok(());
+        }
+        let path = self.dir.join(&bucket.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", bucket.file))?;
+        cache.insert(bucket.file.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute one padded Lloyd step on a bucket. Buffers use the padded
+    /// bucket sizes. Returns (new_centroids, counts, objective).
+    pub fn run_step(
+        &self,
+        bucket: &Bucket,
+        points: &[f32],
+        weights: &[f32],
+        centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        debug_assert_eq!(points.len(), bucket.n * bucket.d);
+        debug_assert_eq!(weights.len(), bucket.n);
+        debug_assert_eq!(centroids.len(), bucket.k * bucket.d);
+        self.ensure_compiled(bucket)?;
+        let cache = self.cache.lock().expect("runtime cache lock");
+        let exe = cache.get(&bucket.file).expect("just compiled");
+
+        let x = xla::Literal::vec1(points)
+            .reshape(&[bucket.n as i64, bucket.d as i64])
+            .map_err(|e| anyhow!("reshape points: {e}"))?;
+        let w = xla::Literal::vec1(weights);
+        let c = xla::Literal::vec1(centroids)
+            .reshape(&[bucket.k as i64, bucket.d as i64])
+            .map_err(|e| anyhow!("reshape centroids: {e}"))?;
+
+        let result =
+            exe.execute::<xla::Literal>(&[x, w, c]).map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+        let (new_c, counts, obj) =
+            out.to_tuple3().map_err(|e| anyhow!("expected 3-tuple output: {e}"))?;
+        Ok((
+            new_c.to_vec::<f32>().map_err(|e| anyhow!("read centroids: {e}"))?,
+            counts.to_vec::<f32>().map_err(|e| anyhow!("read counts: {e}"))?,
+            obj.to_vec::<f32>().map_err(|e| anyhow!("read objective: {e}"))?[0],
+        ))
+    }
+
+    /// Full weighted Lloyd via the AOT artifact: host-side k-means++
+    /// seeding and empty-cluster reseeding, device-side assignment +
+    /// update. Drop-in replacement for
+    /// [`crate::cluster::weighted_lloyd`] (f64 in/out).
+    pub fn lloyd(
+        &self,
+        points: &[f64],
+        weights: &[f64],
+        d: usize,
+        cfg: &LloydConfig,
+    ) -> Result<LloydResult> {
+        assert!(d > 0 && points.len() % d == 0);
+        let n = points.len() / d;
+        assert_eq!(weights.len(), n);
+        let k = cfg.k.min(n);
+        let bucket = self
+            .pick_bucket(n, d, k)
+            .ok_or_else(|| anyhow!("no artifact bucket fits n={n} d={d} k={k}"))?
+            .clone();
+
+        // Pad points / weights once.
+        let mut px = vec![0.0f32; bucket.n * bucket.d];
+        for i in 0..n {
+            for j in 0..d {
+                px[i * bucket.d + j] = points[i * d + j] as f32;
+            }
+        }
+        let mut pw = vec![0.0f32; bucket.n];
+        for i in 0..n {
+            pw[i] = weights[i] as f32;
+        }
+
+        // Host-side k-means++ seeding (same seeding as the native engine).
+        let mut rng = SplitMix64::new(cfg.seed);
+        let row = |i: usize| &points[i * d..(i + 1) * d];
+        let dist2 =
+            |a: &[f64], b: &[f64]| -> f64 { a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum() };
+        let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| dist2(row(i), row(j)));
+        let mut pc = vec![PAD_CENTROID; bucket.k * bucket.d];
+        for (c, &s) in seeds.iter().enumerate() {
+            for j in 0..d {
+                pc[c * bucket.d + j] = points[s * d + j] as f32;
+            }
+            for j in d..bucket.d {
+                pc[c * bucket.d + j] = 0.0;
+            }
+        }
+
+        let mut objective = f64::INFINITY;
+        let mut iters = 0;
+        for it in 0..cfg.max_iters.max(1) {
+            iters = it + 1;
+            let (new_c, counts, obj) = self.run_step(&bucket, &px, &pw, &pc)?;
+            pc = new_c;
+            // Host-side empty-cluster reseed: place at the heaviest point.
+            for c in 0..k {
+                if counts[c] == 0.0 {
+                    let far = (0..n)
+                        .max_by(|&a, &b| pw[a].partial_cmp(&pw[b]).expect("finite"))
+                        .expect("n > 0");
+                    for j in 0..bucket.d {
+                        pc[c * bucket.d + j] = px[far * bucket.d + j];
+                    }
+                }
+            }
+            let obj = obj as f64;
+            if objective.is_finite()
+                && ((objective - obj) / objective.abs().max(1e-30)).abs() < cfg.tol
+            {
+                break;
+            }
+            objective = obj;
+        }
+
+        // Unpad centroids; recompute exact assignment host-side in f64.
+        let mut centroids = vec![0.0f64; k * d];
+        for c in 0..k {
+            for j in 0..d {
+                centroids[c * d + j] = pc[c * bucket.d + j] as f64;
+            }
+        }
+        let mut assign = vec![0u32; n];
+        let mut final_obj = 0.0;
+        for i in 0..n {
+            let x = row(i);
+            let (mut best, mut bc) = (f64::INFINITY, 0u32);
+            for c in 0..k {
+                let s = dist2(x, &centroids[c * d..(c + 1) * d]);
+                if s < best {
+                    best = s;
+                    bc = c as u32;
+                }
+            }
+            assign[i] = bc;
+            final_obj += weights[i] * best;
+        }
+        Ok(LloydResult { centroids, assign, objective: final_obj, iters })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::weighted_lloyd;
+    use crate::util::testkit::assert_close;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = PjrtRuntime::default_dir();
+        if !PjrtRuntime::available(&dir) {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).expect("load runtime"))
+    }
+
+    fn blobs(n_per: usize, centers: &[(f64, f64)], seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let mut pts = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..n_per {
+                pts.push(cx + 0.05 * rng.normal());
+                pts.push(cy + 0.05 * rng.normal());
+            }
+        }
+        let w = vec![1.0; pts.len() / 2];
+        (pts, w)
+    }
+
+    #[test]
+    fn manifest_loads_and_picks_buckets() {
+        let Some(rt) = runtime() else { return };
+        assert!(!rt.buckets().is_empty());
+        let b = rt.pick_bucket(1000, 8, 8).expect("bucket");
+        assert!(b.n >= 1000 && b.d >= 8 && b.k >= 8);
+        // Too-large requests get None.
+        assert!(rt.pick_bucket(10_000_000, 8, 8).is_none());
+    }
+
+    #[test]
+    fn xla_lloyd_matches_native_engine() {
+        let Some(rt) = runtime() else { return };
+        let (pts, w) = blobs(100, &[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 5);
+        let cfg = LloydConfig::new(3);
+        let native = weighted_lloyd(&pts, &w, 2, &cfg);
+        let xla = rt.lloyd(&pts, &w, 2, &cfg).expect("xla lloyd");
+        // Same seeding, same update rule: objectives agree to f32 noise.
+        assert_close(native.objective, xla.objective, 1e-3);
+        assert_eq!(native.assign, xla.assign);
+    }
+
+    #[test]
+    fn padding_invariance() {
+        // Bucket padding must not change the answer.
+        let Some(rt) = runtime() else { return };
+        let (pts, w) = blobs(60, &[(0.0, 0.0), (5.0, 5.0)], 6);
+        let cfg = LloydConfig::new(2);
+        let r = rt.lloyd(&pts, &w, 2, &cfg).expect("xla lloyd");
+        let native = weighted_lloyd(&pts, &w, 2, &cfg);
+        assert_close(r.objective, native.objective, 1e-3);
+    }
+
+    #[test]
+    fn weighted_points_respected() {
+        let Some(rt) = runtime() else { return };
+        // One heavy point at 0, one light at 1; k=1 centroid at 0.1.
+        let pts = vec![0.0, 0.0, 1.0, 0.0];
+        let w = vec![9.0, 1.0];
+        let cfg = LloydConfig { k: 1, ..LloydConfig::new(1) };
+        let r = rt.lloyd(&pts, &w, 2, &cfg).expect("xla lloyd");
+        assert_close(r.centroids[0], 0.1, 1e-3);
+    }
+}

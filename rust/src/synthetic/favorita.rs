@@ -1,0 +1,228 @@
+//! Synthetic **Favorita** (paper §5: 6 relations, 15 attrs, 1470 one-hot;
+//! the public Kaggle grocery-forecasting dataset [17]).
+//!
+//! Schema:
+//! * `sales(date, store, item, unit_sales, onpromotion)` — fact table;
+//!   `unit_sales` has *many distinct values* (rounded to 2 decimals, like
+//!   the paper's precision-reduction), which is what makes Step 2's 1-D DP
+//!   dominate the runtime in Figure 3;
+//! * `items(item, class, perishable, price)`;
+//! * `stores(store, city, state, type, cluster)` with `store → city →
+//!   state`;
+//! * `transactions(date, store, txn_count)`;
+//! * `oil(date, oil_price)`;
+//! * `holiday(date, holiday_type)`.
+
+use crate::data::{Attr, Database, Relation, Schema, Value};
+use crate::query::Feq;
+use crate::util::{SplitMix64, Zipf};
+
+use super::Scale;
+
+struct Dims {
+    stores: usize,
+    cities: usize,
+    states: usize,
+    items: usize,
+    classes: usize,
+    dates: usize,
+    fact_rows: usize,
+}
+
+fn dims(scale: Scale) -> Dims {
+    let stores = 54.max(scale.n(54, 10));
+    let cities = (stores / 3).max(5);
+    let states = (cities / 2).max(3);
+    let items = scale.n(4000, 60);
+    Dims {
+        stores,
+        cities,
+        states,
+        items,
+        classes: (items / 12).max(8),
+        dates: scale.n(365, 25),
+        fact_rows: scale.n(2_500_000, 500),
+    }
+}
+
+/// Generate the Favorita database at a scale.
+pub fn generate(scale: Scale, seed: u64) -> Database {
+    let d = dims(scale);
+    let mut rng = SplitMix64::new(seed ^ 0xfa_0b_17_a5);
+    let mut db = Database::new();
+
+    // items
+    let mut items = Relation::new(
+        "items",
+        Schema::new(vec![
+            Attr::cat("item", d.items as u32),
+            Attr::cat("class", d.classes as u32),
+            Attr::cat("perishable", 2),
+            Attr::double("price"),
+        ]),
+    );
+    for i in 0..d.items {
+        items.push_row(&[
+            Value::Cat(i as u32),
+            Value::Cat(rng.below(d.classes as u64) as u32),
+            Value::Cat(u32::from(rng.coin(0.25))),
+            Value::Double((rng.uniform(0.5, 40.0) * 100.0).round() / 100.0),
+        ]);
+    }
+    db.add(items);
+
+    // stores with the city -> state FD.
+    let mut stores = Relation::new(
+        "stores",
+        Schema::new(vec![
+            Attr::cat("store", d.stores as u32),
+            Attr::cat("city", d.cities as u32),
+            Attr::cat("state", d.states as u32),
+            Attr::cat("type", 5),
+            Attr::cat("cluster", 17),
+        ]),
+    );
+    let city_of: Vec<u32> = (0..d.stores).map(|_| rng.below(d.cities as u64) as u32).collect();
+    let state_of: Vec<u32> = (0..d.cities).map(|_| rng.below(d.states as u64) as u32).collect();
+    for s in 0..d.stores {
+        let c = city_of[s];
+        stores.push_row(&[
+            Value::Cat(s as u32),
+            Value::Cat(c),
+            Value::Cat(state_of[c as usize]),
+            Value::Cat(rng.below(5) as u32),
+            Value::Cat(rng.below(17) as u32),
+        ]);
+    }
+    db.add(stores);
+    db.add_fd("store", "city");
+    db.add_fd("city", "state");
+
+    // transactions: one row per (date, store).
+    let mut tx = Relation::new(
+        "transactions",
+        Schema::new(vec![
+            Attr::cat("date", d.dates as u32),
+            Attr::cat("store", d.stores as u32),
+            Attr::double("txn_count"),
+        ]),
+    );
+    for t in 0..d.dates {
+        for s in 0..d.stores {
+            tx.push_row(&[
+                Value::Cat(t as u32),
+                Value::Cat(s as u32),
+                Value::Double((800.0 + 400.0 * rng.normal()).round().max(0.0)),
+            ]);
+        }
+    }
+    db.add(tx);
+
+    // oil: one price per date.
+    let mut oil = Relation::new(
+        "oil",
+        Schema::new(vec![Attr::cat("date", d.dates as u32), Attr::double("oil_price")]),
+    );
+    let mut price = 60.0;
+    for t in 0..d.dates {
+        price = (price + rng.normal()).clamp(25.0, 110.0);
+        oil.push_row(&[Value::Cat(t as u32), Value::Double((price * 100.0).round() / 100.0)]);
+    }
+    db.add(oil);
+
+    // holiday: type per date (0 = none).
+    let mut holiday = Relation::new(
+        "holiday",
+        Schema::new(vec![Attr::cat("date", d.dates as u32), Attr::cat("holiday_type", 4)]),
+    );
+    for t in 0..d.dates {
+        let ty = if rng.coin(0.1) { 1 + rng.below(3) as u32 } else { 0 };
+        holiday.push_row(&[Value::Cat(t as u32), Value::Cat(ty)]);
+    }
+    db.add(holiday);
+
+    // sales: the fact table. unit_sales is lognormal-ish rounded to two
+    // decimals — the high-distinct-count continuous attribute that makes
+    // Step 2 dominate (paper Fig. 3 discussion).
+    let mut sales = Relation::new(
+        "sales",
+        Schema::new(vec![
+            Attr::cat("date", d.dates as u32),
+            Attr::cat("store", d.stores as u32),
+            Attr::cat("item", d.items as u32),
+            Attr::double("unit_sales"),
+            Attr::cat("onpromotion", 2),
+        ]),
+    );
+    let item_zipf = Zipf::new(d.items, 1.05);
+    for _ in 0..d.fact_rows {
+        let item = item_zipf.sample(&mut rng);
+        let promo = rng.coin(0.08);
+        let mu = 1.2 + 1.5 / (1.0 + item as f64).ln_1p() + if promo { 0.7 } else { 0.0 };
+        let units = (mu + 0.8 * rng.normal()).exp();
+        sales.push_row(&[
+            Value::Cat(rng.below(d.dates as u64) as u32),
+            Value::Cat(rng.below(d.stores as u64) as u32),
+            Value::Cat(item as u32),
+            Value::Double((units * 100.0).round() / 100.0),
+            Value::Cat(u32::from(promo)),
+        ]);
+    }
+    db.add(sales);
+
+    db
+}
+
+/// The Favorita FEQ (item/store/date ids are join keys, not features).
+pub fn feq() -> Feq {
+    Feq::with_features(
+        &["sales", "items", "stores", "transactions", "oil", "holiday"],
+        &[
+            "unit_sales",
+            "onpromotion",
+            "class",
+            "perishable",
+            "price",
+            "city",
+            "state",
+            "type",
+            "cluster",
+            "txn_count",
+            "oil_price",
+            "holiday_type",
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faq::output_size;
+    use crate::query::Hypergraph;
+
+    #[test]
+    fn join_preserves_fact_rows() {
+        let db = generate(Scale::tiny(), 1);
+        let tree = Hypergraph::from_feq(&db, &feq()).join_tree().unwrap();
+        let x = output_size(&db, &tree).unwrap();
+        assert_eq!(x, db.get("sales").unwrap().n_rows() as f64);
+    }
+
+    #[test]
+    fn unit_sales_has_many_distinct_values() {
+        let db = generate(Scale::small(), 2);
+        let sales = db.get("sales").unwrap();
+        let col = sales.schema.index_of("unit_sales").unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..sales.n_rows() {
+            seen.insert(sales.value(r, col).as_f64().to_bits());
+        }
+        // The whole point of Favorita: distinct count ~ O(rows).
+        assert!(
+            seen.len() > sales.n_rows() / 10,
+            "only {} distinct of {}",
+            seen.len(),
+            sales.n_rows()
+        );
+    }
+}

@@ -1,0 +1,269 @@
+//! Synthetic **Retailer** (paper §5: 5 relations, 39 attrs, 95 one-hot;
+//! used by a large US retailer for sales forecasting).
+//!
+//! Schema (faithful to the paper's description):
+//! * `inventory(store, date, sku, units)` — the fact table, Zipf over skus;
+//! * `location(store, zip, city, state, distance_comp, store_type)` — with
+//!   the FD-chain `store → zip → city → state` (paper §4.2's example);
+//! * `census(zip, population, income, median_age, house_units)`;
+//! * `weather(store, date, temp, rain)`;
+//! * `items(sku, price, subcategory, category, category_cluster)` — with
+//!   the FD-chain `sku → subcategory → category`.
+//!
+//! Like the real dataset, `|X|` has the same *rows* as the fact table but
+//! ~3× the columns, so materialization blows up bytes, not rows.
+
+use crate::data::{Attr, Database, Relation, Schema, Value};
+use crate::query::Feq;
+use crate::util::{SplitMix64, Zipf};
+
+use super::Scale;
+
+/// Dimension sizes derived from the scale factor.
+struct Dims {
+    stores: usize,
+    zips: usize,
+    cities: usize,
+    states: usize,
+    dates: usize,
+    skus: usize,
+    subcats: usize,
+    cats: usize,
+    clusters: usize,
+    fact_rows: usize,
+}
+
+fn dims(scale: Scale) -> Dims {
+    let stores = scale.n(200, 8);
+    let zips = (stores / 3).max(4);
+    let cities = (zips / 3).max(3);
+    let states = (cities / 4).max(2);
+    let skus = scale.n(5000, 40);
+    let subcats = (skus / 20).max(12);
+    let cats = (subcats / 4).max(6);
+    Dims {
+        stores,
+        zips,
+        cities,
+        states,
+        dates: scale.n(364, 20),
+        skus,
+        subcats,
+        cats,
+        clusters: 8,
+        fact_rows: scale.n(2_000_000, 400),
+    }
+}
+
+/// Generate the Retailer database at a scale.
+pub fn generate(scale: Scale, seed: u64) -> Database {
+    let d = dims(scale);
+    let mut rng = SplitMix64::new(seed ^ 0x5e7a11e5);
+    let mut db = Database::new();
+
+    // location: store -> zip -> city -> state FD chain.
+    let mut location = Relation::new(
+        "location",
+        Schema::new(vec![
+            Attr::cat("store", d.stores as u32),
+            Attr::cat("zip", d.zips as u32),
+            Attr::cat("city", d.cities as u32),
+            Attr::cat("state", d.states as u32),
+            Attr::double("distance_comp"),
+            Attr::cat("store_type", 5),
+        ]),
+    );
+    let zip_of: Vec<u32> = (0..d.stores).map(|_| rng.below(d.zips as u64) as u32).collect();
+    let city_of: Vec<u32> = (0..d.zips).map(|_| rng.below(d.cities as u64) as u32).collect();
+    let state_of: Vec<u32> = (0..d.cities).map(|_| rng.below(d.states as u64) as u32).collect();
+    for s in 0..d.stores {
+        let zip = zip_of[s];
+        location.push_row(&[
+            Value::Cat(s as u32),
+            Value::Cat(zip),
+            Value::Cat(city_of[zip as usize]),
+            Value::Cat(state_of[city_of[zip as usize] as usize]),
+            Value::Double((rng.uniform(0.1, 40.0) * 10.0).round() / 10.0),
+            Value::Cat(rng.below(5) as u32),
+        ]);
+    }
+    db.add(location);
+    db.add_fd("store", "zip");
+    db.add_fd("zip", "city");
+    db.add_fd("city", "state");
+
+    // census: one row per zip, a few demographic doubles.
+    let mut census = Relation::new(
+        "census",
+        Schema::new(vec![
+            Attr::cat("zip", d.zips as u32),
+            Attr::double("population"),
+            Attr::double("income"),
+            Attr::double("median_age"),
+            Attr::double("house_units"),
+        ]),
+    );
+    for z in 0..d.zips {
+        census.push_row(&[
+            Value::Cat(z as u32),
+            Value::Double((rng.uniform(1.0, 80.0) * 1000.0).round()),
+            Value::Double((rng.uniform(25.0, 150.0) * 1000.0).round()),
+            Value::Double(rng.uniform(24.0, 55.0).round()),
+            Value::Double((rng.uniform(0.4, 30.0) * 1000.0).round()),
+        ]);
+    }
+    db.add(census);
+
+    // weather: full store × date grid, coarse-grained doubles.
+    let mut weather = Relation::new(
+        "weather",
+        Schema::new(vec![
+            Attr::cat("store", d.stores as u32),
+            Attr::cat("date", d.dates as u32),
+            Attr::double("temp"),
+            Attr::cat("rain", 2),
+        ]),
+    );
+    for s in 0..d.stores {
+        for t in 0..d.dates {
+            // Seasonal temperature, rounded to whole degrees.
+            let season = (t as f64 / d.dates.max(1) as f64 * std::f64::consts::TAU).sin();
+            weather.push_row(&[
+                Value::Cat(s as u32),
+                Value::Cat(t as u32),
+                Value::Double((15.0 + 12.0 * season + 3.0 * rng.normal()).round()),
+                Value::Cat(u32::from(rng.coin(0.25))),
+            ]);
+        }
+    }
+    db.add(weather);
+
+    // items: sku -> subcategory -> category FD chain + price.
+    let mut items = Relation::new(
+        "items",
+        Schema::new(vec![
+            Attr::cat("sku", d.skus as u32),
+            Attr::double("price"),
+            Attr::cat("subcategory", d.subcats as u32),
+            Attr::cat("category", d.cats as u32),
+            Attr::cat("category_cluster", d.clusters as u32),
+        ]),
+    );
+    let subcat_of: Vec<u32> = (0..d.skus).map(|_| rng.below(d.subcats as u64) as u32).collect();
+    let cat_of: Vec<u32> = (0..d.subcats).map(|_| rng.below(d.cats as u64) as u32).collect();
+    let cluster_of: Vec<u32> = (0..d.cats).map(|_| rng.below(d.clusters as u64) as u32).collect();
+    for sku in 0..d.skus {
+        let sc = subcat_of[sku];
+        let c = cat_of[sc as usize];
+        items.push_row(&[
+            Value::Cat(sku as u32),
+            Value::Double((rng.uniform(0.5, 120.0) * 100.0).round() / 100.0),
+            Value::Cat(sc),
+            Value::Cat(c),
+            Value::Cat(cluster_of[c as usize]),
+        ]);
+    }
+    db.add(items);
+    db.add_fd("sku", "subcategory");
+    db.add_fd("subcategory", "category");
+    db.add_fd("category", "category_cluster");
+
+    // inventory: the Zipf-skewed fact table.
+    let mut inventory = Relation::new(
+        "inventory",
+        Schema::new(vec![
+            Attr::cat("store", d.stores as u32),
+            Attr::cat("date", d.dates as u32),
+            Attr::cat("sku", d.skus as u32),
+            Attr::double("units"),
+        ]),
+    );
+    let sku_zipf = Zipf::new(d.skus, 1.1);
+    for _ in 0..d.fact_rows {
+        let sku = sku_zipf.sample(&mut rng);
+        // Popular skus carry more units; integers like real inventory.
+        let base = 40.0 / (1.0 + sku as f64).sqrt();
+        inventory.push_row(&[
+            Value::Cat(rng.below(d.stores as u64) as u32),
+            Value::Cat(rng.below(d.dates as u64) as u32),
+            Value::Cat(sku as u32),
+            Value::Double((base * rng.uniform(0.2, 2.0)).round().max(0.0)),
+        ]);
+    }
+    db.add(inventory);
+
+    db
+}
+
+/// The Retailer FEQ: join all five relations; cluster on the paper-style
+/// feature set (ids like `sku`/`store`/`date` are join keys, not features
+/// — matching the paper's modest one-hot width of 95).
+pub fn feq() -> Feq {
+    Feq::with_features(
+        &["inventory", "location", "census", "weather", "items"],
+        &[
+            "units",
+            "price",
+            "subcategory",
+            "category",
+            "category_cluster",
+            "zip",
+            "city",
+            "state",
+            "store_type",
+            "distance_comp",
+            "population",
+            "income",
+            "median_age",
+            "house_units",
+            "temp",
+            "rain",
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faq::output_size;
+    use crate::query::Hypergraph;
+
+    #[test]
+    fn join_preserves_fact_rows() {
+        // Every inventory row joins exactly one row in each dimension, so
+        // |X| = |inventory| (the paper's Retailer shape).
+        let db = generate(Scale::tiny(), 1);
+        let feq = feq();
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        let x = output_size(&db, &tree).unwrap();
+        assert_eq!(x, db.get("inventory").unwrap().n_rows() as f64);
+    }
+
+    #[test]
+    fn fd_chain_is_present() {
+        let db = generate(Scale::tiny(), 2);
+        let chains = db.fd_chains(&[
+            "zip".to_string(),
+            "city".to_string(),
+            "state".to_string(),
+            "temp".to_string(),
+        ]);
+        assert!(chains
+            .iter()
+            .any(|c| c == &["zip".to_string(), "city".to_string(), "state".to_string()]));
+    }
+
+    #[test]
+    fn zipf_skew_exists() {
+        let db = generate(Scale::tiny(), 3);
+        let inv = db.get("inventory").unwrap();
+        let sku_col = inv.schema.index_of("sku").unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for r in 0..inv.n_rows() {
+            *counts.entry(inv.col(sku_col).key_u64(r)).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        let avg = inv.n_rows() / counts.len().max(1);
+        assert!(max > 3 * avg, "head sku {max} should dominate average {avg}");
+    }
+}

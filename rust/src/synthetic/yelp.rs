@@ -1,0 +1,202 @@
+//! Synthetic **Yelp** (paper §5: 5 relations, 25 attrs, 1617 one-hot; the
+//! public Yelp Dataset Challenge [46]).
+//!
+//! The distinguishing structural feature: `category(business, category)` is
+//! **many-to-many** — a business has several categories — so the join
+//! output is a multiple of the review count (`8.7M` base rows → `22M`
+//! join rows in the paper). That blowup (`|X| ≫ |D|`) is what the
+//! generator reproduces.
+//!
+//! Schema:
+//! * `review(user, business, stars, rev_age)` — fact table, Zipf over both
+//!   users and businesses;
+//! * `users(user, review_count, fans, avg_stars)`;
+//! * `business(business, city, state, b_stars, b_review_count)`;
+//! * `category(business, category)` — ~2.5 rows per business;
+//! * `attributes(business, n_attributes)`.
+
+use crate::data::{Attr, Database, Relation, Schema, Value};
+use crate::query::Feq;
+use crate::util::{SplitMix64, Zipf};
+
+use super::Scale;
+
+struct Dims {
+    users: usize,
+    businesses: usize,
+    categories: usize,
+    cities: usize,
+    states: usize,
+    reviews: usize,
+}
+
+fn dims(scale: Scale) -> Dims {
+    let businesses = scale.n(10_000, 60);
+    Dims {
+        users: scale.n(50_000, 120),
+        businesses,
+        categories: scale.n(300, 15),
+        cities: (businesses / 100).max(8),
+        states: 12,
+        reviews: scale.n(1_000_000, 400),
+    }
+}
+
+/// Generate the Yelp database at a scale.
+pub fn generate(scale: Scale, seed: u64) -> Database {
+    let d = dims(scale);
+    let mut rng = SplitMix64::new(seed ^ 0x1e1f_ca75);
+    let mut db = Database::new();
+
+    // users
+    let mut users = Relation::new(
+        "users",
+        Schema::new(vec![
+            Attr::cat("user", d.users as u32),
+            Attr::double("review_count"),
+            Attr::double("fans"),
+            Attr::double("avg_stars"),
+        ]),
+    );
+    for u in 0..d.users {
+        let rc = (1.0 + rng.uniform(0.0, 3.0).exp2()).round();
+        users.push_row(&[
+            Value::Cat(u as u32),
+            Value::Double(rc),
+            Value::Double((rc * rng.uniform(0.0, 0.3)).round()),
+            Value::Double((rng.uniform(1.0, 5.0) * 2.0).round() / 2.0),
+        ]);
+    }
+    db.add(users);
+
+    // business
+    let mut business = Relation::new(
+        "business",
+        Schema::new(vec![
+            Attr::cat("business", d.businesses as u32),
+            Attr::cat("city", d.cities as u32),
+            Attr::cat("state", d.states as u32),
+            Attr::double("b_stars"),
+            Attr::double("b_review_count"),
+        ]),
+    );
+    let state_of: Vec<u32> = (0..d.cities).map(|_| rng.below(d.states as u64) as u32).collect();
+    for b in 0..d.businesses {
+        let city = rng.below(d.cities as u64) as u32;
+        business.push_row(&[
+            Value::Cat(b as u32),
+            Value::Cat(city),
+            Value::Cat(state_of[city as usize]),
+            Value::Double((rng.uniform(1.0, 5.0) * 2.0).round() / 2.0),
+            Value::Double(rng.uniform(0.0, 4.0).exp2().round()),
+        ]);
+    }
+    db.add(business);
+    db.add_fd("city", "state");
+
+    // category: many-to-many — the join-blowup source. Each business gets
+    // 1 + Geometric-ish extra categories (mean ≈ 2.5).
+    let mut category = Relation::new(
+        "category",
+        Schema::new(vec![
+            Attr::cat("business", d.businesses as u32),
+            Attr::cat("category", d.categories as u32),
+        ]),
+    );
+    let cat_zipf = Zipf::new(d.categories, 0.9);
+    for b in 0..d.businesses {
+        let n_cats = 1 + (rng.below(4) + rng.below(2)) as usize; // 1..=5, mean 2.5
+        let mut seen = Vec::with_capacity(n_cats);
+        for _ in 0..n_cats {
+            let c = cat_zipf.sample(&mut rng) as u32;
+            if !seen.contains(&c) {
+                seen.push(c);
+                category.push_row(&[Value::Cat(b as u32), Value::Cat(c)]);
+            }
+        }
+    }
+    db.add(category);
+
+    // attributes: aggregated attribute count per business.
+    let mut attributes = Relation::new(
+        "attributes",
+        Schema::new(vec![
+            Attr::cat("business", d.businesses as u32),
+            Attr::double("n_attributes"),
+        ]),
+    );
+    for b in 0..d.businesses {
+        attributes.push_row(&[Value::Cat(b as u32), Value::Double(rng.below(30) as f64)]);
+    }
+    db.add(attributes);
+
+    // review: the fact table.
+    let mut review = Relation::new(
+        "review",
+        Schema::new(vec![
+            Attr::cat("user", d.users as u32),
+            Attr::cat("business", d.businesses as u32),
+            Attr::double("stars"),
+            Attr::double("rev_age"),
+        ]),
+    );
+    let user_zipf = Zipf::new(d.users, 1.1);
+    let biz_zipf = Zipf::new(d.businesses, 1.05);
+    for _ in 0..d.reviews {
+        review.push_row(&[
+            Value::Cat(user_zipf.sample(&mut rng) as u32),
+            Value::Cat(biz_zipf.sample(&mut rng) as u32),
+            Value::Double(1.0 + rng.below(5) as f64),
+            Value::Double(rng.below(3000) as f64),
+        ]);
+    }
+    db.add(review);
+
+    db
+}
+
+/// The Yelp FEQ. `category` is a feature *and* the m:n blowup source.
+pub fn feq() -> Feq {
+    Feq::with_features(
+        &["review", "users", "business", "category", "attributes"],
+        &[
+            "stars",
+            "rev_age",
+            "review_count",
+            "fans",
+            "avg_stars",
+            "city",
+            "state",
+            "b_stars",
+            "b_review_count",
+            "category",
+            "n_attributes",
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faq::output_size;
+    use crate::query::Hypergraph;
+
+    #[test]
+    fn join_blows_up_reviews() {
+        // |X| must exceed |review| — the m:n category join at work.
+        let db = generate(Scale::tiny(), 1);
+        let tree = Hypergraph::from_feq(&db, &feq()).join_tree().unwrap();
+        let x = output_size(&db, &tree).unwrap();
+        let reviews = db.get("review").unwrap().n_rows() as f64;
+        assert!(x > 1.5 * reviews, "|X| = {x} vs reviews {reviews}");
+        assert!(x < 6.0 * reviews, "|X| = {x} suspiciously large");
+    }
+
+    #[test]
+    fn categories_are_multivalued() {
+        let db = generate(Scale::tiny(), 2);
+        let cat = db.get("category").unwrap();
+        let biz = db.get("business").unwrap();
+        assert!(cat.n_rows() > biz.n_rows(), "avg categories per business > 1");
+    }
+}

@@ -1,0 +1,63 @@
+//! Small self-contained utilities: a seedable RNG, Zipf sampling, timers,
+//! a minimal JSON reader/writer (the environment is offline, so we avoid
+//! external crates), and a tiny property-testing harness.
+
+pub mod fx;
+pub mod json;
+pub mod rng;
+pub mod testkit;
+pub mod timer;
+
+pub use fx::{FxHashMap, FxHashSet};
+pub use rng::{SplitMix64, Zipf};
+pub use timer::Stopwatch;
+
+/// Format a byte count as a human-readable string (e.g. `1.50 GB`).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with thousands separators plus an M/K suffix view,
+/// e.g. `12_345_678 -> "12.35M"`.
+pub fn human_count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 10_000 {
+        format!("{:.2}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MB");
+    }
+
+    #[test]
+    fn human_count_scales() {
+        assert_eq!(human_count(950), "950");
+        assert_eq!(human_count(12_345), "12.35K");
+        assert_eq!(human_count(12_345_678), "12.35M");
+        assert_eq!(human_count(2_500_000_000), "2.50B");
+    }
+}

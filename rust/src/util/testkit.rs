@@ -1,0 +1,90 @@
+//! A tiny property-testing harness (the offline environment has no
+//! `proptest`). `for_cases` runs a seeded generator/checker loop and reports
+//! the first failing seed so failures are reproducible one-liners.
+//!
+//! Usage:
+//! ```no_run
+//! use rkmeans::util::testkit::for_cases;
+//! for_cases(64, |rng| {
+//!     let n = 1 + rng.below(100) as usize;
+//!     assert!(n >= 1);
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Base seed; combined with the case index so each case is independent but
+/// the whole run is deterministic.
+pub const BASE_SEED: u64 = 0x5eed_cafe_f00d_0001;
+
+/// Run `cases` independent property checks. Each check receives its own
+/// seeded RNG. Panics (re-raising the inner panic) with the failing case id.
+pub fn for_cases(cases: u64, check: impl Fn(&mut SplitMix64) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = BASE_SEED ^ case.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = SplitMix64::new(seed);
+            check(&mut rng);
+        });
+        if let Err(payload) = result {
+            eprintln!("testkit: property failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Assert two floats are close in absolute-or-relative terms.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol}, scaled {})",
+        tol * scale
+    );
+}
+
+/// Assert two float slices are element-wise close.
+#[track_caller]
+pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "assert_all_close failed at index {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut firsts = Vec::new();
+        for _ in 0..2 {
+            let collected = std::sync::Mutex::new(Vec::new());
+            for_cases(4, |rng| {
+                collected.lock().unwrap().push(rng.next_u64());
+            });
+            firsts.push(collected.into_inner().unwrap());
+        }
+        assert_eq!(firsts[0], firsts[1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        for_cases(8, |rng| {
+            assert!(rng.next_f64() < 0.5, "intentional failure");
+        });
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+        assert_all_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9);
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock timing helpers used by the pipeline step breakdown (Figure 3)
+//! and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named laps.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    /// Create an idle stopwatch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or restart) timing a named lap; finishes any running lap first.
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Stop the running lap, if any, and record it.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.laps.push((name, t0.elapsed()));
+        }
+    }
+
+    /// Time a closure as a named lap and return its value.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        self.start(name);
+        let out = f();
+        self.stop();
+        out
+    }
+
+    /// Total duration attributed to `name` (laps may repeat).
+    pub fn total_for(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// Sum of all recorded laps.
+    pub fn total(&self) -> Duration {
+        self.laps.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// All laps in recording order.
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Measure a closure's wall time.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Duration as fractional seconds (for report tables).
+pub fn secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_by_name() {
+        let mut sw = Stopwatch::new();
+        sw.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        sw.time("b", || std::thread::sleep(Duration::from_millis(2)));
+        sw.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(sw.laps().len(), 3);
+        assert!(sw.total_for("a") >= Duration::from_millis(4));
+        assert!(sw.total() >= sw.total_for("a") + sw.total_for("b"));
+    }
+
+    #[test]
+    fn start_finishes_previous_lap() {
+        let mut sw = Stopwatch::new();
+        sw.start("x");
+        sw.start("y");
+        sw.stop();
+        assert_eq!(sw.laps().len(), 2);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration tests: the full Rk-means pipeline against the exhaustive
+//! baseline on all three paper workloads, plus the theoretical guarantees
+//! that must hold on every run (approximation bound, mass conservation,
+//! FD grid bound, κ monotonicity).
+
+use rkmeans::bench_harness::paper::{self, PaperCfg};
+use rkmeans::cluster::LloydConfig;
+use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
+use rkmeans::data::Value;
+use rkmeans::query::{Feq, Hypergraph};
+use rkmeans::rkmeans::{
+    full_objective, materialize_and_cluster, rkmeans, RkConfig,
+};
+use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::util::testkit::assert_close;
+
+#[test]
+fn pipeline_on_all_datasets() {
+    for ds in Dataset::all() {
+        let db = ds.generate(Scale::tiny(), 11);
+        let feq = ds.feq();
+        let res = rkmeans(&db, &feq, &RkConfig::new(5))
+            .unwrap_or_else(|e| panic!("{}: {e}", ds.name()));
+
+        // Grid mass must equal the FAQ output size.
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        let x_size = rkmeans::faq::output_size(&db, &tree).unwrap();
+        assert_close(res.grid_mass, x_size, 1e-9);
+
+        // The coreset never exceeds the data.
+        assert!(res.grid_points as f64 <= x_size);
+
+        // Full objective obeys the W₂ triangle-inequality upper bound.
+        let full = full_objective(&db, &feq, &res).unwrap();
+        assert!(
+            full <= res.objective_upper_bound() * (1.0 + 1e-9) + 1e-9,
+            "{}: full {} > bound {}",
+            ds.name(),
+            full,
+            res.objective_upper_bound()
+        );
+    }
+}
+
+#[test]
+fn approximation_ratio_well_below_theorem_bound() {
+    // Theorem 3.4: with α = 1 (exact subspace solvers) and Lloyd's γ, the
+    // paper observes ratios well below the 9× worst case. Verify against
+    // the exhaustive baseline on small instances of every dataset.
+    for ds in Dataset::all() {
+        let db = ds.generate(Scale::tiny(), 13);
+        let feq = ds.feq();
+        let k = 5;
+        let res = rkmeans(&db, &feq, &RkConfig { seed: 1, ..RkConfig::new(k) }).unwrap();
+        let rk_obj = full_objective(&db, &feq, &res).unwrap();
+        let base =
+            materialize_and_cluster(&db, &feq, &LloydConfig { seed: 1, ..LloydConfig::new(k) })
+                .unwrap();
+        let ratio = rk_obj / base.objective.max(1e-12);
+        assert!(
+            ratio < 9.0,
+            "{}: approximation ratio {ratio:.3} ≥ 9 (rk {rk_obj:.4e} vs base {:.4e})",
+            ds.name(),
+            base.objective
+        );
+        // And the paper's observation: usually close to 1.
+        assert!(ratio < 3.0, "{}: ratio {ratio:.3} surprisingly high", ds.name());
+    }
+}
+
+#[test]
+fn kappa_monotonicity() {
+    // Larger κ: finer coreset, (weakly) more cells and lower quantization.
+    let db = Dataset::Favorita.generate(Scale::tiny(), 17);
+    let feq = Dataset::Favorita.feq();
+    let mut last_cells = 0usize;
+    let mut last_quant = f64::INFINITY;
+    for kappa in [2usize, 4, 8, 16] {
+        let res = rkmeans(&db, &feq, &RkConfig::new(8).with_kappa(kappa)).unwrap();
+        assert!(
+            res.grid_points >= last_cells,
+            "κ={kappa}: cells {} < previous {last_cells}",
+            res.grid_points
+        );
+        assert!(
+            res.quantization_cost <= last_quant + 1e-9,
+            "κ={kappa}: quantization {} > previous {last_quant}",
+            res.quantization_cost
+        );
+        last_cells = res.grid_points;
+        last_quant = res.quantization_cost;
+    }
+}
+
+#[test]
+fn paper_smoke_tables_generate() {
+    // The paper-table machinery end to end at smoke scale.
+    let cfg = PaperCfg::smoke();
+    assert_eq!(paper::table1(&cfg).unwrap().rows.len(), 3);
+    let t2 = paper::table2(Dataset::Yelp, &cfg).unwrap();
+    assert!(!t2.rows.is_empty());
+    let f3 = paper::fig3(Dataset::Retailer, &cfg).unwrap();
+    assert_eq!(f3.rows.len(), cfg.ks.len());
+}
+
+#[test]
+fn coordinator_streams_and_reclusters() {
+    let db = Dataset::Retailer.generate(Scale::tiny(), 23);
+    let feq = Dataset::Retailer.feq();
+    let inv_schema = db.get("inventory").unwrap().schema.clone();
+    let stores = inv_schema.attr(0).domain as u64;
+    let dates = inv_schema.attr(1).domain as u64;
+    let skus = inv_schema.attr(2).domain as u64;
+
+    let mut cfg = CoordinatorConfig::new(RkConfig::new(4));
+    cfg.recluster_every = 200;
+    let coord = Coordinator::start(db, feq, cfg);
+
+    let mut rng = rkmeans::util::SplitMix64::new(5);
+    for _ in 0..200 {
+        coord
+            .insert(
+                "inventory",
+                vec![
+                    Value::Cat(rng.below(stores) as u32),
+                    Value::Cat(rng.below(dates) as u32),
+                    Value::Cat(rng.below(skus) as u32),
+                    Value::Double(rng.below(20) as f64),
+                ],
+            )
+            .unwrap();
+    }
+    let update = coord.recv_update(std::time::Duration::from_secs(120)).expect("update");
+    assert_eq!(update.ingested, 200);
+    assert!(update.result.grid_points > 0);
+    assert_eq!(coord.metrics().counter("coordinator.ingested").get(), 200);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn cyclic_query_is_handled_end_to_end() {
+    // Triangle query: rkmeans must rewrite and still satisfy the bound.
+    use rkmeans::data::{Attr, Database, Relation, Schema};
+    let mut rng = rkmeans::util::SplitMix64::new(3);
+    let mk = |name: &str, a: &str, b: &str, rng: &mut rkmeans::util::SplitMix64| {
+        let mut r = Relation::new(
+            name,
+            Schema::new(vec![Attr::cat(a, 5), Attr::cat(b, 5), Attr::double(&format!("p_{name}"))]),
+        );
+        for _ in 0..30 {
+            r.push_row(&[
+                Value::Cat(rng.below(5) as u32),
+                Value::Cat(rng.below(5) as u32),
+                Value::Double(rng.below(8) as f64),
+            ]);
+        }
+        r
+    };
+    let mut db = Database::new();
+    db.add(mk("r", "a", "b", &mut rng));
+    db.add(mk("s", "b", "c", &mut rng));
+    db.add(mk("t", "c", "a", &mut rng));
+    let feq = Feq::with_features(&["r", "s", "t"], &["p_r", "p_s", "p_t", "a", "b", "c"]);
+    assert!(Hypergraph::from_feq(&db, &feq).join_tree().is_err(), "should be cyclic");
+
+    let res = rkmeans(&db, &feq, &RkConfig::new(4)).unwrap();
+    assert!(res.grid_points > 0);
+}
+
+#[test]
+fn feature_weights_change_the_geometry() {
+    use rkmeans::query::FeatureSpec;
+    let db = Dataset::Retailer.generate(Scale::tiny(), 29);
+    // Upweight `units` heavily: quantization cost must be dominated by it.
+    let feq_flat = Dataset::Retailer.feq();
+    let feq_weighted = Feq::new(
+        &["inventory", "location", "census", "weather", "items"],
+        feq_flat
+            .features
+            .iter()
+            .map(|f| {
+                if f.attr == "units" {
+                    FeatureSpec::weighted("units", 100.0)
+                } else {
+                    FeatureSpec::new(&f.attr)
+                }
+            })
+            .collect(),
+    );
+    let flat = rkmeans(&db, &feq_flat, &RkConfig::new(4).with_kappa(3)).unwrap();
+    let heavy = rkmeans(&db, &feq_weighted, &RkConfig::new(4).with_kappa(3)).unwrap();
+    let flat_units = flat.models.iter().find(|m| m.name == "units").unwrap().cost;
+    let heavy_units = heavy.models.iter().find(|m| m.name == "units").unwrap().cost;
+    assert_close(heavy_units, 100.0 * flat_units, 1e-9);
+}

@@ -1,0 +1,203 @@
+//! Property tests: the FAQ engine must agree exactly with brute-force
+//! semantics on randomly generated acyclic databases. This is the
+//! correctness backbone of the whole system — every Rk-means step trusts
+//! these counts.
+
+use rkmeans::data::{Attr, Database, Relation, Schema, Value};
+use rkmeans::faq::{full_join_counts, grid_weights, marginals, output_size, GidAssigner, Marginal};
+use rkmeans::join::materialize;
+use rkmeans::query::{Feq, Hypergraph};
+use rkmeans::util::testkit::{assert_close, for_cases};
+use rkmeans::util::{FxHashMap, SplitMix64};
+
+/// Random star schema: fact(j1..jf, payload) + one dimension per join key,
+/// each dimension with a categorical and a continuous payload attribute.
+/// Fan-out on dimension keys is random (1..=3 rows per key), so the join
+/// both prunes (missing keys) and multiplies (duplicate keys).
+fn random_star(rng: &mut SplitMix64) -> (Database, Feq) {
+    let n_dims = 1 + rng.below(3) as usize;
+    let key_dom = 3 + rng.below(5) as u32;
+    let n_fact = 5 + rng.below(40) as usize;
+
+    let mut db = Database::new();
+    let mut rels: Vec<String> = Vec::new();
+    let mut features: Vec<String> = Vec::new();
+
+    // Fact table.
+    let mut fact_attrs: Vec<Attr> =
+        (0..n_dims).map(|i| Attr::cat(&format!("j{i}"), key_dom)).collect();
+    fact_attrs.push(Attr::double("payload"));
+    let mut fact = Relation::new("fact", Schema::new(fact_attrs));
+    for _ in 0..n_fact {
+        let mut vals: Vec<Value> =
+            (0..n_dims).map(|_| Value::Cat(rng.below(key_dom as u64) as u32)).collect();
+        vals.push(Value::Double((rng.below(6) as f64) * 0.5));
+        fact.push_row(&vals);
+    }
+    db.add(fact);
+    rels.push("fact".into());
+    features.push("payload".into());
+
+    // Dimensions with random fan-out; some keys intentionally missing.
+    for i in 0..n_dims {
+        let mut rel = Relation::new(
+            &format!("dim{i}"),
+            Schema::new(vec![
+                Attr::cat(&format!("j{i}"), key_dom),
+                Attr::cat(&format!("c{i}"), 6),
+                Attr::double(&format!("x{i}")),
+            ]),
+        );
+        for key in 0..key_dom {
+            if rng.coin(0.85) {
+                let fanout = 1 + rng.below(3);
+                for _ in 0..fanout {
+                    rel.push_row(&[
+                        Value::Cat(key),
+                        Value::Cat(rng.below(6) as u32),
+                        Value::Double((rng.below(4) as f64) * 0.25),
+                    ]);
+                }
+            }
+        }
+        db.add(rel);
+        rels.push(format!("dim{i}"));
+        features.push(format!("c{i}"));
+        features.push(format!("x{i}"));
+    }
+
+    let rel_refs: Vec<&str> = rels.iter().map(|s| s.as_str()).collect();
+    let feat_refs: Vec<&str> = features.iter().map(|s| s.as_str()).collect();
+    (db, Feq::with_features(&rel_refs, &feat_refs))
+}
+
+#[test]
+fn output_size_equals_materialized_rows() {
+    for_cases(25, |rng| {
+        let (db, feq) = random_star(rng);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+        let x = materialize(&db, &feq, &tree).expect("materialize");
+        let faq = output_size(&db, &tree).expect("faq");
+        assert_close(faq, x.mass(), 1e-9);
+    });
+}
+
+#[test]
+fn marginals_match_materialized_groupby() {
+    for_cases(20, |rng| {
+        let (db, feq) = random_star(rng);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+        let jc = full_join_counts(&db, &tree).expect("counts");
+        let faq_marg = marginals(&db, &feq, &tree, &jc).expect("marginals");
+        let x = materialize(&db, &feq, &tree).expect("materialize");
+
+        for (fi, f) in feq.features.iter().enumerate() {
+            // Brute-force group-by over the materialized output.
+            match &faq_marg[&f.attr] {
+                Marginal::Continuous(pairs) => {
+                    let mut expect: FxHashMap<u64, f64> = FxHashMap::default();
+                    for (row, w) in x.rows.iter().zip(&x.weights) {
+                        *expect.entry(row[fi].as_f64().to_bits()).or_insert(0.0) += w;
+                    }
+                    assert_eq!(pairs.len(), expect.len(), "support of {}", f.attr);
+                    for &(v, w) in pairs {
+                        assert_close(expect[&v.to_bits()], w, 1e-9);
+                    }
+                }
+                Marginal::Discrete(pairs) => {
+                    let mut expect: FxHashMap<u64, f64> = FxHashMap::default();
+                    for (row, w) in x.rows.iter().zip(&x.weights) {
+                        *expect.entry(row[fi].key_u64()).or_insert(0.0) += w;
+                    }
+                    assert_eq!(pairs.len(), expect.len(), "support of {}", f.attr);
+                    for &(v, w) in pairs {
+                        assert_close(expect[&v], w, 1e-9);
+                    }
+                }
+            }
+        }
+    });
+}
+
+struct ModAssigner(u32);
+impl GidAssigner for ModAssigner {
+    fn gid(&self, v: Value) -> u32 {
+        match v {
+            Value::Double(x) => ((x * 4.0) as i64).rem_euclid(self.0 as i64) as u32,
+            other => (other.key_u64() % self.0 as u64) as u32,
+        }
+    }
+    fn n_gids(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+#[test]
+fn grid_weights_match_materialized_assignment() {
+    for_cases(20, |rng| {
+        let (db, feq) = random_star(rng);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+        let kappa = 2 + rng.below(3) as u32;
+        let mut assigners: FxHashMap<String, Box<dyn GidAssigner>> = FxHashMap::default();
+        for f in &feq.features {
+            assigners.insert(f.attr.clone(), Box::new(ModAssigner(kappa)));
+        }
+        let gt = grid_weights(&db, &feq, &tree, &assigners).expect("grid");
+
+        // Oracle: materialize + assign + group.
+        let x = materialize(&db, &feq, &tree).expect("materialize");
+        let asg = ModAssigner(kappa);
+        let mut expect: FxHashMap<Vec<u32>, f64> = FxHashMap::default();
+        for (row, w) in x.rows.iter().zip(&x.weights) {
+            let key: Vec<u32> = row.iter().map(|v| asg.gid(*v)).collect();
+            *expect.entry(key).or_insert(0.0) += w;
+        }
+        assert_eq!(gt.len(), expect.len());
+        for (gids, w) in &gt.cells {
+            assert_close(expect[gids], *w, 1e-9);
+        }
+    });
+}
+
+#[test]
+fn dangling_tuples_never_counted() {
+    // A fact row with a key missing from a dimension contributes nothing.
+    let mut fact =
+        Relation::new("fact", Schema::new(vec![Attr::cat("j", 4), Attr::double("p")]));
+    fact.push_row(&[Value::Cat(0), Value::Double(1.0)]);
+    fact.push_row(&[Value::Cat(3), Value::Double(2.0)]); // dangling
+    let mut dim = Relation::new("dim", Schema::new(vec![Attr::cat("j", 4), Attr::cat("c", 2)]));
+    dim.push_row(&[Value::Cat(0), Value::Cat(1)]);
+    let mut db = Database::new();
+    db.add(fact);
+    db.add(dim);
+    let feq = Feq::with_features(&["fact", "dim"], &["p", "c"]);
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+    let jc = full_join_counts(&db, &tree).unwrap();
+    assert_eq!(jc.total, 1.0);
+    let m = marginals(&db, &feq, &tree, &jc).unwrap();
+    match &m["p"] {
+        Marginal::Continuous(pairs) => assert_eq!(pairs, &vec![(1.0, 1.0)]),
+        _ => panic!("p is continuous"),
+    }
+}
+
+#[test]
+fn weighted_base_relations_flow_through() {
+    for_cases(10, |rng| {
+        let (mut db, feq) = random_star(rng);
+        // Re-weight the fact table with random multiplicities.
+        let fact = db.get_mut("fact").expect("fact");
+        let mut new = Relation::new("fact", fact.schema.clone());
+        let mut rng2 = SplitMix64::new(rng.next_u64());
+        for r in 0..fact.n_rows() {
+            new.push_row_weighted(&fact.row(r), 1.0 + rng2.below(3) as f64);
+        }
+        *fact = new;
+
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+        let x = materialize(&db, &feq, &tree).expect("materialize");
+        let faq = output_size(&db, &tree).expect("faq");
+        assert_close(faq, x.mass(), 1e-9);
+    });
+}

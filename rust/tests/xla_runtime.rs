@@ -1,0 +1,84 @@
+//! Cross-engine integration: the XLA/PJRT artifact path must be
+//! interchangeable with the native engine on real coreset workloads (not
+//! just synthetic blobs). Skips gracefully when `artifacts/` is absent.
+
+use rkmeans::cluster::{weighted_lloyd, LloydConfig};
+use rkmeans::coreset::{build_grid, grid_dense_embed, solve_subspaces};
+use rkmeans::faq::{full_join_counts, marginals};
+use rkmeans::join::EmbedSpec;
+use rkmeans::query::Hypergraph;
+use rkmeans::runtime::PjrtRuntime;
+use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::util::SplitMix64;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = PjrtRuntime::default_dir();
+    if !PjrtRuntime::available(&dir) {
+        eprintln!("skipping xla tests: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("load runtime"))
+}
+
+#[test]
+fn xla_clusters_a_real_coreset() {
+    let Some(rt) = runtime() else { return };
+    // Retailer at tiny scale has one-hot D well inside the 64-dim bucket.
+    let ds = Dataset::Retailer;
+    let db = ds.generate(Scale::tiny(), 31);
+    let feq = ds.feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+    let jc = full_join_counts(&db, &tree).unwrap();
+    let margs = marginals(&db, &feq, &tree, &jc).unwrap();
+    let k = 6;
+    let models = solve_subspaces(&feq, &margs, k).unwrap();
+    let (grid, _) = build_grid(&db, &feq, &tree, &models).unwrap();
+    let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+    assert!(spec.dims <= 64, "tiny retailer must fit the 64-dim bucket (D={})", spec.dims);
+
+    let dense = grid_dense_embed(&grid, &models, &spec);
+    let cfg = LloydConfig { k, seed: 9, ..LloydConfig::new(k) };
+    let native = weighted_lloyd(&dense, &grid.weights, spec.dims, &cfg);
+    let xla = rt.lloyd(&dense, &grid.weights, spec.dims, &cfg).expect("xla lloyd");
+
+    // Same seeding + same algorithm, but the artifact computes distances
+    // in f32 while Retailer's raw census features reach ~1e5 (squares
+    // ~1e10): boundary assignments can flip and Lloyd then settles in a
+    // nearby local optimum. Objectives must still agree to a few percent.
+    let rel = (native.objective - xla.objective).abs() / native.objective.max(1e-9);
+    assert!(
+        rel < 0.10,
+        "native {} vs xla {} (rel {rel:.4})",
+        native.objective,
+        xla.objective
+    );
+}
+
+#[test]
+fn xla_native_agree_across_shapes() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(77);
+    for (n, d, k) in [(300usize, 5usize, 4usize), (1500, 12, 9), (5000, 30, 14)] {
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let cfg = LloydConfig { k, seed: 123, ..LloydConfig::new(k) };
+        let native = weighted_lloyd(&pts, &w, d, &cfg);
+        let xla = rt.lloyd(&pts, &w, d, &cfg).expect("xla lloyd");
+        let rel = (native.objective - xla.objective).abs() / native.objective.max(1e-9);
+        assert!(
+            rel < 2e-2,
+            "shape ({n},{d},{k}): native {} vs xla {}",
+            native.objective,
+            xla.objective
+        );
+    }
+}
+
+#[test]
+fn oversized_requests_fail_cleanly() {
+    let Some(rt) = runtime() else { return };
+    let pts = vec![0.0f64; 10 * 200]; // D=200 exceeds every bucket
+    let w = vec![1.0; 10];
+    let err = rt.lloyd(&pts, &w, 200, &LloydConfig::new(2)).unwrap_err();
+    assert!(err.to_string().contains("no artifact bucket"), "{err}");
+}
