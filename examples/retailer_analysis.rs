@@ -20,12 +20,8 @@
 
 use rkmeans::bench_harness::paper::{end_to_end, PaperCfg};
 use rkmeans::bench_harness::Table;
-use rkmeans::cluster::LloydConfig;
-use rkmeans::coreset::{build_grid, grid_dense_embed, solve_subspaces};
-use rkmeans::faq::{full_join_counts, marginals, output_size};
-use rkmeans::join::EmbedSpec;
+use rkmeans::faq::output_size;
 use rkmeans::query::Hypergraph;
-use rkmeans::runtime::PjrtRuntime;
 use rkmeans::synthetic::{Dataset, Scale};
 use rkmeans::util::{human_bytes, human_count};
 
@@ -77,41 +73,71 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
 
     // Optional: the XLA/PJRT Step-4 path on the k=10 coreset.
-    let art_dir = PjrtRuntime::default_dir();
-    if PjrtRuntime::available(&art_dir) {
-        let rt = PjrtRuntime::load(&art_dir)?;
-        let k = 10;
-        let jc = full_join_counts(&db, &tree)?;
-        let margs = marginals(&db, &feq, &tree, &jc)?;
-        let models = solve_subspaces(&feq, &margs, k)?;
-        let (grid, subspaces) = build_grid(&db, &feq, &tree, &models)?;
-        let spec = EmbedSpec::from_feq(&db, &feq)?;
-        let dense = grid_dense_embed(&grid, &models, &spec);
-        let lcfg = LloydConfig { k, seed: cfg.seed, ..LloydConfig::new(k) };
+    xla_step4(&db, &feq, &tree, &cfg)?;
+    Ok(())
+}
 
-        let t0 = std::time::Instant::now();
-        let native = rkmeans::cluster::sparse_lloyd(&grid, &subspaces, &lcfg);
-        let t_native = t0.elapsed();
-        match rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg) {
-            Ok(xla) => {
-                let t0 = std::time::Instant::now();
-                let _ = rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg)?; // warm
-                let t_xla = t0.elapsed();
-                println!(
-                    "step-4 engines on |G|={} D={}: factored-native {:?} (obj {:.4e}) vs \
-                     XLA-dense {:?} (obj {:.4e})",
-                    grid.n(),
-                    spec.dims,
-                    t_native,
-                    native.objective,
-                    t_xla,
-                    xla.objective
-                );
-            }
-            Err(e) => println!("XLA step-4 skipped: {e}"),
-        }
-    } else {
+/// Compare the factored native Step 4 with the XLA/PJRT artifact path.
+#[cfg(feature = "pjrt")]
+fn xla_step4(
+    db: &rkmeans::data::Database,
+    feq: &rkmeans::query::Feq,
+    tree: &rkmeans::query::JoinTree,
+    cfg: &PaperCfg,
+) -> anyhow::Result<()> {
+    use rkmeans::cluster::LloydConfig;
+    use rkmeans::coreset::{build_grid, grid_dense_embed, solve_subspaces};
+    use rkmeans::faq::{full_join_counts, marginals};
+    use rkmeans::join::EmbedSpec;
+    use rkmeans::runtime::PjrtRuntime;
+
+    let art_dir = PjrtRuntime::default_dir();
+    if !PjrtRuntime::available(&art_dir) {
         println!("(artifacts/ missing — run `make artifacts` for the XLA step-4 comparison)");
+        return Ok(());
     }
+    let rt = PjrtRuntime::load(&art_dir)?;
+    let k = 10;
+    let jc = full_join_counts(db, tree)?;
+    let margs = marginals(db, feq, tree, &jc)?;
+    let models = solve_subspaces(feq, &margs, k)?;
+    let (grid, subspaces) = build_grid(db, feq, tree, &models)?;
+    let spec = EmbedSpec::from_feq(db, feq)?;
+    let dense = grid_dense_embed(&grid, &models, &spec);
+    let lcfg = LloydConfig { k, seed: cfg.seed, ..LloydConfig::new(k) };
+
+    let t0 = std::time::Instant::now();
+    let native = rkmeans::cluster::sparse_lloyd(&grid, &subspaces, &lcfg);
+    let t_native = t0.elapsed();
+    match rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg) {
+        Ok(xla) => {
+            let t0 = std::time::Instant::now();
+            let _ = rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg)?; // warm
+            let t_xla = t0.elapsed();
+            println!(
+                "step-4 engines on |G|={} D={}: factored-native {:?} (obj {:.4e}) vs \
+                 XLA-dense {:?} (obj {:.4e})",
+                grid.n(),
+                spec.dims,
+                t_native,
+                native.objective,
+                t_xla,
+                xla.objective
+            );
+        }
+        Err(e) => println!("XLA step-4 skipped: {e}"),
+    }
+    Ok(())
+}
+
+/// Without the `pjrt` feature there is no artifact path to compare.
+#[cfg(not(feature = "pjrt"))]
+fn xla_step4(
+    _db: &rkmeans::data::Database,
+    _feq: &rkmeans::query::Feq,
+    _tree: &rkmeans::query::JoinTree,
+    _cfg: &PaperCfg,
+) -> anyhow::Result<()> {
+    println!("(built without `pjrt` — skip the XLA step-4 comparison)");
     Ok(())
 }

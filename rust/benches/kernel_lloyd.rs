@@ -1,50 +1,176 @@
 //! Bench K1 — the Step-4 hot path across engines and shape buckets:
-//! native dense Lloyd (rust), the XLA/PJRT AOT artifact (Pallas kernel
-//! under interpret=True), and the factored sparse Lloyd on an equivalent
-//! synthetic grid. One Lloyd iteration per measurement (fixed work).
+//! the bounds-pruned parallel engine vs. the naive serial reference on
+//! synthetic blob shapes and on the materialized synthetic Retailer
+//! workload (the acceptance target: n ≥ 100k, k ≥ 32), plus the XLA/PJRT
+//! AOT path when built with `--features pjrt` and artifacts exist. Both
+//! engine paths run in one invocation so the pruning speedup and skip
+//! rates are directly visible, and all rows are written as one
+//! `BENCH_lloyd.json` document per invocation (schema: see
+//! `bench_harness` docs; path override: `RKMEANS_BENCH_OUT`).
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_BENCH_SCALE` overrides the Retailer scale (default 0.06 ≈
+//! 120k join rows).
 
-use rkmeans::bench_harness::bench;
-use rkmeans::cluster::{weighted_lloyd, LloydConfig};
-use rkmeans::runtime::PjrtRuntime;
+use rkmeans::bench_harness::{write_bench_lloyd, LloydBenchRecord};
+use rkmeans::cluster::{weighted_lloyd_with, EngineOpts, LloydConfig};
+use rkmeans::join::{materialize, EmbedSpec};
+use rkmeans::query::Hypergraph;
+use rkmeans::synthetic::{retailer, Scale};
 use rkmeans::util::SplitMix64;
+use std::path::PathBuf;
 
+/// Blob-structured synthetic points: the regime where assignments
+/// stabilize after a few iterations (like real coresets), which is what
+/// bounds pruning exploits. Uniform noise would understate the win.
 fn synth(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
     let mut rng = SplitMix64::new(seed);
-    let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+    let blobs = 8usize;
+    let centers: Vec<f64> = (0..blobs * d).map(|_| rng.uniform(-8.0, 8.0)).collect();
+    let mut pts = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let b = rng.below(blobs as u64) as usize;
+        for j in 0..d {
+            pts.push(centers[b * d + j] + 0.5 * rng.normal());
+        }
+    }
     let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 2.0)).collect();
     (pts, w)
 }
 
+/// Run naive-serial and pruned-parallel on one workload, assert they
+/// agree exactly, print both rows, and record them.
+fn run_pair(
+    label: &str,
+    pts: &[f64],
+    w: &[f64],
+    d: usize,
+    k: usize,
+    iters: usize,
+    records: &mut Vec<LloydBenchRecord>,
+) {
+    let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: 3 };
+    let (rn, sn) = weighted_lloyd_with(pts, w, d, &cfg, &EngineOpts::naive_serial());
+    let (rp, sp) = weighted_lloyd_with(pts, w, d, &cfg, &EngineOpts::pruned());
+    assert_eq!(
+        rn.objective.to_bits(),
+        rp.objective.to_bits(),
+        "{label}: engine paths diverged"
+    );
+    assert!(rn.assign == rp.assign, "{label}: assignments diverged");
+    let naive = LloydBenchRecord::from_stats(label, "dense-naive", d, k, rn.objective, &sn);
+    let pruned = LloydBenchRecord::from_stats(label, "dense-pruned", d, k, rp.objective, &sp)
+        .with_speedup_vs(&naive);
+    println!("{}", naive.line());
+    println!("{}\n", pruned.line());
+    records.push(naive);
+    records.push(pruned);
+}
+
 fn main() -> anyhow::Result<()> {
-    let shapes = [(1024usize, 8usize, 8usize), (4096, 16, 16), (16384, 32, 16), (65536, 16, 16)];
-    let rt = if PjrtRuntime::available(&PjrtRuntime::default_dir()) {
-        Some(PjrtRuntime::load(&PjrtRuntime::default_dir())?)
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let mut records: Vec<LloydBenchRecord> = Vec::new();
+
+    // Synthetic shape sweep.
+    let shapes: &[(usize, usize, usize)] = if test_mode {
+        &[(1024, 8, 8), (4096, 16, 16)]
     } else {
-        eprintln!("(no artifacts — XLA rows skipped; run `make artifacts`)");
-        None
+        &[(4096, 16, 16), (16384, 32, 16), (65536, 16, 32)]
     };
-
-    for (n, d, k) in shapes {
+    let iters = if test_mode { 3 } else { 10 };
+    for &(n, d, k) in shapes {
         let (pts, w) = synth(n, d, 1);
-        let cfg = LloydConfig { k, max_iters: 1, tol: 0.0, seed: 3 };
+        run_pair(&format!("synth-{n}x{d}"), &pts, &w, d, k, iters, &mut records);
+    }
 
-        let mn = bench(&format!("native lloyd 1-iter N={n} D={d} K={k}"), 1, 5, || {
-            weighted_lloyd(&pts, &w, d, &cfg)
-        });
-        println!("{}", mn.line());
+    // The acceptance workload: materialized synthetic Retailer (|X| =
+    // fact rows; scale 0.06 ≈ 120k), dense engine, k ≥ 32.
+    let scale: f64 = std::env::var("RKMEANS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.002 } else { 0.06 });
+    let (rk, riters) = if test_mode { (4usize, 3usize) } else { (32, 15) };
+    let db = retailer::generate(Scale::custom(scale), 42);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+    let x = materialize(&db, &feq, &tree)?;
+    let spec = EmbedSpec::from_feq(&db, &feq)?;
+    let dense = spec.embed_matrix(&x);
+    println!(
+        "retailer workload: |X|={} rows × D={} (scale {scale}), k={rk}",
+        x.len(),
+        spec.dims
+    );
+    run_pair("retailer-materialized", &dense, &x.weights, spec.dims, rk, riters, &mut records);
 
-        if let Some(rt) = &rt {
-            match rt.lloyd(&pts, &w, d, &cfg) {
-                Ok(_) => {
-                    let mx = bench(&format!("xla    lloyd 1-iter N={n} D={d} K={k}"), 1, 5, || {
-                        rt.lloyd(&pts, &w, d, &cfg).expect("xla lloyd")
-                    });
-                    println!("{}", mx.line());
-                    println!("  -> native/xla: {:.2}×\n", mx.min() / mn.min());
-                }
-                Err(e) => println!("  (xla skipped: {e})\n"),
-            }
-        }
+    // XLA/PJRT comparison rows when the artifact path is available.
+    xla_rows(&mut records, test_mode);
+
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_BENCH_OUT").unwrap_or_else(|_| "BENCH_lloyd.json".to_string()),
+    );
+    write_bench_lloyd(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+
+    // The headline number the ROADMAP trajectory tracks.
+    if let Some(r) = records
+        .iter()
+        .find(|r| r.label == "retailer-materialized" && r.engine == "dense-pruned")
+    {
+        println!(
+            "retailer dense pruned vs naive: {:.2}× points/sec (skip rate {:.1}%)",
+            r.speedup_vs_naive.unwrap_or(0.0),
+            100.0 * r.skip_rate
+        );
     }
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_rows(records: &mut Vec<LloydBenchRecord>, test_mode: bool) {
+    use rkmeans::runtime::PjrtRuntime;
+    let dir = PjrtRuntime::default_dir();
+    if !PjrtRuntime::available(&dir) {
+        println!("(no artifacts — XLA rows skipped; run `make artifacts`)\n");
+        return;
+    }
+    let rt = match PjrtRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(XLA rows skipped: {e})\n");
+            return;
+        }
+    };
+    let (n, d, k, iters) = if test_mode { (1024, 8, 8, 3) } else { (16384, 32, 16, 10) };
+    let (pts, w) = synth(n, d, 1);
+    let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: 3 };
+    let t0 = std::time::Instant::now();
+    match rt.lloyd(&pts, &w, d, &cfg) {
+        Ok(res) => {
+            let wall = t0.elapsed().as_secs_f64();
+            let rec = LloydBenchRecord {
+                label: format!("synth-{n}x{d}"),
+                engine: "dense-xla".to_string(),
+                n,
+                dims: d,
+                k,
+                iters: res.iters,
+                wall_s: wall,
+                points_per_sec: if wall > 0.0 { (n * res.iters) as f64 / wall } else { 0.0 },
+                dist_evals: (n * k * res.iters) as u64,
+                dist_evals_skipped: 0,
+                skip_rate: 0.0,
+                objective: res.objective,
+                speedup_vs_naive: None,
+            };
+            println!("{}\n", rec.line());
+            records.push(rec);
+        }
+        Err(e) => println!("(xla skipped: {e})\n"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_rows(_records: &mut Vec<LloydBenchRecord>, _test_mode: bool) {
+    println!("(built without `pjrt` — XLA rows skipped)\n");
 }

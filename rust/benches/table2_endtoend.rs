@@ -1,11 +1,13 @@
 //! Bench T2 — regenerates paper Table 2: end-to-end runtime and relative
 //! approximation, Rk-means vs materialize+cluster, for k ∈ {5,10,20,50}
-//! with κ = k and the κ < k columns.
+//! with κ = k and the κ < k columns — followed by the Step-4 engine
+//! ablation (naive vs. bounds-pruned, factored and dense) so the pruning
+//! speedup and skip rates are visible in the same invocation.
 //!
 //! `RKMEANS_BENCH_SCALE` (default 0.05) controls dataset size;
 //! `RKMEANS_BENCH_KS` (comma-separated) overrides the k grid.
 
-use rkmeans::bench_harness::paper::{table2, PaperCfg};
+use rkmeans::bench_harness::paper::{engine_ablation, table2, PaperCfg};
 use rkmeans::synthetic::Dataset;
 
 fn main() -> anyhow::Result<()> {
@@ -19,6 +21,15 @@ fn main() -> anyhow::Result<()> {
         let t0 = std::time::Instant::now();
         println!("{}", table2(ds, &cfg)?.render());
         println!("[{} table2 generated in {:?}]", ds.name(), t0.elapsed());
+
+        // Step-4 engine paths on this dataset's coreset, pruned vs naive.
+        let k = cfg.ks.iter().copied().max().unwrap_or(20);
+        let (tbl, records) = engine_ablation(ds, k, 10, &cfg)?;
+        println!("{}", tbl.render());
+        for r in &records {
+            println!("{}", r.line());
+        }
+        println!();
     }
     Ok(())
 }

@@ -1,11 +1,58 @@
-//! Benchmark harness: timing utilities and the paper-table renderers used
-//! by `examples/paper_tables.rs` and the `rust/benches/*` targets. The
-//! environment is offline (no criterion), so the harness implements the
-//! warmup + repeated-measurement + min/mean/median reporting itself.
+//! Benchmark harness: timing utilities, the paper-table renderers used by
+//! `examples/paper_tables.rs` and the `rust/benches/*` targets, and the
+//! `BENCH_lloyd.json` perf-record writer. The environment is offline (no
+//! criterion), so the harness implements the warmup + repeated-measurement
+//! + min/mean/median reporting itself.
+//!
+//! # `BENCH_lloyd.json` schema (version 1)
+//!
+//! `benches/kernel_lloyd.rs` emits one JSON document per invocation (path
+//! from `RKMEANS_BENCH_OUT`, default `BENCH_lloyd.json`) so successive PRs
+//! have a Step-4 perf trajectory to beat:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "lloyd",
+//!   "records": [
+//!     {
+//!       "label": "retailer-materialized",
+//!       "engine": "dense-pruned",
+//!       "n": 120000,
+//!       "dims": 53,
+//!       "k": 32,
+//!       "iters": 15,
+//!       "wall_s": 1.84,
+//!       "points_per_sec": 978260.9,
+//!       "dist_evals": 8123456,
+//!       "dist_evals_skipped": 49321544,
+//!       "skip_rate": 0.858,
+//!       "objective": 123400.0,
+//!       "speedup_vs_naive": 3.1
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `label` names the workload; `engine` is `{dense,factored}-{naive,
+//!   pruned}` (plus `dense-xla` when the PJRT path runs).
+//! * `n` counts points (dense) or grid cells (factored); `dims` is the
+//!   dense dimensionality `D` or the subspace count `m` respectively.
+//! * `wall_s` covers the whole run (seeding + iterations);
+//!   `points_per_sec` = `n·iters / wall_s`.
+//! * `dist_evals` / `dist_evals_skipped` count (point, centroid) distance
+//!   evaluations performed vs. proven unnecessary by the Hamerly bounds;
+//!   `skip_rate` = skipped / (evals + skipped).
+//! * `speedup_vs_naive` is the `points_per_sec` ratio against the naive
+//!   serial reference on the same workload; absent on the naive rows.
 
 pub mod paper;
 
+use crate::cluster::PruneStats;
+use crate::util::json::Json;
 use crate::util::timer::secs;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One measured benchmark: run statistics in seconds.
@@ -129,6 +176,121 @@ impl Table {
     }
 }
 
+/// One Step-4 engine measurement for `BENCH_lloyd.json` (schema in the
+/// module docs).
+#[derive(Clone, Debug)]
+pub struct LloydBenchRecord {
+    pub label: String,
+    pub engine: String,
+    /// Points (dense) or grid cells (factored).
+    pub n: usize,
+    /// Dense dimensionality `D`, or subspace count `m` for factored runs.
+    pub dims: usize,
+    pub k: usize,
+    pub iters: usize,
+    pub wall_s: f64,
+    pub points_per_sec: f64,
+    pub dist_evals: u64,
+    pub dist_evals_skipped: u64,
+    pub skip_rate: f64,
+    pub objective: f64,
+    /// `points_per_sec` ratio vs. the naive serial reference row.
+    pub speedup_vs_naive: Option<f64>,
+}
+
+impl LloydBenchRecord {
+    /// Build a record from a run's engine statistics.
+    pub fn from_stats(
+        label: &str,
+        engine: &str,
+        dims: usize,
+        k: usize,
+        objective: f64,
+        stats: &PruneStats,
+    ) -> Self {
+        LloydBenchRecord {
+            label: label.to_string(),
+            engine: engine.to_string(),
+            n: stats.points as usize,
+            dims,
+            k,
+            iters: stats.iters,
+            wall_s: stats.wall.as_secs_f64(),
+            points_per_sec: stats.points_per_sec(),
+            dist_evals: stats.dist_evals,
+            dist_evals_skipped: stats.dist_evals_skipped,
+            skip_rate: stats.skip_rate(),
+            objective,
+            speedup_vs_naive: None,
+        }
+    }
+
+    /// Attach the throughput speedup against a naive reference record.
+    pub fn with_speedup_vs(mut self, naive: &LloydBenchRecord) -> Self {
+        self.speedup_vs_naive = Some(self.points_per_sec / naive.points_per_sec.max(1e-12));
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<26} {:<16} n={:<8} k={:<3} iters={:<3} {:>8.3}s  {:>12.0} pts/s  skip {:>5.1}%{}",
+            self.label,
+            self.engine,
+            self.n,
+            self.k,
+            self.iters,
+            self.wall_s,
+            self.points_per_sec,
+            100.0 * self.skip_rate,
+            self.speedup_vs_naive
+                .map(|s| format!("  ({s:.2}× vs naive)"))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("engine".to_string(), Json::Str(self.engine.clone()));
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("dims".to_string(), Json::Num(self.dims as f64));
+        m.insert("k".to_string(), Json::Num(self.k as f64));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        m.insert("points_per_sec".to_string(), Json::Num(self.points_per_sec));
+        m.insert("dist_evals".to_string(), Json::Num(self.dist_evals as f64));
+        m.insert(
+            "dist_evals_skipped".to_string(),
+            Json::Num(self.dist_evals_skipped as f64),
+        );
+        m.insert("skip_rate".to_string(), Json::Num(self.skip_rate));
+        m.insert("objective".to_string(), Json::Num(self.objective));
+        if let Some(s) = self.speedup_vs_naive {
+            m.insert("speedup_vs_naive".to_string(), Json::Num(s));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_lloyd.json` document.
+pub fn bench_lloyd_json(records: &[LloydBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("lloyd".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(LloydBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_lloyd.json` document to disk.
+pub fn write_bench_lloyd(path: &Path, records: &[LloydBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_lloyd_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -191,5 +353,34 @@ mod tests {
         assert_eq!(fmt_speedup(15.379), "15.38×");
         assert!(fmt_secs(Duration::from_millis(5)).ends_with("ms"));
         assert!(fmt_secs(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn lloyd_bench_json_roundtrips() {
+        let stats = PruneStats {
+            iters: 3,
+            points: 1000,
+            dist_evals: 5000,
+            dist_evals_skipped: 19000,
+            wall: Duration::from_millis(500),
+        };
+        let naive = LloydBenchRecord::from_stats("synth", "dense-naive", 8, 8, 42.0, &stats);
+        let pruned = LloydBenchRecord::from_stats("synth", "dense-pruned", 8, 8, 42.0, &stats)
+            .with_speedup_vs(&naive);
+        assert_eq!(pruned.speedup_vs_naive, Some(1.0));
+        assert!(pruned.line().contains("dense-pruned"));
+
+        let doc = bench_lloyd_json(&[naive, pruned]);
+        let text = doc.to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("engine").unwrap().as_str(), Some("dense-naive"));
+        assert_eq!(recs[0].get("n").unwrap().as_usize(), Some(1000));
+        assert!(recs[0].get("speedup_vs_naive").is_none());
+        assert_eq!(recs[1].get("speedup_vs_naive").unwrap().as_f64(), Some(1.0));
+        let skip = recs[1].get("skip_rate").unwrap().as_f64().unwrap();
+        assert!((skip - 19.0 / 24.0).abs() < 1e-9);
     }
 }

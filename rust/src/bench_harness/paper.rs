@@ -11,8 +11,10 @@
 //! | §4.3 factored vs generic Step 4 | [`ablation_sparse`] |
 //! | §5 κ < k sweep | [`kappa_sweep`] |
 
-use super::{fmt_secs, fmt_speedup, Table};
-use crate::cluster::{weighted_lloyd, LloydConfig};
+use super::{fmt_secs, fmt_speedup, LloydBenchRecord, Table};
+use crate::cluster::{
+    sparse_lloyd_with, weighted_lloyd, weighted_lloyd_with, EngineOpts, LloydConfig, PruneStats,
+};
 use crate::coreset::{build_grid, grid_dense_embed, solve_subspaces};
 use crate::data::Database;
 use crate::faq::{full_join_counts, marginals, output_size};
@@ -340,6 +342,85 @@ pub fn ablation_sparse(ds: Dataset, k: usize, cfg: &PaperCfg) -> Result<Table> {
     Ok(t)
 }
 
+/// **Step-4 engine ablation**: naive vs. bounds-pruned engine paths on
+/// one dataset's grid coreset, in both factored and dense form, with
+/// pruning statistics — the per-dataset view of the `BENCH_lloyd.json`
+/// trajectory. `tol = 0` fixes the iteration count so every path does the
+/// same logical work, and the naive/pruned pairs are asserted to agree
+/// exactly (the engine's bitwise-determinism contract).
+pub fn engine_ablation(
+    ds: Dataset,
+    k: usize,
+    iters: usize,
+    cfg: &PaperCfg,
+) -> Result<(Table, Vec<LloydBenchRecord>)> {
+    let db = ds.generate(Scale::custom(cfg.scale), cfg.seed);
+    let feq = ds.feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+    let jc = full_join_counts(&db, &tree)?;
+    let margs = marginals(&db, &feq, &tree, &jc)?;
+    let models = solve_subspaces(&feq, &margs, k)?;
+    let (grid, subspaces) = build_grid(&db, &feq, &tree, &models)?;
+    let spec = EmbedSpec::from_feq(&db, &feq)?;
+    let lcfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: cfg.seed };
+    let label = format!("{}-grid", ds.name().to_lowercase());
+
+    let (fac_naive, fs0) = sparse_lloyd_with(&grid, &subspaces, &lcfg, &EngineOpts::naive_serial());
+    let (fac_pruned, fs1) = sparse_lloyd_with(&grid, &subspaces, &lcfg, &EngineOpts::pruned());
+    anyhow::ensure!(
+        fac_naive.assign == fac_pruned.assign && fac_naive.objective == fac_pruned.objective,
+        "factored engine paths diverged on {}",
+        ds.name()
+    );
+
+    let dense_pts = grid_dense_embed(&grid, &models, &spec);
+    let (den_naive, ds0) =
+        weighted_lloyd_with(&dense_pts, &grid.weights, spec.dims, &lcfg, &EngineOpts::naive_serial());
+    let (den_pruned, ds1) =
+        weighted_lloyd_with(&dense_pts, &grid.weights, spec.dims, &lcfg, &EngineOpts::pruned());
+    anyhow::ensure!(
+        den_naive.assign == den_pruned.assign && den_naive.objective == den_pruned.objective,
+        "dense engine paths diverged on {}",
+        ds.name()
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "Step-4 engine ablation — {} k={k} |G|={} D={} (scale {})",
+            ds.name(),
+            grid.n(),
+            spec.dims,
+            cfg.scale
+        ),
+        &["engine", "time", "points/s", "evals", "skipped", "skip%", "objective", "iters"],
+    );
+    let mut records: Vec<LloydBenchRecord> = Vec::with_capacity(4);
+    let mut push = |engine: &str, dims: usize, objective: f64, stats: &PruneStats, naive: Option<usize>| {
+        let mut rec = LloydBenchRecord::from_stats(&label, engine, dims, k, objective, stats);
+        if let Some(idx) = naive {
+            rec = rec.with_speedup_vs(&records[idx]);
+        }
+        t.row(vec![
+            engine.to_string(),
+            format!("{:.3}s", rec.wall_s),
+            format!("{:.0}", rec.points_per_sec),
+            rec.dist_evals.to_string(),
+            rec.dist_evals_skipped.to_string(),
+            format!("{:.1}%", 100.0 * rec.skip_rate),
+            format!("{:.4e}", rec.objective),
+            rec.iters.to_string(),
+        ]);
+        records.push(rec);
+    };
+    push("factored-naive", grid.m, fac_naive.objective, &fs0, None);
+    push("factored-pruned", grid.m, fac_pruned.objective, &fs1, Some(0));
+    push("dense-naive", spec.dims, den_naive.objective, &ds0, None);
+    push("dense-pruned", spec.dims, den_pruned.objective, &ds1, Some(2));
+    drop(push);
+
+    Ok((t, records))
+}
+
 /// **κ sweep** (speed/approximation tradeoff, Prop 3.3b).
 pub fn kappa_sweep(ds: Dataset, k: usize, kappas: &[usize], cfg: &PaperCfg) -> Result<Table> {
     let db = ds.generate(Scale::custom(cfg.scale), cfg.seed);
@@ -428,5 +509,23 @@ mod tests {
         cfg.eval_approx = false;
         let t = kappa_sweep(Dataset::Favorita, 5, &[2, 5], &cfg).unwrap();
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn engine_ablation_paths_agree() {
+        // The ensure! calls inside assert the naive/pruned agreement; the
+        // four rows cover factored × dense × naive × pruned.
+        let cfg = PaperCfg::smoke();
+        let (t, records) = engine_ablation(Dataset::Retailer, 4, 5, &cfg).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(records.len(), 4);
+        assert!(records[0].speedup_vs_naive.is_none());
+        assert!(records[1].speedup_vs_naive.is_some());
+        assert_eq!(records[1].engine, "factored-pruned");
+        assert_eq!(records[3].engine, "dense-pruned");
+        // Fixed-iteration runs: every path did the same logical work.
+        for r in &records {
+            assert_eq!(r.iters, 5);
+        }
     }
 }

@@ -1,0 +1,410 @@
+//! Dense weighted Lloyd on row-major points through the shared engine:
+//! k-means++ seeding, the tiled microkernel for full scans, Hamerly bounds
+//! to skip unchanged assignments, and chunk-parallel accumulation. See the
+//! parent module docs for the bounds invariants and determinism contract.
+
+use super::microkernel::{self, TILE};
+use super::{resolve_threads, run_chunks, EngineOpts, PruneStats, CHUNK, SLACK_REL};
+use crate::cluster::kmeanspp::kmeanspp_indices;
+use crate::cluster::lloyd::{LloydConfig, LloydResult};
+use crate::util::SplitMix64;
+use std::time::Instant;
+
+/// Per-chunk accumulator, reduced in chunk order after each pass.
+struct Accum {
+    sums: Vec<f64>,
+    mass: Vec<f64>,
+    obj: f64,
+    evals: u64,
+    skipped: u64,
+    max_dd: f64,
+}
+
+impl Accum {
+    fn new(k: usize, d: usize) -> Self {
+        Accum {
+            sums: vec![0.0; k * d],
+            mass: vec![0.0; k],
+            obj: 0.0,
+            evals: 0,
+            skipped: 0,
+            max_dd: 0.0,
+        }
+    }
+}
+
+/// One chunk's view of the per-point state (disjoint mutable slices).
+struct DenseChunk<'a> {
+    pts: &'a [f64],
+    w: &'a [f64],
+    xnorm: &'a [f64],
+    assign: &'a mut [u32],
+    mind2: &'a mut [f64],
+    lb: &'a mut [f64],
+    acc: Accum,
+}
+
+/// Read-only per-iteration context shared by all chunks.
+struct PassCtx<'a> {
+    d: usize,
+    k: usize,
+    ct_t: &'a [f64],
+    cnorm: &'a [f64],
+    drift_max: f64,
+    s_half: &'a [f64],
+    slack: f64,
+    /// Bounds are valid and may be used to skip (pruning + not first
+    /// iteration + no reseed last iteration).
+    use_bounds: bool,
+    /// Maintain ub/lb on full scans (pruning enabled at all).
+    pruning: bool,
+}
+
+/// One assignment + accumulation pass over a chunk.
+fn assign_chunk(ch: &mut DenseChunk, ctx: &PassCtx) {
+    let (d, k) = (ctx.d, ctx.k);
+    let n = ch.w.len();
+
+    // Phase 1: bounds test. Points that cannot be proven unchanged are
+    // queued (in index order) for a full tiled scan.
+    let mut scan: Vec<u32> = Vec::with_capacity(n);
+    if ctx.use_bounds {
+        for i in 0..n {
+            let a = ch.assign[i] as usize;
+            // Drift the bounds by the centroid movement since last pass.
+            let lbv = ch.lb[i] - ctx.drift_max;
+            ch.lb[i] = lbv;
+            // The upper bound is the exact assigned distance, recomputed
+            // here every pass (one evaluation) — which also keeps the
+            // reported objective exact for skipped points, and uses the
+            // same arithmetic as a full scan. Being exact each pass, it
+            // needs no cross-iteration storage (only `lb` persists).
+            let x = &ch.pts[i * d..(i + 1) * d];
+            let dot = microkernel::dot_one(x, ctx.ct_t, k, a);
+            let dd = ch.xnorm[i] - 2.0 * dot + ctx.cnorm[a];
+            let dd = dd.max(0.0);
+            let da = dd.sqrt();
+            ch.acc.evals += 1;
+            let m = ctx.s_half[a].max(lbv);
+            if da + ctx.slack < m {
+                // Provably still closest (strictly, even under ties and FP
+                // rounding — see module docs), so skip the k-loop.
+                ch.mind2[i] = dd;
+                ch.acc.skipped += k as u64 - 1;
+                if dd > ch.acc.max_dd {
+                    ch.acc.max_dd = dd;
+                }
+            } else {
+                scan.push(i as u32);
+            }
+        }
+    } else {
+        scan.extend(0..n as u32);
+    }
+
+    // Phase 2: full scans, tiled through the microkernel.
+    let mut tile = vec![0.0f64; TILE * d];
+    let mut dots = vec![0.0f64; TILE * k];
+    for group in scan.chunks(TILE) {
+        let tp = group.len();
+        for (p, &gi) in group.iter().enumerate() {
+            let i = gi as usize;
+            tile[p * d..(p + 1) * d].copy_from_slice(&ch.pts[i * d..(i + 1) * d]);
+        }
+        microkernel::tile_dots(&tile[..tp * d], d, k, ctx.ct_t, &mut dots);
+        for (p, &gi) in group.iter().enumerate() {
+            let i = gi as usize;
+            let (d1, c1, d2) =
+                microkernel::best_two_expanded(ch.xnorm[i], &dots[p * k..(p + 1) * k], ctx.cnorm);
+            let dd = d1.max(0.0);
+            ch.assign[i] = c1;
+            ch.mind2[i] = dd;
+            ch.acc.evals += k as u64;
+            if dd > ch.acc.max_dd {
+                ch.acc.max_dd = dd;
+            }
+            if ctx.pruning {
+                if d2.is_finite() {
+                    let dd2 = d2.max(0.0);
+                    ch.lb[i] = dd2.sqrt();
+                    if dd2 > ch.acc.max_dd {
+                        ch.acc.max_dd = dd2;
+                    }
+                } else {
+                    ch.lb[i] = f64::INFINITY;
+                }
+            }
+        }
+    }
+
+    // Phase 3: objective + update accumulation, in point order — identical
+    // order for naive and pruned passes, so the reductions match bitwise.
+    for i in 0..n {
+        let w = ch.w[i];
+        let c = ch.assign[i] as usize;
+        ch.acc.obj += w * ch.mind2[i];
+        ch.acc.mass[c] += w;
+        let x = &ch.pts[i * d..(i + 1) * d];
+        let s = &mut ch.acc.sums[c * d..(c + 1) * d];
+        for (sv, &xv) in s.iter_mut().zip(x) {
+            *sv += w * xv;
+        }
+    }
+}
+
+/// Weighted Lloyd over `n × d` row-major `points` with engine options.
+/// Returns the result plus pruning/throughput statistics.
+pub fn lloyd_dense(
+    points: &[f64],
+    weights: &[f64],
+    d: usize,
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+) -> (LloydResult, PruneStats) {
+    assert!(d > 0, "dimension must be positive");
+    assert_eq!(points.len() % d, 0, "points not a multiple of d");
+    let n = points.len() / d;
+    assert_eq!(weights.len(), n, "weights length mismatch");
+    assert!(n > 0, "no points");
+    // k-means++ always yields at least one seed, so treat k = 0 as 1.
+    let k = cfg.k.min(n).max(1);
+    let t0 = Instant::now();
+
+    let row = |i: usize| &points[i * d..(i + 1) * d];
+    let dist2 = |a: &[f64], b: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            let t = x - y;
+            s += t * t;
+        }
+        s
+    };
+
+    // k-means++ seeding (identical to the pre-engine implementation).
+    let mut rng = SplitMix64::new(cfg.seed);
+    let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| dist2(row(i), row(j)));
+    let mut centroids: Vec<f64> = Vec::with_capacity(k * d);
+    for &s in &seeds {
+        centroids.extend_from_slice(row(s));
+    }
+
+    // Invariant per-point geometry.
+    let xnorm: Vec<f64> = (0..n).map(|i| row(i).iter().map(|v| v * v).sum()).collect();
+    let xn_max = xnorm.iter().cloned().fold(0.0f64, f64::max);
+
+    let threads = resolve_threads(opts.threads);
+    let mut assign = vec![0u32; n];
+    let mut mind2 = vec![0.0f64; n];
+    let mut lb = vec![0.0f64; n];
+    let mut drift = vec![0.0f64; k];
+    let mut s_half = vec![0.0f64; k];
+    let mut bounds_valid = false;
+    let mut max_dd = 0.0f64;
+
+    let mut ct_t: Vec<f64> = Vec::new();
+    let mut objective = f64::INFINITY;
+    let mut iters = 0;
+    let mut stats = PruneStats { points: n as u64, ..PruneStats::default() };
+
+    for it in 0..cfg.max_iters.max(1) {
+        iters = it + 1;
+
+        // Per-iteration centroid geometry.
+        let mut cnorm = vec![0.0f64; k];
+        for (c, cc) in centroids.chunks_exact(d).enumerate() {
+            cnorm[c] = cc.iter().map(|v| v * v).sum();
+        }
+        microkernel::transpose(&centroids, d, k, &mut ct_t);
+        let use_bounds = opts.pruning && bounds_valid;
+        if use_bounds {
+            // Half-distance to the nearest other centroid (Hamerly's s).
+            for c in 0..k {
+                let mut best = f64::INFINITY;
+                for c2 in 0..k {
+                    if c2 != c {
+                        let dd = dist2(&centroids[c * d..(c + 1) * d], &centroids[c2 * d..(c2 + 1) * d]);
+                        if dd < best {
+                            best = dd;
+                        }
+                    }
+                }
+                s_half[c] = 0.5 * best.max(0.0).sqrt();
+            }
+        }
+        let drift_max = drift.iter().cloned().fold(0.0f64, f64::max);
+        let slack = SLACK_REL * (1.0 + max_dd.sqrt() + xn_max.sqrt());
+        let ctx = PassCtx {
+            d,
+            k,
+            ct_t: &ct_t,
+            cnorm: &cnorm,
+            drift_max,
+            s_half: &s_half,
+            slack,
+            use_bounds,
+            pruning: opts.pruning,
+        };
+
+        // Chunked assignment pass (fixed CHUNK ranges; see module docs).
+        let accs: Vec<Accum> = {
+            let mut chunks: Vec<DenseChunk> = Vec::with_capacity(n.div_ceil(CHUNK));
+            let parts = assign
+                .chunks_mut(CHUNK)
+                .zip(mind2.chunks_mut(CHUNK))
+                .zip(lb.chunks_mut(CHUNK));
+            let mut start = 0usize;
+            for ((a_s, m_s), l_s) in parts {
+                let len = a_s.len();
+                chunks.push(DenseChunk {
+                    pts: &points[start * d..(start + len) * d],
+                    w: &weights[start..start + len],
+                    xnorm: &xnorm[start..start + len],
+                    assign: a_s,
+                    mind2: m_s,
+                    lb: l_s,
+                    acc: Accum::new(k, d),
+                });
+                start += len;
+            }
+            run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx));
+            chunks.into_iter().map(|c| c.acc).collect()
+        };
+
+        // Fixed-order reduction of the chunk accumulators.
+        let mut sums = vec![0.0f64; k * d];
+        let mut mass = vec![0.0f64; k];
+        let mut obj = 0.0f64;
+        for a in &accs {
+            for (sv, &v) in sums.iter_mut().zip(&a.sums) {
+                *sv += v;
+            }
+            for (mv, &v) in mass.iter_mut().zip(&a.mass) {
+                *mv += v;
+            }
+            obj += a.obj;
+            stats.dist_evals += a.evals;
+            stats.dist_evals_skipped += a.skipped;
+            if a.max_dd > max_dd {
+                max_dd = a.max_dd;
+            }
+        }
+
+        // Update step (+ drift for the next iteration's bounds).
+        let mut reseeded = false;
+        for c in 0..k {
+            if mass[c] > 0.0 {
+                let mut dr = 0.0;
+                for j in 0..d {
+                    let nv = sums[c * d + j] / mass[c];
+                    let ov = centroids[c * d + j];
+                    let t = nv - ov;
+                    dr += t * t;
+                    centroids[c * d + j] = nv;
+                }
+                drift[c] = dr.sqrt();
+            } else {
+                // Empty cluster: reseed at the point with the largest
+                // weighted distance-to-centroid contribution.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        (weights[a] * mind2[a])
+                            .partial_cmp(&(weights[b] * mind2[b]))
+                            .expect("finite")
+                    })
+                    .expect("n > 0");
+                centroids[c * d..(c + 1) * d].copy_from_slice(row(far));
+                mind2[far] = 0.0;
+                reseeded = true;
+            }
+        }
+        // A reseed teleports a centroid arbitrarily far; rebuild bounds
+        // from scratch next iteration instead of trying to drift them.
+        bounds_valid = opts.pruning && !reseeded;
+
+        // Convergence on relative objective improvement.
+        if objective.is_finite() {
+            let improve = (objective - obj) / objective.abs().max(1e-30);
+            if improve.abs() < cfg.tol {
+                objective = obj;
+                break;
+            }
+        }
+        objective = obj;
+    }
+
+    stats.iters = iters;
+    stats.wall = t0.elapsed();
+    (LloydResult { centroids, assign, objective, iters }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::for_cases;
+
+    fn clustered(rng: &mut SplitMix64, n: usize, d: usize, spread: f64) -> (Vec<f64>, Vec<f64>) {
+        // A few gaussian blobs: the regime where pruning actually bites.
+        let n_blobs = 4;
+        let centers: Vec<f64> = (0..n_blobs * d).map(|_| rng.uniform(-8.0, 8.0)).collect();
+        let mut pts = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let b = rng.below(n_blobs as u64) as usize;
+            for j in 0..d {
+                pts.push(centers[b * d + j] + spread * rng.normal());
+            }
+        }
+        let w = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        (pts, w)
+    }
+
+    #[test]
+    fn pruned_skips_work_on_clustered_data() {
+        let mut rng = SplitMix64::new(21);
+        let (pts, w) = clustered(&mut rng, 3000, 6, 0.1);
+        let cfg = LloydConfig { k: 8, max_iters: 12, tol: 0.0, seed: 5 };
+        let (_, stats) = lloyd_dense(&pts, &w, 6, &cfg, &EngineOpts::pruned());
+        assert!(
+            stats.skip_rate() > 0.3,
+            "expected meaningful pruning, got skip rate {:.3}",
+            stats.skip_rate()
+        );
+        let (_, naive) = lloyd_dense(&pts, &w, 6, &cfg, &EngineOpts::naive_serial());
+        assert_eq!(naive.dist_evals_skipped, 0);
+        assert!(naive.dist_evals > stats.dist_evals);
+    }
+
+    #[test]
+    fn pruned_parallel_matches_naive_bitwise() {
+        for_cases(10, |rng| {
+            let n = 50 + rng.below(400) as usize;
+            let d = 1 + rng.below(5) as usize;
+            let k = 1 + rng.below(7) as usize;
+            let (pts, w) = clustered(rng, n, d, 0.3);
+            let iters = 1 + rng.below(8) as usize;
+            let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: rng.next_u64() };
+            let (a, _) = lloyd_dense(&pts, &w, d, &cfg, &EngineOpts::naive_serial());
+            let (b, _) = lloyd_dense(&pts, &w, d, &cfg, &EngineOpts::pruned().with_threads(3));
+            assert_eq!(a.assign, b.assign);
+            assert_eq!(a.centroids, b.centroids);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.iters, b.iters);
+        });
+    }
+
+    #[test]
+    fn multi_chunk_is_thread_count_invariant() {
+        // n > CHUNK exercises the chunked reduction; every thread count
+        // must reduce to identical bits.
+        let mut rng = SplitMix64::new(33);
+        let n = CHUNK + 700;
+        let (pts, w) = clustered(&mut rng, n, 3, 0.2);
+        let cfg = LloydConfig { k: 6, max_iters: 5, tol: 0.0, seed: 7 };
+        let (base, _) = lloyd_dense(&pts, &w, 3, &cfg, &EngineOpts::pruned().with_threads(1));
+        for t in [2usize, 4, 8] {
+            let (r, _) = lloyd_dense(&pts, &w, 3, &cfg, &EngineOpts::pruned().with_threads(t));
+            assert_eq!(base.assign, r.assign, "threads={t}");
+            assert_eq!(base.centroids, r.centroids, "threads={t}");
+            assert_eq!(base.objective.to_bits(), r.objective.to_bits(), "threads={t}");
+        }
+    }
+}

@@ -1,0 +1,525 @@
+//! Factored (grid-coreset) weighted Lloyd through the shared engine
+//! (paper §4.3, Eqs. 36–38).
+//!
+//! Distances stay in factored form: a per-iteration `O(Σκ_j·k)` table
+//! build turns each (cell, centroid) distance into `m` table lookups, and
+//! the Hamerly bounds live **per grid cell**. Centroid drift and the
+//! inter-centroid separations `s[c]` are computed straight from the β
+//! coefficient tables using component orthogonality
+//! (`‖μ − μ'‖² = Σ_j λ_j Σ_a (β_a − β'_a)²·‖u_a‖²`), so the pruning
+//! machinery never densifies a centroid either. See the parent module docs
+//! for the bounds invariants and the determinism contract.
+
+use super::microkernel::best_two_buf;
+use super::{resolve_threads, run_chunks, EngineOpts, PruneStats, CHUNK, SLACK_REL};
+use crate::cluster::kmeanspp::kmeanspp_indices;
+use crate::cluster::lloyd::LloydConfig;
+use crate::cluster::sparse_lloyd::{
+    cell_dist2, CentroidCoord, Components, SparseGrid, SparseLloydResult, Subspace,
+};
+use crate::util::SplitMix64;
+use std::time::Instant;
+
+/// Squared distance between two factored centroids (also the squared
+/// drift when `a` is a centroid's previous position): orthogonality makes
+/// every subspace term a coefficient-space quadratic.
+fn factored_dist2(a: &[CentroidCoord], b: &[CentroidCoord], subspaces: &[Subspace]) -> f64 {
+    let mut acc = 0.0;
+    for ((ca, cb), sub) in a.iter().zip(b).zip(subspaces) {
+        let dj = match (ca, cb, &sub.comp) {
+            (CentroidCoord::Continuous(x), CentroidCoord::Continuous(y), _) => {
+                let t = x - y;
+                t * t
+            }
+            (
+                CentroidCoord::Categorical(bx),
+                CentroidCoord::Categorical(by),
+                Components::Categorical { norm_sq },
+            ) => bx
+                .iter()
+                .zip(by)
+                .zip(norm_sq)
+                .map(|((x, y), nq)| (x - y) * (x - y) * nq)
+                .sum(),
+            _ => unreachable!("subspace kind is fixed"),
+        };
+        acc += sub.lambda * dj;
+    }
+    acc
+}
+
+/// Indicator-coefficient centroid at a grid cell (used for seeding and
+/// empty-cluster reseeds).
+fn centroid_from_cell(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cell: usize,
+) -> Vec<CentroidCoord> {
+    let row = grid.row(cell);
+    subspaces
+        .iter()
+        .enumerate()
+        .map(|(j, sub)| match &sub.comp {
+            Components::Continuous { centers } => {
+                CentroidCoord::Continuous(centers[row[j] as usize])
+            }
+            Components::Categorical { norm_sq } => {
+                let mut beta = vec![0.0; norm_sq.len()];
+                beta[row[j] as usize] = 1.0;
+                CentroidCoord::Categorical(beta)
+            }
+        })
+        .collect()
+}
+
+/// Build the per-subspace distance tables `T_j[a·k + c]` for the current
+/// centroids (identical arithmetic to the pre-engine implementation).
+fn build_tables(
+    subspaces: &[Subspace],
+    kappa: &[usize],
+    centroids: &[Vec<CentroidCoord>],
+    k: usize,
+) -> Vec<Vec<f64>> {
+    subspaces
+        .iter()
+        .enumerate()
+        .map(|(j, sub)| {
+            let kj = kappa[j];
+            let mut t = vec![0.0f64; kj * k];
+            match &sub.comp {
+                Components::Continuous { centers } => {
+                    for (c, cent) in centroids.iter().enumerate() {
+                        let CentroidCoord::Continuous(mu) = &cent[j] else {
+                            unreachable!("subspace kind is fixed")
+                        };
+                        for a in 0..kj {
+                            let dd = centers[a] - mu;
+                            t[a * k + c] = sub.lambda * dd * dd;
+                        }
+                    }
+                }
+                Components::Categorical { norm_sq } => {
+                    for (c, cent) in centroids.iter().enumerate() {
+                        let CentroidCoord::Categorical(beta) = &cent[j] else {
+                            unreachable!("subspace kind is fixed")
+                        };
+                        // S = Σ_b β²·‖u_b‖² (centroid's squared norm).
+                        let s_c: f64 = beta.iter().zip(norm_sq).map(|(b, nq)| b * b * nq).sum();
+                        for a in 0..kj {
+                            let dd = norm_sq[a] - 2.0 * beta[a] * norm_sq[a] + s_c;
+                            t[a * k + c] = sub.lambda * dd.max(0.0);
+                        }
+                    }
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+/// Per-chunk accumulator (reduced in chunk order).
+struct FacAccum {
+    mass: Vec<f64>,
+    /// `comp_mass[j][c·κ_j + a]` = weight of cells in `c` with `g_j = a`.
+    comp_mass: Vec<Vec<f64>>,
+    obj: f64,
+    evals: u64,
+    skipped: u64,
+    max_dd: f64,
+}
+
+impl FacAccum {
+    fn new(k: usize, kappa: &[usize]) -> Self {
+        FacAccum {
+            mass: vec![0.0; k],
+            comp_mass: kappa.iter().map(|&kj| vec![0.0; k * kj]).collect(),
+            obj: 0.0,
+            evals: 0,
+            skipped: 0,
+            max_dd: 0.0,
+        }
+    }
+}
+
+/// One chunk's view of the per-cell state.
+struct FacChunk<'a> {
+    /// `len × m` component ids for this chunk's cells.
+    gids: &'a [u32],
+    w: &'a [f64],
+    assign: &'a mut [u32],
+    mind2: &'a mut [f64],
+    lb: &'a mut [f64],
+    acc: FacAccum,
+}
+
+/// Read-only per-iteration context.
+struct FacCtx<'a> {
+    m: usize,
+    k: usize,
+    kappa: &'a [usize],
+    tables: &'a [Vec<f64>],
+    drift_max: f64,
+    s_half: &'a [f64],
+    slack: f64,
+    use_bounds: bool,
+    pruning: bool,
+}
+
+/// Exact distance of one cell to one centroid: `m` table lookups, summed
+/// in subspace order (bitwise-identical to the full-scan accumulation).
+#[inline]
+fn cell_centroid_dd(gids: &[u32], tables: &[Vec<f64>], k: usize, c: usize) -> f64 {
+    let mut dd = tables[0][gids[0] as usize * k + c];
+    for (j, tj) in tables.iter().enumerate().skip(1) {
+        dd += tj[gids[j] as usize * k + c];
+    }
+    dd
+}
+
+fn assign_chunk(ch: &mut FacChunk, ctx: &FacCtx) {
+    let (m, k) = (ctx.m, ctx.k);
+    let n = ch.w.len();
+
+    let mut scan: Vec<u32> = Vec::with_capacity(n);
+    if ctx.use_bounds {
+        for i in 0..n {
+            let a = ch.assign[i] as usize;
+            let lbv = ch.lb[i] - ctx.drift_max;
+            ch.lb[i] = lbv;
+            let row = &ch.gids[i * m..(i + 1) * m];
+            let dd = cell_centroid_dd(row, ctx.tables, k, a);
+            let da = dd.sqrt();
+            ch.acc.evals += 1;
+            let bound = ctx.s_half[a].max(lbv);
+            if da + ctx.slack < bound {
+                ch.mind2[i] = dd;
+                ch.acc.skipped += k as u64 - 1;
+                if dd > ch.acc.max_dd {
+                    ch.acc.max_dd = dd;
+                }
+            } else {
+                scan.push(i as u32);
+            }
+        }
+    } else {
+        scan.extend(0..n as u32);
+    }
+
+    // Full scans: the factored m-lookup accumulation over all centroids.
+    let mut dist_buf = vec![0.0f64; k];
+    for &gi in &scan {
+        let i = gi as usize;
+        let row = &ch.gids[i * m..(i + 1) * m];
+        let base0 = row[0] as usize * k;
+        dist_buf.copy_from_slice(&ctx.tables[0][base0..base0 + k]);
+        for j in 1..m {
+            let base = row[j] as usize * k;
+            let tj = &ctx.tables[j][base..base + k];
+            for (dv, &t) in dist_buf.iter_mut().zip(tj) {
+                *dv += t;
+            }
+        }
+        let (d1, c1, d2) = best_two_buf(&dist_buf);
+        ch.assign[i] = c1;
+        ch.mind2[i] = d1;
+        ch.acc.evals += k as u64;
+        if d1 > ch.acc.max_dd {
+            ch.acc.max_dd = d1;
+        }
+        if ctx.pruning {
+            if d2.is_finite() {
+                ch.lb[i] = d2.sqrt();
+                if d2 > ch.acc.max_dd {
+                    ch.acc.max_dd = d2;
+                }
+            } else {
+                ch.lb[i] = f64::INFINITY;
+            }
+        }
+    }
+
+    // Ordered objective + mass accumulation (same order naive/pruned).
+    for i in 0..n {
+        let w = ch.w[i];
+        let c = ch.assign[i] as usize;
+        ch.acc.obj += w * ch.mind2[i];
+        ch.acc.mass[c] += w;
+        let row = &ch.gids[i * m..(i + 1) * m];
+        for j in 0..m {
+            ch.acc.comp_mass[j][c * ctx.kappa[j] + row[j] as usize] += w;
+        }
+    }
+}
+
+/// Factored weighted Lloyd over the grid coreset with engine options.
+pub fn lloyd_factored(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+) -> (SparseLloydResult, PruneStats) {
+    let n = grid.n();
+    assert!(n > 0, "empty grid");
+    assert_eq!(grid.m, subspaces.len());
+    assert!(grid.m > 0, "need at least one subspace");
+    // k-means++ always yields at least one seed, so treat k = 0 as 1.
+    let k = cfg.k.min(n).max(1);
+    let m = grid.m;
+    let t0 = Instant::now();
+
+    let mut rng = SplitMix64::new(cfg.seed);
+    let seeds = kmeanspp_indices(n, &grid.weights, k, &mut rng, |i, j| {
+        cell_dist2(grid, subspaces, i, j)
+    });
+    let mut centroids: Vec<Vec<CentroidCoord>> =
+        seeds.iter().map(|&s| centroid_from_cell(grid, subspaces, s)).collect();
+
+    let kappa: Vec<usize> = subspaces.iter().map(|s| s.comp.len()).collect();
+
+    // Scale term for the FP slack: the largest possible cell norm²
+    // Σ_j λ_j·max_a ‖u_a‖² — the factored analog of the dense engine's
+    // `xn_max`. Absolute rounding in the categorical distance expansion
+    // (`‖u_a‖² − 2β_a‖u_a‖² + S`) is proportional to these magnitudes,
+    // not to the distances themselves, so the skip slack must cover it.
+    let norm2_max: f64 = subspaces
+        .iter()
+        .map(|sub| {
+            let comp_max = match &sub.comp {
+                Components::Continuous { centers } => {
+                    centers.iter().map(|c| c * c).fold(0.0f64, f64::max)
+                }
+                Components::Categorical { norm_sq } => {
+                    norm_sq.iter().cloned().fold(0.0f64, f64::max)
+                }
+            };
+            sub.lambda * comp_max
+        })
+        .sum();
+
+    let threads = resolve_threads(opts.threads);
+    let mut assign = vec![0u32; n];
+    let mut mind2 = vec![0.0f64; n];
+    let mut lb = vec![0.0f64; n];
+    let mut drift = vec![0.0f64; k];
+    let mut s_half = vec![0.0f64; k];
+    let mut bounds_valid = false;
+    let mut max_dd = 0.0f64;
+
+    let mut objective = f64::INFINITY;
+    let mut iters = 0;
+    let mut stats = PruneStats { points: n as u64, ..PruneStats::default() };
+
+    for it in 0..cfg.max_iters.max(1) {
+        iters = it + 1;
+
+        let tables = build_tables(subspaces, &kappa, &centroids, k);
+        let use_bounds = opts.pruning && bounds_valid;
+        if use_bounds {
+            for c in 0..k {
+                let mut best = f64::INFINITY;
+                for c2 in 0..k {
+                    if c2 != c {
+                        let dd = factored_dist2(&centroids[c], &centroids[c2], subspaces);
+                        if dd < best {
+                            best = dd;
+                        }
+                    }
+                }
+                s_half[c] = 0.5 * best.max(0.0).sqrt();
+            }
+        }
+        let drift_max = drift.iter().cloned().fold(0.0f64, f64::max);
+        let slack = SLACK_REL * (1.0 + 2.0 * max_dd.sqrt() + norm2_max.sqrt());
+        let ctx = FacCtx {
+            m,
+            k,
+            kappa: &kappa,
+            tables: &tables,
+            drift_max,
+            s_half: &s_half,
+            slack,
+            use_bounds,
+            pruning: opts.pruning,
+        };
+
+        let accs: Vec<FacAccum> = {
+            let mut chunks: Vec<FacChunk> = Vec::with_capacity(n.div_ceil(CHUNK));
+            let parts = assign
+                .chunks_mut(CHUNK)
+                .zip(mind2.chunks_mut(CHUNK))
+                .zip(lb.chunks_mut(CHUNK));
+            let mut start = 0usize;
+            for ((a_s, m_s), l_s) in parts {
+                let len = a_s.len();
+                chunks.push(FacChunk {
+                    gids: &grid.gids[start * m..(start + len) * m],
+                    w: &grid.weights[start..start + len],
+                    assign: a_s,
+                    mind2: m_s,
+                    lb: l_s,
+                    acc: FacAccum::new(k, &kappa),
+                });
+                start += len;
+            }
+            run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx));
+            chunks.into_iter().map(|c| c.acc).collect()
+        };
+
+        // Fixed-order reduction.
+        let mut mass = vec![0.0f64; k];
+        let mut comp_mass: Vec<Vec<f64>> = kappa.iter().map(|&kj| vec![0.0; k * kj]).collect();
+        let mut obj = 0.0f64;
+        for a in &accs {
+            for (mv, &v) in mass.iter_mut().zip(&a.mass) {
+                *mv += v;
+            }
+            for (cm, acm) in comp_mass.iter_mut().zip(&a.comp_mass) {
+                for (cv, &v) in cm.iter_mut().zip(acm) {
+                    *cv += v;
+                }
+            }
+            obj += a.obj;
+            stats.dist_evals += a.evals;
+            stats.dist_evals_skipped += a.skipped;
+            if a.max_dd > max_dd {
+                max_dd = a.max_dd;
+            }
+        }
+
+        // Update (identical to the pre-engine implementation) + drift.
+        let prev = if opts.pruning { Some(centroids.clone()) } else { None };
+        let mut reseeded = false;
+        for c in 0..k {
+            if mass[c] > 0.0 {
+                for (j, sub) in subspaces.iter().enumerate() {
+                    let kj = kappa[j];
+                    let cm = &comp_mass[j][c * kj..(c + 1) * kj];
+                    match (&sub.comp, &mut centroids[c][j]) {
+                        (Components::Continuous { centers }, CentroidCoord::Continuous(mu)) => {
+                            let s: f64 = cm.iter().zip(centers).map(|(w, v)| w * v).sum();
+                            *mu = s / mass[c];
+                        }
+                        (Components::Categorical { .. }, CentroidCoord::Categorical(beta)) => {
+                            for a in 0..kj {
+                                beta[a] = cm[a] / mass[c];
+                            }
+                        }
+                        _ => unreachable!("subspace kind is fixed"),
+                    }
+                }
+            } else {
+                // Empty cluster: reseed at the heaviest-cost cell.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        (grid.weights[a] * mind2[a])
+                            .partial_cmp(&(grid.weights[b] * mind2[b]))
+                            .expect("finite")
+                    })
+                    .expect("n > 0");
+                centroids[c] = centroid_from_cell(grid, subspaces, far);
+                mind2[far] = 0.0;
+                reseeded = true;
+            }
+        }
+        if let Some(prev) = prev {
+            for c in 0..k {
+                drift[c] = factored_dist2(&prev[c], &centroids[c], subspaces).max(0.0).sqrt();
+            }
+        }
+        bounds_valid = opts.pruning && !reseeded;
+
+        if objective.is_finite() {
+            let improve = (objective - obj) / objective.abs().max(1e-30);
+            if improve.abs() < cfg.tol {
+                objective = obj;
+                break;
+            }
+        }
+        objective = obj;
+    }
+
+    stats.iters = iters;
+    stats.wall = t0.elapsed();
+    (SparseLloydResult { centroids, assign, objective, iters }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::for_cases;
+
+    fn random_problem(rng: &mut SplitMix64, n: usize) -> (SparseGrid, Vec<Subspace>) {
+        let k1 = 2 + rng.below(5) as usize;
+        let k2 = 2 + rng.below(5) as usize;
+        let subs = vec![
+            Subspace {
+                name: "x".into(),
+                lambda: rng.uniform(0.5, 2.0),
+                comp: Components::Continuous {
+                    centers: (0..k1).map(|_| rng.uniform(-5.0, 5.0)).collect(),
+                },
+            },
+            Subspace {
+                name: "c".into(),
+                lambda: rng.uniform(0.5, 2.0),
+                comp: Components::Categorical {
+                    norm_sq: (0..k2).map(|_| rng.uniform(0.3, 1.0)).collect(),
+                },
+            },
+        ];
+        let mut gids = Vec::with_capacity(n * 2);
+        let mut weights = Vec::with_capacity(n);
+        for _ in 0..n {
+            gids.push(rng.below(k1 as u64) as u32);
+            gids.push(rng.below(k2 as u64) as u32);
+            weights.push(rng.uniform(0.1, 3.0));
+        }
+        (SparseGrid { m: 2, gids, weights }, subs)
+    }
+
+    #[test]
+    fn pruned_parallel_matches_naive_bitwise() {
+        for_cases(10, |rng| {
+            let n = 20 + rng.below(300) as usize;
+            let (grid, subs) = random_problem(rng, n);
+            let iters = 1 + rng.below(7) as usize;
+            let k = 1 + rng.below(6) as usize;
+            let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: rng.next_u64() };
+            let (a, _) = lloyd_factored(&grid, &subs, &cfg, &EngineOpts::naive_serial());
+            let (b, _) = lloyd_factored(&grid, &subs, &cfg, &EngineOpts::pruned().with_threads(3));
+            assert_eq!(a.assign, b.assign);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.iters, b.iters);
+            for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+                for (xa, xb) in ca.iter().zip(cb) {
+                    match (xa, xb) {
+                        (CentroidCoord::Continuous(u), CentroidCoord::Continuous(v)) => {
+                            assert_eq!(u.to_bits(), v.to_bits())
+                        }
+                        (CentroidCoord::Categorical(u), CentroidCoord::Categorical(v)) => {
+                            assert_eq!(u, v)
+                        }
+                        _ => panic!("centroid kind mismatch"),
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn factored_drift_matches_bruteforce_on_grid_metric() {
+        // ‖μ − μ'‖ from β tables must equal the metric the tables induce:
+        // check against distances between indicator centroids, which are
+        // exactly cell distances.
+        for_cases(15, |rng| {
+            let (grid, subs) = random_problem(rng, 12);
+            let i = rng.below(grid.n() as u64) as usize;
+            let j = rng.below(grid.n() as u64) as usize;
+            let a = centroid_from_cell(&grid, &subs, i);
+            let b = centroid_from_cell(&grid, &subs, j);
+            let got = factored_dist2(&a, &b, &subs);
+            let want = cell_dist2(&grid, &subs, i, j);
+            crate::util::testkit::assert_close(got, want, 1e-9);
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! The tiled distance microkernel.
+//!
+//! Distances use the `‖x‖² − 2·x·c + ‖c‖²` expansion with both norms
+//! hoisted: the only inner-loop work is the `x·c` contraction. Centroids
+//! are kept **transposed** (`d × k`, dimension-major) so that for a fixed
+//! dimension `j` the k partial dot products update a contiguous f64
+//! accumulator row — a layout LLVM autovectorizes (the accumulators stay
+//! in vector registers across the `k` lane loop, the centroid row streams
+//! sequentially). Points are processed in tiles of [`TILE`] rows so each
+//! centroid row loaded from cache is reused `TILE` times.
+//!
+//! Bitwise contract: every entry point accumulates its dot product over
+//! `j = 0..d` in ascending order from a `0.0` start, so a distance
+//! computed by [`tile_dots`], by [`dot_one`], or by any mix of the two is
+//! bit-for-bit identical. The pruned engine relies on this to keep skipped
+//! and scanned points on one arithmetic footing.
+
+/// Points per microkernel tile.
+pub(crate) const TILE: usize = 8;
+
+/// Transpose row-major `k × d` centroids into the kernel's `d × k` layout.
+pub(crate) fn transpose(centroids: &[f64], d: usize, k: usize, out: &mut Vec<f64>) {
+    debug_assert_eq!(centroids.len(), k * d);
+    out.clear();
+    out.resize(d * k, 0.0);
+    for (c, row) in centroids.chunks_exact(d).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            out[j * k + c] = v;
+        }
+    }
+}
+
+/// Dot products of a contiguous row-major tile (`tp × d`, `tp ≤ TILE` not
+/// enforced — any `tp` works) against all `k` transposed centroids:
+/// `dots[p·k + c] = Σ_j tile[p·d + j] · ct_t[j·k + c]`.
+pub(crate) fn tile_dots(tile: &[f64], d: usize, k: usize, ct_t: &[f64], dots: &mut [f64]) {
+    let tp = tile.len() / d;
+    debug_assert_eq!(tile.len(), tp * d);
+    debug_assert_eq!(ct_t.len(), d * k);
+    debug_assert!(dots.len() >= tp * k);
+    dots[..tp * k].fill(0.0);
+    for j in 0..d {
+        let col = &ct_t[j * k..(j + 1) * k];
+        for p in 0..tp {
+            let xj = tile[p * d + j];
+            let acc = &mut dots[p * k..p * k + k];
+            for (av, &cv) in acc.iter_mut().zip(col) {
+                *av += xj * cv;
+            }
+        }
+    }
+}
+
+/// One dot product against centroid `c` — the same j-ascending
+/// accumulation as [`tile_dots`], so the result is bitwise identical.
+pub(crate) fn dot_one(x: &[f64], ct_t: &[f64], k: usize, c: usize) -> f64 {
+    let mut acc = 0.0;
+    for (j, &xj) in x.iter().enumerate() {
+        acc += xj * ct_t[j * k + c];
+    }
+    acc
+}
+
+/// Expand `dd_c = xn − 2·dot_c + cnorm_c` and return the two smallest:
+/// `(best dd, best index, second-best dd)`. Strict `<` comparisons give
+/// lowest-index-wins tie-breaking, matching a naive first-minimum scan.
+pub(crate) fn best_two_expanded(xn: f64, dots: &[f64], cnorm: &[f64]) -> (f64, u32, f64) {
+    let (mut d1, mut c1, mut d2) = (f64::INFINITY, 0u32, f64::INFINITY);
+    for (c, (&dot, &cn)) in dots.iter().zip(cnorm.iter()).enumerate() {
+        let dd = xn - 2.0 * dot + cn;
+        if dd < d1 {
+            d2 = d1;
+            d1 = dd;
+            c1 = c as u32;
+        } else if dd < d2 {
+            d2 = dd;
+        }
+    }
+    (d1, c1, d2)
+}
+
+/// Two smallest entries of a precomputed distance buffer (the factored
+/// engine's per-cell table sums), with the same tie-breaking as
+/// [`best_two_expanded`].
+pub(crate) fn best_two_buf(buf: &[f64]) -> (f64, u32, f64) {
+    let (mut d1, mut c1, mut d2) = (f64::INFINITY, 0u32, f64::INFINITY);
+    for (c, &dd) in buf.iter().enumerate() {
+        if dd < d1 {
+            d2 = d1;
+            d1 = dd;
+            c1 = c as u32;
+        } else if dd < d2 {
+            d2 = dd;
+        }
+    }
+    (d1, c1, d2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+
+    #[test]
+    fn tile_and_single_dots_are_bitwise_equal() {
+        for_cases(25, |rng| {
+            let d = 1 + rng.below(12) as usize;
+            let k = 1 + rng.below(9) as usize;
+            let tp = 1 + rng.below(TILE as u64) as usize;
+            let tile: Vec<f64> = (0..tp * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let mut ct_t = Vec::new();
+            transpose(&cents, d, k, &mut ct_t);
+            let mut dots = vec![0.0; tp * k];
+            tile_dots(&tile, d, k, &ct_t, &mut dots);
+            for p in 0..tp {
+                for c in 0..k {
+                    let one = dot_one(&tile[p * d..(p + 1) * d], &ct_t, k, c);
+                    assert_eq!(one.to_bits(), dots[p * k + c].to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn best_two_orders_and_breaks_ties_low() {
+        // Exact tie between index 1 and 3: lowest index must win.
+        let buf = [5.0, 2.0, 7.0, 2.0, 3.0];
+        let (d1, c1, d2) = best_two_buf(&buf);
+        assert_eq!((d1, c1, d2), (2.0, 1, 2.0));
+        // k = 1: second best is infinite.
+        let (d1, c1, d2) = best_two_buf(&[4.0]);
+        assert_eq!((d1, c1), (4.0, 0));
+        assert!(d2.is_infinite());
+    }
+
+    #[test]
+    fn expanded_matches_direct_distance() {
+        for_cases(25, |rng| {
+            let d = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(6) as usize;
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let mut ct_t = Vec::new();
+            transpose(&cents, d, k, &mut ct_t);
+            let mut dots = vec![0.0; k];
+            tile_dots(&x, d, k, &ct_t, &mut dots);
+            let xn: f64 = x.iter().map(|v| v * v).sum();
+            let cnorm: Vec<f64> =
+                cents.chunks_exact(d).map(|c| c.iter().map(|v| v * v).sum()).collect();
+            let (d1, c1, _) = best_two_expanded(xn, &dots, &cnorm);
+            // Compare against the naive diff-squared argmin.
+            let (mut want, mut want_c) = (f64::INFINITY, 0u32);
+            for (c, cc) in cents.chunks_exact(d).enumerate() {
+                let dd: f64 = x.iter().zip(cc).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dd < want {
+                    want = dd;
+                    want_c = c as u32;
+                }
+            }
+            assert_eq!(c1, want_c);
+            assert_close(d1.max(0.0), want, 1e-9);
+        });
+    }
+}

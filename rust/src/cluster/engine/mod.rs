@@ -1,0 +1,362 @@
+//! The shared Step-4 execution engine: a blocked distance microkernel,
+//! Hamerly-style bounds pruning, and a deterministic chunk-parallel
+//! executor — used by both the dense ([`dense`]) and the factored
+//! ([`factored`]) weighted-Lloyd variants, and by the streaming
+//! full-objective scorer ([`CentroidScorer`]).
+//!
+//! # Bounds invariants (Hamerly, "Making k-means even faster", 2010)
+//!
+//! For every point `i` with current assignment `a(i)` the engine maintains
+//! *Euclidean* (not squared) bounds:
+//!
+//! * the upper bound on `d(x_i, c_{a(i)})` is the *exact* assigned
+//!   distance, recomputed at every pass (one distance evaluation per
+//!   point). Because it is exact each pass it is never stored across
+//!   iterations — this is also what keeps the reported objective exact
+//!   rather than bounded, and what makes pruned output bitwise-equal to
+//!   naive output.
+//! * `lb[i] ≤ min_{c ≠ a(i)} d(x_i, c)` — a single global lower bound on
+//!   the distance to the *second-closest* centroid. After every update it
+//!   is drifted by the maximum movement: `lb -= max_c p[c]`.
+//! * `p[c] = ‖c_new − c_old‖` — per-centroid drift. The dense engine takes
+//!   it from the raw coordinates; the factored engine computes it from the
+//!   per-subspace β coefficient tables using component orthogonality
+//!   (`‖Δμ_j‖² = Σ_a Δβ_a²·‖u_a‖²`), so it never densifies a centroid.
+//! * `s[c] = ½·min_{c' ≠ c} d(c, c')` — half the distance to the nearest
+//!   other centroid (recomputed each iteration).
+//!
+//! With `ub` exact, the engine skips the inner k-loop whenever
+//!
+//! ```text
+//!   d(x_i, c_{a(i)}) + slack < max(lb[i], s[a(i)])
+//! ```
+//!
+//! which by the triangle inequality proves no other centroid can be
+//! strictly closer. The `slack` term (a small multiple of the data scale,
+//! [`SLACK_REL`]) absorbs floating-point rounding in the bound chain so
+//! that a skipped point provably agrees with what a full scan would have
+//! chosen — including tie-breaking, because ties never satisfy the strict
+//! inequality and therefore always rescan.
+//!
+//! # Determinism contract
+//!
+//! Results are **bitwise identical** for any thread count and for the
+//! pruned vs. naive paths:
+//!
+//! * Points are partitioned into fixed [`CHUNK`]-sized ranges independent
+//!   of the thread count; each chunk accumulates its own `sums`/`mass`/
+//!   `obj` in point order, and chunk accumulators are reduced left-to-right
+//!   on the coordinating thread (a fixed-shape tree reduction). The thread
+//!   pool only changes *who* computes a chunk, never the arithmetic.
+//! * Pruned and full-scan paths compute distances with the same
+//!   accumulation order (see [`microkernel`]), so a pruned iteration
+//!   produces the same `assign`/`mind2` bits as a naive one. The
+//!   `tests/property_engine.rs` suite asserts exact equality of
+//!   assignments, centroids and objectives across (naive serial) ×
+//!   (pruned parallel) on seeded random inputs, dense and factored.
+//!
+//! The contract is validated—not just assumed—because the FP-slack
+//! argument above is only rigorous for data whose dynamic range is sane
+//! (|values| ≪ 1/√ε·distances); pathological inputs would merely prune
+//! less, never corrupt bounds in the unsafe direction.
+
+pub mod dense;
+pub mod factored;
+pub(crate) mod microkernel;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fixed parallel work-unit size (points per chunk). Part of the
+/// determinism contract: reductions happen per chunk and then in chunk
+/// order, so results do not depend on the thread count. Inputs smaller
+/// than one chunk take a purely serial path.
+pub const CHUNK: usize = 4096;
+
+/// Relative slack applied to the Hamerly skip test to absorb rounding in
+/// the bound chain (see the module docs). Chosen ≫ accumulated f64
+/// rounding (~1e-13·scale over a Lloyd run) and ≪ any real cluster
+/// separation, so it costs essentially no pruning.
+pub(crate) const SLACK_REL: f64 = 1e-6;
+
+/// Engine execution options shared by the dense and factored paths.
+#[derive(Clone, Debug)]
+pub struct EngineOpts {
+    /// Maintain Hamerly bounds and skip provably-unchanged assignments.
+    pub pruning: bool,
+    /// Worker threads; `0` = auto (`RKMEANS_THREADS` env var, else the
+    /// machine's available parallelism).
+    pub threads: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts::pruned()
+    }
+}
+
+impl EngineOpts {
+    /// The production configuration: bounds pruning + auto parallelism.
+    pub fn pruned() -> Self {
+        EngineOpts { pruning: true, threads: 0 }
+    }
+
+    /// The retained reference: full scans, single thread. The property
+    /// suite pins the pruned/parallel paths to this bit-for-bit.
+    pub fn naive_serial() -> Self {
+        EngineOpts { pruning: false, threads: 1 }
+    }
+
+    /// Override the worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+}
+
+/// Work counters for one Lloyd run (the bench-trajectory payload of
+/// `BENCH_lloyd.json`; see `bench_harness` for the serialized schema).
+#[derive(Clone, Debug, Default)]
+pub struct PruneStats {
+    /// Lloyd iterations executed.
+    pub iters: usize,
+    /// Points (or grid cells) per iteration.
+    pub points: u64,
+    /// (point, centroid) distance evaluations actually performed.
+    pub dist_evals: u64,
+    /// Evaluations proven unnecessary by the bounds and skipped.
+    pub dist_evals_skipped: u64,
+    /// Wall time of the whole run (seeding + all iterations).
+    pub wall: Duration,
+}
+
+impl PruneStats {
+    /// Fraction of candidate evaluations skipped.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.dist_evals + self.dist_evals_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.dist_evals_skipped as f64 / total as f64
+        }
+    }
+
+    /// Assignment throughput: points × iterations / wall seconds.
+    pub fn points_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            (self.points * self.iters as u64) as f64 / s
+        }
+    }
+}
+
+/// Resolve the worker-thread count (0 = auto).
+pub(crate) fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("RKMEANS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, &mut work)` once for every work item, spreading the
+/// items over `threads` scoped workers via an atomic cursor. Items are
+/// mutated in place, so the caller reads results back in chunk order —
+/// scheduling never affects the output (see the determinism contract).
+pub(crate) fn run_chunks<W, F>(works: &mut [W], threads: usize, f: F)
+where
+    W: Send,
+    F: Fn(usize, &mut W) + Sync,
+{
+    let t = threads.max(1).min(works.len());
+    if t <= 1 {
+        for (i, w) in works.iter_mut().enumerate() {
+            f(i, w);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let cells: Vec<Mutex<&mut W>> = works.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..t {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                // Each index is claimed exactly once, so the lock is
+                // uncontended; it only exists to hand &mut across threads.
+                let mut guard = cells[i].lock().expect("chunk lock");
+                f(i, &mut **guard);
+            });
+        }
+    });
+}
+
+/// Streaming scorer for fixed dense centroids: feed `(row, weight)` pairs,
+/// get `Σ w·min_c d²(row, c)` back. Rows are buffered into contiguous
+/// tiles and pushed through the shared microkernel, so the streaming
+/// full-`X` objective pass reuses the same hot loop as the Lloyd engine.
+pub struct CentroidScorer {
+    d: usize,
+    k: usize,
+    /// `d × k` transposed centroids (microkernel layout).
+    ct_t: Vec<f64>,
+    cnorm: Vec<f64>,
+    tile: Vec<f64>,
+    wbuf: Vec<f64>,
+    dots: Vec<f64>,
+    fill: usize,
+    obj: f64,
+}
+
+/// Rows buffered per scoring tile.
+const SCORE_TILE: usize = 32;
+
+impl CentroidScorer {
+    /// Build a scorer over row-major `k × d` centroids.
+    pub fn new(centroids: &[f64], d: usize) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(centroids.len() % d, 0, "centroids not a multiple of d");
+        let k = centroids.len() / d;
+        assert!(k > 0, "need at least one centroid");
+        let mut ct_t = Vec::new();
+        microkernel::transpose(centroids, d, k, &mut ct_t);
+        let cnorm = centroids
+            .chunks_exact(d)
+            .map(|c| c.iter().map(|v| v * v).sum())
+            .collect();
+        CentroidScorer {
+            d,
+            k,
+            ct_t,
+            cnorm,
+            tile: vec![0.0; SCORE_TILE * d],
+            wbuf: vec![0.0; SCORE_TILE],
+            dots: vec![0.0; SCORE_TILE * k],
+            fill: 0,
+            obj: 0.0,
+        }
+    }
+
+    /// Score one row (length `d`) with weight `w`.
+    pub fn push(&mut self, row: &[f64], w: f64) {
+        debug_assert_eq!(row.len(), self.d);
+        let p = self.fill;
+        self.tile[p * self.d..(p + 1) * self.d].copy_from_slice(row);
+        self.wbuf[p] = w;
+        self.fill += 1;
+        if self.fill == SCORE_TILE {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        let tp = self.fill;
+        if tp == 0 {
+            return;
+        }
+        let (d, k) = (self.d, self.k);
+        microkernel::tile_dots(&self.tile[..tp * d], d, k, &self.ct_t, &mut self.dots);
+        for p in 0..tp {
+            let row = &self.tile[p * d..(p + 1) * d];
+            let xn: f64 = row.iter().map(|v| v * v).sum();
+            let (d1, _, _) =
+                microkernel::best_two_expanded(xn, &self.dots[p * k..(p + 1) * k], &self.cnorm);
+            self.obj += self.wbuf[p] * d1.max(0.0);
+        }
+        self.fill = 0;
+    }
+
+    /// Flush the partial tile and return the accumulated objective.
+    pub fn finish(mut self) -> f64 {
+        self.flush();
+        self.obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_close, for_cases};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn run_chunks_visits_every_item_once() {
+        let mut works: Vec<u32> = vec![0; 37];
+        run_chunks(&mut works, 4, |i, w| *w += i as u32 + 1);
+        for (i, w) in works.iter().enumerate() {
+            assert_eq!(*w, i as u32 + 1);
+        }
+        // Serial path too.
+        let mut works: Vec<u32> = vec![0; 5];
+        run_chunks(&mut works, 1, |i, w| *w = i as u32);
+        assert_eq!(works, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scorer_matches_naive_objective() {
+        for_cases(20, |rng| {
+            let d = 1 + rng.below(6) as usize;
+            let k = 1 + rng.below(5) as usize;
+            let n = 1 + rng.below(150) as usize;
+            let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-4.0, 4.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 2.0)).collect();
+            let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-4.0, 4.0)).collect();
+
+            let mut scorer = CentroidScorer::new(&cents, d);
+            for i in 0..n {
+                scorer.push(&pts[i * d..(i + 1) * d], w[i]);
+            }
+            let got = scorer.finish();
+            let want = crate::cluster::lloyd::objective(&pts, &w, d, &cents);
+            assert_close(got, want, 1e-9);
+        });
+    }
+
+    #[test]
+    fn stats_rates() {
+        let s = PruneStats {
+            iters: 2,
+            points: 100,
+            dist_evals: 30,
+            dist_evals_skipped: 70,
+            wall: Duration::from_secs(1),
+        };
+        assert_close(s.skip_rate(), 0.7, 1e-12);
+        assert_close(s.points_per_sec(), 200.0, 1e-9);
+        assert_eq!(PruneStats::default().skip_rate(), 0.0);
+        assert_eq!(PruneStats::default().points_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn thread_resolution_prefers_explicit() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn scorer_handles_partial_tiles() {
+        let mut rng = SplitMix64::new(4);
+        let cents = vec![0.0, 0.0, 5.0, 5.0]; // k=2, d=2
+        let mut scorer = CentroidScorer::new(&cents, 2);
+        let mut want = 0.0;
+        for _ in 0..(SCORE_TILE * 2 + 3) {
+            let p = [rng.uniform(-1.0, 6.0), rng.uniform(-1.0, 6.0)];
+            let d0 = p[0] * p[0] + p[1] * p[1];
+            let d1 = (p[0] - 5.0) * (p[0] - 5.0) + (p[1] - 5.0) * (p[1] - 5.0);
+            want += d0.min(d1);
+            scorer.push(&p, 1.0);
+        }
+        assert_close(scorer.finish(), want, 1e-9);
+    }
+}

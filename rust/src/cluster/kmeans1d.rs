@@ -114,29 +114,38 @@ pub fn kmeans1d(points: &[(f64, f64)], k: usize) -> Kmeans1dResult {
     // prefix length i; used to reconstruct boundaries.
     let mut splits: Vec<Vec<u32>> = vec![vec![0; n + 1]]; // layer j=1: split at 0
 
-    for _j in 2..=k {
+    for j in 2..=k {
         let mut cur = vec![f64::INFINITY; n + 1];
         let mut opt = vec![0u32; n + 1];
         // Solve for i in [lo, hi] knowing the optimal split lies in
         // [optlo, opthi]; recursion depth O(log n).
         // (Monotonicity of the argmin follows from the concave-Monge
         // property of contiguous-segment SSE costs.)
+        //
+        // Splits are constrained to t ≥ j−1 and prefixes to i ≥ j so every
+        // one of the j clusters covers at least one distinct value. Cost
+        // ties could otherwise produce empty segments, whose weighted mean
+        // is 0/0 = NaN — poisoning `centers`, `boundaries` and every
+        // subsequent `assign` binary search. Non-empty solutions always
+        // tie-or-beat empty ones, so the optimum is unchanged.
+        let t_min = j - 1;
         struct Frame {
             lo: usize,
             hi: usize,
             optlo: usize,
             opthi: usize,
         }
-        let mut stack = vec![Frame { lo: 1, hi: n, optlo: 0, opthi: n - 1 }];
+        let mut stack = vec![Frame { lo: j, hi: n, optlo: t_min, opthi: n - 1 }];
         while let Some(Frame { lo, hi, optlo, opthi }) = stack.pop() {
             if lo > hi {
                 continue;
             }
             let mid = (lo + hi) / 2;
+            let t_lo = optlo.max(t_min);
             let t_hi = opthi.min(mid - 1);
             let mut best = f64::INFINITY;
-            let mut best_t = optlo;
-            for t in optlo..=t_hi {
+            let mut best_t = t_lo;
+            for t in t_lo..=t_hi {
                 let c = prev[t] + oracle.cost(t, mid);
                 if c < best {
                     best = c;
@@ -329,5 +338,103 @@ mod tests {
         let r = kmeans1d(&[], 3);
         assert_eq!(r.cost, 0.0);
         assert_eq!(r.assign(1.0), 0);
+    }
+
+    /// Invariants that rule out the NaN-boundary failure mode: centers
+    /// finite and strictly ascending, boundaries strictly ascending, and
+    /// `assign` (the `partition_point` path) returning the nearest center.
+    fn check_well_formed(r: &Kmeans1dResult) {
+        assert!(!r.centers.is_empty());
+        for &c in &r.centers {
+            assert!(c.is_finite(), "non-finite center in {:?}", r.centers);
+        }
+        for w in r.centers.windows(2) {
+            assert!(w[0] < w[1], "centers not strictly ascending: {:?}", r.centers);
+        }
+        assert_eq!(r.boundaries.len(), r.centers.len() - 1);
+        for w in r.boundaries.windows(2) {
+            assert!(w[0] < w[1], "boundaries not sorted: {:?}", r.boundaries);
+        }
+        for &b in &r.boundaries {
+            assert!(b.is_finite());
+        }
+    }
+
+    #[test]
+    fn all_duplicate_inputs_collapse_to_one_center() {
+        for k in [1usize, 2, 3, 7] {
+            let pts = vec![(2.5, 1.0); 6];
+            let r = kmeans1d(&pts, k);
+            assert_eq!(r.centers, vec![2.5]);
+            assert!(r.boundaries.is_empty());
+            assert_eq!(r.cost, 0.0);
+            assert_eq!(r.assign(-10.0), 0);
+            assert_eq!(r.assign(100.0), 0);
+        }
+    }
+
+    #[test]
+    fn k_ge_distinct_values_is_exact() {
+        // 6 distinct values hidden in 10 weighted duplicates; any k ≥ 6
+        // returns exactly the distinct values at cost 0.
+        let mut pts = Vec::new();
+        for v in [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 9.0, 3.0, 5.0] {
+            pts.push((v, 0.5));
+        }
+        for k in [6usize, 7, 50] {
+            let r = kmeans1d(&pts, k);
+            assert_eq!(r.centers, vec![1.0, 2.0, 3.0, 4.0, 5.0, 9.0]);
+            assert_eq!(r.cost, 0.0);
+            check_well_formed(&r);
+            for &(v, _) in &pts {
+                let c = r.assign(v) as usize;
+                assert_eq!(r.centers[c], v, "value {v} must map to its own center");
+            }
+        }
+    }
+
+    #[test]
+    fn tie_heavy_inputs_never_produce_nan_boundaries() {
+        // Symmetric, duplicate-heavy, zero-cost-tie-rich inputs are the
+        // regime where an unconstrained DP picks empty segments (whose
+        // mean is 0/0). The split constraint must keep everything finite.
+        for_cases(40, |rng| {
+            let n_vals = 2 + rng.below(6) as usize;
+            let n = n_vals + rng.below(20) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (rng.below(n_vals as u64) as f64, 1.0))
+                .collect();
+            let k = 1 + rng.below(8) as usize;
+            let r = kmeans1d(&pts, k);
+            check_well_formed(&r);
+            // Assignment must pick the nearest center for every input.
+            for &(v, _) in &pts {
+                let c = r.assign(v) as usize;
+                let best = r
+                    .centers
+                    .iter()
+                    .map(|&m| (v - m).abs())
+                    .fold(f64::INFINITY, f64::min);
+                assert_close((v - r.centers[c]).abs(), best, 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn nonempty_constraint_preserves_optimal_cost() {
+        // The constrained D&C must still match the unconstrained
+        // brute-force optimum on tie-heavy grids (cost equality; the
+        // brute DP tolerates empty segments, the fast one forbids them).
+        for_cases(30, |rng| {
+            let n = 2 + rng.below(15) as usize;
+            let k = 1 + rng.below(n as u64) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| ((rng.below(6) as f64) * 2.0, 1.0 + rng.below(3) as f64))
+                .collect();
+            let fast = kmeans1d(&pts, k);
+            let slow = brute(&pts, k);
+            assert_close(fast.cost, slow, 1e-9);
+            check_well_formed(&fast);
+        });
     }
 }

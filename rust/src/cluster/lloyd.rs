@@ -2,15 +2,19 @@
 //!
 //! This is (a) the materialize-then-cluster baseline — the role mlpack
 //! plays in the paper's Table 2 — and (b) the host-side twin of the
-//! XLA/PJRT hot path (`runtime::XlaLloyd`), kept in lock-step by tests so
-//! the two engines are interchangeable.
+//! XLA/PJRT hot path (`runtime::XlaLloyd`, behind the `pjrt` feature),
+//! kept in lock-step by tests so the two engines are interchangeable.
 //!
-//! Distances use the `‖x‖² − 2·x·c + ‖c‖²` expansion with centroid norms
-//! hoisted out of the inner loop; the `x·c` contraction is the part the
-//! Pallas kernel maps onto the MXU in the AOT artifact.
+//! The iteration itself runs on the shared Step-4 engine
+//! ([`crate::cluster::engine::dense`]): a tiled `‖x‖² − 2·x·c + ‖c‖²`
+//! microkernel, Hamerly bounds that skip the inner k-loop for points whose
+//! assignment provably cannot change, and deterministic chunk-parallel
+//! accumulation. [`weighted_lloyd`] uses the production configuration;
+//! [`weighted_lloyd_with`] exposes the engine options (naive serial
+//! reference, thread count) plus pruning statistics.
 
-use super::kmeanspp::kmeanspp_indices;
-use crate::util::SplitMix64;
+use super::engine::dense::lloyd_dense;
+use super::engine::{EngineOpts, PruneStats};
 
 /// Configuration for Lloyd iterations.
 #[derive(Clone, Debug)]
@@ -43,115 +47,22 @@ pub struct LloydResult {
     pub iters: usize,
 }
 
-/// Weighted Lloyd on `n × d` row-major `points` with per-point `weights`.
+/// Weighted Lloyd on `n × d` row-major `points` with per-point `weights`
+/// (bounds-pruned, chunk-parallel production engine).
 pub fn weighted_lloyd(points: &[f64], weights: &[f64], d: usize, cfg: &LloydConfig) -> LloydResult {
-    assert!(d > 0, "dimension must be positive");
-    assert_eq!(points.len() % d, 0, "points not a multiple of d");
-    let n = points.len() / d;
-    assert_eq!(weights.len(), n, "weights length mismatch");
-    assert!(n > 0, "no points");
-    let k = cfg.k.min(n);
+    lloyd_dense(points, weights, d, cfg, &EngineOpts::default()).0
+}
 
-    let mut rng = SplitMix64::new(cfg.seed);
-    let row = |i: usize| &points[i * d..(i + 1) * d];
-    let dist2 = |a: &[f64], b: &[f64]| -> f64 {
-        let mut s = 0.0;
-        for (x, y) in a.iter().zip(b) {
-            let t = x - y;
-            s += t * t;
-        }
-        s
-    };
-
-    // k-means++ seeding.
-    let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| dist2(row(i), row(j)));
-    let mut centroids: Vec<f64> = Vec::with_capacity(k * d);
-    for &s in &seeds {
-        centroids.extend_from_slice(row(s));
-    }
-
-    let mut assign = vec![0u32; n];
-    let mut objective = f64::INFINITY;
-    let mut iters = 0;
-    let mut mind2 = vec![0.0f64; n];
-
-    for it in 0..cfg.max_iters.max(1) {
-        iters = it + 1;
-        // --- assignment ---
-        let mut cnorm = vec![0.0f64; k];
-        for c in 0..k {
-            let cc = &centroids[c * d..(c + 1) * d];
-            cnorm[c] = cc.iter().map(|v| v * v).sum();
-        }
-        let mut obj = 0.0;
-        for i in 0..n {
-            let x = row(i);
-            let xn: f64 = x.iter().map(|v| v * v).sum();
-            let mut best = f64::INFINITY;
-            let mut best_c = 0u32;
-            for c in 0..k {
-                let cc = &centroids[c * d..(c + 1) * d];
-                let mut dot = 0.0;
-                for (a, b) in x.iter().zip(cc) {
-                    dot += a * b;
-                }
-                let dd = xn - 2.0 * dot + cnorm[c];
-                if dd < best {
-                    best = dd;
-                    best_c = c as u32;
-                }
-            }
-            let best = best.max(0.0);
-            assign[i] = best_c;
-            mind2[i] = best;
-            obj += weights[i] * best;
-        }
-
-        // --- update ---
-        let mut sums = vec![0.0f64; k * d];
-        let mut mass = vec![0.0f64; k];
-        for i in 0..n {
-            let c = assign[i] as usize;
-            let w = weights[i];
-            mass[c] += w;
-            let x = row(i);
-            let s = &mut sums[c * d..(c + 1) * d];
-            for (sv, xv) in s.iter_mut().zip(x) {
-                *sv += w * xv;
-            }
-        }
-        for c in 0..k {
-            if mass[c] > 0.0 {
-                for j in 0..d {
-                    centroids[c * d + j] = sums[c * d + j] / mass[c];
-                }
-            } else {
-                // Empty cluster: reseed at the point with the largest
-                // weighted distance-to-centroid contribution.
-                let far = (0..n)
-                    .max_by(|&a, &b| {
-                        (weights[a] * mind2[a])
-                            .partial_cmp(&(weights[b] * mind2[b]))
-                            .expect("finite")
-                    })
-                    .expect("n > 0");
-                centroids[c * d..(c + 1) * d].copy_from_slice(row(far));
-                mind2[far] = 0.0;
-            }
-        }
-
-        // --- convergence ---
-        if objective.is_finite() {
-            let improve = (objective - obj) / objective.abs().max(1e-30);
-            if improve.abs() < cfg.tol {
-                objective = obj;
-                break;
-            }
-        }
-        objective = obj;
-    }
-
-    LloydResult { centroids, assign, objective, iters }
+/// Weighted Lloyd with explicit engine options; also returns the pruning
+/// and throughput statistics ([`PruneStats`]).
+pub fn weighted_lloyd_with(
+    points: &[f64],
+    weights: &[f64],
+    d: usize,
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+) -> (LloydResult, PruneStats) {
+    lloyd_dense(points, weights, d, cfg, opts)
 }
 
 /// Evaluate the weighted k-means objective of fixed centroids on a dense
@@ -183,6 +94,7 @@ pub fn objective(points: &[f64], weights: &[f64], d: usize, centroids: &[f64]) -
 mod tests {
     use super::*;
     use crate::util::testkit::{assert_close, for_cases};
+    use crate::util::SplitMix64;
 
     fn blobs(rng: &mut SplitMix64, centers: &[(f64, f64)], per: usize) -> (Vec<f64>, Vec<f64>) {
         let mut pts = Vec::new();
@@ -281,5 +193,20 @@ mod tests {
         let b = weighted_lloyd(&pts, &w, 2, &LloydConfig::new(2));
         assert_eq!(a.assign, b.assign);
         assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn engine_options_do_not_change_the_answer() {
+        let mut rng = SplitMix64::new(12);
+        let (pts, w) = blobs(&mut rng, &[(0.0, 0.0), (4.0, 0.0), (0.0, 4.0)], 40);
+        let cfg = LloydConfig::new(3);
+        let (a, sa) = weighted_lloyd_with(&pts, &w, 2, &cfg, &EngineOpts::naive_serial());
+        let (b, sb) = weighted_lloyd_with(&pts, &w, 2, &cfg, &EngineOpts::pruned());
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        // The pruned run must do no more distance work than the naive one.
+        assert!(sb.dist_evals <= sa.dist_evals);
+        assert_eq!(sa.dist_evals_skipped, 0);
     }
 }

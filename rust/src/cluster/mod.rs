@@ -2,6 +2,9 @@
 //! k-means++ seeder, dense weighted Lloyd (the mlpack-style baseline and
 //! the XLA hot-path's host-side twin), and the factored sparse Lloyd that
 //! implements Step 4's O(1)-per-(cell, centroid, subspace) distance trick.
+//! Both Lloyd variants execute on the shared [`engine`]: a tiled distance
+//! microkernel, Hamerly bounds pruning, and a deterministic chunk-parallel
+//! executor.
 //!
 //! | paper piece | module |
 //! |---|---|
@@ -10,8 +13,10 @@
 //! | k-means++ seeding [7] | [`kmeanspp`] |
 //! | Lloyd over dense `X` (mlpack comparator) | [`lloyd`] |
 //! | Step-4 factored Lloyd over the grid (§4.3) | [`sparse_lloyd`] |
+//! | shared Step-4 execution engine | [`engine`] |
 
 pub mod categorical;
+pub mod engine;
 pub mod kmeans1d;
 pub mod kmedian;
 pub mod kmeanspp;
@@ -20,10 +25,12 @@ pub mod regularized;
 pub mod sparse_lloyd;
 
 pub use categorical::{categorical_kmeans, CatClusters};
+pub use engine::{CentroidScorer, EngineOpts, PruneStats};
 pub use kmeans1d::{kmeans1d, Kmeans1dResult};
 pub use kmedian::{kmedian1d, weighted_kmedian, Kmedian1dResult, KmedianResult};
 pub use kmeanspp::kmeanspp_indices;
-pub use lloyd::{weighted_lloyd, LloydConfig, LloydResult};
+pub use lloyd::{weighted_lloyd, weighted_lloyd_with, LloydConfig, LloydResult};
 pub use sparse_lloyd::{
-    sparse_lloyd, CentroidCoord, Components, SparseGrid, SparseLloydResult, Subspace,
+    sparse_lloyd, sparse_lloyd_with, CentroidCoord, Components, SparseGrid, SparseLloydResult,
+    Subspace,
 };

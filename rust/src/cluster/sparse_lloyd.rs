@@ -17,10 +17,17 @@
 //! generic `O(|G|·D·k·t)` dense Lloyd by the total categorical domain size.
 //! Since grid points only enter distances through their component ids, the
 //! assignment loop is `m` table lookups per (cell, centroid).
+//!
+//! This module owns the factored *data model*; the iteration itself runs
+//! on the shared bounds-pruned, chunk-parallel Step-4 engine
+//! ([`crate::cluster::engine::factored`]). [`sparse_lloyd`] uses the
+//! production engine configuration; [`sparse_lloyd_with`] exposes the
+//! engine options (naive reference, thread count) and the pruning
+//! statistics.
 
-use super::kmeanspp::kmeanspp_indices;
+use super::engine::factored::lloyd_factored;
+use super::engine::{EngineOpts, PruneStats};
 use super::lloyd::LloydConfig;
-use crate::util::SplitMix64;
 
 /// Per-subspace component geometry (Step 2 output).
 #[derive(Clone, Debug)]
@@ -39,6 +46,11 @@ impl Components {
             Components::Continuous { centers } => centers.len(),
             Components::Categorical { norm_sq } => norm_sq.len(),
         }
+    }
+
+    /// True when the subspace has no components (degenerate).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -68,8 +80,9 @@ impl SparseGrid {
         self.weights.len()
     }
 
+    /// Component ids of cell `i`.
     #[inline]
-    fn row(&self, i: usize) -> &[u32] {
+    pub fn row(&self, i: usize) -> &[u32] {
         &self.gids[i * self.m..(i + 1) * self.m]
     }
 }
@@ -97,7 +110,7 @@ pub struct SparseLloydResult {
 
 /// Squared distance between two grid cells (for seeding): orthogonality
 /// makes the categorical case `‖u_a‖² + ‖u_b‖²` when `a ≠ b`.
-fn cell_dist2(grid: &SparseGrid, subspaces: &[Subspace], i: usize, j: usize) -> f64 {
+pub(crate) fn cell_dist2(grid: &SparseGrid, subspaces: &[Subspace], i: usize, j: usize) -> f64 {
     let (ri, rj) = (grid.row(i), grid.row(j));
     let mut s = 0.0;
     for (jj, sub) in subspaces.iter().enumerate() {
@@ -117,175 +130,25 @@ fn cell_dist2(grid: &SparseGrid, subspaces: &[Subspace], i: usize, j: usize) -> 
     s
 }
 
-/// Factored weighted Lloyd over the grid coreset.
+/// Factored weighted Lloyd over the grid coreset (bounds-pruned,
+/// chunk-parallel production engine).
 pub fn sparse_lloyd(
     grid: &SparseGrid,
     subspaces: &[Subspace],
     cfg: &LloydConfig,
 ) -> SparseLloydResult {
-    let n = grid.n();
-    assert!(n > 0, "empty grid");
-    assert_eq!(grid.m, subspaces.len());
-    let k = cfg.k.min(n);
-    let m = grid.m;
+    lloyd_factored(grid, subspaces, cfg, &EngineOpts::default()).0
+}
 
-    let mut rng = SplitMix64::new(cfg.seed);
-    let seeds = kmeanspp_indices(n, &grid.weights, k, &mut rng, |i, j| {
-        cell_dist2(grid, subspaces, i, j)
-    });
-
-    // Initialize centroids at the seed cells (indicator coefficients).
-    let init_from_cell = |cell: usize| -> Vec<CentroidCoord> {
-        let row = grid.row(cell);
-        subspaces
-            .iter()
-            .enumerate()
-            .map(|(j, sub)| match &sub.comp {
-                Components::Continuous { centers } => {
-                    CentroidCoord::Continuous(centers[row[j] as usize])
-                }
-                Components::Categorical { norm_sq } => {
-                    let mut beta = vec![0.0; norm_sq.len()];
-                    beta[row[j] as usize] = 1.0;
-                    CentroidCoord::Categorical(beta)
-                }
-            })
-            .collect()
-    };
-    let mut centroids: Vec<Vec<CentroidCoord>> = seeds.iter().map(|&s| init_from_cell(s)).collect();
-
-    let kappa: Vec<usize> = subspaces.iter().map(|s| s.comp.len()).collect();
-    let mut assign = vec![0u32; n];
-    let mut mind2 = vec![0.0f64; n];
-    let mut objective = f64::INFINITY;
-    let mut iters = 0;
-
-    for it in 0..cfg.max_iters.max(1) {
-        iters = it + 1;
-        // --- build per-subspace distance tables: T_j[a·k + c] ---
-        let tables: Vec<Vec<f64>> = subspaces
-            .iter()
-            .enumerate()
-            .map(|(j, sub)| {
-                let kj = kappa[j];
-                let mut t = vec![0.0f64; kj * k];
-                match &sub.comp {
-                    Components::Continuous { centers } => {
-                        for c in 0..k {
-                            let CentroidCoord::Continuous(mu) = &centroids[c][j] else {
-                                unreachable!("subspace kind is fixed")
-                            };
-                            for a in 0..kj {
-                                let d = centers[a] - mu;
-                                t[a * k + c] = sub.lambda * d * d;
-                            }
-                        }
-                    }
-                    Components::Categorical { norm_sq } => {
-                        for c in 0..k {
-                            let CentroidCoord::Categorical(beta) = &centroids[c][j] else {
-                                unreachable!("subspace kind is fixed")
-                            };
-                            // S = Σ_b β²·‖u_b‖² (centroid's squared norm).
-                            let s_c: f64 =
-                                beta.iter().zip(norm_sq).map(|(b, nq)| b * b * nq).sum();
-                            for a in 0..kj {
-                                let d = norm_sq[a] - 2.0 * beta[a] * norm_sq[a] + s_c;
-                                t[a * k + c] = sub.lambda * d.max(0.0);
-                            }
-                        }
-                    }
-                }
-                t
-            })
-            .collect();
-
-        // --- assignment: m table lookups per (cell, centroid) ---
-        // Iterator zips keep the accumulation loop bounds-check-free so
-        // LLVM auto-vectorizes it (≈2× on the k=50 configurations).
-        let mut obj = 0.0;
-        let mut dist_buf = vec![0.0f64; k];
-        for i in 0..n {
-            let row = grid.row(i);
-            // First subspace initializes, the rest accumulate.
-            let base0 = row[0] as usize * k;
-            dist_buf.copy_from_slice(&tables[0][base0..base0 + k]);
-            for j in 1..m {
-                let base = row[j] as usize * k;
-                let tj = &tables[j][base..base + k];
-                for (d, &t) in dist_buf.iter_mut().zip(tj) {
-                    *d += t;
-                }
-            }
-            let (mut best, mut best_c) = (f64::INFINITY, 0u32);
-            for (c, &d) in dist_buf.iter().enumerate() {
-                if d < best {
-                    best = d;
-                    best_c = c as u32;
-                }
-            }
-            assign[i] = best_c;
-            mind2[i] = best;
-            obj += grid.weights[i] * best;
-        }
-
-        // --- update: accumulate per-component masses ---
-        let mut mass = vec![0.0f64; k];
-        // comp_mass[j][c·κ_j + a] = Σ weight of cells in c with g_j = a.
-        let mut comp_mass: Vec<Vec<f64>> = kappa.iter().map(|&kj| vec![0.0; k * kj]).collect();
-        for i in 0..n {
-            let c = assign[i] as usize;
-            let w = grid.weights[i];
-            mass[c] += w;
-            let row = grid.row(i);
-            for j in 0..m {
-                comp_mass[j][c * kappa[j] + row[j] as usize] += w;
-            }
-        }
-        for c in 0..k {
-            if mass[c] > 0.0 {
-                for (j, sub) in subspaces.iter().enumerate() {
-                    let kj = kappa[j];
-                    let cm = &comp_mass[j][c * kj..(c + 1) * kj];
-                    match (&sub.comp, &mut centroids[c][j]) {
-                        (Components::Continuous { centers }, CentroidCoord::Continuous(mu)) => {
-                            let s: f64 =
-                                cm.iter().zip(centers).map(|(w, v)| w * v).sum();
-                            *mu = s / mass[c];
-                        }
-                        (Components::Categorical { .. }, CentroidCoord::Categorical(beta)) => {
-                            for a in 0..kj {
-                                beta[a] = cm[a] / mass[c];
-                            }
-                        }
-                        _ => unreachable!("subspace kind is fixed"),
-                    }
-                }
-            } else {
-                // Empty cluster: reseed at the heaviest-cost cell.
-                let far = (0..n)
-                    .max_by(|&a, &b| {
-                        (grid.weights[a] * mind2[a])
-                            .partial_cmp(&(grid.weights[b] * mind2[b]))
-                            .expect("finite")
-                    })
-                    .expect("n > 0");
-                centroids[c] = init_from_cell(far);
-                mind2[far] = 0.0;
-            }
-        }
-
-        if objective.is_finite() {
-            let improve = (objective - obj) / objective.abs().max(1e-30);
-            if improve.abs() < cfg.tol {
-                objective = obj;
-                break;
-            }
-        }
-        objective = obj;
-    }
-
-    SparseLloydResult { centroids, assign, objective, iters }
+/// Factored weighted Lloyd with explicit engine options; also returns the
+/// pruning/throughput statistics ([`PruneStats`]).
+pub fn sparse_lloyd_with(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+) -> (SparseLloydResult, PruneStats) {
+    lloyd_factored(grid, subspaces, cfg, opts)
 }
 
 #[cfg(test)]
@@ -476,5 +339,22 @@ mod tests {
         let r = sparse_lloyd(&grid, &subs, &LloydConfig { k: 1, ..LloydConfig::new(1) });
         let CentroidCoord::Continuous(mu) = &r.centroids[0][0] else { panic!() };
         assert_close(*mu, 1.0, 1e-9);
+    }
+
+    #[test]
+    fn stats_report_full_scan_work_for_naive() {
+        let subs = vec![Subspace {
+            name: "x".into(),
+            lambda: 1.0,
+            comp: Components::Continuous { centers: vec![0.0, 1.0, 10.0, 11.0] },
+        }];
+        let grid = SparseGrid { m: 1, gids: vec![0, 1, 2, 3], weights: vec![1.0; 4] };
+        let cfg = LloydConfig { k: 2, max_iters: 3, tol: 0.0, seed: 1 };
+        let (_, stats) =
+            sparse_lloyd_with(&grid, &subs, &cfg, &crate::cluster::EngineOpts::naive_serial());
+        assert_eq!(stats.dist_evals, 4 * 2 * 3); // n·k per iteration
+        assert_eq!(stats.dist_evals_skipped, 0);
+        assert_eq!(stats.points, 4);
+        assert_eq!(stats.iters, 3);
     }
 }

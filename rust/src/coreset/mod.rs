@@ -14,7 +14,7 @@
 //!   score centroids on all of `X` with O(1) memory.
 
 use crate::cluster::sparse_lloyd::{CentroidCoord, Components, SparseGrid, Subspace};
-use crate::cluster::{categorical_kmeans, kmeans1d, CatClusters, Kmeans1dResult};
+use crate::cluster::{categorical_kmeans, kmeans1d, CatClusters, CentroidScorer, Kmeans1dResult};
 use crate::data::{Database, Value};
 use crate::faq::{grid_weights, GidAssigner, Marginal};
 use crate::join::{stream_rows, EmbedSpec};
@@ -252,7 +252,10 @@ pub fn centroids_dense(
 }
 
 /// Evaluate the weighted k-means objective of dense centroids over the
-/// *entire* (unmaterialized) join output by streaming rows. Memory is O(D).
+/// *entire* (unmaterialized) join output by streaming rows. Memory is
+/// O(D): rows are buffered into small tiles and scored through the shared
+/// Step-4 engine microkernel ([`CentroidScorer`]), so the streaming pass
+/// gets the same hoisted-norm distance expansion as the Lloyd hot loop.
 pub fn eval_full_objective(
     db: &Database,
     feq: &Feq,
@@ -261,26 +264,13 @@ pub fn eval_full_objective(
     centroids: &[f64],
 ) -> Result<f64> {
     let d = spec.dims;
-    let k = centroids.len() / d;
+    let mut scorer = CentroidScorer::new(centroids, d);
     let mut buf = vec![0.0; d];
-    let mut obj = 0.0;
     stream_rows(db, feq, tree, |vals, w| {
         spec.embed_into(vals, &mut buf);
-        let mut best = f64::INFINITY;
-        for c in 0..k {
-            let cc = &centroids[c * d..(c + 1) * d];
-            let mut s = 0.0;
-            for (a, b) in buf.iter().zip(cc) {
-                let t = a - b;
-                s += t * t;
-            }
-            if s < best {
-                best = s;
-            }
-        }
-        obj += w * best;
+        scorer.push(&buf, w);
     })?;
-    Ok(obj)
+    Ok(scorer.finish())
 }
 
 #[cfg(test)]

@@ -65,6 +65,7 @@ pub mod join;
 pub mod metrics;
 pub mod query;
 pub mod rkmeans;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod synthetic;
 pub mod util;

@@ -16,8 +16,10 @@ use rkmeans::bench_harness::paper::{self, PaperCfg};
 use rkmeans::cluster::LloydConfig;
 use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
 use rkmeans::data::{csv, Value};
+#[cfg(feature = "pjrt")]
 use rkmeans::join::EmbedSpec;
 use rkmeans::rkmeans::{full_objective, materialize_and_cluster_capped, rkmeans, RkConfig};
+#[cfg(feature = "pjrt")]
 use rkmeans::runtime::PjrtRuntime;
 use rkmeans::synthetic::{Dataset, Scale};
 use rkmeans::util::{human_bytes, human_count, SplitMix64};
@@ -140,10 +142,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let res = match engine {
         "native" => rkmeans(&db, &feq, &cfg)?,
+        #[cfg(feature = "pjrt")]
         "xla" => {
             let rt = PjrtRuntime::load(&PjrtRuntime::default_dir())?;
             rkmeans_xla(&db, &feq, &cfg, &rt)?
         }
+        #[cfg(not(feature = "pjrt"))]
+        "xla" => bail!("engine `xla` requires a build with `--features pjrt`"),
         other => bail!("unknown engine {other:?} (native|xla)"),
     };
     let total = t0.elapsed();
@@ -169,6 +174,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 }
 
 /// Steps 1–3 native, Step 4 through the PJRT artifact (dense grid path).
+#[cfg(feature = "pjrt")]
 fn rkmeans_xla(
     db: &rkmeans::data::Database,
     feq: &rkmeans::query::Feq,
@@ -308,6 +314,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    bail!("`rkmeans artifacts` requires a build with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = args.get("dir").map(PathBuf::from).unwrap_or_else(PjrtRuntime::default_dir);
     if !PjrtRuntime::available(&dir) {

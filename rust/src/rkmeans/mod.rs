@@ -13,14 +13,14 @@
 //! 2. optimal κ-clustering per subspace (`α = 1` solvers);
 //! 3. sparse non-zero-weight grid coreset + `w_grid` — free-variable FAQ;
 //! 4. weighted k-means over the coreset — factored Lloyd (native) or the
-//!    dense XLA/PJRT artifact path (see [`crate::runtime`]).
+//!    dense XLA/PJRT artifact path (`crate::runtime`, `pjrt` feature).
 
 pub mod baseline;
 
 pub use baseline::{materialize_and_cluster, materialize_and_cluster_capped, BaselineResult};
 
 use crate::cluster::sparse_lloyd::CentroidCoord;
-use crate::cluster::{sparse_lloyd, LloydConfig};
+use crate::cluster::{sparse_lloyd_with, EngineOpts, LloydConfig, PruneStats};
 use crate::coreset::{
     build_grid, centroids_dense, eval_full_objective, SubspaceModel,
 };
@@ -114,6 +114,9 @@ pub struct RkResult {
     pub iters: usize,
     /// Per-step wall-clock (Figure 3).
     pub timings: StepTimings,
+    /// Step-4 engine statistics: distance evaluations performed vs.
+    /// skipped by the Hamerly bounds, and assignment throughput.
+    pub step4_stats: PruneStats,
 }
 
 impl RkResult {
@@ -170,10 +173,11 @@ pub fn rkmeans_with_tree(
         anyhow::bail!("FEQ output is empty: nothing to cluster");
     }
 
-    // Step 4: weighted k-means over the coreset (factored Lloyd).
+    // Step 4: weighted k-means over the coreset (factored Lloyd on the
+    // bounds-pruned, chunk-parallel engine).
     let t0 = std::time::Instant::now();
     let lcfg = LloydConfig { k: cfg.k, max_iters: cfg.max_iters, tol: cfg.tol, seed: cfg.seed };
-    let res = sparse_lloyd(&grid, &subspaces, &lcfg);
+    let (res, step4_stats) = sparse_lloyd_with(&grid, &subspaces, &lcfg, &EngineOpts::default());
     timings.step4_cluster = t0.elapsed();
 
     Ok(RkResult {
@@ -185,6 +189,7 @@ pub fn rkmeans_with_tree(
         grid_mass: grid.weights.iter().sum(),
         iters: res.iters,
         timings,
+        step4_stats,
     })
 }
 

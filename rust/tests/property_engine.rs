@@ -1,0 +1,194 @@
+//! Property suite for the Step-4 engine's determinism contract: on seeded
+//! random weighted inputs, the bounds-pruned, chunk-parallel engine must
+//! produce **identical** assignments, centroids and objective to the
+//! retained naive serial reference — for both the dense and the factored
+//! form, across thread counts, and across the multi-chunk boundary.
+
+use rkmeans::cluster::engine::CHUNK;
+use rkmeans::cluster::sparse_lloyd::{Components, SparseGrid, Subspace};
+use rkmeans::cluster::{
+    sparse_lloyd_with, weighted_lloyd_with, CentroidCoord, EngineOpts, LloydConfig,
+};
+use rkmeans::util::testkit::for_cases;
+use rkmeans::util::SplitMix64;
+
+/// Mixed blob + uniform points with random weights: blobs give the
+/// pruning something to skip, the uniform fraction keeps assignments
+/// churning so full scans and skips interleave.
+fn dense_input(rng: &mut SplitMix64, n: usize, d: usize) -> (Vec<f64>, Vec<f64>) {
+    let blobs = 5usize;
+    let centers: Vec<f64> = (0..blobs * d).map(|_| rng.uniform(-6.0, 6.0)).collect();
+    let mut pts = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        if rng.coin(0.8) {
+            let b = rng.below(blobs as u64) as usize;
+            for j in 0..d {
+                pts.push(centers[b * d + j] + 0.4 * rng.normal());
+            }
+        } else {
+            for _ in 0..d {
+                pts.push(rng.uniform(-8.0, 8.0));
+            }
+        }
+    }
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.05, 3.0)).collect();
+    (pts, w)
+}
+
+fn grid_input(rng: &mut SplitMix64, n: usize) -> (SparseGrid, Vec<Subspace>) {
+    let m = 1 + rng.below(4) as usize;
+    let mut subs = Vec::with_capacity(m);
+    for j in 0..m {
+        let kj = 2 + rng.below(8) as usize;
+        let comp = if rng.coin(0.5) {
+            Components::Continuous {
+                centers: (0..kj).map(|_| rng.uniform(-10.0, 10.0)).collect(),
+            }
+        } else {
+            Components::Categorical {
+                norm_sq: (0..kj).map(|_| rng.uniform(0.2, 1.0)).collect(),
+            }
+        };
+        subs.push(Subspace { name: format!("s{j}"), lambda: rng.uniform(0.3, 3.0), comp });
+    }
+    let kappas: Vec<usize> = subs.iter().map(|s| s.comp.len()).collect();
+    let mut gids = Vec::with_capacity(n * m);
+    let mut weights = Vec::with_capacity(n);
+    for _ in 0..n {
+        for &kj in &kappas {
+            gids.push(rng.below(kj as u64) as u32);
+        }
+        weights.push(rng.uniform(0.05, 4.0));
+    }
+    (SparseGrid { m, gids, weights }, subs)
+}
+
+fn assert_factored_centroids_equal(
+    a: &[Vec<CentroidCoord>],
+    b: &[Vec<CentroidCoord>],
+) {
+    assert_eq!(a.len(), b.len());
+    for (ca, cb) in a.iter().zip(b) {
+        assert_eq!(ca.len(), cb.len());
+        for (xa, xb) in ca.iter().zip(cb) {
+            match (xa, xb) {
+                (CentroidCoord::Continuous(u), CentroidCoord::Continuous(v)) => {
+                    assert_eq!(u.to_bits(), v.to_bits())
+                }
+                (CentroidCoord::Categorical(u), CentroidCoord::Categorical(v)) => {
+                    assert_eq!(u.len(), v.len());
+                    for (p, q) in u.iter().zip(v) {
+                        assert_eq!(p.to_bits(), q.to_bits());
+                    }
+                }
+                _ => panic!("centroid kind mismatch"),
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_pruned_parallel_equals_naive_serial() {
+    for_cases(20, |rng| {
+        let n = 30 + rng.below(800) as usize;
+        let d = 1 + rng.below(6) as usize;
+        let k = 1 + rng.below(9) as usize;
+        let (pts, w) = dense_input(rng, n, d);
+        // Mix converged and capped runs: tol 0 forces every iteration,
+        // a finite tol exercises the early-stop path.
+        let tol = if rng.coin(0.5) { 0.0 } else { 1e-6 };
+        let cfg = LloydConfig { k, max_iters: 1 + rng.below(12) as usize, tol, seed: rng.next_u64() };
+        let (a, sa) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::naive_serial());
+        let (b, sb) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::pruned().with_threads(4));
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.iters, b.iters);
+        // Work accounting: the pruned path pays at most one extra
+        // (ub-tightening) evaluation per point per iteration on top of
+        // whatever the naive reference would have done.
+        assert!(sb.dist_evals <= sa.dist_evals + sb.points * sb.iters as u64);
+        assert_eq!(sa.dist_evals_skipped, 0);
+    });
+}
+
+#[test]
+fn factored_pruned_parallel_equals_naive_serial() {
+    for_cases(20, |rng| {
+        let n = 20 + rng.below(600) as usize;
+        let (grid, subs) = grid_input(rng, n);
+        let k = 1 + rng.below(8) as usize;
+        let tol = if rng.coin(0.5) { 0.0 } else { 1e-6 };
+        let cfg = LloydConfig { k, max_iters: 1 + rng.below(10) as usize, tol, seed: rng.next_u64() };
+        let (a, sa) = sparse_lloyd_with(&grid, &subs, &cfg, &EngineOpts::naive_serial());
+        let (b, sb) = sparse_lloyd_with(&grid, &subs, &cfg, &EngineOpts::pruned().with_threads(4));
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.iters, b.iters);
+        assert_factored_centroids_equal(&a.centroids, &b.centroids);
+        assert!(sb.dist_evals <= sa.dist_evals + sb.points * sb.iters as u64);
+        assert_eq!(sa.dist_evals_skipped, 0);
+    });
+}
+
+#[test]
+fn dense_multi_chunk_thread_count_invariant() {
+    // Cross the CHUNK boundary so the parallel reduction actually has
+    // multiple chunk accumulators to combine, and check every thread
+    // count reduces to identical bits (including the naive reference).
+    let mut rng = SplitMix64::new(0xFEED);
+    let n = CHUNK + CHUNK / 2;
+    let d = 3;
+    let (pts, w) = dense_input(&mut rng, n, d);
+    let cfg = LloydConfig { k: 7, max_iters: 6, tol: 0.0, seed: 99 };
+    let (base, _) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::naive_serial());
+    for threads in [1usize, 2, 3, 8] {
+        let opts = EngineOpts::pruned().with_threads(threads);
+        let (r, stats) = weighted_lloyd_with(&pts, &w, d, &cfg, &opts);
+        assert_eq!(base.assign, r.assign, "threads={threads}");
+        assert_eq!(base.centroids, r.centroids, "threads={threads}");
+        assert_eq!(base.objective.to_bits(), r.objective.to_bits(), "threads={threads}");
+        assert_eq!(stats.points, n as u64);
+    }
+}
+
+#[test]
+fn factored_multi_chunk_thread_count_invariant() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    let (grid, subs) = grid_input(&mut rng, CHUNK + 321);
+    let cfg = LloydConfig { k: 6, max_iters: 5, tol: 0.0, seed: 4242 };
+    let (base, _) = sparse_lloyd_with(&grid, &subs, &cfg, &EngineOpts::naive_serial());
+    for threads in [1usize, 2, 5] {
+        let opts = EngineOpts::pruned().with_threads(threads);
+        let (r, _) = sparse_lloyd_with(&grid, &subs, &cfg, &opts);
+        assert_eq!(base.assign, r.assign, "threads={threads}");
+        assert_eq!(base.objective.to_bits(), r.objective.to_bits(), "threads={threads}");
+        assert_factored_centroids_equal(&base.centroids, &r.centroids);
+    }
+}
+
+#[test]
+fn pruning_actually_prunes_on_stable_workloads() {
+    // Not just correct — the bounds must pay: a well-separated workload
+    // run for enough iterations should skip most of the inner k-loops.
+    let mut rng = SplitMix64::new(0xACE);
+    let d = 4;
+    let blobs = 6usize;
+    let centers: Vec<f64> = (0..blobs * d).map(|_| rng.uniform(-40.0, 40.0)).collect();
+    let n = 6000usize;
+    let mut pts = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let b = rng.below(blobs as u64) as usize;
+        for j in 0..d {
+            pts.push(centers[b * d + j] + 0.2 * rng.normal());
+        }
+    }
+    let w = vec![1.0; n];
+    let cfg = LloydConfig { k: 8, max_iters: 15, tol: 0.0, seed: 7 };
+    let (_, stats) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::pruned());
+    assert!(
+        stats.skip_rate() > 0.5,
+        "well-separated blobs should skip most evaluations, got {:.3}",
+        stats.skip_rate()
+    );
+}

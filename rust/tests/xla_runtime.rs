@@ -1,6 +1,9 @@
 //! Cross-engine integration: the XLA/PJRT artifact path must be
 //! interchangeable with the native engine on real coreset workloads (not
 //! just synthetic blobs). Skips gracefully when `artifacts/` is absent.
+//! The whole file is gated on the `pjrt` feature (the default build has no
+//! PJRT backend at all).
+#![cfg(feature = "pjrt")]
 
 use rkmeans::cluster::{weighted_lloyd, LloydConfig};
 use rkmeans::coreset::{build_grid, grid_dense_embed, solve_subspaces};

@@ -1,0 +1,115 @@
+//! Compile-only stub of the `xla-rs` PJRT bindings.
+//!
+//! The offline build environment has no PJRT shared library, but the
+//! `runtime` module (behind the `pjrt` feature) still needs the `xla`
+//! crate's surface to typecheck. This stub mirrors exactly the API used by
+//! `rkmeans::runtime`; every entry point fails at *runtime* with a clear
+//! message, so `cargo build --features pjrt` succeeds anywhere while real
+//! execution requires swapping this path dependency for an actual
+//! `xla-rs` checkout (edit the `xla` entry in `rust/Cargo.toml`, or add a
+//! `[patch]` section pointing at the real crate).
+
+use std::fmt;
+
+/// Error type matching `xla::Error`'s role (displayable, boxable).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias used by all stub entry points.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the compile-only PJRT stub (rust/vendor/xla); point the \
+         `xla` dependency at a real xla-rs checkout to run AOT artifacts"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an `.hlo.txt` artifact.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A host-side literal (dense array value).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Destructure a 3-tuple literal.
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        unavailable("Literal::to_tuple3")
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
