@@ -1,0 +1,114 @@
+//! Bench gate — the CI regression check over the bench trajectory
+//! (ROADMAP "bench trajectory in CI" item).
+//!
+//! Reads `BENCH_lloyd.json` and `BENCH_stream.json` (as emitted by the
+//! smoke runs of `kernel_lloyd` and `stream_ingest` earlier in the CI
+//! job) plus the committed baseline `bench_baseline.json`, and **fails
+//! (exit 1)** when a tracked throughput metric regresses more than the
+//! baseline's tolerance (default 20 %) below its committed value:
+//!
+//! * `lloyd_retailer_pruned_speedup` — `speedup_vs_naive` of the
+//!   `retailer-materialized` / `dense-pruned` record (machine-relative,
+//!   so it is stable across CI hardware);
+//! * `stream_patched_speedup` — `speedup_vs_rebuild` of the patched
+//!   stream record (also a ratio).
+//!
+//! Baseline values are calibrated for the `--test` smoke shapes and set
+//! conservatively; raise them as the engines get faster so the trajectory
+//! ratchets. Env overrides: `RKMEANS_BASELINE`, `RKMEANS_BENCH_OUT`,
+//! `RKMEANS_STREAM_OUT` (same paths the emitting benches use).
+
+use rkmeans::util::json::{parse, Json};
+use std::path::PathBuf;
+use std::process::exit;
+
+fn read_json(path: &PathBuf) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("cannot parse {}: {e:?}", path.display()))
+}
+
+fn env_path(var: &str, default: &str) -> PathBuf {
+    PathBuf::from(std::env::var(var).unwrap_or_else(|_| default.to_string()))
+}
+
+/// Find a record matching all `(key, value)` string fields.
+fn find_record<'a>(doc: &'a Json, fields: &[(&str, &str)]) -> Option<&'a Json> {
+    doc.get("records")?.as_arr()?.iter().find(|r| {
+        fields
+            .iter()
+            .all(|(k, v)| r.get(k).and_then(|x| x.as_str()) == Some(*v))
+    })
+}
+
+fn main() {
+    let baseline_path = env_path("RKMEANS_BASELINE", "bench_baseline.json");
+    let lloyd_path = env_path("RKMEANS_BENCH_OUT", "BENCH_lloyd.json");
+    let stream_path = env_path("RKMEANS_STREAM_OUT", "BENCH_stream.json");
+
+    let mut failures: Vec<String> = Vec::new();
+    let baseline = match read_json(&baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            exit(1);
+        }
+    };
+    let tolerance = baseline
+        .get("tolerance")
+        .and_then(|t| t.as_f64())
+        .unwrap_or(0.2);
+    let gate = |name: &str, actual: Option<f64>, failures: &mut Vec<String>| {
+        let Some(base) = baseline.get("gate").and_then(|g| g.get(name)).and_then(|v| v.as_f64())
+        else {
+            println!("bench_gate: {name}: no baseline — skipped");
+            return;
+        };
+        let floor = base * (1.0 - tolerance);
+        match actual {
+            Some(a) if a >= floor => {
+                println!("bench_gate: {name}: {a:.3} >= floor {floor:.3} (baseline {base:.3}) ok")
+            }
+            Some(a) => failures.push(format!(
+                "{name}: {a:.3} below floor {floor:.3} (baseline {base:.3}, tolerance {tolerance})"
+            )),
+            None => failures.push(format!("{name}: metric missing from bench output")),
+        }
+    };
+
+    match read_json(&lloyd_path) {
+        Ok(doc) => {
+            let rec = find_record(
+                &doc,
+                &[("label", "retailer-materialized"), ("engine", "dense-pruned")],
+            );
+            gate(
+                "lloyd_retailer_pruned_speedup",
+                rec.and_then(|r| r.get("speedup_vs_naive")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    match read_json(&stream_path) {
+        Ok(doc) => {
+            let rec = find_record(&doc, &[("mode", "patched")]);
+            gate(
+                "stream_patched_speedup",
+                rec.and_then(|r| r.get("speedup_vs_rebuild")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    if failures.is_empty() {
+        println!("bench_gate: all tracked metrics within tolerance");
+    } else {
+        for f in &failures {
+            eprintln!("bench_gate FAIL: {f}");
+        }
+        exit(1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Bench S1 — streaming maintenance: patched (Step-3 delta + Step-4 warm
+//! start via the incremental planner) vs. full-pipeline rebuild per batch,
+//! over a deterministic Retailer insert/delete trace
+//! (`synthetic::retailer_trace`). Batch size is held ≤ 1 % of |D| — the
+//! acceptance regime, where patched per-batch latency must beat the
+//! rebuild by ≥ 5×. Both arms replay the *same* trace onto clones of the
+//! same database; only the maintenance work is timed (the shared
+//! apply-to-db mirroring is not). Results are written as one
+//! `BENCH_stream.json` document (schema: see `bench_harness` docs; path
+//! override: `RKMEANS_STREAM_OUT`).
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_STREAM_SCALE` overrides the Retailer scale (default 0.02 ≈
+//! 40k fact rows).
+
+use rkmeans::bench_harness::{write_bench_stream, StreamBenchRecord};
+use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlanDecision, PlannerOpts};
+use rkmeans::metrics::Metrics;
+use rkmeans::query::Hypergraph;
+use rkmeans::rkmeans::{rkmeans_with_tree, RkConfig};
+use rkmeans::synthetic::{retailer, retailer_trace, Scale, TraceSpec};
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale: f64 = std::env::var("RKMEANS_STREAM_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.003 } else { 0.02 });
+    let (k, batches) = if test_mode { (4usize, 3usize) } else { (8, 8) };
+
+    let db = retailer::generate(Scale::custom(scale), 42);
+    let feq = retailer::feq();
+    let base_rows = db.total_rows() as usize;
+    // The acceptance regime: batch ≤ 1 % of |D|.
+    let batch = ((base_rows / 128).max(8)).min(base_rows / 100 + 8);
+    let spec = TraceSpec { batches, batch_size: batch, delete_frac: 0.3 };
+    let trace = retailer_trace(&db, 7, spec);
+    let rk = RkConfig::new(k);
+    println!(
+        "stream workload: |D|={base_rows} rows (scale {scale}), batch={batch} \
+         ({:.2}% of |D|) × {batches}, k={k}",
+        100.0 * batch as f64 / base_rows as f64
+    );
+
+    // Arm 1: full rebuild per batch (the coordinator's old loop).
+    let (rebuild_rec, rebuild_mass) = {
+        let mut db = db.clone();
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+        let mut times = Vec::with_capacity(batches);
+        let mut last = None;
+        for b in &trace {
+            apply_to_db(&mut db, b)?;
+            let t0 = Instant::now();
+            let res = rkmeans_with_tree(&db, &feq, &tree, &rk)?;
+            times.push(t0.elapsed().as_secs_f64());
+            last = Some(res);
+        }
+        let last = last.expect("at least one batch");
+        (
+            StreamBenchRecord::from_batches(
+                "retailer-trace",
+                "rebuild",
+                base_rows,
+                batch,
+                &times,
+                last.grid_points,
+                last.objective_grid,
+            ),
+            last.grid_mass,
+        )
+    };
+    println!("{}", rebuild_rec.line());
+
+    // Arm 2: the incremental planner, forced onto the patch path.
+    let (patched_rec, patched_mass, patched_all) = {
+        let mut db = db.clone();
+        let lenient = PlannerOpts {
+            drift_threshold: 1.1,
+            max_patch_fraction: 1.0,
+            rebuild_every: 0,
+            max_join_churn: f64::INFINITY,
+        };
+        // The initial full build is shared state both arms start from; it
+        // is not part of the per-batch latency either way.
+        let mut engine =
+            IncrementalEngine::new(&db, feq.clone(), rk.clone(), lenient, Metrics::new())?;
+        let mut times = Vec::with_capacity(batches);
+        let mut all_patched = true;
+        let mut last = None;
+        for b in &trace {
+            apply_to_db(&mut db, b)?;
+            let t0 = Instant::now();
+            let (decision, res) = engine.apply_batch(&db, b)?;
+            times.push(t0.elapsed().as_secs_f64());
+            all_patched &= decision == PlanDecision::Patched;
+            last = Some(res);
+        }
+        let last = last.expect("at least one batch");
+        (
+            StreamBenchRecord::from_batches(
+                "retailer-trace",
+                "patched",
+                base_rows,
+                batch,
+                &times,
+                last.grid_points,
+                last.objective_grid,
+            )
+            .with_speedup_vs(&rebuild_rec),
+            last.grid_mass,
+            all_patched,
+        )
+    };
+    println!("{}", patched_rec.line());
+
+    // Sanity: both arms end at the same join mass (|X| is Step-2-model
+    // independent; grids can differ slightly because patching freezes the
+    // Step-2 models while a rebuild re-solves them).
+    anyhow::ensure!(patched_all, "planner rebuilt mid-trace; patched arm is not comparable");
+    anyhow::ensure!(
+        (patched_mass - rebuild_mass).abs() <= 1e-6 * rebuild_mass.abs().max(1.0),
+        "final grid mass diverged: patched {patched_mass} vs rebuild {rebuild_mass}"
+    );
+
+    let speedup = patched_rec.speedup_vs_rebuild.unwrap_or(0.0);
+    let records = vec![rebuild_rec, patched_rec];
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_STREAM_OUT").unwrap_or_else(|_| "BENCH_stream.json".to_string()),
+    );
+    write_bench_stream(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+    println!(
+        "patched vs rebuild per-batch latency: {speedup:.2}× (acceptance target ≥ 5× at \
+         batch ≤ 1% of |D|)"
+    );
+    Ok(())
+}

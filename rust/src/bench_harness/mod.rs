@@ -45,6 +45,45 @@
 //!   `skip_rate` = skipped / (evals + skipped).
 //! * `speedup_vs_naive` is the `points_per_sec` ratio against the naive
 //!   serial reference on the same workload; absent on the naive rows.
+//!
+//! # `BENCH_stream.json` schema (version 1)
+//!
+//! `benches/stream_ingest.rs` emits one document per invocation (path from
+//! `RKMEANS_STREAM_OUT`, default `BENCH_stream.json`) comparing patched
+//! vs. full-rebuild per-batch latency over an insert/delete trace:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "stream",
+//!   "records": [
+//!     {
+//!       "label": "retailer-trace",
+//!       "mode": "patched",
+//!       "base_rows": 48213,
+//!       "batch": 256,
+//!       "batches": 8,
+//!       "total_s": 0.41,
+//!       "mean_batch_s": 0.051,
+//!       "max_batch_s": 0.066,
+//!       "grid_cells": 17342,
+//!       "objective": 812345.0,
+//!       "speedup_vs_rebuild": 11.8
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `mode` is `patched` (Step-3 delta + Step-4 warm start) or `rebuild`
+//!   (full pipeline per batch); `base_rows` is `|D|` before the trace and
+//!   `batch`/`batches` describe the trace shape.
+//! * `mean_batch_s` / `max_batch_s` are per-batch maintenance latencies;
+//!   `speedup_vs_rebuild` = rebuild mean / patched mean (patched rows
+//!   only). The acceptance target is ≥ 5× at batch ≤ 1 % of `|D|`.
+//! * `grid_cells` / `objective` are the final state per mode. They can
+//!   differ slightly across modes (patching freezes the Step-2 models, a
+//!   rebuild re-solves them); the bench instead asserts the final grid
+//!   *mass* — which is model-independent — matches exactly.
 
 pub mod paper;
 
@@ -291,6 +330,122 @@ pub fn write_bench_lloyd(path: &Path, records: &[LloydBenchRecord]) -> std::io::
     std::fs::write(path, bench_lloyd_json(records).to_string())
 }
 
+/// One streaming-maintenance measurement for `BENCH_stream.json` (schema
+/// in the module docs).
+#[derive(Clone, Debug)]
+pub struct StreamBenchRecord {
+    pub label: String,
+    /// `"patched"` or `"rebuild"`.
+    pub mode: String,
+    /// `|D|` (total base tuples) before the trace.
+    pub base_rows: usize,
+    /// Deltas per batch.
+    pub batch: usize,
+    /// Batches in the trace.
+    pub batches: usize,
+    /// Total maintenance time over the trace.
+    pub total_s: f64,
+    /// Mean per-batch maintenance latency.
+    pub mean_batch_s: f64,
+    /// Worst per-batch maintenance latency.
+    pub max_batch_s: f64,
+    /// Non-zero grid cells after the trace.
+    pub grid_cells: usize,
+    /// Final Step-4 objective.
+    pub objective: f64,
+    /// Rebuild mean / patched mean (patched rows only).
+    pub speedup_vs_rebuild: Option<f64>,
+}
+
+impl StreamBenchRecord {
+    /// Build a record from per-batch latencies (seconds).
+    pub fn from_batches(
+        label: &str,
+        mode: &str,
+        base_rows: usize,
+        batch: usize,
+        batch_times: &[f64],
+        grid_cells: usize,
+        objective: f64,
+    ) -> Self {
+        let total: f64 = batch_times.iter().sum();
+        let n = batch_times.len().max(1) as f64;
+        StreamBenchRecord {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            base_rows,
+            batch,
+            batches: batch_times.len(),
+            total_s: total,
+            mean_batch_s: total / n,
+            max_batch_s: batch_times.iter().cloned().fold(0.0, f64::max),
+            grid_cells,
+            objective,
+            speedup_vs_rebuild: None,
+        }
+    }
+
+    /// Attach the mean-latency speedup against the rebuild reference row.
+    pub fn with_speedup_vs(mut self, rebuild: &StreamBenchRecord) -> Self {
+        self.speedup_vs_rebuild = Some(rebuild.mean_batch_s / self.mean_batch_s.max(1e-12));
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<20} {:<8} |D|={:<8} batch={:<5}×{:<3} mean {:>8.4}s  max {:>8.4}s  |G|={}{}",
+            self.label,
+            self.mode,
+            self.base_rows,
+            self.batch,
+            self.batches,
+            self.mean_batch_s,
+            self.max_batch_s,
+            self.grid_cells,
+            self.speedup_vs_rebuild
+                .map(|s| format!("  ({s:.2}× vs rebuild)"))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("base_rows".to_string(), Json::Num(self.base_rows as f64));
+        m.insert("batch".to_string(), Json::Num(self.batch as f64));
+        m.insert("batches".to_string(), Json::Num(self.batches as f64));
+        m.insert("total_s".to_string(), Json::Num(self.total_s));
+        m.insert("mean_batch_s".to_string(), Json::Num(self.mean_batch_s));
+        m.insert("max_batch_s".to_string(), Json::Num(self.max_batch_s));
+        m.insert("grid_cells".to_string(), Json::Num(self.grid_cells as f64));
+        m.insert("objective".to_string(), Json::Num(self.objective));
+        if let Some(s) = self.speedup_vs_rebuild {
+            m.insert("speedup_vs_rebuild".to_string(), Json::Num(s));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_stream.json` document.
+pub fn bench_stream_json(records: &[StreamBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("stream".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(StreamBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_stream.json` document to disk.
+pub fn write_bench_stream(path: &Path, records: &[StreamBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_stream_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -353,6 +508,43 @@ mod tests {
         assert_eq!(fmt_speedup(15.379), "15.38×");
         assert!(fmt_secs(Duration::from_millis(5)).ends_with("ms"));
         assert!(fmt_secs(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn stream_bench_json_roundtrips() {
+        let rebuild = StreamBenchRecord::from_batches(
+            "retailer-trace",
+            "rebuild",
+            10_000,
+            100,
+            &[0.5, 0.7, 0.6],
+            400,
+            99.0,
+        );
+        let patched = StreamBenchRecord::from_batches(
+            "retailer-trace",
+            "patched",
+            10_000,
+            100,
+            &[0.05, 0.07, 0.06],
+            400,
+            99.0,
+        )
+        .with_speedup_vs(&rebuild);
+        assert!((patched.speedup_vs_rebuild.unwrap() - 10.0).abs() < 1e-9);
+        assert!((rebuild.mean_batch_s - 0.6).abs() < 1e-12);
+        assert!((rebuild.max_batch_s - 0.7).abs() < 1e-12);
+        assert!(patched.line().contains("vs rebuild"));
+
+        let doc = bench_stream_json(&[rebuild, patched]);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("stream"));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("rebuild"));
+        assert!(recs[0].get("speedup_vs_rebuild").is_none());
+        let s = recs[1].get("speedup_vs_rebuild").unwrap().as_f64().unwrap();
+        assert!((s - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Shared scaffolding for the dense and factored engine variants: the
+//! Phase-1 Hamerly bounds test, the per-scan lower-bound bookkeeping, the
+//! ordered Phase-3 accumulation loop, the empty-cluster reseed picker, the
+//! inter-centroid separation table, the chunk-stat reduction, and the
+//! convergence test.
+//!
+//! Both variants previously mirrored ~150 lines of this logic; extracting
+//! it means a bounds-logic fix (or a new capability like warm starts)
+//! lands once. The helpers are written so the *arithmetic order* of the
+//! original implementations is preserved exactly — the bitwise
+//! naive≡pruned determinism contract (see the parent module docs) is a
+//! property of that order, and `tests/property_engine.rs` pins it.
+//!
+//! The pieces that stay variant-specific are genuinely different:
+//! Phase 2's full scans (tiled microkernel vs. per-subspace table
+//! accumulation) and the centroid update step (dense means vs. factored β
+//! tables).
+
+use super::PruneStats;
+
+/// Read-only per-iteration bounds context shared by every chunk.
+pub(crate) struct BoundsCtx<'a> {
+    pub k: usize,
+    /// `max_c ‖c_new − c_old‖` from the previous update step.
+    pub drift_max: f64,
+    /// `s[c] = ½·min_{c'≠c} d(c, c')` per centroid.
+    pub s_half: &'a [f64],
+    /// FP slack for the skip test (see `SLACK_REL`).
+    pub slack: f64,
+    /// Bounds are valid and may be used to skip this pass.
+    pub use_bounds: bool,
+    /// Maintain `lb` on full scans (pruning enabled at all).
+    pub pruning: bool,
+}
+
+/// One chunk's view of the per-point bounds state (disjoint mutable
+/// slices of the engine-wide arrays).
+pub(crate) struct ChunkState<'a> {
+    pub w: &'a [f64],
+    pub assign: &'a mut [u32],
+    pub mind2: &'a mut [f64],
+    pub lb: &'a mut [f64],
+}
+
+/// Per-chunk work counters, reduced in chunk order after each pass.
+#[derive(Default)]
+pub(crate) struct ChunkStats {
+    pub evals: u64,
+    pub skipped: u64,
+    pub max_dd: f64,
+}
+
+/// Phase 1: the Hamerly bounds test over one chunk. `assigned_d2(i, a)`
+/// must return the *exact* squared distance of point `i` to its assigned
+/// centroid `a`, computed with the same arithmetic as a full scan (the
+/// caller applies its own clamping so skipped points store the identical
+/// `mind2` bits a scan would have produced). Returns the indices that
+/// failed the test and must be full-scanned, in index order.
+pub(crate) fn bounds_filter(
+    st: &mut ChunkState<'_>,
+    ctx: &BoundsCtx<'_>,
+    stats: &mut ChunkStats,
+    mut assigned_d2: impl FnMut(usize, usize) -> f64,
+) -> Vec<u32> {
+    let n = st.w.len();
+    let mut scan: Vec<u32> = Vec::with_capacity(n);
+    if !ctx.use_bounds {
+        scan.extend(0..n as u32);
+        return scan;
+    }
+    for i in 0..n {
+        let a = st.assign[i] as usize;
+        // Drift the bounds by the centroid movement since last pass.
+        let lbv = st.lb[i] - ctx.drift_max;
+        st.lb[i] = lbv;
+        // The upper bound is the exact assigned distance, recomputed here
+        // every pass (one evaluation) — which also keeps the reported
+        // objective exact for skipped points. Being exact each pass, it
+        // needs no cross-iteration storage (only `lb` persists).
+        let dd = assigned_d2(i, a);
+        let da = dd.sqrt();
+        stats.evals += 1;
+        let bound = ctx.s_half[a].max(lbv);
+        if da + ctx.slack < bound {
+            // Provably still closest (strictly, even under ties and FP
+            // rounding — see the parent module docs): skip the k-loop.
+            st.mind2[i] = dd;
+            stats.skipped += ctx.k as u64 - 1;
+            if dd > stats.max_dd {
+                stats.max_dd = dd;
+            }
+        } else {
+            scan.push(i as u32);
+        }
+    }
+    scan
+}
+
+/// Record one full scan's outcome: the new assignment, the exact `mind2`,
+/// and (when pruning) the second-best distance as the new lower bound.
+/// `d1`/`d2` must already carry the variant's clamping (`max(0.0)` for the
+/// dense expansion; factored table sums are non-negative by construction).
+#[inline]
+pub(crate) fn record_scan(
+    st: &mut ChunkState<'_>,
+    stats: &mut ChunkStats,
+    i: usize,
+    c1: u32,
+    d1: f64,
+    d2: f64,
+    k: usize,
+    pruning: bool,
+) {
+    st.assign[i] = c1;
+    st.mind2[i] = d1;
+    stats.evals += k as u64;
+    if d1 > stats.max_dd {
+        stats.max_dd = d1;
+    }
+    if pruning {
+        if d2.is_finite() {
+            st.lb[i] = d2.sqrt();
+            if d2 > stats.max_dd {
+                stats.max_dd = d2;
+            }
+        } else {
+            st.lb[i] = f64::INFINITY;
+        }
+    }
+}
+
+/// Phase 3: objective + mass accumulation in point order — identical
+/// order for naive and pruned passes, so the chunk reductions match
+/// bitwise. `extra(i, cluster, w)` accumulates the variant-specific
+/// centroid-update state (dense coordinate sums / factored `comp_mass`).
+pub(crate) fn accumulate_pass(
+    w: &[f64],
+    assign: &[u32],
+    mind2: &[f64],
+    obj: &mut f64,
+    mass: &mut [f64],
+    mut extra: impl FnMut(usize, usize, f64),
+) {
+    for i in 0..w.len() {
+        let wi = w[i];
+        let c = assign[i] as usize;
+        *obj += wi * mind2[i];
+        mass[c] += wi;
+        extra(i, c, wi);
+    }
+}
+
+/// Half the distance to the nearest other centroid (Hamerly's `s`),
+/// recomputed from `dist2(c, c')` each iteration bounds are used.
+pub(crate) fn half_min_separation(
+    k: usize,
+    s_half: &mut [f64],
+    mut dist2: impl FnMut(usize, usize) -> f64,
+) {
+    for c in 0..k {
+        let mut best = f64::INFINITY;
+        for c2 in 0..k {
+            if c2 != c {
+                let dd = dist2(c, c2);
+                if dd < best {
+                    best = dd;
+                }
+            }
+        }
+        s_half[c] = 0.5 * best.max(0.0).sqrt();
+    }
+}
+
+/// Empty-cluster reseed target: the point with the largest weighted
+/// distance-to-centroid contribution.
+pub(crate) fn reseed_target(weights: &[f64], mind2: &[f64]) -> usize {
+    (0..weights.len())
+        .max_by(|&a, &b| {
+            (weights[a] * mind2[a])
+                .partial_cmp(&(weights[b] * mind2[b]))
+                .expect("finite")
+        })
+        .expect("n > 0")
+}
+
+/// Convergence on relative objective improvement (the previous objective
+/// is `INFINITY` before the first completed iteration).
+pub(crate) fn converged(prev: f64, obj: f64, tol: f64) -> bool {
+    if !prev.is_finite() {
+        return false;
+    }
+    let improve = (prev - obj) / prev.abs().max(1e-30);
+    improve.abs() < tol
+}
+
+/// Fold one chunk's counters into the run statistics (chunk order).
+pub(crate) fn fold_chunk_stats(stats: &mut PruneStats, max_dd: &mut f64, cs: &ChunkStats) {
+    stats.dist_evals += cs.evals;
+    stats.dist_evals_skipped += cs.skipped;
+    if cs.max_dd > *max_dd {
+        *max_dd = cs.max_dd;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_filter_without_bounds_scans_everything() {
+        let w = vec![1.0; 4];
+        let mut assign = vec![0u32; 4];
+        let mut mind2 = vec![0.0; 4];
+        let mut lb = vec![0.0; 4];
+        let mut st = ChunkState { w: &w, assign: &mut assign, mind2: &mut mind2, lb: &mut lb };
+        let ctx = BoundsCtx {
+            k: 2,
+            drift_max: 0.0,
+            s_half: &[0.0, 0.0],
+            slack: 0.0,
+            use_bounds: false,
+            pruning: true,
+        };
+        let mut stats = ChunkStats::default();
+        let scan = bounds_filter(&mut st, &ctx, &mut stats, |_, _| 0.0);
+        assert_eq!(scan, vec![0, 1, 2, 3]);
+        assert_eq!(stats.evals, 0);
+    }
+
+    #[test]
+    fn bounds_filter_skips_provably_closest() {
+        // One point far inside its centroid's safety radius, one outside.
+        let w = vec![1.0; 2];
+        let mut assign = vec![0u32; 2];
+        let mut mind2 = vec![0.0; 2];
+        let mut lb = vec![10.0, 0.1];
+        let mut st = ChunkState { w: &w, assign: &mut assign, mind2: &mut mind2, lb: &mut lb };
+        let ctx = BoundsCtx {
+            k: 3,
+            drift_max: 0.0,
+            s_half: &[0.0; 3],
+            slack: 1e-9,
+            use_bounds: true,
+            pruning: true,
+        };
+        let mut stats = ChunkStats::default();
+        let scan = bounds_filter(&mut st, &ctx, &mut stats, |i, _| if i == 0 { 1.0 } else { 4.0 });
+        assert_eq!(scan, vec![1]);
+        assert_eq!(stats.skipped, 2); // k - 1 for the skipped point
+        assert_eq!(mind2[0], 1.0);
+    }
+
+    #[test]
+    fn accumulate_matches_manual_sums() {
+        let w = vec![1.0, 2.0, 3.0];
+        let assign = vec![0u32, 1, 0];
+        let mind2 = vec![0.5, 0.25, 1.0];
+        let mut obj = 0.0;
+        let mut mass = vec![0.0; 2];
+        let mut seen = Vec::new();
+        accumulate_pass(&w, &assign, &mind2, &mut obj, &mut mass, |i, c, wi| {
+            seen.push((i, c, wi));
+        });
+        assert_eq!(obj, 0.5 + 0.5 + 3.0);
+        assert_eq!(mass, vec![4.0, 2.0]);
+        assert_eq!(seen, vec![(0, 0, 1.0), (1, 1, 2.0), (2, 0, 3.0)]);
+    }
+
+    #[test]
+    fn reseed_picks_heaviest_contribution() {
+        assert_eq!(reseed_target(&[1.0, 1.0, 5.0], &[1.0, 2.0, 1.0]), 2);
+        assert_eq!(reseed_target(&[1.0, 3.0], &[1.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn convergence_criteria() {
+        assert!(!converged(f64::INFINITY, 1.0, 1e-6));
+        assert!(converged(1.0, 1.0 - 1e-9, 1e-6));
+        assert!(!converged(1.0, 0.5, 1e-6));
+    }
+
+    #[test]
+    fn separation_table() {
+        // Centroids on a line at 0, 1, 5.
+        let pos = [0.0, 1.0, 5.0];
+        let mut s = vec![0.0; 3];
+        half_min_separation(3, &mut s, |a, b| (pos[a] - pos[b]) * (pos[a] - pos[b]));
+        assert_eq!(s, vec![0.5, 0.5, 2.0]);
+    }
+}

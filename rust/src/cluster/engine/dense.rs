@@ -1,8 +1,15 @@
 //! Dense weighted Lloyd on row-major points through the shared engine:
-//! k-means++ seeding, the tiled microkernel for full scans, Hamerly bounds
-//! to skip unchanged assignments, and chunk-parallel accumulation. See the
-//! parent module docs for the bounds invariants and determinism contract.
+//! k-means++ seeding (or a warm start from caller-provided centroids),
+//! the tiled microkernel for full scans, Hamerly bounds to skip unchanged
+//! assignments, and chunk-parallel accumulation. The bounds test, ordered
+//! accumulation, reseed picker and convergence test live in the shared
+//! [`core`](super::core) helpers; see the parent module docs for the
+//! bounds invariants and determinism contract.
 
+use super::core::{
+    accumulate_pass, bounds_filter, converged, fold_chunk_stats, half_min_separation,
+    record_scan, reseed_target, BoundsCtx, ChunkState, ChunkStats,
+};
 use super::microkernel::{self, TILE};
 use super::{resolve_threads, run_chunks, EngineOpts, PruneStats, CHUNK, SLACK_REL};
 use crate::cluster::kmeanspp::kmeanspp_indices;
@@ -10,38 +17,16 @@ use crate::cluster::lloyd::{LloydConfig, LloydResult};
 use crate::util::SplitMix64;
 use std::time::Instant;
 
-/// Per-chunk accumulator, reduced in chunk order after each pass.
-struct Accum {
+/// One chunk's view of the per-point state (disjoint mutable slices) plus
+/// its accumulators, reduced in chunk order after each pass.
+struct DenseChunk<'a> {
+    pts: &'a [f64],
+    xnorm: &'a [f64],
+    st: ChunkState<'a>,
     sums: Vec<f64>,
     mass: Vec<f64>,
     obj: f64,
-    evals: u64,
-    skipped: u64,
-    max_dd: f64,
-}
-
-impl Accum {
-    fn new(k: usize, d: usize) -> Self {
-        Accum {
-            sums: vec![0.0; k * d],
-            mass: vec![0.0; k],
-            obj: 0.0,
-            evals: 0,
-            skipped: 0,
-            max_dd: 0.0,
-        }
-    }
-}
-
-/// One chunk's view of the per-point state (disjoint mutable slices).
-struct DenseChunk<'a> {
-    pts: &'a [f64],
-    w: &'a [f64],
-    xnorm: &'a [f64],
-    assign: &'a mut [u32],
-    mind2: &'a mut [f64],
-    lb: &'a mut [f64],
-    acc: Accum,
+    stats: ChunkStats,
 }
 
 /// Read-only per-iteration context shared by all chunks.
@@ -53,54 +38,32 @@ struct PassCtx<'a> {
     drift_max: f64,
     s_half: &'a [f64],
     slack: f64,
-    /// Bounds are valid and may be used to skip (pruning + not first
-    /// iteration + no reseed last iteration).
     use_bounds: bool,
-    /// Maintain ub/lb on full scans (pruning enabled at all).
     pruning: bool,
 }
 
 /// One assignment + accumulation pass over a chunk.
 fn assign_chunk(ch: &mut DenseChunk, ctx: &PassCtx) {
     let (d, k) = (ctx.d, ctx.k);
-    let n = ch.w.len();
+    let pts = ch.pts;
+    let xnorm = ch.xnorm;
 
-    // Phase 1: bounds test. Points that cannot be proven unchanged are
-    // queued (in index order) for a full tiled scan.
-    let mut scan: Vec<u32> = Vec::with_capacity(n);
-    if ctx.use_bounds {
-        for i in 0..n {
-            let a = ch.assign[i] as usize;
-            // Drift the bounds by the centroid movement since last pass.
-            let lbv = ch.lb[i] - ctx.drift_max;
-            ch.lb[i] = lbv;
-            // The upper bound is the exact assigned distance, recomputed
-            // here every pass (one evaluation) — which also keeps the
-            // reported objective exact for skipped points, and uses the
-            // same arithmetic as a full scan. Being exact each pass, it
-            // needs no cross-iteration storage (only `lb` persists).
-            let x = &ch.pts[i * d..(i + 1) * d];
-            let dot = microkernel::dot_one(x, ctx.ct_t, k, a);
-            let dd = ch.xnorm[i] - 2.0 * dot + ctx.cnorm[a];
-            let dd = dd.max(0.0);
-            let da = dd.sqrt();
-            ch.acc.evals += 1;
-            let m = ctx.s_half[a].max(lbv);
-            if da + ctx.slack < m {
-                // Provably still closest (strictly, even under ties and FP
-                // rounding — see module docs), so skip the k-loop.
-                ch.mind2[i] = dd;
-                ch.acc.skipped += k as u64 - 1;
-                if dd > ch.acc.max_dd {
-                    ch.acc.max_dd = dd;
-                }
-            } else {
-                scan.push(i as u32);
-            }
-        }
-    } else {
-        scan.extend(0..n as u32);
-    }
+    // Phase 1: bounds test (shared). The closure computes the exact
+    // assigned distance with the same expansion a full scan uses.
+    let bctx = BoundsCtx {
+        k,
+        drift_max: ctx.drift_max,
+        s_half: ctx.s_half,
+        slack: ctx.slack,
+        use_bounds: ctx.use_bounds,
+        pruning: ctx.pruning,
+    };
+    let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
+        let x = &pts[i * d..(i + 1) * d];
+        let dot = microkernel::dot_one(x, ctx.ct_t, k, a);
+        let dd = xnorm[i] - 2.0 * dot + ctx.cnorm[a];
+        dd.max(0.0)
+    });
 
     // Phase 2: full scans, tiled through the microkernel.
     let mut tile = vec![0.0f64; TILE * d];
@@ -109,47 +72,26 @@ fn assign_chunk(ch: &mut DenseChunk, ctx: &PassCtx) {
         let tp = group.len();
         for (p, &gi) in group.iter().enumerate() {
             let i = gi as usize;
-            tile[p * d..(p + 1) * d].copy_from_slice(&ch.pts[i * d..(i + 1) * d]);
+            tile[p * d..(p + 1) * d].copy_from_slice(&pts[i * d..(i + 1) * d]);
         }
         microkernel::tile_dots(&tile[..tp * d], d, k, ctx.ct_t, &mut dots);
         for (p, &gi) in group.iter().enumerate() {
             let i = gi as usize;
             let (d1, c1, d2) =
-                microkernel::best_two_expanded(ch.xnorm[i], &dots[p * k..(p + 1) * k], ctx.cnorm);
-            let dd = d1.max(0.0);
-            ch.assign[i] = c1;
-            ch.mind2[i] = dd;
-            ch.acc.evals += k as u64;
-            if dd > ch.acc.max_dd {
-                ch.acc.max_dd = dd;
-            }
-            if ctx.pruning {
-                if d2.is_finite() {
-                    let dd2 = d2.max(0.0);
-                    ch.lb[i] = dd2.sqrt();
-                    if dd2 > ch.acc.max_dd {
-                        ch.acc.max_dd = dd2;
-                    }
-                } else {
-                    ch.lb[i] = f64::INFINITY;
-                }
-            }
+                microkernel::best_two_expanded(xnorm[i], &dots[p * k..(p + 1) * k], ctx.cnorm);
+            record_scan(&mut ch.st, &mut ch.stats, i, c1, d1.max(0.0), d2.max(0.0), k, ctx.pruning);
         }
     }
 
-    // Phase 3: objective + update accumulation, in point order — identical
-    // order for naive and pruned passes, so the reductions match bitwise.
-    for i in 0..n {
-        let w = ch.w[i];
-        let c = ch.assign[i] as usize;
-        ch.acc.obj += w * ch.mind2[i];
-        ch.acc.mass[c] += w;
-        let x = &ch.pts[i * d..(i + 1) * d];
-        let s = &mut ch.acc.sums[c * d..(c + 1) * d];
+    // Phase 3: objective + update accumulation in point order (shared).
+    let sums = &mut ch.sums;
+    accumulate_pass(ch.st.w, ch.st.assign, ch.st.mind2, &mut ch.obj, &mut ch.mass, |i, c, w| {
+        let x = &pts[i * d..(i + 1) * d];
+        let s = &mut sums[c * d..(c + 1) * d];
         for (sv, &xv) in s.iter_mut().zip(x) {
             *sv += w * xv;
         }
-    }
+    });
 }
 
 /// Weighted Lloyd over `n × d` row-major `points` with engine options.
@@ -160,6 +102,23 @@ pub fn lloyd_dense(
     d: usize,
     cfg: &LloydConfig,
     opts: &EngineOpts,
+) -> (LloydResult, PruneStats) {
+    lloyd_dense_init(points, weights, d, cfg, opts, None)
+}
+
+/// [`lloyd_dense`] with an optional warm start: when `init` holds exactly
+/// `k × d` row-major coordinates they seed the run in place of k-means++
+/// (the incremental planner feeds the previous version's centroids here).
+/// A shape mismatch falls back to fresh seeding, so callers can pass a
+/// stale warm start safely. `init = None` is bitwise-identical to
+/// [`lloyd_dense`].
+pub fn lloyd_dense_init(
+    points: &[f64],
+    weights: &[f64],
+    d: usize,
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+    init: Option<&[f64]>,
 ) -> (LloydResult, PruneStats) {
     assert!(d > 0, "dimension must be positive");
     assert_eq!(points.len() % d, 0, "points not a multiple of d");
@@ -180,13 +139,20 @@ pub fn lloyd_dense(
         s
     };
 
-    // k-means++ seeding (identical to the pre-engine implementation).
-    let mut rng = SplitMix64::new(cfg.seed);
-    let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| dist2(row(i), row(j)));
-    let mut centroids: Vec<f64> = Vec::with_capacity(k * d);
-    for &s in &seeds {
-        centroids.extend_from_slice(row(s));
-    }
+    // Seeding: warm start when shape-valid, else k-means++ (identical to
+    // the pre-engine implementation).
+    let mut centroids: Vec<f64> = match init {
+        Some(c0) if c0.len() == k * d => c0.to_vec(),
+        _ => {
+            let mut rng = SplitMix64::new(cfg.seed);
+            let seeds = kmeanspp_indices(n, weights, k, &mut rng, |i, j| dist2(row(i), row(j)));
+            let mut c = Vec::with_capacity(k * d);
+            for &s in &seeds {
+                c.extend_from_slice(row(s));
+            }
+            c
+        }
+    };
 
     // Invariant per-point geometry.
     let xnorm: Vec<f64> = (0..n).map(|i| row(i).iter().map(|v| v * v).sum()).collect();
@@ -217,19 +183,9 @@ pub fn lloyd_dense(
         microkernel::transpose(&centroids, d, k, &mut ct_t);
         let use_bounds = opts.pruning && bounds_valid;
         if use_bounds {
-            // Half-distance to the nearest other centroid (Hamerly's s).
-            for c in 0..k {
-                let mut best = f64::INFINITY;
-                for c2 in 0..k {
-                    if c2 != c {
-                        let dd = dist2(&centroids[c * d..(c + 1) * d], &centroids[c2 * d..(c2 + 1) * d]);
-                        if dd < best {
-                            best = dd;
-                        }
-                    }
-                }
-                s_half[c] = 0.5 * best.max(0.0).sqrt();
-            }
+            half_min_separation(k, &mut s_half, |c, c2| {
+                dist2(&centroids[c * d..(c + 1) * d], &centroids[c2 * d..(c2 + 1) * d])
+            });
         }
         let drift_max = drift.iter().cloned().fold(0.0f64, f64::max);
         let slack = SLACK_REL * (1.0 + max_dd.sqrt() + xn_max.sqrt());
@@ -246,7 +202,7 @@ pub fn lloyd_dense(
         };
 
         // Chunked assignment pass (fixed CHUNK ranges; see module docs).
-        let accs: Vec<Accum> = {
+        let chunks_out: Vec<(Vec<f64>, Vec<f64>, f64, ChunkStats)> = {
             let mut chunks: Vec<DenseChunk> = Vec::with_capacity(n.div_ceil(CHUNK));
             let parts = assign
                 .chunks_mut(CHUNK)
@@ -257,36 +213,37 @@ pub fn lloyd_dense(
                 let len = a_s.len();
                 chunks.push(DenseChunk {
                     pts: &points[start * d..(start + len) * d],
-                    w: &weights[start..start + len],
                     xnorm: &xnorm[start..start + len],
-                    assign: a_s,
-                    mind2: m_s,
-                    lb: l_s,
-                    acc: Accum::new(k, d),
+                    st: ChunkState {
+                        w: &weights[start..start + len],
+                        assign: a_s,
+                        mind2: m_s,
+                        lb: l_s,
+                    },
+                    sums: vec![0.0; k * d],
+                    mass: vec![0.0; k],
+                    obj: 0.0,
+                    stats: ChunkStats::default(),
                 });
                 start += len;
             }
             run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx));
-            chunks.into_iter().map(|c| c.acc).collect()
+            chunks.into_iter().map(|c| (c.sums, c.mass, c.obj, c.stats)).collect()
         };
 
         // Fixed-order reduction of the chunk accumulators.
         let mut sums = vec![0.0f64; k * d];
         let mut mass = vec![0.0f64; k];
         let mut obj = 0.0f64;
-        for a in &accs {
-            for (sv, &v) in sums.iter_mut().zip(&a.sums) {
+        for (c_sums, c_mass, c_obj, c_stats) in &chunks_out {
+            for (sv, &v) in sums.iter_mut().zip(c_sums) {
                 *sv += v;
             }
-            for (mv, &v) in mass.iter_mut().zip(&a.mass) {
+            for (mv, &v) in mass.iter_mut().zip(c_mass) {
                 *mv += v;
             }
-            obj += a.obj;
-            stats.dist_evals += a.evals;
-            stats.dist_evals_skipped += a.skipped;
-            if a.max_dd > max_dd {
-                max_dd = a.max_dd;
-            }
+            obj += c_obj;
+            fold_chunk_stats(&mut stats, &mut max_dd, c_stats);
         }
 
         // Update step (+ drift for the next iteration's bounds).
@@ -305,13 +262,7 @@ pub fn lloyd_dense(
             } else {
                 // Empty cluster: reseed at the point with the largest
                 // weighted distance-to-centroid contribution.
-                let far = (0..n)
-                    .max_by(|&a, &b| {
-                        (weights[a] * mind2[a])
-                            .partial_cmp(&(weights[b] * mind2[b]))
-                            .expect("finite")
-                    })
-                    .expect("n > 0");
+                let far = reseed_target(weights, &mind2);
                 centroids[c * d..(c + 1) * d].copy_from_slice(row(far));
                 mind2[far] = 0.0;
                 reseeded = true;
@@ -322,12 +273,9 @@ pub fn lloyd_dense(
         bounds_valid = opts.pruning && !reseeded;
 
         // Convergence on relative objective improvement.
-        if objective.is_finite() {
-            let improve = (objective - obj) / objective.abs().max(1e-30);
-            if improve.abs() < cfg.tol {
-                objective = obj;
-                break;
-            }
+        if converged(objective, obj, cfg.tol) {
+            objective = obj;
+            break;
         }
         objective = obj;
     }
@@ -406,5 +354,39 @@ mod tests {
             assert_eq!(base.centroids, r.centroids, "threads={t}");
             assert_eq!(base.objective.to_bits(), r.objective.to_bits(), "threads={t}");
         }
+    }
+
+    #[test]
+    fn warm_start_from_converged_centroids_converges_immediately() {
+        let mut rng = SplitMix64::new(44);
+        let (pts, w) = clustered(&mut rng, 500, 4, 0.2);
+        let cold_cfg = LloydConfig { k: 4, max_iters: 40, tol: 0.0, seed: 11 };
+        let (cold, _) = lloyd_dense(&pts, &w, 4, &cold_cfg, &EngineOpts::pruned());
+        // Warm-starting from the converged centroids must not lose quality
+        // and must stop after a couple of iterations under a loose tol.
+        let warm_cfg = LloydConfig { tol: 1e-6, ..cold_cfg };
+        let (warm, _) = lloyd_dense_init(
+            &pts,
+            &w,
+            4,
+            &warm_cfg,
+            &EngineOpts::pruned(),
+            Some(&cold.centroids),
+        );
+        assert!(warm.objective <= cold.objective * (1.0 + 1e-9));
+        assert!(warm.iters <= 3, "warm start took {} iterations", warm.iters);
+    }
+
+    #[test]
+    fn warm_start_shape_mismatch_falls_back_to_seeding() {
+        let mut rng = SplitMix64::new(45);
+        let (pts, w) = clustered(&mut rng, 200, 3, 0.3);
+        let cfg = LloydConfig { k: 3, max_iters: 6, tol: 0.0, seed: 9 };
+        let (cold, _) = lloyd_dense(&pts, &w, 3, &cfg, &EngineOpts::pruned());
+        let bad = vec![0.0; 5]; // wrong length
+        let (warm, _) =
+            lloyd_dense_init(&pts, &w, 3, &cfg, &EngineOpts::pruned(), Some(&bad));
+        assert_eq!(warm.objective.to_bits(), cold.objective.to_bits());
+        assert_eq!(warm.centroids, cold.centroids);
     }
 }

@@ -7,9 +7,19 @@
 //! inter-centroid separations `s[c]` are computed straight from the β
 //! coefficient tables using component orthogonality
 //! (`‖μ − μ'‖² = Σ_j λ_j Σ_a (β_a − β'_a)²·‖u_a‖²`), so the pruning
-//! machinery never densifies a centroid either. See the parent module docs
-//! for the bounds invariants and the determinism contract.
+//! machinery never densifies a centroid either. The bounds test, ordered
+//! accumulation, reseed picker and convergence test are the shared
+//! [`core`](super::core) helpers; see the parent module docs for the
+//! bounds invariants and the determinism contract.
+//!
+//! [`lloyd_factored_init`] accepts a warm start: the incremental planner
+//! re-clusters a patched grid from the previous version's centroids, which
+//! typically converges in one or two iterations instead of a full run.
 
+use super::core::{
+    accumulate_pass, bounds_filter, converged, fold_chunk_stats, half_min_separation,
+    record_scan, reseed_target, BoundsCtx, ChunkState, ChunkStats,
+};
 use super::microkernel::best_two_buf;
 use super::{resolve_threads, run_chunks, EngineOpts, PruneStats, CHUNK, SLACK_REL};
 use crate::cluster::kmeanspp::kmeanspp_indices;
@@ -72,6 +82,24 @@ fn centroid_from_cell(
         .collect()
 }
 
+/// True when a warm-start candidate matches the problem's factored shape
+/// (k centroids × m subspaces, β lengths equal to each κ_j).
+fn warm_start_valid(init: &[Vec<CentroidCoord>], k: usize, subspaces: &[Subspace]) -> bool {
+    if init.len() != k {
+        return false;
+    }
+    init.iter().all(|cent| {
+        cent.len() == subspaces.len()
+            && cent.iter().zip(subspaces).all(|(coord, sub)| match (coord, &sub.comp) {
+                (CentroidCoord::Continuous(_), Components::Continuous { .. }) => true,
+                (CentroidCoord::Categorical(beta), Components::Categorical { norm_sq }) => {
+                    beta.len() == norm_sq.len()
+                }
+                _ => false,
+            })
+    })
+}
+
 /// Build the per-subspace distance tables `T_j[a·k + c]` for the current
 /// centroids (identical arithmetic to the pre-engine implementation).
 fn build_tables(
@@ -117,39 +145,16 @@ fn build_tables(
         .collect()
 }
 
-/// Per-chunk accumulator (reduced in chunk order).
-struct FacAccum {
+/// One chunk's view of the per-cell state plus its accumulators.
+struct FacChunk<'a> {
+    /// `len × m` component ids for this chunk's cells.
+    gids: &'a [u32],
+    st: ChunkState<'a>,
     mass: Vec<f64>,
     /// `comp_mass[j][c·κ_j + a]` = weight of cells in `c` with `g_j = a`.
     comp_mass: Vec<Vec<f64>>,
     obj: f64,
-    evals: u64,
-    skipped: u64,
-    max_dd: f64,
-}
-
-impl FacAccum {
-    fn new(k: usize, kappa: &[usize]) -> Self {
-        FacAccum {
-            mass: vec![0.0; k],
-            comp_mass: kappa.iter().map(|&kj| vec![0.0; k * kj]).collect(),
-            obj: 0.0,
-            evals: 0,
-            skipped: 0,
-            max_dd: 0.0,
-        }
-    }
-}
-
-/// One chunk's view of the per-cell state.
-struct FacChunk<'a> {
-    /// `len × m` component ids for this chunk's cells.
-    gids: &'a [u32],
-    w: &'a [f64],
-    assign: &'a mut [u32],
-    mind2: &'a mut [f64],
-    lb: &'a mut [f64],
-    acc: FacAccum,
+    stats: ChunkStats,
 }
 
 /// Read-only per-iteration context.
@@ -178,38 +183,28 @@ fn cell_centroid_dd(gids: &[u32], tables: &[Vec<f64>], k: usize, c: usize) -> f6
 
 fn assign_chunk(ch: &mut FacChunk, ctx: &FacCtx) {
     let (m, k) = (ctx.m, ctx.k);
-    let n = ch.w.len();
+    let gids = ch.gids;
 
-    let mut scan: Vec<u32> = Vec::with_capacity(n);
-    if ctx.use_bounds {
-        for i in 0..n {
-            let a = ch.assign[i] as usize;
-            let lbv = ch.lb[i] - ctx.drift_max;
-            ch.lb[i] = lbv;
-            let row = &ch.gids[i * m..(i + 1) * m];
-            let dd = cell_centroid_dd(row, ctx.tables, k, a);
-            let da = dd.sqrt();
-            ch.acc.evals += 1;
-            let bound = ctx.s_half[a].max(lbv);
-            if da + ctx.slack < bound {
-                ch.mind2[i] = dd;
-                ch.acc.skipped += k as u64 - 1;
-                if dd > ch.acc.max_dd {
-                    ch.acc.max_dd = dd;
-                }
-            } else {
-                scan.push(i as u32);
-            }
-        }
-    } else {
-        scan.extend(0..n as u32);
-    }
+    // Phase 1: bounds test (shared). Table sums are non-negative by
+    // construction, so no clamping is applied (matching the full scan).
+    let bctx = BoundsCtx {
+        k,
+        drift_max: ctx.drift_max,
+        s_half: ctx.s_half,
+        slack: ctx.slack,
+        use_bounds: ctx.use_bounds,
+        pruning: ctx.pruning,
+    };
+    let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
+        cell_centroid_dd(&gids[i * m..(i + 1) * m], ctx.tables, k, a)
+    });
 
-    // Full scans: the factored m-lookup accumulation over all centroids.
+    // Phase 2: full scans — the factored m-lookup accumulation over all
+    // centroids.
     let mut dist_buf = vec![0.0f64; k];
     for &gi in &scan {
         let i = gi as usize;
-        let row = &ch.gids[i * m..(i + 1) * m];
+        let row = &gids[i * m..(i + 1) * m];
         let base0 = row[0] as usize * k;
         dist_buf.copy_from_slice(&ctx.tables[0][base0..base0 + k]);
         for j in 1..m {
@@ -220,35 +215,18 @@ fn assign_chunk(ch: &mut FacChunk, ctx: &FacCtx) {
             }
         }
         let (d1, c1, d2) = best_two_buf(&dist_buf);
-        ch.assign[i] = c1;
-        ch.mind2[i] = d1;
-        ch.acc.evals += k as u64;
-        if d1 > ch.acc.max_dd {
-            ch.acc.max_dd = d1;
-        }
-        if ctx.pruning {
-            if d2.is_finite() {
-                ch.lb[i] = d2.sqrt();
-                if d2 > ch.acc.max_dd {
-                    ch.acc.max_dd = d2;
-                }
-            } else {
-                ch.lb[i] = f64::INFINITY;
-            }
-        }
+        record_scan(&mut ch.st, &mut ch.stats, i, c1, d1, d2, k, ctx.pruning);
     }
 
-    // Ordered objective + mass accumulation (same order naive/pruned).
-    for i in 0..n {
-        let w = ch.w[i];
-        let c = ch.assign[i] as usize;
-        ch.acc.obj += w * ch.mind2[i];
-        ch.acc.mass[c] += w;
-        let row = &ch.gids[i * m..(i + 1) * m];
+    // Phase 3: ordered objective + mass accumulation (shared).
+    let comp_mass = &mut ch.comp_mass;
+    let kappa = ctx.kappa;
+    accumulate_pass(ch.st.w, ch.st.assign, ch.st.mind2, &mut ch.obj, &mut ch.mass, |i, c, w| {
+        let row = &gids[i * m..(i + 1) * m];
         for j in 0..m {
-            ch.acc.comp_mass[j][c * ctx.kappa[j] + row[j] as usize] += w;
+            comp_mass[j][c * kappa[j] + row[j] as usize] += w;
         }
-    }
+    });
 }
 
 /// Factored weighted Lloyd over the grid coreset with engine options.
@@ -257,6 +235,22 @@ pub fn lloyd_factored(
     subspaces: &[Subspace],
     cfg: &LloydConfig,
     opts: &EngineOpts,
+) -> (SparseLloydResult, PruneStats) {
+    lloyd_factored_init(grid, subspaces, cfg, opts, None)
+}
+
+/// [`lloyd_factored`] with an optional warm start: when `init` holds a
+/// shape-valid set of `k` factored centroids they seed the run in place of
+/// k-means++. A shape mismatch (wrong k after a grid shrink, stale κ_j
+/// after a Step-2 re-solve) silently falls back to fresh seeding, so the
+/// incremental planner can always pass its previous centroids.
+/// `init = None` is bitwise-identical to [`lloyd_factored`].
+pub fn lloyd_factored_init(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+    init: Option<&[Vec<CentroidCoord>]>,
 ) -> (SparseLloydResult, PruneStats) {
     let n = grid.n();
     assert!(n > 0, "empty grid");
@@ -267,12 +261,16 @@ pub fn lloyd_factored(
     let m = grid.m;
     let t0 = Instant::now();
 
-    let mut rng = SplitMix64::new(cfg.seed);
-    let seeds = kmeanspp_indices(n, &grid.weights, k, &mut rng, |i, j| {
-        cell_dist2(grid, subspaces, i, j)
-    });
-    let mut centroids: Vec<Vec<CentroidCoord>> =
-        seeds.iter().map(|&s| centroid_from_cell(grid, subspaces, s)).collect();
+    let mut centroids: Vec<Vec<CentroidCoord>> = match init {
+        Some(c0) if warm_start_valid(c0, k, subspaces) => c0.to_vec(),
+        _ => {
+            let mut rng = SplitMix64::new(cfg.seed);
+            let seeds = kmeanspp_indices(n, &grid.weights, k, &mut rng, |i, j| {
+                cell_dist2(grid, subspaces, i, j)
+            });
+            seeds.iter().map(|&s| centroid_from_cell(grid, subspaces, s)).collect()
+        }
+    };
 
     let kappa: Vec<usize> = subspaces.iter().map(|s| s.comp.len()).collect();
 
@@ -315,18 +313,9 @@ pub fn lloyd_factored(
         let tables = build_tables(subspaces, &kappa, &centroids, k);
         let use_bounds = opts.pruning && bounds_valid;
         if use_bounds {
-            for c in 0..k {
-                let mut best = f64::INFINITY;
-                for c2 in 0..k {
-                    if c2 != c {
-                        let dd = factored_dist2(&centroids[c], &centroids[c2], subspaces);
-                        if dd < best {
-                            best = dd;
-                        }
-                    }
-                }
-                s_half[c] = 0.5 * best.max(0.0).sqrt();
-            }
+            half_min_separation(k, &mut s_half, |c, c2| {
+                factored_dist2(&centroids[c], &centroids[c2], subspaces)
+            });
         }
         let drift_max = drift.iter().cloned().fold(0.0f64, f64::max);
         let slack = SLACK_REL * (1.0 + 2.0 * max_dd.sqrt() + norm2_max.sqrt());
@@ -342,7 +331,8 @@ pub fn lloyd_factored(
             pruning: opts.pruning,
         };
 
-        let accs: Vec<FacAccum> = {
+        #[allow(clippy::type_complexity)]
+        let chunks_out: Vec<(Vec<f64>, Vec<Vec<f64>>, f64, ChunkStats)> = {
             let mut chunks: Vec<FacChunk> = Vec::with_capacity(n.div_ceil(CHUNK));
             let parts = assign
                 .chunks_mut(CHUNK)
@@ -353,37 +343,38 @@ pub fn lloyd_factored(
                 let len = a_s.len();
                 chunks.push(FacChunk {
                     gids: &grid.gids[start * m..(start + len) * m],
-                    w: &grid.weights[start..start + len],
-                    assign: a_s,
-                    mind2: m_s,
-                    lb: l_s,
-                    acc: FacAccum::new(k, &kappa),
+                    st: ChunkState {
+                        w: &grid.weights[start..start + len],
+                        assign: a_s,
+                        mind2: m_s,
+                        lb: l_s,
+                    },
+                    mass: vec![0.0; k],
+                    comp_mass: kappa.iter().map(|&kj| vec![0.0; k * kj]).collect(),
+                    obj: 0.0,
+                    stats: ChunkStats::default(),
                 });
                 start += len;
             }
             run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx));
-            chunks.into_iter().map(|c| c.acc).collect()
+            chunks.into_iter().map(|c| (c.mass, c.comp_mass, c.obj, c.stats)).collect()
         };
 
         // Fixed-order reduction.
         let mut mass = vec![0.0f64; k];
         let mut comp_mass: Vec<Vec<f64>> = kappa.iter().map(|&kj| vec![0.0; k * kj]).collect();
         let mut obj = 0.0f64;
-        for a in &accs {
-            for (mv, &v) in mass.iter_mut().zip(&a.mass) {
+        for (c_mass, c_comp, c_obj, c_stats) in &chunks_out {
+            for (mv, &v) in mass.iter_mut().zip(c_mass) {
                 *mv += v;
             }
-            for (cm, acm) in comp_mass.iter_mut().zip(&a.comp_mass) {
+            for (cm, acm) in comp_mass.iter_mut().zip(c_comp) {
                 for (cv, &v) in cm.iter_mut().zip(acm) {
                     *cv += v;
                 }
             }
-            obj += a.obj;
-            stats.dist_evals += a.evals;
-            stats.dist_evals_skipped += a.skipped;
-            if a.max_dd > max_dd {
-                max_dd = a.max_dd;
-            }
+            obj += c_obj;
+            fold_chunk_stats(&mut stats, &mut max_dd, c_stats);
         }
 
         // Update (identical to the pre-engine implementation) + drift.
@@ -409,13 +400,7 @@ pub fn lloyd_factored(
                 }
             } else {
                 // Empty cluster: reseed at the heaviest-cost cell.
-                let far = (0..n)
-                    .max_by(|&a, &b| {
-                        (grid.weights[a] * mind2[a])
-                            .partial_cmp(&(grid.weights[b] * mind2[b]))
-                            .expect("finite")
-                    })
-                    .expect("n > 0");
+                let far = reseed_target(&grid.weights, &mind2);
                 centroids[c] = centroid_from_cell(grid, subspaces, far);
                 mind2[far] = 0.0;
                 reseeded = true;
@@ -428,12 +413,9 @@ pub fn lloyd_factored(
         }
         bounds_valid = opts.pruning && !reseeded;
 
-        if objective.is_finite() {
-            let improve = (objective - obj) / objective.abs().max(1e-30);
-            if improve.abs() < cfg.tol {
-                objective = obj;
-                break;
-            }
+        if converged(objective, obj, cfg.tol) {
+            objective = obj;
+            break;
         }
         objective = obj;
     }
@@ -520,6 +502,37 @@ mod tests {
             let got = factored_dist2(&a, &b, &subs);
             let want = cell_dist2(&grid, &subs, i, j);
             crate::util::testkit::assert_close(got, want, 1e-9);
+        });
+    }
+
+    #[test]
+    fn warm_start_reuses_centroids_and_stale_shapes_fall_back() {
+        for_cases(8, |rng| {
+            let (grid, subs) = random_problem(rng, 80);
+            let cfg = LloydConfig { k: 3, max_iters: 25, tol: 0.0, seed: rng.next_u64() };
+            let (cold, _) = lloyd_factored(&grid, &subs, &cfg, &EngineOpts::pruned());
+            // Warm start from converged centroids: no quality loss, fast stop.
+            let warm_cfg = LloydConfig { tol: 1e-6, ..cfg };
+            let (warm, _) = lloyd_factored_init(
+                &grid,
+                &subs,
+                &warm_cfg,
+                &EngineOpts::pruned(),
+                Some(&cold.centroids),
+            );
+            assert!(warm.objective <= cold.objective * (1.0 + 1e-9));
+            assert!(warm.iters <= 3, "warm start took {} iterations", warm.iters);
+            // Wrong-k warm start must silently reseed and match the cold run.
+            let stale = vec![cold.centroids[0].clone()]; // k=1 ≠ 3
+            let (fresh, _) = lloyd_factored_init(
+                &grid,
+                &subs,
+                &cfg,
+                &EngineOpts::pruned(),
+                Some(&stale),
+            );
+            assert_eq!(fresh.objective.to_bits(), cold.objective.to_bits());
+            assert_eq!(fresh.assign, cold.assign);
         });
     }
 }

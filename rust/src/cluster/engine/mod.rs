@@ -59,7 +59,23 @@
 //! argument above is only rigorous for data whose dynamic range is sane
 //! (|values| ≪ 1/√ε·distances); pathological inputs would merely prune
 //! less, never corrupt bounds in the unsafe direction.
+//!
+//! # Shared scaffolding and warm starts
+//!
+//! The variant-independent pieces — the Phase-1 bounds test, the ordered
+//! Phase-3 accumulation, the empty-cluster reseed picker, the separation
+//! table, chunk-stat reduction and the convergence test — live once in
+//! [`core`] and are parameterized over a distance provider (a closure
+//! computing the exact assigned distance) and a per-point accumulator
+//! callback, so bounds-logic fixes land in both engines simultaneously.
+//! Both variants also expose `*_init` entry points
+//! ([`dense::lloyd_dense_init`], [`factored::lloyd_factored_init`]) that
+//! accept a warm start — previous centroids seeding the run in place of
+//! k-means++ — which the incremental planner
+//! ([`crate::incremental::planner`]) uses to re-cluster a delta-patched
+//! grid in a couple of iterations.
 
+pub(crate) mod core;
 pub mod dense;
 pub mod factored;
 pub(crate) mod microkernel;

@@ -31,6 +31,6 @@ pub use kmedian::{kmedian1d, weighted_kmedian, Kmedian1dResult, KmedianResult};
 pub use kmeanspp::kmeanspp_indices;
 pub use lloyd::{weighted_lloyd, weighted_lloyd_with, LloydConfig, LloydResult};
 pub use sparse_lloyd::{
-    sparse_lloyd, sparse_lloyd_with, CentroidCoord, Components, SparseGrid, SparseLloydResult,
-    Subspace,
+    sparse_lloyd, sparse_lloyd_warm_with, sparse_lloyd_with, CentroidCoord, Components,
+    SparseGrid, SparseLloydResult, Subspace,
 };

@@ -25,7 +25,7 @@
 //! engine options (naive reference, thread count) and the pruning
 //! statistics.
 
-use super::engine::factored::lloyd_factored;
+use super::engine::factored::{lloyd_factored, lloyd_factored_init};
 use super::engine::{EngineOpts, PruneStats};
 use super::lloyd::LloydConfig;
 
@@ -149,6 +149,20 @@ pub fn sparse_lloyd_with(
     opts: &EngineOpts,
 ) -> (SparseLloydResult, PruneStats) {
     lloyd_factored(grid, subspaces, cfg, opts)
+}
+
+/// [`sparse_lloyd_with`] plus an optional warm start: previous factored
+/// centroids seed the run in place of k-means++ (shape mismatches fall
+/// back to fresh seeding). The incremental planner's patch path uses this
+/// so a delta-patched grid re-clusters in a couple of Lloyd iterations.
+pub fn sparse_lloyd_warm_with(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+    init: Option<&[Vec<CentroidCoord>]>,
+) -> (SparseLloydResult, PruneStats) {
+    lloyd_factored_init(grid, subspaces, cfg, opts, init)
 }
 
 #[cfg(test)]

@@ -4,27 +4,38 @@
 //! The paper's engine is batch; a production deployment of Rk-means sits
 //! behind an ingestion pipeline. This module provides that shape:
 //!
-//! * **Bounded ingestion** — producers `insert()` tuples through a
-//!   `sync_channel`; when the coordinator falls behind, producers block
-//!   (backpressure) instead of ballooning memory.
-//! * **Delta-triggered re-clustering** — after `recluster_every` new
-//!   tuples (or an explicit [`Coordinator::flush`]) the worker re-runs the
-//!   full Rk-means pipeline. Because Rk-means touches only the base
-//!   relations (never `X`), a re-cluster costs `Õ(|D|)`, which is what
-//!   makes *streaming* re-clustering affordable at all — the baseline
-//!   would re-materialize the join every time.
+//! * **Bounded ingestion** — producers `insert()` / `delete()` tuples
+//!   through a `sync_channel`; when the coordinator falls behind,
+//!   producers block (backpressure) instead of ballooning memory. Time
+//!   spent blocked and per-job queue depth are recorded in [`Metrics`].
+//! * **Planned re-clustering** — after `recluster_every` new tuples (or
+//!   an explicit [`Coordinator::flush`]) the worker runs a job through
+//!   the incremental planner ([`crate::incremental::IncrementalEngine`]):
+//!   small batches **patch** the Step-3 grid in place and warm-start
+//!   Step 4 from the previous centroids, falling back to a full
+//!   `Õ(|D|)` pipeline **rebuild** when the planner's drift / batch-size
+//!   triggers fire (or when `incremental` is disabled / the FEQ is
+//!   cyclic, in which case every job is a rebuild, as before).
 //! * **Versioned results** — each completed job is published on a results
-//!   channel as a [`ClusteringUpdate`]; consumers read the latest.
-//! * **Metrics** — counters for ingested/dropped tuples, job counts and
-//!   durations, via [`crate::metrics::Metrics`].
+//!   channel as a [`ClusteringUpdate`] tagged with its [`UpdateMode`];
+//!   consumers read the latest. On shutdown the worker first **drains**
+//!   all queued messages, then — if any deltas arrived since the last
+//!   job — runs one final job so the last published update covers every
+//!   ingested tuple (this also happens on drop).
+//! * **Metrics** — counters for ingested/deleted/dropped tuples, job
+//!   counts and durations, backpressure waits, queue depths, and the
+//!   planner's `incremental.*` family, via [`crate::metrics::Metrics`].
 
 use crate::data::{Database, Value};
-use crate::metrics::Metrics;
-use crate::query::Feq;
+use crate::incremental::{
+    IncrementalEngine, PlanDecision, PlannerOpts, TupleDelta,
+};
+use crate::metrics::{Counter, Metrics};
+use crate::query::{Feq, Hypergraph};
 use crate::rkmeans::{rkmeans, RkConfig, RkResult};
 use anyhow::{anyhow, Result};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Mutex;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -37,30 +48,58 @@ pub struct CoordinatorConfig {
     pub channel_capacity: usize,
     /// Clustering configuration for each job.
     pub rk: RkConfig,
+    /// Route jobs through the incremental planner (patch vs. rebuild).
+    /// When false — or when the planner cannot handle the FEQ — every job
+    /// is a full pipeline rebuild.
+    pub incremental: bool,
+    /// Planner thresholds (used when `incremental` is on).
+    pub planner: PlannerOpts,
 }
 
 impl CoordinatorConfig {
     /// Sensible defaults for examples/tests.
     pub fn new(rk: RkConfig) -> Self {
-        CoordinatorConfig { recluster_every: 10_000, channel_capacity: 1024, rk }
+        CoordinatorConfig {
+            recluster_every: 10_000,
+            channel_capacity: 1024,
+            rk,
+            incremental: true,
+            planner: PlannerOpts::default(),
+        }
     }
 }
 
+/// How a published clustering was produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// Full pipeline run.
+    Rebuilt,
+    /// Step-3 delta patch + Step-4 warm start.
+    Patched,
+}
+
 /// A published clustering result.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct ClusteringUpdate {
     /// Monotonically increasing job id.
     pub version: u64,
     /// Total tuples ingested when the job started.
     pub ingested: u64,
-    /// The clustering itself.
-    pub result: RkResult,
+    /// The clustering itself (shared: updates are cloned onto the
+    /// results channel and retained by the worker for the shutdown
+    /// drain, so the payload is reference-counted rather than deep-copied
+    /// on the per-job path).
+    pub result: Arc<RkResult>,
     /// Wall-clock of this job.
     pub elapsed: Duration,
+    /// Patch or rebuild (always [`UpdateMode::Rebuilt`] with the planner
+    /// disabled).
+    pub mode: UpdateMode,
 }
 
 enum Msg {
     Insert { relation: String, values: Vec<Value>, weight: f64 },
+    Delete { relation: String, values: Vec<Value>, weight: f64 },
     Flush,
     Shutdown,
 }
@@ -69,8 +108,21 @@ enum Msg {
 pub struct Coordinator {
     tx: SyncSender<Msg>,
     results: Mutex<Receiver<ClusteringUpdate>>,
-    worker: Option<JoinHandle<Database>>,
+    worker: Option<JoinHandle<(Database, Option<ClusteringUpdate>)>>,
     metrics: Metrics,
+    /// Producer-side counters, cached so the ingest hot path never takes
+    /// the metrics-registry lock.
+    enqueued: Arc<Counter>,
+    bp_events: Arc<Counter>,
+    bp_wait_us: Arc<Counter>,
+}
+
+/// Worker-side job state: the planner engine is built lazily on the first
+/// job and dropped permanently if it cannot be built (cyclic FEQ, …).
+struct JobState {
+    engine: Option<IncrementalEngine>,
+    engine_failed: bool,
+    pending: Vec<TupleDelta>,
 }
 
 impl Coordinator {
@@ -87,30 +139,131 @@ impl Coordinator {
             let mut ingested = 0u64;
             let mut version = 0u64;
             let ingest_ctr = m.counter("coordinator.ingested");
+            let delete_ctr = m.counter("coordinator.deleted");
             let err_ctr = m.counter("coordinator.insert_errors");
             let job_ctr = m.counter("coordinator.jobs");
             let depth = m.gauge("coordinator.since_recluster");
+            let enqueued = m.counter("coordinator.enqueued");
+            let dequeued = m.counter("coordinator.dequeued");
+            let job_depth = m.gauge("coordinator.job_queue_depth");
 
-            let run_job = |db: &Database, ingested: u64, version: &mut u64| {
+            let mut js = JobState { engine: None, engine_failed: false, pending: Vec::new() };
+            let mut last_published: Option<ClusteringUpdate> = None;
+
+            let run_job = |db: &Database,
+                               js: &mut JobState,
+                               ingested: u64,
+                               version: &mut u64,
+                               last: &mut Option<ClusteringUpdate>| {
+                // Per-job queue depth: what producers have enqueued that
+                // the worker has not yet seen.
+                job_depth.set(enqueued.get().saturating_sub(dequeued.get()) as i64);
                 let t0 = Instant::now();
+                // Build the planner engine on first use (its initial full
+                // build doubles as this job's result).
+                if cfg.incremental && js.engine.is_none() && !js.engine_failed {
+                    match IncrementalEngine::new(
+                        db,
+                        feq.clone(),
+                        cfg.rk.clone(),
+                        cfg.planner.clone(),
+                        m.clone(),
+                    ) {
+                        Ok(engine) => {
+                            js.engine = Some(engine);
+                            js.pending.clear(); // covered by the initial build
+                            *version += 1;
+                            job_ctr.inc();
+                            let result = js.engine.as_ref().expect("just built").shared_result();
+                            let update = ClusteringUpdate {
+                                version: *version,
+                                ingested,
+                                result,
+                                elapsed: t0.elapsed(),
+                                mode: UpdateMode::Rebuilt,
+                            };
+                            let _ = res_tx.try_send(update.clone());
+                            *last = Some(update);
+                            return;
+                        }
+                        Err(e) => {
+                            // Structural failures (cyclic FEQ, invalid
+                            // feature set) can never succeed — stop
+                            // trying. Data-dependent ones (e.g. an empty
+                            // join while the stream warms up) retry on
+                            // the next job.
+                            let structural = feq.validate(db).is_err()
+                                || Hypergraph::from_feq(db, &feq).join_tree().is_err();
+                            js.engine_failed = structural;
+                            eprintln!(
+                                "coordinator: incremental planner unavailable ({e}); \
+                                 falling back to a full rebuild{}",
+                                if structural { " permanently" } else { " for this job" }
+                            );
+                        }
+                    }
+                }
+                if let Some(mut engine) = js.engine.take() {
+                    let pending = std::mem::take(&mut js.pending);
+                    match engine.apply_batch(db, &pending) {
+                        Ok((decision, result)) => {
+                            js.engine = Some(engine);
+                            *version += 1;
+                            job_ctr.inc();
+                            let mode = match decision {
+                                PlanDecision::Patched => UpdateMode::Patched,
+                                PlanDecision::Rebuilt(_) => UpdateMode::Rebuilt,
+                            };
+                            // The channel drops updates when consumers
+                            // are slow (never block ingestion); the worker
+                            // keeps the latest one for the shutdown drain.
+                            let update = ClusteringUpdate {
+                                version: *version,
+                                ingested,
+                                result,
+                                elapsed: t0.elapsed(),
+                                mode,
+                            };
+                            let _ = res_tx.try_send(update.clone());
+                            *last = Some(update);
+                            return;
+                        }
+                        Err(e) => {
+                            // The engine's own patch-failure path already
+                            // rebuilds internally, so an error here means
+                            // the full pipeline failed too. Drop the
+                            // (possibly poisoned) state; the next job
+                            // re-initializes from the database.
+                            eprintln!(
+                                "coordinator: incremental job failed ({e}); \
+                                 re-initializing on the next job"
+                            );
+                        }
+                    }
+                }
+                // Plain full-pipeline path.
+                js.pending.clear();
                 match rkmeans(db, &feq, &cfg.rk) {
                     Ok(result) => {
                         *version += 1;
                         job_ctr.inc();
-                        // Drop the update if consumers are slow — latest
-                        // result wins; never block ingestion on readers.
-                        let _ = res_tx.try_send(ClusteringUpdate {
+                        let update = ClusteringUpdate {
                             version: *version,
                             ingested,
-                            result,
+                            result: Arc::new(result),
                             elapsed: t0.elapsed(),
-                        });
+                            mode: UpdateMode::Rebuilt,
+                        };
+                        let _ = res_tx.try_send(update.clone());
+                        *last = Some(update);
                     }
                     Err(e) => eprintln!("coordinator: clustering failed: {e}"),
                 }
             };
 
             while let Ok(msg) = rx.recv() {
+                dequeued.inc();
+                let mut force_job = false;
                 match msg {
                     Msg::Insert { relation, values, weight } => {
                         match db.get_mut(&relation) {
@@ -120,6 +273,7 @@ impl Coordinator {
                                 } else {
                                     rel.push_row_weighted(&values, weight);
                                 }
+                                js.pending.push(TupleDelta { relation, values, weight });
                                 ingested += 1;
                                 since_recluster += 1;
                                 ingest_ctr.inc();
@@ -127,43 +281,130 @@ impl Coordinator {
                             }
                             _ => err_ctr.inc(),
                         }
-                        if since_recluster >= cfg.recluster_every {
-                            since_recluster = 0;
-                            depth.set(0);
-                            run_job(&db, ingested, &mut version);
+                    }
+                    Msg::Delete { relation, values, weight } => {
+                        let retracted = match db.get_mut(&relation) {
+                            Some(rel) => {
+                                let ok = rel.retract_row(&values, weight);
+                                // Reclaim tombstones once they dominate the
+                                // relation (bounds memory and the retract
+                                // scan under delete-heavy load; the delta
+                                // state never references row positions, so
+                                // compaction is invisible to the planner).
+                                if ok && rel.n_rows() > 256 && rel.zero_rows() * 2 > rel.n_rows()
+                                {
+                                    rel.compact();
+                                }
+                                ok
+                            }
+                            None => false,
+                        };
+                        if retracted {
+                            js.pending.push(TupleDelta { relation, values, weight: -weight });
+                            ingested += 1;
+                            since_recluster += 1;
+                            delete_ctr.inc();
+                            depth.set(since_recluster as i64);
+                        } else {
+                            err_ctr.inc();
                         }
                     }
-                    Msg::Flush => {
-                        since_recluster = 0;
-                        depth.set(0);
-                        run_job(&db, ingested, &mut version);
+                    Msg::Flush => force_job = true,
+                    Msg::Shutdown => {
+                        // Everything enqueued before the shutdown message
+                        // has already been drained (the channel is FIFO);
+                        // publish one final update covering any deltas
+                        // that never hit the recluster threshold.
+                        if since_recluster > 0 || !js.pending.is_empty() {
+                            since_recluster = 0;
+                            depth.set(0);
+                            run_job(&db, &mut js, ingested, &mut version, &mut last_published);
+                        }
+                        break;
                     }
-                    Msg::Shutdown => break,
+                }
+                if force_job || since_recluster >= cfg.recluster_every {
+                    since_recluster = 0;
+                    depth.set(0);
+                    run_job(&db, &mut js, ingested, &mut version, &mut last_published);
                 }
             }
-            db
+            (db, last_published)
         });
 
-        Coordinator { tx, results: Mutex::new(res_rx), worker: Some(worker), metrics }
+        let enqueued = metrics.counter("coordinator.enqueued");
+        let bp_events = metrics.counter("coordinator.backpressure_events");
+        let bp_wait_us = metrics.counter("coordinator.backpressure_wait_us");
+        Coordinator {
+            tx,
+            results: Mutex::new(res_rx),
+            worker: Some(worker),
+            metrics,
+            enqueued,
+            bp_events,
+            bp_wait_us,
+        }
+    }
+
+    /// Send with backpressure accounting: a full queue blocks the
+    /// producer and the wait is recorded in
+    /// `coordinator.backpressure_wait_us` / `.backpressure_events`.
+    fn send_msg(&self, msg: Msg) -> Result<()> {
+        match self.tx.try_send(msg) {
+            Ok(()) => {
+                self.enqueued.inc();
+                Ok(())
+            }
+            Err(TrySendError::Full(msg)) => {
+                let t0 = Instant::now();
+                self.tx.send(msg).map_err(|_| anyhow!("coordinator is shut down"))?;
+                self.enqueued.inc();
+                self.bp_events.inc();
+                self.bp_wait_us.add(t0.elapsed().as_micros() as u64);
+                Ok(())
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("coordinator is shut down")),
+        }
     }
 
     /// Ingest one tuple; blocks when the queue is full (backpressure).
     pub fn insert(&self, relation: &str, values: Vec<Value>) -> Result<()> {
-        self.tx
-            .send(Msg::Insert { relation: relation.to_string(), values, weight: 1.0 })
-            .map_err(|_| anyhow!("coordinator is shut down"))
+        self.send_msg(Msg::Insert { relation: relation.to_string(), values, weight: 1.0 })
     }
 
-    /// Ingest one weighted tuple.
+    /// Ingest one weighted tuple. The weight must be strictly positive —
+    /// a retraction goes through [`Coordinator::delete`], not a negative
+    /// insert (a zero/negative weight here would poison the incremental
+    /// delta state).
     pub fn insert_weighted(&self, relation: &str, values: Vec<Value>, weight: f64) -> Result<()> {
-        self.tx
-            .send(Msg::Insert { relation: relation.to_string(), values, weight })
-            .map_err(|_| anyhow!("coordinator is shut down"))
+        if !(weight > 0.0) {
+            return Err(anyhow!("tuple weight must be positive, got {weight}"));
+        }
+        self.send_msg(Msg::Insert { relation: relation.to_string(), values, weight })
+    }
+
+    /// Retract one unit-weight tuple (ring-style delete; the tuple must
+    /// exist with multiplicity ≥ 1). A retraction that finds no matching
+    /// tuple is counted in `coordinator.insert_errors`, like a malformed
+    /// insert. Tuples ingested with [`Coordinator::insert_weighted`] are
+    /// retracted via [`Coordinator::delete_weighted`] with the matching
+    /// weight.
+    pub fn delete(&self, relation: &str, values: Vec<Value>) -> Result<()> {
+        self.delete_weighted(relation, values, 1.0)
+    }
+
+    /// Retract `weight` of a tuple's multiplicity (must be positive and
+    /// no larger than the tuple's remaining weight).
+    pub fn delete_weighted(&self, relation: &str, values: Vec<Value>, weight: f64) -> Result<()> {
+        if !(weight > 0.0) {
+            return Err(anyhow!("retraction weight must be positive, got {weight}"));
+        }
+        self.send_msg(Msg::Delete { relation: relation.to_string(), values, weight })
     }
 
     /// Force a re-cluster of the current state.
     pub fn flush(&self) -> Result<()> {
-        self.tx.send(Msg::Flush).map_err(|_| anyhow!("coordinator is shut down"))
+        self.send_msg(Msg::Flush)
     }
 
     /// Wait for the next clustering update.
@@ -179,11 +420,25 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Stop the worker and return the final database state.
-    pub fn shutdown(mut self) -> Result<Database> {
+    /// Stop the worker and return the final database state. All in-flight
+    /// messages are drained first, and a final update is published when
+    /// un-reclustered deltas remain (see [`Coordinator::shutdown_with_final`]
+    /// to receive it).
+    pub fn shutdown(self) -> Result<Database> {
+        self.shutdown_with_final().map(|(db, _)| db)
+    }
+
+    /// [`Coordinator::shutdown`], also returning the latest published
+    /// update — after the drain-on-shutdown job, that update covers every
+    /// successfully ingested delta. The worker hands its last update back
+    /// directly, so this holds even when slow consumers made the bounded
+    /// results channel drop updates.
+    pub fn shutdown_with_final(mut self) -> Result<(Database, Option<ClusteringUpdate>)> {
         let _ = self.tx.send(Msg::Shutdown);
         let worker = self.worker.take().expect("worker present until shutdown");
-        worker.join().map_err(|_| anyhow!("coordinator worker panicked"))
+        let (db, last) =
+            worker.join().map_err(|_| anyhow!("coordinator worker panicked"))?;
+        Ok((db, last))
     }
 }
 
@@ -244,6 +499,59 @@ mod tests {
     }
 
     #[test]
+    fn second_job_is_patched() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.recluster_every = 10;
+        // Lenient planner so the small batches always patch.
+        cfg.planner = PlannerOpts {
+            drift_threshold: 1.1,
+            max_patch_fraction: 1.0,
+            rebuild_every: 0,
+            max_join_churn: f64::INFINITY,
+        };
+        let coord = Coordinator::start(db, feq, cfg);
+        for i in 0..20u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64)]).unwrap();
+        }
+        let first = coord.recv_update(Duration::from_secs(30)).expect("first update");
+        assert_eq!(first.mode, UpdateMode::Rebuilt); // initial build
+        let second = coord.recv_update(Duration::from_secs(30)).expect("second update");
+        assert_eq!(second.mode, UpdateMode::Patched);
+        assert_eq!(second.ingested, 20);
+        assert!(second.result.grid_points > 0);
+        let m = coord.metrics().clone();
+        coord.shutdown().unwrap();
+        assert!(m.counter("incremental.patches").get() >= 1);
+    }
+
+    #[test]
+    fn deletes_flow_through_jobs() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.planner = PlannerOpts {
+            drift_threshold: 1.1,
+            max_patch_fraction: 1.0,
+            rebuild_every: 0,
+            max_join_churn: f64::INFINITY,
+        };
+        let coord = Coordinator::start(db, feq, cfg);
+        coord.flush().unwrap(); // initial build over the 20 base tuples
+        let first = coord.recv_update(Duration::from_secs(30)).expect("first");
+        let mass0 = first.result.grid_mass;
+        coord.delete("fact", vec![Value::Cat(0), Value::Double(0.0)]).unwrap();
+        coord.delete("fact", vec![Value::Cat(1), Value::Double(1.0)]).unwrap();
+        // Deleting a tuple that is not there is an error, not a crash.
+        coord.delete("fact", vec![Value::Cat(3), Value::Double(999.0)]).unwrap();
+        coord.flush().unwrap();
+        let second = coord.recv_update(Duration::from_secs(30)).expect("second");
+        assert!((second.result.grid_mass - (mass0 - 2.0)).abs() < 1e-9);
+        assert_eq!(coord.metrics().counter("coordinator.insert_errors").get(), 1);
+        assert_eq!(coord.metrics().counter("coordinator.deleted").get(), 2);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
     fn bad_inserts_are_counted_not_fatal() {
         let (db, feq) = setup();
         let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
@@ -256,9 +564,118 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_drains_inflight_deltas() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.recluster_every = 1_000; // never auto-trigger
+        let coord = Coordinator::start(db, feq, cfg);
+        for i in 0..30u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64)]).unwrap();
+        }
+        // No flush: all 30 tuples are in flight when shutdown arrives.
+        let (db, last) = coord.shutdown_with_final().unwrap();
+        assert_eq!(db.get("fact").unwrap().n_rows(), 50);
+        let last = last.expect("drain-on-shutdown update");
+        assert_eq!(last.ingested, 30);
+        assert!(last.result.grid_points > 0);
+    }
+
+    #[test]
+    fn final_update_survives_dropped_channel_updates() {
+        // More jobs than the results channel holds, no consumer: the
+        // bounded channel drops updates, but the worker's own copy of the
+        // latest one must still come back from shutdown_with_final.
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.recluster_every = 1; // one job per insert → 20 jobs > capacity 16
+        let coord = Coordinator::start(db, feq, cfg);
+        for i in 0..20u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64)]).unwrap();
+        }
+        let (_, last) = coord.shutdown_with_final().unwrap();
+        let last = last.expect("latest update");
+        assert_eq!(last.ingested, 20);
+        assert_eq!(last.version, 20);
+    }
+
+    #[test]
+    fn weighted_insert_rejects_non_positive_weights() {
+        let (db, feq) = setup();
+        let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
+        assert!(coord
+            .insert_weighted("fact", vec![Value::Cat(0), Value::Double(1.0)], 0.0)
+            .is_err());
+        assert!(coord
+            .insert_weighted("fact", vec![Value::Cat(0), Value::Double(1.0)], -2.0)
+            .is_err());
+        assert!(coord
+            .insert_weighted("fact", vec![Value::Cat(0), Value::Double(1.0)], 2.0)
+            .is_ok());
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn weighted_delete_round_trips() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.planner = PlannerOpts {
+            drift_threshold: 1.1,
+            max_patch_fraction: 1.0,
+            rebuild_every: 0,
+            max_join_churn: f64::INFINITY,
+        };
+        let coord = Coordinator::start(db, feq, cfg);
+        coord.flush().unwrap();
+        let first = coord.recv_update(Duration::from_secs(30)).expect("first");
+        let mass0 = first.result.grid_mass;
+        // A weight-3 tuple retracts only via the matching weighted delete.
+        coord.insert_weighted("fact", vec![Value::Cat(2), Value::Double(7.0)], 3.0).unwrap();
+        coord.delete_weighted("fact", vec![Value::Cat(2), Value::Double(7.0)], 3.0).unwrap();
+        coord.flush().unwrap();
+        let second = coord.recv_update(Duration::from_secs(30)).expect("second");
+        assert!((second.result.grid_mass - mass0).abs() < 1e-9);
+        assert!(coord.delete_weighted("fact", vec![Value::Cat(2)], 0.0).is_err());
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn drop_drains_inflight_deltas_too() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.recluster_every = 1_000;
+        let coord = Coordinator::start(db, feq, cfg);
+        let m = coord.metrics().clone();
+        for i in 0..5u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64)]).unwrap();
+        }
+        drop(coord); // must process the 5 inserts and run one final job
+        assert_eq!(m.counter("coordinator.ingested").get(), 5);
+        assert_eq!(m.counter("coordinator.jobs").get(), 1);
+    }
+
+    #[test]
     fn shutdown_is_idempotent_under_drop() {
         let (db, feq) = setup();
         let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
         drop(coord); // must not hang or panic
+    }
+
+    #[test]
+    fn queue_metrics_are_recorded() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.channel_capacity = 2; // tiny queue: force backpressure
+        cfg.recluster_every = 4;
+        let coord = Coordinator::start(db, feq, cfg);
+        for i in 0..40u32 {
+            coord.insert("fact", vec![Value::Cat(i % 4), Value::Double(i as f64)]).unwrap();
+        }
+        let m = coord.metrics().clone();
+        coord.shutdown().unwrap();
+        assert_eq!(m.counter("coordinator.enqueued").get(), 40);
+        assert_eq!(m.counter("coordinator.dequeued").get(), 41); // + shutdown
+        // With a 2-slot queue and recluster jobs on the worker thread, at
+        // least one producer send must have blocked.
+        assert!(m.counter("coordinator.backpressure_events").get() > 0);
     }
 }

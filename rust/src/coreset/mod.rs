@@ -156,9 +156,25 @@ pub fn build_grid(
         assigners.insert(m.name.clone(), Box::new(m));
     }
     let table = grid_weights(db, feq, tree, &assigners)?;
+    Ok(sparse_from_table(table, models))
+}
+
+/// Convert a Step-3 grid-weight table into the factored [`SparseGrid`] +
+/// subspace geometry Step 4 consumes, in the same deterministic (sorted)
+/// cell order as [`build_grid`]. Shared with the incremental planner,
+/// whose delta-maintained [`crate::incremental::DeltaFaq`] produces the
+/// table without a from-scratch FAQ pass.
+pub fn sparse_from_table(
+    table: crate::faq::gridweights::GridTable,
+    models: &[SubspaceModel],
+) -> (SparseGrid, Vec<Subspace>) {
     let m = models.len();
     let mut cells = table.cells;
-    cells.sort_by(|a, b| a.0.cmp(&b.0));
+    // The planner's patch path hands over an already-sorted table every
+    // batch (`DeltaFaq::grid_table`); an O(|G|) check beats re-sorting.
+    if !cells.windows(2).all(|p| p[0].0 <= p[1].0) {
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+    }
     let mut gids = Vec::with_capacity(cells.len() * m);
     let mut weights = Vec::with_capacity(cells.len());
     for (g, w) in cells {
@@ -167,7 +183,7 @@ pub fn build_grid(
         weights.push(w);
     }
     let subspaces: Vec<Subspace> = models.iter().map(|m| m.subspace()).collect();
-    Ok((SparseGrid { m, gids, weights }, subspaces))
+    (SparseGrid { m, gids, weights }, subspaces)
 }
 
 /// Dense one-hot coordinates of one component of one subspace, written

@@ -76,13 +76,15 @@ pub struct Relation {
     cols: Vec<Column>,
     weights: Option<Vec<f64>>,
     len: usize,
+    /// Fully-retracted tuples still occupying storage (see `retract_row`).
+    zero_rows: usize,
 }
 
 impl Relation {
     /// Create an empty relation.
     pub fn new(name: &str, schema: Schema) -> Self {
         let cols = schema.attrs().iter().map(|a| Column::empty(a.ty)).collect();
-        Relation { name: name.to_string(), schema, cols, weights: None, len: 0 }
+        Relation { name: name.to_string(), schema, cols, weights: None, len: 0, zero_rows: 0 }
     }
 
     /// Number of tuples.
@@ -159,6 +161,101 @@ impl Relation {
         (0..self.cols.len()).map(|c| self.value(row, c)).collect()
     }
 
+    /// Ring-style deletion: reduce the multiplicity of the last tuple
+    /// matching `vals` by `weight` (a delete is a negative-weight insert;
+    /// see [`crate::incremental`]). The tuple's storage is retained with
+    /// weight 0 when fully retracted — every consumer (FAQ passes, the
+    /// grid coreset, materialization mass) already treats zero-weight
+    /// tuples as absent; [`Relation::compact`] reclaims them. Returns
+    /// `false` (and changes nothing) when no matching tuple with at least
+    /// `weight` multiplicity exists.
+    ///
+    /// Multiplicity arithmetic is exact on the ring ℤ (integer weights —
+    /// the streaming contract; see [`crate::incremental`]) and on dyadic
+    /// fractions. Arbitrary fractional weights are subject to f64
+    /// rounding: repeated partial retraction may leave a tiny residue
+    /// instead of reaching the exact 0.0 tombstone, and the aggregate
+    /// availability check then rejects the final retraction.
+    pub fn retract_row(&mut self, vals: &[Value], weight: f64) -> bool {
+        if vals.len() != self.cols.len() || !(weight > 0.0) {
+            return false;
+        }
+        // The tuple's multiplicity is the *aggregate* over all stored
+        // rows with these values (duplicate unit inserts accumulate), so
+        // retraction spreads over matching rows, newest first — matching
+        // the value-multiset semantics of the incremental delta state.
+        let matches: Vec<usize> = (0..self.len)
+            .rev()
+            .filter(|&r| {
+                self.weight(r) > 0.0
+                    && (0..self.cols.len()).all(|c| self.value(r, c) == vals[c])
+            })
+            .collect();
+        let available: f64 = matches.iter().map(|&r| self.weight(r)).sum();
+        if available < weight {
+            return false;
+        }
+        if self.weights.is_none() {
+            self.weights = Some(vec![1.0; self.len]);
+        }
+        let w = self.weights.as_mut().expect("weights just initialized");
+        let mut remaining = weight;
+        for &r in &matches {
+            if remaining <= 0.0 {
+                break;
+            }
+            let take = remaining.min(w[r]);
+            w[r] -= take;
+            remaining -= take;
+            if w[r] == 0.0 {
+                self.zero_rows += 1;
+            }
+        }
+        true
+    }
+
+    /// Number of fully-retracted (zero-weight) tuples still occupying
+    /// storage.
+    pub fn zero_rows(&self) -> usize {
+        self.zero_rows
+    }
+
+    /// Drop zero-weight tuples, reclaiming their storage. Returns the
+    /// number of tuples removed. The streaming coordinator calls this
+    /// when retracted tombstones start to dominate a relation, bounding
+    /// both memory and the `retract_row` scan under delete-heavy load.
+    pub fn compact(&mut self) -> usize {
+        if self.zero_rows == 0 {
+            return 0;
+        }
+        let keep: Vec<usize> =
+            (0..self.len).filter(|&r| self.weight(r) != 0.0).collect();
+        let removed = self.len - keep.len();
+        for col in self.cols.iter_mut() {
+            match col {
+                Column::Int(v) => {
+                    let nv: Vec<i64> = keep.iter().map(|&r| v[r]).collect();
+                    *v = nv;
+                }
+                Column::Double(v) => {
+                    let nv: Vec<f64> = keep.iter().map(|&r| v[r]).collect();
+                    *v = nv;
+                }
+                Column::Cat(v) => {
+                    let nv: Vec<CatId> = keep.iter().map(|&r| v[r]).collect();
+                    *v = nv;
+                }
+            }
+        }
+        if let Some(w) = &mut self.weights {
+            let nw: Vec<f64> = keep.iter().map(|&r| w[r]).collect();
+            *w = nw;
+        }
+        self.len = keep.len();
+        self.zero_rows = 0;
+        removed
+    }
+
     /// Estimated in-memory size in bytes (for Table-1 style reporting).
     pub fn byte_size(&self) -> u64 {
         let per_row: u64 = self
@@ -230,6 +327,58 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut r = sample();
         r.push_row(&[Value::Int(1)]);
+    }
+
+    #[test]
+    fn retract_reduces_multiplicity() {
+        let mut r = sample();
+        // Full retraction leaves a zero-weight tuple behind.
+        assert!(r.retract_row(&[Value::Int(1), Value::Double(0.5), Value::Cat(2)], 1.0));
+        assert_eq!(r.weight(0), 0.0);
+        assert_eq!(r.weight(1), 1.0);
+        // Nothing left to retract for that tuple.
+        assert!(!r.retract_row(&[Value::Int(1), Value::Double(0.5), Value::Cat(2)], 1.0));
+        // Unknown tuple and arity mismatch are no-ops.
+        assert!(!r.retract_row(&[Value::Int(9), Value::Double(0.5), Value::Cat(2)], 1.0));
+        assert!(!r.retract_row(&[Value::Int(2)], 1.0));
+        // Partial retraction of a weighted tuple.
+        r.push_row_weighted(&[Value::Int(3), Value::Double(2.0), Value::Cat(0)], 3.0);
+        assert!(r.retract_row(&[Value::Int(3), Value::Double(2.0), Value::Cat(0)], 2.0));
+        assert_eq!(r.weight(2), 1.0);
+    }
+
+    #[test]
+    fn retraction_spans_duplicate_rows() {
+        // Aggregate multiplicity from duplicate unit inserts is
+        // retractable in one weighted call (value-multiset semantics).
+        let mut r = Relation::new("t", Schema::new(vec![Attr::cat("c", 4)]));
+        r.push_row(&[Value::Cat(1)]);
+        r.push_row(&[Value::Cat(1)]);
+        r.push_row(&[Value::Cat(2)]);
+        assert!(r.retract_row(&[Value::Cat(1)], 2.0));
+        assert_eq!(r.weight(0), 0.0);
+        assert_eq!(r.weight(1), 0.0);
+        assert_eq!(r.zero_rows(), 2);
+        // Over-retraction of the remaining tuple is refused whole.
+        assert!(!r.retract_row(&[Value::Cat(2)], 2.0));
+        assert_eq!(r.weight(2), 1.0);
+    }
+
+    #[test]
+    fn compact_reclaims_zero_rows() {
+        let mut r = sample();
+        r.push_row(&[Value::Int(3), Value::Double(2.5), Value::Cat(1)]);
+        assert!(r.retract_row(&[Value::Int(2), Value::Double(1.5), Value::Cat(2)], 1.0));
+        assert_eq!(r.zero_rows(), 1);
+        assert_eq!(r.compact(), 1);
+        assert_eq!(r.n_rows(), 2);
+        assert_eq!(r.zero_rows(), 0);
+        // Survivors keep their values and weights in order.
+        assert_eq!(r.value(0, 0), Value::Int(1));
+        assert_eq!(r.value(1, 0), Value::Int(3));
+        assert_eq!(r.weight(0), 1.0);
+        // Idempotent when nothing is retracted.
+        assert_eq!(r.compact(), 0);
     }
 
     #[test]

@@ -26,6 +26,6 @@ pub mod yannakakis;
 
 pub use aggregate::scalar_aggregate;
 pub use factor::Factor;
-pub use gridweights::{grid_weights, GidAssigner};
+pub use gridweights::{grid_weights, GidAssigner, GridTable};
 pub use semiring::Semiring;
 pub use yannakakis::{full_join_counts, marginals, output_size, JoinCounts, Marginal};

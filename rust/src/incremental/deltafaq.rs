@@ -1,0 +1,873 @@
+//! Delta maintenance of the Step-3 grid-weight FAQ (persistent InsideOut
+//! message state).
+//!
+//! [`crate::faq::grid_weights`] evaluates the counting FAQ of Eq. 4 with
+//! one upward pass whose per-node messages are discarded as the pass moves
+//! up the join tree. [`DeltaFaq`] instead **retains** every message — a
+//! sparse table per separator key over the gid-combinations of the node's
+//! subtree — plus, per node, a multiset of its base tuples and an index
+//! from each child-separator key to the tuples carrying it. A batch of
+//! tuple inserts/deletes then propagates in time proportional to the
+//! *touched* separator keys rather than `Õ(|D|)`:
+//!
+//! 1. deltas are grouped by tree node and processed in upward order;
+//! 2. at each node, child message deltas are joined (via the key index)
+//!    against only the tuples whose separator keys changed, using the
+//!    telescoping product `Δ(T_1×…×T_p) = Σ_i T_1^new×…×ΔT_i×…×T_p^old`
+//!    so multi-child nodes stay exact;
+//! 3. the node's own inserted/deleted tuples contribute against the
+//!    already-updated child messages, and deletes are just **negative
+//!    weights** — the Step-3 FAQ lives in the ring ℤ, where retraction is
+//!    the additive inverse (see the parent module docs);
+//! 4. the root's message delta patches the sparse grid in place: cells
+//!    whose weight reaches 0 are dropped, and a weight that goes negative
+//!    aborts the patch (the ℤ-ring invariant was violated, e.g. by
+//!    non-integer tuple weights drifting; the planner then rebuilds).
+//!
+//! Both combo-key paths of the batch evaluator are kept: the bit-packed
+//! `u128` layout (the hot path) and the generic `Vec<u32>` fallback for
+//! layouts over 128 bits, selected by the same bit-width rule as
+//! [`grid_weights`](crate::faq::grid_weights). On ℤ-weighted databases
+//! (integer tuple multiplicities below 2⁵³) every message entry is an
+//! exactly-represented integer, so the maintained grid is **bitwise
+//! identical** to a from-scratch evaluation — `tests/property_incremental.rs`
+//! pins this for both key paths. With fractional weights the maintained
+//! grid is exact up to FP re-association; the planner treats any root
+//! negativity as corruption and falls back to a rebuild.
+//!
+//! The gid assigners passed to [`DeltaFaq::apply`] must be the *same*
+//! Step-2 models the state was initialized with (stable gid maps are what
+//! the marginal-drift trigger in [`super::marginal`] protects); a changed
+//! bit layout is detected and rejected.
+
+use crate::data::{AttrType, Database, Value};
+use crate::faq::gridweights::GridTable;
+use crate::faq::GidAssigner;
+use crate::query::{Feq, JoinTree};
+use crate::util::FxHashMap;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::hash_map::Entry;
+
+use super::TupleDelta;
+
+/// Statistics of one [`DeltaFaq::apply`] batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PatchStats {
+    /// Deltas applied.
+    pub deltas: usize,
+    /// Root grid cells touched by the patch (created, changed or dropped).
+    pub cells_touched: usize,
+    /// Σ|Δweight| over the touched root cells — the exact join-level
+    /// churn of this batch (feeds the planner's staleness backstop).
+    pub mass_delta_abs: f64,
+    /// Non-zero grid cells after the patch.
+    pub grid_cells: usize,
+}
+
+/// A gid-combination key: bit-packed `u128` on the hot path, a plain
+/// per-feature `Vec<u32>` on the >128-bit fallback. Subtrees own disjoint
+/// feature sets, so combining two subtree combos is a disjoint merge.
+trait Combo: Clone + Eq + std::hash::Hash {
+    fn empty(layout: &Layout) -> Self;
+    fn with_gid(self, fi: usize, gid: u32, layout: &Layout) -> Self;
+    fn merge(&self, other: &Self) -> Self;
+    fn unpack(&self, layout: &Layout) -> Vec<u32>;
+}
+
+/// Bit layout shared with [`crate::faq::grid_weights`]: feature `fi`
+/// occupies `width` bits at `shift` (packed path only).
+#[derive(Clone, Debug)]
+struct Layout {
+    n_features: usize,
+    shifts: Vec<(u32, u32)>,
+    total_bits: u32,
+}
+
+impl Layout {
+    fn new(feq: &Feq, assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>) -> Layout {
+        let mut shifts = Vec::with_capacity(feq.features.len());
+        let mut total_bits = 0u32;
+        for f in &feq.features {
+            let kj = assigners[&f.attr].n_gids().max(2) as u64;
+            let width = 64 - (kj - 1).leading_zeros().max(0);
+            shifts.push((total_bits, width));
+            total_bits += width;
+        }
+        Layout { n_features: feq.features.len(), shifts, total_bits }
+    }
+}
+
+impl Combo for u128 {
+    fn empty(_: &Layout) -> u128 {
+        0
+    }
+    fn with_gid(self, fi: usize, gid: u32, layout: &Layout) -> u128 {
+        self | (gid as u128) << layout.shifts[fi].0
+    }
+    fn merge(&self, other: &u128) -> u128 {
+        self | other
+    }
+    fn unpack(&self, layout: &Layout) -> Vec<u32> {
+        layout
+            .shifts
+            .iter()
+            .map(|&(shift, width)| ((self >> shift) & ((1u128 << width) - 1)) as u32)
+            .collect()
+    }
+}
+
+impl Combo for Vec<u32> {
+    fn empty(layout: &Layout) -> Vec<u32> {
+        vec![0; layout.n_features]
+    }
+    fn with_gid(mut self, fi: usize, gid: u32, _: &Layout) -> Vec<u32> {
+        self[fi] = gid;
+        self
+    }
+    fn merge(&self, other: &Vec<u32>) -> Vec<u32> {
+        // Owners are disjoint: at most one side is non-zero per position.
+        self.iter().zip(other).map(|(a, b)| a | b).collect()
+    }
+    fn unpack(&self, _: &Layout) -> Vec<u32> {
+        self.clone()
+    }
+}
+
+/// A message (or message delta): separator key → sparse combo table.
+type Msg<K> = FxHashMap<Vec<u64>, FxHashMap<K, f64>>;
+
+/// One retained base tuple (aggregated by value multiset).
+#[derive(Clone, Debug)]
+struct RowState<K> {
+    /// Packed gids of the features this node owns.
+    own: K,
+    /// Aggregated multiplicity (> 0; rows at 0 are removed).
+    w: f64,
+    /// Separator key toward the parent.
+    up_key: Vec<u64>,
+    /// Separator key toward each child, in child order.
+    child_keys: Vec<Vec<u64>>,
+}
+
+/// Persistent per-node state.
+#[derive(Clone, Debug)]
+struct NodeState<K> {
+    /// (feature idx, column idx) of the features this node owns.
+    owned: Vec<(usize, usize)>,
+    /// Child node ids (fixed order — the telescoping order).
+    children: Vec<usize>,
+    /// Separator column indices in this relation, per child.
+    child_cols: Vec<Vec<usize>>,
+    /// Separator columns toward the parent.
+    sep_cols: Vec<usize>,
+    /// Column types, for delta validation and value encoding.
+    col_types: Vec<AttrType>,
+    /// Tuple multiset: encoded values → row state.
+    rows: FxHashMap<Vec<u64>, RowState<K>>,
+    /// Per child: separator key → encoded row keys carrying it (also
+    /// indexes currently-dangling rows, which may start joining later).
+    child_index: Vec<FxHashMap<Vec<u64>, Vec<Vec<u64>>>>,
+    /// The retained upward message of this node.
+    msg: Msg<K>,
+}
+
+#[derive(Clone, Debug)]
+struct State<K> {
+    layout: Layout,
+    feature_names: Vec<String>,
+    nodes: Vec<NodeState<K>>,
+    /// Upward processing order (leaves first, root last).
+    order: Vec<usize>,
+    root: usize,
+    rel_to_node: FxHashMap<String, usize>,
+}
+
+/// Cross-product contribution of one tuple: `own × Π_j T_j(key_j)`, with
+/// child `replace.0`'s table swapped for a delta table when given. `None`
+/// when any required child key is (still) dangling.
+fn contribution<K: Combo>(
+    nodes: &[NodeState<K>],
+    children: &[usize],
+    own: &K,
+    w: f64,
+    child_keys: &[Vec<u64>],
+    replace: Option<(usize, &FxHashMap<K, f64>)>,
+) -> Option<Vec<(K, f64)>> {
+    let mut combos: Vec<(K, f64)> = vec![(own.clone(), w)];
+    for (j, &cj) in children.iter().enumerate() {
+        let table = match replace {
+            Some((rj, dtable)) if rj == j => dtable,
+            _ => nodes[cj].msg.get(&child_keys[j])?,
+        };
+        if table.is_empty() {
+            return None;
+        }
+        let mut next = Vec::with_capacity(combos.len() * table.len());
+        for (prefix, pw) in &combos {
+            for (g, gw) in table {
+                next.push((prefix.merge(g), pw * gw));
+            }
+        }
+        combos = next;
+    }
+    Some(combos)
+}
+
+/// Merge a message delta into a retained message, purging exact zeros so
+/// the table keeps the same sparsity a from-scratch pass would produce.
+fn merge_msg<K: Combo>(dst: &mut Msg<K>, src: Msg<K>) {
+    for (key, table) in src {
+        let empty = {
+            let slot = dst.entry(key.clone()).or_default();
+            for (g, dw) in table {
+                *slot.entry(g).or_insert(0.0) += dw;
+            }
+            slot.retain(|_, v| *v != 0.0);
+            slot.is_empty()
+        };
+        if empty {
+            dst.remove(&key);
+        }
+    }
+}
+
+fn encode_value(v: &Value, ty: AttrType) -> Result<u64> {
+    match (v, ty) {
+        (Value::Int(x), AttrType::Int) => Ok(*x as u64),
+        (Value::Cat(c), AttrType::Cat) => Ok(*c as u64),
+        // Normalize -0.0 to +0.0 so the bit-keyed tuple multiset agrees
+        // with `Relation::retract_row`'s `Value` equality (0.0 == -0.0).
+        (Value::Double(x), AttrType::Double) => {
+            Ok(if *x == 0.0 { 0.0f64.to_bits() } else { x.to_bits() })
+        }
+        _ => bail!("value {v} does not match column type {ty:?}"),
+    }
+}
+
+impl<K: Combo> State<K> {
+    fn init(
+        db: &Database,
+        feq: &Feq,
+        tree: &JoinTree,
+        assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>,
+        layout: Layout,
+    ) -> Result<State<K>> {
+        let n = tree.len();
+        let mut nodes: Vec<NodeState<K>> = Vec::with_capacity(n);
+        let mut rel_to_node = FxHashMap::default();
+        for u in 0..n {
+            let rel = db
+                .get(&tree.rel_names[u])
+                .with_context(|| format!("relation {} missing", tree.rel_names[u]))?;
+            let owned: Vec<(usize, usize)> = feq
+                .features
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| feq.owner_of(db, &f.attr) == Some(u))
+                .map(|(fi, f)| {
+                    let col = rel.schema.index_of(&f.attr).expect("owner contains attr");
+                    (fi, col)
+                })
+                .collect();
+            let children = tree.children(u);
+            let child_cols: Vec<Vec<usize>> = children
+                .iter()
+                .map(|&c| {
+                    tree.sep[c]
+                        .iter()
+                        .map(|a| rel.schema.index_of(a).expect("separator attr in parent"))
+                        .collect()
+                })
+                .collect();
+            let sep_cols: Vec<usize> = tree.sep[u]
+                .iter()
+                .map(|a| rel.schema.index_of(a).expect("separator attr in node"))
+                .collect();
+            let n_children = children.len();
+            rel_to_node.insert(tree.rel_names[u].clone(), u);
+            nodes.push(NodeState {
+                owned,
+                children,
+                child_cols,
+                sep_cols,
+                col_types: rel.schema.attrs().iter().map(|a| a.ty).collect(),
+                rows: FxHashMap::default(),
+                child_index: (0..n_children).map(|_| FxHashMap::default()).collect(),
+                msg: FxHashMap::default(),
+            });
+        }
+
+        let mut st = State {
+            layout,
+            feature_names: feq.features.iter().map(|f| f.attr.clone()).collect(),
+            nodes,
+            order: tree.order.clone(),
+            root: tree.root,
+            rel_to_node,
+        };
+
+        // Upward pass, retaining rows, indexes and messages.
+        for &u in &tree.order {
+            let rel = db.get(&tree.rel_names[u]).expect("checked above");
+            // Collect the tuple multiset.
+            for row in 0..rel.n_rows() {
+                let w = rel.weight(row);
+                if w == 0.0 {
+                    continue;
+                }
+                let node = &st.nodes[u];
+                let mut own = K::empty(&st.layout);
+                for &(fi, col) in &node.owned {
+                    let gid = assigners[&st.feature_names[fi]].gid(rel.value(row, col));
+                    own = own.with_gid(fi, gid, &st.layout);
+                }
+                let child_keys: Vec<Vec<u64>> = node
+                    .child_cols
+                    .iter()
+                    .map(|cols| cols.iter().map(|&c| rel.col(c).key_u64(row)).collect())
+                    .collect();
+                let up_key: Vec<u64> =
+                    node.sep_cols.iter().map(|&c| rel.col(c).key_u64(row)).collect();
+                let rkey: Vec<u64> = (0..rel.n_cols())
+                    .map(|c| {
+                        encode_value(&rel.value(row, c), node.col_types[c])
+                            .expect("schema types match their own columns")
+                    })
+                    .collect();
+                let node = &mut st.nodes[u];
+                match node.rows.entry(rkey.clone()) {
+                    Entry::Occupied(mut e) => e.get_mut().w += w,
+                    Entry::Vacant(e) => {
+                        e.insert(RowState { own, w, up_key, child_keys: child_keys.clone() });
+                        for (i, ck) in child_keys.iter().enumerate() {
+                            node.child_index[i]
+                                .entry(ck.clone())
+                                .or_default()
+                                .push(rkey.clone());
+                        }
+                    }
+                }
+            }
+            // Compute this node's message from its rows + child messages.
+            let mut msg: Msg<K> = FxHashMap::default();
+            {
+                let nodes = &st.nodes;
+                let node = &nodes[u];
+                for row in node.rows.values() {
+                    if let Some(combos) =
+                        contribution(nodes, &node.children, &row.own, row.w, &row.child_keys, None)
+                    {
+                        let slot = msg.entry(row.up_key.clone()).or_default();
+                        for (g, cw) in combos {
+                            *slot.entry(g).or_insert(0.0) += cw;
+                        }
+                    }
+                }
+            }
+            st.nodes[u].msg = msg;
+        }
+        Ok(st)
+    }
+
+    /// Encode one delta against node `u`'s schema: row key, own combo,
+    /// child separator keys and parent separator key.
+    #[allow(clippy::type_complexity)]
+    fn row_parts(
+        &self,
+        u: usize,
+        values: &[Value],
+        assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>,
+    ) -> Result<(Vec<u64>, K, Vec<Vec<u64>>, Vec<u64>)> {
+        let node = &self.nodes[u];
+        ensure!(
+            values.len() == node.col_types.len(),
+            "delta arity {} does not match relation arity {}",
+            values.len(),
+            node.col_types.len()
+        );
+        let rkey: Vec<u64> = values
+            .iter()
+            .zip(&node.col_types)
+            .map(|(v, &ty)| encode_value(v, ty))
+            .collect::<Result<_>>()?;
+        let mut own = K::empty(&self.layout);
+        for &(fi, col) in &node.owned {
+            let gid = assigners[&self.feature_names[fi]].gid(values[col]);
+            own = own.with_gid(fi, gid, &self.layout);
+        }
+        let child_keys: Vec<Vec<u64>> = node
+            .child_cols
+            .iter()
+            .map(|cols| cols.iter().map(|&c| rkey[c]).collect())
+            .collect();
+        let up_key: Vec<u64> = node.sep_cols.iter().map(|&c| rkey[c]).collect();
+        Ok((rkey, own, child_keys, up_key))
+    }
+
+    fn apply(
+        &mut self,
+        deltas: &[TupleDelta],
+        assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>,
+    ) -> Result<PatchStats> {
+        let n = self.nodes.len();
+        // Group deltas by node up front so unknown relations fail whole.
+        let mut per_node: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+        for (i, d) in deltas.iter().enumerate() {
+            let Some(&u) = self.rel_to_node.get(&d.relation) else {
+                bail!("delta references relation {:?} outside the join tree", d.relation);
+            };
+            ensure!(d.weight != 0.0, "delta with zero weight for {:?}", d.relation);
+            per_node[u].push(i);
+        }
+
+        let mut delta_msgs: Vec<Msg<K>> = (0..n).map(|_| FxHashMap::default()).collect();
+        let order = self.order.clone();
+        for &u in &order {
+            let children = self.nodes[u].children.clone();
+            let mut du: Msg<K> = FxHashMap::default();
+
+            // Phase B: propagate child message deltas through the key
+            // index (telescoping: earlier children new, later children
+            // old; each child's stored message is updated right after its
+            // delta has been consumed).
+            for (ci, &c) in children.iter().enumerate() {
+                let dm_c = std::mem::take(&mut delta_msgs[c]);
+                if dm_c.is_empty() {
+                    continue;
+                }
+                {
+                    let nodes = &self.nodes;
+                    let node_u = &nodes[u];
+                    for (key, dtable) in &dm_c {
+                        if dtable.is_empty() {
+                            continue;
+                        }
+                        let Some(rowkeys) = node_u.child_index[ci].get(key) else { continue };
+                        for rkey in rowkeys {
+                            let Some(row) = node_u.rows.get(rkey) else { continue };
+                            if let Some(combos) = contribution(
+                                nodes,
+                                &children,
+                                &row.own,
+                                row.w,
+                                &row.child_keys,
+                                Some((ci, dtable)),
+                            ) {
+                                let slot = du.entry(row.up_key.clone()).or_default();
+                                for (g, cw) in combos {
+                                    *slot.entry(g).or_insert(0.0) += cw;
+                                }
+                            }
+                        }
+                    }
+                }
+                merge_msg(&mut self.nodes[c].msg, dm_c);
+            }
+
+            // Phase A: this node's own inserts/deletes, against the
+            // now-updated child messages. Deletes are negative weights.
+            for &di in &per_node[u] {
+                let d = &deltas[di];
+                let (rkey, own, child_keys, up_key) = self
+                    .row_parts(u, &d.values, assigners)
+                    .with_context(|| format!("bad delta for relation {:?}", d.relation))?;
+                {
+                    let nodes = &self.nodes;
+                    if let Some(combos) =
+                        contribution(nodes, &children, &own, d.weight, &child_keys, None)
+                    {
+                        let slot = du.entry(up_key.clone()).or_default();
+                        for (g, cw) in combos {
+                            *slot.entry(g).or_insert(0.0) += cw;
+                        }
+                    }
+                }
+                let node = &mut self.nodes[u];
+                match node.rows.entry(rkey.clone()) {
+                    Entry::Occupied(mut e) => {
+                        let nw = e.get().w + d.weight;
+                        ensure!(
+                            nw >= 0.0,
+                            "retraction below zero multiplicity in {:?}",
+                            d.relation
+                        );
+                        if nw == 0.0 {
+                            let old = e.remove();
+                            for (i, ck) in old.child_keys.iter().enumerate() {
+                                if let Some(list) = node.child_index[i].get_mut(ck) {
+                                    list.retain(|k| k != &rkey);
+                                    if list.is_empty() {
+                                        node.child_index[i].remove(ck);
+                                    }
+                                }
+                            }
+                        } else {
+                            e.get_mut().w = nw;
+                        }
+                    }
+                    Entry::Vacant(e) => {
+                        ensure!(
+                            d.weight > 0.0,
+                            "delete of a tuple not present in {:?}",
+                            d.relation
+                        );
+                        e.insert(RowState {
+                            own,
+                            w: d.weight,
+                            up_key,
+                            child_keys: child_keys.clone(),
+                        });
+                        for (i, ck) in child_keys.iter().enumerate() {
+                            node.child_index[i].entry(ck.clone()).or_default().push(rkey.clone());
+                        }
+                    }
+                }
+            }
+
+            delta_msgs[u] = du;
+        }
+
+        // Patch the root grid, asserting the ℤ-ring non-negativity.
+        let dm_root = std::mem::take(&mut delta_msgs[self.root]);
+        let mut cells_touched = 0usize;
+        let mut mass_delta_abs = 0.0f64;
+        for (key, table) in dm_root {
+            cells_touched += table.len();
+            let empty = {
+                let slot = self.nodes[self.root].msg.entry(key.clone()).or_default();
+                for (g, dw) in table {
+                    mass_delta_abs += dw.abs();
+                    let v = slot.entry(g).or_insert(0.0);
+                    *v += dw;
+                    ensure!(
+                        *v >= 0.0,
+                        "incremental grid weight went negative at the root — the \
+                         ℤ-ring invariant does not hold (fractional tuple weights \
+                         drifted?); a full rebuild is required"
+                    );
+                }
+                slot.retain(|_, v| *v != 0.0);
+                slot.is_empty()
+            };
+            if empty {
+                self.nodes[self.root].msg.remove(&key);
+            }
+        }
+
+        Ok(PatchStats {
+            deltas: deltas.len(),
+            cells_touched,
+            mass_delta_abs,
+            grid_cells: self.n_cells(),
+        })
+    }
+
+    fn n_cells(&self) -> usize {
+        let empty: Vec<u64> = Vec::new();
+        self.nodes[self.root].msg.get(&empty).map(|t| t.len()).unwrap_or(0)
+    }
+
+    fn grid_table(&self) -> GridTable {
+        let empty: Vec<u64> = Vec::new();
+        let mut cells: Vec<(Vec<u32>, f64)> = self.nodes[self.root]
+            .msg
+            .get(&empty)
+            .map(|t| t.iter().map(|(g, &w)| (g.unpack(&self.layout), w)).collect())
+            .unwrap_or_default();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        GridTable { feature_names: self.feature_names.clone(), cells }
+    }
+}
+
+enum Inner {
+    Packed(State<u128>),
+    Generic(State<Vec<u32>>),
+}
+
+impl Clone for Inner {
+    fn clone(&self) -> Inner {
+        match self {
+            Inner::Packed(s) => Inner::Packed(s.clone()),
+            Inner::Generic(s) => Inner::Generic(s.clone()),
+        }
+    }
+}
+
+/// Persistent Step-3 FAQ state supporting `apply(deltas)` (see module
+/// docs). Cloneable, so [`super::IncrementalState`] snapshots are cheap
+/// copies of the retained messages.
+#[derive(Clone)]
+pub struct DeltaFaq {
+    inner: Inner,
+}
+
+impl DeltaFaq {
+    /// Build the persistent message state for `db` with the given Step-2
+    /// gid assigners (one per FEQ feature, keyed by attribute name — the
+    /// same contract as [`crate::faq::grid_weights`]). Chooses the packed
+    /// `u128` combo path when the gid bit layout fits 128 bits, the
+    /// generic `Vec<u32>` path otherwise.
+    pub fn init(
+        db: &Database,
+        feq: &Feq,
+        tree: &JoinTree,
+        assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>,
+    ) -> Result<DeltaFaq> {
+        for f in &feq.features {
+            if !assigners.contains_key(&f.attr) {
+                bail!("no gid assigner for feature {:?}", f.attr);
+            }
+        }
+        let layout = Layout::new(feq, assigners);
+        let inner = if layout.total_bits <= 128 {
+            Inner::Packed(State::<u128>::init(db, feq, tree, assigners, layout)?)
+        } else {
+            Inner::Generic(State::<Vec<u32>>::init(db, feq, tree, assigners, layout)?)
+        };
+        Ok(DeltaFaq { inner })
+    }
+
+    /// Apply one batch of tuple deltas, patching the retained messages and
+    /// the root grid. `assigners` must be the Step-2 models the state was
+    /// initialized with (a changed bit layout is rejected). On error the
+    /// state may be partially patched and must be re-initialized — the
+    /// planner treats any `apply` error as a rebuild trigger.
+    pub fn apply(
+        &mut self,
+        deltas: &[TupleDelta],
+        assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>,
+    ) -> Result<PatchStats> {
+        let (layout, names) = match &self.inner {
+            Inner::Packed(s) => (&s.layout, &s.feature_names),
+            Inner::Generic(s) => (&s.layout, &s.feature_names),
+        };
+        ensure!(names.len() == layout.shifts.len(), "corrupt layout");
+        for (name, &(_, width)) in names.iter().zip(&layout.shifts) {
+            let asg = assigners
+                .get(name)
+                .with_context(|| format!("no gid assigner for feature {name:?}"))?;
+            let kj = asg.n_gids().max(2) as u64;
+            let need = 64 - (kj - 1).leading_zeros().max(0);
+            ensure!(
+                need <= width,
+                "gid layout changed for feature {name:?} (Step-2 models moved); \
+                 the incremental state must be rebuilt"
+            );
+        }
+        match &mut self.inner {
+            Inner::Packed(s) => s.apply(deltas, assigners),
+            Inner::Generic(s) => s.apply(deltas, assigners),
+        }
+    }
+
+    /// The maintained sparse grid, in deterministic (sorted) cell order.
+    /// This snapshot is O(|G| log |G|) — already dominated by the Step-4
+    /// pass the planner runs on the same grid; incremental sorted-grid
+    /// maintenance is tracked with the Step-4 reuse item in ROADMAP.md.
+    pub fn grid_table(&self) -> GridTable {
+        match &self.inner {
+            Inner::Packed(s) => s.grid_table(),
+            Inner::Generic(s) => s.grid_table(),
+        }
+    }
+
+    /// Number of non-zero grid cells `|G|`.
+    pub fn n_cells(&self) -> usize {
+        match &self.inner {
+            Inner::Packed(s) => s.n_cells(),
+            Inner::Generic(s) => s.n_cells(),
+        }
+    }
+
+    /// Total grid mass (= weighted `|X|`).
+    pub fn mass(&self) -> f64 {
+        self.grid_table().cells.iter().map(|(_, w)| w).sum()
+    }
+
+    /// True when the packed `u128` combo path is active.
+    pub fn is_packed(&self) -> bool {
+        matches!(self.inner, Inner::Packed(_))
+    }
+}
+
+impl std::fmt::Debug for DeltaFaq {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeltaFaq")
+            .field("packed", &self.is_packed())
+            .field("grid_cells", &self.n_cells())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema};
+    use crate::faq::grid_weights;
+    use crate::query::Hypergraph;
+
+    /// Assigner mapping key -> key % n; `claimed` forces the generic path.
+    struct ModAssigner {
+        n: u32,
+        claimed: usize,
+    }
+    impl GidAssigner for ModAssigner {
+        fn gid(&self, v: Value) -> u32 {
+            let k = match v {
+                Value::Double(x) => (x * 2.0) as i64 as u64,
+                other => other.key_u64(),
+            };
+            (k % self.n as u64) as u32
+        }
+        fn n_gids(&self) -> usize {
+            self.claimed
+        }
+    }
+
+    fn assigners(n: u32, claimed: usize) -> FxHashMap<String, Box<dyn GidAssigner>> {
+        let mut m: FxHashMap<String, Box<dyn GidAssigner>> = FxHashMap::default();
+        for a in ["a", "b", "c"] {
+            m.insert(a.to_string(), Box::new(ModAssigner { n, claimed }));
+        }
+        m
+    }
+
+    /// fact(a, b) ⋈ dim(b, c).
+    fn setup() -> (Database, Feq, JoinTree) {
+        let mut fact =
+            Relation::new("fact", Schema::new(vec![Attr::cat("a", 8), Attr::cat("b", 8)]));
+        for (a, b) in [(0, 0), (1, 0), (2, 1), (3, 1), (4, 2)] {
+            fact.push_row(&[Value::Cat(a), Value::Cat(b)]);
+        }
+        let mut dim = Relation::new("dim", Schema::new(vec![Attr::cat("b", 8), Attr::cat("c", 8)]));
+        for (b, c) in [(0, 0), (0, 1), (1, 2), (2, 3)] {
+            dim.push_row(&[Value::Cat(b), Value::Cat(c)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(dim);
+        let feq = Feq::with_features(&["fact", "dim"], &["a", "b", "c"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        (db, feq, tree)
+    }
+
+    fn cells_map(gt: &GridTable) -> FxHashMap<Vec<u32>, u64> {
+        gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect()
+    }
+
+    #[test]
+    fn init_matches_from_scratch_both_paths() {
+        let (db, feq, tree) = setup();
+        for claimed in [3usize, 1 << 60] {
+            let asg = assigners(3, claimed);
+            let delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+            assert_eq!(delta.is_packed(), claimed == 3);
+            let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
+            assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
+        }
+    }
+
+    #[test]
+    fn inserts_and_deletes_track_rebuilds() {
+        let (mut db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+
+        // Insert into both relations, delete one existing fact tuple.
+        let batch = vec![
+            TupleDelta::insert("fact", vec![Value::Cat(5), Value::Cat(2)]),
+            TupleDelta::insert("dim", vec![Value::Cat(2), Value::Cat(5)]),
+            TupleDelta::delete("fact", vec![Value::Cat(0), Value::Cat(0)]),
+        ];
+        delta.apply(&batch, &asg).unwrap();
+
+        // Mirror on the database and rebuild from scratch.
+        db.get_mut("fact").unwrap().push_row(&[Value::Cat(5), Value::Cat(2)]);
+        db.get_mut("dim").unwrap().push_row(&[Value::Cat(2), Value::Cat(5)]);
+        assert!(db.get_mut("fact").unwrap().retract_row(&[Value::Cat(0), Value::Cat(0)], 1.0));
+        let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
+        assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
+    }
+
+    #[test]
+    fn insert_then_delete_cancels_exactly() {
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        let before = cells_map(&delta.grid_table());
+        let batch = vec![
+            TupleDelta::insert("fact", vec![Value::Cat(7), Value::Cat(1)]),
+            TupleDelta::delete("fact", vec![Value::Cat(7), Value::Cat(1)]),
+        ];
+        delta.apply(&batch, &asg).unwrap();
+        assert_eq!(cells_map(&delta.grid_table()), before);
+    }
+
+    #[test]
+    fn dangling_insert_joins_later() {
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        // b=5 has no dim rows: the fact insert is dangling for now.
+        let mass0 = delta.mass();
+        delta.apply(&[TupleDelta::insert("fact", vec![Value::Cat(1), Value::Cat(5)])], &asg)
+            .unwrap();
+        assert_eq!(delta.mass(), mass0);
+        // Now a dim row arrives for b=5 and the pending fact row joins.
+        delta.apply(&[TupleDelta::insert("dim", vec![Value::Cat(5), Value::Cat(0)])], &asg)
+            .unwrap();
+        assert_eq!(delta.mass(), mass0 + 1.0);
+    }
+
+    #[test]
+    fn deleting_missing_tuple_is_an_error() {
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        let err = delta
+            .apply(&[TupleDelta::delete("fact", vec![Value::Cat(6), Value::Cat(6)])], &asg)
+            .unwrap_err();
+        assert!(err.to_string().contains("not present"));
+    }
+
+    #[test]
+    fn unknown_relation_and_bad_arity_rejected() {
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        assert!(delta
+            .apply(&[TupleDelta::insert("nope", vec![Value::Cat(0)])], &asg)
+            .is_err());
+        assert!(delta
+            .apply(&[TupleDelta::insert("fact", vec![Value::Cat(0)])], &asg)
+            .is_err());
+    }
+
+    #[test]
+    fn changed_gid_layout_is_rejected() {
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        // Wider layout than init: must be refused, not silently corrupted.
+        let wide = assigners(3, 4000);
+        let err = delta
+            .apply(&[TupleDelta::insert("fact", vec![Value::Cat(0), Value::Cat(0)])], &wide)
+            .unwrap_err();
+        assert!(err.to_string().contains("layout changed"));
+    }
+
+    #[test]
+    fn weighted_deltas_accumulate() {
+        let (mut db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        let batch = vec![
+            TupleDelta { relation: "fact".into(), values: vec![Value::Cat(0), Value::Cat(0)], weight: 3.0 },
+            TupleDelta { relation: "fact".into(), values: vec![Value::Cat(0), Value::Cat(0)], weight: -2.0 },
+        ];
+        delta.apply(&batch, &asg).unwrap();
+        db.get_mut("fact").unwrap().push_row(&[Value::Cat(0), Value::Cat(0)]);
+        let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
+        assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
+    }
+}

@@ -1,0 +1,554 @@
+//! Mergeable per-attribute marginal sketches and the Step-2 drift trigger.
+//!
+//! The planner keeps Step-2 gid maps **stable** across patches (stable
+//! maps are what makes the Step-3 delta exact), so it needs a cheap signal
+//! for *when* a subspace's distribution has moved enough that the frozen
+//! per-subspace clustering is stale. Exact join marginals would require a
+//! downward delta pass; instead each feature gets a sketch of its owning
+//! relation's **base** marginal. This is a heuristic, not a bound: a
+//! join marginal usually moves with its base marginal, but a shift in
+//! join-*key* fanout (new fact tuples landing on previously-light
+//! dimension rows) moves join marginals while every base sketch stays
+//! put. That blind spot is covered by the planner's join-churn backstop
+//! ([`super::PlannerOpts::max_join_churn`]), which watches the exact
+//! Σ|Δweight| the Step-3 delta reports at the grid root.
+//!
+//! * categorical / integer features: an exact counting multiset
+//!   (key → weight), deletions subtract;
+//! * continuous features: a sorted-run summary — deltas buffer, runs are
+//!   compacted by merging, so updates are O(1) amortized and reads are a
+//!   k-way merge;
+//! * both are **mergeable** (shard sketches combine associatively), the
+//!   property streaming/partitioned ingest needs.
+//!
+//! Drift is measured between the current sketch and the baseline captured
+//! at the last Step-2 solve: total-variation distance for categorical
+//! features, range-normalized 1-Wasserstein (area between CDFs) for
+//! continuous ones — both in `[0, 1]`, compared against a single
+//! configurable threshold.
+
+use crate::data::{AttrType, Database, Value};
+use crate::query::Feq;
+use crate::util::FxHashMap;
+use anyhow::{Context, Result};
+
+use super::TupleDelta;
+
+/// Buffered continuous deltas before a compaction.
+const COMPACT_BUFFER: usize = 1024;
+/// Sorted runs kept before a full merge.
+const MAX_RUNS: usize = 6;
+
+/// Exact counting multiset over discrete keys.
+#[derive(Clone, Debug, Default)]
+pub struct CatSketch {
+    counts: FxHashMap<u64, f64>,
+    total: f64,
+    /// Σ|w| of updates since the last [`CatSketch::reset_changed`].
+    changed: f64,
+}
+
+impl CatSketch {
+    /// Add (or, with negative `w`, retract) weight for a key.
+    pub fn update(&mut self, key: u64, w: f64) {
+        let v = self.counts.entry(key).or_insert(0.0);
+        *v += w;
+        if *v == 0.0 {
+            self.counts.remove(&key);
+        }
+        self.total += w;
+        self.changed += w.abs();
+    }
+
+    /// Total mass.
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Total |weight| updated since the last baseline capture.
+    pub fn changed(&self) -> f64 {
+        self.changed
+    }
+
+    /// Mark the current state as the drift reference point.
+    pub fn reset_changed(&mut self) {
+        self.changed = 0.0;
+    }
+
+    /// Merge another sketch in (mergeability).
+    pub fn merge(&mut self, other: &CatSketch) {
+        for (&k, &w) in &other.counts {
+            self.update(k, w);
+        }
+    }
+
+    /// Total-variation distance `½·Σ|p − q|` between the normalized
+    /// distributions, in `[0, 1]`.
+    pub fn tv_distance(&self, other: &CatSketch) -> f64 {
+        if self.total <= 0.0 || other.total <= 0.0 {
+            return if self.total == other.total { 0.0 } else { 1.0 };
+        }
+        let mut acc = 0.0;
+        for (k, &w) in &self.counts {
+            let q = other.counts.get(k).copied().unwrap_or(0.0);
+            acc += (w / self.total - q / other.total).abs();
+        }
+        for (k, &q) in &other.counts {
+            if !self.counts.contains_key(k) {
+                acc += (q / other.total).abs();
+            }
+        }
+        (0.5 * acc).min(1.0)
+    }
+}
+
+/// Sorted-run summary of a continuous marginal.
+#[derive(Clone, Debug, Default)]
+pub struct ContSketch {
+    /// Sorted `(value, weight)` runs (weights may be negative mid-stream;
+    /// retraction cancels on collapse).
+    runs: Vec<Vec<(f64, f64)>>,
+    buffer: Vec<(f64, f64)>,
+    total: f64,
+    /// Σ|w| of updates since the last [`ContSketch::reset_changed`].
+    changed: f64,
+}
+
+impl ContSketch {
+    /// Add (or retract) weight at a value.
+    pub fn update(&mut self, value: f64, w: f64) {
+        self.buffer.push((value, w));
+        self.total += w;
+        self.changed += w.abs();
+        if self.buffer.len() >= COMPACT_BUFFER {
+            self.compact();
+        }
+    }
+
+    /// Total mass.
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Total |weight| updated since the last baseline capture.
+    pub fn changed(&self) -> f64 {
+        self.changed
+    }
+
+    /// Mark the current state as the drift reference point.
+    pub fn reset_changed(&mut self) {
+        self.changed = 0.0;
+    }
+
+    fn compact(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let mut run = std::mem::take(&mut self.buffer);
+        run.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite feature values"));
+        self.runs.push(coalesce(run));
+        if self.runs.len() > MAX_RUNS {
+            let all = std::mem::take(&mut self.runs);
+            self.runs.push(merge_runs(all));
+        }
+    }
+
+    /// Merge another sketch in (mergeability). Counts toward `changed`,
+    /// keeping the drift upper bound conservative.
+    pub fn merge(&mut self, other: &ContSketch) {
+        for run in &other.runs {
+            for &(v, w) in run {
+                self.buffer.push((v, w));
+                self.total += w;
+                self.changed += w.abs();
+            }
+        }
+        for &(v, w) in &other.buffer {
+            self.buffer.push((v, w));
+            self.total += w;
+            self.changed += w.abs();
+        }
+        if self.buffer.len() >= COMPACT_BUFFER {
+            self.compact();
+        }
+    }
+
+    /// Fully merged `(value, weight)` pairs, ascending, zero and negative
+    /// residues dropped.
+    pub fn collapsed(&self) -> Vec<(f64, f64)> {
+        let mut all: Vec<Vec<(f64, f64)>> = self.runs.clone();
+        if !self.buffer.is_empty() {
+            let mut b = self.buffer.clone();
+            b.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite feature values"));
+            all.push(b);
+        }
+        merge_runs(all).into_iter().filter(|&(_, w)| w > 0.0).collect()
+    }
+
+    /// Range-normalized 1-Wasserstein distance between the normalized
+    /// distributions: `∫|F_p − F_q| / span`, in `[0, 1]`.
+    pub fn w1_distance(&self, other: &ContSketch) -> f64 {
+        let a = self.collapsed();
+        let b = other.collapsed();
+        let ta: f64 = a.iter().map(|(_, w)| w).sum();
+        let tb: f64 = b.iter().map(|(_, w)| w).sum();
+        if ta <= 0.0 || tb <= 0.0 {
+            return if ta == tb { 0.0 } else { 1.0 };
+        }
+        let lo = match (a.first(), b.first()) {
+            (Some(x), Some(y)) => x.0.min(y.0),
+            _ => return 1.0,
+        };
+        let hi = match (a.last(), b.last()) {
+            (Some(x), Some(y)) => x.0.max(y.0),
+            _ => return 1.0,
+        };
+        let span = hi - lo;
+        if span <= 0.0 {
+            return 0.0; // both concentrated on the same single point
+        }
+        // Walk the merged value axis accumulating |F_a − F_b|·gap.
+        let (mut i, mut j) = (0usize, 0usize);
+        let (mut ca, mut cb) = (0.0f64, 0.0f64);
+        let mut prev = lo;
+        let mut area = 0.0f64;
+        while i < a.len() || j < b.len() {
+            let va = a.get(i).map(|p| p.0).unwrap_or(f64::INFINITY);
+            let vb = b.get(j).map(|p| p.0).unwrap_or(f64::INFINITY);
+            let v = va.min(vb);
+            area += (ca / ta - cb / tb).abs() * (v - prev);
+            prev = v;
+            if va <= vb {
+                ca += a[i].1;
+                i += 1;
+            }
+            if vb <= va {
+                cb += b[j].1;
+                j += 1;
+            }
+        }
+        (area / span).min(1.0)
+    }
+}
+
+/// Sum weights of equal consecutive values in a sorted run.
+fn coalesce(run: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(run.len());
+    for (v, w) in run {
+        match out.last_mut() {
+            Some(last) if last.0 == v => last.1 += w,
+            _ => out.push((v, w)),
+        }
+    }
+    out.retain(|&(_, w)| w != 0.0);
+    out
+}
+
+/// K-way merge of sorted runs into one coalesced run.
+fn merge_runs(mut runs: Vec<Vec<(f64, f64)>>) -> Vec<(f64, f64)> {
+    match runs.len() {
+        0 => Vec::new(),
+        1 => coalesce(runs.pop().expect("one run")),
+        _ => {
+            // Simple pairwise fold — run counts are tiny (≤ MAX_RUNS + 1).
+            let mut acc = runs.pop().expect("non-empty");
+            while let Some(run) = runs.pop() {
+                let mut merged = Vec::with_capacity(acc.len() + run.len());
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < acc.len() || j < run.len() {
+                    let va = acc.get(i).map(|p| p.0).unwrap_or(f64::INFINITY);
+                    let vb = run.get(j).map(|p| p.0).unwrap_or(f64::INFINITY);
+                    if va <= vb {
+                        merged.push(acc[i]);
+                        i += 1;
+                    } else {
+                        merged.push(run[j]);
+                        j += 1;
+                    }
+                }
+                acc = merged;
+            }
+            coalesce(acc)
+        }
+    }
+}
+
+/// One tracked feature's sketch pair (current vs. Step-2 baseline).
+#[derive(Clone, Debug)]
+enum Sketch {
+    Cat { current: CatSketch, baseline: CatSketch },
+    Cont { current: ContSketch, baseline: ContSketch },
+}
+
+impl Sketch {
+    fn drift(&self) -> f64 {
+        match self {
+            Sketch::Cat { current, baseline } => current.tv_distance(baseline),
+            Sketch::Cont { current, baseline } => current.w1_distance(baseline),
+        }
+    }
+
+    /// Cheap upper bound on [`Sketch::drift`], O(1): if `D = Σ|w|` of
+    /// updates since the baseline and `T` is the current mass, both TV
+    /// and the CDF sup-distance (hence normalized W₁) are ≤ `D / T`. The
+    /// tracker skips the exact O(support) distance while this bound is
+    /// under the threshold, keeping small-batch drift checks O(batch).
+    fn drift_bound(&self) -> f64 {
+        let (changed, total) = match self {
+            Sketch::Cat { current, .. } => (current.changed(), current.total()),
+            Sketch::Cont { current, .. } => (current.changed(), current.total()),
+        };
+        if changed == 0.0 {
+            0.0
+        } else if total > 0.0 {
+            changed / total
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn rebaseline(&mut self) {
+        match self {
+            Sketch::Cat { current, baseline } => {
+                current.reset_changed();
+                *baseline = current.clone();
+            }
+            Sketch::Cont { current, baseline } => {
+                current.reset_changed();
+                *baseline = current.clone();
+            }
+        }
+    }
+}
+
+/// Per-feature marginal sketches with the drift trigger (see module docs).
+#[derive(Clone, Debug)]
+pub struct MarginalTracker {
+    /// (feature name, owning relation, column index) per tracked feature.
+    feats: Vec<(String, String, usize)>,
+    sketches: Vec<Sketch>,
+}
+
+impl MarginalTracker {
+    /// Seed sketches from the current base relations (one pass over each
+    /// feature's owning relation) and capture them as the baseline.
+    pub fn new(db: &Database, feq: &Feq) -> Result<MarginalTracker> {
+        let mut feats = Vec::with_capacity(feq.features.len());
+        let mut sketches = Vec::with_capacity(feq.features.len());
+        for f in &feq.features {
+            let owner = feq
+                .owner_of(db, &f.attr)
+                .with_context(|| format!("feature {:?} has no owner", f.attr))?;
+            let rel = db.get(&feq.relations[owner]).expect("owner exists");
+            let col = rel.schema.index_of(&f.attr).expect("owner contains attr");
+            let sketch = match rel.schema.attr(col).ty {
+                AttrType::Double | AttrType::Int => {
+                    let mut s = ContSketch::default();
+                    for row in 0..rel.n_rows() {
+                        let w = rel.weight(row);
+                        if w != 0.0 {
+                            s.update(rel.value(row, col).as_f64(), w);
+                        }
+                    }
+                    s.reset_changed(); // seeding IS the baseline
+                    Sketch::Cont { baseline: s.clone(), current: s }
+                }
+                AttrType::Cat => {
+                    let mut s = CatSketch::default();
+                    for row in 0..rel.n_rows() {
+                        let w = rel.weight(row);
+                        if w != 0.0 {
+                            s.update(rel.col(col).key_u64(row), w);
+                        }
+                    }
+                    s.reset_changed();
+                    Sketch::Cat { baseline: s.clone(), current: s }
+                }
+            };
+            feats.push((f.attr.clone(), rel.name.clone(), col));
+            sketches.push(sketch);
+        }
+        Ok(MarginalTracker { feats, sketches })
+    }
+
+    /// Feed one tuple delta into every sketch of a feature the delta's
+    /// relation owns. Malformed deltas are ignored here — validation is
+    /// the Step-3 engine's job.
+    pub fn apply(&mut self, delta: &TupleDelta) {
+        for ((_, rel, col), sketch) in self.feats.iter().zip(self.sketches.iter_mut()) {
+            if rel != &delta.relation || *col >= delta.values.len() {
+                continue;
+            }
+            let v = delta.values[*col];
+            match sketch {
+                Sketch::Cont { current, .. } => current.update(v.as_f64(), delta.weight),
+                Sketch::Cat { current, .. } => match v {
+                    Value::Double(_) => {}
+                    other => current.update(other.key_u64(), delta.weight),
+                },
+            }
+        }
+    }
+
+    /// Largest per-feature drift and the feature carrying it.
+    pub fn max_drift(&self) -> Option<(&str, f64)> {
+        self.feats
+            .iter()
+            .zip(&self.sketches)
+            .map(|((name, _, _), s)| (name.as_str(), s.drift()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).expect("drift is finite"))
+    }
+
+    /// Features whose drift exceeds `threshold`, with their drifts. The
+    /// exact O(support) distance is only computed for features whose
+    /// cheap mass-change bound ([`Sketch::drift_bound`]) crosses the
+    /// threshold, so steady-state small batches cost O(1) per feature.
+    pub fn drifted(&self, threshold: f64) -> Vec<(String, f64)> {
+        self.feats
+            .iter()
+            .zip(&self.sketches)
+            .filter_map(|((name, _, _), s)| {
+                if s.drift_bound() <= threshold {
+                    return None;
+                }
+                let d = s.drift();
+                (d > threshold).then(|| (name.clone(), d))
+            })
+            .collect()
+    }
+
+    /// Capture the current sketches as the new baseline (called after a
+    /// Step-2 re-solve).
+    pub fn rebaseline(&mut self) {
+        for s in &mut self.sketches {
+            s.rebaseline();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::assert_close;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn cat_sketch_counts_and_tv() {
+        let mut a = CatSketch::default();
+        let mut b = CatSketch::default();
+        for k in 0..4u64 {
+            a.update(k, 1.0);
+            b.update(k, 1.0);
+        }
+        assert_eq!(a.tv_distance(&b), 0.0);
+        // Move half the mass of key 0 to key 9.
+        b.update(0, -1.0);
+        b.update(9, 1.0);
+        assert_close(a.tv_distance(&b), 0.25, 1e-12);
+        // Retraction to zero removes the key entirely.
+        let mut c = CatSketch::default();
+        c.update(5, 2.0);
+        c.update(5, -2.0);
+        assert_eq!(c.total(), 0.0);
+        assert_eq!(c.tv_distance(&CatSketch::default()), 0.0);
+    }
+
+    #[test]
+    fn cont_sketch_collapse_survives_compaction() {
+        let mut s = ContSketch::default();
+        let mut rng = SplitMix64::new(3);
+        let mut expect: FxHashMap<u64, f64> = FxHashMap::default();
+        for _ in 0..(COMPACT_BUFFER * 3 + 17) {
+            let v = (rng.below(50) as f64) * 0.5;
+            s.update(v, 1.0);
+            *expect.entry(v.to_bits()).or_insert(0.0) += 1.0;
+        }
+        let collapsed = s.collapsed();
+        assert_eq!(collapsed.len(), expect.len());
+        for (v, w) in collapsed {
+            assert_close(expect[&v.to_bits()], w, 1e-9);
+        }
+        // Values ascend.
+        let c = s.collapsed();
+        assert!(c.windows(2).all(|p| p[0].0 < p[1].0));
+    }
+
+    #[test]
+    fn w1_distance_tracks_shift() {
+        let mk = |offset: f64| {
+            let mut s = ContSketch::default();
+            for i in 0..100 {
+                s.update(i as f64 + offset, 1.0);
+            }
+            s
+        };
+        let base = mk(0.0);
+        assert_eq!(base.w1_distance(&base), 0.0);
+        let small = base.w1_distance(&mk(1.0));
+        let large = base.w1_distance(&mk(30.0));
+        assert!(small > 0.0 && small < large, "small {small} large {large}");
+        assert!(large <= 1.0);
+    }
+
+    #[test]
+    fn sketches_are_mergeable() {
+        let mut rng = SplitMix64::new(9);
+        let mut whole_c = CatSketch::default();
+        let (mut sa, mut sb) = (CatSketch::default(), CatSketch::default());
+        let mut whole_x = ContSketch::default();
+        let (mut xa, mut xb) = (ContSketch::default(), ContSketch::default());
+        for i in 0..500 {
+            let k = rng.below(12);
+            let v = rng.below(40) as f64 * 0.25;
+            whole_c.update(k, 1.0);
+            whole_x.update(v, 1.0);
+            if i % 2 == 0 {
+                sa.update(k, 1.0);
+                xa.update(v, 1.0);
+            } else {
+                sb.update(k, 1.0);
+                xb.update(v, 1.0);
+            }
+        }
+        sa.merge(&sb);
+        xa.merge(&xb);
+        assert_eq!(sa.tv_distance(&whole_c), 0.0);
+        assert_close(xa.w1_distance(&whole_x), 0.0, 1e-12);
+        assert_close(xa.total(), whole_x.total(), 1e-9);
+    }
+
+    #[test]
+    fn tracker_triggers_on_drift_and_rebaselines() {
+        use crate::data::{Attr, Relation, Schema};
+        let mut fact = Relation::new(
+            "fact",
+            Schema::new(vec![Attr::cat("c", 8), Attr::double("x")]),
+        );
+        for i in 0..40u32 {
+            fact.push_row(&[Value::Cat(i % 4), Value::Double((i % 10) as f64)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        let feq = Feq::with_features(&["fact"], &["c", "x"]);
+        let mut tracker = MarginalTracker::new(&db, &feq).unwrap();
+        assert!(tracker.drifted(0.01).is_empty());
+
+        // Pour mass onto a brand-new category and a far-away value.
+        for _ in 0..60 {
+            tracker.apply(&TupleDelta::insert(
+                "fact",
+                vec![Value::Cat(7), Value::Double(500.0)],
+            ));
+        }
+        let drifted = tracker.drifted(0.2);
+        assert!(
+            drifted.iter().any(|(n, _)| n == "c"),
+            "categorical drift not detected: {drifted:?}"
+        );
+        let (_, dmax) = tracker.max_drift().unwrap();
+        assert!(dmax > 0.2);
+
+        tracker.rebaseline();
+        assert!(tracker.drifted(0.01).is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Incremental coreset maintenance: turn the coordinator's "recompute
+//! everything" loop into true delta maintenance.
+//!
+//! The streaming [`crate::coordinator`] makes re-clustering affordable by
+//! re-running all of Rk-means in `Õ(|D|)` per batch — but a batch of
+//! `b ≪ |D|` tuple inserts/deletes perturbs only `O(b)` join-tree
+//! messages and marginal entries, so even `Õ(|D|)` per batch is the wrong
+//! asymptotic at production ingest rates. This subsystem maintains the
+//! pipeline's state under updates instead:
+//!
+//! * [`deltafaq`] — the paper's Step 3 (Eq. 4) is a **counting** FAQ, and
+//!   counts live in the ring ℤ. In a ring every element has an additive
+//!   inverse, so a *deletion is just an insert with negative weight*: the
+//!   same message-passing algebra that sums tuple contributions also
+//!   cancels them exactly. [`DeltaFaq`] keeps every InsideOut message
+//!   alive (plus a separator-key index per node) and propagates only the
+//!   affected keys up the join tree, yielding a patched sparse grid whose
+//!   zero cells are dropped and whose weights are asserted non-negative
+//!   at the root. On integer-weighted databases the patched grid is
+//!   **bitwise identical** to a from-scratch `grid_weights` pass.
+//! * [`marginal`] — mergeable per-attribute sketches (exact counting
+//!   multiset for categorical features, a sorted-run summary for
+//!   continuous ones) with a Wasserstein/TV drift trigger. Step-2 gid
+//!   maps stay frozen — which is what keeps the Step-3 delta exact —
+//!   until a subspace's marginal has genuinely moved.
+//! * [`planner`] — decides per batch between *patch* (Step-3 delta +
+//!   Step-4 warm start from the previous centroids) and *rebuild* (the
+//!   full pipeline), records the decision and estimated savings in
+//!   [`crate::metrics::Metrics`], and exposes the [`IncrementalState`]
+//!   snapshot/restore API so serving stays versioned.
+//!
+//! The deletion-as-negative-weight trick and the mergeable-summary shape
+//! follow the relational-coreset line (Chen et al. 2022, Moseley et al.
+//! 2020 — see PAPERS.md); the message-passing substrate is the paper's
+//! own §4.3 FAQ.
+
+pub mod deltafaq;
+pub mod marginal;
+pub mod planner;
+
+pub use deltafaq::{DeltaFaq, PatchStats};
+pub use marginal::{CatSketch, ContSketch, MarginalTracker};
+pub use planner::{
+    IncrementalEngine, IncrementalState, PlanDecision, PlannerOpts, RebuildReason,
+};
+
+use crate::data::{Database, Value};
+use anyhow::{ensure, Result};
+
+/// One tuple insert (positive `weight`) or delete (negative `weight`)
+/// against a base relation. The Step-3 FAQ is a ring-ℤ aggregate, so both
+/// directions flow through the identical delta algebra.
+#[derive(Clone, Debug)]
+pub struct TupleDelta {
+    /// Target base relation.
+    pub relation: String,
+    /// Full tuple values in schema order.
+    pub values: Vec<Value>,
+    /// Signed multiplicity: `+1` insert, `-1` delete, `±w` weighted.
+    pub weight: f64,
+}
+
+impl TupleDelta {
+    /// A unit-weight insert.
+    pub fn insert(relation: &str, values: Vec<Value>) -> TupleDelta {
+        TupleDelta { relation: relation.to_string(), values, weight: 1.0 }
+    }
+
+    /// A unit-weight delete (negative-weight insert).
+    pub fn delete(relation: &str, values: Vec<Value>) -> TupleDelta {
+        TupleDelta { relation: relation.to_string(), values, weight: -1.0 }
+    }
+
+    /// True for deletions.
+    pub fn is_delete(&self) -> bool {
+        self.weight < 0.0
+    }
+}
+
+/// Mirror a delta batch onto the base relations themselves: inserts are
+/// appended, deletes retract multiplicity via
+/// [`Relation::retract_row`](crate::data::Relation::retract_row). Keeping
+/// the database in lock-step with the delta state is what lets the
+/// planner fall back to a full rebuild at any batch boundary.
+pub fn apply_to_db(db: &mut Database, deltas: &[TupleDelta]) -> Result<()> {
+    for d in deltas {
+        let rel = match db.get_mut(&d.relation) {
+            Some(rel) => rel,
+            None => anyhow::bail!("delta references unknown relation {:?}", d.relation),
+        };
+        if d.weight > 0.0 {
+            if d.weight == 1.0 {
+                rel.push_row(&d.values);
+            } else {
+                rel.push_row_weighted(&d.values, d.weight);
+            }
+        } else {
+            ensure!(
+                rel.retract_row(&d.values, -d.weight),
+                "cannot retract {:?} from {:?}: no matching tuple with enough multiplicity",
+                d.values,
+                d.relation
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema};
+
+    #[test]
+    fn apply_to_db_inserts_and_retracts() {
+        let mut rel =
+            Relation::new("t", Schema::new(vec![Attr::cat("a", 4), Attr::double("x")]));
+        rel.push_row(&[Value::Cat(0), Value::Double(1.0)]);
+        let mut db = Database::new();
+        db.add(rel);
+
+        let deltas = vec![
+            TupleDelta::insert("t", vec![Value::Cat(1), Value::Double(2.0)]),
+            TupleDelta { relation: "t".into(), values: vec![Value::Cat(2), Value::Double(3.0)], weight: 2.0 },
+            TupleDelta::delete("t", vec![Value::Cat(0), Value::Double(1.0)]),
+        ];
+        apply_to_db(&mut db, &deltas).unwrap();
+        let t = db.get("t").unwrap();
+        assert_eq!(t.n_rows(), 3);
+        assert_eq!(t.weight(0), 0.0); // retracted in place
+        assert_eq!(t.weight(2), 2.0);
+
+        // Deleting something that is not there is an error.
+        let bad = vec![TupleDelta::delete("t", vec![Value::Cat(3), Value::Double(9.0)])];
+        assert!(apply_to_db(&mut db, &bad).is_err());
+        assert!(apply_to_db(&mut db, &[TupleDelta::insert("nope", vec![])]).is_err());
+    }
+
+    #[test]
+    fn delta_constructors() {
+        let i = TupleDelta::insert("r", vec![Value::Cat(0)]);
+        let d = TupleDelta::delete("r", vec![Value::Cat(0)]);
+        assert!(!i.is_delete());
+        assert!(d.is_delete());
+        assert_eq!(i.weight, 1.0);
+        assert_eq!(d.weight, -1.0);
+    }
+}

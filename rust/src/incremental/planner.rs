@@ -1,0 +1,593 @@
+//! The patch-vs-rebuild planner: per delta batch, decide between the
+//! cheap path (Step-3 delta + Step-4 warm start) and the full pipeline.
+//!
+//! **Patch** keeps the Step-2 models (and hence gid maps) frozen, feeds
+//! the batch through [`DeltaFaq::apply`], converts the patched grid with
+//! [`crate::coreset::sparse_from_table`], and re-clusters with
+//! [`sparse_lloyd_warm_with`] seeded from the previous version's
+//! centroids — typically a couple of Lloyd iterations. Steps 1 and 2 are
+//! skipped entirely, which is where the `Õ(|D|)`-per-batch cost of the
+//! recompute loop goes away.
+//!
+//! **Rebuild** is the existing full pipeline
+//! ([`crate::rkmeans::rkmeans_with_tree`]) followed by re-initializing the
+//! delta state and re-baselining the marginal sketches. It triggers when:
+//! * a marginal sketch drifts past [`PlannerOpts::drift_threshold`]
+//!   (frozen Step-2 models have gone stale),
+//! * the batch exceeds [`PlannerOpts::max_patch_fraction`]·|D| (the delta
+//!   pass would touch most of the tree anyway),
+//! * [`PlannerOpts::rebuild_every`] batches have been patched in a row
+//!   (bounds FP drift on non-integer weights),
+//! * cumulative join-level churn (Σ|Δweight| over patched cells, an
+//!   exact byproduct of the Step-3 delta) passes
+//!   [`PlannerOpts::max_join_churn`]·mass — the backstop for join-key
+//!   fanout drift the base-table sketches cannot see, or
+//! * the patch itself fails (e.g. the ℤ-ring invariant is violated).
+//!
+//! Every decision and its cost is recorded in [`Metrics`]
+//! (`incremental.*`), including an estimated per-batch saving against the
+//! last observed rebuild time.
+
+use crate::cluster::{sparse_lloyd_warm_with, CentroidCoord, EngineOpts, LloydConfig};
+use crate::coreset::{sparse_from_table, SubspaceModel};
+use crate::data::Database;
+use crate::faq::GidAssigner;
+use crate::metrics::Metrics;
+use crate::query::{Feq, Hypergraph, JoinTree};
+use crate::rkmeans::{rkmeans_with_tree, RkConfig, RkResult, StepTimings};
+use crate::util::FxHashMap;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{DeltaFaq, MarginalTracker, TupleDelta};
+
+/// Planner thresholds.
+#[derive(Clone, Debug)]
+pub struct PlannerOpts {
+    /// Rebuild when any feature's marginal sketch drifts past this
+    /// (TV distance for categorical, range-normalized W₁ for continuous).
+    pub drift_threshold: f64,
+    /// Rebuild when `|batch| > max_patch_fraction · |D|`.
+    pub max_patch_fraction: f64,
+    /// Force a rebuild after this many consecutive patches (0 = never).
+    pub rebuild_every: usize,
+    /// Rebuild when the cumulative join-level churn since the last
+    /// rebuild — Σ|Δweight| over patched grid cells, reported exactly by
+    /// the Step-3 delta — exceeds this fraction of the grid mass. This
+    /// backstops the base-table sketches, which cannot see join-*key*
+    /// fanout shifts (see [`super::marginal`]).
+    pub max_join_churn: f64,
+}
+
+impl Default for PlannerOpts {
+    fn default() -> Self {
+        PlannerOpts {
+            drift_threshold: 0.15,
+            max_patch_fraction: 0.05,
+            rebuild_every: 0,
+            max_join_churn: 0.5,
+        }
+    }
+}
+
+/// Why a batch was (or was not) patched.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanDecision {
+    /// Step-3 delta + Step-4 warm start.
+    Patched,
+    /// Full pipeline rebuild, and why.
+    Rebuilt(RebuildReason),
+}
+
+/// Rebuild triggers (see module docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RebuildReason {
+    /// First build of the engine.
+    Init,
+    /// A marginal sketch drifted past the threshold (feature name).
+    Drift(String),
+    /// The batch was too large relative to `|D|`.
+    BatchTooLarge,
+    /// The periodic `rebuild_every` schedule fired.
+    Schedule,
+    /// Cumulative join-level churn passed `max_join_churn`·mass.
+    JoinChurn,
+    /// The patch path failed (error text); state was re-initialized.
+    PatchFailed(String),
+}
+
+/// Snapshot of everything the serving layer needs to answer queries at a
+/// version — and everything the engine needs to keep patching from it.
+/// Cloneable, so snapshots taken while patches continue stay consistent;
+/// [`IncrementalEngine::restore`] rolls the engine back to one.
+#[derive(Clone)]
+pub struct IncrementalState {
+    /// Monotonically increasing state version (bumped per batch).
+    pub version: u64,
+    /// Frozen Step-2 models (gid maps stable across patches).
+    pub models: Vec<SubspaceModel>,
+    /// Persistent Step-3 message state.
+    pub delta: DeltaFaq,
+    /// Marginal sketches + baselines for the drift trigger.
+    pub tracker: MarginalTracker,
+    /// Step-4 centroids of this version (the warm start for the next).
+    pub centroids: Vec<Vec<CentroidCoord>>,
+    /// The clustering result published at this version (shared: handed
+    /// out per batch without deep-copying models/centroids).
+    pub result: Arc<RkResult>,
+}
+
+/// The incremental maintenance engine the coordinator drives (see module
+/// docs for the decision procedure).
+pub struct IncrementalEngine {
+    feq: Feq,
+    tree: JoinTree,
+    rk: RkConfig,
+    opts: PlannerOpts,
+    metrics: Metrics,
+    state: IncrementalState,
+    patches_since_rebuild: usize,
+    /// Σ|Δweight| over patched grid cells since the last rebuild.
+    join_churn: f64,
+    /// Seconds of the last observed rebuild (savings estimate).
+    last_rebuild_s: f64,
+}
+
+fn assigner_map(models: &[SubspaceModel]) -> FxHashMap<String, Box<dyn GidAssigner + '_>> {
+    let mut m: FxHashMap<String, Box<dyn GidAssigner + '_>> = FxHashMap::default();
+    for model in models {
+        m.insert(model.name.clone(), Box::new(model));
+    }
+    m
+}
+
+impl IncrementalEngine {
+    /// Build the engine with an initial full rebuild. Fails when the FEQ
+    /// is invalid or cyclic (the caller then falls back to the
+    /// recompute-everything loop).
+    pub fn new(
+        db: &Database,
+        feq: Feq,
+        rk: RkConfig,
+        opts: PlannerOpts,
+        metrics: Metrics,
+    ) -> Result<IncrementalEngine> {
+        feq.validate(db)?;
+        let tree = Hypergraph::from_feq(db, &feq)
+            .join_tree()
+            .context("incremental maintenance requires an acyclic FEQ")?;
+        let (state, elapsed_s) = Self::full_build(db, &feq, &tree, &rk, 0)?;
+        let mut engine = IncrementalEngine {
+            feq,
+            tree,
+            rk,
+            opts,
+            metrics,
+            state,
+            patches_since_rebuild: 0,
+            join_churn: 0.0,
+            last_rebuild_s: elapsed_s,
+        };
+        engine.record_rebuild(elapsed_s, &RebuildReason::Init);
+        Ok(engine)
+    }
+
+    /// Full pipeline + fresh delta/tracker state at `version + 1`.
+    fn full_build(
+        db: &Database,
+        feq: &Feq,
+        tree: &JoinTree,
+        rk: &RkConfig,
+        version: u64,
+    ) -> Result<(IncrementalState, f64)> {
+        let t0 = Instant::now();
+        let result = Arc::new(rkmeans_with_tree(db, feq, tree, rk)?);
+        let delta = {
+            let assigners = assigner_map(&result.models);
+            DeltaFaq::init(db, feq, tree, &assigners)?
+        };
+        let tracker = MarginalTracker::new(db, feq)?;
+        let state = IncrementalState {
+            version: version + 1,
+            models: result.models.clone(),
+            delta,
+            tracker,
+            centroids: result.centroids.clone(),
+            result,
+        };
+        Ok((state, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Plan and execute one delta batch. `db` must already contain the
+    /// batch (inserts pushed, deletes retracted) — the patch path never
+    /// reads it, the rebuild path re-derives everything from it.
+    pub fn apply_batch(
+        &mut self,
+        db: &Database,
+        deltas: &[TupleDelta],
+    ) -> Result<(PlanDecision, Arc<RkResult>)> {
+        // Sketches always track the base tables, whatever the decision.
+        for d in deltas {
+            self.state.tracker.apply(d);
+        }
+
+        let reason = self.rebuild_reason(db, deltas);
+        let decision = match reason {
+            Some(reason) => {
+                let elapsed = self.rebuild(db, &reason)?;
+                self.record_rebuild(elapsed, &reason);
+                PlanDecision::Rebuilt(reason)
+            }
+            None => match self.try_patch(deltas) {
+                Ok(elapsed) => {
+                    self.record_patch(elapsed);
+                    PlanDecision::Patched
+                }
+                Err(e) => {
+                    // Corrupted or stale delta state: fall back to a
+                    // rebuild, which re-initializes it.
+                    let reason = RebuildReason::PatchFailed(e.to_string());
+                    let elapsed = self.rebuild(db, &reason)?;
+                    self.record_rebuild(elapsed, &reason);
+                    PlanDecision::Rebuilt(reason)
+                }
+            },
+        };
+        Ok((decision, self.state.result.clone()))
+    }
+
+    fn rebuild_reason(&self, db: &Database, deltas: &[TupleDelta]) -> Option<RebuildReason> {
+        if self.opts.rebuild_every > 0 && self.patches_since_rebuild >= self.opts.rebuild_every {
+            return Some(RebuildReason::Schedule);
+        }
+        let total = db.total_rows().max(1) as f64;
+        if deltas.len() as f64 > self.opts.max_patch_fraction * total {
+            return Some(RebuildReason::BatchTooLarge);
+        }
+        if self.join_churn > self.opts.max_join_churn * self.state.result.grid_mass.max(1.0) {
+            return Some(RebuildReason::JoinChurn);
+        }
+        let drifted = self.state.tracker.drifted(self.opts.drift_threshold);
+        if let Some((name, _)) = drifted.first() {
+            return Some(RebuildReason::Drift(name.clone()));
+        }
+        None
+    }
+
+    fn rebuild(&mut self, db: &Database, _reason: &RebuildReason) -> Result<f64> {
+        let (state, elapsed) = Self::full_build(db, &self.feq, &self.tree, &self.rk, self.state.version)?;
+        self.state = state;
+        self.patches_since_rebuild = 0;
+        self.join_churn = 0.0;
+        self.last_rebuild_s = elapsed;
+        Ok(elapsed)
+    }
+
+    /// The patch path: Step-3 delta + Step-4 warm start. Returns elapsed
+    /// seconds; on error the caller rebuilds (the delta state may be
+    /// poisoned).
+    fn try_patch(&mut self, deltas: &[TupleDelta]) -> Result<f64> {
+        let t0 = Instant::now();
+        let patch_stats = {
+            let assigners = assigner_map(&self.state.models);
+            self.state.delta.apply(deltas, &assigners)?
+        };
+        let table = self.state.delta.grid_table();
+        let (grid, subspaces) = sparse_from_table(table, &self.state.models);
+        if grid.n() == 0 {
+            bail!("FEQ output is empty after deltas: nothing to cluster");
+        }
+        let step3 = t0.elapsed();
+
+        let t1 = Instant::now();
+        let lcfg = LloydConfig {
+            k: self.rk.k,
+            max_iters: self.rk.max_iters,
+            tol: self.rk.tol,
+            seed: self.rk.seed,
+        };
+        let (res, step4_stats) = sparse_lloyd_warm_with(
+            &grid,
+            &subspaces,
+            &lcfg,
+            &EngineOpts::default(),
+            Some(&self.state.centroids),
+        );
+        let step4 = t1.elapsed();
+
+        let quantization_cost: f64 = self.state.models.iter().map(|m| m.cost).sum();
+        self.state.centroids = res.centroids.clone();
+        self.state.version += 1;
+        self.state.result = Arc::new(RkResult {
+            centroids: res.centroids,
+            models: self.state.models.clone(),
+            objective_grid: res.objective,
+            quantization_cost,
+            grid_points: grid.n(),
+            grid_mass: grid.weights.iter().sum(),
+            iters: res.iters,
+            timings: StepTimings {
+                step3_grid: step3,
+                step4_cluster: step4,
+                ..StepTimings::default()
+            },
+            step4_stats,
+        });
+        self.patches_since_rebuild += 1;
+        self.join_churn += patch_stats.mass_delta_abs;
+        self.metrics.gauge("incremental.grid_cells").set(patch_stats.grid_cells as i64);
+        self.metrics
+            .counter("incremental.cells_touched")
+            .add(patch_stats.cells_touched as u64);
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn record_patch(&self, elapsed_s: f64) {
+        self.metrics.counter("incremental.patches").inc();
+        self.metrics.counter("incremental.patch_us").add((elapsed_s * 1e6) as u64);
+        let saved = (self.last_rebuild_s - elapsed_s).max(0.0);
+        self.metrics.counter("incremental.saved_us_est").add((saved * 1e6) as u64);
+        self.metrics.gauge("incremental.version").set(self.state.version as i64);
+    }
+
+    fn record_rebuild(&self, elapsed_s: f64, reason: &RebuildReason) {
+        self.metrics.counter("incremental.rebuilds").inc();
+        self.metrics.counter("incremental.rebuild_us").add((elapsed_s * 1e6) as u64);
+        let reason_ctr = match reason {
+            RebuildReason::Init => "incremental.rebuilds_init",
+            RebuildReason::Drift(_) => "incremental.rebuilds_drift",
+            RebuildReason::BatchTooLarge => "incremental.rebuilds_batch",
+            RebuildReason::Schedule => "incremental.rebuilds_schedule",
+            RebuildReason::JoinChurn => "incremental.rebuilds_churn",
+            RebuildReason::PatchFailed(_) => "incremental.rebuilds_patch_failed",
+        };
+        self.metrics.counter(reason_ctr).inc();
+        self.metrics.gauge("incremental.version").set(self.state.version as i64);
+    }
+
+    /// The current state version.
+    pub fn version(&self) -> u64 {
+        self.state.version
+    }
+
+    /// The clustering result of the current version.
+    pub fn result(&self) -> &RkResult {
+        &self.state.result
+    }
+
+    /// Shared handle to the current result (refcount bump, no deep copy).
+    pub fn shared_result(&self) -> Arc<RkResult> {
+        self.state.result.clone()
+    }
+
+    /// Snapshot the full maintenance state (serving stays versioned:
+    /// consumers can pin a snapshot while patches continue).
+    pub fn snapshot(&self) -> IncrementalState {
+        self.state.clone()
+    }
+
+    /// Roll back to a previously taken snapshot. The caller is
+    /// responsible for rolling the database back to the matching point —
+    /// subsequent deltas are interpreted against the snapshot's state.
+    pub fn restore(&mut self, state: IncrementalState) {
+        self.state = state;
+        self.patches_since_rebuild = 0;
+        self.join_churn = 0.0;
+        self.metrics.gauge("incremental.version").set(self.state.version as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema, Value};
+    use crate::incremental::apply_to_db;
+    use crate::util::testkit::assert_close;
+    use crate::util::{FxHashMap, SplitMix64};
+
+    /// Two-relation star with clusterable structure (mirrors rkmeans tests).
+    fn setup(n_fact: usize, seed: u64) -> (Database, Feq) {
+        let mut rng = SplitMix64::new(seed);
+        let mut fact = Relation::new(
+            "fact",
+            Schema::new(vec![Attr::cat("item", 8), Attr::double("units")]),
+        );
+        for _ in 0..n_fact {
+            let item = rng.below(8) as u32;
+            let units = if item < 4 {
+                (rng.uniform(0.0, 1.0) * 16.0).round() / 16.0
+            } else {
+                100.0 + (rng.uniform(0.0, 1.0) * 16.0).round() / 16.0
+            };
+            fact.push_row(&[Value::Cat(item), Value::Double(units)]);
+        }
+        let mut items =
+            Relation::new("items", Schema::new(vec![Attr::cat("item", 8), Attr::double("price")]));
+        for i in 0..8u32 {
+            items.push_row(&[Value::Cat(i), Value::Double(if i < 4 { 1.0 } else { 50.0 })]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(items);
+        let feq = Feq::with_features(&["fact", "items"], &["item", "units", "price"]);
+        (db, feq)
+    }
+
+    fn batch(rng: &mut SplitMix64, n: usize) -> Vec<TupleDelta> {
+        (0..n)
+            .map(|_| {
+                let item = rng.below(8) as u32;
+                let units = (rng.uniform(0.0, 2.0) * 16.0).round() / 16.0;
+                TupleDelta::insert("fact", vec![Value::Cat(item), Value::Double(units)])
+            })
+            .collect()
+    }
+
+    fn lenient() -> PlannerOpts {
+        PlannerOpts {
+            drift_threshold: 1.1,
+            max_patch_fraction: 1.0,
+            rebuild_every: 0,
+            max_join_churn: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn patched_grid_matches_rebuild_grid() {
+        let (mut db, feq) = setup(300, 1);
+        let rk = RkConfig::new(4);
+        let mut engine =
+            IncrementalEngine::new(&db, feq.clone(), rk.clone(), lenient(), Metrics::new())
+                .unwrap();
+        let mut rng = SplitMix64::new(7);
+        for round in 0..4 {
+            let deltas = batch(&mut rng, 20);
+            apply_to_db(&mut db, &deltas).unwrap();
+            let (decision, result) = engine.apply_batch(&db, &deltas).unwrap();
+            assert_eq!(decision, PlanDecision::Patched, "round {round}");
+            // The patched grid must be exactly the grid a full pipeline
+            // computes on the updated database with the same (frozen)
+            // Step-2 models — compare against an engine-independent run.
+            let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+            let scratch = {
+                let mut assigners: FxHashMap<String, Box<dyn GidAssigner + '_>> =
+                    FxHashMap::default();
+                for m in &result.models {
+                    assigners.insert(m.name.clone(), Box::new(m));
+                }
+                crate::faq::grid_weights(&db, &feq, &tree, &assigners).unwrap()
+            };
+            assert_eq!(result.grid_points, scratch.len(), "round {round}");
+            assert_close(result.grid_mass, scratch.mass(), 1e-9);
+            assert!(result.objective_grid.is_finite() && result.objective_grid >= 0.0);
+        }
+        assert_eq!(engine.version(), 5); // init + 4 patches
+    }
+
+    #[test]
+    fn deletes_patch_through() {
+        let (mut db, feq) = setup(200, 2);
+        let rk = RkConfig::new(3);
+        let mut engine =
+            IncrementalEngine::new(&db, feq, rk, lenient(), Metrics::new()).unwrap();
+        let before = engine.result().grid_mass;
+        // Delete five concrete fact rows.
+        let fact = db.get("fact").unwrap();
+        let deltas: Vec<TupleDelta> =
+            (0..5).map(|r| TupleDelta::delete("fact", fact.row(r))).collect();
+        apply_to_db(&mut db, &deltas).unwrap();
+        let (decision, result) = engine.apply_batch(&db, &deltas).unwrap();
+        assert_eq!(decision, PlanDecision::Patched);
+        assert_close(result.grid_mass, before - 5.0, 1e-9);
+    }
+
+    #[test]
+    fn drift_triggers_rebuild() {
+        let (mut db, feq) = setup(150, 3);
+        let rk = RkConfig::new(3);
+        let opts = PlannerOpts { drift_threshold: 0.10, ..lenient() };
+        let metrics = Metrics::new();
+        let mut engine = IncrementalEngine::new(&db, feq, rk, opts, metrics.clone()).unwrap();
+        // Pour most of the new mass onto one previously-light item.
+        let deltas: Vec<TupleDelta> = (0..120)
+            .map(|_| TupleDelta::insert("fact", vec![Value::Cat(7), Value::Double(0.5)]))
+            .collect();
+        apply_to_db(&mut db, &deltas).unwrap();
+        let (decision, _) = engine.apply_batch(&db, &deltas).unwrap();
+        assert!(
+            matches!(decision, PlanDecision::Rebuilt(RebuildReason::Drift(_))),
+            "expected drift rebuild, got {decision:?}"
+        );
+        assert_eq!(metrics.counter("incremental.rebuilds_drift").get(), 1);
+        // After rebaselining, an ordinary small batch patches again.
+        let mut rng = SplitMix64::new(11);
+        let small = batch(&mut rng, 5);
+        apply_to_db(&mut db, &small).unwrap();
+        let (decision, _) = engine.apply_batch(&db, &small).unwrap();
+        assert_eq!(decision, PlanDecision::Patched);
+    }
+
+    #[test]
+    fn oversized_batch_triggers_rebuild() {
+        let (mut db, feq) = setup(100, 4);
+        let opts = PlannerOpts { max_patch_fraction: 0.01, ..lenient() };
+        let mut engine =
+            IncrementalEngine::new(&db, feq, RkConfig::new(2), opts, Metrics::new()).unwrap();
+        let mut rng = SplitMix64::new(5);
+        let deltas = batch(&mut rng, 50);
+        apply_to_db(&mut db, &deltas).unwrap();
+        let (decision, _) = engine.apply_batch(&db, &deltas).unwrap();
+        assert_eq!(decision, PlanDecision::Rebuilt(RebuildReason::BatchTooLarge));
+    }
+
+    #[test]
+    fn snapshot_restore_rolls_back_versions() {
+        let (mut db, feq) = setup(200, 6);
+        let mut engine =
+            IncrementalEngine::new(&db, feq, RkConfig::new(3), lenient(), Metrics::new())
+                .unwrap();
+        let snap = engine.snapshot();
+        let snap_db = db.clone();
+        let mut rng = SplitMix64::new(13);
+        let deltas = batch(&mut rng, 10);
+        apply_to_db(&mut db, &deltas).unwrap();
+        engine.apply_batch(&db, &deltas).unwrap();
+        assert_eq!(engine.version(), snap.version + 1);
+
+        // Roll both the engine and the database back, replay a different
+        // batch: versions and results continue consistently.
+        engine.restore(snap.clone());
+        let mut db = snap_db;
+        assert_eq!(engine.version(), snap.version);
+        let deltas2 = batch(&mut rng, 7);
+        apply_to_db(&mut db, &deltas2).unwrap();
+        let (decision, result) = engine.apply_batch(&db, &deltas2).unwrap();
+        assert_eq!(decision, PlanDecision::Patched);
+        assert_close(result.grid_mass, snap.result.grid_mass + 7.0, 1e-9);
+    }
+
+    #[test]
+    fn join_churn_triggers_rebuild() {
+        let (mut db, feq) = setup(100, 9);
+        // Every other trigger disabled; churn capped at 5% of the mass.
+        let opts = PlannerOpts { max_join_churn: 0.05, ..lenient() };
+        let mut engine =
+            IncrementalEngine::new(&db, feq, RkConfig::new(2), opts, Metrics::new()).unwrap();
+        let mut rng = SplitMix64::new(19);
+        // First batch patches (churn starts at 0), accumulating churn 10
+        // > 0.05·110; the next batch must rebuild.
+        let b1 = batch(&mut rng, 10);
+        apply_to_db(&mut db, &b1).unwrap();
+        let (d1, _) = engine.apply_batch(&db, &b1).unwrap();
+        assert_eq!(d1, PlanDecision::Patched);
+        let b2 = batch(&mut rng, 2);
+        apply_to_db(&mut db, &b2).unwrap();
+        let (d2, _) = engine.apply_batch(&db, &b2).unwrap();
+        assert_eq!(d2, PlanDecision::Rebuilt(RebuildReason::JoinChurn));
+        // The rebuild reset the accumulator: small batches patch again.
+        let b3 = batch(&mut rng, 2);
+        apply_to_db(&mut db, &b3).unwrap();
+        let (d3, _) = engine.apply_batch(&db, &b3).unwrap();
+        assert_eq!(d3, PlanDecision::Patched);
+    }
+
+    #[test]
+    fn scheduled_rebuild_fires() {
+        let (mut db, feq) = setup(120, 8);
+        let opts = PlannerOpts { rebuild_every: 2, ..lenient() };
+        let mut engine =
+            IncrementalEngine::new(&db, feq, RkConfig::new(2), opts, Metrics::new()).unwrap();
+        let mut rng = SplitMix64::new(17);
+        let mut decisions = Vec::new();
+        for _ in 0..3 {
+            let deltas = batch(&mut rng, 4);
+            apply_to_db(&mut db, &deltas).unwrap();
+            let (d, _) = engine.apply_batch(&db, &deltas).unwrap();
+            decisions.push(d);
+        }
+        assert_eq!(decisions[0], PlanDecision::Patched);
+        assert_eq!(decisions[1], PlanDecision::Patched);
+        assert_eq!(decisions[2], PlanDecision::Rebuilt(RebuildReason::Schedule));
+    }
+}

@@ -30,7 +30,9 @@
 //!   engine ([`faq`]), the materializing baseline ([`join`]), the clustering
 //!   tool-box ([`cluster`]), the grid coreset ([`coreset`]), the end-to-end
 //!   pipeline ([`rkmeans`]), a streaming coordinator with backpressure and
-//!   incremental re-clustering ([`coordinator`]), synthetic workloads
+//!   incremental re-clustering ([`coordinator`]), true delta maintenance
+//!   of the grid coreset under tuple inserts/deletes ([`incremental`]),
+//!   synthetic workloads
 //!   mirroring the paper's Retailer / Favorita / Yelp datasets
 //!   ([`synthetic`]) and the paper-table bench harness ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the JAX weighted-Lloyd step,
@@ -61,6 +63,7 @@ pub mod coordinator;
 pub mod coreset;
 pub mod data;
 pub mod faq;
+pub mod incremental;
 pub mod join;
 pub mod metrics;
 pub mod query;

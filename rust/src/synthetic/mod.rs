@@ -12,7 +12,10 @@
 
 pub mod favorita;
 pub mod retailer;
+pub mod trace;
 pub mod yelp;
+
+pub use trace::{favorita_trace, retailer_trace, TraceSpec};
 
 /// Linear scale factor for dataset size. `Scale::tiny()` is for unit
 /// tests; `Scale::small()` for integration tests; `Scale::bench()` for the

@@ -1,0 +1,173 @@
+//! Deterministic insert/delete trace generators for the streaming /
+//! incremental benchmarks and tests.
+//!
+//! A trace is a sequence of delta batches over a dataset's **fact table**:
+//! inserts are drawn with the same shape as the dataset's generator
+//! (Zipf-skewed keys, realistic value ranges), deletes always target a
+//! tuple known to exist (tracked in a live pool seeded from the base
+//! table), so a trace replays cleanly through both the incremental engine
+//! and the ring-style [`Relation::retract_row`](crate::data::Relation)
+//! path. Everything is seeded via [`crate::util::SplitMix64`], so a
+//! `(db, seed, spec)` triple always produces the same trace — the bench
+//! and the property suite share these generators.
+
+use crate::data::{Database, Value};
+use crate::incremental::TupleDelta;
+use crate::util::{SplitMix64, Zipf};
+
+/// Shape of a generated trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    /// Number of delta batches.
+    pub batches: usize,
+    /// Deltas per batch.
+    pub batch_size: usize,
+    /// Fraction of deltas that are deletes (the rest are inserts).
+    pub delete_frac: f64,
+}
+
+impl TraceSpec {
+    /// A trace of `batches` × `batch_size` with ~30 % deletes.
+    pub fn new(batches: usize, batch_size: usize) -> TraceSpec {
+        TraceSpec { batches, batch_size, delete_frac: 0.3 }
+    }
+}
+
+/// Generic fact-table trace: deletes sample uniformly from the live pool
+/// (base rows + prior inserts), inserts come from `fresh(rng)`.
+fn fact_trace(
+    db: &Database,
+    fact: &str,
+    seed: u64,
+    spec: TraceSpec,
+    mut fresh: impl FnMut(&mut SplitMix64) -> Vec<Value>,
+) -> Vec<Vec<TupleDelta>> {
+    let rel = db.get(fact).unwrap_or_else(|| panic!("fact relation {fact:?} missing"));
+    let mut pool: Vec<Vec<Value>> = (0..rel.n_rows())
+        .filter(|&r| rel.weight(r) != 0.0)
+        .map(|r| rel.row(r))
+        .collect();
+    let mut rng = SplitMix64::new(seed ^ 0x7ace_7ace_7ace_7ace);
+    let mut out = Vec::with_capacity(spec.batches);
+    for _ in 0..spec.batches {
+        let mut batch = Vec::with_capacity(spec.batch_size);
+        for _ in 0..spec.batch_size {
+            if !pool.is_empty() && rng.coin(spec.delete_frac) {
+                let i = rng.below(pool.len() as u64) as usize;
+                let vals = pool.swap_remove(i);
+                batch.push(TupleDelta::delete(fact, vals));
+            } else {
+                let vals = fresh(&mut rng);
+                pool.push(vals.clone());
+                batch.push(TupleDelta::insert(fact, vals));
+            }
+        }
+        out.push(batch);
+    }
+    out
+}
+
+/// Insert/delete trace over the Retailer `inventory` fact table.
+/// Inserts mirror [`super::retailer::generate`]'s Zipf-skewed shape;
+/// domain sizes are read off the base table's schema so the trace always
+/// matches the database it was generated against.
+pub fn retailer_trace(db: &Database, seed: u64, spec: TraceSpec) -> Vec<Vec<TupleDelta>> {
+    let inv = db.get("inventory").expect("retailer database has inventory");
+    let stores = inv.schema.attr(0).domain.max(1) as u64;
+    let dates = inv.schema.attr(1).domain.max(1) as u64;
+    let skus = inv.schema.attr(2).domain.max(1) as usize;
+    let sku_zipf = Zipf::new(skus, 1.1);
+    fact_trace(db, "inventory", seed, spec, move |rng| {
+        let sku = sku_zipf.sample(rng);
+        let base = 40.0 / (1.0 + sku as f64).sqrt();
+        vec![
+            Value::Cat(rng.below(stores) as u32),
+            Value::Cat(rng.below(dates) as u32),
+            Value::Cat(sku as u32),
+            Value::Double((base * rng.uniform(0.2, 2.0)).round().max(0.0)),
+        ]
+    })
+}
+
+/// Insert/delete trace over the Favorita `sales` fact table
+/// (`date, store, item, unit_sales, onpromotion`).
+pub fn favorita_trace(db: &Database, seed: u64, spec: TraceSpec) -> Vec<Vec<TupleDelta>> {
+    let sales = db.get("sales").expect("favorita database has sales");
+    let dates = sales.schema.attr(0).domain.max(1) as u64;
+    let stores = sales.schema.attr(1).domain.max(1) as u64;
+    let items = sales.schema.attr(2).domain.max(1) as usize;
+    let item_zipf = Zipf::new(items, 1.05);
+    fact_trace(db, "sales", seed, spec, move |rng| {
+        vec![
+            Value::Cat(rng.below(dates) as u32),
+            Value::Cat(rng.below(stores) as u32),
+            Value::Cat(item_zipf.sample(rng) as u32),
+            Value::Double(((2.0 + rng.normal()).exp() * 4.0).round() / 4.0),
+            Value::Cat(u32::from(rng.coin(0.08))),
+        ]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::incremental::apply_to_db;
+    use crate::synthetic::{favorita, retailer, Scale};
+
+    #[test]
+    fn traces_are_deterministic() {
+        let db = retailer::generate(Scale::tiny(), 1);
+        let spec = TraceSpec::new(3, 16);
+        let a = retailer_trace(&db, 9, spec);
+        let b = retailer_trace(&db, 9, spec);
+        assert_eq!(a.len(), 3);
+        for (ba, bb) in a.iter().zip(&b) {
+            assert_eq!(ba.len(), 16);
+            for (da, db_) in ba.iter().zip(bb) {
+                assert_eq!(da.relation, db_.relation);
+                assert_eq!(da.weight, db_.weight);
+                assert_eq!(da.values, db_.values);
+            }
+        }
+        // Different seeds differ somewhere.
+        let c = retailer_trace(&db, 10, spec);
+        let flat = |t: &Vec<Vec<TupleDelta>>| -> Vec<String> {
+            t.iter().flatten().map(|d| format!("{:?}{:?}", d.values, d.weight)).collect()
+        };
+        assert_ne!(flat(&a), flat(&c));
+    }
+
+    #[test]
+    fn traces_replay_cleanly_onto_the_database() {
+        for (db, trace) in [
+            {
+                let db = retailer::generate(Scale::tiny(), 2);
+                let t = retailer_trace(&db, 5, TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.4 });
+                (db, t)
+            },
+            {
+                let db = favorita::generate(Scale::tiny(), 2);
+                let t = favorita_trace(&db, 5, TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.4 });
+                (db, t)
+            },
+        ] {
+            let mut db = db;
+            // Every delete must find its tuple: apply_to_db errors otherwise.
+            for batch in &trace {
+                apply_to_db(&mut db, batch).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn delete_fraction_is_roughly_respected() {
+        let db = retailer::generate(Scale::tiny(), 3);
+        let trace =
+            retailer_trace(&db, 4, TraceSpec { batches: 2, batch_size: 200, delete_frac: 0.3 });
+        let total: usize = trace.iter().map(|b| b.len()).sum();
+        let deletes: usize =
+            trace.iter().flatten().filter(|d| d.is_delete()).count();
+        let frac = deletes as f64 / total as f64;
+        assert!((0.15..0.45).contains(&frac), "delete fraction {frac}");
+    }
+}

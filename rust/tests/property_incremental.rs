@@ -1,0 +1,211 @@
+//! Property tests for the incremental Step-3 state: after ANY random
+//! sequence of tuple inserts/deletes over a small acyclic schema, the
+//! delta-maintained grid weights must be **bitwise equal** to a
+//! from-scratch `grid_weights` pass over the updated database — for both
+//! the bit-packed `u128` and the generic `Vec<u32>` combo-key paths.
+//!
+//! Bitwise equality is meaningful here because the Step-3 FAQ is a
+//! counting query in the ring ℤ: with unit tuple weights every message
+//! entry is an exactly-represented f64 integer, so insert/delete
+//! cancellation is exact regardless of evaluation order (see the
+//! `incremental::deltafaq` module docs).
+
+use rkmeans::data::{Attr, Database, Relation, Schema, Value};
+use rkmeans::faq::{grid_weights, GidAssigner, GridTable};
+use rkmeans::incremental::{apply_to_db, DeltaFaq, TupleDelta};
+use rkmeans::query::{Feq, Hypergraph};
+use rkmeans::synthetic::{retailer, retailer_trace, Scale, TraceSpec};
+use rkmeans::util::testkit::for_cases;
+use rkmeans::util::{FxHashMap, SplitMix64};
+
+/// Gid assigner: key (or value·4 for doubles) mod n. `claimed` inflates
+/// the advertised κ to force the >128-bit generic combo path.
+struct ModAssigner {
+    n: u32,
+    claimed: usize,
+}
+impl GidAssigner for ModAssigner {
+    fn gid(&self, v: Value) -> u32 {
+        let k = match v {
+            Value::Double(x) => ((x * 4.0) as i64).rem_euclid(self.n as i64) as u64,
+            other => other.key_u64(),
+        };
+        (k % self.n as u64) as u32
+    }
+    fn n_gids(&self) -> usize {
+        self.claimed
+    }
+}
+
+const FEATURES: [&str; 6] = ["pay", "c0", "x0", "c1", "c2", "x2"];
+
+fn assigners(n: u32, claimed: usize) -> FxHashMap<String, Box<dyn GidAssigner>> {
+    let mut m: FxHashMap<String, Box<dyn GidAssigner>> = FxHashMap::default();
+    for a in FEATURES {
+        m.insert(a.to_string(), Box::new(ModAssigner { n, claimed }));
+    }
+    m
+}
+
+/// The shadow database: per relation, a list of unit-weight tuples. The
+/// oracle rebuilds a `Database` from it after every batch.
+struct Shadow {
+    schemas: Vec<(String, Schema)>,
+    rows: Vec<Vec<Vec<Value>>>,
+}
+
+impl Shadow {
+    fn to_db(&self) -> Database {
+        let mut db = Database::new();
+        for ((name, schema), rows) in self.schemas.iter().zip(&self.rows) {
+            let mut rel = Relation::new(name, schema.clone());
+            for r in rows {
+                rel.push_row(r);
+            }
+            db.add(rel);
+        }
+        db
+    }
+}
+
+/// Chain + star schema exercising multi-hop propagation and multi-child
+/// telescoping: fact(j0, j1, pay) ⋈ dim0(j0, c0, x0) ⋈ dim1(j1, j2, c1)
+/// ⋈ deep(j2, c2, x2).
+fn random_instance(rng: &mut SplitMix64) -> (Shadow, Feq) {
+    let dom = 3 + rng.below(4) as u32; // join-key domain
+    let schemas = vec![
+        (
+            "fact".to_string(),
+            Schema::new(vec![Attr::cat("j0", dom), Attr::cat("j1", dom), Attr::cat("pay", 6)]),
+        ),
+        (
+            "dim0".to_string(),
+            Schema::new(vec![Attr::cat("j0", dom), Attr::cat("c0", 5), Attr::double("x0")]),
+        ),
+        (
+            "dim1".to_string(),
+            Schema::new(vec![Attr::cat("j1", dom), Attr::cat("j2", dom), Attr::cat("c1", 5)]),
+        ),
+        (
+            "deep".to_string(),
+            Schema::new(vec![Attr::cat("j2", dom), Attr::cat("c2", 4), Attr::double("x2")]),
+        ),
+    ];
+    let fresh = |rel: usize, rng: &mut SplitMix64| fresh_row(rel, dom, rng);
+    let mut rows: Vec<Vec<Vec<Value>>> = vec![Vec::new(); 4];
+    for (rel, row_list) in rows.iter_mut().enumerate() {
+        // Sparse-ish initial fill; some join keys intentionally missing.
+        let n = 3 + rng.below(15) as usize;
+        for _ in 0..n {
+            row_list.push(fresh(rel, rng));
+        }
+    }
+    let feq = Feq::with_features(&["fact", "dim0", "dim1", "deep"], &FEATURES);
+    (Shadow { schemas, rows }, feq)
+}
+
+fn fresh_row(rel: usize, dom: u32, rng: &mut SplitMix64) -> Vec<Value> {
+    let key = |rng: &mut SplitMix64| Value::Cat(rng.below(dom as u64) as u32);
+    match rel {
+        0 => vec![key(rng), key(rng), Value::Cat(rng.below(6) as u32)],
+        1 => vec![key(rng), Value::Cat(rng.below(5) as u32), Value::Double(rng.below(8) as f64 * 0.25)],
+        2 => vec![key(rng), key(rng), Value::Cat(rng.below(5) as u32)],
+        3 => vec![key(rng), Value::Cat(rng.below(4) as u32), Value::Double(rng.below(8) as f64 * 0.25)],
+        _ => unreachable!(),
+    }
+}
+
+/// Random batch of inserts/deletes, applied to the shadow as generated so
+/// deletes always reference live tuples.
+fn random_batch(shadow: &mut Shadow, dom: u32, rng: &mut SplitMix64) -> Vec<TupleDelta> {
+    let n = rng.below(12) as usize; // occasionally empty
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rel = rng.below(4) as usize;
+        let delete = rng.coin(0.4) && !shadow.rows[rel].is_empty();
+        if delete {
+            let i = rng.below(shadow.rows[rel].len() as u64) as usize;
+            let vals = shadow.rows[rel].swap_remove(i);
+            out.push(TupleDelta::delete(&shadow.schemas[rel].0, vals));
+        } else {
+            let vals = fresh_row(rel, dom, rng);
+            shadow.rows[rel].push(vals.clone());
+            out.push(TupleDelta::insert(&shadow.schemas[rel].0, vals));
+        }
+    }
+    out
+}
+
+fn cells_bits(gt: &GridTable) -> FxHashMap<Vec<u32>, u64> {
+    gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect()
+}
+
+fn check_random_sequences(claimed_gids: Option<usize>, expect_packed: bool) {
+    for_cases(20, |rng| {
+        let (mut shadow, feq) = random_instance(rng);
+        let dom = shadow.schemas[0].1.attr(0).domain;
+        let kappa = 2 + rng.below(3) as u32;
+        let claimed = claimed_gids.unwrap_or(kappa as usize);
+        let asg = assigners(kappa, claimed);
+
+        let db0 = shadow.to_db();
+        let tree = Hypergraph::from_feq(&db0, &feq).join_tree().expect("acyclic");
+        let mut delta = DeltaFaq::init(&db0, &feq, &tree, &asg).expect("init");
+        assert_eq!(delta.is_packed(), expect_packed);
+
+        for round in 0..6 {
+            let batch = random_batch(&mut shadow, dom, rng);
+            delta.apply(&batch, &asg).expect("apply");
+
+            // Oracle: rebuild the database and run the batch evaluator.
+            let db = shadow.to_db();
+            let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+            let scratch = grid_weights(&db, &feq, &tree, &asg).expect("scratch");
+            let inc = delta.grid_table();
+            assert_eq!(inc.feature_names, scratch.feature_names, "round {round}");
+            assert_eq!(
+                cells_bits(&inc),
+                cells_bits(&scratch),
+                "round {round}: delta-maintained grid diverged from scratch"
+            );
+        }
+    });
+}
+
+#[test]
+fn delta_grid_bitwise_equals_scratch_packed_u128() {
+    check_random_sequences(None, true);
+}
+
+#[test]
+fn delta_grid_bitwise_equals_scratch_generic_vec() {
+    // Claim 2^60 gids per feature: 6×60 bits > 128 forces the Vec<u32>
+    // path in both the delta engine and the from-scratch evaluator,
+    // while actual gids stay identical.
+    check_random_sequences(Some(1usize << 60), false);
+}
+
+/// The shared Retailer trace generator replays through the delta engine
+/// and stays bitwise-consistent with from-scratch evaluation (ties the
+/// property suite to the exact trace shape the stream bench measures).
+#[test]
+fn retailer_trace_patches_bitwise() {
+    let mut db = retailer::generate(Scale::tiny(), 11);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+    // Fixed mod-assigners (Step-2 models are out of scope here: the
+    // property under test is the FAQ delta, not the solvers).
+    let mut asg: FxHashMap<String, Box<dyn GidAssigner>> = FxHashMap::default();
+    for f in &feq.features {
+        asg.insert(f.attr.clone(), Box::new(ModAssigner { n: 3, claimed: 3 }));
+    }
+    let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).expect("init");
+    let trace =
+        retailer_trace(&db, 23, TraceSpec { batches: 3, batch_size: 32, delete_frac: 0.35 });
+    for (round, batch) in trace.iter().enumerate() {
+        apply_to_db(&mut db, batch).expect("replay");
+        delta.apply(batch, &asg).expect("apply");
+        let scratch = grid_weights(&db, &feq, &tree, &asg).expect("scratch");
+        assert_eq!(cells_bits(&delta.grid_table()), cells_bits(&scratch), "batch {round}");
+    }
+}
