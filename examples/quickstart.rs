@@ -1,14 +1,18 @@
-//! Quickstart: cluster a relational dataset without materializing the join.
+//! Quickstart: cluster a relational dataset without materializing the
+//! join — through the staged pipeline API.
 //!
 //! ```sh
 //! cargo run --release --offline --example quickstart
 //! ```
 //!
-//! Generates a small synthetic Retailer database (5 relations), then runs
-//! Rk-means end to end and prints the step breakdown — the 30-second tour
-//! of the public API.
+//! Generates a small synthetic Retailer database (5 relations), stages
+//! the pipeline once (plan → marginals → subspaces → coreset), sweeps k
+//! over the shared coreset, and ships the winning model as bytes — the
+//! 30-second tour of the public API. The one-shot `rkmeans()` wrapper
+//! still exists for single runs; everything here is bitwise-identical to
+//! it.
 
-use rkmeans::rkmeans::{full_objective, rkmeans, RkConfig};
+use rkmeans::rkmeans::{full_objective, ClusterOpts, RkModel, RkPipeline, SubspaceOpts};
 use rkmeans::synthetic::{retailer, Scale};
 use rkmeans::util::{human_bytes, human_count};
 
@@ -28,20 +32,54 @@ fn main() -> anyhow::Result<()> {
     let feq = retailer::feq();
     println!("FEQ: {} features over {:?}", feq.n_features(), feq.relations);
 
-    // 3. Rk-means: k = 10 clusters via a grid coreset (κ = k).
-    let res = rkmeans(&db, &feq, &RkConfig::new(10))?;
-    println!("\nRk-means (k=10):");
-    println!("  coreset |G|        : {} cells", human_count(res.grid_points as u64));
-    println!("  step 1 (marginals) : {:?}", res.timings.step1_marginals);
-    println!("  step 2 (subspaces) : {:?}", res.timings.step2_subspaces);
-    println!("  step 3 (grid)      : {:?}", res.timings.step3_grid);
-    println!("  step 4 (cluster)   : {:?} ({} Lloyd iters)", res.timings.step4_cluster, res.iters);
-    println!("  total              : {:?}", res.timings.total());
-    println!("  coreset objective  : {:.4e}", res.objective_grid);
-    println!("  quantization cost  : {:.4e}", res.quantization_cost);
+    // 3. Stage the pipeline: Steps 1–3 run once and return reusable
+    //    artifacts (marginals survive κ changes; the coreset survives
+    //    every k).
+    let pipe = RkPipeline::plan(&db, &feq)?;
+    let marginals = pipe.marginals()?;
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(10))?;
+    let coreset = pipe.coreset(&subspaces)?;
+    println!(
+        "\nstaged: |X| = {} rows -> |G| = {} coreset cells \
+         (step1 {:?}, step2 {:?}, step3 {:?})",
+        human_count(marginals.output_size as u64),
+        human_count(coreset.n() as u64),
+        marginals.elapsed,
+        subspaces.elapsed,
+        coreset.elapsed
+    );
 
-    // 4. Evaluate on the full (never materialized) join output.
+    // 4. k-sweep over the shared coreset: only Step 4 runs per k.
+    println!("\nk-sweep over one shared coreset:");
+    for model in coreset.sweep(&[5, 10, 20], &ClusterOpts::new(0)) {
+        println!(
+            "  k={:<3} objective={:.4e}  iters={:<3} step4={:?}",
+            model.k(),
+            model.objective_grid,
+            model.iters,
+            model.timings.step4_cluster
+        );
+    }
+
+    // 5. Pick one model; evaluate on the full (never materialized) join
+    //    output and ship it as a self-contained serving payload.
+    let model = coreset.cluster(&ClusterOpts::new(10));
+    let res = model.clone().into_result();
     let full = full_objective(&db, &feq, &res)?;
-    println!("  full-X objective   : {:.4e} (bound {:.4e})", full, res.objective_upper_bound());
+    println!(
+        "\nk=10: full-X objective {:.4e} (bound {:.4e}, quantization {:.4e})",
+        full,
+        res.objective_upper_bound(),
+        model.quantization_cost
+    );
+
+    let bytes = model.to_bytes();
+    let replica = RkModel::from_bytes(&bytes)?;
+    println!(
+        "serving: model -> {} bytes -> replica (k={}, m={}) with zero database access",
+        human_count(bytes.len() as u64),
+        replica.k(),
+        replica.m()
+    );
     Ok(())
 }

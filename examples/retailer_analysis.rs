@@ -72,6 +72,36 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", t.render());
 
+    // k-sweep over one shared coreset: the staged pipeline pays Steps
+    // 1–3 once for the whole Table-2-style sweep (each row is
+    // bitwise-identical to an independent run at that k).
+    {
+        use rkmeans::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+        let t0 = std::time::Instant::now();
+        let pipe = RkPipeline::plan(&db, &feq)?;
+        let marginals = pipe.marginals()?;
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(20))?;
+        let coreset = pipe.coreset(&subspaces)?;
+        let shared = t0.elapsed();
+        let mut sweep_t = Table::new(
+            "k-sweep over one shared coreset (steps 1–3 amortized)",
+            &["k", "objective", "iters", "step4"],
+        );
+        for model in coreset.sweep(&cfg.ks, &ClusterOpts::new(0).with_seed(cfg.seed)) {
+            sweep_t.row(vec![
+                model.k().to_string(),
+                format!("{:.4e}", model.objective_grid),
+                model.iters.to_string(),
+                format!("{:?}", model.timings.step4_cluster),
+            ]);
+        }
+        println!(
+            "steps 1–3 once for the whole sweep: {shared:?} (|G| = {} cells, κ = 20)",
+            human_count(coreset.n() as u64)
+        );
+        println!("{}", sweep_t.render());
+    }
+
     // Optional: the XLA/PJRT Step-4 path on the k=10 coreset.
     xla_step4(&db, &feq, &tree, &cfg)?;
     Ok(())

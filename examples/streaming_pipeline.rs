@@ -9,10 +9,12 @@
 //! coordinator re-runs Rk-means every `RECLUSTER_EVERY` tuples and
 //! publishes versioned clusterings. Because Rk-means only touches base
 //! relations, each re-cluster is Õ(|D|) — no join is ever materialized.
+//! Each published update also ships as a serialized `RkModel`, which a
+//! serving replica restores and queries without any database.
 
 use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
 use rkmeans::data::Value;
-use rkmeans::rkmeans::RkConfig;
+use rkmeans::rkmeans::{RkConfig, RkModel};
 use rkmeans::synthetic::{favorita, Scale};
 use rkmeans::util::SplitMix64;
 use std::time::Duration;
@@ -38,8 +40,10 @@ fn main() -> anyhow::Result<()> {
     cfg.channel_capacity = 512; // small queue: demonstrates backpressure
     let coord = Coordinator::start(db, feq, cfg);
 
-    // Producer: a new day of skewed sales per batch.
+    // Producer: a new day of skewed sales per batch. A "replica" on the
+    // side serves the latest shipped model while the writer keeps going.
     let mut rng = SplitMix64::new(99);
+    let mut replica: Option<RkModel> = None;
     for batch in 0..BATCHES {
         for _ in 0..RECLUSTER_EVERY {
             let item = rng.below(n_items);
@@ -56,12 +60,38 @@ fn main() -> anyhow::Result<()> {
             )?; // blocks if the coordinator is behind (backpressure)
         }
         match coord.recv_update(Duration::from_secs(300)) {
-            Some(u) => println!(
-                "update v{} after {:>6} tuples: |G|={:<7} objective={:.4e}  (job {:?})",
-                u.version, u.ingested, u.result.grid_points, u.result.objective_grid, u.elapsed
-            ),
+            Some(u) => {
+                println!(
+                    "update v{} after {:>6} tuples: |G|={:<7} objective={:.4e}  (job {:?})",
+                    u.version, u.ingested, u.result.grid_points, u.result.objective_grid, u.elapsed
+                );
+                // Writer side: serialize the model; replica side: restore.
+                // (In production the bytes cross a wire; here, a variable.)
+                let bytes = u.model().to_bytes();
+                replica = Some(RkModel::from_bytes(&bytes)?);
+            }
             None => println!("batch {batch}: no update within timeout"),
         }
+    }
+
+    // The replica assigns a fresh (never-materialized) tuple — feature
+    // values in FEQ order — without touching any database. The model
+    // itself says which features are continuous vs. categorical.
+    if let Some(replica) = &replica {
+        use rkmeans::coreset::SubspaceSolver;
+        let tuple: Vec<Value> = replica
+            .models
+            .iter()
+            .map(|m| match &m.solver {
+                SubspaceSolver::Continuous(_) => Value::Double(12.0),
+                SubspaceSolver::Categorical(_) => Value::Cat(0),
+            })
+            .collect();
+        let (cluster, d2) = replica.assign_with_distance(&tuple);
+        println!(
+            "replica v{} serves: tuple -> cluster {cluster} (squared distance {d2:.4e})",
+            replica.version
+        );
     }
 
     println!("\n-- coordinator metrics --\n{}", coord.metrics().render());

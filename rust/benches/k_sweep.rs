@@ -1,0 +1,111 @@
+//! Bench W1 — k-sweep amortization through the staged pipeline: sweeping
+//! k over **one shared `Coreset`** (Steps 1–3 paid once) vs. independent
+//! one-shot `rkmeans()` calls (Steps 1–3 paid per k). κ is held fixed
+//! across the sweep so both arms build the same grid, and the per-k
+//! objectives are asserted **bitwise-identical** — the speedup is pure
+//! reuse, not approximation. Results are written as one
+//! `BENCH_sweep.json` document (schema: see `bench_harness` docs; path
+//! override: `RKMEANS_SWEEP_OUT`). Acceptance target: shared-coreset
+//! total ≥ 2× faster on the k ∈ {4, 8, 16, 32} Retailer sweep.
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_SWEEP_SCALE` overrides the Retailer scale (default 0.05).
+
+use rkmeans::bench_harness::{write_bench_sweep, SweepBenchRecord};
+use rkmeans::rkmeans::{rkmeans, ClusterOpts, RkConfig, RkPipeline, SubspaceOpts};
+use rkmeans::synthetic::{retailer, Scale};
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale: f64 = std::env::var("RKMEANS_SWEEP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.003 } else { 0.05 });
+    let ks: Vec<usize> = if test_mode { vec![2, 4, 8] } else { vec![4, 8, 16, 32] };
+    let kappa = if test_mode { 8 } else { 16 };
+    let seed = 42u64;
+
+    let db = retailer::generate(Scale::custom(scale), seed);
+    let feq = retailer::feq();
+    println!(
+        "sweep workload: |D|={} rows (scale {scale}), ks={ks:?}, κ={kappa}",
+        db.total_rows()
+    );
+
+    // Arm 1: independent one-shot runs — Steps 1–3 recomputed per k.
+    let mut indep_times = Vec::with_capacity(ks.len());
+    let mut indep_objs = Vec::with_capacity(ks.len());
+    let mut grid_cells = 0usize;
+    let t_indep = Instant::now();
+    for &k in &ks {
+        let t0 = Instant::now();
+        let res = rkmeans(&db, &feq, &RkConfig::new(k).with_kappa(kappa).with_seed(seed))?;
+        indep_times.push(t0.elapsed().as_secs_f64());
+        indep_objs.push(res.objective_grid);
+        grid_cells = res.grid_points;
+    }
+    let indep_total = t_indep.elapsed().as_secs_f64();
+
+    // Arm 2: staged — one shared coreset, Step 4 per k.
+    let mut shared_times = Vec::with_capacity(ks.len());
+    let mut shared_objs = Vec::with_capacity(ks.len());
+    let t_shared = Instant::now();
+    let pipe = RkPipeline::plan(&db, &feq)?;
+    let marginals = pipe.marginals()?;
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(kappa))?;
+    let coreset = pipe.coreset(&subspaces)?;
+    for &k in &ks {
+        let t0 = Instant::now();
+        let model = coreset.cluster(&ClusterOpts::new(k).with_seed(seed));
+        shared_times.push(t0.elapsed().as_secs_f64());
+        shared_objs.push(model.objective_grid);
+    }
+    let shared_total = t_shared.elapsed().as_secs_f64();
+
+    // Exactness: identical per-k objectives, bitwise.
+    for ((&k, a), b) in ks.iter().zip(&indep_objs).zip(&shared_objs) {
+        anyhow::ensure!(
+            a.to_bits() == b.to_bits(),
+            "k={k}: objectives diverged (independent {a} vs shared {b})"
+        );
+    }
+
+    let indep_rec = SweepBenchRecord::from_runs(
+        "retailer",
+        "independent",
+        &ks,
+        kappa,
+        grid_cells,
+        indep_total,
+        &indep_times,
+        &indep_objs,
+    );
+    let shared_rec = SweepBenchRecord::from_runs(
+        "retailer",
+        "shared-coreset",
+        &ks,
+        kappa,
+        coreset.n(),
+        shared_total,
+        &shared_times,
+        &shared_objs,
+    )
+    .with_speedup_vs(&indep_rec);
+    println!("{}", indep_rec.line());
+    println!("{}", shared_rec.line());
+
+    let speedup = shared_rec.speedup_vs_independent.unwrap_or(0.0);
+    let records = vec![indep_rec, shared_rec];
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_SWEEP_OUT").unwrap_or_else(|_| "BENCH_sweep.json".to_string()),
+    );
+    write_bench_sweep(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+    println!(
+        "shared-coreset vs independent sweep total: {speedup:.2}× (acceptance target ≥ 2×, \
+         identical per-k objectives)"
+    );
+    Ok(())
+}

@@ -84,6 +84,43 @@
 //!   differ slightly across modes (patching freezes the Step-2 models, a
 //!   rebuild re-solves them); the bench instead asserts the final grid
 //!   *mass* — which is model-independent — matches exactly.
+//!
+//! # `BENCH_sweep.json` schema (version 1)
+//!
+//! `benches/k_sweep.rs` emits one document per invocation (path from
+//! `RKMEANS_SWEEP_OUT`, default `BENCH_sweep.json`) comparing a k-sweep
+//! over one shared staged-pipeline `Coreset` against independent
+//! one-shot `rkmeans()` runs:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "sweep",
+//!   "records": [
+//!     {
+//!       "label": "retailer",
+//!       "mode": "shared-coreset",
+//!       "ks": [4, 8, 16, 32],
+//!       "kappa": 16,
+//!       "grid_cells": 17342,
+//!       "total_s": 0.41,
+//!       "per_k_s": [0.02, 0.04, 0.08, 0.15],
+//!       "objectives": [812345.0, 401234.0, 201234.0, 101234.0],
+//!       "speedup_vs_independent": 2.7
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `mode` is `shared-coreset` (Steps 1–3 once, Step 4 per k) or
+//!   `independent` (the full pipeline per k); `kappa` is the shared
+//!   Step-2 budget (fixed across the sweep so both arms build the same
+//!   grid and per-k objectives are bitwise-identical).
+//! * `total_s` covers the whole arm (for the shared arm this includes
+//!   the one-time Steps 1–3); `per_k_s` / `objectives` are parallel to
+//!   `ks`.
+//! * `speedup_vs_independent` = independent total / shared total
+//!   (shared rows only). The acceptance target is ≥ 2×.
 
 pub mod paper;
 
@@ -446,6 +483,123 @@ pub fn write_bench_stream(path: &Path, records: &[StreamBenchRecord]) -> std::io
     std::fs::write(path, bench_stream_json(records).to_string())
 }
 
+/// One k-sweep measurement for `BENCH_sweep.json` (schema in the module
+/// docs).
+#[derive(Clone, Debug)]
+pub struct SweepBenchRecord {
+    pub label: String,
+    /// `"shared-coreset"` or `"independent"`.
+    pub mode: String,
+    /// The swept k values.
+    pub ks: Vec<usize>,
+    /// The fixed Step-2 budget κ shared across the sweep.
+    pub kappa: usize,
+    /// Non-zero grid cells `|G|` of the (shared) coreset.
+    pub grid_cells: usize,
+    /// Wall-clock of the whole arm (shared arm: includes Steps 1–3).
+    pub total_s: f64,
+    /// Per-k wall-clock, parallel to `ks`.
+    pub per_k_s: Vec<f64>,
+    /// Per-k Step-4 objectives, parallel to `ks`.
+    pub objectives: Vec<f64>,
+    /// Independent total / shared total (shared rows only).
+    pub speedup_vs_independent: Option<f64>,
+}
+
+impl SweepBenchRecord {
+    /// Build a record from one arm's measurements.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_runs(
+        label: &str,
+        mode: &str,
+        ks: &[usize],
+        kappa: usize,
+        grid_cells: usize,
+        total_s: f64,
+        per_k_s: &[f64],
+        objectives: &[f64],
+    ) -> Self {
+        assert_eq!(ks.len(), per_k_s.len(), "per_k_s not parallel to ks");
+        assert_eq!(ks.len(), objectives.len(), "objectives not parallel to ks");
+        SweepBenchRecord {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            ks: ks.to_vec(),
+            kappa,
+            grid_cells,
+            total_s,
+            per_k_s: per_k_s.to_vec(),
+            objectives: objectives.to_vec(),
+            speedup_vs_independent: None,
+        }
+    }
+
+    /// Attach the total-time speedup against the independent reference.
+    pub fn with_speedup_vs(mut self, independent: &SweepBenchRecord) -> Self {
+        self.speedup_vs_independent = Some(independent.total_s / self.total_s.max(1e-12));
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<12} {:<15} ks={:?} κ={:<3} |G|={:<8} total {:>8.3}s{}",
+            self.label,
+            self.mode,
+            self.ks,
+            self.kappa,
+            self.grid_cells,
+            self.total_s,
+            self.speedup_vs_independent
+                .map(|s| format!("  ({s:.2}× vs independent)"))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert(
+            "ks".to_string(),
+            Json::Arr(self.ks.iter().map(|&k| Json::Num(k as f64)).collect()),
+        );
+        m.insert("kappa".to_string(), Json::Num(self.kappa as f64));
+        m.insert("grid_cells".to_string(), Json::Num(self.grid_cells as f64));
+        m.insert("total_s".to_string(), Json::Num(self.total_s));
+        m.insert(
+            "per_k_s".to_string(),
+            Json::Arr(self.per_k_s.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        m.insert(
+            "objectives".to_string(),
+            Json::Arr(self.objectives.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        if let Some(s) = self.speedup_vs_independent {
+            m.insert("speedup_vs_independent".to_string(), Json::Num(s));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_sweep.json` document.
+pub fn bench_sweep_json(records: &[SweepBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("sweep".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(SweepBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_sweep.json` document to disk.
+pub fn write_bench_sweep(path: &Path, records: &[SweepBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_sweep_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -545,6 +699,46 @@ mod tests {
         assert!(recs[0].get("speedup_vs_rebuild").is_none());
         let s = recs[1].get("speedup_vs_rebuild").unwrap().as_f64().unwrap();
         assert!((s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_bench_json_roundtrips() {
+        let indep = SweepBenchRecord::from_runs(
+            "retailer",
+            "independent",
+            &[4, 8],
+            8,
+            400,
+            2.0,
+            &[0.8, 1.2],
+            &[100.0, 50.0],
+        );
+        let shared = SweepBenchRecord::from_runs(
+            "retailer",
+            "shared-coreset",
+            &[4, 8],
+            8,
+            400,
+            0.5,
+            &[0.1, 0.2],
+            &[100.0, 50.0],
+        )
+        .with_speedup_vs(&indep);
+        assert!((shared.speedup_vs_independent.unwrap() - 4.0).abs() < 1e-9);
+        assert!(shared.line().contains("vs independent"));
+
+        let doc = bench_sweep_json(&[indep, shared]);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("sweep"));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("independent"));
+        assert!(recs[0].get("speedup_vs_independent").is_none());
+        let ks = recs[1].get("ks").unwrap().as_arr().unwrap();
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[1].as_usize(), Some(8));
+        let s = recs[1].get("speedup_vs_independent").unwrap().as_f64().unwrap();
+        assert!((s - 4.0).abs() < 1e-9);
     }
 
     #[test]

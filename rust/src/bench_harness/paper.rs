@@ -150,7 +150,7 @@ pub fn end_to_end(db: &Database, feq: &Feq, k: usize, kappa: usize, cfg: &PaperC
         db,
         feq,
         &tree,
-        &RkConfig { seed: cfg.seed, ..RkConfig::new(k).with_kappa(kappa) },
+        &RkConfig::new(k).with_kappa(kappa).with_seed(cfg.seed),
     )?;
     let t_rkmeans = t0.elapsed().as_secs_f64();
 
@@ -237,7 +237,7 @@ pub fn fig3(ds: Dataset, cfg: &PaperCfg) -> Result<Table> {
             &db,
             &feq,
             &tree,
-            &RkConfig { seed: cfg.seed, ..RkConfig::new(k) },
+            &RkConfig::new(k).with_seed(cfg.seed),
         )?;
         t.row(vec![
             k.to_string(),
@@ -437,7 +437,7 @@ pub fn kappa_sweep(ds: Dataset, k: usize, kappas: &[usize], cfg: &PaperCfg) -> R
             &db,
             &feq,
             &tree,
-            &RkConfig { seed: cfg.seed, ..RkConfig::new(k).with_kappa(kappa) },
+            &RkConfig::new(k).with_kappa(kappa).with_seed(cfg.seed),
         )?;
         let elapsed = t0.elapsed();
         let full = if cfg.eval_approx {

@@ -84,6 +84,26 @@ impl CatClusters {
     }
 }
 
+impl CatClusters {
+    /// Reassemble a clustering from its serialized parts (the
+    /// [`RkModel`](crate::rkmeans::RkModel) byte format stores `heavy`,
+    /// `heavy_w`, `light` and `cost`); the light-cluster mass/norm and the
+    /// heavy index are derived, so the reconstruction assigns and scores
+    /// identically to the original.
+    pub fn from_parts(
+        heavy: Vec<u64>,
+        heavy_w: Vec<f64>,
+        light: Vec<(u64, f64)>,
+        cost: f64,
+    ) -> CatClusters {
+        let light_mass: f64 = light.iter().map(|&(_, w)| w).sum();
+        let light_sq: f64 = light.iter().map(|&(_, w)| w * w).sum();
+        let heavy_index: FxHashMap<u64, u32> =
+            heavy.iter().enumerate().map(|(i, &e)| (e, i as u32)).collect();
+        CatClusters { heavy, heavy_w, light, light_mass, light_sq, cost, heavy_index }
+    }
+}
+
 /// Compute the optimal categorical κ-clustering from a marginal weight
 /// table `(category key, weight)` (Theorem 4.4).
 pub fn categorical_kmeans(marginal: &[(u64, f64)], kappa: usize) -> CatClusters {
@@ -227,6 +247,28 @@ mod tests {
                 rand_cost
             );
         });
+    }
+
+    #[test]
+    fn from_parts_reconstructs_identically() {
+        let marginal = vec![(10u64, 5.0), (20, 3.0), (30, 1.0), (40, 1.0)];
+        let c = categorical_kmeans(&marginal, 3);
+        let r = CatClusters::from_parts(
+            c.heavy.clone(),
+            c.heavy_w.clone(),
+            c.light.clone(),
+            c.cost,
+        );
+        assert_close(r.light_mass, c.light_mass, 1e-12);
+        assert_close(r.light_sq, c.light_sq, 1e-12);
+        assert_eq!(r.kappa(), c.kappa());
+        for key in [10u64, 20, 30, 40, 99] {
+            assert_eq!(r.gid(key), c.gid(key), "key {key}");
+            assert_close(r.light_coord(key), c.light_coord(key), 1e-12);
+        }
+        for g in 0..c.kappa() as u32 {
+            assert_close(r.component_norm_sq(g), c.component_norm_sq(g), 1e-12);
+        }
     }
 
     #[test]

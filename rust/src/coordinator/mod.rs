@@ -25,6 +25,35 @@
 //! * **Metrics** — counters for ingested/deleted/dropped tuples, job
 //!   counts and durations, backpressure waits, queue depths, and the
 //!   planner's `incremental.*` family, via [`crate::metrics::Metrics`].
+//!
+//! ## Replica serving from a shipped model
+//!
+//! Every [`ClusteringUpdate`] converts to a self-contained
+//! [`RkModel`] via [`ClusteringUpdate::model`]: the writer serializes it
+//! with [`RkModel::to_bytes`], ships the bytes, and replicas serve that
+//! version — assigning never-materialized tuples with
+//! [`RkModel::assign`] — while the coordinator keeps patching:
+//!
+//! ```no_run
+//! use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
+//! use rkmeans::rkmeans::{RkConfig, RkModel};
+//! use rkmeans::synthetic::{retailer, Scale};
+//! use std::time::Duration;
+//!
+//! let db = retailer::generate(Scale::tiny(), 1);
+//! let coord =
+//!     Coordinator::start(db, retailer::feq(), CoordinatorConfig::new(RkConfig::new(4)));
+//! coord.flush().unwrap();
+//! let update = coord.recv_update(Duration::from_secs(60)).unwrap();
+//!
+//! // Writer side: serialize this version's model and ship the bytes.
+//! let bytes = update.model().to_bytes();
+//!
+//! // Replica side (typically another process): restore and serve without
+//! // a database — `assign` takes feature values in FEQ feature order.
+//! let replica = RkModel::from_bytes(&bytes).unwrap();
+//! assert_eq!(replica.version, update.version);
+//! ```
 
 use crate::data::{Database, Value};
 use crate::incremental::{
@@ -32,7 +61,7 @@ use crate::incremental::{
 };
 use crate::metrics::{Counter, Metrics};
 use crate::query::{Feq, Hypergraph};
-use crate::rkmeans::{rkmeans, RkConfig, RkResult};
+use crate::rkmeans::{RkConfig, RkModel, RkPipeline, RkResult};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -95,6 +124,16 @@ pub struct ClusteringUpdate {
     /// Patch or rebuild (always [`UpdateMode::Rebuilt`] with the planner
     /// disabled).
     pub mode: UpdateMode,
+}
+
+impl ClusteringUpdate {
+    /// Wrap this update's payload as a self-contained serving
+    /// [`RkModel`], tagged with the update's version — the
+    /// replica-shipping path (serialize with [`RkModel::to_bytes`]; see
+    /// the module docs example).
+    pub fn model(&self) -> RkModel {
+        RkModel::from_result(&self.result).with_version(self.version)
+    }
 }
 
 enum Msg {
@@ -241,9 +280,13 @@ impl Coordinator {
                         }
                     }
                 }
-                // Plain full-pipeline path.
+                // Plain full-pipeline path (staged; see
+                // `crate::rkmeans::pipeline`).
                 js.pending.clear();
-                match rkmeans(db, &feq, &cfg.rk) {
+                match RkPipeline::plan(db, &feq)
+                    .and_then(|pipe| pipe.run(&cfg.rk))
+                    .map(RkModel::into_result)
+                {
                     Ok(result) => {
                         *version += 1;
                         job_ctr.inc();
@@ -548,6 +591,24 @@ mod tests {
         assert!((second.result.grid_mass - (mass0 - 2.0)).abs() < 1e-9);
         assert_eq!(coord.metrics().counter("coordinator.insert_errors").get(), 1);
         assert_eq!(coord.metrics().counter("coordinator.deleted").get(), 2);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn updates_ship_as_serving_models() {
+        let (db, feq) = setup();
+        let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
+        coord.flush().unwrap();
+        let update = coord.recv_update(Duration::from_secs(30)).expect("update");
+        // Ship the model bytes; a replica restores and serves a tuple in
+        // FEQ feature order (c, x) without touching any database.
+        let bytes = update.model().to_bytes();
+        let replica = RkModel::from_bytes(&bytes).unwrap();
+        assert_eq!(replica.version, update.version);
+        assert_eq!(replica.m(), 2);
+        let vals = vec![Value::Cat(1), Value::Double(3.0)];
+        assert!(replica.assign(&vals) < replica.k());
+        assert_eq!(replica.assign(&vals), update.model().assign(&vals));
         coord.shutdown().unwrap();
     }
 

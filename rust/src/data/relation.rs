@@ -1,7 +1,9 @@
-//! Columnar relations with optional tuple multiplicities.
+//! Columnar relations with optional tuple multiplicities and a
+//! value-keyed row index for O(1) retraction.
 
 use super::schema::{AttrType, Schema};
 use super::value::{CatId, Value};
+use crate::util::FxHashMap;
 
 /// A typed column of values.
 #[derive(Clone, Debug)]
@@ -78,13 +80,44 @@ pub struct Relation {
     len: usize,
     /// Fully-retracted tuples still occupying storage (see `retract_row`).
     zero_rows: usize,
+    /// Value-keyed row index: encoded tuple → row ids (oldest first),
+    /// built lazily on the first retraction so insert-only workloads pay
+    /// nothing. Makes `retract_row` O(1) in the relation size instead of
+    /// a newest-first O(n) scan; `compact` drops it (row ids shift) and
+    /// the next retraction rebuilds it.
+    row_index: Option<FxHashMap<Vec<u64>, Vec<u32>>>,
+}
+
+/// Hash encoding of a full tuple for the value-keyed row index. Doubles
+/// use their bit pattern with -0.0 normalized to 0.0 so the index agrees
+/// with `Value` equality; candidates are still value-verified on hit, so
+/// a cross-type key collision (e.g. `Int(5)` vs `Cat(5)`) cannot match.
+fn encode_row_key(vals: &[Value]) -> Vec<u64> {
+    vals.iter()
+        .map(|v| match v {
+            Value::Int(x) => *x as u64,
+            Value::Cat(c) => *c as u64,
+            Value::Double(x) => {
+                let x = if *x == 0.0 { 0.0 } else { *x };
+                x.to_bits()
+            }
+        })
+        .collect()
 }
 
 impl Relation {
     /// Create an empty relation.
     pub fn new(name: &str, schema: Schema) -> Self {
         let cols = schema.attrs().iter().map(|a| Column::empty(a.ty)).collect();
-        Relation { name: name.to_string(), schema, cols, weights: None, len: 0, zero_rows: 0 }
+        Relation {
+            name: name.to_string(),
+            schema,
+            cols,
+            weights: None,
+            len: 0,
+            zero_rows: 0,
+            row_index: None,
+        }
     }
 
     /// Number of tuples.
@@ -141,6 +174,9 @@ impl Relation {
         if let Some(w) = &mut self.weights {
             w.push(1.0);
         }
+        if let Some(idx) = &mut self.row_index {
+            idx.entry(encode_row_key(vals)).or_default().push(self.len as u32);
+        }
         self.len += 1;
     }
 
@@ -170,6 +206,12 @@ impl Relation {
     /// `false` (and changes nothing) when no matching tuple with at least
     /// `weight` multiplicity exists.
     ///
+    /// Matching rows are found through a lazily-built value-keyed row
+    /// index, so a retraction is O(1) in the relation size (plus the
+    /// duplicate count of that one tuple) instead of a newest-first O(n)
+    /// scan. The first call after construction or [`Relation::compact`]
+    /// pays a one-time O(n) index build.
+    ///
     /// Multiplicity arithmetic is exact on the ring ℤ (integer weights —
     /// the streaming contract; see [`crate::incremental`]) and on dyadic
     /// fractions. Arbitrary fractional weights are subject to f64
@@ -180,12 +222,27 @@ impl Relation {
         if vals.len() != self.cols.len() || !(weight > 0.0) {
             return false;
         }
+        // NaN never compares equal, so the pre-index linear scan could
+        // never match such a tuple; preserve that under the bit-keyed
+        // index.
+        if vals.iter().any(|v| matches!(v, Value::Double(x) if x.is_nan())) {
+            return false;
+        }
+        self.ensure_index();
+        let key = encode_row_key(vals);
+        let candidates: Vec<u32> = match self.row_index.as_ref().expect("index built").get(&key) {
+            None => return false,
+            Some(rows) => rows.clone(),
+        };
         // The tuple's multiplicity is the *aggregate* over all stored
         // rows with these values (duplicate unit inserts accumulate), so
         // retraction spreads over matching rows, newest first — matching
         // the value-multiset semantics of the incremental delta state.
-        let matches: Vec<usize> = (0..self.len)
+        // Candidates are value-verified: the index key is a hash encoding.
+        let matches: Vec<usize> = candidates
+            .iter()
             .rev()
+            .map(|&r| r as usize)
             .filter(|&r| {
                 self.weight(r) > 0.0
                     && (0..self.cols.len()).all(|c| self.value(r, c) == vals[c])
@@ -200,6 +257,7 @@ impl Relation {
         }
         let w = self.weights.as_mut().expect("weights just initialized");
         let mut remaining = weight;
+        let mut zeroed: Vec<u32> = Vec::new();
         for &r in &matches {
             if remaining <= 0.0 {
                 break;
@@ -209,9 +267,37 @@ impl Relation {
             remaining -= take;
             if w[r] == 0.0 {
                 self.zero_rows += 1;
+                zeroed.push(r as u32);
+            }
+        }
+        // Fully-retracted rows leave the index (they can never match
+        // again); empty entries are dropped so the index tracks the live
+        // tuple set.
+        if !zeroed.is_empty() {
+            let idx = self.row_index.as_mut().expect("index built");
+            if let Some(entry) = idx.get_mut(&key) {
+                entry.retain(|r| !zeroed.contains(r));
+                if entry.is_empty() {
+                    idx.remove(&key);
+                }
             }
         }
         true
+    }
+
+    /// Build the value-keyed row index over live (positive-weight) rows.
+    fn ensure_index(&mut self) {
+        if self.row_index.is_some() {
+            return;
+        }
+        let mut idx: FxHashMap<Vec<u64>, Vec<u32>> = FxHashMap::default();
+        for r in 0..self.len {
+            if self.weight(r) == 0.0 {
+                continue;
+            }
+            idx.entry(encode_row_key(&self.row(r))).or_default().push(r as u32);
+        }
+        self.row_index = Some(idx);
     }
 
     /// Number of fully-retracted (zero-weight) tuples still occupying
@@ -253,10 +339,14 @@ impl Relation {
         }
         self.len = keep.len();
         self.zero_rows = 0;
+        // Row ids shifted: drop the index; the next retraction rebuilds
+        // it over the compacted storage (coherent by construction).
+        self.row_index = None;
         removed
     }
 
-    /// Estimated in-memory size in bytes (for Table-1 style reporting).
+    /// Estimated in-memory size in bytes (for Table-1 style reporting),
+    /// including the value-keyed row index once a retraction has built it.
     pub fn byte_size(&self) -> u64 {
         let per_row: u64 = self
             .schema
@@ -268,7 +358,16 @@ impl Relation {
                 AttrType::Cat => 4,
             })
             .sum();
-        per_row * self.len as u64 + if self.weights.is_some() { 8 * self.len as u64 } else { 0 }
+        let mut total =
+            per_row * self.len as u64 + if self.weights.is_some() { 8 * self.len as u64 } else { 0 };
+        if let Some(idx) = &self.row_index {
+            // Per entry: encoded key (one u64 per column + Vec header) and
+            // the row-id list (u32 per live duplicate + Vec header).
+            let key_bytes = 24 + 8 * self.cols.len() as u64;
+            total += idx.len() as u64 * key_bytes;
+            total += idx.values().map(|v| 24 + 4 * v.len() as u64).sum::<u64>();
+        }
+        total
     }
 
     /// Distinct values (by join key) in a column. Panics for Double columns.
@@ -382,10 +481,64 @@ mod tests {
     }
 
     #[test]
+    fn indexed_retraction_handles_interleaved_ops() {
+        let mut r = Relation::new("t", Schema::new(vec![Attr::cat("c", 8), Attr::double("x")]));
+        for i in 0..10u32 {
+            r.push_row(&[Value::Cat(i % 2), Value::Double((i % 3) as f64)]);
+        }
+        // (0, 0.0) occurs at i ∈ {0, 6}: aggregate multiplicity 2.
+        assert!(r.retract_row(&[Value::Cat(0), Value::Double(0.0)], 2.0));
+        assert!(!r.retract_row(&[Value::Cat(0), Value::Double(0.0)], 1.0));
+        // Rows pushed after the index exists are retractable too.
+        r.push_row(&[Value::Cat(0), Value::Double(0.0)]);
+        assert!(r.retract_row(&[Value::Cat(0), Value::Double(0.0)], 1.0));
+        assert_eq!(r.zero_rows(), 3);
+        // Compaction shifts row ids; the index stays coherent (rebuilt).
+        assert_eq!(r.compact(), 3);
+        assert_eq!(r.n_rows(), 8);
+        assert!(r.retract_row(&[Value::Cat(1), Value::Double(1.0)], 1.0));
+        assert!(!r.retract_row(&[Value::Cat(7), Value::Double(9.9)], 1.0));
+    }
+
+    #[test]
+    fn index_verifies_values_not_just_keys() {
+        // Int(5) and Cat(5) share a key encoding but must not cross-match.
+        let mut r = Relation::new("t", Schema::new(vec![Attr::int("i")]));
+        r.push_row(&[Value::Int(5)]);
+        assert!(!r.retract_row(&[Value::Cat(5)], 1.0));
+        assert!(r.retract_row(&[Value::Int(5)], 1.0));
+    }
+
+    #[test]
+    fn nan_tuples_never_match() {
+        let mut r = Relation::new("t", Schema::new(vec![Attr::double("x")]));
+        r.push_row(&[Value::Double(f64::NAN)]);
+        assert!(!r.retract_row(&[Value::Double(f64::NAN)], 1.0));
+    }
+
+    #[test]
+    fn negative_zero_matches_positive_zero() {
+        let mut r = Relation::new("t", Schema::new(vec![Attr::double("x")]));
+        r.push_row(&[Value::Double(0.0)]);
+        assert!(r.retract_row(&[Value::Double(-0.0)], 1.0));
+        r.push_row(&[Value::Double(-0.0)]);
+        assert!(r.retract_row(&[Value::Double(0.0)], 1.0));
+    }
+
+    #[test]
     fn byte_size_counts_weights() {
         let mut r = sample();
         let base = r.byte_size();
         r.push_row_weighted(&[Value::Int(3), Value::Double(2.0), Value::Cat(0)], 2.0);
         assert!(r.byte_size() > base);
+    }
+
+    #[test]
+    fn byte_size_counts_the_row_index() {
+        let mut r = sample();
+        let before = r.byte_size();
+        // The first retraction builds the index; reported memory grows.
+        assert!(r.retract_row(&[Value::Int(1), Value::Double(0.5), Value::Cat(2)], 1.0));
+        assert!(r.byte_size() > before);
     }
 }

@@ -28,13 +28,13 @@
 //! (`incremental.*`), including an estimated per-batch saving against the
 //! last observed rebuild time.
 
-use crate::cluster::{sparse_lloyd_warm_with, CentroidCoord, EngineOpts, LloydConfig};
+use crate::cluster::CentroidCoord;
 use crate::coreset::{sparse_from_table, SubspaceModel};
 use crate::data::Database;
 use crate::faq::GidAssigner;
 use crate::metrics::Metrics;
 use crate::query::{Feq, Hypergraph, JoinTree};
-use crate::rkmeans::{rkmeans_with_tree, RkConfig, RkResult, StepTimings};
+use crate::rkmeans::{ClusterOpts, Coreset, RkConfig, RkModel, RkPipeline, RkResult, StepTimings};
 use crate::util::FxHashMap;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -118,6 +118,17 @@ pub struct IncrementalState {
     pub result: Arc<RkResult>,
 }
 
+impl IncrementalState {
+    /// A self-contained serving model of this version: factored centroids
+    /// + subspace assigners, **without** the delta messages — the
+    /// snapshot-shipping payload. Serialize with
+    /// [`RkModel::to_bytes`] and replicas serve this version (tagged via
+    /// [`RkModel::version`]) while the writer keeps patching.
+    pub fn model(&self) -> RkModel {
+        RkModel::from_result(&self.result).with_version(self.version)
+    }
+}
+
 /// The incremental maintenance engine the coordinator drives (see module
 /// docs for the decision procedure).
 pub struct IncrementalEngine {
@@ -182,7 +193,9 @@ impl IncrementalEngine {
         version: u64,
     ) -> Result<(IncrementalState, f64)> {
         let t0 = Instant::now();
-        let result = Arc::new(rkmeans_with_tree(db, feq, tree, rk)?);
+        // Staged pipeline over the caller's tree (bitwise-identical to the
+        // monolithic shim; see `crate::rkmeans::pipeline`).
+        let result = Arc::new(RkPipeline::with_tree(db, feq, tree).run(rk)?.into_result());
         let delta = {
             let assigners = assigner_map(&result.models);
             DeltaFaq::init(db, feq, tree, &assigners)?
@@ -278,42 +291,25 @@ impl IncrementalEngine {
         if grid.n() == 0 {
             bail!("FEQ output is empty after deltas: nothing to cluster");
         }
+        // The delta-patched grid becomes a staged Coreset artifact, so the
+        // warm-started Step 4 runs through the same code path as the
+        // pipeline's `cluster_warm`.
+        let coreset = Coreset::from_parts(grid, subspaces, self.state.models.clone());
         let step3 = t0.elapsed();
 
         let t1 = Instant::now();
-        let lcfg = LloydConfig {
-            k: self.rk.k,
-            max_iters: self.rk.max_iters,
-            tol: self.rk.tol,
-            seed: self.rk.seed,
+        let mut model = coreset
+            .cluster_warm(&ClusterOpts::from_config(&self.rk), Some(&self.state.centroids))
+            .with_version(self.state.version + 1);
+        model.timings = StepTimings {
+            step3_grid: step3,
+            step4_cluster: t1.elapsed(),
+            ..StepTimings::default()
         };
-        let (res, step4_stats) = sparse_lloyd_warm_with(
-            &grid,
-            &subspaces,
-            &lcfg,
-            &EngineOpts::default(),
-            Some(&self.state.centroids),
-        );
-        let step4 = t1.elapsed();
 
-        let quantization_cost: f64 = self.state.models.iter().map(|m| m.cost).sum();
-        self.state.centroids = res.centroids.clone();
+        self.state.centroids = model.centroids.clone();
         self.state.version += 1;
-        self.state.result = Arc::new(RkResult {
-            centroids: res.centroids,
-            models: self.state.models.clone(),
-            objective_grid: res.objective,
-            quantization_cost,
-            grid_points: grid.n(),
-            grid_mass: grid.weights.iter().sum(),
-            iters: res.iters,
-            timings: StepTimings {
-                step3_grid: step3,
-                step4_cluster: step4,
-                ..StepTimings::default()
-            },
-            step4_stats,
-        });
+        self.state.result = Arc::new(model.into_result());
         self.patches_since_rebuild += 1;
         self.join_churn += patch_stats.mass_delta_abs;
         self.metrics.gauge("incremental.grid_cells").set(patch_stats.grid_cells as i64);
@@ -359,6 +355,12 @@ impl IncrementalEngine {
     /// Shared handle to the current result (refcount bump, no deep copy).
     pub fn shared_result(&self) -> Arc<RkResult> {
         self.state.result.clone()
+    }
+
+    /// A self-contained serving model of the current version (see
+    /// [`IncrementalState::model`]).
+    pub fn model(&self) -> RkModel {
+        self.state.model()
     }
 
     /// Snapshot the full maintenance state (serving stays versioned:
@@ -570,6 +572,32 @@ mod tests {
         apply_to_db(&mut db, &b3).unwrap();
         let (d3, _) = engine.apply_batch(&db, &b3).unwrap();
         assert_eq!(d3, PlanDecision::Patched);
+    }
+
+    #[test]
+    fn snapshot_ships_as_serving_model() {
+        let (mut db, feq) = setup(150, 10);
+        let mut engine =
+            IncrementalEngine::new(&db, feq, RkConfig::new(3), lenient(), Metrics::new())
+                .unwrap();
+        let mut rng = SplitMix64::new(23);
+        let deltas = batch(&mut rng, 6);
+        apply_to_db(&mut db, &deltas).unwrap();
+        engine.apply_batch(&db, &deltas).unwrap();
+
+        // Writer snapshots a version, ships bytes; the replica serves it
+        // without ever seeing the database or the delta state.
+        let model = engine.model();
+        assert_eq!(model.version, engine.version());
+        let replica = RkModel::from_bytes(&model.to_bytes()).unwrap();
+        assert_eq!(replica.version, engine.version());
+        assert_eq!(replica.k(), model.k());
+        for vals in [
+            vec![Value::Cat(1), Value::Double(0.5), Value::Double(1.0)],
+            vec![Value::Cat(6), Value::Double(100.25), Value::Double(50.0)],
+        ] {
+            assert_eq!(model.assign(&vals), replica.assign(&vals));
+        }
     }
 
     #[test]

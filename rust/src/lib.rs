@@ -22,19 +22,29 @@
 //! the full join output (9-approximation with exact sub-solvers), computed in
 //! time that can be *asymptotically smaller than `|X|`* (Theorem 4.7).
 //!
-//! ## Architecture (three layers)
+//! ## Architecture (three layers, staged)
 //!
-//! * **Layer 3 (this crate)** — the relational engine and coordinator:
-//!   columnar storage ([`data`]), join hypergraphs + GYO join-tree
-//!   decomposition ([`query`]), a Yannakakis/InsideOut message-passing FAQ
-//!   engine ([`faq`]), the materializing baseline ([`join`]), the clustering
-//!   tool-box ([`cluster`]), the grid coreset ([`coreset`]), the end-to-end
-//!   pipeline ([`rkmeans`]), a streaming coordinator with backpressure and
-//!   incremental re-clustering ([`coordinator`]), true delta maintenance
-//!   of the grid coreset under tuple inserts/deletes ([`incremental`]),
-//!   synthetic workloads
-//!   mirroring the paper's Retailer / Favorita / Yelp datasets
-//!   ([`synthetic`]) and the paper-table bench harness ([`bench_harness`]).
+//! * **Layer 3 (this crate)** — the relational engine and coordinator,
+//!   organized around the **staged pipeline API**
+//!   ([`rkmeans::RkPipeline`]): plan (join tree + cyclic rewrite) →
+//!   [`rkmeans::Marginals`] (Step 1) → [`rkmeans::SubspaceSet`] (Step 2)
+//!   → [`rkmeans::Coreset`] (Step 3) → [`rkmeans::RkModel`] (Step 4).
+//!   Each stage returns an owned artifact later stages borrow, so a
+//!   κ-sweep reuses the marginals and a k-sweep
+//!   ([`rkmeans::Coreset::sweep`]) reuses one coreset; [`rkmeans::RkModel`]
+//!   is a self-contained, **serializable** serving handle
+//!   (`assign`/`assign_batch` on never-materialized tuples,
+//!   versioned `to_bytes`/`from_bytes` for replica shipping).
+//!   Underneath sit columnar storage ([`data`]), join hypergraphs + GYO
+//!   join-tree decomposition ([`query`]), a Yannakakis/InsideOut
+//!   message-passing FAQ engine ([`faq`]), the materializing baseline
+//!   ([`join`]), the clustering tool-box ([`cluster`]), the grid coreset
+//!   internals ([`coreset`]), a streaming coordinator with backpressure
+//!   and incremental re-clustering ([`coordinator`]), true delta
+//!   maintenance of the grid coreset under tuple inserts/deletes
+//!   ([`incremental`]), synthetic workloads mirroring the paper's
+//!   Retailer / Favorita / Yelp datasets ([`synthetic`]) and the
+//!   paper-table bench harness ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the JAX weighted-Lloyd step,
 //!   AOT-lowered to HLO text per shape bucket (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels/lloyd.py)** — the Pallas
@@ -46,13 +56,40 @@
 //!
 //! ## Quickstart
 //!
+//! Stage the pipeline once, then sweep k over the shared coreset and ship
+//! the winning model:
+//!
+//! ```no_run
+//! use rkmeans::{ClusterOpts, RkModel, RkPipeline, SubspaceOpts};
+//! use rkmeans::synthetic::{retailer, Scale};
+//!
+//! let db = retailer::generate(Scale::tiny(), 42);
+//! let feq = retailer::feq();
+//!
+//! let pipe = RkPipeline::plan(&db, &feq).unwrap();
+//! let marginals = pipe.marginals().unwrap();       // Step 1 — paid once
+//! let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(10)).unwrap();
+//! let coreset = pipe.coreset(&subspaces).unwrap(); // Step 3 — paid once
+//! for model in coreset.sweep(&[5, 10, 20], &ClusterOpts::new(0)) {
+//!     println!("k={}: objective={:.4e} |G|={}",
+//!              model.k(), model.objective_grid, model.grid_points);
+//! }
+//!
+//! // Serving: serialize, restore anywhere, assign without the database.
+//! let model = coreset.cluster(&ClusterOpts::new(10));
+//! let replica = RkModel::from_bytes(&model.to_bytes()).unwrap();
+//! assert_eq!(replica.k(), 10);
+//! ```
+//!
+//! The monolithic [`rkmeans()`](rkmeans::rkmeans) free function remains
+//! as a one-shot convenience (bitwise-identical to the staged path):
+//!
 //! ```no_run
 //! use rkmeans::synthetic::{retailer, Scale};
 //! use rkmeans::rkmeans::{rkmeans, RkConfig};
 //!
 //! let db = retailer::generate(Scale::tiny(), 42);
-//! let feq = retailer::feq();
-//! let res = rkmeans(&db, &feq, &RkConfig::new(5)).unwrap();
+//! let res = rkmeans(&db, &retailer::feq(), &RkConfig::new(5)).unwrap();
 //! println!("objective={} grid={} in {:?}",
 //!          res.objective_grid, res.grid_points, res.timings.total());
 //! ```
@@ -73,4 +110,7 @@ pub mod runtime;
 pub mod synthetic;
 pub mod util;
 
-pub use rkmeans::{rkmeans, RkConfig, RkResult};
+pub use rkmeans::{
+    rkmeans, ClusterOpts, Coreset, Marginals, RkConfig, RkModel, RkPipeline, RkResult,
+    SubspaceOpts, SubspaceSet,
+};

@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //! * `gen`       — generate a synthetic dataset to CSV;
-//! * `cluster`   — run Rk-means on a dataset (built-in or CSV directory);
+//! * `cluster`   — run Rk-means on a dataset (built-in or CSV directory),
+//!   optionally exporting the serving model (`--model-out`);
+//! * `sweep`     — k-sweep over one shared coreset (staged pipeline);
+//! * `assign`    — serve a tuple from an exported model file, without any
+//!   database;
 //! * `baseline`  — run the materialize-then-cluster baseline;
 //! * `tables`    — regenerate the paper's tables/figures;
 //! * `serve`     — streaming-coordinator demo (ingest + periodic recluster);
@@ -15,10 +19,14 @@ use anyhow::{anyhow, bail, Result};
 use rkmeans::bench_harness::paper::{self, PaperCfg};
 use rkmeans::cluster::LloydConfig;
 use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
+use rkmeans::coreset::SubspaceSolver;
 use rkmeans::data::{csv, Value};
 #[cfg(feature = "pjrt")]
 use rkmeans::join::EmbedSpec;
-use rkmeans::rkmeans::{full_objective, materialize_and_cluster_capped, rkmeans, RkConfig};
+use rkmeans::rkmeans::{
+    full_objective, materialize_and_cluster_capped, ClusterOpts, RkConfig, RkModel, RkPipeline,
+    SubspaceOpts,
+};
 #[cfg(feature = "pjrt")]
 use rkmeans::runtime::PjrtRuntime;
 use rkmeans::synthetic::{Dataset, Scale};
@@ -32,7 +40,10 @@ rkmeans — fast k-means clustering for relational data (Rk-means, 2019)
 USAGE:
   rkmeans gen       --dataset <retailer|favorita|yelp> [--scale F] [--seed N] --out DIR
   rkmeans cluster   (--dataset NAME | --db DIR) --k K [--kappa κ] [--rho ρ] [--scale F]
-                    [--seed N] [--engine native|xla] [--eval-full]
+                    [--seed N] [--engine native|xla] [--eval-full] [--model-out FILE]
+  rkmeans sweep     (--dataset NAME | --db DIR) [--ks K1,K2,...] [--kappa κ] [--scale F]
+                    [--seed N]
+  rkmeans assign    --model FILE [--values \"v1,v2,...\"]
   rkmeans baseline  (--dataset NAME | --db DIR) --k K [--scale F] [--seed N] [--cap ROWS]
   rkmeans tables    [--which table1|table2|fig3|ablation-fd|ablation-sparse|kappa-sweep|all]
                     [--scale F] [--seed N] [--no-approx]
@@ -136,12 +147,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let kappa = args.num("kappa", 0usize)?;
     let seed = args.num("seed", 42u64)?;
     let rho = args.num("rho", 0.0f64)?; // §3 regularizer (atom penalty)
-    let cfg = RkConfig { seed, ..RkConfig::new(k).with_kappa(kappa).with_regularization(rho) };
+    let cfg = RkConfig::new(k).with_kappa(kappa).with_regularization(rho).with_seed(seed);
 
     let engine = args.get("engine").unwrap_or("native");
     let t0 = std::time::Instant::now();
     let res = match engine {
-        "native" => rkmeans(&db, &feq, &cfg)?,
+        "native" => RkPipeline::plan(&db, &feq)?.run(&cfg)?.into_result(),
         #[cfg(feature = "pjrt")]
         "xla" => {
             let rt = PjrtRuntime::load(&PjrtRuntime::default_dir())?;
@@ -170,7 +181,100 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         let full = full_objective(&db, &feq, &res)?;
         println!("full L(X,C)       : {full:.6e}");
     }
+    if let Some(path) = args.get("model-out") {
+        let bytes = RkModel::from_result(&res).to_bytes();
+        std::fs::write(path, &bytes)?;
+        println!("model out         : {path} ({} bytes; serve with `rkmeans assign`)", bytes.len());
+    }
     Ok(())
+}
+
+/// k-sweep over one shared coreset: Steps 1–3 run once, Step 4 per k
+/// (each result identical to an independent full run at that k).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let (db, feq, name) = load_db(args)?;
+    let ks: Vec<usize> = args
+        .get("ks")
+        .unwrap_or("4,8,16,32")
+        .split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<usize>().map_err(|_| anyhow!("bad k in --ks: {s:?}"))
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    let kappa = args.num("kappa", ks.iter().copied().max().unwrap_or(8))?;
+    let seed = args.num("seed", 42u64)?;
+
+    let t0 = std::time::Instant::now();
+    let pipe = RkPipeline::plan(&db, &feq)?;
+    let marginals = pipe.marginals()?;
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(kappa))?;
+    let coreset = pipe.coreset(&subspaces)?;
+    let shared = t0.elapsed();
+    println!(
+        "dataset {name}: shared steps 1–3 in {shared:?} (|G| = {} cells, κ = {kappa})",
+        human_count(coreset.n() as u64)
+    );
+    for model in coreset.sweep(&ks, &ClusterOpts::new(0).with_seed(seed)) {
+        println!(
+            "  k={:<4} objective={:.6e}  iters={:<3} step4={:?}",
+            model.k(),
+            model.objective_grid,
+            model.iters,
+            model.timings.step4_cluster
+        );
+    }
+    Ok(())
+}
+
+/// Serve a tuple from an exported model file — no database involved.
+fn cmd_assign(args: &Args) -> Result<()> {
+    let path = args.get("model").ok_or_else(|| anyhow!("need --model FILE"))?;
+    let bytes = std::fs::read(path)?;
+    let model = RkModel::from_bytes(&bytes)?;
+    let names: Vec<&str> = model.models.iter().map(|m| m.name.as_str()).collect();
+    println!(
+        "model: version {} k={} m={} (|G|={} cells, objective {:.6e})",
+        model.version,
+        model.k(),
+        model.m(),
+        model.grid_points,
+        model.objective_grid
+    );
+    let Some(values) = args.get("values") else {
+        println!(
+            "pass --values \"v1,v2,...\" — {} feature values in FEQ order: {}",
+            model.m(),
+            names.join(", ")
+        );
+        return Ok(());
+    };
+    let vals = parse_tuple(&model, values)?;
+    let (c, d) = model.assign_with_distance(&vals);
+    println!("cluster {c} (squared distance {d:.6e})");
+    Ok(())
+}
+
+/// Parse a comma-separated tuple using the model's per-subspace solver
+/// kinds: continuous features parse as f64, categorical as u64 keys.
+fn parse_tuple(model: &RkModel, text: &str) -> Result<Vec<Value>> {
+    let toks: Vec<&str> = text.split(',').map(|t| t.trim()).collect();
+    if toks.len() != model.m() {
+        bail!("expected {} comma-separated feature values, got {}", model.m(), toks.len());
+    }
+    toks.iter()
+        .zip(&model.models)
+        .map(|(t, m)| match &m.solver {
+            SubspaceSolver::Continuous(_) => t
+                .parse::<f64>()
+                .map(Value::Double)
+                .map_err(|_| anyhow!("feature {:?}: bad number {t:?}", m.name)),
+            SubspaceSolver::Categorical(_) => t
+                .parse::<u64>()
+                .map(|k| Value::Int(k as i64))
+                .map_err(|_| anyhow!("feature {:?}: bad category key {t:?}", m.name)),
+        })
+        .collect()
 }
 
 /// Steps 1–3 native, Step 4 through the PJRT artifact (dense grid path).
@@ -278,7 +382,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fact_schema = db.get(&fact).expect("fact relation").schema.clone();
     let domains: Vec<u32> = fact_schema.attrs().iter().map(|a| a.domain).collect();
 
-    let mut cfg = CoordinatorConfig::new(RkConfig { seed, ..RkConfig::new(k) });
+    let mut cfg = CoordinatorConfig::new(RkConfig::new(k).with_seed(seed));
     cfg.recluster_every = rate;
     let coord = Coordinator::start(db, feq, cfg);
 
@@ -358,6 +462,8 @@ fn main() {
     let result = Args::parse(&rest).and_then(|args| match cmd {
         "gen" => cmd_gen(&args),
         "cluster" => cmd_cluster(&args),
+        "sweep" => cmd_sweep(&args),
+        "assign" => cmd_assign(&args),
         "baseline" => cmd_baseline(&args),
         "tables" => cmd_tables(&args),
         "serve" => cmd_serve(&args),

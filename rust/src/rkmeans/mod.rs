@@ -1,12 +1,30 @@
 //! The end-to-end Rk-means pipeline (paper Algorithm 1 + §4.3) and the
 //! materialize-then-cluster baseline it is benchmarked against.
 //!
+//! The primary API is the **staged pipeline** ([`pipeline`]): each of the
+//! paper's four steps returns an owned, inspectable artifact
+//! ([`Marginals`] → [`SubspaceSet`] → [`Coreset`] → [`RkModel`]) that
+//! later stages borrow, so callers reuse a join tree + marginals across κ
+//! choices and a single coreset across a whole k-sweep
+//! ([`Coreset::sweep`]). [`RkModel`] ([`model`]) caps the pipeline as a
+//! self-contained, serializable serving handle.
+//!
 //! ```no_run
+//! use rkmeans::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
 //! use rkmeans::synthetic::{retailer, Scale};
-//! use rkmeans::rkmeans::{rkmeans, RkConfig};
 //! let db = retailer::generate(Scale::tiny(), 1);
-//! let res = rkmeans(&db, &retailer::feq(), &RkConfig::new(10)).unwrap();
+//! let feq = retailer::feq();
+//! let pipe = RkPipeline::plan(&db, &feq).unwrap();
+//! let marginals = pipe.marginals().unwrap();
+//! let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(10)).unwrap();
+//! let coreset = pipe.coreset(&subspaces).unwrap();
+//! let model = coreset.cluster(&ClusterOpts::new(10));
 //! ```
+//!
+//! The monolithic [`rkmeans`] / [`rkmeans_with_tree`] free functions
+//! remain as thin one-shot convenience shims over the staged path
+//! (bitwise-identical output); prefer the staged API for anything that
+//! runs more than once.
 //!
 //! Steps (all without materializing the join):
 //! 1. marginal weights `w_j` per feature — Yannakakis two-pass FAQ;
@@ -16,17 +34,18 @@
 //!    dense XLA/PJRT artifact path (`crate::runtime`, `pjrt` feature).
 
 pub mod baseline;
+pub mod model;
+pub mod pipeline;
 
 pub use baseline::{materialize_and_cluster, materialize_and_cluster_capped, BaselineResult};
+pub use model::{RkModel, RKMODEL_FORMAT_VERSION};
+pub use pipeline::{ClusterOpts, Coreset, Marginals, RkPipeline, SubspaceOpts, SubspaceSet};
 
 use crate::cluster::sparse_lloyd::CentroidCoord;
-use crate::cluster::{sparse_lloyd_with, EngineOpts, LloydConfig, PruneStats};
-use crate::coreset::{
-    build_grid, centroids_dense, eval_full_objective, SubspaceModel,
-};
+use crate::cluster::PruneStats;
+use crate::coreset::{centroids_dense, eval_full_objective, SubspaceModel};
 use crate::data::Database;
-use crate::faq::{full_join_counts, marginals};
-use crate::join::{ensure_acyclic, EmbedSpec};
+use crate::join::EmbedSpec;
 use crate::query::{Feq, Hypergraph, JoinTree};
 use anyhow::Result;
 use std::time::Duration;
@@ -65,6 +84,24 @@ impl RkConfig {
     /// Enable the §3 regularizer with atom penalty ρ.
     pub fn with_regularization(mut self, rho: f64) -> Self {
         self.regularization = rho;
+        self
+    }
+
+    /// Override the seeding RNG seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the Step-4 Lloyd iteration cap.
+    pub fn with_max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Override the Step-4 stopping tolerance.
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
         self
     }
 
@@ -129,68 +166,29 @@ impl RkResult {
     }
 }
 
-/// Run Rk-means on a database + FEQ. Cyclic FEQs are rewritten via
-/// [`ensure_acyclic`] first (relation merging).
+/// One-shot convenience: run all four stages of Rk-means on a database +
+/// FEQ. Cyclic FEQs are rewritten first (relation merging, see
+/// [`crate::join::ensure_acyclic`]).
+///
+/// Deprecated in favor of the staged [`RkPipeline`]: this shim recomputes
+/// Steps 1–3 on every call, so a k- or κ-sweep pays the FAQ passes
+/// repeatedly. Output is bitwise-identical to the staged path with the
+/// same configuration.
 pub fn rkmeans(db: &Database, feq: &Feq, cfg: &RkConfig) -> Result<RkResult> {
-    feq.validate(db)?;
-    if Hypergraph::from_feq(db, feq).join_tree().is_err() {
-        let (db2, feq2) = ensure_acyclic(db, feq)?;
-        let tree = Hypergraph::from_feq(&db2, &feq2).join_tree()?;
-        return rkmeans_with_tree(&db2, &feq2, &tree, cfg);
-    }
-    let tree = Hypergraph::from_feq(db, feq).join_tree()?;
-    rkmeans_with_tree(db, feq, &tree, cfg)
+    Ok(RkPipeline::plan(db, feq)?.run(cfg)?.into_result())
 }
 
-/// Run Rk-means with a pre-built join tree (lets callers reuse the tree).
+/// One-shot convenience with a pre-built join tree (lets callers reuse
+/// the tree across calls). Deprecated in favor of
+/// [`RkPipeline::with_tree`]; see [`rkmeans`]. Output is
+/// bitwise-identical to the staged path with the same configuration.
 pub fn rkmeans_with_tree(
     db: &Database,
     feq: &Feq,
     tree: &JoinTree,
     cfg: &RkConfig,
 ) -> Result<RkResult> {
-    let kappa = cfg.effective_kappa();
-    let mut timings = StepTimings::default();
-
-    // Step 1: marginal weights w_j via two-pass message passing.
-    let t0 = std::time::Instant::now();
-    let jc = full_join_counts(db, tree)?;
-    let margs = marginals(db, feq, tree, &jc)?;
-    timings.step1_marginals = t0.elapsed();
-
-    // Step 2: optimal per-subspace clustering (regularized if ρ > 0).
-    let t0 = std::time::Instant::now();
-    let models =
-        crate::coreset::solve_subspaces_regularized(feq, &margs, kappa, cfg.regularization)?;
-    timings.step2_subspaces = t0.elapsed();
-    let quantization_cost: f64 = models.iter().map(|m| m.cost).sum();
-
-    // Step 3: sparse grid coreset + weights.
-    let t0 = std::time::Instant::now();
-    let (grid, subspaces) = build_grid(db, feq, tree, &models)?;
-    timings.step3_grid = t0.elapsed();
-    if grid.n() == 0 {
-        anyhow::bail!("FEQ output is empty: nothing to cluster");
-    }
-
-    // Step 4: weighted k-means over the coreset (factored Lloyd on the
-    // bounds-pruned, chunk-parallel engine).
-    let t0 = std::time::Instant::now();
-    let lcfg = LloydConfig { k: cfg.k, max_iters: cfg.max_iters, tol: cfg.tol, seed: cfg.seed };
-    let (res, step4_stats) = sparse_lloyd_with(&grid, &subspaces, &lcfg, &EngineOpts::default());
-    timings.step4_cluster = t0.elapsed();
-
-    Ok(RkResult {
-        centroids: res.centroids,
-        models,
-        objective_grid: res.objective,
-        quantization_cost,
-        grid_points: grid.n(),
-        grid_mass: grid.weights.iter().sum(),
-        iters: res.iters,
-        timings,
-        step4_stats,
-    })
+    Ok(RkPipeline::with_tree(db, feq, tree).run(cfg)?.into_result())
 }
 
 /// Evaluate an Rk-means result on the full (unmaterialized) join output —
@@ -205,6 +203,7 @@ pub fn full_objective(db: &Database, feq: &Feq, res: &RkResult) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::LloydConfig;
     use crate::data::{Attr, Relation, Schema, Value};
     use crate::util::testkit::assert_close;
     use crate::util::SplitMix64;
@@ -255,7 +254,7 @@ mod tests {
         // The units gap (0..1 vs 100..101) dominates: the full-X objective
         // of k=2 must be far below k=1 (note: with κ=k=1 the coreset
         // collapses to one cell, so compare on the full data, not the grid).
-        let single = rkmeans(&db, &feq, &RkConfig { k: 1, ..RkConfig::new(1) }).unwrap();
+        let single = rkmeans(&db, &feq, &RkConfig::new(1)).unwrap();
         let full2 = full_objective(&db, &feq, &res).unwrap();
         let full1 = full_objective(&db, &feq, &single).unwrap();
         assert!(full2 < 0.05 * full1, "k=2 {full2} vs k=1 {full1}");

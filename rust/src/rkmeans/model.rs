@@ -1,0 +1,798 @@
+//! `RkModel` — the self-contained serving handle capping the staged
+//! pipeline (see [`crate::rkmeans::pipeline`]).
+//!
+//! A model owns the factored Step-4 centroids plus the Step-2 subspace
+//! assigners, which is everything needed to answer *"which cluster does
+//! this tuple belong to?"* for tuples of the (never materialized) join
+//! output — no [`Database`](crate::data::Database), join tree, or grid
+//! required at serving time. Assignment is exact: for each subspace the
+//! squared distance to a factored centroid is computed in O(1) via the
+//! orthogonal-component algebra of §4.3, so
+//! [`RkModel::assign`] agrees with the argmin over the dense
+//! [`centroids_dense`](crate::coreset::centroids_dense) expansion up to
+//! f64 rounding.
+//!
+//! Models serialize to a **versioned** byte format
+//! ([`RkModel::to_bytes`] / [`RkModel::from_bytes`], JSON via
+//! [`crate::util::json`]): a writer process can snapshot its
+//! [`IncrementalState`](crate::incremental::IncrementalState) or a
+//! coordinator [`ClusteringUpdate`](crate::coordinator::ClusteringUpdate)
+//! as a model, ship the bytes, and have replicas serve that version while
+//! the writer keeps patching. A format-version mismatch fails loudly with
+//! a clear error instead of mis-deserializing.
+//!
+//! ```no_run
+//! use rkmeans::rkmeans::{RkModel, RkPipeline, ClusterOpts, SubspaceOpts};
+//! use rkmeans::synthetic::{retailer, Scale};
+//!
+//! let db = retailer::generate(Scale::tiny(), 42);
+//! let feq = retailer::feq();
+//! let pipe = RkPipeline::plan(&db, &feq).unwrap();
+//! let marginals = pipe.marginals().unwrap();
+//! let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(8)).unwrap();
+//! let coreset = pipe.coreset(&subspaces).unwrap();
+//! let model = coreset.cluster(&ClusterOpts::new(8));
+//!
+//! // Ship to a replica; serve without the database. `assign` takes a
+//! // tuple's feature values in FEQ feature order.
+//! let bytes = model.to_bytes();
+//! let replica = RkModel::from_bytes(&bytes).unwrap();
+//! assert_eq!(replica.k(), 8);
+//! ```
+
+use super::{RkResult, StepTimings};
+use crate::cluster::sparse_lloyd::CentroidCoord;
+use crate::cluster::{CatClusters, Kmeans1dResult, PruneStats};
+use crate::coreset::{SubspaceModel, SubspaceSolver};
+use crate::data::Value;
+use crate::util::json::{self, Json};
+use crate::util::FxHashMap;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Version tag of the `RkModel` byte format. Bumped on any incompatible
+/// layout change; [`RkModel::from_bytes`] refuses other versions.
+pub const RKMODEL_FORMAT_VERSION: usize = 1;
+
+/// Serving lookup tables, built lazily on the first
+/// [`RkModel::assign`]/[`RkModel::distance2`] call so Step-4-only
+/// consumers (the incremental patch path, k-sweeps) never pay the
+/// O(total-category-keys) construction per run.
+#[derive(Clone, Debug)]
+struct ServeCache {
+    /// Per-subspace index for categorical features:
+    /// `key → (component id, ⟨e_key, u_component⟩)`. `None` for
+    /// continuous subspaces.
+    cat_dots: Vec<Option<FxHashMap<u64, (u32, f64)>>>,
+    /// `‖μ_cj‖²` per (centroid, subspace) for categorical subspaces
+    /// (0.0 for continuous ones), hoisted out of the assignment loop.
+    cent_norm_sq: Vec<Vec<f64>>,
+}
+
+impl ServeCache {
+    fn build(models: &[SubspaceModel], centroids: &[Vec<CentroidCoord>]) -> ServeCache {
+        let cat_dots: Vec<Option<FxHashMap<u64, (u32, f64)>>> = models
+            .iter()
+            .map(|m| match &m.solver {
+                SubspaceSolver::Continuous(_) => None,
+                SubspaceSolver::Categorical(c) => {
+                    let mut dots: FxHashMap<u64, (u32, f64)> = FxHashMap::default();
+                    for (i, &e) in c.heavy.iter().enumerate() {
+                        dots.insert(e, (i as u32, 1.0));
+                    }
+                    if c.has_light() {
+                        let g = c.light_gid();
+                        for &(e, w) in &c.light {
+                            dots.insert(e, (g, w / c.light_mass));
+                        }
+                    }
+                    Some(dots)
+                }
+            })
+            .collect();
+        let cent_norm_sq: Vec<Vec<f64>> = centroids
+            .iter()
+            .map(|coords| {
+                coords
+                    .iter()
+                    .zip(models)
+                    .map(|(coord, m)| match (coord, &m.solver) {
+                        (CentroidCoord::Categorical(beta), SubspaceSolver::Categorical(c)) => {
+                            beta.iter()
+                                .enumerate()
+                                .map(|(b, &x)| x * x * c.component_norm_sq(b as u32))
+                                .sum()
+                        }
+                        _ => 0.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        ServeCache { cat_dots, cent_norm_sq }
+    }
+}
+
+/// A self-contained, serializable Rk-means serving model: factored
+/// centroids + per-subspace assigners (see module docs).
+#[derive(Clone, Debug)]
+pub struct RkModel {
+    /// State version this model serves (the incremental engine's
+    /// monotonically increasing version; 0 for plain batch builds).
+    pub version: u64,
+    /// Per-subspace Step-2 models (geometry + assigners).
+    pub models: Vec<SubspaceModel>,
+    /// Factored centroids (k × m); expand with
+    /// [`crate::coreset::centroids_dense`].
+    pub centroids: Vec<Vec<CentroidCoord>>,
+    /// Weighted k-means objective on the coreset this model was fit to.
+    pub objective_grid: f64,
+    /// Coreset quantization error Σ_j Step-2 cost (Eq. 9).
+    pub quantization_cost: f64,
+    /// Non-zero grid cells `|G|` of the coreset.
+    pub grid_points: usize,
+    /// Total grid mass (= weighted `|X|`) of the coreset.
+    pub grid_mass: f64,
+    /// Step-4 Lloyd iterations of the fit.
+    pub iters: usize,
+    /// Per-step wall-clock of the build (not serialized; default after
+    /// [`RkModel::from_bytes`]).
+    pub timings: StepTimings,
+    /// Step-4 engine statistics of the fit (not serialized).
+    pub step4_stats: PruneStats,
+    /// Lazily-built serving tables (see [`ServeCache`]).
+    serve: OnceLock<ServeCache>,
+}
+
+impl RkModel {
+    /// Build a model from pipeline outputs. Serving caches are **not**
+    /// built here — they materialize on the first
+    /// [`RkModel::assign`]/[`RkModel::distance2`] call, so hot paths that
+    /// only need the [`RkResult`] shape (the incremental patch loop,
+    /// k-sweeps) stay O(1) in the categorical domain size.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        models: Vec<SubspaceModel>,
+        centroids: Vec<Vec<CentroidCoord>>,
+        objective_grid: f64,
+        quantization_cost: f64,
+        grid_points: usize,
+        grid_mass: f64,
+        iters: usize,
+        timings: StepTimings,
+        step4_stats: PruneStats,
+        version: u64,
+    ) -> RkModel {
+        RkModel {
+            version,
+            models,
+            centroids,
+            objective_grid,
+            quantization_cost,
+            grid_points,
+            grid_mass,
+            iters,
+            timings,
+            step4_stats,
+            serve: OnceLock::new(),
+        }
+    }
+
+    /// The serving tables, built on first use.
+    fn serve(&self) -> &ServeCache {
+        self.serve.get_or_init(|| ServeCache::build(&self.models, &self.centroids))
+    }
+
+    /// Number of clusters k.
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Number of subspaces m.
+    pub fn m(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Tag the model with a serving/state version.
+    pub fn with_version(mut self, version: u64) -> Self {
+        self.version = version;
+        self
+    }
+
+    /// Wrap an [`RkResult`] (e.g. a coordinator
+    /// [`ClusteringUpdate`](crate::coordinator::ClusteringUpdate) payload)
+    /// as a serving model.
+    pub fn from_result(res: &RkResult) -> RkModel {
+        RkModel::assemble(
+            res.models.clone(),
+            res.centroids.clone(),
+            res.objective_grid,
+            res.quantization_cost,
+            res.grid_points,
+            res.grid_mass,
+            res.iters,
+            res.timings.clone(),
+            res.step4_stats.clone(),
+            0,
+        )
+    }
+
+    /// Convert into the classic [`RkResult`] (the shape the deprecated
+    /// one-shot [`rkmeans`](crate::rkmeans::rkmeans) shim returns).
+    pub fn into_result(self) -> RkResult {
+        RkResult {
+            centroids: self.centroids,
+            models: self.models,
+            objective_grid: self.objective_grid,
+            quantization_cost: self.quantization_cost,
+            grid_points: self.grid_points,
+            grid_mass: self.grid_mass,
+            iters: self.iters,
+            timings: self.timings,
+            step4_stats: self.step4_stats,
+        }
+    }
+
+    /// Exact squared distance (in the dense one-hot embedding, scaled by
+    /// the feature weights λ) between a raw feature tuple and centroid
+    /// `c`, computed in O(m) without materializing either vector.
+    ///
+    /// `vals` are the tuple's feature values in FEQ feature order —
+    /// exactly one [`Value`] per subspace. Panics on an arity mismatch or
+    /// on a continuous value supplied for a categorical subspace (numeric
+    /// values on continuous subspaces accept any variant via their
+    /// numeric view, matching the dense embedding).
+    pub fn distance2(&self, vals: &[Value], c: usize) -> f64 {
+        assert_eq!(
+            vals.len(),
+            self.models.len(),
+            "tuple arity mismatch: model expects {} feature values",
+            self.models.len()
+        );
+        let serve = self.serve();
+        let coords = &self.centroids[c];
+        let mut d = 0.0;
+        for (j, (m, coord)) in self.models.iter().zip(coords).enumerate() {
+            d += m.lambda
+                * match (coord, &m.solver) {
+                    (CentroidCoord::Continuous(mu), SubspaceSolver::Continuous(_)) => {
+                        let t = vals[j].as_f64() - mu;
+                        t * t
+                    }
+                    (CentroidCoord::Categorical(beta), SubspaceSolver::Categorical(_)) => {
+                        // ‖e − μ‖² = 1 − 2⟨e, μ⟩ + ‖μ‖² with the
+                        // orthogonal-component expansion of ⟨e, μ⟩;
+                        // unseen keys have ⟨e, μ⟩ = 0.
+                        let key = match vals[j] {
+                            Value::Double(_) => panic!(
+                                "feature {:?} is categorical but received a continuous \
+                                 value; pass Cat/Int keys in FEQ feature order",
+                                m.name
+                            ),
+                            v => v.key_u64(),
+                        };
+                        let dots = serve.cat_dots[j].as_ref().expect("categorical cache");
+                        let dot = dots
+                            .get(&key)
+                            .map(|&(g, x)| beta[g as usize] * x)
+                            .unwrap_or(0.0);
+                        1.0 - 2.0 * dot + serve.cent_norm_sq[c][j]
+                    }
+                    _ => unreachable!("centroid coordinate kind mismatches subspace solver"),
+                };
+        }
+        d
+    }
+
+    /// Nearest centroid plus its squared distance for a raw tuple.
+    pub fn assign_with_distance(&self, vals: &[Value]) -> (usize, f64) {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..self.centroids.len() {
+            let d = self.distance2(vals, c);
+            if d < best_d {
+                best = c;
+                best_d = d;
+            }
+        }
+        (best, best_d)
+    }
+
+    /// Cluster id of the nearest centroid for a raw tuple (values in FEQ
+    /// feature order). Exact w.r.t. the dense embedding; O(k·m).
+    pub fn assign(&self, vals: &[Value]) -> usize {
+        self.assign_with_distance(vals).0
+    }
+
+    /// [`RkModel::assign`] over a batch of tuples.
+    pub fn assign_batch(&self, rows: &[Vec<Value>]) -> Vec<usize> {
+        rows.iter().map(|r| self.assign(r)).collect()
+    }
+
+    /// Serialize to the versioned byte format (JSON, UTF-8). The payload
+    /// is self-contained: [`RkModel::from_bytes`] in a fresh process
+    /// restores a model that assigns identically.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("format".to_string(), Json::Str("rkmodel".to_string()));
+        top.insert(
+            "format_version".to_string(),
+            Json::Num(RKMODEL_FORMAT_VERSION as f64),
+        );
+        // Like category keys, the version is a decimal string so the
+        // full u64 range round-trips exactly (f64 only covers 2^53).
+        top.insert("state_version".to_string(), Json::Str(self.version.to_string()));
+        top.insert("k".to_string(), Json::Num(self.centroids.len() as f64));
+        top.insert("objective_grid".to_string(), Json::Num(self.objective_grid));
+        top.insert(
+            "quantization_cost".to_string(),
+            Json::Num(self.quantization_cost),
+        );
+        top.insert("grid_points".to_string(), Json::Num(self.grid_points as f64));
+        top.insert("grid_mass".to_string(), Json::Num(self.grid_mass));
+        top.insert("iters".to_string(), Json::Num(self.iters as f64));
+        top.insert(
+            "subspaces".to_string(),
+            Json::Arr(self.models.iter().map(subspace_json).collect()),
+        );
+        top.insert(
+            "centroids".to_string(),
+            Json::Arr(
+                self.centroids
+                    .iter()
+                    .map(|coords| Json::Arr(coords.iter().map(coord_json).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(top).to_string().into_bytes()
+    }
+
+    /// Restore a model from [`RkModel::to_bytes`] output. Fails with a
+    /// clear error on non-model documents and on format-version
+    /// mismatches (forward compatibility is explicit, never silent).
+    pub fn from_bytes(bytes: &[u8]) -> Result<RkModel> {
+        let text = std::str::from_utf8(bytes).context("rkmodel: bytes are not valid UTF-8")?;
+        let doc = json::parse(text).map_err(|e| anyhow!("rkmodel: {e}"))?;
+        match doc.get("format").and_then(Json::as_str) {
+            Some("rkmodel") => {}
+            _ => bail!("rkmodel: byte stream is not an rkmodel document (missing \"format\" tag)"),
+        }
+        let fmt = usize_field(&doc, "format_version")?;
+        if fmt != RKMODEL_FORMAT_VERSION {
+            bail!(
+                "rkmodel: unsupported format version {fmt} (this build reads version \
+                 {RKMODEL_FORMAT_VERSION}); re-export the model with a matching writer"
+            );
+        }
+        let version = doc
+            .get("state_version")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("rkmodel: missing \"state_version\""))?
+            .parse::<u64>()
+            .map_err(|_| anyhow!("rkmodel: bad \"state_version\""))?;
+        let k = usize_field(&doc, "k")?;
+        let objective_grid = num_field(&doc, "objective_grid")?;
+        let quantization_cost = num_field(&doc, "quantization_cost")?;
+        let grid_points = usize_field(&doc, "grid_points")?;
+        let grid_mass = num_field(&doc, "grid_mass")?;
+        let iters = usize_field(&doc, "iters")?;
+
+        let subs_json = doc
+            .get("subspaces")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("rkmodel: missing \"subspaces\" array"))?;
+        let mut models = Vec::with_capacity(subs_json.len());
+        for s in subs_json {
+            models.push(subspace_from_json(s)?);
+        }
+
+        let cents_json = doc
+            .get("centroids")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("rkmodel: missing \"centroids\" array"))?;
+        if cents_json.len() != k {
+            bail!(
+                "rkmodel: centroid count {} does not match k = {k}",
+                cents_json.len()
+            );
+        }
+        let mut centroids = Vec::with_capacity(cents_json.len());
+        for cj in cents_json {
+            let coords_json = cj
+                .as_arr()
+                .ok_or_else(|| anyhow!("rkmodel: centroid is not an array of coordinates"))?;
+            if coords_json.len() != models.len() {
+                bail!(
+                    "rkmodel: centroid has {} coordinates but the model has {} subspaces",
+                    coords_json.len(),
+                    models.len()
+                );
+            }
+            let mut coords = Vec::with_capacity(coords_json.len());
+            for (j, coord) in coords_json.iter().enumerate() {
+                coords.push(coord_from_json(coord, &models[j])?);
+            }
+            centroids.push(coords);
+        }
+
+        Ok(RkModel::assemble(
+            models,
+            centroids,
+            objective_grid,
+            quantization_cost,
+            grid_points,
+            grid_mass,
+            iters,
+            StepTimings::default(),
+            PruneStats::default(),
+            version,
+        ))
+    }
+}
+
+fn num_field(o: &Json, key: &str) -> Result<f64> {
+    o.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("rkmodel: missing numeric field {key:?}"))
+}
+
+fn usize_field(o: &Json, key: &str) -> Result<usize> {
+    o.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("rkmodel: missing integer field {key:?}"))
+}
+
+fn f64_arr(j: &Json, what: &str) -> Result<Vec<f64>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow!("rkmodel: {what} is not an array"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("rkmodel: non-numeric entry in {what}"))
+        })
+        .collect()
+}
+
+/// Category keys serialize as decimal strings so the full u64 range
+/// round-trips exactly (f64 JSON numbers only cover 2^53).
+fn key_arr(j: &Json, what: &str) -> Result<Vec<u64>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow!("rkmodel: {what} is not an array"))?;
+    arr.iter()
+        .map(|v| -> Result<u64> {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("rkmodel: category key in {what} is not a string"))?;
+            s.parse::<u64>()
+                .map_err(|_| anyhow!("rkmodel: bad category key {s:?} in {what}"))
+        })
+        .collect()
+}
+
+fn subspace_json(m: &SubspaceModel) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(m.name.clone()));
+    o.insert("lambda".to_string(), Json::Num(m.lambda));
+    o.insert("cost".to_string(), Json::Num(m.cost));
+    match &m.solver {
+        SubspaceSolver::Continuous(r) => {
+            o.insert("solver".to_string(), Json::Str("continuous".to_string()));
+            o.insert(
+                "centers".to_string(),
+                Json::Arr(r.centers.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            o.insert(
+                "boundaries".to_string(),
+                Json::Arr(r.boundaries.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            o.insert("solver_cost".to_string(), Json::Num(r.cost));
+        }
+        SubspaceSolver::Categorical(c) => {
+            o.insert("solver".to_string(), Json::Str("categorical".to_string()));
+            o.insert(
+                "heavy".to_string(),
+                Json::Arr(c.heavy.iter().map(|e| Json::Str(e.to_string())).collect()),
+            );
+            o.insert(
+                "heavy_w".to_string(),
+                Json::Arr(c.heavy_w.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            o.insert(
+                "light".to_string(),
+                Json::Arr(
+                    c.light
+                        .iter()
+                        .map(|&(e, w)| Json::Arr(vec![Json::Str(e.to_string()), Json::Num(w)]))
+                        .collect(),
+                ),
+            );
+            o.insert("solver_cost".to_string(), Json::Num(c.cost));
+        }
+    }
+    Json::Obj(o)
+}
+
+fn subspace_from_json(s: &Json) -> Result<SubspaceModel> {
+    let name = s
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("rkmodel: subspace missing \"name\""))?
+        .to_string();
+    let lambda = num_field(s, "lambda")?;
+    let cost = num_field(s, "cost")?;
+    let solver_cost = num_field(s, "solver_cost")?;
+    let solver = match s.get("solver").and_then(Json::as_str) {
+        Some("continuous") => {
+            let centers = f64_arr(
+                s.get("centers")
+                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"centers\""))?,
+                "centers",
+            )?;
+            let boundaries = f64_arr(
+                s.get("boundaries")
+                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"boundaries\""))?,
+                "boundaries",
+            )?;
+            SubspaceSolver::Continuous(Kmeans1dResult { centers, boundaries, cost: solver_cost })
+        }
+        Some("categorical") => {
+            let heavy = key_arr(
+                s.get("heavy")
+                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"heavy\""))?,
+                "heavy",
+            )?;
+            let heavy_w = f64_arr(
+                s.get("heavy_w")
+                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"heavy_w\""))?,
+                "heavy_w",
+            )?;
+            if heavy.len() != heavy_w.len() {
+                bail!("rkmodel: subspace {name:?} heavy/heavy_w length mismatch");
+            }
+            let light_json = s
+                .get("light")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"light\""))?;
+            let mut light = Vec::with_capacity(light_json.len());
+            for pair in light_json {
+                let pair = pair
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("rkmodel: light entry is not a [key, weight] pair"))?;
+                if pair.len() != 2 {
+                    bail!("rkmodel: light entry is not a [key, weight] pair");
+                }
+                let key = pair[0]
+                    .as_str()
+                    .ok_or_else(|| anyhow!("rkmodel: light key is not a string"))?
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("rkmodel: bad light key in subspace {name:?}"))?;
+                let w = pair[1]
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("rkmodel: light weight is not a number"))?;
+                light.push((key, w));
+            }
+            SubspaceSolver::Categorical(CatClusters::from_parts(heavy, heavy_w, light, solver_cost))
+        }
+        other => bail!("rkmodel: unknown solver kind {other:?} for subspace {name:?}"),
+    };
+    Ok(SubspaceModel { name, lambda, solver, cost })
+}
+
+fn coord_json(c: &CentroidCoord) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    match c {
+        CentroidCoord::Continuous(mu) => {
+            o.insert("mu".to_string(), Json::Num(*mu));
+        }
+        CentroidCoord::Categorical(beta) => {
+            o.insert(
+                "beta".to_string(),
+                Json::Arr(beta.iter().map(|&b| Json::Num(b)).collect()),
+            );
+        }
+    }
+    Json::Obj(o)
+}
+
+fn coord_from_json(j: &Json, model: &SubspaceModel) -> Result<CentroidCoord> {
+    if let Some(mu) = j.get("mu").and_then(Json::as_f64) {
+        match &model.solver {
+            SubspaceSolver::Continuous(_) => Ok(CentroidCoord::Continuous(mu)),
+            SubspaceSolver::Categorical(_) => bail!(
+                "rkmodel: continuous centroid coordinate on categorical subspace {:?}",
+                model.name
+            ),
+        }
+    } else if let Some(beta) = j.get("beta") {
+        let beta = f64_arr(beta, "beta")?;
+        match &model.solver {
+            SubspaceSolver::Categorical(c) => {
+                if beta.len() != c.kappa() {
+                    bail!(
+                        "rkmodel: centroid β length {} ≠ κ = {} in subspace {:?}",
+                        beta.len(),
+                        c.kappa(),
+                        model.name
+                    );
+                }
+                Ok(CentroidCoord::Categorical(beta))
+            }
+            SubspaceSolver::Continuous(_) => bail!(
+                "rkmodel: categorical centroid coordinate on continuous subspace {:?}",
+                model.name
+            ),
+        }
+    } else {
+        bail!("rkmodel: centroid coordinate must carry \"mu\" or \"beta\"")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::categorical_kmeans;
+    use crate::cluster::kmeans1d;
+    use crate::util::testkit::assert_close;
+
+    /// A small hand-built model: one continuous + one categorical
+    /// subspace, two centroids.
+    fn sample_model() -> RkModel {
+        let cont = kmeans1d(&[(0.0, 2.0), (1.0, 1.0), (10.0, 2.0)], 2);
+        let cat = categorical_kmeans(&[(7u64, 5.0), (8, 3.0), (9, 1.0), (11, 1.0)], 3);
+        let models = vec![
+            SubspaceModel {
+                name: "x".to_string(),
+                lambda: 2.0,
+                cost: 2.0 * cont.cost,
+                solver: SubspaceSolver::Continuous(cont),
+            },
+            SubspaceModel {
+                name: "c".to_string(),
+                lambda: 1.0,
+                cost: cat.cost,
+                solver: SubspaceSolver::Categorical(cat),
+            },
+        ];
+        let centroids = vec![
+            vec![
+                CentroidCoord::Continuous(0.4),
+                CentroidCoord::Categorical(vec![0.7, 0.2, 0.1]),
+            ],
+            vec![
+                CentroidCoord::Continuous(10.0),
+                CentroidCoord::Categorical(vec![0.0, 0.5, 0.5]),
+            ],
+        ];
+        RkModel::assemble(
+            models,
+            centroids,
+            12.5,
+            0.75,
+            4,
+            9.0,
+            3,
+            StepTimings::default(),
+            PruneStats::default(),
+            7,
+        )
+    }
+
+    /// Dense reference: expand the tuple and centroid into explicit
+    /// one-hot coordinates and compare distances.
+    fn dense_distance(m: &RkModel, vals: &[Value], c: usize) -> f64 {
+        // Layout: [x | e7 e8 e9 e11] with √λ scaling.
+        let keys = [7u64, 8, 9, 11];
+        let embed = |vals: &[Value]| -> Vec<f64> {
+            let mut v = vec![0.0; 5];
+            v[0] = 2.0f64.sqrt() * vals[0].as_f64();
+            let key = vals[1].key_u64();
+            if let Some(p) = keys.iter().position(|&k| k == key) {
+                v[1 + p] = 1.0;
+            }
+            v
+        };
+        let SubspaceSolver::Categorical(cat) = &m.models[1].solver else { panic!() };
+        let mut cent = vec![0.0; 5];
+        let CentroidCoord::Continuous(mu) = &m.centroids[c][0] else { panic!() };
+        cent[0] = 2.0f64.sqrt() * mu;
+        let CentroidCoord::Categorical(beta) = &m.centroids[c][1] else { panic!() };
+        for (a, &b) in beta.iter().enumerate() {
+            if (a as u32) < cat.heavy.len() as u32 {
+                let key = cat.heavy[a];
+                let p = keys.iter().position(|&k| k == key).unwrap();
+                cent[1 + p] += b;
+            } else {
+                for &(key, w) in &cat.light {
+                    let p = keys.iter().position(|&k| k == key).unwrap();
+                    cent[1 + p] += b * w / cat.light_mass;
+                }
+            }
+        }
+        let x = embed(vals);
+        x.iter().zip(&cent).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    #[test]
+    fn distance_matches_dense_embedding() {
+        let m = sample_model();
+        // Heavy, light, and unseen categorical keys; on/off-center values.
+        for vals in [
+            vec![Value::Double(0.3), Value::Cat(7)],
+            vec![Value::Double(5.0), Value::Cat(9)],
+            vec![Value::Double(9.7), Value::Cat(11)],
+            vec![Value::Double(-2.0), Value::Cat(42)], // unseen key
+        ] {
+            for c in 0..m.k() {
+                assert_close(m.distance2(&vals, c), dense_distance(&m, &vals, c), 1e-9);
+            }
+            let (a, d) = m.assign_with_distance(&vals);
+            assert!(d <= m.distance2(&vals, 1 - a) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn bytes_round_trip_preserves_assignment() {
+        let m = sample_model();
+        let bytes = m.to_bytes();
+        let r = RkModel::from_bytes(&bytes).unwrap();
+        assert_eq!(r.version, 7);
+        // Versions beyond 2^53 round-trip exactly (string encoding).
+        let big = m.clone().with_version(u64::MAX);
+        assert_eq!(RkModel::from_bytes(&big.to_bytes()).unwrap().version, u64::MAX);
+        assert_eq!(r.k(), 2);
+        assert_eq!(r.m(), 2);
+        assert_eq!(r.grid_points, 4);
+        assert_close(r.grid_mass, 9.0, 0.0);
+        assert_close(r.objective_grid, 12.5, 0.0);
+        assert_close(r.quantization_cost, 0.75, 0.0);
+        for vals in [
+            vec![Value::Double(0.1), Value::Cat(7)],
+            vec![Value::Double(10.2), Value::Cat(8)],
+            vec![Value::Double(4.9), Value::Cat(99)],
+        ] {
+            assert_eq!(m.assign(&vals), r.assign(&vals));
+            for c in 0..m.k() {
+                // Distances are bit-identical: every serialized f64
+                // round-trips through the shortest-repr JSON writer.
+                assert_eq!(
+                    m.distance2(&vals, c).to_bits(),
+                    r.distance2(&vals, c).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn version_mismatch_fails_clearly() {
+        let m = sample_model();
+        let text = String::from_utf8(m.to_bytes()).unwrap();
+        let bumped = text.replace("\"format_version\":1", "\"format_version\":999");
+        assert_ne!(text, bumped, "fixture must actually change the version");
+        let err = RkModel::from_bytes(bumped.as_bytes()).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("unsupported format version 999"),
+            "unclear error: {msg}"
+        );
+    }
+
+    #[test]
+    fn garbage_bytes_fail_clearly() {
+        assert!(RkModel::from_bytes(b"\xff\xfe").is_err());
+        assert!(RkModel::from_bytes(b"{\"not\":\"a model\"}").is_err());
+        let msg = RkModel::from_bytes(b"{}").unwrap_err().to_string();
+        assert!(msg.contains("format"), "unclear error: {msg}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = sample_model();
+        let rows = vec![
+            vec![Value::Double(0.0), Value::Cat(7)],
+            vec![Value::Double(11.0), Value::Cat(9)],
+        ];
+        assert_eq!(m.assign_batch(&rows), vec![m.assign(&rows[0]), m.assign(&rows[1])]);
+    }
+}

@@ -1,0 +1,554 @@
+//! The staged Rk-means pipeline: Algorithm 1 as four artifact-passing
+//! stages instead of one monolithic call.
+//!
+//! The paper's four steps have well-defined intermediate artifacts, and
+//! real deployments want to *reuse* them: a κ-sweep re-solves Step 2 over
+//! the same marginals, a k-sweep (paper Table 2) re-runs only Step 4 over
+//! the same coreset, and a serving replica needs nothing but the final
+//! model. The staged API says this in types:
+//!
+//! | stage | call | artifact | reusable across |
+//! |---|---|---|---|
+//! | plan    | [`RkPipeline::plan`]      | join tree (+ acyclic rewrite) | everything below |
+//! | Step 1  | [`RkPipeline::marginals`] | [`Marginals`]   | κ and ρ choices |
+//! | Step 2  | [`RkPipeline::subspaces`] | [`SubspaceSet`] | grid rebuilds |
+//! | Step 3  | [`RkPipeline::coreset`]   | [`Coreset`]     | every k (and warm starts) |
+//! | Step 4  | [`Coreset::cluster`] / [`Coreset::sweep`] | [`RkModel`] | serving replicas |
+//!
+//! Each stage returns an owned, inspectable artifact that later stages
+//! borrow; nothing is recomputed behind the caller's back. The staged
+//! path is **exact**: running all four stages with the options derived
+//! from an [`RkConfig`] produces bitwise-identical results to the
+//! one-shot [`rkmeans`](crate::rkmeans::rkmeans) convenience wrapper
+//! (which is now a thin shim over this module).
+//!
+//! ```no_run
+//! use rkmeans::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+//! use rkmeans::synthetic::{retailer, Scale};
+//!
+//! let db = retailer::generate(Scale::small(), 42);
+//! let feq = retailer::feq();
+//!
+//! let pipe = RkPipeline::plan(&db, &feq).unwrap();
+//! let marginals = pipe.marginals().unwrap();                     // Step 1, once
+//! let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(16)).unwrap();
+//! let coreset = pipe.coreset(&subspaces).unwrap();               // Step 3, once
+//!
+//! // k-sweep over the shared coreset: Steps 1–3 are amortized.
+//! for model in coreset.sweep(&[4, 8, 16, 32], &ClusterOpts::new(0)) {
+//!     println!("k={}: objective {:.4e}", model.k(), model.objective_grid);
+//! }
+//! ```
+
+use super::model::RkModel;
+use super::{RkConfig, StepTimings};
+use crate::cluster::sparse_lloyd::{SparseGrid, Subspace};
+use crate::cluster::{sparse_lloyd_warm_with, CentroidCoord, EngineOpts, LloydConfig};
+use crate::coreset::{build_grid, solve_subspaces_regularized, SubspaceModel};
+use crate::data::Database;
+use crate::faq::{full_join_counts, marginals as faq_marginals, Marginal};
+use crate::join::ensure_acyclic;
+use crate::query::{Feq, Hypergraph, JoinTree};
+use crate::util::FxHashMap;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Step-2 options: the per-subspace centroid budget κ and the §3
+/// regularizer's atom penalty ρ.
+#[derive(Clone, Debug)]
+pub struct SubspaceOpts {
+    /// Per-subspace centroids κ (κ < k trades approximation for a
+    /// smaller grid; paper Table 2, right).
+    pub kappa: usize,
+    /// Atom penalty ρ for regularized Rk-means (0 = off).
+    pub regularization: f64,
+}
+
+impl SubspaceOpts {
+    /// Unregularized Step 2 with the given κ.
+    pub fn new(kappa: usize) -> Self {
+        SubspaceOpts { kappa, regularization: 0.0 }
+    }
+
+    /// Enable the §3 regularizer with atom penalty ρ.
+    pub fn with_regularization(mut self, rho: f64) -> Self {
+        self.regularization = rho;
+        self
+    }
+
+    /// The Step-2 options an [`RkConfig`] implies (κ = k when unset).
+    pub fn from_config(cfg: &RkConfig) -> Self {
+        SubspaceOpts { kappa: cfg.effective_kappa(), regularization: cfg.regularization }
+    }
+}
+
+/// Step-4 options: the Lloyd configuration plus the engine selection.
+#[derive(Clone, Debug)]
+pub struct ClusterOpts {
+    /// Number of clusters k.
+    pub k: usize,
+    /// Lloyd iteration cap.
+    pub max_iters: usize,
+    /// Relative-improvement stopping tolerance.
+    pub tol: f64,
+    /// Seed for k-means++ seeding.
+    pub seed: u64,
+    /// Step-4 engine options (bounds pruning, thread count).
+    pub engine: EngineOpts,
+}
+
+impl ClusterOpts {
+    /// Paper-default Step-4 configuration (matches [`RkConfig::new`]).
+    pub fn new(k: usize) -> Self {
+        ClusterOpts { k, max_iters: 50, tol: 1e-6, seed: 0xC0FFEE, engine: EngineOpts::default() }
+    }
+
+    /// Override the seeding RNG seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the Lloyd iteration cap.
+    pub fn with_max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Override the stopping tolerance.
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Override the engine options.
+    pub fn with_engine(mut self, engine: EngineOpts) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// The Step-4 options an [`RkConfig`] implies.
+    pub fn from_config(cfg: &RkConfig) -> Self {
+        ClusterOpts {
+            k: cfg.k,
+            max_iters: cfg.max_iters,
+            tol: cfg.tol,
+            seed: cfg.seed,
+            engine: EngineOpts::default(),
+        }
+    }
+
+    fn lloyd(&self) -> LloydConfig {
+        LloydConfig { k: self.k, max_iters: self.max_iters, tol: self.tol, seed: self.seed }
+    }
+}
+
+/// Step-1 artifact: per-attribute marginal weights `w_j` (Eq. 3) over the
+/// unmaterialized join, plus the output size `|X|`. Reused across every
+/// κ/ρ choice in [`RkPipeline::subspaces`].
+#[derive(Clone, Debug)]
+pub struct Marginals {
+    margs: FxHashMap<String, Marginal>,
+    /// Weighted join-output size `|X|`.
+    pub output_size: f64,
+    /// Step-1 wall-clock.
+    pub elapsed: Duration,
+}
+
+impl Marginals {
+    /// Marginal for a feature attribute.
+    pub fn get(&self, attr: &str) -> Option<&Marginal> {
+        self.margs.get(attr)
+    }
+
+    /// Number of per-attribute marginals held.
+    pub fn n_attributes(&self) -> usize {
+        self.margs.len()
+    }
+}
+
+/// Step-2 artifact: the per-subspace optimal models (geometry +
+/// assigners). Reused across grid rebuilds; feed to
+/// [`RkPipeline::coreset`].
+#[derive(Clone, Debug)]
+pub struct SubspaceSet {
+    /// One solved model per FEQ feature, in feature order.
+    pub models: Vec<SubspaceModel>,
+    /// The κ these models were solved for.
+    pub kappa: usize,
+    /// The atom penalty ρ used (0 = unregularized).
+    pub regularization: f64,
+    /// Step-2 wall-clock.
+    pub elapsed: Duration,
+    /// Step-1 wall-clock inherited from the [`Marginals`] artifact, so
+    /// downstream artifacts can assemble a classic [`StepTimings`].
+    step1_elapsed: Duration,
+}
+
+impl SubspaceSet {
+    /// Coreset quantization error Σ_j Step-2 cost (`W₂²(Q, P_in)`, Eq. 9).
+    pub fn quantization_cost(&self) -> f64 {
+        self.models.iter().map(|m| m.cost).sum()
+    }
+
+    /// Number of subspaces m.
+    pub fn n_subspaces(&self) -> usize {
+        self.models.len()
+    }
+}
+
+/// Step-3 artifact: the sparse weighted grid coreset in factored form,
+/// together with the subspace geometry and models Step 4 and the serving
+/// layer need. Standalone: clustering and k-sweeps never touch the
+/// database again.
+#[derive(Clone, Debug)]
+pub struct Coreset {
+    /// The grid coreset `G` in component-id form.
+    pub grid: SparseGrid,
+    /// Per-subspace component geometry for the factored engine.
+    pub subspaces: Vec<Subspace>,
+    /// The Step-2 models the grid was built with (assigners for serving).
+    pub models: Vec<SubspaceModel>,
+    /// Step-3 wall-clock.
+    pub elapsed: Duration,
+    /// Steps 1–3 wall-clock, for assembling classic [`StepTimings`].
+    timings123: StepTimings,
+}
+
+impl Coreset {
+    /// Wrap an externally built grid (e.g. the incremental planner's
+    /// delta-patched grid table) as a coreset artifact. Timings are zero:
+    /// the builder did the work elsewhere.
+    pub fn from_parts(
+        grid: SparseGrid,
+        subspaces: Vec<Subspace>,
+        models: Vec<SubspaceModel>,
+    ) -> Coreset {
+        Coreset {
+            grid,
+            subspaces,
+            models,
+            elapsed: Duration::default(),
+            timings123: StepTimings::default(),
+        }
+    }
+
+    /// Number of non-zero grid cells `|G|`.
+    pub fn n(&self) -> usize {
+        self.grid.n()
+    }
+
+    /// True when the coreset has no cells (empty join output).
+    pub fn is_empty(&self) -> bool {
+        self.grid.n() == 0
+    }
+
+    /// Total grid mass (= weighted `|X|`).
+    pub fn mass(&self) -> f64 {
+        self.grid.weights.iter().sum()
+    }
+
+    /// Number of subspaces m.
+    pub fn m(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Coreset quantization error Σ_j Step-2 cost.
+    pub fn quantization_cost(&self) -> f64 {
+        self.models.iter().map(|m| m.cost).sum()
+    }
+
+    /// Step 4: weighted k-means over this coreset on the bounds-pruned
+    /// chunk-parallel engine. Bitwise-identical to what the one-shot
+    /// [`rkmeans`](crate::rkmeans::rkmeans) produces for the same
+    /// configuration.
+    pub fn cluster(&self, opts: &ClusterOpts) -> RkModel {
+        self.cluster_warm(opts, None)
+    }
+
+    /// [`Coreset::cluster`] with an optional warm start: previous
+    /// factored centroids seed the run in place of k-means++ (shape
+    /// mismatches fall back to fresh seeding). The incremental planner's
+    /// patch path re-clusters delta-patched grids this way in a couple of
+    /// Lloyd iterations. `init = None` is bitwise-identical to
+    /// [`Coreset::cluster`].
+    pub fn cluster_warm(
+        &self,
+        opts: &ClusterOpts,
+        init: Option<&[Vec<CentroidCoord>]>,
+    ) -> RkModel {
+        let t0 = Instant::now();
+        let (res, stats) =
+            sparse_lloyd_warm_with(&self.grid, &self.subspaces, &opts.lloyd(), &opts.engine, init);
+        let mut timings = self.timings123.clone();
+        timings.step4_cluster = t0.elapsed();
+        RkModel::assemble(
+            self.models.clone(),
+            res.centroids,
+            res.objective,
+            self.quantization_cost(),
+            self.grid.n(),
+            self.mass(),
+            res.iters,
+            timings,
+            stats,
+            0,
+        )
+    }
+
+    /// k-sweep over the shared coreset (paper Table 2): one model per k,
+    /// each identical to an independent full-pipeline run at that k —
+    /// but Steps 1–3 are paid once, not `ks.len()` times. `opts.k` is
+    /// ignored; every other option applies to each run.
+    pub fn sweep(&self, ks: &[usize], opts: &ClusterOpts) -> Vec<RkModel> {
+        ks.iter()
+            .map(|&k| {
+                let o = ClusterOpts { k, ..opts.clone() };
+                self.cluster(&o)
+            })
+            .collect()
+    }
+}
+
+/// The staged pipeline handle: a validated FEQ plus its join tree (with
+/// the cyclic-FEQ rewrite applied when necessary). See module docs.
+pub struct RkPipeline<'a> {
+    db: &'a Database,
+    feq: &'a Feq,
+    /// Acyclic rewrite of `(db, feq)` when the input FEQ is cyclic.
+    rewritten: Option<(Database, Feq)>,
+    tree: JoinTree,
+}
+
+impl<'a> RkPipeline<'a> {
+    /// Validate the FEQ and build the join tree. Cyclic FEQs are
+    /// rewritten via [`ensure_acyclic`] (relation merging), exactly as
+    /// the one-shot [`rkmeans`](crate::rkmeans::rkmeans) does.
+    pub fn plan(db: &'a Database, feq: &'a Feq) -> Result<RkPipeline<'a>> {
+        feq.validate(db)?;
+        match Hypergraph::from_feq(db, feq).join_tree() {
+            Ok(tree) => Ok(RkPipeline { db, feq, rewritten: None, tree }),
+            Err(_) => {
+                let (db2, feq2) = ensure_acyclic(db, feq)?;
+                let tree = Hypergraph::from_feq(&db2, &feq2).join_tree()?;
+                Ok(RkPipeline { db, feq, rewritten: Some((db2, feq2)), tree })
+            }
+        }
+    }
+
+    /// Plan with a caller-provided join tree (no validation, no rewrite)
+    /// — the staged analog of
+    /// [`rkmeans_with_tree`](crate::rkmeans::rkmeans_with_tree).
+    pub fn with_tree(db: &'a Database, feq: &'a Feq, tree: &JoinTree) -> RkPipeline<'a> {
+        RkPipeline { db, feq, rewritten: None, tree: tree.clone() }
+    }
+
+    /// The effective database (the acyclic rewrite when one was needed).
+    pub fn db(&self) -> &Database {
+        self.rewritten.as_ref().map(|(d, _)| d).unwrap_or(self.db)
+    }
+
+    /// The effective FEQ (the acyclic rewrite when one was needed).
+    pub fn feq(&self) -> &Feq {
+        self.rewritten.as_ref().map(|(_, f)| f).unwrap_or(self.feq)
+    }
+
+    /// The join tree the stages run over.
+    pub fn tree(&self) -> &JoinTree {
+        &self.tree
+    }
+
+    /// True when planning rewrote a cyclic FEQ into an acyclic one.
+    pub fn was_rewritten(&self) -> bool {
+        self.rewritten.is_some()
+    }
+
+    /// Step 1: per-attribute marginal weights `w_j` via two-pass message
+    /// passing. The artifact is reusable across every κ/ρ choice.
+    pub fn marginals(&self) -> Result<Marginals> {
+        let t0 = Instant::now();
+        let jc = full_join_counts(self.db(), &self.tree)?;
+        let margs = faq_marginals(self.db(), self.feq(), &self.tree, &jc)?;
+        Ok(Marginals { margs, output_size: jc.total, elapsed: t0.elapsed() })
+    }
+
+    /// Step 2: optimal per-subspace clustering of the marginals
+    /// (regularized when `opts.regularization > 0`).
+    pub fn subspaces(&self, marginals: &Marginals, opts: &SubspaceOpts) -> Result<SubspaceSet> {
+        let t0 = Instant::now();
+        let models = solve_subspaces_regularized(
+            self.feq(),
+            &marginals.margs,
+            opts.kappa,
+            opts.regularization,
+        )?;
+        Ok(SubspaceSet {
+            models,
+            kappa: opts.kappa,
+            regularization: opts.regularization,
+            elapsed: t0.elapsed(),
+            step1_elapsed: marginals.elapsed,
+        })
+    }
+
+    /// Step 3: the sparse weighted grid coreset + subspace geometry, via
+    /// the free-variable FAQ. Fails when the FEQ output is empty.
+    pub fn coreset(&self, subspaces: &SubspaceSet) -> Result<Coreset> {
+        let t0 = Instant::now();
+        let (grid, subs) = build_grid(self.db(), self.feq(), &self.tree, &subspaces.models)?;
+        let elapsed = t0.elapsed();
+        if grid.n() == 0 {
+            anyhow::bail!("FEQ output is empty: nothing to cluster");
+        }
+        Ok(Coreset {
+            grid,
+            subspaces: subs,
+            models: subspaces.models.clone(),
+            elapsed,
+            timings123: StepTimings {
+                step1_marginals: subspaces.step1_elapsed,
+                step2_subspaces: subspaces.elapsed,
+                step3_grid: elapsed,
+                step4_cluster: Duration::default(),
+            },
+        })
+    }
+
+    /// All four stages with the options an [`RkConfig`] implies — the
+    /// staged body of the one-shot [`rkmeans`](crate::rkmeans::rkmeans)
+    /// shim.
+    pub fn run(&self, cfg: &RkConfig) -> Result<RkModel> {
+        let marginals = self.marginals()?;
+        let subspaces = self.subspaces(&marginals, &SubspaceOpts::from_config(cfg))?;
+        let coreset = self.coreset(&subspaces)?;
+        Ok(coreset.cluster(&ClusterOpts::from_config(cfg)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema, Value};
+    use crate::rkmeans::rkmeans;
+    use crate::util::testkit::{assert_bitwise_result, assert_close};
+    use crate::util::SplitMix64;
+
+    /// Small 2-relation star with clusterable structure (mirrors the
+    /// one-shot rkmeans tests).
+    fn setup(n_fact: usize, seed: u64) -> (Database, Feq) {
+        let mut rng = SplitMix64::new(seed);
+        let mut fact = Relation::new(
+            "fact",
+            Schema::new(vec![Attr::cat("item", 8), Attr::double("units")]),
+        );
+        for _ in 0..n_fact {
+            let item = rng.below(8) as u32;
+            let units =
+                if item < 4 { rng.uniform(0.0, 1.0) } else { rng.uniform(100.0, 101.0) };
+            fact.push_row(&[Value::Cat(item), Value::Double(units)]);
+        }
+        let mut items =
+            Relation::new("items", Schema::new(vec![Attr::cat("item", 8), Attr::double("price")]));
+        for i in 0..8u32 {
+            items.push_row(&[Value::Cat(i), Value::Double(if i < 4 { 1.0 } else { 50.0 })]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(items);
+        let feq = Feq::with_features(&["fact", "items"], &["item", "units", "price"]);
+        (db, feq)
+    }
+
+    #[test]
+    fn staged_matches_one_shot_bitwise() {
+        let (db, feq) = setup(250, 1);
+        for cfg in [
+            RkConfig::new(4),
+            RkConfig::new(6).with_kappa(3),
+            RkConfig::new(5).with_regularization(20.0),
+        ] {
+            let shim = rkmeans(&db, &feq, &cfg).unwrap();
+            let staged = RkPipeline::plan(&db, &feq)
+                .unwrap()
+                .run(&cfg)
+                .unwrap()
+                .into_result();
+            assert_bitwise_result(&shim, &staged, &format!("k={} κ={}", cfg.k, cfg.kappa));
+        }
+    }
+
+    #[test]
+    fn marginals_are_reusable_across_kappa() {
+        let (db, feq) = setup(200, 2);
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        assert_close(marginals.output_size, 200.0, 1e-9);
+        assert!(marginals.get("units").is_some());
+        assert!(marginals.get("nope").is_none());
+
+        let s2 = pipe.subspaces(&marginals, &SubspaceOpts::new(2)).unwrap();
+        let s4 = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        assert_eq!(s2.n_subspaces(), 3);
+        for (a, b) in s2.models.iter().zip(&s4.models) {
+            assert!(a.n_gids() <= b.n_gids(), "subspace {}", a.name);
+        }
+        // Larger κ: (weakly) finer grid, (weakly) lower quantization.
+        let c2 = pipe.coreset(&s2).unwrap();
+        let c4 = pipe.coreset(&s4).unwrap();
+        assert!(c2.n() <= c4.n());
+        assert!(s4.quantization_cost() <= s2.quantization_cost() + 1e-9);
+        assert_close(c2.mass(), c4.mass(), 1e-9);
+    }
+
+    #[test]
+    fn sweep_matches_independent_runs() {
+        let (db, feq) = setup(220, 3);
+        let kappa = 5;
+        let ks = [2usize, 3, 5];
+
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(kappa)).unwrap();
+        let coreset = pipe.coreset(&subspaces).unwrap();
+        let swept = coreset.sweep(&ks, &ClusterOpts::new(0));
+
+        for (&k, model) in ks.iter().zip(&swept) {
+            let solo = rkmeans(&db, &feq, &RkConfig::new(k).with_kappa(kappa)).unwrap();
+            assert_bitwise_result(&solo, &model.clone().into_result(), &format!("k={k}"));
+        }
+    }
+
+    #[test]
+    fn empty_join_fails_at_the_coreset_stage() {
+        let (mut db, feq) = setup(50, 4);
+        *db.get_mut("items").unwrap() =
+            Relation::new("items", Schema::new(vec![Attr::cat("item", 8), Attr::double("price")]));
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(2)).unwrap();
+        assert!(pipe.coreset(&subspaces).is_err());
+    }
+
+    #[test]
+    fn model_assigns_like_the_grid_centroids() {
+        // Serving sanity at the pipeline level: every grid cell's raw
+        // representative must be assigned to a centroid at least as close
+        // as any other (argmin property over the factored distances).
+        let (db, feq) = setup(180, 5);
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let model = pipe.run(&RkConfig::new(3)).unwrap();
+        let fact = db.get("fact").unwrap();
+        let items = db.get("items").unwrap();
+        for r in 0..8usize.min(fact.n_rows()) {
+            let item = fact.value(r, 0);
+            let units = fact.value(r, 1);
+            let price = items.value(item.as_cat().unwrap() as usize, 1);
+            let vals = vec![item, units, price];
+            let (c, d) = model.assign_with_distance(&vals);
+            for other in 0..model.k() {
+                assert!(d <= model.distance2(&vals, other) + 1e-9, "row {r} vs centroid {other}");
+            }
+            assert_eq!(c, model.assign(&vals));
+        }
+    }
+}

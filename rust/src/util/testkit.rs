@@ -44,6 +44,48 @@ pub fn assert_close(a: f64, b: f64, tol: f64) {
     );
 }
 
+/// Assert two [`RkResult`](crate::rkmeans::RkResult)s are
+/// bitwise-identical in everything but wall clock — the
+/// staged-pipeline-vs-one-shot exactness contract shared by the
+/// `rkmeans::pipeline` unit tests and the integration suite.
+pub fn assert_bitwise_result(
+    a: &crate::rkmeans::RkResult,
+    b: &crate::rkmeans::RkResult,
+    label: &str,
+) {
+    use crate::cluster::CentroidCoord;
+    assert_eq!(a.grid_points, b.grid_points, "{label}: grid_points");
+    assert_eq!(a.iters, b.iters, "{label}: iters");
+    assert_eq!(
+        a.objective_grid.to_bits(),
+        b.objective_grid.to_bits(),
+        "{label}: objective_grid"
+    );
+    assert_eq!(
+        a.quantization_cost.to_bits(),
+        b.quantization_cost.to_bits(),
+        "{label}: quantization_cost"
+    );
+    assert_eq!(a.grid_mass.to_bits(), b.grid_mass.to_bits(), "{label}: grid_mass");
+    assert_eq!(a.centroids.len(), b.centroids.len(), "{label}: k");
+    for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+        for (xa, xb) in ca.iter().zip(cb) {
+            match (xa, xb) {
+                (CentroidCoord::Continuous(u), CentroidCoord::Continuous(v)) => {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{label}: centroid coord")
+                }
+                (CentroidCoord::Categorical(u), CentroidCoord::Categorical(v)) => {
+                    assert_eq!(u.len(), v.len(), "{label}: β length");
+                    for (p, q) in u.iter().zip(v) {
+                        assert_eq!(p.to_bits(), q.to_bits(), "{label}: β entry");
+                    }
+                }
+                _ => panic!("{label}: centroid coordinate kinds diverged"),
+            }
+        }
+    }
+}
+
 /// Assert two float slices are element-wise close.
 #[track_caller]
 pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64) {

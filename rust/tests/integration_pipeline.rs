@@ -51,7 +51,7 @@ fn approximation_ratio_well_below_theorem_bound() {
         let db = ds.generate(Scale::tiny(), 13);
         let feq = ds.feq();
         let k = 5;
-        let res = rkmeans(&db, &feq, &RkConfig { seed: 1, ..RkConfig::new(k) }).unwrap();
+        let res = rkmeans(&db, &feq, &RkConfig::new(k).with_seed(1)).unwrap();
         let rk_obj = full_objective(&db, &feq, &res).unwrap();
         let base =
             materialize_and_cluster(&db, &feq, &LloydConfig { seed: 1, ..LloydConfig::new(k) })

@@ -1,0 +1,236 @@
+//! Integration tests for the staged pipeline API: staged ≡ one-shot
+//! exactness on the paper synthetics, the cyclic-FEQ rewrite through both
+//! entry points (identical grids), `RkModel` serialization round-trips
+//! under random tuples, assignment vs. the dense-centroid argmin, and
+//! serving an exported model from a **fresh process** via the CLI.
+
+use rkmeans::coreset::{centroids_dense, SubspaceSolver};
+use rkmeans::data::{Attr, Database, Relation, Schema, Value};
+use rkmeans::faq::{grid_weights, GidAssigner};
+use rkmeans::join::{ensure_acyclic, materialize, EmbedSpec};
+use rkmeans::query::{Feq, Hypergraph};
+use rkmeans::rkmeans::{rkmeans, ClusterOpts, RkConfig, RkModel, RkPipeline, SubspaceOpts};
+use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::util::testkit::assert_bitwise_result;
+use rkmeans::util::{FxHashMap, SplitMix64};
+
+#[test]
+fn staged_is_bitwise_identical_to_shim_on_paper_synthetics() {
+    for ds in [Dataset::Retailer, Dataset::Favorita] {
+        let db = ds.generate(Scale::tiny(), 31);
+        let feq = ds.feq();
+        for cfg in [RkConfig::new(5), RkConfig::new(8).with_kappa(4)] {
+            let shim = rkmeans(&db, &feq, &cfg).unwrap();
+            let pipe = RkPipeline::plan(&db, &feq).unwrap();
+            let marginals = pipe.marginals().unwrap();
+            let subspaces =
+                pipe.subspaces(&marginals, &SubspaceOpts::from_config(&cfg)).unwrap();
+            let coreset = pipe.coreset(&subspaces).unwrap();
+            let staged = coreset.cluster(&ClusterOpts::from_config(&cfg)).into_result();
+            assert_bitwise_result(&shim, &staged, ds.name());
+        }
+    }
+}
+
+/// A triangle query with payload features (cyclic: needs the rewrite).
+fn cyclic_setup() -> (Database, Feq) {
+    let mut rng = SplitMix64::new(41);
+    let mk = |name: &str, a: &str, b: &str, rng: &mut SplitMix64| {
+        let mut r = Relation::new(
+            name,
+            Schema::new(vec![
+                Attr::cat(a, 5),
+                Attr::cat(b, 5),
+                Attr::double(&format!("p_{name}")),
+            ]),
+        );
+        for _ in 0..40 {
+            r.push_row(&[
+                Value::Cat(rng.below(5) as u32),
+                Value::Cat(rng.below(5) as u32),
+                Value::Double(rng.below(8) as f64),
+            ]);
+        }
+        r
+    };
+    let mut db = Database::new();
+    db.add(mk("r", "a", "b", &mut rng));
+    db.add(mk("s", "b", "c", &mut rng));
+    db.add(mk("t", "c", "a", &mut rng));
+    let feq = Feq::with_features(&["r", "s", "t"], &["p_r", "p_s", "p_t", "a", "b", "c"]);
+    (db, feq)
+}
+
+#[test]
+fn cyclic_feq_rewrite_identical_through_both_entry_points() {
+    let (db, feq) = cyclic_setup();
+    assert!(Hypergraph::from_feq(&db, &feq).join_tree().is_err(), "should be cyclic");
+    let cfg = RkConfig::new(4);
+
+    // One-shot shim and staged pipeline must agree bitwise.
+    let shim = rkmeans(&db, &feq, &cfg).unwrap();
+    let pipe = RkPipeline::plan(&db, &feq).unwrap();
+    assert!(pipe.was_rewritten());
+    let marginals = pipe.marginals().unwrap();
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::from_config(&cfg)).unwrap();
+    let coreset = pipe.coreset(&subspaces).unwrap();
+    let staged = coreset.cluster(&ClusterOpts::from_config(&cfg)).into_result();
+    assert_bitwise_result(&shim, &staged, "triangle");
+
+    // And the staged coreset grid is exactly the grid the shim's models
+    // induce over the acyclic rewrite: identical cells, identical weights.
+    let (db2, feq2) = ensure_acyclic(&db, &feq).unwrap();
+    let tree = Hypergraph::from_feq(&db2, &feq2).join_tree().unwrap();
+    let mut assigners: FxHashMap<String, Box<dyn GidAssigner + '_>> = FxHashMap::default();
+    for m in &shim.models {
+        assigners.insert(m.name.clone(), Box::new(m));
+    }
+    let table = grid_weights(&db2, &feq2, &tree, &assigners).unwrap();
+    let mut cells = table.cells;
+    cells.sort_by(|x, y| x.0.cmp(&y.0));
+    assert_eq!(cells.len(), coreset.n(), "grid cell count");
+    let m = coreset.grid.m;
+    for (i, (g, w)) in cells.iter().enumerate() {
+        assert_eq!(&coreset.grid.gids[i * m..(i + 1) * m], &g[..], "cell {i}");
+        assert_eq!(w.to_bits(), coreset.grid.weights[i].to_bits(), "cell {i} weight");
+    }
+}
+
+#[test]
+fn model_round_trip_preserves_assign_on_random_tuples() {
+    let db = Dataset::Retailer.generate(Scale::tiny(), 7);
+    let feq = Dataset::Retailer.feq();
+    let pipe = RkPipeline::plan(&db, &feq).unwrap();
+    let model = pipe.run(&RkConfig::new(6)).unwrap();
+    let restored = RkModel::from_bytes(&model.to_bytes()).unwrap();
+    assert_eq!(restored.k(), model.k());
+    assert_eq!(restored.m(), model.m());
+
+    // Random raw tuples in FEQ feature order, typed per subspace solver
+    // (categorical keys deliberately include unseen ones).
+    let mut rng = SplitMix64::new(99);
+    for case in 0..200 {
+        let vals: Vec<Value> = model
+            .models
+            .iter()
+            .map(|m| match &m.solver {
+                SubspaceSolver::Continuous(_) => {
+                    Value::Double((rng.uniform(-5.0, 60.0) * 4.0).round() / 4.0)
+                }
+                SubspaceSolver::Categorical(_) => Value::Int(rng.below(64) as i64),
+            })
+            .collect();
+        assert_eq!(model.assign(&vals), restored.assign(&vals), "case {case}");
+        for c in 0..model.k() {
+            assert_eq!(
+                model.distance2(&vals, c).to_bits(),
+                restored.distance2(&vals, c).to_bits(),
+                "case {case} centroid {c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn model_version_mismatch_fails_with_clear_error() {
+    let db = Dataset::Retailer.generate(Scale::tiny(), 11);
+    let feq = Dataset::Retailer.feq();
+    let model = RkPipeline::plan(&db, &feq).unwrap().run(&RkConfig::new(3)).unwrap();
+    let text = String::from_utf8(model.to_bytes()).unwrap();
+    let bumped = text.replace("\"format_version\":1", "\"format_version\":2");
+    assert_ne!(text, bumped);
+    let msg = RkModel::from_bytes(bumped.as_bytes()).unwrap_err().to_string();
+    assert!(msg.contains("unsupported format version 2"), "unclear error: {msg}");
+}
+
+#[test]
+fn assign_matches_dense_centroid_argmin_on_held_out_tuples() {
+    let db = Dataset::Favorita.generate(Scale::tiny(), 13);
+    let feq = Dataset::Favorita.feq();
+    let res = rkmeans(&db, &feq, &RkConfig::new(5)).unwrap();
+    let model = RkModel::from_result(&res);
+
+    let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+    let dense = centroids_dense(&res.centroids, &res.models, &spec);
+    let d = spec.dims;
+    let k = res.centroids.len();
+
+    // "Held-out" tuples: actual join-output rows (the model never saw
+    // them, only the grid coreset).
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+    let x = materialize(&db, &feq, &tree).unwrap();
+    let mut buf = vec![0.0; d];
+    assert!(!x.rows.is_empty());
+    for row in x.rows.iter().take(100) {
+        spec.embed_into(row, &mut buf);
+        let mut dists = vec![0.0f64; k];
+        for (c, dist) in dists.iter_mut().enumerate() {
+            *dist = buf
+                .iter()
+                .zip(&dense[c * d..(c + 1) * d])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+        }
+        // The factored serving distance equals the dense one.
+        for (c, &dd) in dists.iter().enumerate() {
+            let fd = model.distance2(row, c);
+            assert!(
+                (fd - dd).abs() <= 1e-8 * (1.0 + dd.abs()),
+                "factored {fd} vs dense {dd} (centroid {c})"
+            );
+        }
+        // And assign is the argmin over the dense distances.
+        let assigned = model.assign(row);
+        let min = dists.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            dists[assigned] <= min + 1e-8 * (1.0 + min.abs()),
+            "assigned {assigned} at {} but min is {min}",
+            dists[assigned]
+        );
+    }
+}
+
+#[test]
+fn exported_model_serves_from_a_fresh_process() {
+    let db = Dataset::Retailer.generate(Scale::tiny(), 3);
+    let feq = Dataset::Retailer.feq();
+    let model = RkPipeline::plan(&db, &feq).unwrap().run(&RkConfig::new(4)).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("rkmodel_fresh_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.rkm");
+    std::fs::write(&path, model.to_bytes()).unwrap();
+
+    // A tuple in FEQ feature order, plus its expected in-process cluster.
+    let mut parts: Vec<String> = Vec::new();
+    let mut vals: Vec<Value> = Vec::new();
+    for m in &model.models {
+        match &m.solver {
+            SubspaceSolver::Continuous(_) => {
+                vals.push(Value::Double(1.25));
+                parts.push("1.25".to_string());
+            }
+            SubspaceSolver::Categorical(_) => {
+                vals.push(Value::Int(0));
+                parts.push("0".to_string());
+            }
+        }
+    }
+    let expected = model.assign(&vals);
+
+    // A fresh process restores the model from bytes and serves the tuple
+    // without ever touching a Database.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_rkmeans"))
+        .args(["assign", "--model", path.to_str().unwrap(), "--values", &parts.join(",")])
+        .output()
+        .expect("spawn rkmeans assign");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains(&format!("cluster {expected} (")),
+        "expected cluster {expected} in: {stdout}"
+    );
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir(&dir);
+}
