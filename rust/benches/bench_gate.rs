@@ -1,22 +1,27 @@
 //! Bench gate — the CI regression check over the bench trajectory
 //! (ROADMAP "bench trajectory in CI" item).
 //!
-//! Reads `BENCH_lloyd.json` and `BENCH_stream.json` (as emitted by the
-//! smoke runs of `kernel_lloyd` and `stream_ingest` earlier in the CI
-//! job) plus the committed baseline `bench_baseline.json`, and **fails
-//! (exit 1)** when a tracked throughput metric regresses more than the
-//! baseline's tolerance (default 20 %) below its committed value:
+//! Reads `BENCH_lloyd.json`, `BENCH_stream.json` and `BENCH_sweep.json`
+//! (as emitted by the smoke runs of `kernel_lloyd`, `stream_ingest` and
+//! `k_sweep` earlier in the CI job) plus the committed baseline
+//! `bench_baseline.json`, and **fails (exit 1)** when a tracked
+//! throughput metric regresses more than the baseline's tolerance
+//! (default 20 %) below its committed value:
 //!
 //! * `lloyd_retailer_pruned_speedup` — `speedup_vs_naive` of the
 //!   `retailer-materialized` / `dense-pruned` record (machine-relative,
 //!   so it is stable across CI hardware);
 //! * `stream_patched_speedup` — `speedup_vs_rebuild` of the patched
-//!   stream record (also a ratio).
+//!   stream record (also a ratio);
+//! * `sweep_shared_coreset_speedup` — `speedup_vs_independent` of the
+//!   shared-coreset sweep record (also a ratio: one coreset + per-k
+//!   Step 4 vs the full pipeline per k).
 //!
 //! Baseline values are calibrated for the `--test` smoke shapes and set
 //! conservatively; raise them as the engines get faster so the trajectory
 //! ratchets. Env overrides: `RKMEANS_BASELINE`, `RKMEANS_BENCH_OUT`,
-//! `RKMEANS_STREAM_OUT` (same paths the emitting benches use).
+//! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT` (same paths the emitting
+//! benches use).
 
 use rkmeans::util::json::{parse, Json};
 use std::path::PathBuf;
@@ -45,6 +50,7 @@ fn main() {
     let baseline_path = env_path("RKMEANS_BASELINE", "bench_baseline.json");
     let lloyd_path = env_path("RKMEANS_BENCH_OUT", "BENCH_lloyd.json");
     let stream_path = env_path("RKMEANS_STREAM_OUT", "BENCH_stream.json");
+    let sweep_path = env_path("RKMEANS_SWEEP_OUT", "BENCH_sweep.json");
 
     let mut failures: Vec<String> = Vec::new();
     let baseline = match read_json(&baseline_path) {
@@ -97,6 +103,18 @@ fn main() {
             gate(
                 "stream_patched_speedup",
                 rec.and_then(|r| r.get("speedup_vs_rebuild")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    match read_json(&sweep_path) {
+        Ok(doc) => {
+            let rec = find_record(&doc, &[("mode", "shared-coreset")]);
+            gate(
+                "sweep_shared_coreset_speedup",
+                rec.and_then(|r| r.get("speedup_vs_independent")).and_then(|v| v.as_f64()),
                 &mut failures,
             );
         }

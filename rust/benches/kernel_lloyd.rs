@@ -8,12 +8,18 @@
 //! `BENCH_lloyd.json` document per invocation (schema: see
 //! `bench_harness` docs; path override: `RKMEANS_BENCH_OUT`).
 //!
+//! A **policy/precision ablation** runs on the same Retailer workload:
+//! Hamerly vs Elkan at large k (acceptance: Elkan ≥ 1.3× pruned-Hamerly
+//! assignment throughput at k ≥ 64), and the f32 tile vs the f64 kernel
+//! on full scans (acceptance: ≥ 1.5× kernel throughput), emitted as
+//! `retailer-ablation-*` rows next to the classic records.
+//!
 //! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
 //! `RKMEANS_BENCH_SCALE` overrides the Retailer scale (default 0.06 ≈
 //! 120k join rows).
 
 use rkmeans::bench_harness::{write_bench_lloyd, LloydBenchRecord};
-use rkmeans::cluster::{weighted_lloyd_with, EngineOpts, LloydConfig};
+use rkmeans::cluster::{weighted_lloyd_with, BoundsPolicy, EngineOpts, LloydConfig, Precision};
 use rkmeans::join::{materialize, EmbedSpec};
 use rkmeans::query::Hypergraph;
 use rkmeans::synthetic::{retailer, Scale};
@@ -103,6 +109,90 @@ fn main() -> anyhow::Result<()> {
     );
     run_pair("retailer-materialized", &dense, &x.weights, spec.dims, rk, riters, &mut records);
 
+    // Policy ablation: Hamerly vs Elkan on the same workload at large k
+    // (where per-(point, centroid) bounds earn their O(n·k) memory).
+    // Both arms are pruned + parallel; outputs must agree bitwise.
+    let (abk, abiters) = if test_mode { (8usize, 3usize) } else { (64, 12) };
+    let abcfg = LloydConfig { k: abk, max_iters: abiters, tol: 0.0, seed: 3 };
+    let ham = EngineOpts::pruned().with_bounds(BoundsPolicy::Hamerly);
+    let elk = EngineOpts::pruned().with_bounds(BoundsPolicy::Elkan);
+    let (rh, sh) = weighted_lloyd_with(&dense, &x.weights, spec.dims, &abcfg, &ham);
+    let (re, se) = weighted_lloyd_with(&dense, &x.weights, spec.dims, &abcfg, &elk);
+    assert_eq!(
+        rh.objective.to_bits(),
+        re.objective.to_bits(),
+        "bounds policies diverged"
+    );
+    assert!(rh.assign == re.assign, "bounds policies diverged on assignments");
+    let ham_rec = LloydBenchRecord::from_stats(
+        "retailer-ablation-bounds",
+        "dense-pruned-hamerly",
+        spec.dims,
+        abk,
+        rh.objective,
+        &sh,
+    );
+    let elk_rec = LloydBenchRecord::from_stats(
+        "retailer-ablation-bounds",
+        "dense-pruned-elkan",
+        spec.dims,
+        abk,
+        re.objective,
+        &se,
+    )
+    .with_speedup_vs(&ham_rec);
+    println!("{}", ham_rec.line());
+    println!("{}\n", elk_rec.line());
+    println!(
+        "elkan vs hamerly @ k={abk}: {:.2}× points/sec (skip {:.1}% vs {:.1}%; target ≥ 1.3×)\n",
+        elk_rec.speedup_vs_naive.unwrap_or(0.0),
+        100.0 * elk_rec.skip_rate,
+        100.0 * ham_rec.skip_rate
+    );
+    records.push(ham_rec);
+    records.push(elk_rec);
+
+    // Precision ablation: the f32 tile vs the f64 kernel on full scans
+    // (naive mode, single thread — pure kernel throughput, no pruning or
+    // scheduling noise). The objectives must agree to the documented f32
+    // tolerance.
+    let (pk, piters) = if test_mode { (8usize, 2usize) } else { (64, 4) };
+    let pcfg = LloydConfig { k: pk, max_iters: piters, tol: 0.0, seed: 3 };
+    let f64opts = EngineOpts::naive_serial();
+    let f32opts = EngineOpts::naive_serial().with_precision(Precision::F32);
+    let (r64, s64) = weighted_lloyd_with(&dense, &x.weights, spec.dims, &pcfg, &f64opts);
+    let (r32, s32) = weighted_lloyd_with(&dense, &x.weights, spec.dims, &pcfg, &f32opts);
+    let rel = (r64.objective - r32.objective).abs() / r64.objective.abs().max(1e-12);
+    assert!(
+        rel <= rkmeans::cluster::F32_OBJ_RTOL,
+        "f32 objective drifted {rel:.2e} from f64"
+    );
+    let f64_rec = LloydBenchRecord::from_stats(
+        "retailer-ablation-precision",
+        "dense-naive-f64",
+        spec.dims,
+        pk,
+        r64.objective,
+        &s64,
+    );
+    let f32_rec = LloydBenchRecord::from_stats(
+        "retailer-ablation-precision",
+        "dense-naive-f32",
+        spec.dims,
+        pk,
+        r32.objective,
+        &s32,
+    )
+    .with_speedup_vs(&f64_rec);
+    println!("{}", f64_rec.line());
+    println!("{}\n", f32_rec.line());
+    println!(
+        "f32 tile vs f64 kernel @ k={pk}: {:.2}× points/sec (obj drift {rel:.1e}; target ≥ 1.5×)\n",
+        f32_rec.speedup_vs_naive.unwrap_or(0.0)
+    );
+    records.push(f64_rec);
+    records.push(f32_rec);
+
     // XLA/PJRT comparison rows when the artifact path is available.
     xla_rows(&mut records, test_mode);
 
@@ -151,6 +241,8 @@ fn xla_rows(records: &mut Vec<LloydBenchRecord>, test_mode: bool) {
             let rec = LloydBenchRecord {
                 label: format!("synth-{n}x{d}"),
                 engine: "dense-xla".to_string(),
+                bounds: "none".to_string(),
+                precision: "f32".to_string(),
                 n,
                 dims: d,
                 k,

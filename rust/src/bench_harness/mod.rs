@@ -18,6 +18,8 @@
 //!     {
 //!       "label": "retailer-materialized",
 //!       "engine": "dense-pruned",
+//!       "bounds": "hamerly",
+//!       "precision": "f64",
 //!       "n": 120000,
 //!       "dims": 53,
 //!       "k": 32,
@@ -35,16 +37,22 @@
 //! ```
 //!
 //! * `label` names the workload; `engine` is `{dense,factored}-{naive,
-//!   pruned}` (plus `dense-xla` when the PJRT path runs).
+//!   pruned}` plus an optional policy/precision suffix on the ablation
+//!   rows (e.g. `dense-pruned-elkan`, `dense-naive-f32`, `dense-xla`).
+//! * `bounds` / `precision` are the engine's resolved
+//!   [`PruneStats::bounds`] / [`PruneStats::precision`] labels
+//!   (`hamerly`/`elkan`/`none` and `f64`/`f32`), so policy ablations are
+//!   queryable without parsing the engine string.
 //! * `n` counts points (dense) or grid cells (factored); `dims` is the
 //!   dense dimensionality `D` or the subspace count `m` respectively.
 //! * `wall_s` covers the whole run (seeding + iterations);
 //!   `points_per_sec` = `n·iters / wall_s`.
 //! * `dist_evals` / `dist_evals_skipped` count (point, centroid) distance
-//!   evaluations performed vs. proven unnecessary by the Hamerly bounds;
+//!   evaluations performed vs. proven unnecessary by the bounds;
 //!   `skip_rate` = skipped / (evals + skipped).
-//! * `speedup_vs_naive` is the `points_per_sec` ratio against the naive
-//!   serial reference on the same workload; absent on the naive rows.
+//! * `speedup_vs_naive` is the `points_per_sec` ratio against the
+//!   reference row it was attached to (the naive serial run, or the
+//!   Hamerly/f64 arm on ablation rows); absent on reference rows.
 //!
 //! # `BENCH_stream.json` schema (version 1)
 //!
@@ -258,6 +266,10 @@ impl Table {
 pub struct LloydBenchRecord {
     pub label: String,
     pub engine: String,
+    /// Resolved bounds policy label (`hamerly`/`elkan`/`none`).
+    pub bounds: String,
+    /// Kernel precision label (`f64`/`f32`).
+    pub precision: String,
     /// Points (dense) or grid cells (factored).
     pub n: usize,
     /// Dense dimensionality `D`, or subspace count `m` for factored runs.
@@ -270,7 +282,7 @@ pub struct LloydBenchRecord {
     pub dist_evals_skipped: u64,
     pub skip_rate: f64,
     pub objective: f64,
-    /// `points_per_sec` ratio vs. the naive serial reference row.
+    /// `points_per_sec` ratio vs. the reference row it was attached to.
     pub speedup_vs_naive: Option<f64>,
 }
 
@@ -287,6 +299,8 @@ impl LloydBenchRecord {
         LloydBenchRecord {
             label: label.to_string(),
             engine: engine.to_string(),
+            bounds: stats.bounds.to_string(),
+            precision: stats.precision.to_string(),
             n: stats.points as usize,
             dims,
             k,
@@ -330,6 +344,8 @@ impl LloydBenchRecord {
         let mut m = BTreeMap::new();
         m.insert("label".to_string(), Json::Str(self.label.clone()));
         m.insert("engine".to_string(), Json::Str(self.engine.clone()));
+        m.insert("bounds".to_string(), Json::Str(self.bounds.clone()));
+        m.insert("precision".to_string(), Json::Str(self.precision.clone()));
         m.insert("n".to_string(), Json::Num(self.n as f64));
         m.insert("dims".to_string(), Json::Num(self.dims as f64));
         m.insert("k".to_string(), Json::Num(self.k as f64));
@@ -748,7 +764,10 @@ mod tests {
             points: 1000,
             dist_evals: 5000,
             dist_evals_skipped: 19000,
+            bounds: "elkan",
+            precision: "f32",
             wall: Duration::from_millis(500),
+            ..PruneStats::default()
         };
         let naive = LloydBenchRecord::from_stats("synth", "dense-naive", 8, 8, 42.0, &stats);
         let pruned = LloydBenchRecord::from_stats("synth", "dense-pruned", 8, 8, 42.0, &stats)
@@ -763,6 +782,8 @@ mod tests {
         let recs = parsed.get("records").unwrap().as_arr().unwrap();
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].get("engine").unwrap().as_str(), Some("dense-naive"));
+        assert_eq!(recs[0].get("bounds").unwrap().as_str(), Some("elkan"));
+        assert_eq!(recs[0].get("precision").unwrap().as_str(), Some("f32"));
         assert_eq!(recs[0].get("n").unwrap().as_usize(), Some(1000));
         assert!(recs[0].get("speedup_vs_naive").is_none());
         assert_eq!(recs[1].get("speedup_vs_naive").unwrap().as_f64(), Some(1.0));

@@ -142,7 +142,13 @@ pub struct EndToEnd {
 }
 
 /// Run one (dataset, k, κ) end-to-end comparison.
-pub fn end_to_end(db: &Database, feq: &Feq, k: usize, kappa: usize, cfg: &PaperCfg) -> Result<EndToEnd> {
+pub fn end_to_end(
+    db: &Database,
+    feq: &Feq,
+    k: usize,
+    kappa: usize,
+    cfg: &PaperCfg,
+) -> Result<EndToEnd> {
     let tree = Hypergraph::from_feq(db, feq).join_tree()?;
 
     let t0 = Instant::now();
@@ -374,8 +380,9 @@ pub fn engine_ablation(
     );
 
     let dense_pts = grid_dense_embed(&grid, &models, &spec);
+    let naive_opts = EngineOpts::naive_serial();
     let (den_naive, ds0) =
-        weighted_lloyd_with(&dense_pts, &grid.weights, spec.dims, &lcfg, &EngineOpts::naive_serial());
+        weighted_lloyd_with(&dense_pts, &grid.weights, spec.dims, &lcfg, &naive_opts);
     let (den_pruned, ds1) =
         weighted_lloyd_with(&dense_pts, &grid.weights, spec.dims, &lcfg, &EngineOpts::pruned());
     anyhow::ensure!(
@@ -395,23 +402,24 @@ pub fn engine_ablation(
         &["engine", "time", "points/s", "evals", "skipped", "skip%", "objective", "iters"],
     );
     let mut records: Vec<LloydBenchRecord> = Vec::with_capacity(4);
-    let mut push = |engine: &str, dims: usize, objective: f64, stats: &PruneStats, naive: Option<usize>| {
-        let mut rec = LloydBenchRecord::from_stats(&label, engine, dims, k, objective, stats);
-        if let Some(idx) = naive {
-            rec = rec.with_speedup_vs(&records[idx]);
-        }
-        t.row(vec![
-            engine.to_string(),
-            format!("{:.3}s", rec.wall_s),
-            format!("{:.0}", rec.points_per_sec),
-            rec.dist_evals.to_string(),
-            rec.dist_evals_skipped.to_string(),
-            format!("{:.1}%", 100.0 * rec.skip_rate),
-            format!("{:.4e}", rec.objective),
-            rec.iters.to_string(),
-        ]);
-        records.push(rec);
-    };
+    let mut push =
+        |engine: &str, dims: usize, objective: f64, stats: &PruneStats, naive: Option<usize>| {
+            let mut rec = LloydBenchRecord::from_stats(&label, engine, dims, k, objective, stats);
+            if let Some(idx) = naive {
+                rec = rec.with_speedup_vs(&records[idx]);
+            }
+            t.row(vec![
+                engine.to_string(),
+                format!("{:.3}s", rec.wall_s),
+                format!("{:.0}", rec.points_per_sec),
+                rec.dist_evals.to_string(),
+                rec.dist_evals_skipped.to_string(),
+                format!("{:.1}%", 100.0 * rec.skip_rate),
+                format!("{:.4e}", rec.objective),
+                rec.iters.to_string(),
+            ]);
+            records.push(rec);
+        };
     push("factored-naive", grid.m, fac_naive.objective, &fs0, None);
     push("factored-pruned", grid.m, fac_pruned.objective, &fs1, Some(0));
     push("dense-naive", spec.dims, den_naive.objective, &ds0, None);

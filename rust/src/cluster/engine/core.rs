@@ -1,31 +1,36 @@
 //! Shared scaffolding for the dense and factored engine variants: the
-//! Phase-1 Hamerly bounds test, the per-scan lower-bound bookkeeping, the
+//! Phase-1 bounds test (Hamerly's global lower bound or Elkan's
+//! per-(point, centroid) rows), the per-scan lower-bound bookkeeping, the
 //! ordered Phase-3 accumulation loop, the empty-cluster reseed picker, the
 //! inter-centroid separation table, the chunk-stat reduction, and the
 //! convergence test.
 //!
 //! Both variants previously mirrored ~150 lines of this logic; extracting
-//! it means a bounds-logic fix (or a new capability like warm starts)
-//! lands once. The helpers are written so the *arithmetic order* of the
-//! original implementations is preserved exactly — the bitwise
-//! naive≡pruned determinism contract (see the parent module docs) is a
-//! property of that order, and `tests/property_engine.rs` pins it.
+//! it means a bounds-logic fix (or a new capability like warm starts or a
+//! bounds policy) lands once. The helpers are written so the *arithmetic
+//! order* of the original implementations is preserved exactly — the
+//! bitwise naive≡pruned determinism contract (see the parent module docs)
+//! is a property of that order, and `tests/property_engine.rs` pins it.
 //!
 //! The pieces that stay variant-specific are genuinely different:
 //! Phase 2's full scans (tiled microkernel vs. per-subspace table
 //! accumulation) and the centroid update step (dense means vs. factored β
 //! tables).
 
-use super::PruneStats;
+use super::{BoundsPolicy, PruneStats};
 
 /// Read-only per-iteration bounds context shared by every chunk.
 pub(crate) struct BoundsCtx<'a> {
     pub k: usize,
-    /// `max_c ‖c_new − c_old‖` from the previous update step.
+    /// Resolved bounds policy of the run (never `Auto`).
+    pub bounds: BoundsPolicy,
+    /// `max_c ‖c_new − c_old‖` from the previous update step (Hamerly).
     pub drift_max: f64,
+    /// Per-centroid drift `p[c] = ‖c_new − c_old‖` (Elkan).
+    pub drift: &'a [f64],
     /// `s[c] = ½·min_{c'≠c} d(c, c')` per centroid.
     pub s_half: &'a [f64],
-    /// FP slack for the skip test (see `SLACK_REL`).
+    /// FP slack for the skip test (see `SLACK_REL` / `SLACK_REL_F32`).
     pub slack: f64,
     /// Bounds are valid and may be used to skip this pass.
     pub use_bounds: bool,
@@ -34,7 +39,8 @@ pub(crate) struct BoundsCtx<'a> {
 }
 
 /// One chunk's view of the per-point bounds state (disjoint mutable
-/// slices of the engine-wide arrays).
+/// slices of the engine-wide arrays). `lb` holds one entry per point
+/// (Hamerly) or a `k`-stride row per point (Elkan).
 pub(crate) struct ChunkState<'a> {
     pub w: &'a [f64],
     pub assign: &'a mut [u32],
@@ -46,12 +52,13 @@ pub(crate) struct ChunkState<'a> {
 #[derive(Default)]
 pub(crate) struct ChunkStats {
     pub evals: u64,
+    pub bound_evals: u64,
     pub skipped: u64,
     pub max_dd: f64,
 }
 
-/// Phase 1: the Hamerly bounds test over one chunk. `assigned_d2(i, a)`
-/// must return the *exact* squared distance of point `i` to its assigned
+/// Phase 1: the bounds test over one chunk. `assigned_d2(i, a)` must
+/// return the *exact* squared distance of point `i` to its assigned
 /// centroid `a`, computed with the same arithmetic as a full scan (the
 /// caller applies its own clamping so skipped points store the identical
 /// `mind2` bits a scan would have produced). Returns the indices that
@@ -68,11 +75,31 @@ pub(crate) fn bounds_filter(
         scan.extend(0..n as u32);
         return scan;
     }
+    let k = ctx.k;
     for i in 0..n {
         let a = st.assign[i] as usize;
-        // Drift the bounds by the centroid movement since last pass.
-        let lbv = st.lb[i] - ctx.drift_max;
-        st.lb[i] = lbv;
+        // Drift the bounds by the centroid movement since last pass, and
+        // form the policy's point-level lower bound on the second-best
+        // distance.
+        let lbv = match ctx.bounds {
+            BoundsPolicy::Elkan => {
+                let row = &mut st.lb[i * k..(i + 1) * k];
+                let mut lb_min = f64::INFINITY;
+                for (c, (b, &p)) in row.iter_mut().zip(ctx.drift).enumerate() {
+                    let v = *b - p;
+                    *b = v;
+                    if c != a && v < lb_min {
+                        lb_min = v;
+                    }
+                }
+                lb_min
+            }
+            _ => {
+                let v = st.lb[i] - ctx.drift_max;
+                st.lb[i] = v;
+                v
+            }
+        };
         // The upper bound is the exact assigned distance, recomputed here
         // every pass (one evaluation) — which also keeps the reported
         // objective exact for skipped points. Being exact each pass, it
@@ -80,12 +107,18 @@ pub(crate) fn bounds_filter(
         let dd = assigned_d2(i, a);
         let da = dd.sqrt();
         stats.evals += 1;
+        stats.bound_evals += 1;
+        if ctx.bounds == BoundsPolicy::Elkan {
+            // Exact, hence a valid (and the tightest possible) bound on
+            // the assigned centroid for later passes.
+            st.lb[i * k + a] = da;
+        }
         let bound = ctx.s_half[a].max(lbv);
         if da + ctx.slack < bound {
             // Provably still closest (strictly, even under ties and FP
             // rounding — see the parent module docs): skip the k-loop.
             st.mind2[i] = dd;
-            stats.skipped += ctx.k as u64 - 1;
+            stats.skipped += k as u64 - 1;
             if dd > stats.max_dd {
                 stats.max_dd = dd;
             }
@@ -97,10 +130,13 @@ pub(crate) fn bounds_filter(
 }
 
 /// Record one full scan's outcome: the new assignment, the exact `mind2`,
-/// and (when pruning) the second-best distance as the new lower bound.
+/// and (when pruning) the refreshed lower bounds — the second-best
+/// distance (Hamerly) or the whole per-centroid row via `dist2_of(c)`
+/// (Elkan; raw expansion values, clamped here before the √).
 /// `d1`/`d2` must already carry the variant's clamping (`max(0.0)` for the
 /// dense expansion; factored table sums are non-negative by construction).
 #[inline]
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn record_scan(
     st: &mut ChunkState<'_>,
     stats: &mut ChunkStats,
@@ -108,23 +144,37 @@ pub(crate) fn record_scan(
     c1: u32,
     d1: f64,
     d2: f64,
-    k: usize,
-    pruning: bool,
+    ctx: &BoundsCtx<'_>,
+    mut dist2_of: impl FnMut(usize) -> f64,
 ) {
+    let k = ctx.k;
     st.assign[i] = c1;
     st.mind2[i] = d1;
     stats.evals += k as u64;
     if d1 > stats.max_dd {
         stats.max_dd = d1;
     }
-    if pruning {
-        if d2.is_finite() {
-            st.lb[i] = d2.sqrt();
-            if d2 > stats.max_dd {
-                stats.max_dd = d2;
+    if ctx.pruning {
+        match ctx.bounds {
+            BoundsPolicy::Elkan => {
+                let row = &mut st.lb[i * k..(i + 1) * k];
+                for (c, b) in row.iter_mut().enumerate() {
+                    *b = dist2_of(c).max(0.0).sqrt();
+                }
+                if d2.is_finite() && d2 > stats.max_dd {
+                    stats.max_dd = d2;
+                }
             }
-        } else {
-            st.lb[i] = f64::INFINITY;
+            _ => {
+                if d2.is_finite() {
+                    st.lb[i] = d2.sqrt();
+                    if d2 > stats.max_dd {
+                        stats.max_dd = d2;
+                    }
+                } else {
+                    st.lb[i] = f64::INFINITY;
+                }
+            }
         }
     }
 }
@@ -197,6 +247,7 @@ pub(crate) fn converged(prev: f64, obj: f64, tol: f64) -> bool {
 pub(crate) fn fold_chunk_stats(stats: &mut PruneStats, max_dd: &mut f64, cs: &ChunkStats) {
     stats.dist_evals += cs.evals;
     stats.dist_evals_skipped += cs.skipped;
+    stats.bound_evals += cs.bound_evals;
     if cs.max_dd > *max_dd {
         *max_dd = cs.max_dd;
     }
@@ -215,7 +266,9 @@ mod tests {
         let mut st = ChunkState { w: &w, assign: &mut assign, mind2: &mut mind2, lb: &mut lb };
         let ctx = BoundsCtx {
             k: 2,
+            bounds: BoundsPolicy::Hamerly,
             drift_max: 0.0,
+            drift: &[0.0, 0.0],
             s_half: &[0.0, 0.0],
             slack: 0.0,
             use_bounds: false,
@@ -237,7 +290,9 @@ mod tests {
         let mut st = ChunkState { w: &w, assign: &mut assign, mind2: &mut mind2, lb: &mut lb };
         let ctx = BoundsCtx {
             k: 3,
+            bounds: BoundsPolicy::Hamerly,
             drift_max: 0.0,
+            drift: &[0.0; 3],
             s_half: &[0.0; 3],
             slack: 1e-9,
             use_bounds: true,
@@ -248,6 +303,69 @@ mod tests {
         assert_eq!(scan, vec![1]);
         assert_eq!(stats.skipped, 2); // k - 1 for the skipped point
         assert_eq!(mind2[0], 1.0);
+    }
+
+    #[test]
+    fn elkan_filter_drifts_per_centroid_and_tightens_assigned() {
+        // Two points assigned to centroid 0, k = 3 with per-centroid lb
+        // rows. Point 0: every other bound stays above the assigned
+        // distance after its own drift — skipped. Point 1: centroid 2's
+        // bound drifts below the assigned distance — scanned.
+        let w = vec![1.0; 2];
+        let mut assign = vec![0u32; 2];
+        let mut mind2 = vec![0.0; 2];
+        // Rows [c0, c1, c2] per point.
+        let mut lb = vec![1.0, 10.0, 10.0, 1.0, 10.0, 2.5];
+        let mut st = ChunkState { w: &w, assign: &mut assign, mind2: &mut mind2, lb: &mut lb };
+        let ctx = BoundsCtx {
+            k: 3,
+            bounds: BoundsPolicy::Elkan,
+            drift_max: 2.0, // deliberately loose: Elkan must not use it
+            drift: &[0.0, 0.5, 2.0],
+            s_half: &[0.0; 3],
+            slack: 1e-9,
+            use_bounds: true,
+            pruning: true,
+        };
+        let mut stats = ChunkStats::default();
+        // Exact assigned distance 4.0 (squared) → 2.0 Euclidean.
+        let scan = bounds_filter(&mut st, &ctx, &mut stats, |_, _| 4.0);
+        // Point 0: min over c≠0 of drifted lb = min(9.5, 8.0) = 8.0 > 2.0.
+        // Point 1: centroid 2 drifted to 0.5 < 2.0 → must rescan.
+        assert_eq!(scan, vec![1]);
+        assert_eq!(stats.skipped, 2);
+        assert_eq!(mind2[0], 4.0);
+        // Drift applied per centroid, and the assigned bound tightened to
+        // the exact distance.
+        assert_eq!(&lb[0..3], &[2.0, 9.5, 8.0]);
+        assert_eq!(lb[3], 2.0);
+        assert_eq!(lb[4], 9.5);
+        assert_eq!(lb[5], 0.5);
+    }
+
+    #[test]
+    fn elkan_scan_refreshes_the_whole_row() {
+        let w = vec![1.0];
+        let mut assign = vec![0u32];
+        let mut mind2 = vec![0.0];
+        let mut lb = vec![7.0, 7.0, 7.0];
+        let mut st = ChunkState { w: &w, assign: &mut assign, mind2: &mut mind2, lb: &mut lb };
+        let ctx = BoundsCtx {
+            k: 3,
+            bounds: BoundsPolicy::Elkan,
+            drift_max: 0.0,
+            drift: &[0.0; 3],
+            s_half: &[0.0; 3],
+            slack: 0.0,
+            use_bounds: false,
+            pruning: true,
+        };
+        let mut stats = ChunkStats::default();
+        let dists = [4.0, 1.0, -1e-18]; // tiny negative: clamped before √
+        record_scan(&mut st, &mut stats, 0, 2, 0.0, 1.0, &ctx, |c| dists[c]);
+        assert_eq!(assign[0], 2);
+        assert_eq!(lb, vec![2.0, 1.0, 0.0]);
+        assert_eq!(stats.evals, 3);
     }
 
     #[test]

@@ -1,27 +1,35 @@
 //! Dense weighted Lloyd on row-major points through the shared engine:
 //! k-means++ seeding (or a warm start from caller-provided centroids),
-//! the tiled microkernel for full scans, Hamerly bounds to skip unchanged
-//! assignments, and chunk-parallel accumulation. The bounds test, ordered
-//! accumulation, reseed picker and convergence test live in the shared
-//! [`core`](super::core) helpers; see the parent module docs for the
-//! bounds invariants and determinism contract.
+//! the tiled microkernel for full scans (f64 or the f32 tile path),
+//! bounds pruning under the selected policy (Hamerly or Elkan) to skip
+//! unchanged assignments, and chunk-parallel accumulation. The bounds
+//! test, ordered accumulation, reseed picker and convergence test live in
+//! the shared [`core`](super::core) helpers; see the parent module docs
+//! for the bounds invariants, the precision tolerance contract and the
+//! determinism contract.
 
 use super::core::{
     accumulate_pass, bounds_filter, converged, fold_chunk_stats, half_min_separation,
     record_scan, reseed_target, BoundsCtx, ChunkState, ChunkStats,
 };
 use super::microkernel::{self, TILE};
-use super::{resolve_threads, run_chunks, EngineOpts, PruneStats, CHUNK, SLACK_REL};
+use super::{
+    resolve_threads, run_chunks, BoundsPolicy, EngineOpts, Precision, PruneStats, CHUNK,
+    SLACK_REL, SLACK_REL_F32,
+};
 use crate::cluster::kmeanspp::kmeanspp_indices;
 use crate::cluster::lloyd::{LloydConfig, LloydResult};
 use crate::util::SplitMix64;
 use std::time::Instant;
 
 /// One chunk's view of the per-point state (disjoint mutable slices) plus
-/// its accumulators, reduced in chunk order after each pass.
+/// its accumulators, reduced in chunk order after each pass. The `*32`
+/// slices are empty on the f64 path.
 struct DenseChunk<'a> {
     pts: &'a [f64],
+    pts32: &'a [f32],
     xnorm: &'a [f64],
+    xnorm32: &'a [f32],
     st: ChunkState<'a>,
     sums: Vec<f64>,
     mass: Vec<f64>,
@@ -29,12 +37,19 @@ struct DenseChunk<'a> {
     stats: ChunkStats,
 }
 
-/// Read-only per-iteration context shared by all chunks.
+/// Read-only per-iteration context shared by all chunks. Exactly one of
+/// the (`ct_t`, `cnorm`) / (`ct_t32`, `cnorm32`) pairs is populated,
+/// matching `precision`.
 struct PassCtx<'a> {
     d: usize,
     k: usize,
     ct_t: &'a [f64],
     cnorm: &'a [f64],
+    ct_t32: &'a [f32],
+    cnorm32: &'a [f32],
+    precision: Precision,
+    bounds: BoundsPolicy,
+    drift: &'a [f64],
     drift_max: f64,
     s_half: &'a [f64],
     slack: f64,
@@ -46,44 +61,107 @@ struct PassCtx<'a> {
 fn assign_chunk(ch: &mut DenseChunk, ctx: &PassCtx) {
     let (d, k) = (ctx.d, ctx.k);
     let pts = ch.pts;
-    let xnorm = ch.xnorm;
 
-    // Phase 1: bounds test (shared). The closure computes the exact
-    // assigned distance with the same expansion a full scan uses.
     let bctx = BoundsCtx {
         k,
+        bounds: ctx.bounds,
         drift_max: ctx.drift_max,
+        drift: ctx.drift,
         s_half: ctx.s_half,
         slack: ctx.slack,
         use_bounds: ctx.use_bounds,
         pruning: ctx.pruning,
     };
-    let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
-        let x = &pts[i * d..(i + 1) * d];
-        let dot = microkernel::dot_one(x, ctx.ct_t, k, a);
-        let dd = xnorm[i] - 2.0 * dot + ctx.cnorm[a];
-        dd.max(0.0)
-    });
 
-    // Phase 2: full scans, tiled through the microkernel.
-    let mut tile = vec![0.0f64; TILE * d];
-    let mut dots = vec![0.0f64; TILE * k];
-    for group in scan.chunks(TILE) {
-        let tp = group.len();
-        for (p, &gi) in group.iter().enumerate() {
-            let i = gi as usize;
-            tile[p * d..(p + 1) * d].copy_from_slice(&pts[i * d..(i + 1) * d]);
+    match ctx.precision {
+        Precision::F64 => {
+            let xnorm = ch.xnorm;
+            // Phase 1: bounds test (shared). The closure computes the
+            // exact assigned distance with the same expansion a full scan
+            // uses.
+            let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
+                let x = &pts[i * d..(i + 1) * d];
+                let dot = microkernel::dot_one(x, ctx.ct_t, k, a);
+                let dd = xnorm[i] - 2.0 * dot + ctx.cnorm[a];
+                dd.max(0.0)
+            });
+
+            // Phase 2: full scans, tiled through the microkernel.
+            let mut tile = vec![0.0f64; TILE * d];
+            let mut dots = vec![0.0f64; TILE * k];
+            for group in scan.chunks(TILE) {
+                let tp = group.len();
+                for (p, &gi) in group.iter().enumerate() {
+                    let i = gi as usize;
+                    tile[p * d..(p + 1) * d].copy_from_slice(&pts[i * d..(i + 1) * d]);
+                }
+                microkernel::tile_dots(&tile[..tp * d], d, k, ctx.ct_t, &mut dots);
+                for (p, &gi) in group.iter().enumerate() {
+                    let i = gi as usize;
+                    let drow = &dots[p * k..(p + 1) * k];
+                    let (d1, c1, d2) = microkernel::best_two_expanded(xnorm[i], drow, ctx.cnorm);
+                    let xn = xnorm[i];
+                    record_scan(
+                        &mut ch.st,
+                        &mut ch.stats,
+                        i,
+                        c1,
+                        d1.max(0.0),
+                        d2.max(0.0),
+                        &bctx,
+                        |c| xn - 2.0 * drow[c] + ctx.cnorm[c],
+                    );
+                }
+            }
         }
-        microkernel::tile_dots(&tile[..tp * d], d, k, ctx.ct_t, &mut dots);
-        for (p, &gi) in group.iter().enumerate() {
-            let i = gi as usize;
-            let (d1, c1, d2) =
-                microkernel::best_two_expanded(xnorm[i], &dots[p * k..(p + 1) * k], ctx.cnorm);
-            record_scan(&mut ch.st, &mut ch.stats, i, c1, d1.max(0.0), d2.max(0.0), k, ctx.pruning);
+        Precision::F32 => {
+            let pts32 = ch.pts32;
+            let xnorm32 = ch.xnorm32;
+            // Phase 1: same test through the f32 kernel — bitwise
+            // consistent with the f32 scan below (microkernel contract).
+            let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
+                let x = &pts32[i * d..(i + 1) * d];
+                let dot = microkernel::dot_one_f32(x, ctx.ct_t32, k, a);
+                let dd = xnorm32[i] - 2.0 * dot + ctx.cnorm32[a];
+                dd.max(0.0) as f64
+            });
+
+            // Phase 2: full scans through the f32 tile kernel. Distances
+            // widen to f64 only after the f32 clamp, so skipped and
+            // scanned points stay on one arithmetic footing.
+            let mut tile = vec![0.0f32; TILE * d];
+            let mut dots = vec![0.0f32; TILE * k];
+            for group in scan.chunks(TILE) {
+                let tp = group.len();
+                for (p, &gi) in group.iter().enumerate() {
+                    let i = gi as usize;
+                    tile[p * d..(p + 1) * d].copy_from_slice(&pts32[i * d..(i + 1) * d]);
+                }
+                microkernel::tile_dots_f32(&tile[..tp * d], d, k, ctx.ct_t32, &mut dots);
+                for (p, &gi) in group.iter().enumerate() {
+                    let i = gi as usize;
+                    let drow = &dots[p * k..(p + 1) * k];
+                    let (d1, c1, d2) =
+                        microkernel::best_two_expanded_f32(xnorm32[i], drow, ctx.cnorm32);
+                    let xn = xnorm32[i];
+                    record_scan(
+                        &mut ch.st,
+                        &mut ch.stats,
+                        i,
+                        c1,
+                        d1.max(0.0) as f64,
+                        d2.max(0.0) as f64,
+                        &bctx,
+                        |c| (xn - 2.0 * drow[c] + ctx.cnorm32[c]) as f64,
+                    );
+                }
+            }
         }
     }
 
     // Phase 3: objective + update accumulation in point order (shared).
+    // The centroid-update sums accumulate in f64 from the original
+    // coordinates in both precisions (the f32 tolerance contract).
     let sums = &mut ch.sums;
     accumulate_pass(ch.st.w, ch.st.assign, ch.st.mind2, &mut ch.obj, &mut ch.mass, |i, c, w| {
         let x = &pts[i * d..(i + 1) * d];
@@ -157,30 +235,64 @@ pub fn lloyd_dense_init(
     // Invariant per-point geometry.
     let xnorm: Vec<f64> = (0..n).map(|i| row(i).iter().map(|v| v * v).sum()).collect();
     let xn_max = xnorm.iter().cloned().fold(0.0f64, f64::max);
+    // f32 path: cast the points once; per-point norms accumulate in f32
+    // so Phase 1 and Phase 2 share one arithmetic footing.
+    let f32_kernel = opts.precision == Precision::F32;
+    let pts32: Vec<f32> =
+        if f32_kernel { points.iter().map(|&v| v as f32).collect() } else { Vec::new() };
+    let xnorm32: Vec<f32> = if f32_kernel {
+        (0..n).map(|i| pts32[i * d..(i + 1) * d].iter().map(|v| v * v).sum()).collect()
+    } else {
+        Vec::new()
+    };
+
+    let bounds = opts.bounds.resolve(k);
+    // Per-(point, centroid) lower-bound rows for Elkan, one global bound
+    // per point otherwise.
+    let lb_stride = if opts.pruning && bounds == BoundsPolicy::Elkan { k } else { 1 };
+    let slack_rel = match opts.precision {
+        Precision::F64 => SLACK_REL,
+        Precision::F32 => SLACK_REL_F32,
+    };
 
     let threads = resolve_threads(opts.threads);
     let mut assign = vec![0u32; n];
     let mut mind2 = vec![0.0f64; n];
-    let mut lb = vec![0.0f64; n];
+    let mut lb = vec![0.0f64; n * lb_stride];
     let mut drift = vec![0.0f64; k];
     let mut s_half = vec![0.0f64; k];
     let mut bounds_valid = false;
     let mut max_dd = 0.0f64;
 
     let mut ct_t: Vec<f64> = Vec::new();
+    let mut ct_t32: Vec<f32> = Vec::new();
     let mut objective = f64::INFINITY;
     let mut iters = 0;
-    let mut stats = PruneStats { points: n as u64, ..PruneStats::default() };
+    let mut stats = PruneStats {
+        points: n as u64,
+        bounds: if opts.pruning { bounds.label() } else { "none" },
+        precision: opts.precision.label(),
+        ..PruneStats::default()
+    };
 
     for it in 0..cfg.max_iters.max(1) {
         iters = it + 1;
 
-        // Per-iteration centroid geometry.
+        // Per-iteration centroid geometry, in the kernel's precision.
         let mut cnorm = vec![0.0f64; k];
-        for (c, cc) in centroids.chunks_exact(d).enumerate() {
-            cnorm[c] = cc.iter().map(|v| v * v).sum();
+        let mut cnorm32: Vec<f32> = Vec::new();
+        if f32_kernel {
+            microkernel::transpose_f32(&centroids, d, k, &mut ct_t32);
+            cnorm32 = centroids
+                .chunks_exact(d)
+                .map(|cc| cc.iter().map(|&v| (v as f32) * (v as f32)).sum())
+                .collect();
+        } else {
+            for (c, cc) in centroids.chunks_exact(d).enumerate() {
+                cnorm[c] = cc.iter().map(|v| v * v).sum();
+            }
+            microkernel::transpose(&centroids, d, k, &mut ct_t);
         }
-        microkernel::transpose(&centroids, d, k, &mut ct_t);
         let use_bounds = opts.pruning && bounds_valid;
         if use_bounds {
             half_min_separation(k, &mut s_half, |c, c2| {
@@ -188,12 +300,17 @@ pub fn lloyd_dense_init(
             });
         }
         let drift_max = drift.iter().cloned().fold(0.0f64, f64::max);
-        let slack = SLACK_REL * (1.0 + max_dd.sqrt() + xn_max.sqrt());
+        let slack = slack_rel * (1.0 + max_dd.sqrt() + xn_max.sqrt());
         let ctx = PassCtx {
             d,
             k,
             ct_t: &ct_t,
             cnorm: &cnorm,
+            ct_t32: &ct_t32,
+            cnorm32: &cnorm32,
+            precision: opts.precision,
+            bounds,
+            drift: &drift,
             drift_max,
             s_half: &s_half,
             slack,
@@ -207,13 +324,15 @@ pub fn lloyd_dense_init(
             let parts = assign
                 .chunks_mut(CHUNK)
                 .zip(mind2.chunks_mut(CHUNK))
-                .zip(lb.chunks_mut(CHUNK));
+                .zip(lb.chunks_mut(CHUNK * lb_stride));
             let mut start = 0usize;
             for ((a_s, m_s), l_s) in parts {
                 let len = a_s.len();
                 chunks.push(DenseChunk {
                     pts: &points[start * d..(start + len) * d],
+                    pts32: if f32_kernel { &pts32[start * d..(start + len) * d] } else { &[] },
                     xnorm: &xnorm[start..start + len],
+                    xnorm32: if f32_kernel { &xnorm32[start..start + len] } else { &[] },
                     st: ChunkState {
                         w: &weights[start..start + len],
                         assign: a_s,
@@ -375,6 +494,99 @@ mod tests {
         );
         assert!(warm.objective <= cold.objective * (1.0 + 1e-9));
         assert!(warm.iters <= 3, "warm start took {} iterations", warm.iters);
+    }
+
+    #[test]
+    fn elkan_matches_naive_bitwise_and_prunes_more() {
+        // Elkan is an alternative bounds policy, not an approximation:
+        // identical bits, strictly better (or equal) skip counts on
+        // stable blob workloads.
+        let mut rng = SplitMix64::new(51);
+        let (pts, w) = clustered(&mut rng, 4000, 5, 0.15);
+        let cfg = LloydConfig { k: 12, max_iters: 10, tol: 0.0, seed: 17 };
+        let (naive, _) = lloyd_dense(&pts, &w, 5, &cfg, &EngineOpts::naive_serial());
+        let ham = EngineOpts::pruned().with_bounds(BoundsPolicy::Hamerly);
+        let elk = EngineOpts::pruned().with_bounds(BoundsPolicy::Elkan).with_threads(3);
+        let (rh, sh) = lloyd_dense(&pts, &w, 5, &cfg, &ham);
+        let (re, se) = lloyd_dense(&pts, &w, 5, &cfg, &elk);
+        for r in [&rh, &re] {
+            assert_eq!(naive.assign, r.assign);
+            assert_eq!(naive.centroids, r.centroids);
+            assert_eq!(naive.objective.to_bits(), r.objective.to_bits());
+        }
+        assert_eq!(sh.bounds, "hamerly");
+        assert_eq!(se.bounds, "elkan");
+        assert!(
+            se.dist_evals_skipped >= sh.dist_evals_skipped,
+            "elkan skipped {} < hamerly {}",
+            se.dist_evals_skipped,
+            sh.dist_evals_skipped
+        );
+    }
+
+    #[test]
+    fn auto_policy_resolves_by_k() {
+        let mut rng = SplitMix64::new(52);
+        let (pts, w) = clustered(&mut rng, 300, 3, 0.3);
+        let cfg = LloydConfig { k: 4, max_iters: 3, tol: 0.0, seed: 1 };
+        let (_, s) = lloyd_dense(&pts, &w, 3, &cfg, &EngineOpts::pruned());
+        assert_eq!(s.bounds, "hamerly");
+        let cfg = LloydConfig { k: super::super::ELKAN_AUTO_K, max_iters: 2, tol: 0.0, seed: 1 };
+        let (_, s) = lloyd_dense(&pts, &w, 3, &cfg, &EngineOpts::pruned());
+        assert_eq!(s.bounds, "elkan");
+        let (_, s) = lloyd_dense(&pts, &w, 3, &cfg, &EngineOpts::naive_serial());
+        assert_eq!(s.bounds, "none");
+    }
+
+    #[test]
+    fn f32_pruned_parallel_matches_f32_naive_bitwise() {
+        // The determinism contract holds within the f32 precision, for
+        // both bounds policies.
+        for_cases(8, |rng| {
+            let n = 50 + rng.below(300) as usize;
+            let d = 1 + rng.below(5) as usize;
+            let k = 1 + rng.below(7) as usize;
+            let (pts, w) = clustered(rng, n, d, 0.3);
+            let iters = 1 + rng.below(6) as usize;
+            let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: rng.next_u64() };
+            let naive32 = EngineOpts::naive_serial().with_precision(Precision::F32);
+            let (a, sa) = lloyd_dense(&pts, &w, d, &cfg, &naive32);
+            for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+                let opts = EngineOpts::pruned()
+                    .with_precision(Precision::F32)
+                    .with_bounds(bounds)
+                    .with_threads(3);
+                let (b, sb) = lloyd_dense(&pts, &w, d, &cfg, &opts);
+                assert_eq!(a.assign, b.assign, "{bounds:?}");
+                assert_eq!(a.centroids, b.centroids, "{bounds:?}");
+                assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{bounds:?}");
+                assert_eq!(sb.precision, "f32");
+            }
+            assert_eq!(sa.precision, "f32");
+        });
+    }
+
+    #[test]
+    fn f32_objective_within_tolerance_of_f64() {
+        // k matches the blob count, so both precisions converge into the
+        // same basin and differ only by kernel rounding.
+        let mut rng = SplitMix64::new(53);
+        let (pts, w) = clustered(&mut rng, 2000, 6, 0.2);
+        let cfg = LloydConfig { k: 4, max_iters: 12, tol: 0.0, seed: 9 };
+        let (r64, _) = lloyd_dense(&pts, &w, 6, &cfg, &EngineOpts::pruned());
+        let (r32, _) = lloyd_dense(
+            &pts,
+            &w,
+            6,
+            &cfg,
+            &EngineOpts::pruned().with_precision(Precision::F32),
+        );
+        let rel = (r64.objective - r32.objective).abs() / r64.objective.abs().max(1e-12);
+        assert!(
+            rel <= super::super::F32_OBJ_RTOL,
+            "f32 objective drifted {rel:.2e} (> {:.0e})",
+            super::super::F32_OBJ_RTOL
+        );
     }
 
     #[test]

@@ -20,8 +20,11 @@ use super::core::{
     accumulate_pass, bounds_filter, converged, fold_chunk_stats, half_min_separation,
     record_scan, reseed_target, BoundsCtx, ChunkState, ChunkStats,
 };
-use super::microkernel::best_two_buf;
-use super::{resolve_threads, run_chunks, EngineOpts, PruneStats, CHUNK, SLACK_REL};
+use super::microkernel::{best_two_buf, best_two_buf_f32};
+use super::{
+    resolve_threads, run_chunks, BoundsPolicy, EngineOpts, Precision, PruneStats, CHUNK,
+    SLACK_REL, SLACK_REL_F32,
+};
 use crate::cluster::kmeanspp::kmeanspp_indices;
 use crate::cluster::lloyd::LloydConfig;
 use crate::cluster::sparse_lloyd::{
@@ -157,12 +160,17 @@ struct FacChunk<'a> {
     stats: ChunkStats,
 }
 
-/// Read-only per-iteration context.
+/// Read-only per-iteration context. Exactly one of `tables` / `tables32`
+/// is populated, matching `precision`.
 struct FacCtx<'a> {
     m: usize,
     k: usize,
     kappa: &'a [usize],
     tables: &'a [Vec<f64>],
+    tables32: &'a [Vec<f32>],
+    precision: Precision,
+    bounds: BoundsPolicy,
+    drift: &'a [f64],
     drift_max: f64,
     s_half: &'a [f64],
     slack: f64,
@@ -181,44 +189,101 @@ fn cell_centroid_dd(gids: &[u32], tables: &[Vec<f64>], k: usize, c: usize) -> f6
     dd
 }
 
+/// f32 twin of [`cell_centroid_dd`] (same subspace-order accumulation,
+/// bitwise-identical to the f32 full scan).
+#[inline]
+fn cell_centroid_dd_f32(gids: &[u32], tables: &[Vec<f32>], k: usize, c: usize) -> f32 {
+    let mut dd = tables[0][gids[0] as usize * k + c];
+    for (j, tj) in tables.iter().enumerate().skip(1) {
+        dd += tj[gids[j] as usize * k + c];
+    }
+    dd
+}
+
 fn assign_chunk(ch: &mut FacChunk, ctx: &FacCtx) {
     let (m, k) = (ctx.m, ctx.k);
     let gids = ch.gids;
 
-    // Phase 1: bounds test (shared). Table sums are non-negative by
-    // construction, so no clamping is applied (matching the full scan).
+    // Table sums are non-negative by construction, so no clamping is
+    // applied in either phase or precision (matching the full scan).
     let bctx = BoundsCtx {
         k,
+        bounds: ctx.bounds,
         drift_max: ctx.drift_max,
+        drift: ctx.drift,
         s_half: ctx.s_half,
         slack: ctx.slack,
         use_bounds: ctx.use_bounds,
         pruning: ctx.pruning,
     };
-    let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
-        cell_centroid_dd(&gids[i * m..(i + 1) * m], ctx.tables, k, a)
-    });
 
-    // Phase 2: full scans — the factored m-lookup accumulation over all
-    // centroids.
-    let mut dist_buf = vec![0.0f64; k];
-    for &gi in &scan {
-        let i = gi as usize;
-        let row = &gids[i * m..(i + 1) * m];
-        let base0 = row[0] as usize * k;
-        dist_buf.copy_from_slice(&ctx.tables[0][base0..base0 + k]);
-        for j in 1..m {
-            let base = row[j] as usize * k;
-            let tj = &ctx.tables[j][base..base + k];
-            for (dv, &t) in dist_buf.iter_mut().zip(tj) {
-                *dv += t;
+    match ctx.precision {
+        Precision::F64 => {
+            // Phase 1: bounds test (shared).
+            let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
+                cell_centroid_dd(&gids[i * m..(i + 1) * m], ctx.tables, k, a)
+            });
+
+            // Phase 2: full scans — the factored m-lookup accumulation
+            // over all centroids.
+            let mut dist_buf = vec![0.0f64; k];
+            for &gi in &scan {
+                let i = gi as usize;
+                let row = &gids[i * m..(i + 1) * m];
+                let base0 = row[0] as usize * k;
+                dist_buf.copy_from_slice(&ctx.tables[0][base0..base0 + k]);
+                for j in 1..m {
+                    let base = row[j] as usize * k;
+                    let tj = &ctx.tables[j][base..base + k];
+                    for (dv, &t) in dist_buf.iter_mut().zip(tj) {
+                        *dv += t;
+                    }
+                }
+                let (d1, c1, d2) = best_two_buf(&dist_buf);
+                let buf = &dist_buf;
+                record_scan(&mut ch.st, &mut ch.stats, i, c1, d1, d2, &bctx, |c| buf[c]);
             }
         }
-        let (d1, c1, d2) = best_two_buf(&dist_buf);
-        record_scan(&mut ch.st, &mut ch.stats, i, c1, d1, d2, k, ctx.pruning);
+        Precision::F32 => {
+            // Phase 1 through the f32 tables — bitwise consistent with
+            // the f32 scan below.
+            let scan = bounds_filter(&mut ch.st, &bctx, &mut ch.stats, |i, a| {
+                cell_centroid_dd_f32(&gids[i * m..(i + 1) * m], ctx.tables32, k, a) as f64
+            });
+
+            // Phase 2: the same m-lookup accumulation in f32 (2× lanes on
+            // the per-cell table sums).
+            let mut dist_buf = vec![0.0f32; k];
+            for &gi in &scan {
+                let i = gi as usize;
+                let row = &gids[i * m..(i + 1) * m];
+                let base0 = row[0] as usize * k;
+                dist_buf.copy_from_slice(&ctx.tables32[0][base0..base0 + k]);
+                for j in 1..m {
+                    let base = row[j] as usize * k;
+                    let tj = &ctx.tables32[j][base..base + k];
+                    for (dv, &t) in dist_buf.iter_mut().zip(tj) {
+                        *dv += t;
+                    }
+                }
+                let (d1, c1, d2) = best_two_buf_f32(&dist_buf);
+                let buf = &dist_buf;
+                record_scan(
+                    &mut ch.st,
+                    &mut ch.stats,
+                    i,
+                    c1,
+                    d1 as f64,
+                    d2 as f64,
+                    &bctx,
+                    |c| buf[c] as f64,
+                );
+            }
+        }
     }
 
-    // Phase 3: ordered objective + mass accumulation (shared).
+    // Phase 3: ordered objective + mass accumulation (shared; f64 in
+    // both precisions — the f32 tolerance contract).
     let comp_mass = &mut ch.comp_mass;
     let kappa = ctx.kappa;
     accumulate_pass(ch.st.w, ch.st.assign, ch.st.mind2, &mut ch.obj, &mut ch.mass, |i, c, w| {
@@ -294,10 +359,20 @@ pub fn lloyd_factored_init(
         })
         .sum();
 
+    let bounds = opts.bounds.resolve(k);
+    // Per-(cell, centroid) lower-bound rows for Elkan, one global bound
+    // per cell otherwise.
+    let lb_stride = if opts.pruning && bounds == BoundsPolicy::Elkan { k } else { 1 };
+    let f32_kernel = opts.precision == Precision::F32;
+    let slack_rel = match opts.precision {
+        Precision::F64 => SLACK_REL,
+        Precision::F32 => SLACK_REL_F32,
+    };
+
     let threads = resolve_threads(opts.threads);
     let mut assign = vec![0u32; n];
     let mut mind2 = vec![0.0f64; n];
-    let mut lb = vec![0.0f64; n];
+    let mut lb = vec![0.0f64; n * lb_stride];
     let mut drift = vec![0.0f64; k];
     let mut s_half = vec![0.0f64; k];
     let mut bounds_valid = false;
@@ -305,12 +380,25 @@ pub fn lloyd_factored_init(
 
     let mut objective = f64::INFINITY;
     let mut iters = 0;
-    let mut stats = PruneStats { points: n as u64, ..PruneStats::default() };
+    let mut stats = PruneStats {
+        points: n as u64,
+        bounds: if opts.pruning { bounds.label() } else { "none" },
+        precision: opts.precision.label(),
+        ..PruneStats::default()
+    };
 
     for it in 0..cfg.max_iters.max(1) {
         iters = it + 1;
 
+        // The per-iteration tables are built in f64 either way (an
+        // O(Σκ_j·k) cold path); the f32 kernel reads a narrowed copy so
+        // the O(|G|·k·m) sum loop runs at twice the lane width.
         let tables = build_tables(subspaces, &kappa, &centroids, k);
+        let tables32: Vec<Vec<f32>> = if f32_kernel {
+            tables.iter().map(|t| t.iter().map(|&v| v as f32).collect()).collect()
+        } else {
+            Vec::new()
+        };
         let use_bounds = opts.pruning && bounds_valid;
         if use_bounds {
             half_min_separation(k, &mut s_half, |c, c2| {
@@ -318,12 +406,16 @@ pub fn lloyd_factored_init(
             });
         }
         let drift_max = drift.iter().cloned().fold(0.0f64, f64::max);
-        let slack = SLACK_REL * (1.0 + 2.0 * max_dd.sqrt() + norm2_max.sqrt());
+        let slack = slack_rel * (1.0 + 2.0 * max_dd.sqrt() + norm2_max.sqrt());
         let ctx = FacCtx {
             m,
             k,
             kappa: &kappa,
             tables: &tables,
+            tables32: &tables32,
+            precision: opts.precision,
+            bounds,
+            drift: &drift,
             drift_max,
             s_half: &s_half,
             slack,
@@ -337,7 +429,7 @@ pub fn lloyd_factored_init(
             let parts = assign
                 .chunks_mut(CHUNK)
                 .zip(mind2.chunks_mut(CHUNK))
-                .zip(lb.chunks_mut(CHUNK));
+                .zip(lb.chunks_mut(CHUNK * lb_stride));
             let mut start = 0usize;
             for ((a_s, m_s), l_s) in parts {
                 let len = a_s.len();
@@ -484,6 +576,56 @@ mod tests {
                         _ => panic!("centroid kind mismatch"),
                     }
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn elkan_pruned_parallel_matches_naive_bitwise() {
+        for_cases(10, |rng| {
+            let n = 20 + rng.below(300) as usize;
+            let (grid, subs) = random_problem(rng, n);
+            let iters = 1 + rng.below(7) as usize;
+            let k = 1 + rng.below(6) as usize;
+            let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: rng.next_u64() };
+            let (a, _) = lloyd_factored(&grid, &subs, &cfg, &EngineOpts::naive_serial());
+            let opts = EngineOpts::pruned().with_bounds(BoundsPolicy::Elkan).with_threads(3);
+            let (b, sb) = lloyd_factored(&grid, &subs, &cfg, &opts);
+            assert_eq!(a.assign, b.assign);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(sb.bounds, "elkan");
+        });
+    }
+
+    #[test]
+    fn f32_tables_match_f32_naive_bitwise_and_f64_within_tolerance() {
+        for_cases(10, |rng| {
+            let n = 40 + rng.below(200) as usize;
+            let (grid, subs) = random_problem(rng, n);
+            let k = 1 + rng.below(5) as usize;
+            let cfg = LloydConfig { k, max_iters: 8, tol: 0.0, seed: rng.next_u64() };
+            let naive32 = EngineOpts::naive_serial().with_precision(Precision::F32);
+            let pruned32 = EngineOpts::pruned().with_precision(Precision::F32).with_threads(2);
+            let (a, _) = lloyd_factored(&grid, &subs, &cfg, &naive32);
+            let (b, sb) = lloyd_factored(&grid, &subs, &cfg, &pruned32);
+            assert_eq!(a.assign, b.assign);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(sb.precision, "f32");
+            // Tolerance vs f64 on a single assignment pass: identical
+            // seed centroids (seeding distances are f64 in both modes),
+            // so the objectives differ only by kernel rounding — robust
+            // against near-tie argmin flips, whose contribution to the
+            // objective is bounded by the same rounding.
+            let cfg1 = LloydConfig { max_iters: 1, ..cfg };
+            let (f64one, _) = lloyd_factored(&grid, &subs, &cfg1, &EngineOpts::pruned());
+            let (f32one, _) = lloyd_factored(&grid, &subs, &cfg1, &pruned32);
+            if f64one.objective > 1e-9 {
+                let rel = (f64one.objective - f32one.objective).abs() / f64one.objective;
+                assert!(
+                    rel <= crate::cluster::engine::F32_OBJ_RTOL,
+                    "factored f32 objective drifted {rel:.2e}"
+                );
             }
         });
     }

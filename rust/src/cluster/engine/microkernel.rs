@@ -14,6 +14,18 @@
 //! computed by [`tile_dots`], by [`dot_one`], or by any mix of the two is
 //! bit-for-bit identical. The pruned engine relies on this to keep skipped
 //! and scanned points on one arithmetic footing.
+//!
+//! The explicit **f32 tile path** ([`transpose_f32`], [`tile_dots_f32`],
+//! [`dot_one_f32`], [`best_two_expanded_f32`]) mirrors the f64 kernels
+//! operation-for-operation at half the lane width — the same
+//! dimension-major layout autovectorizes to twice the elements per vector
+//! register, which is where the ~2× kernel throughput comes from. The
+//! bitwise contract holds *within* the precision: an f32 distance from
+//! [`tile_dots_f32`] and from [`dot_one_f32`] is bit-for-bit identical,
+//! so the pruned f32 engine is deterministic against the naive f32
+//! reference. Accumulation of the objective and the centroid-update sums
+//! stays f64 in the engines (see the parent module docs for the f32
+//! tolerance contract).
 
 /// Points per microkernel tile.
 pub(crate) const TILE: usize = 8;
@@ -96,6 +108,81 @@ pub(crate) fn best_two_buf(buf: &[f64]) -> (f64, u32, f64) {
     (d1, c1, d2)
 }
 
+/// Transpose row-major `k × d` f64 centroids into the f32 kernel's
+/// `d × k` layout (one narrowing cast per coordinate).
+pub(crate) fn transpose_f32(centroids: &[f64], d: usize, k: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(centroids.len(), k * d);
+    out.clear();
+    out.resize(d * k, 0.0);
+    for (c, row) in centroids.chunks_exact(d).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            out[j * k + c] = v as f32;
+        }
+    }
+}
+
+/// f32 twin of [`tile_dots`]: identical loop structure at twice the SIMD
+/// lane width.
+pub(crate) fn tile_dots_f32(tile: &[f32], d: usize, k: usize, ct_t: &[f32], dots: &mut [f32]) {
+    let tp = tile.len() / d;
+    debug_assert_eq!(tile.len(), tp * d);
+    debug_assert_eq!(ct_t.len(), d * k);
+    debug_assert!(dots.len() >= tp * k);
+    dots[..tp * k].fill(0.0);
+    for j in 0..d {
+        let col = &ct_t[j * k..(j + 1) * k];
+        for p in 0..tp {
+            let xj = tile[p * d + j];
+            let acc = &mut dots[p * k..p * k + k];
+            for (av, &cv) in acc.iter_mut().zip(col) {
+                *av += xj * cv;
+            }
+        }
+    }
+}
+
+/// f32 twin of [`dot_one`] — the same j-ascending accumulation as
+/// [`tile_dots_f32`], so the result is bitwise identical within f32.
+pub(crate) fn dot_one_f32(x: &[f32], ct_t: &[f32], k: usize, c: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for (j, &xj) in x.iter().enumerate() {
+        acc += xj * ct_t[j * k + c];
+    }
+    acc
+}
+
+/// f32 twin of [`best_two_expanded`], with the same lowest-index-wins
+/// tie-breaking.
+pub(crate) fn best_two_expanded_f32(xn: f32, dots: &[f32], cnorm: &[f32]) -> (f32, u32, f32) {
+    let (mut d1, mut c1, mut d2) = (f32::INFINITY, 0u32, f32::INFINITY);
+    for (c, (&dot, &cn)) in dots.iter().zip(cnorm.iter()).enumerate() {
+        let dd = xn - 2.0 * dot + cn;
+        if dd < d1 {
+            d2 = d1;
+            d1 = dd;
+            c1 = c as u32;
+        } else if dd < d2 {
+            d2 = dd;
+        }
+    }
+    (d1, c1, d2)
+}
+
+/// f32 twin of [`best_two_buf`] (the factored engine's f32 table sums).
+pub(crate) fn best_two_buf_f32(buf: &[f32]) -> (f32, u32, f32) {
+    let (mut d1, mut c1, mut d2) = (f32::INFINITY, 0u32, f32::INFINITY);
+    for (c, &dd) in buf.iter().enumerate() {
+        if dd < d1 {
+            d2 = d1;
+            d1 = dd;
+            c1 = c as u32;
+        } else if dd < d2 {
+            d2 = dd;
+        }
+    }
+    (d1, c1, d2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +217,77 @@ mod tests {
         assert_eq!((d1, c1, d2), (2.0, 1, 2.0));
         // k = 1: second best is infinite.
         let (d1, c1, d2) = best_two_buf(&[4.0]);
+        assert_eq!((d1, c1), (4.0, 0));
+        assert!(d2.is_infinite());
+    }
+
+    #[test]
+    fn f32_tile_and_single_dots_are_bitwise_equal() {
+        // The within-precision bitwise contract the pruned f32 path
+        // relies on: Phase-1 single dots must match Phase-2 tile dots.
+        for_cases(25, |rng| {
+            let d = 1 + rng.below(12) as usize;
+            let k = 1 + rng.below(9) as usize;
+            let tp = 1 + rng.below(TILE as u64) as usize;
+            let tile64: Vec<f64> = (0..tp * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let tile: Vec<f32> = tile64.iter().map(|&v| v as f32).collect();
+            let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let mut ct_t = Vec::new();
+            transpose_f32(&cents, d, k, &mut ct_t);
+            let mut dots = vec![0.0f32; tp * k];
+            tile_dots_f32(&tile, d, k, &ct_t, &mut dots);
+            for p in 0..tp {
+                for c in 0..k {
+                    let one = dot_one_f32(&tile[p * d..(p + 1) * d], &ct_t, k, c);
+                    assert_eq!(one.to_bits(), dots[p * k + c].to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32_kernel_tracks_f64_kernel_closely() {
+        // Same inputs through both precisions: distances must agree to
+        // f32 rounding on unit-scale data, and the argmin must agree when
+        // the margin is far above f32 epsilon.
+        for_cases(20, |rng| {
+            let d = 1 + rng.below(10) as usize;
+            let k = 2 + rng.below(6) as usize;
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let mut ct_t = Vec::new();
+            transpose(&cents, d, k, &mut ct_t);
+            let mut ct_t32 = Vec::new();
+            transpose_f32(&cents, d, k, &mut ct_t32);
+            let mut dots = vec![0.0f64; k];
+            let mut dots32 = vec![0.0f32; k];
+            tile_dots(&x, d, k, &ct_t, &mut dots);
+            tile_dots_f32(&x32, d, k, &ct_t32, &mut dots32);
+            let xn: f64 = x.iter().map(|v| v * v).sum();
+            let xn32: f32 = x32.iter().map(|v| v * v).sum();
+            let cnorm: Vec<f64> =
+                cents.chunks_exact(d).map(|c| c.iter().map(|v| v * v).sum()).collect();
+            let cnorm32: Vec<f32> = cnorm.iter().map(|&v| v as f32).collect();
+            let (d1, c1, d2) = best_two_expanded(xn, &dots, &cnorm);
+            let (d1f, c1f, _) = best_two_expanded_f32(xn32, &dots32, &cnorm32);
+            let scale = 1.0 + xn.abs();
+            assert!(
+                (d1 - d1f as f64).abs() <= 1e-4 * scale,
+                "f32 distance {d1f} drifted from f64 {d1}"
+            );
+            if d2 - d1 > 1e-3 * scale {
+                assert_eq!(c1, c1f, "argmin diverged on a well-separated pair");
+            }
+        });
+    }
+
+    #[test]
+    fn f32_best_two_buf_orders_and_breaks_ties_low() {
+        let buf = [5.0f32, 2.0, 7.0, 2.0, 3.0];
+        let (d1, c1, d2) = best_two_buf_f32(&buf);
+        assert_eq!((d1, c1, d2), (2.0, 1, 2.0));
+        let (d1, c1, d2) = best_two_buf_f32(&[4.0f32]);
         assert_eq!((d1, c1), (4.0, 0));
         assert!(d2.is_infinite());
     }

@@ -1,10 +1,11 @@
-//! The shared Step-4 execution engine: a blocked distance microkernel,
-//! Hamerly-style bounds pruning, and a deterministic chunk-parallel
-//! executor — used by both the dense ([`dense`]) and the factored
-//! ([`factored`]) weighted-Lloyd variants, and by the streaming
-//! full-objective scorer ([`CentroidScorer`]).
+//! The shared Step-4 execution engine: a blocked distance microkernel
+//! (f64 and f32 tile paths), bounds pruning under a selectable policy
+//! (Hamerly or Elkan), and a deterministic chunk-parallel executor — used
+//! by both the dense ([`dense`]) and the factored ([`factored`])
+//! weighted-Lloyd variants, and by the streaming full-objective scorer
+//! ([`CentroidScorer`]).
 //!
-//! # Bounds invariants (Hamerly, "Making k-means even faster", 2010)
+//! # Bounds invariants
 //!
 //! For every point `i` with current assignment `a(i)` the engine maintains
 //! *Euclidean* (not squared) bounds:
@@ -15,9 +16,19 @@
 //!   iterations — this is also what keeps the reported objective exact
 //!   rather than bounded, and what makes pruned output bitwise-equal to
 //!   naive output.
-//! * `lb[i] ≤ min_{c ≠ a(i)} d(x_i, c)` — a single global lower bound on
-//!   the distance to the *second-closest* centroid. After every update it
-//!   is drifted by the maximum movement: `lb -= max_c p[c]`.
+//! * lower bounds, per the [`BoundsPolicy`]:
+//!   * **Hamerly** ("Making k-means even faster", 2010):
+//!     `lb[i] ≤ min_{c ≠ a(i)} d(x_i, c)` — a single global lower bound
+//!     on the distance to the *second-closest* centroid. After every
+//!     update it is drifted by the maximum movement: `lb -= max_c p[c]`.
+//!   * **Elkan** ("Using the triangle inequality to accelerate k-means",
+//!     2003): `lb[i·k + c] ≤ d(x_i, c)` — one lower bound per
+//!     (point, centroid), each drifted by *its own* centroid's movement:
+//!     `lb[i·k + c] -= p[c]`. O(n·k) memory; a full scan resets the whole
+//!     row to the exact distances, and the Phase-1 test uses
+//!     `min_{c ≠ a(i)} lb[i·k + c]`, which stays far tighter than the
+//!     Hamerly bound at large k where `max_c p[c]` is dominated by a few
+//!     still-moving centroids.
 //! * `p[c] = ‖c_new − c_old‖` — per-centroid drift. The dense engine takes
 //!   it from the raw coordinates; the factored engine computes it from the
 //!   per-subspace β coefficient tables using component orthogonality
@@ -28,15 +39,44 @@
 //! With `ub` exact, the engine skips the inner k-loop whenever
 //!
 //! ```text
-//!   d(x_i, c_{a(i)}) + slack < max(lb[i], s[a(i)])
+//!   d(x_i, c_{a(i)}) + slack < max(lb_i, s[a(i)])
 //! ```
 //!
-//! which by the triangle inequality proves no other centroid can be
-//! strictly closer. The `slack` term (a small multiple of the data scale,
-//! [`SLACK_REL`]) absorbs floating-point rounding in the bound chain so
-//! that a skipped point provably agrees with what a full scan would have
-//! chosen — including tie-breaking, because ties never satisfy the strict
-//! inequality and therefore always rescan.
+//! (`lb_i` being the policy's point-level lower bound on the second-best
+//! distance), which by the triangle inequality proves no other centroid
+//! can be strictly closer. The `slack` term (a small multiple of the data
+//! scale, [`SLACK_REL`]) absorbs floating-point rounding in the bound
+//! chain so that a skipped point provably agrees with what a full scan
+//! would have chosen — including tie-breaking, because ties never satisfy
+//! the strict inequality and therefore always rescan.
+//!
+//! # Choosing a bounds policy and a precision
+//!
+//! The two engine axes compose freely (Hamerly/Elkan × f64/f32) and are
+//! selected via [`EngineOpts::bounds`] / [`EngineOpts::precision`]:
+//!
+//! | | **Hamerly** | **Elkan** |
+//! |---|---|---|
+//! | bounds memory | O(n) | O(n·k) |
+//! | Phase-1 cost per point | O(1) | O(k) (drift + row min) |
+//! | scan cost | k distances | k distances + k √ (bound refresh) |
+//! | wins when | k ≲ 64, or memory-tight | k ≳ 64 ([`ELKAN_AUTO_K`]), stable assignments, few fast-moving centroids |
+//! | output | bitwise = naive | bitwise = naive |
+//!
+//! [`BoundsPolicy::Auto`] (the default) picks Elkan at k ≥
+//! [`ELKAN_AUTO_K`] and Hamerly below; both policies keep the determinism
+//! contract, so switching never changes results, only throughput.
+//!
+//! [`Precision::F32`] runs the distance kernels in f32 (double the SIMD
+//! lanes of the `‖x‖² − 2·x·c + ‖c‖²` contraction) while keeping the
+//! objective and the centroid-update sums in f64, mirroring the XLA f32
+//! artifact's tolerance story: on well-scaled inputs the final objective
+//! agrees with the f64 path within [`F32_OBJ_RTOL`] (relative), and the
+//! determinism contract holds *within* the precision — f32
+//! pruned-parallel is bitwise-identical to f32 naive-serial. Use f32 when
+//! distances have head-room (|values| ≲ 10³ and relative objective error
+//! of ~1e-3 is acceptable); stay on f64 for bitwise reproducibility
+//! against archived results or ill-scaled data.
 //!
 //! # Determinism contract
 //!
@@ -90,20 +130,112 @@ use std::time::Duration;
 /// than one chunk take a purely serial path.
 pub const CHUNK: usize = 4096;
 
-/// Relative slack applied to the Hamerly skip test to absorb rounding in
-/// the bound chain (see the module docs). Chosen ≫ accumulated f64
-/// rounding (~1e-13·scale over a Lloyd run) and ≪ any real cluster
-/// separation, so it costs essentially no pruning.
+/// Relative slack applied to the skip test to absorb rounding in the
+/// bound chain (see the module docs). Chosen ≫ accumulated f64 rounding
+/// (~1e-13·scale over a Lloyd run) and ≪ any real cluster separation, so
+/// it costs essentially no pruning.
 pub(crate) const SLACK_REL: f64 = 1e-6;
+
+/// The f32-path analog of [`SLACK_REL`]: f32 kernels round at ~1e-7
+/// relative per operation and the `‖x‖² − 2·x·c + ‖c‖²` expansion
+/// cancels, so the skip slack must be correspondingly wider for a skipped
+/// point to provably agree with an f32 full scan.
+pub(crate) const SLACK_REL_F32: f64 = 1e-3;
+
+/// `Auto` bounds-policy crossover: below this k the O(k) per-point
+/// Phase-1 bookkeeping of Elkan outweighs its tighter bounds; above it
+/// the saved full scans dominate (see the module-level decision table).
+pub const ELKAN_AUTO_K: usize = 64;
+
+/// Documented tolerance contract of the f32 tile path: on well-scaled
+/// inputs (|values| ≲ 10³, genuine cluster structure) the final objective
+/// of a [`Precision::F32`] run agrees with the f64 run within this
+/// *relative* tolerance. `tests/property_engine.rs` pins it on the
+/// synthetic Retailer/Favorita workloads.
+pub const F32_OBJ_RTOL: f64 = 1e-3;
+
+/// Which lower-bound family the pruned engine maintains. Both policies
+/// produce **bitwise-identical** results to the naive reference (the
+/// determinism contract); they differ only in how much Phase-2 scan work
+/// the Phase-1 test proves away, and at what bookkeeping cost. See the
+/// module-level decision table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundsPolicy {
+    /// Resolve per run: [`Elkan`](BoundsPolicy::Elkan) at
+    /// k ≥ [`ELKAN_AUTO_K`], [`Hamerly`](BoundsPolicy::Hamerly) below.
+    Auto,
+    /// One global second-best lower bound per point, drifted by the
+    /// maximum centroid movement. O(n) memory, O(1) per-point Phase 1.
+    Hamerly,
+    /// Per-(point, centroid) lower bounds, each drifted by its own
+    /// centroid's movement. O(n·k) memory, O(k) per-point Phase 1, much
+    /// tighter at large k.
+    Elkan,
+}
+
+impl BoundsPolicy {
+    /// Resolve [`Auto`](BoundsPolicy::Auto) against the run's k; the
+    /// engines call this once per run, so `Auto` never reaches the
+    /// per-pass machinery.
+    pub fn resolve(self, k: usize) -> BoundsPolicy {
+        match self {
+            BoundsPolicy::Auto => {
+                if k >= ELKAN_AUTO_K {
+                    BoundsPolicy::Elkan
+                } else {
+                    BoundsPolicy::Hamerly
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Stable label for stats and bench records.
+    pub fn label(self) -> &'static str {
+        match self {
+            BoundsPolicy::Auto => "auto",
+            BoundsPolicy::Hamerly => "hamerly",
+            BoundsPolicy::Elkan => "elkan",
+        }
+    }
+}
+
+/// Distance-kernel precision (see the module-level decision table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f64 kernels throughout; bitwise-reproducible against archived
+    /// results.
+    F64,
+    /// f32 kernels (2× SIMD lanes) with f64 accumulation for the
+    /// objective and the centroid-update sums. Results carry f32 rounding
+    /// ([`F32_OBJ_RTOL`]); the determinism contract holds *within* the
+    /// f32 path.
+    F32,
+}
+
+impl Precision {
+    /// Stable label for stats and bench records.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
 
 /// Engine execution options shared by the dense and factored paths.
 #[derive(Clone, Debug)]
 pub struct EngineOpts {
-    /// Maintain Hamerly bounds and skip provably-unchanged assignments.
+    /// Maintain bounds and skip provably-unchanged assignments.
     pub pruning: bool,
     /// Worker threads; `0` = auto (`RKMEANS_THREADS` env var, else the
     /// machine's available parallelism).
     pub threads: usize,
+    /// Lower-bound policy for the pruned path ([`BoundsPolicy::Auto`]
+    /// resolves against the run's k).
+    pub bounds: BoundsPolicy,
+    /// Distance-kernel precision.
+    pub precision: Precision,
 }
 
 impl Default for EngineOpts {
@@ -113,15 +245,27 @@ impl Default for EngineOpts {
 }
 
 impl EngineOpts {
-    /// The production configuration: bounds pruning + auto parallelism.
+    /// The production configuration: bounds pruning (auto policy) + auto
+    /// parallelism, f64 kernels.
     pub fn pruned() -> Self {
-        EngineOpts { pruning: true, threads: 0 }
+        EngineOpts {
+            pruning: true,
+            threads: 0,
+            bounds: BoundsPolicy::Auto,
+            precision: Precision::F64,
+        }
     }
 
     /// The retained reference: full scans, single thread. The property
-    /// suite pins the pruned/parallel paths to this bit-for-bit.
+    /// suite pins the pruned/parallel paths to this bit-for-bit (within a
+    /// precision).
     pub fn naive_serial() -> Self {
-        EngineOpts { pruning: false, threads: 1 }
+        EngineOpts {
+            pruning: false,
+            threads: 1,
+            bounds: BoundsPolicy::Auto,
+            precision: Precision::F64,
+        }
     }
 
     /// Override the worker-thread count.
@@ -129,11 +273,23 @@ impl EngineOpts {
         self.threads = threads;
         self
     }
+
+    /// Override the bounds policy.
+    pub fn with_bounds(mut self, bounds: BoundsPolicy) -> Self {
+        self.bounds = bounds;
+        self
+    }
+
+    /// Override the distance-kernel precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
 }
 
 /// Work counters for one Lloyd run (the bench-trajectory payload of
 /// `BENCH_lloyd.json`; see `bench_harness` for the serialized schema).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct PruneStats {
     /// Lloyd iterations executed.
     pub iters: usize,
@@ -143,8 +299,35 @@ pub struct PruneStats {
     pub dist_evals: u64,
     /// Evaluations proven unnecessary by the bounds and skipped.
     pub dist_evals_skipped: u64,
+    /// Phase-1 upper-bound tightening evaluations (one per point per
+    /// bounded pass; included in `dist_evals`) — the per-policy pruning
+    /// overhead.
+    pub bound_evals: u64,
+    /// Resolved bounds policy of the run (`"hamerly"` / `"elkan"`;
+    /// `"none"` when pruning was disabled).
+    pub bounds: &'static str,
+    /// Distance-kernel precision of the run (`"f64"` / `"f32"`).
+    pub precision: &'static str,
     /// Wall time of the whole run (seeding + all iterations).
     pub wall: Duration,
+}
+
+impl Default for PruneStats {
+    /// Zero counters with the label contract intact: a run that never
+    /// touched the engine reports `bounds = "none"`, `precision = "f64"`
+    /// (never empty strings).
+    fn default() -> Self {
+        PruneStats {
+            iters: 0,
+            points: 0,
+            dist_evals: 0,
+            dist_evals_skipped: 0,
+            bound_evals: 0,
+            bounds: "none",
+            precision: "f64",
+            wall: Duration::default(),
+        }
+    }
 }
 
 impl PruneStats {
@@ -347,6 +530,7 @@ mod tests {
             dist_evals: 30,
             dist_evals_skipped: 70,
             wall: Duration::from_secs(1),
+            ..PruneStats::default()
         };
         assert_close(s.skip_rate(), 0.7, 1e-12);
         assert_close(s.points_per_sec(), 200.0, 1e-9);
@@ -358,6 +542,16 @@ mod tests {
     fn thread_resolution_prefers_explicit() {
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn bounds_policy_resolution_and_labels() {
+        assert_eq!(BoundsPolicy::Auto.resolve(ELKAN_AUTO_K - 1), BoundsPolicy::Hamerly);
+        assert_eq!(BoundsPolicy::Auto.resolve(ELKAN_AUTO_K), BoundsPolicy::Elkan);
+        assert_eq!(BoundsPolicy::Hamerly.resolve(1000), BoundsPolicy::Hamerly);
+        assert_eq!(BoundsPolicy::Elkan.resolve(1), BoundsPolicy::Elkan);
+        assert_eq!(BoundsPolicy::Elkan.label(), "elkan");
+        assert_eq!(Precision::F32.label(), "f32");
     }
 
     #[test]

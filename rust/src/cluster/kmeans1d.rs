@@ -97,7 +97,8 @@ pub fn kmeans1d(points: &[(f64, f64)], k: usize) -> Kmeans1dResult {
     if merged.is_empty() {
         return Kmeans1dResult { centers: vec![0.0], boundaries: vec![], cost: 0.0 };
     }
-    let merged = if merged.len() > MAX_DISTINCT { bucketize(&merged, MAX_DISTINCT) } else { merged };
+    let merged =
+        if merged.len() > MAX_DISTINCT { bucketize(&merged, MAX_DISTINCT) } else { merged };
     let n = merged.len();
     if k >= n {
         let centers: Vec<f64> = merged.iter().map(|&(v, _)| v).collect();

@@ -25,7 +25,9 @@ pub mod regularized;
 pub mod sparse_lloyd;
 
 pub use categorical::{categorical_kmeans, CatClusters};
-pub use engine::{CentroidScorer, EngineOpts, PruneStats};
+pub use engine::{
+    BoundsPolicy, CentroidScorer, EngineOpts, Precision, PruneStats, ELKAN_AUTO_K, F32_OBJ_RTOL,
+};
 pub use kmeans1d::{kmeans1d, Kmeans1dResult};
 pub use kmedian::{kmedian1d, weighted_kmedian, Kmedian1dResult, KmedianResult};
 pub use kmeanspp::kmeanspp_indices;

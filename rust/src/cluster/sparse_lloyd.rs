@@ -219,7 +219,8 @@ mod tests {
         for_cases(20, |rng| {
             // Build 2 subspaces: 1 continuous (3 comps), 1 categorical
             // (3 comps: two heavy + one light of 2 cats with norm² 0.5).
-            let centers = vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)];
+            let centers =
+                vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)];
             let light_norm = 0.5; // two equal light cats: (w²+w²)/(2w)² = 1/2
             let subs = vec![
                 Subspace {

@@ -85,11 +85,18 @@ pub fn read_relation(name: &str, path: &Path) -> Result<Relation> {
             bail!("row {}: expected {} fields, got {}", lineno + 2, expected, fields.len());
         }
         let mut vals = Vec::with_capacity(n_cols);
+        let rowno = lineno + 2;
         for (c, field) in fields.iter().take(n_cols).enumerate() {
             let v = match rel.schema.attr(c).ty {
-                AttrType::Int => Value::Int(field.parse().with_context(|| format!("row {}: bad int {field:?}", lineno + 2))?),
-                AttrType::Double => Value::Double(field.parse().with_context(|| format!("row {}: bad double {field:?}", lineno + 2))?),
-                AttrType::Cat => Value::Cat(field.parse().with_context(|| format!("row {}: bad cat id {field:?}", lineno + 2))?),
+                AttrType::Int => Value::Int(
+                    field.parse().with_context(|| format!("row {rowno}: bad int {field:?}"))?,
+                ),
+                AttrType::Double => Value::Double(
+                    field.parse().with_context(|| format!("row {rowno}: bad double {field:?}"))?,
+                ),
+                AttrType::Cat => Value::Cat(
+                    field.parse().with_context(|| format!("row {rowno}: bad cat id {field:?}"))?,
+                ),
             };
             vals.push(v);
         }

@@ -358,8 +358,8 @@ impl Relation {
                 AttrType::Cat => 4,
             })
             .sum();
-        let mut total =
-            per_row * self.len as u64 + if self.weights.is_some() { 8 * self.len as u64 } else { 0 };
+        let weight_bytes = if self.weights.is_some() { 8 * self.len as u64 } else { 0 };
+        let mut total = per_row * self.len as u64 + weight_bytes;
         if let Some(idx) = &self.row_index {
             // Per entry: encoded key (one u64 per column + Vec header) and
             // the row-id list (u32 per live duplicate + Vec header).

@@ -156,7 +156,8 @@ fn grid_weights_packed(
     shifts: &[(u32, u32)],
 ) -> Result<GridTable> {
     let n = tree.len();
-    let mut msgs: Vec<Option<FxHashMap<Vec<u64>, Vec<(u128, f64)>>>> = (0..n).map(|_| None).collect();
+    let mut msgs: Vec<Option<FxHashMap<Vec<u64>, Vec<(u128, f64)>>>> =
+        (0..n).map(|_| None).collect();
 
     for &u in &tree.order {
         let rel = db.get(&tree.rel_names[u]).expect("checked in plan");

@@ -180,6 +180,11 @@ struct State<K> {
     order: Vec<usize>,
     root: usize,
     rel_to_node: FxHashMap<String, usize>,
+    /// The root grid as a cell list sorted by unpacked gid tuple,
+    /// maintained incrementally by `apply` (one sort at init; patches
+    /// splice only touched cells) so `grid_table` never re-sorts
+    /// untouched runs.
+    sorted: Vec<(Vec<u32>, f64)>,
 }
 
 /// Cross-product contribution of one tuple: `own × Π_j T_j(key_j)`, with
@@ -304,6 +309,7 @@ impl<K: Combo> State<K> {
             order: tree.order.clone(),
             root: tree.root,
             rel_to_node,
+            sorted: Vec::new(),
         };
 
         // Upward pass, retaining rows, indexes and messages.
@@ -366,6 +372,17 @@ impl<K: Combo> State<K> {
             }
             st.nodes[u].msg = msg;
         }
+
+        // Seed the maintained sorted snapshot — the one O(|G| log |G|)
+        // sort; `apply` keeps it sorted incrementally from here on.
+        let empty_key: Vec<u64> = Vec::new();
+        let mut cells: Vec<(Vec<u32>, f64)> = st.nodes[st.root]
+            .msg
+            .get(&empty_key)
+            .map(|t| t.iter().map(|(g, &w)| (g.unpack(&st.layout), w)).collect())
+            .unwrap_or_default();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        st.sorted = cells;
         Ok(st)
     }
 
@@ -527,17 +544,24 @@ impl<K: Combo> State<K> {
             delta_msgs[u] = du;
         }
 
-        // Patch the root grid, asserting the ℤ-ring non-negativity.
+        // Patch the root grid, asserting the ℤ-ring non-negativity, and
+        // mirror every touched cell into the maintained sorted snapshot:
+        // in-place for value changes, a binary-searched splice for
+        // creations and drops — untouched runs are never re-sorted.
         let dm_root = std::mem::take(&mut delta_msgs[self.root]);
+        let root = self.root;
         let mut cells_touched = 0usize;
         let mut mass_delta_abs = 0.0f64;
         for (key, table) in dm_root {
             cells_touched += table.len();
+            // The root has no parent separator, so `key` is empty and the
+            // message *is* the grid; the guard is defensive.
+            let is_grid = key.is_empty();
             let empty = {
-                let slot = self.nodes[self.root].msg.entry(key.clone()).or_default();
+                let slot = self.nodes[root].msg.entry(key.clone()).or_default();
                 for (g, dw) in table {
                     mass_delta_abs += dw.abs();
-                    let v = slot.entry(g).or_insert(0.0);
+                    let v = slot.entry(g.clone()).or_insert(0.0);
                     *v += dw;
                     ensure!(
                         *v >= 0.0,
@@ -545,12 +569,26 @@ impl<K: Combo> State<K> {
                          ℤ-ring invariant does not hold (fractional tuple weights \
                          drifted?); a full rebuild is required"
                     );
+                    let nv = *v;
+                    if nv == 0.0 {
+                        slot.remove(&g);
+                    }
+                    if is_grid {
+                        let uk = g.unpack(&self.layout);
+                        match self.sorted.binary_search_by(|(a, _)| a.cmp(&uk)) {
+                            Ok(pos) if nv == 0.0 => {
+                                self.sorted.remove(pos);
+                            }
+                            Ok(pos) => self.sorted[pos].1 = nv,
+                            Err(pos) if nv != 0.0 => self.sorted.insert(pos, (uk, nv)),
+                            Err(_) => {}
+                        }
+                    }
                 }
-                slot.retain(|_, v| *v != 0.0);
                 slot.is_empty()
             };
             if empty {
-                self.nodes[self.root].msg.remove(&key);
+                self.nodes[root].msg.remove(&key);
             }
         }
 
@@ -568,14 +606,7 @@ impl<K: Combo> State<K> {
     }
 
     fn grid_table(&self) -> GridTable {
-        let empty: Vec<u64> = Vec::new();
-        let mut cells: Vec<(Vec<u32>, f64)> = self.nodes[self.root]
-            .msg
-            .get(&empty)
-            .map(|t| t.iter().map(|(g, &w)| (g.unpack(&self.layout), w)).collect())
-            .unwrap_or_default();
-        cells.sort_by(|a, b| a.0.cmp(&b.0));
-        GridTable { feature_names: self.feature_names.clone(), cells }
+        GridTable { feature_names: self.feature_names.clone(), cells: self.sorted.clone() }
     }
 }
 
@@ -661,9 +692,11 @@ impl DeltaFaq {
     }
 
     /// The maintained sparse grid, in deterministic (sorted) cell order.
-    /// This snapshot is O(|G| log |G|) — already dominated by the Step-4
-    /// pass the planner runs on the same grid; incremental sorted-grid
-    /// maintenance is tracked with the Step-4 reuse item in ROADMAP.md.
+    /// The sorted cell list is maintained *across* patches (one sort at
+    /// init; each batch splices only its touched cells), so this snapshot
+    /// is a plain O(|G|) copy — no per-batch re-sort of untouched runs.
+    /// Carrying Step-4 assignments across batches to make the copy
+    /// O(touched) too remains open (ROADMAP "Step-4 assignment reuse").
     pub fn grid_table(&self) -> GridTable {
         match &self.inner {
             Inner::Packed(s) => s.grid_table(),
@@ -857,13 +890,52 @@ mod tests {
     }
 
     #[test]
+    fn grid_snapshot_stays_sorted_across_patches() {
+        // The sorted cell list is maintained incrementally: after every
+        // batch (inserts creating new cells, deletes dropping cells) the
+        // snapshot must still be strictly ordered and match a
+        // from-scratch evaluation.
+        let (mut db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        let batches = vec![
+            vec![TupleDelta::insert("fact", vec![Value::Cat(5), Value::Cat(2)])],
+            vec![TupleDelta::insert("dim", vec![Value::Cat(2), Value::Cat(5)])],
+            vec![TupleDelta::delete("fact", vec![Value::Cat(0), Value::Cat(0)])],
+        ];
+        for batch in &batches {
+            delta.apply(batch, &asg).unwrap();
+            let gt = delta.grid_table();
+            assert!(
+                gt.cells.windows(2).all(|w| w[0].0 < w[1].0),
+                "snapshot out of order after patch"
+            );
+        }
+        // Mirror the batches on the database; the maintained snapshot
+        // must equal a from-scratch evaluation bit-for-bit.
+        db.get_mut("fact").unwrap().push_row(&[Value::Cat(5), Value::Cat(2)]);
+        db.get_mut("dim").unwrap().push_row(&[Value::Cat(2), Value::Cat(5)]);
+        assert!(db.get_mut("fact").unwrap().retract_row(&[Value::Cat(0), Value::Cat(0)], 1.0));
+        let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
+        assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
+    }
+
+    #[test]
     fn weighted_deltas_accumulate() {
         let (mut db, feq, tree) = setup();
         let asg = assigners(3, 3);
         let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
         let batch = vec![
-            TupleDelta { relation: "fact".into(), values: vec![Value::Cat(0), Value::Cat(0)], weight: 3.0 },
-            TupleDelta { relation: "fact".into(), values: vec![Value::Cat(0), Value::Cat(0)], weight: -2.0 },
+            TupleDelta {
+                relation: "fact".into(),
+                values: vec![Value::Cat(0), Value::Cat(0)],
+                weight: 3.0,
+            },
+            TupleDelta {
+                relation: "fact".into(),
+                values: vec![Value::Cat(0), Value::Cat(0)],
+                weight: -2.0,
+            },
         ];
         delta.apply(&batch, &asg).unwrap();
         db.get_mut("fact").unwrap().push_row(&[Value::Cat(0), Value::Cat(0)]);

@@ -121,7 +121,11 @@ mod tests {
 
         let deltas = vec![
             TupleDelta::insert("t", vec![Value::Cat(1), Value::Double(2.0)]),
-            TupleDelta { relation: "t".into(), values: vec![Value::Cat(2), Value::Double(3.0)], weight: 2.0 },
+            TupleDelta {
+                relation: "t".into(),
+                values: vec![Value::Cat(2), Value::Double(3.0)],
+                weight: 2.0,
+            },
             TupleDelta::delete("t", vec![Value::Cat(0), Value::Double(1.0)]),
         ];
         apply_to_db(&mut db, &deltas).unwrap();

@@ -269,7 +269,8 @@ impl IncrementalEngine {
     }
 
     fn rebuild(&mut self, db: &Database, _reason: &RebuildReason) -> Result<f64> {
-        let (state, elapsed) = Self::full_build(db, &self.feq, &self.tree, &self.rk, self.state.version)?;
+        let (state, elapsed) =
+            Self::full_build(db, &self.feq, &self.tree, &self.rk, self.state.version)?;
         self.state = state;
         self.patches_since_rebuild = 0;
         self.join_churn = 0.0;
@@ -383,6 +384,7 @@ impl IncrementalEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::BoundsPolicy;
     use crate::data::{Attr, Relation, Schema, Value};
     use crate::incremental::apply_to_db;
     use crate::util::testkit::assert_close;
@@ -572,6 +574,43 @@ mod tests {
         apply_to_db(&mut db, &b3).unwrap();
         let (d3, _) = engine.apply_batch(&db, &b3).unwrap();
         assert_eq!(d3, PlanDecision::Patched);
+    }
+
+    #[test]
+    fn bounds_policy_flows_through_patch_path_bitwise() {
+        // The Step-4 engine policy is a pure throughput knob: a planner
+        // configured with Elkan bounds must patch (warm-started Step 4
+        // included) to bit-identical results as a Hamerly planner.
+        let (mut db, feq) = setup(250, 12);
+        let mut ham = IncrementalEngine::new(
+            &db,
+            feq.clone(),
+            RkConfig::new(4).with_bounds(BoundsPolicy::Hamerly),
+            lenient(),
+            Metrics::new(),
+        )
+        .unwrap();
+        let mut elk = IncrementalEngine::new(
+            &db,
+            feq,
+            RkConfig::new(4).with_bounds(BoundsPolicy::Elkan),
+            lenient(),
+            Metrics::new(),
+        )
+        .unwrap();
+        let mut rng = SplitMix64::new(31);
+        for round in 0..3 {
+            let deltas = batch(&mut rng, 15);
+            apply_to_db(&mut db, &deltas).unwrap();
+            let (d1, r1) = ham.apply_batch(&db, &deltas).unwrap();
+            let (d2, r2) = elk.apply_batch(&db, &deltas).unwrap();
+            assert_eq!(d1, PlanDecision::Patched, "round {round}");
+            assert_eq!(d2, PlanDecision::Patched, "round {round}");
+            assert_eq!(r1.objective_grid.to_bits(), r2.objective_grid.to_bits());
+            assert_eq!(r1.grid_points, r2.grid_points);
+        }
+        assert_eq!(ham.result().step4_stats.bounds, "hamerly");
+        assert_eq!(elk.result().step4_stats.bounds, "elkan");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use rkmeans::bench_harness::paper::{self, PaperCfg};
-use rkmeans::cluster::LloydConfig;
+use rkmeans::cluster::{BoundsPolicy, EngineOpts, LloydConfig, Precision};
 use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
 use rkmeans::coreset::SubspaceSolver;
 use rkmeans::data::{csv, Value};
@@ -40,9 +40,10 @@ rkmeans — fast k-means clustering for relational data (Rk-means, 2019)
 USAGE:
   rkmeans gen       --dataset <retailer|favorita|yelp> [--scale F] [--seed N] --out DIR
   rkmeans cluster   (--dataset NAME | --db DIR) --k K [--kappa κ] [--rho ρ] [--scale F]
-                    [--seed N] [--engine native|xla] [--eval-full] [--model-out FILE]
+                    [--seed N] [--engine native|xla] [--bounds auto|hamerly|elkan]
+                    [--precision f64|f32] [--eval-full] [--model-out FILE]
   rkmeans sweep     (--dataset NAME | --db DIR) [--ks K1,K2,...] [--kappa κ] [--scale F]
-                    [--seed N]
+                    [--seed N] [--bounds auto|hamerly|elkan] [--precision f64|f32]
   rkmeans assign    --model FILE [--values \"v1,v2,...\"]
   rkmeans baseline  (--dataset NAME | --db DIR) --k K [--scale F] [--seed N] [--cap ROWS]
   rkmeans tables    [--which table1|table2|fig3|ablation-fd|ablation-sparse|kappa-sweep|all]
@@ -141,13 +142,39 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--bounds` value (absent = auto).
+fn parse_bounds(v: Option<&str>) -> Result<BoundsPolicy> {
+    match v {
+        None | Some("auto") => Ok(BoundsPolicy::Auto),
+        Some("hamerly") => Ok(BoundsPolicy::Hamerly),
+        Some("elkan") => Ok(BoundsPolicy::Elkan),
+        Some(other) => bail!("unknown bounds policy {other:?} (auto|hamerly|elkan)"),
+    }
+}
+
+/// Parse a `--precision` value (absent = f64).
+fn parse_precision(v: Option<&str>) -> Result<Precision> {
+    match v {
+        None | Some("f64") => Ok(Precision::F64),
+        Some("f32") => Ok(Precision::F32),
+        Some(other) => bail!("unknown precision {other:?} (f64|f32)"),
+    }
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     let (db, feq, name) = load_db(args)?;
     let k = args.num("k", 10usize)?;
     let kappa = args.num("kappa", 0usize)?;
     let seed = args.num("seed", 42u64)?;
     let rho = args.num("rho", 0.0f64)?; // §3 regularizer (atom penalty)
-    let cfg = RkConfig::new(k).with_kappa(kappa).with_regularization(rho).with_seed(seed);
+    let bounds = parse_bounds(args.get("bounds"))?;
+    let precision = parse_precision(args.get("precision"))?;
+    let cfg = RkConfig::new(k)
+        .with_kappa(kappa)
+        .with_regularization(rho)
+        .with_seed(seed)
+        .with_bounds(bounds)
+        .with_precision(precision);
 
     let engine = args.get("engine").unwrap_or("native");
     let t0 = std::time::Instant::now();
@@ -173,6 +200,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("step2 subspaces   : {:?}", res.timings.step2_subspaces);
     println!("step3 grid        : {:?}", res.timings.step3_grid);
     println!("step4 cluster     : {:?} ({} iters)", res.timings.step4_cluster, res.iters);
+    println!(
+        "step4 engine      : bounds={} precision={} (skip rate {:.1}%)",
+        res.step4_stats.bounds,
+        res.step4_stats.precision,
+        100.0 * res.step4_stats.skip_rate()
+    );
     println!("total             : {total:?}");
     println!("grid objective    : {:.6e}", res.objective_grid);
     println!("quantization cost : {:.6e}", res.quantization_cost);
@@ -204,6 +237,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .collect::<Result<Vec<usize>>>()?;
     let kappa = args.num("kappa", ks.iter().copied().max().unwrap_or(8))?;
     let seed = args.num("seed", 42u64)?;
+    let engine = EngineOpts::default()
+        .with_bounds(parse_bounds(args.get("bounds"))?)
+        .with_precision(parse_precision(args.get("precision"))?);
 
     let t0 = std::time::Instant::now();
     let pipe = RkPipeline::plan(&db, &feq)?;
@@ -215,7 +251,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "dataset {name}: shared steps 1–3 in {shared:?} (|G| = {} cells, κ = {kappa})",
         human_count(coreset.n() as u64)
     );
-    for model in coreset.sweep(&ks, &ClusterOpts::new(0).with_seed(seed)) {
+    for model in coreset.sweep(&ks, &ClusterOpts::new(0).with_seed(seed).with_engine(engine)) {
         println!(
             "  k={:<4} objective={:.6e}  iters={:<3} step4={:?}",
             model.k(),

@@ -232,7 +232,8 @@ mod tests {
         assert_eq!(tree.sep[1], vec!["store".to_string()]);
         assert_eq!(tree.sep[2], vec!["sku".to_string()]);
         // Upward order visits children before parents.
-        let pos: Vec<usize> = (0..4).map(|i| tree.order.iter().position(|&x| x == i).unwrap()).collect();
+        let pos: Vec<usize> =
+            (0..4).map(|i| tree.order.iter().position(|&x| x == i).unwrap()).collect();
         for i in 0..4 {
             if let Some(p) = tree.parent[i] {
                 assert!(pos[i] < pos[p], "child {i} must precede parent {p}");

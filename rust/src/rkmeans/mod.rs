@@ -42,7 +42,7 @@ pub use model::{RkModel, RKMODEL_FORMAT_VERSION};
 pub use pipeline::{ClusterOpts, Coreset, Marginals, RkPipeline, SubspaceOpts, SubspaceSet};
 
 use crate::cluster::sparse_lloyd::CentroidCoord;
-use crate::cluster::PruneStats;
+use crate::cluster::{BoundsPolicy, Precision, PruneStats};
 use crate::coreset::{centroids_dense, eval_full_objective, SubspaceModel};
 use crate::data::Database;
 use crate::join::EmbedSpec;
@@ -67,12 +67,28 @@ pub struct RkConfig {
     /// Atom-penalty ρ for regularized Rk-means (paper §3): each subspace
     /// adaptively chooses κ_j ≤ κ minimizing `λ_j·cost + ρ·κ_j`. 0 = off.
     pub regularization: f64,
+    /// Step-4 bounds policy ([`BoundsPolicy::Auto`] resolves against k;
+    /// never changes results, only assignment throughput).
+    pub bounds: BoundsPolicy,
+    /// Step-4 distance-kernel precision (f32 trades bitwise f64
+    /// reproducibility for ~2× kernel throughput; see
+    /// [`crate::cluster::F32_OBJ_RTOL`]).
+    pub precision: Precision,
 }
 
 impl RkConfig {
     /// Paper-default configuration: κ = k, k-means++ seeding, tolerant stop.
     pub fn new(k: usize) -> Self {
-        RkConfig { k, kappa: 0, max_iters: 50, tol: 1e-6, seed: 0xC0FFEE, regularization: 0.0 }
+        RkConfig {
+            k,
+            kappa: 0,
+            max_iters: 50,
+            tol: 1e-6,
+            seed: 0xC0FFEE,
+            regularization: 0.0,
+            bounds: BoundsPolicy::Auto,
+            precision: Precision::F64,
+        }
     }
 
     /// Set κ < k (speed/approximation tradeoff).
@@ -102,6 +118,18 @@ impl RkConfig {
     /// Override the Step-4 stopping tolerance.
     pub fn with_tol(mut self, tol: f64) -> Self {
         self.tol = tol;
+        self
+    }
+
+    /// Override the Step-4 bounds policy.
+    pub fn with_bounds(mut self, bounds: BoundsPolicy) -> Self {
+        self.bounds = bounds;
+        self
+    }
+
+    /// Override the Step-4 distance-kernel precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 

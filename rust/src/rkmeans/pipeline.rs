@@ -127,14 +127,17 @@ impl ClusterOpts {
         self
     }
 
-    /// The Step-4 options an [`RkConfig`] implies.
+    /// The Step-4 options an [`RkConfig`] implies (the config's bounds
+    /// policy and kernel precision carry into the engine, so they also
+    /// flow through every warm-started path — the incremental planner's
+    /// `cluster_warm`, sweeps, the coordinator).
     pub fn from_config(cfg: &RkConfig) -> Self {
         ClusterOpts {
             k: cfg.k,
             max_iters: cfg.max_iters,
             tol: cfg.tol,
             seed: cfg.seed,
-            engine: EngineOpts::default(),
+            engine: EngineOpts::default().with_bounds(cfg.bounds).with_precision(cfg.precision),
         }
     }
 

@@ -142,12 +142,14 @@ mod tests {
         for (db, trace) in [
             {
                 let db = retailer::generate(Scale::tiny(), 2);
-                let t = retailer_trace(&db, 5, TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.4 });
+                let spec = TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.4 };
+                let t = retailer_trace(&db, 5, spec);
                 (db, t)
             },
             {
                 let db = favorita::generate(Scale::tiny(), 2);
-                let t = favorita_trace(&db, 5, TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.4 });
+                let spec = TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.4 };
+                let t = favorita_trace(&db, 5, spec);
                 (db, t)
             },
         ] {

@@ -2,15 +2,37 @@
 //! random weighted inputs, the bounds-pruned, chunk-parallel engine must
 //! produce **identical** assignments, centroids and objective to the
 //! retained naive serial reference — for both the dense and the factored
-//! form, across thread counts, and across the multi-chunk boundary.
+//! form, for both bounds policies (Hamerly and Elkan), across thread
+//! counts, and across the multi-chunk boundary. The f32 tile path obeys
+//! the same contract within its precision, and its objective stays within
+//! the documented tolerance of f64 on the synthetic paper workloads.
+//!
+//! The `RKMEANS_PRECISION=f32` environment variable reruns the main
+//! equality properties through the f32 kernels (the CI matrix's
+//! f32-precision leg).
 
+use rkmeans::cluster::engine::dense::lloyd_dense_init;
 use rkmeans::cluster::engine::CHUNK;
 use rkmeans::cluster::sparse_lloyd::{Components, SparseGrid, Subspace};
 use rkmeans::cluster::{
-    sparse_lloyd_with, weighted_lloyd_with, CentroidCoord, EngineOpts, LloydConfig,
+    sparse_lloyd_warm_with, sparse_lloyd_with, weighted_lloyd_with, BoundsPolicy, CentroidCoord,
+    EngineOpts, LloydConfig, Precision, F32_OBJ_RTOL,
 };
+use rkmeans::join::{materialize, EmbedSpec};
+use rkmeans::query::Hypergraph;
+use rkmeans::synthetic::{Dataset, Scale};
 use rkmeans::util::testkit::for_cases;
 use rkmeans::util::SplitMix64;
+
+/// Apply the CI matrix's precision selection (`RKMEANS_PRECISION=f32`)
+/// to an engine configuration; the equality properties below hold within
+/// either precision.
+fn env_precision(opts: EngineOpts) -> EngineOpts {
+    match std::env::var("RKMEANS_PRECISION").as_deref() {
+        Ok("f32") => opts.with_precision(Precision::F32),
+        _ => opts,
+    }
+}
 
 /// Mixed blob + uniform points with random weights: blobs give the
 /// pruning something to skip, the uniform fraction keeps assignments
@@ -95,11 +117,16 @@ fn dense_pruned_parallel_equals_naive_serial() {
         let k = 1 + rng.below(9) as usize;
         let (pts, w) = dense_input(rng, n, d);
         // Mix converged and capped runs: tol 0 forces every iteration,
-        // a finite tol exercises the early-stop path.
+        // a finite tol exercises the early-stop path. Alternate bounds
+        // policies so both prune paths hit the same contract.
         let tol = if rng.coin(0.5) { 0.0 } else { 1e-6 };
-        let cfg = LloydConfig { k, max_iters: 1 + rng.below(12) as usize, tol, seed: rng.next_u64() };
-        let (a, sa) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::naive_serial());
-        let (b, sb) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::pruned().with_threads(4));
+        let bounds = if rng.coin(0.5) { BoundsPolicy::Hamerly } else { BoundsPolicy::Elkan };
+        let iters = 1 + rng.below(12) as usize;
+        let cfg = LloydConfig { k, max_iters: iters, tol, seed: rng.next_u64() };
+        let naive = env_precision(EngineOpts::naive_serial());
+        let pruned = env_precision(EngineOpts::pruned().with_bounds(bounds).with_threads(4));
+        let (a, sa) = weighted_lloyd_with(&pts, &w, d, &cfg, &naive);
+        let (b, sb) = weighted_lloyd_with(&pts, &w, d, &cfg, &pruned);
         assert_eq!(a.assign, b.assign);
         assert_eq!(a.centroids, b.centroids);
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
@@ -119,9 +146,13 @@ fn factored_pruned_parallel_equals_naive_serial() {
         let (grid, subs) = grid_input(rng, n);
         let k = 1 + rng.below(8) as usize;
         let tol = if rng.coin(0.5) { 0.0 } else { 1e-6 };
-        let cfg = LloydConfig { k, max_iters: 1 + rng.below(10) as usize, tol, seed: rng.next_u64() };
-        let (a, sa) = sparse_lloyd_with(&grid, &subs, &cfg, &EngineOpts::naive_serial());
-        let (b, sb) = sparse_lloyd_with(&grid, &subs, &cfg, &EngineOpts::pruned().with_threads(4));
+        let bounds = if rng.coin(0.5) { BoundsPolicy::Hamerly } else { BoundsPolicy::Elkan };
+        let iters = 1 + rng.below(10) as usize;
+        let cfg = LloydConfig { k, max_iters: iters, tol, seed: rng.next_u64() };
+        let naive = env_precision(EngineOpts::naive_serial());
+        let pruned = env_precision(EngineOpts::pruned().with_bounds(bounds).with_threads(4));
+        let (a, sa) = sparse_lloyd_with(&grid, &subs, &cfg, &naive);
+        let (b, sb) = sparse_lloyd_with(&grid, &subs, &cfg, &pruned);
         assert_eq!(a.assign, b.assign);
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
         assert_eq!(a.iters, b.iters);
@@ -164,6 +195,149 @@ fn factored_multi_chunk_thread_count_invariant() {
         assert_eq!(base.assign, r.assign, "threads={threads}");
         assert_eq!(base.objective.to_bits(), r.objective.to_bits(), "threads={threads}");
         assert_factored_centroids_equal(&base.centroids, &r.centroids);
+    }
+}
+
+#[test]
+fn elkan_reseed_invalidation_stays_bitwise() {
+    // Duplicate-heavy inputs with k above the number of distinct
+    // locations force empty clusters, so the reseed path (which
+    // invalidates all carried bounds) fires repeatedly — Elkan's O(n·k)
+    // rows must rebuild exactly like Hamerly's global bound does.
+    for_cases(12, |rng| {
+        let d = 1 + rng.below(4) as usize;
+        let distinct = 2 + rng.below(4) as usize; // 2..=5 locations
+        let k = distinct + 1 + rng.below(4) as usize; // k > distinct
+        let centers: Vec<f64> = (0..distinct * d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        let n = 40 + rng.below(200) as usize;
+        let mut pts = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let b = rng.below(distinct as u64) as usize;
+            pts.extend_from_slice(&centers[b * d..(b + 1) * d]);
+        }
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let cfg = LloydConfig { k, max_iters: 8, tol: 0.0, seed: rng.next_u64() };
+        let (a, _) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::naive_serial());
+        for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+            let opts = EngineOpts::pruned().with_bounds(bounds).with_threads(3);
+            let (b, _) = weighted_lloyd_with(&pts, &w, d, &cfg, &opts);
+            assert_eq!(a.assign, b.assign, "{bounds:?}");
+            assert_eq!(a.centroids, b.centroids, "{bounds:?}");
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{bounds:?}");
+        }
+    });
+}
+
+#[test]
+fn elkan_warm_start_stays_bitwise_dense_and_factored() {
+    // Warm starts skip seeding but must not inherit stale bounds: the
+    // first warm iteration full-scans, and carried-bounds runs agree
+    // bitwise with the naive warm-started reference for both policies.
+    for_cases(8, |rng| {
+        let n = 50 + rng.below(400) as usize;
+        let d = 1 + rng.below(5) as usize;
+        let (pts, w) = dense_input(rng, n, d);
+        let k = 2 + rng.below(6) as usize;
+        let cold_cfg = LloydConfig { k, max_iters: 6, tol: 0.0, seed: rng.next_u64() };
+        let (cold, _) = weighted_lloyd_with(&pts, &w, d, &cold_cfg, &EngineOpts::pruned());
+        let warm_cfg = LloydConfig { max_iters: 5, ..cold_cfg.clone() };
+        let (wa, _) = lloyd_dense_init(
+            &pts,
+            &w,
+            d,
+            &warm_cfg,
+            &EngineOpts::naive_serial(),
+            Some(&cold.centroids),
+        );
+        for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+            let opts = EngineOpts::pruned().with_bounds(bounds).with_threads(3);
+            let (wb, _) = lloyd_dense_init(&pts, &w, d, &warm_cfg, &opts, Some(&cold.centroids));
+            assert_eq!(wa.assign, wb.assign, "{bounds:?}");
+            assert_eq!(wa.centroids, wb.centroids, "{bounds:?}");
+            assert_eq!(wa.objective.to_bits(), wb.objective.to_bits(), "{bounds:?}");
+        }
+
+        let (grid, subs) = grid_input(rng, n);
+        let (fcold, _) = sparse_lloyd_with(&grid, &subs, &cold_cfg, &EngineOpts::pruned());
+        let (fa, _) = sparse_lloyd_warm_with(
+            &grid,
+            &subs,
+            &warm_cfg,
+            &EngineOpts::naive_serial(),
+            Some(&fcold.centroids),
+        );
+        for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+            let opts = EngineOpts::pruned().with_bounds(bounds).with_threads(3);
+            let (fb, _) =
+                sparse_lloyd_warm_with(&grid, &subs, &warm_cfg, &opts, Some(&fcold.centroids));
+            assert_eq!(fa.assign, fb.assign, "{bounds:?}");
+            assert_eq!(fa.objective.to_bits(), fb.objective.to_bits(), "{bounds:?}");
+            assert_factored_centroids_equal(&fa.centroids, &fb.centroids);
+        }
+    });
+}
+
+#[test]
+fn f32_pruned_parallel_equals_f32_naive_serial() {
+    // The determinism contract within the f32 precision, both forms and
+    // both bounds policies.
+    for_cases(10, |rng| {
+        let n = 30 + rng.below(500) as usize;
+        let d = 1 + rng.below(6) as usize;
+        let k = 1 + rng.below(8) as usize;
+        let (pts, w) = dense_input(rng, n, d);
+        let iters = 1 + rng.below(8) as usize;
+        let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: rng.next_u64() };
+        let naive = EngineOpts::naive_serial().with_precision(Precision::F32);
+        let (a, _) = weighted_lloyd_with(&pts, &w, d, &cfg, &naive);
+        let bounds = if rng.coin(0.5) { BoundsPolicy::Hamerly } else { BoundsPolicy::Elkan };
+        let pruned = EngineOpts::pruned()
+            .with_precision(Precision::F32)
+            .with_bounds(bounds)
+            .with_threads(4);
+        let (b, _) = weighted_lloyd_with(&pts, &w, d, &cfg, &pruned);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+
+        let (grid, subs) = grid_input(rng, n);
+        let (fa, _) = sparse_lloyd_with(&grid, &subs, &cfg, &naive);
+        let (fb, _) = sparse_lloyd_with(&grid, &subs, &cfg, &pruned);
+        assert_eq!(fa.assign, fb.assign);
+        assert_eq!(fa.objective.to_bits(), fb.objective.to_bits());
+        assert_factored_centroids_equal(&fa.centroids, &fb.centroids);
+    });
+}
+
+#[test]
+fn f32_objective_within_tolerance_on_paper_traces() {
+    // The documented tolerance contract (engine::F32_OBJ_RTOL) on the
+    // materialized synthetic Retailer and Favorita workloads — the same
+    // embeddings the bench acceptance rows use.
+    for ds in [Dataset::Retailer, Dataset::Favorita] {
+        let db = ds.generate(Scale::tiny(), 42);
+        let feq = ds.feq();
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        let x = materialize(&db, &feq, &tree).unwrap();
+        let spec = EmbedSpec::from_feq(&db, &feq).unwrap();
+        let dense = spec.embed_matrix(&x);
+        // Small k on strongly structured data: both precisions converge
+        // into the same basin, so the comparison measures kernel rounding
+        // rather than trajectory divergence.
+        let cfg = LloydConfig { k: 4, max_iters: 10, tol: 0.0, seed: 7 };
+        let opts64 = EngineOpts::pruned();
+        let (r64, _) = weighted_lloyd_with(&dense, &x.weights, spec.dims, &cfg, &opts64);
+        let opts32 = EngineOpts::pruned().with_precision(Precision::F32);
+        let (r32, s32) = weighted_lloyd_with(&dense, &x.weights, spec.dims, &cfg, &opts32);
+        assert_eq!(s32.precision, "f32");
+        let rel = (r64.objective - r32.objective).abs() / r64.objective.abs().max(1e-12);
+        assert!(
+            rel <= F32_OBJ_RTOL,
+            "{}: f32 objective {} drifted {rel:.2e} from f64 {}",
+            ds.name(),
+            r32.objective,
+            r64.objective
+        );
     }
 }
 

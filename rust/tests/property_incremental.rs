@@ -106,11 +106,12 @@ fn random_instance(rng: &mut SplitMix64) -> (Shadow, Feq) {
 
 fn fresh_row(rel: usize, dom: u32, rng: &mut SplitMix64) -> Vec<Value> {
     let key = |rng: &mut SplitMix64| Value::Cat(rng.below(dom as u64) as u32);
+    let frac = |rng: &mut SplitMix64| Value::Double(rng.below(8) as f64 * 0.25);
     match rel {
         0 => vec![key(rng), key(rng), Value::Cat(rng.below(6) as u32)],
-        1 => vec![key(rng), Value::Cat(rng.below(5) as u32), Value::Double(rng.below(8) as f64 * 0.25)],
+        1 => vec![key(rng), Value::Cat(rng.below(5) as u32), frac(rng)],
         2 => vec![key(rng), key(rng), Value::Cat(rng.below(5) as u32)],
-        3 => vec![key(rng), Value::Cat(rng.below(4) as u32), Value::Double(rng.below(8) as f64 * 0.25)],
+        3 => vec![key(rng), Value::Cat(rng.below(4) as u32), frac(rng)],
         _ => unreachable!(),
     }
 }
