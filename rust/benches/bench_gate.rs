@@ -13,6 +13,9 @@
 //!   so it is stable across CI hardware);
 //! * `stream_patched_speedup` — `speedup_vs_rebuild` of the patched
 //!   stream record (also a ratio);
+//! * `stream_carry_speedup` — `speedup_vs_cold` of the patched stream
+//!   record: the bound-carrying (Step-4 resume) arm vs. the cold warm
+//!   start, guarding the planner's patched-path ratio;
 //! * `sweep_shared_coreset_speedup` — `speedup_vs_independent` of the
 //!   shared-coreset sweep record (also a ratio: one coreset + per-k
 //!   Step 4 vs the full pipeline per k).
@@ -103,6 +106,11 @@ fn main() {
             gate(
                 "stream_patched_speedup",
                 rec.and_then(|r| r.get("speedup_vs_rebuild")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+            gate(
+                "stream_carry_speedup",
+                rec.and_then(|r| r.get("speedup_vs_cold")).and_then(|v| v.as_f64()),
                 &mut failures,
             );
         }

@@ -1,26 +1,84 @@
-//! Bench S1 — streaming maintenance: patched (Step-3 delta + Step-4 warm
-//! start via the incremental planner) vs. full-pipeline rebuild per batch,
-//! over a deterministic Retailer insert/delete trace
+//! Bench S1 — streaming maintenance: patched (Step-3 delta + Step-4
+//! resume via the incremental planner) vs. full-pipeline rebuild per
+//! batch, over a deterministic Retailer insert/delete trace
 //! (`synthetic::retailer_trace`). Batch size is held ≤ 1 % of |D| — the
 //! acceptance regime, where patched per-batch latency must beat the
-//! rebuild by ≥ 5×. Both arms replay the *same* trace onto clones of the
+//! rebuild by ≥ 5×. All arms replay the *same* trace onto clones of the
 //! same database; only the maintenance work is timed (the shared
-//! apply-to-db mirroring is not). Results are written as one
-//! `BENCH_stream.json` document (schema: see `bench_harness` docs; path
-//! override: `RKMEANS_STREAM_OUT`).
+//! apply-to-db mirroring is not).
+//!
+//! Ablation arms (all planner-patched, same trace):
+//! * `patched`        — bound carrying on, shared persistent pool (the
+//!   production path; gated vs. rebuild **and** vs. `patched-cold`);
+//! * `patched-cold`   — bound carrying off (`PlannerOpts::carry_state =
+//!   false`): the pre-carry cold warm start;
+//! * `patched-scoped` — carrying on, scoped-spawn executor instead of the
+//!   persistent pool (the per-dispatch thread-spawn overhead arm).
+//!
+//! Results are written as one `BENCH_stream.json` document (schema: see
+//! `bench_harness` docs; path override: `RKMEANS_STREAM_OUT`).
 //!
 //! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
 //! `RKMEANS_STREAM_SCALE` overrides the Retailer scale (default 0.02 ≈
 //! 40k fact rows).
 
 use rkmeans::bench_harness::{write_bench_stream, StreamBenchRecord};
-use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlanDecision, PlannerOpts};
+use rkmeans::cluster::ExecutorKind;
+use rkmeans::data::Database;
+use rkmeans::incremental::{
+    apply_to_db, IncrementalEngine, PlanDecision, PlannerOpts, TupleDelta,
+};
 use rkmeans::metrics::Metrics;
-use rkmeans::query::Hypergraph;
+use rkmeans::query::{Feq, Hypergraph};
 use rkmeans::rkmeans::{rkmeans_with_tree, RkConfig};
 use rkmeans::synthetic::{retailer, retailer_trace, Scale, TraceSpec};
 use std::path::PathBuf;
 use std::time::Instant;
+
+/// Replay the trace through the incremental planner with the given
+/// options; returns the per-arm record and the final grid mass.
+#[allow(clippy::too_many_arguments)]
+fn planner_arm(
+    db0: &Database,
+    feq: &Feq,
+    trace: &[Vec<TupleDelta>],
+    rk: &RkConfig,
+    planner: PlannerOpts,
+    mode: &str,
+    base_rows: usize,
+    batch: usize,
+) -> anyhow::Result<(StreamBenchRecord, f64)> {
+    let mut db = db0.clone();
+    // The initial full build is shared state every arm starts from; it is
+    // not part of the per-batch latency.
+    let mut engine = IncrementalEngine::new(&db, feq.clone(), rk.clone(), planner, Metrics::new())?;
+    let mut times = Vec::with_capacity(trace.len());
+    let mut last = None;
+    for b in trace {
+        apply_to_db(&mut db, b)?;
+        let t0 = Instant::now();
+        let (decision, res) = engine.apply_batch(&db, b)?;
+        times.push(t0.elapsed().as_secs_f64());
+        anyhow::ensure!(
+            decision == PlanDecision::Patched,
+            "planner rebuilt mid-trace; the {mode} arm is not comparable"
+        );
+        last = Some(res);
+    }
+    let last = last.expect("at least one batch");
+    Ok((
+        StreamBenchRecord::from_batches(
+            "retailer-trace",
+            mode,
+            base_rows,
+            batch,
+            &times,
+            last.grid_points,
+            last.objective_grid,
+        ),
+        last.grid_mass,
+    ))
+}
 
 fn main() -> anyhow::Result<()> {
     let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
@@ -73,59 +131,68 @@ fn main() -> anyhow::Result<()> {
     };
     println!("{}", rebuild_rec.line());
 
-    // Arm 2: the incremental planner, forced onto the patch path.
-    let (patched_rec, patched_mass, patched_all) = {
-        let mut db = db.clone();
-        let lenient = PlannerOpts {
-            drift_threshold: 1.1,
-            max_patch_fraction: 1.0,
-            rebuild_every: 0,
-            max_join_churn: f64::INFINITY,
-        };
-        // The initial full build is shared state both arms start from; it
-        // is not part of the per-batch latency either way.
-        let mut engine =
-            IncrementalEngine::new(&db, feq.clone(), rk.clone(), lenient, Metrics::new())?;
-        let mut times = Vec::with_capacity(batches);
-        let mut all_patched = true;
-        let mut last = None;
-        for b in &trace {
-            apply_to_db(&mut db, b)?;
-            let t0 = Instant::now();
-            let (decision, res) = engine.apply_batch(&db, b)?;
-            times.push(t0.elapsed().as_secs_f64());
-            all_patched &= decision == PlanDecision::Patched;
-            last = Some(res);
-        }
-        let last = last.expect("at least one batch");
-        (
-            StreamBenchRecord::from_batches(
-                "retailer-trace",
-                "patched",
-                base_rows,
-                batch,
-                &times,
-                last.grid_points,
-                last.objective_grid,
-            )
-            .with_speedup_vs(&rebuild_rec),
-            last.grid_mass,
-            all_patched,
-        )
+    let lenient = PlannerOpts {
+        drift_threshold: 1.1,
+        max_patch_fraction: 1.0,
+        rebuild_every: 0,
+        max_join_churn: f64::INFINITY,
+        ..PlannerOpts::default()
     };
+
+    // Ablation arms: bound-carry off, and scoped-spawn executor.
+    let (cold_rec, cold_mass) = planner_arm(
+        &db,
+        &feq,
+        &trace,
+        &rk,
+        PlannerOpts { carry_state: false, ..lenient.clone() },
+        "patched-cold",
+        base_rows,
+        batch,
+    )?;
+    println!("{}", cold_rec.line());
+
+    let (scoped_rec, scoped_mass) = planner_arm(
+        &db,
+        &feq,
+        &trace,
+        &rk.clone().with_executor(ExecutorKind::Scoped),
+        lenient.clone(),
+        "patched-scoped",
+        base_rows,
+        batch,
+    )?;
+    println!("{}", scoped_rec.line());
+
+    // The production arm: carrying + shared pool, gated against both the
+    // rebuild and the carry-disabled arm.
+    let (patched_rec, patched_mass) =
+        planner_arm(&db, &feq, &trace, &rk, lenient, "patched", base_rows, batch)?;
+    let patched_rec =
+        patched_rec.with_speedup_vs(&rebuild_rec).with_carry_speedup_vs(&cold_rec);
     println!("{}", patched_rec.line());
 
-    // Sanity: both arms end at the same join mass (|X| is Step-2-model
-    // independent; grids can differ slightly because patching freezes the
-    // Step-2 models while a rebuild re-solves them).
-    anyhow::ensure!(patched_all, "planner rebuilt mid-trace; patched arm is not comparable");
+    // Sanity: every arm ends at the same join mass (|X| is
+    // Step-2-model-independent; grids can differ slightly because
+    // patching freezes the Step-2 models while a rebuild re-solves them),
+    // and the patched arms are exactly equivalent.
+    for (label, mass) in
+        [("patched-cold", cold_mass), ("patched-scoped", scoped_mass), ("patched", patched_mass)]
+    {
+        anyhow::ensure!(
+            (mass - rebuild_mass).abs() <= 1e-6 * rebuild_mass.abs().max(1.0),
+            "final grid mass diverged: {label} {mass} vs rebuild {rebuild_mass}"
+        );
+    }
     anyhow::ensure!(
-        (patched_mass - rebuild_mass).abs() <= 1e-6 * rebuild_mass.abs().max(1.0),
-        "final grid mass diverged: patched {patched_mass} vs rebuild {rebuild_mass}"
+        patched_rec.objective.to_bits() == cold_rec.objective.to_bits()
+            && patched_rec.objective.to_bits() == scoped_rec.objective.to_bits(),
+        "patched arms diverged: carrying and the executor must never change results"
     );
 
     let speedup = patched_rec.speedup_vs_rebuild.unwrap_or(0.0);
-    let records = vec![rebuild_rec, patched_rec];
+    let carry = patched_rec.speedup_vs_cold.unwrap_or(0.0);
+    let records = vec![rebuild_rec, cold_rec, scoped_rec, patched_rec];
     let out = PathBuf::from(
         std::env::var("RKMEANS_STREAM_OUT").unwrap_or_else(|_| "BENCH_stream.json".to_string()),
     );
@@ -133,7 +200,7 @@ fn main() -> anyhow::Result<()> {
     println!("wrote {} records to {}", records.len(), out.display());
     println!(
         "patched vs rebuild per-batch latency: {speedup:.2}× (acceptance target ≥ 5× at \
-         batch ≤ 1% of |D|)"
+         batch ≤ 1% of |D|); bound carrying vs cold warm start: {carry:.2}×"
     );
     Ok(())
 }

@@ -82,12 +82,18 @@
 //! }
 //! ```
 //!
-//! * `mode` is `patched` (Step-3 delta + Step-4 warm start) or `rebuild`
+//! * `mode` is `patched` (Step-3 delta + Step-4 resume from the carried
+//!   engine state, on the shared pool), `patched-cold` (same but with
+//!   bound carrying disabled — the cold warm start), `patched-scoped`
+//!   (carry on, scoped-spawn executor instead of the pool) or `rebuild`
 //!   (full pipeline per batch); `base_rows` is `|D|` before the trace and
 //!   `batch`/`batches` describe the trace shape.
 //! * `mean_batch_s` / `max_batch_s` are per-batch maintenance latencies;
 //!   `speedup_vs_rebuild` = rebuild mean / patched mean (patched rows
 //!   only). The acceptance target is ≥ 5× at batch ≤ 1 % of `|D|`.
+//!   `speedup_vs_cold` (the `patched` row only) = the `patched-cold`
+//!   arm's mean / the carried arm's mean — the bound-carrying ablation
+//!   the gate's `stream_carry_speedup` metric tracks.
 //! * `grid_cells` / `objective` are the final state per mode. They can
 //!   differ slightly across modes (patching freezes the Step-2 models, a
 //!   rebuild re-solves them); the bench instead asserts the final grid
@@ -408,6 +414,9 @@ pub struct StreamBenchRecord {
     pub objective: f64,
     /// Rebuild mean / patched mean (patched rows only).
     pub speedup_vs_rebuild: Option<f64>,
+    /// Cold-warm-start mean / carried mean (the bound-carrying ablation;
+    /// `patched` row only).
+    pub speedup_vs_cold: Option<f64>,
 }
 
 impl StreamBenchRecord {
@@ -435,12 +444,20 @@ impl StreamBenchRecord {
             grid_cells,
             objective,
             speedup_vs_rebuild: None,
+            speedup_vs_cold: None,
         }
     }
 
     /// Attach the mean-latency speedup against the rebuild reference row.
     pub fn with_speedup_vs(mut self, rebuild: &StreamBenchRecord) -> Self {
         self.speedup_vs_rebuild = Some(rebuild.mean_batch_s / self.mean_batch_s.max(1e-12));
+        self
+    }
+
+    /// Attach the mean-latency speedup against the carry-disabled
+    /// (`patched-cold`) reference row.
+    pub fn with_carry_speedup_vs(mut self, cold: &StreamBenchRecord) -> Self {
+        self.speedup_vs_cold = Some(cold.mean_batch_s / self.mean_batch_s.max(1e-12));
         self
     }
 
@@ -477,6 +494,9 @@ impl StreamBenchRecord {
         m.insert("objective".to_string(), Json::Num(self.objective));
         if let Some(s) = self.speedup_vs_rebuild {
             m.insert("speedup_vs_rebuild".to_string(), Json::Num(s));
+        }
+        if let Some(s) = self.speedup_vs_cold {
+            m.insert("speedup_vs_cold".to_string(), Json::Num(s));
         }
         Json::Obj(m)
     }
@@ -691,6 +711,15 @@ mod tests {
             400,
             99.0,
         );
+        let cold = StreamBenchRecord::from_batches(
+            "retailer-trace",
+            "patched-cold",
+            10_000,
+            100,
+            &[0.10, 0.14, 0.12],
+            400,
+            99.0,
+        );
         let patched = StreamBenchRecord::from_batches(
             "retailer-trace",
             "patched",
@@ -700,8 +729,10 @@ mod tests {
             400,
             99.0,
         )
-        .with_speedup_vs(&rebuild);
+        .with_speedup_vs(&rebuild)
+        .with_carry_speedup_vs(&cold);
         assert!((patched.speedup_vs_rebuild.unwrap() - 10.0).abs() < 1e-9);
+        assert!((patched.speedup_vs_cold.unwrap() - 2.0).abs() < 1e-9);
         assert!((rebuild.mean_batch_s - 0.6).abs() < 1e-12);
         assert!((rebuild.max_batch_s - 0.7).abs() < 1e-12);
         assert!(patched.line().contains("vs rebuild"));

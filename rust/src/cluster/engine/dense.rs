@@ -14,7 +14,7 @@ use super::core::{
 };
 use super::microkernel::{self, TILE};
 use super::{
-    resolve_threads, run_chunks, BoundsPolicy, EngineOpts, Precision, PruneStats, CHUNK,
+    resolve_threads, BoundsPolicy, EngineOpts, EngineState, Precision, PruneStats, CHUNK,
     SLACK_REL, SLACK_REL_F32,
 };
 use crate::cluster::kmeanspp::kmeanspp_indices;
@@ -198,6 +198,32 @@ pub fn lloyd_dense_init(
     opts: &EngineOpts,
     init: Option<&[f64]>,
 ) -> (LloydResult, PruneStats) {
+    let (res, stats, _) = lloyd_dense_resume(points, weights, d, cfg, opts, init, None);
+    (res, stats)
+}
+
+/// [`lloyd_dense_init`] with cross-run state carry: always returns the
+/// run's carryable [`EngineState`], and accepts the previous run's state
+/// so iteration 0 reuses its assignments and bounds instead of a full
+/// first scan (see the parent module's "Cross-run state carry" section
+/// for the validity rules). A resumed run is **bitwise identical** to the
+/// same warm start without `resume`.
+///
+/// Panics when `resume` is stale — captured against different centroids
+/// than this run starts from (including the case where a shape-invalid
+/// `init` silently fell back to fresh seeding), or a different point
+/// count: silently proceeding would risk corrupting bounds, so staleness
+/// is a loud caller bug. A bounds-policy or precision mismatch merely
+/// degrades to the cold warm start.
+pub fn lloyd_dense_resume(
+    points: &[f64],
+    weights: &[f64],
+    d: usize,
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+    init: Option<&[f64]>,
+    resume: Option<&EngineState>,
+) -> (LloydResult, PruneStats, EngineState) {
     assert!(d > 0, "dimension must be positive");
     assert_eq!(points.len() % d, 0, "points not a multiple of d");
     let n = points.len() / d;
@@ -264,6 +290,15 @@ pub fn lloyd_dense_init(
     let mut bounds_valid = false;
     let mut max_dd = 0.0f64;
 
+    // Cross-run state carry: a valid prior state seeds the assignments
+    // and (already final-centroid-drifted) bounds, so iteration 0 runs
+    // with `use_bounds = true` and zero drift instead of a full scan.
+    if let Some(st) = resume {
+        let start_hash = EngineState::hash_dense(&centroids);
+        bounds_valid =
+            st.resume_into(start_hash, k, opts, bounds, &mut assign, &mut lb, "points");
+    }
+
     let mut ct_t: Vec<f64> = Vec::new();
     let mut ct_t32: Vec<f32> = Vec::new();
     let mut objective = f64::INFINITY;
@@ -272,6 +307,7 @@ pub fn lloyd_dense_init(
         points: n as u64,
         bounds: if opts.pruning { bounds.label() } else { "none" },
         precision: opts.precision.label(),
+        executor: opts.executor.label(),
         ..PruneStats::default()
     };
 
@@ -346,7 +382,9 @@ pub fn lloyd_dense_init(
                 });
                 start += len;
             }
-            run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx));
+            if opts.executor.run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx)) {
+                stats.pool_dispatches += 1;
+            }
             chunks.into_iter().map(|c| (c.sums, c.mass, c.obj, c.stats)).collect()
         };
 
@@ -401,7 +439,20 @@ pub fn lloyd_dense_init(
 
     stats.iters = iters;
     stats.wall = t0.elapsed();
-    (LloydResult { centroids, assign, objective, iters }, stats)
+
+    // Capture the carryable end-of-run state (shared helper pre-drifts
+    // the bounds to the final centroids).
+    let state = EngineState::capture(
+        assign.clone(),
+        lb,
+        bounds,
+        opts.precision,
+        opts.pruning && bounds_valid,
+        &drift,
+        k,
+        EngineState::hash_dense(&centroids),
+    );
+    (LloydResult { centroids, assign, objective, iters }, stats, state)
 }
 
 #[cfg(test)]

@@ -22,7 +22,7 @@ use super::core::{
 };
 use super::microkernel::{best_two_buf, best_two_buf_f32};
 use super::{
-    resolve_threads, run_chunks, BoundsPolicy, EngineOpts, Precision, PruneStats, CHUNK,
+    resolve_threads, BoundsPolicy, EngineOpts, EngineState, Precision, PruneStats, CHUNK,
     SLACK_REL, SLACK_REL_F32,
 };
 use crate::cluster::kmeanspp::kmeanspp_indices;
@@ -35,8 +35,13 @@ use std::time::Instant;
 
 /// Squared distance between two factored centroids (also the squared
 /// drift when `a` is a centroid's previous position): orthogonality makes
-/// every subspace term a coefficient-space quadratic.
-fn factored_dist2(a: &[CentroidCoord], b: &[CentroidCoord], subspaces: &[Subspace]) -> f64 {
+/// every subspace term a coefficient-space quadratic. Shared with the
+/// ladder-sweep seeding in `crate::rkmeans::pipeline`.
+pub(crate) fn factored_dist2(
+    a: &[CentroidCoord],
+    b: &[CentroidCoord],
+    subspaces: &[Subspace],
+) -> f64 {
     let mut acc = 0.0;
     for ((ca, cb), sub) in a.iter().zip(b).zip(subspaces) {
         let dj = match (ca, cb, &sub.comp) {
@@ -61,9 +66,10 @@ fn factored_dist2(a: &[CentroidCoord], b: &[CentroidCoord], subspaces: &[Subspac
     acc
 }
 
-/// Indicator-coefficient centroid at a grid cell (used for seeding and
-/// empty-cluster reseeds).
-fn centroid_from_cell(
+/// Indicator-coefficient centroid at a grid cell (used for seeding,
+/// empty-cluster reseeds, and the ladder-sweep D² fill in
+/// `crate::rkmeans::pipeline`).
+pub(crate) fn centroid_from_cell(
     grid: &SparseGrid,
     subspaces: &[Subspace],
     cell: usize,
@@ -317,6 +323,31 @@ pub fn lloyd_factored_init(
     opts: &EngineOpts,
     init: Option<&[Vec<CentroidCoord>]>,
 ) -> (SparseLloydResult, PruneStats) {
+    let (res, stats, _) = lloyd_factored_resume(grid, subspaces, cfg, opts, init, None);
+    (res, stats)
+}
+
+/// [`lloyd_factored_init`] with cross-run state carry: always returns the
+/// run's carryable [`EngineState`], and accepts the previous run's state
+/// so iteration 0 reuses its assignments and bounds instead of a full
+/// first scan — the incremental planner's patch path splices the state
+/// across grid edits ([`EngineState::splice`]) and resumes here, making
+/// per-batch Step-4 cost `O(b + changed cells)`. A resumed run is
+/// **bitwise identical** to the same warm start without `resume`.
+///
+/// Panics when `resume` is stale — captured against different centroids
+/// than this run starts from (including the case where a shape-invalid
+/// `init` silently fell back to fresh seeding), or a different cell
+/// count. A bounds-policy or precision mismatch merely degrades to the
+/// cold warm start.
+pub fn lloyd_factored_resume(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+    init: Option<&[Vec<CentroidCoord>]>,
+    resume: Option<&EngineState>,
+) -> (SparseLloydResult, PruneStats, EngineState) {
     let n = grid.n();
     assert!(n > 0, "empty grid");
     assert_eq!(grid.m, subspaces.len());
@@ -378,12 +409,22 @@ pub fn lloyd_factored_init(
     let mut bounds_valid = false;
     let mut max_dd = 0.0f64;
 
+    // Cross-run state carry (see the parent module docs): a valid prior
+    // state seeds assignments and final-centroid-drifted bounds, so
+    // iteration 0 runs with `use_bounds = true` and zero drift.
+    if let Some(st) = resume {
+        let start_hash = EngineState::hash_factored(&centroids);
+        bounds_valid =
+            st.resume_into(start_hash, k, opts, bounds, &mut assign, &mut lb, "cells");
+    }
+
     let mut objective = f64::INFINITY;
     let mut iters = 0;
     let mut stats = PruneStats {
         points: n as u64,
         bounds: if opts.pruning { bounds.label() } else { "none" },
         precision: opts.precision.label(),
+        executor: opts.executor.label(),
         ..PruneStats::default()
     };
 
@@ -448,7 +489,9 @@ pub fn lloyd_factored_init(
                 });
                 start += len;
             }
-            run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx));
+            if opts.executor.run_chunks(&mut chunks, threads, |_, ch| assign_chunk(ch, &ctx)) {
+                stats.pool_dispatches += 1;
+            }
             chunks.into_iter().map(|c| (c.mass, c.comp_mass, c.obj, c.stats)).collect()
         };
 
@@ -514,7 +557,20 @@ pub fn lloyd_factored_init(
 
     stats.iters = iters;
     stats.wall = t0.elapsed();
-    (SparseLloydResult { centroids, assign, objective, iters }, stats)
+
+    // Capture the carryable end-of-run state (shared helper pre-drifts
+    // the bounds to the final centroids).
+    let state = EngineState::capture(
+        assign.clone(),
+        lb,
+        bounds,
+        opts.precision,
+        opts.pruning && bounds_valid,
+        &drift,
+        k,
+        EngineState::hash_factored(&centroids),
+    );
+    (SparseLloydResult { centroids, assign, objective, iters }, stats, state)
 }
 
 #[cfg(test)]

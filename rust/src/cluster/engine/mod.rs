@@ -78,10 +78,73 @@
 //! of ~1e-3 is acceptable); stay on f64 for bitwise reproducibility
 //! against archived results or ill-scaled data.
 //!
+//! # Execution model
+//!
+//! Parallel work is dispatched through an [`Executor`]:
+//!
+//! * [`Executor::Pool`] (the default, via the process-wide
+//!   [`crate::util::exec::shared_pool`]) hands each pass's chunk list to a
+//!   **persistent** worker pool ([`crate::util::exec::ExecPool`]). The
+//!   pool is created once and shared by the dense engine, the factored
+//!   engine, the streaming [`CentroidScorer`] and the coordinator worker,
+//!   so the per-iteration thread spawn/join cost of the scoped executor
+//!   (tens of µs) disappears — a real win in the small-`|G|`,
+//!   many-iteration and streaming-patch regimes. Concurrent jobs
+//!   serialize on the pool, which doubles as oversubscription control.
+//! * [`Executor::Scoped`] is the retained PR-1 reference: scoped
+//!   `std::thread` workers spawned per dispatch.
+//!
+//! Both executors use the identical work-distribution discipline (an
+//! atomic cursor over fixed [`CHUNK`]-sized ranges, items mutated in
+//! place, accumulators reduced in chunk order on the coordinating
+//! thread), so pooled, scoped and serial dispatches are **bitwise
+//! identical** — the executor only changes *who* computes a chunk, never
+//! the arithmetic. [`EngineOpts::threads`] clamps the number of *active*
+//! pool workers per job without resizing the pool;
+//! [`PruneStats::executor`] / [`PruneStats::pool_dispatches`] report what
+//! actually ran.
+//!
+//! # Cross-run state carry
+//!
+//! A run's convergence context — final assignments and lower bounds — is
+//! returned as a first-class [`EngineState`] artifact by the `*_resume`
+//! entry points ([`dense::lloyd_dense_resume`],
+//! [`factored::lloyd_factored_resume`]) and accepted back on the next
+//! run, so a warm start no longer rebuilds its bounds with a full first
+//! scan. Validity rules:
+//!
+//! * the state is tagged with a **hash of the centroids** it was captured
+//!   against; resuming against any other starting centroids is a caller
+//!   bug and panics loudly (stale state must never silently corrupt
+//!   bounds). Resume therefore only composes with a warm start from the
+//!   exact previous centroids.
+//! * the captured bounds are pre-drifted by the final update's centroid
+//!   movement, so they are valid lower bounds **for the final centroids**
+//!   and iteration 0 of the resumed run can use them with zero drift.
+//! * a state whose run ended in an empty-cluster reseed is captured with
+//!   `bounds_valid = false` and resumes like a cold warm start (bounds
+//!   rebuilt by the first full scan).
+//! * a resolved bounds-policy or precision mismatch (configuration
+//!   changed between runs) silently degrades to the cold warm start —
+//!   the state is a pure throughput artifact, never a correctness input.
+//! * grid edits between runs are patched in with [`EngineState::splice`]:
+//!   cells removed by a patch drop their entries, inserted cells get a
+//!   `-∞` bounds row (never skippable by the lb test, hence re-scanned or
+//!   proven by the assignment-independent separation test), and
+//!   weight-only changes need no invalidation at all — assignments and
+//!   bounds do not depend on weights. This is what makes the incremental
+//!   planner's patch cost `O(b + changed cells)` instead of a full first
+//!   scan.
+//!
+//! Because every skipped point provably stores the same bits a full scan
+//! would have produced, a resumed run is **bitwise identical** to the
+//! equivalent cold warm start (within a precision) — pinned by
+//! `tests/property_engine.rs` for both engines and both bounds policies.
+//!
 //! # Determinism contract
 //!
-//! Results are **bitwise identical** for any thread count and for the
-//! pruned vs. naive paths:
+//! Results are **bitwise identical** for any thread count, for either
+//! executor, and for the pruned vs. naive paths:
 //!
 //! * Points are partitioned into fixed [`CHUNK`]-sized ranges independent
 //!   of the thread count; each chunk accumulates its own `sums`/`mass`/
@@ -93,7 +156,8 @@
 //!   produces the same `assign`/`mind2` bits as a naive one. The
 //!   `tests/property_engine.rs` suite asserts exact equality of
 //!   assignments, centroids and objectives across (naive serial) ×
-//!   (pruned parallel) on seeded random inputs, dense and factored.
+//!   (pruned parallel) × (scoped / pooled) on seeded random inputs, dense
+//!   and factored.
 //!
 //! The contract is validated—not just assumed—because the FP-slack
 //! argument above is only rigorous for data whose dynamic range is sane
@@ -120,8 +184,10 @@ pub mod dense;
 pub mod factored;
 pub(crate) mod microkernel;
 
+use crate::cluster::sparse_lloyd::CentroidCoord;
+use crate::util::exec::{self, ExecPool};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Fixed parallel work-unit size (points per chunk). Part of the
@@ -223,19 +289,97 @@ impl Precision {
     }
 }
 
+/// How parallel chunk dispatches execute (see the module-level "Execution
+/// model" section). Both executors are bitwise-identical; they differ
+/// only in per-dispatch overhead.
+#[derive(Clone)]
+pub enum Executor {
+    /// Scoped `std::thread` workers spawned per dispatch — the retained
+    /// PR-1 reference executor.
+    Scoped,
+    /// A persistent worker pool; dispatches reuse its threads.
+    Pool(Arc<ExecPool>),
+}
+
+impl Executor {
+    /// The production executor: the process-wide shared pool.
+    pub fn shared() -> Executor {
+        Executor::Pool(exec::shared_pool())
+    }
+
+    /// Stable label for stats and bench records.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Executor::Scoped => "scoped",
+            Executor::Pool(_) => "pool",
+        }
+    }
+
+    /// Run `f(i, &mut works[i])` for every work item over at most
+    /// `threads` workers; returns `true` when the job was dispatched to a
+    /// pool in parallel (the `PruneStats::pool_dispatches` feed).
+    pub(crate) fn run_chunks<W, F>(&self, works: &mut [W], threads: usize, f: F) -> bool
+    where
+        W: Send,
+        F: Fn(usize, &mut W) + Sync,
+    {
+        match self {
+            Executor::Scoped => {
+                run_chunks(works, threads, f);
+                false
+            }
+            Executor::Pool(pool) => pool.run_chunks(works, threads, f),
+        }
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Executor::Scoped => f.write_str("Scoped"),
+            Executor::Pool(p) => write!(f, "Pool(threads={})", p.threads()),
+        }
+    }
+}
+
+/// Pool-free executor selector for lightweight configurations
+/// ([`crate::rkmeans::RkConfig`], the CLI): resolved to an [`Executor`]
+/// at engine-options build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// The shared persistent pool (production default).
+    Pool,
+    /// Scoped spawn per dispatch (reference / ablation arm).
+    Scoped,
+}
+
+impl ExecutorKind {
+    /// Resolve to a concrete executor.
+    pub fn executor(self) -> Executor {
+        match self {
+            ExecutorKind::Pool => Executor::shared(),
+            ExecutorKind::Scoped => Executor::Scoped,
+        }
+    }
+}
+
 /// Engine execution options shared by the dense and factored paths.
 #[derive(Clone, Debug)]
 pub struct EngineOpts {
     /// Maintain bounds and skip provably-unchanged assignments.
     pub pruning: bool,
     /// Worker threads; `0` = auto (`RKMEANS_THREADS` env var, else the
-    /// machine's available parallelism).
+    /// machine's available parallelism). On a pool executor this clamps
+    /// the *active* workers per dispatch without resizing the pool.
     pub threads: usize,
     /// Lower-bound policy for the pruned path ([`BoundsPolicy::Auto`]
     /// resolves against the run's k).
     pub bounds: BoundsPolicy,
     /// Distance-kernel precision.
     pub precision: Precision,
+    /// Parallel-dispatch executor (see the module-level "Execution
+    /// model"). Never changes results, only dispatch overhead.
+    pub executor: Executor,
 }
 
 impl Default for EngineOpts {
@@ -246,25 +390,27 @@ impl Default for EngineOpts {
 
 impl EngineOpts {
     /// The production configuration: bounds pruning (auto policy) + auto
-    /// parallelism, f64 kernels.
+    /// parallelism on the shared persistent pool, f64 kernels.
     pub fn pruned() -> Self {
         EngineOpts {
             pruning: true,
             threads: 0,
             bounds: BoundsPolicy::Auto,
             precision: Precision::F64,
+            executor: Executor::shared(),
         }
     }
 
-    /// The retained reference: full scans, single thread. The property
-    /// suite pins the pruned/parallel paths to this bit-for-bit (within a
-    /// precision).
+    /// The retained reference: full scans, single thread, scoped
+    /// executor. The property suite pins the pruned/parallel paths to
+    /// this bit-for-bit (within a precision).
     pub fn naive_serial() -> Self {
         EngineOpts {
             pruning: false,
             threads: 1,
             bounds: BoundsPolicy::Auto,
             precision: Precision::F64,
+            executor: Executor::Scoped,
         }
     }
 
@@ -285,6 +431,254 @@ impl EngineOpts {
         self.precision = precision;
         self
     }
+
+    /// Override the parallel-dispatch executor.
+    pub fn with_executor(mut self, executor: Executor) -> Self {
+        self.executor = executor;
+        self
+    }
+}
+
+/// One structural edit to a run's point list (the incremental planner's
+/// grid patch): apply to a carried [`EngineState`] via
+/// [`EngineState::splice`] **in the order the edits were performed**, so
+/// positions stay aligned with the patched grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateSplice {
+    /// A cell was inserted at this position (position valid at the time
+    /// of the edit).
+    Insert(usize),
+    /// The cell at this position was removed (position valid at the time
+    /// of the edit).
+    Remove(usize),
+}
+
+/// Carryable end-of-run convergence context: the final assignments and
+/// (pre-drifted) lower bounds of a Lloyd run, tagged with everything
+/// needed to check they are still valid — see the module-level
+/// "Cross-run state carry" section for the validity rules. Produced and
+/// consumed by the `*_resume` engine entry points; pure throughput
+/// artifact (a resumed run is bitwise-identical to the cold warm start).
+#[derive(Clone, Debug)]
+pub struct EngineState {
+    /// Final cluster per point/cell.
+    assign: Vec<u32>,
+    /// Lower bounds, already drifted to the final centroids: one entry
+    /// per point (Hamerly) or a k-stride row per point (Elkan).
+    lb: Vec<f64>,
+    /// Resolved bounds policy the `lb` layout follows (never `Auto`).
+    bounds: BoundsPolicy,
+    /// Kernel precision the bounds were computed under.
+    precision: Precision,
+    /// False when the run ended in an empty-cluster reseed (bounds were
+    /// invalidated); resuming then degrades to a cold warm start.
+    bounds_valid: bool,
+    /// Hash of the final centroids ([`EngineState::hash_dense`] /
+    /// [`EngineState::hash_factored`]); resume validates the starting
+    /// centroids against it.
+    centroid_hash: u64,
+    /// k the run resolved to (the Elkan row stride).
+    k: usize,
+}
+
+impl EngineState {
+    /// Number of points/cells the state covers.
+    pub fn n(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// k the state was captured at.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Resolved bounds policy of the captured bounds.
+    pub fn bounds(&self) -> BoundsPolicy {
+        self.bounds
+    }
+
+    /// Kernel precision of the captured bounds.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// True when the bounds survived the run (no trailing reseed).
+    pub fn bounds_valid(&self) -> bool {
+        self.bounds_valid
+    }
+
+    /// Hash of the centroids this state is valid against.
+    pub fn centroid_hash(&self) -> u64 {
+        self.centroid_hash
+    }
+
+    /// Consume this state at the start of a run (shared by both engine
+    /// variants): panics when the state is stale — captured against a
+    /// different centroid hash or shape than the run starts from — and
+    /// otherwise copies the carried assignments/bounds into the run
+    /// arrays when they are usable (bounds valid, same resolved policy
+    /// and precision). Returns whether the bounds were installed.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn resume_into(
+        &self,
+        start_hash: u64,
+        k: usize,
+        opts: &EngineOpts,
+        bounds: BoundsPolicy,
+        assign: &mut [u32],
+        lb: &mut [f64],
+        unit: &str,
+    ) -> bool {
+        let n = assign.len();
+        assert!(
+            self.centroid_hash == start_hash && self.n() == n && self.k == k,
+            "stale EngineState: resume requires the exact centroids and shape the state was \
+             captured against (state: {} {unit}, k={}, hash {:#018x}; run: {n} {unit}, k={k}, \
+             hash {:#018x})",
+            self.n(),
+            self.k,
+            self.centroid_hash,
+            start_hash,
+        );
+        if opts.pruning
+            && self.bounds_valid
+            && self.bounds == bounds
+            && self.precision == opts.precision
+        {
+            assign.copy_from_slice(&self.assign);
+            lb.copy_from_slice(&self.lb);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Capture the end-of-run state (shared by both engine variants).
+    /// The run loop leaves `lb` valid for the last pass's pre-update
+    /// centroids; when the bounds survived, this drifts them once more by
+    /// the final update's movement so they are valid for the *final*
+    /// centroids and the resumed run starts with zero drift (see the
+    /// module-level "Cross-run state carry" docs).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn capture(
+        assign: Vec<u32>,
+        mut lb: Vec<f64>,
+        bounds: BoundsPolicy,
+        precision: Precision,
+        bounds_valid: bool,
+        drift: &[f64],
+        k: usize,
+        centroid_hash: u64,
+    ) -> EngineState {
+        if bounds_valid {
+            match bounds {
+                BoundsPolicy::Elkan => {
+                    for row in lb.chunks_mut(k) {
+                        for (b, &p) in row.iter_mut().zip(drift) {
+                            *b -= p;
+                        }
+                    }
+                }
+                _ => {
+                    let dm = drift.iter().cloned().fold(0.0f64, f64::max);
+                    for b in lb.iter_mut() {
+                        *b -= dm;
+                    }
+                }
+            }
+        }
+        EngineState { assign, lb, bounds, precision, bounds_valid, centroid_hash, k }
+    }
+
+    /// Entries of `lb` per point — derived from the actual array shapes
+    /// (k for a pruned Elkan state, 1 otherwise; a non-pruned run captures
+    /// a 1-stride `lb` even when the resolved policy label says Elkan).
+    fn lb_stride(&self) -> usize {
+        if self.assign.is_empty() {
+            1
+        } else {
+            (self.lb.len() / self.assign.len()).max(1)
+        }
+    }
+
+    /// Patch the state across a structural grid edit (see
+    /// [`StateSplice`]): removed cells drop their entries, inserted cells
+    /// get assignment 0 with a `-∞` bounds row — never skippable by the
+    /// lb test, so they are re-scanned (or proven closest by the
+    /// separation test, which is valid for *any* tentative assignment).
+    /// Weight-only cell changes need no splice: assignments and bounds do
+    /// not depend on weights.
+    pub fn splice(&mut self, edits: &[StateSplice]) {
+        let stride = self.lb_stride();
+        for e in edits {
+            match *e {
+                StateSplice::Insert(pos) => {
+                    self.assign.insert(pos, 0);
+                    // One splice per row: a per-element `insert` would
+                    // memmove the tail `stride` times (O(n·k²) per cell
+                    // at Elkan stride).
+                    self.lb.splice(
+                        pos * stride..pos * stride,
+                        std::iter::repeat(f64::NEG_INFINITY).take(stride),
+                    );
+                }
+                StateSplice::Remove(pos) => {
+                    self.assign.remove(pos);
+                    self.lb.drain(pos * stride..(pos + 1) * stride);
+                }
+            }
+        }
+    }
+
+    /// FNV-1a-style hash over the bit patterns of dense `k × d` row-major
+    /// centroids.
+    pub fn hash_dense(centroids: &[f64]) -> u64 {
+        let mut h = HASH_SEED;
+        for &v in centroids {
+            h = hash_mix(h, v.to_bits());
+        }
+        h
+    }
+
+    /// Hash over factored centroids (coordinate kinds, β lengths and bit
+    /// patterns all participate).
+    pub fn hash_factored(centroids: &[Vec<CentroidCoord>]) -> u64 {
+        let mut h = HASH_SEED;
+        h = hash_mix(h, centroids.len() as u64);
+        for cent in centroids {
+            h = hash_mix(h, cent.len() as u64);
+            for coord in cent {
+                match coord {
+                    CentroidCoord::Continuous(x) => {
+                        h = hash_mix(h, 1);
+                        h = hash_mix(h, x.to_bits());
+                    }
+                    CentroidCoord::Categorical(beta) => {
+                        h = hash_mix(h, 2);
+                        h = hash_mix(h, beta.len() as u64);
+                        for &b in beta {
+                            h = hash_mix(h, b.to_bits());
+                        }
+                    }
+                }
+            }
+        }
+        h
+    }
+}
+
+const HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[inline]
+fn hash_mix(h: u64, x: u64) -> u64 {
+    // FNV-1a over the 8 bytes of `x`, folded into `h`.
+    let mut h = h;
+    let mut x = x;
+    for _ in 0..8 {
+        h = (h ^ (x & 0xff)).wrapping_mul(0x0000_0100_0000_01b3);
+        x >>= 8;
+    }
+    h
 }
 
 /// Work counters for one Lloyd run (the bench-trajectory payload of
@@ -308,6 +702,12 @@ pub struct PruneStats {
     pub bounds: &'static str,
     /// Distance-kernel precision of the run (`"f64"` / `"f32"`).
     pub precision: &'static str,
+    /// Executor the run was configured with (`"pool"` / `"scoped"`;
+    /// `"none"` when no engine ran).
+    pub executor: &'static str,
+    /// Parallel pool dispatches the run performed (0 on the scoped
+    /// executor and on serial fast-path passes).
+    pub pool_dispatches: u64,
     /// Wall time of the whole run (seeding + all iterations).
     pub wall: Duration,
 }
@@ -325,6 +725,8 @@ impl Default for PruneStats {
             bound_evals: 0,
             bounds: "none",
             precision: "f64",
+            executor: "none",
+            pool_dispatches: 0,
             wall: Duration::default(),
         }
     }
@@ -352,25 +754,19 @@ impl PruneStats {
     }
 }
 
-/// Resolve the worker-thread count (0 = auto).
+/// Resolve the worker-thread count (0 = auto); see
+/// [`crate::util::exec::resolve_threads`].
 pub(crate) fn resolve_threads(requested: usize) -> usize {
-    if requested > 0 {
-        return requested;
-    }
-    if let Ok(v) = std::env::var("RKMEANS_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n > 0 {
-                return n;
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    exec::resolve_threads(requested)
 }
 
-/// Run `f(chunk_index, &mut work)` once for every work item, spreading the
+/// The scoped-spawn executor ([`Executor::Scoped`]): run
+/// `f(chunk_index, &mut work)` once for every work item, spreading the
 /// items over `threads` scoped workers via an atomic cursor. Items are
 /// mutated in place, so the caller reads results back in chunk order —
 /// scheduling never affects the output (see the determinism contract).
+/// Retained as the per-dispatch reference the persistent pool is pinned
+/// against.
 pub(crate) fn run_chunks<W, F>(works: &mut [W], threads: usize, f: F)
 where
     W: Send,
@@ -402,81 +798,212 @@ where
 }
 
 /// Streaming scorer for fixed dense centroids: feed `(row, weight)` pairs,
-/// get `Σ w·min_c d²(row, c)` back. Rows are buffered into contiguous
-/// tiles and pushed through the shared microkernel, so the streaming
-/// full-`X` objective pass reuses the same hot loop as the Lloyd engine.
+/// get `Σ w·min_c d²(row, c)` back. Rows are buffered into a block of
+/// contiguous tiles and pushed through the shared microkernel (f64 or the
+/// f32 tile path, per [`Precision`]), so the streaming full-`X` objective
+/// pass reuses the same hot loop as the Lloyd engine. Full blocks are
+/// scored on the shared persistent pool ([`crate::util::exec`]) by
+/// default — override with [`CentroidScorer::with_executor`] — as one
+/// partial objective per tile, reduced in tile order, so the result is
+/// independent of the executor and thread count. The f32 path follows
+/// the engine's [`F32_OBJ_RTOL`] tolerance contract (f32 distances, f64
+/// weight accumulation).
 pub struct CentroidScorer {
     d: usize,
     k: usize,
-    /// `d × k` transposed centroids (microkernel layout).
+    precision: Precision,
+    /// `d × k` transposed centroids (microkernel layout); exactly one of
+    /// the f64/f32 pairs is populated, matching `precision`.
     ct_t: Vec<f64>,
     cnorm: Vec<f64>,
-    tile: Vec<f64>,
+    ct_t32: Vec<f32>,
+    cnorm32: Vec<f32>,
+    /// Block row buffer (`SCORE_BLOCK × d`), in the kernel's precision.
+    rows: Vec<f64>,
+    rows32: Vec<f32>,
     wbuf: Vec<f64>,
-    dots: Vec<f64>,
     fill: usize,
     obj: f64,
+    /// Per-tile work items (partial objective + reusable kernel
+    /// scratch); allocated on the first flush, reused thereafter.
+    tiles: Vec<ScoreTile>,
+    executor: Executor,
+    threads: usize,
 }
 
-/// Rows buffered per scoring tile.
+/// One tile's pooled work item: the partial objective it produced plus
+/// its reusable `dots` scratch (exactly one of the two matches the
+/// scorer's precision).
+#[derive(Default)]
+struct ScoreTile {
+    out: f64,
+    dots: Vec<f64>,
+    dots32: Vec<f32>,
+}
+
+/// Rows per scoring tile (the microkernel work unit).
 const SCORE_TILE: usize = 32;
+/// Rows buffered per pooled block flush (a multiple of [`SCORE_TILE`]).
+const SCORE_BLOCK: usize = SCORE_TILE * 64;
 
 impl CentroidScorer {
-    /// Build a scorer over row-major `k × d` centroids.
+    /// Build an f64 scorer over row-major `k × d` centroids.
     pub fn new(centroids: &[f64], d: usize) -> Self {
+        CentroidScorer::new_with(centroids, d, Precision::F64)
+    }
+
+    /// Build a scorer with an explicit kernel precision.
+    /// [`Precision::F32`] doubles the SIMD lanes of the distance
+    /// contraction under the [`F32_OBJ_RTOL`] tolerance contract.
+    pub fn new_with(centroids: &[f64], d: usize, precision: Precision) -> Self {
         assert!(d > 0, "dimension must be positive");
         assert_eq!(centroids.len() % d, 0, "centroids not a multiple of d");
         let k = centroids.len() / d;
         assert!(k > 0, "need at least one centroid");
+        let f32_kernel = precision == Precision::F32;
         let mut ct_t = Vec::new();
-        microkernel::transpose(centroids, d, k, &mut ct_t);
-        let cnorm = centroids
-            .chunks_exact(d)
-            .map(|c| c.iter().map(|v| v * v).sum())
-            .collect();
+        let mut ct_t32 = Vec::new();
+        let mut cnorm = Vec::new();
+        let mut cnorm32 = Vec::new();
+        if f32_kernel {
+            microkernel::transpose_f32(centroids, d, k, &mut ct_t32);
+            cnorm32 = centroids
+                .chunks_exact(d)
+                .map(|c| c.iter().map(|&v| (v as f32) * (v as f32)).sum())
+                .collect();
+        } else {
+            microkernel::transpose(centroids, d, k, &mut ct_t);
+            cnorm = centroids.chunks_exact(d).map(|c| c.iter().map(|v| v * v).sum()).collect();
+        }
         CentroidScorer {
             d,
             k,
+            precision,
             ct_t,
             cnorm,
-            tile: vec![0.0; SCORE_TILE * d],
-            wbuf: vec![0.0; SCORE_TILE],
-            dots: vec![0.0; SCORE_TILE * k],
+            ct_t32,
+            cnorm32,
+            rows: if f32_kernel { Vec::new() } else { vec![0.0; SCORE_BLOCK * d] },
+            rows32: if f32_kernel { vec![0.0; SCORE_BLOCK * d] } else { Vec::new() },
+            wbuf: vec![0.0; SCORE_BLOCK],
             fill: 0,
             obj: 0.0,
+            tiles: Vec::new(),
+            executor: Executor::shared(),
+            threads: 0,
         }
+    }
+
+    /// Override the dispatch executor and worker-thread clamp (`0` =
+    /// auto) — the same knobs as [`EngineOpts`]; the default is the
+    /// shared pool at full parallelism. Never changes the result (the
+    /// per-tile partial reduction is executor- and thread-count
+    /// independent).
+    pub fn with_executor(mut self, executor: Executor, threads: usize) -> Self {
+        self.executor = executor;
+        self.threads = threads;
+        self
     }
 
     /// Score one row (length `d`) with weight `w`.
     pub fn push(&mut self, row: &[f64], w: f64) {
         debug_assert_eq!(row.len(), self.d);
         let p = self.fill;
-        self.tile[p * self.d..(p + 1) * self.d].copy_from_slice(row);
+        match self.precision {
+            Precision::F64 => {
+                self.rows[p * self.d..(p + 1) * self.d].copy_from_slice(row);
+            }
+            Precision::F32 => {
+                for (dst, &v) in
+                    self.rows32[p * self.d..(p + 1) * self.d].iter_mut().zip(row)
+                {
+                    *dst = v as f32;
+                }
+            }
+        }
         self.wbuf[p] = w;
         self.fill += 1;
-        if self.fill == SCORE_TILE {
+        if self.fill == SCORE_BLOCK {
             self.flush();
         }
     }
 
     fn flush(&mut self) {
-        let tp = self.fill;
-        if tp == 0 {
+        let fill = self.fill;
+        if fill == 0 {
             return;
         }
         let (d, k) = (self.d, self.k);
-        microkernel::tile_dots(&self.tile[..tp * d], d, k, &self.ct_t, &mut self.dots);
-        for p in 0..tp {
-            let row = &self.tile[p * d..(p + 1) * d];
-            let xn: f64 = row.iter().map(|v| v * v).sum();
-            let (d1, _, _) =
-                microkernel::best_two_expanded(xn, &self.dots[p * k..(p + 1) * k], &self.cnorm);
-            self.obj += self.wbuf[p] * d1.max(0.0);
+        let n_tiles = fill.div_ceil(SCORE_TILE);
+        // One partial objective per tile, computed in point order within
+        // the tile and reduced in tile order below — thread-count
+        // independent by construction. The per-tile `dots` scratch lives
+        // in the work item, so it is allocated once and reused across
+        // blocks.
+        if self.tiles.len() < n_tiles {
+            self.tiles.resize_with(n_tiles, ScoreTile::default);
+        }
+        let threads = resolve_threads(self.threads);
+        let wbuf = &self.wbuf;
+        let works = &mut self.tiles[..n_tiles];
+        match self.precision {
+            Precision::F64 => {
+                let rows = &self.rows;
+                let ct_t = &self.ct_t;
+                let cnorm = &self.cnorm;
+                self.executor.run_chunks(works, threads, |ti, tile| {
+                    let lo = ti * SCORE_TILE;
+                    let hi = (lo + SCORE_TILE).min(fill);
+                    let tp = hi - lo;
+                    tile.dots.resize(SCORE_TILE * k, 0.0);
+                    let dots = &mut tile.dots[..tp * k];
+                    microkernel::tile_dots(&rows[lo * d..hi * d], d, k, ct_t, dots);
+                    let mut acc = 0.0f64;
+                    for p in 0..tp {
+                        let row = &rows[(lo + p) * d..(lo + p + 1) * d];
+                        let xn: f64 = row.iter().map(|v| v * v).sum();
+                        let (d1, _, _) =
+                            microkernel::best_two_expanded(xn, &dots[p * k..(p + 1) * k], cnorm);
+                        acc += wbuf[lo + p] * d1.max(0.0);
+                    }
+                    tile.out = acc;
+                });
+            }
+            Precision::F32 => {
+                let rows32 = &self.rows32;
+                let ct_t32 = &self.ct_t32;
+                let cnorm32 = &self.cnorm32;
+                self.executor.run_chunks(works, threads, |ti, tile| {
+                    let lo = ti * SCORE_TILE;
+                    let hi = (lo + SCORE_TILE).min(fill);
+                    let tp = hi - lo;
+                    tile.dots32.resize(SCORE_TILE * k, 0.0);
+                    let dots = &mut tile.dots32[..tp * k];
+                    microkernel::tile_dots_f32(&rows32[lo * d..hi * d], d, k, ct_t32, dots);
+                    let mut acc = 0.0f64;
+                    for p in 0..tp {
+                        let row = &rows32[(lo + p) * d..(lo + p + 1) * d];
+                        let xn: f32 = row.iter().map(|v| v * v).sum();
+                        let (d1, _, _) = microkernel::best_two_expanded_f32(
+                            xn,
+                            &dots[p * k..(p + 1) * k],
+                            cnorm32,
+                        );
+                        // Weight accumulation stays in f64 (the tolerance
+                        // contract); distances widen after the f32 clamp.
+                        acc += wbuf[lo + p] * d1.max(0.0) as f64;
+                    }
+                    tile.out = acc;
+                });
+            }
+        }
+        for t in &self.tiles[..n_tiles] {
+            self.obj += t.out;
         }
         self.fill = 0;
     }
 
-    /// Flush the partial tile and return the accumulated objective.
+    /// Flush the partial block and return the accumulated objective.
     pub fn finish(mut self) -> f64 {
         self.flush();
         self.obj
@@ -568,5 +1095,140 @@ mod tests {
             scorer.push(&p, 1.0);
         }
         assert_close(scorer.finish(), want, 1e-9);
+    }
+
+    #[test]
+    fn scorer_pooled_block_boundary_matches_naive() {
+        // Cross the pooled-flush block boundary: the partial-per-tile
+        // reduction (in tile order) must agree with a plain streaming sum.
+        let mut rng = SplitMix64::new(9);
+        let d = 3;
+        let k = 4;
+        let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let n = SCORE_BLOCK + SCORE_TILE + 7;
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let mut scorer = CentroidScorer::new(&cents, d);
+        for i in 0..n {
+            scorer.push(&pts[i * d..(i + 1) * d], w[i]);
+        }
+        let got = scorer.finish();
+        let want = crate::cluster::lloyd::objective(&pts, &w, d, &cents);
+        assert_close(got, want, 1e-9);
+    }
+
+    #[test]
+    fn scorer_f32_within_tolerance_and_deterministic() {
+        let mut rng = SplitMix64::new(11);
+        let d = 4;
+        let k = 3;
+        let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let n = SCORE_BLOCK / 2 + 11;
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let run = |precision: Precision| {
+            let mut s = CentroidScorer::new_with(&cents, d, precision);
+            for i in 0..n {
+                s.push(&pts[i * d..(i + 1) * d], w[i]);
+            }
+            s.finish()
+        };
+        let f64_obj = run(Precision::F64);
+        let f32_a = run(Precision::F32);
+        let f32_b = run(Precision::F32);
+        // Deterministic within the precision (pool scheduling never
+        // changes the tile-order reduction)…
+        assert_eq!(f32_a.to_bits(), f32_b.to_bits());
+        // …executor-independent (scoped serial reduces identically)…
+        let scoped = {
+            let mut s = CentroidScorer::new_with(&cents, d, Precision::F32)
+                .with_executor(Executor::Scoped, 1);
+            for i in 0..n {
+                s.push(&pts[i * d..(i + 1) * d], w[i]);
+            }
+            s.finish()
+        };
+        assert_eq!(scoped.to_bits(), f32_a.to_bits());
+        // …and within the documented tolerance of the f64 pass.
+        let rel = (f64_obj - f32_a).abs() / f64_obj.abs().max(1e-12);
+        assert!(rel <= F32_OBJ_RTOL, "f32 scorer drifted {rel:.2e} from f64");
+    }
+
+    #[test]
+    fn state_splice_reshapes_assign_and_bounds() {
+        // Hamerly stride (1): remove position 1, insert at 0. (Zero final
+        // drift, so `capture` freezes the arrays as-is.)
+        let mut st = EngineState::capture(
+            vec![0, 1, 2],
+            vec![0.5, 1.5, 2.5],
+            BoundsPolicy::Hamerly,
+            Precision::F64,
+            true,
+            &[0.0; 3],
+            3,
+            42,
+        );
+        st.splice(&[StateSplice::Remove(1), StateSplice::Insert(0)]);
+        assert_eq!(st.n(), 3);
+        assert_eq!(st.assign.as_slice(), &[0, 0, 2]);
+        assert_eq!(st.lb.as_slice()[0], f64::NEG_INFINITY);
+        assert_eq!(st.lb.as_slice()[1], 0.5);
+        assert_eq!(st.lb.as_slice()[2], 2.5);
+
+        // Elkan stride (k = 2): whole rows move together.
+        let mut st = EngineState::capture(
+            vec![1, 0],
+            vec![1.0, 2.0, 3.0, 4.0],
+            BoundsPolicy::Elkan,
+            Precision::F64,
+            true,
+            &[0.0; 2],
+            2,
+            7,
+        );
+        st.splice(&[StateSplice::Insert(1)]);
+        assert_eq!(st.n(), 3);
+        assert_eq!(st.assign.as_slice(), &[1, 0, 0]);
+        assert_eq!(st.lb.as_slice(), &[1.0, 2.0, f64::NEG_INFINITY, f64::NEG_INFINITY, 3.0, 4.0]);
+        st.splice(&[StateSplice::Remove(0)]);
+        assert_eq!(st.assign.as_slice(), &[0, 0]);
+        assert_eq!(st.lb.as_slice(), &[f64::NEG_INFINITY, f64::NEG_INFINITY, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn centroid_hashes_detect_changes() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let mut b = a.clone();
+        assert_eq!(EngineState::hash_dense(&a), EngineState::hash_dense(&b));
+        b[2] = 3.0000001;
+        assert_ne!(EngineState::hash_dense(&a), EngineState::hash_dense(&b));
+
+        let fa = vec![vec![
+            crate::cluster::CentroidCoord::Continuous(1.5),
+            crate::cluster::CentroidCoord::Categorical(vec![0.25, 0.75]),
+        ]];
+        let mut fb = fa.clone();
+        assert_eq!(EngineState::hash_factored(&fa), EngineState::hash_factored(&fb));
+        if let crate::cluster::CentroidCoord::Categorical(beta) = &mut fb[0][1] {
+            beta[0] = 0.26;
+        }
+        assert_ne!(EngineState::hash_factored(&fa), EngineState::hash_factored(&fb));
+    }
+
+    #[test]
+    fn executor_labels_and_dispatch() {
+        assert_eq!(Executor::Scoped.label(), "scoped");
+        assert_eq!(Executor::shared().label(), "pool");
+        assert_eq!(ExecutorKind::Scoped.executor().label(), "scoped");
+        assert_eq!(ExecutorKind::Pool.executor().label(), "pool");
+        let mut works = vec![0u32; 9];
+        let pooled = Executor::shared().run_chunks(&mut works, 3, |i, w| *w = i as u32);
+        assert_eq!(works[8], 8);
+        // Whether the dispatch went parallel depends on the machine; the
+        // scoped executor never reports a pool dispatch.
+        let mut works = vec![0u32; 9];
+        assert!(!Executor::Scoped.run_chunks(&mut works, 3, |i, w| *w = i as u32));
+        assert_eq!(works[8], 8);
+        let _ = pooled;
     }
 }

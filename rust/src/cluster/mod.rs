@@ -26,13 +26,14 @@ pub mod sparse_lloyd;
 
 pub use categorical::{categorical_kmeans, CatClusters};
 pub use engine::{
-    BoundsPolicy, CentroidScorer, EngineOpts, Precision, PruneStats, ELKAN_AUTO_K, F32_OBJ_RTOL,
+    BoundsPolicy, CentroidScorer, EngineOpts, EngineState, Executor, ExecutorKind, Precision,
+    PruneStats, StateSplice, ELKAN_AUTO_K, F32_OBJ_RTOL,
 };
 pub use kmeans1d::{kmeans1d, Kmeans1dResult};
 pub use kmedian::{kmedian1d, weighted_kmedian, Kmedian1dResult, KmedianResult};
 pub use kmeanspp::kmeanspp_indices;
 pub use lloyd::{weighted_lloyd, weighted_lloyd_with, LloydConfig, LloydResult};
 pub use sparse_lloyd::{
-    sparse_lloyd, sparse_lloyd_warm_with, sparse_lloyd_with, CentroidCoord, Components,
-    SparseGrid, SparseLloydResult, Subspace,
+    sparse_lloyd, sparse_lloyd_resume_with, sparse_lloyd_warm_with, sparse_lloyd_with,
+    CentroidCoord, Components, SparseGrid, SparseLloydResult, Subspace,
 };

@@ -25,8 +25,8 @@
 //! engine options (naive reference, thread count) and the pruning
 //! statistics.
 
-use super::engine::factored::{lloyd_factored, lloyd_factored_init};
-use super::engine::{EngineOpts, PruneStats};
+use super::engine::factored::{lloyd_factored, lloyd_factored_init, lloyd_factored_resume};
+use super::engine::{EngineOpts, EngineState, PruneStats};
 use super::lloyd::LloydConfig;
 
 /// Per-subspace component geometry (Step 2 output).
@@ -163,6 +163,24 @@ pub fn sparse_lloyd_warm_with(
     init: Option<&[Vec<CentroidCoord>]>,
 ) -> (SparseLloydResult, PruneStats) {
     lloyd_factored_init(grid, subspaces, cfg, opts, init)
+}
+
+/// [`sparse_lloyd_warm_with`] plus cross-run state carry: always returns
+/// the run's carryable [`EngineState`] and accepts the previous run's
+/// state so iteration 0 reuses its assignments and bounds (see
+/// [`crate::cluster::engine`]'s "Cross-run state carry" docs for the
+/// validity rules — notably, a stale state panics loudly). The
+/// incremental planner's patch path splices the state across grid edits
+/// and re-clusters through this entry point.
+pub fn sparse_lloyd_resume_with(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    cfg: &LloydConfig,
+    opts: &EngineOpts,
+    init: Option<&[Vec<CentroidCoord>]>,
+    resume: Option<&EngineState>,
+) -> (SparseLloydResult, PruneStats, EngineState) {
+    lloyd_factored_resume(grid, subspaces, cfg, opts, init, resume)
 }
 
 #[cfg(test)]

@@ -25,6 +25,12 @@
 //! * **Metrics** — counters for ingested/deleted/dropped tuples, job
 //!   counts and durations, backpressure waits, queue depths, and the
 //!   planner's `incremental.*` family, via [`crate::metrics::Metrics`].
+//! * **Shared execution pool** — every job's Step 4 dispatches onto the
+//!   process-wide persistent worker pool
+//!   ([`crate::util::exec::shared_pool`], via the [`RkConfig`] executor
+//!   default) instead of spawning scoped threads per Lloyd iteration;
+//!   concurrent foreground work serializes on the same pool, so the
+//!   coordinator never oversubscribes the machine.
 //!
 //! ## Replica serving from a shipped model
 //!
@@ -552,6 +558,7 @@ mod tests {
             max_patch_fraction: 1.0,
             rebuild_every: 0,
             max_join_churn: f64::INFINITY,
+            ..PlannerOpts::default()
         };
         let coord = Coordinator::start(db, feq, cfg);
         for i in 0..20u32 {
@@ -577,6 +584,7 @@ mod tests {
             max_patch_fraction: 1.0,
             rebuild_every: 0,
             max_join_churn: f64::INFINITY,
+            ..PlannerOpts::default()
         };
         let coord = Coordinator::start(db, feq, cfg);
         coord.flush().unwrap(); // initial build over the 20 base tuples
@@ -684,6 +692,7 @@ mod tests {
             max_patch_fraction: 1.0,
             rebuild_every: 0,
             max_join_churn: f64::INFINITY,
+            ..PlannerOpts::default()
         };
         let coord = Coordinator::start(db, feq, cfg);
         coord.flush().unwrap();

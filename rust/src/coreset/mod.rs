@@ -272,6 +272,8 @@ pub fn centroids_dense(
 /// O(D): rows are buffered into small tiles and scored through the shared
 /// Step-4 engine microkernel ([`CentroidScorer`]), so the streaming pass
 /// gets the same hoisted-norm distance expansion as the Lloyd hot loop.
+/// Scores with the f64 kernel; see [`eval_full_objective_with`] for the
+/// f32 tile path.
 pub fn eval_full_objective(
     db: &Database,
     feq: &Feq,
@@ -279,8 +281,24 @@ pub fn eval_full_objective(
     spec: &EmbedSpec,
     centroids: &[f64],
 ) -> Result<f64> {
+    eval_full_objective_with(db, feq, tree, spec, centroids, crate::cluster::Precision::F64)
+}
+
+/// [`eval_full_objective`] with an explicit scorer precision:
+/// [`Precision::F32`](crate::cluster::Precision::F32) runs the distance
+/// contraction through the f32 tile kernel (2× SIMD lanes, f64 weight
+/// accumulation) under the engine's
+/// [`F32_OBJ_RTOL`](crate::cluster::F32_OBJ_RTOL) tolerance contract.
+pub fn eval_full_objective_with(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    spec: &EmbedSpec,
+    centroids: &[f64],
+    precision: crate::cluster::Precision,
+) -> Result<f64> {
     let d = spec.dims;
-    let mut scorer = CentroidScorer::new(centroids, d);
+    let mut scorer = CentroidScorer::new_with(centroids, d, precision);
     let mut buf = vec![0.0; d];
     stream_rows(db, feq, tree, |vals, w| {
         spec.embed_into(vals, &mut buf);

@@ -40,6 +40,7 @@
 //! the marginal-drift trigger in [`super::marginal`] protects); a changed
 //! bit layout is detected and rejected.
 
+use crate::cluster::StateSplice;
 use crate::data::{AttrType, Database, Value};
 use crate::faq::gridweights::GridTable;
 use crate::faq::GidAssigner;
@@ -62,6 +63,13 @@ pub struct PatchStats {
     pub mass_delta_abs: f64,
     /// Non-zero grid cells after the patch.
     pub grid_cells: usize,
+    /// Tombstoned fraction after the patch: message entries and retained
+    /// rows removed since the last (re)build, relative to the live count.
+    /// Hash maps never release capacity on their own, so under
+    /// delete-heavy load this is the resident-memory overhang
+    /// [`DeltaFaq::compact`] reclaims (the planner's
+    /// `incremental.tombstone_pm` metric / compaction trigger).
+    pub tombstone_ratio: f64,
 }
 
 /// A gid-combination key: bit-packed `u128` on the hot path, a plain
@@ -185,6 +193,15 @@ struct State<K> {
     /// splice only touched cells) so `grid_table` never re-sorts
     /// untouched runs.
     sorted: Vec<(Vec<u32>, f64)>,
+    /// Structural edits the last `apply` made to `sorted`, in application
+    /// order — the planner replays them onto its carried Step-4
+    /// [`crate::cluster::EngineState`] so assignments/bounds stay aligned
+    /// with the patched grid.
+    splices: Vec<StateSplice>,
+    /// Live message entries + retained rows (maintained incrementally).
+    live: usize,
+    /// Entries removed since init/compaction (tombstoned capacity).
+    dead: usize,
 }
 
 /// Cross-product contribution of one tuple: `own × Π_j T_j(key_j)`, with
@@ -220,14 +237,26 @@ fn contribution<K: Combo>(
 
 /// Merge a message delta into a retained message, purging exact zeros so
 /// the table keeps the same sparsity a from-scratch pass would produce.
-fn merge_msg<K: Combo>(dst: &mut Msg<K>, src: Msg<K>) {
+/// `live`/`dead` track entry creations and removals for the tombstone
+/// accounting (see [`PatchStats::tombstone_ratio`]).
+fn merge_msg<K: Combo>(dst: &mut Msg<K>, src: Msg<K>, live: &mut usize, dead: &mut usize) {
     for (key, table) in src {
         let empty = {
             let slot = dst.entry(key.clone()).or_default();
             for (g, dw) in table {
-                *slot.entry(g).or_insert(0.0) += dw;
+                match slot.entry(g) {
+                    Entry::Occupied(mut e) => *e.get_mut() += dw,
+                    Entry::Vacant(e) => {
+                        e.insert(dw);
+                        *live += 1;
+                    }
+                }
             }
+            let before = slot.len();
             slot.retain(|_, v| *v != 0.0);
+            let removed = before - slot.len();
+            *live -= removed;
+            *dead += removed;
             slot.is_empty()
         };
         if empty {
@@ -310,6 +339,9 @@ impl<K: Combo> State<K> {
             root: tree.root,
             rel_to_node,
             sorted: Vec::new(),
+            splices: Vec::new(),
+            live: 0,
+            dead: 0,
         };
 
         // Upward pass, retaining rows, indexes and messages.
@@ -383,7 +415,19 @@ impl<K: Combo> State<K> {
             .unwrap_or_default();
         cells.sort_by(|a, b| a.0.cmp(&b.0));
         st.sorted = cells;
+        st.live = st.count_live();
+        st.dead = 0;
         Ok(st)
+    }
+
+    /// Live message entries + retained rows across every node (the
+    /// tombstone-ratio denominator; recomputed only at init/compaction,
+    /// maintained incrementally in between).
+    fn count_live(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| n.rows.len() + n.msg.values().map(|t| t.len()).sum::<usize>())
+            .sum()
     }
 
     /// Encode one delta against node `u`'s schema: row key, own combo,
@@ -426,6 +470,7 @@ impl<K: Combo> State<K> {
         deltas: &[TupleDelta],
         assigners: &FxHashMap<String, Box<dyn GidAssigner + '_>>,
     ) -> Result<PatchStats> {
+        self.splices.clear();
         let n = self.nodes.len();
         // Group deltas by node up front so unknown relations fail whole.
         let mut per_node: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
@@ -478,7 +523,7 @@ impl<K: Combo> State<K> {
                         }
                     }
                 }
-                merge_msg(&mut self.nodes[c].msg, dm_c);
+                merge_msg(&mut self.nodes[c].msg, dm_c, &mut self.live, &mut self.dead);
             }
 
             // Phase A: this node's own inserts/deletes, against the
@@ -510,6 +555,8 @@ impl<K: Combo> State<K> {
                         );
                         if nw == 0.0 {
                             let old = e.remove();
+                            self.live -= 1;
+                            self.dead += 1;
                             for (i, ck) in old.child_keys.iter().enumerate() {
                                 if let Some(list) = node.child_index[i].get_mut(ck) {
                                     list.retain(|k| k != &rkey);
@@ -534,6 +581,7 @@ impl<K: Combo> State<K> {
                             up_key,
                             child_keys: child_keys.clone(),
                         });
+                        self.live += 1;
                         for (i, ck) in child_keys.iter().enumerate() {
                             node.child_index[i].entry(ck.clone()).or_default().push(rkey.clone());
                         }
@@ -547,7 +595,9 @@ impl<K: Combo> State<K> {
         // Patch the root grid, asserting the ℤ-ring non-negativity, and
         // mirror every touched cell into the maintained sorted snapshot:
         // in-place for value changes, a binary-searched splice for
-        // creations and drops — untouched runs are never re-sorted.
+        // creations and drops — untouched runs are never re-sorted, and
+        // every structural edit is logged in `splices` so the planner can
+        // replay it onto its carried Step-4 engine state.
         let dm_root = std::mem::take(&mut delta_msgs[self.root]);
         let root = self.root;
         let mut cells_touched = 0usize;
@@ -561,7 +611,13 @@ impl<K: Combo> State<K> {
                 let slot = self.nodes[root].msg.entry(key.clone()).or_default();
                 for (g, dw) in table {
                     mass_delta_abs += dw.abs();
-                    let v = slot.entry(g.clone()).or_insert(0.0);
+                    let v = match slot.entry(g.clone()) {
+                        Entry::Occupied(e) => e.into_mut(),
+                        Entry::Vacant(e) => {
+                            self.live += 1;
+                            e.insert(0.0)
+                        }
+                    };
                     *v += dw;
                     ensure!(
                         *v >= 0.0,
@@ -572,15 +628,21 @@ impl<K: Combo> State<K> {
                     let nv = *v;
                     if nv == 0.0 {
                         slot.remove(&g);
+                        self.live -= 1;
+                        self.dead += 1;
                     }
                     if is_grid {
                         let uk = g.unpack(&self.layout);
                         match self.sorted.binary_search_by(|(a, _)| a.cmp(&uk)) {
                             Ok(pos) if nv == 0.0 => {
                                 self.sorted.remove(pos);
+                                self.splices.push(StateSplice::Remove(pos));
                             }
                             Ok(pos) => self.sorted[pos].1 = nv,
-                            Err(pos) if nv != 0.0 => self.sorted.insert(pos, (uk, nv)),
+                            Err(pos) if nv != 0.0 => {
+                                self.sorted.insert(pos, (uk, nv));
+                                self.splices.push(StateSplice::Insert(pos));
+                            }
                             Err(_) => {}
                         }
                     }
@@ -597,7 +659,79 @@ impl<K: Combo> State<K> {
             cells_touched,
             mass_delta_abs,
             grid_cells: self.n_cells(),
+            tombstone_ratio: self.tombstone_ratio(),
         })
+    }
+
+    /// Tombstoned fraction: entries removed since the last (re)build
+    /// relative to the live count (see [`PatchStats::tombstone_ratio`]).
+    fn tombstone_ratio(&self) -> f64 {
+        self.dead as f64 / self.live.max(1) as f64
+    }
+
+    /// Rebuild every retained collection tightly from the surviving
+    /// tuple multisets: messages are recomputed bottom-up exactly like
+    /// `init`'s upward pass, rows and key indexes are re-collected into
+    /// fresh maps (hash maps never release capacity on their own), and
+    /// the sorted grid snapshot is re-derived. On ℤ-weighted databases
+    /// the result is bitwise-identical to the maintained state; with
+    /// fractional weights it is exact up to FP re-association (the same
+    /// caveat as the maintained state itself). Returns `true` when the
+    /// grid's cell set and sorted order survived unchanged — the normal
+    /// case, and what keeps a carried Step-4 engine state valid; `false`
+    /// when FP re-association flipped some cell's zero-ness (fractional
+    /// weights only), in which case the caller must drop any carried
+    /// state (positions may have shifted with no splice log).
+    fn compact(&mut self) -> bool {
+        let old_keys: Vec<Vec<u32>> = self.sorted.iter().map(|(g, _)| g.clone()).collect();
+        let order = self.order.clone();
+        for &u in &order {
+            {
+                let node = &mut self.nodes[u];
+                let rows = std::mem::take(&mut node.rows);
+                node.rows = rows.into_iter().collect();
+                for idx in node.child_index.iter_mut() {
+                    let old = std::mem::take(idx);
+                    *idx = old.into_iter().collect();
+                }
+            }
+            // Recompute the upward message from rows + the already
+            // recomputed child messages (children precede parents in
+            // `order`).
+            let mut msg: Msg<K> = FxHashMap::default();
+            {
+                let nodes = &self.nodes;
+                let node = &nodes[u];
+                for row in node.rows.values() {
+                    if let Some(combos) = contribution(
+                        nodes,
+                        &node.children,
+                        &row.own,
+                        row.w,
+                        &row.child_keys,
+                        None,
+                    ) {
+                        let slot = msg.entry(row.up_key.clone()).or_default();
+                        for (g, cw) in combos {
+                            *slot.entry(g).or_insert(0.0) += cw;
+                        }
+                    }
+                }
+            }
+            self.nodes[u].msg = msg;
+        }
+        let empty_key: Vec<u64> = Vec::new();
+        let mut cells: Vec<(Vec<u32>, f64)> = self.nodes[self.root]
+            .msg
+            .get(&empty_key)
+            .map(|t| t.iter().map(|(g, &w)| (g.unpack(&self.layout), w)).collect())
+            .unwrap_or_default();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        self.sorted = cells;
+        self.live = self.count_live();
+        self.dead = 0;
+        self.sorted.len() == old_keys.len()
+            && self.sorted.iter().zip(&old_keys).all(|((g, _), og)| g == og)
     }
 
     fn n_cells(&self) -> usize {
@@ -694,9 +828,10 @@ impl DeltaFaq {
     /// The maintained sparse grid, in deterministic (sorted) cell order.
     /// The sorted cell list is maintained *across* patches (one sort at
     /// init; each batch splices only its touched cells), so this snapshot
-    /// is a plain O(|G|) copy — no per-batch re-sort of untouched runs.
-    /// Carrying Step-4 assignments across batches to make the copy
-    /// O(touched) too remains open (ROADMAP "Step-4 assignment reuse").
+    /// is a plain O(|G|) copy — no per-batch re-sort of untouched runs —
+    /// and the per-batch edit log ([`DeltaFaq::last_splices`]) lets the
+    /// planner carry its Step-4 [`crate::cluster::EngineState`]
+    /// (assignments + bounds) across the same edits.
     pub fn grid_table(&self) -> GridTable {
         match &self.inner {
             Inner::Packed(s) => s.grid_table(),
@@ -709,6 +844,47 @@ impl DeltaFaq {
         match &self.inner {
             Inner::Packed(s) => s.n_cells(),
             Inner::Generic(s) => s.n_cells(),
+        }
+    }
+
+    /// Structural edits (inserts/drops, in application order) the last
+    /// [`DeltaFaq::apply`] made to the sorted grid snapshot. Replay them
+    /// onto a carried Step-4 state with
+    /// [`crate::cluster::EngineState::splice`] so assignments and bounds
+    /// stay aligned with the patched grid; weight-only cell changes are
+    /// deliberately absent (they invalidate nothing).
+    pub fn last_splices(&self) -> &[StateSplice] {
+        match &self.inner {
+            Inner::Packed(s) => &s.splices,
+            Inner::Generic(s) => &s.splices,
+        }
+    }
+
+    /// Tombstoned fraction of the retained state: message entries and
+    /// rows removed since the last (re)build, relative to the live count
+    /// — the resident-memory overhang [`DeltaFaq::compact`] reclaims.
+    pub fn tombstone_ratio(&self) -> f64 {
+        match &self.inner {
+            Inner::Packed(s) => s.tombstone_ratio(),
+            Inner::Generic(s) => s.tombstone_ratio(),
+        }
+    }
+
+    /// Rebuild the retained collections tightly from the surviving tuple
+    /// multisets, reclaiming tombstoned hash-map capacity (the planner
+    /// triggers this when [`PatchStats::tombstone_ratio`] passes its
+    /// threshold). On ℤ-weighted databases the compacted state is
+    /// bitwise-identical to the maintained one and the grid's cell set
+    /// and sorted order never change (returns `true`), so carried Step-4
+    /// state stays valid. A `false` return means fractional-weight FP
+    /// re-association changed some cell's zero-ness: the cell layout
+    /// shifted with no splice log, and any carried Step-4 state must be
+    /// dropped.
+    #[must_use = "a false return means carried Step-4 state is now misaligned"]
+    pub fn compact(&mut self) -> bool {
+        match &mut self.inner {
+            Inner::Packed(s) => s.compact(),
+            Inner::Generic(s) => s.compact(),
         }
     }
 
@@ -916,6 +1092,78 @@ mod tests {
         db.get_mut("fact").unwrap().push_row(&[Value::Cat(5), Value::Cat(2)]);
         db.get_mut("dim").unwrap().push_row(&[Value::Cat(2), Value::Cat(5)]);
         assert!(db.get_mut("fact").unwrap().retract_row(&[Value::Cat(0), Value::Cat(0)], 1.0));
+        let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
+        assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
+    }
+
+    #[test]
+    fn splice_log_keeps_positions_aligned_with_snapshot() {
+        // Replaying the per-batch splice ops onto a parallel array must
+        // keep surviving entries aligned with the sorted snapshot — the
+        // exact contract the planner's carried EngineState depends on.
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        // Shadow: the cell key each position carried before any patch.
+        let mut shadow: Vec<Option<Vec<u32>>> =
+            delta.grid_table().cells.iter().map(|(g, _)| Some(g.clone())).collect();
+        let batches = vec![
+            vec![TupleDelta::insert("fact", vec![Value::Cat(5), Value::Cat(2)])],
+            vec![TupleDelta::delete("fact", vec![Value::Cat(0), Value::Cat(0)])],
+            vec![
+                TupleDelta::insert("dim", vec![Value::Cat(2), Value::Cat(5)]),
+                TupleDelta::delete("fact", vec![Value::Cat(1), Value::Cat(0)]),
+            ],
+        ];
+        for batch in &batches {
+            delta.apply(batch, &asg).unwrap();
+            for op in delta.last_splices() {
+                match *op {
+                    crate::cluster::StateSplice::Insert(pos) => shadow.insert(pos, None),
+                    crate::cluster::StateSplice::Remove(pos) => {
+                        shadow.remove(pos);
+                    }
+                }
+            }
+            let now = delta.grid_table();
+            assert_eq!(shadow.len(), now.cells.len());
+            for (s, (g, _)) in shadow.iter().zip(&now.cells) {
+                if let Some(key) = s {
+                    assert_eq!(key, g, "carried position drifted off its cell");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tombstones_accumulate_and_compaction_is_exact() {
+        let (db, feq, tree) = setup();
+        let asg = assigners(3, 3);
+        let mut delta = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+        assert_eq!(delta.tombstone_ratio(), 0.0);
+        // Delete-heavy churn: insert then retract the same tuples.
+        for round in 0..4u32 {
+            let vals = vec![Value::Cat(5 + (round % 2)), Value::Cat(2)];
+            delta.apply(&[TupleDelta::insert("fact", vals.clone())], &asg).unwrap();
+            delta.apply(&[TupleDelta::delete("fact", vals)], &asg).unwrap();
+        }
+        assert!(delta.tombstone_ratio() > 0.0, "churn must leave tombstones");
+        let before = cells_map(&delta.grid_table());
+        let ordered_before: Vec<Vec<u32>> =
+            delta.grid_table().cells.iter().map(|(g, _)| g.clone()).collect();
+        assert!(delta.compact(), "ℤ weights: compaction must preserve the cell layout");
+        assert_eq!(delta.tombstone_ratio(), 0.0);
+        // ℤ weights: the compacted grid is bitwise-identical, in the same
+        // sorted order (carried engine state stays valid).
+        assert_eq!(cells_map(&delta.grid_table()), before);
+        let ordered_after: Vec<Vec<u32>> =
+            delta.grid_table().cells.iter().map(|(g, _)| g.clone()).collect();
+        assert_eq!(ordered_before, ordered_after);
+        // And the state keeps patching correctly afterwards.
+        let mut db = db;
+        delta.apply(&[TupleDelta::insert("fact", vec![Value::Cat(7), Value::Cat(1)])], &asg)
+            .unwrap();
+        db.get_mut("fact").unwrap().push_row(&[Value::Cat(7), Value::Cat(1)]);
         let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
         assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
     }

@@ -4,10 +4,17 @@
 //! **Patch** keeps the Step-2 models (and hence gid maps) frozen, feeds
 //! the batch through [`DeltaFaq::apply`], converts the patched grid with
 //! [`crate::coreset::sparse_from_table`], and re-clusters with
-//! [`sparse_lloyd_warm_with`] seeded from the previous version's
-//! centroids — typically a couple of Lloyd iterations. Steps 1 and 2 are
-//! skipped entirely, which is where the `Õ(|D|)`-per-batch cost of the
-//! recompute loop goes away.
+//! [`crate::rkmeans::Coreset::cluster_resume`]: seeded from the previous
+//! version's centroids **and** resumed from the carried Step-4
+//! [`EngineState`] (final assignments + bounds, spliced across the grid
+//! edit via [`DeltaFaq::last_splices`]), so the warm-started Lloyd skips
+//! the full first assignment scan — per-batch Step-4 cost is
+//! `O(b + changed cells)`, bitwise-identical to the cold warm start.
+//! Steps 1 and 2 are skipped entirely, which is where the
+//! `Õ(|D|)`-per-batch cost of the recompute loop goes away. When a
+//! batch's tombstone ratio passes [`PlannerOpts::compact_ratio`], the
+//! retained Step-3 messages are compacted in place
+//! ([`DeltaFaq::compact`]) to bound delete-heavy resident memory.
 //!
 //! **Rebuild** is the existing full pipeline
 //! ([`crate::rkmeans::rkmeans_with_tree`]) followed by re-initializing the
@@ -28,13 +35,15 @@
 //! (`incremental.*`), including an estimated per-batch saving against the
 //! last observed rebuild time.
 
-use crate::cluster::CentroidCoord;
+use crate::cluster::{CentroidCoord, EngineState};
 use crate::coreset::{sparse_from_table, SubspaceModel};
 use crate::data::Database;
 use crate::faq::GidAssigner;
 use crate::metrics::Metrics;
 use crate::query::{Feq, Hypergraph, JoinTree};
-use crate::rkmeans::{ClusterOpts, Coreset, RkConfig, RkModel, RkPipeline, RkResult, StepTimings};
+use crate::rkmeans::{
+    ClusterOpts, Coreset, RkConfig, RkModel, RkPipeline, RkResult, StepTimings, SubspaceOpts,
+};
 use crate::util::FxHashMap;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -58,6 +67,19 @@ pub struct PlannerOpts {
     /// backstops the base-table sketches, which cannot see join-*key*
     /// fanout shifts (see [`super::marginal`]).
     pub max_join_churn: f64,
+    /// Carry the Step-4 [`EngineState`] (assignments + bounds) across
+    /// batches: each patch splices the state over the grid edit and
+    /// resumes, so the warm-started Lloyd skips the full first scan and
+    /// per-batch Step-4 cost is `O(b + changed cells)`. Bitwise-identical
+    /// to the cold warm start (`false` = the pre-carry behavior, kept as
+    /// the bench ablation arm).
+    pub carry_state: bool,
+    /// Compact the retained Step-3 state
+    /// ([`DeltaFaq::compact`]) when its tombstone ratio exceeds this
+    /// (removed entries / live entries; `f64::INFINITY` = never). Bounds
+    /// delete-heavy resident memory at the cost of an occasional
+    /// `Õ(|D|)` message rebuild.
+    pub compact_ratio: f64,
 }
 
 impl Default for PlannerOpts {
@@ -67,6 +89,8 @@ impl Default for PlannerOpts {
             max_patch_fraction: 0.05,
             rebuild_every: 0,
             max_join_churn: 0.5,
+            carry_state: true,
+            compact_ratio: 0.5,
         }
     }
 }
@@ -113,6 +137,11 @@ pub struct IncrementalState {
     pub tracker: MarginalTracker,
     /// Step-4 centroids of this version (the warm start for the next).
     pub centroids: Vec<Vec<CentroidCoord>>,
+    /// Carried Step-4 engine state (final assignments + bounds, tagged
+    /// with the centroid hash): spliced across each batch's grid edit and
+    /// resumed so the next patch skips the full first scan. `None` only
+    /// before the first Step-4 run of a restored legacy snapshot.
+    pub engine_state: Option<EngineState>,
     /// The clustering result published at this version (shared: handed
     /// out per batch without deep-copying models/centroids).
     pub result: Arc<RkResult>,
@@ -194,8 +223,18 @@ impl IncrementalEngine {
     ) -> Result<(IncrementalState, f64)> {
         let t0 = Instant::now();
         // Staged pipeline over the caller's tree (bitwise-identical to the
-        // monolithic shim; see `crate::rkmeans::pipeline`).
-        let result = Arc::new(RkPipeline::with_tree(db, feq, tree).run(rk)?.into_result());
+        // monolithic shim; see `crate::rkmeans::pipeline`). Stages are run
+        // explicitly so the Step-4 engine state can be captured: the
+        // staged coreset and the delta-maintained grid share the same
+        // sorted cell order, so the state carries straight into the first
+        // patch.
+        let pipe = RkPipeline::with_tree(db, feq, tree);
+        let marginals = pipe.marginals()?;
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::from_config(rk))?;
+        let coreset = pipe.coreset(&subspaces)?;
+        let (model, engine_state) =
+            coreset.cluster_resume(&ClusterOpts::from_config(rk), None, None);
+        let result = Arc::new(model.into_result());
         let delta = {
             let assigners = assigner_map(&result.models);
             DeltaFaq::init(db, feq, tree, &assigners)?
@@ -207,6 +246,7 @@ impl IncrementalEngine {
             delta,
             tracker,
             centroids: result.centroids.clone(),
+            engine_state: Some(engine_state),
             result,
         };
         Ok((state, t0.elapsed().as_secs_f64()))
@@ -278,30 +318,66 @@ impl IncrementalEngine {
         Ok(elapsed)
     }
 
-    /// The patch path: Step-3 delta + Step-4 warm start. Returns elapsed
-    /// seconds; on error the caller rebuilds (the delta state may be
-    /// poisoned).
+    /// The patch path: Step-3 delta + Step-4 resume (carried assignments
+    /// and bounds, spliced over the grid edit). Returns elapsed seconds;
+    /// on error the caller rebuilds (the delta state may be poisoned).
     fn try_patch(&mut self, deltas: &[TupleDelta]) -> Result<f64> {
         let t0 = Instant::now();
         let patch_stats = {
             let assigners = assigner_map(&self.state.models);
             self.state.delta.apply(deltas, &assigners)?
         };
+        // Keep the carried Step-4 state aligned with the patched grid:
+        // replay the batch's structural edits (inserted cells arrive with
+        // unbounded rows and get re-scanned; weight-only changes
+        // invalidate nothing).
+        if let Some(st) = self.state.engine_state.as_mut() {
+            st.splice(self.state.delta.last_splices());
+        }
+        // Delete-heavy memory backstop: rebuild the retained messages
+        // tightly once tombstones dominate. On ℤ weights the cell set and
+        // order are unchanged so the carried state stays valid; if
+        // fractional-weight re-association shifted the cell layout
+        // (`compact` returns false) the state is misaligned and dropped.
+        self.metrics
+            .gauge("incremental.tombstone_pm")
+            .set((patch_stats.tombstone_ratio * 1000.0) as i64);
+        if patch_stats.tombstone_ratio > self.opts.compact_ratio {
+            if !self.state.delta.compact() {
+                self.state.engine_state = None;
+            }
+            self.metrics.counter("incremental.compactions").inc();
+        }
         let table = self.state.delta.grid_table();
         let (grid, subspaces) = sparse_from_table(table, &self.state.models);
         if grid.n() == 0 {
             bail!("FEQ output is empty after deltas: nothing to cluster");
         }
         // The delta-patched grid becomes a staged Coreset artifact, so the
-        // warm-started Step 4 runs through the same code path as the
-        // pipeline's `cluster_warm`.
+        // resumed Step 4 runs through the same code path as the pipeline's
+        // `cluster_resume`.
         let coreset = Coreset::from_parts(grid, subspaces, self.state.models.clone());
         let step3 = t0.elapsed();
 
         let t1 = Instant::now();
-        let mut model = coreset
-            .cluster_warm(&ClusterOpts::from_config(&self.rk), Some(&self.state.centroids))
-            .with_version(self.state.version + 1);
+        let carried =
+            if self.opts.carry_state { self.state.engine_state.as_ref() } else { None };
+        // Count only states `cluster_resume` will actually install (same
+        // effective-k/shape filter it applies), so the metric reflects
+        // real resumes rather than carry attempts.
+        let k_eff = self.rk.k.min(coreset.n()).max(1);
+        let resumed = carried
+            .map(|st| st.bounds_valid() && st.k() == k_eff && st.n() == coreset.n())
+            .unwrap_or(false);
+        if resumed {
+            self.metrics.counter("incremental.resumes").inc();
+        }
+        let (model, next_state) = coreset.cluster_resume(
+            &ClusterOpts::from_config(&self.rk),
+            Some(&self.state.centroids),
+            carried,
+        );
+        let mut model = model.with_version(self.state.version + 1);
         model.timings = StepTimings {
             step3_grid: step3,
             step4_cluster: t1.elapsed(),
@@ -309,6 +385,7 @@ impl IncrementalEngine {
         };
 
         self.state.centroids = model.centroids.clone();
+        self.state.engine_state = Some(next_state);
         self.state.version += 1;
         self.state.result = Arc::new(model.into_result());
         self.patches_since_rebuild += 1;
@@ -434,6 +511,7 @@ mod tests {
             max_patch_fraction: 1.0,
             rebuild_every: 0,
             max_join_churn: f64::INFINITY,
+            ..PlannerOpts::default()
         }
     }
 
@@ -611,6 +689,39 @@ mod tests {
         }
         assert_eq!(ham.result().step4_stats.bounds, "hamerly");
         assert_eq!(elk.result().step4_stats.bounds, "elkan");
+    }
+
+    #[test]
+    fn carried_engine_state_matches_cold_warm_start_bitwise() {
+        // The resumed Step 4 (carried assignments + bounds, spliced over
+        // each batch's grid edit) is a pure throughput artifact: a
+        // carry-enabled planner must publish bit-identical results to a
+        // carry-disabled one, batch after batch, inserts and deletes.
+        let (mut db, feq) = setup(250, 21);
+        let rk = RkConfig::new(4);
+        let m_carry = Metrics::new();
+        let mut carry =
+            IncrementalEngine::new(&db, feq.clone(), rk.clone(), lenient(), m_carry.clone())
+                .unwrap();
+        let cold_opts = PlannerOpts { carry_state: false, ..lenient() };
+        let mut cold = IncrementalEngine::new(&db, feq, rk, cold_opts, Metrics::new()).unwrap();
+        let mut rng = SplitMix64::new(77);
+        for round in 0..4usize {
+            let mut deltas = batch(&mut rng, 12);
+            if round > 0 {
+                // Mix in a delete so the splice log sees removals too.
+                let row = db.get("fact").unwrap().row(round);
+                deltas.push(TupleDelta::delete("fact", row));
+            }
+            apply_to_db(&mut db, &deltas).unwrap();
+            let (d1, r1) = carry.apply_batch(&db, &deltas).unwrap();
+            let (d2, r2) = cold.apply_batch(&db, &deltas).unwrap();
+            assert_eq!(d1, PlanDecision::Patched, "round {round}");
+            assert_eq!(d2, PlanDecision::Patched, "round {round}");
+            crate::util::testkit::assert_bitwise_result(&r1, &r2, &format!("round {round}"));
+        }
+        // The carry arm actually resumed (bounds survived at least once).
+        assert!(m_carry.counter("incremental.resumes").get() >= 1);
     }
 
     #[test]

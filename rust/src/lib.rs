@@ -42,7 +42,9 @@
 //!   internals ([`coreset`]), a streaming coordinator with backpressure
 //!   and incremental re-clustering ([`coordinator`]), true delta
 //!   maintenance of the grid coreset under tuple inserts/deletes
-//!   ([`incremental`]), synthetic workloads mirroring the paper's
+//!   ([`incremental`]), a persistent deterministic execution pool shared
+//!   by every Step-4 dispatch ([`util::exec`]), synthetic workloads
+//!   mirroring the paper's
 //!   Retailer / Favorita / Yelp datasets ([`synthetic`]) and the
 //!   paper-table bench harness ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the JAX weighted-Lloyd step,

@@ -25,7 +25,7 @@ use rkmeans::data::{csv, Value};
 use rkmeans::join::EmbedSpec;
 use rkmeans::rkmeans::{
     full_objective, materialize_and_cluster_capped, ClusterOpts, RkConfig, RkModel, RkPipeline,
-    SubspaceOpts,
+    SubspaceOpts, SweepMode,
 };
 #[cfg(feature = "pjrt")]
 use rkmeans::runtime::PjrtRuntime;
@@ -41,9 +41,10 @@ USAGE:
   rkmeans gen       --dataset <retailer|favorita|yelp> [--scale F] [--seed N] --out DIR
   rkmeans cluster   (--dataset NAME | --db DIR) --k K [--kappa κ] [--rho ρ] [--scale F]
                     [--seed N] [--engine native|xla] [--bounds auto|hamerly|elkan]
-                    [--precision f64|f32] [--eval-full] [--model-out FILE]
+                    [--precision f64|f32] [--threads N] [--eval-full] [--model-out FILE]
   rkmeans sweep     (--dataset NAME | --db DIR) [--ks K1,K2,...] [--kappa κ] [--scale F]
                     [--seed N] [--bounds auto|hamerly|elkan] [--precision f64|f32]
+                    [--threads N] [--ladder]
   rkmeans assign    --model FILE [--values \"v1,v2,...\"]
   rkmeans baseline  (--dataset NAME | --db DIR) --k K [--scale F] [--seed N] [--cap ROWS]
   rkmeans tables    [--which table1|table2|fig3|ablation-fd|ablation-sparse|kappa-sweep|all]
@@ -169,12 +170,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let rho = args.num("rho", 0.0f64)?; // §3 regularizer (atom penalty)
     let bounds = parse_bounds(args.get("bounds"))?;
     let precision = parse_precision(args.get("precision"))?;
+    let threads = args.num("threads", 0usize)?;
     let cfg = RkConfig::new(k)
         .with_kappa(kappa)
         .with_regularization(rho)
         .with_seed(seed)
         .with_bounds(bounds)
-        .with_precision(precision);
+        .with_precision(precision)
+        .with_threads(threads);
 
     let engine = args.get("engine").unwrap_or("native");
     let t0 = std::time::Instant::now();
@@ -237,9 +240,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .collect::<Result<Vec<usize>>>()?;
     let kappa = args.num("kappa", ks.iter().copied().max().unwrap_or(8))?;
     let seed = args.num("seed", 42u64)?;
+    let threads = args.num("threads", 0usize)?;
     let engine = EngineOpts::default()
         .with_bounds(parse_bounds(args.get("bounds"))?)
-        .with_precision(parse_precision(args.get("precision"))?);
+        .with_precision(parse_precision(args.get("precision"))?)
+        .with_threads(threads);
+    // Ladder mode: warm-start each k from the previous k's centroids
+    // (exactness vs. independent runs explicitly waived; see SweepMode).
+    let mode = if args.has("ladder") { SweepMode::Ladder } else { SweepMode::Independent };
 
     let t0 = std::time::Instant::now();
     let pipe = RkPipeline::plan(&db, &feq)?;
@@ -248,10 +256,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let coreset = pipe.coreset(&subspaces)?;
     let shared = t0.elapsed();
     println!(
-        "dataset {name}: shared steps 1–3 in {shared:?} (|G| = {} cells, κ = {kappa})",
-        human_count(coreset.n() as u64)
+        "dataset {name}: shared steps 1–3 in {shared:?} (|G| = {} cells, κ = {kappa}{})",
+        human_count(coreset.n() as u64),
+        if mode == SweepMode::Ladder { ", ladder seeding" } else { "" }
     );
-    for model in coreset.sweep(&ks, &ClusterOpts::new(0).with_seed(seed).with_engine(engine)) {
+    for model in
+        coreset.sweep_with(&ks, &ClusterOpts::new(0).with_seed(seed).with_engine(engine), mode)
+    {
         println!(
             "  k={:<4} objective={:.6e}  iters={:<3} step4={:?}",
             model.k(),

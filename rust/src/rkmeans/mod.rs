@@ -39,11 +39,13 @@ pub mod pipeline;
 
 pub use baseline::{materialize_and_cluster, materialize_and_cluster_capped, BaselineResult};
 pub use model::{RkModel, RKMODEL_FORMAT_VERSION};
-pub use pipeline::{ClusterOpts, Coreset, Marginals, RkPipeline, SubspaceOpts, SubspaceSet};
+pub use pipeline::{
+    ClusterOpts, Coreset, Marginals, RkPipeline, SubspaceOpts, SubspaceSet, SweepMode,
+};
 
 use crate::cluster::sparse_lloyd::CentroidCoord;
-use crate::cluster::{BoundsPolicy, Precision, PruneStats};
-use crate::coreset::{centroids_dense, eval_full_objective, SubspaceModel};
+use crate::cluster::{BoundsPolicy, ExecutorKind, Precision, PruneStats};
+use crate::coreset::{centroids_dense, eval_full_objective_with, SubspaceModel};
 use crate::data::Database;
 use crate::join::EmbedSpec;
 use crate::query::{Feq, Hypergraph, JoinTree};
@@ -74,6 +76,14 @@ pub struct RkConfig {
     /// reproducibility for ~2× kernel throughput; see
     /// [`crate::cluster::F32_OBJ_RTOL`]).
     pub precision: Precision,
+    /// Step-4 worker threads (`0` = auto). On the pool executor this
+    /// clamps the active workers per dispatch without resizing the
+    /// process-wide pool.
+    pub threads: usize,
+    /// Step-4 parallel-dispatch executor kind (persistent shared pool by
+    /// default; the scoped reference spawns workers per dispatch). Never
+    /// changes results, only dispatch overhead.
+    pub executor: ExecutorKind,
 }
 
 impl RkConfig {
@@ -88,6 +98,8 @@ impl RkConfig {
             regularization: 0.0,
             bounds: BoundsPolicy::Auto,
             precision: Precision::F64,
+            threads: 0,
+            executor: ExecutorKind::Pool,
         }
     }
 
@@ -130,6 +142,18 @@ impl RkConfig {
     /// Override the Step-4 distance-kernel precision.
     pub fn with_precision(mut self, precision: Precision) -> Self {
         self.precision = precision;
+        self
+    }
+
+    /// Override the Step-4 worker-thread clamp (`0` = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Override the Step-4 executor kind (pool vs. scoped reference).
+    pub fn with_executor(mut self, executor: ExecutorKind) -> Self {
+        self.executor = executor;
         self
     }
 
@@ -220,12 +244,27 @@ pub fn rkmeans_with_tree(
 }
 
 /// Evaluate an Rk-means result on the full (unmaterialized) join output —
-/// the "Relative Approx." numerator in the paper's Table 2.
+/// the "Relative Approx." numerator in the paper's Table 2. Scores with
+/// the f64 kernel; see [`full_objective_with`] for the f32 streaming
+/// scorer.
 pub fn full_objective(db: &Database, feq: &Feq, res: &RkResult) -> Result<f64> {
+    full_objective_with(db, feq, res, Precision::F64)
+}
+
+/// [`full_objective`] with an explicit streaming-scorer precision:
+/// [`Precision::F32`] routes the full-`X` pass through the f32 tile
+/// kernel (double the SIMD lanes) under the engine's
+/// [`crate::cluster::F32_OBJ_RTOL`] tolerance contract.
+pub fn full_objective_with(
+    db: &Database,
+    feq: &Feq,
+    res: &RkResult,
+    precision: Precision,
+) -> Result<f64> {
     let tree = Hypergraph::from_feq(db, feq).join_tree()?;
     let spec = EmbedSpec::from_feq(db, feq)?;
     let cents = centroids_dense(&res.centroids, &res.models, &spec);
-    eval_full_objective(db, feq, &tree, &spec, &cents)
+    eval_full_objective_with(db, feq, &tree, &spec, &cents, precision)
 }
 
 #[cfg(test)]

@@ -42,14 +42,18 @@
 
 use super::model::RkModel;
 use super::{RkConfig, StepTimings};
-use crate::cluster::sparse_lloyd::{SparseGrid, Subspace};
-use crate::cluster::{sparse_lloyd_warm_with, CentroidCoord, EngineOpts, LloydConfig};
+use crate::cluster::engine::factored::{centroid_from_cell, factored_dist2};
+use crate::cluster::sparse_lloyd::{cell_dist2, SparseGrid, Subspace};
+use crate::cluster::{
+    sparse_lloyd_resume_with, sparse_lloyd_warm_with, CentroidCoord, EngineOpts, EngineState,
+    LloydConfig,
+};
 use crate::coreset::{build_grid, solve_subspaces_regularized, SubspaceModel};
 use crate::data::Database;
 use crate::faq::{full_join_counts, marginals as faq_marginals, Marginal};
 use crate::join::ensure_acyclic;
 use crate::query::{Feq, Hypergraph, JoinTree};
-use crate::util::FxHashMap;
+use crate::util::{FxHashMap, SplitMix64};
 use anyhow::Result;
 use std::time::{Duration, Instant};
 
@@ -128,16 +132,21 @@ impl ClusterOpts {
     }
 
     /// The Step-4 options an [`RkConfig`] implies (the config's bounds
-    /// policy and kernel precision carry into the engine, so they also
-    /// flow through every warm-started path — the incremental planner's
-    /// `cluster_warm`, sweeps, the coordinator).
+    /// policy, kernel precision, thread clamp and executor kind carry
+    /// into the engine, so they also flow through every warm-started path
+    /// — the incremental planner's `cluster_warm`, sweeps, the
+    /// coordinator).
     pub fn from_config(cfg: &RkConfig) -> Self {
         ClusterOpts {
             k: cfg.k,
             max_iters: cfg.max_iters,
             tol: cfg.tol,
             seed: cfg.seed,
-            engine: EngineOpts::default().with_bounds(cfg.bounds).with_precision(cfg.precision),
+            engine: EngineOpts::default()
+                .with_bounds(cfg.bounds)
+                .with_precision(cfg.precision)
+                .with_threads(cfg.threads)
+                .with_executor(cfg.executor.executor()),
         }
     }
 
@@ -299,18 +308,154 @@ impl Coreset {
         )
     }
 
+    /// [`Coreset::cluster_warm`] with cross-run state carry: always
+    /// returns the run's carryable
+    /// [`EngineState`](crate::cluster::EngineState) alongside the model,
+    /// and accepts the previous run's state so the warm-started Step 4
+    /// reuses its assignments and bounds instead of a full first scan
+    /// (the incremental planner's patch path, after splicing the state
+    /// across the grid edit). The model is bitwise-identical to
+    /// [`Coreset::cluster_warm`] with the same arguments.
+    ///
+    /// Resume rides on the warm start: the state is dropped (cold warm
+    /// start) when the effective k or the cell count no longer match it —
+    /// but a state whose centroid hash disagrees with the actual starting
+    /// centroids is a caller bug and panics loudly in the engine.
+    pub fn cluster_resume(
+        &self,
+        opts: &ClusterOpts,
+        init: Option<&[Vec<CentroidCoord>]>,
+        state: Option<&EngineState>,
+    ) -> (RkModel, EngineState) {
+        let t0 = Instant::now();
+        let k_eff = opts.k.min(self.grid.n()).max(1);
+        let state = state.filter(|st| st.k() == k_eff && st.n() == self.grid.n());
+        let (res, stats, next) = sparse_lloyd_resume_with(
+            &self.grid,
+            &self.subspaces,
+            &opts.lloyd(),
+            &opts.engine,
+            init,
+            state,
+        );
+        let mut timings = self.timings123.clone();
+        timings.step4_cluster = t0.elapsed();
+        let model = RkModel::assemble(
+            self.models.clone(),
+            res.centroids,
+            res.objective,
+            self.quantization_cost(),
+            self.grid.n(),
+            self.mass(),
+            res.iters,
+            timings,
+            stats,
+            0,
+        );
+        (model, next)
+    }
+
     /// k-sweep over the shared coreset (paper Table 2): one model per k,
     /// each identical to an independent full-pipeline run at that k —
     /// but Steps 1–3 are paid once, not `ks.len()` times. `opts.k` is
-    /// ignored; every other option applies to each run.
+    /// ignored; every other option applies to each run. Equivalent to
+    /// [`Coreset::sweep_with`] in [`SweepMode::Independent`].
     pub fn sweep(&self, ks: &[usize], opts: &ClusterOpts) -> Vec<RkModel> {
-        ks.iter()
-            .map(|&k| {
-                let o = ClusterOpts { k, ..opts.clone() };
-                self.cluster(&o)
-            })
-            .collect()
+        self.sweep_with(ks, opts, SweepMode::Independent)
     }
+
+    /// [`Coreset::sweep`] with an explicit [`SweepMode`].
+    /// [`SweepMode::Ladder`] warm-starts each k from the previous model's
+    /// centroids (plus a k-means++-style D² fill for the new slots) via
+    /// the existing [`Coreset::cluster_warm`] plumbing — typically far
+    /// fewer Lloyd iterations per k, at the cost of the
+    /// exactness-vs-independent-runs contract (see [`SweepMode`]).
+    pub fn sweep_with(&self, ks: &[usize], opts: &ClusterOpts, mode: SweepMode) -> Vec<RkModel> {
+        let mut out: Vec<RkModel> = Vec::with_capacity(ks.len());
+        let mut prev: Option<Vec<Vec<CentroidCoord>>> = None;
+        for &k in ks {
+            let o = ClusterOpts { k, ..opts.clone() };
+            let model = match (&mode, &prev) {
+                (SweepMode::Ladder, Some(p)) if p.len() <= k && !p.is_empty() => {
+                    let init = ladder_seed(&self.grid, &self.subspaces, p, k, o.seed);
+                    self.cluster_warm(&o, Some(&init))
+                }
+                _ => self.cluster(&o),
+            };
+            if mode == SweepMode::Ladder {
+                prev = Some(model.centroids.clone());
+            }
+            out.push(model);
+        }
+        out
+    }
+}
+
+/// How [`Coreset::sweep_with`] seeds each k.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Fresh k-means++ seeding per k: every swept model is
+    /// **bitwise-identical** to an independent full-pipeline run at that
+    /// k (the exactness contract `tests/staged_pipeline.rs` pins).
+    #[default]
+    Independent,
+    /// Warm-started ladder: each k seeds from the previous k's converged
+    /// centroids, with the remaining slots filled by D² (k-means++-style)
+    /// sampling over the grid. Cuts sweep time when `ks` is ascending
+    /// (e.g. k = 2i seeded from k = i), but the
+    /// exactness-vs-independent-runs contract is **explicitly waived**:
+    /// a laddered model generally differs (usually for the better at
+    /// equal iteration budgets) from a fresh run at the same k. A k
+    /// smaller than its predecessor falls back to fresh seeding.
+    Ladder,
+}
+
+/// D² fill for the ladder sweep: carry `prev` (≤ k centroids) and sample
+/// the remaining slots k-means++-style over the grid cells (a cell enters
+/// as its indicator-coefficient centroid, exactly like engine seeding and
+/// reseeds).
+fn ladder_seed(
+    grid: &SparseGrid,
+    subspaces: &[Subspace],
+    prev: &[Vec<CentroidCoord>],
+    k: usize,
+    seed: u64,
+) -> Vec<Vec<CentroidCoord>> {
+    let n = grid.n();
+    let mut cents = prev.to_vec();
+    cents.truncate(k.min(n));
+    let mut rng = SplitMix64::new(seed);
+    // Distance of every cell to its nearest carried centroid: a cell is
+    // an indicator-coefficient centroid, so the factored metric applies.
+    let mut mind: Vec<f64> = (0..n)
+        .map(|i| {
+            let cell = centroid_from_cell(grid, subspaces, i);
+            cents
+                .iter()
+                .map(|c| factored_dist2(&cell, c, subspaces))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    while cents.len() < k.min(n) {
+        let scores: Vec<f64> = mind.iter().zip(&grid.weights).map(|(&d, &w)| d * w).collect();
+        let total: f64 = scores.iter().sum();
+        let next = if total > 0.0 {
+            rng.weighted_index(&scores, total)
+        } else {
+            // All residual mass already covered (duplicate-heavy grids):
+            // fall back to weight sampling.
+            let tw: f64 = grid.weights.iter().sum();
+            rng.weighted_index(&grid.weights, tw)
+        };
+        cents.push(centroid_from_cell(grid, subspaces, next));
+        for i in 0..n {
+            let dd = cell_dist2(grid, subspaces, i, next);
+            if dd < mind[i] {
+                mind[i] = dd;
+            }
+        }
+    }
+    cents
 }
 
 /// The staged pipeline handle: a validated FEQ plus its join tree (with
@@ -518,6 +663,67 @@ mod tests {
         for (&k, model) in ks.iter().zip(&swept) {
             let solo = rkmeans(&db, &feq, &RkConfig::new(k).with_kappa(kappa)).unwrap();
             assert_bitwise_result(&solo, &model.clone().into_result(), &format!("k={k}"));
+        }
+    }
+
+    #[test]
+    fn cluster_resume_matches_cluster_warm_bitwise() {
+        let (db, feq) = setup(240, 6);
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        let coreset = pipe.coreset(&subspaces).unwrap();
+        let opts = ClusterOpts::new(3);
+
+        // Cold: resume with no state is exactly cluster().
+        let (m0, st0) = coreset.cluster_resume(&opts, None, None);
+        let base = coreset.cluster(&opts);
+        assert_bitwise_result(&base.into_result(), &m0.clone().into_result(), "cold");
+
+        // Warm continue: carried state is bitwise-identical to the cold
+        // warm start from the same centroids.
+        let warm = coreset.cluster_warm(&opts, Some(&m0.centroids));
+        let (resumed, st1) = coreset.cluster_resume(&opts, Some(&m0.centroids), Some(&st0));
+        assert_bitwise_result(&warm.into_result(), &resumed.clone().into_result(), "resumed");
+        assert_eq!(st1.n(), coreset.n());
+
+        // A k mismatch drops the state (resume rides on the warm start):
+        // identical to the fresh run at the new k, no panic.
+        let opts4 = ClusterOpts::new(4);
+        let (fresh4, _) = coreset.cluster_resume(&opts4, Some(&resumed.centroids), Some(&st1));
+        let base4 = coreset.cluster(&opts4);
+        assert_bitwise_result(&base4.into_result(), &fresh4.into_result(), "k-mismatch");
+    }
+
+    #[test]
+    fn ladder_sweep_seeds_from_previous_k() {
+        let (db, feq) = setup(220, 8);
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(5)).unwrap();
+        let coreset = pipe.coreset(&subspaces).unwrap();
+        let ks = [2usize, 4, 8];
+        let opts = ClusterOpts::new(0);
+        let ladder = coreset.sweep_with(&ks, &opts, SweepMode::Ladder);
+        let fresh = coreset.sweep(&ks, &opts);
+        assert_eq!(ladder.len(), ks.len());
+        for (l, f) in ladder.iter().zip(&fresh) {
+            assert_eq!(l.k(), f.k());
+            assert!(l.objective_grid.is_finite() && l.objective_grid >= 0.0);
+        }
+        // The first rung has no predecessor: bitwise-identical to fresh
+        // seeding (the waiver only applies from the second rung on).
+        assert_eq!(ladder[0].objective_grid.to_bits(), fresh[0].objective_grid.to_bits());
+        // Growing k from the previous rung's converged centroids plus a
+        // D² fill can only improve the objective (superset of centroids,
+        // then monotone Lloyd).
+        for w in ladder.windows(2) {
+            assert!(
+                w[1].objective_grid <= w[0].objective_grid * (1.0 + 1e-6),
+                "ladder objective rose: {} -> {}",
+                w[0].objective_grid,
+                w[1].objective_grid
+            );
         }
     }
 

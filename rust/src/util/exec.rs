@@ -1,0 +1,367 @@
+//! Persistent deterministic execution pool for chunked parallel work.
+//!
+//! The Step-4 engines, the streaming
+//! [`CentroidScorer`](crate::cluster::CentroidScorer) and the
+//! `coordinator` worker all run
+//! the same shape of job: a slice of independent work items, each mutated
+//! in place, with results read back **in item order** by the caller so the
+//! output never depends on scheduling (the engine's determinism contract).
+//! Before this module, every such job spawned scoped `std::thread` workers
+//! — tens of microseconds of spawn/join per Lloyd iteration, a real
+//! fraction of per-iteration time in the small-`|G|`, many-iteration and
+//! streaming-patch regimes the grid coreset creates.
+//!
+//! [`ExecPool`] keeps the workers alive instead: jobs are handed to the
+//! same threads over and over through an epoch-counted condvar handshake.
+//! The work-distribution discipline is identical to the scoped executor
+//! (an atomic cursor over the item list; items mutated in place), so a
+//! pooled dispatch is **bitwise identical** to a scoped or serial one —
+//! the pool only changes *who* computes an item, never the arithmetic or
+//! the reduction order. `tests/property_engine.rs` pins pooled ≡ scoped ≡
+//! serial for both engines.
+//!
+//! One process-wide pool ([`shared_pool`]) is created lazily at the
+//! machine's parallelism (honoring `RKMEANS_THREADS`) and shared by every
+//! default-configured engine, scorer and coordinator job; per-job
+//! `threads` requests clamp the number of *active* workers without
+//! resizing the pool. Concurrent submitters serialize on the pool (one
+//! job at a time), which doubles as oversubscription control when the
+//! coordinator worker and a foreground sweep share the machine.
+//!
+//! Do **not** submit a job from inside a pool worker (the submit lock is
+//! not reentrant); the engines never nest dispatches.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Lock ignoring poisoning: the pool's shared state is managed through
+/// explicit fields (and payload panics are re-raised at the submitter),
+/// so a poisoned mutex carries no extra information — and must not brick
+/// the process-wide shared pool.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Resolve a worker-thread count (0 = auto: `RKMEANS_THREADS` env var,
+/// else the machine's available parallelism).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("RKMEANS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Type-erased job body: `f(worker_index)` pulls work items off the job's
+/// atomic cursor until it is exhausted. The pointer is only dereferenced
+/// between the epoch bump and the all-workers acknowledgement, while the
+/// submitting stack frame (which owns the closure) is blocked.
+#[derive(Clone, Copy)]
+struct Task(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-call safe) and the submitter keeps
+// it alive for the whole handshake (see `Task` docs).
+unsafe impl Send for Task {}
+
+struct Ctrl {
+    /// Bumped once per job; workers run each epoch exactly once.
+    epoch: u64,
+    /// Workers with index < `active` execute the task; the rest just
+    /// acknowledge the epoch.
+    active: usize,
+    task: Option<Task>,
+    /// Workers yet to acknowledge the current epoch.
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    start: Condvar,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+fn worker(idx: usize, shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let (task, active) = {
+            let mut c = lock_unpoisoned(&shared.ctrl);
+            loop {
+                if c.shutdown {
+                    return;
+                }
+                if c.epoch != seen {
+                    break;
+                }
+                c = shared.start.wait(c).unwrap_or_else(|e| e.into_inner());
+            }
+            seen = c.epoch;
+            (c.task.expect("task set for live epoch"), c.active)
+        };
+        if idx < active {
+            // Keep the worker alive across payload panics; the submitter
+            // re-raises after the job completes.
+            let f = unsafe { &*task.0 };
+            if catch_unwind(AssertUnwindSafe(|| f(idx))).is_err() {
+                shared.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+        let mut c = lock_unpoisoned(&shared.ctrl);
+        c.remaining -= 1;
+        if c.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A persistent pool of worker threads executing chunked jobs with the
+/// engine's deterministic work-distribution discipline (see module docs).
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    /// Serializes submitters: one job owns the workers at a time.
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    dispatches: AtomicU64,
+}
+
+impl ExecPool {
+    /// Spawn a pool of `threads` workers (0 = auto via
+    /// [`resolve_threads`]). A single-thread pool spawns no workers and
+    /// runs every job serially on the caller.
+    pub fn new(threads: usize) -> Arc<ExecPool> {
+        let threads = resolve_threads(threads);
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                epoch: 0,
+                active: 0,
+                task: None,
+                remaining: 0,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = if threads > 1 {
+            (0..threads)
+                .map(|idx| {
+                    let s = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("rk-exec-{idx}"))
+                        .spawn(move || worker(idx, &s))
+                        .expect("spawn exec pool worker")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Arc::new(ExecPool {
+            shared,
+            submit: Mutex::new(()),
+            handles,
+            threads,
+            dispatches: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of worker threads the pool was sized for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Parallel dispatches executed so far (serial fast-path jobs are not
+    /// counted) — the `PruneStats::pool_dispatches` feed.
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(index, &mut works[index])` once for every work item,
+    /// spreading items over at most `threads` pool workers (0 = the whole
+    /// pool) via an atomic cursor. Items are mutated in place, so the
+    /// caller reads results back in item order — scheduling never affects
+    /// the output. Returns `true` when the job was dispatched to the pool
+    /// (vs. the serial fast path). Panics in `f` are re-raised here after
+    /// every worker has finished the job.
+    pub fn run_chunks<W, F>(&self, works: &mut [W], threads: usize, f: F) -> bool
+    where
+        W: Send,
+        F: Fn(usize, &mut W) + Sync,
+    {
+        let requested = if threads == 0 { self.threads } else { threads };
+        let t = requested.min(self.threads).min(works.len());
+        if t <= 1 || self.handles.is_empty() {
+            for (i, w) in works.iter_mut().enumerate() {
+                f(i, w);
+            }
+            return false;
+        }
+
+        let next = AtomicUsize::new(0);
+        // Each index is claimed exactly once, so the per-item locks are
+        // uncontended; they only exist to hand `&mut W` across threads.
+        let cells: Vec<Mutex<&mut W>> = works.iter_mut().map(Mutex::new).collect();
+        let body = |_worker: usize| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= cells.len() {
+                break;
+            }
+            let mut guard = cells[i].lock().expect("chunk lock");
+            f(i, &mut **guard);
+        };
+        let task = Task(&body as &(dyn Fn(usize) + Sync) as *const (dyn Fn(usize) + Sync));
+
+        let _submit = lock_unpoisoned(&self.submit);
+        {
+            let mut c = lock_unpoisoned(&self.shared.ctrl);
+            c.epoch += 1;
+            c.active = t;
+            c.task = Some(task);
+            c.remaining = self.handles.len();
+            self.shared.start.notify_all();
+            while c.remaining > 0 {
+                c = self.shared.done.wait(c).unwrap_or_else(|e| e.into_inner());
+            }
+            c.task = None;
+        }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("ExecPool worker panicked during a chunk dispatch");
+        }
+        true
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut c = lock_unpoisoned(&self.shared.ctrl);
+            c.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ExecPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecPool")
+            .field("threads", &self.threads)
+            .field("dispatches", &self.dispatches())
+            .finish()
+    }
+}
+
+/// The process-wide shared pool: created lazily at the machine's
+/// parallelism (honoring `RKMEANS_THREADS` at first use), then reused by
+/// every default-configured engine, scorer and coordinator job for the
+/// rest of the process. Per-job `threads` limits apply at dispatch time.
+pub fn shared_pool() -> Arc<ExecPool> {
+    static SHARED: OnceLock<Arc<ExecPool>> = OnceLock::new();
+    Arc::clone(SHARED.get_or_init(|| ExecPool::new(0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visits_every_item_exactly_once() {
+        let pool = ExecPool::new(4);
+        let mut works: Vec<u32> = vec![0; 137];
+        let parallel = pool.run_chunks(&mut works, 4, |i, w| *w += i as u32 + 1);
+        assert!(parallel);
+        for (i, w) in works.iter().enumerate() {
+            assert_eq!(*w, i as u32 + 1);
+        }
+        assert_eq!(pool.dispatches(), 1);
+    }
+
+    #[test]
+    fn serial_fast_paths() {
+        // Single item, single requested thread, and a 1-thread pool all
+        // run on the caller without a dispatch.
+        let pool = ExecPool::new(4);
+        let mut one = [7u32];
+        assert!(!pool.run_chunks(&mut one, 4, |_, w| *w += 1));
+        assert_eq!(one[0], 8);
+        let mut works = vec![0u32; 10];
+        assert!(!pool.run_chunks(&mut works, 1, |i, w| *w = i as u32));
+        assert_eq!(works[9], 9);
+
+        let single = ExecPool::new(1);
+        let mut works = vec![0u32; 10];
+        assert!(!single.run_chunks(&mut works, 0, |i, w| *w = i as u32 * 2));
+        assert_eq!(works[5], 10);
+        assert_eq!(single.dispatches(), 0);
+    }
+
+    #[test]
+    fn reusable_across_many_jobs() {
+        let pool = ExecPool::new(3);
+        let mut works: Vec<u64> = vec![0; 64];
+        for round in 1..=50u64 {
+            pool.run_chunks(&mut works, 0, |_, w| *w += round);
+        }
+        let want: u64 = (1..=50).sum();
+        assert!(works.iter().all(|&w| w == want));
+        assert_eq!(pool.dispatches(), 50);
+    }
+
+    #[test]
+    fn active_worker_clamp_does_not_change_results() {
+        let pool = ExecPool::new(8);
+        let mut base: Vec<u32> = (0..500).collect();
+        pool.run_chunks(&mut base, 2, |i, w| *w = w.wrapping_mul(31).wrapping_add(i as u32));
+        for t in [3usize, 8, 64] {
+            let mut works: Vec<u32> = (0..500).collect();
+            pool.run_chunks(&mut works, t, |i, w| {
+                *w = w.wrapping_mul(31).wrapping_add(i as u32)
+            });
+            assert_eq!(works, base, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ExecPool::new(2);
+        let mut works = vec![0u32; 8];
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(&mut works, 2, |i, _| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must reach the submitter");
+        // The pool stays usable after a payload panic.
+        let mut works = vec![0u32; 8];
+        assert!(pool.run_chunks(&mut works, 2, |i, w| *w = i as u32));
+        assert_eq!(works[7], 7);
+    }
+
+    #[test]
+    fn shared_pool_is_a_singleton() {
+        let a = shared_pool();
+        let b = shared_pool();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+
+    #[test]
+    fn thread_resolution_prefers_explicit() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

@@ -1,13 +1,16 @@
 //! Small self-contained utilities: a seedable RNG, Zipf sampling, timers,
 //! a minimal JSON reader/writer (the environment is offline, so we avoid
-//! external crates), and a tiny property-testing harness.
+//! external crates), a tiny property-testing harness, and the persistent
+//! deterministic execution pool ([`exec`]) shared by the Step-4 engines.
 
+pub mod exec;
 pub mod fx;
 pub mod json;
 pub mod rng;
 pub mod testkit;
 pub mod timer;
 
+pub use exec::{shared_pool, ExecPool};
 pub use fx::{FxHashMap, FxHashSet};
 pub use rng::{SplitMix64, Zipf};
 pub use timer::Stopwatch;

@@ -11,16 +11,17 @@
 //! equality properties through the f32 kernels (the CI matrix's
 //! f32-precision leg).
 
-use rkmeans::cluster::engine::dense::lloyd_dense_init;
+use rkmeans::cluster::engine::dense::{lloyd_dense_init, lloyd_dense_resume};
 use rkmeans::cluster::engine::CHUNK;
 use rkmeans::cluster::sparse_lloyd::{Components, SparseGrid, Subspace};
 use rkmeans::cluster::{
-    sparse_lloyd_warm_with, sparse_lloyd_with, weighted_lloyd_with, BoundsPolicy, CentroidCoord,
-    EngineOpts, LloydConfig, Precision, F32_OBJ_RTOL,
+    sparse_lloyd_resume_with, sparse_lloyd_warm_with, sparse_lloyd_with, weighted_lloyd_with,
+    BoundsPolicy, CentroidCoord, EngineOpts, Executor, LloydConfig, Precision, F32_OBJ_RTOL,
 };
 use rkmeans::join::{materialize, EmbedSpec};
 use rkmeans::query::Hypergraph;
 use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::util::exec::ExecPool;
 use rkmeans::util::testkit::for_cases;
 use rkmeans::util::SplitMix64;
 
@@ -339,6 +340,195 @@ fn f32_objective_within_tolerance_on_paper_traces() {
             r64.objective
         );
     }
+}
+
+#[test]
+fn pooled_executor_equals_scoped_bitwise() {
+    // The persistent pool is a pure dispatch mechanism: for every thread
+    // count it must reduce to the same bits as the scoped-spawn executor,
+    // dense and factored.
+    for_cases(8, |rng| {
+        let n = 40 + rng.below(600) as usize;
+        let d = 1 + rng.below(5) as usize;
+        let k = 1 + rng.below(8) as usize;
+        let (pts, w) = dense_input(rng, n, d);
+        let iters = 1 + rng.below(8) as usize;
+        let cfg = LloydConfig { k, max_iters: iters, tol: 0.0, seed: rng.next_u64() };
+        let scoped =
+            env_precision(EngineOpts::pruned().with_executor(Executor::Scoped).with_threads(4));
+        let (a, sa) = weighted_lloyd_with(&pts, &w, d, &cfg, &scoped);
+        assert_eq!(sa.executor, "scoped");
+        assert_eq!(sa.pool_dispatches, 0);
+        let (grid, subs) = grid_input(rng, n);
+        let (fa, _) = sparse_lloyd_with(&grid, &subs, &cfg, &scoped);
+        for t in [2usize, 4, 8] {
+            let pool = ExecPool::new(t);
+            let pooled = env_precision(
+                EngineOpts::pruned().with_executor(Executor::Pool(pool)).with_threads(t),
+            );
+            let (b, sb) = weighted_lloyd_with(&pts, &w, d, &cfg, &pooled);
+            assert_eq!(a.assign, b.assign, "threads={t}");
+            assert_eq!(a.centroids, b.centroids, "threads={t}");
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "threads={t}");
+            assert_eq!(a.iters, b.iters, "threads={t}");
+            assert_eq!(sb.executor, "pool");
+            let (fb, _) = sparse_lloyd_with(&grid, &subs, &cfg, &pooled);
+            assert_eq!(fa.assign, fb.assign, "factored threads={t}");
+            assert_eq!(fa.objective.to_bits(), fb.objective.to_bits(), "factored threads={t}");
+            assert_factored_centroids_equal(&fa.centroids, &fb.centroids);
+        }
+    });
+}
+
+#[test]
+fn shared_pool_multi_chunk_thread_count_invariant() {
+    // Cross the CHUNK boundary on the default (shared-pool) executor so
+    // real parallel pool dispatches happen, for every thread clamp.
+    let mut rng = SplitMix64::new(0xDEC0);
+    let n = CHUNK + 901;
+    let d = 3;
+    let (pts, w) = dense_input(&mut rng, n, d);
+    let cfg = LloydConfig { k: 6, max_iters: 5, tol: 0.0, seed: 31 };
+    let (base, _) = weighted_lloyd_with(&pts, &w, d, &cfg, &EngineOpts::naive_serial());
+    for threads in [1usize, 2, 3, 8] {
+        let opts = EngineOpts::pruned().with_threads(threads);
+        let (r, stats) = weighted_lloyd_with(&pts, &w, d, &cfg, &opts);
+        assert_eq!(base.assign, r.assign, "threads={threads}");
+        assert_eq!(base.centroids, r.centroids, "threads={threads}");
+        assert_eq!(base.objective.to_bits(), r.objective.to_bits(), "threads={threads}");
+        assert_eq!(stats.executor, "pool", "threads={threads}");
+    }
+}
+
+#[test]
+fn dense_resume_equals_cold_warm_start_bitwise() {
+    // Carrying the EngineState across runs is a pure throughput artifact:
+    // a resumed warm start must produce identical bits to the cold warm
+    // start from the same centroids, for both bounds policies.
+    for_cases(8, |rng| {
+        let n = 60 + rng.below(400) as usize;
+        let d = 1 + rng.below(5) as usize;
+        let k = 2 + rng.below(6) as usize;
+        let (pts, w) = dense_input(rng, n, d);
+        for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+            let opts = env_precision(EngineOpts::pruned().with_bounds(bounds).with_threads(3));
+            let cfg1 = LloydConfig { k, max_iters: 4, tol: 0.0, seed: rng.next_u64() };
+            let (r1, _, st) = lloyd_dense_resume(&pts, &w, d, &cfg1, &opts, None, None);
+            let cfg2 = LloydConfig { max_iters: 5, ..cfg1.clone() };
+            let (cold, sc, _) =
+                lloyd_dense_resume(&pts, &w, d, &cfg2, &opts, Some(&r1.centroids), None);
+            let (res, sr, _) =
+                lloyd_dense_resume(&pts, &w, d, &cfg2, &opts, Some(&r1.centroids), Some(&st));
+            assert_eq!(cold.assign, res.assign, "{bounds:?}");
+            assert_eq!(cold.centroids, res.centroids, "{bounds:?}");
+            assert_eq!(cold.objective.to_bits(), res.objective.to_bits(), "{bounds:?}");
+            assert_eq!(cold.iters, res.iters, "{bounds:?}");
+            // Both runs report the same shape of work, whatever the skip
+            // sets did (the cold/resumed split is a throughput detail).
+            assert_eq!(sc.points, sr.points, "{bounds:?}");
+            assert_eq!(sc.iters, sr.iters, "{bounds:?}");
+        }
+    });
+}
+
+#[test]
+fn factored_resume_equals_cold_warm_start_bitwise() {
+    for_cases(8, |rng| {
+        let n = 40 + rng.below(400) as usize;
+        let (grid, subs) = grid_input(rng, n);
+        let k = 2 + rng.below(6) as usize;
+        for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+            let opts = env_precision(EngineOpts::pruned().with_bounds(bounds).with_threads(3));
+            let cfg1 = LloydConfig { k, max_iters: 4, tol: 0.0, seed: rng.next_u64() };
+            let (r1, _, st) = sparse_lloyd_resume_with(&grid, &subs, &cfg1, &opts, None, None);
+            let cfg2 = LloydConfig { max_iters: 5, ..cfg1.clone() };
+            let (cold, _, _) = sparse_lloyd_resume_with(
+                &grid,
+                &subs,
+                &cfg2,
+                &opts,
+                Some(&r1.centroids),
+                None,
+            );
+            let (res, _, _) = sparse_lloyd_resume_with(
+                &grid,
+                &subs,
+                &cfg2,
+                &opts,
+                Some(&r1.centroids),
+                Some(&st),
+            );
+            assert_eq!(cold.assign, res.assign, "{bounds:?}");
+            assert_eq!(cold.objective.to_bits(), res.objective.to_bits(), "{bounds:?}");
+            assert_eq!(cold.iters, res.iters, "{bounds:?}");
+            assert_factored_centroids_equal(&cold.centroids, &res.centroids);
+        }
+    });
+}
+
+#[test]
+fn resume_survives_reseed_heavy_runs() {
+    // Duplicate-heavy inputs with k above the distinct-location count
+    // force reseeds; a state captured from such a run (often with
+    // invalidated bounds) must still resume to the cold warm start's
+    // exact bits for both policies.
+    for_cases(8, |rng| {
+        let d = 1 + rng.below(3) as usize;
+        let distinct = 2 + rng.below(3) as usize;
+        let k = distinct + 1 + rng.below(3) as usize;
+        let centers: Vec<f64> = (0..distinct * d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        let n = 40 + rng.below(150) as usize;
+        let mut pts = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let b = rng.below(distinct as u64) as usize;
+            pts.extend_from_slice(&centers[b * d..(b + 1) * d]);
+        }
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        for bounds in [BoundsPolicy::Hamerly, BoundsPolicy::Elkan] {
+            let opts = env_precision(EngineOpts::pruned().with_bounds(bounds).with_threads(3));
+            let cfg1 = LloydConfig { k, max_iters: 5, tol: 0.0, seed: rng.next_u64() };
+            let (r1, _, st) = lloyd_dense_resume(&pts, &w, d, &cfg1, &opts, None, None);
+            let cfg2 = LloydConfig { max_iters: 4, ..cfg1.clone() };
+            let (cold, _, _) =
+                lloyd_dense_resume(&pts, &w, d, &cfg2, &opts, Some(&r1.centroids), None);
+            let (res, _, _) =
+                lloyd_dense_resume(&pts, &w, d, &cfg2, &opts, Some(&r1.centroids), Some(&st));
+            assert_eq!(cold.assign, res.assign, "{bounds:?}");
+            assert_eq!(cold.centroids, res.centroids, "{bounds:?}");
+            assert_eq!(cold.objective.to_bits(), res.objective.to_bits(), "{bounds:?}");
+        }
+    });
+}
+
+#[test]
+#[should_panic(expected = "stale EngineState")]
+fn dense_stale_state_is_rejected_loudly() {
+    let mut rng = SplitMix64::new(0x51A1E);
+    let (pts, w) = dense_input(&mut rng, 200, 3);
+    let cfg = LloydConfig { k: 3, max_iters: 4, tol: 0.0, seed: 1 };
+    let opts = EngineOpts::pruned();
+    let (r, _, st) = lloyd_dense_resume(&pts, &w, 3, &cfg, &opts, None, None);
+    // Perturbed centroids: the state's hash no longer matches the run's
+    // starting point — silently proceeding could corrupt bounds.
+    let mut stale = r.centroids.clone();
+    stale[0] += 0.5;
+    let _ = lloyd_dense_resume(&pts, &w, 3, &cfg, &opts, Some(&stale), Some(&st));
+}
+
+#[test]
+#[should_panic(expected = "stale EngineState")]
+fn factored_stale_state_is_rejected_loudly() {
+    let mut rng = SplitMix64::new(0x51A1F);
+    let (grid, subs) = grid_input(&mut rng, 120);
+    let cfg = LloydConfig { k: 3, max_iters: 4, tol: 0.0, seed: 2 };
+    let opts = EngineOpts::pruned();
+    let (r, _, st) = sparse_lloyd_resume_with(&grid, &subs, &cfg, &opts, None, None);
+    let mut stale = r.centroids.clone();
+    match &mut stale[0][0] {
+        CentroidCoord::Continuous(x) => *x += 0.5,
+        CentroidCoord::Categorical(beta) => beta[0] += 0.5,
+    }
+    let _ = sparse_lloyd_resume_with(&grid, &subs, &cfg, &opts, Some(&stale), Some(&st));
 }
 
 #[test]
