@@ -1,9 +1,10 @@
 //! Bench gate — the CI regression check over the bench trajectory
 //! (ROADMAP "bench trajectory in CI" item).
 //!
-//! Reads `BENCH_lloyd.json`, `BENCH_stream.json` and `BENCH_sweep.json`
-//! (as emitted by the smoke runs of `kernel_lloyd`, `stream_ingest` and
-//! `k_sweep` earlier in the CI job) plus the committed baseline
+//! Reads `BENCH_lloyd.json`, `BENCH_stream.json`, `BENCH_sweep.json`
+//! and `BENCH_shard.json` (as emitted by the smoke runs of
+//! `kernel_lloyd`, `stream_ingest`, `k_sweep` and `shard_build`
+//! earlier in the CI job) plus the committed baseline
 //! `bench_baseline.json`, and **fails (exit 1)** when a tracked
 //! throughput metric regresses more than the baseline's tolerance
 //! (default 20 %) below its committed value:
@@ -18,13 +19,17 @@
 //!   start, guarding the planner's patched-path ratio;
 //! * `sweep_shared_coreset_speedup` — `speedup_vs_independent` of the
 //!   shared-coreset sweep record (also a ratio: one coreset + per-k
-//!   Step 4 vs the full pipeline per k).
+//!   Step 4 vs the full pipeline per k);
+//! * `shard_build_speedup` — `speedup_vs_serial` of the `sharded-max`
+//!   shard record: parallel Step-3 grid construction at S = available
+//!   cores vs. the serial build (a ratio; grids are asserted
+//!   bitwise-identical by the emitting bench, so only speed is gated).
 //!
 //! Baseline values are calibrated for the `--test` smoke shapes and set
 //! conservatively; raise them as the engines get faster so the trajectory
 //! ratchets. Env overrides: `RKMEANS_BASELINE`, `RKMEANS_BENCH_OUT`,
-//! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT` (same paths the emitting
-//! benches use).
+//! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT`, `RKMEANS_SHARD_OUT` (same
+//! paths the emitting benches use).
 
 use rkmeans::util::json::{parse, Json};
 use std::path::PathBuf;
@@ -54,6 +59,7 @@ fn main() {
     let lloyd_path = env_path("RKMEANS_BENCH_OUT", "BENCH_lloyd.json");
     let stream_path = env_path("RKMEANS_STREAM_OUT", "BENCH_stream.json");
     let sweep_path = env_path("RKMEANS_SWEEP_OUT", "BENCH_sweep.json");
+    let shard_path = env_path("RKMEANS_SHARD_OUT", "BENCH_shard.json");
 
     let mut failures: Vec<String> = Vec::new();
     let baseline = match read_json(&baseline_path) {
@@ -123,6 +129,18 @@ fn main() {
             gate(
                 "sweep_shared_coreset_speedup",
                 rec.and_then(|r| r.get("speedup_vs_independent")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    match read_json(&shard_path) {
+        Ok(doc) => {
+            let rec = find_record(&doc, &[("mode", "sharded-max")]);
+            gate(
+                "shard_build_speedup",
+                rec.and_then(|r| r.get("speedup_vs_serial")).and_then(|v| v.as_f64()),
                 &mut failures,
             );
         }

@@ -1,0 +1,133 @@
+//! Bench W2 — sharded Step 1–3 construction: `coreset_sharded` (value-
+//! hashed fact partition, per-shard counting-FAQ grids merged by exact
+//! ring-ℤ addition) vs. the serial staged build. Steps 1–2 (marginals +
+//! subspace solve) are timed once and shared by every arm — the sharded
+//! path parallelizes Step 3 only — and every sharded grid is asserted
+//! **bitwise-identical** to the serial one before a record is emitted,
+//! so the speedup is pure parallelism, not approximation. Results are
+//! written as one `BENCH_shard.json` document (schema: see
+//! `bench_harness` docs; path override: `RKMEANS_SHARD_OUT`).
+//! Acceptance target: `sharded-max` Step 3 ≥ 2× faster than serial on
+//! the Retailer workload at S = available cores.
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_SHARD_SCALE` overrides the Retailer scale (default 0.1).
+
+use rkmeans::bench_harness::{write_bench_shard, ShardBenchRecord};
+use rkmeans::rkmeans::{Coreset, RkPipeline, SubspaceOpts};
+use rkmeans::synthetic::{retailer, Scale};
+use rkmeans::util::exec::resolve_threads;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Best-of-`samples` Step-3 wall time plus the last coreset built.
+fn time_build(
+    samples: usize,
+    mut build: impl FnMut() -> anyhow::Result<Coreset>,
+) -> anyhow::Result<(f64, Coreset)> {
+    let mut best = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        let coreset = build()?;
+        best = best.min(t0.elapsed().as_secs_f64());
+        last = Some(coreset);
+    }
+    Ok((best, last.expect("samples >= 1")))
+}
+
+/// Bitwise grid-identity check against the serial reference build.
+fn ensure_bitwise(serial: &Coreset, sharded: &Coreset, shards: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        serial.grid.gids == sharded.grid.gids,
+        "S={shards}: grid cell ids diverged from serial"
+    );
+    let bits = |c: &Coreset| c.grid.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>();
+    anyhow::ensure!(
+        bits(serial) == bits(sharded),
+        "S={shards}: grid weights diverged bitwise from serial"
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale: f64 = std::env::var("RKMEANS_SHARD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.02 } else { 0.1 });
+    let kappa = if test_mode { 8 } else { 16 };
+    let samples = if test_mode { 2 } else { 3 };
+    let threads = resolve_threads(0);
+    let seed = 42u64;
+
+    let db = retailer::generate(Scale::custom(scale), seed);
+    let feq = retailer::feq();
+    println!(
+        "shard workload: |D|={} rows (scale {scale}), κ={kappa}, pool width {threads}",
+        db.total_rows()
+    );
+
+    // Steps 1–2, timed once: serial by design and shared by every arm.
+    let t0 = Instant::now();
+    let pipe = RkPipeline::plan(&db, &feq)?;
+    let marginals = pipe.marginals()?;
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(kappa))?;
+    let step1_2_s = t0.elapsed().as_secs_f64();
+
+    // Serial Step-3 reference arm.
+    let (serial_s, serial) = time_build(samples, || pipe.coreset(&subspaces))?;
+    let serial_rec = ShardBenchRecord::from_build(
+        "retailer",
+        "serial",
+        1,
+        1,
+        step1_2_s,
+        serial_s,
+        serial.n(),
+        serial.mass(),
+    );
+    println!("{}", serial_rec.line());
+
+    // Sharded arms: a small fixed ladder plus S = available cores (the
+    // acceptance point), each asserted bitwise-identical to serial.
+    let mut records = vec![serial_rec.clone()];
+    let mut shard_counts: Vec<usize> = vec![2, 4];
+    shard_counts.retain(|&s| s < threads);
+    shard_counts.push(threads.max(2));
+    for (i, &shards) in shard_counts.iter().enumerate() {
+        let is_max = i + 1 == shard_counts.len();
+        let (step3_s, coreset) = time_build(samples, || pipe.coreset_sharded(&subspaces, shards))?;
+        ensure_bitwise(&serial, &coreset, shards)?;
+        let mode = if is_max { "sharded-max".to_string() } else { format!("sharded-{shards}") };
+        let rec = ShardBenchRecord::from_build(
+            "retailer",
+            &mode,
+            shards,
+            threads,
+            step1_2_s,
+            step3_s,
+            coreset.n(),
+            coreset.mass(),
+        )
+        .with_speedup_vs(&serial_rec);
+        println!("{}", rec.line());
+        records.push(rec);
+    }
+
+    let max_speedup = records
+        .last()
+        .and_then(|r| r.speedup_vs_serial)
+        .unwrap_or(0.0);
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_SHARD_OUT").unwrap_or_else(|_| "BENCH_shard.json".to_string()),
+    );
+    write_bench_shard(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+    println!(
+        "sharded-max vs serial Step 3: {max_speedup:.2}× at S={} (acceptance target ≥ 2×, \
+         bitwise-identical grids)",
+        shard_counts.last().copied().unwrap_or(0)
+    );
+    Ok(())
+}

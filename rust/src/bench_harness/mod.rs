@@ -135,6 +135,47 @@
 //!   `ks`.
 //! * `speedup_vs_independent` = independent total / shared total
 //!   (shared rows only). The acceptance target is ≥ 2×.
+//!
+//! # `BENCH_shard.json` schema (version 1)
+//!
+//! `benches/shard_build.rs` emits one document per invocation (path from
+//! `RKMEANS_SHARD_OUT`, default `BENCH_shard.json`) comparing sharded
+//! Step 1–3 construction (`RkPipeline::coreset_sharded`) against the
+//! serial build, after asserting the merged grid **bitwise equal** to
+//! the serial one:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "shard",
+//!   "records": [
+//!     {
+//!       "label": "retailer",
+//!       "mode": "sharded-4",
+//!       "shards": 4,
+//!       "threads": 8,
+//!       "step1_2_s": 0.021,
+//!       "step3_s": 0.38,
+//!       "build_s": 0.401,
+//!       "grid_cells": 17342,
+//!       "grid_mass": 120000.0,
+//!       "speedup_vs_serial": 2.4
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `mode` is `serial` (the S = 1 reference), `sharded-N` per swept
+//!   shard count, or `sharded-max` (S = the machine's available
+//!   parallelism — the acceptance arm); `shards` is the numeric S and
+//!   `threads` the resolved worker-pool width.
+//! * `step3_s` is the (fastest-of-samples) grid-construction time — the
+//!   phase sharding parallelizes; `step1_2_s` is the shared serial
+//!   marginals + subspace solve; `build_s` = `step1_2_s + step3_s`.
+//! * `speedup_vs_serial` = serial `step3_s` / this row's `step3_s`
+//!   (sharded rows only) — machine-relative, the gate's
+//!   `shard_build_speedup` metric. The acceptance target is ≥ 2× at
+//!   S = physical cores on the Retailer workload.
 
 pub mod paper;
 
@@ -636,6 +677,118 @@ pub fn write_bench_sweep(path: &Path, records: &[SweepBenchRecord]) -> std::io::
     std::fs::write(path, bench_sweep_json(records).to_string())
 }
 
+/// One sharded-construction measurement for `BENCH_shard.json` (schema
+/// in the module docs).
+#[derive(Clone, Debug)]
+pub struct ShardBenchRecord {
+    pub label: String,
+    /// `"serial"`, `"sharded-N"` or `"sharded-max"`.
+    pub mode: String,
+    /// Shard count S (1 on the serial reference row).
+    pub shards: usize,
+    /// Resolved worker-pool width the build dispatched over.
+    pub threads: usize,
+    /// Serial Steps 1–2 (marginals + subspace solve), shared by all arms.
+    pub step1_2_s: f64,
+    /// Fastest observed Step-3 grid construction time.
+    pub step3_s: f64,
+    /// `step1_2_s + step3_s` — the full Steps 1–3 build latency.
+    pub build_s: f64,
+    /// Non-zero grid cells `|G|` of the (merged) coreset.
+    pub grid_cells: usize,
+    /// Total grid mass (= weighted `|X|`) — identical across arms by the
+    /// bitwise-merge contract.
+    pub grid_mass: f64,
+    /// Serial `step3_s` / this row's `step3_s` (sharded rows only).
+    pub speedup_vs_serial: Option<f64>,
+}
+
+impl ShardBenchRecord {
+    /// Build a record from one arm's measurements.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_build(
+        label: &str,
+        mode: &str,
+        shards: usize,
+        threads: usize,
+        step1_2_s: f64,
+        step3_s: f64,
+        grid_cells: usize,
+        grid_mass: f64,
+    ) -> Self {
+        ShardBenchRecord {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            shards,
+            threads,
+            step1_2_s,
+            step3_s,
+            build_s: step1_2_s + step3_s,
+            grid_cells,
+            grid_mass,
+            speedup_vs_serial: None,
+        }
+    }
+
+    /// Attach the Step-3 speedup against the serial reference row.
+    pub fn with_speedup_vs(mut self, serial: &ShardBenchRecord) -> Self {
+        self.speedup_vs_serial = Some(serial.step3_s / self.step3_s.max(1e-12));
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<12} {:<12} S={:<3} threads={:<3} step3 {:>8.4}s  build {:>8.4}s  |G|={}{}",
+            self.label,
+            self.mode,
+            self.shards,
+            self.threads,
+            self.step3_s,
+            self.build_s,
+            self.grid_cells,
+            self.speedup_vs_serial
+                .map(|s| format!("  ({s:.2}× vs serial)"))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("shards".to_string(), Json::Num(self.shards as f64));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("step1_2_s".to_string(), Json::Num(self.step1_2_s));
+        m.insert("step3_s".to_string(), Json::Num(self.step3_s));
+        m.insert("build_s".to_string(), Json::Num(self.build_s));
+        m.insert("grid_cells".to_string(), Json::Num(self.grid_cells as f64));
+        m.insert("grid_mass".to_string(), Json::Num(self.grid_mass));
+        if let Some(s) = self.speedup_vs_serial {
+            m.insert("speedup_vs_serial".to_string(), Json::Num(s));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_shard.json` document.
+pub fn bench_shard_json(records: &[ShardBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("shard".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(ShardBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_shard.json` document to disk.
+pub fn write_bench_shard(path: &Path, records: &[ShardBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_shard_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -785,6 +938,31 @@ mod tests {
         assert_eq!(ks.len(), 2);
         assert_eq!(ks[1].as_usize(), Some(8));
         let s = recs[1].get("speedup_vs_independent").unwrap().as_f64().unwrap();
+        assert!((s - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_bench_json_roundtrips() {
+        let serial =
+            ShardBenchRecord::from_build("retailer", "serial", 1, 1, 0.30, 2.0, 400, 10_000.0);
+        let sharded =
+            ShardBenchRecord::from_build("retailer", "sharded-max", 8, 8, 0.30, 0.5, 400, 10_000.0)
+                .with_speedup_vs(&serial);
+        assert!((sharded.speedup_vs_serial.unwrap() - 4.0).abs() < 1e-9);
+        assert!((serial.build_s - 2.3).abs() < 1e-12);
+        assert!(sharded.line().contains("vs serial"));
+
+        let doc = bench_shard_json(&[serial, sharded]);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("shard"));
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("serial"));
+        assert!(recs[0].get("speedup_vs_serial").is_none());
+        assert_eq!(recs[1].get("shards").unwrap().as_usize(), Some(8));
+        assert_eq!(recs[1].get("grid_cells").unwrap().as_usize(), Some(400));
+        let s = recs[1].get("speedup_vs_serial").unwrap().as_f64().unwrap();
         assert!((s - 4.0).abs() < 1e-9);
     }
 

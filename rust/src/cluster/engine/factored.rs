@@ -3,7 +3,13 @@
 //!
 //! Distances stay in factored form: a per-iteration `O(Σκ_j·k)` table
 //! build turns each (cell, centroid) distance into `m` table lookups, and
-//! the Hamerly bounds live **per grid cell**. Centroid drift and the
+//! the Hamerly bounds live **per grid cell**. Under Elkan bounds a cell
+//! that fails the global test still prunes within its scan: each
+//! centroid whose per-centroid row bound clears the exact assigned
+//! distance is skipped inside the m-lookup loop (provably outside the
+//! argmin, so the result stays bitwise identical; skips are visible in
+//! [`PruneStats::bound_evals`](super::PruneStats::bound_evals) /
+//! `dist_evals_skipped`). Centroid drift and the
 //! inter-centroid separations `s[c]` are computed straight from the β
 //! coefficient tables using component orthogonality
 //! (`‖μ − μ'‖² = Σ_j λ_j Σ_a (β_a − β'_a)²·‖u_a‖²`), so the pruning
@@ -230,24 +236,74 @@ fn assign_chunk(ch: &mut FacChunk, ctx: &FacCtx) {
                 cell_centroid_dd(&gids[i * m..(i + 1) * m], ctx.tables, k, a)
             });
 
-            // Phase 2: full scans — the factored m-lookup accumulation
-            // over all centroids.
-            let mut dist_buf = vec![0.0f64; k];
-            for &gi in &scan {
-                let i = gi as usize;
-                let row = &gids[i * m..(i + 1) * m];
-                let base0 = row[0] as usize * k;
-                dist_buf.copy_from_slice(&ctx.tables[0][base0..base0 + k]);
-                for j in 1..m {
-                    let base = row[j] as usize * k;
-                    let tj = &ctx.tables[j][base..base + k];
-                    for (dv, &t) in dist_buf.iter_mut().zip(tj) {
-                        *dv += t;
+            if bctx.use_bounds && bctx.bounds == BoundsPolicy::Elkan {
+                // Phase 2, Elkan: within-scan per-centroid pruning. A
+                // point that failed the global test can still skip any
+                // centroid whose (drifted) row bound clears the exact
+                // assigned distance — `lb[i·k + c] > ub + slack` proves
+                // `dd_c > dd_a ≥ d1` under the same slack argument as the
+                // Phase-1 skip, so the evaluated argmin (first strict
+                // minimum, as in `best_two_buf`) is unchanged bitwise.
+                // Evaluated centroids refresh their bound to the exact
+                // distance (as a full row refresh would); skipped ones
+                // keep the drifted — still valid — bound. The partial d2
+                // only overestimates the second-best distance, which
+                // feeds nothing but the `max_dd` slack scale.
+                for &gi in &scan {
+                    let i = gi as usize;
+                    let row = &gids[i * m..(i + 1) * m];
+                    let a = ch.st.assign[i] as usize;
+                    let lb_row = &mut ch.st.lb[i * k..(i + 1) * k];
+                    let ub = lb_row[a];
+                    let (mut d1, mut c1, mut d2) = (f64::INFINITY, 0u32, f64::INFINITY);
+                    let mut evaluated = 0u64;
+                    for (c, b) in lb_row.iter_mut().enumerate() {
+                        if c != a && *b > ub + ctx.slack {
+                            continue;
+                        }
+                        let dd = cell_centroid_dd(row, ctx.tables, k, c);
+                        *b = dd.max(0.0).sqrt();
+                        evaluated += 1;
+                        if dd < d1 {
+                            d2 = d1;
+                            d1 = dd;
+                            c1 = c as u32;
+                        } else if dd < d2 {
+                            d2 = dd;
+                        }
+                    }
+                    ch.st.assign[i] = c1;
+                    ch.st.mind2[i] = d1;
+                    ch.stats.evals += evaluated;
+                    ch.stats.skipped += k as u64 - evaluated;
+                    ch.stats.bound_evals += k as u64 - 1;
+                    if d1 > ch.stats.max_dd {
+                        ch.stats.max_dd = d1;
+                    }
+                    if d2.is_finite() && d2 > ch.stats.max_dd {
+                        ch.stats.max_dd = d2;
                     }
                 }
-                let (d1, c1, d2) = best_two_buf(&dist_buf);
-                let buf = &dist_buf;
-                record_scan(&mut ch.st, &mut ch.stats, i, c1, d1, d2, &bctx, |c| buf[c]);
+            } else {
+                // Phase 2: full scans — the factored m-lookup
+                // accumulation over all centroids.
+                let mut dist_buf = vec![0.0f64; k];
+                for &gi in &scan {
+                    let i = gi as usize;
+                    let row = &gids[i * m..(i + 1) * m];
+                    let base0 = row[0] as usize * k;
+                    dist_buf.copy_from_slice(&ctx.tables[0][base0..base0 + k]);
+                    for j in 1..m {
+                        let base = row[j] as usize * k;
+                        let tj = &ctx.tables[j][base..base + k];
+                        for (dv, &t) in dist_buf.iter_mut().zip(tj) {
+                            *dv += t;
+                        }
+                    }
+                    let (d1, c1, d2) = best_two_buf(&dist_buf);
+                    let buf = &dist_buf;
+                    record_scan(&mut ch.st, &mut ch.stats, i, c1, d1, d2, &bctx, |c| buf[c]);
+                }
             }
         }
         Precision::F32 => {
@@ -257,33 +313,77 @@ fn assign_chunk(ch: &mut FacChunk, ctx: &FacCtx) {
                 cell_centroid_dd_f32(&gids[i * m..(i + 1) * m], ctx.tables32, k, a) as f64
             });
 
-            // Phase 2: the same m-lookup accumulation in f32 (2× lanes on
-            // the per-cell table sums).
-            let mut dist_buf = vec![0.0f32; k];
-            for &gi in &scan {
-                let i = gi as usize;
-                let row = &gids[i * m..(i + 1) * m];
-                let base0 = row[0] as usize * k;
-                dist_buf.copy_from_slice(&ctx.tables32[0][base0..base0 + k]);
-                for j in 1..m {
-                    let base = row[j] as usize * k;
-                    let tj = &ctx.tables32[j][base..base + k];
-                    for (dv, &t) in dist_buf.iter_mut().zip(tj) {
-                        *dv += t;
+            if bctx.use_bounds && bctx.bounds == BoundsPolicy::Elkan {
+                // Phase 2, Elkan: within-scan per-centroid pruning (see
+                // the f64 arm). Kernel sums and the best-two comparison
+                // stay in f32 — bitwise identical to `best_two_buf_f32`
+                // over the evaluated set — while the bound test and the
+                // refreshed bounds use the same f64 arithmetic as the
+                // full-row refresh.
+                for &gi in &scan {
+                    let i = gi as usize;
+                    let row = &gids[i * m..(i + 1) * m];
+                    let a = ch.st.assign[i] as usize;
+                    let lb_row = &mut ch.st.lb[i * k..(i + 1) * k];
+                    let ub = lb_row[a];
+                    let (mut d1, mut c1, mut d2) = (f32::INFINITY, 0u32, f32::INFINITY);
+                    let mut evaluated = 0u64;
+                    for (c, b) in lb_row.iter_mut().enumerate() {
+                        if c != a && *b > ub + ctx.slack {
+                            continue;
+                        }
+                        let dd = cell_centroid_dd_f32(row, ctx.tables32, k, c);
+                        *b = (dd as f64).max(0.0).sqrt();
+                        evaluated += 1;
+                        if dd < d1 {
+                            d2 = d1;
+                            d1 = dd;
+                            c1 = c as u32;
+                        } else if dd < d2 {
+                            d2 = dd;
+                        }
+                    }
+                    ch.st.assign[i] = c1;
+                    ch.st.mind2[i] = d1 as f64;
+                    ch.stats.evals += evaluated;
+                    ch.stats.skipped += k as u64 - evaluated;
+                    ch.stats.bound_evals += k as u64 - 1;
+                    if d1 as f64 > ch.stats.max_dd {
+                        ch.stats.max_dd = d1 as f64;
+                    }
+                    if d2.is_finite() && d2 as f64 > ch.stats.max_dd {
+                        ch.stats.max_dd = d2 as f64;
                     }
                 }
-                let (d1, c1, d2) = best_two_buf_f32(&dist_buf);
-                let buf = &dist_buf;
-                record_scan(
-                    &mut ch.st,
-                    &mut ch.stats,
-                    i,
-                    c1,
-                    d1 as f64,
-                    d2 as f64,
-                    &bctx,
-                    |c| buf[c] as f64,
-                );
+            } else {
+                // Phase 2: the same m-lookup accumulation in f32 (2×
+                // lanes on the per-cell table sums).
+                let mut dist_buf = vec![0.0f32; k];
+                for &gi in &scan {
+                    let i = gi as usize;
+                    let row = &gids[i * m..(i + 1) * m];
+                    let base0 = row[0] as usize * k;
+                    dist_buf.copy_from_slice(&ctx.tables32[0][base0..base0 + k]);
+                    for j in 1..m {
+                        let base = row[j] as usize * k;
+                        let tj = &ctx.tables32[j][base..base + k];
+                        for (dv, &t) in dist_buf.iter_mut().zip(tj) {
+                            *dv += t;
+                        }
+                    }
+                    let (d1, c1, d2) = best_two_buf_f32(&dist_buf);
+                    let buf = &dist_buf;
+                    record_scan(
+                        &mut ch.st,
+                        &mut ch.stats,
+                        i,
+                        c1,
+                        d1 as f64,
+                        d2 as f64,
+                        &bctx,
+                        |c| buf[c] as f64,
+                    );
+                }
             }
         }
     }
@@ -652,6 +752,35 @@ mod tests {
             assert_eq!(a.iters, b.iters);
             assert_eq!(sb.bounds, "elkan");
         });
+    }
+
+    #[test]
+    fn elkan_within_scan_pruning_skips_and_stays_bitwise() {
+        // The per-centroid skip inside the factored m-lookup loop must
+        // leave assignments/objective bitwise identical to the naive
+        // scan while actually pruning work: per-centroid bound tests
+        // (bound_evals beyond the one-per-point Phase-1 test) and fewer
+        // distance evaluations than the naive k-per-point count.
+        let mut rng = SplitMix64::new(404);
+        let (grid, subs) = random_problem(&mut rng, 400);
+        let cfg = LloydConfig { k: 6, max_iters: 10, tol: 0.0, seed: 9 };
+        let (a, sa) = lloyd_factored(&grid, &subs, &cfg, &EngineOpts::naive_serial());
+        let opts = EngineOpts::pruned().with_bounds(BoundsPolicy::Elkan).with_threads(2);
+        let (b, sb) = lloyd_factored(&grid, &subs, &cfg, &opts);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.iters, b.iters);
+        // Phase 1 charges one bound test per point per bounded pass;
+        // anything beyond that is the within-scan per-centroid tests.
+        assert!(
+            sb.bound_evals > sb.points * (sb.iters as u64 - 1),
+            "no within-scan bound tests ran: {} bound evals over {} points × {} iters",
+            sb.bound_evals,
+            sb.points,
+            sb.iters
+        );
+        assert!(sb.dist_evals < sa.dist_evals, "pruning saved nothing");
+        assert!(sb.dist_evals_skipped > 0);
     }
 
     #[test]

@@ -104,6 +104,22 @@
 //! [`PruneStats::executor`] / [`PruneStats::pool_dispatches`] report what
 //! actually ran.
 //!
+//! Construction work rides the same pool. Sharded Step 1–3 builds
+//! ([`crate::rkmeans::RkPipeline::coreset_sharded`],
+//! [`crate::incremental::ShardedDeltaFaq`]) submit one counting-FAQ job
+//! per value-hashed fact shard ([`crate::faq::shard`]) through
+//! [`crate::util::exec::ExecPool::run_chunks_ordered`] — a size-graded
+//! (largest-shard-first) claim order under the same atomic-cursor
+//! protocol, so the long pole starts first while results are still read
+//! back in shard order and merged by exact ring-ℤ addition:
+//! bitwise-identical to the serial build, just off the serial path. The
+//! streaming [`CentroidScorer`] overlaps in the other direction: full row
+//! blocks are handed to a dedicated ingestion worker that scores them on
+//! the pool while the caller streams (and embeds) the next block, with at
+//! most one block in flight and partial objectives folded in submission
+//! order — double-buffering that hides embed/stream time behind kernel
+//! time without touching the reduction order.
+//!
 //! # Cross-run state carry
 //!
 //! A run's convergence context — final assignments and lower bounds — is
@@ -693,9 +709,13 @@ pub struct PruneStats {
     pub dist_evals: u64,
     /// Evaluations proven unnecessary by the bounds and skipped.
     pub dist_evals_skipped: u64,
-    /// Phase-1 upper-bound tightening evaluations (one per point per
-    /// bounded pass; included in `dist_evals`) — the per-policy pruning
-    /// overhead.
+    /// Lower-bound comparisons charged to the pruning machinery: one per
+    /// point per bounded pass (the Phase-1 global test), plus — on the
+    /// factored Elkan path — `k − 1` per *scanned* point for the
+    /// within-scan per-centroid tests (`lb[i·k+c] > ub + slack`) that
+    /// skip individual centroids inside the m-lookup loop. Bound tests
+    /// are O(1) compares, not distance kernels, so this is the
+    /// bookkeeping overhead bought in exchange for `dist_evals_skipped`.
     pub bound_evals: u64,
     /// Resolved bounds policy of the run (`"hamerly"` / `"elkan"`;
     /// `"none"` when pruning was disabled).
@@ -801,34 +821,108 @@ where
 /// get `Σ w·min_c d²(row, c)` back. Rows are buffered into a block of
 /// contiguous tiles and pushed through the shared microkernel (f64 or the
 /// f32 tile path, per [`Precision`]), so the streaming full-`X` objective
-/// pass reuses the same hot loop as the Lloyd engine. Full blocks are
-/// scored on the shared persistent pool ([`crate::util::exec`]) by
-/// default — override with [`CentroidScorer::with_executor`] — as one
-/// partial objective per tile, reduced in tile order, so the result is
-/// independent of the executor and thread count. The f32 path follows
-/// the engine's [`F32_OBJ_RTOL`] tolerance contract (f32 distances, f64
-/// weight accumulation).
+/// pass reuses the same hot loop as the Lloyd engine.
+///
+/// Ingestion is **double-buffered**: when a block fills, it is handed to
+/// a lazily-spawned ingestion worker that scores it on the configured
+/// executor (the shared persistent pool by default — override with
+/// [`CentroidScorer::with_executor`]) while the caller keeps streaming
+/// rows into a second buffer, so embed/stream time overlaps kernel time
+/// on the full-`X` pass. At most one block is ever in flight and the
+/// running objective is threaded through the jobs in submission order —
+/// one partial objective per tile, reduced in tile order, then folded
+/// into the running sum exactly as an inline flush would — so the result
+/// is **bitwise identical** to synchronous scoring, independent of the
+/// executor and thread count. The f32 path follows the engine's
+/// [`F32_OBJ_RTOL`] tolerance contract (f32 distances, f64 weight
+/// accumulation).
 pub struct CentroidScorer {
+    /// Read-only scoring context, shared with the ingestion worker.
+    ctx: Arc<ScoreCtx>,
+    /// Front buffer: the block currently being filled by `push`.
+    block: ScoreBlock,
+    /// Buffers reclaimed from the last finished job, reused for the next
+    /// swap (steady state allocates nothing).
+    spare: Option<ScoreBlock>,
+    /// Running objective; while a job is in flight this holds the value
+    /// *before* that block (the job returns the folded-forward sum).
+    obj: f64,
+    worker: Option<ScoreWorker>,
+}
+
+/// The immutable inputs of a block score: dimensions, transposed
+/// centroids and the dispatch configuration. Exactly one of the f64/f32
+/// vector pairs is populated, matching `precision`.
+#[derive(Clone)]
+struct ScoreCtx {
     d: usize,
     k: usize,
     precision: Precision,
-    /// `d × k` transposed centroids (microkernel layout); exactly one of
-    /// the f64/f32 pairs is populated, matching `precision`.
+    /// `d × k` transposed centroids (microkernel layout).
     ct_t: Vec<f64>,
     cnorm: Vec<f64>,
     ct_t32: Vec<f32>,
     cnorm32: Vec<f32>,
+    executor: Executor,
+    threads: usize,
+}
+
+/// One block's traveling buffer set: row/weight storage plus the
+/// per-tile work items its score dispatch uses. Two of these alternate
+/// between the caller and the ingestion worker.
+struct ScoreBlock {
     /// Block row buffer (`SCORE_BLOCK × d`), in the kernel's precision.
     rows: Vec<f64>,
     rows32: Vec<f32>,
     wbuf: Vec<f64>,
     fill: usize,
-    obj: f64,
     /// Per-tile work items (partial objective + reusable kernel
     /// scratch); allocated on the first flush, reused thereafter.
     tiles: Vec<ScoreTile>,
-    executor: Executor,
-    threads: usize,
+}
+
+impl ScoreBlock {
+    fn fresh(d: usize, f32_kernel: bool) -> ScoreBlock {
+        ScoreBlock {
+            rows: if f32_kernel { Vec::new() } else { vec![0.0; SCORE_BLOCK * d] },
+            rows32: if f32_kernel { vec![0.0; SCORE_BLOCK * d] } else { Vec::new() },
+            wbuf: vec![0.0; SCORE_BLOCK],
+            fill: 0,
+            tiles: Vec::new(),
+        }
+    }
+}
+
+/// The lazily-spawned ingestion worker: one job (running objective +
+/// block) in flight at a time, buffers round-tripped for reuse.
+struct ScoreWorker {
+    job_tx: std::sync::mpsc::Sender<(f64, ScoreBlock)>,
+    done_rx: std::sync::mpsc::Receiver<(f64, ScoreBlock)>,
+    handle: std::thread::JoinHandle<()>,
+    in_flight: bool,
+}
+
+impl ScoreWorker {
+    /// Spawn the ingestion thread. It is an ordinary (non-pool) thread,
+    /// so its block scores may dispatch onto the shared pool without
+    /// violating the pool's no-reentrancy rule; it exits when the job
+    /// channel closes (scorer finished or dropped mid-stream).
+    fn spawn(ctx: Arc<ScoreCtx>) -> ScoreWorker {
+        let (job_tx, job_rx) = std::sync::mpsc::channel::<(f64, ScoreBlock)>();
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("rk-score-ingest".into())
+            .spawn(move || {
+                while let Ok((obj, mut block)) = job_rx.recv() {
+                    let obj = score_block(&ctx, &mut block, obj);
+                    if done_tx.send((obj, block)).is_err() {
+                        break; // receiver dropped mid-stream
+                    }
+                }
+            })
+            .expect("spawn scorer ingestion worker");
+        ScoreWorker { job_tx, done_rx, handle, in_flight: false }
+    }
 }
 
 /// One tile's pooled work item: the partial objective it produced plus
@@ -875,7 +969,7 @@ impl CentroidScorer {
             microkernel::transpose(centroids, d, k, &mut ct_t);
             cnorm = centroids.chunks_exact(d).map(|c| c.iter().map(|v| v * v).sum()).collect();
         }
-        CentroidScorer {
+        let ctx = ScoreCtx {
             d,
             k,
             precision,
@@ -883,14 +977,15 @@ impl CentroidScorer {
             cnorm,
             ct_t32,
             cnorm32,
-            rows: if f32_kernel { Vec::new() } else { vec![0.0; SCORE_BLOCK * d] },
-            rows32: if f32_kernel { vec![0.0; SCORE_BLOCK * d] } else { Vec::new() },
-            wbuf: vec![0.0; SCORE_BLOCK],
-            fill: 0,
-            obj: 0.0,
-            tiles: Vec::new(),
             executor: Executor::shared(),
             threads: 0,
+        };
+        CentroidScorer {
+            ctx: Arc::new(ctx),
+            block: ScoreBlock::fresh(d, f32_kernel),
+            spare: None,
+            obj: 0.0,
+            worker: None,
         }
     }
 
@@ -898,116 +993,178 @@ impl CentroidScorer {
     /// auto) — the same knobs as [`EngineOpts`]; the default is the
     /// shared pool at full parallelism. Never changes the result (the
     /// per-tile partial reduction is executor- and thread-count
-    /// independent).
+    /// independent). Builder-only: call before the first `push`.
     pub fn with_executor(mut self, executor: Executor, threads: usize) -> Self {
-        self.executor = executor;
-        self.threads = threads;
+        debug_assert!(self.worker.is_none(), "with_executor after scoring started");
+        let ctx = Arc::make_mut(&mut self.ctx);
+        ctx.executor = executor;
+        ctx.threads = threads;
         self
     }
 
     /// Score one row (length `d`) with weight `w`.
     pub fn push(&mut self, row: &[f64], w: f64) {
-        debug_assert_eq!(row.len(), self.d);
-        let p = self.fill;
-        match self.precision {
+        debug_assert_eq!(row.len(), self.ctx.d);
+        let (d, p) = (self.ctx.d, self.block.fill);
+        match self.ctx.precision {
             Precision::F64 => {
-                self.rows[p * self.d..(p + 1) * self.d].copy_from_slice(row);
+                self.block.rows[p * d..(p + 1) * d].copy_from_slice(row);
             }
             Precision::F32 => {
-                for (dst, &v) in
-                    self.rows32[p * self.d..(p + 1) * self.d].iter_mut().zip(row)
-                {
+                for (dst, &v) in self.block.rows32[p * d..(p + 1) * d].iter_mut().zip(row) {
                     *dst = v as f32;
                 }
             }
         }
-        self.wbuf[p] = w;
-        self.fill += 1;
-        if self.fill == SCORE_BLOCK {
-            self.flush();
+        self.block.wbuf[p] = w;
+        self.block.fill += 1;
+        if self.block.fill == SCORE_BLOCK {
+            self.dispatch_block();
         }
     }
 
-    fn flush(&mut self) {
-        let fill = self.fill;
-        if fill == 0 {
+    /// Hand the filled front block to the ingestion worker and swap in a
+    /// fresh (or reclaimed) buffer set, so the caller keeps streaming
+    /// while the block scores. Reclaims the previous job first, so at
+    /// most one block is ever in flight and partial objectives fold in
+    /// submission order (the bitwise contract).
+    fn dispatch_block(&mut self) {
+        if self.worker.is_none() {
+            self.worker = Some(ScoreWorker::spawn(Arc::clone(&self.ctx)));
+        }
+        self.reclaim();
+        let next = self.spare.take().unwrap_or_else(|| {
+            ScoreBlock::fresh(self.ctx.d, self.ctx.precision == Precision::F32)
+        });
+        let full = std::mem::replace(&mut self.block, next);
+        let worker = self.worker.as_mut().expect("ingestion worker");
+        worker.job_tx.send((self.obj, full)).expect("scorer ingestion worker hung up");
+        worker.in_flight = true;
+    }
+
+    /// Wait for the in-flight block (if any), adopt its folded-forward
+    /// objective and reclaim its buffers. Propagates a worker panic onto
+    /// the caller.
+    fn reclaim(&mut self) {
+        let in_flight = self.worker.as_ref().is_some_and(|w| w.in_flight);
+        if !in_flight {
             return;
         }
-        let (d, k) = (self.d, self.k);
-        let n_tiles = fill.div_ceil(SCORE_TILE);
-        // One partial objective per tile, computed in point order within
-        // the tile and reduced in tile order below — thread-count
-        // independent by construction. The per-tile `dots` scratch lives
-        // in the work item, so it is allocated once and reused across
-        // blocks.
-        if self.tiles.len() < n_tiles {
-            self.tiles.resize_with(n_tiles, ScoreTile::default);
-        }
-        let threads = resolve_threads(self.threads);
-        let wbuf = &self.wbuf;
-        let works = &mut self.tiles[..n_tiles];
-        match self.precision {
-            Precision::F64 => {
-                let rows = &self.rows;
-                let ct_t = &self.ct_t;
-                let cnorm = &self.cnorm;
-                self.executor.run_chunks(works, threads, |ti, tile| {
-                    let lo = ti * SCORE_TILE;
-                    let hi = (lo + SCORE_TILE).min(fill);
-                    let tp = hi - lo;
-                    tile.dots.resize(SCORE_TILE * k, 0.0);
-                    let dots = &mut tile.dots[..tp * k];
-                    microkernel::tile_dots(&rows[lo * d..hi * d], d, k, ct_t, dots);
-                    let mut acc = 0.0f64;
-                    for p in 0..tp {
-                        let row = &rows[(lo + p) * d..(lo + p + 1) * d];
-                        let xn: f64 = row.iter().map(|v| v * v).sum();
-                        let (d1, _, _) =
-                            microkernel::best_two_expanded(xn, &dots[p * k..(p + 1) * k], cnorm);
-                        acc += wbuf[lo + p] * d1.max(0.0);
-                    }
-                    tile.out = acc;
-                });
+        let worker = self.worker.as_mut().expect("ingestion worker");
+        worker.in_flight = false;
+        match worker.done_rx.recv() {
+            Ok((obj, block)) => {
+                self.obj = obj;
+                self.spare = Some(block);
             }
-            Precision::F32 => {
-                let rows32 = &self.rows32;
-                let ct_t32 = &self.ct_t32;
-                let cnorm32 = &self.cnorm32;
-                self.executor.run_chunks(works, threads, |ti, tile| {
-                    let lo = ti * SCORE_TILE;
-                    let hi = (lo + SCORE_TILE).min(fill);
-                    let tp = hi - lo;
-                    tile.dots32.resize(SCORE_TILE * k, 0.0);
-                    let dots = &mut tile.dots32[..tp * k];
-                    microkernel::tile_dots_f32(&rows32[lo * d..hi * d], d, k, ct_t32, dots);
-                    let mut acc = 0.0f64;
-                    for p in 0..tp {
-                        let row = &rows32[(lo + p) * d..(lo + p + 1) * d];
-                        let xn: f32 = row.iter().map(|v| v * v).sum();
-                        let (d1, _, _) = microkernel::best_two_expanded_f32(
-                            xn,
-                            &dots[p * k..(p + 1) * k],
-                            cnorm32,
-                        );
-                        // Weight accumulation stays in f64 (the tolerance
-                        // contract); distances widen after the f32 clamp.
-                        acc += wbuf[lo + p] * d1.max(0.0) as f64;
-                    }
-                    tile.out = acc;
-                });
+            Err(_) => {
+                // The worker hung up mid-job: it panicked (a kernel
+                // assert or a pool fault). Join and re-raise here rather
+                // than returning a silently-partial objective.
+                let worker = self.worker.take().expect("ingestion worker");
+                drop(worker.job_tx);
+                match worker.handle.join() {
+                    Err(payload) => std::panic::resume_unwind(payload),
+                    Ok(()) => unreachable!("scorer worker exited without a result"),
+                }
             }
         }
-        for t in &self.tiles[..n_tiles] {
-            self.obj += t.out;
-        }
-        self.fill = 0;
     }
 
-    /// Flush the partial block and return the accumulated objective.
+    /// Drain the in-flight block, score the partial tail inline, retire
+    /// the ingestion worker and return the accumulated objective.
     pub fn finish(mut self) -> f64 {
-        self.flush();
+        self.reclaim();
+        self.obj = score_block(&self.ctx, &mut self.block, self.obj);
+        if let Some(worker) = self.worker.take() {
+            drop(worker.job_tx);
+            if let Err(payload) = worker.handle.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
         self.obj
     }
+}
+
+/// Score one full or partial block on the context's executor and fold
+/// its per-tile partials into `obj` in tile order — the single scoring
+/// routine behind both the ingestion worker and the inline tail flush,
+/// so both paths produce identical bits. Returns the updated running
+/// objective and resets the block for refilling.
+fn score_block(ctx: &ScoreCtx, block: &mut ScoreBlock, mut obj: f64) -> f64 {
+    let fill = block.fill;
+    if fill == 0 {
+        return obj;
+    }
+    let (d, k) = (ctx.d, ctx.k);
+    let n_tiles = fill.div_ceil(SCORE_TILE);
+    // One partial objective per tile, computed in point order within
+    // the tile and reduced in tile order below — thread-count
+    // independent by construction. The per-tile `dots` scratch lives
+    // in the work item, so it is allocated once and reused across
+    // blocks.
+    if block.tiles.len() < n_tiles {
+        block.tiles.resize_with(n_tiles, ScoreTile::default);
+    }
+    let threads = resolve_threads(ctx.threads);
+    let wbuf = &block.wbuf;
+    let works = &mut block.tiles[..n_tiles];
+    match ctx.precision {
+        Precision::F64 => {
+            let rows = &block.rows;
+            let ct_t = &ctx.ct_t;
+            let cnorm = &ctx.cnorm;
+            ctx.executor.run_chunks(works, threads, |ti, tile| {
+                let lo = ti * SCORE_TILE;
+                let hi = (lo + SCORE_TILE).min(fill);
+                let tp = hi - lo;
+                tile.dots.resize(SCORE_TILE * k, 0.0);
+                let dots = &mut tile.dots[..tp * k];
+                microkernel::tile_dots(&rows[lo * d..hi * d], d, k, ct_t, dots);
+                let mut acc = 0.0f64;
+                for p in 0..tp {
+                    let row = &rows[(lo + p) * d..(lo + p + 1) * d];
+                    let xn: f64 = row.iter().map(|v| v * v).sum();
+                    let (d1, _, _) =
+                        microkernel::best_two_expanded(xn, &dots[p * k..(p + 1) * k], cnorm);
+                    acc += wbuf[lo + p] * d1.max(0.0);
+                }
+                tile.out = acc;
+            });
+        }
+        Precision::F32 => {
+            let rows32 = &block.rows32;
+            let ct_t32 = &ctx.ct_t32;
+            let cnorm32 = &ctx.cnorm32;
+            ctx.executor.run_chunks(works, threads, |ti, tile| {
+                let lo = ti * SCORE_TILE;
+                let hi = (lo + SCORE_TILE).min(fill);
+                let tp = hi - lo;
+                tile.dots32.resize(SCORE_TILE * k, 0.0);
+                let dots = &mut tile.dots32[..tp * k];
+                microkernel::tile_dots_f32(&rows32[lo * d..hi * d], d, k, ct_t32, dots);
+                let mut acc = 0.0f64;
+                for p in 0..tp {
+                    let row = &rows32[(lo + p) * d..(lo + p + 1) * d];
+                    let xn: f32 = row.iter().map(|v| v * v).sum();
+                    let (d1, _, _) = microkernel::best_two_expanded_f32(
+                        xn,
+                        &dots[p * k..(p + 1) * k],
+                        cnorm32,
+                    );
+                    // Weight accumulation stays in f64 (the tolerance
+                    // contract); distances widen after the f32 clamp.
+                    acc += wbuf[lo + p] * d1.max(0.0) as f64;
+                }
+                tile.out = acc;
+            });
+        }
+    }
+    for t in &block.tiles[..n_tiles] {
+        obj += t.out;
+    }
+    block.fill = 0;
+    obj
 }
 
 #[cfg(test)]
@@ -1115,6 +1272,47 @@ mod tests {
         let got = scorer.finish();
         let want = crate::cluster::lloyd::objective(&pts, &w, d, &cents);
         assert_close(got, want, 1e-9);
+    }
+
+    #[test]
+    fn scorer_double_buffering_is_bitwise_deterministic() {
+        // Stream several full blocks so the ingestion worker carries
+        // real in-flight jobs, and pin the double-buffered result: equal
+        // bits across repeated runs, executors and thread clamps, and
+        // matching the plain point-order oracle to rounding.
+        let mut rng = SplitMix64::new(21);
+        let d = 3;
+        let k = 5;
+        let cents: Vec<f64> = (0..k * d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let n = SCORE_BLOCK * 3 + SCORE_TILE + 5;
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let run = |executor: Executor, threads: usize| {
+            let mut s = CentroidScorer::new(&cents, d).with_executor(executor, threads);
+            for i in 0..n {
+                s.push(&pts[i * d..(i + 1) * d], w[i]);
+            }
+            s.finish()
+        };
+        let pooled_a = run(Executor::shared(), 0);
+        let pooled_b = run(Executor::shared(), 2);
+        let scoped = run(Executor::Scoped, 1);
+        assert_eq!(pooled_a.to_bits(), pooled_b.to_bits());
+        assert_eq!(pooled_a.to_bits(), scoped.to_bits());
+        let want = crate::cluster::lloyd::objective(&pts, &w, d, &cents);
+        assert_close(pooled_a, want, 1e-9);
+    }
+
+    #[test]
+    fn scorer_drop_without_finish_releases_worker() {
+        // Abandoning a scorer mid-stream (caller unwound) must not hang:
+        // dropping the job channel retires the ingestion worker.
+        let cents = vec![0.0, 1.0]; // k = 2, d = 1
+        let mut s = CentroidScorer::new(&cents, 1);
+        for i in 0..SCORE_BLOCK + 5 {
+            s.push(&[i as f64], 1.0);
+        }
+        drop(s);
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //!   free-variable FAQ ([`crate::faq::grid_weights`]), returned in the
 //!   factored [`SparseGrid`] form Step 4 consumes. FD-chains compress the
 //!   grid automatically (only consistent combinations occur in the data).
+//! * [`build_grid_sharded`] — the same grid built from S fact shards in
+//!   parallel on the shared pool and merged by exact weight addition
+//!   (bitwise identical to [`build_grid`] under integer multiplicities).
 //! * [`grid_dense_embed`] / [`centroids_dense`] — dense one-hot views of
 //!   the coreset and of factored centroids, shared by the XLA hot path,
 //!   the dense-Lloyd ablation, and full-`X` objective evaluation.
@@ -16,7 +19,7 @@
 use crate::cluster::sparse_lloyd::{CentroidCoord, Components, SparseGrid, Subspace};
 use crate::cluster::{categorical_kmeans, kmeans1d, CatClusters, CentroidScorer, Kmeans1dResult};
 use crate::data::{Database, Value};
-use crate::faq::{grid_weights, GidAssigner, Marginal};
+use crate::faq::{grid_weights, GidAssigner, GridTable, Marginal};
 use crate::join::{stream_rows, EmbedSpec};
 use crate::join::embed::EmbKind;
 use crate::query::{Feq, JoinTree};
@@ -157,6 +160,59 @@ pub fn build_grid(
     }
     let table = grid_weights(db, feq, tree, &assigners)?;
     Ok(sparse_from_table(table, models))
+}
+
+/// Sharded Step 3: partition the designated fact relation (the FEQ's
+/// first relation) into `shards` value-hashed horizontal shards
+/// ([`crate::faq::shard_databases`]), run the counting-FAQ grid-weight
+/// pass per shard as independent jobs on the process-wide
+/// [`ExecPool`](crate::util::exec::ExecPool), and merge the per-shard
+/// tables by exact weight addition ([`GridTable::merge`]). With integer
+/// tuple multiplicities (the ring-ℤ contract) the result is **bitwise
+/// identical** to [`build_grid`] for any shard count; `shards <= 1`
+/// delegates outright.
+///
+/// Shards are dispatched largest-fact-first
+/// ([`ExecPool::run_chunks_ordered`](crate::util::exec::ExecPool::run_chunks_ordered))
+/// so a Zipf-skewed partition doesn't leave one straggler holding the
+/// merge; results are still merged in shard order, so the schedule never
+/// affects the output. Must not be called from inside a pool worker (the
+/// pool is not reentrant).
+pub fn build_grid_sharded(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    models: &[SubspaceModel],
+    shards: usize,
+) -> Result<(SparseGrid, Vec<Subspace>)> {
+    if shards <= 1 {
+        return build_grid(db, feq, tree, models);
+    }
+    let fact = feq.relations.first().context("FEQ names no relations")?;
+    let shard_dbs = crate::faq::shard_databases(db, fact, shards)?;
+    let mut order: Vec<usize> = (0..shard_dbs.len()).collect();
+    order.sort_by_key(|&s| {
+        std::cmp::Reverse(shard_dbs[s].get(fact).map_or(0, |r| r.n_rows()))
+    });
+    let mut works: Vec<(Database, Option<Result<GridTable>>)> =
+        shard_dbs.into_iter().map(|sdb| (sdb, None)).collect();
+    let pool = crate::util::exec::shared_pool();
+    pool.run_chunks_ordered(&mut works, 0, &order, |_, (sdb, out)| {
+        // Assigner boxes are built inside the job (a `Box<dyn _>` map is
+        // not `Sync`); they borrow the shared Step-2 models, which are.
+        let mut assigners: FxHashMap<String, Box<dyn GidAssigner + '_>> =
+            FxHashMap::default();
+        for m in models {
+            assigners.insert(m.name.clone(), Box::new(m));
+        }
+        *out = Some(grid_weights(sdb, feq, tree, &assigners));
+    });
+    let tables: Vec<GridTable> = works
+        .into_iter()
+        .map(|(_, out)| out.expect("every shard job ran"))
+        .collect::<Result<_>>()?;
+    let merged = GridTable::merge(tables)?;
+    Ok(sparse_from_table(merged, models))
 }
 
 /// Convert a Step-3 grid-weight table into the factored [`SparseGrid`] +

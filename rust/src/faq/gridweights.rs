@@ -63,6 +63,45 @@ impl GridTable {
     pub fn mass(&self) -> f64 {
         self.cells.iter().map(|(_, w)| w).sum()
     }
+
+    /// Merge per-shard grid tables by cell-wise weight addition, sorted
+    /// by gid vector (the canonical order [`sparse_from_table`]
+    /// establishes — so a merged table and an unsharded table compare
+    /// cell by cell).
+    ///
+    /// Sharding any single relation of a join partitions the join
+    /// output, so the full grid is exactly the cell-wise sum of the
+    /// per-shard grids. Step 3 counts in the ring ℤ: with integer tuple
+    /// multiplicities below 2⁵³ every per-shard partial sum is an
+    /// exactly-represented f64 integer and the merged weights are
+    /// **bitwise identical** to the single-shard build. Fractional
+    /// multiplicities merge correctly but are subject to f64
+    /// reassociation, like any regrouped sum.
+    ///
+    /// [`sparse_from_table`]: crate::coreset::sparse_from_table
+    pub fn merge(tables: Vec<GridTable>) -> Result<GridTable> {
+        let mut iter = tables.into_iter();
+        let first = iter.next().context("cannot merge zero grid tables")?;
+        let feature_names = first.feature_names;
+        let mut acc: FxHashMap<Vec<u32>, f64> = FxHashMap::default();
+        for (g, w) in first.cells {
+            *acc.entry(g).or_insert(0.0) += w;
+        }
+        for t in iter {
+            anyhow::ensure!(
+                t.feature_names == feature_names,
+                "cannot merge grid tables over different feature sets: {:?} vs {:?}",
+                t.feature_names,
+                feature_names
+            );
+            for (g, w) in t.cells {
+                *acc.entry(g).or_insert(0.0) += w;
+            }
+        }
+        let mut cells: Vec<(Vec<u32>, f64)> = acc.into_iter().collect();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(GridTable { feature_names, cells })
+    }
 }
 
 /// Per-node metadata shared by both evaluation paths.

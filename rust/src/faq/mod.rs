@@ -17,15 +17,20 @@
 //! * [`gridweights`] — the free-variable upward pass computing sparse
 //!   `w_grid` over centroid-id (gid) combinations without enumerating the
 //!   cross-product grid.
+//! * [`shard`] — value-hashed horizontal partitioning of the fact
+//!   relation; per-shard grid tables merge by exact weight addition
+//!   ([`GridTable::merge`]), putting Step 3 on the shared worker pool.
 
 pub mod aggregate;
 pub mod factor;
 pub mod gridweights;
 pub mod semiring;
+pub mod shard;
 pub mod yannakakis;
 
 pub use aggregate::scalar_aggregate;
 pub use factor::Factor;
 pub use gridweights::{grid_weights, GidAssigner, GridTable};
+pub use shard::{shard_databases, shard_of};
 pub use semiring::Semiring;
 pub use yannakakis::{full_join_counts, marginals, output_size, JoinCounts, Marginal};

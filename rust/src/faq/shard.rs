@@ -1,0 +1,183 @@
+//! Horizontal sharding of the designated fact relation for parallel
+//! Step-3 builds.
+//!
+//! Sharding any *single* relation of a join partitions the join output:
+//! every output tuple extends exactly one fact tuple, so the grid-weight
+//! table of the full database is the **cell-wise sum** of the per-shard
+//! tables ([`GridTable::merge`](super::GridTable::merge)). The Step-3 FAQ
+//! is a counting query in the ring ℤ — with integer tuple multiplicities
+//! every partial sum is an exactly-represented f64 integer, so the merged
+//! table is *bitwise identical* to the single-shard build regardless of
+//! how tuples were partitioned (fractional multiplicities are subject to
+//! f64 reassociation, like any regrouped sum).
+//!
+//! The partition is **value-hashed**, not row-ranged: a tuple's shard
+//! depends only on its values, so the incremental layer can route a
+//! `TupleDelta` to the shard holding every copy of that tuple — a delete
+//! lands where its inserts did, preserving per-shard non-negative
+//! multiplicities (see [`crate::incremental::sharded`]).
+
+use crate::data::{Database, Relation, Value};
+use anyhow::{Context, Result};
+
+/// FNV-1a offset basis / prime (the same family as the engine's state
+/// hashing; any stable mix works — this one is allocation-free).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Deterministic shard of a tuple: a stable value hash of the full row,
+/// mod `shards`. Doubles hash by bit pattern with `-0.0` normalized to
+/// `0.0`, matching [`Relation`]'s value-keyed row index, so a tuple and
+/// its later retraction always land on the same shard.
+pub fn shard_of(values: &[Value], shards: usize) -> usize {
+    debug_assert!(shards > 0, "shard count must be positive");
+    let mut h = FNV_OFFSET;
+    for v in values {
+        let k = match v {
+            Value::Int(x) => *x as u64,
+            Value::Cat(c) => *c as u64,
+            Value::Double(x) => {
+                let x = if *x == 0.0 { 0.0 } else { *x };
+                x.to_bits()
+            }
+        };
+        h = (h ^ k).wrapping_mul(FNV_PRIME);
+    }
+    (h % shards as u64) as usize
+}
+
+/// Split `db` into `shards` databases that partition the `fact` relation
+/// by [`shard_of`] and replicate every other relation (dimension tables
+/// are small next to the fact table — the memory cost is `S × |dims|`).
+/// Relation order, schemas, tuple weights and declared FDs carry over, so
+/// each shard is a drop-in input for any FAQ pass over the same join
+/// tree. Zero-weight tombstones are not copied (every FAQ pass already
+/// treats them as absent).
+pub fn shard_databases(db: &Database, fact: &str, shards: usize) -> Result<Vec<Database>> {
+    anyhow::ensure!(shards > 0, "shard count must be positive, got {shards}");
+    let fact_rel =
+        db.get(fact).with_context(|| format!("fact relation {fact:?} missing"))?;
+    let mut out: Vec<Database> = (0..shards)
+        .map(|_| {
+            let mut sdb = Database::new();
+            sdb.fds = db.fds.clone();
+            for rel in db.relations() {
+                if rel.name == fact {
+                    sdb.add(Relation::new(fact, rel.schema.clone()));
+                } else {
+                    sdb.add(rel.clone());
+                }
+            }
+            sdb
+        })
+        .collect();
+    for row in 0..fact_rel.n_rows() {
+        let w = fact_rel.weight(row);
+        if w == 0.0 {
+            continue;
+        }
+        let vals = fact_rel.row(row);
+        let s = shard_of(&vals, shards);
+        let target = out[s].get_mut(fact).expect("fact shard relation exists");
+        if w == 1.0 {
+            target.push_row(&vals);
+        } else {
+            target.push_row_weighted(&vals, w);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Schema};
+
+    fn sample_db() -> Database {
+        let mut fact = Relation::new(
+            "fact",
+            Schema::new(vec![Attr::cat("item", 8), Attr::double("units")]),
+        );
+        for i in 0..50u32 {
+            fact.push_row(&[Value::Cat(i % 8), Value::Double((i % 5) as f64 * 0.5)]);
+        }
+        let mut items =
+            Relation::new("items", Schema::new(vec![Attr::cat("item", 8), Attr::double("p")]));
+        for i in 0..8u32 {
+            items.push_row(&[Value::Cat(i), Value::Double(i as f64)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(items);
+        db.add_fd("item", "p");
+        db
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        let vals = vec![Value::Cat(3), Value::Double(1.5), Value::Int(-7)];
+        for s in [1usize, 2, 7, 16] {
+            let first = shard_of(&vals, s);
+            assert!(first < s);
+            assert_eq!(first, shard_of(&vals, s), "hash must be deterministic");
+        }
+        assert_eq!(shard_of(&vals, 1), 0);
+        // -0.0 and 0.0 are the same tuple value, hence the same shard.
+        assert_eq!(
+            shard_of(&[Value::Double(0.0)], 7),
+            shard_of(&[Value::Double(-0.0)], 7)
+        );
+    }
+
+    #[test]
+    fn shards_partition_the_fact_and_replicate_dims() {
+        let db = sample_db();
+        for s in [1usize, 2, 5] {
+            let shards = shard_databases(&db, "fact", s).unwrap();
+            assert_eq!(shards.len(), s);
+            let total: usize =
+                shards.iter().map(|d| d.get("fact").unwrap().n_rows()).sum();
+            assert_eq!(total, db.get("fact").unwrap().n_rows());
+            for sdb in &shards {
+                assert_eq!(sdb.get("items").unwrap().n_rows(), 8);
+                assert_eq!(sdb.fds, db.fds);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_tuples_land_on_one_shard() {
+        let mut db = sample_db();
+        let dup = vec![Value::Cat(2), Value::Double(9.75)];
+        for _ in 0..4 {
+            db.get_mut("fact").unwrap().push_row(&dup);
+        }
+        let shards = shard_databases(&db, "fact", 3).unwrap();
+        let holders: Vec<usize> = (0..3)
+            .filter(|&s| {
+                let rel = shards[s].get("fact").unwrap();
+                (0..rel.n_rows()).any(|r| rel.row(r) == dup)
+            })
+            .collect();
+        assert_eq!(holders.len(), 1, "all copies of a tuple share a shard");
+        assert_eq!(holders[0], shard_of(&dup, 3));
+    }
+
+    #[test]
+    fn tombstones_are_not_copied() {
+        let mut db = sample_db();
+        let victim = db.get("fact").unwrap().row(0);
+        assert!(db.get_mut("fact").unwrap().retract_row(&victim, 1.0));
+        let before = db.get("fact").unwrap().n_rows(); // storage keeps the tombstone
+        let shards = shard_databases(&db, "fact", 2).unwrap();
+        let total: usize = shards.iter().map(|d| d.get("fact").unwrap().n_rows()).sum();
+        assert_eq!(total, before - 1);
+    }
+
+    #[test]
+    fn missing_fact_or_zero_shards_error() {
+        let db = sample_db();
+        assert!(shard_databases(&db, "nope", 2).is_err());
+        assert!(shard_databases(&db, "fact", 0).is_err());
+    }
+}

@@ -23,6 +23,12 @@
 //!   continuous ones) with a Wasserstein/TV drift trigger. Step-2 gid
 //!   maps stay frozen — which is what keeps the Step-3 delta exact —
 //!   until a subspace's marginal has genuinely moved.
+//! * [`sharded`] — shard-parallel Step 3: per-shard [`DeltaFaq`]
+//!   instances over the value-hashed fact partition
+//!   ([`crate::faq::shard`]), patched as independent jobs on the shared
+//!   worker pool and merged at the root by exact ring-ℤ weight addition,
+//!   with one composed splice log keeping the carried Step-4 state
+//!   aligned with the merged grid.
 //! * [`planner`] — decides per batch between *patch* (Step-3 delta +
 //!   Step-4 warm start from the previous centroids) and *rebuild* (the
 //!   full pipeline), records the decision and estimated savings in
@@ -37,12 +43,14 @@
 pub mod deltafaq;
 pub mod marginal;
 pub mod planner;
+pub mod sharded;
 
 pub use deltafaq::{DeltaFaq, PatchStats};
 pub use marginal::{CatSketch, ContSketch, MarginalTracker};
 pub use planner::{
     IncrementalEngine, IncrementalState, PlanDecision, PlannerOpts, RebuildReason,
 };
+pub use sharded::{DeltaLayer, ShardedDeltaFaq};
 
 use crate::data::{Database, Value};
 use anyhow::{ensure, Result};

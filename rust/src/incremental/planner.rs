@@ -2,19 +2,22 @@
 //! cheap path (Step-3 delta + Step-4 warm start) and the full pipeline.
 //!
 //! **Patch** keeps the Step-2 models (and hence gid maps) frozen, feeds
-//! the batch through [`DeltaFaq::apply`], converts the patched grid with
+//! the batch through [`DeltaLayer::apply`] — one [`DeltaFaq`](super::DeltaFaq)
+//! over the whole database, or per-shard instances patched in parallel
+//! and merged at the root when [`PlannerOpts::shards`] > 1 (see
+//! [`super::sharded`]) — converts the patched grid with
 //! [`crate::coreset::sparse_from_table`], and re-clusters with
 //! [`crate::rkmeans::Coreset::cluster_resume`]: seeded from the previous
 //! version's centroids **and** resumed from the carried Step-4
 //! [`EngineState`] (final assignments + bounds, spliced across the grid
-//! edit via [`DeltaFaq::last_splices`]), so the warm-started Lloyd skips
+//! edit via [`DeltaLayer::last_splices`]), so the warm-started Lloyd skips
 //! the full first assignment scan — per-batch Step-4 cost is
 //! `O(b + changed cells)`, bitwise-identical to the cold warm start.
 //! Steps 1 and 2 are skipped entirely, which is where the
 //! `Õ(|D|)`-per-batch cost of the recompute loop goes away. When a
 //! batch's tombstone ratio passes [`PlannerOpts::compact_ratio`], the
 //! retained Step-3 messages are compacted in place
-//! ([`DeltaFaq::compact`]) to bound delete-heavy resident memory.
+//! ([`DeltaLayer::compact`]) to bound delete-heavy resident memory.
 //!
 //! **Rebuild** is the existing full pipeline
 //! ([`crate::rkmeans::rkmeans_with_tree`]) followed by re-initializing the
@@ -49,7 +52,7 @@ use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::{DeltaFaq, MarginalTracker, TupleDelta};
+use super::{DeltaLayer, MarginalTracker, TupleDelta};
 
 /// Planner thresholds.
 #[derive(Clone, Debug)]
@@ -75,11 +78,20 @@ pub struct PlannerOpts {
     /// the bench ablation arm).
     pub carry_state: bool,
     /// Compact the retained Step-3 state
-    /// ([`DeltaFaq::compact`]) when its tombstone ratio exceeds this
+    /// ([`DeltaLayer::compact`]) when its tombstone ratio exceeds this
     /// (removed entries / live entries; `f64::INFINITY` = never). Bounds
     /// delete-heavy resident memory at the cost of an occasional
     /// `Õ(|D|)` message rebuild.
     pub compact_ratio: f64,
+    /// Horizontal shard count for the Step-3 state (`<= 1` = unsharded).
+    /// `> 1` hash-partitions the fact relation ([`crate::faq::shard`]):
+    /// rebuilds run the grid pass per shard on the shared worker pool
+    /// ([`crate::rkmeans::RkPipeline::coreset_sharded`]) and patches
+    /// apply per-shard [`super::DeltaFaq`] batches in parallel, merged at
+    /// the root ([`super::ShardedDeltaFaq`]). Ring-ℤ exact: on
+    /// integer-weighted databases every published result is bitwise
+    /// identical to the unsharded planner's.
+    pub shards: usize,
 }
 
 impl Default for PlannerOpts {
@@ -91,6 +103,7 @@ impl Default for PlannerOpts {
             max_join_churn: 0.5,
             carry_state: true,
             compact_ratio: 0.5,
+            shards: 1,
         }
     }
 }
@@ -131,8 +144,9 @@ pub struct IncrementalState {
     pub version: u64,
     /// Frozen Step-2 models (gid maps stable across patches).
     pub models: Vec<SubspaceModel>,
-    /// Persistent Step-3 message state.
-    pub delta: DeltaFaq,
+    /// Persistent Step-3 message state (per-shard with merged root when
+    /// [`PlannerOpts::shards`] > 1).
+    pub delta: DeltaLayer,
     /// Marginal sketches + baselines for the drift trigger.
     pub tracker: MarginalTracker,
     /// Step-4 centroids of this version (the warm start for the next).
@@ -197,7 +211,7 @@ impl IncrementalEngine {
         let tree = Hypergraph::from_feq(db, &feq)
             .join_tree()
             .context("incremental maintenance requires an acyclic FEQ")?;
-        let (state, elapsed_s) = Self::full_build(db, &feq, &tree, &rk, 0)?;
+        let (state, elapsed_s) = Self::full_build(db, &feq, &tree, &rk, 0, opts.shards)?;
         let mut engine = IncrementalEngine {
             feq,
             tree,
@@ -220,6 +234,7 @@ impl IncrementalEngine {
         tree: &JoinTree,
         rk: &RkConfig,
         version: u64,
+        shards: usize,
     ) -> Result<(IncrementalState, f64)> {
         let t0 = Instant::now();
         // Staged pipeline over the caller's tree (bitwise-identical to the
@@ -227,17 +242,18 @@ impl IncrementalEngine {
         // explicitly so the Step-4 engine state can be captured: the
         // staged coreset and the delta-maintained grid share the same
         // sorted cell order, so the state carries straight into the first
-        // patch.
+        // patch. With `shards > 1` the Step-3 grid pass runs per shard on
+        // the shared pool (bitwise-identical merge).
         let pipe = RkPipeline::with_tree(db, feq, tree);
         let marginals = pipe.marginals()?;
         let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::from_config(rk))?;
-        let coreset = pipe.coreset(&subspaces)?;
+        let coreset = pipe.coreset_sharded(&subspaces, shards)?;
         let (model, engine_state) =
             coreset.cluster_resume(&ClusterOpts::from_config(rk), None, None);
         let result = Arc::new(model.into_result());
         let delta = {
-            let assigners = assigner_map(&result.models);
-            DeltaFaq::init(db, feq, tree, &assigners)?
+            let models = &result.models;
+            DeltaLayer::init(db, feq, tree, shards, || assigner_map(models))?
         };
         let tracker = MarginalTracker::new(db, feq)?;
         let state = IncrementalState {
@@ -309,8 +325,14 @@ impl IncrementalEngine {
     }
 
     fn rebuild(&mut self, db: &Database, _reason: &RebuildReason) -> Result<f64> {
-        let (state, elapsed) =
-            Self::full_build(db, &self.feq, &self.tree, &self.rk, self.state.version)?;
+        let (state, elapsed) = Self::full_build(
+            db,
+            &self.feq,
+            &self.tree,
+            &self.rk,
+            self.state.version,
+            self.opts.shards,
+        )?;
         self.state = state;
         self.patches_since_rebuild = 0;
         self.join_churn = 0.0;
@@ -324,8 +346,8 @@ impl IncrementalEngine {
     fn try_patch(&mut self, deltas: &[TupleDelta]) -> Result<f64> {
         let t0 = Instant::now();
         let patch_stats = {
-            let assigners = assigner_map(&self.state.models);
-            self.state.delta.apply(deltas, &assigners)?
+            let models = &self.state.models;
+            self.state.delta.apply(deltas, || assigner_map(models))?
         };
         // Keep the carried Step-4 state aligned with the patched grid:
         // replay the batch's structural edits (inserted cells arrive with
@@ -417,6 +439,7 @@ impl IncrementalEngine {
             RebuildReason::PatchFailed(_) => "incremental.rebuilds_patch_failed",
         };
         self.metrics.counter(reason_ctr).inc();
+        self.metrics.gauge("incremental.shards").set(self.state.delta.shard_count() as i64);
         self.metrics.gauge("incremental.version").set(self.state.version as i64);
     }
 
@@ -722,6 +745,47 @@ mod tests {
         }
         // The carry arm actually resumed (bounds survived at least once).
         assert!(m_carry.counter("incremental.resumes").get() >= 1);
+    }
+
+    #[test]
+    fn sharded_planner_matches_single_bitwise() {
+        // `shards` is a pure throughput knob: a planner maintaining four
+        // per-shard delta states (parallel patches, merged root, composed
+        // splice log) must publish bit-identical results to the unsharded
+        // planner, batch after batch, inserts and deletes, through a
+        // forced rebuild.
+        let (mut db, feq) = setup(250, 33);
+        let rk = RkConfig::new(4);
+        let metrics = Metrics::new();
+        // Both engines rebuild on the same schedule (round 3), so the
+        // comparison also covers a sharded rebuild against an unsharded
+        // one — only the `shards` knob differs.
+        let single_opts = PlannerOpts { rebuild_every: 3, ..lenient() };
+        let mut one =
+            IncrementalEngine::new(&db, feq.clone(), rk.clone(), single_opts, Metrics::new())
+                .unwrap();
+        let sharded_opts = PlannerOpts { shards: 4, rebuild_every: 3, ..lenient() };
+        let mut four =
+            IncrementalEngine::new(&db, feq, rk, sharded_opts, metrics.clone()).unwrap();
+        assert_eq!(metrics.gauge("incremental.shards").get(), 4);
+        let mut rng = SplitMix64::new(41);
+        for round in 0..4usize {
+            let mut deltas = batch(&mut rng, 10);
+            if round > 0 {
+                let row = db.get("fact").unwrap().row(round);
+                deltas.push(TupleDelta::delete("fact", row));
+            }
+            apply_to_db(&mut db, &deltas).unwrap();
+            let (d1, r1) = one.apply_batch(&db, &deltas).unwrap();
+            let (_, r2) = four.apply_batch(&db, &deltas).unwrap();
+            if round < 3 {
+                assert_eq!(d1, PlanDecision::Patched, "round {round}");
+            }
+            crate::util::testkit::assert_bitwise_result(&r1, &r2, &format!("round {round}"));
+        }
+        // Round 3 hit the sharded planner's rebuild schedule, so both the
+        // patch path and the sharded rebuild path were exercised.
+        assert_eq!(metrics.counter("incremental.rebuilds_schedule").get(), 1);
     }
 
     #[test]

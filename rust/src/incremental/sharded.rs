@@ -1,0 +1,619 @@
+//! Shard-parallel Step-3 delta maintenance: per-shard [`DeltaFaq`]
+//! instances over the same value-hashed fact partition the build side
+//! uses ([`crate::faq::shard`]), patched in parallel and merged at the
+//! root.
+//!
+//! Sharding any single relation of a join partitions the join output, so
+//! S independent delta states over the fact shards maintain S grids whose
+//! per-cell sum is the full grid. Because the Step-3 FAQ lives in the
+//! ring ℤ, the merge is exact weight addition — on integer-weighted
+//! databases the merged snapshot is **bitwise identical** to a single
+//! unsharded [`DeltaFaq`] over the whole database.
+//!
+//! Routing follows the partition: a [`TupleDelta`] against the fact
+//! relation goes to the one shard [`crate::faq::shard_of`] hashes its
+//! values to (the shard that holds every other copy of that tuple, so
+//! per-shard multiplicities never go negative), while deltas against
+//! replicated dimension relations are broadcast to every shard — exactly
+//! mirroring [`crate::faq::shard_databases`]. Per-shard batches run as
+//! independent jobs on the shared [`ExecPool`](crate::util::exec::ExecPool),
+//! largest batch first.
+//!
+//! After every batch the merged sorted snapshot is recomputed from the
+//! per-shard snapshots and diffed against its predecessor, yielding one
+//! composed [`StateSplice`] log (in application order) that keeps a
+//! carried Step-4 [`EngineState`](crate::cluster::EngineState) aligned
+//! with the merged grid — the same contract as
+//! [`DeltaFaq::last_splices`].
+//!
+//! [`DeltaLayer`] wraps the single- and sharded-state flavors behind one
+//! surface so the planner picks per [`super::PlannerOpts::shards`]
+//! without branching at every call site.
+
+use crate::cluster::StateSplice;
+use crate::data::Database;
+use crate::faq::{shard_databases, shard_of, GidAssigner, GridTable};
+use crate::query::{Feq, JoinTree};
+use crate::util::FxHashMap;
+use anyhow::{Context, Result};
+use std::cmp::Ordering;
+
+use super::{DeltaFaq, PatchStats, TupleDelta};
+
+/// A map of per-feature gid assigners, as [`DeltaFaq::apply`] consumes
+/// it. Boxed assigner maps are not `Sync`, so the parallel entry points
+/// take a `Sync` *factory* and build one map per pool job instead.
+pub type AssignerMap<'m> = FxHashMap<String, Box<dyn GidAssigner + 'm>>;
+
+/// S independent [`DeltaFaq`] states over the value-hashed fact shards,
+/// plus the merged sorted grid snapshot and its composed splice log (see
+/// module docs).
+#[derive(Clone, Debug)]
+pub struct ShardedDeltaFaq {
+    /// The partitioned (fact) relation; everything else is replicated.
+    fact: String,
+    shards: Vec<DeltaFaq>,
+    /// Merged snapshot: per-cell sum over shards, sorted by gid vector.
+    sorted: Vec<(Vec<u32>, f64)>,
+    feature_names: Vec<String>,
+    /// Structural edits of the last [`ShardedDeltaFaq::apply`] against
+    /// the previous merged snapshot, in application order.
+    splices: Vec<StateSplice>,
+}
+
+impl ShardedDeltaFaq {
+    /// Build per-shard delta states from scratch: partition the fact
+    /// relation with [`shard_databases`], then run [`DeltaFaq::init`]
+    /// per shard as independent pool jobs (largest fact shard first).
+    /// The shared `tree` applies to every shard — shard databases keep
+    /// the full relation set and schemas.
+    pub fn init<'m, F>(
+        db: &Database,
+        feq: &Feq,
+        tree: &JoinTree,
+        shards: usize,
+        make_assigners: F,
+    ) -> Result<ShardedDeltaFaq>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        let fact = feq.relations.first().context("FEQ names no relations")?.clone();
+        let shard_dbs = shard_databases(db, &fact, shards)?;
+        let mut order: Vec<usize> = (0..shard_dbs.len()).collect();
+        order.sort_by_key(|&s| {
+            std::cmp::Reverse(shard_dbs[s].get(&fact).map_or(0, |r| r.n_rows()))
+        });
+        let mut works: Vec<(Database, Option<Result<DeltaFaq>>)> =
+            shard_dbs.into_iter().map(|sdb| (sdb, None)).collect();
+        let pool = crate::util::exec::shared_pool();
+        pool.run_chunks_ordered(&mut works, 0, &order, |_, (sdb, out)| {
+            let assigners = make_assigners();
+            *out = Some(DeltaFaq::init(sdb, feq, tree, &assigners));
+        });
+        let shards: Vec<DeltaFaq> = works
+            .into_iter()
+            .map(|(_, out)| out.expect("every shard init ran"))
+            .collect::<Result<_>>()?;
+        let feature_names = shards[0].grid_table().feature_names;
+        let sorted = merge_cells(&shards);
+        Ok(ShardedDeltaFaq { fact, shards, sorted, feature_names, splices: Vec::new() })
+    }
+
+    /// Patch all shards with one delta batch: route fact deltas by
+    /// [`shard_of`], broadcast dimension deltas, apply the non-empty
+    /// per-shard batches in parallel (largest first), then re-merge the
+    /// sorted snapshot and derive the composed splice log. On error the
+    /// state may be partially patched — the caller must rebuild, exactly
+    /// as with [`DeltaFaq::apply`].
+    pub fn apply<'m, F>(&mut self, deltas: &[TupleDelta], make_assigners: F) -> Result<PatchStats>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        let s = self.shards.len();
+        let mut batches: Vec<Vec<TupleDelta>> = vec![Vec::new(); s];
+        for d in deltas {
+            if d.relation == self.fact {
+                batches[shard_of(&d.values, s)].push(d.clone());
+            } else {
+                for b in &mut batches {
+                    b.push(d.clone());
+                }
+            }
+        }
+
+        let stats: Vec<Result<PatchStats>> = {
+            let mut works: Vec<(&mut DeltaFaq, Vec<TupleDelta>, Option<Result<PatchStats>>)> =
+                self.shards.iter_mut().zip(batches).map(|(d, b)| (d, b, None)).collect();
+            let mut order: Vec<usize> = (0..works.len()).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(works[i].1.len()));
+            let pool = crate::util::exec::shared_pool();
+            pool.run_chunks_ordered(&mut works, 0, &order, |_, (delta, batch, out)| {
+                if batch.is_empty() {
+                    // Untouched shard: its snapshot is unchanged, skip the
+                    // empty apply (and the pool job's assigner build).
+                    *out = Some(Ok(PatchStats::default()));
+                    return;
+                }
+                let assigners = make_assigners();
+                *out = Some(delta.apply(batch, &assigners));
+            });
+            works.into_iter().map(|(_, _, out)| out.expect("every shard job ran")).collect()
+        };
+
+        let mut agg = PatchStats { deltas: deltas.len(), ..PatchStats::default() };
+        for st in stats {
+            let st = st?;
+            agg.cells_touched += st.cells_touched;
+            agg.mass_delta_abs += st.mass_delta_abs;
+        }
+        let merged = merge_cells(&self.shards);
+        self.splices = diff_splices(&self.sorted, &merged);
+        self.sorted = merged;
+        agg.grid_cells = self.sorted.len();
+        agg.tombstone_ratio = self.tombstone_ratio();
+        Ok(agg)
+    }
+
+    /// The merged patched grid (clone of the maintained snapshot), in the
+    /// same sorted cell order as [`DeltaFaq::grid_table`].
+    pub fn grid_table(&self) -> GridTable {
+        GridTable { feature_names: self.feature_names.clone(), cells: self.sorted.clone() }
+    }
+
+    /// Structural edits the last [`ShardedDeltaFaq::apply`] made to the
+    /// merged snapshot, in application order (the composed
+    /// [`DeltaFaq::last_splices`] across shards).
+    pub fn last_splices(&self) -> &[StateSplice] {
+        &self.splices
+    }
+
+    /// Number of non-zero merged grid cells `|G|`.
+    pub fn n_cells(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Total merged grid mass (= weighted `|X|`).
+    pub fn mass(&self) -> f64 {
+        self.sorted.iter().map(|(_, w)| w).sum()
+    }
+
+    /// Worst (maximum) per-shard tombstone ratio — compaction triggers
+    /// when *any* shard's retained state has decayed.
+    pub fn tombstone_ratio(&self) -> f64 {
+        self.shards.iter().map(|s| s.tombstone_ratio()).fold(0.0, f64::max)
+    }
+
+    /// Compact every shard ([`DeltaFaq::compact`]). Returns `true` when
+    /// all per-shard cell sets and orders survived — the merged snapshot
+    /// is then unchanged and a carried engine state stays valid. On
+    /// `false` the merged snapshot is recomputed and the splice log
+    /// cleared; the caller must drop any carried state.
+    #[must_use]
+    pub fn compact(&mut self) -> bool {
+        let mut ok = true;
+        for s in &mut self.shards {
+            ok &= s.compact();
+        }
+        if !ok {
+            self.sorted = merge_cells(&self.shards);
+            self.splices.clear();
+        }
+        ok
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Merged sorted cell list: per-cell weight is the sum of the per-shard
+/// weights, accumulated in ascending shard order (deterministic; exact on
+/// ring-ℤ weights). Per-shard snapshots hold only positive cells, so no
+/// zero cells can appear in the sum.
+fn merge_cells(shards: &[DeltaFaq]) -> Vec<(Vec<u32>, f64)> {
+    let mut acc: FxHashMap<Vec<u32>, f64> = FxHashMap::default();
+    for s in shards {
+        for (g, w) in s.grid_table().cells {
+            *acc.entry(g).or_insert(0.0) += w;
+        }
+    }
+    let mut cells: Vec<(Vec<u32>, f64)> = acc.into_iter().collect();
+    cells.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+    cells
+}
+
+/// Diff two sorted snapshots into a [`StateSplice`] log in application
+/// order: positions refer to the evolving list as each edit lands, the
+/// contract [`crate::cluster::EngineState::splice`] expects. Weight-only
+/// changes emit nothing.
+fn diff_splices(old: &[(Vec<u32>, f64)], new: &[(Vec<u32>, f64)]) -> Vec<StateSplice> {
+    let mut ops = Vec::new();
+    let (mut i, mut j, mut pos) = (0usize, 0usize, 0usize);
+    while i < old.len() && j < new.len() {
+        match old[i].0.cmp(&new[j].0) {
+            Ordering::Equal => {
+                i += 1;
+                j += 1;
+                pos += 1;
+            }
+            Ordering::Less => {
+                ops.push(StateSplice::Remove(pos));
+                i += 1;
+            }
+            Ordering::Greater => {
+                ops.push(StateSplice::Insert(pos));
+                pos += 1;
+                j += 1;
+            }
+        }
+    }
+    while i < old.len() {
+        ops.push(StateSplice::Remove(pos));
+        i += 1;
+    }
+    while j < new.len() {
+        ops.push(StateSplice::Insert(pos));
+        pos += 1;
+        j += 1;
+    }
+    ops
+}
+
+/// Single- or shard-parallel Step-3 delta state behind one surface — the
+/// planner's [`IncrementalState`](super::IncrementalState) holds this and
+/// the flavor follows `PlannerOpts::shards` at (re)build time. Both
+/// flavors expose the identical patch contract (apply → splices →
+/// grid table → compact), so the planner's decision procedure never
+/// branches on the flavor.
+#[derive(Clone, Debug)]
+pub enum DeltaLayer {
+    /// One [`DeltaFaq`] over the whole database (`shards <= 1`).
+    Single(DeltaFaq),
+    /// Per-shard states merged at the root.
+    Sharded(ShardedDeltaFaq),
+}
+
+impl DeltaLayer {
+    /// Build the flavor `shards` selects. The factory is invoked once on
+    /// the single path, once per pool job on the sharded path.
+    pub fn init<'m, F>(
+        db: &Database,
+        feq: &Feq,
+        tree: &JoinTree,
+        shards: usize,
+        make_assigners: F,
+    ) -> Result<DeltaLayer>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        if shards <= 1 {
+            let assigners = make_assigners();
+            Ok(DeltaLayer::Single(DeltaFaq::init(db, feq, tree, &assigners)?))
+        } else {
+            Ok(DeltaLayer::Sharded(ShardedDeltaFaq::init(db, feq, tree, shards, make_assigners)?))
+        }
+    }
+
+    /// Patch with one delta batch (see [`DeltaFaq::apply`] /
+    /// [`ShardedDeltaFaq::apply`]). On error the state may be partially
+    /// patched; the caller rebuilds.
+    pub fn apply<'m, F>(&mut self, deltas: &[TupleDelta], make_assigners: F) -> Result<PatchStats>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        match self {
+            DeltaLayer::Single(d) => {
+                let assigners = make_assigners();
+                d.apply(deltas, &assigners)
+            }
+            DeltaLayer::Sharded(s) => s.apply(deltas, make_assigners),
+        }
+    }
+
+    /// The patched grid (merged across shards on the sharded path).
+    pub fn grid_table(&self) -> GridTable {
+        match self {
+            DeltaLayer::Single(d) => d.grid_table(),
+            DeltaLayer::Sharded(s) => s.grid_table(),
+        }
+    }
+
+    /// Structural edits of the last apply, in application order.
+    pub fn last_splices(&self) -> &[StateSplice] {
+        match self {
+            DeltaLayer::Single(d) => d.last_splices(),
+            DeltaLayer::Sharded(s) => s.last_splices(),
+        }
+    }
+
+    /// Compact the retained state; `false` means the cell layout moved
+    /// and any carried engine state must be dropped.
+    #[must_use]
+    pub fn compact(&mut self) -> bool {
+        match self {
+            DeltaLayer::Single(d) => d.compact(),
+            DeltaLayer::Sharded(s) => s.compact(),
+        }
+    }
+
+    /// Number of non-zero grid cells `|G|`.
+    pub fn n_cells(&self) -> usize {
+        match self {
+            DeltaLayer::Single(d) => d.n_cells(),
+            DeltaLayer::Sharded(s) => s.n_cells(),
+        }
+    }
+
+    /// Total grid mass (= weighted `|X|`).
+    pub fn mass(&self) -> f64 {
+        match self {
+            DeltaLayer::Single(d) => d.mass(),
+            DeltaLayer::Sharded(s) => s.mass(),
+        }
+    }
+
+    /// Shard count (1 on the single path).
+    pub fn shard_count(&self) -> usize {
+        match self {
+            DeltaLayer::Single(_) => 1,
+            DeltaLayer::Sharded(s) => s.shard_count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema, Value};
+    use crate::faq::grid_weights;
+    use crate::query::Hypergraph;
+    use crate::util::SplitMix64;
+
+    #[derive(Clone, Copy)]
+    struct ModAssigner {
+        n: u32,
+        claimed: usize,
+    }
+    impl GidAssigner for ModAssigner {
+        fn gid(&self, v: Value) -> u32 {
+            let k = match v {
+                Value::Double(x) => (x * 2.0) as i64 as u64,
+                other => other.key_u64(),
+            };
+            (k % self.n as u64) as u32
+        }
+        fn n_gids(&self) -> usize {
+            self.claimed
+        }
+    }
+
+    fn assigners(n: u32, claimed: usize) -> AssignerMap<'static> {
+        let mut m: AssignerMap<'static> = FxHashMap::default();
+        for a in ["a", "b", "c"] {
+            m.insert(a.to_string(), Box::new(ModAssigner { n, claimed }));
+        }
+        m
+    }
+
+    /// fact(a, b) ⋈ dim(b, c), big enough to populate several shards.
+    fn setup(n_fact: usize, seed: u64) -> (Database, Feq, JoinTree) {
+        let mut rng = SplitMix64::new(seed);
+        let mut fact =
+            Relation::new("fact", Schema::new(vec![Attr::cat("a", 8), Attr::cat("b", 8)]));
+        for _ in 0..n_fact {
+            fact.push_row(&[Value::Cat(rng.below(8) as u32), Value::Cat(rng.below(4) as u32)]);
+        }
+        let mut dim = Relation::new("dim", Schema::new(vec![Attr::cat("b", 8), Attr::cat("c", 8)]));
+        for b in 0..4u32 {
+            dim.push_row(&[Value::Cat(b), Value::Cat(b % 3)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(dim);
+        let feq = Feq::with_features(&["fact", "dim"], &["a", "b", "c"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        (db, feq, tree)
+    }
+
+    fn cells_bits(gt: &GridTable) -> Vec<(Vec<u32>, u64)> {
+        gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect()
+    }
+
+    fn random_batch(rng: &mut SplitMix64, db: &Database, n: usize) -> Vec<TupleDelta> {
+        let mut out = Vec::new();
+        for _ in 0..n {
+            if rng.below(5) < 2 {
+                // Delete a live fact row (re-deriving liveness from the
+                // relation keeps the stream valid under earlier deletes).
+                let fact = db.get("fact").unwrap();
+                let live: Vec<usize> =
+                    (0..fact.n_rows()).filter(|&r| fact.weight(r) > 0.0).collect();
+                if let Some(&r) = live.get(rng.below(live.len().max(1) as u64) as usize) {
+                    out.push(TupleDelta::delete("fact", fact.row(r)));
+                    continue;
+                }
+            }
+            out.push(TupleDelta::insert(
+                "fact",
+                vec![Value::Cat(rng.below(8) as u32), Value::Cat(rng.below(4) as u32)],
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn sharded_init_is_bitwise_identical_to_single() {
+        let (db, feq, tree) = setup(120, 1);
+        let single = DeltaFaq::init(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+        for s in [1usize, 2, 3, 7] {
+            let sharded =
+                ShardedDeltaFaq::init(&db, &feq, &tree, s, || assigners(3, 3)).unwrap();
+            assert_eq!(sharded.shard_count(), s);
+            assert_eq!(
+                cells_bits(&sharded.grid_table()),
+                cells_bits(&single.grid_table()),
+                "S = {s}"
+            );
+            assert_eq!(sharded.n_cells(), single.n_cells());
+            assert_eq!(sharded.mass().to_bits(), single.mass().to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_patches_track_single_bitwise() {
+        // Mixed insert/delete streams, fact and dimension deltas: after
+        // every batch the merged sharded grid must be bitwise identical
+        // to the unsharded delta state and to a from-scratch pass.
+        let (mut db, feq, tree) = setup(150, 2);
+        let mut single = DeltaFaq::init(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+        let mut sharded =
+            ShardedDeltaFaq::init(&db, &feq, &tree, 3, || assigners(3, 3)).unwrap();
+        let mut rng = SplitMix64::new(9);
+        for round in 0..6 {
+            let mut batch = random_batch(&mut rng, &db, 12);
+            if round == 2 {
+                // Dimension churn broadcasts to every shard.
+                batch.push(TupleDelta::insert("dim", vec![Value::Cat(1), Value::Cat(7)]));
+            }
+            super::super::apply_to_db(&mut db, &batch).unwrap();
+            let st1 = single.apply(&batch, &assigners(3, 3)).unwrap();
+            let st2 = sharded.apply(&batch, || assigners(3, 3)).unwrap();
+            assert_eq!(st1.deltas, st2.deltas, "round {round}");
+            assert_eq!(
+                cells_bits(&sharded.grid_table()),
+                cells_bits(&single.grid_table()),
+                "round {round}"
+            );
+            let scratch = grid_weights(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+            assert_eq!(cells_bits(&sharded.grid_table()), cells_bits(&scratch), "round {round}");
+        }
+    }
+
+    #[test]
+    fn splice_log_replays_the_merged_snapshot() {
+        // Shadow replay: applying the composed splice log to the previous
+        // cell list must reproduce the new cell list's shape (the
+        // EngineState::splice contract).
+        let (mut db, feq, tree) = setup(100, 3);
+        let mut sharded =
+            ShardedDeltaFaq::init(&db, &feq, &tree, 4, || assigners(3, 3)).unwrap();
+        let mut shadow: Vec<Option<Vec<u32>>> =
+            sharded.grid_table().cells.iter().map(|(g, _)| Some(g.clone())).collect();
+        let mut rng = SplitMix64::new(17);
+        for _ in 0..5 {
+            let batch = random_batch(&mut rng, &db, 10);
+            super::super::apply_to_db(&mut db, &batch).unwrap();
+            sharded.apply(&batch, || assigners(3, 3)).unwrap();
+            for sp in sharded.last_splices() {
+                match *sp {
+                    StateSplice::Insert(pos) => shadow.insert(pos, None),
+                    StateSplice::Remove(pos) => {
+                        shadow.remove(pos);
+                    }
+                }
+            }
+            let now = sharded.grid_table();
+            assert_eq!(shadow.len(), now.cells.len());
+            for (s, (g, _)) in shadow.iter_mut().zip(&now.cells) {
+                match s {
+                    // Surviving cells keep their identity...
+                    Some(old) => assert_eq!(old, g),
+                    // ...inserted slots adopt the new cell.
+                    None => *s = Some(g.clone()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_shard_multiplicities_stay_valid_under_delete_heavy_streams() {
+        // Delete-heavy: routing deletes to the shard that holds the
+        // matching inserts is what keeps every per-shard multiset
+        // non-negative. Delete every remaining original row, then verify
+        // against from-scratch.
+        let (mut db, feq, tree) = setup(60, 4);
+        let mut sharded =
+            ShardedDeltaFaq::init(&db, &feq, &tree, 5, || assigners(3, 3)).unwrap();
+        let rows: Vec<Vec<Value>> = {
+            let fact = db.get("fact").unwrap();
+            (0..fact.n_rows()).map(|r| fact.row(r)).collect()
+        };
+        for chunk in rows.chunks(7) {
+            let batch: Vec<TupleDelta> =
+                chunk.iter().map(|r| TupleDelta::delete("fact", r.clone())).collect();
+            super::super::apply_to_db(&mut db, &batch).unwrap();
+            sharded.apply(&batch, || assigners(3, 3)).unwrap();
+        }
+        assert_eq!(sharded.mass(), 0.0);
+        assert_eq!(sharded.n_cells(), 0);
+        // Tombstones dominate now; compaction must keep the (empty)
+        // layout and report it survived.
+        assert!(sharded.tombstone_ratio() > 0.0);
+        assert!(sharded.compact());
+        assert_eq!(sharded.n_cells(), 0);
+    }
+
+    #[test]
+    fn shard_errors_propagate() {
+        let (db, feq, tree) = setup(40, 5);
+        let mut sharded =
+            ShardedDeltaFaq::init(&db, &feq, &tree, 3, || assigners(3, 3)).unwrap();
+        let err = sharded
+            .apply(
+                &[TupleDelta::delete("fact", vec![Value::Cat(7), Value::Cat(3)])],
+                || assigners(3, 3),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("not present"), "got: {err}");
+    }
+
+    #[test]
+    fn delta_layer_selects_flavor_and_matches() {
+        let (mut db, feq, tree) = setup(90, 6);
+        let mut one = DeltaLayer::init(&db, &feq, &tree, 1, || assigners(3, 3)).unwrap();
+        let mut four = DeltaLayer::init(&db, &feq, &tree, 4, || assigners(3, 3)).unwrap();
+        assert!(matches!(one, DeltaLayer::Single(_)));
+        assert!(matches!(four, DeltaLayer::Sharded(_)));
+        assert_eq!(one.shard_count(), 1);
+        assert_eq!(four.shard_count(), 4);
+        let mut rng = SplitMix64::new(23);
+        for _ in 0..3 {
+            let batch = random_batch(&mut rng, &db, 8);
+            super::super::apply_to_db(&mut db, &batch).unwrap();
+            one.apply(&batch, || assigners(3, 3)).unwrap();
+            four.apply(&batch, || assigners(3, 3)).unwrap();
+            assert_eq!(cells_bits(&one.grid_table()), cells_bits(&four.grid_table()));
+            assert_eq!(one.mass().to_bits(), four.mass().to_bits());
+        }
+    }
+
+    #[test]
+    fn diff_splices_handles_all_shapes() {
+        let cell = |g: u32, w: f64| (vec![g], w);
+        // Weight-only change: no splices.
+        assert!(diff_splices(&[cell(1, 1.0), cell(2, 1.0)], &[cell(1, 2.0), cell(2, 1.0)])
+            .is_empty());
+        // Pure insert at front, middle, back.
+        assert_eq!(
+            diff_splices(&[cell(2, 1.0)], &[cell(1, 1.0), cell(2, 1.0), cell(3, 1.0)]),
+            vec![StateSplice::Insert(0), StateSplice::Insert(2)]
+        );
+        // Pure removal.
+        assert_eq!(
+            diff_splices(&[cell(1, 1.0), cell(2, 1.0), cell(3, 1.0)], &[cell(2, 1.0)]),
+            vec![StateSplice::Remove(0), StateSplice::Remove(1)]
+        );
+        // Replacement at the same rank: remove-then-insert in order.
+        assert_eq!(
+            diff_splices(&[cell(1, 1.0), cell(3, 1.0)], &[cell(2, 1.0), cell(3, 1.0)]),
+            vec![StateSplice::Remove(0), StateSplice::Insert(0)]
+        );
+        // Empty to empty and empty to full.
+        assert!(diff_splices(&[], &[]).is_empty());
+        assert_eq!(
+            diff_splices(&[], &[cell(1, 1.0), cell(2, 1.0)]),
+            vec![StateSplice::Insert(0), StateSplice::Insert(1)]
+        );
+    }
+}

@@ -31,7 +31,15 @@
 //!   → [`rkmeans::Coreset`] (Step 3) → [`rkmeans::RkModel`] (Step 4).
 //!   Each stage returns an owned artifact later stages borrow, so a
 //!   κ-sweep reuses the marginals and a k-sweep
-//!   ([`rkmeans::Coreset::sweep`]) reuses one coreset; [`rkmeans::RkModel`]
+//!   ([`rkmeans::Coreset::sweep`]) reuses one coreset. Step 3 also
+//!   builds **shard-parallel**
+//!   ([`rkmeans::RkPipeline::coreset_sharded`]): the fact relation is
+//!   value-hash partitioned ([`faq::shard_of`]), one counting-FAQ grid
+//!   is built per shard as a job on the shared pool, and the per-shard
+//!   grids merge by exact ring-ℤ weight addition
+//!   ([`rkmeans::Coreset::from_shards`]) — bitwise-identical to the
+//!   serial build, so parallelism never changes results.
+//!   [`rkmeans::RkModel`]
 //!   is a self-contained, **serializable** serving handle
 //!   (`assign`/`assign_batch` on never-materialized tuples,
 //!   versioned `to_bytes`/`from_bytes` for replica shipping).
@@ -41,9 +49,10 @@
 //!   ([`join`]), the clustering tool-box ([`cluster`]), the grid coreset
 //!   internals ([`coreset`]), a streaming coordinator with backpressure
 //!   and incremental re-clustering ([`coordinator`]), true delta
-//!   maintenance of the grid coreset under tuple inserts/deletes
-//!   ([`incremental`]), a persistent deterministic execution pool shared
-//!   by every Step-4 dispatch ([`util::exec`]), synthetic workloads
+//!   maintenance of the grid coreset under tuple inserts/deletes —
+//!   single-stream or shard-parallel ([`incremental`],
+//!   [`incremental::sharded`]), a persistent deterministic execution
+//!   pool shared by every Step-4 dispatch ([`util::exec`]), synthetic workloads
 //!   mirroring the paper's
 //!   Retailer / Favorita / Yelp datasets ([`synthetic`]) and the
 //!   paper-table bench harness ([`bench_harness`]).

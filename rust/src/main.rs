@@ -41,15 +41,17 @@ USAGE:
   rkmeans gen       --dataset <retailer|favorita|yelp> [--scale F] [--seed N] --out DIR
   rkmeans cluster   (--dataset NAME | --db DIR) --k K [--kappa κ] [--rho ρ] [--scale F]
                     [--seed N] [--engine native|xla] [--bounds auto|hamerly|elkan]
-                    [--precision f64|f32] [--threads N] [--eval-full] [--model-out FILE]
+                    [--precision f64|f32] [--threads N] [--shards S] [--eval-full]
+                    [--model-out FILE]
   rkmeans sweep     (--dataset NAME | --db DIR) [--ks K1,K2,...] [--kappa κ] [--scale F]
                     [--seed N] [--bounds auto|hamerly|elkan] [--precision f64|f32]
-                    [--threads N] [--ladder]
+                    [--threads N] [--shards S] [--ladder]
   rkmeans assign    --model FILE [--values \"v1,v2,...\"]
   rkmeans baseline  (--dataset NAME | --db DIR) --k K [--scale F] [--seed N] [--cap ROWS]
   rkmeans tables    [--which table1|table2|fig3|ablation-fd|ablation-sparse|kappa-sweep|all]
                     [--scale F] [--seed N] [--no-approx]
   rkmeans serve     --dataset NAME [--scale F] [--rate N] [--batches N] [--k K]
+                    [--shards S]
   rkmeans artifacts [--dir DIR]
   rkmeans help
 ";
@@ -171,6 +173,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let bounds = parse_bounds(args.get("bounds"))?;
     let precision = parse_precision(args.get("precision"))?;
     let threads = args.num("threads", 0usize)?;
+    let shards = args.num("shards", 1usize)?;
     let cfg = RkConfig::new(k)
         .with_kappa(kappa)
         .with_regularization(rho)
@@ -182,6 +185,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let engine = args.get("engine").unwrap_or("native");
     let t0 = std::time::Instant::now();
     let res = match engine {
+        // Shard-parallel Steps 1–3 (bitwise-identical to the serial
+        // build); `--shards 1` is the plain staged run.
+        "native" if shards > 1 => {
+            let pipe = RkPipeline::plan(&db, &feq)?;
+            let marginals = pipe.marginals()?;
+            let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::from_config(&cfg))?;
+            let coreset = pipe.coreset_sharded(&subspaces, shards)?;
+            coreset.cluster(&ClusterOpts::from_config(&cfg)).into_result()
+        }
         "native" => RkPipeline::plan(&db, &feq)?.run(&cfg)?.into_result(),
         #[cfg(feature = "pjrt")]
         "xla" => {
@@ -196,6 +208,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
     println!("dataset           : {name}");
     println!("engine            : {engine}");
+    if shards > 1 {
+        println!("step1–3 shards    : {shards}");
+    }
     println!("k / κ             : {} / {}", k, cfg.effective_kappa());
     println!("|G| grid cells    : {}", human_count(res.grid_points as u64));
     println!("grid mass (|X|)   : {}", human_count(res.grid_mass as u64));
@@ -241,6 +256,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let kappa = args.num("kappa", ks.iter().copied().max().unwrap_or(8))?;
     let seed = args.num("seed", 42u64)?;
     let threads = args.num("threads", 0usize)?;
+    let shards = args.num("shards", 1usize)?;
     let engine = EngineOpts::default()
         .with_bounds(parse_bounds(args.get("bounds"))?)
         .with_precision(parse_precision(args.get("precision"))?)
@@ -253,11 +269,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let pipe = RkPipeline::plan(&db, &feq)?;
     let marginals = pipe.marginals()?;
     let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(kappa))?;
-    let coreset = pipe.coreset(&subspaces)?;
+    let coreset = pipe.coreset_sharded(&subspaces, shards)?;
     let shared = t0.elapsed();
     println!(
-        "dataset {name}: shared steps 1–3 in {shared:?} (|G| = {} cells, κ = {kappa}{})",
+        "dataset {name}: shared steps 1–3 in {shared:?} (|G| = {} cells, κ = {kappa}{}{})",
         human_count(coreset.n() as u64),
+        if shards > 1 { format!(", {shards} shards") } else { String::new() },
         if mode == SweepMode::Ladder { ", ladder seeding" } else { "" }
     );
     for model in
@@ -431,6 +448,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let mut cfg = CoordinatorConfig::new(RkConfig::new(k).with_seed(seed));
     cfg.recluster_every = rate;
+    // Shard-parallel Step-3 state in the incremental planner (1 = off).
+    cfg.planner.shards = args.num("shards", 1usize)?;
     let coord = Coordinator::start(db, feq, cfg);
 
     println!("serving {name}: {batches} batches × {rate} tuples into {fact:?}");

@@ -22,6 +22,14 @@
 //! one-shot [`rkmeans`](crate::rkmeans::rkmeans) convenience wrapper
 //! (which is now a thin shim over this module).
 //!
+//! Step 3 can also run shard-parallel: [`RkPipeline::coreset_sharded`]
+//! partitions the fact relation into value-hashed horizontal shards,
+//! builds the per-shard grids as independent jobs on the shared worker
+//! pool, and merges them by exact weight addition
+//! ([`Coreset::from_shards`]) — grid weights are tuple counts in the
+//! ring ℤ, so the merged coreset is bitwise-identical to the serial
+//! build.
+//!
 //! ```no_run
 //! use rkmeans::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
 //! use rkmeans::synthetic::{retailer, Scale};
@@ -48,9 +56,11 @@ use crate::cluster::{
     sparse_lloyd_resume_with, sparse_lloyd_warm_with, CentroidCoord, EngineOpts, EngineState,
     LloydConfig,
 };
-use crate::coreset::{build_grid, solve_subspaces_regularized, SubspaceModel};
+use crate::coreset::{
+    build_grid, build_grid_sharded, solve_subspaces_regularized, sparse_from_table, SubspaceModel,
+};
 use crate::data::Database;
-use crate::faq::{full_join_counts, marginals as faq_marginals, Marginal};
+use crate::faq::{full_join_counts, marginals as faq_marginals, GridTable, Marginal};
 use crate::join::ensure_acyclic;
 use crate::query::{Feq, Hypergraph, JoinTree};
 use crate::util::{FxHashMap, SplitMix64};
@@ -389,6 +399,71 @@ impl Coreset {
         }
         out
     }
+
+    /// Merge two coreset shards built with the **same Step-2 models**
+    /// over a partition of the fact relation: cell-wise weight addition
+    /// on the shared per-dimension grid. Equivalent to
+    /// [`Coreset::from_shards`] on the pair.
+    pub fn merge(self, other: Coreset) -> Result<Coreset> {
+        Coreset::from_shards(vec![self, other])
+    }
+
+    /// Merge any number of coreset shards into the coreset of the union
+    /// database: the shards' sparse grids are summed cell-wise and
+    /// re-sorted into the canonical cell order, under the shared Step-2
+    /// models (which every shard must agree on — same subspaces, same
+    /// κ_j).
+    ///
+    /// Grid weights are join-output tuple counts (ring ℤ), so with
+    /// integer multiplicities below 2⁵³ the merged weights are **bitwise
+    /// identical** to a single unsharded [`RkPipeline::coreset`] build
+    /// over the union — `tests/property_shard.rs` pins this for shard
+    /// counts 1, 2 and 7. Step-3 elapsed time is the max over shards
+    /// (the shards build in parallel); Step-1/2 timings are inherited
+    /// from the first shard.
+    pub fn from_shards(mut shards: Vec<Coreset>) -> Result<Coreset> {
+        anyhow::ensure!(!shards.is_empty(), "cannot merge zero coreset shards");
+        let names: Vec<String> = shards[0].models.iter().map(|m| m.name.clone()).collect();
+        for s in &shards[1..] {
+            let other: Vec<String> = s.models.iter().map(|m| m.name.clone()).collect();
+            anyhow::ensure!(
+                other == names,
+                "coreset shards disagree on subspaces: {other:?} vs {names:?}"
+            );
+            for (a, b) in shards[0].models.iter().zip(&s.models) {
+                anyhow::ensure!(
+                    a.n_gids() == b.n_gids(),
+                    "coreset shards disagree on κ for subspace {:?} ({} vs {})",
+                    a.name,
+                    b.n_gids(),
+                    a.n_gids()
+                );
+            }
+        }
+        let models = std::mem::take(&mut shards[0].models);
+        let step3 = shards.iter().map(|s| s.elapsed).max().unwrap_or_default();
+        let mut timings123 = shards[0].timings123.clone();
+        timings123.step3_grid = step3;
+        let tables: Vec<GridTable> =
+            shards.iter().map(|s| grid_to_table(&s.grid, &names)).collect();
+        let merged = GridTable::merge(tables)?;
+        let (grid, subspaces) = sparse_from_table(merged, &models);
+        Ok(Coreset { grid, subspaces, models, elapsed: step3, timings123 })
+    }
+}
+
+/// A [`SparseGrid`] back in [`GridTable`] form (the merge substrate).
+fn grid_to_table(grid: &SparseGrid, feature_names: &[String]) -> GridTable {
+    let m = grid.m;
+    GridTable {
+        feature_names: feature_names.to_vec(),
+        cells: grid
+            .weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| (grid.gids[i * m..(i + 1) * m].to_vec(), w))
+            .collect(),
+    }
 }
 
 /// How [`Coreset::sweep_with`] seeds each k.
@@ -544,6 +619,44 @@ impl<'a> RkPipeline<'a> {
     pub fn coreset(&self, subspaces: &SubspaceSet) -> Result<Coreset> {
         let t0 = Instant::now();
         let (grid, subs) = build_grid(self.db(), self.feq(), &self.tree, &subspaces.models)?;
+        let elapsed = t0.elapsed();
+        if grid.n() == 0 {
+            anyhow::bail!("FEQ output is empty: nothing to cluster");
+        }
+        Ok(Coreset {
+            grid,
+            subspaces: subs,
+            models: subspaces.models.clone(),
+            elapsed,
+            timings123: StepTimings {
+                step1_marginals: subspaces.step1_elapsed,
+                step2_subspaces: subspaces.elapsed,
+                step3_grid: elapsed,
+                step4_cluster: Duration::default(),
+            },
+        })
+    }
+
+    /// Sharded Step 3: the same coreset as [`RkPipeline::coreset`], built
+    /// from `shards` value-hashed horizontal shards of the fact relation
+    /// (the FEQ's first relation) running as independent grid-weight
+    /// jobs on the process-wide worker pool and merged by exact weight
+    /// addition ([`crate::coreset::build_grid_sharded`]).
+    ///
+    /// Grid weights are tuple counts in the ring ℤ, so the result is
+    /// **bitwise identical** to the unsharded build for any shard count;
+    /// `shards <= 1` delegates to [`RkPipeline::coreset`] outright. This
+    /// takes Steps 1–3 — the half of the pipeline the pool never reached
+    /// — off the serial path: wall-clock scales with cores until the
+    /// merge and the largest shard dominate. Must not be called from
+    /// inside a pool worker (the pool is not reentrant).
+    pub fn coreset_sharded(&self, subspaces: &SubspaceSet, shards: usize) -> Result<Coreset> {
+        if shards <= 1 {
+            return self.coreset(subspaces);
+        }
+        let t0 = Instant::now();
+        let (grid, subs) =
+            build_grid_sharded(self.db(), self.feq(), &self.tree, &subspaces.models, shards)?;
         let elapsed = t0.elapsed();
         if grid.n() == 0 {
             anyhow::bail!("FEQ output is empty: nothing to cluster");
@@ -725,6 +838,74 @@ mod tests {
                 w[1].objective_grid
             );
         }
+    }
+
+    #[test]
+    fn sharded_coreset_is_bitwise_identical_and_clusters_identically() {
+        let (db, feq) = setup(260, 9);
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        let serial = pipe.coreset(&subspaces).unwrap();
+        for shards in [1usize, 2, 3, 8] {
+            let sharded = pipe.coreset_sharded(&subspaces, shards).unwrap();
+            assert_eq!(sharded.n(), serial.n(), "S={shards}");
+            assert_eq!(sharded.grid.gids, serial.grid.gids, "S={shards}");
+            for (i, (a, b)) in
+                sharded.grid.weights.iter().zip(&serial.grid.weights).enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "S={shards} cell {i}");
+            }
+            let a = sharded.cluster(&ClusterOpts::new(3)).into_result();
+            let b = serial.cluster(&ClusterOpts::new(3)).into_result();
+            assert_bitwise_result(&b, &a, &format!("S={shards}"));
+        }
+    }
+
+    #[test]
+    fn from_shards_merges_hand_built_shards() {
+        use crate::faq::shard_databases;
+        let (db, feq) = setup(230, 10);
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(3)).unwrap();
+        let serial = pipe.coreset(&subspaces).unwrap();
+
+        let shard_dbs = shard_databases(&db, &feq.relations[0], 3).unwrap();
+        let parts: Vec<Coreset> = shard_dbs
+            .iter()
+            .map(|sdb| {
+                let tree = Hypergraph::from_feq(sdb, &feq).join_tree().unwrap();
+                let (grid, subs) = build_grid(sdb, &feq, &tree, &subspaces.models).unwrap();
+                Coreset::from_parts(grid, subs, subspaces.models.clone())
+            })
+            .collect();
+        let merged = Coreset::from_shards(parts).unwrap();
+        assert_eq!(merged.grid.gids, serial.grid.gids);
+        for (a, b) in merged.grid.weights.iter().zip(&serial.grid.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // Pairwise merge goes through the same path.
+        let two = shard_databases(&db, &feq.relations[0], 2)
+            .unwrap()
+            .iter()
+            .map(|sdb| {
+                let tree = Hypergraph::from_feq(sdb, &feq).join_tree().unwrap();
+                let (grid, subs) = build_grid(sdb, &feq, &tree, &subspaces.models).unwrap();
+                Coreset::from_parts(grid, subs, subspaces.models.clone())
+            })
+            .collect::<Vec<_>>();
+        let mut it = two.into_iter();
+        let merged2 = it.next().unwrap().merge(it.next().unwrap()).unwrap();
+        assert_eq!(merged2.grid.gids, serial.grid.gids);
+
+        // Zero shards is an error, mismatched κ is an error.
+        assert!(Coreset::from_shards(Vec::new()).is_err());
+        let other_kappa = pipe.subspaces(&marginals, &SubspaceOpts::new(2)).unwrap();
+        let a = pipe.coreset(&subspaces).unwrap();
+        let b = pipe.coreset(&other_kappa).unwrap();
+        assert!(a.merge(b).is_err());
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Property tests for sharded Step 1–3 construction: for any shard count
+//! the merged build must be **bitwise equal** to the unsharded one — on
+//! the paper synthetics, on a cyclic (rewritten) FEQ, and for the
+//! incremental per-shard `DeltaFaq` layer under delete-heavy streams.
+//!
+//! Bitwise equality holds because grid weights are tuple counts in the
+//! ring ℤ: every per-shard weight is an exactly-represented f64 integer,
+//! so per-shard accumulation followed by an exact merge addition lands on
+//! the same bits as one serial pass (see `faq::shard` and
+//! `incremental::sharded`).
+
+use rkmeans::data::{Attr, Database, Relation, Schema, Value};
+use rkmeans::faq::{grid_weights, shard_of, GidAssigner, GridTable};
+use rkmeans::incremental::sharded::AssignerMap;
+use rkmeans::incremental::{apply_to_db, DeltaFaq, DeltaLayer, ShardedDeltaFaq, TupleDelta};
+use rkmeans::query::{Feq, Hypergraph};
+use rkmeans::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+use rkmeans::synthetic::{retailer, retailer_trace, Dataset, Scale, TraceSpec};
+use rkmeans::util::testkit::{assert_bitwise_result, for_cases};
+use rkmeans::util::{FxHashMap, SplitMix64};
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 7];
+
+/// Assert two coresets carry the identical sparse grid, bit for bit.
+fn assert_grid_bits(
+    serial: &rkmeans::rkmeans::Coreset,
+    sharded: &rkmeans::rkmeans::Coreset,
+    label: &str,
+) {
+    assert_eq!(sharded.n(), serial.n(), "{label}: cell count");
+    assert_eq!(sharded.grid.gids, serial.grid.gids, "{label}: gid vectors");
+    for (i, (a, b)) in sharded.grid.weights.iter().zip(&serial.grid.weights).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: weight of cell {i}");
+    }
+}
+
+#[test]
+fn from_shards_bitwise_on_paper_synthetics() {
+    for ds in [Dataset::Retailer, Dataset::Favorita] {
+        let db = ds.generate(Scale::tiny(), 17);
+        let feq = ds.feq();
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        let serial = pipe.coreset(&subspaces).unwrap();
+        for shards in SHARD_COUNTS {
+            let label = format!("{} S={shards}", ds.name());
+            let sharded = pipe.coreset_sharded(&subspaces, shards).unwrap();
+            assert_grid_bits(&serial, &sharded, &label);
+            // Step 4 over the merged coreset is therefore identical too.
+            let a = serial.cluster(&ClusterOpts::new(5)).into_result();
+            let b = sharded.cluster(&ClusterOpts::new(5)).into_result();
+            assert_bitwise_result(&a, &b, &label);
+        }
+    }
+}
+
+/// A triangle query with payload features (cyclic: the planner rewrites
+/// it, and the shard partition applies to the rewritten fact relation).
+fn cyclic_setup() -> (Database, Feq) {
+    let mut rng = SplitMix64::new(41);
+    let mk = |name: &str, a: &str, b: &str, rng: &mut SplitMix64| {
+        let mut r = Relation::new(
+            name,
+            Schema::new(vec![
+                Attr::cat(a, 5),
+                Attr::cat(b, 5),
+                Attr::double(&format!("p_{name}")),
+            ]),
+        );
+        for _ in 0..40 {
+            r.push_row(&[
+                Value::Cat(rng.below(5) as u32),
+                Value::Cat(rng.below(5) as u32),
+                Value::Double(rng.below(8) as f64),
+            ]);
+        }
+        r
+    };
+    let mut db = Database::new();
+    db.add(mk("r", "a", "b", &mut rng));
+    db.add(mk("s", "b", "c", &mut rng));
+    db.add(mk("t", "c", "a", &mut rng));
+    let feq = Feq::with_features(&["r", "s", "t"], &["p_r", "p_s", "p_t", "a", "b", "c"]);
+    (db, feq)
+}
+
+#[test]
+fn from_shards_bitwise_on_cyclic_triangle() {
+    let (db, feq) = cyclic_setup();
+    assert!(Hypergraph::from_feq(&db, &feq).join_tree().is_err(), "should be cyclic");
+    let pipe = RkPipeline::plan(&db, &feq).unwrap();
+    assert!(pipe.was_rewritten());
+    let marginals = pipe.marginals().unwrap();
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(3)).unwrap();
+    let serial = pipe.coreset(&subspaces).unwrap();
+    for shards in SHARD_COUNTS {
+        let sharded = pipe.coreset_sharded(&subspaces, shards).unwrap();
+        assert_grid_bits(&serial, &sharded, &format!("triangle S={shards}"));
+    }
+}
+
+/// Gid assigner: key (or value·4 for doubles) mod n.
+struct ModAssigner {
+    n: u32,
+}
+impl GidAssigner for ModAssigner {
+    fn gid(&self, v: Value) -> u32 {
+        let k = match v {
+            Value::Double(x) => ((x * 4.0) as i64).rem_euclid(self.n as i64) as u64,
+            other => other.key_u64(),
+        };
+        (k % self.n as u64) as u32
+    }
+    fn n_gids(&self) -> usize {
+        self.n as usize
+    }
+}
+
+const FEATURES: [&str; 6] = ["pay", "c0", "x0", "c1", "c2", "x2"];
+
+fn assigners(n: u32) -> AssignerMap<'static> {
+    let mut m: AssignerMap<'static> = FxHashMap::default();
+    for a in FEATURES {
+        m.insert(a.to_string(), Box::new(ModAssigner { n }));
+    }
+    m
+}
+
+/// The shadow database: per relation, a list of unit-weight tuples. The
+/// oracle rebuilds a `Database` from it after every batch.
+struct Shadow {
+    schemas: Vec<(String, Schema)>,
+    rows: Vec<Vec<Vec<Value>>>,
+}
+
+impl Shadow {
+    fn to_db(&self) -> Database {
+        let mut db = Database::new();
+        for ((name, schema), rows) in self.schemas.iter().zip(&self.rows) {
+            let mut rel = Relation::new(name, schema.clone());
+            for r in rows {
+                rel.push_row(r);
+            }
+            db.add(rel);
+        }
+        db
+    }
+}
+
+/// Chain + star schema exercising multi-hop propagation: fact(j0, j1,
+/// pay) ⋈ dim0(j0, c0, x0) ⋈ dim1(j1, j2, c1) ⋈ deep(j2, c2, x2).
+fn random_instance(rng: &mut SplitMix64) -> (Shadow, Feq) {
+    let dom = 3 + rng.below(4) as u32;
+    let schemas = vec![
+        (
+            "fact".to_string(),
+            Schema::new(vec![Attr::cat("j0", dom), Attr::cat("j1", dom), Attr::cat("pay", 6)]),
+        ),
+        (
+            "dim0".to_string(),
+            Schema::new(vec![Attr::cat("j0", dom), Attr::cat("c0", 5), Attr::double("x0")]),
+        ),
+        (
+            "dim1".to_string(),
+            Schema::new(vec![Attr::cat("j1", dom), Attr::cat("j2", dom), Attr::cat("c1", 5)]),
+        ),
+        (
+            "deep".to_string(),
+            Schema::new(vec![Attr::cat("j2", dom), Attr::cat("c2", 4), Attr::double("x2")]),
+        ),
+    ];
+    let mut rows: Vec<Vec<Vec<Value>>> = vec![Vec::new(); 4];
+    for (rel, row_list) in rows.iter_mut().enumerate() {
+        let n = 8 + rng.below(15) as usize;
+        for _ in 0..n {
+            row_list.push(fresh_row(rel, dom, rng));
+        }
+    }
+    let feq = Feq::with_features(&["fact", "dim0", "dim1", "deep"], &FEATURES);
+    (Shadow { schemas, rows }, feq)
+}
+
+fn fresh_row(rel: usize, dom: u32, rng: &mut SplitMix64) -> Vec<Value> {
+    let key = |rng: &mut SplitMix64| Value::Cat(rng.below(dom as u64) as u32);
+    let frac = |rng: &mut SplitMix64| Value::Double(rng.below(8) as f64 * 0.25);
+    match rel {
+        0 => vec![key(rng), key(rng), Value::Cat(rng.below(6) as u32)],
+        1 => vec![key(rng), Value::Cat(rng.below(5) as u32), frac(rng)],
+        2 => vec![key(rng), key(rng), Value::Cat(rng.below(5) as u32)],
+        3 => vec![key(rng), Value::Cat(rng.below(4) as u32), frac(rng)],
+        _ => unreachable!(),
+    }
+}
+
+/// Delete-heavy random batch (~70% deletes while tuples remain), applied
+/// to the shadow as generated so deletes always reference live tuples.
+/// Touches the partitioned fact relation and the broadcast dimension
+/// relations alike.
+fn delete_heavy_batch(shadow: &mut Shadow, dom: u32, rng: &mut SplitMix64) -> Vec<TupleDelta> {
+    let n = 4 + rng.below(10) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rel = rng.below(4) as usize;
+        let delete = rng.coin(0.7) && !shadow.rows[rel].is_empty();
+        if delete {
+            let i = rng.below(shadow.rows[rel].len() as u64) as usize;
+            let vals = shadow.rows[rel].swap_remove(i);
+            out.push(TupleDelta::delete(&shadow.schemas[rel].0, vals));
+        } else {
+            let vals = fresh_row(rel, dom, rng);
+            shadow.rows[rel].push(vals.clone());
+            out.push(TupleDelta::insert(&shadow.schemas[rel].0, vals));
+        }
+    }
+    out
+}
+
+fn cells_bits(gt: &GridTable) -> FxHashMap<Vec<u32>, u64> {
+    gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect()
+}
+
+#[test]
+fn sharded_delta_bitwise_equals_scratch_under_delete_heavy_streams() {
+    for_cases(10, |rng| {
+        let (mut shadow, feq) = random_instance(rng);
+        let dom = shadow.schemas[0].1.attr(0).domain;
+        let kappa = 2 + rng.below(3) as u32;
+        let shards = [2usize, 7][rng.below(2) as usize];
+
+        let db0 = shadow.to_db();
+        let tree = Hypergraph::from_feq(&db0, &feq).join_tree().expect("acyclic");
+        let mut delta =
+            ShardedDeltaFaq::init(&db0, &feq, &tree, shards, || assigners(kappa)).expect("init");
+        assert_eq!(delta.shard_count(), shards);
+
+        for round in 0..6 {
+            let batch = delete_heavy_batch(&mut shadow, dom, rng);
+            delta.apply(&batch, || assigners(kappa)).expect("apply");
+
+            // Oracle: rebuild the database and run the batch evaluator.
+            let db = shadow.to_db();
+            let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+            let asg = assigners(kappa);
+            let scratch = grid_weights(&db, &feq, &tree, &asg).expect("scratch");
+            let inc = delta.grid_table();
+            assert_eq!(inc.feature_names, scratch.feature_names, "round {round}");
+            assert_eq!(
+                cells_bits(&inc),
+                cells_bits(&scratch),
+                "round {round} S={shards}: sharded delta diverged from scratch"
+            );
+        }
+        // Compaction after heavy churn must keep the merged grid intact.
+        let before = cells_bits(&delta.grid_table());
+        let _ = delta.compact();
+        assert_eq!(before, cells_bits(&delta.grid_table()), "compaction changed the grid");
+    });
+}
+
+/// Deletes route to the shard that holds their insert: draining every
+/// fact tuple leaves all shards with exactly-zero fact mass and no
+/// negative multiplicities (apply would fail at the root assert).
+#[test]
+fn draining_the_fact_relation_empties_every_shard() {
+    let mut rng = SplitMix64::new(77);
+    let (mut shadow, feq) = random_instance(&mut rng);
+    let db0 = shadow.to_db();
+    let tree = Hypergraph::from_feq(&db0, &feq).join_tree().expect("acyclic");
+    let mut delta = ShardedDeltaFaq::init(&db0, &feq, &tree, 5, || assigners(3)).expect("init");
+    assert!(delta.mass() > 0.0);
+
+    while !shadow.rows[0].is_empty() {
+        let take = (shadow.rows[0].len()).min(7);
+        let batch: Vec<TupleDelta> = (0..take)
+            .map(|_| {
+                let i = rng.below(shadow.rows[0].len() as u64) as usize;
+                TupleDelta::delete("fact", shadow.rows[0].swap_remove(i))
+            })
+            .collect();
+        // Every delete hashes to the shard its insert landed on.
+        for d in &batch {
+            assert!(shard_of(&d.values, 5) < 5);
+        }
+        delta.apply(&batch, || assigners(3)).expect("apply");
+    }
+    assert_eq!(delta.mass(), 0.0, "empty join must have zero grid mass");
+    assert_eq!(delta.n_cells(), 0);
+}
+
+/// The shared Retailer trace (delete-heavy variant) replays through the
+/// sharded layer and stays bitwise-consistent with both a single
+/// `DeltaFaq` and from-scratch evaluation, splice logs included.
+#[test]
+fn retailer_trace_delete_heavy_sharded_matches_single() {
+    let mut db = retailer::generate(Scale::tiny(), 11);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+    let mk = || {
+        let mut m: AssignerMap<'static> = FxHashMap::default();
+        for f in &retailer::feq().features {
+            m.insert(f.attr.clone(), Box::new(ModAssigner { n: 3 }) as Box<dyn GidAssigner>);
+        }
+        m
+    };
+    let mut single = DeltaFaq::init(&db, &feq, &tree, &mk()).expect("init single");
+    let mut layer = DeltaLayer::init(&db, &feq, &tree, 4, mk).expect("init layer");
+    assert_eq!(layer.shard_count(), 4);
+
+    let trace =
+        retailer_trace(&db, 29, TraceSpec { batches: 4, batch_size: 40, delete_frac: 0.5 });
+    for (round, batch) in trace.iter().enumerate() {
+        apply_to_db(&mut db, batch).expect("replay");
+        single.apply(batch, &mk()).expect("apply single");
+        layer.apply(batch, mk).expect("apply layer");
+        assert_eq!(
+            cells_bits(&single.grid_table()),
+            cells_bits(&layer.grid_table()),
+            "batch {round}: sharded layer diverged from single"
+        );
+        let scratch = grid_weights(&db, &feq, &tree, &mk()).expect("scratch");
+        assert_eq!(cells_bits(&layer.grid_table()), cells_bits(&scratch), "batch {round}");
+    }
+}
