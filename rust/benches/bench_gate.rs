@@ -1,10 +1,10 @@
 //! Bench gate — the CI regression check over the bench trajectory
 //! (ROADMAP "bench trajectory in CI" item).
 //!
-//! Reads `BENCH_lloyd.json`, `BENCH_stream.json`, `BENCH_sweep.json`
-//! and `BENCH_shard.json` (as emitted by the smoke runs of
-//! `kernel_lloyd`, `stream_ingest`, `k_sweep` and `shard_build`
-//! earlier in the CI job) plus the committed baseline
+//! Reads `BENCH_lloyd.json`, `BENCH_stream.json`, `BENCH_sweep.json`,
+//! `BENCH_shard.json` and `BENCH_serve.json` (as emitted by the smoke
+//! runs of `kernel_lloyd`, `stream_ingest`, `k_sweep`, `shard_build`
+//! and `serve_load` earlier in the CI job) plus the committed baseline
 //! `bench_baseline.json`, and **fails (exit 1)** when a tracked
 //! throughput metric regresses more than the baseline's tolerance
 //! (default 20 %) below its committed value:
@@ -23,13 +23,19 @@
 //! * `shard_build_speedup` — `speedup_vs_serial` of the `sharded-max`
 //!   shard record: parallel Step-3 grid construction at S = available
 //!   cores vs. the serial build (a ratio; grids are asserted
-//!   bitwise-identical by the emitting bench, so only speed is gated).
+//!   bitwise-identical by the emitting bench, so only speed is gated);
+//! * `serve_qps_speedup` — `speedup_vs_naive` of the `mesh` serve
+//!   record: micro-batched assignment through the serving front vs.
+//!   the un-batched one-call-per-request loop (a ratio);
+//! * `serve_delta_bytes_ratio` — `delta_bytes_ratio` of the `delta`
+//!   serve record: cumulative snapshot bytes / delta wire bytes over
+//!   the bench's publishes (size, not speed — machine-independent).
 //!
 //! Baseline values are calibrated for the `--test` smoke shapes and set
 //! conservatively; raise them as the engines get faster so the trajectory
 //! ratchets. Env overrides: `RKMEANS_BASELINE`, `RKMEANS_BENCH_OUT`,
-//! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT`, `RKMEANS_SHARD_OUT` (same
-//! paths the emitting benches use).
+//! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT`, `RKMEANS_SHARD_OUT`,
+//! `RKMEANS_SERVE_OUT` (same paths the emitting benches use).
 
 use rkmeans::util::json::{parse, Json};
 use std::path::PathBuf;
@@ -60,6 +66,7 @@ fn main() {
     let stream_path = env_path("RKMEANS_STREAM_OUT", "BENCH_stream.json");
     let sweep_path = env_path("RKMEANS_SWEEP_OUT", "BENCH_sweep.json");
     let shard_path = env_path("RKMEANS_SHARD_OUT", "BENCH_shard.json");
+    let serve_path = env_path("RKMEANS_SERVE_OUT", "BENCH_serve.json");
 
     let mut failures: Vec<String> = Vec::new();
     let baseline = match read_json(&baseline_path) {
@@ -141,6 +148,24 @@ fn main() {
             gate(
                 "shard_build_speedup",
                 rec.and_then(|r| r.get("speedup_vs_serial")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    match read_json(&serve_path) {
+        Ok(doc) => {
+            let mesh = find_record(&doc, &[("mode", "mesh")]);
+            gate(
+                "serve_qps_speedup",
+                mesh.and_then(|r| r.get("speedup_vs_naive")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+            let delta = find_record(&doc, &[("mode", "delta")]);
+            gate(
+                "serve_delta_bytes_ratio",
+                delta.and_then(|r| r.get("delta_bytes_ratio")).and_then(|v| v.as_f64()),
                 &mut failures,
             );
         }

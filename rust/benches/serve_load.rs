@@ -1,0 +1,163 @@
+//! Bench W3 — the serving tier (`rkmeans::serve`): micro-batched
+//! assignment through the `ModelMesh`/`AssignFront` vs. the un-batched
+//! one-`assign`-per-request loop, plus centroid-delta publication bytes
+//! vs. full snapshots while the mesh is under load (hot swaps under
+//! fire). Three arms:
+//!
+//! * `naive` — one thread calling [`RkModel::assign`] per request: the
+//!   reference the `serve_qps_speedup` gate metric is relative to;
+//! * `mesh`  — open-loop clients through the batching front over a
+//!   replicated mesh on the shared pool (the acceptance arm);
+//! * `delta` — the same load while a writer replays an incremental
+//!   patch trace and publishes every version as a verified
+//!   [`ModelDelta`]; cumulative delta vs. snapshot wire bytes become
+//!   the `serve_delta_bytes_ratio` gate metric.
+//!
+//! Results are written as one `BENCH_serve.json` document (schema: see
+//! `bench_harness` docs; path override: `RKMEANS_SERVE_OUT`).
+//! Acceptance targets: mesh ≥ 2× naive QPS on the Retailer workload,
+//! deltas ≤ 0.5× snapshot bytes (ratio ≥ 2×), and served versions
+//! monotone under concurrent publication.
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_SERVE_SCALE` overrides the Retailer scale (default 0.1).
+//!
+//! [`RkModel::assign`]: rkmeans::rkmeans::RkModel::assign
+//! [`ModelDelta`]: rkmeans::serve::ModelDelta
+
+use rkmeans::bench_harness::{write_bench_serve, ServeBenchRecord};
+use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlannerOpts};
+use rkmeans::metrics::Metrics;
+use rkmeans::rkmeans::RkConfig;
+use rkmeans::serve::{
+    run_naive_loop, run_open_loop, synth_rows, AssignFront, FrontOpts, LoadSpec, ModelMesh,
+    Publisher,
+};
+use rkmeans::synthetic::{retailer, retailer_trace, Scale, TraceSpec};
+use rkmeans::util::exec::{resolve_threads, shared_pool};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale: f64 = std::env::var("RKMEANS_SERVE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.02 } else { 0.1 });
+    // Big enough k·κ that one factored assign outweighs per-request
+    // queueing overhead — the regime the batching front is built for.
+    let (k, kappa) = if test_mode { (32, 16) } else { (64, 32) };
+    let naive_requests = if test_mode { 5_000 } else { 50_000 };
+    let mesh_requests = if test_mode { 10_000 } else { 100_000 };
+    let publishes = if test_mode { 3 } else { 5 };
+    let clients = resolve_threads(0).clamp(2, 8);
+    let replicas = 2;
+    let batch = 64;
+    let seed = 42u64;
+
+    let mut db = retailer::generate(Scale::custom(scale), seed);
+    let feq = retailer::feq();
+    println!(
+        "serve workload: |D|={} rows (scale {scale}), k={k} κ={kappa}, {clients} clients, \
+         {replicas} replicas, batch ≤ {batch}",
+        db.total_rows()
+    );
+
+    // Writer state: the incremental engine with the planner forced onto
+    // the patch path, so published versions differ by moved centroid
+    // rows only — the delta wire format's best (and intended) case.
+    let lenient = PlannerOpts {
+        drift_threshold: f64::INFINITY,
+        max_patch_fraction: 1.0,
+        max_join_churn: f64::INFINITY,
+        ..PlannerOpts::default()
+    };
+    let metrics = Metrics::new();
+    let rk = RkConfig::new(k).with_kappa(kappa).with_seed(seed);
+    let mut engine = IncrementalEngine::new(&db, feq, rk, lenient, metrics.clone())?;
+    let model = engine.model();
+    let rows = synth_rows(&model, 512, 7);
+
+    // Arm 1: the un-batched reference loop.
+    let naive_report = run_naive_loop(&model, &rows, naive_requests);
+    let naive_rec = ServeBenchRecord::from_load(
+        "retailer",
+        "naive",
+        1,
+        1,
+        1,
+        naive_report.requests,
+        naive_report.qps,
+        naive_report.p50_us,
+        naive_report.p99_us,
+    );
+    println!("{}", naive_rec.line());
+
+    // Arm 2: saturation through the micro-batching front.
+    let mesh = ModelMesh::new(model, replicas, metrics.clone());
+    let fopts = FrontOpts { max_batch: batch, threads: 0 };
+    let front = AssignFront::start(Arc::clone(&mesh), fopts, shared_pool());
+    let mesh_report = run_open_loop(&front, &rows, &LoadSpec::saturate(mesh_requests, clients));
+    anyhow::ensure!(mesh_report.monotonic, "mesh arm served non-monotone versions");
+    let mesh_rec = ServeBenchRecord::from_load(
+        "retailer",
+        "mesh",
+        replicas,
+        clients,
+        batch,
+        mesh_report.requests,
+        mesh_report.qps,
+        mesh_report.p50_us,
+        mesh_report.p99_us,
+    )
+    .with_speedup_vs(&naive_rec);
+    println!("{}", mesh_rec.line());
+
+    // Arm 3: the same load while the writer patches and publishes —
+    // every hot swap happens under live traffic.
+    let trace = retailer_trace(&db, seed + 1, TraceSpec::new(publishes, 256));
+    let mut publisher = Publisher::new(Arc::clone(&mesh));
+    let writer = std::thread::spawn(move || -> anyhow::Result<(u64, u64)> {
+        let (mut delta_b, mut snap_b) = (0u64, 0u64);
+        for deltas in &trace {
+            apply_to_db(&mut db, deltas)?;
+            engine.apply_batch(&db, deltas)?;
+            let stats = publisher.publish(&engine.model())?;
+            delta_b += stats.delta_bytes as u64;
+            snap_b += stats.snapshot_bytes as u64;
+        }
+        Ok((delta_b, snap_b))
+    });
+    let delta_report = run_open_loop(&front, &rows, &LoadSpec::saturate(mesh_requests, clients));
+    let (delta_bytes, snapshot_bytes) = writer.join().expect("writer thread")?;
+    front.shutdown();
+    anyhow::ensure!(delta_report.monotonic, "delta arm served non-monotone versions");
+    let delta_rec = ServeBenchRecord::from_load(
+        "retailer",
+        "delta",
+        replicas,
+        clients,
+        batch,
+        delta_report.requests,
+        delta_report.qps,
+        delta_report.p50_us,
+        delta_report.p99_us,
+    )
+    .with_publish_bytes(delta_bytes, snapshot_bytes);
+    println!("{}", delta_rec.line());
+
+    let speedup = mesh_rec.speedup_vs_naive.unwrap_or(0.0);
+    let ratio = delta_rec.delta_bytes_ratio.unwrap_or(0.0);
+    let records = vec![naive_rec, mesh_rec, delta_rec];
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string()),
+    );
+    write_bench_serve(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+    println!(
+        "mesh vs naive: {speedup:.2}× QPS (acceptance target ≥ 2×); {publishes} publishes \
+         shipped {delta_bytes} delta bytes vs {snapshot_bytes} snapshot bytes — {ratio:.1}× \
+         smaller (acceptance target ≥ 2×, hot swaps monotone under load)"
+    );
+    Ok(())
+}

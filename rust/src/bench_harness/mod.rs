@@ -176,6 +176,58 @@
 //!   (sharded rows only) — machine-relative, the gate's
 //!   `shard_build_speedup` metric. The acceptance target is ≥ 2× at
 //!   S = physical cores on the Retailer workload.
+//!
+//! # `BENCH_serve.json` schema (version 1)
+//!
+//! `benches/serve_load.rs` emits one document per invocation (path from
+//! `RKMEANS_SERVE_OUT`, default `BENCH_serve.json`) measuring the
+//! serving tier ([`crate::serve`]): the micro-batched mesh against the
+//! un-batched one-call-per-request loop, and delta-vs-snapshot
+//! publication bytes over an incremental-planner patch run:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "serve",
+//!   "records": [
+//!     {
+//!       "label": "retailer",
+//!       "mode": "mesh",
+//!       "replicas": 2,
+//!       "clients": 4,
+//!       "batch": 64,
+//!       "requests": 20000,
+//!       "qps": 812345.0,
+//!       "p50_us": 41,
+//!       "p99_us": 220,
+//!       "speedup_vs_naive": 3.4,
+//!       "delta_bytes": 1201,
+//!       "snapshot_bytes": 18233,
+//!       "delta_bytes_ratio": 15.2
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `mode` is `naive` (the reference row: one thread, one
+//!   [`RkModel::assign`](crate::rkmeans::RkModel::assign) per request,
+//!   no batching), `mesh` (the acceptance arm: open-loop clients
+//!   through the [`AssignFront`](crate::serve::AssignFront) over a
+//!   [`ModelMesh`](crate::serve::ModelMesh)), or `delta` (the
+//!   publication-bytes arm — its throughput fields describe the load
+//!   run concurrent with publication).
+//! * `replicas` / `clients` / `batch` describe the mesh shape (1/1/1 on
+//!   the naive row); `requests` counts answered requests.
+//! * `qps` is sustained throughput; `p50_us` / `p99_us` are exact
+//!   per-request latency percentiles (queue + compute) in microseconds.
+//! * `speedup_vs_naive` = this row's `qps` / the naive row's `qps`
+//!   (mesh rows only) — the gate's `serve_qps_speedup` metric. The
+//!   acceptance target is ≥ 2× on the Retailer workload.
+//! * `delta_bytes` / `snapshot_bytes` (delta rows only) are cumulative
+//!   wire bytes over the run's publishes; `delta_bytes_ratio` =
+//!   `snapshot_bytes / delta_bytes` — the gate's
+//!   `serve_delta_bytes_ratio` metric. The acceptance target is ≥ 2×
+//!   (deltas at most half the snapshot bytes).
 
 pub mod paper;
 
@@ -789,6 +841,150 @@ pub fn write_bench_shard(path: &Path, records: &[ShardBenchRecord]) -> std::io::
     std::fs::write(path, bench_shard_json(records).to_string())
 }
 
+/// One serving-tier measurement for `BENCH_serve.json` (schema in the
+/// module docs).
+#[derive(Clone, Debug)]
+pub struct ServeBenchRecord {
+    pub label: String,
+    /// `"naive"`, `"mesh"` or `"delta"`.
+    pub mode: String,
+    /// Replica slots in the mesh (1 on the naive row).
+    pub replicas: usize,
+    /// Concurrent load-generator clients (1 on the naive row).
+    pub clients: usize,
+    /// Micro-batch ceiling (1 on the naive row).
+    pub batch: usize,
+    /// Requests answered.
+    pub requests: usize,
+    /// Sustained throughput, requests per second.
+    pub qps: f64,
+    /// Exact median per-request latency (queue + compute), µs.
+    pub p50_us: u64,
+    /// Exact 99th-percentile per-request latency, µs.
+    pub p99_us: u64,
+    /// This row's `qps` / the naive row's `qps` (mesh rows only).
+    pub speedup_vs_naive: Option<f64>,
+    /// Cumulative delta wire bytes over the run's publishes (delta rows).
+    pub delta_bytes: Option<u64>,
+    /// Cumulative snapshot bytes the same publishes would have cost.
+    pub snapshot_bytes: Option<u64>,
+    /// `snapshot_bytes / delta_bytes` (delta rows only).
+    pub delta_bytes_ratio: Option<f64>,
+}
+
+impl ServeBenchRecord {
+    /// Build a record from one arm's load report.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_load(
+        label: &str,
+        mode: &str,
+        replicas: usize,
+        clients: usize,
+        batch: usize,
+        requests: usize,
+        qps: f64,
+        p50_us: u64,
+        p99_us: u64,
+    ) -> Self {
+        ServeBenchRecord {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            replicas,
+            clients,
+            batch,
+            requests,
+            qps,
+            p50_us,
+            p99_us,
+            speedup_vs_naive: None,
+            delta_bytes: None,
+            snapshot_bytes: None,
+            delta_bytes_ratio: None,
+        }
+    }
+
+    /// Attach the throughput speedup against the naive reference row.
+    pub fn with_speedup_vs(mut self, naive: &ServeBenchRecord) -> Self {
+        self.speedup_vs_naive = Some(self.qps / naive.qps.max(1e-12));
+        self
+    }
+
+    /// Attach publication byte accounting (the delta arm).
+    pub fn with_publish_bytes(mut self, delta_bytes: u64, snapshot_bytes: u64) -> Self {
+        self.delta_bytes = Some(delta_bytes);
+        self.snapshot_bytes = Some(snapshot_bytes);
+        self.delta_bytes_ratio = Some(snapshot_bytes as f64 / (delta_bytes as f64).max(1e-12));
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<12} {:<7} R={:<2} C={:<2} batch={:<4} {:>8} req  {:>10.0} req/s  p50={:>5}µs \
+             p99={:>6}µs{}{}",
+            self.label,
+            self.mode,
+            self.replicas,
+            self.clients,
+            self.batch,
+            self.requests,
+            self.qps,
+            self.p50_us,
+            self.p99_us,
+            self.speedup_vs_naive
+                .map(|s| format!("  ({s:.2}× vs naive)"))
+                .unwrap_or_default(),
+            self.delta_bytes_ratio
+                .map(|r| format!("  (delta {r:.1}× smaller)"))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("replicas".to_string(), Json::Num(self.replicas as f64));
+        m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert("batch".to_string(), Json::Num(self.batch as f64));
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("qps".to_string(), Json::Num(self.qps));
+        m.insert("p50_us".to_string(), Json::Num(self.p50_us as f64));
+        m.insert("p99_us".to_string(), Json::Num(self.p99_us as f64));
+        if let Some(s) = self.speedup_vs_naive {
+            m.insert("speedup_vs_naive".to_string(), Json::Num(s));
+        }
+        if let Some(b) = self.delta_bytes {
+            m.insert("delta_bytes".to_string(), Json::Num(b as f64));
+        }
+        if let Some(b) = self.snapshot_bytes {
+            m.insert("snapshot_bytes".to_string(), Json::Num(b as f64));
+        }
+        if let Some(r) = self.delta_bytes_ratio {
+            m.insert("delta_bytes_ratio".to_string(), Json::Num(r));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_serve.json` document.
+pub fn bench_serve_json(records: &[ServeBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("serve".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(ServeBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_serve.json` document to disk.
+pub fn write_bench_serve(path: &Path, records: &[ServeBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_serve_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -964,6 +1160,37 @@ mod tests {
         assert_eq!(recs[1].get("grid_cells").unwrap().as_usize(), Some(400));
         let s = recs[1].get("speedup_vs_serial").unwrap().as_f64().unwrap();
         assert!((s - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_bench_json_roundtrips() {
+        let naive =
+            ServeBenchRecord::from_load("retailer", "naive", 1, 1, 1, 5000, 50_000.0, 18, 40);
+        let mesh =
+            ServeBenchRecord::from_load("retailer", "mesh", 2, 4, 64, 20_000, 150_000.0, 25, 90)
+                .with_speedup_vs(&naive);
+        let delta =
+            ServeBenchRecord::from_load("retailer", "delta", 2, 4, 64, 20_000, 140_000.0, 26, 95)
+                .with_publish_bytes(1_000, 16_000);
+        assert!((mesh.speedup_vs_naive.unwrap() - 3.0).abs() < 1e-9);
+        assert!((delta.delta_bytes_ratio.unwrap() - 16.0).abs() < 1e-9);
+        assert!(mesh.line().contains("vs naive"));
+        assert!(delta.line().contains("smaller"));
+
+        let doc = bench_serve_json(&[naive, mesh, delta]);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("naive"));
+        assert!(recs[0].get("speedup_vs_naive").is_none());
+        assert!(recs[0].get("delta_bytes_ratio").is_none());
+        let s = recs[1].get("speedup_vs_naive").unwrap().as_f64().unwrap();
+        assert!((s - 3.0).abs() < 1e-9);
+        assert_eq!(recs[2].get("delta_bytes").unwrap().as_usize(), Some(1_000));
+        let r = recs[2].get("delta_bytes_ratio").unwrap().as_f64().unwrap();
+        assert!((r - 16.0).abs() < 1e-9);
     }
 
     #[test]

@@ -38,7 +38,13 @@
 //! [`RkModel`] via [`ClusteringUpdate::model`]: the writer serializes it
 //! with [`RkModel::to_bytes`], ships the bytes, and replicas serve that
 //! version — assigning never-materialized tuples with
-//! [`RkModel::assign`] — while the coordinator keeps patching:
+//! [`RkModel::assign`] — while the coordinator keeps patching. For the
+//! in-process replica tier, pair the update stream with the serving
+//! mesh instead: feed each version to a
+//! [`Publisher`](crate::serve::Publisher), which ships only the
+//! **centroid delta** against what the
+//! [`ModelMesh`](crate::serve::ModelMesh) replicas currently serve and
+//! hot-swaps every slot atomically (see [`crate::serve`]):
 //!
 //! ```no_run
 //! use rkmeans::coordinator::{Coordinator, CoordinatorConfig};

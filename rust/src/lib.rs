@@ -51,7 +51,9 @@
 //!   and incremental re-clustering ([`coordinator`]), true delta
 //!   maintenance of the grid coreset under tuple inserts/deletes —
 //!   single-stream or shard-parallel ([`incremental`],
-//!   [`incremental::sharded`]), a persistent deterministic execution
+//!   [`incremental::sharded`]), the serving mesh — replicated hot-swap
+//!   models, micro-batched assignment, centroid-delta publication
+//!   ([`serve`]) — a persistent deterministic execution
 //!   pool shared by every Step-4 dispatch ([`util::exec`]), synthetic workloads
 //!   mirroring the paper's
 //!   Retailer / Favorita / Yelp datasets ([`synthetic`]) and the
@@ -64,6 +66,24 @@
 //!
 //! Python never runs on the clustering path: the rust binary is
 //! self-contained once `artifacts/` is built.
+//!
+//! ## Serving tier
+//!
+//! The [`serve`] module carries the factored `assign` to request rates:
+//! a [`serve::ModelMesh`] holds N hot-swappable [`rkmeans::RkModel`]
+//! replicas (readers pin a version with an `Arc` clone — swaps are
+//! pointer flips, never torn reads), a [`serve::AssignFront`] collects
+//! concurrent assign requests into micro-batches dispatched on the
+//! shared [`util::exec::ExecPool`] (served versions monotone across
+//! clients), and a [`serve::Publisher`] ships new versions as
+//! **centroid deltas** ([`serve::ModelDelta`],
+//! [`rkmeans::RkModel::diff`] / [`rkmeans::RkModel::apply_delta`] with
+//! bit-exact reconstruction and stale-delta rejection) instead of full
+//! snapshots — on the incremental planner's patch path a delta is a
+//! handful of centroid rows while a snapshot carries whole categorical
+//! domains. `rkmeans serve` runs the loop end-to-end under the
+//! open-loop generator in [`serve::load`]; the streaming-coordinator
+//! demo lives on as `rkmeans stream`.
 //!
 //! ## Quickstart
 //!
@@ -118,10 +138,11 @@ pub mod query;
 pub mod rkmeans;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod synthetic;
 pub mod util;
 
 pub use rkmeans::{
-    rkmeans, ClusterOpts, Coreset, Marginals, RkConfig, RkModel, RkPipeline, RkResult,
-    SubspaceOpts, SubspaceSet,
+    rkmeans, ClusterOpts, Coreset, Marginals, ModelParseError, RkConfig, RkModel, RkPipeline,
+    RkResult, SubspaceOpts, SubspaceSet,
 };

@@ -9,7 +9,11 @@
 //!   database;
 //! * `baseline`  — run the materialize-then-cluster baseline;
 //! * `tables`    — regenerate the paper's tables/figures;
-//! * `serve`     — streaming-coordinator demo (ingest + periodic recluster);
+//! * `serve`     — run the serving mesh: replicated models behind a
+//!   micro-batching assign front under open-loop load, with a writer
+//!   publishing centroid deltas (`rkmeans::serve`);
+//! * `stream`    — streaming-coordinator demo (ingest + periodic
+//!   recluster; formerly `serve`, which forwards with a warning);
 //! * `artifacts` — inspect/verify the AOT artifact manifest.
 //!
 //! The environment is offline (no clap); flags are parsed by a small
@@ -21,18 +25,25 @@ use rkmeans::cluster::{BoundsPolicy, EngineOpts, LloydConfig, Precision};
 use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
 use rkmeans::coreset::SubspaceSolver;
 use rkmeans::data::{csv, Value};
+use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlannerOpts};
 #[cfg(feature = "pjrt")]
 use rkmeans::join::EmbedSpec;
+use rkmeans::metrics::Metrics;
 use rkmeans::rkmeans::{
     full_objective, materialize_and_cluster_capped, ClusterOpts, RkConfig, RkModel, RkPipeline,
     SubspaceOpts, SweepMode,
 };
 #[cfg(feature = "pjrt")]
 use rkmeans::runtime::PjrtRuntime;
-use rkmeans::synthetic::{Dataset, Scale};
+use rkmeans::serve::{
+    run_open_loop, synth_rows, AssignFront, FrontOpts, LoadSpec, ModelMesh, Publisher,
+};
+use rkmeans::synthetic::{favorita_trace, retailer_trace, Dataset, Scale, TraceSpec};
+use rkmeans::util::exec::shared_pool;
 use rkmeans::util::{human_bytes, human_count, SplitMix64};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 rkmeans — fast k-means clustering for relational data (Rk-means, 2019)
@@ -50,7 +61,10 @@ USAGE:
   rkmeans baseline  (--dataset NAME | --db DIR) --k K [--scale F] [--seed N] [--cap ROWS]
   rkmeans tables    [--which table1|table2|fig3|ablation-fd|ablation-sparse|kappa-sweep|all]
                     [--scale F] [--seed N] [--no-approx]
-  rkmeans serve     --dataset NAME [--scale F] [--rate N] [--batches N] [--k K]
+  rkmeans serve     (--dataset NAME | --db DIR) [--k K] [--scale F] [--seed N]
+                    [--replicas R] [--clients C] [--requests N] [--batch B]
+                    [--qps Q] [--publishes P]
+  rkmeans stream    --dataset NAME [--scale F] [--rate N] [--batches N] [--k K]
                     [--shards S]
   rkmeans artifacts [--dir DIR]
   rkmeans help
@@ -434,7 +448,100 @@ fn cmd_tables(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serving mesh under open-loop load (`rkmeans::serve`): `R`
+/// hot-swappable replicas behind the micro-batching assign front, while
+/// a writer replays a synthetic trace through the incremental engine
+/// and ships each new version to the mesh as a verified centroid delta.
 fn cmd_serve(args: &Args) -> Result<()> {
+    // The pre-mesh streaming demo answered to `serve` with these flags;
+    // forward old invocations so scripts keep working.
+    let demo_flags = args.has("rate") || args.has("batches");
+    let mesh_flags = args.has("requests")
+        || args.has("clients")
+        || args.has("replicas")
+        || args.has("batch")
+        || args.has("qps")
+        || args.has("publishes");
+    if demo_flags && !mesh_flags {
+        eprintln!(
+            "warning: the streaming-coordinator demo is now `rkmeans stream`; forwarding \
+             (`rkmeans serve` runs the serving mesh — see `rkmeans help`)"
+        );
+        return cmd_stream(args);
+    }
+
+    let (mut db, feq, name) = load_db(args)?;
+    let k = args.num("k", 5usize)?;
+    let seed = args.num("seed", 42u64)?;
+    let requests = args.num("requests", 20_000usize)?;
+    let clients = args.num("clients", 4usize)?;
+    let replicas = args.num("replicas", 2usize)?;
+    let batch = args.num("batch", 64usize)?;
+    let publishes = args.num("publishes", 3usize)?;
+    let qps = match args.get("qps") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| anyhow!("bad value for --qps: {v:?}"))?),
+        None => None,
+    };
+
+    let metrics = Metrics::new();
+    let mut engine = IncrementalEngine::new(
+        &db,
+        feq,
+        RkConfig::new(k).with_seed(seed),
+        PlannerOpts::default(),
+        metrics.clone(),
+    )?;
+    let mesh = ModelMesh::new(engine.model(), replicas, metrics.clone());
+    let fopts = FrontOpts { max_batch: batch, threads: 0 };
+    let front = AssignFront::start(Arc::clone(&mesh), fopts, shared_pool());
+    let rows = synth_rows(&mesh.model(0), 256, seed ^ 0x9e37_79b9);
+    println!(
+        "serving {name}: {replicas} replicas, {clients} clients × {requests} requests \
+         (micro-batch ≤ {batch}), {publishes} publishes"
+    );
+
+    // Writer side: replay trace batches through the incremental engine,
+    // publishing every version as a bit-verified delta while the load
+    // generator below keeps the front busy — hot swaps under fire.
+    let spec = TraceSpec::new(publishes, 512);
+    let trace = match name.as_str() {
+        "retailer" => retailer_trace(&db, seed + 1, spec),
+        "favorita" => favorita_trace(&db, seed + 1, spec),
+        _ => Vec::new(),
+    };
+    if trace.is_empty() && publishes > 0 {
+        eprintln!("note: no synthetic trace for {name:?}; serving a single version");
+    }
+    let mut publisher = Publisher::new(Arc::clone(&mesh));
+    let writer = std::thread::spawn(move || -> Result<()> {
+        for deltas in &trace {
+            apply_to_db(&mut db, deltas)?;
+            let (decision, _) = engine.apply_batch(&db, deltas)?;
+            let stats = publisher.publish(&engine.model())?;
+            println!(
+                "published v{} ({decision:?}): {} changed parts, {} B delta vs {} B snapshot \
+                 ({:.1}x smaller)",
+                stats.version,
+                stats.changes,
+                stats.delta_bytes,
+                stats.snapshot_bytes,
+                stats.bytes_ratio()
+            );
+        }
+        Ok(())
+    });
+
+    let report = run_open_loop(&front, &rows, &LoadSpec { requests, clients, qps, seed });
+    writer.join().expect("writer thread")?;
+    front.shutdown();
+    println!("{}", report.line("mesh"));
+    println!("-- metrics --\n{}", metrics.render());
+    Ok(())
+}
+
+/// The streaming-coordinator demo (formerly `rkmeans serve`): random
+/// fact tuples flow into the [`Coordinator`], reclustering per batch.
+fn cmd_stream(args: &Args) -> Result<()> {
     let (db, feq, name) = load_db(args)?;
     let k = args.num("k", 5usize)?;
     let rate = args.num("rate", 2000usize)?; // tuples per batch
@@ -452,7 +559,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.planner.shards = args.num("shards", 1usize)?;
     let coord = Coordinator::start(db, feq, cfg);
 
-    println!("serving {name}: {batches} batches × {rate} tuples into {fact:?}");
+    println!("streaming {name}: {batches} batches × {rate} tuples into {fact:?}");
     let mut rng = SplitMix64::new(seed);
     for b in 0..batches {
         for _ in 0..rate {
@@ -533,6 +640,7 @@ fn main() {
         "baseline" => cmd_baseline(&args),
         "tables" => cmd_tables(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

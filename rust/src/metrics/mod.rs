@@ -1,10 +1,15 @@
-//! Lightweight metrics registry for the streaming coordinator and CLI:
-//! atomic counters and gauges with a printable snapshot. No external
+//! Lightweight metrics registry for the streaming coordinator, the
+//! serving mesh, and the CLI: atomic counters, gauges, and lock-free
+//! latency histograms with a printable snapshot. No external
 //! dependencies; safe to share across worker threads.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Bucket count of [`Histogram`]: 16 exact low buckets plus 4
+/// sub-buckets for each power of two up to `u64::MAX`.
+const HIST_BUCKETS: usize = 16 + 4 * 60;
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -48,7 +53,100 @@ impl Gauge {
     }
 }
 
-/// A shared registry of named counters and gauges.
+/// A lock-free log-bucketed histogram of non-negative integer samples
+/// (the serving tier records latencies in microseconds).
+///
+/// Values 0–15 get exact buckets; every power of two above that is
+/// split into 4 log sub-buckets, so percentile answers are exact below
+/// 16 and within ~25 % relative error everywhere else — plenty for
+/// p50/p99 latency reporting, with `observe` costing one relaxed
+/// `fetch_add` (safe on every hot path).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .finish()
+    }
+}
+
+/// Bucket index of a sample: identity below 16, then
+/// `16 + (msb−4)·4 + next-2-bits` above.
+fn bucket_of(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize;
+    16 + (msb - 4) * 4 + ((v >> (msb - 2)) & 3) as usize
+}
+
+/// Smallest sample value mapping to bucket `i` (inverse of
+/// [`bucket_of`]); percentiles report this lower bound.
+fn bucket_floor(i: usize) -> u64 {
+    if i < 16 {
+        return i as u64;
+    }
+    let msb = (i - 16) / 4 + 4;
+    let sub = ((i - 16) % 4) as u64;
+    (1u64 << msb) + (sub << (msb - 2))
+}
+
+impl Histogram {
+    /// Record one sample.
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples (mean = `sum / count`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Lower bound of the bucket holding the `p`-quantile sample
+    /// (`0.0 < p ≤ 1.0`), or 0 when empty. Exact for samples below 16,
+    /// within one log sub-bucket (~25 %) above.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((p * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(HIST_BUCKETS - 1)
+    }
+}
+
+/// A shared registry of named counters, gauges, and histograms.
 #[derive(Clone, Default)]
 pub struct Metrics {
     inner: Arc<Inner>,
@@ -58,6 +156,7 @@ pub struct Metrics {
 struct Inner {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 impl Metrics {
@@ -78,7 +177,14 @@ impl Metrics {
         m.entry(name.to_string()).or_default().clone()
     }
 
-    /// Snapshot all metrics as sorted `(name, value)` pairs.
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.inner.histograms.lock().expect("metrics lock");
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Snapshot all metrics as sorted `(name, value)` pairs. Each
+    /// histogram expands to `{name}.count`, `{name}.p50`, `{name}.p99`.
     pub fn snapshot(&self) -> Vec<(String, i64)> {
         let mut out = Vec::new();
         for (k, c) in self.inner.counters.lock().expect("metrics lock").iter() {
@@ -86,6 +192,11 @@ impl Metrics {
         }
         for (k, g) in self.inner.gauges.lock().expect("metrics lock").iter() {
             out.push((k.clone(), g.get()));
+        }
+        for (k, h) in self.inner.histograms.lock().expect("metrics lock").iter() {
+            out.push((format!("{k}.count"), h.count() as i64));
+            out.push((format!("{k}.p50"), h.percentile(0.50) as i64));
+            out.push((format!("{k}.p99"), h.percentile(0.99) as i64));
         }
         out.sort();
         out
@@ -115,6 +226,58 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap, vec![("queue_depth".to_string(), 2), ("tuples_in".to_string(), 6)]);
         assert!(m.render().contains("tuples_in=6"));
+    }
+
+    #[test]
+    fn histogram_buckets_invert() {
+        // bucket_floor is a left inverse of bucket_of on bucket floors,
+        // and bucket_of is monotone across a wide sample of values.
+        for i in 0..HIST_BUCKETS {
+            assert_eq!(bucket_of(bucket_floor(i)), i, "bucket {i}");
+        }
+        let mut prev = 0;
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 1000, 1 << 20, u64::MAX / 2, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket_of must be monotone at {v}");
+            assert!(bucket_floor(b) <= v, "floor must bound {v} from below");
+            prev = b;
+        }
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(0.5), 0, "empty histogram reports 0");
+        for v in 0..10u64 {
+            h.observe(v);
+        }
+        // Exact below 16: rank ⌈0.5·10⌉ = 5 ⇒ the 5th smallest sample.
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 45);
+        assert_eq!(h.percentile(0.5), 4);
+        assert_eq!(h.percentile(1.0), 9);
+        // A tail outlier moves p99 but not p50.
+        h.observe(1_000_000);
+        assert_eq!(h.percentile(0.5), 5);
+        let p99 = h.percentile(0.99);
+        assert!((750_000..=1_000_000).contains(&p99), "p99 within a sub-bucket: {p99}");
+    }
+
+    #[test]
+    fn histogram_snapshot_keys() {
+        let m = Metrics::new();
+        m.histogram("assign_us").observe(7);
+        m.histogram("assign_us").observe(9);
+        let snap = m.snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                ("assign_us.count".to_string(), 2),
+                ("assign_us.p50".to_string(), 7),
+                ("assign_us.p99".to_string(), 9),
+            ]
+        );
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub mod model;
 pub mod pipeline;
 
 pub use baseline::{materialize_and_cluster, materialize_and_cluster_capped, BaselineResult};
-pub use model::{RkModel, RKMODEL_FORMAT_VERSION};
+pub use model::{ModelParseError, RkModel, RKMODEL_FORMAT_VERSION};
 pub use pipeline::{
     ClusterOpts, Coreset, Marginals, RkPipeline, SubspaceOpts, SubspaceSet, SweepMode,
 };

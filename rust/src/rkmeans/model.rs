@@ -18,8 +18,14 @@
 //! [`IncrementalState`](crate::incremental::IncrementalState) or a
 //! coordinator [`ClusteringUpdate`](crate::coordinator::ClusteringUpdate)
 //! as a model, ship the bytes, and have replicas serve that version while
-//! the writer keeps patching. A format-version mismatch fails loudly with
-//! a clear error instead of mis-deserializing.
+//! the writer keeps patching. Parsing returns the **typed**
+//! [`ModelParseError`] naming the failing field (truncated payloads,
+//! missing fields, shape mismatches); a format-version mismatch fails
+//! loudly instead of mis-deserializing. Between versions, the serving
+//! tier ships **centroid deltas** rather than full snapshots:
+//! [`RkModel::diff`] / [`RkModel::apply_delta`] live in
+//! [`crate::serve::delta`] and reuse this module's canonical JSON
+//! writer, so every shipped f64 round-trips bit-exactly.
 //!
 //! ```no_run
 //! use rkmeans::rkmeans::{RkModel, RkPipeline, ClusterOpts, SubspaceOpts};
@@ -47,13 +53,91 @@ use crate::coreset::{SubspaceModel, SubspaceSolver};
 use crate::data::Value;
 use crate::util::json::{self, Json};
 use crate::util::FxHashMap;
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::OnceLock;
 
 /// Version tag of the `RkModel` byte format. Bumped on any incompatible
 /// layout change; [`RkModel::from_bytes`] refuses other versions.
 pub const RKMODEL_FORMAT_VERSION: usize = 1;
+
+/// Typed parse error for the model (and model-delta) wire formats.
+///
+/// Every variant names what failed — the field for missing/malformed
+/// entries, the found version for format mismatches — so a replica
+/// rejecting a payload can log something actionable instead of a generic
+/// JSON error. Implements [`std::error::Error`], so `?` still converts
+/// into [`anyhow::Error`] at existing call sites.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelParseError {
+    /// The payload is not valid UTF-8 (e.g. a torn or binary write).
+    Utf8,
+    /// The payload is not valid JSON; the message carries the parser's
+    /// diagnosis (truncated documents land here).
+    Json(String),
+    /// The document parses but lacks the expected `"format"` tag — it is
+    /// some other JSON, not a `expected` document.
+    NotADocument {
+        /// The format tag this reader expects (`"rkmodel"` /
+        /// `"rkmodel-delta"`).
+        expected: &'static str,
+    },
+    /// Known document kind, incompatible format version.
+    UnsupportedFormatVersion {
+        /// Version tag found in the payload.
+        found: usize,
+        /// The single version this build reads.
+        supported: usize,
+    },
+    /// A required field is absent (or carries the wrong JSON type).
+    MissingField {
+        /// Name/path of the absent field.
+        field: String,
+    },
+    /// A field is present but malformed; `reason` says how.
+    BadField {
+        /// Name/path of the offending field.
+        field: String,
+        /// What is wrong with it.
+        reason: String,
+    },
+}
+
+impl ModelParseError {
+    pub(crate) fn missing(field: impl Into<String>) -> ModelParseError {
+        ModelParseError::MissingField { field: field.into() }
+    }
+
+    pub(crate) fn bad(field: impl Into<String>, reason: impl Into<String>) -> ModelParseError {
+        ModelParseError::BadField { field: field.into(), reason: reason.into() }
+    }
+}
+
+impl fmt::Display for ModelParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelParseError::Utf8 => write!(f, "rkmodel: bytes are not valid UTF-8"),
+            ModelParseError::Json(msg) => write!(f, "rkmodel: {msg}"),
+            ModelParseError::NotADocument { expected } => write!(
+                f,
+                "rkmodel: byte stream is not a {expected:?} document (missing \"format\" tag)"
+            ),
+            ModelParseError::UnsupportedFormatVersion { found, supported } => write!(
+                f,
+                "rkmodel: unsupported format version {found} (this build reads version \
+                 {supported}); re-export with a matching writer"
+            ),
+            ModelParseError::MissingField { field } => {
+                write!(f, "rkmodel: missing field {field:?}")
+            }
+            ModelParseError::BadField { field, reason } => {
+                write!(f, "rkmodel: bad field {field:?}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ModelParseError {}
 
 /// Serving lookup tables, built lazily on the first
 /// [`RkModel::assign`]/[`RkModel::distance2`] call so Step-4-only
@@ -348,28 +432,21 @@ impl RkModel {
     }
 
     /// Restore a model from [`RkModel::to_bytes`] output. Fails with a
-    /// clear error on non-model documents and on format-version
-    /// mismatches (forward compatibility is explicit, never silent).
-    pub fn from_bytes(bytes: &[u8]) -> Result<RkModel> {
-        let text = std::str::from_utf8(bytes).context("rkmodel: bytes are not valid UTF-8")?;
-        let doc = json::parse(text).map_err(|e| anyhow!("rkmodel: {e}"))?;
-        match doc.get("format").and_then(Json::as_str) {
-            Some("rkmodel") => {}
-            _ => bail!("rkmodel: byte stream is not an rkmodel document (missing \"format\" tag)"),
-        }
+    /// typed [`ModelParseError`] naming the failing field on truncated
+    /// or malformed payloads, and on format-version mismatches (forward
+    /// compatibility is explicit, never silent).
+    pub fn from_bytes(bytes: &[u8]) -> Result<RkModel, ModelParseError> {
+        let text = std::str::from_utf8(bytes).map_err(|_| ModelParseError::Utf8)?;
+        let doc = json::parse(text).map_err(|e| ModelParseError::Json(e.to_string()))?;
+        expect_format(&doc, "rkmodel")?;
         let fmt = usize_field(&doc, "format_version")?;
         if fmt != RKMODEL_FORMAT_VERSION {
-            bail!(
-                "rkmodel: unsupported format version {fmt} (this build reads version \
-                 {RKMODEL_FORMAT_VERSION}); re-export the model with a matching writer"
-            );
+            return Err(ModelParseError::UnsupportedFormatVersion {
+                found: fmt,
+                supported: RKMODEL_FORMAT_VERSION,
+            });
         }
-        let version = doc
-            .get("state_version")
-            .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("rkmodel: missing \"state_version\""))?
-            .parse::<u64>()
-            .map_err(|_| anyhow!("rkmodel: bad \"state_version\""))?;
+        let version = u64_str_field(&doc, "state_version")?;
         let k = usize_field(&doc, "k")?;
         let objective_grid = num_field(&doc, "objective_grid")?;
         let quantization_cost = num_field(&doc, "quantization_cost")?;
@@ -377,36 +454,33 @@ impl RkModel {
         let grid_mass = num_field(&doc, "grid_mass")?;
         let iters = usize_field(&doc, "iters")?;
 
-        let subs_json = doc
-            .get("subspaces")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("rkmodel: missing \"subspaces\" array"))?;
+        let subs_json = arr_field(&doc, "subspaces")?;
         let mut models = Vec::with_capacity(subs_json.len());
         for s in subs_json {
             models.push(subspace_from_json(s)?);
         }
 
-        let cents_json = doc
-            .get("centroids")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("rkmodel: missing \"centroids\" array"))?;
+        let cents_json = arr_field(&doc, "centroids")?;
         if cents_json.len() != k {
-            bail!(
-                "rkmodel: centroid count {} does not match k = {k}",
-                cents_json.len()
-            );
+            return Err(ModelParseError::bad(
+                "centroids",
+                format!("{} centroid rows but k = {k}", cents_json.len()),
+            ));
         }
         let mut centroids = Vec::with_capacity(cents_json.len());
         for cj in cents_json {
-            let coords_json = cj
-                .as_arr()
-                .ok_or_else(|| anyhow!("rkmodel: centroid is not an array of coordinates"))?;
+            let coords_json = cj.as_arr().ok_or_else(|| {
+                ModelParseError::bad("centroids", "centroid is not an array of coordinates")
+            })?;
             if coords_json.len() != models.len() {
-                bail!(
-                    "rkmodel: centroid has {} coordinates but the model has {} subspaces",
-                    coords_json.len(),
-                    models.len()
-                );
+                return Err(ModelParseError::bad(
+                    "centroids",
+                    format!(
+                        "centroid has {} coordinates but the model has {} subspaces",
+                        coords_json.len(),
+                        models.len()
+                    ),
+                ));
             }
             let mut coords = Vec::with_capacity(coords_json.len());
             for (j, coord) in coords_json.iter().enumerate() {
@@ -430,48 +504,58 @@ impl RkModel {
     }
 }
 
-fn num_field(o: &Json, key: &str) -> Result<f64> {
-    o.get(key)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| anyhow!("rkmodel: missing numeric field {key:?}"))
+/// Check the document's `"format"` tag (shared with the delta reader).
+pub(crate) fn expect_format(doc: &Json, expected: &'static str) -> Result<(), ModelParseError> {
+    match doc.get("format").and_then(Json::as_str) {
+        Some(tag) if tag == expected => Ok(()),
+        _ => Err(ModelParseError::NotADocument { expected }),
+    }
 }
 
-fn usize_field(o: &Json, key: &str) -> Result<usize> {
-    o.get(key)
-        .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("rkmodel: missing integer field {key:?}"))
+pub(crate) fn num_field(o: &Json, key: &str) -> Result<f64, ModelParseError> {
+    o.get(key).and_then(Json::as_f64).ok_or_else(|| ModelParseError::missing(key))
 }
 
-fn f64_arr(j: &Json, what: &str) -> Result<Vec<f64>> {
-    let arr = j
-        .as_arr()
-        .ok_or_else(|| anyhow!("rkmodel: {what} is not an array"))?;
+pub(crate) fn usize_field(o: &Json, key: &str) -> Result<usize, ModelParseError> {
+    o.get(key).and_then(Json::as_usize).ok_or_else(|| ModelParseError::missing(key))
+}
+
+pub(crate) fn arr_field<'a>(o: &'a Json, key: &str) -> Result<&'a [Json], ModelParseError> {
+    o.get(key).and_then(Json::as_arr).ok_or_else(|| ModelParseError::missing(key))
+}
+
+/// A u64 carried as a decimal string (versions, like category keys, use
+/// strings so the full u64 range round-trips exactly — f64 JSON numbers
+/// only cover 2^53).
+pub(crate) fn u64_str_field(o: &Json, key: &str) -> Result<u64, ModelParseError> {
+    let s = o.get(key).and_then(Json::as_str).ok_or_else(|| ModelParseError::missing(key))?;
+    s.parse::<u64>()
+        .map_err(|_| ModelParseError::bad(key, format!("{s:?} is not a u64 decimal string")))
+}
+
+pub(crate) fn f64_arr(j: &Json, what: &str) -> Result<Vec<f64>, ModelParseError> {
+    let arr = j.as_arr().ok_or_else(|| ModelParseError::bad(what, "not an array"))?;
     arr.iter()
-        .map(|v| {
-            v.as_f64()
-                .ok_or_else(|| anyhow!("rkmodel: non-numeric entry in {what}"))
-        })
+        .map(|v| v.as_f64().ok_or_else(|| ModelParseError::bad(what, "non-numeric entry")))
         .collect()
 }
 
 /// Category keys serialize as decimal strings so the full u64 range
 /// round-trips exactly (f64 JSON numbers only cover 2^53).
-fn key_arr(j: &Json, what: &str) -> Result<Vec<u64>> {
-    let arr = j
-        .as_arr()
-        .ok_or_else(|| anyhow!("rkmodel: {what} is not an array"))?;
+pub(crate) fn key_arr(j: &Json, what: &str) -> Result<Vec<u64>, ModelParseError> {
+    let arr = j.as_arr().ok_or_else(|| ModelParseError::bad(what, "not an array"))?;
     arr.iter()
-        .map(|v| -> Result<u64> {
+        .map(|v| -> Result<u64, ModelParseError> {
             let s = v
                 .as_str()
-                .ok_or_else(|| anyhow!("rkmodel: category key in {what} is not a string"))?;
+                .ok_or_else(|| ModelParseError::bad(what, "category key is not a string"))?;
             s.parse::<u64>()
-                .map_err(|_| anyhow!("rkmodel: bad category key {s:?} in {what}"))
+                .map_err(|_| ModelParseError::bad(what, format!("bad category key {s:?}")))
         })
         .collect()
 }
 
-fn subspace_json(m: &SubspaceModel) -> Json {
+pub(crate) fn subspace_json(m: &SubspaceModel) -> Json {
     let mut o: BTreeMap<String, Json> = BTreeMap::new();
     o.insert("name".to_string(), Json::Str(m.name.clone()));
     o.insert("lambda".to_string(), Json::Num(m.lambda));
@@ -514,11 +598,11 @@ fn subspace_json(m: &SubspaceModel) -> Json {
     Json::Obj(o)
 }
 
-fn subspace_from_json(s: &Json) -> Result<SubspaceModel> {
+pub(crate) fn subspace_from_json(s: &Json) -> Result<SubspaceModel, ModelParseError> {
     let name = s
         .get("name")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("rkmodel: subspace missing \"name\""))?
+        .ok_or_else(|| ModelParseError::missing("subspace name"))?
         .to_string();
     let lambda = num_field(s, "lambda")?;
     let cost = num_field(s, "cost")?;
@@ -527,60 +611,69 @@ fn subspace_from_json(s: &Json) -> Result<SubspaceModel> {
         Some("continuous") => {
             let centers = f64_arr(
                 s.get("centers")
-                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"centers\""))?,
+                    .ok_or_else(|| ModelParseError::missing(format!("{name}.centers")))?,
                 "centers",
             )?;
             let boundaries = f64_arr(
                 s.get("boundaries")
-                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"boundaries\""))?,
+                    .ok_or_else(|| ModelParseError::missing(format!("{name}.boundaries")))?,
                 "boundaries",
             )?;
             SubspaceSolver::Continuous(Kmeans1dResult { centers, boundaries, cost: solver_cost })
         }
         Some("categorical") => {
             let heavy = key_arr(
-                s.get("heavy")
-                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"heavy\""))?,
+                s.get("heavy").ok_or_else(|| ModelParseError::missing(format!("{name}.heavy")))?,
                 "heavy",
             )?;
             let heavy_w = f64_arr(
                 s.get("heavy_w")
-                    .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"heavy_w\""))?,
+                    .ok_or_else(|| ModelParseError::missing(format!("{name}.heavy_w")))?,
                 "heavy_w",
             )?;
             if heavy.len() != heavy_w.len() {
-                bail!("rkmodel: subspace {name:?} heavy/heavy_w length mismatch");
+                return Err(ModelParseError::bad(
+                    format!("{name}.heavy_w"),
+                    "heavy/heavy_w length mismatch",
+                ));
             }
             let light_json = s
                 .get("light")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("rkmodel: subspace {name:?} missing \"light\""))?;
+                .ok_or_else(|| ModelParseError::missing(format!("{name}.light")))?;
             let mut light = Vec::with_capacity(light_json.len());
             for pair in light_json {
-                let pair = pair
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("rkmodel: light entry is not a [key, weight] pair"))?;
+                let entry =
+                    ModelParseError::bad(format!("{name}.light"), "not a [key, weight] pair");
+                let pair = pair.as_arr().ok_or_else(|| entry.clone())?;
                 if pair.len() != 2 {
-                    bail!("rkmodel: light entry is not a [key, weight] pair");
+                    return Err(entry);
                 }
                 let key = pair[0]
                     .as_str()
-                    .ok_or_else(|| anyhow!("rkmodel: light key is not a string"))?
+                    .ok_or_else(|| entry.clone())?
                     .parse::<u64>()
-                    .map_err(|_| anyhow!("rkmodel: bad light key in subspace {name:?}"))?;
-                let w = pair[1]
-                    .as_f64()
-                    .ok_or_else(|| anyhow!("rkmodel: light weight is not a number"))?;
+                    .map_err(|_| {
+                        ModelParseError::bad(format!("{name}.light"), "bad light key")
+                    })?;
+                let w = pair[1].as_f64().ok_or_else(|| {
+                    ModelParseError::bad(format!("{name}.light"), "light weight is not a number")
+                })?;
                 light.push((key, w));
             }
             SubspaceSolver::Categorical(CatClusters::from_parts(heavy, heavy_w, light, solver_cost))
         }
-        other => bail!("rkmodel: unknown solver kind {other:?} for subspace {name:?}"),
+        other => {
+            return Err(ModelParseError::bad(
+                format!("{name}.solver"),
+                format!("unknown solver kind {other:?}"),
+            ))
+        }
     };
     Ok(SubspaceModel { name, lambda, solver, cost })
 }
 
-fn coord_json(c: &CentroidCoord) -> Json {
+pub(crate) fn coord_json(c: &CentroidCoord) -> Json {
     let mut o: BTreeMap<String, Json> = BTreeMap::new();
     match c {
         CentroidCoord::Continuous(mu) => {
@@ -596,37 +689,60 @@ fn coord_json(c: &CentroidCoord) -> Json {
     Json::Obj(o)
 }
 
-fn coord_from_json(j: &Json, model: &SubspaceModel) -> Result<CentroidCoord> {
+/// Parses one centroid coordinate without knowing which subspace it
+/// belongs to: `"mu"` ⇒ continuous, `"beta"` ⇒ categorical. Shape
+/// validation against a concrete subspace lives in [`check_coord`].
+pub(crate) fn coord_from_json_raw(j: &Json) -> Result<CentroidCoord, ModelParseError> {
     if let Some(mu) = j.get("mu").and_then(Json::as_f64) {
-        match &model.solver {
-            SubspaceSolver::Continuous(_) => Ok(CentroidCoord::Continuous(mu)),
-            SubspaceSolver::Categorical(_) => bail!(
-                "rkmodel: continuous centroid coordinate on categorical subspace {:?}",
-                model.name
-            ),
-        }
+        Ok(CentroidCoord::Continuous(mu))
     } else if let Some(beta) = j.get("beta") {
-        let beta = f64_arr(beta, "beta")?;
-        match &model.solver {
-            SubspaceSolver::Categorical(c) => {
-                if beta.len() != c.kappa() {
-                    bail!(
-                        "rkmodel: centroid β length {} ≠ κ = {} in subspace {:?}",
+        Ok(CentroidCoord::Categorical(f64_arr(beta, "beta")?))
+    } else {
+        Err(ModelParseError::bad("centroids", "centroid coordinate must carry \"mu\" or \"beta\""))
+    }
+}
+
+/// Validates a parsed coordinate against its subspace: the kind must
+/// match the solver and a categorical β must have exactly κ entries.
+pub(crate) fn check_coord(
+    coord: &CentroidCoord,
+    model: &SubspaceModel,
+) -> Result<(), ModelParseError> {
+    match (coord, &model.solver) {
+        (CentroidCoord::Continuous(_), SubspaceSolver::Continuous(_)) => Ok(()),
+        (CentroidCoord::Categorical(beta), SubspaceSolver::Categorical(c)) => {
+            if beta.len() != c.kappa() {
+                return Err(ModelParseError::bad(
+                    "centroids",
+                    format!(
+                        "centroid β length {} ≠ κ = {} in subspace {:?}",
                         beta.len(),
                         c.kappa(),
                         model.name
-                    );
-                }
-                Ok(CentroidCoord::Categorical(beta))
+                    ),
+                ));
             }
-            SubspaceSolver::Continuous(_) => bail!(
-                "rkmodel: categorical centroid coordinate on continuous subspace {:?}",
-                model.name
-            ),
+            Ok(())
         }
-    } else {
-        bail!("rkmodel: centroid coordinate must carry \"mu\" or \"beta\"")
+        (CentroidCoord::Continuous(_), SubspaceSolver::Categorical(_)) => {
+            Err(ModelParseError::bad(
+                "centroids",
+                format!("continuous centroid coordinate on categorical subspace {:?}", model.name),
+            ))
+        }
+        (CentroidCoord::Categorical(_), SubspaceSolver::Continuous(_)) => {
+            Err(ModelParseError::bad(
+                "centroids",
+                format!("categorical centroid coordinate on continuous subspace {:?}", model.name),
+            ))
+        }
     }
+}
+
+fn coord_from_json(j: &Json, model: &SubspaceModel) -> Result<CentroidCoord, ModelParseError> {
+    let coord = coord_from_json_raw(j)?;
+    check_coord(&coord, model)?;
+    Ok(coord)
 }
 
 #[cfg(test)]
@@ -784,6 +900,57 @@ mod tests {
         assert!(RkModel::from_bytes(b"{\"not\":\"a model\"}").is_err());
         let msg = RkModel::from_bytes(b"{}").unwrap_err().to_string();
         assert!(msg.contains("format"), "unclear error: {msg}");
+    }
+
+    #[test]
+    fn truncated_payload_is_a_typed_json_error() {
+        let bytes = sample_model().to_bytes();
+        let cut = &bytes[..bytes.len() / 2];
+        match RkModel::from_bytes(cut) {
+            Err(ModelParseError::Json(_)) => {}
+            other => panic!("expected ModelParseError::Json, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_fields_are_named_in_the_error() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        for field in
+            ["k", "objective_grid", "grid_mass", "iters", "state_version", "subspaces", "centroids"]
+        {
+            let broken = text.replace(&format!("\"{field}\":"), &format!("\"_{field}\":"));
+            assert_ne!(text, broken, "fixture must actually drop {field:?}");
+            let err = RkModel::from_bytes(broken.as_bytes()).unwrap_err();
+            assert_eq!(err, ModelParseError::missing(field), "field {field:?}");
+            assert!(err.to_string().contains(field), "error must name {field:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_state_version_names_the_field() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        let broken = text.replace("\"state_version\":\"7\"", "\"state_version\":\"not-a-u64\"");
+        assert_ne!(text, broken, "fixture must actually corrupt the version");
+        let err = RkModel::from_bytes(broken.as_bytes()).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            matches!(err, ModelParseError::BadField { ref field, .. } if field == "state_version"),
+            "expected BadField(state_version), got {err:?}"
+        );
+        assert!(msg.contains("state_version"), "unclear error: {msg}");
+    }
+
+    #[test]
+    fn centroid_shape_mismatch_is_rejected() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        // β of length 2 on a κ = 3 categorical subspace.
+        let broken = text.replace("\"beta\":[0.7,0.2,0.1]", "\"beta\":[0.7,0.2]");
+        assert_ne!(text, broken, "fixture must actually truncate a β row");
+        let err = RkModel::from_bytes(broken.as_bytes()).unwrap_err();
+        assert!(
+            matches!(err, ModelParseError::BadField { ref field, .. } if field == "centroids"),
+            "expected BadField(centroids), got {err:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! Centroid-delta shipping between model versions.
+//!
+//! A [`ModelDelta`] is the wire difference between two [`RkModel`]
+//! versions: the centroid rows and Step-2 subspace models that actually
+//! changed (compared **bitwise**, `f64::to_bits`), plus the scalar fit
+//! summary — keyed by the monotone `(from_version, to_version)` pair so
+//! a replica can only splice it onto the exact base it was diffed
+//! against. On the incremental planner's patch path Step-2 models are
+//! frozen bitwise across versions, so a typical delta ships a handful
+//! of centroid rows instead of the categorical subspace payloads (heavy
+//! + light key lists ≈ whole domains) that dominate a full snapshot —
+//! that asymmetry is the `serve_delta_bytes_ratio` the bench gate
+//! tracks.
+//!
+//! The contract is exact reconstruction: for any models `a`, `b`,
+//!
+//! ```text
+//! a.apply_delta(&ModelDelta::from_bytes(&a.diff(&b).to_bytes())?)?
+//!     .to_bytes() == b.to_bytes()      // bitwise
+//! ```
+//!
+//! which holds because the delta reuses the model's canonical JSON
+//! writer ([`crate::util::json`], shortest-repr f64 round-trips
+//! bit-exactly) and unchanged parts are cloned from the base — which the
+//! diff proved bitwise-equal to the target. Stale deltas (base version ≠
+//! `from_version`) are rejected with [`DeltaApplyError::VersionGap`]
+//! instead of silently producing a franken-model;
+//! `tests/property_delta.rs` pins both properties across random
+//! incremental patch/rebuild sequences.
+
+use crate::cluster::sparse_lloyd::CentroidCoord;
+use crate::coreset::{SubspaceModel, SubspaceSolver};
+use crate::rkmeans::model::{
+    arr_field, check_coord, coord_from_json_raw, coord_json, expect_format, num_field,
+    subspace_from_json, subspace_json, u64_str_field, usize_field,
+};
+use crate::rkmeans::{ModelParseError, RkModel};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Version tag of the `ModelDelta` byte format. Bumped on any
+/// incompatible layout change; [`ModelDelta::from_bytes`] refuses other
+/// versions.
+pub const MODEL_DELTA_FORMAT_VERSION: usize = 1;
+
+/// A versioned wire delta between two models (see module docs).
+#[derive(Clone, Debug)]
+pub struct ModelDelta {
+    /// Version of the base model this delta was diffed against; apply
+    /// refuses any other base.
+    pub from_version: u64,
+    /// Version of the target model apply reconstructs.
+    pub to_version: u64,
+    /// Target cluster count (rows beyond the base's k must be shipped;
+    /// a shrink truncates).
+    pub k: usize,
+    /// Target subspace count.
+    pub m: usize,
+    /// Target weighted k-means objective on the coreset.
+    pub objective_grid: f64,
+    /// Target coreset quantization error.
+    pub quantization_cost: f64,
+    /// Target non-zero grid cells `|G|`.
+    pub grid_points: usize,
+    /// Target total grid mass.
+    pub grid_mass: f64,
+    /// Target Step-4 iteration count.
+    pub iters: usize,
+    /// Changed Step-2 subspace models, by subspace index (empty on the
+    /// planner's patch path, which freezes Step 2 bitwise).
+    pub subspaces: Vec<(usize, SubspaceModel)>,
+    /// Changed centroid rows, by centroid index.
+    pub rows: Vec<(usize, Vec<CentroidCoord>)>,
+}
+
+/// Why a delta could not be spliced onto a base model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DeltaApplyError {
+    /// The delta was diffed against a different base version — applying
+    /// it would silently mix two states. Fetch the missing deltas (or a
+    /// snapshot) instead.
+    VersionGap {
+        /// Version of the base model apply was called on.
+        base: u64,
+        /// Base version the delta expects.
+        from: u64,
+        /// Target version the delta produces.
+        to: u64,
+    },
+    /// The delta's payload does not cover / fit the target shape
+    /// (missing extension rows, out-of-range indices, coordinate-kind
+    /// mismatches).
+    Shape(ModelParseError),
+}
+
+impl fmt::Display for DeltaApplyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeltaApplyError::VersionGap { base, from, to } => write!(
+                f,
+                "rkmodel-delta: stale delta: base model is at version {base} but the delta \
+                 patches {from} → {to}; ship the missing deltas or a full snapshot"
+            ),
+            DeltaApplyError::Shape(e) => write!(f, "rkmodel-delta: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DeltaApplyError {}
+
+impl From<ModelParseError> for DeltaApplyError {
+    fn from(e: ModelParseError) -> DeltaApplyError {
+        DeltaApplyError::Shape(e)
+    }
+}
+
+/// Bitwise f64 equality — the serialization round-trips bits, so this is
+/// exactly "serializes to the same bytes".
+fn f64_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn f64s_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| f64_eq(*x, *y))
+}
+
+fn coord_eq(a: &CentroidCoord, b: &CentroidCoord) -> bool {
+    match (a, b) {
+        (CentroidCoord::Continuous(x), CentroidCoord::Continuous(y)) => f64_eq(*x, *y),
+        (CentroidCoord::Categorical(x), CentroidCoord::Categorical(y)) => f64s_eq(x, y),
+        _ => false,
+    }
+}
+
+fn row_eq(a: &[CentroidCoord], b: &[CentroidCoord]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| coord_eq(x, y))
+}
+
+/// Equality over the solver's **serialized** fields (derived lookup
+/// structures are recomputed deterministically from them on both sides).
+fn solver_eq(a: &SubspaceSolver, b: &SubspaceSolver) -> bool {
+    match (a, b) {
+        (SubspaceSolver::Continuous(x), SubspaceSolver::Continuous(y)) => {
+            f64s_eq(&x.centers, &y.centers)
+                && f64s_eq(&x.boundaries, &y.boundaries)
+                && f64_eq(x.cost, y.cost)
+        }
+        (SubspaceSolver::Categorical(x), SubspaceSolver::Categorical(y)) => {
+            x.heavy == y.heavy
+                && f64s_eq(&x.heavy_w, &y.heavy_w)
+                && x.light.len() == y.light.len()
+                && x.light.iter().zip(&y.light).all(|(p, q)| p.0 == q.0 && f64_eq(p.1, q.1))
+                && f64_eq(x.cost, y.cost)
+        }
+        _ => false,
+    }
+}
+
+fn subspace_eq(a: &SubspaceModel, b: &SubspaceModel) -> bool {
+    a.name == b.name
+        && f64_eq(a.lambda, b.lambda)
+        && f64_eq(a.cost, b.cost)
+        && solver_eq(&a.solver, &b.solver)
+}
+
+impl RkModel {
+    /// The wire delta turning `self` into `target`: every centroid row
+    /// and subspace model that differs bitwise (plus rows/subspaces
+    /// beyond `self`'s shape), keyed `self.version → target.version`.
+    pub fn diff(&self, target: &RkModel) -> ModelDelta {
+        let subspaces = target
+            .models
+            .iter()
+            .enumerate()
+            .filter(|(j, m)| !self.models.get(*j).is_some_and(|base| subspace_eq(base, m)))
+            .map(|(j, m)| (j, m.clone()))
+            .collect();
+        let rows = target
+            .centroids
+            .iter()
+            .enumerate()
+            .filter(|(i, row)| !self.centroids.get(*i).is_some_and(|base| row_eq(base, row)))
+            .map(|(i, row)| (i, row.clone()))
+            .collect();
+        ModelDelta {
+            from_version: self.version,
+            to_version: target.version,
+            k: target.k(),
+            m: target.m(),
+            objective_grid: target.objective_grid,
+            quantization_cost: target.quantization_cost,
+            grid_points: target.grid_points,
+            grid_mass: target.grid_mass,
+            iters: target.iters,
+            subspaces,
+            rows,
+        }
+    }
+
+    /// Splice a delta onto this base, producing the target model. Fails
+    /// with [`DeltaApplyError::VersionGap`] when the delta was not
+    /// diffed against exactly this version, and with
+    /// [`DeltaApplyError::Shape`] when the payload leaves holes or
+    /// mismatches the target shape. On success the result serializes
+    /// bit-identically to the writer's target model (module docs).
+    pub fn apply_delta(&self, delta: &ModelDelta) -> Result<RkModel, DeltaApplyError> {
+        if delta.from_version != self.version {
+            return Err(DeltaApplyError::VersionGap {
+                base: self.version,
+                from: delta.from_version,
+                to: delta.to_version,
+            });
+        }
+
+        let mut models: Vec<Option<SubspaceModel>> =
+            self.models.iter().take(delta.m).cloned().map(Some).collect();
+        models.resize(delta.m, None);
+        for (j, m) in &delta.subspaces {
+            if *j >= delta.m {
+                return Err(ModelParseError::bad(
+                    "subspaces",
+                    format!("delta subspace index {j} ≥ m = {}", delta.m),
+                )
+                .into());
+            }
+            models[*j] = Some(m.clone());
+        }
+        let models = models
+            .into_iter()
+            .enumerate()
+            .map(|(j, m)| {
+                m.ok_or_else(|| {
+                    DeltaApplyError::Shape(ModelParseError::missing(format!(
+                        "subspaces[{j}] (base has no subspace there and the delta ships none)"
+                    )))
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let mut centroids: Vec<Option<Vec<CentroidCoord>>> =
+            self.centroids.iter().take(delta.k).cloned().map(Some).collect();
+        centroids.resize(delta.k, None);
+        for (i, row) in &delta.rows {
+            if *i >= delta.k {
+                return Err(ModelParseError::bad(
+                    "centroids",
+                    format!("delta centroid index {i} ≥ k = {}", delta.k),
+                )
+                .into());
+            }
+            centroids[*i] = Some(row.clone());
+        }
+        let centroids = centroids
+            .into_iter()
+            .enumerate()
+            .map(|(i, row)| {
+                row.ok_or_else(|| {
+                    DeltaApplyError::Shape(ModelParseError::missing(format!(
+                        "centroids[{i}] (base has no row there and the delta ships none)"
+                    )))
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        // Every row — spliced or carried over — must fit the (possibly
+        // re-solved) subspace models: k × m kind/κ checks, cheap next to
+        // a publish.
+        for row in &centroids {
+            if row.len() != models.len() {
+                return Err(ModelParseError::bad(
+                    "centroids",
+                    format!(
+                        "centroid has {} coordinates but the model has {} subspaces",
+                        row.len(),
+                        models.len()
+                    ),
+                )
+                .into());
+            }
+            for (coord, m) in row.iter().zip(&models) {
+                check_coord(coord, m)?;
+            }
+        }
+
+        Ok(RkModel::assemble(
+            models,
+            centroids,
+            delta.objective_grid,
+            delta.quantization_cost,
+            delta.grid_points,
+            delta.grid_mass,
+            delta.iters,
+            Default::default(),
+            Default::default(),
+            delta.to_version,
+        ))
+    }
+}
+
+impl ModelDelta {
+    /// Total parts shipped (changed subspaces + changed centroid rows).
+    pub fn changes(&self) -> usize {
+        self.subspaces.len() + self.rows.len()
+    }
+
+    /// Serialize to the versioned byte format (canonical JSON, UTF-8) —
+    /// the same writer as [`RkModel::to_bytes`], so every f64
+    /// round-trips bit-exactly.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("format".to_string(), Json::Str("rkmodel-delta".to_string()));
+        top.insert("format_version".to_string(), Json::Num(MODEL_DELTA_FORMAT_VERSION as f64));
+        top.insert("from_version".to_string(), Json::Str(self.from_version.to_string()));
+        top.insert("to_version".to_string(), Json::Str(self.to_version.to_string()));
+        top.insert("k".to_string(), Json::Num(self.k as f64));
+        top.insert("m".to_string(), Json::Num(self.m as f64));
+        top.insert("objective_grid".to_string(), Json::Num(self.objective_grid));
+        top.insert("quantization_cost".to_string(), Json::Num(self.quantization_cost));
+        top.insert("grid_points".to_string(), Json::Num(self.grid_points as f64));
+        top.insert("grid_mass".to_string(), Json::Num(self.grid_mass));
+        top.insert("iters".to_string(), Json::Num(self.iters as f64));
+        top.insert(
+            "subspaces".to_string(),
+            Json::Arr(
+                self.subspaces
+                    .iter()
+                    .map(|(j, m)| {
+                        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                        o.insert("j".to_string(), Json::Num(*j as f64));
+                        o.insert("model".to_string(), subspace_json(m));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        top.insert(
+            "centroids".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|(i, row)| {
+                        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                        o.insert("i".to_string(), Json::Num(*i as f64));
+                        o.insert(
+                            "coords".to_string(),
+                            Json::Arr(row.iter().map(coord_json).collect()),
+                        );
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(top).to_string().into_bytes()
+    }
+
+    /// Restore a delta from [`ModelDelta::to_bytes`] output, with the
+    /// same typed-error discipline as [`RkModel::from_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelDelta, ModelParseError> {
+        let text = std::str::from_utf8(bytes).map_err(|_| ModelParseError::Utf8)?;
+        let doc = json::parse(text).map_err(|e| ModelParseError::Json(e.to_string()))?;
+        expect_format(&doc, "rkmodel-delta")?;
+        let fmt = usize_field(&doc, "format_version")?;
+        if fmt != MODEL_DELTA_FORMAT_VERSION {
+            return Err(ModelParseError::UnsupportedFormatVersion {
+                found: fmt,
+                supported: MODEL_DELTA_FORMAT_VERSION,
+            });
+        }
+        let from_version = u64_str_field(&doc, "from_version")?;
+        let to_version = u64_str_field(&doc, "to_version")?;
+        let k = usize_field(&doc, "k")?;
+        let m = usize_field(&doc, "m")?;
+        let objective_grid = num_field(&doc, "objective_grid")?;
+        let quantization_cost = num_field(&doc, "quantization_cost")?;
+        let grid_points = usize_field(&doc, "grid_points")?;
+        let grid_mass = num_field(&doc, "grid_mass")?;
+        let iters = usize_field(&doc, "iters")?;
+
+        let mut subspaces = Vec::new();
+        for entry in arr_field(&doc, "subspaces")? {
+            let j = usize_field(entry, "j")?;
+            let model = entry.get("model").ok_or_else(|| ModelParseError::missing("model"))?;
+            subspaces.push((j, subspace_from_json(model)?));
+        }
+
+        let mut rows = Vec::new();
+        for entry in arr_field(&doc, "centroids")? {
+            let i = usize_field(entry, "i")?;
+            let coords = arr_field(entry, "coords")?
+                .iter()
+                .map(coord_from_json_raw)
+                .collect::<Result<Vec<_>, _>>()?;
+            rows.push((i, coords));
+        }
+
+        Ok(ModelDelta {
+            from_version,
+            to_version,
+            k,
+            m,
+            objective_grid,
+            quantization_cost,
+            grid_points,
+            grid_mass,
+            iters,
+            subspaces,
+            rows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+    use crate::synthetic::{retailer, Scale};
+
+    fn base_model() -> RkModel {
+        let db = retailer::generate(Scale::tiny(), 42);
+        let feq = retailer::feq();
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        let coreset = pipe.coreset(&subspaces).unwrap();
+        coreset.cluster(&ClusterOpts::new(4)).with_version(3)
+    }
+
+    /// A target sharing most rows with the base: one centroid row moved,
+    /// everything else (incl. Step-2 models) bitwise-identical.
+    fn moved_row_target(base: &RkModel) -> RkModel {
+        let mut next = base.clone().with_version(4);
+        match &mut next.centroids[0][0] {
+            CentroidCoord::Continuous(mu) => *mu += 1.5,
+            CentroidCoord::Categorical(beta) => beta[0] += 0.25,
+        }
+        next.objective_grid += 0.125;
+        next.iters += 1;
+        next
+    }
+
+    #[test]
+    fn diff_ships_only_changed_rows() {
+        let base = base_model();
+        let next = moved_row_target(&base);
+        let delta = base.diff(&next);
+        assert_eq!(delta.subspaces.len(), 0, "Step-2 models did not change");
+        assert_eq!(delta.rows.len(), 1, "exactly one centroid row moved");
+        assert_eq!(delta.rows[0].0, 0);
+        assert_eq!((delta.from_version, delta.to_version), (3, 4));
+        assert!(
+            delta.to_bytes().len() * 2 < next.to_bytes().len(),
+            "a one-row delta must be far smaller than the snapshot"
+        );
+    }
+
+    #[test]
+    fn apply_round_trips_bitwise() {
+        let base = base_model();
+        let next = moved_row_target(&base);
+        let wire = base.diff(&next).to_bytes();
+        let decoded = ModelDelta::from_bytes(&wire).unwrap();
+        let applied = base.apply_delta(&decoded).unwrap();
+        assert_eq!(applied.to_bytes(), next.to_bytes(), "delta splice must be bit-exact");
+        // Self-delta: zero parts, still applies cleanly.
+        let idem = next.apply_delta(&next.diff(&next)).unwrap();
+        assert_eq!(idem.to_bytes(), next.to_bytes());
+        assert_eq!(next.diff(&next).changes(), 0);
+    }
+
+    #[test]
+    fn stale_delta_is_rejected() {
+        let base = base_model();
+        let next = moved_row_target(&base);
+        let delta = base.diff(&next);
+        let stranger = base.clone().with_version(99);
+        match stranger.apply_delta(&delta) {
+            Err(DeltaApplyError::VersionGap { base: b, from, to }) => {
+                assert_eq!((b, from, to), (99, 3, 4));
+            }
+            other => panic!("expected VersionGap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn delta_bytes_reject_version_and_garbage() {
+        let base = base_model();
+        let wire = base.diff(&moved_row_target(&base)).to_bytes();
+        let text = String::from_utf8(wire).unwrap();
+        let bumped = text.replace("\"format_version\":1", "\"format_version\":7");
+        assert_ne!(text, bumped);
+        let err = ModelDelta::from_bytes(bumped.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("unsupported format version 7"), "got: {err}");
+        // A model snapshot is not a delta document.
+        assert!(matches!(
+            ModelDelta::from_bytes(&base.to_bytes()),
+            Err(ModelParseError::NotADocument { expected: "rkmodel-delta" })
+        ));
+    }
+}

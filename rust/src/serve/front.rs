@@ -1,0 +1,258 @@
+//! The request-batching assign front.
+//!
+//! Concurrent callers hand single tuples to [`AssignClient::assign`] /
+//! [`AssignClient::submit`]; a dedicated dispatcher thread drains the
+//! shared queue into **micro-batches** (first request blocks, the rest
+//! of the batch is whatever has queued up, capped at
+//! [`FrontOpts::max_batch`]) and fans each batch out over the shared
+//! [`ExecPool`] — so per-request cost amortizes the pool handshake and
+//! the k·m assign kernels of a batch run in parallel, instead of one
+//! thread grinding one request at a time. Under light load a batch is a
+//! single request and the serial fast path answers it with no dispatch;
+//! under heavy load batches grow toward the cap and throughput scales
+//! with cores. `benches/serve_load.rs` gates the batched-vs-naive ratio.
+//!
+//! **Version discipline.** Each batch pins one replica
+//! ([`ModelMesh::model`], round-robin) and the dispatcher only moves its
+//! served version *forward*: a replica slot that has not been swapped
+//! yet is skipped in favor of the version floor, so the stream of
+//! [`Assignment::version`] tags is monotone across all clients even
+//! while the publisher is mid-install. Every reply carries the version
+//! that served it plus its measured queue+compute latency, which also
+//! feeds the `serve.assign_us` histogram (p50/p99 in
+//! [`Metrics::snapshot`](crate::metrics::Metrics::snapshot)).
+
+use crate::data::Value;
+use crate::serve::ModelMesh;
+use crate::util::exec::ExecPool;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Tuning knobs for the front.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontOpts {
+    /// Micro-batch cap: how many queued requests one dispatch may drain.
+    pub max_batch: usize,
+    /// Pool workers per batch dispatch (0 = the whole pool).
+    pub threads: usize,
+}
+
+impl Default for FrontOpts {
+    fn default() -> FrontOpts {
+        FrontOpts { max_batch: 64, threads: 0 }
+    }
+}
+
+/// One answered assign request.
+#[derive(Clone, Copy, Debug)]
+pub struct Assignment {
+    /// Nearest-centroid cluster id.
+    pub cluster: usize,
+    /// Model version that served the request (monotone per client).
+    pub version: u64,
+    /// Queue + compute latency observed by the dispatcher, µs.
+    pub latency_us: u64,
+}
+
+struct Request {
+    row: Vec<Value>,
+    t0: Instant,
+    reply: Sender<Assignment>,
+}
+
+/// A cloneable submission handle (one per client thread —
+/// [`Sender`] is `Send` but not `Sync`).
+#[derive(Clone)]
+pub struct AssignClient {
+    tx: Sender<Request>,
+}
+
+impl AssignClient {
+    /// Enqueue a request without waiting (open-loop callers); the
+    /// returned channel yields the [`Assignment`] when its batch
+    /// completes. Panics if the front has shut down.
+    pub fn submit(&self, row: Vec<Value>) -> Receiver<Assignment> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { row, t0: Instant::now(), reply: rtx })
+            .expect("assign front is running");
+        rrx
+    }
+
+    /// Enqueue a request and block for its answer (closed-loop callers).
+    pub fn assign(&self, row: Vec<Value>) -> Assignment {
+        self.submit(row).recv().expect("assign front replies")
+    }
+}
+
+/// The micro-batching front over a [`ModelMesh`] (see module docs).
+/// Dropping it (or calling [`AssignFront::shutdown`]) drains the queue
+/// and joins the dispatcher.
+pub struct AssignFront {
+    tx: Option<Sender<Request>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl AssignFront {
+    /// Start the dispatcher thread serving `mesh` with batches run on
+    /// `pool` (pass [`shared_pool`](crate::util::exec::shared_pool) for
+    /// the process-wide workers).
+    pub fn start(mesh: Arc<ModelMesh>, opts: FrontOpts, pool: Arc<ExecPool>) -> AssignFront {
+        let (tx, rx) = channel::<Request>();
+        let max_batch = opts.max_batch.max(1);
+        let dispatcher = std::thread::Builder::new()
+            .name("rk-serve-front".to_string())
+            .spawn(move || dispatch_loop(&mesh, &pool, rx, max_batch, opts.threads))
+            .expect("spawn assign dispatcher");
+        AssignFront { tx: Some(tx), dispatcher: Some(dispatcher) }
+    }
+
+    /// A new submission handle; clone one per client thread.
+    pub fn client(&self) -> AssignClient {
+        AssignClient { tx: self.tx.clone().expect("front is running") }
+    }
+
+    /// Stop accepting requests, answer everything already queued, and
+    /// join the dispatcher.
+    pub fn shutdown(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AssignFront {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Dispatcher body: drain → pin replica (version floor) → batch-assign
+/// on the pool → reply. Exits when every client handle is gone.
+fn dispatch_loop(
+    mesh: &ModelMesh,
+    pool: &ExecPool,
+    rx: Receiver<Request>,
+    max_batch: usize,
+    threads: usize,
+) {
+    let metrics = mesh.metrics();
+    let requests = metrics.counter("serve.requests");
+    let batches = metrics.counter("serve.batches");
+    let assign_us = metrics.histogram("serve.assign_us");
+    let batch_size = metrics.histogram("serve.batch_size");
+
+    let mut rr = 0usize;
+    let mut served = mesh.model(0);
+    while let Ok(first) = rx.recv() {
+        let mut batch: Vec<(Request, usize)> = vec![(first, 0)];
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(req) => batch.push((req, 0)),
+                Err(_) => break,
+            }
+        }
+
+        // Round-robin over replicas, never moving the served version
+        // backwards (slots can disagree mid-install).
+        rr = (rr + 1) % mesh.replicas();
+        let candidate = mesh.model(rr);
+        if candidate.version >= served.version {
+            served = candidate;
+        }
+        let model = &served;
+        pool.run_chunks(&mut batch, threads, |_, w| w.1 = model.assign(&w.0.row));
+
+        batches.inc();
+        batch_size.observe(batch.len() as u64);
+        let version = model.version;
+        for (req, cluster) in batch {
+            let latency_us = req.t0.elapsed().as_micros() as u64;
+            assign_us.observe(latency_us);
+            requests.inc();
+            // A client that gave up on its receiver is not an error.
+            let _ = req.reply.send(Assignment { cluster, version, latency_us });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::rkmeans::RkModel;
+    use crate::util::exec::ExecPool;
+
+    fn tiny_model(version: u64) -> RkModel {
+        use crate::cluster::kmeans1d;
+        use crate::cluster::sparse_lloyd::CentroidCoord;
+        use crate::coreset::{SubspaceModel, SubspaceSolver};
+        let solver = kmeans1d(&[(0.0, 1.0), (10.0, 1.0)], 2);
+        RkModel::from_result(&crate::rkmeans::RkResult {
+            centroids: vec![
+                vec![CentroidCoord::Continuous(0.0)],
+                vec![CentroidCoord::Continuous(10.0)],
+            ],
+            models: vec![SubspaceModel {
+                name: "x".to_string(),
+                lambda: 1.0,
+                cost: solver.cost,
+                solver: SubspaceSolver::Continuous(solver),
+            }],
+            objective_grid: 0.0,
+            quantization_cost: 0.0,
+            grid_points: 2,
+            grid_mass: 2.0,
+            iters: 1,
+            timings: Default::default(),
+            step4_stats: Default::default(),
+        })
+        .with_version(version)
+    }
+
+    #[test]
+    fn batched_assign_answers_correctly() {
+        let metrics = Metrics::new();
+        let mesh = ModelMesh::new(tiny_model(1), 2, metrics.clone());
+        let front =
+            AssignFront::start(Arc::clone(&mesh), FrontOpts::default(), ExecPool::new(2));
+        let client = front.client();
+        // Open-loop burst so the dispatcher actually forms batches.
+        let pending: Vec<_> = (0..200)
+            .map(|i| {
+                let x = if i % 2 == 0 { 0.5 } else { 9.5 };
+                (i, client.submit(vec![Value::Double(x)]))
+            })
+            .collect();
+        for (i, rx) in pending {
+            let a = rx.recv().expect("reply");
+            assert_eq!(a.cluster, if i % 2 == 0 { 0 } else { 1 });
+            assert_eq!(a.version, 1);
+        }
+        front.shutdown();
+        assert_eq!(metrics.counter("serve.requests").get(), 200);
+        let batches = metrics.counter("serve.batches").get();
+        assert!((1..=200).contains(&batches));
+        assert_eq!(metrics.histogram("serve.assign_us").count(), 200);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let mesh = ModelMesh::new(tiny_model(3), 1, Metrics::new());
+        let front = AssignFront::start(mesh, FrontOpts::default(), ExecPool::new(1));
+        let client = front.client();
+        let pending: Vec<_> = (0..32).map(|_| client.submit(vec![Value::Double(1.0)])).collect();
+        drop(client);
+        front.shutdown();
+        for rx in pending {
+            assert_eq!(rx.recv().expect("drained before shutdown").version, 3);
+        }
+    }
+}

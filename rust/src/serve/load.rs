@@ -1,0 +1,276 @@
+//! Synthetic load generation for the serving tier.
+//!
+//! [`synth_rows`] samples request tuples straight from a model's own
+//! geometry (no database needed at the edge: continuous values jitter
+//! around the Step-2 centers, categorical keys draw from the subspace's
+//! observed heavy/light domains), and [`run_open_loop`] drives an
+//! [`AssignFront`] with them: each client thread *submits* at its share
+//! of the target arrival rate without waiting for answers — the
+//! open-loop discipline, so queueing delay shows up in the latency tail
+//! instead of throttling the generator — then drains its replies.
+//! [`run_naive_loop`] is the contrast arm: one thread, one
+//! [`RkModel::assign`] call per request, no batching, no pool — the
+//! baseline the `serve_qps_speedup` bench gate compares against.
+
+use crate::coreset::SubspaceSolver;
+use crate::data::Value;
+use crate::rkmeans::RkModel;
+use crate::serve::AssignFront;
+use crate::util::SplitMix64;
+use std::time::{Duration, Instant};
+
+/// Load-generator shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Target aggregate arrival rate (requests/s); `None` = submit as
+    /// fast as possible (the saturation/throughput measurement).
+    pub qps: Option<f64>,
+    /// Row-sampling seed.
+    pub seed: u64,
+}
+
+impl LoadSpec {
+    /// A saturation run: `requests` requests from `clients` un-paced
+    /// clients.
+    pub fn saturate(requests: usize, clients: usize) -> LoadSpec {
+        LoadSpec { requests, clients, qps: None, seed: 42 }
+    }
+}
+
+/// What a load run measured.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadReport {
+    /// Requests answered.
+    pub requests: usize,
+    /// Wall-clock of the whole run (submit through last drain), seconds.
+    pub elapsed_s: f64,
+    /// Sustained throughput `requests / elapsed_s`.
+    pub qps: f64,
+    /// Median per-request latency (queue + compute), µs — exact over
+    /// the run's samples, not histogram-bucketed.
+    pub p50_us: u64,
+    /// 99th-percentile per-request latency, µs.
+    pub p99_us: u64,
+    /// Smallest model version observed in a reply.
+    pub min_version: u64,
+    /// Largest model version observed in a reply.
+    pub max_version: u64,
+    /// Whether every client saw a non-decreasing version sequence (the
+    /// front's monotonicity contract).
+    pub monotonic: bool,
+}
+
+impl LoadReport {
+    /// One printable summary line.
+    pub fn line(&self, label: &str) -> String {
+        format!(
+            "{label:<10} {:>8} req in {:>7.3}s  {:>9.0} req/s  p50={:>5}µs p99={:>5}µs  \
+             versions {}..={}{}",
+            self.requests,
+            self.elapsed_s,
+            self.qps,
+            self.p50_us,
+            self.p99_us,
+            self.min_version,
+            self.max_version,
+            if self.monotonic { "" } else { "  (NON-MONOTONE!)" }
+        )
+    }
+}
+
+/// Sample `n` plausible request tuples from the model's own geometry
+/// (FEQ feature order, ready for [`RkModel::assign`]).
+pub fn synth_rows(model: &RkModel, n: usize, seed: u64) -> Vec<Vec<Value>> {
+    let mut rng = SplitMix64::new(seed);
+    // Per-subspace candidate pools, built once.
+    let pools: Vec<(Option<(f64, f64)>, Vec<u64>)> = model
+        .models
+        .iter()
+        .map(|m| match &m.solver {
+            SubspaceSolver::Continuous(r) => {
+                let lo = r.centers.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = r.centers.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let pad = (hi - lo).abs().max(1.0) * 0.25;
+                (Some((lo - pad, hi + pad)), Vec::new())
+            }
+            SubspaceSolver::Categorical(c) => {
+                let mut keys: Vec<u64> = c.heavy.clone();
+                keys.extend(c.light.iter().map(|&(e, _)| e));
+                if keys.is_empty() {
+                    keys.push(0);
+                }
+                (None, keys)
+            }
+        })
+        .collect();
+    (0..n)
+        .map(|_| {
+            pools
+                .iter()
+                .map(|(cont, keys)| match cont {
+                    Some((lo, hi)) => Value::Double(rng.uniform(*lo, *hi)),
+                    None => Value::Int(keys[rng.below(keys.len() as u64) as usize] as i64),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Exact percentile over a sorted sample (`0.0 < q ≤ 1.0`).
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Drive `front` with `spec.requests` tuples cycled from `rows`,
+/// open-loop (module docs). Blocks until every reply has drained.
+pub fn run_open_loop(front: &AssignFront, rows: &[Vec<Value>], spec: &LoadSpec) -> LoadReport {
+    assert!(!rows.is_empty(), "need at least one request row");
+    let clients = spec.clients.max(1);
+    let total = spec.requests;
+    // Per-client arrival interval: the aggregate rate split evenly.
+    let interval = spec.qps.map(|q| Duration::from_secs_f64(clients as f64 / q.max(1e-9)));
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = front.client();
+            let share: Vec<Vec<Value>> = (0..total / clients + usize::from(c < total % clients))
+                .map(|i| rows[(c + i * clients) % rows.len()].clone())
+                .collect();
+            std::thread::spawn(move || {
+                let mut pending = Vec::with_capacity(share.len());
+                let mut next_at = Instant::now();
+                for row in share {
+                    if let Some(iv) = interval {
+                        let now = Instant::now();
+                        if now < next_at {
+                            std::thread::sleep(next_at - now);
+                        }
+                        next_at += iv;
+                    }
+                    pending.push(client.submit(row));
+                }
+                pending
+                    .into_iter()
+                    .map(|rx| rx.recv().expect("assign front replies"))
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+
+    let mut latencies = Vec::with_capacity(total);
+    let (mut min_v, mut max_v, mut monotonic) = (u64::MAX, 0u64, true);
+    for h in handles {
+        let mut last = 0u64;
+        for a in h.join().expect("load client") {
+            monotonic &= a.version >= last;
+            last = a.version;
+            min_v = min_v.min(a.version);
+            max_v = max_v.max(a.version);
+            latencies.push(a.latency_us);
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    LoadReport {
+        requests: latencies.len(),
+        elapsed_s,
+        qps: latencies.len() as f64 / elapsed_s.max(1e-12),
+        p50_us: pct(&latencies, 0.50),
+        p99_us: pct(&latencies, 0.99),
+        min_version: if latencies.is_empty() { 0 } else { min_v },
+        max_version: max_v,
+        monotonic,
+    }
+}
+
+/// The un-batched contrast arm: one thread, one `assign` per request.
+pub fn run_naive_loop(model: &RkModel, rows: &[Vec<Value>], requests: usize) -> LoadReport {
+    assert!(!rows.is_empty(), "need at least one request row");
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let t = Instant::now();
+        std::hint::black_box(model.assign(&rows[i % rows.len()]));
+        latencies.push(t.elapsed().as_micros() as u64);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    LoadReport {
+        requests,
+        elapsed_s,
+        qps: requests as f64 / elapsed_s.max(1e-12),
+        p50_us: pct(&latencies, 0.50),
+        p99_us: pct(&latencies, 0.99),
+        min_version: model.version,
+        max_version: model.version,
+        monotonic: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+    use crate::serve::{FrontOpts, ModelMesh};
+    use crate::synthetic::{retailer, Scale};
+    use crate::util::exec::ExecPool;
+    use std::sync::Arc;
+
+    fn model() -> RkModel {
+        let db = retailer::generate(Scale::tiny(), 42);
+        let feq = retailer::feq();
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        pipe.coreset(&subspaces).unwrap().cluster(&ClusterOpts::new(4)).with_version(1)
+    }
+
+    #[test]
+    fn synth_rows_assign_cleanly() {
+        let m = model();
+        let rows = synth_rows(&m, 64, 9);
+        assert_eq!(rows.len(), 64);
+        for row in &rows {
+            assert_eq!(row.len(), m.m());
+            assert!(m.assign(row) < m.k());
+        }
+        // Deterministic in the seed.
+        assert_eq!(synth_rows(&m, 8, 9), synth_rows(&m, 8, 9));
+    }
+
+    #[test]
+    fn open_loop_answers_every_request() {
+        let m = model();
+        let rows = synth_rows(&m, 128, 3);
+        let mesh = ModelMesh::new(m, 2, Metrics::new());
+        let front = AssignFront::start(mesh, FrontOpts::default(), ExecPool::new(2));
+        let spec = LoadSpec { requests: 500, clients: 3, qps: None, seed: 3 };
+        let report = run_open_loop(&front, &rows, &spec);
+        front.shutdown();
+        assert_eq!(report.requests, 500);
+        assert!(report.monotonic);
+        assert_eq!((report.min_version, report.max_version), (1, 1));
+        assert!(report.qps > 0.0);
+        assert!(report.p50_us <= report.p99_us);
+    }
+
+    #[test]
+    fn naive_loop_reports() {
+        let m = model();
+        let rows = synth_rows(&m, 32, 5);
+        let report = run_naive_loop(&m, &rows, 200);
+        assert_eq!(report.requests, 200);
+        assert!(report.qps > 0.0);
+        assert!(report.monotonic);
+    }
+}

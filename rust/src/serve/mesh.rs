@@ -1,0 +1,167 @@
+//! The replicated model tier: N hot-swappable [`RkModel`] replicas.
+//!
+//! Each replica slot is an `RwLock<Arc<RkModel>>`. A reader clones the
+//! `Arc` under the read lock — a pointer copy, never a model copy — so
+//! it can serve off that version for as long as it likes while the
+//! [`Publisher`](crate::serve::Publisher) swaps the slot underneath it;
+//! the old version stays alive through its refcount until every
+//! in-flight batch drains. Because the swap replaces a single pointer,
+//! a reader observes either the old model or the new one, **never a
+//! torn mix** — `tests/serve_mesh.rs` hammers this with readers racing
+//! a swap loop.
+//!
+//! Multiple slots exist to spread read-lock traffic: the
+//! [`AssignFront`](crate::serve::AssignFront) round-robins batches over
+//! them, and a multi-process deployment would map each slot to a
+//! replica process (ROADMAP direction 2). Installs walk every slot, so
+//! slots may briefly disagree during a publish; the front's version
+//! floor keeps served versions monotone regardless.
+
+use crate::metrics::{Counter, Metrics};
+use crate::rkmeans::RkModel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// A fixed-size tier of hot-swappable model replicas (see module docs).
+pub struct ModelMesh {
+    replicas: Vec<RwLock<Arc<RkModel>>>,
+    /// Version of the most recent install, for observers that don't
+    /// hold a model (`serve.version` gauge mirrors it).
+    latest: AtomicU64,
+    /// `serve.swaps` — one increment per replica slot swapped.
+    swaps: Arc<Counter>,
+    metrics: Metrics,
+}
+
+impl ModelMesh {
+    /// A mesh of `replicas` slots (clamped to ≥ 1), all serving
+    /// `initial`. Swap and version telemetry lands in `metrics` under
+    /// `serve.*`.
+    pub fn new(initial: RkModel, replicas: usize, metrics: Metrics) -> Arc<ModelMesh> {
+        let initial = Arc::new(initial);
+        let n = replicas.max(1);
+        metrics.gauge("serve.replicas").set(n as i64);
+        metrics.gauge("serve.version").set(initial.version as i64);
+        Arc::new(ModelMesh {
+            replicas: (0..n).map(|_| RwLock::new(Arc::clone(&initial))).collect(),
+            latest: AtomicU64::new(initial.version),
+            swaps: metrics.counter("serve.swaps"),
+            metrics,
+        })
+    }
+
+    /// Number of replica slots.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Pin replica `i % n`'s current model: an `Arc` clone under the
+    /// read lock. The caller serves off a consistent version for the
+    /// lifetime of the handle, regardless of concurrent installs.
+    pub fn model(&self, i: usize) -> Arc<RkModel> {
+        Arc::clone(&self.replicas[i % self.replicas.len()].read().expect("replica lock"))
+    }
+
+    /// Version of the most recent install.
+    pub fn latest_version(&self) -> u64 {
+        self.latest.load(Ordering::Acquire)
+    }
+
+    /// Hot-swap every replica slot to `model`. Each slot flips
+    /// atomically (pointer swap under its write lock); in-flight readers
+    /// keep their pinned `Arc` and drain on the old version.
+    pub fn install(&self, model: Arc<RkModel>) {
+        for slot in &self.replicas {
+            *slot.write().expect("replica lock") = Arc::clone(&model);
+            self.swaps.inc();
+        }
+        self.latest.store(model.version, Ordering::Release);
+        self.metrics.gauge("serve.version").set(model.version as i64);
+    }
+
+    /// The registry serve telemetry lands in.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+impl std::fmt::Debug for ModelMesh {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelMesh")
+            .field("replicas", &self.replicas())
+            .field("latest_version", &self.latest_version())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::sparse_lloyd::CentroidCoord;
+    use crate::data::Value;
+
+    /// A 1-subspace model whose centroid encodes its version, so a torn
+    /// read would be detectable as a version/centroid mismatch.
+    fn marked_model(version: u64) -> RkModel {
+        use crate::cluster::kmeans1d;
+        use crate::coreset::{SubspaceModel, SubspaceSolver};
+        let solver = kmeans1d(&[(0.0, 1.0), (1.0, 1.0)], 2);
+        let models = vec![SubspaceModel {
+            name: "x".to_string(),
+            lambda: 1.0,
+            cost: solver.cost,
+            solver: SubspaceSolver::Continuous(solver),
+        }];
+        let centroids = vec![
+            vec![CentroidCoord::Continuous(version as f64)],
+            vec![CentroidCoord::Continuous(-(version as f64))],
+        ];
+        let base = RkModel::from_result(&crate::rkmeans::RkResult {
+            centroids,
+            models,
+            objective_grid: version as f64 * 3.0,
+            quantization_cost: 0.0,
+            grid_points: 2,
+            grid_mass: 2.0,
+            iters: 1,
+            timings: Default::default(),
+            step4_stats: Default::default(),
+        });
+        base.with_version(version)
+    }
+
+    #[test]
+    fn install_swaps_every_replica() {
+        let metrics = Metrics::new();
+        let mesh = ModelMesh::new(marked_model(1), 3, metrics.clone());
+        assert_eq!(mesh.replicas(), 3);
+        assert_eq!(mesh.latest_version(), 1);
+        mesh.install(Arc::new(marked_model(2)));
+        for i in 0..mesh.replicas() {
+            assert_eq!(mesh.model(i).version, 2);
+        }
+        assert_eq!(mesh.latest_version(), 2);
+        assert_eq!(metrics.counter("serve.swaps").get(), 3);
+        assert_eq!(metrics.gauge("serve.version").get(), 2);
+    }
+
+    #[test]
+    fn pinned_model_survives_a_swap() {
+        let mesh = ModelMesh::new(marked_model(5), 1, Metrics::new());
+        let pinned = mesh.model(0);
+        mesh.install(Arc::new(marked_model(6)));
+        // The pinned handle still serves version 5, consistently.
+        assert_eq!(pinned.version, 5);
+        assert_eq!(pinned.assign(&[Value::Double(4.9)]), 0);
+        let CentroidCoord::Continuous(mu) = pinned.centroids[0][0] else { panic!() };
+        assert_eq!(mu, 5.0);
+        assert_eq!(mesh.model(0).version, 6);
+    }
+
+    #[test]
+    fn zero_replicas_clamps_to_one() {
+        let mesh = ModelMesh::new(marked_model(1), 0, Metrics::new());
+        assert_eq!(mesh.replicas(), 1);
+        assert_eq!(mesh.model(7).version, 1, "indices wrap modulo n");
+    }
+}

@@ -1,0 +1,100 @@
+//! The serving tier: replicated models, micro-batched assignment,
+//! hot-swap publication, and centroid-delta shipping.
+//!
+//! This is the layer that carries the paper's query-time promise — the
+//! exact O(k·m) factored [`RkModel::assign`](crate::rkmeans::RkModel::assign)
+//! over never-materialized tuples — to production request rates. Four
+//! pieces compose it:
+//!
+//! * [`ModelMesh`] (`mesh`) — N hot-swappable replica slots, each an
+//!   `RwLock<Arc<RkModel>>`. Readers pin a version with a pointer
+//!   clone; installs flip slots atomically, so a reader sees the old
+//!   model or the new one, never a torn mix, and in-flight batches
+//!   drain on the version they pinned.
+//! * [`AssignFront`] (`front`) — the request-batching front. Concurrent
+//!   clients enqueue single tuples; a dispatcher drains them into
+//!   micro-batches and fans each batch over the shared
+//!   [`ExecPool`](crate::util::exec::ExecPool), amortizing dispatch
+//!   overhead and putting every core behind the assign kernels. Served
+//!   versions are monotone across all clients (a round-robin replica
+//!   pick with a version floor).
+//! * [`ModelDelta`] + [`RkModel::diff`](crate::rkmeans::RkModel::diff) /
+//!   [`RkModel::apply_delta`](crate::rkmeans::RkModel::apply_delta)
+//!   (`delta`) — the versioned wire format between model versions:
+//!   changed centroid rows and re-solved subspace models only, keyed
+//!   `from_version → to_version`, with bit-exact reconstruction
+//!   (`apply_delta(diff(a, b)) ≡ b` bitwise) and stale-delta rejection.
+//! * [`Publisher`] (`publish`) — the writer side: diff against what
+//!   replicas serve, ship the delta through the wire encoding, verify
+//!   bitwise reconstruction, hot-swap every slot. Delta-vs-snapshot
+//!   byte accounting lands in `serve.*` metrics.
+//!
+//! [`load`] provides the open-loop generator ([`run_open_loop`]) and
+//! the un-batched contrast arm ([`run_naive_loop`]) that
+//! `benches/serve_load.rs` measures; `rkmeans serve` wires all of it
+//! into a CLI server loop fed by the incremental engine. Telemetry:
+//! `serve.requests`, `serve.batches`, `serve.assign_us.{count,p50,p99}`,
+//! `serve.batch_size.*`, `serve.swaps`, `serve.publishes`,
+//! `serve.delta_bytes`, `serve.snapshot_bytes`, `serve.stale_deltas`,
+//! `serve.version`, `serve.replicas`.
+
+pub mod delta;
+pub mod front;
+pub mod load;
+pub mod mesh;
+pub mod publish;
+
+pub use delta::{DeltaApplyError, ModelDelta, MODEL_DELTA_FORMAT_VERSION};
+pub use front::{AssignClient, AssignFront, Assignment, FrontOpts};
+pub use load::{run_naive_loop, run_open_loop, synth_rows, LoadReport, LoadSpec};
+pub use mesh::ModelMesh;
+pub use publish::{PublishStats, Publisher};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+    use crate::synthetic::{retailer, Scale};
+    use crate::util::exec::shared_pool;
+    use std::sync::Arc;
+
+    /// End-to-end smoke: build → mesh → front → load → publish → load.
+    #[test]
+    fn serve_tier_end_to_end() {
+        let db = retailer::generate(Scale::tiny(), 42);
+        let feq = retailer::feq();
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        let coreset = pipe.coreset(&subspaces).unwrap();
+        let v1 = coreset.cluster(&ClusterOpts::new(4)).with_version(1);
+        let v2 = coreset.cluster(&ClusterOpts::new(4).with_seed(7)).with_version(2);
+
+        let metrics = Metrics::new();
+        let mesh = ModelMesh::new(v1.clone(), 2, metrics.clone());
+        let front = AssignFront::start(Arc::clone(&mesh), FrontOpts::default(), shared_pool());
+        let rows = synth_rows(&v1, 64, 11);
+
+        let before = run_open_loop(&front, &rows, &LoadSpec::saturate(200, 2));
+        assert_eq!(before.requests, 200);
+        assert_eq!(before.max_version, 1);
+
+        let mut publisher = Publisher::new(Arc::clone(&mesh));
+        let stats = publisher.publish(&v2).unwrap();
+        assert_eq!(stats.version, 2);
+
+        let after = run_open_loop(&front, &rows, &LoadSpec::saturate(200, 2));
+        assert_eq!(after.requests, 200);
+        assert_eq!(after.max_version, 2, "post-publish traffic serves the new version");
+        assert!(after.monotonic);
+        front.shutdown();
+
+        let snap = metrics.snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        assert_eq!(get("serve.requests"), Some(400));
+        assert_eq!(get("serve.publishes"), Some(1));
+        assert_eq!(get("serve.swaps"), Some(2));
+        assert!(get("serve.assign_us.p99").unwrap() >= get("serve.assign_us.p50").unwrap());
+    }
+}

@@ -1,0 +1,171 @@
+//! The writer-side publisher: versions go out as centroid deltas, land
+//! as atomic hot-swaps.
+//!
+//! A [`Publisher`] sits between a model writer (the incremental
+//! engine's [`model()`](crate::incremental::IncrementalEngine::model)
+//! per batch, or any source of versioned [`RkModel`]s) and a
+//! [`ModelMesh`]. Each [`Publisher::publish`] exercises the full wire
+//! path a multi-process deployment would take: diff against the
+//! replicas' current version, serialize the [`ModelDelta`], decode it
+//! back, splice it onto the replica-side base, and verify the result
+//! serializes **bit-identically** to the writer's snapshot before
+//! installing it — a corrupt or stale delta can never reach a replica
+//! slot. Delta and snapshot byte sizes are accumulated in
+//! `serve.delta_bytes` / `serve.snapshot_bytes` (their ratio is the
+//! gated `serve_delta_bytes_ratio`), and `serve.stale_deltas` counts
+//! rejected version gaps.
+
+use crate::metrics::Counter;
+use crate::rkmeans::RkModel;
+use crate::serve::{DeltaApplyError, ModelDelta, ModelMesh};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Byte accounting for one published version.
+#[derive(Clone, Copy, Debug)]
+pub struct PublishStats {
+    /// Version now serving on every replica.
+    pub version: u64,
+    /// Wire size of the shipped delta.
+    pub delta_bytes: usize,
+    /// Wire size a full snapshot would have cost.
+    pub snapshot_bytes: usize,
+    /// Changed parts shipped (subspaces + centroid rows).
+    pub changes: usize,
+}
+
+impl PublishStats {
+    /// `snapshot_bytes / delta_bytes` — how much cheaper the delta was
+    /// (∞-safe: a zero-byte delta cannot happen, the scalars always
+    /// ship).
+    pub fn bytes_ratio(&self) -> f64 {
+        self.snapshot_bytes as f64 / self.delta_bytes as f64
+    }
+}
+
+/// Ships versions to a [`ModelMesh`] as verified deltas (module docs).
+pub struct Publisher {
+    mesh: Arc<ModelMesh>,
+    /// What every replica currently serves — the delta base.
+    current: Arc<RkModel>,
+    publishes: Arc<Counter>,
+    delta_bytes: Arc<Counter>,
+    snapshot_bytes: Arc<Counter>,
+    stale_deltas: Arc<Counter>,
+}
+
+impl Publisher {
+    /// A publisher whose base is the mesh's current model.
+    pub fn new(mesh: Arc<ModelMesh>) -> Publisher {
+        let current = mesh.model(0);
+        let m = mesh.metrics().clone();
+        Publisher {
+            current,
+            publishes: m.counter("serve.publishes"),
+            delta_bytes: m.counter("serve.delta_bytes"),
+            snapshot_bytes: m.counter("serve.snapshot_bytes"),
+            stale_deltas: m.counter("serve.stale_deltas"),
+            mesh,
+        }
+    }
+
+    /// Version the replicas currently serve.
+    pub fn version(&self) -> u64 {
+        self.current.version
+    }
+
+    /// Ship `next` to every replica via the delta wire path, verifying
+    /// bitwise reconstruction before the swap (module docs). Returns the
+    /// byte accounting; the mesh's `serve.*` counters accumulate it.
+    pub fn publish(&mut self, next: &RkModel) -> Result<PublishStats> {
+        let delta = self.current.diff(next);
+        let wire = delta.to_bytes();
+        let snapshot = next.to_bytes();
+
+        // Replica-side path: decode the wire bytes, splice onto the
+        // served base, insist on bit-exact reconstruction.
+        let decoded = ModelDelta::from_bytes(&wire)?;
+        let applied = match self.current.apply_delta(&decoded) {
+            Ok(m) => m,
+            Err(e @ DeltaApplyError::VersionGap { .. }) => {
+                self.stale_deltas.inc();
+                return Err(e.into());
+            }
+            Err(e) => return Err(e.into()),
+        };
+        ensure!(
+            applied.to_bytes() == snapshot,
+            "delta round-trip diverged from the version-{} snapshot",
+            next.version
+        );
+
+        let installed = Arc::new(applied);
+        self.mesh.install(Arc::clone(&installed));
+        self.current = installed;
+        self.publishes.inc();
+        self.delta_bytes.add(wire.len() as u64);
+        self.snapshot_bytes.add(snapshot.len() as u64);
+        Ok(PublishStats {
+            version: next.version,
+            delta_bytes: wire.len(),
+            snapshot_bytes: snapshot.len(),
+            changes: delta.changes(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::sparse_lloyd::CentroidCoord;
+    use crate::metrics::Metrics;
+    use crate::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+    use crate::synthetic::{retailer, Scale};
+
+    fn model(version: u64) -> RkModel {
+        let db = retailer::generate(Scale::tiny(), 7);
+        let feq = retailer::feq();
+        let pipe = RkPipeline::plan(&db, &feq).unwrap();
+        let marginals = pipe.marginals().unwrap();
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+        pipe.coreset(&subspaces).unwrap().cluster(&ClusterOpts::new(4)).with_version(version)
+    }
+
+    #[test]
+    fn publish_ships_deltas_and_swaps() {
+        let metrics = Metrics::new();
+        let base = model(1);
+        let mesh = ModelMesh::new(base.clone(), 2, metrics.clone());
+        let mut publisher = Publisher::new(Arc::clone(&mesh));
+
+        let mut next = base.clone().with_version(2);
+        match &mut next.centroids[1][0] {
+            CentroidCoord::Continuous(mu) => *mu += 0.5,
+            CentroidCoord::Categorical(beta) => beta[0] += 0.125,
+        }
+        let stats = publisher.publish(&next).unwrap();
+        assert_eq!(stats.version, 2);
+        assert_eq!(stats.changes, 1, "one moved row");
+        assert!(stats.bytes_ratio() > 2.0, "delta must be much smaller: {stats:?}");
+        assert_eq!(publisher.version(), 2);
+        assert_eq!(mesh.latest_version(), 2);
+        // Replica-served bytes are bit-identical to the writer's model.
+        assert_eq!(mesh.model(0).to_bytes(), next.to_bytes());
+        assert_eq!(metrics.counter("serve.publishes").get(), 1);
+        assert_eq!(metrics.counter("serve.swaps").get(), 2);
+        assert!(
+            metrics.counter("serve.delta_bytes").get()
+                < metrics.counter("serve.snapshot_bytes").get()
+        );
+    }
+
+    #[test]
+    fn republishing_same_version_is_cheap_and_exact() {
+        let base = model(1);
+        let mesh = ModelMesh::new(base.clone(), 1, Metrics::new());
+        let mut publisher = Publisher::new(mesh);
+        let stats = publisher.publish(&base).unwrap();
+        assert_eq!(stats.changes, 0, "self-delta ships nothing but scalars");
+        assert!(stats.delta_bytes < stats.snapshot_bytes);
+    }
+}

@@ -1,8 +1,10 @@
 //! Persistent deterministic execution pool for chunked parallel work.
 //!
 //! The Step-4 engines, the streaming
-//! [`CentroidScorer`](crate::cluster::CentroidScorer) and the
-//! `coordinator` worker all run
+//! [`CentroidScorer`](crate::cluster::CentroidScorer), the
+//! `coordinator` worker and the serving tier's micro-batching assign
+//! front ([`crate::serve::AssignFront`] fanning request batches over
+//! the replicated mesh) all run
 //! the same shape of job: a slice of independent work items, each mutated
 //! in place, with results read back **in item order** by the caller so the
 //! output never depends on scheduling (the engine's determinism contract).

@@ -1,0 +1,118 @@
+//! Property tests for the centroid-delta wire format
+//! (`rkmeans::serve::delta`): across version sequences produced by the
+//! *real* incremental planner on random traces, every consecutive pair
+//! `(a, b)` must satisfy
+//!
+//! ```text
+//! a.apply_delta(from_bytes(to_bytes(a.diff(b)))) ≡ b   (bitwise)
+//! ```
+//!
+//! where ≡ is byte-identity of the canonical serialization — the
+//! shortest-repr f64 writer makes that equivalent to bitwise equality
+//! of every float. The planner is exercised on both of its paths,
+//! because they stress different delta shapes:
+//!
+//! * **patch-heavy** (lenient thresholds): Step-2 models stay frozen,
+//!   so deltas ship moved centroid rows only;
+//! * **rebuild-heavy** (`rebuild_every = 1`): Step-2 models re-solve
+//!   each batch, so deltas also carry whole subspace models — including
+//!   reseed-heavy traces (70 % deletes) where centroids move a lot.
+//!
+//! Plus the staleness contract: a delta keyed `from → to` must be
+//! rejected (with the version gap named) by any base that is not
+//! exactly `from`.
+
+use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlannerOpts};
+use rkmeans::metrics::Metrics;
+use rkmeans::rkmeans::{RkConfig, RkModel};
+use rkmeans::serve::{DeltaApplyError, ModelDelta};
+use rkmeans::synthetic::{retailer, retailer_trace, Scale, TraceSpec};
+
+/// Run a retailer trace through the incremental engine and collect the
+/// versioned model after init and after every batch.
+fn version_sequence(seed: u64, opts: PlannerOpts, spec: TraceSpec) -> Vec<RkModel> {
+    let mut db = retailer::generate(Scale::tiny(), seed);
+    let feq = retailer::feq();
+    let trace = retailer_trace(&db, seed + 1, spec);
+    let mut engine =
+        IncrementalEngine::new(&db, feq, RkConfig::new(4).with_seed(seed), opts, Metrics::new())
+            .expect("engine");
+    let mut out = vec![engine.model()];
+    for batch in &trace {
+        apply_to_db(&mut db, batch).expect("trace replays cleanly");
+        engine.apply_batch(&db, batch).expect("maintenance");
+        out.push(engine.model());
+    }
+    out
+}
+
+/// Lenient thresholds: every batch takes the patch path.
+fn patch_opts() -> PlannerOpts {
+    PlannerOpts {
+        drift_threshold: f64::INFINITY,
+        max_patch_fraction: 1.0,
+        max_join_churn: f64::INFINITY,
+        ..PlannerOpts::default()
+    }
+}
+
+/// Check the bitwise round-trip over every consecutive version pair.
+fn assert_roundtrips(models: &[RkModel]) {
+    for pair in models.windows(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        let delta = a.diff(b);
+        let decoded = ModelDelta::from_bytes(&delta.to_bytes()).expect("wire decode");
+        let applied = a.apply_delta(&decoded).expect("delta applies to its base");
+        assert_eq!(
+            applied.to_bytes(),
+            b.to_bytes(),
+            "delta v{} → v{} did not reconstruct bitwise",
+            a.version,
+            b.version
+        );
+    }
+}
+
+#[test]
+fn patch_path_deltas_reconstruct_bitwise() {
+    for seed in [11u64, 23, 47] {
+        let models = version_sequence(seed, patch_opts(), TraceSpec::new(4, 120));
+        assert!(models.len() > 3);
+        assert_roundtrips(&models);
+    }
+}
+
+#[test]
+fn rebuild_path_deltas_reconstruct_bitwise() {
+    let rebuild = PlannerOpts { rebuild_every: 1, ..PlannerOpts::default() };
+    let models = version_sequence(5, rebuild.clone(), TraceSpec::new(3, 120));
+    assert_roundtrips(&models);
+
+    // Reseed-heavy: 70 % deletes shrink clusters until Step 4 reseeds,
+    // the delta shape with the most churn per version.
+    let heavy = TraceSpec { batches: 3, batch_size: 150, delete_frac: 0.7 };
+    let models = version_sequence(7, rebuild, heavy);
+    assert_roundtrips(&models);
+}
+
+#[test]
+fn stale_deltas_name_the_version_gap() {
+    let models = version_sequence(3, patch_opts(), TraceSpec::new(3, 100));
+    // Find two consecutive models with distinct versions and a base
+    // strictly older than the delta's `from`.
+    let (a, b) = (&models[1], &models[2]);
+    let base = &models[0];
+    assert!(base.version < a.version && a.version < b.version, "versions advance per batch");
+    let delta = a.diff(b);
+    match base.apply_delta(&delta) {
+        Err(DeltaApplyError::VersionGap { base: got, from, to }) => {
+            assert_eq!(got, base.version);
+            assert_eq!(from, a.version);
+            assert_eq!(to, b.version);
+        }
+        other => panic!("expected a version-gap rejection, got {other:?}"),
+    }
+    // The error message tells the operator what to ship.
+    let msg = base.apply_delta(&delta).unwrap_err().to_string();
+    assert!(msg.contains("stale delta"), "unhelpful message: {msg}");
+}

@@ -1,0 +1,111 @@
+//! Hot-swap concurrency contract of the serving tier: reader threads
+//! assign through the batching front while a publisher swaps new
+//! versions into every replica slot in a loop. Three assertions:
+//!
+//! * **consistency** — every reply's (cluster, version) pair matches
+//!   what the published model of exactly that version answers for that
+//!   row, so no reply can ever come off a torn half-swapped model;
+//! * **membership** — every served version is one that was actually
+//!   published;
+//! * **monotonicity** — each reader's version sequence never goes
+//!   backwards, even as micro-batches interleave with swaps.
+//!
+//! The CI matrix runs this under `--release` too (`cargo test` after
+//! the release build), where torn reads would actually bite.
+
+use rkmeans::cluster::sparse_lloyd::CentroidCoord;
+use rkmeans::metrics::Metrics;
+use rkmeans::rkmeans::{ClusterOpts, RkModel, RkPipeline, SubspaceOpts};
+use rkmeans::serve::{synth_rows, AssignFront, FrontOpts, ModelMesh, Publisher};
+use rkmeans::synthetic::{retailer, Scale};
+use rkmeans::util::exec::shared_pool;
+use std::sync::Arc;
+use std::time::Duration;
+
+const VERSIONS: u64 = 6;
+
+/// Version `v`'s model: the base clustering with every centroid row
+/// nudged by a version-dependent amount, round-tripped through the wire
+/// format so the serving caches are rebuilt from the mutated values.
+fn published_model(base: &RkModel, v: u64) -> RkModel {
+    let mut m = base.clone().with_version(v);
+    for (i, row) in m.centroids.iter_mut().enumerate() {
+        match &mut row[0] {
+            CentroidCoord::Continuous(mu) => *mu += v as f64 * 0.35 + i as f64 * 0.05,
+            CentroidCoord::Categorical(beta) => beta[0] += v as f64 * 0.01,
+        }
+    }
+    RkModel::from_bytes(&m.to_bytes()).expect("wire round-trip")
+}
+
+#[test]
+fn hot_swap_readers_always_see_a_published_model() {
+    let db = retailer::generate(Scale::tiny(), 42);
+    let feq = retailer::feq();
+    let pipe = RkPipeline::plan(&db, &feq).unwrap();
+    let marginals = pipe.marginals().unwrap();
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+    let base = pipe.coreset(&subspaces).unwrap().cluster(&ClusterOpts::new(4));
+
+    let versions: Vec<RkModel> = (1..=VERSIONS).map(|v| published_model(&base, v)).collect();
+    let rows = synth_rows(&versions[0], 32, 9);
+    // expected[v - 1][r]: what version v's model answers for row r.
+    let expected: Vec<Vec<usize>> =
+        versions.iter().map(|m| rows.iter().map(|r| m.assign(r)).collect()).collect();
+
+    let mesh = ModelMesh::new(versions[0].clone(), 3, Metrics::new());
+    let front = AssignFront::start(Arc::clone(&mesh), FrontOpts::default(), shared_pool());
+
+    // The publisher: swap in versions 2..=N while readers are live.
+    let publisher_mesh = Arc::clone(&mesh);
+    let to_publish: Vec<RkModel> = versions[1..].to_vec();
+    let publisher = std::thread::spawn(move || {
+        let mut p = Publisher::new(publisher_mesh);
+        for m in &to_publish {
+            std::thread::sleep(Duration::from_millis(2));
+            p.publish(m).expect("publish");
+        }
+    });
+
+    // Readers: blocking assigns racing the swaps, each reply checked
+    // against the model of the version it claims to have been served by.
+    let readers: Vec<_> = (0..3)
+        .map(|c| {
+            let client = front.client();
+            let rows = rows.clone();
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                for i in 0..300usize {
+                    let idx = (c + i * 3) % rows.len();
+                    let a = client.assign(rows[idx].clone());
+                    assert!(
+                        (1..=VERSIONS).contains(&a.version),
+                        "served version {} was never published",
+                        a.version
+                    );
+                    assert!(a.version >= last, "reader saw v{} after v{last}", a.version);
+                    last = a.version;
+                    assert_eq!(
+                        a.cluster,
+                        expected[(a.version - 1) as usize][idx],
+                        "reply inconsistent with the version-{} model (row {idx})",
+                        a.version
+                    );
+                }
+            })
+        })
+        .collect();
+
+    for r in readers {
+        r.join().expect("reader thread");
+    }
+    publisher.join().expect("publisher thread");
+    front.shutdown();
+
+    assert_eq!(mesh.latest_version(), VERSIONS, "every version was published");
+    // Every replica slot ended bit-identical to the final published model.
+    for slot in 0..3 {
+        assert_eq!(mesh.model(slot).to_bytes(), versions.last().unwrap().to_bytes());
+    }
+}
