@@ -1,0 +1,258 @@
+//! `rklint` — the repo-native determinism & concurrency static-analysis
+//! pass.
+//!
+//! The bitwise contracts this codebase ships (naive≡pruned,
+//! patch≡rebuild, shard≡serial, `apply(diff(a,b))≡b`) rest on a handful
+//! of unwritten conventions: parallel compute routes through
+//! [`ExecPool`](crate::util::exec::ExecPool), nothing iterates a hash
+//! map where order can reach floating-point accumulation or the wire,
+//! deterministic paths never read the wall clock, wire encode/decode
+//! never truncates silently, and lock/channel failures carry context.
+//! `rklint` turns those conventions into deny-by-default rules checked
+//! at CI time, so a violation fails tier-1 instead of waiting for a
+//! property test's schedule to catch it.
+//!
+//! ## Rules
+//!
+//! | rule | guards |
+//! |------|--------|
+//! | `rogue-thread` | all thread creation lives in `util::exec` or the explicit [`rules::SPAWN_REGISTRY`] |
+//! | `nondet-iteration` | no storage-order iteration of `HashMap`/`HashSet`/`FxHashMap`/`FxHashSet`; use [`util::det`](crate::util::det) |
+//! | `wall-clock-in-core` | `Instant::now`/`SystemTime` only in `metrics`, `bench_harness`, `serve::load`, `util::timer` |
+//! | `unchecked-cast-in-wire` | no bare `as` numeric casts in `rkmeans/model.rs` + `serve/delta.rs` |
+//! | `contextless-unwrap` | no `.unwrap()` on lock/channel results in `serve/` + `util/exec.rs` |
+//!
+//! A site that is genuinely legitimate carries an inline waiver **with a
+//! mandatory reason**:
+//!
+//! ```text
+//! // rklint::allow(nondet-iteration, reason = "ring-ℤ exact merge; order-free by construction")
+//! ```
+//!
+//! on the flagged line or the line above. Waivers naming unknown rules
+//! or omitting the reason are themselves diagnostics (`invalid-waiver`)
+//! and cannot be waived — the escape hatch audits itself.
+//!
+//! The scanner ([`scan`]) masks comments, string literals (plain, raw,
+//! byte), and char literals before tokenizing, so rules never misfire
+//! on documentation or error messages, and it requires no external
+//! parser — the build stays hermetic. `tests/lint_gate.rs` runs the
+//! pass over the real tree in tier-1 and seeds synthetic violations to
+//! prove each rule still fires; `src/bin/rklint.rs` is the CLI driver
+//! whose `--report` JSON lands in CI artifacts next to the `BENCH_*`
+//! trajectory.
+
+pub mod rules;
+pub mod scan;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Every rule slug `rklint` knows, including the meta-rule for bad
+/// waiver annotations.
+pub const RULES: &[&str] = &[
+    "rogue-thread",
+    "nondet-iteration",
+    "wall-clock-in-core",
+    "unchecked-cast-in-wire",
+    "contextless-unwrap",
+    "invalid-waiver",
+];
+
+/// One finding at a source location. `waived == true` means the site
+/// carries a justification (inline waiver or registry entry) and does
+/// not fail the build — it still appears in the report so the full
+/// waiver surface is auditable per commit.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Rule slug from [`RULES`].
+    pub rule: &'static str,
+    /// Path relative to the crate root, forward slashes.
+    pub file: String,
+    /// 1-based line of the flagged token.
+    pub line: usize,
+    /// Human-readable finding, including the suggested fix.
+    pub message: String,
+    /// Whether a waiver (or registry entry) covers this site.
+    pub waived: bool,
+    /// The justification when waived.
+    pub waiver_reason: Option<String>,
+}
+
+/// The result of linting a tree: all diagnostics (active + waived) in
+/// (file, line) order, plus scan statistics.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Every finding, waived or not.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+impl Report {
+    /// Findings that fail the build (not waived).
+    pub fn active(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| !d.waived)
+    }
+
+    /// Number of waived findings.
+    pub fn waived(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.waived).count()
+    }
+
+    /// Machine-readable form for CI artifact archiving (stable key
+    /// order via the `util::json` BTreeMap writer).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("format".to_string(), Json::Str("rklint-report".to_string()));
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("files_scanned".to_string(), Json::Num(self.files as f64));
+        root.insert("active".to_string(), Json::Num(self.active().count() as f64));
+        root.insert("waived".to_string(), Json::Num(self.waived() as f64));
+        root.insert(
+            "rules".to_string(),
+            Json::Arr(RULES.iter().map(|r| Json::Str(r.to_string())).collect()),
+        );
+        let diags = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut o = BTreeMap::new();
+                o.insert("rule".to_string(), Json::Str(d.rule.to_string()));
+                o.insert("file".to_string(), Json::Str(d.file.clone()));
+                o.insert("line".to_string(), Json::Num(d.line as f64));
+                o.insert("message".to_string(), Json::Str(d.message.clone()));
+                o.insert("waived".to_string(), Json::Bool(d.waived));
+                if let Some(r) = &d.waiver_reason {
+                    o.insert("reason".to_string(), Json::Str(r.clone()));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("diagnostics".to_string(), Json::Arr(diags));
+        Json::Obj(root)
+    }
+}
+
+/// Lint a single source text under its crate-relative path. This is
+/// the unit the gate test drives with synthetic-violation fixtures.
+pub fn lint_source(rel_path: &str, source: &str) -> Vec<Diagnostic> {
+    let scanned = scan::scan(source);
+    let mut diags = rules::check(rel_path, &scanned);
+    apply_waivers(&mut diags, &scanned.waivers);
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Match diagnostics against inline waivers: a waiver covers findings
+/// of its rule on its own line and the line directly below. Waivers
+/// without a reason never match (and are already reported as
+/// `invalid-waiver` by the rules pass); `invalid-waiver` itself cannot
+/// be waived.
+fn apply_waivers(diags: &mut [Diagnostic], waivers: &[scan::Waiver]) {
+    for d in diags.iter_mut() {
+        if d.waived || d.rule == "invalid-waiver" {
+            continue;
+        }
+        if let Some(w) = waivers.iter().find(|w| {
+            w.rule == d.rule && w.reason.is_some() && (w.line == d.line || w.line + 1 == d.line)
+        }) {
+            d.waived = true;
+            d.waiver_reason = w.reason.clone();
+        }
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted traversal).
+/// Paths in the report are relative to `root`'s parent, i.e. they read
+/// `src/…` when `root` is the crate's `src` directory.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let base = root.parent().unwrap_or(root);
+    let mut report = Report::default();
+    for path in &files {
+        let source = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(base)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report.diagnostics.extend(lint_source(&rel, &source));
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiver_covers_same_line_and_next_line() {
+        let src = "\
+fn core() {
+    // rklint::allow(wall-clock-in-core, reason = \"demo\")
+    let t = Instant::now();
+    let u = Instant::now(); // rklint::allow(wall-clock-in-core, reason = \"demo2\")
+    let v = Instant::now();
+}
+";
+        let diags = lint_source("src/cluster/x.rs", src);
+        let active: Vec<_> = diags.iter().filter(|d| !d.waived).collect();
+        assert_eq!(active.len(), 1, "only the unwaived site stays active: {diags:?}");
+        assert_eq!(active[0].line, 5);
+        assert_eq!(diags.iter().filter(|d| d.waived).count(), 2);
+    }
+
+    #[test]
+    fn reasonless_waiver_does_not_suppress_and_is_flagged() {
+        let src = "\
+fn core() {
+    // rklint::allow(wall-clock-in-core)
+    let t = Instant::now();
+}
+";
+        let diags = lint_source("src/cluster/x.rs", src);
+        assert!(diags.iter().any(|d| d.rule == "invalid-waiver" && !d.waived));
+        assert!(diags.iter().any(|d| d.rule == "wall-clock-in-core" && !d.waived));
+    }
+
+    #[test]
+    fn unknown_rule_waiver_is_flagged() {
+        let diags =
+            lint_source("src/x.rs", "// rklint::allow(made-up-rule, reason = \"nope\")\n");
+        assert!(diags.iter().any(|d| d.rule == "invalid-waiver" && !d.waived));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let mut report = Report { diagnostics: Vec::new(), files: 3 };
+        report.diagnostics.extend(lint_source(
+            "src/cluster/x.rs",
+            "fn f() { let t = Instant::now(); }\n",
+        ));
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"format\":\"rklint-report\""));
+        assert!(j.contains("\"active\":1"));
+        assert!(j.contains("wall-clock-in-core"));
+    }
+}

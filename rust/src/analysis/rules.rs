@@ -1,0 +1,426 @@
+//! The `rklint` rule set (R1–R5) over the masked token stream.
+//!
+//! Every rule is deny-by-default: a match is a diagnostic unless the
+//! site carries an inline waiver with a reason, or (R1 only) the site
+//! is listed in [`SPAWN_REGISTRY`]. See [`crate::analysis`] for the
+//! rule catalogue and the determinism contract each rule guards.
+
+use super::scan::{Scanned, Tok};
+use super::{Diagnostic, RULES};
+use std::collections::BTreeSet;
+
+/// R1 — the explicit registry of legitimate thread-creation sites
+/// outside `util::exec`. An entry matches on (file suffix, enclosing
+/// `fn` name) so it survives line drift; matched sites surface in the
+/// report as *waived* diagnostics carrying the registry reason.
+pub const SPAWN_REGISTRY: &[(&str, &str, &str)] = &[
+    (
+        "coordinator/mod.rs",
+        "start",
+        "single long-lived coordinator service thread; its compute jobs all dispatch on ExecPool",
+    ),
+    (
+        "main.rs",
+        "cmd_serve",
+        "serve-loop writer thread driving the publisher while the foreground runs the load generator",
+    ),
+    (
+        "cluster/engine/mod.rs",
+        "run_chunks",
+        "scoped fallback executor, bitwise-pinned against ExecPool by tests/property_exec.rs",
+    ),
+    (
+        "cluster/engine/mod.rs",
+        "spawn",
+        "single score-ingest worker overlapping streaming with scoring; scoring itself runs on ExecPool",
+    ),
+    (
+        "serve/front.rs",
+        "start",
+        "single dispatcher service thread; batch compute fans onto the shared ExecPool",
+    ),
+    (
+        "serve/load.rs",
+        "run_open_loop",
+        "open-loop load-generator clients: intentionally independent arrival processes, measurement only",
+    ),
+    (
+        "metrics/mod.rs",
+        "shared_across_threads",
+        "test exercising cross-thread counter visibility",
+    ),
+];
+
+/// Map/set type names whose iteration order is hash-dependent (R2).
+/// `BTreeMap`/`BTreeSet` are deliberately absent — ordered iteration is
+/// the fix, not a finding.
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet", "FxHashMap", "FxHashSet"];
+
+/// Receiver methods that walk a map in storage order (R2).
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Numeric target types of a bare `as` cast (R4).
+const NUM_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+    "f32", "f64",
+];
+
+/// Result-producing methods whose `.unwrap()` loses context (R5).
+const FALLIBLE_SYNC_METHODS: &[&str] =
+    &["lock", "read", "write", "recv", "try_recv", "recv_timeout", "send", "join", "wait"];
+
+/// Files (suffix match) where rules do not apply at all.
+fn rule_applies(rule: &str, file: &str) -> bool {
+    match rule {
+        // The executor owns thread creation.
+        "rogue-thread" => !file.ends_with("util/exec.rs"),
+        // The sorted adapters must themselves iterate the raw map.
+        "nondet-iteration" => !file.ends_with("util/det.rs"),
+        // Telemetry, benches, the load generator, and the blessed clock
+        // are the only homes for wall-clock reads.
+        "wall-clock-in-core" => {
+            !(file.contains("src/metrics/")
+                || file.contains("src/bench_harness/")
+                || file.ends_with("serve/load.rs")
+                || file.ends_with("util/timer.rs"))
+        }
+        // Wire encode/decode paths only.
+        "unchecked-cast-in-wire" => {
+            file.ends_with("rkmeans/model.rs") || file.ends_with("serve/delta.rs")
+        }
+        // Serving tier + executor hot paths only.
+        "contextless-unwrap" => file.contains("src/serve/") || file.ends_with("util/exec.rs"),
+        _ => true,
+    }
+}
+
+/// Run every rule over one scanned file; returns raw diagnostics (not
+/// yet matched against waivers — [`super::apply_waivers`] does that).
+pub fn check(file: &str, scanned: &Scanned) -> Vec<Diagnostic> {
+    let toks = &scanned.toks;
+    let fns = enclosing_fns(toks);
+    let mut out = Vec::new();
+
+    if rule_applies("rogue-thread", file) {
+        r1_rogue_thread(file, toks, &fns, &mut out);
+    }
+    if rule_applies("nondet-iteration", file) {
+        r2_nondet_iteration(file, toks, &mut out);
+    }
+    if rule_applies("wall-clock-in-core", file) {
+        r3_wall_clock(file, toks, &mut out);
+    }
+    if rule_applies("unchecked-cast-in-wire", file) {
+        r4_unchecked_cast(file, toks, &mut out);
+    }
+    if rule_applies("contextless-unwrap", file) {
+        r5_contextless_unwrap(file, toks, &mut out);
+    }
+    check_waiver_annotations(file, scanned, &mut out);
+    out
+}
+
+/// For each token index, the name of the most recent `fn` declaration —
+/// a scope approximation that is exact for this codebase's layout
+/// (spawn sites are never between a file's start and its first fn).
+fn enclosing_fns(toks: &[Tok]) -> Vec<String> {
+    let mut cur = String::new();
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].s == "fn" && i + 1 < toks.len() && is_ident(&toks[i + 1].s) {
+            cur = toks[i + 1].s.clone();
+        }
+        out.push(cur.clone());
+        i += 1;
+    }
+    out
+}
+
+fn is_ident(s: &str) -> bool {
+    s.as_bytes().first().is_some_and(|&b| b.is_ascii_alphabetic() || b == b'_')
+}
+
+fn diag(rule: &'static str, file: &str, line: usize, message: String) -> Diagnostic {
+    Diagnostic {
+        rule,
+        file: file.to_string(),
+        line,
+        message,
+        waived: false,
+        waiver_reason: None,
+    }
+}
+
+/// R1: `thread::spawn`, `thread::Builder`, or `scope.spawn` outside
+/// `util::exec` and the [`SPAWN_REGISTRY`].
+fn r1_rogue_thread(file: &str, toks: &[Tok], fns: &[String], out: &mut Vec<Diagnostic>) {
+    for i in 0..toks.len() {
+        let hit = (toks[i].s == "thread"
+            && tok_at(toks, i + 1) == "::"
+            && matches!(tok_at(toks, i + 2), "spawn" | "Builder"))
+            || (toks[i].s == "scope"
+                && tok_at(toks, i + 1) == "."
+                && tok_at(toks, i + 2) == "spawn");
+        if !hit {
+            continue;
+        }
+        let line = toks[i].line;
+        let enclosing = fns[i].as_str();
+        if let Some((_, _, reason)) = SPAWN_REGISTRY
+            .iter()
+            .find(|(suffix, f, _)| file.ends_with(suffix) && *f == enclosing)
+        {
+            let mut d = diag(
+                "rogue-thread",
+                file,
+                line,
+                format!("thread creation in fn `{enclosing}` (registered)"),
+            );
+            d.waived = true;
+            d.waiver_reason = Some(format!("registry: {reason}"));
+            out.push(d);
+        } else {
+            out.push(diag(
+                "rogue-thread",
+                file,
+                line,
+                format!(
+                    "thread creation in fn `{enclosing}` outside util::exec and the spawn \
+                     registry; route parallel compute through ExecPool or register the site"
+                ),
+            ));
+        }
+    }
+}
+
+/// R2: iteration over a hash-ordered map/set. Identifiers are
+/// harvested from `let` bindings and `name: HashType<` declarations
+/// (fields and params); flagged uses are storage-order receiver methods
+/// and bare `for … in map` loops.
+fn r2_nondet_iteration(file: &str, toks: &[Tok], out: &mut Vec<Diagnostic>) {
+    let maps = collect_map_idents(toks);
+    if maps.is_empty() {
+        return;
+    }
+    for i in 0..toks.len() {
+        // `m.iter()` / `self.m.keys()` — receiver just before the dot.
+        if toks[i].s == "."
+            && ITER_METHODS.contains(&tok_at(toks, i + 1))
+            && tok_at(toks, i + 2) == "("
+            && i > 0
+            && maps.contains(&toks[i - 1].s)
+        {
+            out.push(diag(
+                "nondet-iteration",
+                file,
+                toks[i + 1].line,
+                format!(
+                    "`{}.{}()` iterates a hash-ordered map; use util::det::sorted_* or waive \
+                     with a reason",
+                    toks[i - 1].s,
+                    toks[i + 1].s
+                ),
+            ));
+        }
+        // `for (k, v) in &m {` — expression is refs/idents/dots only.
+        if toks[i].s == "for" {
+            if let Some(in_at) = (i + 1..(i + 40).min(toks.len())).find(|&j| toks[j].s == "in") {
+                if let Some(brace) =
+                    (in_at + 1..(in_at + 12).min(toks.len())).find(|&j| toks[j].s == "{")
+                {
+                    let expr = &toks[in_at + 1..brace];
+                    let simple = !expr.is_empty()
+                        && expr.iter().all(|t| {
+                            t.s == "&" || t.s == "mut" || t.s == "." || is_ident(&t.s)
+                        });
+                    if simple {
+                        let last = &expr[expr.len() - 1];
+                        if maps.contains(&last.s) {
+                            out.push(diag(
+                                "nondet-iteration",
+                                file,
+                                last.line,
+                                format!(
+                                    "`for … in {}` iterates a hash-ordered map; use \
+                                     util::det::sorted_* or waive with a reason",
+                                    last.s
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Harvest identifiers declared with a hash-map/set type in this file.
+fn collect_map_idents(toks: &[Tok]) -> BTreeSet<String> {
+    let mut maps = BTreeSet::new();
+    for i in 0..toks.len() {
+        // `let [mut] name` then `= HashType` or a `: …HashType…` type
+        // up to the initializer.
+        if toks[i].s == "let" {
+            let mut j = i + 1;
+            if tok_at(toks, j) == "mut" {
+                j += 1;
+            }
+            if !is_ident(tok_at(toks, j)) {
+                continue;
+            }
+            let name = toks[j].s.clone();
+            match tok_at(toks, j + 1) {
+                "=" => {
+                    if HASH_TYPES.contains(&tok_at(toks, j + 2)) {
+                        maps.insert(name);
+                    }
+                }
+                ":" => {
+                    // The hash type must be the *outermost* type of the
+                    // annotation — `Vec<FxHashMap<…>>` is a vector, and
+                    // iterating it is fine.
+                    let mut k = j + 2;
+                    while matches!(tok_at(toks, k), "&" | "mut") {
+                        k += 1;
+                    }
+                    if HASH_TYPES.contains(&tok_at(toks, k)) {
+                        maps.insert(name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // `name: [&][mut] HashType<` — struct fields and fn params.
+        if toks[i].s == ":" && i > 0 && is_ident(&toks[i - 1].s) {
+            let mut j = i + 1;
+            while matches!(tok_at(toks, j), "&" | "mut") {
+                j += 1;
+            }
+            if HASH_TYPES.contains(&tok_at(toks, j)) && tok_at(toks, j + 1) == "<" {
+                maps.insert(toks[i - 1].s.clone());
+            }
+        }
+    }
+    maps
+}
+
+/// R3: `Instant::now` / `SystemTime` outside the telemetry allowlist.
+fn r3_wall_clock(file: &str, toks: &[Tok], out: &mut Vec<Diagnostic>) {
+    for i in 0..toks.len() {
+        if toks[i].s == "Instant" && tok_at(toks, i + 1) == "::" && tok_at(toks, i + 2) == "now" {
+            out.push(diag(
+                "wall-clock-in-core",
+                file,
+                toks[i].line,
+                "`Instant::now()` outside telemetry modules; use util::timer::now() so clock \
+                 reads stay auditable"
+                    .to_string(),
+            ));
+        }
+        if toks[i].s == "SystemTime" {
+            out.push(diag(
+                "wall-clock-in-core",
+                file,
+                toks[i].line,
+                "`SystemTime` outside telemetry modules".to_string(),
+            ));
+        }
+    }
+}
+
+/// R4: bare `as <numeric>` casts in the wire encode/decode files.
+fn r4_unchecked_cast(file: &str, toks: &[Tok], out: &mut Vec<Diagnostic>) {
+    for i in 0..toks.len() {
+        if toks[i].s == "as" && NUM_TYPES.contains(&tok_at(toks, i + 1)) {
+            out.push(diag(
+                "unchecked-cast-in-wire",
+                file,
+                toks[i].line,
+                format!(
+                    "bare `as {}` cast in a wire-format file; use a checked conversion \
+                     (try_from / count_json) or waive with a reason",
+                    toks[i + 1].s
+                ),
+            ));
+        }
+    }
+}
+
+/// R5: `.unwrap()` directly on a lock/channel/join result.
+fn r5_contextless_unwrap(file: &str, toks: &[Tok], out: &mut Vec<Diagnostic>) {
+    for i in 3..toks.len() {
+        if !(toks[i].s == "." && tok_at(toks, i + 1) == "unwrap" && tok_at(toks, i + 2) == "(") {
+            continue;
+        }
+        // Walk back over the `(...)` of the producing call.
+        if toks[i - 1].s != ")" {
+            continue;
+        }
+        let mut depth = 1usize;
+        let mut j = i - 1;
+        while j > 0 && depth > 0 {
+            j -= 1;
+            match toks[j].s.as_str() {
+                ")" => depth += 1,
+                "(" => depth -= 1,
+                _ => {}
+            }
+        }
+        if j == 0 {
+            continue;
+        }
+        let meth = &toks[j - 1].s;
+        if FALLIBLE_SYNC_METHODS.contains(&meth.as_str()) {
+            out.push(diag(
+                "contextless-unwrap",
+                file,
+                toks[i + 1].line,
+                format!(
+                    "`.{meth}().unwrap()` on a lock/channel result; use `.expect(\"…\")` with \
+                     actionable context or poison-tolerant recovery"
+                ),
+            ));
+        }
+    }
+}
+
+/// Waiver annotations themselves are checked: unknown rule names and
+/// missing reasons are diagnostics that cannot be waived.
+fn check_waiver_annotations(file: &str, scanned: &Scanned, out: &mut Vec<Diagnostic>) {
+    for w in &scanned.waivers {
+        if !RULES.contains(&w.rule.as_str()) {
+            out.push(diag(
+                "invalid-waiver",
+                file,
+                w.line,
+                format!("waiver names unknown rule `{}`", w.rule),
+            ));
+        } else if w.reason.is_none() {
+            out.push(diag(
+                "invalid-waiver",
+                file,
+                w.line,
+                format!(
+                    "waiver for `{}` has no reason string; every waiver must justify itself",
+                    w.rule
+                ),
+            ));
+        }
+    }
+}
+
+fn tok_at(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.s.as_str())
+}

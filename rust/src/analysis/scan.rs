@@ -1,0 +1,363 @@
+//! Source scanning for `rklint`: comment/string-aware masking, waiver
+//! extraction, and a line-tracking token stream.
+//!
+//! The linter never parses Rust — it pattern-matches token sequences on
+//! a **masked** copy of the source in which every comment, string
+//! literal (plain, raw, byte), and char literal has been replaced by
+//! spaces, byte for byte, so token positions and line numbers survive.
+//! That makes the rules immune to the classic grep failure modes: a
+//! `thread::spawn` inside a doc comment or an error-message string is
+//! invisible to every rule.
+//!
+//! Waivers are read **before** masking: a comment of the form
+//!
+//! ```text
+//! // rklint::allow(wall-clock-in-core, reason = "why this site is legitimate")
+//! ```
+//!
+//! suppresses diagnostics of the named rule on the same line and on the
+//! line immediately below (so a waiver can sit on its own line above
+//! the flagged statement). A waiver without a `reason` string, or one
+//! naming an unknown rule, is itself reported — the waiver registry
+//! stays honest by construction.
+
+/// One inline waiver annotation extracted from a comment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Waiver {
+    /// 1-based line the annotation appears on.
+    pub line: usize,
+    /// Rule slug it names (not yet validated against known rules).
+    pub rule: String,
+    /// The mandatory justification; `None` when the author omitted it
+    /// (reported as an `invalid-waiver` diagnostic).
+    pub reason: Option<String>,
+}
+
+/// One token of the masked source.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Token text (`::` is a single token; every other punctuation byte
+    /// stands alone).
+    pub s: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// A masked + tokenized source file, ready for the rules.
+pub struct Scanned {
+    /// Token stream of the masked source.
+    pub toks: Vec<Tok>,
+    /// Waivers found in comments, in source order.
+    pub waivers: Vec<Waiver>,
+}
+
+/// Mask comments/strings/chars and extract waivers (see module docs).
+pub fn scan(source: &str) -> Scanned {
+    let (masked, waivers) = mask(source);
+    Scanned { toks: tokenize(&masked), waivers }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Replace comments, string literals, and char literals with spaces
+/// (newlines kept so line numbers survive); collect waiver annotations
+/// from comment text.
+fn mask(source: &str) -> (Vec<u8>, Vec<Waiver>) {
+    let b = source.as_bytes();
+    let mut out = b.to_vec();
+    let mut waivers = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Blank `out[from..to]`, keeping newlines.
+    let blank = |out: &mut Vec<u8>, from: usize, to: usize| {
+        for x in &mut out[from..to] {
+            if *x != b'\n' {
+                *x = b' ';
+            }
+        }
+    };
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                parse_waivers(&source[start..i], line, &mut waivers);
+                blank(&mut out, start, i);
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                parse_waivers(&source[start..i], start_line, &mut waivers);
+                blank(&mut out, start, i);
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => {
+                            // A backslash-newline continuation escapes a
+                            // real newline — count it.
+                            if i + 1 < b.len() && b[i + 1] == b'\n' {
+                                line += 1;
+                            }
+                            i += 2;
+                        }
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                blank(&mut out, start, i);
+            }
+            b'r' | b'b' if !(i > 0 && is_ident_char(b[i - 1])) && raw_string_at(b, i).is_some() => {
+                let (hashes, body_start) = raw_string_at(b, i).expect("checked above");
+                let start = i;
+                i = body_start;
+                // Scan for `"` followed by `hashes` '#' bytes.
+                loop {
+                    if i >= b.len() {
+                        break;
+                    }
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    let closes = b[i] == b'"'
+                        && b[i + 1..].iter().take(hashes).filter(|&&x| x == b'#').count() == hashes;
+                    if closes {
+                        i += 1 + hashes;
+                        break;
+                    }
+                    i += 1;
+                }
+                blank(&mut out, start, i);
+            }
+            b'\'' => {
+                // Char literal vs lifetime: a literal is `'\...'` or
+                // `'X'` (one ident/any char then a closing quote); a
+                // lifetime has no closing quote after its identifier.
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    let start = i;
+                    i += 2; // skip '\ and the escape head
+                    while i < b.len() && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i = (i + 1).min(b.len());
+                    blank(&mut out, start, i);
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                    blank(&mut out, i, i + 3);
+                    i += 3;
+                } else {
+                    i += 1; // lifetime tick — harmless as a lone token
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    (out, waivers)
+}
+
+/// `Some((n_hashes, body_start))` when `b[i..]` begins a raw (or raw
+/// byte) string literal.
+fn raw_string_at(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Parse every waiver annotation (the `allow(rule, reason = "…")` form
+/// behind the `rklint` namespace marker) inside one comment's text.
+fn parse_waivers(comment: &str, first_line: usize, out: &mut Vec<Waiver>) {
+    const MARK: &str = "rklint::allow(";
+    let mut search = 0usize;
+    while let Some(pos) = comment[search..].find(MARK) {
+        let at = search + pos;
+        let line = first_line + comment[..at].bytes().filter(|&b| b == b'\n').count();
+        let rest = &comment[at + MARK.len()..];
+        // Rule slug: idents and dashes up to ',' or ')'.
+        let slug_end = rest.find([',', ')']).unwrap_or(rest.len());
+        let rule = rest[..slug_end].trim().to_string();
+        let mut reason = None;
+        if rest[slug_end..].starts_with(',') {
+            let tail = rest[slug_end + 1..].trim_start();
+            if let Some(stripped) = tail.strip_prefix("reason") {
+                let stripped = stripped.trim_start();
+                if let Some(body) = stripped.strip_prefix('=') {
+                    let body = body.trim_start();
+                    if let Some(q) = body.strip_prefix('"') {
+                        if let Some(close) = q.find('"') {
+                            if !q[..close].trim().is_empty() {
+                                reason = Some(q[..close].to_string());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.push(Waiver { line, rule, reason });
+        search = at + MARK.len();
+    }
+}
+
+/// Tokenize masked source: identifiers/numbers as words, `::` fused,
+/// every other non-space byte a one-byte token.
+fn tokenize(masked: &[u8]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < masked.len() {
+        let c = masked[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < masked.len() && is_ident_char(masked[i]) {
+                i += 1;
+            }
+            toks.push(Tok { s: String::from_utf8_lossy(&masked[start..i]).into_owned(), line });
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < masked.len()
+                && (is_ident_char(masked[i])
+                    || (masked[i] == b'.'
+                        && i + 1 < masked.len()
+                        && masked[i + 1].is_ascii_digit()))
+            {
+                i += 1;
+            }
+            toks.push(Tok { s: String::from_utf8_lossy(&masked[start..i]).into_owned(), line });
+        } else if c == b':' && i + 1 < masked.len() && masked[i + 1] == b':' {
+            toks.push(Tok { s: "::".to_string(), line });
+            i += 2;
+        } else {
+            toks.push(Tok { s: (c as char).to_string(), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(s: &str) -> Vec<String> {
+        scan(s).toks.into_iter().map(|t| t.s).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_invisible() {
+        let src = r##"
+// thread::spawn in a comment
+let x = "thread::spawn in a string";
+let y = r#"Instant::now in a raw string"#;
+/* block Instant::now
+   spanning lines */
+let c = 'x';
+"##;
+        let t = texts(src);
+        assert!(!t.contains(&"spawn".to_string()), "comment/string content leaked: {t:?}");
+        assert!(!t.contains(&"Instant".to_string()));
+        assert!(t.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_survive_masking() {
+        let src = "let a = 1;\n/* two\nlines */\nInstant::now()\n";
+        let s = scan(src);
+        let now = s.toks.iter().find(|t| t.s == "now").expect("token present");
+        assert_eq!(now.line, 4);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        // A lifetime tick must not start masking (it would eat code).
+        let t = texts("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(t.contains(&"str".to_string()));
+        assert!(t.contains(&"fn".to_string()));
+    }
+
+    #[test]
+    fn waivers_parse_with_and_without_reasons() {
+        let src = "\n// rklint::allow(rogue-thread, reason = \"load generator clients\")\nx();\n\
+                   // rklint::allow(wall-clock-in-core)\n";
+        let s = scan(src);
+        assert_eq!(s.waivers.len(), 2);
+        assert_eq!(s.waivers[0].line, 2);
+        assert_eq!(s.waivers[0].rule, "rogue-thread");
+        assert_eq!(s.waivers[0].reason.as_deref(), Some("load generator clients"));
+        assert_eq!(s.waivers[1].rule, "wall-clock-in-core");
+        assert_eq!(s.waivers[1].reason, None, "missing reason must be detectable");
+    }
+
+    #[test]
+    fn backslash_newline_continuation_keeps_line_count() {
+        let src = "let s = \"a \\\n   b\";\n// rklint::allow(wall-clock-in-core, reason = \"x\")\n";
+        let s = scan(src);
+        assert_eq!(s.waivers.len(), 1);
+        assert_eq!(s.waivers[0].line, 3, "continuation newline must still count");
+    }
+
+    #[test]
+    fn double_colon_fuses() {
+        let t = texts("std::thread::spawn(f)");
+        assert_eq!(t, vec!["std", "::", "thread", "::", "spawn", "(", "f", ")"]);
+    }
+}

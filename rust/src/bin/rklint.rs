@@ -1,0 +1,83 @@
+//! `rklint` CLI driver — run the determinism/concurrency lint over a
+//! source tree and exit nonzero on any active (non-waived) diagnostic.
+//!
+//! ```text
+//! rklint [--root <dir>] [--report [<path>]]
+//! ```
+//!
+//! * `--root` — directory to scan (default: this crate's `src/`).
+//! * `--report <path>` — also write the machine-readable JSON report
+//!   (stable key order; CI archives it per commit). With no path the
+//!   JSON goes to stdout instead of the human listing.
+
+use rkmeans::analysis;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut report_path: Option<Option<PathBuf>> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => return usage("--root needs a directory"),
+            },
+            "--report" => {
+                // Optional value: a following non-flag token is a path.
+                report_path = Some(args.next().filter(|a| !a.starts_with("--")).map(PathBuf::from));
+            }
+            "--help" | "-h" => {
+                eprintln!("usage: rklint [--root <dir>] [--report [<path>]]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    let report = match analysis::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("rklint: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let json = report.to_json().to_string();
+    match &report_path {
+        Some(Some(path)) => {
+            if let Err(e) = std::fs::write(path, &json) {
+                eprintln!("rklint: writing {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+            print_human(&report);
+            eprintln!("report written to {}", path.display());
+        }
+        Some(None) => println!("{json}"),
+        None => print_human(&report),
+    }
+
+    if report.active().count() == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn print_human(report: &analysis::Report) {
+    for d in report.active() {
+        println!("{}:{} [{}] {}", d.file, d.line, d.rule, d.message);
+    }
+    println!(
+        "rklint: {} files, {} active, {} waived",
+        report.files,
+        report.active().count(),
+        report.waived()
+    );
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("rklint: {msg}\nusage: rklint [--root <dir>] [--report [<path>]]");
+    ExitCode::FAILURE
+}

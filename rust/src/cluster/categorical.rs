@@ -222,15 +222,15 @@ mod tests {
         for_cases(30, |rng| {
             let l = 3 + rng.below(8) as usize;
             let kappa = 2 + rng.below(3.min(l as u64 - 1)) as usize;
-            let weights: Vec<(u64, f64)> =
+            let wlist: Vec<(u64, f64)> =
                 (0..l).map(|e| (e as u64, rng.uniform(0.1, 5.0))).collect();
-            let wmap: FxHashMap<u64, f64> = weights.iter().copied().collect();
-            let opt = categorical_kmeans(&weights, kappa);
+            let wmap: FxHashMap<u64, f64> = wlist.iter().copied().collect();
+            let opt = categorical_kmeans(&wlist, kappa);
 
             // Random partition into exactly kappa non-empty parts.
             let mut rng2 = SplitMix64::new(rng.next_u64());
             let mut parts: Vec<Vec<u64>> = vec![Vec::new(); kappa];
-            let mut keys: Vec<u64> = weights.iter().map(|&(e, _)| e).collect();
+            let mut keys: Vec<u64> = wlist.iter().map(|&(e, _)| e).collect();
             rng2.shuffle(&mut keys);
             for (i, &e) in keys.iter().enumerate() {
                 if i < kappa {
@@ -273,9 +273,9 @@ mod tests {
 
     #[test]
     fn cost_matches_partition_formula() {
-        let weights = vec![(0u64, 3.0), (1, 2.5), (2, 1.0), (3, 0.5)];
-        let wmap: FxHashMap<u64, f64> = weights.iter().copied().collect();
-        let c = categorical_kmeans(&weights, 3);
+        let wlist = vec![(0u64, 3.0), (1, 2.5), (2, 1.0), (3, 0.5)];
+        let wmap: FxHashMap<u64, f64> = wlist.iter().copied().collect();
+        let c = categorical_kmeans(&wlist, 3);
         let parts = vec![vec![0], vec![1], vec![2, 3]];
         assert_close(c.cost, partition_cost(&wmap, &parts), 1e-12);
     }

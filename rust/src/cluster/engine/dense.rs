@@ -20,7 +20,6 @@ use super::{
 use crate::cluster::kmeanspp::kmeanspp_indices;
 use crate::cluster::lloyd::{LloydConfig, LloydResult};
 use crate::util::SplitMix64;
-use std::time::Instant;
 
 /// One chunk's view of the per-point state (disjoint mutable slices) plus
 /// its accumulators, reduced in chunk order after each pass. The `*32`
@@ -231,7 +230,7 @@ pub fn lloyd_dense_resume(
     assert!(n > 0, "no points");
     // k-means++ always yields at least one seed, so treat k = 0 as 1.
     let k = cfg.k.min(n).max(1);
-    let t0 = Instant::now();
+    let t0 = crate::util::timer::now();
 
     let row = |i: usize| &points[i * d..(i + 1) * d];
     let dist2 = |a: &[f64], b: &[f64]| -> f64 {

@@ -37,7 +37,6 @@ use crate::cluster::sparse_lloyd::{
     cell_dist2, CentroidCoord, Components, SparseGrid, SparseLloydResult, Subspace,
 };
 use crate::util::SplitMix64;
-use std::time::Instant;
 
 /// Squared distance between two factored centroids (also the squared
 /// drift when `a` is a centroid's previous position): orthogonality makes
@@ -455,7 +454,7 @@ pub fn lloyd_factored_resume(
     // k-means++ always yields at least one seed, so treat k = 0 as 1.
     let k = cfg.k.min(n).max(1);
     let m = grid.m;
-    let t0 = Instant::now();
+    let t0 = crate::util::timer::now();
 
     let mut centroids: Vec<Vec<CentroidCoord>> = match init {
         Some(c0) if warm_start_valid(c0, k, subspaces) => c0.to_vec(),

@@ -78,7 +78,7 @@ use anyhow::{anyhow, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -209,7 +209,7 @@ impl Coordinator {
                 // Per-job queue depth: what producers have enqueued that
                 // the worker has not yet seen.
                 job_depth.set(enqueued.get().saturating_sub(dequeued.get()) as i64);
-                let t0 = Instant::now();
+                let t0 = crate::util::timer::now();
                 // Build the planner engine on first use (its initial full
                 // build doubles as this job's result).
                 if cfg.incremental && js.engine.is_none() && !js.engine_failed {
@@ -411,7 +411,7 @@ impl Coordinator {
                 Ok(())
             }
             Err(TrySendError::Full(msg)) => {
-                let t0 = Instant::now();
+                let t0 = crate::util::timer::now();
                 self.tx.send(msg).map_err(|_| anyhow!("coordinator is shut down"))?;
                 self.enqueued.inc();
                 self.bp_events.inc();

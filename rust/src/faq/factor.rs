@@ -1,5 +1,6 @@
 //! Sparse factors: the unit of FAQ message passing.
 
+use crate::util::det;
 use crate::util::FxHashMap;
 
 /// A sparse factor ψ over an ordered list of variables: a map from value
@@ -39,9 +40,11 @@ impl Factor {
         self.data.get(key).copied()
     }
 
-    /// Total mass (sum over all entries).
+    /// Total mass (sum over all entries). Summed in sorted key order so
+    /// the FP result is a function of the factor's *contents*, not its
+    /// hash-map insertion history.
     pub fn mass(&self) -> f64 {
-        self.data.values().sum()
+        det::sorted_entries(&self.data).iter().map(|(_, &w)| w).sum()
     }
 
     /// Project (marginalize) onto a subset of variables, summing weights.
@@ -57,7 +60,10 @@ impl Factor {
             })
             .collect();
         let mut out = Factor::new(onto.to_vec());
-        for (key, &w) in &self.data {
+        // Sorted key order: colliding projections accumulate in a
+        // content-determined order, keeping the result bit-stable across
+        // construction histories.
+        for (key, &w) in det::sorted_entries(&self.data) {
             let sub: Vec<u64> = idx.iter().map(|&i| key[i]).collect();
             out.add(sub, w);
         }

@@ -98,8 +98,7 @@ impl GridTable {
                 *acc.entry(g).or_insert(0.0) += w;
             }
         }
-        let mut cells: Vec<(Vec<u32>, f64)> = acc.into_iter().collect();
-        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        let cells: Vec<(Vec<u32>, f64)> = crate::util::det::sorted_owned(acc);
         Ok(GridTable { feature_names, cells })
     }
 }
@@ -263,6 +262,7 @@ fn grid_weights_packed(
             }
         }
         msgs[u] = Some(
+            // rklint::allow(nondet-iteration, reason = "map-to-map rehash; inner tables feed ring-ℤ exact counting products and cell order is canonicalized by sparse_from_table's sort")
             out.into_iter().map(|(k, t)| (k, t.into_iter().collect::<Vec<_>>())).collect(),
         );
     }
@@ -364,6 +364,7 @@ fn grid_weights_generic(
 
     let root_msg = msgs[tree.root].take().expect("root processed");
     let feats = root_msg.feats;
+    // rklint::allow(nondet-iteration, reason = "root message has exactly one entry (empty separator key); order cannot matter for a singleton")
     let table = root_msg.map.into_iter().next().map(|(_, t)| t).unwrap_or_default();
     let mut perm = vec![usize::MAX; feq.features.len()];
     for (pos, &fi) in feats.iter().enumerate() {

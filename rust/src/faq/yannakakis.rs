@@ -232,8 +232,13 @@ pub fn marginals(
                         *acc.entry(v.to_bits()).or_insert(0.0) += cnt[row];
                     }
                 }
-                let mut pairs: Vec<(f64, f64)> =
-                    acc.into_iter().map(|(b, w)| (f64::from_bits(b), w)).collect();
+                // Bit-order first, then stable value sort: ties on value
+                // (e.g. ±0.0) keep a content-determined order instead of
+                // the map's storage order.
+                let mut pairs: Vec<(f64, f64)> = crate::util::det::sorted_owned(acc)
+                    .into_iter()
+                    .map(|(b, w)| (f64::from_bits(b), w))
+                    .collect();
                 pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite feature values"));
                 Marginal::Continuous(pairs)
             }
@@ -244,8 +249,7 @@ pub fn marginals(
                         *acc.entry(rel.col(col).key_u64(row)).or_insert(0.0) += cnt[row];
                     }
                 }
-                let mut pairs: Vec<(u64, f64)> = acc.into_iter().collect();
-                pairs.sort_unstable_by_key(|&(k, _)| k);
+                let pairs: Vec<(u64, f64)> = crate::util::det::sorted_owned(acc);
                 Marginal::Discrete(pairs)
             }
         };

@@ -391,6 +391,7 @@ impl<K: Combo> State<K> {
             {
                 let nodes = &st.nodes;
                 let node = &nodes[u];
+                // rklint::allow(nondet-iteration, reason = "ring-ℤ counting weights: every partial sum is an exactly-represented f64 integer, so accumulation is order-free (the patch ≡ rebuild bitwise contract in tests/property_incremental.rs pins this)")
                 for row in node.rows.values() {
                     if let Some(combos) =
                         contribution(nodes, &node.children, &row.own, row.w, &row.child_keys, None)
@@ -689,6 +690,7 @@ impl<K: Combo> State<K> {
             {
                 let node = &mut self.nodes[u];
                 let rows = std::mem::take(&mut node.rows);
+                // rklint::allow(nondet-iteration, reason = "map-to-map rehash dropping tombstone capacity; iteration order never escapes the rebuilt map")
                 node.rows = rows.into_iter().collect();
                 for idx in node.child_index.iter_mut() {
                     let old = std::mem::take(idx);
@@ -702,6 +704,7 @@ impl<K: Combo> State<K> {
             {
                 let nodes = &self.nodes;
                 let node = &nodes[u];
+                // rklint::allow(nondet-iteration, reason = "ring-ℤ counting weights: exact integer f64 sums are order-free; compaction must reproduce the pre-compaction message bitwise")
                 for row in node.rows.values() {
                     if let Some(combos) = contribution(
                         nodes,

@@ -29,6 +29,7 @@
 
 use crate::data::{AttrType, Database, Value};
 use crate::query::Feq;
+use crate::util::det;
 use crate::util::FxHashMap;
 use anyhow::{Context, Result};
 
@@ -75,9 +76,10 @@ impl CatSketch {
         self.changed = 0.0;
     }
 
-    /// Merge another sketch in (mergeability).
+    /// Merge another sketch in (mergeability). Sorted key order keeps
+    /// the drift accumulator's FP sum content-determined.
     pub fn merge(&mut self, other: &CatSketch) {
-        for (&k, &w) in &other.counts {
+        for (&k, &w) in det::sorted_entries(&other.counts) {
             self.update(k, w);
         }
     }
@@ -89,11 +91,13 @@ impl CatSketch {
             return if self.total == other.total { 0.0 } else { 1.0 };
         }
         let mut acc = 0.0;
-        for (k, &w) in &self.counts {
+        // Sorted key order on both passes: the TV sum feeds the drift
+        // threshold, so its bits should not depend on insertion history.
+        for (k, &w) in det::sorted_entries(&self.counts) {
             let q = other.counts.get(k).copied().unwrap_or(0.0);
             acc += (w / self.total - q / other.total).abs();
         }
-        for (k, &q) in &other.counts {
+        for (k, &q) in det::sorted_entries(&other.counts) {
             if !self.counts.contains_key(k) {
                 acc += (q / other.total).abs();
             }

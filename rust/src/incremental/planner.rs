@@ -50,7 +50,6 @@ use crate::rkmeans::{
 use crate::util::FxHashMap;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
-use std::time::Instant;
 
 use super::{DeltaLayer, MarginalTracker, TupleDelta};
 
@@ -236,7 +235,7 @@ impl IncrementalEngine {
         version: u64,
         shards: usize,
     ) -> Result<(IncrementalState, f64)> {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         // Staged pipeline over the caller's tree (bitwise-identical to the
         // monolithic shim; see `crate::rkmeans::pipeline`). Stages are run
         // explicitly so the Step-4 engine state can be captured: the
@@ -344,7 +343,7 @@ impl IncrementalEngine {
     /// and bounds, spliced over the grid edit). Returns elapsed seconds;
     /// on error the caller rebuilds (the delta state may be poisoned).
     fn try_patch(&mut self, deltas: &[TupleDelta]) -> Result<f64> {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let patch_stats = {
             let models = &self.state.models;
             self.state.delta.apply(deltas, || assigner_map(models))?
@@ -381,7 +380,7 @@ impl IncrementalEngine {
         let coreset = Coreset::from_parts(grid, subspaces, self.state.models.clone());
         let step3 = t0.elapsed();
 
-        let t1 = Instant::now();
+        let t1 = crate::util::timer::now();
         let carried =
             if self.opts.carry_state { self.state.engine_state.as_ref() } else { None };
         // Count only states `cluster_resume` will actually install (same

@@ -218,9 +218,7 @@ fn merge_cells(shards: &[DeltaFaq]) -> Vec<(Vec<u32>, f64)> {
             *acc.entry(g).or_insert(0.0) += w;
         }
     }
-    let mut cells: Vec<(Vec<u32>, f64)> = acc.into_iter().collect();
-    cells.sort_unstable_by(|a, b| a.0.cmp(&b.0));
-    cells
+    crate::util::det::sorted_owned(acc)
 }
 
 /// Diff two sorted snapshots into a [`StateSplice`] log in application

@@ -85,6 +85,50 @@
 //! open-loop generator in [`serve::load`]; the streaming-coordinator
 //! demo lives on as `rkmeans stream`.
 //!
+//! ## Determinism contract
+//!
+//! The system's correctness story is a set of **bitwise** equivalences,
+//! each pinned by a runtime property test *and* guarded statically by an
+//! [`analysis`] (`rklint`) rule so violations fail CI before a schedule
+//! ever has to catch them:
+//!
+//! * **naive ≡ pruned** — Hamerly/Elkan bounds never change Step-4
+//!   results, and **pool ≡ scoped-spawn** — parallel dispatch never
+//!   changes them either. Guarded by `rogue-thread`: every thread is
+//!   created inside [`util::exec`] or listed in the spawn registry
+//!   ([`analysis::rules::SPAWN_REGISTRY`]) with a reason; stray threads
+//!   can't introduce unordered reductions.
+//! * **patch ≡ rebuild** and **shard ≡ serial** — incremental and
+//!   sharded grid builds reproduce the from-scratch bytes. Guarded by
+//!   `nondet-iteration`: no storage-order iteration of
+//!   `HashMap`/`FxHashMap` where order can reach FP accumulation, the
+//!   wire, or display — order-sensitive walks go through the sorted
+//!   adapters in [`util::det`].
+//! * **`apply(diff(a,b)) ≡ b`** — the serving delta wire format
+//!   reconstructs models bit-exactly. Guarded by
+//!   `unchecked-cast-in-wire` (no bare `as` casts in
+//!   `rkmeans/model.rs` / `serve/delta.rs`; counts round-trip through
+//!   checked conversions that refuse silent truncation past 2^53) and
+//!   by the byte-stability tests in `tests/property_wire.rs`.
+//! * **Deterministic paths never read the clock** — guarded by
+//!   `wall-clock-in-core`: `Instant::now`/`SystemTime` live only in
+//!   [`metrics`], [`bench_harness`], [`serve::load`], and the blessed
+//!   telemetry clock [`util::timer::now`].
+//! * **Lock/channel failures carry context** — guarded by
+//!   `contextless-unwrap` in the serving tier and executor; replica
+//!   reads degrade through lock poisoning instead of panicking.
+//!
+//! A legitimate exception is annotated in place:
+//!
+//! ```text
+//! // rklint::allow(nondet-iteration, reason = "ring-ℤ exact merge; order-free")
+//! ```
+//!
+//! The reason string is mandatory — a reasonless or unknown-rule waiver
+//! is itself a diagnostic. Run the pass with `cargo run --bin rklint`
+//! (add `--report out.json` for the machine-readable form CI archives);
+//! `tests/lint_gate.rs` keeps the tree clean in tier-1.
+//!
 //! ## Quickstart
 //!
 //! Stage the pipeline once, then sweep k over the shared coreset and ship
@@ -125,6 +169,7 @@
 //!          res.objective_grid, res.grid_points, res.timings.total());
 //! ```
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod cluster;
 pub mod coordinator;

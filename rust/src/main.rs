@@ -197,7 +197,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .with_threads(threads);
 
     let engine = args.get("engine").unwrap_or("native");
-    let t0 = std::time::Instant::now();
+    let t0 = rkmeans::util::timer::now();
     let res = match engine {
         // Shard-parallel Steps 1–3 (bitwise-identical to the serial
         // build); `--shards 1` is the plain staged run.
@@ -279,7 +279,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // (exactness vs. independent runs explicitly waived; see SweepMode).
     let mode = if args.has("ladder") { SweepMode::Ladder } else { SweepMode::Independent };
 
-    let t0 = std::time::Instant::now();
+    let t0 = rkmeans::util::timer::now();
     let pipe = RkPipeline::plan(&db, &feq)?;
     let marginals = pipe.marginals()?;
     let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(kappa))?;
@@ -377,7 +377,7 @@ fn rkmeans_xla(
     let spec = EmbedSpec::from_feq(db, feq)?;
     let dense = grid_dense_embed(&grid, &models, &spec);
     let lcfg = LloydConfig { k: cfg.k, seed: cfg.seed, ..LloydConfig::new(cfg.k) };
-    let t0 = std::time::Instant::now();
+    let t0 = rkmeans::util::timer::now();
     let xla = rt.lloyd(&dense, &grid.weights, spec.dims, &lcfg)?;
     println!(
         "xla step4         : {:?} ({} iters, objective {:.6e})",

@@ -60,17 +60,17 @@ pub fn materialize_and_cluster_capped(
     feq.validate(db)?;
     let tree = Hypergraph::from_feq(db, feq).join_tree()?;
 
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::timer::now();
     let x = materialize_capped(db, feq, &tree, cap)?;
     let t_materialize = t0.elapsed();
 
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::timer::now();
     let spec = EmbedSpec::from_feq(db, feq)?;
     let dense = spec.embed_matrix(&x);
     let t_embed = t0.elapsed();
     let dense_bytes = (dense.len() * std::mem::size_of::<f64>()) as u64;
 
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::timer::now();
     let LloydResult { centroids, objective, iters, .. } =
         weighted_lloyd(&dense, &x.weights, spec.dims, cfg);
     let t_cluster = t0.elapsed();

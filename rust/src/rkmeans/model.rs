@@ -163,7 +163,8 @@ impl ServeCache {
                 SubspaceSolver::Categorical(c) => {
                     let mut dots: FxHashMap<u64, (u32, f64)> = FxHashMap::default();
                     for (i, &e) in c.heavy.iter().enumerate() {
-                        dots.insert(e, (i as u32, 1.0));
+                        let gid = u32::try_from(i).expect("heavy-hitter index fits u32");
+                        dots.insert(e, (gid, 1.0));
                     }
                     if c.has_light() {
                         let g = c.light_gid();
@@ -185,7 +186,10 @@ impl ServeCache {
                         (CentroidCoord::Categorical(beta), SubspaceSolver::Categorical(c)) => {
                             beta.iter()
                                 .enumerate()
-                                .map(|(b, &x)| x * x * c.component_norm_sq(b as u32))
+                                .map(|(b, &x)| {
+                                    let b = u32::try_from(b).expect("group index fits u32");
+                                    x * x * c.component_norm_sq(b)
+                                })
                                 .sum()
                         }
                         _ => 0.0,
@@ -358,7 +362,10 @@ impl RkModel {
                         let dots = serve.cat_dots[j].as_ref().expect("categorical cache");
                         let dot = dots
                             .get(&key)
-                            .map(|&(g, x)| beta[g as usize] * x)
+                            .map(|&(g, x)| {
+                                let g = usize::try_from(g).expect("group id fits usize");
+                                beta[g] * x
+                            })
                             .unwrap_or(0.0);
                         1.0 - 2.0 * dot + serve.cent_norm_sq[c][j]
                     }
@@ -399,22 +406,19 @@ impl RkModel {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut top: BTreeMap<String, Json> = BTreeMap::new();
         top.insert("format".to_string(), Json::Str("rkmodel".to_string()));
-        top.insert(
-            "format_version".to_string(),
-            Json::Num(RKMODEL_FORMAT_VERSION as f64),
-        );
+        top.insert("format_version".to_string(), Json::count(RKMODEL_FORMAT_VERSION));
         // Like category keys, the version is a decimal string so the
         // full u64 range round-trips exactly (f64 only covers 2^53).
         top.insert("state_version".to_string(), Json::Str(self.version.to_string()));
-        top.insert("k".to_string(), Json::Num(self.centroids.len() as f64));
+        top.insert("k".to_string(), Json::count(self.centroids.len()));
         top.insert("objective_grid".to_string(), Json::Num(self.objective_grid));
         top.insert(
             "quantization_cost".to_string(),
             Json::Num(self.quantization_cost),
         );
-        top.insert("grid_points".to_string(), Json::Num(self.grid_points as f64));
+        top.insert("grid_points".to_string(), Json::count(self.grid_points));
         top.insert("grid_mass".to_string(), Json::Num(self.grid_mass));
-        top.insert("iters".to_string(), Json::Num(self.iters as f64));
+        top.insert("iters".to_string(), Json::count(self.iters));
         top.insert(
             "subspaces".to_string(),
             Json::Arr(self.models.iter().map(subspace_json).collect()),
@@ -517,7 +521,10 @@ pub(crate) fn num_field(o: &Json, key: &str) -> Result<f64, ModelParseError> {
 }
 
 pub(crate) fn usize_field(o: &Json, key: &str) -> Result<usize, ModelParseError> {
-    o.get(key).and_then(Json::as_usize).ok_or_else(|| ModelParseError::missing(key))
+    let v = o.get(key).ok_or_else(|| ModelParseError::missing(key))?;
+    v.as_usize().ok_or_else(|| {
+        ModelParseError::bad(key, "not an exact non-negative integer below 2^53")
+    })
 }
 
 pub(crate) fn arr_field<'a>(o: &'a Json, key: &str) -> Result<&'a [Json], ModelParseError> {
@@ -815,7 +822,7 @@ mod tests {
         cent[0] = 2.0f64.sqrt() * mu;
         let CentroidCoord::Categorical(beta) = &m.centroids[c][1] else { panic!() };
         for (a, &b) in beta.iter().enumerate() {
-            if (a as u32) < cat.heavy.len() as u32 {
+            if a < cat.heavy.len() {
                 let key = cat.heavy[a];
                 let p = keys.iter().position(|&k| k == key).unwrap();
                 cent[1 + p] += b;
@@ -938,6 +945,21 @@ mod tests {
             "expected BadField(state_version), got {err:?}"
         );
         assert!(msg.contains("state_version"), "unclear error: {msg}");
+    }
+
+    #[test]
+    fn oversize_count_field_is_rejected_not_truncated() {
+        let text = String::from_utf8(sample_model().to_bytes()).unwrap();
+        // 2^53 + 1 parses to the f64 2^53 — the old `as usize` decode
+        // would silently hand back the wrong integer; now it's typed.
+        let broken = text.replace("\"iters\":3", "\"iters\":9007199254740993");
+        assert_ne!(text, broken, "fixture must actually inflate iters");
+        let err = RkModel::from_bytes(broken.as_bytes()).unwrap_err();
+        assert!(
+            matches!(err, ModelParseError::BadField { ref field, .. } if field == "iters"),
+            "expected BadField(iters), got {err:?}"
+        );
+        assert!(err.to_string().contains("2^53"), "error should state the bound: {err}");
     }
 
     #[test]

@@ -65,7 +65,7 @@ use crate::join::ensure_acyclic;
 use crate::query::{Feq, Hypergraph, JoinTree};
 use crate::util::{FxHashMap, SplitMix64};
 use anyhow::Result;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Step-2 options: the per-subspace centroid budget κ and the §3
 /// regularizer's atom penalty ρ.
@@ -299,7 +299,7 @@ impl Coreset {
         opts: &ClusterOpts,
         init: Option<&[Vec<CentroidCoord>]>,
     ) -> RkModel {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let (res, stats) =
             sparse_lloyd_warm_with(&self.grid, &self.subspaces, &opts.lloyd(), &opts.engine, init);
         let mut timings = self.timings123.clone();
@@ -337,7 +337,7 @@ impl Coreset {
         init: Option<&[Vec<CentroidCoord>]>,
         state: Option<&EngineState>,
     ) -> (RkModel, EngineState) {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let k_eff = opts.k.min(self.grid.n()).max(1);
         let state = state.filter(|st| st.k() == k_eff && st.n() == self.grid.n());
         let (res, stats, next) = sparse_lloyd_resume_with(
@@ -589,7 +589,7 @@ impl<'a> RkPipeline<'a> {
     /// Step 1: per-attribute marginal weights `w_j` via two-pass message
     /// passing. The artifact is reusable across every κ/ρ choice.
     pub fn marginals(&self) -> Result<Marginals> {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let jc = full_join_counts(self.db(), &self.tree)?;
         let margs = faq_marginals(self.db(), self.feq(), &self.tree, &jc)?;
         Ok(Marginals { margs, output_size: jc.total, elapsed: t0.elapsed() })
@@ -598,7 +598,7 @@ impl<'a> RkPipeline<'a> {
     /// Step 2: optimal per-subspace clustering of the marginals
     /// (regularized when `opts.regularization > 0`).
     pub fn subspaces(&self, marginals: &Marginals, opts: &SubspaceOpts) -> Result<SubspaceSet> {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let models = solve_subspaces_regularized(
             self.feq(),
             &marginals.margs,
@@ -617,7 +617,7 @@ impl<'a> RkPipeline<'a> {
     /// Step 3: the sparse weighted grid coreset + subspace geometry, via
     /// the free-variable FAQ. Fails when the FEQ output is empty.
     pub fn coreset(&self, subspaces: &SubspaceSet) -> Result<Coreset> {
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let (grid, subs) = build_grid(self.db(), self.feq(), &self.tree, &subspaces.models)?;
         let elapsed = t0.elapsed();
         if grid.n() == 0 {
@@ -654,7 +654,7 @@ impl<'a> RkPipeline<'a> {
         if shards <= 1 {
             return self.coreset(subspaces);
         }
-        let t0 = Instant::now();
+        let t0 = crate::util::timer::now();
         let (grid, subs) =
             build_grid_sharded(self.db(), self.feq(), &self.tree, &subspaces.models, shards)?;
         let elapsed = t0.elapsed();

@@ -310,16 +310,16 @@ impl ModelDelta {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut top: BTreeMap<String, Json> = BTreeMap::new();
         top.insert("format".to_string(), Json::Str("rkmodel-delta".to_string()));
-        top.insert("format_version".to_string(), Json::Num(MODEL_DELTA_FORMAT_VERSION as f64));
+        top.insert("format_version".to_string(), Json::count(MODEL_DELTA_FORMAT_VERSION));
         top.insert("from_version".to_string(), Json::Str(self.from_version.to_string()));
         top.insert("to_version".to_string(), Json::Str(self.to_version.to_string()));
-        top.insert("k".to_string(), Json::Num(self.k as f64));
-        top.insert("m".to_string(), Json::Num(self.m as f64));
+        top.insert("k".to_string(), Json::count(self.k));
+        top.insert("m".to_string(), Json::count(self.m));
         top.insert("objective_grid".to_string(), Json::Num(self.objective_grid));
         top.insert("quantization_cost".to_string(), Json::Num(self.quantization_cost));
-        top.insert("grid_points".to_string(), Json::Num(self.grid_points as f64));
+        top.insert("grid_points".to_string(), Json::count(self.grid_points));
         top.insert("grid_mass".to_string(), Json::Num(self.grid_mass));
-        top.insert("iters".to_string(), Json::Num(self.iters as f64));
+        top.insert("iters".to_string(), Json::count(self.iters));
         top.insert(
             "subspaces".to_string(),
             Json::Arr(
@@ -327,7 +327,7 @@ impl ModelDelta {
                     .iter()
                     .map(|(j, m)| {
                         let mut o: BTreeMap<String, Json> = BTreeMap::new();
-                        o.insert("j".to_string(), Json::Num(*j as f64));
+                        o.insert("j".to_string(), Json::count(*j));
                         o.insert("model".to_string(), subspace_json(m));
                         Json::Obj(o)
                     })
@@ -341,7 +341,7 @@ impl ModelDelta {
                     .iter()
                     .map(|(i, row)| {
                         let mut o: BTreeMap<String, Json> = BTreeMap::new();
-                        o.insert("i".to_string(), Json::Num(*i as f64));
+                        o.insert("i".to_string(), Json::count(*i));
                         o.insert(
                             "coords".to_string(),
                             Json::Arr(row.iter().map(coord_json).collect()),
@@ -496,5 +496,21 @@ mod tests {
             ModelDelta::from_bytes(&base.to_bytes()),
             Err(ModelParseError::NotADocument { expected: "rkmodel-delta" })
         ));
+    }
+
+    #[test]
+    fn oversize_count_in_delta_is_a_typed_error() {
+        let base = base_model();
+        let wire = base.diff(&moved_row_target(&base)).to_bytes();
+        let text = String::from_utf8(wire).unwrap();
+        // 2^53 + 1 collapses to 2^53 as an f64; the decoder must refuse
+        // the ambiguous count rather than splice a truncated k.
+        let broken = text.replace("\"k\":4", "\"k\":9007199254740993");
+        assert_ne!(text, broken, "fixture must actually inflate k");
+        let err = ModelDelta::from_bytes(broken.as_bytes()).unwrap_err();
+        assert!(
+            matches!(err, ModelParseError::BadField { ref field, .. } if field == "k"),
+            "expected BadField(k), got {err:?}"
+        );
     }
 }

@@ -76,7 +76,7 @@ impl AssignClient {
     pub fn submit(&self, row: Vec<Value>) -> Receiver<Assignment> {
         let (rtx, rrx) = channel();
         self.tx
-            .send(Request { row, t0: Instant::now(), reply: rtx })
+            .send(Request { row, t0: crate::util::timer::now(), reply: rtx })
             .expect("assign front is running");
         rrx
     }

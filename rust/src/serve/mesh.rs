@@ -58,8 +58,16 @@ impl ModelMesh {
     /// Pin replica `i % n`'s current model: an `Arc` clone under the
     /// read lock. The caller serves off a consistent version for the
     /// lifetime of the handle, regardless of concurrent installs.
+    ///
+    /// Poisoned slots still serve: the guarded state is a single `Arc`
+    /// pointer, which a panicking holder can never leave half-written,
+    /// so the poison flag carries no integrity information here and the
+    /// mesh degrades to serving whichever model the slot last held
+    /// rather than cascading the panic into every request thread.
     pub fn model(&self, i: usize) -> Arc<RkModel> {
-        Arc::clone(&self.replicas[i % self.replicas.len()].read().expect("replica lock"))
+        let slot = &self.replicas[i % self.replicas.len()];
+        let guard = slot.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        Arc::clone(&guard)
     }
 
     /// Version of the most recent install.
@@ -72,7 +80,10 @@ impl ModelMesh {
     /// keep their pinned `Arc` and drain on the old version.
     pub fn install(&self, model: Arc<RkModel>) {
         for slot in &self.replicas {
-            *slot.write().expect("replica lock") = Arc::clone(&model);
+            // Same poison policy as `model()`: the slot is a lone Arc
+            // pointer, so installing over a poisoned lock is safe and
+            // preferable to wedging the publish path forever.
+            *slot.write().unwrap_or_else(std::sync::PoisonError::into_inner) = Arc::clone(&model);
             self.swaps.inc();
         }
         self.latest.store(model.version, Ordering::Release);
@@ -156,6 +167,27 @@ mod tests {
         let CentroidCoord::Continuous(mu) = pinned.centroids[0][0] else { panic!() };
         assert_eq!(mu, 5.0);
         assert_eq!(mesh.model(0).version, 6);
+    }
+
+    #[test]
+    fn poisoned_slot_keeps_serving_and_accepts_installs() {
+        let mesh = ModelMesh::new(marked_model(1), 1, Metrics::new());
+        let mesh2 = Arc::clone(&mesh);
+        // Poison the sole replica slot: panic while holding its write
+        // lock on another thread.
+        // rklint::allow(rogue-thread, reason = "test poisons a lock; needs a real panicking thread, not the exec pool")
+        let t = std::thread::spawn(move || {
+            let _guard = mesh2.replicas[0].write().expect("fresh lock");
+            panic!("poison the replica slot");
+        });
+        assert!(t.join().is_err(), "the thread must have panicked");
+        // Reads degrade to the last-held model instead of propagating
+        // the panic into the serving path…
+        assert_eq!(mesh.model(0).version, 1);
+        // …and publishes still land.
+        mesh.install(Arc::new(marked_model(2)));
+        assert_eq!(mesh.model(0).version, 2);
+        assert_eq!(mesh.latest_version(), 2);
     }
 
     #[test]

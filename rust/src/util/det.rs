@@ -1,0 +1,85 @@
+//! Deterministic iteration adapters — the blessed way to walk a hash
+//! map (`HashMap`, [`FxHashMap`](crate::util::fx::FxHashMap)) when the
+//! visit order can reach floating-point accumulation, wire encoding, or
+//! display.
+//!
+//! Hash-map storage order is an artifact of insertion history and
+//! capacity, so two logically equal maps built along different paths
+//! (patch vs rebuild, shard-merge vs serial) can disagree on it. Any
+//! order-sensitive consumer must therefore sort first; these adapters
+//! make that one call instead of a pattern to re-derive at every site.
+//! The `nondet-iteration` rklint rule (see [`crate::analysis`]) flags
+//! raw iteration and points here.
+//!
+//! All adapters are generic over the map's `BuildHasher`, so they take
+//! std and Fx maps alike, and they sort by `Ord` on the key — the same
+//! total order `BTreeMap` would give.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::BuildHasher;
+
+/// Keys of `m`, sorted ascending. Clones keys; prefer
+/// [`sorted_entries`] when the values are needed too.
+pub fn sorted_keys<K: Ord + Clone, V, S: BuildHasher>(m: &HashMap<K, V, S>) -> Vec<K> {
+    // rklint::allow(nondet-iteration, reason = "adapter interior: sorted before exposure")
+    let mut keys: Vec<K> = m.keys().cloned().collect();
+    keys.sort_unstable();
+    keys
+}
+
+/// Borrowed `(key, value)` pairs of `m`, sorted by key ascending.
+pub fn sorted_entries<K: Ord, V, S: BuildHasher>(m: &HashMap<K, V, S>) -> Vec<(&K, &V)> {
+    let mut entries: Vec<(&K, &V)> = m.iter().collect();
+    entries.sort_unstable_by(|a, b| a.0.cmp(b.0));
+    entries
+}
+
+/// Consume `m` into owned `(key, value)` pairs, sorted by key.
+pub fn sorted_owned<K: Ord, V, S: BuildHasher>(m: HashMap<K, V, S>) -> Vec<(K, V)> {
+    let mut entries: Vec<(K, V)> = m.into_iter().collect();
+    entries.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+    entries
+}
+
+/// Members of `s`, sorted ascending.
+pub fn sorted_members<T: Ord, S: BuildHasher>(s: &HashSet<T, S>) -> Vec<&T> {
+    let mut members: Vec<&T> = s.iter().collect();
+    members.sort_unstable();
+    members
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fx::{FxHashMap, FxHashSet};
+
+    #[test]
+    fn adapters_sort_fx_and_std_maps() {
+        let mut fx = FxHashMap::<u64, f64>::default();
+        let mut std = HashMap::<u64, f64>::new();
+        // Different insertion orders must not matter.
+        for &k in &[9u64, 1, 5, 3, 7] {
+            fx.insert(k, k as f64);
+        }
+        for &k in &[3u64, 7, 9, 5, 1] {
+            std.insert(k, k as f64);
+        }
+        assert_eq!(sorted_keys(&fx), vec![1, 3, 5, 7, 9]);
+        assert_eq!(sorted_keys(&fx), sorted_keys(&std));
+        let e = sorted_entries(&fx);
+        assert_eq!(e.first(), Some(&(&1u64, &1.0)));
+        assert_eq!(e.last(), Some(&(&9u64, &9.0)));
+        assert_eq!(sorted_owned(std).iter().map(|(k, _)| *k).collect::<Vec<_>>(), vec![
+            1, 3, 5, 7, 9
+        ]);
+    }
+
+    #[test]
+    fn set_members_sorted() {
+        let mut s = FxHashSet::<i32>::default();
+        for v in [4, -2, 0, 11] {
+            s.insert(v);
+        }
+        assert_eq!(sorted_members(&s), vec![&-2, &0, &4, &11]);
+    }
+}

@@ -459,9 +459,9 @@ mod tests {
         let log = Mutex::new(Vec::new());
         assert!(!single.run_chunks_ordered(&mut works, 0, &order, |i, w| {
             *w = i as u32;
-            log.lock().unwrap().push(i);
+            log.lock().expect("order log lock").push(i);
         }));
-        assert_eq!(*log.lock().unwrap(), order);
+        assert_eq!(*log.lock().expect("order log lock"), order);
         assert_eq!(works, vec![0, 1, 2, 3, 4, 5]);
     }
 

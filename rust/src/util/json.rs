@@ -20,6 +20,15 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Smallest non-negative integer an f64 (and therefore a JSON number on
+/// our wire) can NOT be trusted to carry: 2^53. Every integer strictly
+/// below round-trips exactly; at 2^53 and above, distinct integers
+/// collapse to the same f64, so both [`Json::count`] and
+/// [`Json::as_usize`] treat the range as out of bounds. Counts that can
+/// legitimately exceed it (state versions, category keys) travel as
+/// decimal strings instead.
+pub const JSON_EXACT_INT_LIMIT: u64 = 1 << 53;
+
 impl Json {
     /// Interpret as f64 if numeric.
     pub fn as_f64(&self) -> Option<f64> {
@@ -29,10 +38,34 @@ impl Json {
         }
     }
 
-    /// Interpret as usize if a non-negative integral number.
+    /// Encode an integral count as a JSON number, checking that the
+    /// value survives the f64 round-trip exactly. Panics at
+    /// [`JSON_EXACT_INT_LIMIT`] (2^53) and above, and on negative
+    /// input — silently corrupting a count on the wire is worse than
+    /// aborting the dump.
+    pub fn count<T>(n: T) -> Json
+    where
+        T: TryInto<u64> + Copy + fmt::Debug,
+    {
+        let v: u64 =
+            n.try_into().unwrap_or_else(|_| panic!("count {n:?} is negative or exceeds u64"));
+        assert!(
+            v < JSON_EXACT_INT_LIMIT,
+            "count {v} is not exactly representable as a JSON number (limit 2^53); \
+             carry it as a decimal string instead"
+        );
+        Json::Num(v as f64)
+    }
+
+    /// Interpret as usize if a non-negative integral number strictly
+    /// below 2^53. The bound is inclusive-exclusive on purpose: an f64
+    /// equal to 2^53 may be a rounded 2^53+1, so the value is already
+    /// ambiguous and gets rejected rather than guessed at.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
-            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as usize),
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v < JSON_EXACT_INT_LIMIT as f64 => {
+                Some(*v as usize)
+            }
             _ => None,
         }
     }
@@ -362,6 +395,36 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("1 2").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn count_encodes_exact_integers_only() {
+        assert_eq!(Json::count(0usize), Json::Num(0.0));
+        assert_eq!(Json::count(4096u32), Json::Num(4096.0));
+        assert_eq!(Json::count(JSON_EXACT_INT_LIMIT - 1), Json::Num((1u64 << 53) as f64 - 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "not exactly representable")]
+    fn count_panics_at_the_exactness_limit() {
+        let _ = Json::count(JSON_EXACT_INT_LIMIT);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn count_panics_on_negative_input() {
+        let _ = Json::count(-1i64);
+    }
+
+    #[test]
+    fn as_usize_rejects_values_past_the_exactness_limit() {
+        // 2^53 + 1 parses to the f64 2^53 — the wire already lost the
+        // distinction, so the ambiguous value must be refused.
+        assert_eq!(parse("9007199254740993").unwrap().as_usize(), None);
+        assert_eq!(parse("9007199254740992").unwrap().as_usize(), None);
+        assert_eq!(parse("9007199254740991").unwrap().as_usize(), Some((1 << 53) - 1));
+        assert_eq!(parse("-1").unwrap().as_usize(), None);
+        assert_eq!(parse("1.5").unwrap().as_usize(), None);
     }
 
     #[test]

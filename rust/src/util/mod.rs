@@ -3,6 +3,7 @@
 //! external crates), a tiny property-testing harness, and the persistent
 //! deterministic execution pool ([`exec`]) shared by the Step-4 engines.
 
+pub mod det;
 pub mod exec;
 pub mod fx;
 pub mod json;

@@ -57,6 +57,20 @@ impl Stopwatch {
     }
 }
 
+/// The blessed telemetry clock: the one sanctioned way for code outside
+/// the telemetry modules (`metrics`, `bench_harness`, `serve::load`) to
+/// read wall time.
+///
+/// Timing reads in core paths feed planner statistics and log lines —
+/// never results — and routing them through this single chokepoint
+/// keeps that auditable: the `wall-clock-in-core` rklint rule (see
+/// [`crate::analysis`]) flags any raw `Instant::now()` elsewhere, so a
+/// clock read can never silently creep into a deterministic
+/// computation.
+pub fn now() -> Instant {
+    Instant::now()
+}
+
 /// Measure a closure's wall time.
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     let t0 = Instant::now();

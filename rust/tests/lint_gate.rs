@@ -1,0 +1,124 @@
+//! Tier-1 gate for `rklint`, the in-tree static-analysis pass.
+//!
+//! Two halves:
+//!
+//! 1. **The gate itself** — lint the real `src/` tree and fail the build
+//!    on any active (non-waivered) diagnostic. This is what keeps the
+//!    determinism contract (`lib.rs` docs) enforced rather than
+//!    aspirational.
+//! 2. **Rule efficacy** — seed each rule with a synthetic violation and
+//!    prove it fires, so a regression in the scanner can't silently
+//!    turn the gate into a no-op.
+
+use rkmeans::analysis::{lint_source, lint_tree};
+use std::path::Path;
+
+fn src_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[test]
+fn source_tree_is_lint_clean() {
+    let report = lint_tree(&src_root()).expect("walk src tree");
+    assert!(report.files > 0, "gate must actually scan files");
+    let active: Vec<String> = report
+        .active()
+        .map(|d| format!("{}:{} [{}] {}", d.file, d.line, d.rule, d.message))
+        .collect();
+    assert!(
+        active.is_empty(),
+        "rklint found {} active diagnostic(s) in src/ — fix the site or add a \
+         reasoned waiver:\n{}",
+        active.len(),
+        active.join("\n")
+    );
+}
+
+#[test]
+fn every_waiver_in_the_tree_carries_a_reason() {
+    // `lint_tree` turns reasonless/unknown-rule waivers into active
+    // `invalid-waiver` diagnostics, so the clean-tree gate already
+    // covers this; the assertion here documents the invariant directly.
+    let report = lint_tree(&src_root()).expect("walk src tree");
+    assert!(
+        !report.diagnostics.iter().any(|d| d.rule == "invalid-waiver"),
+        "waiver hygiene regression"
+    );
+    // And the tree genuinely uses waivers (the registry isn't dead code).
+    assert!(report.waived() > 0, "expected at least one reasoned waiver in src/");
+}
+
+// ---- rule efficacy: each rule fires on a seeded violation ------------
+
+fn rules_fired(rel_path: &str, src: &str) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> =
+        lint_source(rel_path, src).into_iter().filter(|d| !d.waived).map(|d| d.rule).collect();
+    rules.sort_unstable();
+    rules.dedup();
+    rules
+}
+
+#[test]
+fn rogue_thread_fires_outside_the_registry() {
+    let src = "fn sneak() { std::thread::spawn(|| {}); }\n";
+    assert_eq!(rules_fired("src/cluster/sneaky.rs", src), ["rogue-thread"]);
+}
+
+#[test]
+fn nondet_iteration_fires_on_unsorted_hashmap_walks() {
+    let src = "use rustc_hash::FxHashMap;\n\
+               fn leak(m: &FxHashMap<u64, f64>) -> Vec<u64> {\n\
+                   let mut out = Vec::new();\n\
+                   for (k, _) in m.iter() { out.push(*k); }\n\
+                   out\n\
+               }\n";
+    assert_eq!(rules_fired("src/faq/sneaky.rs", src), ["nondet-iteration"]);
+}
+
+#[test]
+fn wall_clock_fires_outside_telemetry_modules() {
+    let src = "fn tick() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert_eq!(rules_fired("src/rkmeans/sneaky.rs", src), ["wall-clock-in-core"]);
+    // …but not inside the telemetry allowlist.
+    assert_eq!(rules_fired("src/metrics/sneaky.rs", src), [] as [&str; 0]);
+}
+
+#[test]
+fn unchecked_cast_fires_in_wire_files_only() {
+    let src = "fn enc(n: usize) -> f64 { n as f64 }\n";
+    assert_eq!(rules_fired("src/rkmeans/model.rs", src), ["unchecked-cast-in-wire"]);
+    assert_eq!(rules_fired("src/rkmeans/pipeline.rs", src), [] as [&str; 0]);
+}
+
+#[test]
+fn contextless_unwrap_fires_on_lock_results_in_serve() {
+    let src = "fn peek(m: &std::sync::Mutex<u64>) -> u64 { *m.lock().unwrap() }\n";
+    assert_eq!(rules_fired("src/serve/sneaky.rs", src), ["contextless-unwrap"]);
+    // Outside the gated paths the same code is allowed.
+    assert_eq!(rules_fired("src/faq/sneaky.rs", src), [] as [&str; 0]);
+}
+
+// ---- waiver mechanics ------------------------------------------------
+
+#[test]
+fn reasoned_waiver_suppresses_and_reasonless_does_not() {
+    let reasoned = "// rklint::allow(wall-clock-in-core, reason = \"seeded fixture\")\n\
+                    fn tick() -> std::time::Instant { std::time::Instant::now() }\n";
+    let diags = lint_source("src/rkmeans/sneaky.rs", reasoned);
+    assert!(diags.iter().all(|d| d.waived), "reasoned waiver must suppress: {diags:?}");
+    assert_eq!(diags.iter().filter(|d| d.waived).count(), 1);
+
+    let reasonless = "// rklint::allow(wall-clock-in-core)\n\
+                      fn tick() -> std::time::Instant { std::time::Instant::now() }\n";
+    let fired = rules_fired("src/rkmeans/sneaky.rs", reasonless);
+    assert!(
+        fired.contains(&"wall-clock-in-core") && fired.contains(&"invalid-waiver"),
+        "reasonless waiver must not suppress and must itself be flagged: {fired:?}"
+    );
+}
+
+#[test]
+fn unknown_rule_waiver_is_flagged() {
+    let src = "// rklint::allow(no-such-rule, reason = \"typo\")\nfn f() {}\n";
+    assert_eq!(rules_fired("src/rkmeans/sneaky.rs", src), ["invalid-waiver"]);
+}

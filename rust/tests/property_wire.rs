@@ -1,0 +1,176 @@
+//! Byte-stability properties of the wire formats.
+//!
+//! The serving tier treats `RkModel::to_bytes` as a canonical encoding:
+//! replicas compare payloads bitwise, deltas splice into snapshots
+//! bit-exactly, and CI diffs dumps across runs. That only works if the
+//! bytes are a function of the model's *content*, never of the
+//! insertion order of the hash maps the pipeline happened to build it
+//! from. These tests shuffle every order a caller can influence — the
+//! Step-1 marginal map, the Step-3 grid cell list, metrics registration
+//! order, JSON object construction order — and assert the bytes do not
+//! move.
+
+use rkmeans::coreset::{solve_subspaces, sparse_from_table, SubspaceModel};
+use rkmeans::faq::{GridTable, Marginal};
+use rkmeans::metrics::Metrics;
+use rkmeans::rkmeans::{ClusterOpts, Coreset, RkModel, RkPipeline, SubspaceOpts};
+use rkmeans::serve::ModelDelta;
+use rkmeans::synthetic::{retailer, Scale};
+use rkmeans::util::json::Json;
+use rkmeans::util::FxHashMap;
+use std::collections::BTreeMap;
+
+const KAPPA: usize = 4;
+const K: usize = 4;
+
+/// Solve Step 2 from a marginal map populated in the given key order.
+fn models_with_insertion_order(
+    pipe_marginals: &[(String, Marginal)],
+    order: impl Iterator<Item = usize>,
+) -> Vec<SubspaceModel> {
+    let feq = retailer::feq();
+    let mut map: FxHashMap<String, Marginal> = FxHashMap::default();
+    for i in order {
+        let (attr, marg) = &pipe_marginals[i];
+        map.insert(attr.clone(), marg.clone());
+    }
+    solve_subspaces(&feq, &map, KAPPA).expect("step 2")
+}
+
+/// Rebuild a `GridTable` from a canonical sparse grid, cells in the
+/// order produced by `reorder`.
+fn table_from_grid(coreset: &Coreset, reorder: impl Fn(&mut Vec<(Vec<u32>, f64)>)) -> GridTable {
+    let m = coreset.grid.m;
+    let mut cells: Vec<(Vec<u32>, f64)> = coreset
+        .grid
+        .gids
+        .chunks(m)
+        .zip(&coreset.grid.weights)
+        .map(|(g, &w)| (g.to_vec(), w))
+        .collect();
+    reorder(&mut cells);
+    let feature_names = retailer::feq().features.iter().map(|f| f.attr.clone()).collect();
+    GridTable { feature_names, cells }
+}
+
+/// One full Step 2–4 run where the marginal map was populated in
+/// `attr_order` and the grid cells arrive in `reorder` order.
+fn model_variant(
+    marginals: &[(String, Marginal)],
+    base: &Coreset,
+    attr_order: impl Iterator<Item = usize>,
+    reorder: impl Fn(&mut Vec<(Vec<u32>, f64)>),
+    version: u64,
+) -> RkModel {
+    let models = models_with_insertion_order(marginals, attr_order);
+    let table = table_from_grid(base, reorder);
+    let (grid, subspaces) = sparse_from_table(table, &models);
+    Coreset::from_parts(grid, subspaces, models).cluster(&ClusterOpts::new(K)).with_version(version)
+}
+
+/// The shared fixture: one canonical pipeline run, plus the marginal
+/// list in sorted-attr order so variants can permute it.
+fn fixture() -> (Vec<(String, Marginal)>, Coreset) {
+    let db = retailer::generate(Scale::tiny(), 42);
+    let feq = retailer::feq();
+    let pipe = RkPipeline::plan(&db, &feq).expect("plan");
+    let marg = pipe.marginals().expect("step 1");
+    let mut attrs: Vec<String> = feq.features.iter().map(|f| f.attr.clone()).collect();
+    attrs.sort();
+    attrs.dedup();
+    let pairs: Vec<(String, Marginal)> =
+        attrs.iter().map(|a| (a.clone(), marg.get(a).expect("marginal").clone())).collect();
+    let subspaces = pipe.subspaces(&marg, &SubspaceOpts::new(KAPPA)).expect("step 2");
+    let coreset = pipe.coreset(&subspaces).expect("step 3");
+    (pairs, coreset)
+}
+
+#[test]
+fn model_bytes_invariant_under_map_and_cell_order() {
+    let (pairs, coreset) = fixture();
+    let n = pairs.len();
+    // Canonical: forward attr insertion, cells as produced.
+    let a = model_variant(&pairs, &coreset, 0..n, |_| (), 1);
+    // Adversarial: reversed attr insertion, cells reversed.
+    let b = model_variant(&pairs, &coreset, (0..n).rev(), |cells| cells.reverse(), 1);
+    // Adversarial: rotated attr insertion, cells rotated.
+    let c = model_variant(
+        &pairs,
+        &coreset,
+        (0..n).map(move |i| (i + n / 2) % n),
+        |cells| {
+            let cut = cells.len() / 2;
+            cells.rotate_left(cut);
+        },
+        1,
+    );
+    let bytes = a.to_bytes();
+    assert_eq!(bytes, b.to_bytes(), "reversed map/cell order changed the wire bytes");
+    assert_eq!(bytes, c.to_bytes(), "rotated map/cell order changed the wire bytes");
+    // And the bytes round-trip to a model that re-encodes identically.
+    let back = RkModel::from_bytes(&bytes).expect("round trip");
+    assert_eq!(back.to_bytes(), bytes, "decode/encode must be a fixed point");
+}
+
+#[test]
+fn delta_sees_no_difference_between_shuffled_builds() {
+    let (pairs, coreset) = fixture();
+    let n = pairs.len();
+    let base = model_variant(&pairs, &coreset, 0..n, |_| (), 1);
+    let next = model_variant(&pairs, &coreset, (0..n).rev(), |cells| cells.reverse(), 2);
+    // The two builds differ only in construction order, so the delta
+    // engine (which compares parts bitwise) must ship zero parts.
+    let delta = base.diff(&next);
+    assert_eq!(delta.changes(), 0, "shuffled build produced content drift");
+    // The empty delta itself has stable bytes and applies cleanly.
+    let wire = delta.to_bytes();
+    let decoded = ModelDelta::from_bytes(&wire).expect("delta decode");
+    let applied = base.apply_delta(&decoded).expect("delta apply");
+    assert_eq!(applied.to_bytes(), next.to_bytes(), "apply must land on the target bytes");
+}
+
+#[test]
+fn metrics_dump_is_invariant_under_registration_order() {
+    let forward = Metrics::new();
+    forward.counter("serve.swaps").add(3);
+    forward.gauge("serve.version").set(7);
+    forward.histogram("serve.assign_us").observe(50);
+    forward.histogram("serve.assign_us").observe(90);
+
+    let reversed = Metrics::new();
+    reversed.histogram("serve.assign_us").observe(50);
+    reversed.histogram("serve.assign_us").observe(90);
+    reversed.gauge("serve.version").set(7);
+    reversed.counter("serve.swaps").add(3);
+
+    assert_eq!(forward.snapshot(), reversed.snapshot());
+    assert_eq!(
+        forward.render().into_bytes(),
+        reversed.render().into_bytes(),
+        "rendered metrics dump must be byte-stable across registration orders"
+    );
+    // The dump is sorted, so its line order is part of the contract.
+    let dump = forward.render();
+    let lines: Vec<&str> = dump.lines().collect();
+    let mut sorted = lines.clone();
+    sorted.sort_unstable();
+    assert_eq!(lines, sorted, "render() must emit sorted lines");
+}
+
+#[test]
+fn json_objects_encode_with_sorted_keys_regardless_of_build_order() {
+    let mut fwd = BTreeMap::new();
+    fwd.insert("alpha".to_string(), Json::Num(1.0));
+    fwd.insert("mid".to_string(), Json::Str("x".to_string()));
+    fwd.insert("zeta".to_string(), Json::Bool(true));
+
+    let mut rev = BTreeMap::new();
+    rev.insert("zeta".to_string(), Json::Bool(true));
+    rev.insert("mid".to_string(), Json::Str("x".to_string()));
+    rev.insert("alpha".to_string(), Json::Num(1.0));
+
+    let a = Json::Obj(fwd).to_string();
+    let b = Json::Obj(rev).to_string();
+    assert_eq!(a, b);
+    assert!(a.find("alpha").unwrap() < a.find("zeta").unwrap(), "keys must serialize sorted");
+}
