@@ -2,9 +2,10 @@
 //! (ROADMAP "bench trajectory in CI" item).
 //!
 //! Reads `BENCH_lloyd.json`, `BENCH_stream.json`, `BENCH_sweep.json`,
-//! `BENCH_shard.json` and `BENCH_serve.json` (as emitted by the smoke
-//! runs of `kernel_lloyd`, `stream_ingest`, `k_sweep`, `shard_build`
-//! and `serve_load` earlier in the CI job) plus the committed baseline
+//! `BENCH_shard.json`, `BENCH_serve.json` and `BENCH_rpc.json` (as
+//! emitted by the smoke runs of `kernel_lloyd`, `stream_ingest`,
+//! `k_sweep`, `shard_build`, `serve_load` and `rpc_load` earlier in
+//! the CI job) plus the committed baseline
 //! `bench_baseline.json`, and **fails (exit 1)** when a tracked
 //! throughput metric regresses more than the baseline's tolerance
 //! (default 20 %) below its committed value:
@@ -29,13 +30,23 @@
 //!   the un-batched one-call-per-request loop (a ratio);
 //! * `serve_delta_bytes_ratio` — `delta_bytes_ratio` of the `delta`
 //!   serve record: cumulative snapshot bytes / delta wire bytes over
-//!   the bench's publishes (size, not speed — machine-independent).
+//!   the bench's publishes (size, not speed — machine-independent);
+//! * `rpc_qps_ratio` — `qps_ratio_vs_inproc` of the `rpc-1` rpc
+//!   record: framed socket assignment through a real replica process
+//!   vs. the in-process front (a ratio; crossing the process boundary
+//!   costs throughput, the gate only holds the floor);
+//! * `rpc_catchup_ok` — `catchup_ok` of the `rpc-3-churn` rpc record:
+//!   1.0 when the replica killed and restarted mid-run converged back
+//!   to the writer's latest version via byte-verified snapshot
+//!   catch-up (a correctness bit, not a speed — any value below 1.0
+//!   is a fault-recovery regression).
 //!
 //! Baseline values are calibrated for the `--test` smoke shapes and set
 //! conservatively; raise them as the engines get faster so the trajectory
 //! ratchets. Env overrides: `RKMEANS_BASELINE`, `RKMEANS_BENCH_OUT`,
 //! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT`, `RKMEANS_SHARD_OUT`,
-//! `RKMEANS_SERVE_OUT` (same paths the emitting benches use).
+//! `RKMEANS_SERVE_OUT`, `RKMEANS_RPC_OUT` (same paths the emitting
+//! benches use).
 
 use rkmeans::util::json::{parse, Json};
 use std::path::PathBuf;
@@ -67,6 +78,7 @@ fn main() {
     let sweep_path = env_path("RKMEANS_SWEEP_OUT", "BENCH_sweep.json");
     let shard_path = env_path("RKMEANS_SHARD_OUT", "BENCH_shard.json");
     let serve_path = env_path("RKMEANS_SERVE_OUT", "BENCH_serve.json");
+    let rpc_path = env_path("RKMEANS_RPC_OUT", "BENCH_rpc.json");
 
     let mut failures: Vec<String> = Vec::new();
     let baseline = match read_json(&baseline_path) {
@@ -166,6 +178,24 @@ fn main() {
             gate(
                 "serve_delta_bytes_ratio",
                 delta.and_then(|r| r.get("delta_bytes_ratio")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    match read_json(&rpc_path) {
+        Ok(doc) => {
+            let one = find_record(&doc, &[("mode", "rpc-1")]);
+            gate(
+                "rpc_qps_ratio",
+                one.and_then(|r| r.get("qps_ratio_vs_inproc")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+            let churn = find_record(&doc, &[("mode", "rpc-3-churn")]);
+            gate(
+                "rpc_catchup_ok",
+                churn.and_then(|r| r.get("catchup_ok")).and_then(|v| v.as_f64()),
                 &mut failures,
             );
         }

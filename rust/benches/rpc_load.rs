@@ -1,0 +1,316 @@
+//! Bench W4 — the multi-process socket tier (`rkmeans::serve::rpc`):
+//! the in-process assign front vs. real writer/replica processes over
+//! localhost TCP, plus a replica-churn arm that kills and restarts a
+//! replica mid-run to measure snapshot catch-up. Three arms:
+//!
+//! * `inproc`      — the same open-loop load through `AssignFront`
+//!   with no socket in the path: the reference the `rpc_qps_ratio`
+//!   gate metric is relative to;
+//! * `rpc-1`       — one writer process + one replica process; the
+//!   load generator pipelines framed assign requests to the replica's
+//!   socket (`run_rpc_loop`), so framing + kernel round-trips are in
+//!   the measured latency;
+//! * `rpc-3-churn` — one writer (publishing with forced delta drops)
+//!   + three replicas; one replica is killed mid-run and a fresh one
+//!   started, which must fetch a byte-verified snapshot and converge
+//!   back to the writer's latest version. Convergence and the writer's
+//!   catch-up count become the `rpc_catchup_ok` gate metric.
+//!
+//! Results are written as one `BENCH_rpc.json` document (schema: see
+//! `bench_harness` docs; path override: `RKMEANS_RPC_OUT`).
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_RPC_SCALE` overrides the Retailer scale.
+
+use anyhow::{bail, ensure, Context, Result};
+use rkmeans::bench_harness::{write_bench_rpc, RpcBenchRecord};
+use rkmeans::incremental::{IncrementalEngine, PlannerOpts};
+use rkmeans::metrics::Metrics;
+use rkmeans::rkmeans::RkConfig;
+use rkmeans::serve::{
+    fetch_snapshot, probe, run_open_loop, run_rpc_loop, send_stop, synth_rows, AssignFront,
+    FrontOpts, LoadSpec, ModelMesh,
+};
+use rkmeans::synthetic::{retailer, Scale};
+use rkmeans::util::exec::shared_pool;
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A child `rkmeans` process with its stdout forwarded line-by-line
+/// through a channel (the drain thread also keeps the pipe from
+/// backing up when the child prints its metrics dump on exit).
+struct Proc {
+    child: Child,
+    lines: mpsc::Receiver<String>,
+    addr: Option<String>,
+}
+
+fn spawn_rkmeans(args: &[String]) -> Result<Proc> {
+    let exe = env!("CARGO_BIN_EXE_rkmeans");
+    let mut child = Command::new(exe)
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning {exe} {args:?}"))?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines().map_while(|l| l.ok()) {
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    Ok(Proc { child, lines: rx, addr: None })
+}
+
+impl Proc {
+    /// Wait for the child's `rpc listening on <addr>` line.
+    fn listening_addr(&mut self, deadline: Duration) -> Result<String> {
+        if let Some(a) = &self.addr {
+            return Ok(a.clone());
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < deadline {
+            match self.lines.recv_timeout(Duration::from_millis(100)) {
+                Ok(line) => {
+                    if let Some(a) = line.strip_prefix("rpc listening on ") {
+                        let a = a.trim().to_string();
+                        self.addr = Some(a.clone());
+                        return Ok(a);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        bail!("child printed no listening line within {deadline:?}")
+    }
+
+    /// Graceful stop: control-plane STOP, then wait (kill on timeout).
+    fn stop(mut self) {
+        if let Some(a) = &self.addr {
+            let _ = send_stop(a);
+        }
+        let t0 = Instant::now();
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) => return,
+                Ok(None) if t0.elapsed() < Duration::from_secs(10) => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                _ => {
+                    let _ = self.child.kill();
+                    let _ = self.child.wait();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Hard kill (the churn arm's failure injection).
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn writer_args(scale: f64, k: usize, publishes: usize, publish_ms: u64, drop: u64) -> Vec<String> {
+    [
+        "serve",
+        "--dataset",
+        "retailer",
+        "--scale",
+        &scale.to_string(),
+        "--k",
+        &k.to_string(),
+        "--seed",
+        "42",
+        "--listen",
+        "127.0.0.1:0",
+        "--publishes",
+        &publishes.to_string(),
+        "--publish-ms",
+        &publish_ms.to_string(),
+        "--drop-every",
+        &drop.to_string(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+fn replica_args(writer: &str) -> Vec<String> {
+    ["replica", "--connect", writer, "--listen", "127.0.0.1:0"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale: f64 = std::env::var("RKMEANS_RPC_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.005 } else { 0.02 });
+    let k = if test_mode { 8 } else { 32 };
+    let inproc_requests = if test_mode { 10_000 } else { 50_000 };
+    let rpc_requests = if test_mode { 3_000 } else { 30_000 };
+    let churn_requests = if test_mode { 3_000 } else { 30_000 };
+    let churn_qps = if test_mode { 1_500.0 } else { 15_000.0 };
+    let publishes = if test_mode { 2 } else { 4 };
+    let publish_ms = if test_mode { 300 } else { 400 };
+    let clients = if test_mode { 2 } else { 4 };
+    let seed = 42u64;
+    let startup = Duration::from_secs(60);
+
+    // ---- arm 1: in-process reference --------------------------------
+    // Same dataset / k / seed the writer process uses, so the factored
+    // assign cost is identical and the ratio isolates the socket.
+    let db = retailer::generate(Scale::custom(scale), seed);
+    let feq = retailer::feq();
+    let metrics = Metrics::new();
+    let rk = RkConfig::new(k).with_seed(seed);
+    let engine = IncrementalEngine::new(&db, feq, rk, PlannerOpts::default(), metrics.clone())?;
+    let model = engine.model();
+    let rows = synth_rows(&model, 256, seed ^ 0x9e37_79b9);
+    println!(
+        "rpc workload: |D|={} rows (scale {scale}), k={k}, {clients} clients",
+        db.total_rows()
+    );
+
+    let mesh = ModelMesh::new(model, 2, metrics);
+    let front = AssignFront::start(Arc::clone(&mesh), FrontOpts::default(), shared_pool());
+    let inproc_report = run_open_loop(&front, &rows, &LoadSpec::saturate(inproc_requests, clients));
+    front.shutdown();
+    let inproc_rec = RpcBenchRecord::from_load(
+        "retailer",
+        "inproc",
+        0,
+        clients,
+        inproc_report.requests,
+        inproc_report.qps,
+        inproc_report.p50_us,
+        inproc_report.p99_us,
+    );
+    println!("{}", inproc_rec.line());
+
+    // ---- arm 2: one writer + one replica process --------------------
+    let mut writer = spawn_rkmeans(&writer_args(scale, k, 0, publish_ms, 0))?;
+    let waddr = writer.listening_addr(startup)?;
+    let mut replica = spawn_rkmeans(&replica_args(&waddr))?;
+    let raddr = replica.listening_addr(startup)?;
+    let served = fetch_snapshot(&raddr, Duration::from_secs(30))?;
+    let rpc_rows = synth_rows(&served, 256, seed ^ 0x9e37_79b9);
+    let one = run_rpc_loop(
+        &[raddr.clone()],
+        &rpc_rows,
+        &LoadSpec { requests: rpc_requests, clients, qps: None, seed },
+    )?;
+    replica.stop();
+    writer.stop();
+    ensure!(one.report.monotonic, "rpc-1 arm served non-monotone versions");
+    let one_rec = RpcBenchRecord::from_load(
+        "retailer",
+        "rpc-1",
+        1,
+        clients,
+        one.report.requests,
+        one.report.qps,
+        one.report.p50_us,
+        one.report.p99_us,
+    )
+    .with_ratio_vs(&inproc_rec);
+    println!("{}", one_rec.line());
+
+    // ---- arm 3: three replicas, one killed + restarted mid-run ------
+    // `--drop-every 3` forces delta drops on the replication plane, so
+    // surviving replicas also exercise VersionGap → snapshot catch-up.
+    let mut writer = spawn_rkmeans(&writer_args(scale, k, publishes, publish_ms, 3))?;
+    let waddr = writer.listening_addr(startup)?;
+    let mut replicas = Vec::new();
+    let mut raddrs = Vec::new();
+    for _ in 0..3 {
+        let mut r = spawn_rkmeans(&replica_args(&waddr))?;
+        raddrs.push(r.listening_addr(startup)?);
+        replicas.push(r);
+    }
+
+    let load_addrs = raddrs.clone();
+    let load_rows = rpc_rows.clone();
+    let load = std::thread::spawn(move || {
+        run_rpc_loop(
+            &load_addrs,
+            &load_rows,
+            &LoadSpec { requests: churn_requests, clients, qps: Some(churn_qps), seed },
+        )
+    });
+
+    // Let the run get going, then kill one replica and start a fresh
+    // one (new port — the load generator keeps rotating over the
+    // original three, reconnecting away from the dead socket).
+    std::thread::sleep(Duration::from_millis(publish_ms));
+    replicas.remove(0).kill();
+    let mut fresh = spawn_rkmeans(&replica_args(&waddr))?;
+    let fresh_addr = fresh.listening_addr(startup)?;
+
+    let churn = load.join().expect("rpc load thread")?;
+    println!(
+        "churn load: {} answered, {} lost to the kill, {} reconnects",
+        churn.report.requests, churn.lost, churn.reconnects
+    );
+
+    // Convergence: the restarted replica must reach the writer's final
+    // version (its installs are byte-verified on the way in).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut converged = false;
+    while Instant::now() < deadline {
+        let w = probe(&waddr, Duration::from_secs(10))?;
+        let f = probe(&fresh_addr, Duration::from_secs(10))?;
+        if f.version == w.version {
+            converged = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let catchups = probe(&waddr, Duration::from_secs(10))?.catchups;
+    fresh.stop();
+    for r in replicas {
+        r.stop();
+    }
+    writer.stop();
+
+    let churn_rec = RpcBenchRecord::from_load(
+        "retailer",
+        "rpc-3-churn",
+        3,
+        clients,
+        churn.report.requests,
+        churn.report.qps,
+        churn.report.p50_us,
+        churn.report.p99_us,
+    )
+    .with_ratio_vs(&inproc_rec)
+    .with_churn(catchups, converged);
+    println!("{}", churn_rec.line());
+    ensure!(converged, "restarted replica never converged to the writer's version");
+    ensure!(catchups >= 1, "writer served no snapshot catch-ups under churn");
+
+    let ratio = one_rec.qps_ratio_vs_inproc.unwrap_or(0.0);
+    let records = vec![inproc_rec, one_rec, churn_rec];
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_RPC_OUT").unwrap_or_else(|_| "BENCH_rpc.json".to_string()),
+    );
+    write_bench_rpc(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+    println!(
+        "rpc-1 vs inproc: {ratio:.3}× QPS across the process boundary; churn arm converged \
+         with {catchups} snapshot catch-up(s) served"
+    );
+    Ok(())
+}

@@ -19,7 +19,7 @@
 //! | `rogue-thread` | all thread creation lives in `util::exec` or the explicit [`rules::SPAWN_REGISTRY`] |
 //! | `nondet-iteration` | no storage-order iteration of `HashMap`/`HashSet`/`FxHashMap`/`FxHashSet`; use [`util::det`](crate::util::det) |
 //! | `wall-clock-in-core` | `Instant::now`/`SystemTime` only in `metrics`, `bench_harness`, `serve::load`, `util::timer` |
-//! | `unchecked-cast-in-wire` | no bare `as` numeric casts in `rkmeans/model.rs` + `serve/delta.rs` |
+//! | `unchecked-cast-in-wire` | no bare `as` numeric casts in `rkmeans/model.rs` + `serve/delta.rs` + `serve/rpc/wire.rs` |
 //! | `contextless-unwrap` | no `.unwrap()` on lock/channel results in `serve/` + `util/exec.rs` |
 //!
 //! A site that is genuinely legitimate carries an inline waiver **with a

@@ -49,6 +49,24 @@ pub const SPAWN_REGISTRY: &[(&str, &str, &str)] = &[
         "shared_across_threads",
         "test exercising cross-thread counter visibility",
     ),
+    (
+        "serve/rpc/mod.rs",
+        "start",
+        "socket-tier service threads (accept loop / replica delta-stream subscriber); all model \
+         compute stays on ExecPool via the assign front",
+    ),
+    (
+        "serve/rpc/mod.rs",
+        "accept_loop",
+        "one handler thread per accepted connection, joined by the accept loop on shutdown; \
+         handlers only frame/deframe and relay to the front",
+    ),
+    (
+        "serve/rpc/mod.rs",
+        "run_rpc_loop",
+        "socket load-generator clients: intentionally independent arrival processes, measurement \
+         only (mirrors serve/load.rs run_open_loop)",
+    ),
 ];
 
 /// Map/set type names whose iteration order is hash-dependent (R2).
@@ -97,7 +115,9 @@ fn rule_applies(rule: &str, file: &str) -> bool {
         }
         // Wire encode/decode paths only.
         "unchecked-cast-in-wire" => {
-            file.ends_with("rkmeans/model.rs") || file.ends_with("serve/delta.rs")
+            file.ends_with("rkmeans/model.rs")
+                || file.ends_with("serve/delta.rs")
+                || file.ends_with("serve/rpc/wire.rs")
         }
         // Serving tier + executor hot paths only.
         "contextless-unwrap" => file.contains("src/serve/") || file.ends_with("util/exec.rs"),

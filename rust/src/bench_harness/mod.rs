@@ -228,6 +228,54 @@
 //!   `snapshot_bytes / delta_bytes` — the gate's
 //!   `serve_delta_bytes_ratio` metric. The acceptance target is ≥ 2×
 //!   (deltas at most half the snapshot bytes).
+//!
+//! # `BENCH_rpc.json` schema (version 1)
+//!
+//! `benches/rpc_load.rs` emits one document per invocation (path from
+//! `RKMEANS_RPC_OUT`, default `BENCH_rpc.json`) measuring the
+//! multi-process socket tier ([`crate::serve::rpc`]) against the
+//! in-process front, including a replica-churn arm that kills and
+//! restarts a replica process mid-run:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "rpc",
+//!   "records": [
+//!     {
+//!       "label": "retailer",
+//!       "mode": "rpc-1",
+//!       "replicas": 1,
+//!       "clients": 4,
+//!       "requests": 20000,
+//!       "qps": 81234.0,
+//!       "p50_us": 180,
+//!       "p99_us": 950,
+//!       "qps_ratio_vs_inproc": 0.21,
+//!       "catchups": 1,
+//!       "catchup_ok": 1.0
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `mode` is `inproc` (the reference row: the same open-loop load
+//!   through [`AssignFront`](crate::serve::AssignFront) with no socket
+//!   in the path), `rpc-1` (one writer + one replica process over
+//!   localhost), or `rpc-3-churn` (one writer + three replicas with one
+//!   replica killed and restarted mid-run).
+//! * `replicas` counts replica *processes* (0 on the inproc row);
+//!   `clients` / `requests` / `qps` / `p50_us` / `p99_us` mirror the
+//!   serve schema — socket rows include framing + kernel round-trips in
+//!   latency, which is the point of the comparison.
+//! * `qps_ratio_vs_inproc` = this row's `qps` / the inproc row's `qps`
+//!   (socket rows only) — the gate's `rpc_qps_ratio` metric. Crossing a
+//!   process boundary costs real throughput; the gate only insists the
+//!   floor stays above a conservative baseline.
+//! * `catchups` (churn rows) counts snapshot catch-ups the writer
+//!   served; `catchup_ok` is 1.0 when every restarted replica converged
+//!   back to the writer's latest version (byte-verified) before the run
+//!   ended, else 0.0 — the gate's `rpc_catchup_ok` metric.
 
 pub mod paper;
 
@@ -985,6 +1033,142 @@ pub fn write_bench_serve(path: &Path, records: &[ServeBenchRecord]) -> std::io::
     std::fs::write(path, bench_serve_json(records).to_string())
 }
 
+/// One socket-tier measurement for `BENCH_rpc.json` (schema in the
+/// module docs).
+#[derive(Clone, Debug)]
+pub struct RpcBenchRecord {
+    pub label: String,
+    /// `"inproc"`, `"rpc-1"` or `"rpc-3-churn"`.
+    pub mode: String,
+    /// Replica *processes* serving the load (0 on the inproc row).
+    pub replicas: usize,
+    /// Concurrent load-generator clients.
+    pub clients: usize,
+    /// Requests answered.
+    pub requests: usize,
+    /// Sustained throughput, requests per second.
+    pub qps: f64,
+    /// Exact median per-request latency (wire + queue + compute), µs.
+    pub p50_us: u64,
+    /// Exact 99th-percentile per-request latency, µs.
+    pub p99_us: u64,
+    /// This row's `qps` / the inproc row's `qps` (socket rows only).
+    pub qps_ratio_vs_inproc: Option<f64>,
+    /// Snapshot catch-ups the writer served during the run (churn rows).
+    pub catchups: Option<u64>,
+    /// 1.0 when every restarted replica converged back to the writer's
+    /// latest version before the run ended, else 0.0 (churn rows).
+    pub catchup_ok: Option<f64>,
+}
+
+impl RpcBenchRecord {
+    /// Build a record from one arm's load report.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_load(
+        label: &str,
+        mode: &str,
+        replicas: usize,
+        clients: usize,
+        requests: usize,
+        qps: f64,
+        p50_us: u64,
+        p99_us: u64,
+    ) -> Self {
+        RpcBenchRecord {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            replicas,
+            clients,
+            requests,
+            qps,
+            p50_us,
+            p99_us,
+            qps_ratio_vs_inproc: None,
+            catchups: None,
+            catchup_ok: None,
+        }
+    }
+
+    /// Attach the throughput ratio against the in-process reference row.
+    pub fn with_ratio_vs(mut self, inproc: &RpcBenchRecord) -> Self {
+        self.qps_ratio_vs_inproc = Some(self.qps / inproc.qps.max(1e-12));
+        self
+    }
+
+    /// Attach the churn outcome: catch-ups served and whether the
+    /// restarted replica(s) converged back to the latest version.
+    pub fn with_churn(mut self, catchups: u64, converged: bool) -> Self {
+        self.catchups = Some(catchups);
+        self.catchup_ok = Some(if converged { 1.0 } else { 0.0 });
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<12} {:<11} R={:<2} C={:<2} {:>8} req  {:>10.0} req/s  p50={:>5}µs p99={:>6}µs{}{}",
+            self.label,
+            self.mode,
+            self.replicas,
+            self.clients,
+            self.requests,
+            self.qps,
+            self.p50_us,
+            self.p99_us,
+            self.qps_ratio_vs_inproc
+                .map(|r| format!("  ({r:.3}× vs inproc)"))
+                .unwrap_or_default(),
+            self.catchup_ok
+                .map(|ok| format!(
+                    "  (catchups={}, {})",
+                    self.catchups.unwrap_or(0),
+                    if ok >= 1.0 { "converged" } else { "DIVERGED" }
+                ))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("replicas".to_string(), Json::Num(self.replicas as f64));
+        m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("qps".to_string(), Json::Num(self.qps));
+        m.insert("p50_us".to_string(), Json::Num(self.p50_us as f64));
+        m.insert("p99_us".to_string(), Json::Num(self.p99_us as f64));
+        if let Some(r) = self.qps_ratio_vs_inproc {
+            m.insert("qps_ratio_vs_inproc".to_string(), Json::Num(r));
+        }
+        if let Some(c) = self.catchups {
+            m.insert("catchups".to_string(), Json::Num(c as f64));
+        }
+        if let Some(ok) = self.catchup_ok {
+            m.insert("catchup_ok".to_string(), Json::Num(ok));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_rpc.json` document.
+pub fn bench_rpc_json(records: &[RpcBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("rpc".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(RpcBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_rpc.json` document to disk.
+pub fn write_bench_rpc(path: &Path, records: &[RpcBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_rpc_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -1191,6 +1375,37 @@ mod tests {
         assert_eq!(recs[2].get("delta_bytes").unwrap().as_usize(), Some(1_000));
         let r = recs[2].get("delta_bytes_ratio").unwrap().as_f64().unwrap();
         assert!((r - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rpc_bench_json_roundtrips() {
+        let inproc =
+            RpcBenchRecord::from_load("retailer", "inproc", 0, 4, 20_000, 400_000.0, 20, 80);
+        let one = RpcBenchRecord::from_load("retailer", "rpc-1", 1, 4, 20_000, 100_000.0, 150, 900)
+            .with_ratio_vs(&inproc);
+        let churn =
+            RpcBenchRecord::from_load("retailer", "rpc-3-churn", 3, 4, 20_000, 90_000.0, 160, 950)
+                .with_ratio_vs(&inproc)
+                .with_churn(2, true);
+        assert!((one.qps_ratio_vs_inproc.unwrap() - 0.25).abs() < 1e-9);
+        assert_eq!(churn.catchup_ok, Some(1.0));
+        assert!(one.line().contains("vs inproc"));
+        assert!(churn.line().contains("converged"));
+
+        let doc = bench_rpc_json(&[inproc, one, churn]);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("rpc"));
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("inproc"));
+        assert!(recs[0].get("qps_ratio_vs_inproc").is_none());
+        assert!(recs[0].get("catchup_ok").is_none());
+        let r = recs[1].get("qps_ratio_vs_inproc").unwrap().as_f64().unwrap();
+        assert!((r - 0.25).abs() < 1e-9);
+        assert_eq!(recs[2].get("catchups").unwrap().as_usize(), Some(2));
+        let ok = recs[2].get("catchup_ok").unwrap().as_f64().unwrap();
+        assert!((ok - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -85,6 +85,21 @@
 //! open-loop generator in [`serve::load`]; the streaming-coordinator
 //! demo lives on as `rkmeans stream`.
 //!
+//! The same tier crosses a real **process boundary** through
+//! [`serve::rpc`]: a length-prefixed framed protocol over TCP with an
+//! assign plane (encoded rows in, `Assignment{cluster, version}` out
+//! through the same micro-batching front), a replication plane
+//! (replica processes subscribe to the publisher's delta stream and
+//! recover from a `VersionGap` by requesting a full snapshot, verified
+//! **byte-identical** to [`rkmeans::RkModel::to_bytes`] before
+//! install), and a control plane (health/version probes, remote stop).
+//! `rkmeans serve --listen` runs the writer side, `rkmeans replica
+//! --connect` a replica process, and `rkmeans bench-rpc` the socket
+//! load generator; `tests/serve_rpc.rs` exercises the topology with
+//! real processes, including a kill-one-replica → snapshot-catch-up →
+//! rejoin cycle, and `benches/rpc_load.rs` measures it against the
+//! in-process front.
+//!
 //! ## Determinism contract
 //!
 //! The system's correctness story is a set of **bitwise** equivalences,
@@ -105,11 +120,13 @@
 //!   wire, or display — order-sensitive walks go through the sorted
 //!   adapters in [`util::det`].
 //! * **`apply(diff(a,b)) ≡ b`** — the serving delta wire format
-//!   reconstructs models bit-exactly. Guarded by
-//!   `unchecked-cast-in-wire` (no bare `as` casts in
-//!   `rkmeans/model.rs` / `serve/delta.rs`; counts round-trip through
-//!   checked conversions that refuse silent truncation past 2^53) and
-//!   by the byte-stability tests in `tests/property_wire.rs`.
+//!   reconstructs models bit-exactly, and the rpc snapshot plane ships
+//!   those bytes verbatim (replicas refuse snapshots that fail the
+//!   byte check). Guarded by `unchecked-cast-in-wire` (no bare `as`
+//!   casts in `rkmeans/model.rs` / `serve/delta.rs` /
+//!   `serve/rpc/wire.rs`; counts round-trip through checked
+//!   conversions that refuse silent truncation past 2^53) and by the
+//!   byte-stability tests in `tests/property_wire.rs`.
 //! * **Deterministic paths never read the clock** — guarded by
 //!   `wall-clock-in-core`: `Instant::now`/`SystemTime` live only in
 //!   [`metrics`], [`bench_harness`], [`serve::load`], and the blessed

@@ -11,7 +11,15 @@
 //! * `tables`    — regenerate the paper's tables/figures;
 //! * `serve`     — run the serving mesh: replicated models behind a
 //!   micro-batching assign front under open-loop load, with a writer
-//!   publishing centroid deltas (`rkmeans::serve`);
+//!   publishing centroid deltas (`rkmeans::serve`); with `--listen` it
+//!   becomes the writer side of the multi-process tier, serving the
+//!   socket RPC planes (`rkmeans::serve::rpc`) and broadcasting every
+//!   published delta to subscribed replica processes;
+//! * `replica`   — a replica process: fetch a byte-verified snapshot
+//!   from the writer, serve assigns locally over its own socket, and
+//!   follow the writer's delta stream with snapshot catch-up;
+//! * `bench-rpc` — drive/probe/stop running rpc servers (the socket
+//!   load generator and control-plane helper used by benches and CI);
 //! * `stream`    — streaming-coordinator demo (ingest + periodic
 //!   recluster; formerly `serve`, which forwards with a warning);
 //! * `artifacts` — inspect/verify the AOT artifact manifest.
@@ -35,8 +43,10 @@ use rkmeans::rkmeans::{
 };
 #[cfg(feature = "pjrt")]
 use rkmeans::runtime::PjrtRuntime;
+use rkmeans::serve::rpc::wire::{ROLE_REPLICA, ROLE_WRITER};
 use rkmeans::serve::{
-    run_open_loop, synth_rows, AssignFront, FrontOpts, LoadSpec, ModelMesh, Publisher,
+    fetch_snapshot, probe, run_open_loop, run_rpc_loop, send_stop, synth_rows, AssignFront,
+    FrontOpts, LoadSpec, ModelMesh, Publisher, ReplicaSync, RpcOpts, RpcServer, SyncOpts,
 };
 use rkmeans::synthetic::{favorita_trace, retailer_trace, Dataset, Scale, TraceSpec};
 use rkmeans::util::exec::shared_pool;
@@ -64,6 +74,12 @@ USAGE:
   rkmeans serve     (--dataset NAME | --db DIR) [--k K] [--scale F] [--seed N]
                     [--replicas R] [--clients C] [--requests N] [--batch B]
                     [--qps Q] [--publishes P]
+                    [--listen ADDR] [--publish-ms MS] [--drop-every N]
+  rkmeans replica   --connect ADDR [--listen ADDR] [--replicas R] [--batch B]
+                    [--retries N] [--retry-base-ms MS] [--retry-cap-ms MS]
+                    [--seed N]
+  rkmeans bench-rpc --connect ADDR[,ADDR...] [--requests N] [--clients C]
+                    [--qps Q] [--seed N] [--probe] [--stop]
   rkmeans stream    --dataset NAME [--scale F] [--rate N] [--batches N] [--k K]
                     [--shards S]
   rkmeans artifacts [--dir DIR]
@@ -111,6 +127,13 @@ impl Args {
     fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
+}
+
+/// Plain one-line warning on stderr. CLI notices deliberately bypass
+/// the telemetry/timer stack: no timestamps, no metrics — the text must
+/// stay byte-stable so scripts (and the forwarding test) can pin it.
+fn warn(msg: &str) {
+    eprintln!("warning: {msg}");
 }
 
 fn load_db(args: &Args) -> Result<(rkmeans::data::Database, rkmeans::query::Feq, String)> {
@@ -461,13 +484,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         || args.has("replicas")
         || args.has("batch")
         || args.has("qps")
-        || args.has("publishes");
+        || args.has("publishes")
+        || args.has("listen");
     if demo_flags && !mesh_flags {
-        eprintln!(
-            "warning: the streaming-coordinator demo is now `rkmeans stream`; forwarding \
-             (`rkmeans serve` runs the serving mesh — see `rkmeans help`)"
+        warn(
+            "the streaming-coordinator demo is now `rkmeans stream`; forwarding \
+             (`rkmeans serve` runs the serving mesh — see `rkmeans help`)",
         );
         return cmd_stream(args);
+    }
+
+    // `--listen ADDR` turns the in-process mesh into the writer side of
+    // the multi-process tier (`rkmeans::serve::rpc`).
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_rpc(args, listen);
     }
 
     let (mut db, feq, name) = load_db(args)?;
@@ -536,6 +566,199 @@ fn cmd_serve(args: &Args) -> Result<()> {
     front.shutdown();
     println!("{}", report.line("mesh"));
     println!("-- metrics --\n{}", metrics.render());
+    Ok(())
+}
+
+/// `rkmeans serve --listen ADDR` — the writer side of the multi-process
+/// tier: bind the socket planes, replay the synthetic trace through the
+/// incremental engine, and broadcast every published delta to subscribed
+/// replica processes. Serves until a control-plane STOP frame arrives.
+///
+/// Prints `rpc listening on <addr>` first (stdout is line-buffered, so
+/// a parent process can scrape the bound port from a `--listen :0`
+/// invocation), then one `published v<N> …` line per trace batch.
+fn cmd_serve_rpc(args: &Args, listen: &str) -> Result<()> {
+    let (mut db, feq, name) = load_db(args)?;
+    let k = args.num("k", 5usize)?;
+    let seed = args.num("seed", 42u64)?;
+    let replicas = args.num("replicas", 2usize)?;
+    let batch = args.num("batch", 64usize)?;
+    let publishes = args.num("publishes", 3usize)?;
+    let publish_ms = args.num("publish-ms", 200u64)?;
+    let drop_every = args.num("drop-every", 0u64)?;
+
+    let metrics = Metrics::new();
+    let mut engine = IncrementalEngine::new(
+        &db,
+        feq,
+        RkConfig::new(k).with_seed(seed),
+        PlannerOpts::default(),
+        metrics.clone(),
+    )?;
+    let mesh = ModelMesh::new(engine.model(), replicas, metrics.clone());
+    let front = AssignFront::start(
+        Arc::clone(&mesh),
+        FrontOpts { max_batch: batch, threads: 0 },
+        shared_pool(),
+    );
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| anyhow!("binding {listen}: {e}"))?;
+    let opts = RpcOpts { drop_every, ..RpcOpts::default() };
+    let server = RpcServer::start(listener, Arc::clone(&mesh), front.client(), ROLE_WRITER, opts)?;
+    println!("rpc listening on {}", server.local_addr());
+    println!(
+        "serving {name} over rpc: {replicas} replica slots, micro-batch ≤ {batch}, \
+         {publishes} publishes every {publish_ms} ms"
+    );
+
+    let spec = TraceSpec::new(publishes, 512);
+    let trace = match name.as_str() {
+        "retailer" => retailer_trace(&db, seed + 1, spec),
+        "favorita" => favorita_trace(&db, seed + 1, spec),
+        _ => Vec::new(),
+    };
+    if trace.is_empty() && publishes > 0 {
+        warn(&format!("no synthetic trace for {name:?}; serving a single version"));
+    }
+    let mut publisher = Publisher::new(Arc::clone(&mesh));
+    for deltas in &trace {
+        // Pace publications so replicas get a window to subscribe (and,
+        // under `--drop-every`, to notice the gap and catch up) between
+        // versions — mirrors a production cadence, not a tight loop.
+        std::thread::sleep(std::time::Duration::from_millis(publish_ms));
+        apply_to_db(&mut db, deltas)?;
+        let (decision, _) = engine.apply_batch(&db, deltas)?;
+        let (stats, wire) = publisher.publish_wire(&engine.model())?;
+        let subs = server.broadcast(&wire);
+        println!(
+            "published v{} ({decision:?}): {} changed parts, {} B delta → {subs} subscriber(s)",
+            stats.version, stats.changes, stats.delta_bytes
+        );
+    }
+    println!("publishing done at v{}; serving until STOP", publisher.version());
+    server.wait();
+    front.shutdown();
+    println!("-- metrics --\n{}", metrics.render());
+    Ok(())
+}
+
+/// `rkmeans replica --connect ADDR` — a replica process: fetch a
+/// byte-verified snapshot from the writer (retrying while the writer
+/// starts up), serve assigns over its own socket, and follow the
+/// writer's delta stream with snapshot catch-up on version gaps.
+fn cmd_replica(args: &Args) -> Result<()> {
+    let connect =
+        args.get("connect").ok_or_else(|| anyhow!("need --connect ADDR"))?.to_string();
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let replicas = args.num("replicas", 1usize)?;
+    let batch = args.num("batch", 64usize)?;
+    let retries = args.num("retries", 40u32)?;
+    let base_ms = args.num("retry-base-ms", 20u64)?;
+    let cap_ms = args.num("retry-cap-ms", 2000u64)?;
+    let seed = args.num("seed", 42u64)?;
+
+    // The writer may still be binding its socket; retry the initial
+    // snapshot with the same bounded exponential backoff the sync loop
+    // uses for reconnects.
+    let mut model = None;
+    for attempt in 0..retries.max(1) {
+        match fetch_snapshot(&connect, std::time::Duration::from_secs(30)) {
+            Ok(m) => {
+                model = Some(m);
+                break;
+            }
+            Err(e) => {
+                if attempt + 1 == retries.max(1) {
+                    bail!("fetching initial snapshot from {connect}: {e:#}");
+                }
+                let shift = attempt.min(6);
+                let delay = (base_ms << shift).min(cap_ms);
+                std::thread::sleep(std::time::Duration::from_millis(delay));
+            }
+        }
+    }
+    let model = model.expect("retry loop either set a model or bailed");
+    println!("replica snapshot: v{} (k={}, m={})", model.version, model.k(), model.m());
+
+    let metrics = Metrics::new();
+    let mesh = ModelMesh::new(model, replicas, metrics.clone());
+    let front = AssignFront::start(
+        Arc::clone(&mesh),
+        FrontOpts { max_batch: batch, threads: 0 },
+        shared_pool(),
+    );
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| anyhow!("binding {listen}: {e}"))?;
+    let server = RpcServer::start(
+        listener,
+        Arc::clone(&mesh),
+        front.client(),
+        ROLE_REPLICA,
+        RpcOpts::default(),
+    )?;
+    println!("rpc listening on {}", server.local_addr());
+    let sync_opts = SyncOpts { retries, base_ms, cap_ms, seed, ..SyncOpts::default() };
+    let sync = ReplicaSync::start(connect, Arc::clone(&mesh), sync_opts);
+    server.wait();
+    sync.shutdown();
+    front.shutdown();
+    println!("-- metrics --\n{}", metrics.render());
+    Ok(())
+}
+
+/// `rkmeans bench-rpc --connect ADDR[,ADDR…]` — drive the assign plane
+/// of running rpc servers with the socket load generator, or (with
+/// `--probe` / `--stop`) exercise the control plane from scripts.
+fn cmd_bench_rpc(args: &Args) -> Result<()> {
+    let connect =
+        args.get("connect").ok_or_else(|| anyhow!("need --connect ADDR[,ADDR...]"))?;
+    let addrs: Vec<String> = connect
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        bail!("--connect got no addresses: {connect:?}");
+    }
+
+    if args.has("stop") {
+        for a in &addrs {
+            send_stop(a)?;
+            println!("stop sent to {a}");
+        }
+        return Ok(());
+    }
+    if args.has("probe") {
+        for a in &addrs {
+            let p = probe(a, std::time::Duration::from_secs(10))?;
+            println!(
+                "{a}: version={} role={} replicas={} catchups={} gaps={}",
+                p.version, p.role, p.replicas, p.catchups, p.gaps
+            );
+        }
+        return Ok(());
+    }
+
+    let requests = args.num("requests", 20_000usize)?;
+    let clients = args.num("clients", 4usize)?;
+    let seed = args.num("seed", 42u64)?;
+    let qps = match args.get("qps") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| anyhow!("bad value for --qps: {v:?}"))?),
+        None => None,
+    };
+    let model = fetch_snapshot(&addrs[0], std::time::Duration::from_secs(30))?;
+    let rows = synth_rows(&model, 256, seed ^ 0x9e37_79b9);
+    println!(
+        "bench-rpc: {clients} clients × {requests} requests over {} server(s), base v{}",
+        addrs.len(),
+        model.version
+    );
+    let out = run_rpc_loop(&addrs, &rows, &LoadSpec { requests, clients, qps, seed })?;
+    println!("{}", out.report.line("rpc"));
+    println!(
+        "versions served: {:?}  lost={}  reconnects={}",
+        out.versions, out.lost, out.reconnects
+    );
     Ok(())
 }
 
@@ -640,6 +863,8 @@ fn main() {
         "baseline" => cmd_baseline(&args),
         "tables" => cmd_tables(&args),
         "serve" => cmd_serve(&args),
+        "replica" => cmd_replica(&args),
+        "bench-rpc" => cmd_bench_rpc(&args),
         "stream" => cmd_stream(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {

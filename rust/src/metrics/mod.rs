@@ -1,7 +1,13 @@
 //! Lightweight metrics registry for the streaming coordinator, the
-//! serving mesh, and the CLI: atomic counters, gauges, and lock-free
-//! latency histograms with a printable snapshot. No external
-//! dependencies; safe to share across worker threads.
+//! serving mesh, the socket RPC tier, and the CLI: atomic counters,
+//! gauges, and lock-free latency histograms with a printable snapshot.
+//! No external dependencies; safe to share across worker threads.
+//!
+//! Registration is get-or-create by name, so independent subsystems
+//! sharing one [`Metrics`] converge on the same instrument — e.g. in a
+//! replica process the rpc server's probe handler and the delta-stream
+//! sync loop both bump `serve.rpc.catchups`, and a control-plane probe
+//! reads the combined truth.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};

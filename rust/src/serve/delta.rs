@@ -27,6 +27,13 @@
 //! instead of silently producing a franken-model;
 //! `tests/property_delta.rs` pins both properties across random
 //! incremental patch/rebuild sequences.
+//!
+//! Across the process boundary the same bytes flow unchanged: the rpc
+//! replication plane ([`crate::serve::rpc`]) broadcasts each published
+//! delta's wire buffer verbatim to subscribed replica processes, and a
+//! replica that hits [`DeltaApplyError::VersionGap`] (a dropped or
+//! missed delta) requests a full snapshot and byte-verifies it before
+//! rejoining the stream.
 
 use crate::cluster::sparse_lloyd::CentroidCoord;
 use crate::coreset::{SubspaceModel, SubspaceSolver};

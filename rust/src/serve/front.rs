@@ -11,6 +11,10 @@
 //! single request and the serial fast path answers it with no dispatch;
 //! under heavy load batches grow toward the cap and throughput scales
 //! with cores. `benches/serve_load.rs` gates the batched-vs-naive ratio.
+//! The socket tier ([`crate::serve::rpc`]) feeds this same front: each
+//! connection handler submits decoded rows through an [`AssignClient`],
+//! so remote callers get the identical batching, version discipline,
+//! and latency accounting as in-process ones.
 //!
 //! **Version discipline.** Each batch pins one replica
 //! ([`ModelMesh::model`], round-robin) and the dispatcher only moves its

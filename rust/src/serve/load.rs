@@ -120,8 +120,9 @@ pub fn synth_rows(model: &RkModel, n: usize, seed: u64) -> Vec<Vec<Value>> {
         .collect()
 }
 
-/// Exact percentile over a sorted sample (`0.0 < q ≤ 1.0`).
-fn pct(sorted: &[u64], q: f64) -> u64 {
+/// Exact percentile over a sorted sample (`0.0 < q ≤ 1.0`). Shared
+/// with the socket-tier load generator (`serve::rpc`).
+pub(crate) fn pct(sorted: &[u64], q: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }

@@ -12,10 +12,13 @@
 //!
 //! Multiple slots exist to spread read-lock traffic: the
 //! [`AssignFront`](crate::serve::AssignFront) round-robins batches over
-//! them, and a multi-process deployment would map each slot to a
-//! replica process (ROADMAP direction 2). Installs walk every slot, so
-//! slots may briefly disagree during a publish; the front's version
-//! floor keeps served versions monotone regardless.
+//! them, and the multi-process deployment is real now: each `rkmeans
+//! replica` process runs its own mesh fed by the writer's delta stream
+//! over [`crate::serve::rpc`] ([`install`](ModelMesh::install) is
+//! exactly what the replication plane calls after byte-verifying a
+//! snapshot or applying a delta). Installs walk every slot, so slots
+//! may briefly disagree during a publish; the front's version floor
+//! keeps served versions monotone regardless.
 
 use crate::metrics::{Counter, Metrics};
 use crate::rkmeans::RkModel;

@@ -29,26 +29,46 @@
 //!   bitwise reconstruction, hot-swap every slot. Delta-vs-snapshot
 //!   byte accounting lands in `serve.*` metrics.
 //!
+//! A fifth piece, [`rpc`], carries all of the above across a real
+//! **process boundary**: a length-prefixed framed protocol over TCP
+//! with an assign plane (encoded rows in, `Assignment{cluster,
+//! version}` out through the same micro-batching front), a replication
+//! plane (replica processes subscribe to the publisher's delta stream,
+//! recover from `VersionGap` via byte-verified snapshot catch-up, and
+//! rejoin), and a control plane (health/version probes). `rkmeans
+//! serve --listen` / `rkmeans replica --connect` run the two sides;
+//! see the [`rpc`] module docs for the failure semantics.
+//!
 //! [`load`] provides the open-loop generator ([`run_open_loop`]) and
 //! the un-batched contrast arm ([`run_naive_loop`]) that
-//! `benches/serve_load.rs` measures; `rkmeans serve` wires all of it
-//! into a CLI server loop fed by the incremental engine. Telemetry:
+//! `benches/serve_load.rs` measures; [`run_rpc_loop`] is the socket
+//! analogue `benches/rpc_load.rs` drives. `rkmeans serve` wires all of
+//! it into a CLI server loop fed by the incremental engine. Telemetry:
 //! `serve.requests`, `serve.batches`, `serve.assign_us.{count,p50,p99}`,
 //! `serve.batch_size.*`, `serve.swaps`, `serve.publishes`,
 //! `serve.delta_bytes`, `serve.snapshot_bytes`, `serve.stale_deltas`,
-//! `serve.version`, `serve.replicas`.
+//! `serve.version`, `serve.replicas`, plus the socket tier's
+//! `serve.rpc.{frames_in,frames_out,bytes_in,bytes_out,conns,
+//! subscribers,deltas_out,dropped_deltas,deltas_applied,stale_deltas,
+//! reconnects,catchups,catchup_serves,gaps}` counters and
+//! `serve.rpc.{assign_us,probe_us,apply_us}` histograms.
 
 pub mod delta;
 pub mod front;
 pub mod load;
 pub mod mesh;
 pub mod publish;
+pub mod rpc;
 
 pub use delta::{DeltaApplyError, ModelDelta, MODEL_DELTA_FORMAT_VERSION};
 pub use front::{AssignClient, AssignFront, Assignment, FrontOpts};
 pub use load::{run_naive_loop, run_open_loop, synth_rows, LoadReport, LoadSpec};
 pub use mesh::ModelMesh;
 pub use publish::{PublishStats, Publisher};
+pub use rpc::{
+    fetch_snapshot, probe, run_rpc_loop, send_stop, ReplicaSync, RpcLoadReport, RpcOpts, RpcServer,
+    SyncOpts,
+};
 
 #[cfg(test)]
 mod tests {

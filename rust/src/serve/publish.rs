@@ -78,6 +78,14 @@ impl Publisher {
     /// bitwise reconstruction before the swap (module docs). Returns the
     /// byte accounting; the mesh's `serve.*` counters accumulate it.
     pub fn publish(&mut self, next: &RkModel) -> Result<PublishStats> {
+        self.publish_wire(next).map(|(stats, _)| stats)
+    }
+
+    /// [`Publisher::publish`], but also hand back the verified delta
+    /// wire bytes — exactly what went through the decode→apply→byte
+    /// check — so a socket tier ([`crate::serve::rpc`]) can broadcast
+    /// the same bytes to out-of-process replicas.
+    pub fn publish_wire(&mut self, next: &RkModel) -> Result<(PublishStats, Vec<u8>)> {
         let delta = self.current.diff(next);
         let wire = delta.to_bytes();
         let snapshot = next.to_bytes();
@@ -105,12 +113,13 @@ impl Publisher {
         self.publishes.inc();
         self.delta_bytes.add(wire.len() as u64);
         self.snapshot_bytes.add(snapshot.len() as u64);
-        Ok(PublishStats {
+        let stats = PublishStats {
             version: next.version,
             delta_bytes: wire.len(),
             snapshot_bytes: snapshot.len(),
             changes: delta.changes(),
-        })
+        };
+        Ok((stats, wire))
     }
 }
 

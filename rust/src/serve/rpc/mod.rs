@@ -1,0 +1,1170 @@
+//! The socket RPC tier: the serving mesh across a real process boundary.
+//!
+//! PR 7's in-process tier ([`ModelMesh`] + [`AssignFront`](crate::serve::AssignFront)
+//! + [`Publisher`](crate::serve::Publisher)) already speaks versioned
+//! wire formats; this module carries them over TCP (std
+//! `TcpListener`/`TcpStream`, no extra dependencies) as three planes on
+//! one length-prefixed framed protocol ([`wire`]):
+//!
+//! * **Assign plane** — a client ships encoded rows
+//!   ([`wire::encode_row`]); the serving process answers
+//!   `Assignment{cluster, version}` through its local micro-batching
+//!   front, so socket clients get the same batching amortization as
+//!   in-process ones. Responses come back in request order per
+//!   connection, which is what lets [`run_rpc_loop`] pipeline a window
+//!   of requests per connection.
+//! * **Replication plane** — a replica process ([`ReplicaSync`])
+//!   subscribes to the writer's delta stream with the version it
+//!   already has. The writer registers the subscription *before*
+//!   snapshotting, then [`RpcServer::broadcast`] fans every published
+//!   delta (the exact bytes [`Publisher::publish_wire`](crate::serve::Publisher::publish_wire)
+//!   verified) to all live subscribers. On
+//!   [`DeltaApplyError::VersionGap`] the replica requests a full
+//!   snapshot, **byte-verifies** it (`from_bytes` then re-serialize
+//!   must reproduce the wire bytes exactly), installs it, and rejoins
+//!   the stream; deltas older than the installed version are skipped as
+//!   stale. [`RpcOpts::drop_every`] deterministically drops every Nth
+//!   delta per subscriber — the fault-injection hook the CI leg uses to
+//!   force a real gap → catch-up → rejoin cycle.
+//! * **Control plane** — an empty `PROBE` frame answers with
+//!   [`wire::ProbeReply`]: served version, role, replica count, and the
+//!   catch-up / gap counters the load generator and CI use to decide
+//!   "healthy and caught up".
+//!
+//! Failure semantics: every connection runs with read/write timeouts
+//! (reads double as the poll tick, so stop flags are honored within a
+//! tick); the replica's connect loop retries with seeded exponential
+//! backoff + jitter ([`SyncOpts`], deterministic under test); and the
+//! writer keeps publishing while replicas churn — a dead subscriber is
+//! pruned at the next broadcast, a reborn one catches up from its
+//! subscribe snapshot. Telemetry lands in `serve.rpc.*` (frames, bytes,
+//! connections, reconnects, catch-ups, gaps, dropped/applied deltas,
+//! and per-plane latency histograms).
+
+pub mod wire;
+
+use crate::data::Value;
+use crate::metrics::{Counter, Gauge, Histogram};
+use crate::rkmeans::RkModel;
+use crate::serve::load::{pct, LoadReport, LoadSpec};
+use crate::serve::{AssignClient, DeltaApplyError, ModelDelta, ModelMesh};
+use crate::util::timer;
+use crate::util::SplitMix64;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---- shared small helpers --------------------------------------------
+
+/// Microseconds since `t0` (saturating — a >584-millennium stall is not
+/// a representable latency).
+fn elapsed_us(t0: Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX)
+}
+
+/// The newest model across the mesh's replica slots (slots can disagree
+/// mid-install; the control and replication planes want the frontier).
+fn best_model(mesh: &ModelMesh) -> Arc<RkModel> {
+    let mut best = mesh.model(0);
+    for i in 1..mesh.replicas() {
+        let m = mesh.model(i);
+        if m.version > best.version {
+            best = m;
+        }
+    }
+    best
+}
+
+/// Seeded exponential backoff with jitter: `base · 2^(attempt-1)`
+/// capped at `cap`, scaled by a uniform factor in `[0.5, 1.0)` drawn
+/// from `rng` — so reconnect storms decorrelate but tests seeing the
+/// same seed see the same schedule.
+pub(crate) fn backoff_delay(
+    attempt: u32,
+    base_ms: u64,
+    cap_ms: u64,
+    rng: &mut SplitMix64,
+) -> Duration {
+    let shift = attempt.saturating_sub(1).min(16);
+    let exp = base_ms.saturating_mul(1u64 << shift).min(cap_ms).max(1);
+    let jitter = 0.5 + 0.5 * rng.next_f64();
+    Duration::from_millis(((exp as f64) * jitter).round().max(1.0) as u64)
+}
+
+/// One nonblocking-ish socket read under the connection's read timeout.
+enum Inbound {
+    /// `n` fresh bytes.
+    Data(usize),
+    /// Timeout tick — no data, connection still alive.
+    Idle,
+    /// EOF or a hard error — drop the connection.
+    Closed,
+}
+
+fn read_chunk(stream: &mut TcpStream, buf: &mut [u8]) -> Inbound {
+    match stream.read(buf) {
+        Ok(0) => Inbound::Closed,
+        Ok(n) => Inbound::Data(n),
+        // Unix reports a read timeout as WouldBlock, Windows as TimedOut.
+        Err(e)
+            if matches!(
+                e.kind(),
+                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+            ) =>
+        {
+            Inbound::Idle
+        }
+        Err(_) => Inbound::Closed,
+    }
+}
+
+fn configure(stream: &TcpStream, read_timeout: Duration, write_timeout: Duration) -> Result<()> {
+    stream.set_read_timeout(Some(read_timeout)).context("set read timeout")?;
+    stream.set_write_timeout(Some(write_timeout)).context("set write timeout")?;
+    let _ = stream.set_nodelay(true);
+    Ok(())
+}
+
+/// Write one frame; returns the frame's wire size.
+fn send_frame(stream: &mut TcpStream, frame_kind: u8, payload: &[u8]) -> std::io::Result<usize> {
+    let frame = wire::encode_frame(frame_kind, payload);
+    stream.write_all(&frame)?;
+    Ok(frame.len())
+}
+
+/// Block (under the stream's read timeout ticks) until one complete
+/// frame arrives or `deadline` elapses.
+fn read_one_frame(
+    stream: &mut TcpStream,
+    fb: &mut wire::FrameBuf,
+    deadline: Duration,
+) -> Result<(u8, Vec<u8>)> {
+    let t0 = timer::now();
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        if let Some(frame) = fb.next_frame()? {
+            return Ok(frame);
+        }
+        ensure!(t0.elapsed() < deadline, "timed out after {deadline:?} waiting for a frame");
+        match read_chunk(stream, &mut buf) {
+            Inbound::Data(n) => fb.extend(&buf[..n]),
+            Inbound::Idle => {}
+            Inbound::Closed => bail!("connection closed while waiting for a frame"),
+        }
+    }
+}
+
+// ---- the server ------------------------------------------------------
+
+/// Connection knobs for an [`RpcServer`].
+#[derive(Clone, Copy, Debug)]
+pub struct RpcOpts {
+    /// Per-connection read timeout; doubles as the handler poll tick
+    /// (stop flags and broadcast queues are serviced between reads).
+    pub read_timeout: Duration,
+    /// Per-connection write timeout.
+    pub write_timeout: Duration,
+    /// Fault injection: when `N > 0`, drop the 1st, (N+1)th, (2N+1)th…
+    /// delta per subscriber instead of sending it — forcing the replica
+    /// through a genuine `VersionGap` → snapshot catch-up cycle.
+    /// `0` disables.
+    pub drop_every: u64,
+}
+
+impl Default for RpcOpts {
+    fn default() -> RpcOpts {
+        RpcOpts {
+            read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+            drop_every: 0,
+        }
+    }
+}
+
+/// One registered delta-stream subscriber (frames pre-encoded by
+/// [`RpcServer::broadcast`], forwarded to the socket by its connection
+/// handler).
+struct Subscriber {
+    tx: Sender<Vec<u8>>,
+    /// Deltas considered for this subscriber (drives `drop_every`).
+    seq: u64,
+}
+
+struct ServerShared {
+    mesh: Arc<ModelMesh>,
+    role: u64,
+    opts: RpcOpts,
+    stop: AtomicBool,
+    subscribers: Mutex<Vec<Subscriber>>,
+    frames_in: Arc<Counter>,
+    frames_out: Arc<Counter>,
+    bytes_in: Arc<Counter>,
+    bytes_out: Arc<Counter>,
+    conns: Arc<Counter>,
+    catchup_serves: Arc<Counter>,
+    deltas_out: Arc<Counter>,
+    dropped_deltas: Arc<Counter>,
+    /// Replica-side counters (shared registry) read back by probes.
+    catchups: Arc<Counter>,
+    gaps: Arc<Counter>,
+    subscribers_gauge: Arc<Gauge>,
+    assign_us: Arc<Histogram>,
+    probe_us: Arc<Histogram>,
+}
+
+impl ServerShared {
+    fn lock_subscribers(&self) -> std::sync::MutexGuard<'_, Vec<Subscriber>> {
+        self.subscribers.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A framed-protocol server over one [`TcpListener`] (module docs):
+/// assign, replication, and control planes on every accepted
+/// connection. Runs until a `STOP` frame arrives or
+/// [`RpcServer::request_stop`] is called.
+pub struct RpcServer {
+    inner: Arc<ServerShared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Start serving on `listener`. `client` is the local assign-plane
+    /// entry (a fresh clone is handed to every connection handler);
+    /// `role` is [`wire::ROLE_WRITER`] or [`wire::ROLE_REPLICA`] and is
+    /// only reported by probes.
+    pub fn start(
+        listener: TcpListener,
+        mesh: Arc<ModelMesh>,
+        client: AssignClient,
+        role: u64,
+        opts: RpcOpts,
+    ) -> Result<RpcServer> {
+        let addr = listener.local_addr().context("listener local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let m = mesh.metrics().clone();
+        let inner = Arc::new(ServerShared {
+            role,
+            opts,
+            stop: AtomicBool::new(false),
+            subscribers: Mutex::new(Vec::new()),
+            frames_in: m.counter("serve.rpc.frames_in"),
+            frames_out: m.counter("serve.rpc.frames_out"),
+            bytes_in: m.counter("serve.rpc.bytes_in"),
+            bytes_out: m.counter("serve.rpc.bytes_out"),
+            conns: m.counter("serve.rpc.conns"),
+            catchup_serves: m.counter("serve.rpc.catchup_serves"),
+            deltas_out: m.counter("serve.rpc.deltas_out"),
+            dropped_deltas: m.counter("serve.rpc.dropped_deltas"),
+            catchups: m.counter("serve.rpc.catchups"),
+            gaps: m.counter("serve.rpc.gaps"),
+            subscribers_gauge: m.gauge("serve.rpc.subscribers"),
+            assign_us: m.histogram("serve.rpc.assign_us"),
+            probe_us: m.histogram("serve.rpc.probe_us"),
+            mesh,
+        });
+        let shared = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("rk-rpc-accept".to_string())
+            .spawn(move || accept_loop(&shared, &listener, &client))
+            .expect("spawn rpc accept loop");
+        Ok(RpcServer { inner, addr, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Fan a published delta (its verified wire bytes) out to every
+    /// live subscriber, pruning dead ones; returns the number of
+    /// subscribers still registered. Honors the `drop_every` fault
+    /// schedule per subscriber.
+    pub fn broadcast(&self, delta_wire: &[u8]) -> usize {
+        let frame = wire::encode_frame(wire::kind::DELTA, delta_wire);
+        let drop_every = self.inner.opts.drop_every;
+        let mut subs = self.inner.lock_subscribers();
+        subs.retain_mut(|s| {
+            let drop_this = drop_every > 0 && s.seq % drop_every == 0;
+            s.seq += 1;
+            if drop_this {
+                self.inner.dropped_deltas.inc();
+                return true;
+            }
+            match s.tx.send(frame.clone()) {
+                Ok(()) => {
+                    self.inner.deltas_out.inc();
+                    true
+                }
+                Err(_) => false,
+            }
+        });
+        self.inner.subscribers_gauge.set(i64::try_from(subs.len()).unwrap_or(i64::MAX));
+        subs.len()
+    }
+
+    /// Subscribers currently registered on the replication plane.
+    pub fn subscriber_count(&self) -> usize {
+        self.inner.lock_subscribers().len()
+    }
+
+    /// Has a `STOP` frame (or [`RpcServer::request_stop`]) been seen?
+    pub fn stop_requested(&self) -> bool {
+        self.inner.stop.load(Ordering::SeqCst)
+    }
+
+    /// Ask the accept loop and every handler to wind down (they notice
+    /// within one read-timeout tick).
+    pub fn request_stop(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the server stops (a `STOP` frame arrives), joining
+    /// the accept loop and all connection handlers.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// [`RpcServer::request_stop`] + [`RpcServer::wait`].
+    pub fn shutdown(mut self) {
+        self.request_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.request_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept-loop body: poll-accept (the listener is nonblocking so the
+/// stop flag stays responsive), one handler thread per connection, all
+/// joined on the way out.
+fn accept_loop(shared: &Arc<ServerShared>, listener: &TcpListener, client: &AssignClient) {
+    let mut handles: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let sh = Arc::clone(shared);
+                let cl = client.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("rk-rpc-conn".to_string())
+                    .spawn(move || handle_conn(&sh, &cl, stream));
+                match spawned {
+                    Ok(h) => handles.push(h),
+                    Err(_) => std::thread::sleep(shared.opts.read_timeout),
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                std::thread::sleep(shared.opts.read_timeout.min(Duration::from_millis(20)));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Per-connection handler: interleaves (a) forwarding broadcast frames
+/// to a subscribed replica, (b) decoding inbound frames, (c) answering
+/// assign batches in request order. Exits on EOF, protocol desync, I/O
+/// error, or the server stop flag.
+fn handle_conn(shared: &ServerShared, client: &AssignClient, mut stream: TcpStream) {
+    if configure(&stream, shared.opts.read_timeout, shared.opts.write_timeout).is_err() {
+        return;
+    }
+    shared.conns.inc();
+    let mut fb = wire::FrameBuf::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut sub_rx: Option<Receiver<Vec<u8>>> = None;
+
+    'conn: loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // (a) outbound replication frames queued by `broadcast`.
+        if let Some(rx) = &sub_rx {
+            while let Ok(frame) = rx.try_recv() {
+                if stream.write_all(&frame).is_err() {
+                    break 'conn;
+                }
+                shared.frames_out.inc();
+                shared.bytes_out.add(u64::try_from(frame.len()).unwrap_or(u64::MAX));
+            }
+        }
+        // (b) inbound bytes (the read timeout is the poll tick).
+        match read_chunk(&mut stream, &mut buf) {
+            Inbound::Data(n) => {
+                shared.bytes_in.add(u64::try_from(n).unwrap_or(u64::MAX));
+                fb.extend(&buf[..n]);
+            }
+            Inbound::Idle => continue,
+            Inbound::Closed => break,
+        }
+        // (c) decode everything buffered; assign replies keep arrival order.
+        let mut pending: Vec<(Instant, Receiver<crate::serve::Assignment>)> = Vec::new();
+        loop {
+            match fb.next_frame() {
+                Ok(Some((k, payload))) => {
+                    shared.frames_in.inc();
+                    match k {
+                        wire::kind::ASSIGN_REQ => match wire::decode_row(&payload) {
+                            Ok(row) => pending.push((timer::now(), client.submit(row))),
+                            Err(e) => {
+                                if write_error(shared, &mut stream, &e.to_string()).is_err() {
+                                    break 'conn;
+                                }
+                            }
+                        },
+                        wire::kind::PROBE => {
+                            let t0 = timer::now();
+                            let reply = probe_reply(shared).to_bytes();
+                            if write_counted(shared, &mut stream, wire::kind::PROBE_RESP, &reply)
+                                .is_err()
+                            {
+                                break 'conn;
+                            }
+                            shared.probe_us.observe(elapsed_us(t0));
+                        }
+                        wire::kind::SUBSCRIBE => {
+                            let have = match wire::decode_subscribe(&payload) {
+                                Ok(v) => v,
+                                Err(_) => break 'conn,
+                            };
+                            // Register *before* snapshotting so no delta
+                            // published in between is missed; the replica
+                            // stale-skips any overlap.
+                            let (tx, rx) = channel::<Vec<u8>>();
+                            {
+                                let mut subs = shared.lock_subscribers();
+                                subs.push(Subscriber { tx, seq: 0 });
+                                shared
+                                    .subscribers_gauge
+                                    .set(i64::try_from(subs.len()).unwrap_or(i64::MAX));
+                            }
+                            sub_rx = Some(rx);
+                            let latest = best_model(&shared.mesh);
+                            if latest.version != have {
+                                shared.catchup_serves.inc();
+                                let bytes = latest.to_bytes();
+                                if write_counted(shared, &mut stream, wire::kind::SNAPSHOT, &bytes)
+                                    .is_err()
+                                {
+                                    break 'conn;
+                                }
+                            }
+                        }
+                        wire::kind::SNAPSHOT_REQ => {
+                            shared.catchup_serves.inc();
+                            let bytes = best_model(&shared.mesh).to_bytes();
+                            if write_counted(shared, &mut stream, wire::kind::SNAPSHOT, &bytes)
+                                .is_err()
+                            {
+                                break 'conn;
+                            }
+                        }
+                        wire::kind::STOP => {
+                            shared.stop.store(true, Ordering::SeqCst);
+                            break 'conn;
+                        }
+                        other => {
+                            let msg = format!("unexpected frame kind {other}");
+                            if write_error(shared, &mut stream, &msg).is_err() {
+                                break 'conn;
+                            }
+                        }
+                    }
+                }
+                Ok(None) => break,
+                // Desynchronized stream (corrupt length prefix): drop it.
+                Err(_) => break 'conn,
+            }
+        }
+        for (t0, rx) in pending {
+            let a = match rx.recv() {
+                Ok(a) => a,
+                Err(_) => break 'conn,
+            };
+            let payload = wire::encode_assignment(a.cluster, a.version);
+            if write_counted(shared, &mut stream, wire::kind::ASSIGN_RESP, &payload).is_err() {
+                break 'conn;
+            }
+            shared.assign_us.observe(elapsed_us(t0));
+        }
+    }
+}
+
+fn probe_reply(shared: &ServerShared) -> wire::ProbeReply {
+    let catchups = if shared.role == wire::ROLE_WRITER {
+        shared.catchup_serves.get()
+    } else {
+        shared.catchups.get()
+    };
+    wire::ProbeReply {
+        version: best_model(&shared.mesh).version,
+        role: shared.role,
+        replicas: wire::u64_of(shared.mesh.replicas()),
+        catchups,
+        gaps: shared.gaps.get(),
+    }
+}
+
+fn write_counted(
+    shared: &ServerShared,
+    stream: &mut TcpStream,
+    frame_kind: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    let n = send_frame(stream, frame_kind, payload)?;
+    shared.frames_out.inc();
+    shared.bytes_out.add(u64::try_from(n).unwrap_or(u64::MAX));
+    Ok(())
+}
+
+fn write_error(shared: &ServerShared, stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+    write_counted(shared, stream, wire::kind::ERROR, msg.as_bytes())
+}
+
+// ---- the replica-side subscriber ------------------------------------
+
+/// Reconnect/backoff knobs for [`ReplicaSync`].
+#[derive(Clone, Copy, Debug)]
+pub struct SyncOpts {
+    /// Consecutive failed connects tolerated before the sync thread
+    /// gives up.
+    pub retries: u32,
+    /// Backoff base, milliseconds (doubles per consecutive failure).
+    pub base_ms: u64,
+    /// Backoff cap, milliseconds.
+    pub cap_ms: u64,
+    /// Jitter seed ([`backoff_delay`] is deterministic in it).
+    pub seed: u64,
+    /// Subscribe-connection read timeout (also the poll tick).
+    pub read_timeout: Duration,
+    /// Subscribe-connection write timeout.
+    pub write_timeout: Duration,
+}
+
+impl Default for SyncOpts {
+    fn default() -> SyncOpts {
+        SyncOpts {
+            retries: 40,
+            base_ms: 20,
+            cap_ms: 2_000,
+            seed: 0x5eed,
+            read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// The replica's replication-plane client: a thread that subscribes to
+/// the writer's delta stream, applies verified deltas to the local
+/// mesh, and recovers from gaps and dead connections (module docs).
+pub struct ReplicaSync {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ReplicaSync {
+    /// Start the sync thread against the writer at `addr`.
+    pub fn start(addr: String, mesh: Arc<ModelMesh>, opts: SyncOpts) -> ReplicaSync {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("rk-rpc-sync".to_string())
+            .spawn(move || sync_loop(&mesh, &addr, &opts, &flag))
+            .expect("spawn replica sync loop");
+        ReplicaSync { stop, handle: Some(handle) }
+    }
+
+    /// Stop subscribing and join the sync thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplicaSync {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Verify a snapshot payload byte-exactly and install it if it moves
+/// the mesh forward. Returns the installed (or already-held) version,
+/// or `None` when verification fails.
+fn install_snapshot(mesh: &ModelMesh, payload: &[u8]) -> Option<u64> {
+    let model = RkModel::from_bytes(payload).ok()?;
+    if model.to_bytes() != payload {
+        return None;
+    }
+    let v = model.version;
+    if v >= mesh.latest_version() {
+        mesh.install(Arc::new(model));
+    }
+    Some(v)
+}
+
+fn sync_loop(mesh: &ModelMesh, addr: &str, opts: &SyncOpts, stop: &AtomicBool) {
+    let m = mesh.metrics().clone();
+    let reconnects = m.counter("serve.rpc.reconnects");
+    let catchups = m.counter("serve.rpc.catchups");
+    let gaps = m.counter("serve.rpc.gaps");
+    let stale = m.counter("serve.rpc.stale_deltas");
+    let applied = m.counter("serve.rpc.deltas_applied");
+    let apply_us = m.histogram("serve.rpc.apply_us");
+
+    let mut rng = SplitMix64::new(opts.seed);
+    let mut attempt = 0u32;
+    let mut connected_before = false;
+    'outer: while !stop.load(Ordering::SeqCst) {
+        let mut stream = match TcpStream::connect(addr) {
+            Ok(s) => s,
+            Err(_) => {
+                attempt += 1;
+                if attempt > opts.retries {
+                    break;
+                }
+                std::thread::sleep(backoff_delay(attempt, opts.base_ms, opts.cap_ms, &mut rng));
+                continue;
+            }
+        };
+        attempt = 0;
+        if connected_before {
+            reconnects.inc();
+        }
+        connected_before = true;
+        if configure(&stream, opts.read_timeout, opts.write_timeout).is_err() {
+            continue;
+        }
+        let have = mesh.latest_version();
+        if send_frame(&mut stream, wire::kind::SUBSCRIBE, &wire::encode_subscribe(have)).is_err() {
+            continue;
+        }
+
+        let mut fb = wire::FrameBuf::new();
+        let mut buf = vec![0u8; 256 * 1024];
+        // While a snapshot is in flight, deltas are unusable (they would
+        // each re-trigger a gap); skip them until the snapshot lands.
+        let mut awaiting_snapshot = false;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                break 'outer;
+            }
+            match read_chunk(&mut stream, &mut buf) {
+                Inbound::Data(n) => fb.extend(&buf[..n]),
+                Inbound::Idle => continue,
+                Inbound::Closed => continue 'outer,
+            }
+            loop {
+                match fb.next_frame() {
+                    Ok(Some((wire::kind::SNAPSHOT, payload))) => {
+                        match install_snapshot(mesh, &payload) {
+                            Some(_) => {
+                                catchups.inc();
+                                awaiting_snapshot = false;
+                            }
+                            None => continue 'outer,
+                        }
+                    }
+                    Ok(Some((wire::kind::DELTA, payload))) => {
+                        if awaiting_snapshot {
+                            continue;
+                        }
+                        let delta = match ModelDelta::from_bytes(&payload) {
+                            Ok(d) => d,
+                            Err(_) => continue 'outer,
+                        };
+                        let cur = best_model(mesh);
+                        if delta.to_version <= cur.version {
+                            stale.inc();
+                            continue;
+                        }
+                        let t0 = timer::now();
+                        match cur.apply_delta(&delta) {
+                            Ok(next) => {
+                                mesh.install(Arc::new(next));
+                                applied.inc();
+                                apply_us.observe(elapsed_us(t0));
+                            }
+                            Err(DeltaApplyError::VersionGap { .. }) => {
+                                gaps.inc();
+                                awaiting_snapshot = true;
+                                if send_frame(&mut stream, wire::kind::SNAPSHOT_REQ, &[]).is_err() {
+                                    continue 'outer;
+                                }
+                            }
+                            Err(_) => continue 'outer,
+                        }
+                    }
+                    // The writer never sends anything else on this
+                    // connection; tolerate strays.
+                    Ok(Some(_)) => {}
+                    Ok(None) => break,
+                    Err(_) => continue 'outer,
+                }
+            }
+        }
+    }
+}
+
+// ---- standalone control-plane clients --------------------------------
+
+/// Fetch and byte-verify a full model snapshot from `addr`.
+pub fn fetch_snapshot(addr: &str, deadline: Duration) -> Result<RkModel> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    configure(&stream, Duration::from_millis(50), Duration::from_secs(5))?;
+    send_frame(&mut stream, wire::kind::SNAPSHOT_REQ, &[]).context("send snapshot request")?;
+    let mut fb = wire::FrameBuf::new();
+    let (k, payload) = read_one_frame(&mut stream, &mut fb, deadline)?;
+    ensure!(k == wire::kind::SNAPSHOT, "expected a snapshot frame, got kind {k}");
+    let model = RkModel::from_bytes(&payload).context("decode snapshot")?;
+    ensure!(model.to_bytes() == payload, "snapshot bytes failed round-trip verification");
+    Ok(model)
+}
+
+/// Health/version probe against `addr`'s control plane.
+pub fn probe(addr: &str, deadline: Duration) -> Result<wire::ProbeReply> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    configure(&stream, Duration::from_millis(50), Duration::from_secs(5))?;
+    send_frame(&mut stream, wire::kind::PROBE, &[]).context("send probe")?;
+    let mut fb = wire::FrameBuf::new();
+    let (k, payload) = read_one_frame(&mut stream, &mut fb, deadline)?;
+    ensure!(k == wire::kind::PROBE_RESP, "expected a probe reply, got kind {k}");
+    Ok(wire::ProbeReply::from_bytes(&payload)?)
+}
+
+/// Ask the server at `addr` to shut down cleanly.
+pub fn send_stop(addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    send_frame(&mut stream, wire::kind::STOP, &[]).context("send stop")?;
+    Ok(())
+}
+
+// ---- the socket load generator ---------------------------------------
+
+/// In-flight request cap per load-generator connection.
+const WINDOW: usize = 32;
+
+/// What [`run_rpc_loop`] measured, beyond the shared [`LoadReport`].
+#[derive(Clone, Debug)]
+pub struct RpcLoadReport {
+    /// Latency/throughput summary (same shape as the in-process arms).
+    pub report: LoadReport,
+    /// Every distinct model version observed in a reply, sorted.
+    pub versions: Vec<u64>,
+    /// Requests whose replies were lost to connection churn (sent but
+    /// never answered; not counted in `report.requests`).
+    pub lost: usize,
+    /// Mid-run reconnects across all clients.
+    pub reconnects: usize,
+}
+
+struct ClientOut {
+    samples: Vec<(u64, u64)>,
+    lost: usize,
+    reconnects: usize,
+    monotonic: bool,
+}
+
+fn connect_next(
+    addrs: &[String],
+    which: &mut usize,
+    rng: &mut SplitMix64,
+    read_timeout: Duration,
+) -> Option<TcpStream> {
+    for attempt in 1..=20u32 {
+        *which = (*which + 1) % addrs.len();
+        if let Ok(stream) = TcpStream::connect(addrs[*which].as_str()) {
+            if configure(&stream, read_timeout, Duration::from_secs(5)).is_ok() {
+                return Some(stream);
+            }
+        }
+        std::thread::sleep(backoff_delay(attempt, 10, 500, rng));
+    }
+    None
+}
+
+/// Drain whatever responses are available (one read tick); pops one
+/// stamp per response in FIFO order. Returns `false` when the
+/// connection died.
+fn drain_responses(
+    stream: &mut TcpStream,
+    fb: &mut wire::FrameBuf,
+    buf: &mut [u8],
+    stamps: &mut VecDeque<Instant>,
+    out: &mut ClientOut,
+    last_version: &mut u64,
+) -> bool {
+    match read_chunk(stream, buf) {
+        Inbound::Data(n) => fb.extend(&buf[..n]),
+        Inbound::Idle => return true,
+        Inbound::Closed => return false,
+    }
+    loop {
+        match fb.next_frame() {
+            Ok(Some((wire::kind::ASSIGN_RESP, payload))) => {
+                let t0 = match stamps.pop_front() {
+                    Some(t0) => t0,
+                    None => return false, // response without a request: desync
+                };
+                match wire::decode_assignment(&payload) {
+                    Ok((_cluster, version)) => {
+                        out.monotonic &= version >= *last_version;
+                        *last_version = version;
+                        out.samples.push((elapsed_us(t0), version));
+                    }
+                    Err(_) => return false,
+                }
+            }
+            // An ERROR frame consumes one request slot without a sample.
+            Ok(Some((wire::kind::ERROR, _))) => {
+                if stamps.pop_front().is_none() {
+                    return false;
+                }
+                out.lost += 1;
+            }
+            Ok(Some(_)) => {}
+            Ok(None) => return true,
+            Err(_) => return false,
+        }
+    }
+}
+
+fn client_loop(
+    idx: usize,
+    addrs: &[String],
+    share: Vec<Vec<Value>>,
+    interval: Option<Duration>,
+    seed: u64,
+    read_timeout: Duration,
+) -> ClientOut {
+    let mut out = ClientOut {
+        samples: Vec::with_capacity(share.len()),
+        lost: 0,
+        reconnects: 0,
+        monotonic: true,
+    };
+    let mut rng = SplitMix64::new(seed);
+    // Start the rotation so the first attempt lands on `idx % len`.
+    let mut which = (idx + addrs.len().saturating_sub(1)) % addrs.len().max(1);
+    let mut stream = match connect_next(addrs, &mut which, &mut rng, read_timeout) {
+        Some(s) => s,
+        None => return out,
+    };
+    let mut fb = wire::FrameBuf::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut stamps: VecDeque<Instant> = VecDeque::with_capacity(WINDOW);
+    let mut last_version = 0u64;
+    let stall_limit = Duration::from_secs(15);
+
+    let mut reconnect = |stream: &mut TcpStream,
+                         fb: &mut wire::FrameBuf,
+                         stamps: &mut VecDeque<Instant>,
+                         out: &mut ClientOut,
+                         rng: &mut SplitMix64|
+     -> bool {
+        out.lost += stamps.len();
+        stamps.clear();
+        *fb = wire::FrameBuf::new();
+        match connect_next(addrs, &mut which, rng, read_timeout) {
+            Some(s) => {
+                *stream = s;
+                out.reconnects += 1;
+                true
+            }
+            None => false,
+        }
+    };
+
+    let mut next_at = timer::now();
+    'send: for row in &share {
+        if let Some(iv) = interval {
+            let now = timer::now();
+            if now < next_at {
+                std::thread::sleep(next_at - now);
+            }
+            next_at += iv;
+        }
+        // Keep at most WINDOW requests in flight; a full window is the
+        // one place the sender blocks on responses.
+        let mut stalled_since = timer::now();
+        while stamps.len() >= WINDOW {
+            let before = stamps.len();
+            let dead = !drain_responses(
+                &mut stream,
+                &mut fb,
+                &mut buf,
+                &mut stamps,
+                &mut out,
+                &mut last_version,
+            );
+            if (dead || stalled_since.elapsed() > stall_limit)
+                && !reconnect(&mut stream, &mut fb, &mut stamps, &mut out, &mut rng)
+            {
+                return out;
+            }
+            if stamps.len() < before {
+                stalled_since = timer::now();
+            }
+        }
+        let payload = wire::encode_row(row);
+        loop {
+            match send_frame(&mut stream, wire::kind::ASSIGN_REQ, &payload) {
+                Ok(_) => {
+                    stamps.push_back(timer::now());
+                    break;
+                }
+                Err(_) => {
+                    if !reconnect(&mut stream, &mut fb, &mut stamps, &mut out, &mut rng) {
+                        break 'send;
+                    }
+                }
+            }
+        }
+    }
+    // Drain the tail.
+    let mut stalled_since = timer::now();
+    while !stamps.is_empty() {
+        let before = stamps.len();
+        let ok = drain_responses(
+            &mut stream,
+            &mut fb,
+            &mut buf,
+            &mut stamps,
+            &mut out,
+            &mut last_version,
+        );
+        if !ok {
+            out.lost += stamps.len();
+            break;
+        }
+        if stamps.len() < before {
+            stalled_since = timer::now();
+        } else if stalled_since.elapsed() > stall_limit {
+            out.lost += stamps.len();
+            break;
+        }
+    }
+    out
+}
+
+/// Drive the assign plane of the servers at `addrs` with
+/// `spec.requests` rows cycled from `rows`: `spec.clients` threads,
+/// each pipelining up to [`WINDOW`] requests on one connection
+/// (round-robined over `addrs`), reconnecting to the next address on
+/// connection death — the socket analogue of
+/// [`run_open_loop`](crate::serve::run_open_loop), measured the same
+/// way so the bench arms compare like for like.
+pub fn run_rpc_loop(
+    addrs: &[String],
+    rows: &[Vec<Value>],
+    spec: &LoadSpec,
+) -> Result<RpcLoadReport> {
+    ensure!(!addrs.is_empty(), "need at least one server address");
+    ensure!(!rows.is_empty(), "need at least one request row");
+    let clients = spec.clients.max(1);
+    let total = spec.requests;
+    let interval = spec.qps.map(|q| Duration::from_secs_f64(clients as f64 / q.max(1e-9)));
+    let read_timeout = Duration::from_millis(20);
+
+    let t0 = timer::now();
+    let handles: Vec<JoinHandle<ClientOut>> = (0..clients)
+        .map(|c| {
+            let addrs = addrs.to_vec();
+            let share: Vec<Vec<Value>> = (0..total / clients + usize::from(c < total % clients))
+                .map(|i| rows[(c + i * clients) % rows.len()].clone())
+                .collect();
+            let seed = spec.seed ^ wire::u64_of(c).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            std::thread::spawn(move || client_loop(c, &addrs, share, interval, seed, read_timeout))
+        })
+        .collect();
+
+    let mut latencies = Vec::with_capacity(total);
+    let mut versions: Vec<u64> = Vec::new();
+    let (mut min_v, mut max_v) = (u64::MAX, 0u64);
+    let mut monotonic = true;
+    let (mut lost, mut reconnects) = (0usize, 0usize);
+    for h in handles {
+        let o = h.join().expect("rpc load client thread");
+        monotonic &= o.monotonic;
+        lost += o.lost;
+        reconnects += o.reconnects;
+        for (lat, v) in o.samples {
+            latencies.push(lat);
+            versions.push(v);
+            min_v = min_v.min(v);
+            max_v = max_v.max(v);
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    versions.sort_unstable();
+    versions.dedup();
+    let report = LoadReport {
+        requests: latencies.len(),
+        elapsed_s,
+        qps: latencies.len() as f64 / elapsed_s.max(1e-12),
+        p50_us: pct(&latencies, 0.50),
+        p99_us: pct(&latencies, 0.99),
+        min_version: if latencies.is_empty() { 0 } else { min_v },
+        max_version: max_v,
+        monotonic,
+    };
+    Ok(RpcLoadReport { report, versions, lost, reconnects })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::sparse_lloyd::CentroidCoord;
+    use crate::metrics::Metrics;
+    use crate::rkmeans::{ClusterOpts, RkPipeline, SubspaceOpts};
+    use crate::serve::{synth_rows, AssignFront, FrontOpts, Publisher};
+    use crate::synthetic::{retailer, Scale};
+    use crate::util::exec::ExecPool;
+
+    fn model(version: u64) -> RkModel {
+        let db = retailer::generate(Scale::tiny(), 7);
+        let feq = retailer::feq();
+        let pipe = RkPipeline::plan(&db, &feq).expect("plan");
+        let marginals = pipe.marginals().expect("marginals");
+        let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).expect("subspaces");
+        pipe.coreset(&subspaces)
+            .expect("coreset")
+            .cluster(&ClusterOpts::new(4))
+            .with_version(version)
+    }
+
+    fn bump(base: &RkModel, version: u64) -> RkModel {
+        let mut next = base.clone().with_version(version);
+        match &mut next.centroids[0][0] {
+            CentroidCoord::Continuous(mu) => *mu += 0.25 * version as f64,
+            CentroidCoord::Categorical(beta) => beta[0] += 0.125 * version as f64,
+        }
+        next
+    }
+
+    #[test]
+    fn backoff_is_seeded_deterministic_and_capped() {
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        let da: Vec<Duration> = (1..=8).map(|i| backoff_delay(i, 20, 500, &mut a)).collect();
+        let db: Vec<Duration> = (1..=8).map(|i| backoff_delay(i, 20, 500, &mut b)).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        for (i, d) in da.iter().enumerate() {
+            let exp = (20u64 << i.min(16)).min(500);
+            assert!(d.as_millis() <= u128::from(exp), "jitter only shrinks: {d:?} vs {exp}ms");
+            assert!(d.as_millis() >= u128::from(exp / 2).max(1), "jitter floor: {d:?} vs {exp}ms");
+        }
+        let mut c = SplitMix64::new(10);
+        assert_ne!(da, (1..=8).map(|i| backoff_delay(i, 20, 500, &mut c)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rpc_tier_serves_probes_assigns_and_recovers_from_forced_gaps() {
+        // Writer side: mesh + front + server with every 1st-of-2 deltas
+        // dropped per subscriber (forces a genuine VersionGap).
+        let v1 = model(1);
+        let writer_metrics = Metrics::new();
+        let writer_mesh = ModelMesh::new(v1.clone(), 2, writer_metrics.clone());
+        let front =
+            AssignFront::start(Arc::clone(&writer_mesh), FrontOpts::default(), ExecPool::new(2));
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let opts = RpcOpts { drop_every: 2, ..RpcOpts::default() };
+        let server = RpcServer::start(
+            listener,
+            Arc::clone(&writer_mesh),
+            front.client(),
+            wire::ROLE_WRITER,
+            opts,
+        )
+        .expect("start rpc server");
+        let addr = server.local_addr().to_string();
+
+        // Control plane: snapshot fetch is byte-identical to the model.
+        let fetched = fetch_snapshot(&addr, Duration::from_secs(20)).expect("fetch snapshot");
+        assert_eq!(fetched.to_bytes(), v1.to_bytes());
+        let p = probe(&addr, Duration::from_secs(20)).expect("probe");
+        assert_eq!((p.version, p.role, p.replicas), (1, wire::ROLE_WRITER, 2));
+
+        // Replica side: own mesh seeded from the fetched snapshot.
+        let replica_metrics = Metrics::new();
+        let replica_mesh = ModelMesh::new(fetched, 1, replica_metrics.clone());
+        let sync = ReplicaSync::start(
+            addr.clone(),
+            Arc::clone(&replica_mesh),
+            SyncOpts { seed: 11, ..SyncOpts::default() },
+        );
+
+        // Wait until the subscription registers, then publish v2 (delta
+        // dropped by fault injection) and v3 (delivered → VersionGap →
+        // snapshot catch-up → rejoin).
+        let t0 = timer::now();
+        while server.subscriber_count() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(20), "replica never subscribed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut publisher = Publisher::new(Arc::clone(&writer_mesh));
+        let v2 = bump(&v1, 2);
+        let (_, wire2) = publisher.publish_wire(&v2).expect("publish v2");
+        server.broadcast(&wire2);
+        let v3 = bump(&v2, 3);
+        let (_, wire3) = publisher.publish_wire(&v3).expect("publish v3");
+        server.broadcast(&wire3);
+
+        let t0 = timer::now();
+        while replica_mesh.latest_version() < 3 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "replica stuck at version {} (gaps={}, catchups={})",
+                replica_mesh.latest_version(),
+                replica_metrics.counter("serve.rpc.gaps").get(),
+                replica_metrics.counter("serve.rpc.catchups").get()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(replica_mesh.model(0).to_bytes(), v3.to_bytes(), "catch-up is byte-exact");
+        assert!(replica_metrics.counter("serve.rpc.gaps").get() >= 1, "fault injection fired");
+        assert!(replica_metrics.counter("serve.rpc.catchups").get() >= 1);
+        assert!(writer_metrics.counter("serve.rpc.dropped_deltas").get() >= 1);
+
+        // Assign plane over the socket: every reply is a published
+        // version and clusters are in range.
+        let rows = synth_rows(&v1, 8, 13);
+        let spec = LoadSpec { requests: 64, clients: 2, qps: None, seed: 5 };
+        let out = run_rpc_loop(&[addr.clone()], &rows, &spec).expect("rpc load");
+        assert_eq!(out.report.requests + out.lost, 64);
+        assert!(out.report.monotonic);
+        for v in &out.versions {
+            assert!([1, 2, 3].contains(v), "unpublished version {v} served");
+        }
+
+        sync.shutdown();
+        send_stop(&addr).expect("send stop");
+        server.wait();
+        front.shutdown();
+    }
+}

@@ -1,0 +1,446 @@
+//! Wire codec for the socket RPC tier: length-prefixed frames plus the
+//! payload encodings that are *not* already covered by the model wire
+//! formats (`RkModel::to_bytes` / `ModelDelta::to_bytes` travel as
+//! opaque payloads).
+//!
+//! # Frame format
+//!
+//! ```text
+//! [u32 LE total_len] [u8 kind] [payload; total_len - 1]
+//! ```
+//!
+//! `total_len` counts the kind byte plus the payload, so an empty frame
+//! has `total_len == 1`. Frames larger than [`MAX_FRAME`] are rejected
+//! on both encode and decode — a corrupt length prefix must not drive
+//! an allocation.
+//!
+//! # Determinism contract
+//!
+//! This file is covered by rklint's `unchecked-cast-in-wire` rule
+//! (alongside `rkmeans/model.rs` and `serve/delta.rs`): every numeric
+//! conversion goes through `try_from` / `from_le_bytes` / bit casts, so
+//! a row or counter that does not fit its wire field is a checked error,
+//! never a silent truncation. Encoding is bitwise-deterministic: the
+//! same values always produce the same bytes (f64 travels as its IEEE
+//! bit pattern).
+
+use crate::data::Value;
+
+/// Hard ceiling on a single frame (kind byte + payload). Snapshots of
+/// production-sized models are a few MiB; 256 MiB is comfortably above
+/// any legitimate frame and comfortably below an OOM from a corrupt
+/// length prefix.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Frame kinds (the `u8` after the length prefix).
+pub mod kind {
+    /// Client → replica: one encoded row (see [`super::encode_row`]).
+    pub const ASSIGN_REQ: u8 = 1;
+    /// Replica → client: `cluster u64 LE` + `version u64 LE`.
+    pub const ASSIGN_RESP: u8 = 2;
+    /// Any → any: empty health/version probe.
+    pub const PROBE: u8 = 3;
+    /// Probe answer: five `u64 LE` words (see [`super::ProbeReply`]).
+    pub const PROBE_RESP: u8 = 4;
+    /// Replica → writer: subscribe to the delta stream; payload is the
+    /// replica's current model version (`u64 LE`).
+    pub const SUBSCRIBE: u8 = 5;
+    /// Writer → replica: one `ModelDelta::to_bytes` payload.
+    pub const DELTA: u8 = 6;
+    /// Writer → replica: one `RkModel::to_bytes` payload.
+    pub const SNAPSHOT: u8 = 7;
+    /// Replica → writer: request a full snapshot (empty payload).
+    pub const SNAPSHOT_REQ: u8 = 8;
+    /// Any → server: shut the process down cleanly (empty payload).
+    pub const STOP: u8 = 9;
+    /// Either direction: UTF-8 error message payload.
+    pub const ERROR: u8 = 10;
+}
+
+/// Decode-side failures. Implements `std::error::Error` so call sites
+/// can `?` straight into the vendored `anyhow::Error`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Payload ended before a fixed-width field.
+    Short { want: usize, have: usize },
+    /// Length prefix exceeds [`MAX_FRAME`].
+    TooLong { len: usize },
+    /// Unknown value tag in a row payload.
+    BadTag { tag: u8 },
+    /// Payload length inconsistent with its declared element count.
+    BadLen { want: usize, have: usize },
+    /// A `u64` wire field does not fit the in-memory type.
+    Range { field: &'static str, value: u64 },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Short { want, have } => {
+                write!(f, "payload too short: want {want} bytes, have {have}")
+            }
+            WireError::TooLong { len } => {
+                write!(f, "frame length {len} exceeds MAX_FRAME {MAX_FRAME}")
+            }
+            WireError::BadTag { tag } => write!(f, "unknown value tag {tag}"),
+            WireError::BadLen { want, have } => {
+                write!(f, "payload length mismatch: want {want} bytes, have {have}")
+            }
+            WireError::Range { field, value } => {
+                write!(f, "wire field {field} = {value} out of range for host type")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Widen a `usize` into the `u64` wire representation. Infallible on
+/// every supported target (`usize` ≤ 64 bits), but routed through
+/// `try_from` so the conversion stays visibly checked.
+pub fn u64_of(n: usize) -> u64 {
+    u64::try_from(n).expect("usize fits u64 on all supported targets")
+}
+
+/// Narrow a `u64` wire field back into a host `usize`, failing loudly
+/// (with the field name) on a 32-bit host reading a too-big value.
+pub fn usize_of(field: &'static str, value: u64) -> Result<usize, WireError> {
+    usize::try_from(value).map_err(|_| WireError::Range { field, value })
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(bytes: &[u8], at: usize) -> Result<u64, WireError> {
+    let end = at.checked_add(8).ok_or(WireError::Short { want: usize::MAX, have: bytes.len() })?;
+    let raw = bytes.get(at..end).ok_or(WireError::Short { want: end, have: bytes.len() })?;
+    let mut buf = [0u8; 8];
+    buf.copy_from_slice(raw);
+    Ok(u64::from_le_bytes(buf))
+}
+
+/// Encode a complete frame: length prefix, kind byte, payload.
+///
+/// Panics if the payload would exceed [`MAX_FRAME`] — that is a caller
+/// bug (the model wire formats are orders of magnitude smaller), not a
+/// runtime condition.
+pub fn encode_frame(frame_kind: u8, payload: &[u8]) -> Vec<u8> {
+    let total = payload.len().checked_add(1).expect("frame length overflow");
+    assert!(total <= MAX_FRAME, "refusing to encode a {total}-byte frame (> MAX_FRAME)");
+    let len32 = u32::try_from(total).expect("MAX_FRAME fits u32");
+    let mut out = Vec::with_capacity(4 + total);
+    out.extend_from_slice(&len32.to_le_bytes());
+    out.push(frame_kind);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Incremental frame reassembler: feed it whatever the socket yields
+/// (including partial frames split at arbitrary byte boundaries) and
+/// pull complete `(kind, payload)` pairs out as they materialize.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameBuf {
+    /// Fresh, empty reassembly buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append bytes read off the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // Compact consumed prefix before growing, so a long-lived
+        // connection doesn't accrete every frame it ever saw.
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 4096) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are needed.
+    ///
+    /// A `TooLong` error is sticky in practice: the stream is
+    /// desynchronized and the caller should drop the connection.
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, WireError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let mut len_raw = [0u8; 4];
+        len_raw.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
+        let total = usize_of("frame_len", u64::from(u32::from_le_bytes(len_raw)))?;
+        if total == 0 || total > MAX_FRAME {
+            return Err(WireError::TooLong { len: total });
+        }
+        if avail < 4 + total {
+            return Ok(None);
+        }
+        let frame_kind = self.buf[self.pos + 4];
+        let payload = self.buf[self.pos + 5..self.pos + 4 + total].to_vec();
+        self.pos += 4 + total;
+        Ok(Some((frame_kind, payload)))
+    }
+}
+
+// ---- row codec (assign plane) ----------------------------------------
+
+/// Per-value tags inside an `ASSIGN_REQ` payload.
+const TAG_INT: u8 = 0;
+const TAG_DOUBLE: u8 = 1;
+const TAG_CAT: u8 = 2;
+
+/// Encode one row for the assign plane: `u32 LE` value count, then per
+/// value one tag byte + 8 bytes LE (`i64` two's complement, `f64` IEEE
+/// bits, or a zero-extended `CatId`). Fixed 9 bytes per value keeps the
+/// decoder's length check exact.
+pub fn encode_row(row: &[Value]) -> Vec<u8> {
+    let n32 = u32::try_from(row.len()).expect("row arity fits u32");
+    let mut out = Vec::with_capacity(4 + row.len() * 9);
+    out.extend_from_slice(&n32.to_le_bytes());
+    for v in row {
+        match v {
+            Value::Int(i) => {
+                out.push(TAG_INT);
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+            Value::Double(x) => {
+                out.push(TAG_DOUBLE);
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            Value::Cat(c) => {
+                out.push(TAG_CAT);
+                put_u64(&mut out, u64::from(*c));
+            }
+        }
+    }
+    out
+}
+
+/// Decode an `ASSIGN_REQ` payload back into a row, bit-exactly.
+pub fn decode_row(payload: &[u8]) -> Result<Vec<Value>, WireError> {
+    if payload.len() < 4 {
+        return Err(WireError::Short { want: 4, have: payload.len() });
+    }
+    let mut n_raw = [0u8; 4];
+    n_raw.copy_from_slice(&payload[..4]);
+    let n = usize_of("row_arity", u64::from(u32::from_le_bytes(n_raw)))?;
+    let want = n
+        .checked_mul(9)
+        .and_then(|b| b.checked_add(4))
+        .ok_or(WireError::BadLen { want: usize::MAX, have: payload.len() })?;
+    if payload.len() != want {
+        return Err(WireError::BadLen { want, have: payload.len() });
+    }
+    let mut row = Vec::with_capacity(n);
+    for i in 0..n {
+        let at = 4 + i * 9;
+        let tag = payload[at];
+        let word = get_u64(payload, at + 1)?;
+        row.push(match tag {
+            TAG_INT => Value::Int(i64::from_le_bytes(word.to_le_bytes())),
+            TAG_DOUBLE => Value::Double(f64::from_bits(word)),
+            TAG_CAT => {
+                Value::Cat(u32::try_from(word).map_err(|_| WireError::Range {
+                    field: "cat_id",
+                    value: word,
+                })?)
+            }
+            other => return Err(WireError::BadTag { tag: other }),
+        });
+    }
+    Ok(row)
+}
+
+// ---- fixed-shape payloads --------------------------------------------
+
+/// Encode an `ASSIGN_RESP` payload: cluster index + model version.
+pub fn encode_assignment(cluster: usize, version: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    put_u64(&mut out, u64_of(cluster));
+    put_u64(&mut out, version);
+    out
+}
+
+/// Decode an `ASSIGN_RESP` payload into `(cluster, version)`.
+pub fn decode_assignment(payload: &[u8]) -> Result<(usize, u64), WireError> {
+    if payload.len() != 16 {
+        return Err(WireError::BadLen { want: 16, have: payload.len() });
+    }
+    let cluster = usize_of("cluster", get_u64(payload, 0)?)?;
+    let version = get_u64(payload, 8)?;
+    Ok((cluster, version))
+}
+
+/// Server roles reported by the control plane.
+pub const ROLE_WRITER: u64 = 0;
+/// See [`ROLE_WRITER`].
+pub const ROLE_REPLICA: u64 = 1;
+
+/// Control-plane probe answer: everything the load generator and the CI
+/// harness need to decide "is this process healthy and caught up".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeReply {
+    /// Current model version served by this process.
+    pub version: u64,
+    /// [`ROLE_WRITER`] or [`ROLE_REPLICA`].
+    pub role: u64,
+    /// In-process mesh slots behind this server.
+    pub replicas: u64,
+    /// Snapshot catch-ups completed (replica) or served (writer).
+    pub catchups: u64,
+    /// `VersionGap` rejections observed on the replication plane.
+    pub gaps: u64,
+}
+
+impl ProbeReply {
+    /// Serialize as five `u64 LE` words.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(40);
+        put_u64(&mut out, self.version);
+        put_u64(&mut out, self.role);
+        put_u64(&mut out, self.replicas);
+        put_u64(&mut out, self.catchups);
+        put_u64(&mut out, self.gaps);
+        out
+    }
+
+    /// Inverse of [`ProbeReply::to_bytes`].
+    pub fn from_bytes(payload: &[u8]) -> Result<Self, WireError> {
+        if payload.len() != 40 {
+            return Err(WireError::BadLen { want: 40, have: payload.len() });
+        }
+        Ok(Self {
+            version: get_u64(payload, 0)?,
+            role: get_u64(payload, 8)?,
+            replicas: get_u64(payload, 16)?,
+            catchups: get_u64(payload, 24)?,
+            gaps: get_u64(payload, 32)?,
+        })
+    }
+}
+
+/// Encode a `SUBSCRIBE` payload (the subscriber's current version).
+pub fn encode_subscribe(have_version: u64) -> Vec<u8> {
+    have_version.to_le_bytes().to_vec()
+}
+
+/// Decode a `SUBSCRIBE` payload.
+pub fn decode_subscribe(payload: &[u8]) -> Result<u64, WireError> {
+    if payload.len() != 8 {
+        return Err(WireError::BadLen { want: 8, have: payload.len() });
+    }
+    get_u64(payload, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_survives_arbitrary_splits() {
+        let frames = [
+            (kind::PROBE, Vec::new()),
+            (kind::DELTA, vec![1, 2, 3]),
+            (kind::SNAPSHOT, vec![9; 300]),
+        ];
+        let mut stream = Vec::new();
+        for (k, p) in &frames {
+            stream.extend_from_slice(&encode_frame(*k, p));
+        }
+        // Deliver in 7-byte chunks: every frame boundary is split.
+        let mut fb = FrameBuf::new();
+        let mut got = Vec::new();
+        for chunk in stream.chunks(7) {
+            fb.extend(chunk);
+            while let Some(f) = fb.next_frame().expect("clean stream") {
+                got.push(f);
+            }
+        }
+        let want: Vec<(u8, Vec<u8>)> = frames.iter().map(|(k, p)| (*k, p.clone())).collect();
+        assert_eq!(got, want);
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
+    fn oversize_and_zero_length_prefixes_are_rejected() {
+        let mut fb = FrameBuf::new();
+        fb.extend(&u32::MAX.to_le_bytes());
+        fb.extend(&[0u8; 8]);
+        assert!(matches!(fb.next_frame(), Err(WireError::TooLong { .. })));
+
+        let mut fb = FrameBuf::new();
+        fb.extend(&0u32.to_le_bytes());
+        assert!(matches!(fb.next_frame(), Err(WireError::TooLong { len: 0 })));
+    }
+
+    #[test]
+    fn row_roundtrip_is_bit_exact() {
+        let row = vec![
+            Value::Int(-42),
+            Value::Double(0.1 + 0.2), // not representable exactly — bits must survive
+            Value::Double(-0.0),
+            Value::Cat(u32::MAX),
+            Value::Int(i64::MIN),
+        ];
+        let enc = encode_row(&row);
+        let dec = decode_row(&enc).expect("clean payload");
+        assert_eq!(dec.len(), row.len());
+        for (a, b) in row.iter().zip(dec.iter()) {
+            match (a, b) {
+                (Value::Double(x), Value::Double(y)) => assert_eq!(x.to_bits(), y.to_bits()),
+                _ => assert_eq!(a, b),
+            }
+        }
+    }
+
+    #[test]
+    fn row_decoder_rejects_malformed_payloads() {
+        assert!(matches!(decode_row(&[1, 2]), Err(WireError::Short { .. })));
+        // Declared arity 2, bytes for 1.
+        let mut p = 2u32.to_le_bytes().to_vec();
+        p.push(TAG_INT);
+        p.extend_from_slice(&7i64.to_le_bytes());
+        assert!(matches!(decode_row(&p), Err(WireError::BadLen { .. })));
+        // Unknown tag.
+        let mut p = 1u32.to_le_bytes().to_vec();
+        p.push(77);
+        p.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(decode_row(&p), Err(WireError::BadTag { tag: 77 })));
+    }
+
+    #[test]
+    fn fixed_payloads_roundtrip_and_pin_their_bytes() {
+        assert_eq!(decode_assignment(&encode_assignment(3, 17)).expect("ok"), (3, 17));
+        // Byte-stability pin: layout changes must be deliberate.
+        assert_eq!(
+            encode_assignment(3, 17),
+            vec![3, 0, 0, 0, 0, 0, 0, 0, 17, 0, 0, 0, 0, 0, 0, 0]
+        );
+
+        let probe =
+            ProbeReply { version: 5, role: ROLE_REPLICA, replicas: 2, catchups: 1, gaps: 4 };
+        assert_eq!(ProbeReply::from_bytes(&probe.to_bytes()).expect("ok"), probe);
+        assert_eq!(decode_subscribe(&encode_subscribe(9)).expect("ok"), 9);
+
+        // Frame header pin: 5-byte empty probe frame.
+        assert_eq!(encode_frame(kind::PROBE, &[]), vec![1, 0, 0, 0, kind::PROBE]);
+    }
+
+    #[test]
+    fn length_mismatches_name_the_field() {
+        assert!(matches!(decode_assignment(&[0; 7]), Err(WireError::BadLen { want: 16, .. })));
+        let short_probe = ProbeReply::from_bytes(&[0; 39]);
+        assert!(matches!(short_probe, Err(WireError::BadLen { want: 40, .. })));
+        assert!(matches!(decode_subscribe(&[0; 9]), Err(WireError::BadLen { want: 8, .. })));
+    }
+}

@@ -87,7 +87,18 @@ fn wall_clock_fires_outside_telemetry_modules() {
 fn unchecked_cast_fires_in_wire_files_only() {
     let src = "fn enc(n: usize) -> f64 { n as f64 }\n";
     assert_eq!(rules_fired("src/rkmeans/model.rs", src), ["unchecked-cast-in-wire"]);
+    assert_eq!(rules_fired("src/serve/rpc/wire.rs", src), ["unchecked-cast-in-wire"]);
     assert_eq!(rules_fired("src/rkmeans/pipeline.rs", src), [] as [&str; 0]);
+}
+
+#[test]
+fn rpc_spawn_sites_are_registered_but_strays_are_not() {
+    // The three registered socket-tier spawn fns are waived…
+    let registered = "fn accept_loop() { std::thread::Builder::new(); }\n";
+    assert_eq!(rules_fired("src/serve/rpc/mod.rs", registered), [] as [&str; 0]);
+    // …while a spawn in any other fn of the same file still fires.
+    let stray = "fn helper() { std::thread::spawn(|| {}); }\n";
+    assert_eq!(rules_fired("src/serve/rpc/mod.rs", stray), ["rogue-thread"]);
 }
 
 #[test]

@@ -130,6 +130,34 @@ fn delta_sees_no_difference_between_shuffled_builds() {
 }
 
 #[test]
+fn rpc_frames_are_a_canonical_encoding_of_their_content() {
+    use rkmeans::data::Value;
+    use rkmeans::serve::rpc::wire::{self, kind};
+
+    // The assign-plane row codec is a pure function of the values, and
+    // decode ∘ encode is a fixed point (the same property the model
+    // bytes pin above, extended to the socket tier's own format).
+    let row = vec![Value::Int(-3), Value::Double(2.5), Value::Cat(7)];
+    let enc = wire::encode_row(&row);
+    let back = wire::decode_row(&enc).expect("row decode");
+    assert_eq!(back, row);
+    assert_eq!(wire::encode_row(&back), enc, "decode/encode must be a fixed point");
+
+    // Snapshot frames wrap `RkModel::to_bytes` verbatim, so two builds
+    // that only differ in construction order produce identical frames —
+    // replica byte-verification depends on exactly this.
+    let (pairs, coreset) = fixture();
+    let n = pairs.len();
+    let a = model_variant(&pairs, &coreset, 0..n, |_| (), 1);
+    let b = model_variant(&pairs, &coreset, (0..n).rev(), |cells| cells.reverse(), 1);
+    assert_eq!(
+        wire::encode_frame(kind::SNAPSHOT, &a.to_bytes()),
+        wire::encode_frame(kind::SNAPSHOT, &b.to_bytes()),
+        "snapshot frames must inherit the model's byte stability"
+    );
+}
+
+#[test]
 fn metrics_dump_is_invariant_under_registration_order() {
     let forward = Metrics::new();
     forward.counter("serve.swaps").add(3);

@@ -16,7 +16,7 @@
 use rkmeans::cluster::sparse_lloyd::CentroidCoord;
 use rkmeans::metrics::Metrics;
 use rkmeans::rkmeans::{ClusterOpts, RkModel, RkPipeline, SubspaceOpts};
-use rkmeans::serve::{synth_rows, AssignFront, FrontOpts, ModelMesh, Publisher};
+use rkmeans::serve::{synth_rows, AssignFront, FrontOpts, ModelDelta, ModelMesh, Publisher};
 use rkmeans::synthetic::{retailer, Scale};
 use rkmeans::util::exec::shared_pool;
 use std::sync::Arc;
@@ -108,4 +108,37 @@ fn hot_swap_readers_always_see_a_published_model() {
     for slot in 0..3 {
         assert_eq!(mesh.model(slot).to_bytes(), versions.last().unwrap().to_bytes());
     }
+}
+
+/// `Publisher::publish_wire` hands back the exact delta bytes it
+/// shipped to the mesh — the same buffer the rpc tier broadcasts to
+/// replica processes — so a subscriber that applies them lands
+/// bit-identically on what the mesh now serves.
+#[test]
+fn publish_wire_returns_the_exact_broadcast_delta_bytes() {
+    let db = retailer::generate(Scale::tiny(), 42);
+    let feq = retailer::feq();
+    let pipe = RkPipeline::plan(&db, &feq).unwrap();
+    let marginals = pipe.marginals().unwrap();
+    let subspaces = pipe.subspaces(&marginals, &SubspaceOpts::new(4)).unwrap();
+    let base = pipe.coreset(&subspaces).unwrap().cluster(&ClusterOpts::new(4));
+    let v1 = published_model(&base, 1);
+    let v2 = published_model(&base, 2);
+
+    let mesh = ModelMesh::new(v1.clone(), 2, Metrics::new());
+    let mut publisher = Publisher::new(Arc::clone(&mesh));
+    let (stats, wire) = publisher.publish_wire(&v2).expect("publish");
+    assert_eq!(stats.version, 2);
+    assert_eq!(wire.len(), stats.delta_bytes, "stats must describe the returned buffer");
+
+    // publish() is publish_wire() minus the buffer: same stats story.
+    let decoded = ModelDelta::from_bytes(&wire).expect("broadcast bytes decode");
+    assert_eq!(decoded.to_version, 2);
+    let applied = v1.apply_delta(&decoded).expect("subscriber-side apply");
+    assert_eq!(
+        applied.to_bytes(),
+        mesh.model(0).to_bytes(),
+        "applying the broadcast delta must land on the served bytes"
+    );
+    assert_eq!(mesh.latest_version(), 2);
 }

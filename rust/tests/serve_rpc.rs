@@ -1,0 +1,300 @@
+//! Multi-process tests for the socket RPC tier (`rkmeans::serve::rpc`):
+//! a real writer process (`rkmeans serve --listen`) and real replica
+//! processes (`rkmeans replica --connect`) over localhost TCP, driven
+//! through `CARGO_BIN_EXE_rkmeans`.
+//!
+//! Properties pinned here:
+//!
+//! * the snapshot catch-up payload on the wire is **byte-identical** to
+//!   `RkModel::to_bytes` (read with a raw socket client, no library
+//!   verification in the path);
+//! * every `Assignment.version` served over the socket is a version the
+//!   writer actually published (scraped from its `published v<N>`
+//!   stdout lines) or the initial model version;
+//! * killing a replica mid-run and starting a fresh one ends with the
+//!   newcomer converged on the writer's latest version, with the writer
+//!   having served snapshot catch-ups (`--drop-every` also forces a
+//!   VersionGap → catch-up → rejoin cycle on the *surviving* replica);
+//! * the deprecated `rkmeans serve --rate/--batches` spelling still
+//!   parses and forwards to the stream demo with the plain warning.
+
+use rkmeans::rkmeans::RkModel;
+use rkmeans::serve::rpc::wire::{self, kind};
+use rkmeans::serve::{fetch_snapshot, probe, run_rpc_loop, send_stop, LoadSpec};
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+const SCALE: &str = "0.005";
+const STARTUP: Duration = Duration::from_secs(120);
+
+/// A child `rkmeans` process with stdout forwarded line-by-line; the
+/// drain thread keeps the pipe from backing up under the metrics dump.
+struct Proc {
+    child: Child,
+    lines: mpsc::Receiver<String>,
+    seen: Vec<String>,
+    addr: Option<String>,
+}
+
+fn spawn_rkmeans(args: &[&str]) -> Proc {
+    let exe = env!("CARGO_BIN_EXE_rkmeans");
+    let mut child = Command::new(exe)
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap_or_else(|e| panic!("spawning {exe} {args:?}: {e}"));
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines().map_while(|l| l.ok()) {
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    Proc { child, lines: rx, seen: Vec::new(), addr: None }
+}
+
+impl Proc {
+    /// Pull buffered stdout lines into `seen` without blocking.
+    fn drain(&mut self) {
+        while let Ok(line) = self.lines.try_recv() {
+            self.seen.push(line);
+        }
+    }
+
+    /// Wait for the `rpc listening on <addr>` line.
+    fn listening_addr(&mut self) -> String {
+        if let Some(a) = &self.addr {
+            return a.clone();
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < STARTUP {
+            match self.lines.recv_timeout(Duration::from_millis(100)) {
+                Ok(line) => {
+                    let found = line.strip_prefix("rpc listening on ").map(str::to_string);
+                    self.seen.push(line);
+                    if let Some(a) = found {
+                        let a = a.trim().to_string();
+                        self.addr = Some(a.clone());
+                        return a;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let _ = self.child.kill();
+        panic!("no `rpc listening on` line within {STARTUP:?}; got {:?}", self.seen);
+    }
+
+    /// Versions from `published v<N> …` stdout lines seen so far.
+    fn published_versions(&mut self) -> BTreeSet<u64> {
+        self.drain();
+        self.seen
+            .iter()
+            .filter_map(|l| l.strip_prefix("published v"))
+            .filter_map(|rest| {
+                rest.split_whitespace().next().and_then(|tok| {
+                    tok.trim_end_matches(|c: char| !c.is_ascii_digit()).parse().ok()
+                })
+            })
+            .collect()
+    }
+
+    /// Graceful stop via the control plane; returns the exit status.
+    fn stop(mut self) -> std::process::ExitStatus {
+        if let Some(a) = &self.addr {
+            let _ = send_stop(a);
+        }
+        let t0 = Instant::now();
+        loop {
+            if let Ok(Some(status)) = self.child.try_wait() {
+                return status;
+            }
+            if t0.elapsed() > Duration::from_secs(30) {
+                let _ = self.child.kill();
+                return self.child.wait().expect("child wait after kill");
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn writer(publishes: &str, publish_ms: &str, drop_every: &str) -> Proc {
+    spawn_rkmeans(&[
+        "serve", "--dataset", "retailer", "--scale", SCALE, "--k", "4", "--seed", "42",
+        "--listen", "127.0.0.1:0", "--publishes", publishes, "--publish-ms", publish_ms,
+        "--drop-every", drop_every,
+    ])
+}
+
+fn replica(writer_addr: &str) -> Proc {
+    spawn_rkmeans(&["replica", "--connect", writer_addr, "--listen", "127.0.0.1:0"])
+}
+
+/// Raw snapshot request: no library-side verification in the path, so
+/// the assertion below really is about the bytes on the wire.
+fn raw_snapshot(addr: &str) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+    stream.write_all(&wire::encode_frame(kind::SNAPSHOT_REQ, &[])).expect("send");
+    let mut fb = wire::FrameBuf::new();
+    let mut buf = [0u8; 16 * 1024];
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while Instant::now() < deadline {
+        if let Some((k, payload)) = fb.next_frame().expect("well-formed frame") {
+            assert_eq!(k, kind::SNAPSHOT, "expected a snapshot frame");
+            return payload;
+        }
+        let n = stream.read(&mut buf).expect("read");
+        assert!(n > 0, "server closed before answering the snapshot request");
+        fb.extend(&buf[..n]);
+    }
+    panic!("no snapshot frame within 60s");
+}
+
+#[test]
+fn snapshot_bytes_on_wire_match_model_exactly() {
+    let mut w = writer("0", "100", "0");
+    let addr = w.listening_addr();
+
+    let payload = raw_snapshot(&addr);
+    let model = RkModel::from_bytes(&payload).expect("wire payload parses as a model");
+    assert_eq!(
+        model.to_bytes(),
+        payload,
+        "snapshot catch-up payload must be byte-identical to RkModel::to_bytes"
+    );
+    // And the verifying client agrees with the raw read.
+    let fetched = fetch_snapshot(&addr, Duration::from_secs(30)).expect("fetch_snapshot");
+    assert_eq!(fetched.to_bytes(), payload);
+    assert_eq!(fetched.version, model.version);
+
+    let status = w.stop();
+    assert!(status.success(), "writer exited with {status:?}");
+}
+
+#[test]
+fn served_versions_are_published_and_killed_replica_catches_up() {
+    // drop-every 2 drops each subscriber's first delta (v2), so the
+    // surviving replica is forced through VersionGap → snapshot
+    // catch-up → rejoin while the load runs.
+    let mut w = writer("2", "400", "2");
+    let waddr = w.listening_addr();
+    let initial = probe(&waddr, Duration::from_secs(30)).expect("probe writer");
+    assert_eq!(initial.role, wire::ROLE_WRITER);
+    let v0 = initial.version;
+
+    let mut ra = replica(&waddr);
+    let mut rb = replica(&waddr);
+    let a_addr = ra.listening_addr();
+    let b_addr = rb.listening_addr();
+
+    // Paced socket load across both replicas, long enough (~4 s) to
+    // span both publishes and the churn below.
+    let addrs = vec![a_addr.clone(), b_addr.clone()];
+    let load = std::thread::spawn(move || {
+        let model = fetch_snapshot(&addrs[0], Duration::from_secs(30))?;
+        let rows = rkmeans::serve::synth_rows(&model, 64, 7);
+        run_rpc_loop(
+            &addrs,
+            &rows,
+            &LoadSpec { requests: 1200, clients: 2, qps: Some(300.0), seed: 9 },
+        )
+    });
+
+    // Kill replica B mid-run; its clients must fail over to A. Then
+    // start a fresh replica which has to snapshot-catch-up from cold.
+    std::thread::sleep(Duration::from_millis(600));
+    rb.kill();
+    let mut rc = replica(&waddr);
+    let c_addr = rc.listening_addr();
+
+    let out = load.join().expect("load thread").expect("rpc load");
+    assert!(out.report.requests > 0, "no requests survived the churn");
+    assert!(out.report.monotonic, "per-client served versions must be monotone");
+
+    // Every served version is the initial one or one the writer
+    // actually published (scraped from its stdout).
+    let mut published = w.published_versions();
+    published.insert(v0);
+    for v in &out.versions {
+        assert!(
+            published.contains(v),
+            "served version {v} was never published (published: {published:?})"
+        );
+    }
+
+    // The fresh replica converges on the writer's latest version.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut converged = false;
+    while Instant::now() < deadline {
+        let wp = probe(&waddr, Duration::from_secs(10)).expect("probe writer");
+        let cp = probe(&c_addr, Duration::from_secs(10)).expect("probe fresh replica");
+        if cp.version == wp.version && !w.published_versions().is_empty() {
+            converged = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(converged, "restarted replica never reached the writer's version");
+
+    // Byte-equality across the process boundary: the fresh replica's
+    // served snapshot matches the writer's exactly.
+    let from_writer = fetch_snapshot(&waddr, Duration::from_secs(30)).expect("writer snapshot");
+    let from_fresh = fetch_snapshot(&c_addr, Duration::from_secs(30)).expect("replica snapshot");
+    assert_eq!(from_writer.to_bytes(), from_fresh.to_bytes());
+
+    // The writer served at least one snapshot catch-up (the fresh
+    // replica's cold start guarantees one; the forced gap adds more),
+    // and the surviving replica went through the gap → catch-up cycle.
+    let wp = probe(&waddr, Duration::from_secs(10)).expect("probe writer");
+    assert!(wp.catchups >= 1, "writer served no snapshot catch-ups: {wp:?}");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut survivor_caught_up = false;
+    while Instant::now() < deadline {
+        let ap = probe(&a_addr, Duration::from_secs(10)).expect("probe survivor");
+        if ap.gaps >= 1 && ap.catchups >= 1 {
+            survivor_caught_up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(survivor_caught_up, "survivor never hit VersionGap → snapshot catch-up");
+
+    assert!(ra.stop().success(), "replica A exit");
+    assert!(rc.stop().success(), "replica C exit");
+    assert!(w.stop().success(), "writer exit");
+}
+
+#[test]
+fn stream_alias_forwarding_still_parses() {
+    // The pre-mesh demo spelling must keep parsing: forwarded to
+    // `stream` with the plain deprecation warning on stderr.
+    let exe = env!("CARGO_BIN_EXE_rkmeans");
+    let out = Command::new(exe)
+        .args([
+            "serve", "--dataset", "retailer", "--scale", SCALE, "--rate", "10", "--batches", "0",
+        ])
+        .output()
+        .expect("run alias spelling");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "alias invocation failed: {stderr}");
+    assert!(
+        stderr.contains("warning: the streaming-coordinator demo is now `rkmeans stream`"),
+        "missing plain deprecation warning, got: {stderr}"
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("streaming retailer"), "did not forward to the stream demo");
+}
