@@ -2,10 +2,10 @@
 //! (ROADMAP "bench trajectory in CI" item).
 //!
 //! Reads `BENCH_lloyd.json`, `BENCH_stream.json`, `BENCH_sweep.json`,
-//! `BENCH_shard.json`, `BENCH_serve.json` and `BENCH_rpc.json` (as
-//! emitted by the smoke runs of `kernel_lloyd`, `stream_ingest`,
-//! `k_sweep`, `shard_build`, `serve_load` and `rpc_load` earlier in
-//! the CI job) plus the committed baseline
+//! `BENCH_shard.json`, `BENCH_serve.json`, `BENCH_rpc.json` and
+//! `BENCH_ingest.json` (as emitted by the smoke runs of `kernel_lloyd`,
+//! `stream_ingest`, `k_sweep`, `shard_build`, `serve_load`, `rpc_load`
+//! and `ingest_scale` earlier in the CI job) plus the committed baseline
 //! `bench_baseline.json`, and **fails (exit 1)** when a tracked
 //! throughput metric regresses more than the baseline's tolerance
 //! (default 20 %) below its committed value:
@@ -39,14 +39,19 @@
 //!   1.0 when the replica killed and restarted mid-run converged back
 //!   to the writer's latest version via byte-verified snapshot
 //!   catch-up (a correctness bit, not a speed — any value below 1.0
-//!   is a fault-recovery regression).
+//!   is a fault-recovery regression);
+//! * `ingest_scale_speedup` — `speedup_vs_serial` of the `epochd-max`
+//!   ingest record: P = S = available-parallelism multi-producer ingest
+//!   through the epoch'd hub vs. the serial single-stream `DeltaFaq`
+//!   apply (a ratio; the emitting bench asserts the final grids
+//!   bitwise-identical across arms, so only throughput is gated).
 //!
 //! Baseline values are calibrated for the `--test` smoke shapes and set
 //! conservatively; raise them as the engines get faster so the trajectory
 //! ratchets. Env overrides: `RKMEANS_BASELINE`, `RKMEANS_BENCH_OUT`,
 //! `RKMEANS_STREAM_OUT`, `RKMEANS_SWEEP_OUT`, `RKMEANS_SHARD_OUT`,
-//! `RKMEANS_SERVE_OUT`, `RKMEANS_RPC_OUT` (same paths the emitting
-//! benches use).
+//! `RKMEANS_SERVE_OUT`, `RKMEANS_RPC_OUT`, `RKMEANS_INGEST_OUT` (same
+//! paths the emitting benches use).
 
 use rkmeans::util::json::{parse, Json};
 use std::path::PathBuf;
@@ -79,6 +84,7 @@ fn main() {
     let shard_path = env_path("RKMEANS_SHARD_OUT", "BENCH_shard.json");
     let serve_path = env_path("RKMEANS_SERVE_OUT", "BENCH_serve.json");
     let rpc_path = env_path("RKMEANS_RPC_OUT", "BENCH_rpc.json");
+    let ingest_path = env_path("RKMEANS_INGEST_OUT", "BENCH_ingest.json");
 
     let mut failures: Vec<String> = Vec::new();
     let baseline = match read_json(&baseline_path) {
@@ -196,6 +202,18 @@ fn main() {
             gate(
                 "rpc_catchup_ok",
                 churn.and_then(|r| r.get("catchup_ok")).and_then(|v| v.as_f64()),
+                &mut failures,
+            );
+        }
+        Err(e) => failures.push(e),
+    }
+
+    match read_json(&ingest_path) {
+        Ok(doc) => {
+            let rec = find_record(&doc, &[("mode", "epochd-max")]);
+            gate(
+                "ingest_scale_speedup",
+                rec.and_then(|r| r.get("speedup_vs_serial")).and_then(|v| v.as_f64()),
                 &mut failures,
             );
         }

@@ -1,0 +1,228 @@
+//! Bench I1 — ingest-tier scaling: P producer threads feeding S bounded
+//! per-shard queues through the epoch protocol (`rkmeans::ingest`) vs. a
+//! serial single-stream `DeltaFaq` ingest of the same Retailer trace.
+//!
+//! Arms (same database, same trace, same fixed assigners):
+//! * `serial`     — one `DeltaFaq`, one stream, one batch at a time (the
+//!   reference row);
+//! * `epochd-2`   — P = S = 2 through the hub;
+//! * `epochd-max` — P = S = available parallelism (the acceptance arm;
+//!   target ≥ 2× serial throughput on multi-core hardware).
+//!
+//! Before anything is recorded the bench asserts every arm's final grid
+//! **bitwise identical** to the serial one — the ring-ℤ determinism
+//! contract the ingest tier is built on — so the speedup rows can never
+//! mask a divergence. Epoch-close latency percentiles come from the
+//! hub's `ingest.epoch_us` histogram (first entry seen → epoch closed).
+//!
+//! Results are written as one `BENCH_ingest.json` document (schema: see
+//! `bench_harness` docs; path override: `RKMEANS_INGEST_OUT`).
+//!
+//! `--test` (or `--smoke`) shrinks everything for CI smoke runs.
+//! `RKMEANS_INGEST_SCALE` overrides the Retailer scale (default 0.02 ≈
+//! 40k fact rows).
+
+use rkmeans::bench_harness::{write_bench_ingest, IngestBenchRecord};
+use rkmeans::data::{Database, Value};
+use rkmeans::faq::{GidAssigner, GridTable};
+use rkmeans::incremental::{DeltaFaq, TupleDelta};
+use rkmeans::ingest::{IngestConfig, IngestHub};
+use rkmeans::metrics::Metrics;
+use rkmeans::query::{Feq, Hypergraph, JoinTree};
+use rkmeans::synthetic::{retailer, retailer_trace, Scale, TraceSpec};
+use rkmeans::util::FxHashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Fixed mod-assigner: the bench measures the epoch protocol and the
+/// shard-parallel Step-3 patching, not the Step-2 solvers, so grid
+/// assignment is a cheap deterministic hash shared by every arm.
+struct ModAssigner {
+    n: u32,
+}
+impl GidAssigner for ModAssigner {
+    fn gid(&self, v: Value) -> u32 {
+        let k = match v {
+            Value::Double(x) => ((x * 4.0) as i64).rem_euclid(self.n as i64) as u64,
+            other => other.key_u64(),
+        };
+        (k % self.n as u64) as u32
+    }
+    fn n_gids(&self) -> usize {
+        self.n as usize
+    }
+}
+
+fn mod_assigners(feq: &Feq) -> FxHashMap<String, Box<dyn GidAssigner>> {
+    let mut m: FxHashMap<String, Box<dyn GidAssigner>> = FxHashMap::default();
+    for f in &feq.features {
+        m.insert(f.attr.clone(), Box::new(ModAssigner { n: 3 }));
+    }
+    m
+}
+
+/// Sorted (cell, bits) view of a grid for exact cross-arm comparison.
+fn grid_bits(gt: &GridTable) -> Vec<(Vec<u32>, u64)> {
+    let mut v: Vec<(Vec<u32>, u64)> =
+        gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect();
+    v.sort();
+    v
+}
+
+/// Exact percentile over raw per-epoch latencies (the serial arm has no
+/// hub histogram; sort-and-index matches the histogram's exactness on
+/// these magnitudes closely enough for a reporting row).
+fn pctl(samples: &mut [u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    let idx = ((samples.len() as f64 * p) as usize).min(samples.len() - 1);
+    samples[idx]
+}
+
+/// Run one epoch'd arm: P scoped producer threads deal the trace
+/// round-robin into the hub while the main thread pumps until every
+/// epoch closes. Returns the record and the final grid bits.
+#[allow(clippy::too_many_arguments)]
+fn hub_arm(
+    db: &Database,
+    feq: &Feq,
+    tree: &JoinTree,
+    trace: &[Vec<TupleDelta>],
+    producers: usize,
+    shards: usize,
+    mode: &str,
+    base_rows: usize,
+) -> anyhow::Result<(IngestBenchRecord, Vec<(Vec<u32>, u64)>)> {
+    let metrics = Metrics::new();
+    let cfg = IngestConfig { producers, shards, queue_capacity: 8192, spill_budget: 0 };
+    let mut hub = IngestHub::new(db, feq, tree, &cfg, || mod_assigners(feq), metrics.clone())?;
+    let handles: Vec<_> = (0..producers).map(|p| hub.producer(p)).collect();
+    let epochs = trace.len() as u64;
+    let batch = trace.first().map_or(0, Vec::len);
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        for (p, h) in handles.into_iter().enumerate() {
+            scope.spawn(move || {
+                for (i, b) in trace.iter().enumerate() {
+                    let epoch = (i + 1) as u64;
+                    for d in b.iter().skip(p).step_by(producers) {
+                        if h.send(epoch, d.clone()).is_err() {
+                            return;
+                        }
+                    }
+                    if h.seal(epoch).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        while hub.closed_epoch() < epochs {
+            hub.pump(|| mod_assigners(feq))?;
+            std::thread::yield_now();
+        }
+        Ok(())
+    })?;
+    let total_s = t0.elapsed().as_secs_f64();
+
+    let epoch_us = metrics.histogram("ingest.epoch_us");
+    let rec = IngestBenchRecord::from_run(
+        "retailer-trace",
+        mode,
+        producers,
+        shards,
+        base_rows,
+        batch,
+        trace.len(),
+        total_s,
+        epoch_us.percentile(0.50),
+        epoch_us.percentile(0.99),
+        hub.grid_table().cells.len(),
+    );
+    Ok((rec, grid_bits(&hub.grid_table())))
+}
+
+fn main() -> anyhow::Result<()> {
+    let test_mode = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale: f64 = std::env::var("RKMEANS_INGEST_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if test_mode { 0.003 } else { 0.02 });
+    let batches = if test_mode { 3usize } else { 6 };
+
+    let db = retailer::generate(Scale::custom(scale), 42);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+    let base_rows = db.total_rows() as usize;
+    let batch = if test_mode { 96 } else { (base_rows / 16).max(512) };
+    let trace = retailer_trace(&db, 7, TraceSpec { batches, batch_size: batch, delete_frac: 0.3 });
+    let max_p = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).max(2);
+    println!(
+        "ingest workload: |D|={base_rows} rows (scale {scale}), batch={batch} × {batches} \
+         epochs, max P={max_p}"
+    );
+
+    // Reference arm: one DeltaFaq, one stream. Only the apply is timed
+    // (the epoch'd arms carry their queue + merge overhead on top, which
+    // keeps the speedup honest).
+    let asg = mod_assigners(&feq);
+    let mut serial = DeltaFaq::init(&db, &feq, &tree, &asg)?;
+    let mut epoch_us: Vec<u64> = Vec::with_capacity(batches);
+    let t0 = Instant::now();
+    for b in &trace {
+        let e0 = Instant::now();
+        serial.apply(b, &asg)?;
+        epoch_us.push(e0.elapsed().as_micros() as u64);
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+    let serial_bits = grid_bits(&serial.grid_table());
+    let serial_rec = IngestBenchRecord::from_run(
+        "retailer-trace",
+        "serial",
+        1,
+        1,
+        base_rows,
+        batch,
+        batches,
+        serial_s,
+        pctl(&mut epoch_us.clone(), 0.50),
+        pctl(&mut epoch_us, 0.99),
+        serial_bits.len(),
+    );
+    println!("{}", serial_rec.line());
+
+    let (two_rec, two_bits) = hub_arm(&db, &feq, &tree, &trace, 2, 2, "epochd-2", base_rows)?;
+    let two_rec = two_rec.with_speedup_vs(&serial_rec);
+    println!("{}", two_rec.line());
+
+    let (max_rec, max_bits) =
+        hub_arm(&db, &feq, &tree, &trace, max_p, max_p, "epochd-max", base_rows)?;
+    let max_rec = max_rec.with_speedup_vs(&serial_rec);
+    println!("{}", max_rec.line());
+
+    // The cross-arm bitwise assertion: neither the producer interleave
+    // nor the shard partition may change a single bit of the final grid.
+    for (label, bits) in [("epochd-2", &two_bits), ("epochd-max", &max_bits)] {
+        anyhow::ensure!(
+            *bits == serial_bits,
+            "{label}: final grid diverged from the serial single-stream ingest — \
+             the ring-ℤ merge contract is broken"
+        );
+    }
+    println!("bitwise: all arms identical to serial ({} grid cells)", serial_bits.len());
+
+    let speedup = max_rec.speedup_vs_serial.unwrap_or(0.0);
+    let records = vec![serial_rec, two_rec, max_rec];
+    let out = PathBuf::from(
+        std::env::var("RKMEANS_INGEST_OUT").unwrap_or_else(|_| "BENCH_ingest.json".to_string()),
+    );
+    write_bench_ingest(&out, &records)?;
+    println!("wrote {} records to {}", records.len(), out.display());
+    println!(
+        "epochd-max vs serial ingest throughput: {speedup:.2}× at P=S={max_p} \
+         (acceptance target ≥ 2× on multi-core hardware)"
+    );
+    Ok(())
+}

@@ -21,6 +21,7 @@
 //! | `wall-clock-in-core` | `Instant::now`/`SystemTime` only in `metrics`, `bench_harness`, `serve::load`, `util::timer` |
 //! | `unchecked-cast-in-wire` | no bare `as` numeric casts in `rkmeans/model.rs` + `serve/delta.rs` + `serve/rpc/wire.rs` |
 //! | `contextless-unwrap` | no `.unwrap()` on lock/channel results in `serve/` + `util/exec.rs` |
+//! | `unbounded-channel` | every queue is bounded: no `mpsc::channel()` / `sync_channel(0)` outside the explicit [`rules::QUEUE_REGISTRY`] |
 //!
 //! A site that is genuinely legitimate carries an inline waiver **with a
 //! mandatory reason**:
@@ -58,6 +59,7 @@ pub const RULES: &[&str] = &[
     "wall-clock-in-core",
     "unchecked-cast-in-wire",
     "contextless-unwrap",
+    "unbounded-channel",
     "invalid-waiver",
 ];
 

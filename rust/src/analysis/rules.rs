@@ -1,9 +1,11 @@
-//! The `rklint` rule set (R1–R5) over the masked token stream.
+//! The `rklint` rule set (R1–R6) over the masked token stream.
 //!
 //! Every rule is deny-by-default: a match is a diagnostic unless the
-//! site carries an inline waiver with a reason, or (R1 only) the site
-//! is listed in [`SPAWN_REGISTRY`]. See [`crate::analysis`] for the
-//! rule catalogue and the determinism contract each rule guards.
+//! site carries an inline waiver with a reason, or the site is listed
+//! in the relevant registry ([`SPAWN_REGISTRY`] for R1 thread
+//! creation, [`QUEUE_REGISTRY`] for R6 channel construction). See
+//! [`crate::analysis`] for the rule catalogue and the determinism
+//! contract each rule guards.
 
 use super::scan::{Scanned, Tok};
 use super::{Diagnostic, RULES};
@@ -66,6 +68,43 @@ pub const SPAWN_REGISTRY: &[(&str, &str, &str)] = &[
         "run_rpc_loop",
         "socket load-generator clients: intentionally independent arrival processes, measurement \
          only (mirrors serve/load.rs run_open_loop)",
+    ),
+    (
+        "coordinator/mod.rs",
+        "start_multi",
+        "single multi-producer coordinator service thread; epoch merges and patches all dispatch \
+         on the shared ExecPool",
+    ),
+    (
+        "main.rs",
+        "cmd_stream",
+        "scoped CLI producer threads feeding the bounded per-shard ingest queues; all clustering \
+         compute stays on ExecPool",
+    ),
+];
+
+/// R6 — the explicit registry of legitimate unbounded-channel sites.
+/// Same shape as [`SPAWN_REGISTRY`]: (file suffix, enclosing `fn`,
+/// reason). Everything else must use `sync_channel(cap)` with a real
+/// capacity so backpressure is accounted for — the ingest tier's
+/// per-shard queues ([`crate::ingest`]) are the reference pattern.
+pub const QUEUE_REGISTRY: &[(&str, &str, &str)] = &[
+    (
+        "serve/front.rs",
+        "submit",
+        "per-request reply channel: exactly one message ever in flight by protocol",
+    ),
+    (
+        "serve/front.rs",
+        "start",
+        "front request queue: clients are closed-loop (one outstanding request each), so depth \
+         is bounded by the client count, not the queue",
+    ),
+    (
+        "cluster/engine/mod.rs",
+        "spawn",
+        "score-worker job/done round-trip channels: at most one block in flight each way by \
+         protocol",
     ),
 ];
 
@@ -146,6 +185,9 @@ pub fn check(file: &str, scanned: &Scanned) -> Vec<Diagnostic> {
     }
     if rule_applies("contextless-unwrap", file) {
         r5_contextless_unwrap(file, toks, &mut out);
+    }
+    if rule_applies("unbounded-channel", file) {
+        r6_unbounded_channel(file, toks, &fns, &mut out);
     }
     check_waiver_annotations(file, scanned, &mut out);
     out
@@ -414,6 +456,82 @@ fn r5_contextless_unwrap(file: &str, toks: &[Tok], out: &mut Vec<Diagnostic>) {
             ));
         }
     }
+}
+
+/// R6: `mpsc::channel()` (no capacity bound) or `sync_channel(0)`
+/// (zero-capacity rendezvous — `try_send` always fails, so the
+/// backpressure-accounting pattern degenerates to a blocking send)
+/// outside the [`QUEUE_REGISTRY`]. Bounded `sync_channel(N > 0)` is
+/// the pattern, not a finding.
+fn r6_unbounded_channel(file: &str, toks: &[Tok], fns: &[String], out: &mut Vec<Diagnostic>) {
+    for i in 0..toks.len() {
+        let name = toks[i].s.as_str();
+        if name != "channel" && name != "sync_channel" {
+            continue;
+        }
+        // A declaration (`fn channel(`) is not a construction site.
+        if i > 0 && toks[i - 1].s == "fn" {
+            continue;
+        }
+        let Some(open) = call_open_paren(toks, i) else {
+            continue;
+        };
+        let what = if name == "channel" {
+            "`channel()` has no capacity bound"
+        } else {
+            // Only the literal-zero capacity is a rendezvous; any other
+            // argument shape is treated as a real bound.
+            if !(tok_at(toks, open + 1) == "0" && tok_at(toks, open + 2) == ")") {
+                continue;
+            }
+            "`sync_channel(0)` is a zero-capacity rendezvous"
+        };
+        let line = toks[i].line;
+        let enclosing = fns[i].as_str();
+        if let Some((_, _, reason)) = QUEUE_REGISTRY
+            .iter()
+            .find(|(suffix, f, _)| file.ends_with(suffix) && *f == enclosing)
+        {
+            let mut d = diag(
+                "unbounded-channel",
+                file,
+                line,
+                format!("{what} in fn `{enclosing}` (registered)"),
+            );
+            d.waived = true;
+            d.waiver_reason = Some(format!("registry: {reason}"));
+            out.push(d);
+        } else {
+            out.push(diag(
+                "unbounded-channel",
+                file,
+                line,
+                format!(
+                    "{what} in fn `{enclosing}` outside the queue registry; use \
+                     `sync_channel(cap)` so backpressure is accounted for, or register the queue"
+                ),
+            ));
+        }
+    }
+}
+
+/// Index of the call's opening `(` after an optional turbofish
+/// (`::<T, …>`), or `None` when the name is not immediately called.
+fn call_open_paren(toks: &[Tok], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    if tok_at(toks, j) == "::" && tok_at(toks, j + 1) == "<" {
+        let mut depth = 1usize;
+        j += 2;
+        while j < toks.len() && depth > 0 {
+            match tok_at(toks, j) {
+                "<" => depth += 1,
+                ">" => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    (tok_at(toks, j) == "(").then_some(j)
 }
 
 /// Waiver annotations themselves are checked: unknown rule names and

@@ -276,6 +276,59 @@
 //!   served; `catchup_ok` is 1.0 when every restarted replica converged
 //!   back to the writer's latest version (byte-verified) before the run
 //!   ended, else 0.0 — the gate's `rpc_catchup_ok` metric.
+//!
+//! # `BENCH_ingest.json` schema (version 1)
+//!
+//! `benches/ingest_scale.rs` emits one document per invocation (path
+//! from `RKMEANS_INGEST_OUT`, default `BENCH_ingest.json`) measuring the
+//! multi-producer ingest tier ([`crate::ingest`]): P producer threads
+//! feeding S bounded per-shard queues, pumped through the epoch
+//! protocol, against a serial single-stream [`DeltaFaq`] ingest of the
+//! same trace — after asserting the final grids **bitwise equal**:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "bench": "ingest",
+//!   "records": [
+//!     {
+//!       "label": "retailer-trace",
+//!       "mode": "epochd-max",
+//!       "producers": 8,
+//!       "shards": 8,
+//!       "base_rows": 40213,
+//!       "batch": 2560,
+//!       "batches": 6,
+//!       "total_s": 0.41,
+//!       "deltas_per_sec": 37463.4,
+//!       "epoch_p50_us": 41000,
+//!       "epoch_p99_us": 92000,
+//!       "grid_cells": 81,
+//!       "speedup_vs_serial": 2.4
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `mode` is `serial` (one [`DeltaFaq`], one stream — the reference
+//!   row), `epochd-2` (P = S = 2) or `epochd-max` (P = S = available
+//!   parallelism — the acceptance arm); `producers` / `shards` are the
+//!   numeric P / S (1/1 on the serial row).
+//! * `base_rows` is `|D|` before the trace; `batch` / `batches`
+//!   describe the trace shape (one epoch per batch).
+//! * `total_s` is enqueue-to-last-epoch-closed wall time;
+//!   `deltas_per_sec` = `batch·batches / total_s` — the throughput the
+//!   gate's `ingest_scale_speedup` ratio is built from.
+//! * `epoch_p50_us` / `epoch_p99_us` are first-entry-seen to
+//!   epoch-closed latency percentiles (the `ingest.epoch_us` histogram;
+//!   measured per-batch apply time on the serial row).
+//! * `speedup_vs_serial` = this row's `deltas_per_sec` / the serial
+//!   row's (epoch'd rows only). The acceptance target is ≥ 2× at
+//!   P = physical cores on the Retailer workload; grids are asserted
+//!   bitwise-identical across all arms by the emitting bench, so only
+//!   speed is gated.
+//!
+//! [`DeltaFaq`]: crate::incremental::DeltaFaq
 
 pub mod paper;
 
@@ -1169,6 +1222,137 @@ pub fn write_bench_rpc(path: &Path, records: &[RpcBenchRecord]) -> std::io::Resu
     std::fs::write(path, bench_rpc_json(records).to_string())
 }
 
+/// One ingest-tier measurement for `BENCH_ingest.json` (schema in the
+/// module docs).
+#[derive(Clone, Debug)]
+pub struct IngestBenchRecord {
+    pub label: String,
+    /// `"serial"`, `"epochd-2"` or `"epochd-max"`.
+    pub mode: String,
+    /// Producer threads P (1 on the serial reference row).
+    pub producers: usize,
+    /// Ingest shards S (1 on the serial reference row).
+    pub shards: usize,
+    /// `|D|` (total base tuples) before the trace.
+    pub base_rows: usize,
+    /// Deltas per batch (= per epoch).
+    pub batch: usize,
+    /// Batches (= epochs) in the trace.
+    pub batches: usize,
+    /// Enqueue-to-last-epoch-closed wall time.
+    pub total_s: f64,
+    /// `batch · batches / total_s` — the gated throughput.
+    pub deltas_per_sec: f64,
+    /// Median first-entry-seen → epoch-closed latency, µs.
+    pub epoch_p50_us: u64,
+    /// 99th-percentile epoch-close latency, µs.
+    pub epoch_p99_us: u64,
+    /// Non-zero grid cells after the trace (identical across arms by
+    /// the bitwise-merge contract the emitting bench asserts).
+    pub grid_cells: usize,
+    /// This row's `deltas_per_sec` / the serial row's (epoch'd rows).
+    pub speedup_vs_serial: Option<f64>,
+}
+
+impl IngestBenchRecord {
+    /// Build a record from one arm's measurements.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_run(
+        label: &str,
+        mode: &str,
+        producers: usize,
+        shards: usize,
+        base_rows: usize,
+        batch: usize,
+        batches: usize,
+        total_s: f64,
+        epoch_p50_us: u64,
+        epoch_p99_us: u64,
+        grid_cells: usize,
+    ) -> Self {
+        IngestBenchRecord {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            producers,
+            shards,
+            base_rows,
+            batch,
+            batches,
+            total_s,
+            deltas_per_sec: (batch * batches) as f64 / total_s.max(1e-12),
+            epoch_p50_us,
+            epoch_p99_us,
+            grid_cells,
+            speedup_vs_serial: None,
+        }
+    }
+
+    /// Attach the throughput speedup against the serial reference row.
+    pub fn with_speedup_vs(mut self, serial: &IngestBenchRecord) -> Self {
+        self.speedup_vs_serial = Some(self.deltas_per_sec / serial.deltas_per_sec.max(1e-12));
+        self
+    }
+
+    /// One human-readable console line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<16} {:<11} P={:<3} S={:<3} batch={:<5}×{:<3} {:>8.4}s  {:>10.0} deltas/s  \
+             epoch p50={:>6}µs p99={:>7}µs{}",
+            self.label,
+            self.mode,
+            self.producers,
+            self.shards,
+            self.batch,
+            self.batches,
+            self.total_s,
+            self.deltas_per_sec,
+            self.epoch_p50_us,
+            self.epoch_p99_us,
+            self.speedup_vs_serial
+                .map(|s| format!("  ({s:.2}× vs serial)"))
+                .unwrap_or_default()
+        )
+    }
+
+    /// Serialize to a JSON object (schema in the module docs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("producers".to_string(), Json::Num(self.producers as f64));
+        m.insert("shards".to_string(), Json::Num(self.shards as f64));
+        m.insert("base_rows".to_string(), Json::Num(self.base_rows as f64));
+        m.insert("batch".to_string(), Json::Num(self.batch as f64));
+        m.insert("batches".to_string(), Json::Num(self.batches as f64));
+        m.insert("total_s".to_string(), Json::Num(self.total_s));
+        m.insert("deltas_per_sec".to_string(), Json::Num(self.deltas_per_sec));
+        m.insert("epoch_p50_us".to_string(), Json::Num(self.epoch_p50_us as f64));
+        m.insert("epoch_p99_us".to_string(), Json::Num(self.epoch_p99_us as f64));
+        m.insert("grid_cells".to_string(), Json::Num(self.grid_cells as f64));
+        if let Some(s) = self.speedup_vs_serial {
+            m.insert("speedup_vs_serial".to_string(), Json::Num(s));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the `BENCH_ingest.json` document.
+pub fn bench_ingest_json(records: &[IngestBenchRecord]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("ingest".to_string()));
+    top.insert(
+        "records".to_string(),
+        Json::Arr(records.iter().map(IngestBenchRecord::to_json).collect()),
+    );
+    Json::Obj(top)
+}
+
+/// Write the `BENCH_ingest.json` document to disk.
+pub fn write_bench_ingest(path: &Path, records: &[IngestBenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_ingest_json(records).to_string())
+}
+
 /// Format a duration in seconds with appropriate precision.
 pub fn fmt_secs(d: Duration) -> String {
     let s = secs(d);
@@ -1406,6 +1590,53 @@ mod tests {
         assert_eq!(recs[2].get("catchups").unwrap().as_usize(), Some(2));
         let ok = recs[2].get("catchup_ok").unwrap().as_f64().unwrap();
         assert!((ok - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ingest_bench_json_roundtrips() {
+        let serial = IngestBenchRecord::from_run(
+            "retailer-trace",
+            "serial",
+            1,
+            1,
+            10_000,
+            200,
+            5,
+            2.0,
+            380_000,
+            420_000,
+            81,
+        );
+        assert!((serial.deltas_per_sec - 500.0).abs() < 1e-9);
+        let max = IngestBenchRecord::from_run(
+            "retailer-trace",
+            "epochd-max",
+            8,
+            8,
+            10_000,
+            200,
+            5,
+            0.5,
+            95_000,
+            140_000,
+            81,
+        )
+        .with_speedup_vs(&serial);
+        assert!((max.speedup_vs_serial.unwrap() - 4.0).abs() < 1e-9);
+        assert!(max.line().contains("vs serial"));
+
+        let doc = bench_ingest_json(&[serial, max]);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("ingest"));
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+        let recs = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("mode").unwrap().as_str(), Some("serial"));
+        assert!(recs[0].get("speedup_vs_serial").is_none());
+        assert_eq!(recs[1].get("producers").unwrap().as_usize(), Some(8));
+        assert_eq!(recs[1].get("epoch_p50_us").unwrap().as_usize(), Some(95_000));
+        let s = recs[1].get("speedup_vs_serial").unwrap().as_f64().unwrap();
+        assert!((s - 4.0).abs() < 1e-9);
     }
 
     #[test]

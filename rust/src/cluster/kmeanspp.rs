@@ -10,6 +10,22 @@ use crate::util::SplitMix64;
 /// `dist2(i, j)` must return the squared distance between points `i` and
 /// `j`. The first seed is drawn proportionally to `weights`; each
 /// subsequent seed proportionally to `w_i · min_c d²(i, c)`.
+///
+/// # Examples
+///
+/// ```
+/// use rkmeans::cluster::kmeanspp_indices;
+/// use rkmeans::util::SplitMix64;
+///
+/// let pts = [0.0_f64, 0.5, 10.0, 10.5, 20.0];
+/// let w = [1.0; 5];
+/// let d2 = |i: usize, j: usize| (pts[i] - pts[j]) * (pts[i] - pts[j]);
+/// let seeds = kmeanspp_indices(5, &w, 3, &mut SplitMix64::new(7), d2);
+/// assert_eq!(seeds.len(), 3);
+/// // Deterministic for a fixed RNG seed.
+/// let again = kmeanspp_indices(5, &w, 3, &mut SplitMix64::new(7), d2);
+/// assert_eq!(seeds, again);
+/// ```
 pub fn kmeanspp_indices(
     n: usize,
     weights: &[f64],

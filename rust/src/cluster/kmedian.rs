@@ -87,6 +87,22 @@ impl L1Oracle {
 }
 
 /// Optimal weighted 1-D k-median (duplicates merged, values sorted).
+///
+/// # Examples
+///
+/// ```
+/// use rkmeans::cluster::kmedian1d;
+///
+/// // Two separated groups; the optimal 2-median splits them and puts
+/// // each center at its group's weighted median.
+/// let pts = [(0.0, 1.0), (1.0, 2.0), (2.0, 1.0), (10.0, 1.0), (11.0, 1.0)];
+/// let r = kmedian1d(&pts, 2);
+/// assert_eq!(r.centers, vec![1.0, 10.0]);
+/// assert_eq!(r.assign(1.4), 0);
+/// assert_eq!(r.assign(9.0), 1);
+/// // cost = |0−1| + 2·|1−1| + |2−1| + |10−10| + |11−10| = 3
+/// assert!((r.cost - 3.0).abs() < 1e-12);
+/// ```
 pub fn kmedian1d(points: &[(f64, f64)], k: usize) -> Kmedian1dResult {
     assert!(k >= 1, "k must be positive");
     let mut pts: Vec<(f64, f64)> = points.iter().copied().filter(|&(_, w)| w > 0.0).collect();
@@ -174,6 +190,25 @@ pub struct KmedianResult {
 
 /// Dense weighted k-median: assign by ℓ1 distance, update each cluster's
 /// center as the coordinate-wise weighted median.
+///
+/// # Examples
+///
+/// ```
+/// use rkmeans::cluster::weighted_kmedian;
+///
+/// // Six 2-D points in two tight blobs, unit weights.
+/// let pts = [0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 9.0, 9.0, 9.0, 10.0, 10.0, 9.0];
+/// let w = [1.0; 6];
+/// let r = weighted_kmedian(&pts, &w, 2, 2, 25, 42);
+/// // Each blob gets one label; the blobs get different labels.
+/// assert_eq!(r.assign[0], r.assign[1]);
+/// assert_eq!(r.assign[1], r.assign[2]);
+/// assert_eq!(r.assign[3], r.assign[4]);
+/// assert_eq!(r.assign[4], r.assign[5]);
+/// assert_ne!(r.assign[0], r.assign[3]);
+/// // Coordinate-wise medians: (0, 0) and (9, 9); ℓ1 objective 2 + 2.
+/// assert!((r.objective - 4.0).abs() < 1e-12);
+/// ```
 pub fn weighted_kmedian(
     points: &[f64],
     weights: &[f64],

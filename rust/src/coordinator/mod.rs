@@ -16,6 +16,14 @@
 //!   `Õ(|D|)` pipeline **rebuild** when the planner's drift / batch-size
 //!   triggers fire (or when `incremental` is disabled / the FEQ is
 //!   cyclic, in which case every job is a rebuild, as before).
+//! * **Multi-producer ingest** — [`Coordinator::start_multi`] swaps the
+//!   single message stream for the sharded ingest tier
+//!   ([`crate::ingest`]): P epoch-stamping [`IngestProducer`] handles
+//!   feed S bounded shard queues, the worker pumps the [`IngestHub`]
+//!   (barrier-free shard-local Step-3 patching) and publishes exactly
+//!   one update per fully-drained epoch, tagged
+//!   [`ClusteringUpdate::epoch`]; after a planner rebuild the hub is
+//!   rebased onto the new Step-2 models.
 //! * **Versioned results** — each completed job is published on a results
 //!   channel as a [`ClusteringUpdate`] tagged with its [`UpdateMode`];
 //!   consumers read the latest. On shutdown the worker first **drains**
@@ -69,8 +77,9 @@
 
 use crate::data::{Database, Value};
 use crate::incremental::{
-    IncrementalEngine, PlanDecision, PlannerOpts, TupleDelta,
+    apply_to_db, assigner_map, IncrementalEngine, PlanDecision, PlannerOpts, TupleDelta,
 };
+use crate::ingest::{IngestConfig, IngestHub, IngestProducer};
 use crate::metrics::{Counter, Metrics};
 use crate::query::{Feq, Hypergraph};
 use crate::rkmeans::{RkConfig, RkModel, RkPipeline, RkResult};
@@ -95,6 +104,16 @@ pub struct CoordinatorConfig {
     pub incremental: bool,
     /// Planner thresholds (used when `incremental` is on).
     pub planner: PlannerOpts,
+    /// Independent epoch-stamping producers for the multi-producer ingest
+    /// tier ([`Coordinator::start_multi`]). [`Coordinator::start`]
+    /// ignores this: its single `insert`/`delete` stream has exactly one
+    /// logical producer.
+    pub producers: usize,
+    /// Ingest-queue shard count for [`Coordinator::start_multi`] (the
+    /// hub runs one bounded queue + one delta state per shard; see
+    /// [`crate::ingest`]). Independent of [`PlannerOpts::shards`], which
+    /// shards the single-stream engine's own delta layer.
+    pub shards: usize,
 }
 
 impl CoordinatorConfig {
@@ -106,6 +125,8 @@ impl CoordinatorConfig {
             rk,
             incremental: true,
             planner: PlannerOpts::default(),
+            producers: 1,
+            shards: 1,
         }
     }
 }
@@ -136,6 +157,11 @@ pub struct ClusteringUpdate {
     /// Patch or rebuild (always [`UpdateMode::Rebuilt`] with the planner
     /// disabled).
     pub mode: UpdateMode,
+    /// The ingest epoch this update covers — multi-producer mode only
+    /// ([`Coordinator::start_multi`]), where every published version
+    /// corresponds to exactly one fully-drained epoch (`Some(0)` is the
+    /// initial build). `None` on the single-stream path.
+    pub epoch: Option<u64>,
 }
 
 impl ClusteringUpdate {
@@ -154,6 +180,10 @@ enum Msg {
     Flush,
     Shutdown,
 }
+
+/// Multi-producer worker poll cadence: the ingest hub is pumped at least
+/// this often even when no control message arrives.
+const PUMP_INTERVAL: Duration = Duration::from_millis(5);
 
 /// Handle to the coordinator worker.
 pub struct Coordinator {
@@ -232,6 +262,7 @@ impl Coordinator {
                                 result,
                                 elapsed: t0.elapsed(),
                                 mode: UpdateMode::Rebuilt,
+                                epoch: None,
                             };
                             let _ = res_tx.try_send(update.clone());
                             *last = Some(update);
@@ -274,6 +305,7 @@ impl Coordinator {
                                 result,
                                 elapsed: t0.elapsed(),
                                 mode,
+                                epoch: None,
                             };
                             let _ = res_tx.try_send(update.clone());
                             *last = Some(update);
@@ -308,6 +340,7 @@ impl Coordinator {
                             result: Arc::new(result),
                             elapsed: t0.elapsed(),
                             mode: UpdateMode::Rebuilt,
+                            epoch: None,
                         };
                         let _ = res_tx.try_send(update.clone());
                         *last = Some(update);
@@ -399,6 +432,201 @@ impl Coordinator {
             bp_events,
             bp_wait_us,
         }
+    }
+
+    /// Start the worker in multi-producer mode: data flows through the
+    /// returned epoch-stamping [`IngestProducer`] handles (one per
+    /// `cfg.producers`) into `cfg.shards` bounded shard queues
+    /// ([`crate::ingest`]) — not through [`Coordinator::insert`] /
+    /// [`Coordinator::delete`], which are counted as
+    /// `coordinator.insert_errors` here. The worker pumps the
+    /// [`IngestHub`] continuously: every epoch all producers have sealed
+    /// and all shards have drained through is closed, mirrored onto the
+    /// worker's database, planned through
+    /// [`IncrementalEngine::apply_epoch`], and published as exactly one
+    /// [`ClusteringUpdate`] tagged with its epoch
+    /// ([`ClusteringUpdate::epoch`]). When the planner votes rebuild, the
+    /// hub is rebased onto the rebuilt Step-2 models before the next
+    /// pump (in-flight epochs are replayed inside the rebase).
+    ///
+    /// Fails when the FEQ is invalid or cyclic — unlike
+    /// [`Coordinator::start`] there is no recompute-everything fallback,
+    /// because the epoch protocol is only defined on the planner path.
+    ///
+    /// Shutdown closes only fully-sealed epochs: producers must seal
+    /// their last epoch before the coordinator is shut down, or that
+    /// epoch's deltas are discarded with the hub.
+    pub fn start_multi(
+        db: Database,
+        feq: Feq,
+        cfg: CoordinatorConfig,
+    ) -> Result<(Coordinator, Vec<IngestProducer>)> {
+        let metrics = Metrics::new();
+        let t0 = crate::util::timer::now();
+        let engine = IncrementalEngine::new(
+            &db,
+            feq.clone(),
+            cfg.rk.clone(),
+            cfg.planner.clone(),
+            metrics.clone(),
+        )?;
+        let init_elapsed = t0.elapsed();
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree()?;
+        let icfg = IngestConfig {
+            producers: cfg.producers.max(1),
+            shards: cfg.shards.max(1),
+            queue_capacity: cfg.channel_capacity,
+            spill_budget: cfg.planner.spill_budget,
+        };
+        let hub = IngestHub::new(
+            &db,
+            &feq,
+            &tree,
+            &icfg,
+            || assigner_map(engine.models()),
+            metrics.clone(),
+        )?;
+        let producers: Vec<IngestProducer> =
+            (0..icfg.producers).map(|i| hub.producer(i)).collect();
+
+        let (tx, rx) = sync_channel::<Msg>(cfg.channel_capacity);
+        let (res_tx, res_rx) = sync_channel::<ClusteringUpdate>(16);
+        let m = metrics.clone();
+
+        let worker = std::thread::spawn(move || {
+            let mut db = db;
+            let mut hub = hub;
+            let mut engine = engine;
+            let mut ingested = 0u64;
+            let mut last_published: Option<ClusteringUpdate>;
+            let job_ctr = m.counter("coordinator.jobs");
+            let err_ctr = m.counter("coordinator.insert_errors");
+
+            // Publish the engine's initial full build so consumers hold a
+            // model before the first epoch closes.
+            job_ctr.inc();
+            let update = ClusteringUpdate {
+                version: engine.version(),
+                ingested,
+                result: engine.shared_result(),
+                elapsed: init_elapsed,
+                mode: UpdateMode::Rebuilt,
+                epoch: Some(0),
+            };
+            let _ = res_tx.try_send(update.clone());
+            last_published = Some(update);
+
+            let run_epochs = |hub: &mut IngestHub,
+                              engine: &mut IncrementalEngine,
+                              db: &mut Database,
+                              ingested: &mut u64,
+                              last: &mut Option<ClusteringUpdate>| {
+                let patches = {
+                    // Borrow the current models through the shared result
+                    // so the pump's pool jobs get a Sync assigner source.
+                    let shared = engine.shared_result();
+                    match hub.pump(|| assigner_map(&shared.models)) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            eprintln!("coordinator: ingest pump failed ({e})");
+                            return;
+                        }
+                    }
+                };
+                for patch in patches {
+                    if let Err(e) = apply_to_db(db, &patch.deltas) {
+                        eprintln!(
+                            "coordinator: epoch {} cannot mirror onto the database \
+                             ({e}); dropping the epoch",
+                            patch.epoch
+                        );
+                        continue;
+                    }
+                    let t0 = crate::util::timer::now();
+                    match engine.apply_epoch(db, &patch) {
+                        Ok((decision, result)) => {
+                            let rebuilt = matches!(decision, PlanDecision::Rebuilt(_));
+                            if rebuilt {
+                                // New Step-2 models: re-anchor the hub's
+                                // shard grids on the rebuilt boundary.
+                                let shared = engine.shared_result();
+                                if let Err(e) =
+                                    hub.rebase(db, || assigner_map(&shared.models))
+                                {
+                                    eprintln!("coordinator: hub rebase failed ({e})");
+                                }
+                            }
+                            *ingested += patch.stats.deltas as u64;
+                            job_ctr.inc();
+                            let update = ClusteringUpdate {
+                                version: engine.version(),
+                                ingested: *ingested,
+                                result,
+                                elapsed: t0.elapsed(),
+                                mode: if rebuilt {
+                                    UpdateMode::Rebuilt
+                                } else {
+                                    UpdateMode::Patched
+                                },
+                                epoch: Some(patch.epoch),
+                            };
+                            let _ = res_tx.try_send(update.clone());
+                            *last = Some(update);
+                        }
+                        Err(e) => {
+                            eprintln!("coordinator: epoch {} job failed ({e})", patch.epoch)
+                        }
+                    }
+                }
+            };
+
+            loop {
+                match rx.recv_timeout(PUMP_INTERVAL) {
+                    // Data must arrive epoch-stamped through the producer
+                    // handles; the unstamped single-stream API has no
+                    // place in the epoch protocol.
+                    Ok(Msg::Insert { .. }) | Ok(Msg::Delete { .. }) => err_ctr.inc(),
+                    Ok(Msg::Flush) | Err(RecvTimeoutError::Timeout) => run_epochs(
+                        &mut hub,
+                        &mut engine,
+                        &mut db,
+                        &mut ingested,
+                        &mut last_published,
+                    ),
+                    Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                        // Everything producers enqueued before shutdown is
+                        // already in the shard queues (their sends
+                        // returned): one final pump closes every
+                        // fully-sealed epoch.
+                        run_epochs(
+                            &mut hub,
+                            &mut engine,
+                            &mut db,
+                            &mut ingested,
+                            &mut last_published,
+                        );
+                        break;
+                    }
+                }
+            }
+            (db, last_published)
+        });
+
+        let enqueued = metrics.counter("coordinator.enqueued");
+        let bp_events = metrics.counter("coordinator.backpressure_events");
+        let bp_wait_us = metrics.counter("coordinator.backpressure_wait_us");
+        Ok((
+            Coordinator {
+                tx,
+                results: Mutex::new(res_rx),
+                worker: Some(worker),
+                metrics,
+                enqueued,
+                bp_events,
+                bp_wait_us,
+            },
+            producers,
+        ))
     }
 
     /// Send with backpressure accounting: a full queue blocks the
@@ -734,6 +962,115 @@ mod tests {
         let (db, feq) = setup();
         let coord = Coordinator::start(db, feq, CoordinatorConfig::new(RkConfig::new(2)));
         drop(coord); // must not hang or panic
+    }
+
+    fn lenient_planner() -> PlannerOpts {
+        PlannerOpts {
+            drift_threshold: 1.1,
+            max_patch_fraction: 1.0,
+            rebuild_every: 0,
+            max_join_churn: f64::INFINITY,
+            ..PlannerOpts::default()
+        }
+    }
+
+    #[test]
+    fn multi_producer_epochs_publish_versions() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.producers = 2;
+        cfg.shards = 2;
+        cfg.planner = lenient_planner();
+        let (coord, producers) = Coordinator::start_multi(db, feq, cfg).unwrap();
+        let first = coord.recv_update(Duration::from_secs(30)).expect("initial build");
+        assert_eq!(first.version, 1);
+        assert_eq!(first.mode, UpdateMode::Rebuilt);
+        assert_eq!(first.epoch, Some(0));
+
+        // Epoch 1: both producers contribute, then seal.
+        for i in 0..6u32 {
+            let d = TupleDelta::insert(
+                "fact",
+                vec![Value::Cat(i % 4), Value::Double(i as f64 + 50.0)],
+            );
+            producers[(i % 2) as usize].send(1, d).unwrap();
+        }
+        producers[0].seal(1).unwrap();
+        producers[1].seal(1).unwrap();
+        let second = coord.recv_update(Duration::from_secs(30)).expect("epoch 1");
+        assert_eq!(second.version, 2);
+        assert_eq!(second.epoch, Some(1));
+        assert_eq!(second.ingested, 6);
+        assert_eq!(second.mode, UpdateMode::Patched);
+        assert!(second.result.grid_points > 0);
+
+        // An epoch sealed right before shutdown still publishes: the
+        // final pump drains it.
+        producers[0]
+            .send(2, TupleDelta::delete("fact", vec![Value::Cat(0), Value::Double(0.0)]))
+            .unwrap();
+        producers[0].seal(2).unwrap();
+        producers[1].seal(2).unwrap();
+        let (db, last) = coord.shutdown_with_final().unwrap();
+        let last = last.expect("final update");
+        assert_eq!(last.epoch, Some(2));
+        assert_eq!(last.ingested, 7);
+        // 20 base rows + 6 inserts; the delete retracts in place.
+        assert_eq!(db.get("fact").unwrap().n_rows(), 26);
+    }
+
+    #[test]
+    fn multi_mode_rejects_direct_ingestion() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.planner = lenient_planner();
+        let (coord, _producers) = Coordinator::start_multi(db, feq, cfg).unwrap();
+        let m = coord.metrics().clone();
+        coord.insert("fact", vec![Value::Cat(0), Value::Double(1.0)]).unwrap();
+        coord.delete("fact", vec![Value::Cat(0), Value::Double(0.0)]).unwrap();
+        coord.shutdown().unwrap();
+        assert_eq!(m.counter("coordinator.insert_errors").get(), 2);
+    }
+
+    #[test]
+    fn multi_mode_rebuild_rebases_hub_and_keeps_publishing() {
+        let (db, feq) = setup();
+        let mut cfg = CoordinatorConfig::new(RkConfig::new(2));
+        cfg.producers = 1;
+        cfg.shards = 2;
+        cfg.planner = PlannerOpts { rebuild_every: 1, ..lenient_planner() };
+        let (coord, producers) = Coordinator::start_multi(db, feq, cfg).unwrap();
+        let p = &producers[0];
+        let _ = coord.recv_update(Duration::from_secs(30)).expect("initial build");
+
+        let mut modes = Vec::new();
+        for epoch in 1..=3u64 {
+            for i in 0..4u32 {
+                p.send(
+                    epoch,
+                    TupleDelta::insert(
+                        "fact",
+                        vec![Value::Cat(i % 4), Value::Double((epoch * 10 + i as u64) as f64)],
+                    ),
+                )
+                .unwrap();
+            }
+            p.seal(epoch).unwrap();
+            let u = coord.recv_update(Duration::from_secs(30)).expect("epoch update");
+            assert_eq!(u.epoch, Some(epoch));
+            assert_eq!(u.version, 1 + epoch);
+            assert!(u.result.grid_points > 0);
+            modes.push(u.mode);
+        }
+        // rebuild_every = 1: patch, scheduled rebuild (hub rebased), then
+        // the next epoch must patch again over the rebased hub.
+        assert_eq!(
+            modes,
+            vec![UpdateMode::Patched, UpdateMode::Rebuilt, UpdateMode::Patched]
+        );
+        let m = coord.metrics().clone();
+        coord.shutdown().unwrap();
+        assert_eq!(m.counter("ingest.epochs_closed").get(), 3);
     }
 
     #[test]

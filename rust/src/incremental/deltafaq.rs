@@ -39,6 +39,23 @@
 //! Step-2 models the state was initialized with (stable gid maps are what
 //! the marginal-drift trigger in [`super::marginal`] protects); a changed
 //! bit layout is detected and rejected.
+//!
+//! ## Cold-key spilling
+//!
+//! Under a multi-shard ingest tier every shard holds its own retained
+//! message state, so resident memory scales with shard count. When a
+//! spill budget is set ([`DeltaFaq::set_spill_budget`], threaded from
+//! `PlannerOpts::spill_budget`), separator-key message tables that have
+//! not been touched recently spill to a per-state append-only disk
+//! segment and are transparently reloaded the next time a batch touches
+//! them. Spilling moves bytes, never values: the serialized table is
+//! restored bit-for-bit (weights round-trip through `to_bits`), so a
+//! spill-then-reload state stays **bitwise identical** to a never-spilled
+//! one — `tests/property_ingest.rs` pins this under a tiny budget. The
+//! root message (the grid itself) is never spilled, and
+//! [`DeltaFaq::compact`] recomputes every message from the retained rows,
+//! so compaction simply forgets the spill index. Cumulative counters are
+//! exposed through [`DeltaFaq::spill_stats`].
 
 use crate::cluster::StateSplice;
 use crate::data::{AttrType, Database, Value};
@@ -46,8 +63,11 @@ use crate::faq::gridweights::GridTable;
 use crate::faq::GidAssigner;
 use crate::query::{Feq, JoinTree};
 use crate::util::FxHashMap;
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::hash_map::Entry;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::TupleDelta;
 
@@ -75,11 +95,15 @@ pub struct PatchStats {
 /// A gid-combination key: bit-packed `u128` on the hot path, a plain
 /// per-feature `Vec<u32>` on the >128-bit fallback. Subtrees own disjoint
 /// feature sets, so combining two subtree combos is a disjoint merge.
-trait Combo: Clone + Eq + std::hash::Hash {
+/// `Ord` gives the spill serializer a deterministic entry order;
+/// `write_to`/`read_from` are its byte codec (exact round-trip).
+trait Combo: Clone + Eq + Ord + std::hash::Hash {
     fn empty(layout: &Layout) -> Self;
     fn with_gid(self, fi: usize, gid: u32, layout: &Layout) -> Self;
     fn merge(&self, other: &Self) -> Self;
     fn unpack(&self, layout: &Layout) -> Vec<u32>;
+    fn write_to(&self, out: &mut Vec<u8>);
+    fn read_from(buf: &[u8], pos: &mut usize) -> Option<Self>;
 }
 
 /// Bit layout shared with [`crate::faq::grid_weights`]: feature `fi`
@@ -122,6 +146,14 @@ impl Combo for u128 {
             .map(|&(shift, width)| ((self >> shift) & ((1u128 << width) - 1)) as u32)
             .collect()
     }
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_from(buf: &[u8], pos: &mut usize) -> Option<u128> {
+        let bytes: [u8; 16] = buf.get(*pos..*pos + 16)?.try_into().ok()?;
+        *pos += 16;
+        Some(u128::from_le_bytes(bytes))
+    }
 }
 
 impl Combo for Vec<u32> {
@@ -139,10 +171,143 @@ impl Combo for Vec<u32> {
     fn unpack(&self, _: &Layout) -> Vec<u32> {
         self.clone()
     }
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        for g in self {
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+    }
+    fn read_from(buf: &[u8], pos: &mut usize) -> Option<Vec<u32>> {
+        let len: [u8; 4] = buf.get(*pos..*pos + 4)?.try_into().ok()?;
+        *pos += 4;
+        let n = u32::from_le_bytes(len) as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let bytes: [u8; 4] = buf.get(*pos..*pos + 4)?.try_into().ok()?;
+            *pos += 4;
+            out.push(u32::from_le_bytes(bytes));
+        }
+        Some(out)
+    }
 }
 
 /// A message (or message delta): separator key → sparse combo table.
 type Msg<K> = FxHashMap<Vec<u64>, FxHashMap<K, f64>>;
+
+/// Cumulative + resident spill accounting of one [`DeltaFaq`] (see the
+/// module docs; surfaced by the planner as `incremental.spill_*`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Separator-key tables written to the spill segment, cumulative.
+    pub spilled: u64,
+    /// Tables transparently reloaded on touch, cumulative.
+    pub reloaded: u64,
+    /// Non-root message tables currently resident in memory.
+    pub resident: usize,
+    /// Tables currently parked on disk.
+    pub on_disk: usize,
+}
+
+impl SpillStats {
+    /// Elementwise sum — aggregates per-shard stats.
+    pub fn merged(self, other: SpillStats) -> SpillStats {
+        SpillStats {
+            spilled: self.spilled + other.spilled,
+            reloaded: self.reloaded + other.reloaded,
+            resident: self.resident + other.resident,
+            on_disk: self.on_disk + other.on_disk,
+        }
+    }
+}
+
+/// Process-unique suffix for spill segment paths (several states — one
+/// per ingest shard — may spill concurrently).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// An append-only on-disk segment holding spilled message tables. Shared
+/// (`Arc`) across snapshot clones of a state — offsets stay valid because
+/// nothing is ever overwritten; the file is unlinked when the last clone
+/// drops. Stale bytes from re-spilled keys are accepted overhead (the
+/// segment is bounded by churn, not by resident state).
+#[derive(Debug)]
+struct SpillFile {
+    path: std::path::PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl SpillFile {
+    fn create() -> Result<SpillFile> {
+        let path = std::env::temp_dir().join(format!(
+            "rkmeans-spill-{}-{}.bin",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("create spill segment {}", path.display()))?;
+        Ok(SpillFile { path, file: Mutex::new(file) })
+    }
+
+    fn append(&self, buf: &[u8]) -> Result<(u64, u32)> {
+        let mut f = self.file.lock().map_err(|_| anyhow!("spill segment lock poisoned"))?;
+        let off = f.seek(SeekFrom::End(0)).context("seek spill segment")?;
+        f.write_all(buf).context("append spill segment")?;
+        Ok((off, buf.len() as u32))
+    }
+
+    fn read(&self, off: u64, len: u32) -> Result<Vec<u8>> {
+        let mut f = self.file.lock().map_err(|_| anyhow!("spill segment lock poisoned"))?;
+        f.seek(SeekFrom::Start(off)).context("seek spill segment")?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).context("read spill segment")?;
+        Ok(buf)
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Serialize one message table: entry count, then `(combo, weight-bits)`
+/// records in ascending combo order (deterministic bytes, exact values).
+fn encode_table<K: Combo>(table: &FxHashMap<K, f64>) -> Vec<u8> {
+    // rklint::allow(nondet-iteration, reason = "entries are sorted by combo key before serialization; map order never reaches the spill segment")
+    let mut entries: Vec<(&K, &f64)> = table.iter().collect();
+    entries.sort_unstable_by(|a, b| a.0.cmp(b.0));
+    let mut out = Vec::with_capacity(8 + entries.len() * 24);
+    out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    for (g, w) in entries {
+        g.write_to(&mut out);
+        out.extend_from_slice(&w.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_table`]; bit-exact weights.
+fn decode_table<K: Combo>(buf: &[u8]) -> Result<FxHashMap<K, f64>> {
+    ensure!(buf.len() >= 8, "truncated spill record header");
+    let n = u64::from_le_bytes(buf[..8].try_into().expect("8-byte slice")) as usize;
+    let mut pos = 8usize;
+    let mut table = FxHashMap::default();
+    for _ in 0..n {
+        let g = K::read_from(buf, &mut pos)
+            .ok_or_else(|| anyhow!("truncated spill record combo"))?;
+        let bytes: [u8; 8] = buf
+            .get(pos..pos + 8)
+            .ok_or_else(|| anyhow!("truncated spill record weight"))?
+            .try_into()
+            .expect("8-byte slice");
+        pos += 8;
+        table.insert(g, f64::from_bits(u64::from_le_bytes(bytes)));
+    }
+    Ok(table)
+}
 
 /// One retained base tuple (aggregated by value multiset).
 #[derive(Clone, Debug)]
@@ -202,6 +367,25 @@ struct State<K> {
     live: usize,
     /// Entries removed since init/compaction (tombstoned capacity).
     dead: usize,
+    /// Max resident non-root message tables before cold keys spill
+    /// (0 = spilling disabled).
+    spill_budget: usize,
+    /// The append-only disk segment (created on first spill; shared
+    /// across snapshot clones).
+    spill: Option<Arc<SpillFile>>,
+    /// `(node, separator key)` → segment `(offset, len)` of tables
+    /// currently parked on disk. Spilled entries still count as `live`:
+    /// spilling moves residency, not liveness.
+    spill_index: FxHashMap<(usize, Vec<u64>), (u64, u32)>,
+    /// Last-touch logical stamp per resident key (only maintained while
+    /// a budget is set); missing keys stamp 0, i.e. coldest.
+    recency: FxHashMap<(usize, Vec<u64>), u64>,
+    /// Logical access clock (bumped per touch; deterministic — batches
+    /// touch keys in sorted order).
+    clock: u64,
+    /// Cumulative tables spilled / reloaded.
+    spilled_n: u64,
+    reloaded_n: u64,
 }
 
 /// Cross-product contribution of one tuple: `own × Π_j T_j(key_j)`, with
@@ -342,6 +526,13 @@ impl<K: Combo> State<K> {
             splices: Vec::new(),
             live: 0,
             dead: 0,
+            spill_budget: 0,
+            spill: None,
+            spill_index: FxHashMap::default(),
+            recency: FxHashMap::default(),
+            clock: 0,
+            spilled_n: 0,
+            reloaded_n: 0,
         };
 
         // Upward pass, retaining rows, indexes and messages.
@@ -466,6 +657,104 @@ impl<K: Combo> State<K> {
         Ok((rkey, own, child_keys, up_key))
     }
 
+    /// True when `apply` must run the touch/reload bookkeeping: either a
+    /// budget is set, or earlier spills still sit on disk after the
+    /// budget was lifted.
+    fn spilling_active(&self) -> bool {
+        self.spill_budget > 0 || !self.spill_index.is_empty()
+    }
+
+    /// Mark `(node, key)` pairs as hot, reloading any that are parked on
+    /// disk. Pairs are sorted + deduped first so the recency stamps (and
+    /// therefore later eviction choices) are independent of map
+    /// iteration order at the call sites.
+    fn touch_all(&mut self, mut pairs: Vec<(usize, Vec<u64>)>) -> Result<()> {
+        pairs.sort_unstable();
+        pairs.dedup();
+        for (u, key) in pairs {
+            self.clock += 1;
+            let stamp = self.clock;
+            if let Some((off, len)) = self.spill_index.remove(&(u, key.clone())) {
+                let file =
+                    self.spill.as_ref().ok_or_else(|| anyhow!("spill index without segment"))?;
+                let table = decode_table::<K>(&file.read(off, len)?)?;
+                self.nodes[u].msg.insert(key.clone(), table);
+                self.reloaded_n += 1;
+            }
+            self.recency.insert((u, key), stamp);
+        }
+        Ok(())
+    }
+
+    /// Spill the coldest non-root message tables until the resident count
+    /// is back under the budget. Victim order is deterministic:
+    /// `(last-touch stamp, node, key)` ascending — never the root (the
+    /// grid itself stays resident).
+    fn enforce_spill_budget(&mut self) -> Result<()> {
+        if self.spill_budget == 0 {
+            return Ok(());
+        }
+        let root = self.root;
+        let resident: usize = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(u, _)| u != root)
+            .map(|(_, n)| n.msg.len())
+            .sum();
+        if resident <= self.spill_budget {
+            return Ok(());
+        }
+        let mut candidates: Vec<(u64, usize, Vec<u64>)> = Vec::new();
+        for u in 0..self.nodes.len() {
+            if u == root {
+                continue;
+            }
+            for key in crate::util::det::sorted_keys(&self.nodes[u].msg) {
+                let stamp = self.recency.get(&(u, key.clone())).copied().unwrap_or(0);
+                candidates.push((stamp, u, key));
+            }
+        }
+        candidates.sort_unstable();
+        let mut excess = resident - self.spill_budget;
+        for (_, u, key) in candidates {
+            if excess == 0 {
+                break;
+            }
+            let Some(table) = self.nodes[u].msg.remove(&key) else { continue };
+            let file = match &self.spill {
+                Some(f) => Arc::clone(f),
+                None => {
+                    let f = Arc::new(SpillFile::create()?);
+                    self.spill = Some(Arc::clone(&f));
+                    f
+                }
+            };
+            let slot = file.append(&encode_table(&table))?;
+            self.spill_index.insert((u, key.clone()), slot);
+            self.recency.remove(&(u, key));
+            self.spilled_n += 1;
+            excess -= 1;
+        }
+        Ok(())
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        let root = self.root;
+        SpillStats {
+            spilled: self.spilled_n,
+            reloaded: self.reloaded_n,
+            resident: self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|&(u, _)| u != root)
+                .map(|(_, n)| n.msg.len())
+                .sum(),
+            on_disk: self.spill_index.len(),
+        }
+    }
+
     fn apply(
         &mut self,
         deltas: &[TupleDelta],
@@ -497,6 +786,31 @@ impl<K: Combo> State<K> {
                 let dm_c = std::mem::take(&mut delta_msgs[c]);
                 if dm_c.is_empty() {
                     continue;
+                }
+                if self.spilling_active() {
+                    // Touch set of this child's delta: the merge targets
+                    // in child `c`'s message, plus every *other* child key
+                    // the matched rows' telescoping products will read.
+                    let mut pairs: Vec<(usize, Vec<u64>)> = Vec::new();
+                    {
+                        let node_u = &self.nodes[u];
+                        for (key, dtable) in &dm_c {
+                            pairs.push((c, key.clone()));
+                            if dtable.is_empty() {
+                                continue;
+                            }
+                            let Some(rowkeys) = node_u.child_index[ci].get(key) else { continue };
+                            for rkey in rowkeys {
+                                let Some(row) = node_u.rows.get(rkey) else { continue };
+                                for (j, &cj) in children.iter().enumerate() {
+                                    if j != ci {
+                                        pairs.push((cj, row.child_keys[j].clone()));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    self.touch_all(pairs)?;
                 }
                 {
                     let nodes = &self.nodes;
@@ -534,6 +848,14 @@ impl<K: Combo> State<K> {
                 let (rkey, own, child_keys, up_key) = self
                     .row_parts(u, &d.values, assigners)
                     .with_context(|| format!("bad delta for relation {:?}", d.relation))?;
+                if self.spilling_active() {
+                    let pairs: Vec<(usize, Vec<u64>)> = children
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &cj)| (cj, child_keys[j].clone()))
+                        .collect();
+                    self.touch_all(pairs)?;
+                }
                 {
                     let nodes = &self.nodes;
                     if let Some(combos) =
@@ -655,6 +977,9 @@ impl<K: Combo> State<K> {
             }
         }
 
+        // Park the coldest tables back under the budget before reporting.
+        self.enforce_spill_budget()?;
+
         Ok(PatchStats {
             deltas: deltas.len(),
             cells_touched,
@@ -685,6 +1010,11 @@ impl<K: Combo> State<K> {
     /// state (positions may have shifted with no splice log).
     fn compact(&mut self) -> bool {
         let old_keys: Vec<Vec<u32>> = self.sorted.iter().map(|(g, _)| g.clone()).collect();
+        // The rebuild below recomputes every message from the retained
+        // rows, so parked tables are regenerated resident; forget the
+        // spill index (stale segment bytes go away when the state drops).
+        self.spill_index.clear();
+        self.recency.clear();
         let order = self.order.clone();
         for &u in &order {
             {
@@ -899,6 +1229,26 @@ impl DeltaFaq {
     /// True when the packed `u128` combo path is active.
     pub fn is_packed(&self) -> bool {
         matches!(self.inner, Inner::Packed(_))
+    }
+
+    /// Cap the resident non-root message tables at `budget` separator
+    /// keys (0 disables spilling). Takes effect at the end of the next
+    /// [`DeltaFaq::apply`]; already-parked tables keep reloading on touch
+    /// even after the budget is lifted. Spilling is residency-only: the
+    /// maintained grid stays bitwise identical to a never-spilled state.
+    pub fn set_spill_budget(&mut self, budget: usize) {
+        match &mut self.inner {
+            Inner::Packed(s) => s.spill_budget = budget,
+            Inner::Generic(s) => s.spill_budget = budget,
+        }
+    }
+
+    /// Cold-key spill accounting (see [`SpillStats`]).
+    pub fn spill_stats(&self) -> SpillStats {
+        match &self.inner {
+            Inner::Packed(s) => s.spill_stats(),
+            Inner::Generic(s) => s.spill_stats(),
+        }
     }
 }
 
@@ -1169,6 +1519,51 @@ mod tests {
         db.get_mut("fact").unwrap().push_row(&[Value::Cat(7), Value::Cat(1)]);
         let scratch = grid_weights(&db, &feq, &tree, &asg).unwrap();
         assert_eq!(cells_map(&delta.grid_table()), cells_map(&scratch));
+    }
+
+    #[test]
+    fn spill_then_reload_is_bitwise_identical_both_paths() {
+        // A tiny budget forces constant spill/reload churn; the grid must
+        // stay bitwise identical to a never-spilled twin after every
+        // batch, and after compaction (which forgets the spill index).
+        let (db, feq, tree) = setup();
+        for claimed in [3usize, 1 << 60] {
+            let asg = assigners(3, claimed);
+            let mut plain = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+            let mut spilly = DeltaFaq::init(&db, &feq, &tree, &asg).unwrap();
+            spilly.set_spill_budget(1);
+            let batches = vec![
+                vec![TupleDelta::insert("fact", vec![Value::Cat(5), Value::Cat(2)])],
+                vec![TupleDelta::insert("dim", vec![Value::Cat(2), Value::Cat(5)])],
+                vec![
+                    TupleDelta::insert("dim", vec![Value::Cat(5), Value::Cat(1)]),
+                    TupleDelta::delete("fact", vec![Value::Cat(0), Value::Cat(0)]),
+                ],
+                vec![TupleDelta::delete("dim", vec![Value::Cat(2), Value::Cat(5)])],
+            ];
+            for batch in &batches {
+                plain.apply(batch, &asg).unwrap();
+                spilly.apply(batch, &asg).unwrap();
+                assert_eq!(
+                    cells_map(&spilly.grid_table()),
+                    cells_map(&plain.grid_table()),
+                    "spilled state diverged (claimed={claimed})"
+                );
+            }
+            let st = spilly.spill_stats();
+            assert!(st.spilled > 0, "budget 1 must force spills (claimed={claimed})");
+            assert!(st.reloaded > 0, "touches must reload parked tables (claimed={claimed})");
+            assert!(st.resident <= 1, "budget must hold after apply (claimed={claimed})");
+            assert_eq!(plain.spill_stats(), SpillStats::default());
+            assert!(spilly.compact(), "ℤ weights: compaction preserves the layout");
+            assert_eq!(spilly.spill_stats().on_disk, 0, "compaction forgets the index");
+            assert_eq!(cells_map(&spilly.grid_table()), cells_map(&plain.grid_table()));
+            // And patching keeps working after compaction re-residented all.
+            let more = vec![TupleDelta::insert("fact", vec![Value::Cat(7), Value::Cat(1)])];
+            plain.apply(&more, &asg).unwrap();
+            spilly.apply(&more, &asg).unwrap();
+            assert_eq!(cells_map(&spilly.grid_table()), cells_map(&plain.grid_table()));
+        }
     }
 
     #[test]

@@ -45,12 +45,13 @@ pub mod marginal;
 pub mod planner;
 pub mod sharded;
 
-pub use deltafaq::{DeltaFaq, PatchStats};
+pub use deltafaq::{DeltaFaq, PatchStats, SpillStats};
 pub use marginal::{CatSketch, ContSketch, MarginalTracker};
 pub use planner::{
-    IncrementalEngine, IncrementalState, PlanDecision, PlannerOpts, RebuildReason,
+    assigner_map, EpochPatch, IncrementalEngine, IncrementalState, PlanDecision, PlannerOpts,
+    RebuildReason,
 };
-pub use sharded::{DeltaLayer, ShardedDeltaFaq};
+pub use sharded::{AssignerMap, DeltaLayer, ShardedDeltaFaq};
 
 use crate::data::{Database, Value};
 use anyhow::{ensure, Result};

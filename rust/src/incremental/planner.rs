@@ -91,6 +91,20 @@ pub struct PlannerOpts {
     /// integer-weighted databases every published result is bitwise
     /// identical to the unsharded planner's.
     pub shards: usize,
+    /// Learn the patch-vs-rebuild crossover from observed latencies (cost
+    /// model v1): exponentially-weighted per-delta patch cost and rebuild
+    /// cost estimates replace the static `max_patch_fraction` size check
+    /// once both paths have been observed — rebuild when the predicted
+    /// patch cost strictly exceeds the predicted rebuild cost (ties
+    /// deterministically patch). Quality triggers (drift, churn,
+    /// schedule) stay active; they guard correctness, not cost.
+    pub cost_model: bool,
+    /// Cold-key spill budget for the retained Step-3 messages: maximum
+    /// resident non-root separator-key tables per [`super::DeltaFaq`]
+    /// state (per shard on the sharded path); colder keys spill to disk
+    /// and reload on touch ([`super::DeltaFaq::set_spill_budget`]).
+    /// 0 disables spilling.
+    pub spill_budget: usize,
 }
 
 impl Default for PlannerOpts {
@@ -103,6 +117,8 @@ impl Default for PlannerOpts {
             carry_state: true,
             compact_ratio: 0.5,
             shards: 1,
+            cost_model: false,
+            spill_budget: 0,
         }
     }
 }
@@ -129,8 +145,31 @@ pub enum RebuildReason {
     Schedule,
     /// Cumulative join-level churn passed `max_join_churn`·mass.
     JoinChurn,
+    /// The learned cost model predicted the patch would cost more than a
+    /// rebuild ([`PlannerOpts::cost_model`]).
+    CostModel,
     /// The patch path failed (error text); state was re-initialized.
     PatchFailed(String),
+}
+
+/// One closed ingest epoch, as the multi-producer tier hands it to
+/// [`IncrementalEngine::apply_epoch`]: the merged grid at the epoch
+/// boundary, the composed splice log against the previously published
+/// grid, the epoch's logical single-stream delta sequence (for the
+/// marginal tracker and the rebuild triggers), and the aggregated patch
+/// stats. Built by [`crate::ingest::IngestHub`].
+#[derive(Clone, Debug)]
+pub struct EpochPatch {
+    /// The closed epoch number.
+    pub epoch: u64,
+    /// The epoch's deltas in canonical (serial-equivalent) order.
+    pub deltas: Vec<TupleDelta>,
+    /// Merged sorted grid snapshot at the epoch boundary.
+    pub table: crate::faq::GridTable,
+    /// Structural edits vs the previous epoch's merged snapshot.
+    pub splices: Vec<crate::cluster::StateSplice>,
+    /// Aggregated Step-3 stats of the epoch.
+    pub stats: super::PatchStats,
 }
 
 /// Snapshot of everything the serving layer needs to answer queries at a
@@ -185,9 +224,28 @@ pub struct IncrementalEngine {
     join_churn: f64,
     /// Seconds of the last observed rebuild (savings estimate).
     last_rebuild_s: f64,
+    /// Cost model v1: exponentially-weighted per-delta patch seconds,
+    /// `None` until the first patch has been observed.
+    ew_patch_per_delta_s: Option<f64>,
+    /// Exponentially-weighted rebuild seconds, `None` until observed.
+    ew_rebuild_s: Option<f64>,
 }
 
-fn assigner_map(models: &[SubspaceModel]) -> FxHashMap<String, Box<dyn GidAssigner + '_>> {
+/// Exponentially-weighted update (α = 0.3); the first observation seeds
+/// the estimate directly.
+fn ew_update(prev: Option<f64>, obs: f64) -> Option<f64> {
+    const ALPHA: f64 = 0.3;
+    Some(match prev {
+        Some(p) => p + ALPHA * (obs - p),
+        None => obs,
+    })
+}
+
+/// Borrow a frozen Step-2 model set as the gid-assigner map the FAQ
+/// layers consume. The ingest tier builds its shard-local maps from
+/// [`IncrementalEngine::models`] through this, which is what keeps the
+/// hub's grids bitwise-aligned with the engine's.
+pub fn assigner_map(models: &[SubspaceModel]) -> FxHashMap<String, Box<dyn GidAssigner + '_>> {
     let mut m: FxHashMap<String, Box<dyn GidAssigner + '_>> = FxHashMap::default();
     for model in models {
         m.insert(model.name.clone(), Box::new(model));
@@ -210,7 +268,7 @@ impl IncrementalEngine {
         let tree = Hypergraph::from_feq(db, &feq)
             .join_tree()
             .context("incremental maintenance requires an acyclic FEQ")?;
-        let (state, elapsed_s) = Self::full_build(db, &feq, &tree, &rk, 0, opts.shards)?;
+        let (state, elapsed_s) = Self::full_build(db, &feq, &tree, &rk, 0, &opts)?;
         let mut engine = IncrementalEngine {
             feq,
             tree,
@@ -221,6 +279,8 @@ impl IncrementalEngine {
             patches_since_rebuild: 0,
             join_churn: 0.0,
             last_rebuild_s: elapsed_s,
+            ew_patch_per_delta_s: None,
+            ew_rebuild_s: None,
         };
         engine.record_rebuild(elapsed_s, &RebuildReason::Init);
         Ok(engine)
@@ -233,8 +293,9 @@ impl IncrementalEngine {
         tree: &JoinTree,
         rk: &RkConfig,
         version: u64,
-        shards: usize,
+        opts: &PlannerOpts,
     ) -> Result<(IncrementalState, f64)> {
+        let shards = opts.shards;
         let t0 = crate::util::timer::now();
         // Staged pipeline over the caller's tree (bitwise-identical to the
         // monolithic shim; see `crate::rkmeans::pipeline`). Stages are run
@@ -252,7 +313,9 @@ impl IncrementalEngine {
         let result = Arc::new(model.into_result());
         let delta = {
             let models = &result.models;
-            DeltaLayer::init(db, feq, tree, shards, || assigner_map(models))?
+            let mut delta = DeltaLayer::init(db, feq, tree, shards, || assigner_map(models))?;
+            delta.set_spill_budget(opts.spill_budget);
+            delta
         };
         let tracker = MarginalTracker::new(db, feq)?;
         let state = IncrementalState {
@@ -289,7 +352,7 @@ impl IncrementalEngine {
             }
             None => match self.try_patch(deltas) {
                 Ok(elapsed) => {
-                    self.record_patch(elapsed);
+                    self.record_patch(elapsed, deltas.len());
                     PlanDecision::Patched
                 }
                 Err(e) => {
@@ -309,9 +372,23 @@ impl IncrementalEngine {
         if self.opts.rebuild_every > 0 && self.patches_since_rebuild >= self.opts.rebuild_every {
             return Some(RebuildReason::Schedule);
         }
-        let total = db.total_rows().max(1) as f64;
-        if deltas.len() as f64 > self.opts.max_patch_fraction * total {
-            return Some(RebuildReason::BatchTooLarge);
+        // Batch-size economics: the learned crossover once both paths
+        // have been observed (rebuild only when the predicted patch cost
+        // strictly exceeds the predicted rebuild cost — ties patch, so
+        // the decision is deterministic for equal estimates), the static
+        // fraction threshold otherwise.
+        match (self.opts.cost_model, self.ew_patch_per_delta_s, self.ew_rebuild_s) {
+            (true, Some(per_delta), Some(rebuild_s)) => {
+                if per_delta * deltas.len() as f64 > rebuild_s {
+                    return Some(RebuildReason::CostModel);
+                }
+            }
+            _ => {
+                let total = db.total_rows().max(1) as f64;
+                if deltas.len() as f64 > self.opts.max_patch_fraction * total {
+                    return Some(RebuildReason::BatchTooLarge);
+                }
+            }
         }
         if self.join_churn > self.opts.max_join_churn * self.state.result.grid_mass.max(1.0) {
             return Some(RebuildReason::JoinChurn);
@@ -330,7 +407,7 @@ impl IncrementalEngine {
             &self.tree,
             &self.rk,
             self.state.version,
-            self.opts.shards,
+            &self.opts,
         )?;
         self.state = state;
         self.patches_since_rebuild = 0;
@@ -415,18 +492,126 @@ impl IncrementalEngine {
         self.metrics
             .counter("incremental.cells_touched")
             .add(patch_stats.cells_touched as u64);
+        self.record_spill_stats();
         Ok(t0.elapsed().as_secs_f64())
     }
 
-    fn record_patch(&self, elapsed_s: f64) {
+    /// Mirror the delta layer's cold-key spill accounting into gauges
+    /// (cumulative totals are gauges, not counters — the source already
+    /// accumulates).
+    fn record_spill_stats(&self) {
+        let spill = self.state.delta.spill_stats();
+        self.metrics.gauge("incremental.spill_spilled").set(spill.spilled as i64);
+        self.metrics.gauge("incremental.spill_reloaded").set(spill.reloaded as i64);
+        self.metrics.gauge("incremental.spill_resident").set(spill.resident as i64);
+        self.metrics.gauge("incremental.spill_on_disk").set(spill.on_disk as i64);
+    }
+
+    /// Plan and execute one closed ingest epoch — the multi-producer
+    /// analogue of [`IncrementalEngine::apply_batch`]. The Step-3 work
+    /// already happened shard-locally inside the ingest hub, so the patch
+    /// path here is tracker upkeep plus the Step-4 resume over the hub's
+    /// merged grid and composed splice log. `db` must already mirror the
+    /// epoch's deltas. When a quality trigger (drift, churn, schedule) or
+    /// the cost model votes rebuild, the full pipeline runs from `db` —
+    /// the caller must then rebase the hub onto the rebuilt boundary
+    /// (see [`crate::ingest::IngestHub::rebase`]).
+    pub fn apply_epoch(
+        &mut self,
+        db: &Database,
+        epoch: &EpochPatch,
+    ) -> Result<(PlanDecision, Arc<RkResult>)> {
+        for d in &epoch.deltas {
+            self.state.tracker.apply(d);
+        }
+        let reason = self.rebuild_reason(db, &epoch.deltas);
+        let decision = match reason {
+            Some(reason) => {
+                let elapsed = self.rebuild(db, &reason)?;
+                self.record_rebuild(elapsed, &reason);
+                PlanDecision::Rebuilt(reason)
+            }
+            None => match self.try_epoch_patch(epoch) {
+                Ok(elapsed) => {
+                    self.record_patch(elapsed, epoch.deltas.len());
+                    PlanDecision::Patched
+                }
+                Err(e) => {
+                    let reason = RebuildReason::PatchFailed(e.to_string());
+                    let elapsed = self.rebuild(db, &reason)?;
+                    self.record_rebuild(elapsed, &reason);
+                    PlanDecision::Rebuilt(reason)
+                }
+            },
+        };
+        Ok((decision, self.state.result.clone()))
+    }
+
+    /// Step-4 resume over a hub-closed epoch (see
+    /// [`IncrementalEngine::apply_epoch`]): splice the carried state over
+    /// the epoch's composed edits, rebuild the staged coreset from the
+    /// merged grid, resume Lloyd from the previous centroids. Returns
+    /// elapsed seconds; on error the caller rebuilds.
+    fn try_epoch_patch(&mut self, epoch: &EpochPatch) -> Result<f64> {
+        let t0 = crate::util::timer::now();
+        if let Some(st) = self.state.engine_state.as_mut() {
+            st.splice(&epoch.splices);
+        }
+        let (grid, subspaces) = sparse_from_table(epoch.table.clone(), &self.state.models);
+        if grid.n() == 0 {
+            bail!("FEQ output is empty after the epoch: nothing to cluster");
+        }
+        let coreset = Coreset::from_parts(grid, subspaces, self.state.models.clone());
+        let step3 = t0.elapsed();
+
+        let t1 = crate::util::timer::now();
+        let carried =
+            if self.opts.carry_state { self.state.engine_state.as_ref() } else { None };
+        let k_eff = self.rk.k.min(coreset.n()).max(1);
+        let resumed = carried
+            .map(|st| st.bounds_valid() && st.k() == k_eff && st.n() == coreset.n())
+            .unwrap_or(false);
+        if resumed {
+            self.metrics.counter("incremental.resumes").inc();
+        }
+        let (model, next_state) = coreset.cluster_resume(
+            &ClusterOpts::from_config(&self.rk),
+            Some(&self.state.centroids),
+            carried,
+        );
+        let mut model = model.with_version(self.state.version + 1);
+        model.timings = StepTimings {
+            step3_grid: step3,
+            step4_cluster: t1.elapsed(),
+            ..StepTimings::default()
+        };
+
+        self.state.centroids = model.centroids.clone();
+        self.state.engine_state = Some(next_state);
+        self.state.version += 1;
+        self.state.result = Arc::new(model.into_result());
+        self.patches_since_rebuild += 1;
+        self.join_churn += epoch.stats.mass_delta_abs;
+        self.metrics.gauge("incremental.grid_cells").set(epoch.stats.grid_cells as i64);
+        self.metrics.counter("incremental.cells_touched").add(epoch.stats.cells_touched as u64);
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn record_patch(&mut self, elapsed_s: f64, n_deltas: usize) {
+        self.ew_patch_per_delta_s =
+            ew_update(self.ew_patch_per_delta_s, elapsed_s / n_deltas.max(1) as f64);
         self.metrics.counter("incremental.patches").inc();
         self.metrics.counter("incremental.patch_us").add((elapsed_s * 1e6) as u64);
         let saved = (self.last_rebuild_s - elapsed_s).max(0.0);
         self.metrics.counter("incremental.saved_us_est").add((saved * 1e6) as u64);
         self.metrics.gauge("incremental.version").set(self.state.version as i64);
+        if let Some(per) = self.ew_patch_per_delta_s {
+            self.metrics.gauge("incremental.ew_patch_ns_per_delta").set((per * 1e9) as i64);
+        }
     }
 
-    fn record_rebuild(&self, elapsed_s: f64, reason: &RebuildReason) {
+    fn record_rebuild(&mut self, elapsed_s: f64, reason: &RebuildReason) {
+        self.ew_rebuild_s = ew_update(self.ew_rebuild_s, elapsed_s);
         self.metrics.counter("incremental.rebuilds").inc();
         self.metrics.counter("incremental.rebuild_us").add((elapsed_s * 1e6) as u64);
         let reason_ctr = match reason {
@@ -435,16 +620,37 @@ impl IncrementalEngine {
             RebuildReason::BatchTooLarge => "incremental.rebuilds_batch",
             RebuildReason::Schedule => "incremental.rebuilds_schedule",
             RebuildReason::JoinChurn => "incremental.rebuilds_churn",
+            RebuildReason::CostModel => "incremental.rebuilds_cost",
             RebuildReason::PatchFailed(_) => "incremental.rebuilds_patch_failed",
         };
         self.metrics.counter(reason_ctr).inc();
         self.metrics.gauge("incremental.shards").set(self.state.delta.shard_count() as i64);
         self.metrics.gauge("incremental.version").set(self.state.version as i64);
+        self.metrics
+            .gauge("incremental.ew_rebuild_us")
+            .set(self.ew_rebuild_s.map_or(0.0, |s| s * 1e6) as i64);
+    }
+
+    /// Seed the cost-model estimates directly (tests force both regimes
+    /// without timing-dependent warm-up).
+    #[cfg(test)]
+    fn seed_cost_estimates(&mut self, patch_per_delta_s: f64, rebuild_s: f64) {
+        self.ew_patch_per_delta_s = Some(patch_per_delta_s);
+        self.ew_rebuild_s = Some(rebuild_s);
     }
 
     /// The current state version.
     pub fn version(&self) -> u64 {
         self.state.version
+    }
+
+    /// The frozen Step-2 models of the current version. An ingest hub
+    /// serving this engine derives its assigner maps from these (via
+    /// [`assigner_map`]) so its shard-local grids stay aligned; after a
+    /// rebuild the models change and the hub must be rebased
+    /// ([`crate::ingest::IngestHub::rebase`]).
+    pub fn models(&self) -> &[SubspaceModel] {
+        &self.state.models
     }
 
     /// The clustering result of the current version.
@@ -785,6 +991,78 @@ mod tests {
         // Round 3 hit the sharded planner's rebuild schedule, so both the
         // patch path and the sharded rebuild path were exercised.
         assert_eq!(metrics.counter("incremental.rebuilds_schedule").get(), 1);
+    }
+
+    #[test]
+    fn cost_model_crossover_forces_both_regimes() {
+        // The static size threshold is set so tight that *every* batch
+        // would rebuild under it; with the cost model on and both
+        // estimates seeded, the learned crossover decides instead.
+        let (mut db, feq) = setup(200, 14);
+        let opts = PlannerOpts { cost_model: true, max_patch_fraction: 1e-9, ..lenient() };
+        let metrics = Metrics::new();
+        let mut engine =
+            IncrementalEngine::new(&db, feq, RkConfig::new(3), opts, metrics.clone()).unwrap();
+        let mut rng = SplitMix64::new(3);
+
+        // Regime 1: patches predicted ruinous (1 s per delta vs a 1 µs
+        // rebuild) — the batch must rebuild, attributed to the model.
+        engine.seed_cost_estimates(1.0, 1e-6);
+        let b1 = batch(&mut rng, 4);
+        apply_to_db(&mut db, &b1).unwrap();
+        let (d1, _) = engine.apply_batch(&db, &b1).unwrap();
+        assert_eq!(d1, PlanDecision::Rebuilt(RebuildReason::CostModel));
+        assert_eq!(metrics.counter("incremental.rebuilds_cost").get(), 1);
+
+        // Regime 2: patches predicted near-free — must patch even though
+        // the batch dwarfs max_patch_fraction·|D| (the learned crossover
+        // supersedes the static check while both estimates exist).
+        engine.seed_cost_estimates(1e-12, 1e3);
+        let b2 = batch(&mut rng, 6);
+        apply_to_db(&mut db, &b2).unwrap();
+        let (d2, _) = engine.apply_batch(&db, &b2).unwrap();
+        assert_eq!(d2, PlanDecision::Patched);
+
+        // Deterministic tie-break: equal predicted costs patch.
+        engine.seed_cost_estimates(1.0, 2.0);
+        let b3 = batch(&mut rng, 2); // 2 deltas × 1.0 == 2.0 — a tie
+        apply_to_db(&mut db, &b3).unwrap();
+        let (d3, _) = engine.apply_batch(&db, &b3).unwrap();
+        assert_eq!(d3, PlanDecision::Patched);
+    }
+
+    #[test]
+    fn spill_budget_planner_matches_unspilled_bitwise() {
+        // The spill budget is a residency knob: a planner spilling all
+        // but two message tables per state must publish bit-identical
+        // results to the unspilled planner, batch after batch.
+        let (mut db, feq) = setup(250, 15);
+        let rk = RkConfig::new(4);
+        let metrics = Metrics::new();
+        let mut plain =
+            IncrementalEngine::new(&db, feq.clone(), rk.clone(), lenient(), Metrics::new())
+                .unwrap();
+        let spill_opts = PlannerOpts { spill_budget: 2, ..lenient() };
+        let mut spilly =
+            IncrementalEngine::new(&db, feq, rk, spill_opts, metrics.clone()).unwrap();
+        let mut rng = SplitMix64::new(51);
+        for round in 0..4usize {
+            let mut deltas = batch(&mut rng, 12);
+            if round > 0 {
+                let row = db.get("fact").unwrap().row(round);
+                deltas.push(TupleDelta::delete("fact", row));
+            }
+            apply_to_db(&mut db, &deltas).unwrap();
+            let (d1, r1) = plain.apply_batch(&db, &deltas).unwrap();
+            let (d2, r2) = spilly.apply_batch(&db, &deltas).unwrap();
+            assert_eq!(d1, PlanDecision::Patched, "round {round}");
+            assert_eq!(d2, PlanDecision::Patched, "round {round}");
+            crate::util::testkit::assert_bitwise_result(&r1, &r2, &format!("round {round}"));
+        }
+        assert!(
+            metrics.gauge("incremental.spill_spilled").get() > 0,
+            "budget 2 must actually force spills"
+        );
     }
 
     #[test]

@@ -205,17 +205,44 @@ impl ShardedDeltaFaq {
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
+
+    /// Cap every shard's resident message tables at `budget` separator
+    /// keys each (see [`DeltaFaq::set_spill_budget`]; 0 disables).
+    pub fn set_spill_budget(&mut self, budget: usize) {
+        for s in &mut self.shards {
+            s.set_spill_budget(budget);
+        }
+    }
+
+    /// Aggregate cold-key spill accounting across shards.
+    pub fn spill_stats(&self) -> super::SpillStats {
+        self.shards
+            .iter()
+            .map(|s| s.spill_stats())
+            .fold(super::SpillStats::default(), |a, b| a.merged(b))
+    }
 }
 
 /// Merged sorted cell list: per-cell weight is the sum of the per-shard
 /// weights, accumulated in ascending shard order (deterministic; exact on
 /// ring-ℤ weights). Per-shard snapshots hold only positive cells, so no
-/// zero cells can appear in the sum.
-fn merge_cells(shards: &[DeltaFaq]) -> Vec<(Vec<u32>, f64)> {
+/// zero cells can appear in the sum. Shared with the epoch-close merge in
+/// [`crate::ingest`].
+pub(crate) fn merge_cells(shards: &[DeltaFaq]) -> Vec<(Vec<u32>, f64)> {
+    let lists: Vec<Vec<(Vec<u32>, f64)>> =
+        shards.iter().map(|s| s.grid_table().cells).collect();
+    merge_cell_lists(&lists)
+}
+
+/// The list-level flavor of [`merge_cells`]: sum per-cell weights over
+/// per-shard snapshot lists, accumulated in ascending list order. The
+/// epoch-close merge works on retained snapshots rather than live
+/// states, so it enters here.
+pub(crate) fn merge_cell_lists(lists: &[Vec<(Vec<u32>, f64)>]) -> Vec<(Vec<u32>, f64)> {
     let mut acc: FxHashMap<Vec<u32>, f64> = FxHashMap::default();
-    for s in shards {
-        for (g, w) in s.grid_table().cells {
-            *acc.entry(g).or_insert(0.0) += w;
+    for list in lists {
+        for (g, w) in list {
+            *acc.entry(g.clone()).or_insert(0.0) += *w;
         }
     }
     crate::util::det::sorted_owned(acc)
@@ -224,8 +251,9 @@ fn merge_cells(shards: &[DeltaFaq]) -> Vec<(Vec<u32>, f64)> {
 /// Diff two sorted snapshots into a [`StateSplice`] log in application
 /// order: positions refer to the evolving list as each edit lands, the
 /// contract [`crate::cluster::EngineState::splice`] expects. Weight-only
-/// changes emit nothing.
-fn diff_splices(old: &[(Vec<u32>, f64)], new: &[(Vec<u32>, f64)]) -> Vec<StateSplice> {
+/// changes emit nothing. Shared with the epoch-close diff in
+/// [`crate::ingest`].
+pub(crate) fn diff_splices(old: &[(Vec<u32>, f64)], new: &[(Vec<u32>, f64)]) -> Vec<StateSplice> {
     let mut ops = Vec::new();
     let (mut i, mut j, mut pos) = (0usize, 0usize, 0usize);
     while i < old.len() && j < new.len() {
@@ -356,6 +384,23 @@ impl DeltaLayer {
         match self {
             DeltaLayer::Single(_) => 1,
             DeltaLayer::Sharded(s) => s.shard_count(),
+        }
+    }
+
+    /// Cap resident message tables per underlying state (see
+    /// [`DeltaFaq::set_spill_budget`]; 0 disables spilling).
+    pub fn set_spill_budget(&mut self, budget: usize) {
+        match self {
+            DeltaLayer::Single(d) => d.set_spill_budget(budget),
+            DeltaLayer::Sharded(s) => s.set_spill_budget(budget),
+        }
+    }
+
+    /// Cold-key spill accounting (aggregated on the sharded path).
+    pub fn spill_stats(&self) -> super::SpillStats {
+        match self {
+            DeltaLayer::Single(d) => d.spill_stats(),
+            DeltaLayer::Sharded(s) => s.spill_stats(),
         }
     }
 }

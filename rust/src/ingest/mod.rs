@@ -1,0 +1,935 @@
+//! Multi-producer sharded ingest: per-shard bounded queues, barrier-free
+//! shard-local patching, and epoch-consistent grid publication.
+//!
+//! The streaming [`crate::coordinator`] ingests one ordered delta stream
+//! and fans out per batch, so Steps 1–3 scale with the slowest global
+//! barrier. This tier removes the barrier from the write path:
+//!
+//! * **P producers, S queues.** [`IngestProducer`] handles stamp every
+//!   [`TupleDelta`] with an epoch number and route it like
+//!   [`crate::faq::shard_databases`] partitions the build side: fact
+//!   deltas go to the one shard [`crate::faq::shard_of`] hashes their
+//!   values to, dimension deltas broadcast to every shard. Queues are
+//!   *bounded* (`sync_channel`, [`IngestConfig::queue_capacity`]) — a
+//!   producer that outruns a shard blocks on that shard alone, with the
+//!   stall counted in `ingest.backpressure` (per-queue depth is the
+//!   `ingest.queue_depth.<s>` gauge family).
+//! * **Barrier-free shard application.** [`IngestHub::pump`] drains the
+//!   queues and advances every shard as far as its own seals allow, as
+//!   independent jobs on the shared
+//!   [`ExecPool`](crate::util::exec::ExecPool): shard A can be several
+//!   epochs ahead of shard B (the skew is the `ingest.watermark_lag`
+//!   gauge). Within one (shard, epoch) buffer the deltas are put in a
+//!   *canonical order* (inserts before deletes, then by relation, value
+//!   bits, and weight bits) before [`DeltaFaq::apply`] — producer
+//!   interleave can otherwise present a delete before the insert it
+//!   cancels. The Step-3 FAQ lives in the ring ℤ, so per-cell sums are
+//!   order-free and the reorder is invisible in the result.
+//! * **Epoch-consistent publication.** An epoch `e` is applied at a
+//!   shard only when all P producers have sealed `e` there (per-producer
+//!   FIFO guarantees every delta of `e` precedes its seal), and `e` is
+//!   *closed* — eligible for publication — only when every shard's
+//!   watermark has reached it. Closing merges the retained per-shard
+//!   epoch snapshots by exact ring-ℤ weight addition
+//!   ([`crate::incremental::sharded`]'s merge) and diffs against the
+//!   previously closed grid, yielding one [`EpochPatch`]: the merged
+//!   [`GridTable`], the composed splice log that keeps a carried Step-4
+//!   [`EngineState`](crate::cluster::EngineState) aligned, and the
+//!   epoch's logical single-stream delta sequence. On integer-weighted
+//!   databases every closed grid is **bitwise identical** to a serial
+//!   single-stream [`DeltaFaq`] fed the same logical deltas — the
+//!   determinism contract, pinned by `tests/property_ingest.rs`.
+//!
+//! The coordinator feeds closed epochs to
+//! [`IncrementalEngine::apply_epoch`](crate::incremental::IncrementalEngine::apply_epoch);
+//! when that path rebuilds (drift, churn, schedule, cost model), the hub
+//! must be re-anchored with [`IngestHub::rebase`] — shard states are
+//! re-initialized from the rebuilt boundary with the *new* Step-2 gid
+//! maps, and locally-applied epochs beyond the boundary are replayed
+//! from their retained buffers, so no enqueued delta is ever lost.
+//!
+//! Resident memory per shard is bounded by the same cold-key spilling
+//! the planner uses ([`IngestConfig::spill_budget`] →
+//! [`DeltaFaq::set_spill_budget`]): recency-cold separator-key message
+//! tables spill to a per-shard disk segment and reload transparently on
+//! touch.
+
+use crate::data::{Database, Value};
+use crate::faq::{shard_databases, shard_of, GridTable};
+use crate::incremental::sharded::{diff_splices, merge_cell_lists, AssignerMap};
+use crate::incremental::{DeltaFaq, EpochPatch, PatchStats, SpillStats, TupleDelta};
+use crate::metrics::Metrics;
+use crate::query::{Feq, JoinTree};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::time::Instant;
+
+/// Ingest-tier shape knobs.
+#[derive(Clone, Debug)]
+pub struct IngestConfig {
+    /// Number of independent producer handles the hub hands out.
+    pub producers: usize,
+    /// Per-shard queue + delta-state count (`<= 1` = one shard).
+    pub shards: usize,
+    /// Bounded capacity of each per-shard queue (entries). Producers
+    /// block on a full queue — backpressure, never unbounded growth.
+    pub queue_capacity: usize,
+    /// Cold-key spill budget per shard state (see
+    /// [`DeltaFaq::set_spill_budget`]; 0 disables spilling).
+    pub spill_budget: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig { producers: 1, shards: 1, queue_capacity: 1024, spill_budget: 0 }
+    }
+}
+
+/// One queue entry: an epoch-stamped delta, or a producer's seal marking
+/// that it will send nothing more for that epoch on this shard.
+#[derive(Clone, Debug)]
+enum Entry {
+    Delta { epoch: u64, delta: TupleDelta },
+    Seal { producer: usize, epoch: u64 },
+}
+
+/// Per-shard ingest state: the live [`DeltaFaq`], buffered not-yet-sealed
+/// epochs, and the retained snapshots/batches of applied-but-not-yet-
+/// globally-closed epochs (what [`IngestHub::rebase`] replays).
+#[derive(Debug)]
+struct ShardState {
+    delta: DeltaFaq,
+    /// Highest epoch applied to `delta` (0 = none; epochs are 1-based).
+    watermark: u64,
+    /// Epoch → buffered deltas awaiting the epoch's seals.
+    buf: BTreeMap<u64, Vec<TupleDelta>>,
+    /// Epoch → per-producer seal flags.
+    seals: BTreeMap<u64, Vec<bool>>,
+    /// Epoch → grid cells right after that epoch was applied here.
+    snaps: BTreeMap<u64, Vec<(Vec<u32>, f64)>>,
+    /// Epoch → Step-3 stats of that epoch's apply here.
+    stats: BTreeMap<u64, PatchStats>,
+    /// Epoch → the canonical-order batch applied here (replay source).
+    applied: BTreeMap<u64, Vec<TupleDelta>>,
+}
+
+/// The consumer side of the ingest tier (see module docs). Owned and
+/// pumped by a single non-pool thread (the coordinator worker).
+pub struct IngestHub {
+    fact: String,
+    feq: Feq,
+    tree: JoinTree,
+    producers: usize,
+    spill_budget: usize,
+    txs: Vec<SyncSender<Entry>>,
+    rxs: Vec<Receiver<Entry>>,
+    shards: Vec<ShardState>,
+    feature_names: Vec<String>,
+    /// Merged grid at the last *closed* epoch (diff base for the next).
+    last_merged: Vec<(Vec<u32>, f64)>,
+    /// Highest globally closed epoch.
+    closed: u64,
+    /// Epoch → first time any of its entries reached the hub (latency).
+    first_seen: BTreeMap<u64, Instant>,
+    metrics: Metrics,
+}
+
+impl IngestHub {
+    /// Build the hub over `db`: partition the fact relation, init one
+    /// [`DeltaFaq`] per shard as parallel pool jobs (largest shard
+    /// first), and open the bounded per-shard queues.
+    pub fn new<'m, F>(
+        db: &Database,
+        feq: &Feq,
+        tree: &JoinTree,
+        cfg: &IngestConfig,
+        make_assigners: F,
+        metrics: Metrics,
+    ) -> Result<IngestHub>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        ensure!(cfg.producers >= 1, "ingest needs at least one producer");
+        let n_shards = cfg.shards.max(1);
+        let fact = feq.relations.first().context("FEQ names no relations")?.clone();
+        let shard_dbs = shard_databases(db, &fact, n_shards)?;
+        let mut order: Vec<usize> = (0..shard_dbs.len()).collect();
+        order.sort_by_key(|&s| {
+            std::cmp::Reverse(shard_dbs[s].get(&fact).map_or(0, |r| r.n_rows()))
+        });
+        let mut works: Vec<(Database, Option<Result<DeltaFaq>>)> =
+            shard_dbs.into_iter().map(|sdb| (sdb, None)).collect();
+        let pool = crate::util::exec::shared_pool();
+        pool.run_chunks_ordered(&mut works, 0, &order, |_, (sdb, out)| {
+            let assigners = make_assigners();
+            *out = Some(DeltaFaq::init(sdb, feq, tree, &assigners));
+        });
+        let mut deltas: Vec<DeltaFaq> = works
+            .into_iter()
+            .map(|(_, out)| out.expect("every shard init ran"))
+            .collect::<Result<_>>()?;
+        for d in &mut deltas {
+            d.set_spill_budget(cfg.spill_budget);
+        }
+        let feature_names = deltas[0].grid_table().feature_names;
+        let last_merged = {
+            let lists: Vec<Vec<(Vec<u32>, f64)>> =
+                deltas.iter().map(|d| d.grid_table().cells).collect();
+            merge_cell_lists(&lists)
+        };
+
+        let cap = cfg.queue_capacity.max(1);
+        let mut txs = Vec::with_capacity(n_shards);
+        let mut rxs = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            // Bounded by construction (capacity >= 1): backpressure is
+            // the contract, never unbounded queue growth.
+            let (tx, rx) = sync_channel::<Entry>(cap);
+            txs.push(tx);
+            rxs.push(rx);
+            metrics.gauge(&format!("ingest.queue_depth.{s}")).set(0);
+        }
+        let shards = deltas
+            .into_iter()
+            .map(|delta| ShardState {
+                delta,
+                watermark: 0,
+                buf: BTreeMap::new(),
+                seals: BTreeMap::new(),
+                snaps: BTreeMap::new(),
+                stats: BTreeMap::new(),
+                applied: BTreeMap::new(),
+            })
+            .collect();
+        Ok(IngestHub {
+            fact,
+            feq: feq.clone(),
+            tree: tree.clone(),
+            producers: cfg.producers,
+            spill_budget: cfg.spill_budget,
+            txs,
+            rxs,
+            shards,
+            feature_names,
+            last_merged,
+            closed: 0,
+            first_seen: BTreeMap::new(),
+            metrics,
+        })
+    }
+
+    /// A producer handle (`id < producers`). Handles are independent and
+    /// movable across threads; each must seal every epoch it advances
+    /// past, in order, on its own schedule.
+    pub fn producer(&self, id: usize) -> IngestProducer {
+        assert!(id < self.producers, "producer id {id} out of range (P = {})", self.producers);
+        IngestProducer {
+            id,
+            fact: self.fact.clone(),
+            txs: self.txs.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Drain the queues, advance every shard as far as its seals allow
+    /// (parallel, barrier-free), and close every epoch all shards have
+    /// drained through. Returns the newly closed epochs in order. Call
+    /// from a non-pool thread only. On error the shard states may be
+    /// partially patched — [`IngestHub::rebase`] recovers (the failing
+    /// epoch's buffer is put back and retried after the rebase).
+    pub fn pump<'m, F>(&mut self, make_assigners: F) -> Result<Vec<EpochPatch>>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        self.drain()?;
+        self.advance(&make_assigners)?;
+        self.close()
+    }
+
+    /// Move everything currently enqueued into the per-shard epoch
+    /// buffers and seal tallies.
+    fn drain(&mut self) -> Result<()> {
+        for s in 0..self.rxs.len() {
+            loop {
+                // Empty and Disconnected both end the drain: disconnect
+                // just means every producer handle has been dropped.
+                let entry = match self.rxs[s].try_recv() {
+                    Ok(e) => e,
+                    Err(_) => break,
+                };
+                self.metrics.gauge(&format!("ingest.queue_depth.{s}")).add(-1);
+                let producers = self.producers;
+                let st = &mut self.shards[s];
+                match entry {
+                    Entry::Delta { epoch, delta } => {
+                        ensure!(
+                            epoch > st.watermark,
+                            "shard {s}: delta for epoch {epoch} arrived after the epoch \
+                             was applied (watermark {})",
+                            st.watermark
+                        );
+                        self.first_seen.entry(epoch).or_insert_with(crate::util::timer::now);
+                        st.buf.entry(epoch).or_default().push(delta);
+                    }
+                    Entry::Seal { producer, epoch } => {
+                        ensure!(
+                            epoch > st.watermark,
+                            "shard {s}: seal of epoch {epoch} arrived after the epoch \
+                             was applied (watermark {})",
+                            st.watermark
+                        );
+                        ensure!(producer < producers, "unknown producer {producer}");
+                        self.first_seen.entry(epoch).or_insert_with(crate::util::timer::now);
+                        let sealed =
+                            st.seals.entry(epoch).or_insert_with(|| vec![false; producers]);
+                        ensure!(
+                            !sealed[producer],
+                            "shard {s}: duplicate seal of epoch {epoch} by producer {producer}"
+                        );
+                        sealed[producer] = true;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance every shard through its fully-sealed epochs as parallel
+    /// pool jobs — no cross-shard barrier; each job stops exactly where
+    /// its own seals run out.
+    fn advance<'m, F>(&mut self, make_assigners: &F) -> Result<()>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        let producers = self.producers;
+        let mut works: Vec<(&mut ShardState, Option<Result<()>>)> =
+            self.shards.iter_mut().map(|st| (st, None)).collect();
+        let mut order: Vec<usize> = (0..works.len()).collect();
+        order.sort_by_key(|&i| {
+            std::cmp::Reverse(works[i].0.buf.iter().map(|(_, b)| b.len()).sum::<usize>())
+        });
+        let pool = crate::util::exec::shared_pool();
+        pool.run_chunks_ordered(&mut works, 0, &order, |_, (st, out)| {
+            *out = Some(advance_shard(st, producers, make_assigners));
+        });
+        for (_, out) in works {
+            out.expect("every shard job ran")?;
+        }
+        Ok(())
+    }
+
+    /// Close every epoch all shards have drained through: merge the
+    /// retained per-shard snapshots (exact ring-ℤ addition), diff
+    /// against the previously closed grid, and reassemble the epoch's
+    /// logical delta sequence.
+    fn close(&mut self) -> Result<Vec<EpochPatch>> {
+        let lo = self.shards.iter().map(|s| s.watermark).min().unwrap_or(0);
+        let hi = self.shards.iter().map(|s| s.watermark).max().unwrap_or(0);
+        self.metrics.gauge("ingest.watermark_lag").set((hi - lo) as i64);
+        let mut out = Vec::new();
+        while self.closed < lo {
+            let e = self.closed + 1;
+            let t0 = crate::util::timer::now();
+            let lists: Vec<Vec<(Vec<u32>, f64)>> = self
+                .shards
+                .iter_mut()
+                .map(|st| st.snaps.remove(&e).expect("snapshot exists for every applied epoch"))
+                .collect();
+            let merged = merge_cell_lists(&lists);
+            let splices = diff_splices(&self.last_merged, &merged);
+            self.metrics.histogram("ingest.merge_us").observe(t0.elapsed().as_micros() as u64);
+
+            // Logical single-stream sequence: fact deltas live on exactly
+            // one shard each; dimension deltas were broadcast, so take
+            // them from shard 0 only.
+            let mut deltas: Vec<TupleDelta> = Vec::new();
+            let mut agg = PatchStats::default();
+            for (s, st) in self.shards.iter_mut().enumerate() {
+                let applied = st.applied.remove(&e).unwrap_or_default();
+                if s == 0 {
+                    deltas.extend(applied);
+                } else {
+                    deltas.extend(applied.into_iter().filter(|d| d.relation == self.fact));
+                }
+                let stats = st.stats.remove(&e).unwrap_or_default();
+                agg.cells_touched += stats.cells_touched;
+                agg.mass_delta_abs += stats.mass_delta_abs;
+                agg.tombstone_ratio = agg.tombstone_ratio.max(stats.tombstone_ratio);
+            }
+            canonical_sort(&mut deltas);
+            agg.deltas = deltas.len();
+            agg.grid_cells = merged.len();
+
+            if let Some(t) = self.first_seen.remove(&e) {
+                self.metrics.histogram("ingest.epoch_us").observe(t.elapsed().as_micros() as u64);
+            }
+            self.metrics.counter("ingest.epochs_closed").inc();
+            let table =
+                GridTable { feature_names: self.feature_names.clone(), cells: merged.clone() };
+            self.last_merged = merged;
+            self.closed = e;
+            out.push(EpochPatch { epoch: e, deltas, table, splices, stats: agg });
+        }
+        self.metrics.gauge("ingest.closed_epoch").set(self.closed as i64);
+        Ok(out)
+    }
+
+    /// Re-anchor the hub after an engine rebuild at the last *closed*
+    /// epoch: `db` must mirror exactly the closed epochs, and
+    /// `make_assigners` must produce the rebuilt Step-2 gid maps. Shard
+    /// states are re-initialized from the partitioned `db` and every
+    /// locally-applied epoch beyond the boundary is replayed from its
+    /// retained batch (regenerating its snapshot and stats under the new
+    /// maps), so in-flight epochs survive the rebuild. Queues, buffers,
+    /// seals, and watermarks are untouched.
+    pub fn rebase<'m, F>(&mut self, db: &Database, make_assigners: F) -> Result<()>
+    where
+        F: Fn() -> AssignerMap<'m> + Sync,
+    {
+        let fact = self.fact.clone();
+        let shard_dbs = shard_databases(db, &fact, self.shards.len())?;
+        let spill_budget = self.spill_budget;
+        let feq = &self.feq;
+        let tree = &self.tree;
+        let mut works: Vec<(Database, &mut ShardState, Option<Result<Vec<(Vec<u32>, f64)>>>)> =
+            shard_dbs
+                .into_iter()
+                .zip(self.shards.iter_mut())
+                .map(|(sdb, st)| (sdb, st, None))
+                .collect();
+        let mut order: Vec<usize> = (0..works.len()).collect();
+        order.sort_by_key(|&i| {
+            std::cmp::Reverse(works[i].0.get(&fact).map_or(0, |r| r.n_rows()))
+        });
+        let pool = crate::util::exec::shared_pool();
+        pool.run_chunks_ordered(&mut works, 0, &order, |_, (sdb, st, out)| {
+            *out = Some((|| -> Result<Vec<(Vec<u32>, f64)>> {
+                let assigners = make_assigners();
+                let mut delta = DeltaFaq::init(sdb, feq, tree, &assigners)?;
+                delta.set_spill_budget(spill_budget);
+                let base = delta.grid_table().cells;
+                st.snaps.clear();
+                st.stats.clear();
+                for (e, batch) in &st.applied {
+                    let stats = if batch.is_empty() {
+                        PatchStats::default()
+                    } else {
+                        delta.apply(batch, &assigners)?
+                    };
+                    st.snaps.insert(*e, delta.grid_table().cells);
+                    st.stats.insert(*e, stats);
+                }
+                st.delta = delta;
+                Ok(base)
+            })());
+        });
+        let mut bases = Vec::with_capacity(works.len());
+        for (_, _, out) in works {
+            bases.push(out.expect("every shard rebased")?);
+        }
+        self.last_merged = merge_cell_lists(&bases);
+        Ok(())
+    }
+
+    /// Highest globally closed (published-or-publishable) epoch.
+    pub fn closed_epoch(&self) -> u64 {
+        self.closed
+    }
+
+    /// Per-shard watermarks (highest locally applied epoch each).
+    pub fn watermarks(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.watermark).collect()
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Number of producer handles the hub was sized for.
+    pub fn producer_count(&self) -> usize {
+        self.producers
+    }
+
+    /// Merged grid at the last closed epoch.
+    pub fn grid_table(&self) -> GridTable {
+        GridTable { feature_names: self.feature_names.clone(), cells: self.last_merged.clone() }
+    }
+
+    /// Aggregate cold-key spill accounting across shard states.
+    pub fn spill_stats(&self) -> SpillStats {
+        self.shards
+            .iter()
+            .map(|s| s.delta.spill_stats())
+            .fold(SpillStats::default(), |a, b| a.merged(b))
+    }
+}
+
+/// A movable producer handle: epoch-stamps and routes deltas, seals
+/// epochs. Cloned senders only — no shared mutable state, so any number
+/// of threads can each own one.
+pub struct IngestProducer {
+    id: usize,
+    fact: String,
+    txs: Vec<SyncSender<Entry>>,
+    metrics: Metrics,
+}
+
+impl IngestProducer {
+    /// This producer's id.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Enqueue one delta under `epoch` (1-based, non-decreasing per
+    /// producer): fact deltas to their value-hash shard, dimension
+    /// deltas to every shard. Blocks on a full shard queue.
+    pub fn send(&self, epoch: u64, delta: TupleDelta) -> Result<()> {
+        ensure!(epoch >= 1, "epochs are 1-based");
+        if delta.relation == self.fact {
+            let s = shard_of(&delta.values, self.txs.len());
+            self.push(s, Entry::Delta { epoch, delta })?;
+        } else {
+            for s in 0..self.txs.len() {
+                self.push(s, Entry::Delta { epoch, delta: delta.clone() })?;
+            }
+        }
+        self.metrics.counter("ingest.enqueued").inc();
+        Ok(())
+    }
+
+    /// Enqueue a batch under one epoch.
+    pub fn send_batch(&self, epoch: u64, deltas: &[TupleDelta]) -> Result<()> {
+        for d in deltas {
+            self.send(epoch, d.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Promise every shard that this producer sends nothing more for
+    /// `epoch`. Every producer must seal every epoch, in order — an
+    /// epoch closes only under all P seals at all S shards.
+    pub fn seal(&self, epoch: u64) -> Result<()> {
+        ensure!(epoch >= 1, "epochs are 1-based");
+        for s in 0..self.txs.len() {
+            self.push(s, Entry::Seal { producer: self.id, epoch })?;
+        }
+        Ok(())
+    }
+
+    fn push(&self, s: usize, entry: Entry) -> Result<()> {
+        let entry = match self.txs[s].try_send(entry) {
+            Ok(()) => {
+                self.depth(s, 1);
+                return Ok(());
+            }
+            Err(TrySendError::Full(entry)) => {
+                self.metrics.counter("ingest.backpressure").inc();
+                entry
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("ingest shard {s} queue disconnected"),
+        };
+        self.txs[s]
+            .send(entry)
+            .map_err(|_| anyhow!("ingest shard {s} queue disconnected"))?;
+        self.depth(s, 1);
+        Ok(())
+    }
+
+    fn depth(&self, s: usize, d: i64) {
+        self.metrics.gauge(&format!("ingest.queue_depth.{s}")).add(d);
+    }
+}
+
+/// Apply every fully-sealed epoch buffered at one shard, in epoch order,
+/// retaining the snapshot/stats/batch each needs at global close. On an
+/// apply error the dequeued buffer and seals are put back so a rebased
+/// retry sees the epoch again.
+fn advance_shard<'m, F>(st: &mut ShardState, producers: usize, make_assigners: &F) -> Result<()>
+where
+    F: Fn() -> AssignerMap<'m> + Sync,
+{
+    loop {
+        let next = st.watermark + 1;
+        if !st.seals.get(&next).map_or(false, |v| v.iter().all(|&b| b)) {
+            return Ok(());
+        }
+        st.seals.remove(&next);
+        let mut batch = st.buf.remove(&next).unwrap_or_default();
+        canonical_sort(&mut batch);
+        let stats = if batch.is_empty() {
+            PatchStats::default()
+        } else {
+            let assigners = make_assigners();
+            match st.delta.apply(&batch, &assigners) {
+                Ok(stats) => stats,
+                Err(e) => {
+                    st.buf.insert(next, batch);
+                    st.seals.insert(next, vec![true; producers]);
+                    return Err(e);
+                }
+            }
+        };
+        st.snaps.insert(next, st.delta.grid_table().cells);
+        st.stats.insert(next, stats);
+        st.applied.insert(next, batch);
+        st.watermark = next;
+    }
+}
+
+/// Canonical intra-epoch delta order: inserts before deletes (producer
+/// interleave can present a delete ahead of the same-epoch insert it
+/// cancels), then by relation, value bits (`-0.0` normalized to `0.0`),
+/// and weight bits. Ring-ℤ per-cell sums are order-free, so the reorder
+/// never changes the resulting grid — it only restores stream validity
+/// and gives every shard a deterministic application order.
+pub(crate) fn canonical_sort(deltas: &mut [TupleDelta]) {
+    deltas.sort_by(|a, b| {
+        a.is_delete()
+            .cmp(&b.is_delete())
+            .then_with(|| a.relation.cmp(&b.relation))
+            .then_with(|| value_sort_key(&a.values).cmp(&value_sort_key(&b.values)))
+            .then_with(|| a.weight.to_bits().cmp(&b.weight.to_bits()))
+    });
+}
+
+fn value_sort_key(values: &[Value]) -> Vec<(u8, u64)> {
+    values
+        .iter()
+        .map(|v| match v {
+            Value::Int(x) => (0u8, *x as u64),
+            Value::Double(x) => {
+                let x = if *x == 0.0 { 0.0 } else { *x };
+                (1u8, x.to_bits())
+            }
+            Value::Cat(c) => (2u8, *c as u64),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Attr, Relation, Schema};
+    use crate::faq::GidAssigner;
+    use crate::incremental::apply_to_db;
+    use crate::query::Hypergraph;
+    use crate::util::{FxHashMap, SplitMix64};
+
+    #[derive(Clone, Copy)]
+    struct ModAssigner {
+        n: u32,
+        claimed: usize,
+    }
+    impl GidAssigner for ModAssigner {
+        fn gid(&self, v: Value) -> u32 {
+            let k = match v {
+                Value::Double(x) => (x * 2.0) as i64 as u64,
+                other => other.key_u64(),
+            };
+            (k % self.n as u64) as u32
+        }
+        fn n_gids(&self) -> usize {
+            self.claimed
+        }
+    }
+
+    fn assigners(n: u32, claimed: usize) -> AssignerMap<'static> {
+        let mut m: AssignerMap<'static> = FxHashMap::default();
+        for a in ["a", "b", "c"] {
+            m.insert(a.to_string(), Box::new(ModAssigner { n, claimed }));
+        }
+        m
+    }
+
+    /// fact(a, b) ⋈ dim(b, c), as in the sharded delta tests.
+    fn setup(n_fact: usize, seed: u64) -> (Database, Feq, JoinTree) {
+        let mut rng = SplitMix64::new(seed);
+        let mut fact =
+            Relation::new("fact", Schema::new(vec![Attr::cat("a", 8), Attr::cat("b", 8)]));
+        for _ in 0..n_fact {
+            fact.push_row(&[Value::Cat(rng.below(8) as u32), Value::Cat(rng.below(4) as u32)]);
+        }
+        let mut dim = Relation::new("dim", Schema::new(vec![Attr::cat("b", 8), Attr::cat("c", 8)]));
+        for b in 0..4u32 {
+            dim.push_row(&[Value::Cat(b), Value::Cat(b % 3)]);
+        }
+        let mut db = Database::new();
+        db.add(fact);
+        db.add(dim);
+        let feq = Feq::with_features(&["fact", "dim"], &["a", "b", "c"]);
+        let tree = Hypergraph::from_feq(&db, &feq).join_tree().unwrap();
+        (db, feq, tree)
+    }
+
+    fn cells_bits(gt: &GridTable) -> Vec<(Vec<u32>, u64)> {
+        gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect()
+    }
+
+    /// Insert-heavy batch with distinct-row deletes (no double deletes).
+    fn random_batch(rng: &mut SplitMix64, db: &Database, n: usize) -> Vec<TupleDelta> {
+        let mut out = Vec::new();
+        let mut used: Vec<usize> = Vec::new();
+        for _ in 0..n {
+            if rng.below(5) < 2 {
+                let fact = db.get("fact").unwrap();
+                let live: Vec<usize> = (0..fact.n_rows())
+                    .filter(|&r| fact.weight(r) > 0.0 && !used.contains(&r))
+                    .collect();
+                if let Some(&r) = live.get(rng.below(live.len().max(1) as u64) as usize) {
+                    used.push(r);
+                    out.push(TupleDelta::delete("fact", fact.row(r)));
+                    continue;
+                }
+            }
+            out.push(TupleDelta::insert(
+                "fact",
+                vec![Value::Cat(rng.below(8) as u32), Value::Cat(rng.below(4) as u32)],
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn epoch_close_matches_serial_single_stream_bitwise() {
+        // Two producers interleaving, three shards: every closed epoch's
+        // merged grid must be bitwise identical to a serial single-stream
+        // DeltaFaq fed the same logical deltas in trace order.
+        let (mut db, feq, tree) = setup(140, 1);
+        let mut serial = DeltaFaq::init(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+        let cfg =
+            IngestConfig { producers: 2, shards: 3, queue_capacity: 256, spill_budget: 0 };
+        let metrics = Metrics::new();
+        let mut hub =
+            IngestHub::new(&db, &feq, &tree, &cfg, || assigners(3, 3), metrics.clone()).unwrap();
+        assert_eq!(cells_bits(&hub.grid_table()), cells_bits(&serial.grid_table()));
+        let p0 = hub.producer(0);
+        let p1 = hub.producer(1);
+        let mut rng = SplitMix64::new(5);
+        for epoch in 1..=4u64 {
+            let mut batch = random_batch(&mut rng, &db, 12);
+            if epoch == 2 {
+                // Dimension churn broadcasts to every shard.
+                batch.push(TupleDelta::insert("dim", vec![Value::Cat(1), Value::Cat(7)]));
+            }
+            apply_to_db(&mut db, &batch).unwrap();
+            // Interleave: producer 1 takes the odd positions, and sends
+            // its share in reverse to stress the canonical reorder.
+            for d in batch.iter().step_by(2) {
+                p0.send(epoch, d.clone()).unwrap();
+            }
+            let odds: Vec<&TupleDelta> = batch.iter().skip(1).step_by(2).collect();
+            for d in odds.into_iter().rev() {
+                p1.send(epoch, d.clone()).unwrap();
+            }
+            p0.seal(epoch).unwrap();
+            p1.seal(epoch).unwrap();
+            let patches = hub.pump(|| assigners(3, 3)).unwrap();
+            assert_eq!(patches.len(), 1, "epoch {epoch}");
+            let patch = &patches[0];
+            assert_eq!(patch.epoch, epoch);
+            assert_eq!(patch.deltas.len(), batch.len());
+            serial.apply(&batch, &assigners(3, 3)).unwrap();
+            assert_eq!(
+                cells_bits(&patch.table),
+                cells_bits(&serial.grid_table()),
+                "epoch {epoch}"
+            );
+            assert_eq!(patch.stats.grid_cells, serial.n_cells());
+        }
+        assert_eq!(hub.closed_epoch(), 4);
+        assert_eq!(metrics.counter("ingest.epochs_closed").get(), 4);
+        assert_eq!(metrics.histogram("ingest.epoch_us").count(), 4);
+        // All queues fully drained.
+        for s in 0..3 {
+            assert_eq!(metrics.gauge(&format!("ingest.queue_depth.{s}")).get(), 0);
+        }
+    }
+
+    #[test]
+    fn publication_waits_for_every_seal() {
+        // Epoch-consistency pin: with one producer's seal missing, no
+        // version may publish — however many deltas are already in.
+        let (mut db, feq, tree) = setup(80, 2);
+        let cfg = IngestConfig { producers: 2, shards: 2, ..IngestConfig::default() };
+        let mut hub =
+            IngestHub::new(&db, &feq, &tree, &cfg, || assigners(3, 3), Metrics::new()).unwrap();
+        let p0 = hub.producer(0);
+        let p1 = hub.producer(1);
+        let mut rng = SplitMix64::new(7);
+        let batch = random_batch(&mut rng, &db, 10);
+        apply_to_db(&mut db, &batch).unwrap();
+        for (i, d) in batch.iter().enumerate() {
+            if i % 2 == 0 {
+                p0.send(1, d.clone()).unwrap();
+            } else {
+                p1.send(1, d.clone()).unwrap();
+            }
+        }
+        p0.seal(1).unwrap();
+        assert!(hub.pump(|| assigners(3, 3)).unwrap().is_empty());
+        assert_eq!(hub.closed_epoch(), 0);
+        assert_eq!(hub.watermarks(), vec![0, 0]);
+
+        // The missing seal lands: the epoch closes with *all* deltas.
+        p1.seal(1).unwrap();
+        let patches = hub.pump(|| assigners(3, 3)).unwrap();
+        assert_eq!(patches.len(), 1);
+        assert_eq!(patches[0].deltas.len(), batch.len());
+        // Reference: a fresh delta state over the post-batch database —
+        // the closed grid must match it bitwise.
+        let serial = DeltaFaq::init(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+        assert_eq!(cells_bits(&patches[0].table), cells_bits(&serial.grid_table()));
+    }
+
+    #[test]
+    fn delete_before_insert_interleave_is_canonicalized() {
+        // Producer 0's delete of a tuple arrives ahead of producer 1's
+        // insert of that same new tuple within one epoch: canonical order
+        // applies the insert first, so per-shard multiplicity never goes
+        // negative and the epoch still closes bitwise-equal to serial.
+        let (mut db, feq, tree) = setup(60, 3);
+        let mut serial = DeltaFaq::init(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+        let cfg = IngestConfig { producers: 2, shards: 2, ..IngestConfig::default() };
+        let mut hub =
+            IngestHub::new(&db, &feq, &tree, &cfg, || assigners(3, 3), Metrics::new()).unwrap();
+        let p0 = hub.producer(0);
+        let p1 = hub.producer(1);
+        let tuple = vec![Value::Cat(7), Value::Cat(3)];
+        let trace = vec![
+            TupleDelta::insert("fact", tuple.clone()),
+            TupleDelta::delete("fact", tuple.clone()),
+        ];
+        apply_to_db(&mut db, &trace).unwrap();
+        // Delete enqueued before the insert it cancels.
+        p0.send(1, trace[1].clone()).unwrap();
+        p1.send(1, trace[0].clone()).unwrap();
+        p0.seal(1).unwrap();
+        p1.seal(1).unwrap();
+        let patches = hub.pump(|| assigners(3, 3)).unwrap();
+        assert_eq!(patches.len(), 1);
+        assert!(!patches[0].deltas[0].is_delete(), "canonical order puts inserts first");
+        serial.apply(&trace, &assigners(3, 3)).unwrap();
+        assert_eq!(cells_bits(&patches[0].table), cells_bits(&serial.grid_table()));
+    }
+
+    #[test]
+    fn watermark_skew_and_rebase_replay_in_flight_epochs() {
+        // Barrier-free pin: a shard whose seals all arrived advances past
+        // the global close; a rebase at the closed boundary replays its
+        // in-flight epoch from the retained buffer, and the epoch closes
+        // bitwise-equal once the laggard catches up.
+        let (mut db, feq, tree) = setup(100, 4);
+        let mut serial = DeltaFaq::init(&db, &feq, &tree, &assigners(3, 3)).unwrap();
+        let cfg = IngestConfig { producers: 1, shards: 2, ..IngestConfig::default() };
+        let metrics = Metrics::new();
+        let mut hub =
+            IngestHub::new(&db, &feq, &tree, &cfg, || assigners(3, 3), metrics.clone()).unwrap();
+        let p0 = hub.producer(0);
+
+        // Epoch 1 closes normally.
+        let mut rng = SplitMix64::new(9);
+        let b1 = random_batch(&mut rng, &db, 8);
+        apply_to_db(&mut db, &b1).unwrap();
+        p0.send_batch(1, &b1).unwrap();
+        p0.seal(1).unwrap();
+        serial.apply(&b1, &assigners(3, 3)).unwrap();
+        let patches = hub.pump(|| assigners(3, 3)).unwrap();
+        assert_eq!(patches.len(), 1);
+        let db_at_close = db.clone();
+
+        // Epoch 2: a fact delta routed to one shard, whose seal reaches
+        // only that shard (injected below the producer API).
+        let b2: Vec<TupleDelta> = (0..4)
+            .map(|i| {
+                TupleDelta::insert("fact", vec![Value::Cat(i as u32 % 8), Value::Cat(1)])
+            })
+            .collect();
+        for d in &b2 {
+            let s = shard_of(&d.values, 2);
+            hub.txs[s].send(Entry::Delta { epoch: 2, delta: d.clone() }).unwrap();
+        }
+        hub.txs[0].send(Entry::Seal { producer: 0, epoch: 2 }).unwrap();
+        assert!(hub.pump(|| assigners(3, 3)).unwrap().is_empty());
+        assert_eq!(hub.watermarks(), vec![2, 1]);
+        assert_eq!(hub.closed_epoch(), 1);
+        assert_eq!(metrics.gauge("ingest.watermark_lag").get(), 1);
+
+        // A rebuild at the closed boundary: rebase from the epoch-1 db
+        // with the same maps — the in-flight epoch 2 must be replayed.
+        hub.rebase(&db_at_close, || assigners(3, 3)).unwrap();
+        assert_eq!(hub.watermarks(), vec![2, 1]);
+        assert_eq!(cells_bits(&hub.grid_table()), cells_bits(&serial.grid_table()));
+
+        // The laggard's seal lands; epoch 2 closes bitwise-equal.
+        hub.txs[1].send(Entry::Seal { producer: 0, epoch: 2 }).unwrap();
+        apply_to_db(&mut db, &b2).unwrap();
+        serial.apply(&b2, &assigners(3, 3)).unwrap();
+        let patches = hub.pump(|| assigners(3, 3)).unwrap();
+        assert_eq!(patches.len(), 1);
+        assert_eq!(patches[0].epoch, 2);
+        assert_eq!(cells_bits(&patches[0].table), cells_bits(&serial.grid_table()));
+        assert_eq!(metrics.gauge("ingest.watermark_lag").get(), 0);
+    }
+
+    #[test]
+    fn spilled_hub_matches_unspilled_bitwise() {
+        // The per-shard spill budget is a residency knob only: a hub
+        // spilling all but one message table per shard publishes the
+        // same bits as an unspilled twin.
+        let (mut db, feq, tree) = setup(120, 5);
+        let plain_cfg = IngestConfig { producers: 2, shards: 2, ..IngestConfig::default() };
+        let spill_cfg = IngestConfig { spill_budget: 1, ..plain_cfg.clone() };
+        let mut plain =
+            IngestHub::new(&db, &feq, &tree, &plain_cfg, || assigners(3, 3), Metrics::new())
+                .unwrap();
+        let mut spilly =
+            IngestHub::new(&db, &feq, &tree, &spill_cfg, || assigners(3, 3), Metrics::new())
+                .unwrap();
+        let mut rng = SplitMix64::new(11);
+        for epoch in 1..=3u64 {
+            let batch = random_batch(&mut rng, &db, 10);
+            apply_to_db(&mut db, &batch).unwrap();
+            for hub in [&mut plain, &mut spilly] {
+                let p0 = hub.producer(0);
+                let p1 = hub.producer(1);
+                for (i, d) in batch.iter().enumerate() {
+                    if i % 2 == 0 {
+                        p0.send(epoch, d.clone()).unwrap();
+                    } else {
+                        p1.send(epoch, d.clone()).unwrap();
+                    }
+                }
+                p0.seal(epoch).unwrap();
+                p1.seal(epoch).unwrap();
+            }
+            let a = plain.pump(|| assigners(3, 3)).unwrap();
+            let b = spilly.pump(|| assigners(3, 3)).unwrap();
+            assert_eq!(a.len(), 1);
+            assert_eq!(b.len(), 1);
+            assert_eq!(cells_bits(&a[0].table), cells_bits(&b[0].table), "epoch {epoch}");
+        }
+        assert!(spilly.spill_stats().spilled > 0, "budget 1 must force spills");
+        assert!(spilly.spill_stats().reloaded > 0, "patching cold keys must reload");
+        assert_eq!(plain.spill_stats(), SpillStats::default());
+    }
+
+    #[test]
+    fn protocol_violations_are_rejected() {
+        let (db, feq, tree) = setup(40, 6);
+        let cfg = IngestConfig { producers: 1, shards: 1, ..IngestConfig::default() };
+        let mut hub =
+            IngestHub::new(&db, &feq, &tree, &cfg, || assigners(3, 3), Metrics::new()).unwrap();
+        let p0 = hub.producer(0);
+        assert!(p0.send(0, TupleDelta::insert("fact", vec![])).is_err(), "epoch 0 invalid");
+        assert!(p0.seal(0).is_err());
+
+        // Close epoch 1, then send a late delta for it: rejected.
+        p0.seal(1).unwrap();
+        assert_eq!(hub.pump(|| assigners(3, 3)).unwrap().len(), 1);
+        p0.send(1, TupleDelta::insert("fact", vec![Value::Cat(0), Value::Cat(0)])).unwrap();
+        let err = hub.pump(|| assigners(3, 3)).unwrap_err();
+        assert!(err.to_string().contains("watermark"), "got: {err}");
+    }
+}

@@ -100,6 +100,30 @@
 //! rejoin cycle, and `benches/rpc_load.rs` measures it against the
 //! in-process front.
 //!
+//! ## Ingest tier
+//!
+//! The [`ingest`] module parallelizes the *write* path the way [`serve`]
+//! parallelizes the read path. P independent [`ingest::IngestProducer`]
+//! handles stamp tuple deltas with an epoch number and route them into S
+//! **bounded** per-shard queues (fact deltas to their
+//! [`faq::shard_of`] value-hash shard, dimension deltas broadcast);
+//! producers that outrun a shard block on that shard alone
+//! (`ingest.backpressure`, `ingest.queue_depth.<s>`). The
+//! [`ingest::IngestHub`] applies each shard's fully-sealed epochs as
+//! independent [`incremental::DeltaFaq`] patches on the shared pool with
+//! **no global batch barrier** — shards run ahead of each other
+//! (`ingest.watermark_lag`) — and *closes* an epoch only when every
+//! shard's watermark passes it, merging the per-shard snapshots by exact
+//! ring-ℤ addition into one [`incremental::EpochPatch`] (merged grid,
+//! composed splice log, logical delta sequence). Closed epochs feed
+//! [`incremental::IncrementalEngine::apply_epoch`], so the serving tier
+//! only ever publishes fully-drained epochs; resident memory per shard
+//! is bounded by cold-key spilling
+//! ([`incremental::DeltaFaq::set_spill_budget`], the
+//! `--spill-budget` CLI knob). `rkmeans stream --producers P --shards S`
+//! runs the tier end-to-end, and `benches/ingest_scale.rs` measures the
+//! multi-producer speedup with the bitwise cross-arm assertion inline.
+//!
 //! ## Determinism contract
 //!
 //! The system's correctness story is a set of **bitwise** equivalences,
@@ -119,6 +143,15 @@
 //!   `HashMap`/`FxHashMap` where order can reach FP accumulation, the
 //!   wire, or display — order-sensitive walks go through the sorted
 //!   adapters in [`util::det`].
+//! * **epoch ≡ serial** — multi-producer epoch'd ingest publishes
+//!   exactly the bytes a serial single-stream ingest of the same
+//!   logical delta sequence would (spilled or unspilled); pinned by
+//!   `tests/property_ingest.rs` across producer × shard shapes.
+//!   Guarded by `unbounded-channel`: every `channel()` /
+//!   `sync_channel(0)` queue outside the registered-queue list
+//!   ([`analysis::rules::QUEUE_REGISTRY`]) is a diagnostic, so ingest
+//!   paths can't silently trade the bounded-backpressure contract for
+//!   unbounded growth.
 //! * **`apply(diff(a,b)) ≡ b`** — the serving delta wire format
 //!   reconstructs models bit-exactly, and the rpc snapshot plane ships
 //!   those bytes verbatim (replicas refuse snapshots that fail the
@@ -194,6 +227,7 @@ pub mod coreset;
 pub mod data;
 pub mod faq;
 pub mod incremental;
+pub mod ingest;
 pub mod join;
 pub mod metrics;
 pub mod query;

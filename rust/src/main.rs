@@ -21,7 +21,11 @@
 //! * `bench-rpc` — drive/probe/stop running rpc servers (the socket
 //!   load generator and control-plane helper used by benches and CI);
 //! * `stream`    — streaming-coordinator demo (ingest + periodic
-//!   recluster; formerly `serve`, which forwards with a warning);
+//!   recluster; formerly `serve`, which forwards with a warning); with
+//!   `--producers P` it runs the multi-producer ingest tier instead: P
+//!   epoch-stamping producer threads over `--shards S` bounded shard
+//!   queues, one published version per fully-drained epoch
+//!   (`rkmeans::ingest`);
 //! * `artifacts` — inspect/verify the AOT artifact manifest.
 //!
 //! The environment is offline (no clap); flags are parsed by a small
@@ -33,7 +37,7 @@ use rkmeans::cluster::{BoundsPolicy, EngineOpts, LloydConfig, Precision};
 use rkmeans::coordinator::{Coordinator, CoordinatorConfig};
 use rkmeans::coreset::SubspaceSolver;
 use rkmeans::data::{csv, Value};
-use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlannerOpts};
+use rkmeans::incremental::{apply_to_db, IncrementalEngine, PlannerOpts, TupleDelta};
 #[cfg(feature = "pjrt")]
 use rkmeans::join::EmbedSpec;
 use rkmeans::metrics::Metrics;
@@ -81,7 +85,7 @@ USAGE:
   rkmeans bench-rpc --connect ADDR[,ADDR...] [--requests N] [--clients C]
                     [--qps Q] [--seed N] [--probe] [--stop]
   rkmeans stream    --dataset NAME [--scale F] [--rate N] [--batches N] [--k K]
-                    [--shards S]
+                    [--shards S] [--producers P] [--spill-budget N]
   rkmeans artifacts [--dir DIR]
   rkmeans help
 ";
@@ -764,43 +768,104 @@ fn cmd_bench_rpc(args: &Args) -> Result<()> {
 
 /// The streaming-coordinator demo (formerly `rkmeans serve`): random
 /// fact tuples flow into the [`Coordinator`], reclustering per batch.
+/// With `--producers P` (P > 1) the multi-producer ingest tier runs
+/// instead: P epoch-stamping producer threads over `--shards S` bounded
+/// shard queues, one published version per fully-drained epoch.
 fn cmd_stream(args: &Args) -> Result<()> {
     let (db, feq, name) = load_db(args)?;
     let k = args.num("k", 5usize)?;
-    let rate = args.num("rate", 2000usize)?; // tuples per batch
+    let rate = args.num("rate", 2000usize)?; // tuples per batch/epoch
     let batches = args.num("batches", 5usize)?;
     let seed = args.num("seed", 42u64)?;
+    let producers = args.num("producers", 1usize)?;
+    let shards = args.num("shards", 1usize)?;
 
-    // Stream new fact tuples into the coordinator; recluster per batch.
     let fact = feq.relations[0].clone();
     let fact_schema = db.get(&fact).expect("fact relation").schema.clone();
     let domains: Vec<u32> = fact_schema.attrs().iter().map(|a| a.domain).collect();
+    let gen_vals = |rng: &mut SplitMix64| -> Vec<Value> {
+        fact_schema
+            .attrs()
+            .iter()
+            .zip(&domains)
+            .map(|(a, &dom)| match a.ty {
+                rkmeans::data::AttrType::Cat => Value::Cat(rng.below(dom.max(1) as u64) as u32),
+                rkmeans::data::AttrType::Int => Value::Int(rng.range(0, 100)),
+                rkmeans::data::AttrType::Double => {
+                    Value::Double((rng.uniform(0.0, 50.0) * 100.0).round() / 100.0)
+                }
+            })
+            .collect()
+    };
 
     let mut cfg = CoordinatorConfig::new(RkConfig::new(k).with_seed(seed));
     cfg.recluster_every = rate;
     // Shard-parallel Step-3 state in the incremental planner (1 = off).
-    cfg.planner.shards = args.num("shards", 1usize)?;
-    let coord = Coordinator::start(db, feq, cfg);
+    cfg.planner.shards = shards;
+    // Cold-key spilling budget for the delta states (0 = no spilling).
+    cfg.planner.spill_budget = args.num("spill-budget", 0usize)?;
 
+    if producers > 1 {
+        cfg.producers = producers;
+        cfg.shards = shards;
+        let (coord, handles) = Coordinator::start_multi(db, feq, cfg)?;
+        println!(
+            "streaming {name}: {batches} epochs × {rate} tuples into {fact:?} \
+             ({producers} producers, {shards} ingest shards)"
+        );
+        let per = rate.div_ceil(producers);
+        std::thread::scope(|scope| {
+            for h in handles {
+                let fact = &fact;
+                let gen_vals = &gen_vals;
+                scope.spawn(move || {
+                    let mut rng =
+                        SplitMix64::new(seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(h.id() as u64 + 1));
+                    for epoch in 1..=batches as u64 {
+                        for _ in 0..per {
+                            let d = TupleDelta::insert(fact.as_str(), gen_vals(&mut rng));
+                            if h.send(epoch, d).is_err() {
+                                return;
+                            }
+                        }
+                        if h.seal(epoch).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            if let Some(u) = coord.recv_update(std::time::Duration::from_secs(120)) {
+                println!(
+                    "initial build: v{} — |G|={} objective={:.4e} ({:?})",
+                    u.version, u.result.grid_points, u.result.objective_grid, u.elapsed
+                );
+            }
+            for _ in 0..batches {
+                if let Some(u) = coord.recv_update(std::time::Duration::from_secs(120)) {
+                    println!(
+                        "epoch {}: v{} after {} tuples — |G|={} objective={:.4e} ({:?}, {:?})",
+                        u.epoch.unwrap_or(0),
+                        u.version,
+                        u.ingested,
+                        u.result.grid_points,
+                        u.result.objective_grid,
+                        u.mode,
+                        u.elapsed
+                    );
+                }
+            }
+        });
+        println!("-- metrics --\n{}", coord.metrics().render());
+        coord.shutdown()?;
+        return Ok(());
+    }
+
+    let coord = Coordinator::start(db, feq, cfg);
     println!("streaming {name}: {batches} batches × {rate} tuples into {fact:?}");
     let mut rng = SplitMix64::new(seed);
     for b in 0..batches {
         for _ in 0..rate {
-            let vals: Vec<Value> = fact_schema
-                .attrs()
-                .iter()
-                .zip(&domains)
-                .map(|(a, &dom)| match a.ty {
-                    rkmeans::data::AttrType::Cat => {
-                        Value::Cat(rng.below(dom.max(1) as u64) as u32)
-                    }
-                    rkmeans::data::AttrType::Int => Value::Int(rng.range(0, 100)),
-                    rkmeans::data::AttrType::Double => {
-                        Value::Double((rng.uniform(0.0, 50.0) * 100.0).round() / 100.0)
-                    }
-                })
-                .collect();
-            coord.insert(&fact, vals)?;
+            coord.insert(&fact, gen_vals(&mut rng))?;
         }
         if let Some(u) = coord.recv_update(std::time::Duration::from_secs(120)) {
             println!(

@@ -109,6 +109,44 @@ fn contextless_unwrap_fires_on_lock_results_in_serve() {
     assert_eq!(rules_fired("src/faq/sneaky.rs", src), [] as [&str; 0]);
 }
 
+#[test]
+fn unbounded_channel_fires_outside_the_queue_registry() {
+    // Bare `channel()` — unbounded, no backpressure.
+    let src = "fn sneak() { let (tx, rx) = std::sync::mpsc::channel(); tx.send(1).ok(); }\n";
+    assert_eq!(rules_fired("src/cluster/sneaky.rs", src), ["unbounded-channel"]);
+    // Turbofish form is the same construction site.
+    let fish = "fn sneak() { let (tx, rx) = std::sync::mpsc::channel::<Vec<u64>>(); }\n";
+    assert_eq!(rules_fired("src/cluster/sneaky.rs", fish), ["unbounded-channel"]);
+    // Zero-capacity rendezvous defeats the try_send backpressure pattern.
+    let zero = "fn sneak() { let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(0); }\n";
+    assert_eq!(rules_fired("src/cluster/sneaky.rs", zero), ["unbounded-channel"]);
+}
+
+#[test]
+fn bounded_sync_channel_is_the_pattern_not_a_finding() {
+    let src = "fn fine() { let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(16); }\n";
+    assert_eq!(rules_fired("src/cluster/fine.rs", src), [] as [&str; 0]);
+}
+
+#[test]
+fn queue_registry_sites_are_waived_but_strays_in_the_same_file_fire() {
+    // The registered front fns carry the registry reason…
+    let registered = "fn submit() { let (rtx, rrx) = std::sync::mpsc::channel(); }\n";
+    let diags = lint_source("src/serve/front.rs", registered);
+    assert!(
+        diags.iter().any(|d| {
+            d.rule == "unbounded-channel"
+                && d.waived
+                && d.waiver_reason.as_deref().is_some_and(|r| r.starts_with("registry:"))
+        }),
+        "registered queue must surface as a waived diagnostic: {diags:?}"
+    );
+    assert!(diags.iter().all(|d| d.waived));
+    // …while the same construction in an unregistered fn still fires.
+    let stray = "fn helper() { let (tx, rx) = std::sync::mpsc::channel(); }\n";
+    assert_eq!(rules_fired("src/serve/front.rs", stray), ["unbounded-channel"]);
+}
+
 // ---- waiver mechanics ------------------------------------------------
 
 #[test]

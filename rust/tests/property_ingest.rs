@@ -1,0 +1,309 @@
+//! Property tests for the multi-producer ingest tier: across producer
+//! counts, shard counts, and trace shapes, the epoch'd merged build must
+//! be **bitwise identical** to a serial single-stream ingest of the same
+//! logical delta sequence.
+//!
+//! Bitwise equality is meaningful because the Step-3 FAQ is a counting
+//! query in the ring ℤ: with unit tuple weights every per-cell sum is an
+//! exactly-represented f64 integer, so neither the producer interleave,
+//! the shard partition, nor the canonical intra-epoch reorder can change
+//! a single bit of the merged grid (see the `ingest` module docs).
+//! The suite drives the same Retailer/Favorita trace generators the
+//! stream benchmarks measure, in delete-heavy and reseed-heavy
+//! (insert-dominated) shapes, plus:
+//!
+//! * spill-then-reload ≡ never-spilled under a tiny per-shard
+//!   `spill_budget` (spilling is a residency knob, not a semantic one);
+//! * epoch-consistent publication: nothing closes until every producer
+//!   has sealed the epoch at every shard;
+//! * carried `EngineState` survives epoch merges: an engine resuming
+//!   Step 4 from the carried state over the composed splice log publishes
+//!   the same bits as a cold-warm-start twin.
+
+use rkmeans::data::{Database, Value};
+use rkmeans::faq::{GidAssigner, GridTable};
+use rkmeans::incremental::{
+    apply_to_db, assigner_map, DeltaFaq, IncrementalEngine, PlanDecision, PlannerOpts,
+    SpillStats, TupleDelta,
+};
+use rkmeans::ingest::{IngestConfig, IngestHub};
+use rkmeans::metrics::Metrics;
+use rkmeans::query::{Feq, Hypergraph};
+use rkmeans::rkmeans::RkConfig;
+use rkmeans::synthetic::{favorita, favorita_trace, retailer, retailer_trace, Scale, TraceSpec};
+use rkmeans::util::FxHashMap;
+
+/// Fixed mod-assigner (Step-2 models are out of scope here: the property
+/// under test is the epoch protocol, not the solvers). Doubles quantize
+/// at quarter steps so Favorita's `unit_sales` stays exact.
+struct ModAssigner {
+    n: u32,
+}
+impl GidAssigner for ModAssigner {
+    fn gid(&self, v: Value) -> u32 {
+        let k = match v {
+            Value::Double(x) => ((x * 4.0) as i64).rem_euclid(self.n as i64) as u64,
+            other => other.key_u64(),
+        };
+        (k % self.n as u64) as u32
+    }
+    fn n_gids(&self) -> usize {
+        self.n as usize
+    }
+}
+
+fn mod_assigners(feq: &Feq) -> FxHashMap<String, Box<dyn GidAssigner>> {
+    let mut m: FxHashMap<String, Box<dyn GidAssigner>> = FxHashMap::default();
+    for f in &feq.features {
+        m.insert(f.attr.clone(), Box::new(ModAssigner { n: 3 }));
+    }
+    m
+}
+
+fn cells_bits(gt: &GridTable) -> FxHashMap<Vec<u32>, u64> {
+    gt.cells.iter().map(|(g, w)| (g.clone(), w.to_bits())).collect()
+}
+
+/// Deal `batch` across `producers` handles (round-robin, each producer's
+/// share sent in reverse to stress the canonical reorder), seal, pump,
+/// and assert every closed epoch equals the serial single-stream state.
+fn check_epochd_equals_serial(
+    db: &Database,
+    feq: &Feq,
+    trace: &[Vec<TupleDelta>],
+    producers: usize,
+    shards: usize,
+) {
+    let tree = Hypergraph::from_feq(db, feq).join_tree().expect("acyclic");
+    let asg = mod_assigners(feq);
+    let mut serial = DeltaFaq::init(db, feq, &tree, &asg).expect("serial init");
+    let cfg = IngestConfig { producers, shards, queue_capacity: 1024, spill_budget: 0 };
+    let mut hub = IngestHub::new(db, feq, &tree, &cfg, || mod_assigners(feq), Metrics::new())
+        .expect("hub init");
+    assert_eq!(
+        cells_bits(&hub.grid_table()),
+        cells_bits(&serial.grid_table()),
+        "P={producers} S={shards}: sharded base grid diverged"
+    );
+    let handles: Vec<_> = (0..producers).map(|p| hub.producer(p)).collect();
+    for (i, batch) in trace.iter().enumerate() {
+        let epoch = (i + 1) as u64;
+        for (p, h) in handles.iter().enumerate() {
+            let share: Vec<&TupleDelta> = batch.iter().skip(p).step_by(producers).collect();
+            for d in share.into_iter().rev() {
+                h.send(epoch, d.clone()).expect("send");
+            }
+            h.seal(epoch).expect("seal");
+        }
+        let patches = hub.pump(|| mod_assigners(feq)).expect("pump");
+        assert_eq!(patches.len(), 1, "P={producers} S={shards} epoch {epoch}");
+        let patch = &patches[0];
+        assert_eq!(patch.epoch, epoch);
+        assert_eq!(patch.deltas.len(), batch.len());
+        serial.apply(batch, &asg).expect("serial apply");
+        assert_eq!(
+            cells_bits(&patch.table),
+            cells_bits(&serial.grid_table()),
+            "P={producers} S={shards} epoch {epoch}: epoch'd merge diverged from serial"
+        );
+    }
+    assert_eq!(hub.closed_epoch(), trace.len() as u64);
+}
+
+#[test]
+fn retailer_delete_heavy_epochd_matches_serial_bitwise() {
+    let db = retailer::generate(Scale::tiny(), 21);
+    let feq = retailer::feq();
+    let trace =
+        retailer_trace(&db, 31, TraceSpec { batches: 3, batch_size: 32, delete_frac: 0.5 });
+    // The full P × S matrix the issue names.
+    for p in [1usize, 2, 4] {
+        for s in [1usize, 2, 7] {
+            check_epochd_equals_serial(&db, &feq, &trace, p, s);
+        }
+    }
+}
+
+#[test]
+fn retailer_reseed_heavy_epochd_matches_serial_bitwise() {
+    // Insert-dominated: the grid keeps growing fresh cells, stressing the
+    // merge/diff path rather than ring cancellation.
+    let db = retailer::generate(Scale::tiny(), 22);
+    let feq = retailer::feq();
+    let trace =
+        retailer_trace(&db, 32, TraceSpec { batches: 3, batch_size: 32, delete_frac: 0.05 });
+    for (p, s) in [(1usize, 2usize), (2, 7), (4, 2)] {
+        check_epochd_equals_serial(&db, &feq, &trace, p, s);
+    }
+}
+
+#[test]
+fn favorita_epochd_matches_serial_bitwise() {
+    let db = favorita::generate(Scale::tiny(), 23);
+    let feq = favorita::feq();
+    for (seed, delete_frac) in [(33u64, 0.5), (34u64, 0.05)] {
+        let trace =
+            favorita_trace(&db, seed, TraceSpec { batches: 2, batch_size: 24, delete_frac });
+        for (p, s) in [(2usize, 2usize), (4, 7)] {
+            check_epochd_equals_serial(&db, &feq, &trace, p, s);
+        }
+    }
+}
+
+#[test]
+fn spill_then_reload_matches_never_spilled_bitwise() {
+    // A per-shard budget of one resident message table forces constant
+    // spill/reload churn; the published bits must not notice.
+    let db = retailer::generate(Scale::tiny(), 24);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+    let plain_cfg =
+        IngestConfig { producers: 2, shards: 2, queue_capacity: 1024, spill_budget: 0 };
+    let spill_cfg = IngestConfig { spill_budget: 1, ..plain_cfg.clone() };
+    let mut plain =
+        IngestHub::new(&db, &feq, &tree, &plain_cfg, || mod_assigners(&feq), Metrics::new())
+            .expect("plain hub");
+    let mut spilly =
+        IngestHub::new(&db, &feq, &tree, &spill_cfg, || mod_assigners(&feq), Metrics::new())
+            .expect("spilly hub");
+    let trace =
+        retailer_trace(&db, 35, TraceSpec { batches: 4, batch_size: 24, delete_frac: 0.3 });
+    for (i, batch) in trace.iter().enumerate() {
+        let epoch = (i + 1) as u64;
+        for hub in [&plain, &spilly] {
+            let p0 = hub.producer(0);
+            let p1 = hub.producer(1);
+            for (j, d) in batch.iter().enumerate() {
+                if j % 2 == 0 {
+                    p0.send(epoch, d.clone()).expect("send");
+                } else {
+                    p1.send(epoch, d.clone()).expect("send");
+                }
+            }
+            p0.seal(epoch).expect("seal");
+            p1.seal(epoch).expect("seal");
+        }
+        let a = plain.pump(|| mod_assigners(&feq)).expect("plain pump");
+        let b = spilly.pump(|| mod_assigners(&feq)).expect("spilly pump");
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        assert_eq!(cells_bits(&a[0].table), cells_bits(&b[0].table), "epoch {epoch}");
+    }
+    assert!(spilly.spill_stats().spilled > 0, "budget 1 must force spills");
+    assert!(spilly.spill_stats().reloaded > 0, "patching cold keys must reload");
+    assert_eq!(plain.spill_stats(), SpillStats::default());
+}
+
+#[test]
+fn no_epoch_closes_until_every_producer_seals_every_shard() {
+    // Epoch-consistent publication: with one producer's seal missing, no
+    // grid version may close — however many deltas are already applied.
+    let db = retailer::generate(Scale::tiny(), 25);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db, &feq).join_tree().expect("acyclic");
+    let cfg = IngestConfig { producers: 2, shards: 2, queue_capacity: 1024, spill_budget: 0 };
+    let mut hub = IngestHub::new(&db, &feq, &tree, &cfg, || mod_assigners(&feq), Metrics::new())
+        .expect("hub init");
+    let p0 = hub.producer(0);
+    let p1 = hub.producer(1);
+    let trace =
+        retailer_trace(&db, 36, TraceSpec { batches: 1, batch_size: 20, delete_frac: 0.3 });
+    let batch = &trace[0];
+    for (j, d) in batch.iter().enumerate() {
+        if j % 2 == 0 {
+            p0.send(1, d.clone()).expect("send");
+        } else {
+            p1.send(1, d.clone()).expect("send");
+        }
+    }
+    p0.seal(1).expect("seal");
+    assert!(hub.pump(|| mod_assigners(&feq)).expect("pump").is_empty());
+    assert_eq!(hub.closed_epoch(), 0);
+
+    // The missing seal lands: the epoch closes with *all* deltas, equal
+    // to a fresh build over the post-batch database.
+    p1.seal(1).expect("seal");
+    let patches = hub.pump(|| mod_assigners(&feq)).expect("pump");
+    assert_eq!(patches.len(), 1);
+    assert_eq!(patches[0].deltas.len(), batch.len());
+    let mut db2 = db.clone();
+    apply_to_db(&mut db2, batch).expect("replay");
+    let asg = mod_assigners(&feq);
+    let fresh = DeltaFaq::init(&db2, &feq, &tree, &asg).expect("fresh");
+    assert_eq!(cells_bits(&patches[0].table), cells_bits(&fresh.grid_table()));
+}
+
+#[test]
+fn carried_engine_state_resumes_bitwise_equal_to_cold_across_epochs() {
+    // Two engines over the same database and config, differing only in
+    // `carry_state`: the composed splice logs must keep the carried
+    // Step-4 state aligned with every merged epoch grid, so the resumed
+    // engine publishes bit-for-bit what the cold-warm-start twin does.
+    let db0 = retailer::generate(Scale::tiny(), 26);
+    let feq = retailer::feq();
+    let tree = Hypergraph::from_feq(&db0, &feq).join_tree().expect("acyclic");
+    let rk = RkConfig::new(4);
+    let lenient = PlannerOpts {
+        drift_threshold: 1.1,
+        max_patch_fraction: 1.0,
+        max_join_churn: f64::INFINITY,
+        ..PlannerOpts::default()
+    };
+    let carry_opts = PlannerOpts { carry_state: true, ..lenient.clone() };
+    let cold_opts = PlannerOpts { carry_state: false, ..lenient };
+    let carry_metrics = Metrics::new();
+    let mut eng_carry =
+        IncrementalEngine::new(&db0, feq.clone(), rk.clone(), carry_opts, carry_metrics.clone())
+            .expect("carry engine");
+    let mut eng_cold =
+        IncrementalEngine::new(&db0, feq.clone(), rk, cold_opts, Metrics::new())
+            .expect("cold engine");
+
+    // One hub feeds both engines (EpochPatch is cloneable); its grids are
+    // anchored on the engines' (identical, frozen) Step-2 models.
+    let shared = eng_carry.shared_result();
+    let cfg = IngestConfig { producers: 2, shards: 2, queue_capacity: 1024, spill_budget: 0 };
+    let mut hub =
+        IngestHub::new(&db0, &feq, &tree, &cfg, || assigner_map(&shared.models), Metrics::new())
+            .expect("hub init");
+    let p0 = hub.producer(0);
+    let p1 = hub.producer(1);
+    let trace =
+        retailer_trace(&db0, 41, TraceSpec { batches: 3, batch_size: 16, delete_frac: 0.3 });
+    let mut db = db0.clone();
+    for (i, batch) in trace.iter().enumerate() {
+        let epoch = (i + 1) as u64;
+        for (j, d) in batch.iter().enumerate() {
+            if j % 2 == 0 {
+                p0.send(epoch, d.clone()).expect("send");
+            } else {
+                p1.send(epoch, d.clone()).expect("send");
+            }
+        }
+        p0.seal(epoch).expect("seal");
+        p1.seal(epoch).expect("seal");
+        apply_to_db(&mut db, batch).expect("replay");
+        let patches = hub.pump(|| assigner_map(&shared.models)).expect("pump");
+        assert_eq!(patches.len(), 1);
+        let (d1, r_carry) = eng_carry.apply_epoch(&db, &patches[0]).expect("carry epoch");
+        let (d2, r_cold) = eng_cold.apply_epoch(&db, &patches[0]).expect("cold epoch");
+        assert_eq!(d1, PlanDecision::Patched, "epoch {epoch}");
+        assert_eq!(d2, PlanDecision::Patched, "epoch {epoch}");
+        assert_eq!(
+            format!("{:?}", r_carry.centroids),
+            format!("{:?}", r_cold.centroids),
+            "epoch {epoch}: resumed centroids diverged from cold warm start"
+        );
+        assert_eq!(
+            r_carry.objective_grid.to_bits(),
+            r_cold.objective_grid.to_bits(),
+            "epoch {epoch}"
+        );
+        assert_eq!(r_carry.grid_points, r_cold.grid_points, "epoch {epoch}");
+    }
+    // The carry engine genuinely resumed (the shape filter did not veto).
+    assert!(
+        carry_metrics.counter("incremental.resumes").get() >= 1,
+        "carried state was never resumed — the pin is vacuous"
+    );
+}
